@@ -1,0 +1,109 @@
+"""AOT lowering: JAX/Pallas computations → HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids,
+while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emits ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.tsv`` with
+one line per entry::
+
+    name<TAB>file<TAB>kind<TAB>dtype<TAB>shape1;shape2;...<TAB>out_shape
+
+Shape-specialized entries (HLO bakes shapes): the Rust runtime pads and
+tiles arbitrary operands onto these canonical shapes (runtime/tiled.rs).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, kind, dtype, input shapes, output shape) to export."""
+    i64 = jnp.int64
+    f32 = jnp.float32
+    out = []
+    # Generic ring matmul tiles (block-multiple shapes).
+    for b in (128, 256):
+        out.append(
+            (
+                f"ring_matmul_{b}",
+                model.ring_matmul,
+                "ring_matmul",
+                i64,
+                [(b, b), (b, b)],
+                (b, b),
+            )
+        )
+    # Fused ESD distance tile: 256-row blocks, d padded to 128 columns,
+    # k padded to 16 clusters (zero-padding is exact in ring space).
+    out.append(
+        (
+            "esd_256x128x16",
+            model.esd,
+            "esd",
+            i64,
+            [(256, 128), (16, 128)],
+            (256, 16),
+        )
+    )
+    # Plaintext Lloyd step for the quickstart / validation path.
+    for (n, d, k) in [(1000, 4, 3), (64, 4, 2)]:
+        out.append(
+            (
+                f"kmeans_step_{n}x{d}x{k}",
+                model.kmeans_step,
+                "kmeans_step",
+                f32,
+                [(n, d), (k, d)],
+                (k, d),
+            )
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    lines = []
+    for name, fn, kind, dtype, shapes, out_shape in entries():
+        specs = [spec(s, dtype) for s in shapes]
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        dt = "i64" if dtype == jnp.int64 else "f32"
+        shp = ";".join(",".join(str(x) for x in s) for s in shapes)
+        osh = ",".join(str(x) for x in out_shape)
+        lines.append(f"{name}\t{fname}\t{kind}\t{dt}\t{shp}\t{osh}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"manifest: {len(lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

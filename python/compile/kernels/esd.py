@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: blocked ring-space ESD distance (paper Eq. 3).
+
+The paper's vectorization insight — compute `D' = U − 2·X·muT` as one
+matrix operation instead of n·k scalar interactions — maps to TPU as a
+tiled kernel: the grid walks row-blocks of X; each step keeps one
+(block_n × d) tile of X and the whole (k × d) centroid panel resident in
+VMEM, fusing the matmul with the broadcast subtract so D' never
+round-trips through HBM at intermediate precision.
+
+Hardware adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * ring arithmetic is int64; XLA integers wrap, giving Z_2^64 exactly;
+  * `interpret=True` always — CPU PJRT cannot execute Mosaic
+    custom-calls; on real TPU the same BlockSpec schedule drives the MXU;
+  * block_n is chosen so the working set (block_n·d + k·d + block_n·k
+    int64 words) fits a ≤16 MiB VMEM budget (see vmem_bytes()).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _esd_kernel(x_ref, mu_ref, u_ref, o_ref):
+    """One grid step: o = u − 2·x·muT for a row-block of X."""
+    x = x_ref[...]          # (bn, d)   int64, scale f
+    mu = mu_ref[...]        # (k, d)    int64, scale f
+    u = u_ref[...]          # (1, k)    int64, scale 2f
+    xmu = jax.lax.dot_general(
+        x,
+        mu,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int64,
+    )                        # (bn, k), scale 2f — wraps mod 2^64
+    o_ref[...] = u - 2 * xmu
+
+
+def vmem_bytes(block_n: int, d: int, k: int) -> int:
+    """Estimated VMEM working set of one grid step (int64 words)."""
+    return 8 * (block_n * d + k * d + k + block_n * k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def esd_pallas(x, mu, block_n: int = DEFAULT_BLOCK_N):
+    """Blocked D' = U − 2·X·muT over Z_2^64.
+
+    x: (n, d) int64, mu: (k, d) int64; n must be a multiple of block_n
+    (aot.py pads); returns (n, k) int64 at scale 2f.
+    """
+    n, d = x.shape
+    k = mu.shape[0]
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    u = jnp.sum(mu * mu, axis=1, dtype=jnp.int64)[None, :]  # (1, k)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _esd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.int64),
+        interpret=True,  # CPU PJRT path; Mosaic lowering is TPU-only
+    )(x, mu, u)

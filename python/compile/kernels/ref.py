@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its reference here bit-exactly (integer ring ops) or to float
+tolerance (plaintext ops). pytest + hypothesis sweep shapes against them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_matmul_ref(x, y):
+    """Matrix product in Z_2^64 (int64 two's-complement wrap).
+
+    XLA integer arithmetic wraps, so a plain matmul in int64 *is* the
+    ring product mod 2^64.
+    """
+    assert x.dtype == jnp.int64 and y.dtype == jnp.int64
+    return jnp.matmul(x, y)
+
+
+def esd_ref(x, mu):
+    """Ring-space D' = U - 2*X*muT (paper Eq. 3), scale 2f.
+
+    x:  (n, d) int64 fixed-point encodings (scale f)
+    mu: (k, d) int64 fixed-point encodings (scale f)
+    returns (n, k) int64 at scale 2f.
+    """
+    u = jnp.sum(mu * mu, axis=1)[None, :]  # (1, k), scale 2f
+    xmu = jnp.matmul(x, mu.T)  # (n, k), scale 2f
+    return u - 2 * xmu
+
+
+def esd_f32_ref(x, mu):
+    """Plaintext float D' (for the cleartext k-means step)."""
+    u = jnp.sum(mu * mu, axis=1)[None, :]
+    return u - 2.0 * (x @ mu.T)
+
+
+def kmeans_step_ref(x, mu):
+    """One full plaintext Lloyd iteration (float32).
+
+    Returns (new_mu, assignments, counts). Empty clusters keep their old
+    centroid (mirrors the secure protocol's oblivious fallback).
+    """
+    d = esd_f32_ref(x, mu)  # (n, k); row-constant |x|^2 omitted
+    assign = jnp.argmin(d, axis=1)  # (n,)
+    onehot = jax.nn.one_hot(assign, mu.shape[0], dtype=x.dtype)  # (n, k)
+    counts = jnp.sum(onehot, axis=0)  # (k,)
+    sums = onehot.T @ x  # (k, d)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_mu = jnp.where(counts[:, None] > 0, sums / safe, mu)
+    return new_mu, assign, counts

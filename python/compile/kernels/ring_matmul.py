@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: blocked matrix multiplication over Z_2^64.
+
+The generic local-compute primitive behind the coordinator's hot path:
+every party-local product (`X_A·(mu_A)T`, `(C_A)T·X_A`, Beaver
+recombination terms E·V, U·F) is a ring matmul. The kernel tiles all
+three dimensions so arbitrary (m, k, n) dispatch through a small set of
+AOT-compiled shapes with padding (runtime/tiled.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, steps):
+    """Grid (i, j, s): accumulate x(i,s)·y(s,j) into o(i,j)."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int64,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ring_matmul_pallas(x, y, block: int = DEFAULT_BLOCK):
+    """x (m×t) · y (t×n) mod 2^64, all dims multiples of `block`."""
+    m, t = x.shape
+    t2, n = y.shape
+    assert t == t2
+    assert m % block == 0 and t % block == 0 and n % block == 0, (
+        f"shape ({m},{t},{n}) not multiple of {block}"
+    )
+    steps = t // block
+    grid = (m // block, n // block, steps)
+    kernel = functools.partial(_matmul_kernel, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block, block), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,
+    )(x, y)

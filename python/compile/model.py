@@ -1,0 +1,51 @@
+"""L2 JAX model: the compute graphs the Rust coordinator executes.
+
+Three exported computations, each lowered once by aot.py:
+
+  * ``ring_matmul``  — blocked Z_2^64 matmul (calls the L1 Pallas kernel);
+    the coordinator's generic local-product primitive.
+  * ``esd``          — the fused distance kernel D' = U − 2·X·muT in ring
+    space (L1 Pallas), used by each party's local distance term.
+  * ``kmeans_step``  — one full plaintext float32 Lloyd iteration
+    (distance via the float ESD + argmin + masked mean), used for
+    initialization strategies and cleartext validation inside Rust.
+
+Python never runs at protocol time: these graphs are AOT-lowered to HLO
+text and executed through PJRT by rust/src/runtime/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.esd import esd_pallas
+from compile.kernels.ring_matmul import ring_matmul_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+def ring_matmul(x, y):
+    """Z_2^64 matmul via the Pallas blocked kernel."""
+    return (ring_matmul_pallas(x, y),)
+
+
+def esd(x, mu):
+    """Ring-space distance matrix via the Pallas ESD kernel."""
+    return (esd_pallas(x, mu),)
+
+
+def kmeans_step(x, mu):
+    """One plaintext Lloyd iteration (float32).
+
+    Distance reuses the ESD formulation; assignment and update are dense
+    XLA ops so the whole step fuses into one executable.
+    """
+    k = mu.shape[0]
+    u = jnp.sum(mu * mu, axis=1)[None, :]
+    d = u - 2.0 * (x @ mu.T)
+    assign = jnp.argmin(d, axis=1)
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_mu = jnp.where(counts[:, None] > 0, sums / safe, mu)
+    return (new_mu, counts)

@@ -1,0 +1,83 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; ring ops must match bit-exactly
+(Z_2^64 wrap included).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.esd import esd_pallas, vmem_bytes
+from compile.kernels.ring_matmul import ring_matmul_pallas
+from compile.kernels import ref
+
+
+def rand_i64(rng, shape):
+    # Full-range 64-bit ring elements (shares are uniform).
+    return rng.integers(0, 2**64, size=shape, dtype=np.uint64).astype(np.int64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    d=st.integers(1, 24),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+    block_n=st.sampled_from([8, 32]),
+)
+def test_esd_matches_ref_bit_exact(n_blocks, d, k, seed, block_n):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    x = rand_i64(rng, (n, d))
+    mu = rand_i64(rng, (k, d))
+    got = esd_pallas(x, mu, block_n=block_n)
+    want = ref.esd_ref(x, mu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ti=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_ring_matmul_matches_ref_bit_exact(mi, ti, ni, seed):
+    block = 16
+    rng = np.random.default_rng(seed)
+    x = rand_i64(rng, (mi * block, ti * block))
+    y = rand_i64(rng, (ti * block, ni * block))
+    got = ring_matmul_pallas(x, y, block=block)
+    want = ref.ring_matmul_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_esd_wraps_mod_2_64():
+    # Deliberate overflow: values near 2^63.
+    x = np.full((8, 2), -(2**62), dtype=np.int64)
+    mu = np.full((2, 2), 2**62 - 1, dtype=np.int64)
+    got = esd_pallas(x, mu, block_n=8)
+    want = ref.esd_ref(x, mu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fixed_point_semantics():
+    # Fixed-point encoded reals should reproduce the float D' after scaling.
+    f = 20
+    rng = np.random.default_rng(7)
+    xr = rng.random((16, 4))
+    mur = rng.random((3, 4))
+    x = np.round(xr * 2**f).astype(np.int64)
+    mu = np.round(mur * 2**f).astype(np.int64)
+    got = np.asarray(esd_pallas(x, mu, block_n=16)).astype(np.float64) / 2 ** (2 * f)
+    want = np.sum(mur * mur, axis=1)[None, :] - 2 * xr @ mur.T
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_vmem_budget_default_blocks():
+    # The canonical AOT tile must fit a 16 MiB VMEM budget.
+    assert vmem_bytes(256, 128, 16) < 16 * 2**20

@@ -1,0 +1,54 @@
+"""L2 correctness: model graphs vs references and invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_kmeans_step_matches_ref():
+    rng = np.random.default_rng(3)
+    x = rng.random((50, 4)).astype(np.float32)
+    mu = rng.random((3, 4)).astype(np.float32)
+    got_mu, got_counts = model.kmeans_step(x, mu)
+    want_mu, _, want_counts = ref.kmeans_step_ref(x, mu)
+    np.testing.assert_allclose(np.asarray(got_mu), np.asarray(want_mu), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_counts), np.asarray(want_counts))
+
+
+def test_kmeans_step_reduces_inertia():
+    rng = np.random.default_rng(4)
+    # Two well-separated blobs.
+    a = rng.normal(0.2, 0.02, size=(30, 2))
+    b = rng.normal(0.8, 0.02, size=(30, 2))
+    x = np.vstack([a, b]).astype(np.float32)
+    mu = np.array([[0.4, 0.4], [0.6, 0.6]], dtype=np.float32)
+
+    def inertia(mu_):
+        d = np.asarray(ref.esd_f32_ref(x, mu_))
+        return float(np.sum(np.min(d, axis=1)))
+
+    i0 = inertia(mu)
+    mu1, _ = model.kmeans_step(x, mu)
+    i1 = inertia(np.asarray(mu1))
+    assert i1 <= i0 + 1e-6
+
+
+def test_kmeans_step_empty_cluster_keeps_centroid():
+    x = np.full((10, 2), 0.1, dtype=np.float32)
+    mu = np.array([[0.1, 0.1], [9.0, 9.0]], dtype=np.float32)
+    new_mu, counts = model.kmeans_step(x, mu)
+    assert np.asarray(counts)[1] == 0
+    np.testing.assert_allclose(np.asarray(new_mu)[1], mu[1])
+
+
+def test_ring_matmul_model_wraps():
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 2**64, size=(128, 128), dtype=np.uint64).astype(np.int64)
+    y = rng.integers(0, 2**64, size=(128, 128), dtype=np.uint64).astype(np.int64)
+    (got,) = model.ring_matmul(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ring_matmul_ref(x, y)))

@@ -1,0 +1,149 @@
+//! Ablations beyond the paper's figures:
+//!
+//! * OU vs Paillier per-operation cost — the paper's §5.1 claim that OU
+//!   "outperforms Paillier over all operations";
+//! * PJRT (AOT Pallas artifact) vs native Rust ring matmul;
+//! * Kogge-Stone secure-comparison lane throughput;
+//! * garbled-circuit AND-gate throughput (garble + eval).
+
+use ppkmeans::bench::{fmt_secs, time_reps, Table};
+use ppkmeans::bigint::BigUint;
+use ppkmeans::gc::builder::assign_circuit;
+use ppkmeans::gc::garble::{evaluate, garble};
+use ppkmeans::he::{ou::Ou, paillier::Paillier, HeScheme};
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::util::prng::Prg;
+use ppkmeans::util::stats::mean;
+
+fn he_ops<S: HeScheme>(bits: usize, name: &str, tbl: &mut Table) {
+    let mut prg = Prg::new(1);
+    let (pk, sk) = S::keygen(bits, &mut prg);
+    let m = BigUint::from_u64(123456789);
+    let enc = time_reps(2, 10, || {
+        let _ = S::encrypt(&pk, &m, &mut prg);
+    });
+    let c = S::encrypt(&pk, &m, &mut prg);
+    let dec = time_reps(2, 10, || {
+        let _ = S::decrypt(&pk, &sk, &c);
+    });
+    let add = time_reps(2, 50, || {
+        let _ = S::add(&pk, &c, &c);
+    });
+    let x = BigUint::from_u64(0xDEADBEEF);
+    let smul = time_reps(2, 10, || {
+        let _ = S::smul(&pk, &c, &x);
+    });
+    tbl.row(vec![
+        name.into(),
+        fmt_secs(mean(&enc)),
+        fmt_secs(mean(&dec)),
+        fmt_secs(mean(&add)),
+        fmt_secs(mean(&smul)),
+    ]);
+}
+
+fn main() {
+    // ---- OU vs Paillier (same modulus size).
+    let mut he = Table::new(
+        "HE per-operation cost (1024-bit modulus)",
+        &["scheme", "encrypt", "decrypt", "add", "smul(64b)"],
+    );
+    he_ops::<Ou>(1024, "Okamoto-Uchiyama", &mut he);
+    he_ops::<Paillier>(1024, "Paillier", &mut he);
+    he.print();
+    println!("shape check: OU cheaper on every operation (paper §5.1).\n");
+
+    // ---- PJRT vs native matmul.
+    let mut mm = Table::new("ring matmul backends", &["shape", "native", "pjrt"]);
+    let have_pjrt = ppkmeans::runtime::dispatch::init(std::path::Path::new("artifacts")).is_ok();
+    let mut prg = Prg::new(2);
+    for sz in [128usize, 256, 512] {
+        let a = Mat::random(sz, sz, &mut prg);
+        let b = Mat::random(sz, sz, &mut prg);
+        let native = time_reps(1, 3, || {
+            let _ = a.matmul(&b);
+        });
+        let pjrt = if have_pjrt {
+            let store = ppkmeans::runtime::ArtifactStore::load(std::path::Path::new("artifacts"))
+                .expect("artifacts");
+            let t = time_reps(1, 3, || {
+                let _ = ppkmeans::runtime::tiled::ring_matmul(&store, &a, &b).unwrap();
+            });
+            fmt_secs(mean(&t))
+        } else {
+            "n/a (run `make artifacts`)".into()
+        };
+        mm.row(vec![format!("{sz}^3"), fmt_secs(mean(&native)), pjrt]);
+    }
+    mm.print();
+    println!();
+
+    // ---- Secure comparison throughput (the S2 hot gate).
+    let mut cmp = Table::new("Kogge-Stone CMP throughput", &["lanes", "time", "lanes/s"]);
+    for lanes in [1_000usize, 10_000, 100_000] {
+        let x = Mat::random(1, lanes, &mut prg);
+        let y = Mat::random(1, lanes, &mut prg);
+        use ppkmeans::net::run_two_party;
+        use ppkmeans::offline::dealer::Dealer;
+        use ppkmeans::ss::{compare, Ctx};
+        let reps = 3;
+        let t = time_reps(1, reps, || {
+            let (x0, y0) = (x.clone(), y.clone());
+            let (x1, y1) = (Mat::zeros(1, lanes), Mat::zeros(1, lanes));
+            run_two_party(
+                move |c| {
+                    let mut ts = Dealer::new(5, 0);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    compare::lt(&mut ctx, &x0, &y0);
+                },
+                move |c| {
+                    let mut ts = Dealer::new(5, 1);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    compare::lt(&mut ctx, &x1, &y1);
+                },
+            );
+        });
+        let secs = mean(&t);
+        cmp.row(vec![
+            format!("{lanes}"),
+            fmt_secs(secs),
+            format!("{:.0}", lanes as f64 / secs),
+        ]);
+    }
+    cmp.print();
+    println!();
+
+    // ---- GC throughput.
+    let circ = assign_circuit(5, 48);
+    let ands = circ.and_count();
+    let mut gprg = Prg::new(3);
+    let t_garble = time_reps(1, 10, || {
+        let _ = garble(&circ, &mut gprg);
+    });
+    let gb = garble(&circ, &mut gprg);
+    let labels: Vec<u128> = {
+        let mut v = vec![gb.labels(0).1];
+        for i in 0..circ.n_garbler {
+            v.push(gb.labels(circ.garbler_input(i)).0);
+        }
+        for i in 0..circ.n_eval {
+            v.push(gb.labels(circ.eval_input(i)).0);
+        }
+        v
+    };
+    let t_eval = time_reps(1, 10, || {
+        let _ = evaluate(&circ, &gb.tables, &labels);
+    });
+    let mut gc = Table::new("garbled circuit throughput (argmin k=5, w=48)", &["op", "time", "AND gates/s"]);
+    gc.row(vec![
+        "garble".into(),
+        fmt_secs(mean(&t_garble)),
+        format!("{:.0}", ands as f64 / mean(&t_garble)),
+    ]);
+    gc.row(vec![
+        "evaluate".into(),
+        fmt_secs(mean(&t_eval)),
+        format!("{:.0}", ands as f64 / mean(&t_eval)),
+    ]);
+    gc.print();
+}

@@ -1,0 +1,67 @@
+//! Figure 2 — online vs offline cost per protocol step (WAN;
+//! n = 1000, d = 2, k = 4, t = 20).
+//!
+//! Reproduces both panels: per-step running time and per-step
+//! communication, splitting S1 (distance) / S2 (assignment) /
+//! S3 (update) into their data-dependent online part and the
+//! data-independent offline (triple generation) part attributed by the
+//! per-step demand recording.
+//!
+//! Expected shape (paper): offline ≫ online in every step; S2 dominates
+//! online rounds (comparison tree), S1/S3 dominate offline volume
+//! (matrix triples).
+
+use ppkmeans::bench::{fmt_bytes, fmt_secs, Table};
+use ppkmeans::coordinator::Report;
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::secure;
+use ppkmeans::net::cost::CostModel;
+use ppkmeans::offline::pricing;
+
+fn main() {
+    let (n, d, k, iters) = (1000usize, 2usize, 4usize, 20usize);
+    let wan = CostModel::wan();
+    println!("calibrating OT generator...");
+    let cal = pricing::calibrate();
+
+    let ds = BlobSpec::new(n, d, k).generate(2);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: 1 },
+        ..Default::default()
+    };
+    let out = secure::run(&ds, &cfg).expect("run");
+    let report = Report::from_run(&out, &wan, &cal);
+
+    let mut time_tbl = Table::new(
+        "Fig 2 (left) — running time per step (WAN, n=1000, d=2, k=4, t=20)",
+        &["step", "online", "offline", "off/on ratio"],
+    );
+    let mut comm_tbl = Table::new(
+        "Fig 2 (right) — communication per step (both parties)",
+        &["step", "online", "offline", "off/on ratio"],
+    );
+    let names = ["S1 distance", "S2 assignment", "S3 update"];
+    for i in 0..3 {
+        let off_secs = pricing::offline_secs(&out.step_demands[i], &cal);
+        let off_bytes = pricing::offline_bytes(&out.step_demands[i]);
+        time_tbl.row(vec![
+            names[i].into(),
+            fmt_secs(report.steps[i]),
+            fmt_secs(off_secs),
+            format!("{:.1}x", off_secs / report.steps[i].max(1e-9)),
+        ]);
+        comm_tbl.row(vec![
+            names[i].into(),
+            fmt_bytes(report.step_bytes[i]),
+            fmt_bytes(off_bytes),
+            format!("{:.1}x", off_bytes as f64 / report.step_bytes[i].max(1) as f64),
+        ]);
+    }
+    time_tbl.print();
+    comm_tbl.print();
+    println!("\nshape check: the data-independent offline phase dominates every step,");
+    println!("so the data-dependent online phase is near-plaintext fast (paper Q2).");
+}

@@ -1,0 +1,86 @@
+//! Table 1 — running time vs M-Kmeans on synthetic data (LAN, d = 2,
+//! t = 10, l = 64).
+//!
+//! Paper grid: n ∈ {10^4, 10^5}, k ∈ {2, 5}. Default run scales n ÷ 10
+//! (pass `--full` after `--` for paper sizes) and caps the measured
+//! M-Kmeans instance at `MK_CAP` samples, extrapolating linearly (its
+//! per-sample cost is linear: inline OT + per-sample GC — documented in
+//! EXPERIMENTS.md). Reported time = measured compute + modeled LAN link
+//! time from exact byte/round counts.
+//!
+//! Paper reference rows (minutes): (10^4,2): 0.33/1.61/1.94 vs 1.92;
+//! (10^4,5): 0.94/4.70/5.64 vs 5.81; (10^5,2): 3.12/15.19/18.31 vs
+//! 18.02; (10^5,5): 9.06/48.39/57.45 vs 58.09.
+
+use ppkmeans::bench::{fmt_secs, Table};
+use ppkmeans::coordinator::Report;
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::secure;
+use ppkmeans::mkmeans::{self, MkmeansConfig};
+use ppkmeans::net::cost::CostModel;
+use ppkmeans::offline::pricing;
+
+/// Largest M-Kmeans instance actually executed (rest extrapolated).
+const MK_CAP: usize = 1_000;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ns: &[usize] = if full { &[10_000, 100_000] } else { &[1_000, 4_000] };
+    let ks = [2usize, 5];
+    let (d, iters) = (2usize, 10usize);
+    let lan = CostModel::lan();
+
+    println!("calibrating OT generator...");
+    let cal = pricing::calibrate();
+    println!(
+        "  {:.2} us/OT, {:.2} us/bit-lane, setup {:.2}s",
+        cal.secs_per_ot * 1e6,
+        cal.secs_per_bit_lane * 1e6,
+        cal.setup_secs
+    );
+
+    let mut table = Table::new(
+        "Table 1 — running time (LAN, d=2, t=10, l=64)",
+        &["n", "k", "ours online", "ours offline", "ours total", "M-Kmeans"],
+    );
+
+    for &n in ns {
+        for &k in &ks {
+            let ds = BlobSpec::new(n, d, k).generate(1);
+            let cfg = SecureKmeansConfig {
+                k,
+                iters,
+                partition: Partition::Vertical { d_a: 1 },
+                ..Default::default()
+            };
+            let out = secure::run(&ds, &cfg).expect("ours");
+            let report = Report::from_run(&out, &lan, &cal);
+
+            // M-Kmeans: measured at min(n, MK_CAP), linear extrapolation.
+            let mk_n = n.min(MK_CAP);
+            let mk_ds = BlobSpec::new(mk_n, d, k).generate(1);
+            let mcfg = MkmeansConfig { k, iters, seed: cfg.seed, d_a: 1 };
+            let mk = mkmeans::run_vertical(&mk_ds, &mcfg).expect("mkmeans");
+            let scale = n as f64 / mk_n as f64;
+            let mk_time =
+                (mk.wall_secs + lan.time_raw(mk.bytes_total / 2, mk.rounds)) * scale;
+
+            table.row(vec![
+                format!("{n}"),
+                format!("{k}"),
+                fmt_secs(report.online_secs),
+                fmt_secs(report.offline_secs),
+                fmt_secs(report.total_secs()),
+                format!(
+                    "{}{}",
+                    fmt_secs(mk_time),
+                    if mk_n < n { "*" } else { "" }
+                ),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(*) M-Kmeans measured at n={MK_CAP} and scaled linearly (cost ∝ n).");
+    println!("shape checks: ours-online ≪ M-Kmeans; ours-total ≈ M-Kmeans (same order).");
+}

@@ -1,0 +1,121 @@
+//! Minimal bench harness (criterion is unavailable offline): warmup +
+//! repeated timing with mean/stddev, and aligned table printing for the
+//! paper's tables and figure series.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Time `f` over `reps` repetitions after `warmup` runs; returns seconds per rep.
+pub fn time_reps(warmup: usize, reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// A printable results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format seconds adaptively.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.2}min", s / 60.0)
+    }
+}
+
+/// Format bytes adaptively.
+pub fn fmt_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if bf < 1e3 {
+        format!("{b}B")
+    } else if bf < 1e6 {
+        format!("{:.1}KB", bf / 1e3)
+    } else if bf < 1e9 {
+        format!("{:.1}MB", bf / 1e6)
+    } else {
+        format!("{:.2}GB", bf / 1e9)
+    }
+}
+
+/// Summarize reps as "mean ± std".
+pub fn summarize(xs: &[f64]) -> String {
+    format!("{} ± {}", fmt_secs(stats::mean(xs)), fmt_secs(stats::stddev(xs)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(500), "500B");
+        assert!(fmt_bytes(1500).ends_with("KB"));
+        assert!(fmt_secs(0.5).ends_with("ms"));
+        assert!(fmt_secs(200.0).ends_with("min"));
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let v = time_reps(1, 3, || {});
+        assert_eq!(v.len(), 3);
+    }
+}

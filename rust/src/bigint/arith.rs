@@ -1,0 +1,385 @@
+//! BigUint core: representation, comparison, add/sub/mul/shift.
+
+use std::cmp::Ordering;
+
+/// Arbitrary-precision unsigned integer, little-endian u64 limbs,
+/// normalized (no trailing zero limbs; zero is the empty limb vector).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(x: u64) -> Self {
+        if x == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![x] }
+        }
+    }
+
+    pub fn from_u128(x: u128) -> Self {
+        let lo = x as u64;
+        let hi = (x >> 64) as u64;
+        let mut b = BigUint { limbs: vec![lo, hi] };
+        b.normalize();
+        b
+    }
+
+    /// From little-endian limbs (normalizes).
+    pub fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut b = BigUint { limbs };
+        b.normalize();
+        b
+    }
+
+    /// From big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = vec![];
+        let mut cur: u64 = 0;
+        let mut shift = 0;
+        for &b in bytes.iter().rev() {
+            cur |= (b as u64) << shift;
+            shift += 8;
+            if shift == 64 {
+                limbs.push(cur);
+                cur = 0;
+                shift = 0;
+            }
+        }
+        if cur != 0 || shift != 0 {
+            limbs.push(cur);
+        }
+        Self::from_limbs(limbs)
+    }
+
+    /// To big-endian bytes (minimal length; zero → empty).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        if self.is_zero() {
+            return vec![];
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for (i, &l) in self.limbs.iter().enumerate().rev() {
+            let bytes = l.to_be_bytes();
+            if i == self.limbs.len() - 1 {
+                // strip leading zeros of the top limb
+                let mut started = false;
+                for b in bytes {
+                    if b != 0 || started {
+                        out.push(b);
+                        started = true;
+                    }
+                }
+            } else {
+                out.extend_from_slice(&bytes);
+            }
+        }
+        out
+    }
+
+    pub(crate) fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map(|l| l & 1 == 0).unwrap_or(true)
+    }
+
+    /// Bit length (0 for zero).
+    pub fn bits(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 64 + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Test bit `i`.
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map(|l| (l >> off) & 1 == 1).unwrap_or(false)
+    }
+
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn lt(&self, other: &BigUint) -> bool {
+        self.cmp_big(other) == Ordering::Less
+    }
+
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.len() {
+            let bv = b.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a[i].overflowing_add(bv);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self - other`; panics on underflow (caller guarantees order).
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        debug_assert!(!self.lt(other), "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let bv = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(bv);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        BigUint::from_limbs(out)
+    }
+
+    /// Schoolbook / Karatsuba multiplication (Karatsuba above 32 limbs).
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        if self.limbs.len().min(other.limbs.len()) >= 32 {
+            return self.karatsuba(other);
+        }
+        self.mul_school(other)
+    }
+
+    fn mul_school(&self, other: &BigUint) -> BigUint {
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut idx = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[idx] as u128 + carry;
+                out[idx] = cur as u64;
+                carry = cur >> 64;
+                idx += 1;
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    fn karatsuba(&self, other: &BigUint) -> BigUint {
+        let m = self.limbs.len().max(other.limbs.len()) / 2;
+        let (a0, a1) = self.split_at_limb(m);
+        let (b0, b1) = other.split_at_limb(m);
+        let z0 = a0.mul(&b0);
+        let z2 = a1.mul(&b1);
+        let z1 = a0.add(&a1).mul(&b0.add(&b1)).sub(&z0).sub(&z2);
+        z0.add(&z1.shl_limbs(m)).add(&z2.shl_limbs(2 * m))
+    }
+
+    fn split_at_limb(&self, m: usize) -> (BigUint, BigUint) {
+        if self.limbs.len() <= m {
+            (self.clone(), BigUint::zero())
+        } else {
+            (
+                BigUint::from_limbs(self.limbs[..m].to_vec()),
+                BigUint::from_limbs(self.limbs[m..].to_vec()),
+            )
+        }
+    }
+
+    pub(crate) fn shl_limbs(&self, m: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut limbs = vec![0u64; m];
+        limbs.extend_from_slice(&self.limbs);
+        BigUint::from_limbs(limbs)
+    }
+
+    /// Left shift by `n` bits.
+    pub fn shl(&self, n: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        let mut limbs = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            limbs.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                limbs.push((l << bit_shift) | carry);
+                carry = l >> (64 - bit_shift);
+            }
+            if carry != 0 {
+                limbs.push(carry);
+            }
+        }
+        BigUint::from_limbs(limbs)
+    }
+
+    /// Right shift by `n` bits.
+    pub fn shr(&self, n: usize) -> BigUint {
+        let (limb_shift, bit_shift) = (n / 64, n % 64);
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let src = &self.limbs[limb_shift..];
+        let mut limbs = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            limbs.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let hi = src.get(i + 1).copied().unwrap_or(0);
+                limbs.push((src[i] >> bit_shift) | (hi << (64 - bit_shift)));
+            }
+        }
+        BigUint::from_limbs(limbs)
+    }
+
+    /// `self mod 2^n`.
+    pub fn mod_pow2(&self, n: usize) -> BigUint {
+        let (limb, bit) = (n / 64, n % 64);
+        if limb >= self.limbs.len() {
+            return self.clone();
+        }
+        let mut limbs = self.limbs[..=limb.min(self.limbs.len() - 1)].to_vec();
+        if bit == 0 {
+            limbs.truncate(limb);
+        } else if limb < limbs.len() {
+            limbs[limb] &= (1u64 << bit) - 1;
+        }
+        BigUint::from_limbs(limbs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn big(s: &[u64]) -> BigUint {
+        BigUint::from_limbs(s.to_vec())
+    }
+
+    #[test]
+    fn add_sub_roundtrip_with_carries() {
+        let a = big(&[u64::MAX, u64::MAX, 3]);
+        let b = big(&[1, 0, 0]);
+        let s = a.add(&b);
+        assert_eq!(s, big(&[0, 0, 4]));
+        assert_eq!(s.sub(&b), a);
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let a = BigUint::from_u64(0xFFFF_FFFF_FFFF_FFFF);
+        let b = BigUint::from_u64(0xFEDC_BA98_7654_3210);
+        let p = a.mul(&b);
+        let want = (0xFFFF_FFFF_FFFF_FFFFu128) * 0xFEDC_BA98_7654_3210u128 as u128;
+        assert_eq!(p, BigUint::from_u128(want));
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        // Build two ~40-limb numbers from a simple recurrence.
+        let mut al = vec![0u64; 40];
+        let mut bl = vec![0u64; 37];
+        let mut x = 0x1234_5678_9ABC_DEF0u64;
+        for l in al.iter_mut().chain(bl.iter_mut()) {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *l = x;
+        }
+        let a = big(&al);
+        let b = big(&bl);
+        assert_eq!(a.karatsuba(&b), a.mul_school(&b));
+    }
+
+    #[test]
+    fn shifts() {
+        let a = BigUint::from_u64(0b1011);
+        assert_eq!(a.shl(65), big(&[0, 0b10110]));
+        assert_eq!(a.shl(65).shr(65), a);
+        assert_eq!(a.shr(2), BigUint::from_u64(0b10));
+        assert_eq!(a.shr(100), BigUint::zero());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let a = big(&[0xDEAD_BEEF, 0x1234]);
+        let bytes = a.to_bytes_be();
+        assert_eq!(BigUint::from_bytes_be(&bytes), a);
+        assert_eq!(BigUint::from_bytes_be(&[]), BigUint::zero());
+        assert_eq!(BigUint::from_u64(256).to_bytes_be(), vec![1, 0]);
+    }
+
+    #[test]
+    fn bits_and_bit() {
+        assert_eq!(BigUint::zero().bits(), 0);
+        assert_eq!(BigUint::from_u64(1).bits(), 1);
+        assert_eq!(big(&[0, 1]).bits(), 65);
+        assert!(big(&[0, 1]).bit(64));
+        assert!(!big(&[0, 1]).bit(63));
+    }
+
+    #[test]
+    fn mod_pow2() {
+        let a = big(&[u64::MAX, 0b111]);
+        assert_eq!(a.mod_pow2(64), big(&[u64::MAX]));
+        assert_eq!(a.mod_pow2(66), big(&[u64::MAX, 0b11]));
+        assert_eq!(a.mod_pow2(200), a);
+    }
+
+    #[test]
+    fn cmp_orders() {
+        assert!(BigUint::from_u64(2).lt(&big(&[0, 1])));
+        assert!(!big(&[0, 1]).lt(&big(&[0, 1])));
+        assert!(big(&[5, 1]).lt(&big(&[4, 2])));
+    }
+}

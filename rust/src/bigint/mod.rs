@@ -1,0 +1,15 @@
+//! Arbitrary-precision unsigned integers (u64 limbs, little-endian).
+//!
+//! `num-bigint` is not available offline, and the paper's HE layer
+//! (Okamoto-Uchiyama / Paillier with 2048-bit keys, §5.1) and the
+//! DH-based base OTs need modular arithmetic on multi-thousand-bit
+//! numbers — so we build the substrate: schoolbook/Karatsuba
+//! multiplication, Knuth Algorithm-D division, Montgomery modular
+//! exponentiation, Miller-Rabin primality and prime generation.
+
+pub mod arith;
+pub mod div;
+pub mod modular;
+pub mod prime;
+
+pub use arith::BigUint;

@@ -1,0 +1,278 @@
+//! Modular arithmetic: Montgomery multiplication/exponentiation,
+//! modular inverse (binary extended GCD).
+
+use super::arith::BigUint;
+
+/// Montgomery context for a fixed odd modulus `n`: precomputes
+/// `n' = -n^{-1} mod 2^64` and `R^2 mod n` for CIOS multiplication.
+pub struct Montgomery {
+    pub n: BigUint,
+    n_limbs: Vec<u64>,
+    n_prime: u64,
+    r2: BigUint,
+    k: usize,
+}
+
+impl Montgomery {
+    pub fn new(n: &BigUint) -> Montgomery {
+        assert!(!n.is_even() && !n.is_zero(), "Montgomery needs odd modulus");
+        let k = n.limbs.len();
+        // n' = -n^{-1} mod 2^64 via Newton's iteration on 64-bit inverse.
+        let n0 = n.limbs[0];
+        let mut inv = n0; // correct to 3 bits (odd)
+        for _ in 0..5 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(n0.wrapping_mul(inv)));
+        }
+        let n_prime = inv.wrapping_neg();
+        // R^2 mod n where R = 2^(64k)
+        let r2 = BigUint::one().shl(128 * k).rem(n);
+        Montgomery { n: n.clone(), n_limbs: n.limbs.clone(), n_prime, r2, k }
+    }
+
+    /// CIOS Montgomery product: returns `a·b·R^{-1} mod n` for inputs in
+    /// Montgomery form (little-endian limb vectors of length ≤ k).
+    fn mont_mul_limbs(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let k = self.k;
+        let mut t = vec![0u64; k + 2];
+        for i in 0..k {
+            let ai = a.get(i).copied().unwrap_or(0);
+            // t += ai * b
+            let mut carry: u128 = 0;
+            for j in 0..k {
+                let bj = b.get(j).copied().unwrap_or(0);
+                let cur = t[j] as u128 + ai as u128 * bj as u128 + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k] = cur as u64;
+            t[k + 1] = (cur >> 64) as u64;
+            // m = t[0] * n' mod 2^64 ; t += m*n ; t >>= 64
+            let m = t[0].wrapping_mul(self.n_prime);
+            let cur = t[0] as u128 + m as u128 * self.n_limbs[0] as u128;
+            let mut carry: u128 = cur >> 64;
+            for j in 1..k {
+                let cur = t[j] as u128 + m as u128 * self.n_limbs[j] as u128 + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k - 1] = cur as u64;
+            t[k] = t[k + 1].wrapping_add((cur >> 64) as u64);
+            t[k + 1] = 0;
+        }
+        t.truncate(k + 1);
+        // Conditional subtraction to land in [0, n).
+        let mut res = BigUint::from_limbs(t);
+        if !res.lt(&self.n) {
+            res = res.sub(&self.n);
+        }
+        res.limbs.resize(self.k, 0);
+        res.limbs.clone()
+    }
+
+    fn to_mont(&self, a: &BigUint) -> Vec<u64> {
+        let mut al = a.rem(&self.n).limbs;
+        al.resize(self.k, 0);
+        let mut r2 = self.r2.limbs.clone();
+        r2.resize(self.k, 0);
+        self.mont_mul_limbs(&al, &r2)
+    }
+
+    fn from_mont(&self, a: &[u64]) -> BigUint {
+        let one = {
+            let mut v = vec![0u64; self.k];
+            v[0] = 1;
+            v
+        };
+        BigUint::from_limbs(self.mont_mul_limbs(a, &one))
+    }
+
+    /// `base^exp mod n` with left-to-right square-and-multiply in
+    /// Montgomery form.
+    pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&self.n);
+        }
+        let bm = self.to_mont(base);
+        let mut acc = self.to_mont(&BigUint::one());
+        for i in (0..exp.bits()).rev() {
+            acc = self.mont_mul_limbs(&acc, &acc);
+            if exp.bit(i) {
+                acc = self.mont_mul_limbs(&acc, &bm);
+            }
+        }
+        self.from_mont(&acc)
+    }
+
+    /// Modular multiplication `a·b mod n` through Montgomery form.
+    pub fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
+        let am = self.to_mont(a);
+        let bm = self.to_mont(b);
+        self.from_mont(&self.mont_mul_limbs(&am, &bm))
+    }
+}
+
+/// `a^e mod n` convenience (builds a context per call; hot paths keep a
+/// [`Montgomery`] around). Falls back to simple square-and-multiply with
+/// division for even moduli.
+pub fn mod_pow(base: &BigUint, exp: &BigUint, n: &BigUint) -> BigUint {
+    if !n.is_even() {
+        return Montgomery::new(n).pow(base, exp);
+    }
+    // Even modulus (rare; e.g. 2^l): plain square-and-multiply.
+    let mut acc = BigUint::one().rem(n);
+    let b = base.rem(n);
+    for i in (0..exp.bits()).rev() {
+        acc = acc.mul(&acc).rem(n);
+        if exp.bit(i) {
+            acc = acc.mul(&b).rem(n);
+        }
+    }
+    acc
+}
+
+/// Modular inverse `a^{-1} mod n` (extended Euclid); `None` if gcd ≠ 1.
+pub fn mod_inv(a: &BigUint, n: &BigUint) -> Option<BigUint> {
+    // Iterative extended Euclid on signed coefficient tracking.
+    let (mut r0, mut r1) = (n.clone(), a.rem(n));
+    // Coefficients of a: (s, sign) pairs tracked as BigUint with sign bits.
+    let (mut t0, mut t0_neg) = (BigUint::zero(), false);
+    let (mut t1, mut t1_neg) = (BigUint::one(), false);
+    while !r1.is_zero() {
+        let (q, r2) = r0.divmod(&r1);
+        // t2 = t0 - q*t1 with sign handling
+        let qt1 = q.mul(&t1);
+        let (t2, t2_neg) = signed_sub(&t0, t0_neg, &qt1, t1_neg);
+        r0 = r1;
+        r1 = r2;
+        t0 = t1;
+        t0_neg = t1_neg;
+        t1 = t2;
+        t1_neg = t2_neg;
+    }
+    if !r0.is_one() {
+        return None;
+    }
+    Some(if t0_neg { n.sub(&t0.rem(n)) } else { t0.rem(n) })
+}
+
+/// (a, a_neg) - (b, b_neg) in sign-magnitude.
+fn signed_sub(a: &BigUint, a_neg: bool, b: &BigUint, b_neg: bool) -> (BigUint, bool) {
+    match (a_neg, b_neg) {
+        (false, true) => (a.add(b), false),
+        (true, false) => (a.add(b), true),
+        (an, _) => {
+            if b.lt(a) || a == b {
+                (a.sub(b), an)
+            } else {
+                (b.sub(a), !an)
+            }
+        }
+    }
+}
+
+/// Greatest common divisor (binary / Euclid hybrid).
+pub fn gcd(a: &BigUint, b: &BigUint) -> BigUint {
+    let (mut x, mut y) = (a.clone(), b.clone());
+    while !y.is_zero() {
+        let r = x.rem(&y);
+        x = y;
+        y = r;
+    }
+    x
+}
+
+/// Least common multiple.
+pub fn lcm(a: &BigUint, b: &BigUint) -> BigUint {
+    if a.is_zero() || b.is_zero() {
+        return BigUint::zero();
+    }
+    a.div(&gcd(a, b)).mul(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prg;
+
+    fn rand_big(prg: &mut Prg, limbs: usize) -> BigUint {
+        BigUint::from_limbs((0..limbs).map(|_| prg.next_u64()).collect())
+    }
+
+    #[test]
+    fn mont_mul_matches_naive() {
+        let mut prg = Prg::new(55);
+        for _ in 0..20 {
+            let mut n = rand_big(&mut prg, 4);
+            n.limbs[0] |= 1; // odd
+            let m = Montgomery::new(&n);
+            let a = rand_big(&mut prg, 4).rem(&n);
+            let b = rand_big(&mut prg, 4).rem(&n);
+            assert_eq!(m.mul(&a, &b), a.mul(&b).rem(&n));
+        }
+    }
+
+    #[test]
+    fn pow_small_cases() {
+        let n = BigUint::from_u64(1000000007);
+        let m = Montgomery::new(&n);
+        assert_eq!(m.pow(&BigUint::from_u64(2), &BigUint::from_u64(10)), BigUint::from_u64(1024));
+        // Fermat: a^(p-1) = 1 mod p
+        assert_eq!(
+            m.pow(&BigUint::from_u64(123456), &BigUint::from_u64(1000000006)),
+            BigUint::one()
+        );
+    }
+
+    #[test]
+    fn pow_multi_limb_fermat() {
+        // p = 2^89 - 1 is a Mersenne prime.
+        let p = BigUint::one().shl(89).sub(&BigUint::one());
+        let m = Montgomery::new(&p);
+        let a = BigUint::from_u128(0xDEAD_BEEF_1234_5678_9ABC);
+        let pm1 = p.sub(&BigUint::one());
+        assert_eq!(m.pow(&a, &pm1), BigUint::one());
+    }
+
+    #[test]
+    fn mod_inv_inverts() {
+        let mut prg = Prg::new(66);
+        let p = BigUint::one().shl(89).sub(&BigUint::one()); // prime
+        for _ in 0..10 {
+            let a = rand_big(&mut prg, 2).rem(&p);
+            if a.is_zero() {
+                continue;
+            }
+            let inv = mod_inv(&a, &p).expect("inverse exists mod prime");
+            assert_eq!(a.mul(&inv).rem(&p), BigUint::one());
+        }
+    }
+
+    #[test]
+    fn mod_inv_none_when_not_coprime() {
+        let a = BigUint::from_u64(6);
+        let n = BigUint::from_u64(9);
+        assert!(mod_inv(&a, &n).is_none());
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        let a = BigUint::from_u64(12);
+        let b = BigUint::from_u64(18);
+        assert_eq!(gcd(&a, &b), BigUint::from_u64(6));
+        assert_eq!(lcm(&a, &b), BigUint::from_u64(36));
+    }
+
+    #[test]
+    fn mod_pow_even_modulus() {
+        let n = BigUint::from_u64(1 << 20);
+        let r = mod_pow(&BigUint::from_u64(3), &BigUint::from_u64(100), &n);
+        // 3^100 mod 2^20 computed independently
+        let mut acc: u64 = 1;
+        for _ in 0..100 {
+            acc = acc.wrapping_mul(3) % (1 << 20);
+        }
+        assert_eq!(r, BigUint::from_u64(acc));
+    }
+}

@@ -1,0 +1,139 @@
+//! Primality testing and prime generation (Miller-Rabin).
+
+use super::arith::BigUint;
+use super::modular::Montgomery;
+use crate::util::prng::Prg;
+
+/// Small primes for trial division before Miller-Rabin.
+const SMALL_PRIMES: [u64; 30] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+    97, 101, 103, 107, 109, 113,
+];
+
+/// Miller-Rabin probabilistic primality test with `rounds` random bases
+/// (error ≤ 4^-rounds).
+pub fn is_prime(n: &BigUint, rounds: usize, prg: &mut Prg) -> bool {
+    if n.bits() <= 6 {
+        let v = n.to_u64().unwrap();
+        return SMALL_PRIMES.contains(&v);
+    }
+    if n.is_even() {
+        return false;
+    }
+    for &p in &SMALL_PRIMES {
+        if n.rem(&BigUint::from_u64(p)).is_zero() {
+            return n.to_u64() == Some(p);
+        }
+    }
+    // n − 1 = d · 2^s
+    let n1 = n.sub(&BigUint::one());
+    let s = {
+        let mut s = 0;
+        while !n1.bit(s) {
+            s += 1;
+        }
+        s
+    };
+    let d = n1.shr(s);
+    let mont = Montgomery::new(n);
+    'witness: for _ in 0..rounds {
+        // Random base in [2, n-2].
+        let a = loop {
+            let bits = n.bits();
+            let limbs = (bits + 63) / 64;
+            let mut cand = BigUint::from_limbs((0..limbs).map(|_| prg.next_u64()).collect());
+            cand = cand.rem(n);
+            if !cand.is_zero() && !cand.is_one() && cand.lt(&n1) {
+                break cand;
+            }
+        };
+        let mut x = mont.pow(&a, &d);
+        if x.is_one() || x == n1 {
+            continue 'witness;
+        }
+        for _ in 0..s - 1 {
+            x = mont.mul(&x, &x);
+            if x == n1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random prime of exactly `bits` bits.
+pub fn gen_prime(bits: usize, prg: &mut Prg) -> BigUint {
+    assert!(bits >= 8);
+    loop {
+        let limbs = (bits + 63) / 64;
+        let mut cand = BigUint::from_limbs((0..limbs).map(|_| prg.next_u64()).collect());
+        cand = cand.mod_pow2(bits);
+        // Force top bit (exact size) and bottom bit (odd).
+        cand = {
+            let mut l = cand.limbs.clone();
+            l.resize(limbs, 0);
+            l[(bits - 1) / 64] |= 1u64 << ((bits - 1) % 64);
+            l[0] |= 1;
+            BigUint::from_limbs(l)
+        };
+        if is_prime(&cand, 12, prg) {
+            return cand;
+        }
+    }
+}
+
+/// Generate a prime `p` of `bits` bits such that `p-1` has a known large
+/// prime factor structure is NOT required here; Okamoto-Uchiyama needs
+/// plain random primes; Paillier needs two distinct primes.
+pub fn gen_distinct_primes(bits: usize, prg: &mut Prg) -> (BigUint, BigUint) {
+    let p = gen_prime(bits, prg);
+    loop {
+        let q = gen_prime(bits, prg);
+        if q != p {
+            return (p, q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_primes_and_composites() {
+        let mut prg = Prg::new(1);
+        for p in [2u64, 3, 5, 97, 1000000007, 4294967291] {
+            assert!(is_prime(&BigUint::from_u64(p), 16, &mut prg), "{p} is prime");
+        }
+        for c in [1u64, 4, 100, 1000000006, 4294967295, 561 /* Carmichael */] {
+            assert!(!is_prime(&BigUint::from_u64(c), 16, &mut prg), "{c} is composite");
+        }
+    }
+
+    #[test]
+    fn mersenne_89_is_prime() {
+        let mut prg = Prg::new(2);
+        let p = BigUint::one().shl(89).sub(&BigUint::one());
+        assert!(is_prime(&p, 12, &mut prg));
+        let c = BigUint::one().shl(87).sub(&BigUint::one()); // 2^87-1 composite
+        assert!(!is_prime(&c, 12, &mut prg));
+    }
+
+    #[test]
+    fn generated_primes_have_exact_bits() {
+        let mut prg = Prg::new(3);
+        for bits in [64, 96, 128] {
+            let p = gen_prime(bits, &mut prg);
+            assert_eq!(p.bits(), bits);
+            assert!(!p.is_even());
+        }
+    }
+
+    #[test]
+    fn distinct_primes_differ() {
+        let mut prg = Prg::new(4);
+        let (p, q) = gen_distinct_primes(64, &mut prg);
+        assert_ne!(p, q);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: session orchestration and cost reporting.
+//!
+//! Wraps a full protocol run — artifact loading, data preparation,
+//! protocol execution, and translation of the exact (bytes, rounds,
+//! wall-clock) measurements into the paper's reporting format (online /
+//! offline time and communication under a LAN or WAN link model).
+
+pub mod report;
+pub mod session;
+
+pub use report::Report;
+pub use session::Session;

@@ -1,0 +1,112 @@
+//! Protocol-run reports in the paper's accounting format.
+//!
+//! Measured quantities: exact bytes/rounds per phase (from the channel
+//! meters), compute wall-clock per step, triple-generation time, and the
+//! recorded offline [`Demand`]. Derived quantities: online time =
+//! compute + modeled link time; offline time/bytes = OT-based generation
+//! priced from the demand (see [`crate::offline::pricing`]).
+
+use crate::kmeans::secure::SecureKmeansOutput;
+use crate::net::cost::CostModel;
+use crate::net::meter::PhaseStats;
+use crate::offline::pricing::{self, OtCalibration};
+
+/// One run's costs under a link model.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Online wall-clock seconds (compute + modeled link time).
+    pub online_secs: f64,
+    /// Offline seconds (OT-based triple generation, modeled from demand).
+    pub offline_secs: f64,
+    /// Online bytes (both parties).
+    pub online_bytes: u64,
+    /// Offline bytes (both parties, OT generation traffic).
+    pub offline_bytes: u64,
+    /// Per-step online breakdown (s1, s2, s3) in seconds.
+    pub steps: [f64; 3],
+    /// Per-step online bytes.
+    pub step_bytes: [u64; 3],
+}
+
+impl Report {
+    /// Build a report from a secure K-means run.
+    pub fn from_run(out: &SecureKmeansOutput, link: &CostModel, cal: &OtCalibration) -> Report {
+        let phase = |label: &str| -> PhaseStats {
+            let mut s = out.meter_a.get(label);
+            s.merge(&out.meter_b.get(label));
+            s
+        };
+        let online_stats = {
+            let mut s = out.meter_a.total_prefix("online.");
+            s.merge(&out.meter_b.total_prefix("online."));
+            s
+        };
+        // Rounds are counted per party; the flight model uses party A's
+        // (symmetric exchanges overlap on a full-duplex link).
+        let online_rounds = out.meter_a.total_prefix("online.").rounds;
+        let link_time =
+            link.time_raw(online_stats.bytes_sent / 2, online_rounds);
+        let compute =
+            out.step_wall.s1_distance + out.step_wall.s2_assign + out.step_wall.s3_update;
+        let steps_wall = [
+            out.step_wall.s1_distance,
+            out.step_wall.s2_assign,
+            out.step_wall.s3_update,
+        ];
+        let step_stats = [phase("online.s1"), phase("online.s2"), phase("online.s3")];
+        let mut steps = [0.0; 3];
+        let mut step_bytes = [0u64; 3];
+        for i in 0..3 {
+            let rounds_i = [
+                out.meter_a.get("online.s1").rounds,
+                out.meter_a.get("online.s2").rounds,
+                out.meter_a.get("online.s3").rounds,
+            ][i];
+            steps[i] = steps_wall[i] + link.time_raw(step_stats[i].bytes_sent / 2, rounds_i);
+            step_bytes[i] = step_stats[i].bytes_sent;
+        }
+        Report {
+            online_secs: compute + link_time,
+            offline_secs: pricing::offline_secs(&out.demand, cal),
+            online_bytes: online_stats.bytes_sent,
+            offline_bytes: pricing::offline_bytes(&out.demand),
+            steps,
+            step_bytes,
+        }
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.online_secs + self.offline_secs
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.online_bytes + self.offline_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+    use crate::kmeans::config::{Partition, SecureKmeansConfig};
+    use crate::kmeans::secure;
+
+    #[test]
+    fn report_has_consistent_totals() {
+        let ds = BlobSpec::new(30, 2, 2).generate(4);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = secure::run(&ds, &cfg).unwrap();
+        let cal = OtCalibration { secs_per_ot: 1e-5, secs_per_bit_lane: 1e-6, setup_secs: 0.5 };
+        let r = Report::from_run(&out, &CostModel::wan(), &cal);
+        assert!(r.online_secs > 0.0);
+        assert!(r.offline_secs > 0.5, "includes setup");
+        assert!(r.offline_bytes > r.online_bytes, "offline must dominate comm");
+        assert!(r.total_secs() >= r.online_secs);
+        assert!(r.steps.iter().all(|&s| s > 0.0));
+    }
+}

@@ -1,0 +1,72 @@
+//! High-level session: the entrypoint the launcher and examples use.
+
+use crate::data::blobs::Dataset;
+use crate::data::normalize;
+use crate::kmeans::config::SecureKmeansConfig;
+use crate::kmeans::secure::{self, SecureKmeansOutput};
+use crate::net::cost::CostModel;
+use crate::offline::pricing::OtCalibration;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// A configured secure-clustering session.
+pub struct Session {
+    pub cfg: SecureKmeansConfig,
+    pub link: CostModel,
+    /// Whether to load PJRT artifacts for the compute hot path.
+    pub use_artifacts: bool,
+}
+
+impl Session {
+    pub fn new(cfg: SecureKmeansConfig) -> Session {
+        Session { cfg, link: CostModel::lan(), use_artifacts: true }
+    }
+
+    pub fn with_link(mut self, link: CostModel) -> Session {
+        self.link = link;
+        self
+    }
+
+    /// Run the protocol on (normalized) data; loads artifacts if present.
+    pub fn run(&self, data: &Dataset) -> Result<SecureKmeansOutput> {
+        if self.use_artifacts {
+            // Best-effort: protocol falls back to native kernels.
+            let _ = crate::runtime::dispatch::init(Path::new("artifacts"));
+        }
+        let normalized = normalize::min_max(data);
+        secure::run(&normalized, &self.cfg)
+    }
+
+    /// Run and summarize under this session's link model.
+    pub fn run_with_report(
+        &self,
+        data: &Dataset,
+        cal: &OtCalibration,
+    ) -> Result<(SecureKmeansOutput, super::Report)> {
+        let out = self.run(data)?;
+        let report = super::Report::from_run(&out, &self.link, cal);
+        Ok((out, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+    use crate::kmeans::config::Partition;
+
+    #[test]
+    fn session_runs_end_to_end() {
+        let ds = BlobSpec::new(24, 2, 2).generate(6);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let mut s = Session::new(cfg);
+        s.use_artifacts = false; // unit tests must not require artifacts
+        let out = s.run(&ds).unwrap();
+        assert_eq!(out.assignments.len(), 24);
+    }
+}

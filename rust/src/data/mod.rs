@@ -1,0 +1,13 @@
+//! Dataset generation and preparation (paper §5.1).
+//!
+//! Three synthetic generators mirror the paper's evaluation data:
+//! Gaussian blobs ([`blobs`]) for Q1-Q3, a sparsity-controlled variant
+//! ([`sparse_gen`]) for Q4, and a two-party fraud dataset
+//! ([`fraud_gen`]) with the production shape (10k × 42, 18 payment + 24
+//! merchant features, ~1% fraud) for Q5. [`normalize`] provides the
+//! joint min-max normalization the paper applies before clustering.
+
+pub mod blobs;
+pub mod fraud_gen;
+pub mod normalize;
+pub mod sparse_gen;

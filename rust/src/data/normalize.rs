@@ -1,0 +1,59 @@
+//! Joint min-max normalization (paper §4.2: "before performing
+//! clustering, a joint normalization operation is required").
+//!
+//! For vertically partitioned data each feature is owned by exactly one
+//! party, so min-max per column is a purely local operation; for
+//! horizontal partitioning the parties would run a two-element secure
+//! max/min per column — here provided in plaintext form for data
+//! preparation, with column stats exposed for the secure wrapper.
+
+use super::blobs::Dataset;
+
+/// Per-column (min, max).
+pub fn column_stats(ds: &Dataset) -> Vec<(f64, f64)> {
+    let mut stats = vec![(f64::INFINITY, f64::NEG_INFINITY); ds.d];
+    for i in 0..ds.n {
+        for (l, &v) in ds.row(i).iter().enumerate() {
+            stats[l].0 = stats[l].0.min(v);
+            stats[l].1 = stats[l].1.max(v);
+        }
+    }
+    stats
+}
+
+/// Min-max scale every column into [0, 1] (constant columns → 0).
+pub fn min_max(ds: &Dataset) -> Dataset {
+    let stats = column_stats(ds);
+    let mut out = ds.clone();
+    for i in 0..ds.n {
+        for l in 0..ds.d {
+            let (lo, hi) = stats[l];
+            let v = &mut out.x[i * ds.d + l];
+            *v = if hi > lo { (*v - lo) / (hi - lo) } else { 0.0 };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_into_unit_interval() {
+        let ds = Dataset {
+            n: 3,
+            d: 2,
+            x: vec![-1.0, 10.0, 0.0, 20.0, 1.0, 30.0],
+            labels: vec![0; 3],
+        };
+        let out = min_max(&ds);
+        assert_eq!(out.x, vec![0.0, 0.0, 0.5, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn constant_column_becomes_zero() {
+        let ds = Dataset { n: 2, d: 1, x: vec![5.0, 5.0], labels: vec![0; 2] };
+        assert_eq!(min_max(&ds).x, vec![0.0, 0.0]);
+    }
+}

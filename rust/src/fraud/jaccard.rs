@@ -1,0 +1,33 @@
+//! Jaccard coefficient `J(R, R*) = |R ∩ R*| / |R ∪ R*|` (paper §5.6).
+
+/// Jaccard similarity of two index sets (need not be sorted).
+pub fn jaccard(r: &[usize], r_star: &[usize]) -> f64 {
+    use std::collections::HashSet;
+    let a: HashSet<usize> = r.iter().copied().collect();
+    let b: HashSet<usize> = r_star.iter().copied().collect();
+    let inter = a.intersection(&b).count();
+    let union = a.union(&b).count();
+    if union == 0 {
+        return 1.0; // both empty: identical
+    }
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_and_identity() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+        let j = jaccard(&[1, 2, 3, 4], &[3, 4, 5, 6]);
+        assert!((j - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_and_duplicates_ignored() {
+        assert_eq!(jaccard(&[3, 1, 2, 2], &[2, 3, 1]), 1.0);
+    }
+}

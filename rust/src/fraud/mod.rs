@@ -1,0 +1,11 @@
+//! Fraud detection on clustering output (paper §5.6).
+//!
+//! Transactions are grouped by (secure) K-means; outliers — samples far
+//! from every dense cluster — are flagged as fraud candidates and scored
+//! against ground truth with the Jaccard coefficient.
+
+pub mod jaccard;
+pub mod outlier;
+
+pub use jaccard::jaccard;
+pub use outlier::{detect_outliers, OutlierConfig};

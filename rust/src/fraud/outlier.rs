@@ -1,0 +1,93 @@
+//! Cluster-based outlier scoring.
+//!
+//! The paper's deployment flags transactions that "distinguish outliers
+//! when the input size is large enough" [9 — k-means--]: a sample is an
+//! outlier if it is far from its assigned centroid (distance above a
+//! quantile threshold) or belongs to an abnormally small cluster.
+
+use crate::data::blobs::Dataset;
+use crate::kmeans::plaintext::esd;
+
+/// Outlier-detection knobs.
+#[derive(Debug, Clone)]
+pub struct OutlierConfig {
+    /// Flag the top `rate` fraction of samples by distance score.
+    pub rate: f64,
+    /// Clusters holding fewer than `min_cluster_frac · n` samples are
+    /// treated as outlier clusters wholesale.
+    pub min_cluster_frac: f64,
+}
+
+impl Default for OutlierConfig {
+    fn default() -> Self {
+        OutlierConfig { rate: 0.05, min_cluster_frac: 0.02 }
+    }
+}
+
+/// Score samples against centroids and return flagged indices (sorted).
+pub fn detect_outliers(
+    data: &Dataset,
+    centroids: &[f64],
+    assignments: &[usize],
+    k: usize,
+    cfg: &OutlierConfig,
+) -> Vec<usize> {
+    let d = data.d;
+    assert_eq!(centroids.len(), k * d);
+    assert_eq!(assignments.len(), data.n);
+    let mut counts = vec![0usize; k];
+    for &a in assignments {
+        counts[a] += 1;
+    }
+    let min_sz = (cfg.min_cluster_frac * data.n as f64).ceil() as usize;
+    // Distance of each sample to its centroid; members of tiny clusters
+    // get an infinite score so they always rank first.
+    let mut scored: Vec<(f64, usize)> = (0..data.n)
+        .map(|i| {
+            let j = assignments[i];
+            let s = if counts[j] < min_sz {
+                f64::INFINITY
+            } else {
+                esd(data.row(i), &centroids[j * d..(j + 1) * d])
+            };
+            (s, i)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let n_flag = ((data.n as f64) * cfg.rate).round() as usize;
+    let mut out: Vec<usize> = scored[..n_flag.min(data.n)].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_far_points() {
+        // 20 points near (0.2, 0.2); 2 points far away; k = 1.
+        let mut x = vec![];
+        for i in 0..20 {
+            x.extend_from_slice(&[0.2 + 0.001 * i as f64, 0.2]);
+        }
+        x.extend_from_slice(&[0.95, 0.95, 0.9, 0.05]);
+        let ds = Dataset { n: 22, d: 2, x, labels: vec![0; 22] };
+        let centroids = vec![0.25, 0.2];
+        let assignments = vec![0usize; 22];
+        let cfg = OutlierConfig { rate: 2.0 / 22.0, min_cluster_frac: 0.0 };
+        let got = detect_outliers(&ds, &centroids, &assignments, 1, &cfg);
+        assert_eq!(got, vec![20, 21]);
+    }
+
+    #[test]
+    fn tiny_clusters_flagged_wholesale() {
+        let x = vec![0.1, 0.1, 0.11, 0.1, 0.12, 0.1, 0.9, 0.9];
+        let ds = Dataset { n: 4, d: 2, x, labels: vec![0; 4] };
+        let centroids = vec![0.11, 0.1, 0.9, 0.9];
+        let assignments = vec![0, 0, 0, 1];
+        let cfg = OutlierConfig { rate: 0.25, min_cluster_frac: 0.3 };
+        let got = detect_outliers(&ds, &centroids, &assignments, 2, &cfg);
+        assert_eq!(got, vec![3]); // the singleton cluster member
+    }
+}

@@ -1,0 +1,111 @@
+//! Boolean circuit representation.
+//!
+//! Wires are dense indices. Layout: wire 0 is the constant-1 wire
+//! (semantically a garbler input fixed to 1 — NOT gates become free
+//! XORs against it), then the garbler's input bits, then the
+//! evaluator's, then internal wires in topological order.
+
+/// A gate over wire indices (out is always a fresh wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// out = a ⊕ b (free under free-XOR).
+    Xor { a: u32, b: u32, out: u32 },
+    /// out = a ∧ b (two ciphertexts).
+    And { a: u32, b: u32, out: u32 },
+}
+
+/// A complete circuit.
+#[derive(Debug, Clone)]
+pub struct Circuit {
+    /// Total wires including const-1, inputs and internals.
+    pub n_wires: usize,
+    /// Garbler input bit count (excluding the const-1 wire).
+    pub n_garbler: usize,
+    /// Evaluator input bit count.
+    pub n_eval: usize,
+    pub gates: Vec<Gate>,
+    /// Output wire indices.
+    pub outputs: Vec<u32>,
+}
+
+impl Circuit {
+    /// Index of the constant-1 wire.
+    pub const ONE: u32 = 0;
+
+    /// First garbler input wire.
+    pub fn garbler_input(&self, i: usize) -> u32 {
+        assert!(i < self.n_garbler);
+        1 + i as u32
+    }
+
+    /// First evaluator input wire.
+    pub fn eval_input(&self, i: usize) -> u32 {
+        assert!(i < self.n_eval);
+        (1 + self.n_garbler + i) as u32
+    }
+
+    /// Number of AND gates (the cost metric).
+    pub fn and_count(&self) -> usize {
+        self.gates.iter().filter(|g| matches!(g, Gate::And { .. })).count()
+    }
+
+    /// Plaintext evaluation (testing oracle).
+    pub fn eval_plain(&self, garbler_bits: &[bool], eval_bits: &[bool]) -> Vec<bool> {
+        assert_eq!(garbler_bits.len(), self.n_garbler);
+        assert_eq!(eval_bits.len(), self.n_eval);
+        let mut w = vec![false; self.n_wires];
+        w[0] = true;
+        for (i, &b) in garbler_bits.iter().enumerate() {
+            w[1 + i] = b;
+        }
+        for (i, &b) in eval_bits.iter().enumerate() {
+            w[1 + self.n_garbler + i] = b;
+        }
+        for g in &self.gates {
+            match *g {
+                Gate::Xor { a, b, out } => w[out as usize] = w[a as usize] ^ w[b as usize],
+                Gate::And { a, b, out } => w[out as usize] = w[a as usize] & w[b as usize],
+            }
+        }
+        self.outputs.iter().map(|&o| w[o as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_eval_xor_and() {
+        // out = (g0 ^ e0) & g1
+        let c = Circuit {
+            n_wires: 5,
+            n_garbler: 2,
+            n_eval: 1,
+            gates: vec![
+                Gate::Xor { a: 1, b: 3, out: 4 },
+                Gate::And { a: 4, b: 2, out: 4 + 1 - 1 },
+            ],
+            outputs: vec![4],
+        };
+        // fix: output of And must be a fresh wire; rebuild properly
+        let c = Circuit {
+            n_wires: 6,
+            gates: vec![
+                Gate::Xor { a: 1, b: 3, out: 4 },
+                Gate::And { a: 4, b: 2, out: 5 },
+            ],
+            outputs: vec![5],
+            ..c
+        };
+        for g0 in [false, true] {
+            for g1 in [false, true] {
+                for e0 in [false, true] {
+                    let out = c.eval_plain(&[g0, g1], &[e0]);
+                    assert_eq!(out[0], (g0 ^ e0) & g1);
+                }
+            }
+        }
+        assert_eq!(c.and_count(), 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! Garbling and evaluation: free-XOR, point-and-permute, half-gates.
+//!
+//! Labels are 128-bit; the global offset `R` has LSB 1 so a label's LSB
+//! is its permute bit. AND gates follow Zahur-Rosulek-Evans half-gates:
+//! two ciphertexts per gate, two fixed-key-AES hashes to evaluate.
+
+use super::circuit::{Circuit, Gate};
+use crate::util::prng::Prg;
+use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
+use aes::Aes128;
+use once_cell::sync::Lazy;
+
+/// Fixed-key AES for the hash (standard free-XOR instantiation).
+static FIXED_AES: Lazy<Aes128> =
+    Lazy::new(|| Aes128::new(GenericArray::from_slice(b"ppkmeans-gc-key!")));
+
+/// Correlation-robust hash H(x, i) = π(2x ⊕ i) ⊕ (2x ⊕ i).
+#[inline]
+fn h(x: u128, index: u64) -> u128 {
+    let t = (x << 1) ^ (index as u128);
+    let mut block = GenericArray::clone_from_slice(&t.to_le_bytes());
+    FIXED_AES.encrypt_block(&mut block);
+    u128::from_le_bytes(block.as_slice().try_into().unwrap()) ^ t
+}
+
+#[inline]
+fn lsb(x: u128) -> bool {
+    x & 1 == 1
+}
+
+/// The garbler's material for one circuit.
+pub struct Garbling {
+    /// (TG, TE) per AND gate, in gate order.
+    pub tables: Vec<(u128, u128)>,
+    /// Zero-labels per wire (garbler secret; label1 = label0 ^ r).
+    pub wire0: Vec<u128>,
+    /// Global offset.
+    pub r: u128,
+    /// Output decode bits: lsb of each output wire's zero-label.
+    pub decode: Vec<bool>,
+}
+
+impl Garbling {
+    /// Label pair for a wire.
+    pub fn labels(&self, wire: u32) -> (u128, u128) {
+        let w0 = self.wire0[wire as usize];
+        (w0, w0 ^ self.r)
+    }
+
+    /// The garbler's own input labels for concrete bits.
+    pub fn garbler_labels(&self, circ: &Circuit, bits: &[bool]) -> Vec<u128> {
+        assert_eq!(bits.len(), circ.n_garbler);
+        let mut out = Vec::with_capacity(bits.len() + 1);
+        // Constant-1 wire label (always the one-label).
+        let (w0, w1) = self.labels(Circuit::ONE);
+        let _ = w0;
+        out.push(w1);
+        for (i, &b) in bits.iter().enumerate() {
+            let (l0, l1) = self.labels(circ.garbler_input(i));
+            out.push(if b { l1 } else { l0 });
+        }
+        out
+    }
+}
+
+/// Garble a circuit.
+pub fn garble(circ: &Circuit, prg: &mut Prg) -> Garbling {
+    let mut r = prg.next_u128();
+    r |= 1; // permute bit of the offset
+    let mut wire0 = vec![0u128; circ.n_wires];
+    // Inputs (and const-1) get fresh zero-labels.
+    let n_in = 1 + circ.n_garbler + circ.n_eval;
+    for w in wire0.iter_mut().take(n_in) {
+        *w = prg.next_u128();
+    }
+    let mut tables = Vec::with_capacity(circ.and_count());
+    let mut gate_index = 0u64;
+    for g in &circ.gates {
+        match *g {
+            Gate::Xor { a, b, out } => {
+                wire0[out as usize] = wire0[a as usize] ^ wire0[b as usize];
+            }
+            Gate::And { a, b, out } => {
+                let a0 = wire0[a as usize];
+                let b0 = wire0[b as usize];
+                let (j0, j1) = (gate_index * 2, gate_index * 2 + 1);
+                let pa = lsb(a0);
+                let pb = lsb(b0);
+                // Garbler half gate.
+                let tg = h(a0, j0) ^ h(a0 ^ r, j0) ^ if pb { r } else { 0 };
+                let wg = h(a0, j0) ^ if pa { tg } else { 0 };
+                // Evaluator half gate.
+                let te = h(b0, j1) ^ h(b0 ^ r, j1) ^ a0;
+                let we = h(b0, j1) ^ if pb { te ^ a0 } else { 0 };
+                wire0[out as usize] = wg ^ we;
+                tables.push((tg, te));
+                gate_index += 1;
+            }
+        }
+    }
+    let decode = circ.outputs.iter().map(|&o| lsb(wire0[o as usize])).collect();
+    Garbling { tables, wire0, r, decode }
+}
+
+/// Evaluate with one label per input wire (const-1 first, then garbler
+/// inputs, then evaluator inputs). Returns the output labels.
+pub fn evaluate(circ: &Circuit, tables: &[(u128, u128)], input_labels: &[u128]) -> Vec<u128> {
+    let n_in = 1 + circ.n_garbler + circ.n_eval;
+    assert_eq!(input_labels.len(), n_in);
+    let mut wires = vec![0u128; circ.n_wires];
+    wires[..n_in].copy_from_slice(input_labels);
+    let mut gate_index = 0u64;
+    let mut t = 0usize;
+    for g in &circ.gates {
+        match *g {
+            Gate::Xor { a, b, out } => {
+                wires[out as usize] = wires[a as usize] ^ wires[b as usize];
+            }
+            Gate::And { a, b, out } => {
+                let la = wires[a as usize];
+                let lb = wires[b as usize];
+                let (tg, te) = tables[t];
+                let (j0, j1) = (gate_index * 2, gate_index * 2 + 1);
+                let wg = h(la, j0) ^ if lsb(la) { tg } else { 0 };
+                let we = h(lb, j1) ^ if lsb(lb) { te ^ la } else { 0 };
+                wires[out as usize] = wg ^ we;
+                gate_index += 1;
+                t += 1;
+            }
+        }
+    }
+    circ.outputs.iter().map(|&o| wires[o as usize]).collect()
+}
+
+/// Decode output labels with the garbler's decode bits.
+pub fn decode(labels: &[u128], decode_bits: &[bool]) -> Vec<bool> {
+    labels.iter().zip(decode_bits).map(|(l, &d)| lsb(*l) ^ d).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::builder::{assign_circuit, Builder};
+
+    fn bits(x: u64, w: usize) -> Vec<bool> {
+        (0..w).map(|i| (x >> i) & 1 == 1).collect()
+    }
+
+    /// Garble + evaluate with known inputs; compare against eval_plain.
+    fn run_gc(circ: &Circuit, g_bits: &[bool], e_bits: &[bool], seed: u128) -> Vec<bool> {
+        let mut prg = Prg::new(seed);
+        let gb = garble(circ, &mut prg);
+        let mut labels = gb.garbler_labels(circ, g_bits);
+        for (i, &b) in e_bits.iter().enumerate() {
+            let (l0, l1) = gb.labels(circ.eval_input(i));
+            labels.push(if b { l1 } else { l0 });
+        }
+        let out = evaluate(circ, &gb.tables, &labels);
+        decode(&out, &gb.decode)
+    }
+
+    #[test]
+    fn and_xor_gate_truth_tables() {
+        let mut b = Builder::new(1, 1);
+        let x = b.garbler_input(0);
+        let y = b.eval_input(0);
+        let a = b.and(x, y);
+        let o = b.xor(a, x);
+        let circ = b.build(vec![a, o]);
+        for gx in [false, true] {
+            for ey in [false, true] {
+                let got = run_gc(&circ, &[gx], &[ey], 7);
+                assert_eq!(got, circ.eval_plain(&[gx], &[ey]), "g={gx} e={ey}");
+            }
+        }
+    }
+
+    #[test]
+    fn garbled_adder_matches_plain() {
+        let w = 16;
+        let mut b = Builder::new(w, w);
+        let x = b.garbler_word(0, w);
+        let y = b.eval_word(0, w);
+        let s = b.add(&x, &y);
+        let circ = b.build(s);
+        for (seed, (a, bb)) in [(1u128, (12345u64, 54321u64)), (2, (65535, 2)), (3, (0, 0))]
+        {
+            let got = run_gc(&circ, &bits(a, w), &bits(bb, w), seed);
+            let got_val: u64 = got.iter().enumerate().map(|(i, &v)| (v as u64) << i).sum();
+            assert_eq!(got_val, (a + bb) & 0xFFFF);
+        }
+    }
+
+    #[test]
+    fn garbled_assign_circuit_matches_plain() {
+        let (k, w) = (5, 24);
+        let circ = assign_circuit(k, w);
+        let dvals: [i64; 5] = [100, 3, -44, 9, -43];
+        let shares0: [u64; 5] = [7, 1 << 20, 999, 123456, 42];
+        let g: Vec<bool> = (0..k).flat_map(|j| bits(shares0[j], w)).collect();
+        let e: Vec<bool> = (0..k)
+            .flat_map(|j| bits((dvals[j] as u64).wrapping_sub(shares0[j]), w))
+            .collect();
+        let got = run_gc(&circ, &g, &e, 11);
+        assert_eq!(got, circ.eval_plain(&g, &e));
+        assert_eq!(got, vec![false, false, true, false, false]); // -44 wins
+    }
+
+    #[test]
+    fn wrong_label_does_not_decode_to_valid_row() {
+        // Flipping one input label must corrupt the output (no partial
+        // information — sanity, not a security proof).
+        let mut b = Builder::new(1, 1);
+        let x = b.garbler_input(0);
+        let y = b.eval_input(0);
+        let a = b.and(x, y);
+        let circ = b.build(vec![a]);
+        let mut prg = Prg::new(5);
+        let gb = garble(&circ, &mut prg);
+        let mut labels = gb.garbler_labels(&circ, &[true]);
+        let (l0, _l1) = gb.labels(circ.eval_input(0));
+        labels.push(l0 ^ 0xDEADBEEF); // corrupted label
+        let out = evaluate(&circ, &gb.tables, &labels);
+        let (o0, o1) = gb.labels(circ.outputs[0]);
+        assert!(out[0] != o0 && out[0] != o1, "corrupt label must not map to a valid output");
+    }
+}

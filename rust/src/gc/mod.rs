@@ -1,0 +1,16 @@
+//! Garbled circuits: free-XOR + half-gates (Zahur-Rosulek-Evans 2015).
+//!
+//! The substrate for the M-Kmeans baseline (Mohassel-Rosulek-Trieu
+//! 2020), whose cluster-assignment step is a customized garbled circuit
+//! computing the argmin of k distances and outputting a *boolean-shared*
+//! one-hot vector. XOR gates are free; each AND gate costs two 128-bit
+//! ciphertexts of transmission and one fixed-key-AES hash per evaluation
+//! wire.
+
+pub mod builder;
+pub mod circuit;
+pub mod garble;
+
+pub use builder::Builder;
+pub use circuit::{Circuit, Gate};
+pub use garble::{evaluate, garble, Garbling};

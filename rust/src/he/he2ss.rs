@@ -1,0 +1,113 @@
+//! HE2SS: convert homomorphic ciphertexts into additive secret shares
+//! (paper §3.3).
+//!
+//! Party A holds `[[X]]_B` (under B's key) where the underlying integer
+//! is bounded by `2^value_bits`. A adds a fresh encryption of a
+//! statistical mask `r` (`value_bits + κ` bits, κ = 40) — which also
+//! rerandomizes the ciphertext — and sends `[[X + r]]` to B. B decrypts
+//! and reduces mod 2^64; A keeps `−r mod 2^64`. Shares then satisfy
+//! `⟨X⟩_A + ⟨X⟩_B = X mod 2^64` because `X + r` never wraps the
+//! plaintext space.
+
+use super::{ct_from_bytes, ct_to_bytes, HeScheme};
+use crate::bigint::BigUint;
+use crate::net::Chan;
+use crate::util::prng::Prg;
+
+/// Statistical security parameter for masking.
+pub const KAPPA: usize = 40;
+
+/// Draw a uniform mask of `bits` bits.
+pub fn random_mask(bits: usize, prg: &mut Prg) -> BigUint {
+    let limbs = (bits + 63) / 64;
+    BigUint::from_limbs((0..limbs).map(|_| prg.next_u64()).collect()).mod_pow2(bits)
+}
+
+/// A-side: mask ciphertexts and send; returns A's ring shares (−r).
+///
+/// `cts[i]` encrypts an integer < 2^value_bits under B's key.
+pub fn he2ss_sender<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    cts: &[BigUint],
+    value_bits: usize,
+    prg: &mut Prg,
+) -> Vec<u64> {
+    let mask_bits = value_bits + KAPPA;
+    assert!(
+        BigUint::one().shl(mask_bits + 1).lt(&S::plaintext_space(pk)),
+        "mask would overflow plaintext space ({} + {} bits)",
+        value_bits,
+        KAPPA
+    );
+    let mut shares = Vec::with_capacity(cts.len());
+    let mut payload = Vec::new();
+    for ct in cts {
+        let r = random_mask(mask_bits, prg);
+        let cr = S::encrypt(pk, &r, prg);
+        let masked = S::add(pk, ct, &cr);
+        payload.extend_from_slice(&ct_to_bytes::<S>(pk, &masked));
+        // A's share: −r mod 2^64.
+        let r64 = r.mod_pow2(64).to_u64().unwrap_or(0);
+        shares.push(r64.wrapping_neg());
+    }
+    chan.send_bytes(&payload);
+    shares
+}
+
+/// B-side: receive masked ciphertexts, decrypt, reduce mod 2^64.
+pub fn he2ss_receiver<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    sk: &S::Sk,
+    count: usize,
+) -> Vec<u64> {
+    let w = S::ct_bytes(pk);
+    let payload = chan.recv_bytes();
+    assert_eq!(payload.len(), count * w, "he2ss frame size");
+    payload
+        .chunks_exact(w)
+        .map(|chunk| {
+            let m = S::decrypt(pk, sk, &ct_from_bytes(chunk));
+            m.mod_pow2(64).to_u64().unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::ou::Ou;
+    use crate::net::run_two_party;
+
+    #[test]
+    fn he2ss_shares_reconstruct_mod_2_64() {
+        // B owns the key; A holds encryptions of known values.
+        let mut kprg = Prg::new(11);
+        let (pk, sk) = Ou::keygen(512, &mut kprg);
+        let pk_a = pk.clone();
+        let values = vec![0u64, 1, u64::MAX, 0xDEAD_BEEF, 1 << 50];
+        let vals_c = values.clone();
+        let ((sa, _), (sb, _)) = run_two_party(
+            move |c| {
+                let mut prg = Prg::new(21);
+                let cts: Vec<BigUint> = vals_c
+                    .iter()
+                    .map(|&v| Ou::encrypt(&pk_a, &BigUint::from_u64(v), &mut prg))
+                    .collect();
+                he2ss_sender::<Ou>(c, &pk_a, &cts, 64, &mut prg)
+            },
+            move |c| he2ss_receiver::<Ou>(c, &pk, &sk, 5),
+        );
+        for i in 0..values.len() {
+            assert_eq!(sa[i].wrapping_add(sb[i]), values[i], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn mask_widths() {
+        let mut prg = Prg::new(3);
+        let m = random_mask(70, &mut prg);
+        assert!(m.bits() <= 70);
+    }
+}

@@ -1,0 +1,84 @@
+//! Additively homomorphic encryption (paper §3.2).
+//!
+//! Two schemes behind one trait: [`paillier`] and [`ou`]
+//! (Okamoto-Uchiyama — the paper's choice, §5.1, since OU outperforms
+//! Paillier on all operations; our `ablations` bench reproduces that
+//! claim). Ring elements are embedded as non-negative integers; sums of
+//! ≤ 2^14 products of two 64-bit values stay below 2^142, far inside the
+//! ≥ 600-bit plaintext spaces, so homomorphic sums never wrap before the
+//! final reduction mod 2^64 (see [`he2ss`]).
+
+pub mod he2ss;
+pub mod ou;
+pub mod paillier;
+
+use crate::bigint::BigUint;
+use crate::util::prng::Prg;
+
+/// An additively homomorphic public-key scheme.
+///
+/// Required homomorphisms (paper §3.2): `add(E(u), E(v)) = E(u+v)` and
+/// `smul(E(u), x) = E(x·u)` over the scheme's plaintext space.
+pub trait HeScheme {
+    /// Public key.
+    type Pk: Clone + Send + Sync;
+    /// Secret key.
+    type Sk: Send;
+
+    /// Generate a key pair with modulus of `bits` bits.
+    fn keygen(bits: usize, prg: &mut Prg) -> (Self::Pk, Self::Sk);
+
+    /// Encrypt a plaintext (must be < plaintext space).
+    fn encrypt(pk: &Self::Pk, m: &BigUint, prg: &mut Prg) -> BigUint;
+
+    /// Decrypt a ciphertext.
+    fn decrypt(pk: &Self::Pk, sk: &Self::Sk, c: &BigUint) -> BigUint;
+
+    /// Homomorphic addition of ciphertexts.
+    fn add(pk: &Self::Pk, c1: &BigUint, c2: &BigUint) -> BigUint;
+
+    /// Homomorphic scalar multiplication by a plaintext scalar.
+    fn smul(pk: &Self::Pk, c: &BigUint, x: &BigUint) -> BigUint;
+
+    /// Size of the plaintext space (messages must be smaller).
+    fn plaintext_space(pk: &Self::Pk) -> BigUint;
+
+    /// Serialized ciphertext width in bytes (fixed per key).
+    fn ct_bytes(pk: &Self::Pk) -> usize;
+}
+
+/// Serialize a ciphertext to the fixed width for `pk`.
+pub fn ct_to_bytes<S: HeScheme>(pk: &S::Pk, c: &BigUint) -> Vec<u8> {
+    let w = S::ct_bytes(pk);
+    let raw = c.to_bytes_be();
+    assert!(raw.len() <= w, "ciphertext wider than modulus");
+    let mut out = vec![0u8; w - raw.len()];
+    out.extend_from_slice(&raw);
+    out
+}
+
+/// Deserialize a fixed-width ciphertext.
+pub fn ct_from_bytes(bytes: &[u8]) -> BigUint {
+    BigUint::from_bytes_be(bytes)
+}
+
+/// Encrypt a u64 ring element (as a non-negative integer).
+pub fn encrypt_u64<S: HeScheme>(pk: &S::Pk, x: u64, prg: &mut Prg) -> BigUint {
+    S::encrypt(pk, &BigUint::from_u64(x), prg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::ou::Ou;
+
+    #[test]
+    fn ct_serialization_roundtrip() {
+        let mut prg = Prg::new(1);
+        let (pk, _sk) = Ou::keygen(384, &mut prg);
+        let c = Ou::encrypt(&pk, &BigUint::from_u64(12345), &mut prg);
+        let bytes = ct_to_bytes::<Ou>(&pk, &c);
+        assert_eq!(bytes.len(), Ou::ct_bytes(&pk));
+        assert_eq!(ct_from_bytes(&bytes), c);
+    }
+}

@@ -1,0 +1,197 @@
+//! Okamoto-Uchiyama (1998) additively homomorphic encryption.
+//!
+//! Modulus `n = p²·q`; plaintext space Z_p; `Enc(m; r) = g^m · h^r mod n`
+//! with `h = g^n mod n`. Decryption uses the logarithm
+//! `L(x) = (x−1)/p` on the subgroup of order p in Z*_{p²}:
+//! `m = L(c^{p−1} mod p²) · L(g^{p−1} mod p²)^{−1} mod p`.
+//!
+//! The paper picks OU over Paillier because every operation is cheaper:
+//! exponents in encryption are short (|m| + |r|), and decryption is one
+//! (p−1)-exponentiation mod p² instead of a λ-exponentiation mod n².
+
+use super::HeScheme;
+use crate::bigint::modular::{mod_inv, Montgomery};
+use crate::bigint::prime::gen_prime;
+use crate::bigint::BigUint;
+use crate::util::prng::Prg;
+
+/// Bits of randomness in `h^r` (statistical hiding of the message in the
+/// order-q^... subgroup; 2κ with κ=128, as in production deployments).
+const RAND_BITS: usize = 256;
+
+/// Public key: (n, g, h) with Montgomery context for n.
+#[derive(Clone)]
+pub struct OuPk {
+    pub n: BigUint,
+    pub g: BigUint,
+    pub h: BigUint,
+    pub n_bits: usize,
+}
+
+/// Secret key: (p, q) with cached decryption constants.
+pub struct OuSk {
+    pub p: BigUint,
+    /// p² (decryption modulus).
+    pub p2: BigUint,
+    /// L(g^{p−1} mod p²)^{−1} mod p.
+    pub gp_inv: BigUint,
+}
+
+/// The Okamoto-Uchiyama scheme.
+pub struct Ou;
+
+fn l_func(x: &BigUint, p: &BigUint) -> BigUint {
+    // L(x) = (x − 1) / p  (exact division on the order-p subgroup)
+    x.sub(&BigUint::one()).div(p)
+}
+
+impl HeScheme for Ou {
+    type Pk = OuPk;
+    type Sk = OuSk;
+
+    fn keygen(bits: usize, prg: &mut Prg) -> (OuPk, OuSk) {
+        assert!(bits >= 192, "OU modulus must be at least 192 bits (3 primes)");
+        let pb = bits / 3;
+        loop {
+            let p = gen_prime(pb, prg);
+            let q = gen_prime(bits - 2 * pb, prg);
+            if p == q {
+                continue;
+            }
+            let p2 = p.mul(&p);
+            let n = p2.mul(&q);
+            let mont_n = Montgomery::new(&n);
+            let mont_p2 = Montgomery::new(&p2);
+            let pm1 = p.sub(&BigUint::one());
+            // Find g with g^{p−1} mod p² of order p (L(·) invertible mod p).
+            let mut tries = 0;
+            let g = loop {
+                tries += 1;
+                if tries > 64 {
+                    break None; // re-draw primes (astronomically unlikely)
+                }
+                let cand = BigUint::from_limbs(
+                    (0..n.limbs.len()).map(|_| prg.next_u64()).collect(),
+                )
+                .rem(&n);
+                if cand.is_zero() || cand.is_one() {
+                    continue;
+                }
+                let gp = mont_p2.pow(&cand, &pm1);
+                if gp.is_one() {
+                    continue;
+                }
+                let l = l_func(&gp, &p);
+                if mod_inv(&l, &p).is_some() {
+                    break Some((cand, l));
+                }
+            };
+            let Some((g, gl)) = g else { continue };
+            let h = mont_n.pow(&g, &n);
+            let gp_inv = mod_inv(&gl, &p).unwrap();
+            return (
+                OuPk { n_bits: n.bits(), n, g, h },
+                OuSk { p, p2, gp_inv },
+            );
+        }
+    }
+
+    fn encrypt(pk: &OuPk, m: &BigUint, prg: &mut Prg) -> BigUint {
+        let mont = Montgomery::new(&pk.n);
+        let r = BigUint::from_limbs((0..RAND_BITS / 64).map(|_| prg.next_u64()).collect());
+        let gm = mont.pow(&pk.g, m);
+        let hr = mont.pow(&pk.h, &r);
+        mont.mul(&gm, &hr)
+    }
+
+    fn decrypt(_pk: &OuPk, sk: &OuSk, c: &BigUint) -> BigUint {
+        let mont = Montgomery::new(&sk.p2);
+        let pm1 = sk.p.sub(&BigUint::one());
+        let cp = mont.pow(&c.rem(&sk.p2), &pm1);
+        let l = l_func(&cp, &sk.p);
+        l.mul(&sk.gp_inv).rem(&sk.p)
+    }
+
+    fn add(pk: &OuPk, c1: &BigUint, c2: &BigUint) -> BigUint {
+        c1.mul(c2).rem(&pk.n)
+    }
+
+    fn smul(pk: &OuPk, c: &BigUint, x: &BigUint) -> BigUint {
+        if x.is_zero() {
+            // E(0·u) needs a valid encryption of zero: c^0 = 1 is a
+            // trivial (but valid) ciphertext.
+            return BigUint::one();
+        }
+        Montgomery::new(&pk.n).pow(c, x)
+    }
+
+    fn plaintext_space(pk: &OuPk) -> BigUint {
+        // p is secret; expose a safe public lower bound: 2^(n_bits/3 − 1).
+        BigUint::one().shl(pk.n_bits / 3 - 1)
+    }
+
+    fn ct_bytes(pk: &OuPk) -> usize {
+        (pk.n_bits + 7) / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keypair() -> (OuPk, OuSk, Prg) {
+        let mut prg = Prg::new(42);
+        let (pk, sk) = Ou::keygen(384, &mut prg);
+        (pk, sk, prg)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (pk, sk, mut prg) = keypair();
+        for m in [0u64, 1, 42, u64::MAX, 1 << 63] {
+            let c = Ou::encrypt(&pk, &BigUint::from_u64(m), &mut prg);
+            assert_eq!(Ou::decrypt(&pk, &sk, &c), BigUint::from_u64(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn ciphertexts_are_randomized() {
+        let (pk, _sk, mut prg) = keypair();
+        let c1 = Ou::encrypt(&pk, &BigUint::from_u64(5), &mut prg);
+        let c2 = Ou::encrypt(&pk, &BigUint::from_u64(5), &mut prg);
+        assert_ne!(c1, c2);
+    }
+
+    #[test]
+    fn additive_homomorphism() {
+        let (pk, sk, mut prg) = keypair();
+        let c1 = Ou::encrypt(&pk, &BigUint::from_u64(100), &mut prg);
+        let c2 = Ou::encrypt(&pk, &BigUint::from_u64(23), &mut prg);
+        let sum = Ou::add(&pk, &c1, &c2);
+        assert_eq!(Ou::decrypt(&pk, &sk, &sum), BigUint::from_u64(123));
+    }
+
+    #[test]
+    fn scalar_homomorphism() {
+        let (pk, sk, mut prg) = keypair();
+        let c = Ou::encrypt(&pk, &BigUint::from_u64(7), &mut prg);
+        let c3 = Ou::smul(&pk, &c, &BigUint::from_u64(13));
+        assert_eq!(Ou::decrypt(&pk, &sk, &c3), BigUint::from_u64(91));
+    }
+
+    #[test]
+    fn big_accumulation_stays_exact() {
+        // Σ x_i·y_i with 64-bit values: the use pattern of Protocol 2.
+        let (pk, sk, mut prg) = keypair();
+        let ys = [u64::MAX, 12345, 1 << 40];
+        let xs = [3u64, u64::MAX, 7];
+        let mut acc = Ou::encrypt(&pk, &BigUint::zero(), &mut prg);
+        let mut want = BigUint::zero();
+        for (x, y) in xs.iter().zip(&ys) {
+            let cy = Ou::encrypt(&pk, &BigUint::from_u64(*y), &mut prg);
+            acc = Ou::add(&pk, &acc, &Ou::smul(&pk, &cy, &BigUint::from_u64(*x)));
+            want = want.add(&BigUint::from_u64(*x).mul(&BigUint::from_u64(*y)));
+        }
+        assert_eq!(Ou::decrypt(&pk, &sk, &acc), want);
+    }
+}

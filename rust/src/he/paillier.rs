@@ -1,0 +1,133 @@
+//! Paillier (1999) additively homomorphic encryption.
+//!
+//! `n = p·q`, ciphertexts mod n²; `Enc(m; r) = (1+n)^m · r^n mod n² =
+//! (1 + m·n) · r^n mod n²`. Decryption with λ = lcm(p−1, q−1):
+//! `m = L(c^λ mod n²) · μ mod n`, `μ = L((1+n)^λ mod n²)^{−1} mod n`.
+//!
+//! Kept alongside OU for the paper's "OU outperforms Paillier over all
+//! operations" claim (reproduced in the `ablations` bench).
+
+use super::HeScheme;
+use crate::bigint::modular::{lcm, mod_inv, Montgomery};
+use crate::bigint::prime::gen_distinct_primes;
+use crate::bigint::BigUint;
+use crate::util::prng::Prg;
+
+/// Public key (n, n²).
+#[derive(Clone)]
+pub struct PaillierPk {
+    pub n: BigUint,
+    pub n2: BigUint,
+    pub n_bits: usize,
+}
+
+/// Secret key (λ, μ).
+pub struct PaillierSk {
+    pub lambda: BigUint,
+    pub mu: BigUint,
+}
+
+/// The Paillier scheme.
+pub struct Paillier;
+
+fn l_func(x: &BigUint, n: &BigUint) -> BigUint {
+    x.sub(&BigUint::one()).div(n)
+}
+
+impl HeScheme for Paillier {
+    type Pk = PaillierPk;
+    type Sk = PaillierSk;
+
+    fn keygen(bits: usize, prg: &mut Prg) -> (PaillierPk, PaillierSk) {
+        assert!(bits >= 128, "Paillier modulus at least 128 bits");
+        let (p, q) = gen_distinct_primes(bits / 2, prg);
+        let n = p.mul(&q);
+        let n2 = n.mul(&n);
+        let lambda = lcm(&p.sub(&BigUint::one()), &q.sub(&BigUint::one()));
+        // μ = L((1+n)^λ mod n²)^{-1} mod n ; (1+n)^λ mod n² = 1 + λn.
+        let gl = BigUint::one().add(&lambda.mul(&n)).rem(&n2);
+        let mu = mod_inv(&l_func(&gl, &n), &n).expect("gcd(λn?, n)=1 by construction");
+        (PaillierPk { n_bits: n.bits(), n, n2 }, PaillierSk { lambda, mu })
+    }
+
+    fn encrypt(pk: &PaillierPk, m: &BigUint, prg: &mut Prg) -> BigUint {
+        assert!(m.lt(&pk.n), "plaintext must be < n");
+        let mont = Montgomery::new(&pk.n2);
+        // r coprime to n (overwhelmingly true for random r < n).
+        let r = BigUint::from_limbs((0..pk.n.limbs.len()).map(|_| prg.next_u64()).collect())
+            .rem(&pk.n);
+        let r = if r.is_zero() { BigUint::one() } else { r };
+        // (1+n)^m = 1 + m·n (mod n²)
+        let gm = BigUint::one().add(&m.mul(&pk.n)).rem(&pk.n2);
+        let rn = mont.pow(&r, &pk.n);
+        gm.mul(&rn).rem(&pk.n2)
+    }
+
+    fn decrypt(pk: &PaillierPk, sk: &PaillierSk, c: &BigUint) -> BigUint {
+        let mont = Montgomery::new(&pk.n2);
+        let cl = mont.pow(c, &sk.lambda);
+        l_func(&cl, &pk.n).mul(&sk.mu).rem(&pk.n)
+    }
+
+    fn add(pk: &PaillierPk, c1: &BigUint, c2: &BigUint) -> BigUint {
+        c1.mul(c2).rem(&pk.n2)
+    }
+
+    fn smul(pk: &PaillierPk, c: &BigUint, x: &BigUint) -> BigUint {
+        if x.is_zero() {
+            return BigUint::one();
+        }
+        Montgomery::new(&pk.n2).pow(c, x)
+    }
+
+    fn plaintext_space(pk: &PaillierPk) -> BigUint {
+        pk.n.clone()
+    }
+
+    fn ct_bytes(pk: &PaillierPk) -> usize {
+        (pk.n2.bits() + 7) / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keypair() -> (PaillierPk, PaillierSk, Prg) {
+        let mut prg = Prg::new(7);
+        let (pk, sk) = Paillier::keygen(256, &mut prg);
+        (pk, sk, prg)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (pk, sk, mut prg) = keypair();
+        for m in [0u64, 1, 255, u64::MAX] {
+            let c = Paillier::encrypt(&pk, &BigUint::from_u64(m), &mut prg);
+            assert_eq!(Paillier::decrypt(&pk, &sk, &c), BigUint::from_u64(m));
+        }
+    }
+
+    #[test]
+    fn homomorphisms() {
+        let (pk, sk, mut prg) = keypair();
+        let c1 = Paillier::encrypt(&pk, &BigUint::from_u64(11), &mut prg);
+        let c2 = Paillier::encrypt(&pk, &BigUint::from_u64(31), &mut prg);
+        assert_eq!(
+            Paillier::decrypt(&pk, &sk, &Paillier::add(&pk, &c1, &c2)),
+            BigUint::from_u64(42)
+        );
+        assert_eq!(
+            Paillier::decrypt(&pk, &sk, &Paillier::smul(&pk, &c1, &BigUint::from_u64(5))),
+            BigUint::from_u64(55)
+        );
+    }
+
+    #[test]
+    fn randomized_ciphertexts() {
+        let (pk, _sk, mut prg) = keypair();
+        let a = Paillier::encrypt(&pk, &BigUint::from_u64(9), &mut prg);
+        let b = Paillier::encrypt(&pk, &BigUint::from_u64(9), &mut prg);
+        assert_ne!(a, b);
+    }
+}

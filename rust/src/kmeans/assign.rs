@@ -1,0 +1,208 @@
+//! S2 — Secure cluster assignment `F_min^k` (paper Fig. 1).
+//!
+//! Binary-tree reduction over the k distance columns: each level runs a
+//! batch of CMPM comparison modules — one vectorized CMP (Kogge-Stone
+//! MSB of the difference) plus one vectorized MUX that simultaneously
+//! propagates the smaller distance *and* its one-hot index row. All n
+//! samples and all pairs at a level share a single protocol round per
+//! gate, so the whole assignment costs `⌈log₂ k⌉ · O(1)` rounds.
+
+use crate::ring::matrix::Mat;
+use crate::ss::arith::smul_elem;
+use crate::ss::boolean::{b2a, msb};
+use crate::ss::Ctx;
+
+/// One tree node: shared min-distance lanes (n) and shared one-hot index
+/// rows (n×k).
+struct Node {
+    val: Vec<u64>,
+    idx: Mat,
+}
+
+/// `⟨C⟩ ← F_min^k(⟨D⟩)`: returns the shared one-hot assignment matrix
+/// `C (n×k)` and the shared minimum distances (n×1).
+pub fn min_k(ctx: &mut Ctx, d: &Mat) -> (Mat, Mat) {
+    let n = d.rows;
+    let k = d.cols;
+    assert!(k >= 1);
+    let party = ctx.party();
+
+    // Leaves: value = column j; index = public one-hot e_j (party 0 holds).
+    let mut nodes: Vec<Node> = (0..k)
+        .map(|j| {
+            let val: Vec<u64> = (0..n).map(|i| d.at(i, j)).collect();
+            let mut idx = Mat::zeros(n, k);
+            if party == 0 {
+                for i in 0..n {
+                    idx.set(i, j, 1);
+                }
+            }
+            Node { val, idx }
+        })
+        .collect();
+
+    while nodes.len() > 1 {
+        let pairs = nodes.len() / 2;
+        let carry = nodes.len() % 2 == 1;
+
+        // Batch CMP over all pairs: diff lanes = left − right.
+        let mut diff = Mat::zeros(1, pairs * n);
+        for p in 0..pairs {
+            let (a, b) = (&nodes[2 * p], &nodes[2 * p + 1]);
+            for i in 0..n {
+                diff.data[p * n + i] = a.val[i].wrapping_sub(b.val[i]);
+            }
+        }
+        // z = [left < right] per lane (MSB of the difference).
+        let z_bits = msb(ctx, &diff);
+        let z = b2a(ctx, &z_bits); // 1×(pairs·n)
+
+        // One fused MUX for values and index rows:
+        // out = right + z·(left − right), lanes = pairs·n·(1+k).
+        let lanes = pairs * n * (1 + k);
+        let mut sel = Mat::zeros(1, lanes);
+        let mut delta = Mat::zeros(1, lanes);
+        let mut right_flat = vec![0u64; lanes];
+        for p in 0..pairs {
+            let (a, b) = (&nodes[2 * p], &nodes[2 * p + 1]);
+            for i in 0..n {
+                let base = (p * n + i) * (1 + k);
+                let zi = z.data[p * n + i];
+                sel.data[base] = zi;
+                delta.data[base] = a.val[i].wrapping_sub(b.val[i]);
+                right_flat[base] = b.val[i];
+                for c in 0..k {
+                    sel.data[base + 1 + c] = zi;
+                    delta.data[base + 1 + c] = a.idx.at(i, c).wrapping_sub(b.idx.at(i, c));
+                    right_flat[base + 1 + c] = b.idx.at(i, c);
+                }
+            }
+        }
+        let picked = smul_elem(ctx, &sel, &delta);
+
+        let mut next: Vec<Node> = Vec::with_capacity(pairs + carry as usize);
+        for p in 0..pairs {
+            let mut val = vec![0u64; n];
+            let mut idx = Mat::zeros(n, k);
+            for i in 0..n {
+                let base = (p * n + i) * (1 + k);
+                val[i] = right_flat[base].wrapping_add(picked.data[base]);
+                for c in 0..k {
+                    idx.set(
+                        i,
+                        c,
+                        right_flat[base + 1 + c].wrapping_add(picked.data[base + 1 + c]),
+                    );
+                }
+            }
+            next.push(Node { val, idx });
+        }
+        if carry {
+            next.push(nodes.pop().unwrap());
+        }
+        nodes = next;
+    }
+
+    let root = nodes.pop().unwrap();
+    (root.idx, Mat::from_vec(n, 1, root.val))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ring::fixed::encode_f64;
+    use crate::ss::share::{reconstruct, split};
+    use crate::util::prng::Prg;
+
+    fn run_min_k(dvals: Vec<f64>, n: usize, k: usize) -> (Vec<u64>, Vec<f64>) {
+        let enc: Vec<u64> = dvals.iter().map(|&v| encode_f64(v)).collect();
+        let d = Mat::from_vec(n, k, enc);
+        let mut prg = Prg::new(101);
+        let (d0, d1) = split(&d, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(102, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let (cm, mv) = min_k(&mut ctx, &d0);
+                (reconstruct(c, &cm), reconstruct(c, &mv))
+            },
+            move |c| {
+                let mut ts = Dealer::new(102, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let (cm, mv) = min_k(&mut ctx, &d1);
+                (reconstruct(c, &cm), reconstruct(c, &mv))
+            },
+        );
+        let (cmat, minv) = r;
+        (cmat.data, minv.decode())
+    }
+
+    #[test]
+    fn paper_figure1_example() {
+        // k = 6 distances per the paper's Fig. 1: ⟨7 2 1 3 6 5⟩ → index 2.
+        let d = vec![7.0, 2.0, 1.0, 3.0, 6.0, 5.0];
+        let (c, mv) = run_min_k(d, 1, 6);
+        assert_eq!(c, vec![0, 0, 1, 0, 0, 0]);
+        assert!((mv[0] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn many_rows_various_k() {
+        for k in [2usize, 3, 4, 5, 7, 8] {
+            let n = 9;
+            let mut prg = Prg::new(200 + k as u128);
+            let dvals: Vec<f64> = (0..n * k).map(|_| prg.next_f64() * 10.0).collect();
+            let (c, mv) = run_min_k(dvals.clone(), n, k);
+            for i in 0..n {
+                let row = &dvals[i * k..(i + 1) * k];
+                let want = row
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                for j in 0..k {
+                    let expect = if j == want.0 { 1 } else { 0 };
+                    assert_eq!(c[i * k + j], expect, "n={i} k={k} col={j}");
+                }
+                assert!((mv[i] - want.1).abs() < 1e-3, "min row {i} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn negative_distances_supported() {
+        // D' can be negative (norm term minus 2·dot) — must still argmin.
+        let d = vec![-3.0, -7.5, 2.0, -7.4];
+        let (c, _) = run_min_k(d, 1, 4);
+        assert_eq!(c, vec![0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn rounds_scale_with_log_k_not_n() {
+        let run = |n: usize, k: usize| -> u64 {
+            let mut prg = Prg::new(7);
+            let d = Mat::random(n, k, &mut prg).map(|v| v >> 40); // small values
+            let (d0, d1) = split(&d, &mut prg);
+            let ((_, m), _) = run_two_party(
+                move |c| {
+                    let mut ts = Dealer::new(103, 0);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    min_k(&mut ctx, &d0);
+                },
+                move |c| {
+                    let mut ts = Dealer::new(103, 1);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    min_k(&mut ctx, &d1);
+                },
+            );
+            m.total().rounds
+        };
+        let r_small = run(4, 4);
+        let r_big_n = run(64, 4);
+        assert_eq!(r_small, r_big_n, "rounds must not depend on n");
+        let r_big_k = run(4, 8);
+        assert!(r_big_k > r_small, "more levels for larger k");
+    }
+}

@@ -1,0 +1,71 @@
+//! Configuration for secure K-means runs.
+
+/// How the joint data is split between the two parties (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Feature split: A holds the first `d_a` columns, B the rest.
+    Vertical { d_a: usize },
+    /// Sample split: A holds the first `n_a` rows, B the rest.
+    Horizontal { n_a: usize },
+}
+
+/// Distance-step implementation, for the Q3 vectorization ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EsdMode {
+    /// Matrix-form Eq. (3): one Beaver round per cross product.
+    #[default]
+    Vectorized,
+    /// Pre-vectorization baseline: one scalar protocol per (sample,
+    /// centroid) pair — the n·k-interaction cost the paper eliminates.
+    Naive,
+}
+
+/// Parameters of a secure K-means run.
+#[derive(Debug, Clone)]
+pub struct SecureKmeansConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Fixed number of Lloyd iterations.
+    pub iters: usize,
+    /// Dealer / offline seed shared by both parties (public).
+    pub seed: u128,
+    /// Data partition between parties.
+    pub partition: Partition,
+    /// Distance-step implementation.
+    pub esd: EsdMode,
+    /// Route sparse cross products through HE Protocol 2.
+    pub sparse: bool,
+    /// HE modulus bits for the sparse path (paper: 2048).
+    pub he_bits: usize,
+    /// Optional convergence threshold ε (checked with F_CSC each
+    /// iteration when set; `None` = fixed iteration count only).
+    pub epsilon: Option<f64>,
+}
+
+impl Default for SecureKmeansConfig {
+    fn default() -> Self {
+        SecureKmeansConfig {
+            k: 2,
+            iters: 10,
+            seed: 0xBEEF,
+            partition: Partition::Vertical { d_a: 1 },
+            esd: EsdMode::Vectorized,
+            sparse: false,
+            he_bits: 768,
+            epsilon: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_dense_vectorized() {
+        let c = SecureKmeansConfig::default();
+        assert_eq!(c.esd, EsdMode::Vectorized);
+        assert!(!c.sparse);
+        assert!(c.epsilon.is_none());
+    }
+}

@@ -1,0 +1,305 @@
+//! S1 — Secure distance computation `F'_ESD` (paper Eq. 2-5).
+//!
+//! Computes shares of `D' = U − 2·X·μᵀ` where `U` broadcasts the squared
+//! centroid norms; the sample term `Σ X_i²` is constant per row and
+//! omitted (it never changes comparisons). Everything stays at scale 2f —
+//! comparisons are scale-invariant, so no truncation round is spent here.
+//!
+//! Cross products (one party's plaintext block × the other party's
+//! centroid share block) go through matrix Beaver triples (one round
+//! each); with `EsdMode::Naive` they instead run one scalar protocol per
+//! (sample, centroid) pair — the pre-vectorization baseline of Q3.
+
+use crate::ring::matrix::Mat;
+use crate::ss::arith::ssquare_elem;
+use crate::ss::matmul::private_matmul;
+use crate::ss::Ctx;
+
+/// Shares of the per-cluster squared-norm row `[|μ_1|², …, |μ_k|²]`,
+/// broadcast to n rows (scale 2f).
+pub fn centroid_norms(ctx: &mut Ctx, mu: &Mat, n: usize) -> Mat {
+    let sq = ssquare_elem(ctx, mu); // k×d, scale 2f
+    let mut u = Mat::zeros(1, mu.rows);
+    for j in 0..mu.rows {
+        let mut acc = 0u64;
+        for l in 0..mu.cols {
+            acc = acc.wrapping_add(sq.at(j, l));
+        }
+        u.data[j] = acc;
+    }
+    // Broadcast over samples (local).
+    let mut out = Mat::zeros(n, mu.rows);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&u.data);
+    }
+    out
+}
+
+/// Split a k×d centroid share into the vertical blocks
+/// (k×d_a for A's feature columns, k×d_b for B's).
+pub fn split_mu_vertical(mu: &Mat, d_a: usize) -> (Mat, Mat) {
+    (mu.cols_slice(0, d_a), mu.cols_slice(d_a, mu.cols))
+}
+
+/// Vertical F'_ESD: `x_mine` is this party's plaintext feature block
+/// (n×d_mine, fixed-point), `mu` this party's centroid share (k×d).
+/// Returns shares of `D' (n×k)` at scale 2f.
+pub fn vertical(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+    let n = x_mine.rows;
+    let k = mu.rows;
+    let d_b = mu.cols - d_a;
+    let party = ctx.party();
+    let u = centroid_norms(ctx, mu, n);
+
+    // Local term: X_mine · ⟨μ⟩_mine-block ᵀ contributes to my share.
+    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
+    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
+    let local = crate::runtime::dispatch::matmul(x_mine, &my_blk.transpose()); // n×k
+
+    // Cross 1: X_A (A plaintext) · ⟨μ⟩_B's A-block ᵀ (B share).
+    let cross1 = if party == 0 {
+        private_matmul(ctx, x_mine, (n, d_a), (d_a, k), true)
+    } else {
+        let mb = mu_a_blk.transpose(); // d_a×k
+        private_matmul(ctx, &mb, (d_a, k), (n, d_a), false)
+    };
+    // Cross 2: X_B (B plaintext) · ⟨μ⟩_A's B-block ᵀ (A share).
+    let cross2 = if party == 1 {
+        private_matmul(ctx, x_mine, (n, d_b), (d_b, k), true)
+    } else {
+        let mb = mu_b_blk.transpose(); // d_b×k
+        private_matmul(ctx, &mb, (d_b, k), (n, d_b), false)
+    };
+
+    let xmu = local.add(&cross1).add(&cross2);
+    u.sub(&xmu.scale(2))
+}
+
+/// Horizontal F'_ESD: `x_mine` is this party's sample block (n_mine×d);
+/// `n_a` is party A's (public) sample count. Returns shares of the full
+/// stacked `D' (n×k)`.
+pub fn horizontal(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, n_a: usize, n: usize) -> Mat {
+    let k = mu.rows;
+    let d = mu.cols;
+    let party = ctx.party();
+    let n_b = n - n_a;
+    let u = centroid_norms(ctx, mu, n);
+
+    // Block A (rows 0..n_a): X_A·μᵀ = X_A·⟨μ⟩_Aᵀ (A local) + X_A·⟨μ⟩_Bᵀ.
+    let block_a = {
+        let cross = if party == 0 {
+            private_matmul(ctx, x_mine, (n_a, d), (d, k), true)
+        } else {
+            let mb = mu.transpose();
+            private_matmul(ctx, &mb, (d, k), (n_a, d), false)
+        };
+        if party == 0 {
+            x_mine.matmul(&mu.transpose()).add(&cross)
+        } else {
+            cross
+        }
+    };
+    // Block B (rows n_a..n): symmetric.
+    let block_b = {
+        let cross = if party == 1 {
+            private_matmul(ctx, x_mine, (n_b, d), (d, k), true)
+        } else {
+            let mb = mu.transpose();
+            private_matmul(ctx, &mb, (d, k), (n_b, d), false)
+        };
+        if party == 1 {
+            x_mine.matmul(&mu.transpose()).add(&cross)
+        } else {
+            cross
+        }
+    };
+    let xmu = block_a.vstack(&block_b);
+    u.sub(&xmu.scale(2))
+}
+
+/// Pre-vectorization baseline (Q3 ablation, vertical only): the same
+/// D' but with one scalar secure multiplication *per (sample, centroid)
+/// pair* — n·k protocol rounds per iteration instead of O(1).
+pub fn vertical_naive(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+    let n = x_mine.rows;
+    let k = mu.rows;
+    let d_b = mu.cols - d_a;
+    let party = ctx.party();
+    let u = centroid_norms(ctx, mu, n);
+    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
+    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
+    let local = x_mine.matmul(&my_blk.transpose());
+
+    let mut xmu = local;
+    for i in 0..n {
+        for j in 0..k {
+            // Cross 1 for this single pair: row i of X_A · col j of μ_B,A-blk.
+            let c1 = if party == 0 {
+                let xi = Mat::from_vec(1, d_a, x_mine.row(i).to_vec());
+                private_matmul(ctx, &xi, (1, d_a), (d_a, 1), true)
+            } else {
+                let mj: Vec<u64> = (0..d_a).map(|l| mu_a_blk.at(j, l)).collect();
+                let mj = Mat::from_vec(d_a, 1, mj);
+                private_matmul(ctx, &mj, (d_a, 1), (1, d_a), false)
+            };
+            let c2 = if party == 1 {
+                let xi = Mat::from_vec(1, d_b, x_mine.row(i).to_vec());
+                private_matmul(ctx, &xi, (1, d_b), (d_b, 1), true)
+            } else {
+                let mj: Vec<u64> = (0..d_b).map(|l| mu_b_blk.at(j, l)).collect();
+                let mj = Mat::from_vec(d_b, 1, mj);
+                private_matmul(ctx, &mj, (d_b, 1), (1, d_b), false)
+            };
+            let cell = &mut xmu.data[i * k + j];
+            *cell = cell.wrapping_add(c1.data[0]).wrapping_add(c2.data[0]);
+        }
+    }
+    u.sub(&xmu.scale(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ring::fixed::{decode_f64, SCALE};
+    use crate::ss::share::{reconstruct, split};
+    use crate::util::prng::Prg;
+
+    /// Reference D' on plaintext reals.
+    fn ref_dprime(x: &[f64], mu: &[f64], n: usize, d: usize, k: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n * k];
+        for i in 0..n {
+            for j in 0..k {
+                let mut normsq = 0.0;
+                let mut dot = 0.0;
+                for l in 0..d {
+                    normsq += mu[j * d + l] * mu[j * d + l];
+                    dot += x[i * d + l] * mu[j * d + l];
+                }
+                out[i * k + j] = normsq - 2.0 * dot;
+            }
+        }
+        out
+    }
+
+    fn decode_2f(w: u64) -> f64 {
+        decode_f64(w) / SCALE
+    }
+
+    fn run_vertical_case(naive: bool) {
+        let (n, d, k, d_a) = (6, 4, 3, 2);
+        let mut prg = Prg::new(91);
+        let x: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
+        let muv: Vec<f64> = (0..k * d).map(|_| prg.next_f64()).collect();
+        let want = ref_dprime(&x, &muv, n, d, k);
+
+        // A holds cols [0,2), B holds [2,4).
+        let xa = Mat::encode(
+            n,
+            d_a,
+            &(0..n).flat_map(|i| x[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>(),
+        );
+        let xb = Mat::encode(
+            n,
+            d - d_a,
+            &(0..n).flat_map(|i| x[i * d + d_a..(i + 1) * d].to_vec()).collect::<Vec<_>>(),
+        );
+        let mu = Mat::encode(k, d, &muv);
+        let (mu0, mu1) = split(&mu, &mut prg);
+
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(92, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let dm = if naive {
+                    vertical_naive(&mut ctx, &xa, &mu0, d_a)
+                } else {
+                    vertical(&mut ctx, &xa, &mu0, d_a)
+                };
+                reconstruct(c, &dm)
+            },
+            move |c| {
+                let mut ts = Dealer::new(92, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let dm = if naive {
+                    vertical_naive(&mut ctx, &xb, &mu1, d_a)
+                } else {
+                    vertical(&mut ctx, &xb, &mu1, d_a)
+                };
+                reconstruct(c, &dm)
+            },
+        );
+        for i in 0..n * k {
+            let g = decode_2f(got.data[i]);
+            assert!((g - want[i]).abs() < 1e-4, "cell {i}: got {g} want {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn vertical_matches_plaintext() {
+        run_vertical_case(false);
+    }
+
+    #[test]
+    fn naive_matches_plaintext() {
+        run_vertical_case(true);
+    }
+
+    #[test]
+    fn horizontal_matches_plaintext() {
+        let (n, d, k, n_a) = (7, 3, 2, 4);
+        let mut prg = Prg::new(93);
+        let x: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
+        let muv: Vec<f64> = (0..k * d).map(|_| prg.next_f64()).collect();
+        let want = ref_dprime(&x, &muv, n, d, k);
+        let xa = Mat::encode(n_a, d, &x[..n_a * d]);
+        let xb = Mat::encode(n - n_a, d, &x[n_a * d..]);
+        let mu = Mat::encode(k, d, &muv);
+        let (mu0, mu1) = split(&mu, &mut prg);
+
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(94, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let dm = horizontal(&mut ctx, &xa, &mu0, n_a, n);
+                reconstruct(c, &dm)
+            },
+            move |c| {
+                let mut ts = Dealer::new(94, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let dm = horizontal(&mut ctx, &xb, &mu1, n_a, n);
+                reconstruct(c, &dm)
+            },
+        );
+        for i in 0..n * k {
+            let g = decode_2f(got.data[i]);
+            assert!((g - want[i]).abs() < 1e-4, "cell {i}: got {g} want {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn naive_costs_nk_rounds() {
+        let (n, d, k, d_a) = (4, 2, 2, 1);
+        let mut prg = Prg::new(95);
+        let x: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
+        let mu = Mat::encode(k, d, &vec![0.5; k * d]);
+        let (mu0, mu1) = split(&mu, &mut prg);
+        let xa = Mat::encode(n, d_a, &x[..n * d_a]);
+        let xb = Mat::encode(n, d - d_a, &x[n * d_a..]);
+        let ((_, m_vec), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(96, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                vertical(&mut ctx, &xa.clone(), &mu0, d_a);
+            },
+            move |c| {
+                let mut ts = Dealer::new(96, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                vertical(&mut ctx, &xb.clone(), &mu1, d_a);
+            },
+        );
+        // Vectorized: 3 rounds (norms + 2 cross products).
+        assert!(m_vec.total().rounds <= 3, "vectorized rounds = {}", m_vec.total().rounds);
+    }
+}

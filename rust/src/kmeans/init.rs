@@ -1,0 +1,81 @@
+//! Cluster-centroid initialization (paper §4.2).
+//!
+//! Default strategy: both parties derive the same k random sample
+//! indices from the public protocol seed; each party contributes its
+//! plaintext block of those rows as a trivial share. Zero communication,
+//! and the indices reveal nothing beyond what the parties already agreed
+//! to (the paper treats the initialization points as public).
+
+use super::plaintext::init_indices;
+use crate::ring::matrix::Mat;
+
+/// Vertical: my share of μ₀ (k×d) from my feature block (n×d_mine).
+/// Party 0 owns columns [0, d_a), party 1 the rest.
+pub fn vertical(x_mine: &Mat, d_a: usize, d: usize, n: usize, k: usize, seed: u128, party: usize) -> Mat {
+    let idx = init_indices(n, k, seed);
+    let mut mu = Mat::zeros(k, d);
+    let (lo, hi) = if party == 0 { (0, d_a) } else { (d_a, d) };
+    for (j, &i) in idx.iter().enumerate() {
+        for (c, l) in (lo..hi).enumerate() {
+            mu.set(j, l, x_mine.at(i, c));
+        }
+    }
+    mu
+}
+
+/// Horizontal: my share of μ₀ from my sample block. Party 0 owns rows
+/// [0, n_a), party 1 the rest; a picked row is contributed entirely by
+/// its owner.
+pub fn horizontal(x_mine: &Mat, n_a: usize, n: usize, k: usize, seed: u128, party: usize) -> Mat {
+    let idx = init_indices(n, k, seed);
+    let d = x_mine.cols;
+    let mut mu = Mat::zeros(k, d);
+    for (j, &i) in idx.iter().enumerate() {
+        let mine = if party == 0 { i < n_a } else { i >= n_a };
+        if mine {
+            let local_row = if party == 0 { i } else { i - n_a };
+            mu.row_mut(j).copy_from_slice(x_mine.row(local_row));
+        }
+    }
+    mu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::fixed::encode_f64;
+
+    #[test]
+    fn vertical_shares_reassemble_rows() {
+        let (n, d, d_a, k) = (5, 3, 2, 2);
+        let xv: Vec<f64> = (0..n * d).map(|i| i as f64 / 10.0).collect();
+        let xa = Mat::encode(n, d_a, &(0..n).flat_map(|i| xv[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>());
+        let xb = Mat::encode(n, d - d_a, &(0..n).map(|i| xv[i * d + 2]).collect::<Vec<_>>());
+        let m0 = vertical(&xa, d_a, d, n, k, 5, 0);
+        let m1 = vertical(&xb, d_a, d, n, k, 5, 1);
+        let mu = m0.add(&m1);
+        let idx = init_indices(n, k, 5);
+        for (j, &i) in idx.iter().enumerate() {
+            for l in 0..d {
+                assert_eq!(mu.at(j, l), encode_f64(xv[i * d + l]), "row {j} col {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn horizontal_shares_reassemble_rows() {
+        let (n, d, n_a, k) = (6, 2, 3, 3);
+        let xv: Vec<f64> = (0..n * d).map(|i| i as f64 / 7.0).collect();
+        let xa = Mat::encode(n_a, d, &xv[..n_a * d]);
+        let xb = Mat::encode(n - n_a, d, &xv[n_a * d..]);
+        let m0 = horizontal(&xa, n_a, n, k, 9, 0);
+        let m1 = horizontal(&xb, n_a, n, k, 9, 1);
+        let mu = m0.add(&m1);
+        let idx = init_indices(n, k, 9);
+        for (j, &i) in idx.iter().enumerate() {
+            for l in 0..d {
+                assert_eq!(mu.at(j, l), encode_f64(xv[i * d + l]), "row {j} col {l}");
+            }
+        }
+    }
+}

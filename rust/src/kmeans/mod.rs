@@ -1,0 +1,27 @@
+//! K-means: the plaintext baseline and the paper's privacy-preserving
+//! protocol (§4.2-4.3).
+//!
+//! Each Lloyd iteration decomposes into three secure steps, all
+//! vectorized over the full sample set:
+//!
+//! * **S1 — distance** ([`esd`]): `⟨D'⟩ = ⟨U⟩ − 2·X·⟨μ⟩ᵀ` (Eq. 3),
+//!   squared-norm term precomputed per iteration, cross products via
+//!   matrix Beaver triples (dense) or HE Protocol 2 (sparse).
+//! * **S2 — assignment** ([`assign`]): binary-tree reduction of `F_min^k`
+//!   with CMP + MUX modules (Fig. 1), producing a shared one-hot matrix.
+//! * **S3 — update** ([`update`]): `⟨μ⟩ = ⟨Cᵀ X⟩ / ⟨1ᵀ C⟩` with secure
+//!   division; the denominator is a free local column sum.
+//!
+//! [`secure`] orchestrates the iterations for vertically and
+//! horizontally partitioned data; [`sparse`] swaps the cross products to
+//! the HE path. [`plaintext`] is the cleartext oracle the protocol is
+//! validated against.
+
+pub mod assign;
+pub mod config;
+pub mod esd;
+pub mod init;
+pub mod plaintext;
+pub mod secure;
+pub mod sparse;
+pub mod update;

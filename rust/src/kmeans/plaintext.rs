@@ -1,0 +1,173 @@
+//! Plaintext Lloyd K-means: the correctness oracle for the secure
+//! protocol and the Q5 single-party baseline.
+
+use crate::data::blobs::Dataset;
+use crate::util::prng::Prg;
+
+/// Output of a plaintext K-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// k×d row-major centroids.
+    pub centroids: Vec<f64>,
+    /// Cluster index per sample.
+    pub assignments: Vec<usize>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    pub k: usize,
+    pub d: usize,
+    /// Iterations actually executed.
+    pub iters_run: usize,
+}
+
+/// Squared Euclidean distance.
+pub fn esd(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Pick initial centroids as `k` distinct data rows chosen by a public
+/// seed — the "jointly negotiate random indexes" strategy of §4.2.
+pub fn init_indices(n: usize, k: usize, seed: u128) -> Vec<usize> {
+    let mut prg = Prg::new(seed ^ 0x1217);
+    let mut picked = Vec::with_capacity(k);
+    while picked.len() < k {
+        let i = prg.next_below(n as u64) as usize;
+        if !picked.contains(&i) {
+            picked.push(i);
+        }
+    }
+    picked
+}
+
+/// Run Lloyd iterations from explicit initial centroids.
+pub fn kmeans_from(
+    data: &Dataset,
+    k: usize,
+    iters: usize,
+    mut centroids: Vec<f64>,
+    epsilon: Option<f64>,
+) -> KmeansResult {
+    let (n, d) = (data.n, data.d);
+    assert_eq!(centroids.len(), k * d);
+    let mut assignments = vec![0usize; n];
+    let mut iters_run = 0;
+    for _ in 0..iters {
+        iters_run += 1;
+        // Assignment.
+        for i in 0..n {
+            let row = data.row(i);
+            let mut best = 0;
+            let mut bestd = f64::INFINITY;
+            for j in 0..k {
+                let dist = esd(row, &centroids[j * d..(j + 1) * d]);
+                if dist < bestd {
+                    bestd = dist;
+                    best = j;
+                }
+            }
+            assignments[i] = best;
+        }
+        // Update (empty clusters keep their previous centroid).
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let j = assignments[i];
+            counts[j] += 1;
+            for l in 0..d {
+                sums[j * d + l] += data.x[i * d + l];
+            }
+        }
+        let mut moved = 0.0;
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue;
+            }
+            for l in 0..d {
+                let new = sums[j * d + l] / counts[j] as f64;
+                let old = centroids[j * d + l];
+                moved += (new - old) * (new - old);
+                centroids[j * d + l] = new;
+            }
+        }
+        if let Some(eps) = epsilon {
+            if moved < eps {
+                break;
+            }
+        }
+    }
+    // Final inertia.
+    let mut inertia = 0.0;
+    for i in 0..n {
+        inertia += esd(data.row(i), &centroids[assignments[i] * d..(assignments[i] + 1) * d]);
+    }
+    KmeansResult { centroids, assignments, inertia, k, d, iters_run }
+}
+
+/// Standard run: seed-chosen data rows as initial centroids.
+pub fn kmeans(data: &Dataset, k: usize, iters: usize, seed: u128) -> KmeansResult {
+    let idx = init_indices(data.n, k, seed);
+    let mut init = Vec::with_capacity(k * data.d);
+    for &i in &idx {
+        init.extend_from_slice(data.row(i));
+    }
+    kmeans_from(data, k, iters, init, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut spec = BlobSpec::new(300, 2, 3);
+        spec.spread = 0.01;
+        let ds = spec.generate(5);
+        let r = kmeans(&ds, 3, 20, 42);
+        // Each found cluster should be dominated by one true label.
+        let mut purity = 0usize;
+        for j in 0..3 {
+            let members: Vec<usize> =
+                (0..ds.n).filter(|&i| r.assignments[i] == j).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut counts = [0usize; 3];
+            for &i in &members {
+                counts[ds.labels[i]] += 1;
+            }
+            purity += counts.iter().max().unwrap();
+        }
+        assert!(purity as f64 / ds.n as f64 > 0.95, "purity {purity}/{}", ds.n);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_iterations() {
+        let ds = BlobSpec::new(200, 3, 4).generate(8);
+        let r1 = kmeans(&ds, 4, 1, 7);
+        let r10 = kmeans(&ds, 4, 10, 7);
+        assert!(r10.inertia <= r1.inertia + 1e-9);
+    }
+
+    #[test]
+    fn epsilon_stops_early() {
+        let ds = BlobSpec::new(100, 2, 2).generate(9);
+        let idx = init_indices(ds.n, 2, 3);
+        let mut init = Vec::new();
+        for &i in &idx {
+            init.extend_from_slice(ds.row(i));
+        }
+        let r = kmeans_from(&ds, 2, 50, init, Some(1e-12));
+        assert!(r.iters_run < 50, "converged in {} iters", r.iters_run);
+    }
+
+    #[test]
+    fn init_indices_distinct_and_seed_stable() {
+        let a = init_indices(100, 5, 1);
+        let b = init_indices(100, 5, 1);
+        assert_eq!(a, b);
+        let mut s = a.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+    }
+}

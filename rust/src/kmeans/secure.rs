@@ -1,0 +1,391 @@
+//! The privacy-preserving K-means driver (paper Alg. 3).
+//!
+//! Simulates the two parties as threads over the accounted channel and
+//! runs the full protocol: initialization → t × (S1 distance → S2
+//! assignment → S3 update) → output reconstruction. Communication is
+//! metered per phase (`online.s1` / `online.s2` / `online.s3` /
+//! `reveal`), triple generation time is separated by
+//! [`crate::offline::timed::TimedSource`], and the exact offline
+//! [`Demand`] is recorded for OT-based pricing — together these give
+//! every number the paper's tables and figures need from a single run.
+
+use super::config::{EsdMode, Partition, SecureKmeansConfig};
+use super::{assign, esd, init, update};
+use crate::data::blobs::Dataset;
+use crate::net::{run_two_party, Chan, Meter};
+use crate::offline::dealer::Dealer;
+use crate::offline::store::{Demand, TripleStore};
+use crate::offline::timed::TimedSource;
+use crate::ring::matrix::Mat;
+use crate::ss::share::reconstruct;
+use crate::ss::triples::{Ledger, TripleSource};
+use crate::ss::Ctx;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prg;
+use std::time::Instant;
+
+/// Per-step online wall-clock (seconds, triple generation excluded).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StepWall {
+    pub s1_distance: f64,
+    pub s2_assign: f64,
+    pub s3_update: f64,
+}
+
+/// Everything a bench or application needs from one protocol run.
+#[derive(Debug)]
+pub struct SecureKmeansOutput {
+    /// Offline demand attributed to each step (s1, s2, s3).
+    pub step_demands: [Demand; 3],
+    /// Reconstructed centroids (k×d, real-valued).
+    pub centroids: Vec<f64>,
+    /// Reconstructed cluster index per sample.
+    pub assignments: Vec<usize>,
+    pub k: usize,
+    pub d: usize,
+    pub iters_run: usize,
+    /// Party-0 / party-1 communication meters (phases: online.s1…).
+    pub meter_a: Meter,
+    pub meter_b: Meter,
+    /// Offline material demand recorded by party 0.
+    pub demand: Demand,
+    pub ledger: Ledger,
+    /// Seconds party 0 spent generating triples (the simulated dealer).
+    pub offline_gen_secs: f64,
+    /// Party-0 thread total wall-clock.
+    pub wall_secs: f64,
+    /// Online wall-clock by step.
+    pub step_wall: StepWall,
+}
+
+/// One party's raw protocol outputs (shared with the sparse driver).
+pub struct PartyResult {
+    pub step_demands: [Demand; 3],
+    pub mu: Mat,
+    pub assignments: Vec<usize>,
+    pub demand: Demand,
+    pub ledger: Ledger,
+    pub offline_secs: f64,
+    pub wall: f64,
+    pub steps: StepWall,
+    pub iters: usize,
+}
+
+impl PartyResult {
+    /// Assemble the public output struct from party 0's result.
+    pub fn into_output(
+        self,
+        k: usize,
+        d: usize,
+        meter_a: Meter,
+        meter_b: Meter,
+        wall_b: f64,
+    ) -> SecureKmeansOutput {
+        SecureKmeansOutput {
+            step_demands: self.step_demands,
+            centroids: self.mu.decode(),
+            assignments: self.assignments,
+            k,
+            d,
+            iters_run: self.iters,
+            meter_a,
+            meter_b,
+            demand: self.demand,
+            ledger: self.ledger,
+            offline_gen_secs: self.offline_secs,
+            wall_secs: self.wall.max(wall_b),
+            step_wall: self.steps,
+        }
+    }
+}
+
+/// Split a dataset according to the partition; returns (A block, B block)
+/// as fixed-point matrices.
+pub fn split_dataset(data: &Dataset, partition: Partition) -> (Mat, Mat) {
+    match partition {
+        Partition::Vertical { d_a } => {
+            assert!(d_a > 0 && d_a < data.d, "vertical split needs 0 < d_a < d");
+            let mut xa = Vec::with_capacity(data.n * d_a);
+            let mut xb = Vec::with_capacity(data.n * (data.d - d_a));
+            for i in 0..data.n {
+                let row = data.row(i);
+                xa.extend_from_slice(&row[..d_a]);
+                xb.extend_from_slice(&row[d_a..]);
+            }
+            (Mat::encode(data.n, d_a, &xa), Mat::encode(data.n, data.d - d_a, &xb))
+        }
+        Partition::Horizontal { n_a } => {
+            assert!(n_a > 0 && n_a < data.n, "horizontal split needs 0 < n_a < n");
+            (
+                Mat::encode(n_a, data.d, &data.x[..n_a * data.d]),
+                Mat::encode(data.n - n_a, data.d, &data.x[n_a * data.d..]),
+            )
+        }
+    }
+}
+
+/// One party's protocol main loop (dense SS path).
+fn party_main(
+    chan: &mut Chan,
+    x_mine: Mat,
+    n: usize,
+    d: usize,
+    cfg: &SecureKmeansConfig,
+) -> PartyResult {
+    let party = chan.party;
+    let t_start = Instant::now();
+    let timed = TimedSource::new(Dealer::new(cfg.seed, party));
+    let mut store = TripleStore::new(timed);
+    let mut steps = StepWall::default();
+
+    chan.set_phase("online.init");
+    let mut mu = match cfg.partition {
+        Partition::Vertical { d_a } => init::vertical(&x_mine, d_a, d, n, cfg.k, cfg.seed, party),
+        Partition::Horizontal { n_a } => init::horizontal(&x_mine, n_a, n, cfg.k, cfg.seed, party),
+    };
+
+    let mut c_share = Mat::zeros(n, cfg.k);
+    let mut step_demands = [Demand::default(), Demand::default(), Demand::default()];
+    let mut iters = 0;
+    for _t in 0..cfg.iters {
+        iters += 1;
+
+        // S1 — distance.
+        let t0 = Instant::now();
+        let off0 = store.inner().secs;
+        let dem0 = store.demand.clone();
+        let dmat = {
+            let mut ctx =
+                Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5));
+            ctx.set_phase("online.s1");
+            match (cfg.partition, cfg.esd) {
+                (Partition::Vertical { d_a }, EsdMode::Vectorized) => {
+                    esd::vertical(&mut ctx, &x_mine, &mu, d_a)
+                }
+                (Partition::Vertical { d_a }, EsdMode::Naive) => {
+                    esd::vertical_naive(&mut ctx, &x_mine, &mu, d_a)
+                }
+                (Partition::Horizontal { n_a }, _) => {
+                    esd::horizontal(&mut ctx, &x_mine, &mu, n_a, n)
+                }
+            }
+        };
+        steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+        step_demands[0].extend(&store.demand.delta(&dem0));
+
+        // S2 — assignment.
+        let t0 = Instant::now();
+        let off0 = store.inner().secs;
+        let dem0 = store.demand.clone();
+        {
+            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6));
+            ctx.set_phase("online.s2");
+            let (c_new, _minvals) = assign::min_k(&mut ctx, &dmat);
+            c_share = c_new;
+        }
+        steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+        step_demands[1].extend(&store.demand.delta(&dem0));
+
+        // S3 — update.
+        let t0 = Instant::now();
+        let off0 = store.inner().secs;
+        let dem0 = store.demand.clone();
+        let mu_new = {
+            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7));
+            ctx.set_phase("online.s3");
+            let num = match cfg.partition {
+                Partition::Vertical { d_a } => {
+                    update::numerator_vertical(&mut ctx, &x_mine, &c_share, d_a, d)
+                }
+                Partition::Horizontal { n_a } => {
+                    update::numerator_horizontal(&mut ctx, &x_mine, &c_share, n_a)
+                }
+            };
+            update::finish_update(&mut ctx, &num, &c_share, &mu)
+        };
+        steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+        step_demands[2].extend(&store.demand.delta(&dem0));
+
+        // Optional F_CSC convergence check.
+        let stop = if let Some(eps) = cfg.epsilon {
+            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xD8));
+            ctx.set_phase("online.csc");
+            update::converged(&mut ctx, &mu, &mu_new, eps)
+        } else {
+            false
+        };
+        mu = mu_new;
+        if stop {
+            break;
+        }
+    }
+
+    // Output reconstruction (the single reveal of the protocol).
+    chan.set_phase("reveal");
+    let mu_plain = reconstruct(chan, &mu);
+    let c_plain = reconstruct(chan, &c_share);
+    let assignments = (0..n)
+        .map(|i| (0..cfg.k).find(|&j| c_plain.at(i, j) == 1).unwrap_or(0))
+        .collect();
+
+    PartyResult {
+        step_demands,
+        mu: mu_plain,
+        assignments,
+        demand: store.demand.clone(),
+        ledger: store.ledger(),
+        offline_secs: store.inner().secs,
+        wall: t_start.elapsed().as_secs_f64(),
+        steps,
+        iters,
+    }
+}
+
+/// Run the full two-party protocol on a dataset (dense SS path).
+pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
+    if cfg.k < 2 {
+        return Err(Error::Config("k must be ≥ 2".into()));
+    }
+    if cfg.sparse {
+        return super::sparse::run(data, cfg);
+    }
+    let (xa, xb) = split_dataset(data, cfg.partition);
+    let (n, d) = (data.n, data.d);
+    let cfg_a = cfg.clone();
+    let cfg_b = cfg.clone();
+    let ((ra, meter_a), (rb, meter_b)) = run_two_party(
+        move |c| party_main(c, xa, n, d, &cfg_a),
+        move |c| party_main(c, xb, n, d, &cfg_b),
+    );
+    debug_assert_eq!(ra.mu, rb.mu, "parties must reconstruct identical centroids");
+    Ok(SecureKmeansOutput {
+        step_demands: ra.step_demands,
+        centroids: ra.mu.decode(),
+        assignments: ra.assignments,
+        k: cfg.k,
+        d,
+        iters_run: ra.iters,
+        meter_a,
+        meter_b,
+        demand: ra.demand,
+        ledger: ra.ledger,
+        offline_gen_secs: ra.offline_secs,
+        wall_secs: ra.wall.max(rb.wall),
+        step_wall: ra.steps,
+    })
+}
+
+/// Convenience: vertical partition with an even feature split.
+pub fn run_vertical(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
+    let mut cfg = cfg.clone();
+    cfg.partition = Partition::Vertical { d_a: (data.d / 2).max(1) };
+    run(data, &cfg)
+}
+
+/// Convenience: horizontal partition with an even sample split.
+pub fn run_horizontal(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
+    let mut cfg = cfg.clone();
+    cfg.partition = Partition::Horizontal { n_a: (data.n / 2).max(1) };
+    run(data, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+    use crate::kmeans::plaintext;
+
+    fn well_separated(n: usize, d: usize, k: usize, seed: u128) -> Dataset {
+        let mut spec = BlobSpec::new(n, d, k);
+        spec.spread = 0.02;
+        spec.generate(seed)
+    }
+
+    #[test]
+    fn secure_matches_plaintext_vertical() {
+        let ds = well_separated(60, 4, 3, 21);
+        let cfg = SecureKmeansConfig {
+            k: 3,
+            iters: 6,
+            partition: Partition::Vertical { d_a: 2 },
+            ..Default::default()
+        };
+        let sec = run(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, 3, 6, cfg.seed);
+        // Same init (same seed) → same trajectory up to fixed-point noise.
+        for i in 0..sec.centroids.len() {
+            assert!(
+                (sec.centroids[i] - plain.centroids[i]).abs() < 1e-2,
+                "centroid {i}: {} vs {}",
+                sec.centroids[i],
+                plain.centroids[i]
+            );
+        }
+        assert_eq!(sec.assignments, plain.assignments);
+    }
+
+    #[test]
+    fn secure_matches_plaintext_horizontal() {
+        let ds = well_separated(50, 3, 2, 33);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 5,
+            partition: Partition::Horizontal { n_a: 20 },
+            ..Default::default()
+        };
+        let sec = run(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, 2, 5, cfg.seed);
+        assert_eq!(sec.assignments, plain.assignments);
+    }
+
+    #[test]
+    fn naive_esd_same_result_more_rounds() {
+        let ds = well_separated(12, 2, 2, 5);
+        let base = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let mut naive_cfg = base.clone();
+        naive_cfg.esd = EsdMode::Naive;
+        let v = run(&ds, &base).unwrap();
+        let nv = run(&ds, &naive_cfg).unwrap();
+        assert_eq!(v.assignments, nv.assignments);
+        let rv = v.meter_a.get("online.s1").rounds;
+        let rn = nv.meter_a.get("online.s1").rounds;
+        assert!(rn > rv * 5, "naive rounds {rn} must dwarf vectorized {rv}");
+    }
+
+    #[test]
+    fn epsilon_stops_early_securely() {
+        let ds = well_separated(40, 2, 2, 8);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 30,
+            epsilon: Some(1e-6),
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = run(&ds, &cfg).unwrap();
+        assert!(out.iters_run < 30, "stopped at {}", out.iters_run);
+    }
+
+    #[test]
+    fn phase_metering_is_populated() {
+        let ds = well_separated(20, 2, 2, 9);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = run(&ds, &cfg).unwrap();
+        for phase in ["online.s1", "online.s2", "online.s3"] {
+            assert!(out.meter_a.get(phase).bytes_sent > 0, "phase {phase}");
+        }
+        assert!(out.offline_gen_secs > 0.0);
+        assert!(!out.demand.mats.is_empty());
+        assert!(out.ledger.bit_triple_lanes > 0);
+    }
+}

@@ -1,0 +1,342 @@
+//! S3 — Secure centroid update `F_SCU` (paper Eq. 6) and the stopping
+//! criterion `F_CSC`.
+//!
+//! `⟨μ⟩ = ⟨Cᵀ·X⟩ / ⟨1ᵀ·C⟩`: the numerator reuses the same
+//! local-plus-cross decomposition as the distance step (C is shared, X
+//! blocks are party-local plaintext); the denominator is a *free* local
+//! column sum of assignment shares. Division runs the normalized
+//! Newton-Raphson reciprocal of [`crate::ss::divide`]. Empty clusters
+//! are handled obliviously: a secure comparison flags `count = 0` lanes
+//! and a MUX substitutes (old centroid, count 1) so the division is
+//! always well-defined and reveals nothing.
+
+use crate::ring::matrix::Mat;
+use crate::ss::boolean::b2a;
+use crate::ss::compare::lt_public;
+use crate::ss::divide::divide_rows;
+use crate::ss::matmul::ss_matmul;
+use crate::ss::mux::mux_arith;
+use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
+use crate::ss::Ctx;
+use crate::ring::fixed::{FRAC_BITS, SCALE};
+use crate::ss::arith::ssquare_elem;
+use crate::ss::boolean::msb;
+
+/// Numerator `⟨Cᵀ·X⟩` for vertical partitioning: each party's feature
+/// block contributes `⟨C⟩ᵀ·X_p = ⟨C⟩_pᵀ·X_p (local) + ⟨C⟩_otherᵀ·X_p
+/// (cross)`. Blocks are reassembled in feature order. Scale f.
+pub fn numerator_vertical(ctx: &mut Ctx, x_mine: &Mat, c: &Mat, d_a: usize, d: usize) -> Mat {
+    let n = c.rows;
+    let k = c.cols;
+    let party = ctx.party();
+    let ct = c.transpose(); // k×n (my share)
+
+    // Block A (k×d_a): local at A + cross(C_B, X_A).
+    let block_a = {
+        let cross = if party == 0 {
+            // A supplies X_A as trivial right operand, B supplies ⟨C⟩_Bᵀ.
+            let a = trivial_share_of_theirs(k, n);
+            let b = trivial_share_of_mine(x_mine);
+            ss_matmul(ctx, &a, &b)
+        } else {
+            let a = trivial_share_of_mine(&ct);
+            let b = trivial_share_of_theirs(n, d_a);
+            ss_matmul(ctx, &a, &b)
+        };
+        if party == 0 {
+            ct.matmul(x_mine).add(&cross)
+        } else {
+            cross
+        }
+    };
+    // Block B (k×d_b): symmetric.
+    let block_b = {
+        let d_b = d - d_a;
+        let cross = if party == 1 {
+            let a = trivial_share_of_theirs(k, n);
+            let b = trivial_share_of_mine(x_mine);
+            ss_matmul(ctx, &a, &b)
+        } else {
+            let a = trivial_share_of_mine(&ct);
+            let b = trivial_share_of_theirs(n, d_b);
+            ss_matmul(ctx, &a, &b)
+        };
+        if party == 1 {
+            ct.matmul(x_mine).add(&cross)
+        } else {
+            cross
+        }
+    };
+    block_a.hstack(&block_b)
+}
+
+/// Numerator for horizontal partitioning: row blocks
+/// `⟨C_rows(p)⟩ᵀ·X_p` summed over parties.
+pub fn numerator_horizontal(ctx: &mut Ctx, x_mine: &Mat, c: &Mat, n_a: usize) -> Mat {
+    let n = c.rows;
+    let k = c.cols;
+    let d = x_mine.cols;
+    let party = ctx.party();
+    let c_a = c.rows_slice(0, n_a).transpose(); // k×n_a (my share of A rows)
+    let c_b = c.rows_slice(n_a, n).transpose(); // k×n_b
+
+    let part_a = {
+        let cross = if party == 0 {
+            let a = trivial_share_of_theirs(k, n_a);
+            let b = trivial_share_of_mine(x_mine);
+            ss_matmul(ctx, &a, &b)
+        } else {
+            let a = trivial_share_of_mine(&c_a);
+            let b = trivial_share_of_theirs(n_a, d);
+            ss_matmul(ctx, &a, &b)
+        };
+        if party == 0 {
+            c_a.matmul(x_mine).add(&cross)
+        } else {
+            cross
+        }
+    };
+    let part_b = {
+        let n_b = n - n_a;
+        let cross = if party == 1 {
+            let a = trivial_share_of_theirs(k, n_b);
+            let b = trivial_share_of_mine(x_mine);
+            ss_matmul(ctx, &a, &b)
+        } else {
+            let a = trivial_share_of_mine(&c_b);
+            let b = trivial_share_of_theirs(n_b, d);
+            ss_matmul(ctx, &a, &b)
+        };
+        if party == 1 {
+            c_b.matmul(x_mine).add(&cross)
+        } else {
+            cross
+        }
+    };
+    part_a.add(&part_b)
+}
+
+/// Complete the update from a shared numerator (k×d, scale f) and the
+/// assignment matrix: oblivious empty-cluster fallback + broadcast
+/// division. Returns the new centroid shares (k×d, scale f).
+pub fn finish_update(ctx: &mut Ctx, numerator: &Mat, c: &Mat, mu_old: &Mat) -> Mat {
+    let k = c.cols;
+    let d = numerator.cols;
+    let party = ctx.party();
+    // Denominator: counts = 1ᵀ·C — a free local share sum.
+    let counts = c.col_sums(); // 1×k integer shares
+
+    // empty_j = [count_j < 1] (counts are non-negative integers).
+    let ones = Mat::from_vec(1, k, vec![1; k]);
+    let empty_bits = lt_public(ctx, &counts, &ones);
+    let z = b2a(ctx, &empty_bits); // 1×k arithmetic
+
+    // den = empty ? 1 : count  (MUX with public "1" as party-0 share).
+    let one_share = if party == 0 { ones.clone() } else { Mat::zeros(1, k) };
+    let den = mux_arith(ctx, &z, &one_share, &counts);
+
+    // num = empty ? μ_old_row : numerator_row (selector broadcast over d).
+    let mut z_rows = Mat::zeros(1, k * d);
+    for j in 0..k {
+        for l in 0..d {
+            z_rows.data[j * d + l] = z.data[j];
+        }
+    }
+    let num = mux_arith(ctx, &z_rows, mu_old, numerator);
+
+    divide_rows(ctx, &num, &den)
+}
+
+/// `F_CSC`: secure convergence check — reveals only the boolean
+/// `‖μ_new − μ_old‖² < ε` (paper §4.2). One comparison on a single lane.
+pub fn converged(ctx: &mut Ctx, mu_old: &Mat, mu_new: &Mat, eps: f64) -> bool {
+    let diff = mu_new.sub(mu_old); // scale f
+    let sq = ssquare_elem(ctx, &diff); // scale 2f
+    let mut total = 0u64;
+    for &v in &sq.data {
+        total = total.wrapping_add(v);
+    }
+    let mut lane = Mat::from_vec(1, 1, vec![total]);
+    // total − ε·2^{2f} < 0 ?
+    if ctx.party() == 0 {
+        let eps_enc = (eps * SCALE * (1u64 << FRAC_BITS) as f64) as i64 as u64;
+        lane.data[0] = lane.data[0].wrapping_sub(eps_enc);
+    }
+    let bit = msb(ctx, &lane);
+    // Reveal the single decision bit.
+    let theirs = ctx.chan.exchange_u64s(&bit.words);
+    (bit.words[0] ^ theirs[0]) & 1 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ring::fixed::decode_f64;
+    use crate::ss::share::{reconstruct, split};
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn vertical_update_matches_plaintext_means() {
+        // 5 samples, d = 3 (A: 2 cols, B: 1), k = 2.
+        let x = [
+            0.0, 0.2, 1.0, //
+            0.1, 0.1, 0.8, //
+            0.9, 0.8, 0.2, //
+            1.0, 0.9, 0.1, //
+            0.85, 0.95, 0.0,
+        ];
+        let assign = [0usize, 0, 1, 1, 1];
+        let (n, d, d_a, k) = (5, 3, 2, 1 + 1);
+        // Plaintext means.
+        let mut want = vec![0.0; k * d];
+        let mut cnt = vec![0usize; k];
+        for i in 0..n {
+            cnt[assign[i]] += 1;
+            for l in 0..d {
+                want[assign[i] * d + l] += x[i * d + l];
+            }
+        }
+        for j in 0..k {
+            for l in 0..d {
+                want[j * d + l] /= cnt[j] as f64;
+            }
+        }
+
+        let xa = Mat::encode(n, d_a, &(0..n).flat_map(|i| x[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>());
+        let xb = Mat::encode(n, 1, &(0..n).map(|i| x[i * d + 2]).collect::<Vec<_>>());
+        let mut cmat = Mat::zeros(n, k);
+        for i in 0..n {
+            cmat.set(i, assign[i], 1);
+        }
+        let mu_old = Mat::encode(k, d, &vec![0.5; k * d]);
+        let mut prg = Prg::new(111);
+        let (c0, c1) = split(&cmat, &mut prg);
+        let (m0, m1) = split(&mu_old, &mut prg);
+
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(112, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let num = numerator_vertical(&mut ctx, &xa, &c0, d_a, d);
+                let mu = finish_update(&mut ctx, &num, &c0, &m0);
+                reconstruct(c, &mu)
+            },
+            move |c| {
+                let mut ts = Dealer::new(112, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let num = numerator_vertical(&mut ctx, &xb, &c1, d_a, d);
+                let mu = finish_update(&mut ctx, &num, &c1, &m1);
+                reconstruct(c, &mu)
+            },
+        );
+        for i in 0..k * d {
+            let g = decode_f64(got.data[i]);
+            assert!((g - want[i]).abs() < 2e-3, "cell {i}: got {g} want {}", want[i]);
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_old_centroid() {
+        // All samples to cluster 0; cluster 1 empty.
+        let (n, d, d_a, k) = (4, 2, 1, 2);
+        let xvals = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        let xa = Mat::encode(n, 1, &(0..n).map(|i| xvals[i * d]).collect::<Vec<_>>());
+        let xb = Mat::encode(n, 1, &(0..n).map(|i| xvals[i * d + 1]).collect::<Vec<_>>());
+        let mut cmat = Mat::zeros(n, k);
+        for i in 0..n {
+            cmat.set(i, 0, 1);
+        }
+        let mu_old_vals = [0.9, 0.95, 0.25, 0.35];
+        let mu_old = Mat::encode(k, d, &mu_old_vals);
+        let mut prg = Prg::new(113);
+        let (c0, c1) = split(&cmat, &mut prg);
+        let (m0, m1) = split(&mu_old, &mut prg);
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(114, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let num = numerator_vertical(&mut ctx, &xa, &c0, d_a, d);
+                let mu = finish_update(&mut ctx, &num, &c0, &m0);
+                reconstruct(c, &mu)
+            },
+            move |c| {
+                let mut ts = Dealer::new(114, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let num = numerator_vertical(&mut ctx, &xb, &c1, d_a, d);
+                let mu = finish_update(&mut ctx, &num, &c1, &m1);
+                reconstruct(c, &mu)
+            },
+        );
+        // Cluster 0: mean of all rows; cluster 1: unchanged old centroid.
+        let want0 = [(0.1 + 0.3 + 0.5 + 0.7) / 4.0, (0.2 + 0.4 + 0.6 + 0.8) / 4.0];
+        for l in 0..d {
+            assert!((decode_f64(got.at(0, l)) - want0[l]).abs() < 2e-3);
+            assert!((decode_f64(got.at(1, l)) - mu_old_vals[d + l]).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn horizontal_numerator_matches() {
+        let (n, d, n_a, k) = (6, 2, 4, 2);
+        let mut prg = Prg::new(115);
+        let xvals: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
+        let assign: Vec<usize> = (0..n).map(|i| i % k).collect();
+        let mut cmat = Mat::zeros(n, k);
+        for i in 0..n {
+            cmat.set(i, assign[i], 1);
+        }
+        let mut want = vec![0.0; k * d];
+        for i in 0..n {
+            for l in 0..d {
+                want[assign[i] * d + l] += xvals[i * d + l];
+            }
+        }
+        let xa = Mat::encode(n_a, d, &xvals[..n_a * d]);
+        let xb = Mat::encode(n - n_a, d, &xvals[n_a * d..]);
+        let (c0, c1) = split(&cmat, &mut prg);
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(116, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let num = numerator_horizontal(&mut ctx, &xa, &c0, n_a);
+                reconstruct(c, &num)
+            },
+            move |c| {
+                let mut ts = Dealer::new(116, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let num = numerator_horizontal(&mut ctx, &xb, &c1, n_a);
+                reconstruct(c, &num)
+            },
+        );
+        for i in 0..k * d {
+            assert!((decode_f64(got.data[i]) - want[i]).abs() < 1e-4, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn csc_detects_convergence() {
+        let mu_a = Mat::encode(2, 2, &[0.5, 0.5, 0.2, 0.2]);
+        let mu_b_close = Mat::encode(2, 2, &[0.5001, 0.5, 0.2, 0.2001]);
+        let mu_b_far = Mat::encode(2, 2, &[0.9, 0.5, 0.2, 0.6]);
+        for (mu_b, want) in [(mu_b_close, true), (mu_b_far, false)] {
+            let mut prg = Prg::new(117);
+            let (a0, a1) = split(&mu_a, &mut prg);
+            let (b0, b1) = split(&mu_b, &mut prg);
+            let ((got, _), _) = run_two_party(
+                move |c| {
+                    let mut ts = Dealer::new(118, 0);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    converged(&mut ctx, &a0, &b0, 1e-3)
+                },
+                move |c| {
+                    let mut ts = Dealer::new(118, 1);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    converged(&mut ctx, &a1, &b1, 1e-3)
+                },
+            );
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! # ppkmeans — Scalable & Sparsity-Aware Privacy-Preserving K-means
+//!
+//! A full-system reproduction of *"Scalable and Sparsity-Aware
+//! Privacy-Preserving K-means Clustering with Application to Fraud
+//! Detection"* (Liu et al., 2022): a two-party, semi-honest MPC framework
+//! for K-means with
+//!
+//! * an **online/offline split** — all cryptographic material (Beaver
+//!   triples, OT extensions) is produced in a data-independent offline
+//!   phase ([`offline`]), leaving a near-plaintext-speed online phase;
+//! * **vectorized secret-shared Lloyd iterations** — distance
+//!   computation, tree-reduction cluster assignment and centroid update
+//!   all operate on whole matrices ([`kmeans`]);
+//! * a **sparsity-aware HE+SS hybrid** — sparse matrix products are
+//!   evaluated under additively homomorphic encryption and converted back
+//!   to secret shares ([`sparse`], [`he`]);
+//! * the **M-Kmeans baseline** (Mohassel-Rosulek-Trieu) rebuilt on the
+//!   same substrate for apples-to-apples comparison ([`mkmeans`], [`gc`]).
+//!
+//! The numeric hot path (blocked ring matmuls, the ESD distance kernel)
+//! is AOT-compiled from JAX/Pallas to HLO text at build time and executed
+//! through the PJRT C API by [`runtime`]; Python never runs at protocol
+//! time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ppkmeans::prelude::*;
+//!
+//! let data = ppkmeans::data::blobs::BlobSpec::new(1_000, 4, 3).generate(7);
+//! let cfg = SecureKmeansConfig { k: 3, iters: 10, ..Default::default() };
+//! let out = ppkmeans::kmeans::secure::run_vertical(&data, &cfg).unwrap();
+//! println!("centroids: {:?}", out.centroids);
+//! ```
+#![allow(clippy::needless_range_loop)] // index-style loops mirror the math
+
+pub mod util;
+pub mod ring;
+pub mod net;
+pub mod ss;
+pub mod bigint;
+pub mod he;
+pub mod offline;
+pub mod sparse;
+pub mod gc;
+pub mod mkmeans;
+pub mod kmeans;
+pub mod runtime;
+pub mod coordinator;
+pub mod data;
+pub mod fraud;
+pub mod bench;
+pub mod cli;
+
+/// Common re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::kmeans::config::SecureKmeansConfig;
+    pub use crate::net::cost::CostModel;
+    pub use crate::net::meter::Meter;
+    pub use crate::ring::fixed::{decode_f64, encode_f64, FRAC_BITS};
+    pub use crate::ring::matrix::Mat;
+    pub use crate::util::error::{Error, Result};
+    pub use crate::util::prng::Prg;
+}

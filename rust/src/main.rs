@@ -1,0 +1,95 @@
+//! ppkmeans launcher.
+//!
+//! ```text
+//! ppkmeans train  [--n 1000] [--d 4] [--k 3] [--iters 10] [--sparse]
+//!                 [--partition vertical|horizontal] [--link lan|wan]
+//! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 3]
+//! ppkmeans bench                      # list bench targets
+//! ppkmeans version
+//! ```
+
+use ppkmeans::cli::Args;
+use ppkmeans::coordinator::Session;
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::data::sparse_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::cost::CostModel;
+
+fn cmd_train(args: &Args) {
+    let n = args.get_usize("n", 1000);
+    let d = args.get_usize("d", 4);
+    let k = args.get_usize("k", 3);
+    let iters = args.get_usize("iters", 10);
+    let sparse = args.flag("sparse");
+    let sparsity = args.get_f64("sparsity", 0.5);
+    let partition = match args.get_str("partition", "vertical") {
+        "horizontal" => Partition::Horizontal { n_a: n / 2 },
+        _ => Partition::Vertical { d_a: (d / 2).max(1) },
+    };
+    let link = match args.get_str("link", "lan") {
+        "wan" => CostModel::wan(),
+        _ => CostModel::lan(),
+    };
+    let data = if sparse {
+        sparse_gen::generate(n, d, k, sparsity, 42)
+    } else {
+        BlobSpec::new(n, d, k).generate(42)
+    };
+    let cfg = SecureKmeansConfig { k, iters, partition, sparse, ..Default::default() };
+    let session = Session::new(cfg).with_link(link);
+    match session.run(&data) {
+        Ok(out) => {
+            println!("trained secure K-means: n={n} d={d} k={k} iters={}", out.iters_run);
+            for j in 0..k {
+                let c: Vec<String> = out.centroids[j * d..(j + 1) * d]
+                    .iter()
+                    .map(|v| format!("{v:.4}"))
+                    .collect();
+                println!("  centroid {j}: [{}]", c.join(", "));
+            }
+            let on = out.meter_a.total_prefix("online.");
+            println!(
+                "  online: {} B, {} rounds; offline demand: {} mat triples, {} bit lanes",
+                on.bytes_sent,
+                on.rounds,
+                out.ledger.mat_triples,
+                out.ledger.bit_triple_lanes
+            );
+        }
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("fraud") => {
+            println!("run: cargo run --release --example fraud_detection -- [--n N --runs R]");
+        }
+        Some("bench") => {
+            println!("bench targets (cargo bench --bench <name>):");
+            for (b, what) in [
+                ("table1_runtime", "Table 1 — runtime vs M-Kmeans (LAN)"),
+                ("table2_comm", "Table 2 — communication vs M-Kmeans"),
+                ("fig2_online_offline", "Fig 2 — online/offline per step (WAN)"),
+                ("fig3_vectorization", "Fig 3 — vectorization ablation (WAN)"),
+                ("fig4_sparse", "Fig 4 — sparse optimization scaling (WAN)"),
+                ("ablations", "extras — OU vs Paillier, PJRT vs native"),
+            ] {
+                println!("  {b:<20} {what}");
+            }
+        }
+        Some("version") | None => {
+            println!("ppkmeans 0.1.0 — scalable sparsity-aware privacy-preserving K-means");
+            println!("subcommands: train | fraud | bench | version");
+        }
+        Some(cmd) => {
+            eprintln!("unknown subcommand: {cmd}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Garbled-circuit cluster assignment (the M-Kmeans core step).
+//!
+//! Party 0 garbles one argmin circuit per sample (fresh labels each) and
+//! masks the one-hot outputs with random bits — its boolean share. The
+//! evaluator obtains its input labels through OT extension, evaluates,
+//! and decodes the masked outputs — the other boolean share. Distances
+//! enter as the low `w` bits of each party's additive share (exact:
+//! 2^64 ≡ 0 mod 2^w, and |D'| < 2^{w−1}).
+
+use crate::gc::builder::assign_circuit;
+use crate::gc::garble::{decode, evaluate, garble};
+
+use crate::net::Chan;
+use crate::offline::iknp::{IknpReceiver, IknpSender};
+use crate::ring::matrix::Mat;
+use crate::ss::boolean::BoolShare;
+use crate::util::prng::Prg;
+
+/// Share-bit width fed into the circuit (|D'| < 2^47 at scale 2f).
+pub const GC_WIDTH: usize = 48;
+
+fn share_bits(share: &Mat, row: usize, w: usize) -> Vec<bool> {
+    // k words of w bits, LSB first, one word per cluster column.
+    let k = share.cols;
+    let mut out = Vec::with_capacity(k * w);
+    for j in 0..k {
+        let v = share.at(row, j);
+        for b in 0..w {
+            out.push((v >> b) & 1 == 1);
+        }
+    }
+    out
+}
+
+/// Garbler side (party 0): `d` is its share of the distance matrix
+/// (n×k). Returns its boolean share of the one-hot assignment (n·k
+/// lanes, row-major).
+pub fn garbler(chan: &mut Chan, ot: &mut IknpSender, d: &Mat, prg: &mut Prg) -> BoolShare {
+    let (n, k) = (d.rows, d.cols);
+    let circ = assign_circuit(k, GC_WIDTH);
+    let mut my_share = BoolShare::zeros(n * k);
+
+    // Garble all samples, collecting tables + garbler labels + masked
+    // decode bits into one frame, and the evaluator's label pairs for OT.
+    let mut frame: Vec<u8> = Vec::new();
+    frame.extend_from_slice(&(circ.and_count() as u64).to_le_bytes());
+    let mut ot_pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(n * k * GC_WIDTH);
+    for i in 0..n {
+        let gb = garble(&circ, prg);
+        for (tg, te) in &gb.tables {
+            frame.extend_from_slice(&tg.to_le_bytes());
+            frame.extend_from_slice(&te.to_le_bytes());
+        }
+        let glabels = gb.garbler_labels(&circ, &share_bits(d, i, GC_WIDTH));
+        for l in &glabels {
+            frame.extend_from_slice(&l.to_le_bytes());
+        }
+        // Masked decode bits: mask = my boolean share.
+        for (j, &db) in gb.decode.iter().enumerate() {
+            let m = prg.next_u64() & 1 == 1;
+            my_share.set(i * k + j, m);
+            frame.push((db ^ m) as u8);
+        }
+        // Evaluator input label pairs for this sample's OTs.
+        for b in 0..circ.n_eval {
+            let (l0, l1) = gb.labels(circ.eval_input(b));
+            ot_pairs.push((l0.to_le_bytes().to_vec(), l1.to_le_bytes().to_vec()));
+        }
+    }
+    chan.send_bytes(&frame);
+    ot.send(chan, &ot_pairs, 16);
+    my_share
+}
+
+/// Evaluator side (party 1): returns its boolean share of the one-hot
+/// assignment.
+pub fn evaluator(chan: &mut Chan, ot: &mut IknpReceiver, d: &Mat, prg: &mut Prg) -> BoolShare {
+    let _ = prg;
+    let (n, k) = (d.rows, d.cols);
+    let circ = assign_circuit(k, GC_WIDTH);
+    let frame = chan.recv_bytes();
+    let and_count = u64::from_le_bytes(frame[..8].try_into().unwrap()) as usize;
+    assert_eq!(and_count, circ.and_count(), "circuit mismatch");
+    let per_sample = and_count * 32 + (1 + circ.n_garbler) * 16 + k;
+    assert_eq!(frame.len(), 8 + n * per_sample, "gc frame size");
+
+    // OT choices: all samples' share bits.
+    let mut choices = Vec::with_capacity(n * circ.n_eval);
+    for i in 0..n {
+        choices.extend(share_bits(d, i, GC_WIDTH));
+    }
+    let labels = ot.recv(chan, &choices, 16);
+
+    let mut out = BoolShare::zeros(n * k);
+    for i in 0..n {
+        let base = 8 + i * per_sample;
+        let mut tables = Vec::with_capacity(and_count);
+        for g in 0..and_count {
+            let off = base + g * 32;
+            let tg = u128::from_le_bytes(frame[off..off + 16].try_into().unwrap());
+            let te = u128::from_le_bytes(frame[off + 16..off + 32].try_into().unwrap());
+            tables.push((tg, te));
+        }
+        let mut input_labels = Vec::with_capacity(1 + circ.n_garbler + circ.n_eval);
+        let goff = base + and_count * 32;
+        for b in 0..1 + circ.n_garbler {
+            let off = goff + b * 16;
+            input_labels.push(u128::from_le_bytes(frame[off..off + 16].try_into().unwrap()));
+        }
+        for b in 0..circ.n_eval {
+            let l = &labels[i * circ.n_eval + b];
+            input_labels.push(u128::from_le_bytes(l.as_slice().try_into().unwrap()));
+        }
+        let out_labels = evaluate(&circ, &tables, &input_labels);
+        let doff = goff + (1 + circ.n_garbler) * 16;
+        let masked_decode: Vec<bool> = (0..k).map(|j| frame[doff + j] == 1).collect();
+        let bits = decode(&out_labels, &masked_decode);
+        for (j, &b) in bits.iter().enumerate() {
+            out.set(i * k + j, b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::duplex_pair;
+    use crate::offline::iknp::{setup_receiver, setup_sender};
+    use crate::ring::fixed::encode_f64;
+    use crate::ss::share::split;
+    use std::thread;
+
+    #[test]
+    fn gc_assignment_matches_plain_argmin() {
+        let (n, k) = (7, 5);
+        let mut prg = Prg::new(88);
+        // Distances at scale 2f-ish magnitudes, some negative.
+        let dvals: Vec<f64> = (0..n * k).map(|_| prg.next_f64() * 10.0 - 3.0).collect();
+        let enc: Vec<u64> = dvals.iter().map(|&v| encode_f64(v)).collect();
+        let d = Mat::from_vec(n, k, enc);
+        let (d0, d1) = split(&d, &mut prg);
+
+        let (mut c0, mut c1) = duplex_pair();
+        let h = thread::spawn(move || {
+            let mut prg = Prg::new(91);
+            let mut ot = setup_sender(&mut c0, &mut prg);
+            let s = garbler(&mut c0, &mut ot, &d0, &mut prg);
+            s.words
+        });
+        let mut prg1 = Prg::new(92);
+        let mut ot = setup_receiver(&mut c1, &mut prg1);
+        let s1 = evaluator(&mut c1, &mut ot, &d1, &mut prg1);
+        let w0 = h.join().unwrap();
+        for i in 0..n {
+            let row = &dvals[i * k..(i + 1) * k];
+            let want = row
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            for j in 0..k {
+                let lane = i * k + j;
+                let bit = ((w0[lane / 64] ^ s1.words[lane / 64]) >> (lane % 64)) & 1 == 1;
+                assert_eq!(bit, j == want, "sample {i} col {j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! M-Kmeans: the Mohassel-Rosulek-Trieu (PoPETs 2020) baseline,
+//! reimplemented on this crate's substrate for apples-to-apples
+//! comparison (paper §5, Tables 1-2, Q5).
+//!
+//! Protocol shape per the original: secret-shared distance computation,
+//! a **customized garbled circuit** computing binary shares of the
+//! argmin ([`gcmin`]), and a shared centroid update. The two structural
+//! differences the paper exploits are preserved faithfully:
+//!
+//! 1. **No offline phase** — every multiplication triple is generated
+//!    inline with OT during the online timeline;
+//! 2. **GC assignment** — per-sample garbled argmin instead of the
+//!    vectorized secret-shared comparison tree.
+
+pub mod gcmin;
+pub mod protocol;
+
+pub use protocol::{run_vertical, MkmeansConfig, MkmeansOutput};

@@ -1,0 +1,197 @@
+//! The full M-Kmeans protocol loop (vertical partitioning).
+//!
+//! Per iteration: SS distance (triples generated **inline** with OT — no
+//! offline phase, the paper's critique #1), garbled-circuit argmin
+//! ([`super::gcmin`]), B2A of the boolean one-hot, and the shared
+//! centroid update with secure division. All traffic and wall-clock is
+//! one online timeline.
+
+use crate::data::blobs::Dataset;
+use crate::kmeans::config::Partition;
+use crate::kmeans::secure::split_dataset;
+use crate::kmeans::{esd, init, update};
+use crate::net::{duplex_pair, Chan, Meter};
+use crate::offline::gilboa::OtTripleGen;
+use crate::offline::iknp::{setup_receiver, setup_sender, IknpReceiver, IknpSender};
+use crate::ring::matrix::Mat;
+use crate::ss::boolean::b2a;
+use crate::ss::share::reconstruct;
+use crate::ss::Ctx;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prg;
+use std::thread;
+use std::time::Instant;
+
+/// M-Kmeans run parameters.
+#[derive(Debug, Clone)]
+pub struct MkmeansConfig {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u128,
+    /// Vertical feature split (the comparison setting of the paper).
+    pub d_a: usize,
+}
+
+impl Default for MkmeansConfig {
+    fn default() -> Self {
+        MkmeansConfig { k: 2, iters: 10, seed: 0xCAFE, d_a: 1 }
+    }
+}
+
+/// Results + measurements of one M-Kmeans run.
+#[derive(Debug)]
+pub struct MkmeansOutput {
+    pub centroids: Vec<f64>,
+    pub assignments: Vec<usize>,
+    pub k: usize,
+    pub d: usize,
+    /// Total bytes sent (both parties, protocol + inline OT channels).
+    pub bytes_total: u64,
+    /// Rounds on the protocol channel (flights).
+    pub rounds: u64,
+    /// Wall-clock seconds (single timeline: no offline split).
+    pub wall_secs: f64,
+    pub meter_a: Meter,
+    pub meter_b: Meter,
+}
+
+enum OtEnd {
+    Sender(IknpSender),
+    Receiver(IknpReceiver),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn party_main(
+    chan: &mut Chan,
+    ot_chan: Chan,
+    x_mine: Mat,
+    n: usize,
+    d: usize,
+    cfg: &MkmeansConfig,
+) -> (Mat, Vec<usize>, Meter) {
+    let party = chan.party;
+    // Inline OT triple generation — this *is* the online phase.
+    let mut ts = OtTripleGen::new(ot_chan, cfg.seed ^ 0x517);
+    // A second OT endpoint on the protocol channel for GC labels.
+    let mut prg = Prg::new(cfg.seed ^ ((party as u128) << 32) ^ 0x929);
+    chan.set_phase("online.gc-baseot");
+    let mut gc_ot = if party == 0 {
+        OtEnd::Sender(setup_sender(chan, &mut prg))
+    } else {
+        OtEnd::Receiver(setup_receiver(chan, &mut prg))
+    };
+
+    chan.set_phase("online.init");
+    let mut mu = init::vertical(&x_mine, cfg.d_a, d, n, cfg.k, cfg.seed, party);
+    let mut c_arith = Mat::zeros(n, cfg.k);
+
+    for _t in 0..cfg.iters {
+        // Distance (same vectorized math; triples inline).
+        chan.set_phase("online.s1");
+        let dmat = {
+            let mut ctx = Ctx::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x31));
+            esd::vertical(&mut ctx, &x_mine, &mu, cfg.d_a)
+        };
+
+        // GC argmin → boolean one-hot shares.
+        chan.set_phase("online.s2-gc");
+        let bool_share = match &mut gc_ot {
+            OtEnd::Sender(s) => super::gcmin::garbler(chan, s, &dmat, &mut prg),
+            OtEnd::Receiver(r) => super::gcmin::evaluator(chan, r, &dmat, &mut prg),
+        };
+        // B2A lift.
+        let c_lifted = {
+            let mut ctx = Ctx::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x32));
+            b2a(&mut ctx, &bool_share)
+        };
+        c_arith = Mat::from_vec(n, cfg.k, c_lifted.data);
+
+        // Update.
+        chan.set_phase("online.s3");
+        let mu_new = {
+            let mut ctx = Ctx::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x33));
+            let num = update::numerator_vertical(&mut ctx, &x_mine, &c_arith, cfg.d_a, d);
+            update::finish_update(&mut ctx, &num, &c_arith, &mu)
+        };
+        mu = mu_new;
+    }
+
+    chan.set_phase("reveal");
+    let mu_plain = reconstruct(chan, &mu);
+    let c_plain = reconstruct(chan, &c_arith);
+    let assignments = (0..n)
+        .map(|i| (0..cfg.k).find(|&j| c_plain.at(i, j) == 1).unwrap_or(0))
+        .collect();
+    (mu_plain, assignments, ts.into_meter())
+}
+
+/// Run M-Kmeans on a vertically partitioned dataset.
+pub fn run_vertical(data: &Dataset, cfg: &MkmeansConfig) -> Result<MkmeansOutput> {
+    if cfg.d_a == 0 || cfg.d_a >= data.d {
+        return Err(Error::Config("need 0 < d_a < d".into()));
+    }
+    let (xa, xb) = split_dataset(data, Partition::Vertical { d_a: cfg.d_a });
+    let (n, d) = (data.n, data.d);
+    let (mut p0, mut p1) = duplex_pair();
+    let (o0, o1) = duplex_pair();
+    let cfg_a = cfg.clone();
+    let cfg_b = cfg.clone();
+    let t0 = Instant::now();
+    let h0 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || {
+            let r = party_main(&mut p0, o0, xa, n, d, &cfg_a);
+            (r, p0.into_meter())
+        })
+        .expect("spawn");
+    let h1 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || {
+            let r = party_main(&mut p1, o1, xb, n, d, &cfg_b);
+            (r, p1.into_meter())
+        })
+        .expect("spawn");
+    let ((ra, ma), (rb, mb)) = (h0.join().expect("p0"), h1.join().expect("p1"));
+    let wall = t0.elapsed().as_secs_f64();
+    let (mu, assignments, ot_meter_a) = ra;
+    let (_mu_b, _assign_b, ot_meter_b) = rb;
+    let bytes_total = ma.total().bytes_sent
+        + mb.total().bytes_sent
+        + ot_meter_a.total().bytes_sent
+        + ot_meter_b.total().bytes_sent;
+    Ok(MkmeansOutput {
+        centroids: mu.decode(),
+        assignments,
+        k: cfg.k,
+        d,
+        bytes_total,
+        rounds: ma.total().rounds + ot_meter_a.total().rounds,
+        wall_secs: wall,
+        meter_a: ma,
+        meter_b: mb,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+    use crate::kmeans::plaintext;
+
+    #[test]
+    fn mkmeans_matches_plaintext_trajectory() {
+        let mut spec = BlobSpec::new(16, 2, 2);
+        spec.spread = 0.02;
+        let ds = spec.generate(61);
+        let cfg = MkmeansConfig { k: 2, iters: 2, d_a: 1, ..Default::default() };
+        let out = run_vertical(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, 2, 2, cfg.seed);
+        assert_eq!(out.assignments, plain.assignments);
+        for i in 0..out.centroids.len() {
+            assert!(
+                (out.centroids[i] - plain.centroids[i]).abs() < 1e-2,
+                "centroid {i}"
+            );
+        }
+    }
+}

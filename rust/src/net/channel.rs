@@ -1,0 +1,162 @@
+//! In-process duplex channel between the two party threads.
+//!
+//! Messages are real serialized byte vectors (little-endian u64 framing),
+//! so the meter sees exactly what a socket would carry (sans TCP/IP
+//! headers, which the paper's numbers also exclude).
+
+use super::meter::Meter;
+use crate::ring::matrix::Mat;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+enum Backend {
+    Mpsc { tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>> },
+    Tcp(super::tcp::TcpTransport),
+}
+
+/// One endpoint of a two-party connection with an attached [`Meter`].
+pub struct Chan {
+    backend: Backend,
+    meter: Meter,
+    /// Identity of this endpoint: 0 or 1.
+    pub party: usize,
+}
+
+/// Create a connected pair of in-process endpoints (party 0, party 1).
+pub fn duplex_pair() -> (Chan, Chan) {
+    let (tx0, rx1) = channel();
+    let (tx1, rx0) = channel();
+    (
+        Chan { backend: Backend::Mpsc { tx: tx0, rx: rx0 }, meter: Meter::new(), party: 0 },
+        Chan { backend: Backend::Mpsc { tx: tx1, rx: rx1 }, meter: Meter::new(), party: 1 },
+    )
+}
+
+impl Chan {
+    /// Wrap a connected TCP transport as an endpoint.
+    pub fn from_tcp(t: super::tcp::TcpTransport, party: usize) -> Chan {
+        Chan { backend: Backend::Tcp(t), meter: Meter::new(), party }
+    }
+
+    /// Label subsequent traffic with a phase.
+    pub fn set_phase(&mut self, label: &str) {
+        self.meter.set_phase(label);
+    }
+
+    /// Borrow the meter (read-only).
+    pub fn meter(&self) -> &Meter {
+        &self.meter
+    }
+
+    /// Consume the endpoint, returning its meter.
+    pub fn into_meter(self) -> Meter {
+        self.meter
+    }
+
+    /// Send a raw byte message.
+    pub fn send_bytes(&mut self, bytes: &[u8]) {
+        self.meter.on_send(bytes.len() as u64);
+        match &mut self.backend {
+            Backend::Mpsc { tx, .. } => tx.send(bytes.to_vec()).expect("peer closed"),
+            Backend::Tcp(t) => t.send(bytes).expect("tcp send"),
+        }
+    }
+
+    /// Receive the next raw byte message.
+    pub fn recv_bytes(&mut self) -> Vec<u8> {
+        self.meter.on_recv();
+        match &mut self.backend {
+            Backend::Mpsc { rx, .. } => rx.recv().expect("peer closed"),
+            Backend::Tcp(t) => t.recv().expect("tcp recv"),
+        }
+    }
+
+    /// Send a vector of ring elements (8 bytes each, little endian).
+    pub fn send_u64s(&mut self, xs: &[u64]) {
+        let mut bytes = Vec::with_capacity(xs.len() * 8);
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.send_bytes(&bytes);
+    }
+
+    /// Receive a vector of ring elements.
+    pub fn recv_u64s(&mut self) -> Vec<u64> {
+        let bytes = self.recv_bytes();
+        assert_eq!(bytes.len() % 8, 0, "malformed u64 frame");
+        bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    /// Send a matrix (shape is protocol-known; only the buffer travels).
+    pub fn send_mat(&mut self, m: &Mat) {
+        self.send_u64s(&m.data);
+    }
+
+    /// Receive a matrix with the given (protocol-known) shape.
+    pub fn recv_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        let data = self.recv_u64s();
+        assert_eq!(data.len(), rows * cols, "matrix frame shape mismatch");
+        Mat::from_vec(rows, cols, data)
+    }
+
+    /// Symmetric exchange of ring vectors: party 0 sends first, party 1
+    /// receives first (one round in each direction, one RTT total since
+    /// both directions overlap on a full-duplex link).
+    pub fn exchange_u64s(&mut self, xs: &[u64]) -> Vec<u64> {
+        if self.party == 0 {
+            self.send_u64s(xs);
+            self.recv_u64s()
+        } else {
+            let r = self.recv_u64s();
+            self.send_u64s(xs);
+            r
+        }
+    }
+
+    /// Symmetric exchange of equal-shape matrices.
+    pub fn exchange_mat(&mut self, m: &Mat) -> Mat {
+        let data = self.exchange_u64s(&m.data);
+        assert_eq!(data.len(), m.data.len(), "exchange shape mismatch");
+        Mat::from_vec(m.rows, m.cols, data)
+    }
+
+    /// Send one u64 scalar.
+    pub fn send_scalar(&mut self, x: u64) {
+        self.send_u64s(&[x]);
+    }
+
+    /// Receive one u64 scalar.
+    pub fn recv_scalar(&mut self) -> u64 {
+        let v = self.recv_u64s();
+        assert_eq!(v.len(), 1);
+        v[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn mat_roundtrip() {
+        let (mut c0, mut c1) = duplex_pair();
+        let m = Mat::from_vec(2, 2, vec![1, 2, 3, u64::MAX]);
+        let mc = m.clone();
+        let h = thread::spawn(move || {
+            c0.send_mat(&mc);
+        });
+        let got = c1.recv_mat(2, 2);
+        h.join().unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn exchange_is_symmetric() {
+        let (mut c0, mut c1) = duplex_pair();
+        let h = thread::spawn(move || c0.exchange_u64s(&[1, 2]));
+        let from0 = c1.exchange_u64s(&[3, 4]);
+        let from1 = h.join().unwrap();
+        assert_eq!(from0, vec![1, 2]);
+        assert_eq!(from1, vec![3, 4]);
+    }
+}

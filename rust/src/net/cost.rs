@@ -1,0 +1,72 @@
+//! Network cost model: translate exact (bytes, rounds) measurements into
+//! wall-clock network time for a target link.
+//!
+//! The paper reports LAN (10 Gbps, 0.02 ms RTT) for the M-Kmeans
+//! comparison (Q1) and WAN (20 Mbps, 40 ms RTT) for Q2-Q4. Running both
+//! parties on one host, we *measure* compute time and message sizes, then
+//! *model* link time as `rounds · RTT + bytes / bandwidth` — the standard
+//! flight model, which is also what dominates the paper's WAN numbers.
+
+use super::meter::PhaseStats;
+
+/// A symmetric point-to-point link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Round-trip latency in seconds.
+    pub rtt_s: f64,
+    /// Bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+}
+
+impl CostModel {
+    /// Paper's LAN: 10 Gbps, 0.02 ms RTT.
+    pub fn lan() -> Self {
+        CostModel { rtt_s: 0.02e-3, bandwidth_bps: 10e9 }
+    }
+
+    /// Paper's WAN: 20 Mbps, 40 ms RTT.
+    pub fn wan() -> Self {
+        CostModel { rtt_s: 40e-3, bandwidth_bps: 20e6 }
+    }
+
+    /// An infinitely fast link (pure-compute accounting).
+    pub fn zero() -> Self {
+        CostModel { rtt_s: 0.0, bandwidth_bps: f64::INFINITY }
+    }
+
+    /// Modeled link time for a traffic summary.
+    pub fn time(&self, stats: &PhaseStats) -> f64 {
+        stats.rounds as f64 * self.rtt_s + (stats.bytes_sent as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// Modeled link time from raw counts.
+    pub fn time_raw(&self, bytes: u64, rounds: u64) -> f64 {
+        self.time(&PhaseStats { bytes_sent: bytes, msgs_sent: 0, rounds })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wan_latency_dominates_small_messages() {
+        let wan = CostModel::wan();
+        // 10 rounds of 8 bytes: latency term 0.4 s, bandwidth term ~32 us.
+        let t = wan.time_raw(80, 10);
+        assert!((t - 0.4).abs() < 1e-3, "{t}");
+    }
+
+    #[test]
+    fn lan_bandwidth_dominates_bulk() {
+        let lan = CostModel::lan();
+        // 1 GB in one round: ~0.86 s, latency negligible.
+        let t = lan.time_raw(1 << 30, 1);
+        assert!((t - (1u64 << 30) as f64 * 8.0 / 10e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        assert_eq!(CostModel::zero().time_raw(1 << 40, 1000), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-phase communication accounting.
+//!
+//! Protocol code labels phases (`meter.set_phase("online.distance")`);
+//! the channel attributes every message to the current phase. A *round*
+//! is counted when a send starts a new flight — i.e. the first send after
+//! a receive (or the very first send): consecutive sends without an
+//! intervening receive belong to the same flight and cost one RTT.
+
+use std::collections::BTreeMap;
+
+/// Totals for one labelled phase.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseStats {
+    /// Bytes this party put on the wire.
+    pub bytes_sent: u64,
+    /// Messages this party put on the wire.
+    pub msgs_sent: u64,
+    /// Communication rounds initiated by this party (flights).
+    pub rounds: u64,
+}
+
+impl PhaseStats {
+    pub fn merge(&mut self, o: &PhaseStats) {
+        self.bytes_sent += o.bytes_sent;
+        self.msgs_sent += o.msgs_sent;
+        self.rounds += o.rounds;
+    }
+}
+
+/// Per-party communication meter with phase attribution.
+#[derive(Debug, Clone)]
+pub struct Meter {
+    phases: BTreeMap<String, PhaseStats>,
+    current: String,
+    /// True when the next send opens a new flight (round).
+    flight_open: bool,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Meter { phases: BTreeMap::new(), current: "default".into(), flight_open: true }
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Switch attribution to a new phase label.
+    pub fn set_phase(&mut self, label: &str) {
+        self.current = label.to_string();
+        self.phases.entry(self.current.clone()).or_default();
+    }
+
+    /// Current phase label.
+    pub fn phase(&self) -> &str {
+        &self.current
+    }
+
+    /// Record a sent message of `bytes` length.
+    pub fn on_send(&mut self, bytes: u64) {
+        let e = self.phases.entry(self.current.clone()).or_default();
+        e.bytes_sent += bytes;
+        e.msgs_sent += 1;
+        if self.flight_open {
+            e.rounds += 1;
+            self.flight_open = false;
+        }
+    }
+
+    /// Record a receive (closes the current flight).
+    pub fn on_recv(&mut self) {
+        self.flight_open = true;
+    }
+
+    /// Stats for one phase (zero if never entered).
+    pub fn get(&self, label: &str) -> PhaseStats {
+        self.phases.get(label).copied().unwrap_or_default()
+    }
+
+    /// Sum over all phases.
+    pub fn total(&self) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for s in self.phases.values() {
+            t.merge(s);
+        }
+        t
+    }
+
+    /// Sum over phases whose label starts with `prefix`
+    /// (e.g. all of `"online."`).
+    pub fn total_prefix(&self, prefix: &str) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for (k, s) in &self.phases {
+            if k.starts_with(prefix) {
+                t.merge(s);
+            }
+        }
+        t
+    }
+
+    /// Iterate (label, stats) sorted by label.
+    pub fn phases(&self) -> impl Iterator<Item = (&str, &PhaseStats)> {
+        self.phases.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Merge another meter into this one (e.g. both parties' totals).
+    pub fn merge(&mut self, other: &Meter) {
+        for (k, v) in &other.phases {
+            self.phases.entry(k.clone()).or_default().merge(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_attribute_bytes() {
+        let mut m = Meter::new();
+        m.set_phase("offline");
+        m.on_send(100);
+        m.set_phase("online.s1");
+        m.on_send(10);
+        m.on_recv();
+        m.on_send(5);
+        assert_eq!(m.get("offline").bytes_sent, 100);
+        assert_eq!(m.get("online.s1").bytes_sent, 15);
+        assert_eq!(m.total().bytes_sent, 115);
+        assert_eq!(m.total_prefix("online.").bytes_sent, 15);
+    }
+
+    #[test]
+    fn rounds_count_flights_not_messages() {
+        let mut m = Meter::new();
+        m.on_send(1);
+        m.on_send(1); // same flight
+        assert_eq!(m.total().rounds, 1);
+        m.on_recv();
+        m.on_send(1); // new flight
+        assert_eq!(m.total().rounds, 2);
+        assert_eq!(m.total().msgs_sent, 3);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Meter::new();
+        a.set_phase("p");
+        a.on_send(3);
+        let mut b = Meter::new();
+        b.set_phase("p");
+        b.on_send(4);
+        a.merge(&b);
+        assert_eq!(a.get("p").bytes_sent, 7);
+    }
+}

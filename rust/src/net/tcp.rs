@@ -1,0 +1,81 @@
+//! Real TCP transport for two-process deployments.
+//!
+//! Frames are `u32` little-endian length prefixes followed by the
+//! payload, mirroring what the in-process channel carries so that meters
+//! agree between backends.
+
+use crate::util::error::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// A connected, framed TCP transport.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Listen on `addr` and accept a single peer (party 0 role).
+    pub fn listen(addr: &str) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr)?;
+        let (stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream })
+    }
+
+    /// Connect to a listening peer (party 1 role), retrying briefly so
+    /// the two processes can start in any order.
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let mut last = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    return Ok(TcpTransport { stream });
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+            }
+        }
+        Err(Error::ChannelClosed(format!("connect {addr}: {:?}", last)))
+    }
+
+    /// Send one framed message.
+    pub fn send(&mut self, bytes: &[u8]) -> Result<()> {
+        let len = bytes.len() as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Receive one framed message.
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut lenb = [0u8; 4];
+        self.stream.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn tcp_roundtrip_localhost() {
+        let addr = "127.0.0.1:47391";
+        let server = thread::spawn(move || {
+            let mut t = TcpTransport::listen(addr).unwrap();
+            let m = t.recv().unwrap();
+            t.send(&m).unwrap();
+        });
+        let mut c = TcpTransport::connect(addr).unwrap();
+        c.send(b"hello ppkmeans").unwrap();
+        assert_eq!(c.recv().unwrap(), b"hello ppkmeans");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,186 @@
+//! Base oblivious transfer: Chou-Orlandi "simplest OT" over a classic
+//! MODP Schnorr group (RFC 3526 1536-bit group).
+//!
+//! λ = 128 base OTs seed the IKNP extension ([`super::iknp`]); each
+//! transfers a 16-byte PRG seed. Sender: `A = g^a`; receiver with choice
+//! `c`: `B = g^b·A^c`; keys `k0 = H(B^a)`, `k1 = H((B/A)^a)` for the
+//! sender and `k_c = H(A^b)` for the receiver.
+
+use crate::bigint::modular::{mod_inv, Montgomery};
+use crate::bigint::BigUint;
+use crate::net::Chan;
+use crate::util::prng::Prg;
+use sha2::{Digest, Sha256};
+
+/// RFC 3526 group 5 (1536-bit MODP).
+const MODP_1536_HEX: &str = concat!(
+    "FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD129024E088A67CC74",
+    "020BBEA63B139B22514A08798E3404DDEF9519B3CD3A431B302B0A6DF25F1437",
+    "4FE1356D6D51C245E485B576625E7EC6F44C42E9A637ED6B0BFF5CB6F406B7ED",
+    "EE386BFB5A899FA5AE9F24117C4B1FE649286651ECE45B3DC2007CB8A163BF05",
+    "98DA48361C55D39A69163FA8FD24CF5F83655D23DCA3AD961C62F356208552BB",
+    "9ED529077096966D670C354E4ABC9804F1746C08CA237327FFFFFFFFFFFFFFFF"
+);
+
+/// Parse a hex string into a BigUint.
+pub fn from_hex(s: &str) -> BigUint {
+    let mut acc = BigUint::zero();
+    for ch in s.bytes() {
+        let nib = (ch as char).to_digit(16).expect("hex digit") as u64;
+        acc = acc.shl(4).add(&BigUint::from_u64(nib));
+    }
+    acc
+}
+
+/// The Diffie-Hellman group used by base OTs.
+pub struct OtGroup {
+    pub p: BigUint,
+    pub g: BigUint,
+    mont: Montgomery,
+    /// Exponent width in bits (256-bit exponents give 128-bit security
+    /// against discrete log in a 1536-bit group's large subgroup).
+    exp_bits: usize,
+}
+
+impl OtGroup {
+    /// The standard RFC 3526 1536-bit group, generator 2.
+    pub fn rfc3526() -> OtGroup {
+        let p = from_hex(MODP_1536_HEX);
+        let mont = Montgomery::new(&p);
+        OtGroup { g: BigUint::from_u64(2), mont, p, exp_bits: 256 }
+    }
+
+    fn rand_exp(&self, prg: &mut Prg) -> BigUint {
+        BigUint::from_limbs((0..self.exp_bits / 64).map(|_| prg.next_u64()).collect())
+    }
+
+    fn pow_g(&self, e: &BigUint) -> BigUint {
+        self.mont.pow(&self.g, e)
+    }
+
+    fn pow(&self, b: &BigUint, e: &BigUint) -> BigUint {
+        self.mont.pow(b, e)
+    }
+
+    fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
+        self.mont.mul(a, b)
+    }
+
+    fn inv(&self, a: &BigUint) -> BigUint {
+        mod_inv(a, &self.p).expect("group element invertible")
+    }
+
+    fn elem_bytes(&self) -> usize {
+        (self.p.bits() + 7) / 8
+    }
+
+    fn ser(&self, x: &BigUint) -> Vec<u8> {
+        let mut out = vec![0u8; self.elem_bytes()];
+        let raw = x.to_bytes_be();
+        let off = out.len() - raw.len();
+        out[off..].copy_from_slice(&raw);
+        out
+    }
+}
+
+/// Hash a group element to a 16-byte OT seed.
+fn hash_seed(domain: u64, x: &BigUint) -> [u8; 16] {
+    let mut h = Sha256::new();
+    h.update(domain.to_le_bytes());
+    h.update(x.to_bytes_be());
+    let d = h.finalize();
+    d[..16].try_into().unwrap()
+}
+
+/// Sender side: run `count` base OTs, returning per-OT key pairs
+/// `(k0, k1)` (16-byte seeds).
+pub fn base_ot_send(
+    chan: &mut Chan,
+    group: &OtGroup,
+    count: usize,
+    prg: &mut Prg,
+) -> Vec<([u8; 16], [u8; 16])> {
+    let a = group.rand_exp(prg);
+    let big_a = group.pow_g(&a);
+    chan.send_bytes(&group.ser(&big_a));
+    let a_inv_pow = group.pow(&group.inv(&big_a), &a); // A^{-a}
+    // Receive all B_i in one frame.
+    let payload = chan.recv_bytes();
+    let w = group.elem_bytes();
+    assert_eq!(payload.len(), count * w);
+    let mut keys = Vec::with_capacity(count);
+    for (i, chunk) in payload.chunks_exact(w).enumerate() {
+        let b = BigUint::from_bytes_be(chunk);
+        let ba = group.pow(&b, &a);
+        let k0 = hash_seed(i as u64, &ba);
+        let k1 = hash_seed(i as u64, &group.mul(&ba, &a_inv_pow));
+        keys.push((k0, k1));
+    }
+    keys
+}
+
+/// Receiver side: run base OTs with the given choice bits, returning
+/// `k_{c_i}` per OT.
+pub fn base_ot_recv(
+    chan: &mut Chan,
+    group: &OtGroup,
+    choices: &[bool],
+    prg: &mut Prg,
+) -> Vec<[u8; 16]> {
+    let w = group.elem_bytes();
+    let a_bytes = chan.recv_bytes();
+    assert_eq!(a_bytes.len(), w);
+    let big_a = BigUint::from_bytes_be(&a_bytes);
+    let mut payload = Vec::with_capacity(choices.len() * w);
+    let mut bs = Vec::with_capacity(choices.len());
+    for &c in choices {
+        let b = group.rand_exp(prg);
+        let gb = group.pow_g(&b);
+        let big_b = if c { group.mul(&big_a, &gb) } else { gb };
+        payload.extend_from_slice(&group.ser(&big_b));
+        bs.push(b);
+    }
+    chan.send_bytes(&payload);
+    bs.iter()
+        .enumerate()
+        .map(|(i, b)| hash_seed(i as u64, &group.pow(&big_a, b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+
+    #[test]
+    fn hex_parse() {
+        assert_eq!(from_hex("ff"), BigUint::from_u64(255));
+        assert_eq!(from_hex("100"), BigUint::from_u64(256));
+        let p = OtGroup::rfc3526().p;
+        assert_eq!(p.bits(), 1536);
+    }
+
+    #[test]
+    fn base_ot_correctness() {
+        let choices = vec![true, false, true, true, false];
+        let ch = choices.clone();
+        let ((keys, _), (recv, _)) = run_two_party(
+            move |c| {
+                let g = OtGroup::rfc3526();
+                let mut prg = Prg::new(101);
+                base_ot_send(c, &g, 5, &mut prg)
+            },
+            move |c| {
+                let g = OtGroup::rfc3526();
+                let mut prg = Prg::new(102);
+                base_ot_recv(c, &g, &ch, &mut prg)
+            },
+        );
+        for i in 0..choices.len() {
+            let want = if choices[i] { keys[i].1 } else { keys[i].0 };
+            assert_eq!(recv[i], want, "ot {i}");
+            let other = if choices[i] { keys[i].0 } else { keys[i].1 };
+            assert_ne!(recv[i], other, "ot {i} must not learn the other key");
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! PRG-simulated trusted dealer.
+//!
+//! Both parties hold the same dealer seed and deterministically expand
+//! identical correlated randomness; each keeps only its own share. This
+//! models a trusted third party distributing triples out-of-band (the
+//! paper: "this step ... can be prepared in advance as an offline phase,
+//! using either cryptography-based methods or a trusted third party").
+//! Protocol communication: zero. The [`crate::ss::triples::Ledger`]
+//! still records consumption so benches can price the material as if it
+//! had been produced by the OT generator.
+
+use crate::ring::matrix::Mat;
+use crate::ss::triples::{bit_words, BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::util::prng::Prg;
+
+/// One party's endpoint of the simulated dealer.
+pub struct Dealer {
+    prg: Prg,
+    party: usize,
+    ledger: Ledger,
+}
+
+impl Dealer {
+    /// `seed` must match across the two parties; `party` ∈ {0, 1}.
+    pub fn new(seed: u128, party: usize) -> Self {
+        assert!(party < 2);
+        Dealer { prg: Prg::new(seed ^ 0xD0_1E_55), party, ledger: Ledger::default() }
+    }
+}
+
+impl TripleSource for Dealer {
+    fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        self.ledger.mat_triples += 1;
+        self.ledger.mat_triple_elems += (m * k + k * n + m * n) as u64;
+        // Both parties expand the *same* stream: full U, V, then share-0s.
+        let u = Mat::random(m, k, &mut self.prg);
+        let v = Mat::random(k, n, &mut self.prg);
+        let u0 = Mat::random(m, k, &mut self.prg);
+        let v0 = Mat::random(k, n, &mut self.prg);
+        let z0 = Mat::random(m, n, &mut self.prg);
+        if self.party == 0 {
+            MatTriple { u: u0, v: v0, z: z0 }
+        } else {
+            let z = u.matmul(&v);
+            MatTriple { u: u.sub(&u0), v: v.sub(&v0), z: z.sub(&z0) }
+        }
+    }
+
+    fn vec_triple(&mut self, n: usize) -> VecTriple {
+        self.ledger.vec_triple_lanes += n as u64;
+        let u = self.prg.u64s(n);
+        let v = self.prg.u64s(n);
+        let u0 = self.prg.u64s(n);
+        let v0 = self.prg.u64s(n);
+        let z0 = self.prg.u64s(n);
+        if self.party == 0 {
+            VecTriple { u: u0, v: v0, z: z0 }
+        } else {
+            let u1: Vec<u64> = u.iter().zip(&u0).map(|(a, b)| a.wrapping_sub(*b)).collect();
+            let v1: Vec<u64> = v.iter().zip(&v0).map(|(a, b)| a.wrapping_sub(*b)).collect();
+            let z1: Vec<u64> = (0..n)
+                .map(|i| u[i].wrapping_mul(v[i]).wrapping_sub(z0[i]))
+                .collect();
+            VecTriple { u: u1, v: v1, z: z1 }
+        }
+    }
+
+    fn bit_triple(&mut self, n: usize) -> BitTriple {
+        self.ledger.bit_triple_lanes += n as u64;
+        let w = bit_words(n);
+        let a = self.prg.u64s(w);
+        let b = self.prg.u64s(w);
+        let a0 = self.prg.u64s(w);
+        let b0 = self.prg.u64s(w);
+        let c0 = self.prg.u64s(w);
+        if self.party == 0 {
+            BitTriple { a: a0, b: b0, c: c0, n }
+        } else {
+            let a1: Vec<u64> = a.iter().zip(&a0).map(|(x, y)| x ^ y).collect();
+            let b1: Vec<u64> = b.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
+            let c1: Vec<u64> = (0..w).map(|i| (a[i] & b[i]) ^ c0[i]).collect();
+            BitTriple { a: a1, b: b1, c: c1, n }
+        }
+    }
+
+    fn ledger(&self) -> Ledger {
+        self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_triples_reconstruct_to_products() {
+        let mut d0 = Dealer::new(99, 0);
+        let mut d1 = Dealer::new(99, 1);
+        for (m, k, n) in [(1, 1, 1), (2, 3, 4), (5, 2, 5)] {
+            let t0 = d0.mat_triple(m, k, n);
+            let t1 = d1.mat_triple(m, k, n);
+            let u = t0.u.add(&t1.u);
+            let v = t0.v.add(&t1.v);
+            let z = t0.z.add(&t1.z);
+            assert_eq!(u.matmul(&v), z, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn vec_triples_reconstruct() {
+        let mut d0 = Dealer::new(5, 0);
+        let mut d1 = Dealer::new(5, 1);
+        let t0 = d0.vec_triple(100);
+        let t1 = d1.vec_triple(100);
+        for i in 0..100 {
+            let u = t0.u[i].wrapping_add(t1.u[i]);
+            let v = t0.v[i].wrapping_add(t1.v[i]);
+            let z = t0.z[i].wrapping_add(t1.z[i]);
+            assert_eq!(u.wrapping_mul(v), z, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn bit_triples_reconstruct() {
+        let mut d0 = Dealer::new(6, 0);
+        let mut d1 = Dealer::new(6, 1);
+        let t0 = d0.bit_triple(200);
+        let t1 = d1.bit_triple(200);
+        for i in 0..t0.a.len() {
+            let a = t0.a[i] ^ t1.a[i];
+            let b = t0.b[i] ^ t1.b[i];
+            let c = t0.c[i] ^ t1.c[i];
+            assert_eq!(a & b, c, "word {i}");
+        }
+    }
+
+    #[test]
+    fn shares_look_independent_of_secret() {
+        // Party 0's share stream must not depend on which party asks —
+        // i.e. dealer outputs for party 0 are pure PRG output.
+        let mut a = Dealer::new(7, 0);
+        let mut b = Dealer::new(7, 0);
+        let ta = a.mat_triple(2, 2, 2);
+        let tb = b.mat_triple(2, 2, 2);
+        assert_eq!(ta.u, tb.u);
+        assert_eq!(ta.z, tb.z);
+    }
+
+    #[test]
+    fn ledger_counts_material() {
+        let mut d = Dealer::new(8, 0);
+        d.mat_triple(2, 3, 4);
+        d.vec_triple(10);
+        d.bit_triple(65);
+        let l = d.ledger();
+        assert_eq!(l.mat_triples, 1);
+        assert_eq!(l.mat_triple_elems, (6 + 12 + 8) as u64);
+        assert_eq!(l.vec_triple_lanes, 10);
+        assert_eq!(l.bit_triple_lanes, 65);
+    }
+}

@@ -1,0 +1,300 @@
+//! OT-based Beaver triple generation (Gilboa products over IKNP).
+//!
+//! This is the cryptographic offline phase the paper prices in Tables
+//! 1-2: triples are produced by two-party protocols only (no dealer).
+//! A Gilboa product shares `x·y` where P_a holds `x` and P_b holds `y`:
+//! for every bit `b` of the chooser's input, the sender offers
+//! `(r_b, r_b + 2^b·x)` through OT; the chooser's picks telescope to
+//! `Σ r_b + x·y`. Matrix triples batch whole rows/columns into each OT
+//! message, which is why offline *communication* — not computation — is
+//! the dominant cost (compare the paper's 131 GB offline for n = 10^5).
+
+use super::iknp::{setup_receiver, setup_sender, IknpReceiver, IknpSender};
+use crate::net::Chan;
+use crate::ring::matrix::Mat;
+use crate::ss::triples::{bit_words, BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::util::prng::Prg;
+
+/// Two-party OT-based triple generator; implements [`TripleSource`].
+///
+/// Owns a dedicated channel (offline traffic is metered separately from
+/// the online phase). Both parties must issue identical request
+/// sequences — true by construction since the online protocol is
+/// symmetric.
+pub struct OtTripleGen {
+    chan: Chan,
+    party: usize,
+    prg: Prg,
+    sender: IknpSender,
+    receiver: IknpReceiver,
+    ledger: Ledger,
+}
+
+impl OtTripleGen {
+    /// Run the base-OT setup on `chan` (party index is taken from it).
+    pub fn new(mut chan: Chan, seed: u128) -> OtTripleGen {
+        let party = chan.party;
+        let mut prg = Prg::new(seed ^ (party as u128 + 1) * 0x9E3779B97F4A7C15);
+        chan.set_phase("offline.baseot");
+        // Party 0: sender-setup then receiver-setup; party 1 mirrors.
+        let (sender, receiver) = if party == 0 {
+            let s = setup_sender(&mut chan, &mut prg);
+            let r = setup_receiver(&mut chan, &mut prg);
+            (s, r)
+        } else {
+            let r = setup_receiver(&mut chan, &mut prg);
+            let s = setup_sender(&mut chan, &mut prg);
+            (s, r)
+        };
+        chan.set_phase("offline.triples");
+        OtTripleGen { chan, party, prg, sender, receiver, ledger: Ledger::default() }
+    }
+
+    /// Bytes sent by this party's offline channel so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.chan.meter().total().bytes_sent
+    }
+
+    /// Consume, returning the offline channel's meter.
+    pub fn into_meter(self) -> crate::net::Meter {
+        self.chan.into_meter()
+    }
+
+    /// Gilboa cross product where **this party holds `xs`** (the choice
+    /// side) and the peer holds a vector multiplicand per lane. Returns
+    /// this party's share of `Σ_b 2^b·x_b ⊙ y`: concretely, lane-wise
+    /// `x[i]·y[i]` shares (`vec_len` = 1) or `x[i] · y_vec` row shares.
+    fn gilboa_choose(&mut self, xs: &[u64], vec_len: usize) -> Vec<u64> {
+        let lanes = xs.len();
+        // Choice bits: 64 per lane, little-endian bit order.
+        let mut choices = Vec::with_capacity(lanes * 64);
+        for &x in xs {
+            for b in 0..64 {
+                choices.push((x >> b) & 1 == 1);
+            }
+        }
+        let msg_len = vec_len * 8;
+        let got = self.receiver.recv(&mut self.chan, &choices, msg_len);
+        // Accumulate Σ picks per lane (wrapping), giving our share.
+        let mut out = vec![0u64; lanes * vec_len];
+        for (ot, msg) in got.iter().enumerate() {
+            let lane = ot / 64;
+            for j in 0..vec_len {
+                let v = u64::from_le_bytes(msg[j * 8..(j + 1) * 8].try_into().unwrap());
+                let cell = &mut out[lane * vec_len + j];
+                *cell = cell.wrapping_add(v);
+            }
+        }
+        out
+    }
+
+    /// Gilboa cross product where **this party holds the multiplicand
+    /// vectors `ys`** (one `vec_len`-length vector per lane, flattened).
+    fn gilboa_offer(&mut self, ys: &[u64], lanes: usize, vec_len: usize) -> Vec<u64> {
+        assert_eq!(ys.len(), lanes * vec_len);
+        let msg_len = vec_len * 8;
+        let mut pairs = Vec::with_capacity(lanes * 64);
+        let mut share = vec![0u64; lanes * vec_len];
+        for lane in 0..lanes {
+            let y = &ys[lane * vec_len..(lane + 1) * vec_len];
+            for b in 0..64 {
+                let r: Vec<u64> = self.prg.u64s(vec_len);
+                let mut m0 = Vec::with_capacity(msg_len);
+                let mut m1 = Vec::with_capacity(msg_len);
+                for j in 0..vec_len {
+                    m0.extend_from_slice(&r[j].to_le_bytes());
+                    m1.extend_from_slice(&r[j].wrapping_add(y[j] << b).to_le_bytes());
+                    let cell = &mut share[lane * vec_len + j];
+                    *cell = cell.wrapping_sub(r[j]);
+                }
+                pairs.push((m0, m1));
+            }
+        }
+        self.sender.send(&mut self.chan, &pairs, msg_len);
+        share
+    }
+
+    /// Boolean cross term: share of `a ⊙ b` where this party holds `a`
+    /// (choice side), peer holds `b`. One OT per lane, 1-byte messages.
+    fn bool_cross_choose(&mut self, a: &[u64], n: usize) -> Vec<u64> {
+        let choices: Vec<bool> = (0..n).map(|i| (a[i / 64] >> (i % 64)) & 1 == 1).collect();
+        let got = self.receiver.recv(&mut self.chan, &choices, 1);
+        let mut out = vec![0u64; bit_words(n)];
+        for (i, m) in got.iter().enumerate() {
+            if m[0] & 1 == 1 {
+                out[i / 64] |= 1 << (i % 64);
+            }
+        }
+        out
+    }
+
+    fn bool_cross_offer(&mut self, b: &[u64], n: usize) -> Vec<u64> {
+        let mut share = vec![0u64; bit_words(n)];
+        let mut pairs = Vec::with_capacity(n);
+        for i in 0..n {
+            let r = (self.prg.next_u64() & 1) as u8;
+            let bv = ((b[i / 64] >> (i % 64)) & 1) as u8;
+            pairs.push((vec![r], vec![r ^ bv]));
+            if r == 1 {
+                share[i / 64] |= 1 << (i % 64);
+            }
+        }
+        self.sender.send(&mut self.chan, &pairs, 1);
+        share
+    }
+}
+
+impl TripleSource for OtTripleGen {
+    fn vec_triple(&mut self, n: usize) -> VecTriple {
+        self.ledger.vec_triple_lanes += n as u64;
+        let u: Vec<u64> = self.prg.u64s(n);
+        let v: Vec<u64> = self.prg.u64s(n);
+        // z = u·v needs cross terms u0·v1 and u1·v0.
+        // Direction 1: party0 chooses with u0, party1 offers v1.
+        let c1 = if self.party == 0 {
+            self.gilboa_choose(&u, 1)
+        } else {
+            self.gilboa_offer(&v, n, 1)
+        };
+        // Direction 2: party1 chooses with u1, party0 offers v0.
+        let c2 = if self.party == 1 {
+            self.gilboa_choose(&u, 1)
+        } else {
+            self.gilboa_offer(&v, n, 1)
+        };
+        let z: Vec<u64> = (0..n)
+            .map(|i| u[i].wrapping_mul(v[i]).wrapping_add(c1[i]).wrapping_add(c2[i]))
+            .collect();
+        VecTriple { u, v, z }
+    }
+
+    fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        self.ledger.mat_triples += 1;
+        self.ledger.mat_triple_elems += (m * k + k * n + m * n) as u64;
+        let u = Mat::random(m, k, &mut self.prg);
+        let v = Mat::random(k, n, &mut self.prg);
+        // Z = U·V = U0V0 + U0V1 + U1V0 + U1V1; local term plus two cross
+        // outer-product sums over the inner dimension.
+        let mut z = u.matmul(&v);
+        // Cross A: party0's U picks, party1's V offers (per inner index t:
+        // lanes = m entries of U[:,t], each multiplying row V[t,:]).
+        for t in 0..k {
+            let share = if self.party == 0 {
+                let col: Vec<u64> = (0..m).map(|i| u.at(i, t)).collect();
+                self.gilboa_choose(&col, n)
+            } else {
+                let row: Vec<u64> = v.row(t).to_vec();
+                // Same row offered against each of the m chooser lanes.
+                let ys: Vec<u64> = (0..m).flat_map(|_| row.clone()).collect();
+                self.gilboa_offer(&ys, m, n)
+            };
+            for i in 0..m {
+                for j in 0..n {
+                    let cell = &mut z.data[i * n + j];
+                    *cell = cell.wrapping_add(share[i * n + j]);
+                }
+            }
+        }
+        // Cross B: roles swapped.
+        for t in 0..k {
+            let share = if self.party == 1 {
+                let col: Vec<u64> = (0..m).map(|i| u.at(i, t)).collect();
+                self.gilboa_choose(&col, n)
+            } else {
+                let row: Vec<u64> = v.row(t).to_vec();
+                let ys: Vec<u64> = (0..m).flat_map(|_| row.clone()).collect();
+                self.gilboa_offer(&ys, m, n)
+            };
+            for i in 0..m {
+                for j in 0..n {
+                    let cell = &mut z.data[i * n + j];
+                    *cell = cell.wrapping_add(share[i * n + j]);
+                }
+            }
+        }
+        MatTriple { u, v, z }
+    }
+
+    fn bit_triple(&mut self, n: usize) -> BitTriple {
+        self.ledger.bit_triple_lanes += n as u64;
+        let w = bit_words(n);
+        let a: Vec<u64> = self.prg.u64s(w);
+        let b: Vec<u64> = self.prg.u64s(w);
+        // c = a&b ⊕ cross(a0,b1) ⊕ cross(a1,b0)
+        let c1 = if self.party == 0 {
+            self.bool_cross_choose(&a, n)
+        } else {
+            self.bool_cross_offer(&b, n)
+        };
+        let c2 = if self.party == 1 {
+            self.bool_cross_choose(&a, n)
+        } else {
+            self.bool_cross_offer(&b, n)
+        };
+        let c: Vec<u64> = (0..w).map(|i| (a[i] & b[i]) ^ c1[i] ^ c2[i]).collect();
+        BitTriple { a, b, c, n }
+    }
+
+    fn ledger(&self) -> Ledger {
+        self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::duplex_pair;
+    use std::thread;
+
+    fn run_gen<R0: Send + 'static, R1: Send + 'static>(
+        f0: impl FnOnce(&mut OtTripleGen) -> R0 + Send + 'static,
+        f1: impl FnOnce(&mut OtTripleGen) -> R1 + Send + 'static,
+    ) -> (R0, R1) {
+        let (c0, c1) = duplex_pair();
+        let h0 = thread::spawn(move || {
+            let mut g = OtTripleGen::new(c0, 777);
+            f0(&mut g)
+        });
+        let h1 = thread::spawn(move || {
+            let mut g = OtTripleGen::new(c1, 777);
+            f1(&mut g)
+        });
+        (h0.join().unwrap(), h1.join().unwrap())
+    }
+
+    #[test]
+    fn ot_vec_triples_are_valid() {
+        let (t0, t1) = run_gen(|g| g.vec_triple(20), |g| g.vec_triple(20));
+        for i in 0..20 {
+            let u = t0.u[i].wrapping_add(t1.u[i]);
+            let v = t0.v[i].wrapping_add(t1.v[i]);
+            let z = t0.z[i].wrapping_add(t1.z[i]);
+            assert_eq!(u.wrapping_mul(v), z, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn ot_mat_triples_are_valid() {
+        let (t0, t1) = run_gen(|g| g.mat_triple(3, 2, 4), |g| g.mat_triple(3, 2, 4));
+        let u = t0.u.add(&t1.u);
+        let v = t0.v.add(&t1.v);
+        let z = t0.z.add(&t1.z);
+        assert_eq!(u.matmul(&v), z);
+    }
+
+    #[test]
+    fn ot_bit_triples_are_valid() {
+        let (t0, t1) = run_gen(|g| g.bit_triple(100), |g| g.bit_triple(100));
+        for i in 0..t0.a.len() {
+            let a = t0.a[i] ^ t1.a[i];
+            let b = t0.b[i] ^ t1.b[i];
+            let c = t0.c[i] ^ t1.c[i];
+            let mask = if i == t0.a.len() - 1 {
+                crate::ss::triples::last_word_mask(100)
+            } else {
+                u64::MAX
+            };
+            assert_eq!((a & b) & mask, c & mask, "word {i}");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The data-independent offline phase (paper §4.1).
+//!
+//! Produces the correlated randomness (Beaver triples) the online phase
+//! consumes. Two generators implement [`crate::ss::triples::TripleSource`]:
+//!
+//! * [`dealer::Dealer`] — a PRG-simulated trusted third party: both
+//!   parties expand the same dealer seed, zero protocol communication.
+//!   The paper explicitly allows this deployment ("using either
+//!   cryptography-based methods or a trusted third party").
+//! * [`gilboa::OtTripleGen`] — the cryptographic two-party path the
+//!   paper benchmarks: Naor-Pinkas-style base OTs ([`baseot`]) bootstrap
+//!   an IKNP OT extension ([`iknp`]), and Gilboa's product-sharing
+//!   ([`gilboa`]) turns l OTs into one multiplication triple. This is
+//!   what makes the offline phase expensive — exactly the cost the
+//!   online/offline split hides from the data-dependent path.
+//!
+//! [`store::TripleStore`] pre-computes material for a known workload and
+//! serves it FIFO, modelling a real deployment where the offline phase
+//! runs overnight.
+
+pub mod baseot;
+pub mod dealer;
+pub mod gilboa;
+pub mod iknp;
+pub mod pricing;
+pub mod store;
+pub mod timed;

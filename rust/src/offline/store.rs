@@ -1,0 +1,239 @@
+//! Pre-computed triple store: the deployable form of the offline phase.
+//!
+//! A [`Demand`] describes the material a known workload will consume
+//! (K-means shapes are static given n, d, k, t — see
+//! [`crate::kmeans::secure`]). [`TripleStore::prefill`] draws everything
+//! from an underlying generator ahead of time; the online phase then pops
+//! FIFO with zero generation cost, which is exactly the paper's
+//! online/offline split. Requests that miss the pre-computed stock fall
+//! through to the inner source and are counted (a correctly-sized demand
+//! keeps `misses == 0`; asserted in tests and benches).
+
+use crate::ss::triples::{BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use std::collections::{HashMap, VecDeque};
+
+/// Offline material demand for one protocol run.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Demand {
+    /// (m, k, n) → how many matrix triples of that shape.
+    pub mats: Vec<((usize, usize, usize), usize)>,
+    /// Elementwise triple lanes, in request-sized chunks.
+    pub vec_chunks: Vec<usize>,
+    /// Boolean triple lanes, in request-sized chunks.
+    pub bit_chunks: Vec<usize>,
+}
+
+impl Demand {
+    pub fn mat(&mut self, m: usize, k: usize, n: usize) {
+        if let Some(e) = self.mats.iter_mut().find(|(s, _)| *s == (m, k, n)) {
+            e.1 += 1;
+        } else {
+            self.mats.push(((m, k, n), 1));
+        }
+    }
+
+    pub fn vec_lanes(&mut self, n: usize) {
+        self.vec_chunks.push(n);
+    }
+
+    pub fn bit_lanes(&mut self, n: usize) {
+        self.bit_chunks.push(n);
+    }
+
+    /// Repeat this demand `times` times (e.g. per-iteration demand × t).
+    pub fn repeat(&self, times: usize) -> Demand {
+        let mut out = Demand::default();
+        for _ in 0..times {
+            for ((m, k, n), c) in &self.mats {
+                for _ in 0..*c {
+                    out.mat(*m, *k, *n);
+                }
+            }
+            out.vec_chunks.extend_from_slice(&self.vec_chunks);
+            out.bit_chunks.extend_from_slice(&self.bit_chunks);
+        }
+        out
+    }
+
+    /// Demand accumulated between two cumulative snapshots
+    /// (`before` must be a prefix of `self` in request order).
+    pub fn delta(&self, before: &Demand) -> Demand {
+        let mut out = Demand::default();
+        for ((m, k, n), count) in &self.mats {
+            let prev = before
+                .mats
+                .iter()
+                .find(|(s, _)| s == &(*m, *k, *n))
+                .map(|(_, c)| *c)
+                .unwrap_or(0);
+            for _ in prev..*count {
+                out.mat(*m, *k, *n);
+            }
+        }
+        out.vec_chunks = self.vec_chunks[before.vec_chunks.len()..].to_vec();
+        out.bit_chunks = self.bit_chunks[before.bit_chunks.len()..].to_vec();
+        out
+    }
+
+    /// Merge another demand into this one.
+    pub fn extend(&mut self, other: &Demand) {
+        for ((m, k, n), c) in &other.mats {
+            for _ in 0..*c {
+                self.mat(*m, *k, *n);
+            }
+        }
+        self.vec_chunks.extend_from_slice(&other.vec_chunks);
+        self.bit_chunks.extend_from_slice(&other.bit_chunks);
+    }
+}
+
+/// FIFO store over a fallback generator.
+pub struct TripleStore<S: TripleSource> {
+    inner: S,
+    mats: HashMap<(usize, usize, usize), VecDeque<MatTriple>>,
+    vecs: VecDeque<VecTriple>,
+    bits: VecDeque<BitTriple>,
+    /// Requests that had to fall through to the inner source online.
+    pub misses: u64,
+    /// Every request seen (hit or miss) — replaying a protocol once with
+    /// an empty store records the exact demand to prefill next time.
+    pub demand: Demand,
+}
+
+impl<S: TripleSource> TripleStore<S> {
+    pub fn new(inner: S) -> Self {
+        TripleStore {
+            inner,
+            mats: HashMap::new(),
+            vecs: VecDeque::new(),
+            bits: VecDeque::new(),
+            misses: 0,
+            demand: Demand::default(),
+        }
+    }
+
+    /// Generate all demanded material now (the offline phase proper).
+    pub fn prefill(&mut self, demand: &Demand) {
+        for ((m, k, n), count) in &demand.mats {
+            for _ in 0..*count {
+                let t = self.inner.mat_triple(*m, *k, *n);
+                self.mats.entry((*m, *k, *n)).or_default().push_back(t);
+            }
+        }
+        for &n in &demand.vec_chunks {
+            let t = self.inner.vec_triple(n);
+            self.vecs.push_back(t);
+        }
+        for &n in &demand.bit_chunks {
+            let t = self.inner.bit_triple(n);
+            self.bits.push_back(t);
+        }
+    }
+
+    /// Access the inner source (e.g. to read its offline meter).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: TripleSource> TripleSource for TripleStore<S> {
+    fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        self.demand.mat(m, k, n);
+        if let Some(q) = self.mats.get_mut(&(m, k, n)) {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+        }
+        self.misses += 1;
+        self.inner.mat_triple(m, k, n)
+    }
+
+    fn vec_triple(&mut self, n: usize) -> VecTriple {
+        self.demand.vec_lanes(n);
+        // Chunks must be drawn in the same sizes they were demanded.
+        if let Some(front) = self.vecs.front() {
+            if front.u.len() == n {
+                return self.vecs.pop_front().unwrap();
+            }
+        }
+        self.misses += 1;
+        self.inner.vec_triple(n)
+    }
+
+    fn bit_triple(&mut self, n: usize) -> BitTriple {
+        self.demand.bit_lanes(n);
+        if let Some(front) = self.bits.front() {
+            if front.n == n {
+                return self.bits.pop_front().unwrap();
+            }
+        }
+        self.misses += 1;
+        self.inner.bit_triple(n)
+    }
+
+    fn ledger(&self) -> Ledger {
+        self.inner.ledger()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::dealer::Dealer;
+
+    #[test]
+    fn prefilled_requests_hit_the_store() {
+        let mut demand = Demand::default();
+        demand.mat(2, 3, 4);
+        demand.mat(2, 3, 4);
+        demand.vec_lanes(10);
+        demand.bit_lanes(64);
+        let mut store = TripleStore::new(Dealer::new(1, 0));
+        store.prefill(&demand);
+        let _ = store.mat_triple(2, 3, 4);
+        let _ = store.mat_triple(2, 3, 4);
+        let _ = store.vec_triple(10);
+        let _ = store.bit_triple(64);
+        assert_eq!(store.misses, 0);
+        // One more of each → misses.
+        let _ = store.mat_triple(2, 3, 4);
+        assert_eq!(store.misses, 1);
+    }
+
+    #[test]
+    fn store_matches_dealer_consistency_across_parties() {
+        // Store on one side, bare dealer on the other: triples must still
+        // reconstruct because prefill preserves draw order.
+        let mut demand = Demand::default();
+        demand.vec_lanes(5);
+        let mut s0 = TripleStore::new(Dealer::new(3, 0));
+        s0.prefill(&demand);
+        let mut d1 = Dealer::new(3, 1);
+        let t0 = s0.vec_triple(5);
+        let t1 = d1.vec_triple(5);
+        for i in 0..5 {
+            let u = t0.u[i].wrapping_add(t1.u[i]);
+            let v = t0.v[i].wrapping_add(t1.v[i]);
+            let z = t0.z[i].wrapping_add(t1.z[i]);
+            assert_eq!(u.wrapping_mul(v), z);
+        }
+    }
+
+    #[test]
+    fn demand_repeat_and_extend() {
+        let mut d = Demand::default();
+        d.mat(1, 2, 3);
+        d.vec_lanes(7);
+        let r = d.repeat(3);
+        assert_eq!(r.mats[0].1, 3);
+        assert_eq!(r.vec_chunks.len(), 3);
+        let mut e = Demand::default();
+        e.extend(&r);
+        e.extend(&d);
+        assert_eq!(e.mats[0].1, 4);
+    }
+}

@@ -1,0 +1,69 @@
+//! Timing wrapper around a triple source.
+//!
+//! When a protocol runs "integrated" (no prefill), triple generation
+//! happens inline; wrapping the generator in [`TimedSource`] separates
+//! the data-independent generation time from the data-dependent online
+//! time in a single pass — the accounting behind the online/offline
+//! split in every bench.
+
+use crate::ss::triples::{BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use std::time::Instant;
+
+/// Accumulates wall-clock seconds spent inside the inner source.
+pub struct TimedSource<S: TripleSource> {
+    inner: S,
+    /// Cumulative generation time in seconds.
+    pub secs: f64,
+}
+
+impl<S: TripleSource> TimedSource<S> {
+    pub fn new(inner: S) -> Self {
+        TimedSource { inner, secs: 0.0 }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: TripleSource> TripleSource for TimedSource<S> {
+    fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        let t0 = Instant::now();
+        let t = self.inner.mat_triple(m, k, n);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn vec_triple(&mut self, n: usize) -> VecTriple {
+        let t0 = Instant::now();
+        let t = self.inner.vec_triple(n);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn bit_triple(&mut self, n: usize) -> BitTriple {
+        let t0 = Instant::now();
+        let t = self.inner.bit_triple(n);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn ledger(&self) -> Ledger {
+        self.inner.ledger()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::dealer::Dealer;
+
+    #[test]
+    fn records_time_and_delegates() {
+        let mut ts = TimedSource::new(Dealer::new(1, 0));
+        let _ = ts.mat_triple(8, 8, 8);
+        let _ = ts.vec_triple(100);
+        assert!(ts.secs > 0.0);
+        assert_eq!(ts.ledger().mat_triples, 1);
+    }
+}

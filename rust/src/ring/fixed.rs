@@ -1,0 +1,92 @@
+//! Fixed-point embedding of reals into Z_{2^64}.
+//!
+//! The paper (§5.1) uses l = 64-bit ring elements with 20 fractional
+//! bits. A real `x` is encoded as `round(x * 2^20)` interpreted as a
+//! two's-complement 64-bit integer; products of two encoded values carry
+//! scale `2^40` and must be truncated by [`FRAC_BITS`] (see
+//! [`crate::ss::trunc`] for the secret-shared version).
+
+use super::Rw;
+
+/// Number of fractional bits (paper: 20 of 64).
+pub const FRAC_BITS: u32 = 20;
+
+/// The scale factor 2^FRAC_BITS as f64.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Encode a real into the ring (two's complement fixed point).
+#[inline]
+pub fn encode_f64(x: f64) -> Rw {
+    (x * SCALE).round() as i64 as u64
+}
+
+/// Decode a ring element back to a real.
+#[inline]
+pub fn decode_f64(w: Rw) -> f64 {
+    (w as i64) as f64 / SCALE
+}
+
+/// Encode a slice of reals.
+pub fn encode_slice(xs: &[f64]) -> Vec<Rw> {
+    xs.iter().map(|&x| encode_f64(x)).collect()
+}
+
+/// Decode a slice of ring elements.
+pub fn decode_slice(ws: &[Rw]) -> Vec<f64> {
+    ws.iter().map(|&w| decode_f64(w)).collect()
+}
+
+/// Encode an integer (no fractional scaling) into the ring.
+#[inline]
+pub fn encode_int(x: i64) -> Rw {
+    x as u64
+}
+
+/// Plaintext truncation by FRAC_BITS: arithmetic shift right preserving
+/// the sign of the embedded value. Matches what the secure truncation
+/// protocol computes (up to its ±1 ulp probabilistic error).
+#[inline]
+pub fn truncate(w: Rw) -> Rw {
+    ((w as i64) >> FRAC_BITS) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_positive_negative() {
+        for &x in &[0.0, 1.0, -1.0, 3.141592, -123.456, 1e4, -1e4] {
+            let w = encode_f64(x);
+            assert!((decode_f64(w) - x).abs() < 1.0 / SCALE, "x={x}");
+        }
+    }
+
+    #[test]
+    fn additive_homomorphism() {
+        let a = encode_f64(1.25);
+        let b = encode_f64(-3.5);
+        assert!((decode_f64(a.wrapping_add(b)) - (1.25 - 3.5)).abs() < 2.0 / SCALE);
+    }
+
+    #[test]
+    fn product_needs_one_truncation() {
+        let a = encode_f64(2.5);
+        let b = encode_f64(-1.5);
+        let prod = truncate(a.wrapping_mul(b));
+        assert!((decode_f64(prod) - (2.5 * -1.5)).abs() < 4.0 / SCALE);
+    }
+
+    #[test]
+    fn truncate_matches_float_division_for_negatives() {
+        let w = encode_f64(-7.75);
+        let t = truncate(w.wrapping_mul(encode_f64(1.0)));
+        assert!((decode_f64(t) - -7.75).abs() < 4.0 / SCALE);
+    }
+
+    #[test]
+    fn encode_int_is_unscaled() {
+        assert_eq!(encode_int(-1), u64::MAX);
+        assert_eq!(encode_int(5), 5);
+    }
+}

@@ -1,0 +1,305 @@
+//! Dense row-major matrices over Z_{2^64}.
+//!
+//! This is the workhorse container for secret shares and plaintext
+//! fixed-point data. Matmul is blocked for cache locality; the runtime
+//! module can alternatively dispatch large products to the AOT-compiled
+//! XLA ring-matmul artifact (see [`crate::runtime::tiled`]).
+
+use super::Rw;
+use crate::ring::fixed;
+use crate::util::prng::Prg;
+
+/// Row-major dense matrix over Z_{2^64}.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Rw>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Matrix from an explicit row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Rw>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build elementwise from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> Rw) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Uniformly random matrix from a PRG (used for shares and masks).
+    pub fn random(rows: usize, cols: usize, prg: &mut Prg) -> Self {
+        let mut data = vec![0u64; rows * cols];
+        prg.fill_u64s(&mut data);
+        Mat { rows, cols, data }
+    }
+
+    /// Encode a real-valued row-major buffer with fixed-point scaling.
+    pub fn encode(rows: usize, cols: usize, xs: &[f64]) -> Self {
+        assert_eq!(xs.len(), rows * cols);
+        Mat { rows, cols, data: fixed::encode_slice(xs) }
+    }
+
+    /// Decode back to reals.
+    pub fn decode(&self) -> Vec<f64> {
+        fixed::decode_slice(&self.data)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> Rw {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: Rw) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[Rw] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [Rw] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Transpose into a new matrix.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Wrapping elementwise sum.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a.wrapping_add(*b)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Wrapping elementwise difference.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a.wrapping_sub(*b)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Wrapping elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a.wrapping_mul(*b)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Multiply every element by a ring scalar.
+    pub fn scale(&self, s: Rw) -> Mat {
+        let data = self.data.iter().map(|a| a.wrapping_mul(s)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Wrapping negation.
+    pub fn neg(&self) -> Mat {
+        let data = self.data.iter().map(|a| a.wrapping_neg()).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Apply a function to every element.
+    pub fn map(&self, f: impl Fn(Rw) -> Rw) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Blocked wrapping matmul `self (m×k) · other (k×n) -> (m×n)`.
+    ///
+    /// i-k-j loop order with the `other` row kept hot; this is the native
+    /// fallback, the PJRT path handles large shapes (see runtime::tiled).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0u64; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * kk..(i + 1) * kk];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for k in 0..kk {
+                let a = arow[k];
+                if a == 0 {
+                    continue; // free sparsity skip in the plaintext-side product
+                }
+                let brow = &other.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    orow[j] = orow[j].wrapping_add(a.wrapping_mul(brow[j]));
+                }
+            }
+        }
+        Mat { rows: m, cols: n, data: out }
+    }
+
+    /// Column sums as a 1×cols matrix (used for `1_{1×n}·C`).
+    pub fn col_sums(&self) -> Mat {
+        let mut out = vec![0u64; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for c in 0..self.cols {
+                out[c] = out[c].wrapping_add(row[c]);
+            }
+        }
+        Mat { rows: 1, cols: self.cols, data: out }
+    }
+
+    /// Stack rows of `self` above rows of `other` (same cols).
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Concatenate columns of `self` with columns of `other` (same rows).
+    pub fn hstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Slice a block of columns `[c0, c1)`.
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Slice a block of rows `[r0, r1)`.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (Mat, Mat) {
+        let a = Mat::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let b = Mat::from_vec(3, 2, vec![7, 8, 9, 10, 11, 12]);
+        (a, b)
+    }
+
+    #[test]
+    fn matmul_matches_hand_computed() {
+        let (a, b) = small();
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58, 64, 139, 154]);
+    }
+
+    #[test]
+    fn matmul_wraps_mod_2_64() {
+        let a = Mat::from_vec(1, 1, vec![u64::MAX]);
+        let b = Mat::from_vec(1, 1, vec![3]);
+        assert_eq!(a.matmul(&b).data, vec![u64::MAX - 2]); // -3 mod 2^64
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let (a, _) = small();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn add_sub_neg() {
+        let (a, _) = small();
+        let z = a.add(&a.neg());
+        assert!(z.data.iter().all(|&x| x == 0));
+        assert_eq!(a.sub(&a).data, vec![0; 6]);
+    }
+
+    #[test]
+    fn stack_and_slice_roundtrip() {
+        let (a, _) = small();
+        let v = a.vstack(&a);
+        assert_eq!(v.rows_slice(2, 4), a);
+        let h = a.hstack(&a);
+        assert_eq!(h.cols_slice(3, 6), a);
+    }
+
+    #[test]
+    fn col_sums_matches_manual() {
+        let (a, _) = small();
+        assert_eq!(a.col_sums().data, vec![5, 7, 9]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let xs = vec![0.5, -1.25, 3.0, 0.0];
+        let m = Mat::encode(2, 2, &xs);
+        let back = m.decode();
+        for (x, y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn random_shares_reconstruct() {
+        let mut prg = Prg::new(5);
+        let x = Mat::from_vec(2, 2, vec![10, 20, 30, 40]);
+        let s0 = Mat::random(2, 2, &mut prg);
+        let s1 = x.sub(&s0);
+        assert_eq!(s0.add(&s1), x);
+    }
+}

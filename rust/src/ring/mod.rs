@@ -1,0 +1,70 @@
+//! The ring `Z_{2^64}` and fixed-point arithmetic over it.
+//!
+//! All secret-shared values live in `Z_{2^64}` represented as `u64` with
+//! wrapping arithmetic (the paper uses l = 64, §5.1). Real numbers are
+//! embedded with a two's-complement fixed-point encoding with
+//! [`fixed::FRAC_BITS`] fractional bits (the paper uses 20 of 64 bits).
+
+pub mod fixed;
+pub mod matrix;
+
+/// Ring word: an element of Z_{2^64}.
+pub type Rw = u64;
+
+/// Wrapping dot product of two equal-length slices in Z_{2^64}.
+#[inline]
+pub fn dot(a: &[Rw], b: &[Rw]) -> Rw {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u64;
+    for i in 0..a.len() {
+        acc = acc.wrapping_add(a[i].wrapping_mul(b[i]));
+    }
+    acc
+}
+
+/// Elementwise wrapping add: `a += b`.
+#[inline]
+pub fn add_assign(a: &mut [Rw], b: &[Rw]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] = a[i].wrapping_add(b[i]);
+    }
+}
+
+/// Elementwise wrapping sub: `a -= b`.
+#[inline]
+pub fn sub_assign(a: &mut [Rw], b: &[Rw]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] = a[i].wrapping_sub(b[i]);
+    }
+}
+
+/// Elementwise wrapping product into a new vector.
+pub fn mul_elem(a: &[Rw], b: &[Rw]) -> Vec<Rw> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x.wrapping_mul(*y)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_wraps() {
+        let a = [u64::MAX, 2];
+        let b = [2, 3];
+        // MAX*2 = 2^65-2 = -2 mod 2^64; -2 + 6 = 4
+        assert_eq!(dot(&a, &b), 4);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut a = vec![1u64, u64::MAX, 7];
+        let b = vec![5u64, 1, u64::MAX];
+        let orig = a.clone();
+        add_assign(&mut a, &b);
+        sub_assign(&mut a, &b);
+        assert_eq!(a, orig);
+    }
+}

@@ -1,0 +1,87 @@
+//! Artifact manifest parsing and one-time PJRT compilation.
+
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact with its (baked) shapes.
+pub struct Entry {
+    pub name: String,
+    /// Kind tag from the manifest: `ring_matmul`, `esd`, `kmeans_step`.
+    pub kind: String,
+    /// Element type: `i64` or `f32`.
+    pub dtype: String,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// All compiled artifacts plus the PJRT client that owns them.
+pub struct ArtifactStore {
+    pub client: xla::PjRtClient,
+    entries: HashMap<String, Entry>,
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    s.split(',').map(|x| x.parse().expect("shape int")).collect()
+}
+
+impl ArtifactStore {
+    /// Load and compile every entry of `dir/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest.display()
+            ))
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                return Err(Error::Runtime(format!("malformed manifest line: {line}")));
+            }
+            let (name, file, kind, dtype, shapes, out_shape) =
+                (cols[0], cols[1], cols[2], cols[3], cols[4], cols[5]);
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(file).to_str().expect("utf8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            entries.insert(
+                name.to_string(),
+                Entry {
+                    name: name.to_string(),
+                    kind: kind.to_string(),
+                    dtype: dtype.to_string(),
+                    in_shapes: shapes.split(';').map(parse_shape).collect(),
+                    out_shape: parse_shape(out_shape),
+                    exe,
+                },
+            );
+        }
+        Ok(ArtifactStore { client, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Entries of a given kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Entry> {
+        let mut v: Vec<&Entry> = self.entries.values().filter(|e| e.kind == kind).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+}

@@ -1,0 +1,129 @@
+//! Global matmul dispatch: PJRT artifacts when loaded and profitable,
+//! native blocked matmul otherwise.
+//!
+//! The PJRT client is not `Send` (it holds `Rc` internals), so a single
+//! **service thread** owns the [`ArtifactStore`]; party threads submit
+//! requests over a channel. This also serializes device access, which
+//! the CPU plugin requires anyway. Small shapes stay native — per-call
+//! dispatch overhead dominates below [`DISPATCH_THRESHOLD`].
+
+use super::artifact::ArtifactStore;
+use super::tiled;
+use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
+use once_cell::sync::OnceCell;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+enum Request {
+    Matmul(Mat, Mat, Sender<Result<Mat>>),
+    Esd(Mat, Mat, Sender<Result<Mat>>),
+    KmeansStep(Vec<f32>, Vec<f32>, usize, usize, usize, Sender<Result<(Vec<f32>, Vec<f32>)>>),
+}
+
+static SERVICE: OnceCell<Mutex<Sender<Request>>> = OnceCell::new();
+
+/// Minimum multiply-accumulate count before PJRT dispatch pays off.
+pub const DISPATCH_THRESHOLD: usize = 1 << 22;
+
+/// Load artifacts from `dir` and start the service thread (idempotent).
+pub fn init(dir: &Path) -> Result<()> {
+    if SERVICE.get().is_some() {
+        return Ok(());
+    }
+    // Probe the manifest on the caller thread for a crisp error.
+    if !dir.join("manifest.tsv").exists() {
+        return Err(Error::Runtime(format!(
+            "no artifacts at {} — run `make artifacts`",
+            dir.display()
+        )));
+    }
+    let dir: PathBuf = dir.to_path_buf();
+    let (tx, rx) = channel::<Request>();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    std::thread::Builder::new()
+        .name("pjrt-service".into())
+        .spawn(move || {
+            let store = match ArtifactStore::load(&dir) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Matmul(a, b, reply) => {
+                        let _ = reply.send(tiled::ring_matmul(&store, &a, &b));
+                    }
+                    Request::Esd(x, mu, reply) => {
+                        let _ = reply.send(tiled::esd(&store, &x, &mu));
+                    }
+                    Request::KmeansStep(x, mu, n, d, k, reply) => {
+                        let name = format!("kmeans_step_{n}x{d}x{k}");
+                        let r = match store.get(&name) {
+                            Some(e) => super::executor::execute_f32(e, &[&x, &mu]).map(|out| {
+                                let mut it = out.into_iter();
+                                (it.next().unwrap_or_default(), it.next().unwrap_or_default())
+                            }),
+                            None => Err(Error::Runtime(format!("no artifact {name}"))),
+                        };
+                        let _ = reply.send(r);
+                    }
+                }
+            }
+        })
+        .expect("spawn pjrt service");
+    ready_rx.recv().map_err(|_| Error::Runtime("pjrt service died".into()))??;
+    let _ = SERVICE.set(Mutex::new(tx));
+    Ok(())
+}
+
+/// Whether the PJRT service is running.
+pub fn available() -> bool {
+    SERVICE.get().is_some()
+}
+
+fn submit<T>(make: impl FnOnce(Sender<Result<T>>) -> Request) -> Option<T> {
+    let svc = SERVICE.get()?;
+    let (tx, rx) = channel();
+    svc.lock().ok()?.send(make(tx)).ok()?;
+    rx.recv().ok()?.ok()
+}
+
+/// Ring matmul with automatic backend choice.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let work = a.rows * a.cols * b.cols;
+    if work >= DISPATCH_THRESHOLD && available() {
+        if let Some(out) = submit(|tx| Request::Matmul(a.clone(), b.clone(), tx)) {
+            return out;
+        }
+    }
+    a.matmul(b)
+}
+
+/// Fused D' tile via the Pallas ESD artifact (`None` → caller falls back).
+pub fn esd(x: &Mat, mu: &Mat) -> Option<Mat> {
+    if !available() {
+        return None;
+    }
+    submit(|tx| Request::Esd(x.clone(), mu.clone(), tx))
+}
+
+/// One plaintext Lloyd step through the `kmeans_step` artifact.
+pub fn kmeans_step(
+    x: &[f32],
+    mu: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+) -> Option<(Vec<f32>, Vec<f32>)> {
+    if !available() {
+        return None;
+    }
+    submit(|tx| Request::KmeansStep(x.to_vec(), mu.to_vec(), n, d, k, tx))
+}

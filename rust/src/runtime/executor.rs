@@ -1,0 +1,55 @@
+//! Typed execution of compiled artifacts.
+
+use super::artifact::Entry;
+use crate::util::error::{Error, Result};
+
+fn shape_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&x| x as i64).collect()
+}
+
+/// Execute an i64 entry: `inputs[i]` is the row-major buffer for the
+/// baked input shape `entry.in_shapes[i]`. Returns the flattened outputs
+/// (one buffer per tuple element).
+pub fn execute_i64(entry: &Entry, inputs: &[&[i64]]) -> Result<Vec<Vec<i64>>> {
+    if entry.dtype != "i64" {
+        return Err(Error::Runtime(format!("{} is {} not i64", entry.name, entry.dtype)));
+    }
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (buf, shape) in inputs.iter().zip(&entry.in_shapes) {
+        let expected: usize = shape.iter().product();
+        if buf.len() != expected {
+            return Err(Error::Runtime(format!(
+                "{}: input len {} != shape {:?}",
+                entry.name,
+                buf.len(),
+                shape
+            )));
+        }
+        lits.push(xla::Literal::vec1(buf).reshape(&shape_i64(shape))?);
+    }
+    let result = entry.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        out.push(p.to_vec::<i64>()?);
+    }
+    Ok(out)
+}
+
+/// Execute an f32 entry.
+pub fn execute_f32(entry: &Entry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    if entry.dtype != "f32" {
+        return Err(Error::Runtime(format!("{} is {} not f32", entry.name, entry.dtype)));
+    }
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (buf, shape) in inputs.iter().zip(&entry.in_shapes) {
+        lits.push(xla::Literal::vec1(buf).reshape(&shape_i64(shape))?);
+    }
+    let result = entry.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        out.push(p.to_vec::<f32>()?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust hot path.
+//!
+//! `make artifacts` lowers the L2 graphs (which call the L1 Pallas
+//! kernels) to HLO text; [`artifact::ArtifactStore`] parses
+//! `artifacts/manifest.tsv`, compiles every entry once on the PJRT CPU
+//! client, and [`executor`]/[`tiled`] dispatch party-local linear
+//! algebra (ring matmuls, the fused ESD tile, plaintext Lloyd steps)
+//! onto the compiled executables — Python never runs at protocol time.
+
+pub mod artifact;
+pub mod dispatch;
+pub mod executor;
+pub mod tiled;
+
+pub use artifact::{ArtifactStore, Entry};

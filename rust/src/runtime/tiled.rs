@@ -1,0 +1,134 @@
+//! Tiled dispatch: arbitrary-shape ring matmuls onto the fixed-shape
+//! AOT artifacts.
+//!
+//! HLO bakes shapes, so `make artifacts` exports canonical square tiles
+//! (128³, 256³). This module pads the operands with zeros (exact in
+//! Z_2^64), walks the block grid calling the compiled executable per
+//! (i, s, j) tile, and accumulates partial products — the same schedule
+//! the Pallas kernel's `BlockSpec` expresses on-device, driven from Rust.
+
+use super::artifact::{ArtifactStore, Entry};
+use super::executor::execute_i64;
+use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
+
+/// Pick the largest exported tile not bigger than the problem.
+fn pick_tile<'a>(store: &'a ArtifactStore, m: usize, t: usize, n: usize) -> Option<&'a Entry> {
+    let mut best: Option<&Entry> = None;
+    for e in store.by_kind("ring_matmul") {
+        let b = e.in_shapes[0][0];
+        let fits_problem = b <= m.next_power_of_two().max(128)
+            && b <= t.next_power_of_two().max(128)
+            && b <= n.next_power_of_two().max(128);
+        if fits_problem && best.map(|x| x.in_shapes[0][0] < b).unwrap_or(true) {
+            best = Some(e);
+        }
+    }
+    best.or_else(|| store.by_kind("ring_matmul").first().copied())
+}
+
+/// Copy a padded block of `src` (rows0..rows0+b, cols0..cols0+b) into a
+/// b×b i64 buffer.
+fn block_of(src: &Mat, r0: usize, c0: usize, b: usize) -> Vec<i64> {
+    let mut out = vec![0i64; b * b];
+    let rmax = (r0 + b).min(src.rows);
+    let cmax = (c0 + b).min(src.cols);
+    for r in r0..rmax {
+        let srow = src.row(r);
+        let orow = &mut out[(r - r0) * b..];
+        for c in c0..cmax {
+            orow[c - c0] = srow[c] as i64;
+        }
+    }
+    out
+}
+
+/// `a (m×t) · b (t×n) mod 2^64` through the PJRT ring-matmul artifact.
+pub fn ring_matmul(store: &ArtifactStore, a: &Mat, bm: &Mat) -> Result<Mat> {
+    if a.cols != bm.rows {
+        return Err(Error::Shape(format!(
+            "tiled matmul {}x{} · {}x{}",
+            a.rows, a.cols, bm.rows, bm.cols
+        )));
+    }
+    let (m, t, n) = (a.rows, a.cols, bm.cols);
+    let entry =
+        pick_tile(store, m, t, n).ok_or_else(|| Error::Runtime("no ring_matmul artifact".into()))?;
+    let blk = entry.in_shapes[0][0];
+    let (mb, tb, nb) = (m.div_ceil(blk), t.div_ceil(blk), n.div_ceil(blk));
+    let mut out = Mat::zeros(m, n);
+    for i in 0..mb {
+        for j in 0..nb {
+            // Accumulate over the inner dimension.
+            let mut acc = vec![0u64; blk * blk];
+            for s in 0..tb {
+                let ab = block_of(a, i * blk, s * blk, blk);
+                let bb = block_of(bm, s * blk, j * blk, blk);
+                let prod = execute_i64(entry, &[&ab, &bb])?;
+                for (dst, &src) in acc.iter_mut().zip(&prod[0]) {
+                    *dst = dst.wrapping_add(src as u64);
+                }
+            }
+            // Write back the unpadded region.
+            let rmax = ((i + 1) * blk).min(m);
+            let cmax = ((j + 1) * blk).min(n);
+            for r in i * blk..rmax {
+                for c in j * blk..cmax {
+                    out.set(r, c, acc[(r - i * blk) * blk + (c - j * blk)]);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Fused distance tile `D' = U − 2·X·μᵀ` via the Pallas ESD artifact:
+/// pads d→128 columns and k→16 clusters with zeros (exact), walks
+/// 256-row blocks. Returns n×k at scale 2f.
+pub fn esd(store: &ArtifactStore, x: &Mat, mu: &Mat) -> Result<Mat> {
+    let entry = store
+        .by_kind("esd")
+        .first()
+        .copied()
+        .ok_or_else(|| Error::Runtime("no esd artifact".into()))?;
+    let bn = entry.in_shapes[0][0]; // 256
+    let dp = entry.in_shapes[0][1]; // 128
+    let kp = entry.in_shapes[1][0]; // 16
+    let (n, d) = (x.rows, x.cols);
+    let k = mu.rows;
+    if d > dp || k > kp {
+        return Err(Error::Runtime(format!(
+            "esd artifact supports d ≤ {dp}, k ≤ {kp} (got {d}, {k})"
+        )));
+    }
+    // Pad μ once.
+    let mut mu_pad = vec![0i64; kp * dp];
+    for j in 0..k {
+        for l in 0..d {
+            mu_pad[j * dp + l] = mu.at(j, l) as i64;
+        }
+    }
+    let mut out = Mat::zeros(n, k);
+    let blocks = n.div_ceil(bn);
+    for bi in 0..blocks {
+        let mut xb = vec![0i64; bn * dp];
+        let rmax = ((bi + 1) * bn).min(n);
+        for r in bi * bn..rmax {
+            for l in 0..d {
+                xb[(r - bi * bn) * dp + l] = x.at(r, l) as i64;
+            }
+        }
+        let res = execute_i64(entry, &[&xb, &mu_pad])?;
+        for r in bi * bn..rmax {
+            for j in 0..k {
+                out.set(r, j, res[0][(r - bi * bn) * kp + j] as u64);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised by rust/tests/runtime_pjrt.rs (needs built artifacts).
+}

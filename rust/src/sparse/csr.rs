@@ -1,0 +1,206 @@
+//! Compressed sparse row matrices over Z_{2^64}.
+
+use crate::ring::matrix::Mat;
+use crate::ring::fixed::encode_f64;
+
+/// CSR matrix: ring-element values at (row, col) positions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array, length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column indices of stored entries.
+    pub indices: Vec<usize>,
+    /// Stored (nonzero) values.
+    pub values: Vec<u64>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, dropping zeros.
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = vec![];
+        let mut values = vec![];
+        indptr.push(0);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let v = m.at(r, c);
+                if v != 0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    /// Build from real-valued row-major data with fixed-point encoding.
+    pub fn encode_dense(rows: usize, cols: usize, xs: &[f64]) -> Csr {
+        assert_eq!(xs.len(), rows * cols);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = vec![];
+        let mut values = vec![];
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let x = xs[r * cols + c];
+                if x != 0.0 {
+                    let v = encode_f64(x);
+                    if v != 0 {
+                        indices.push(c);
+                        values.push(v);
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for idx in self.indptr[r]..self.indptr[r + 1] {
+                m.set(r, self.indices[idx], self.values[idx]);
+            }
+        }
+        m
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of entries that are zero.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Iterate the nonzeros of one row as (col, value).
+    pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (usize, u64)> + '_ {
+        (self.indptr[r]..self.indptr[r + 1]).map(move |i| (self.indices[i], self.values[i]))
+    }
+
+    /// Transpose into a new CSR (CSC view materialized).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols];
+        for &c in &self.indices {
+            counts[c] += 1;
+        }
+        let mut indptr = Vec::with_capacity(self.cols + 1);
+        indptr.push(0);
+        for c in 0..self.cols {
+            indptr.push(indptr[c] + counts[c]);
+        }
+        let mut cursor = indptr[..self.cols].to_vec();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0u64; self.nnz()];
+        for r in 0..self.rows {
+            for (c, v) in self.row_iter(r) {
+                indices[cursor[c]] = r;
+                values[cursor[c]] = v;
+                cursor[c] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Plaintext sparse · dense product (wrapping), `self (n×d) · m (d×k)`.
+    pub fn matmul_dense(&self, m: &Mat) -> Mat {
+        assert_eq!(self.cols, m.rows, "spmm shape");
+        let mut out = Mat::zeros(self.rows, m.cols);
+        for r in 0..self.rows {
+            let orow = out.row_mut(r);
+            for (j, v) in self.row_iter(r) {
+                let brow = m.row(j);
+                for c in 0..m.cols {
+                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed product `self^T (d×n) · m (n×k)` without materializing
+    /// the transpose.
+    pub fn t_matmul_dense(&self, m: &Mat) -> Mat {
+        assert_eq!(self.rows, m.rows, "spmm^T shape");
+        let mut out = Mat::zeros(self.cols, m.cols);
+        for r in 0..self.rows {
+            let brow = m.row(r);
+            for (j, v) in self.row_iter(r) {
+                let orow = out.row_mut(j);
+                for c in 0..m.cols {
+                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prg;
+
+    fn sample() -> Mat {
+        Mat::from_vec(3, 4, vec![0, 2, 0, 0, 1, 0, 0, 3, 0, 0, 0, 0])
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let s = Csr::from_dense(&m);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.to_dense(), m);
+        assert!((s.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut prg = Prg::new(4);
+        let mut dense = Mat::random(6, 5, &mut prg);
+        // zero ~60% of entries
+        for v in dense.data.iter_mut() {
+            if prg.next_f64() < 0.6 {
+                *v = 0;
+            }
+        }
+        let s = Csr::from_dense(&dense);
+        let b = Mat::random(5, 3, &mut prg);
+        assert_eq!(s.matmul_dense(&b), dense.matmul(&b));
+    }
+
+    #[test]
+    fn transposed_spmm() {
+        let mut prg = Prg::new(5);
+        let mut dense = Mat::random(4, 6, &mut prg);
+        for v in dense.data.iter_mut() {
+            if prg.next_f64() < 0.5 {
+                *v = 0;
+            }
+        }
+        let s = Csr::from_dense(&dense);
+        let b = Mat::random(4, 2, &mut prg);
+        assert_eq!(s.t_matmul_dense(&b), dense.transpose().matmul(&b));
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = sample();
+        let s = Csr::from_dense(&m);
+        assert_eq!(s.transpose().to_dense(), m.transpose());
+        assert_eq!(s.transpose().transpose(), s);
+    }
+
+    #[test]
+    fn encode_dense_drops_zeros() {
+        let s = Csr::encode_dense(2, 2, &[0.0, 1.5, 0.0, -2.0]);
+        assert_eq!(s.nnz(), 2);
+    }
+}

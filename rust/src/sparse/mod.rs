@@ -1,0 +1,11 @@
+//! Sparsity-aware machinery (paper §4.3).
+//!
+//! Secret sharing destroys sparsity — shares of 0 are uniform — so the
+//! paper routes sparse matrix products through HE instead: the sparse
+//! holder computes on ciphertexts of the *small dense* operand, skipping
+//! zeros entirely, and HE2SS converts the result back into the SS world.
+
+pub mod csr;
+pub mod protocol2;
+
+pub use csr::Csr;

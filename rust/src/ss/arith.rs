@@ -1,0 +1,127 @@
+//! Arithmetic gates on shares: SADD (local) and elementwise SMUL.
+//!
+//! SADD / linear combinations are communication-free. SMUL uses an
+//! elementwise Beaver triple and a single symmetric reveal round for all
+//! lanes at once — this is the vectorization the paper leans on.
+
+use super::Ctx;
+use crate::ring::matrix::Mat;
+
+/// Local addition of shares: `⟨x+y⟩ = ⟨x⟩ + ⟨y⟩`.
+pub fn sadd(x: &Mat, y: &Mat) -> Mat {
+    x.add(y)
+}
+
+/// Local affine map `⟨αx + y + β⟩` — the public constant β is added by
+/// party 0 only (adding it at both parties would double it).
+pub fn affine(party: usize, alpha: u64, x: &Mat, y: &Mat, beta: u64) -> Mat {
+    let mut out = x.scale(alpha).add(y);
+    if party == 0 {
+        for v in out.data.iter_mut() {
+            *v = v.wrapping_add(beta);
+        }
+    }
+    out
+}
+
+/// Add a public constant matrix to a share (party 0 adds, party 1 no-op).
+pub fn add_public(party: usize, x: &Mat, c: &Mat) -> Mat {
+    if party == 0 {
+        x.add(c)
+    } else {
+        x.clone()
+    }
+}
+
+/// Elementwise secure multiplication `⟨x⊙y⟩` of two shared matrices.
+///
+/// One triple lane per element, one symmetric round revealing
+/// `E = x−u, F = y−v`.
+pub fn smul_elem(ctx: &mut Ctx, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.shape(), y.shape(), "smul_elem shape mismatch");
+    let n = x.len();
+    let t = ctx.ts.vec_triple(n);
+    // E = x - u, F = y - v (local), then reveal both in one flight.
+    let mut ef = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        ef.push(x.data[i].wrapping_sub(t.u[i]));
+    }
+    for i in 0..n {
+        ef.push(y.data[i].wrapping_sub(t.v[i]));
+    }
+    let theirs = ctx.chan.exchange_u64s(&ef);
+    let party = ctx.party();
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..n {
+        let e = ef[i].wrapping_add(theirs[i]);
+        let f = ef[n + i].wrapping_add(theirs[n + i]);
+        // xy = (e+u)(f+v) = ef + e·v + u·f + z
+        let mut c = e.wrapping_mul(t.v[i]).wrapping_add(t.u[i].wrapping_mul(f)).wrapping_add(t.z[i]);
+        if party == 0 {
+            c = c.wrapping_add(e.wrapping_mul(f));
+        }
+        out.data[i] = c;
+    }
+    out
+}
+
+/// Elementwise square `⟨x⊙x⟩` (same cost as one SMUL; kept separate for
+/// readability at call sites such as `|μ_j|²`).
+pub fn ssquare_elem(ctx: &mut Ctx, x: &Mat) -> Mat {
+    smul_elem(ctx, x, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::share::{reconstruct, split};
+    use crate::util::prng::Prg;
+
+    /// Run an elementwise product under two-party simulation.
+    fn run_smul(x: Vec<u64>, y: Vec<u64>) -> Vec<u64> {
+        let n = x.len();
+        let mut prg = Prg::new(77);
+        let xm = Mat::from_vec(1, n, x);
+        let ym = Mat::from_vec(1, n, y);
+        let (x0, x1) = split(&xm, &mut prg);
+        let (y0, y1) = split(&ym, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(123, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = smul_elem(&mut ctx, &x0, &y0);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(123, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = smul_elem(&mut ctx, &x1, &y1);
+                reconstruct(c, &z)
+            },
+        );
+        r.data
+    }
+
+    #[test]
+    fn smul_matches_plaintext_with_wrap() {
+        let x = vec![3, u64::MAX, 1 << 40, 0];
+        let y = vec![5, 2, 1 << 30, 99];
+        let want: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a.wrapping_mul(*b)).collect();
+        assert_eq!(run_smul(x, y), want);
+    }
+
+    #[test]
+    fn affine_adds_constant_once() {
+        let x0 = Mat::from_vec(1, 2, vec![1, 2]);
+        let x1 = Mat::from_vec(1, 2, vec![10, 20]);
+        let y0 = Mat::zeros(1, 2);
+        let y1 = Mat::zeros(1, 2);
+        let r0 = affine(0, 3, &x0, &y0, 100);
+        let r1 = affine(1, 3, &x1, &y1, 100);
+        let rec = r0.add(&r1);
+        // 3*(x0+x1) + 100
+        assert_eq!(rec.data, vec![3 * 11 + 100, 3 * 22 + 100]);
+    }
+}

@@ -1,0 +1,445 @@
+//! Boolean (XOR) shares and the bit-sliced secure adder.
+//!
+//! B-shares (paper §3.1) are additive shares in Z_2. We keep them
+//! **bit-sliced**: an `n`-lane boolean vector is packed 64 lanes per
+//! `u64` word, so a secure AND processes 64 lanes per word operation and
+//! a whole gate layer for all lanes costs one communication round.
+//!
+//! A2B runs a Kogge-Stone parallel-prefix adder over the two parties'
+//! *local* arithmetic-share bit planes: `x = ⟨x⟩₀ + ⟨x⟩₁ mod 2^64`, where
+//! party p inputs the bits of its own share as trivially-XOR-shared
+//! planes. Depth is log2(64) = 6 AND rounds regardless of lane count —
+//! the comparison backbone of the paper's `F_min^k`.
+
+use super::triples::{bit_words, last_word_mask};
+use super::Ctx;
+use crate::ring::matrix::Mat;
+
+/// An XOR-shared, bit-packed boolean vector of `n` lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoolShare {
+    pub n: usize,
+    pub words: Vec<u64>,
+}
+
+impl BoolShare {
+    pub fn zeros(n: usize) -> Self {
+        BoolShare { n, words: vec![0; bit_words(n)] }
+    }
+
+    /// Wrap locally-held plaintext bits as this party's trivial share
+    /// (the peer holds all-zero words).
+    pub fn from_plain_words(n: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), bit_words(n));
+        let mut s = BoolShare { n, words };
+        s.mask_tail();
+        s
+    }
+
+    /// Local XOR (SADD in Z_2).
+    pub fn xor(&self, other: &BoolShare) -> BoolShare {
+        assert_eq!(self.n, other.n);
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a ^ b).collect();
+        BoolShare { n: self.n, words }
+    }
+
+    /// Local NOT: party 0 flips, party 1 keeps (x ^ 1 on exactly one share).
+    pub fn not(&self, party: usize) -> BoolShare {
+        if party == 0 {
+            let mut out = BoolShare { n: self.n, words: self.words.iter().map(|w| !w).collect() };
+            out.mask_tail();
+            out
+        } else {
+            self.clone()
+        }
+    }
+
+    /// Read lane `i` of this share.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        if v {
+            self.words[i / 64] |= 1 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+    }
+
+    fn mask_tail(&mut self) {
+        if let Some(last) = self.words.last_mut() {
+            *last &= last_word_mask(self.n);
+        }
+    }
+
+    /// Concatenate lanes of several shares (for batching AND layers).
+    pub fn concat(parts: &[&BoolShare]) -> BoolShare {
+        let n: usize = parts.iter().map(|p| p.n).sum();
+        let mut out = BoolShare::zeros(n);
+        let mut off = 0;
+        for p in parts {
+            for i in 0..p.n {
+                out.set(off + i, p.get(i));
+            }
+            off += p.n;
+        }
+        out
+    }
+
+    /// Split lanes back into `sizes.len()` shares.
+    pub fn split_lanes(&self, sizes: &[usize]) -> Vec<BoolShare> {
+        assert_eq!(sizes.iter().sum::<usize>(), self.n);
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for &sz in sizes {
+            let mut s = BoolShare::zeros(sz);
+            for i in 0..sz {
+                s.set(i, self.get(off + i));
+            }
+            off += sz;
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Secure AND of two XOR-shared vectors (one bit triple per lane, one
+/// symmetric reveal round for all lanes).
+pub fn and(ctx: &mut Ctx, x: &BoolShare, y: &BoolShare) -> BoolShare {
+    assert_eq!(x.n, y.n);
+    let t = ctx.ts.bit_triple(x.n);
+    let w = x.words.len();
+    // d = x ^ a, e = y ^ b, revealed in one flight.
+    let mut de = Vec::with_capacity(2 * w);
+    for i in 0..w {
+        de.push(x.words[i] ^ t.a[i]);
+    }
+    for i in 0..w {
+        de.push(y.words[i] ^ t.b[i]);
+    }
+    let theirs = ctx.chan.exchange_u64s(&de);
+    let party = ctx.party();
+    let mut out = BoolShare::zeros(x.n);
+    for i in 0..w {
+        let d = de[i] ^ theirs[i];
+        let e = de[w + i] ^ theirs[w + i];
+        // z = [party0] d&e ^ d&b ^ e&a ^ c
+        let mut z = (d & t.b[i]) ^ (e & t.a[i]) ^ t.c[i];
+        if party == 0 {
+            z ^= d & e;
+        }
+        out.words[i] = z;
+    }
+    out.mask_tail();
+    out
+}
+
+/// Batched AND: pairs of equal-length vectors, one round for all pairs.
+///
+/// Word-aligned batching: each vector's packed words are concatenated
+/// directly (padding lanes up to the word boundary), so the hot path is
+/// pure `u64` XOR/AND streams — no per-bit repacking. The tail-padding
+/// lanes consume a few extra triple bits and carry garbage that is
+/// masked off on output; the round count is identical (1).
+pub fn and_many(ctx: &mut Ctx, pairs: &[(&BoolShare, &BoolShare)]) -> Vec<BoolShare> {
+    if pairs.is_empty() {
+        return vec![];
+    }
+    let word_counts: Vec<usize> = pairs.iter().map(|(x, _)| x.words.len()).collect();
+    let total_words: usize = word_counts.iter().sum();
+    let t = ctx.ts.bit_triple(total_words * 64);
+    // d = x ^ a, e = y ^ b revealed in one flight (word streams).
+    let mut de = Vec::with_capacity(2 * total_words);
+    let mut off = 0;
+    for (x, y) in pairs {
+        debug_assert_eq!(x.n, y.n);
+        for w in &x.words {
+            de.push(w ^ t.a[off]);
+            off += 1;
+        }
+    }
+    let mut off2 = 0;
+    for (_, y) in pairs {
+        for w in &y.words {
+            de.push(w ^ t.b[off2]);
+            off2 += 1;
+        }
+    }
+    let theirs = ctx.chan.exchange_u64s(&de);
+    let party = ctx.party();
+    let mut out = Vec::with_capacity(pairs.len());
+    let mut base = 0;
+    for (i, (x, _)) in pairs.iter().enumerate() {
+        let wc = word_counts[i];
+        let mut z = BoolShare::zeros(x.n);
+        for w in 0..wc {
+            let d = de[base + w] ^ theirs[base + w];
+            let e = de[total_words + base + w] ^ theirs[total_words + base + w];
+            let mut zw = (d & t.b[base + w]) ^ (e & t.a[base + w]) ^ t.c[base + w];
+            if party == 0 {
+                zw ^= d & e;
+            }
+            z.words[w] = zw;
+        }
+        z.mask_tail();
+        out.push(z);
+        base += wc;
+    }
+    out
+}
+
+/// Bit-plane decomposition of this party's *local* arithmetic share:
+/// plane `j` holds bit `j` of every lane, packed. These planes are the
+/// party's private adder inputs (trivially XOR-shared).
+pub fn local_bit_planes(share: &Mat) -> Vec<BoolShare> {
+    let n = share.len();
+    let words = bit_words(n);
+    let mut planes = vec![vec![0u64; words]; 64];
+    for (i, &v) in share.data.iter().enumerate() {
+        let (w, b) = (i / 64, i % 64);
+        for j in 0..64 {
+            planes[j][w] |= ((v >> j) & 1) << b;
+        }
+    }
+    planes.into_iter().map(|ws| BoolShare::from_plain_words(n, ws)).collect()
+}
+
+/// Secure 64-bit Kogge-Stone addition of the two parties' private bit
+/// planes. `x_planes` is this party's local planes when `party == 0`,
+/// otherwise the zero trivial share — callers use [`a2b`]/[`msb`].
+///
+/// Returns all 64 XOR-shared sum bit planes. `upto` limits computation to
+/// sum bits `0..=upto` (pass 63 for full A2B; the MSB-only path also
+/// needs 63 but saves nothing structural — kept for clarity).
+fn kogge_stone(ctx: &mut Ctx, x: &[BoolShare], y: &[BoolShare], upto: usize) -> Vec<BoolShare> {
+    assert_eq!(x.len(), 64);
+    assert_eq!(y.len(), 64);
+    let l = upto + 1;
+    // Layer 0: p = x ^ y (local), g = x & y (one round, batched).
+    let p: Vec<BoolShare> = (0..l).map(|j| x[j].xor(&y[j])).collect();
+    let g_pairs: Vec<(&BoolShare, &BoolShare)> = (0..l).map(|j| (&x[j], &y[j])).collect();
+    let mut g = and_many(ctx, &g_pairs);
+    let mut pp = p.clone();
+
+    let mut s = 1;
+    while s < l {
+        // G'[j] = G[j] ^ (P[j] & G[j-s])   for j >= s
+        // P'[j] = P[j] & P[j-s]            for j >= s (skipped at last level
+        //                                   since no further use)
+        let last_level = s * 2 >= l;
+        let mut pairs: Vec<(&BoolShare, &BoolShare)> = Vec::new();
+        for j in s..l {
+            pairs.push((&pp[j], &g[j - s]));
+        }
+        let np = if last_level { 0 } else { l - s };
+        for j in s..l {
+            if !last_level {
+                pairs.push((&pp[j], &pp[j - s]));
+            }
+        }
+        let _ = np;
+        let results = and_many(ctx, &pairs);
+        let gk = l - s;
+        for j in s..l {
+            g[j] = g[j].xor(&results[j - s]);
+        }
+        if !last_level {
+            for j in s..l {
+                pp[j] = results[gk + (j - s)].clone();
+            }
+        }
+        s *= 2;
+    }
+
+    // sum[j] = p[j] ^ carry_in[j], carry_in[j] = G_prefix[j-1], carry_in[0]=0.
+    let mut sum = Vec::with_capacity(l);
+    for j in 0..l {
+        if j == 0 {
+            sum.push(p[0].clone());
+        } else {
+            sum.push(p[j].xor(&g[j - 1]));
+        }
+    }
+    sum
+}
+
+/// A2B: convert an arithmetic share matrix to 64 XOR-shared bit planes
+/// of the underlying value (lane i = element i of the flattened matrix).
+pub fn a2b(ctx: &mut Ctx, share: &Mat) -> Vec<BoolShare> {
+    let n = share.len();
+    let mine = local_bit_planes(share);
+    let zero: Vec<BoolShare> = (0..64).map(|_| BoolShare::zeros(n)).collect();
+    let (x, y) = if ctx.party() == 0 { (&mine, &zero) } else { (&zero, &mine) };
+    kogge_stone(ctx, x, y, 63)
+}
+
+/// MSB: XOR-shared sign-bit plane of the shared value — the comparison
+/// primitive (`x < y ⇔ MSB(x−y) = 1` for |x−y| < 2^63).
+pub fn msb(ctx: &mut Ctx, share: &Mat) -> BoolShare {
+    let n = share.len();
+    let mine = local_bit_planes(share);
+    let zero: Vec<BoolShare> = (0..64).map(|_| BoolShare::zeros(n)).collect();
+    let (x, y) = if ctx.party() == 0 { (&mine, &zero) } else { (&zero, &mine) };
+    let sum = kogge_stone(ctx, x, y, 63);
+    sum[63].clone()
+}
+
+/// B2A: lift an XOR-shared bit vector to arithmetic shares in Z_{2^64}.
+///
+/// With `b = b₀ ⊕ b₁ = b₀ + b₁ − 2·b₀·b₁`, the cross term is one Beaver
+/// multiplication of the two parties' private bit values (one round).
+pub fn b2a(ctx: &mut Ctx, bits: &BoolShare) -> Mat {
+    let n = bits.n;
+    // Arithmetic value of my local bit word, one lane per bit.
+    let mut mine = Mat::zeros(1, n);
+    for i in 0..n {
+        mine.data[i] = bits.get(i) as u64;
+    }
+    let zero = Mat::zeros(1, n);
+    let (x, y) = if ctx.party() == 0 { (&mine, &zero) } else { (&zero, &mine) };
+    let prod = super::arith::smul_elem(ctx, x, y);
+    // ⟨b⟩ = ⟨b0⟩ + ⟨b1⟩ − 2⟨b0·b1⟩ ; b0/b1 trivially shared as `mine`.
+    let mut out = Mat::zeros(1, n);
+    for i in 0..n {
+        out.data[i] = mine.data[i].wrapping_sub(prod.data[i].wrapping_mul(2));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::share::split;
+    use crate::util::prng::Prg;
+
+    fn reveal_bits(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
+        let theirs = c.exchange_u64s(&s.words);
+        (0..s.n).map(|i| ((s.words[i / 64] ^ theirs[i / 64]) >> (i % 64)) & 1 == 1).collect()
+    }
+
+    #[test]
+    fn and_matches_plaintext() {
+        let n = 130;
+        let mut prg = Prg::new(3);
+        let xw: Vec<u64> = (0..bit_words(n)).map(|_| prg.next_u64()).collect();
+        let yw: Vec<u64> = (0..bit_words(n)).map(|_| prg.next_u64()).collect();
+        let x = BoolShare::from_plain_words(n, xw.clone());
+        let y = BoolShare::from_plain_words(n, yw.clone());
+        // Party 0 holds x and zero-share of y; party 1 holds y.
+        let x0 = x.clone();
+        let y1 = y.clone();
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(44, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = and(&mut ctx, &x0, &BoolShare::zeros(n));
+                reveal_bits(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(44, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = and(&mut ctx, &BoolShare::zeros(n), &y1);
+                reveal_bits(c, &z)
+            },
+        );
+        for i in 0..n {
+            let want = x.get(i) & y.get(i);
+            assert_eq!(got[i], want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn a2b_recovers_value_bits() {
+        let vals = vec![0u64, 1, 2, 5, u64::MAX, 1 << 63, 0x0123_4567_89AB_CDEF];
+        let n = vals.len();
+        let x = Mat::from_vec(1, n, vals.clone());
+        let mut prg = Prg::new(8);
+        let (x0, x1) = split(&x, &mut prg);
+        let ((planes, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(45, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let ps = a2b(&mut ctx, &x0);
+                ps.iter().map(|p| reveal_bits(c, p)).collect::<Vec<_>>()
+            },
+            move |c| {
+                let mut ts = Dealer::new(45, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let ps = a2b(&mut ctx, &x1);
+                ps.iter().map(|p| reveal_bits(c, p)).collect::<Vec<_>>()
+            },
+        );
+        for (i, v) in vals.iter().enumerate() {
+            for j in 0..64 {
+                assert_eq!(planes[j][i], (v >> j) & 1 == 1, "val {i} bit {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn msb_is_sign_bit() {
+        let vals = vec![5u64, (-5i64) as u64, 0, (-1i64) as u64, i64::MAX as u64, 1 << 63];
+        let want: Vec<bool> = vals.iter().map(|&v| (v >> 63) & 1 == 1).collect();
+        let x = Mat::from_vec(1, vals.len(), vals);
+        let mut prg = Prg::new(2);
+        let (x0, x1) = split(&x, &mut prg);
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(46, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let m = msb(&mut ctx, &x0);
+                reveal_bits(c, &m)
+            },
+            move |c| {
+                let mut ts = Dealer::new(46, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let m = msb(&mut ctx, &x1);
+                reveal_bits(c, &m)
+            },
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn b2a_lifts_bits() {
+        // XOR-shared random bit vector.
+        let n = 70;
+        let mut prg = Prg::new(6);
+        let w0: Vec<u64> = (0..bit_words(n)).map(|_| prg.next_u64()).collect();
+        let w1: Vec<u64> = (0..bit_words(n)).map(|_| prg.next_u64()).collect();
+        let b0 = BoolShare::from_plain_words(n, w0);
+        let b1 = BoolShare::from_plain_words(n, w1);
+        let want: Vec<u64> = (0..n).map(|i| (b0.get(i) ^ b1.get(i)) as u64).collect();
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(47, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let a = b2a(&mut ctx, &b0);
+                crate::ss::share::reconstruct(c, &a).data
+            },
+            move |c| {
+                let mut ts = Dealer::new(47, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let a = b2a(&mut ctx, &b1);
+                crate::ss::share::reconstruct(c, &a).data
+            },
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let a = BoolShare::from_plain_words(3, vec![0b101]);
+        let b = BoolShare::from_plain_words(2, vec![0b11]);
+        let c = BoolShare::concat(&[&a, &b]);
+        assert_eq!(c.n, 5);
+        let parts = c.split_lanes(&[3, 2]);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+}

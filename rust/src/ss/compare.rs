@@ -1,0 +1,86 @@
+//! Secure comparison: CMP = MSB ∘ subtraction (paper §3.1).
+//!
+//! `lt(x, y)` returns XOR shares of `[x < y]` per lane, valid whenever
+//! `|x − y| < 2^63` — always true for fixed-point distances. One call
+//! handles an entire matrix of lanes; this is the CMP inside the CMPM
+//! comparison modules of `F_min^k` (Figure 1 of the paper).
+
+use super::boolean::{msb, BoolShare};
+use super::Ctx;
+use crate::ring::matrix::Mat;
+
+/// XOR-shared `[x < y]` per lane.
+pub fn lt(ctx: &mut Ctx, x: &Mat, y: &Mat) -> BoolShare {
+    assert_eq!(x.shape(), y.shape());
+    let diff = x.sub(y);
+    msb(ctx, &diff)
+}
+
+/// XOR-shared `[x > y]` per lane.
+pub fn gt(ctx: &mut Ctx, x: &Mat, y: &Mat) -> BoolShare {
+    lt(ctx, y, x)
+}
+
+/// XOR-shared `[x < c]` against a public constant vector.
+pub fn lt_public(ctx: &mut Ctx, x: &Mat, c: &Mat) -> BoolShare {
+    // x < c  ⇔  MSB(x − c); subtract c on party 0's share only.
+    let diff = if ctx.party() == 0 { x.sub(c) } else { x.clone() };
+    msb(ctx, &diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ring::fixed::encode_f64;
+    use crate::ss::share::split;
+    use crate::util::prng::Prg;
+
+    fn reveal(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
+        let theirs = c.exchange_u64s(&s.words);
+        (0..s.n).map(|i| ((s.words[i / 64] ^ theirs[i / 64]) >> (i % 64)) & 1 == 1).collect()
+    }
+
+    fn run_lt(xs: Vec<u64>, ys: Vec<u64>) -> Vec<bool> {
+        let n = xs.len();
+        let mut prg = Prg::new(21);
+        let (x0, x1) = split(&Mat::from_vec(1, n, xs), &mut prg);
+        let (y0, y1) = split(&Mat::from_vec(1, n, ys), &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(50, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let b = lt(&mut ctx, &x0, &y0);
+                reveal(c, &b)
+            },
+            move |c| {
+                let mut ts = Dealer::new(50, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let b = lt(&mut ctx, &x1, &y1);
+                reveal(c, &b)
+            },
+        );
+        r
+    }
+
+    #[test]
+    fn lt_on_fixed_point_values() {
+        let xs: Vec<f64> = vec![1.5, -2.0, 0.0, 3.25, -1.0];
+        let ys: Vec<f64> = vec![2.0, -3.0, 0.0, 3.25, 5.5];
+        let want: Vec<bool> = xs.iter().zip(&ys).map(|(a, b)| a < b).collect();
+        let got = run_lt(
+            xs.iter().map(|&v| encode_f64(v)).collect(),
+            ys.iter().map(|&v| encode_f64(v)).collect(),
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn lt_on_integers_near_boundaries() {
+        let xs = vec![0u64, 1, (1u64 << 62), 100];
+        let ys = vec![1u64, 0, (1u64 << 62) + 1, 100];
+        let want = vec![true, false, true, false];
+        assert_eq!(run_lt(xs, ys), want);
+    }
+}

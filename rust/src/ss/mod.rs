@@ -1,0 +1,51 @@
+//! Additive secret sharing over Z_{2^64} and the MPC gate set.
+//!
+//! Implements the paper's §3.1 primitive set — SADD (local), SMUL /
+//! matrix multiplication with Beaver triples, A2B / MSB / CMP via a
+//! bit-sliced Kogge-Stone adder, B2A, MUX — plus SecureML-style
+//! truncation ([`trunc`]) and secure division ([`divide`]) used by the
+//! centroid-update step.
+//!
+//! All protocols are written against [`Ctx`], which bundles the party's
+//! channel, its PRG and a [`triples::TripleSource`] (trusted dealer or
+//! OT-based, see [`crate::offline`]). Everything is *vectorized*: gates
+//! operate on whole matrices / lane vectors, so one protocol round
+//! processes all n·k lanes at once — the paper's core efficiency insight.
+
+pub mod arith;
+pub mod boolean;
+pub mod compare;
+pub mod divide;
+pub mod matmul;
+pub mod mux;
+pub mod share;
+pub mod triples;
+pub mod trunc;
+
+use crate::net::Chan;
+use crate::util::prng::Prg;
+use triples::TripleSource;
+
+/// Per-party protocol context: channel + offline material + local PRG.
+pub struct Ctx<'a> {
+    pub chan: &'a mut Chan,
+    pub ts: &'a mut dyn TripleSource,
+    pub prg: Prg,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(chan: &'a mut Chan, ts: &'a mut dyn TripleSource, prg: Prg) -> Self {
+        Ctx { chan, ts, prg }
+    }
+
+    /// This party's index (0 or 1).
+    #[inline]
+    pub fn party(&self) -> usize {
+        self.chan.party
+    }
+
+    /// Label subsequent communication with a metering phase.
+    pub fn set_phase(&mut self, label: &str) {
+        self.chan.set_phase(label);
+    }
+}

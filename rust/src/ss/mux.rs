@@ -1,0 +1,119 @@
+//! MUX: oblivious selection `b ? x : y` on shares (paper §3.1).
+//!
+//! `MUX(⟨b⟩, ⟨x⟩, ⟨y⟩) = ⟨y⟩ + ⟨b⟩·(⟨x⟩−⟨y⟩)`: after lifting the
+//! selector with B2A, one elementwise Beaver multiplication selects all
+//! lanes in one round. Used by the CMPM modules of `F_min^k` to propagate
+//! the smaller distance and its one-hot index up the tree.
+
+use super::arith::smul_elem;
+use super::boolean::{b2a, BoolShare};
+use super::Ctx;
+use crate::ring::matrix::Mat;
+
+/// Select per-lane: out[i] = b[i] ? x[i] : y[i]. `b` has one lane per
+/// element of `x`/`y`.
+pub fn mux(ctx: &mut Ctx, b: &BoolShare, x: &Mat, y: &Mat) -> Mat {
+    let ba = b2a(ctx, b);
+    mux_arith(ctx, &ba, x, y)
+}
+
+/// MUX with an already-lifted arithmetic selector (shape 1×len).
+pub fn mux_arith(ctx: &mut Ctx, b: &Mat, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.shape(), y.shape());
+    assert_eq!(b.len(), x.len(), "selector lanes");
+    let diff = x.sub(y);
+    let bm = Mat::from_vec(x.rows, x.cols, b.data.clone());
+    let prod = smul_elem(ctx, &bm, &diff);
+    y.add(&prod)
+}
+
+/// Broadcast-MUX: one selector lane per *row* of `x`/`y` (used when a
+/// single comparison decides a whole row of values, e.g. a distance and
+/// its k-lane one-hot index together).
+pub fn mux_rows(ctx: &mut Ctx, b_rows: &Mat, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.shape(), y.shape());
+    assert_eq!(b_rows.len(), x.rows, "one selector per row");
+    // Expand selector across columns, then one elementwise product.
+    let mut expanded = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let b = b_rows.data[r];
+        for c in 0..x.cols {
+            expanded.data[r * x.cols + c] = b;
+        }
+    }
+    let diff = x.sub(y);
+    let prod = smul_elem(ctx, &expanded, &diff);
+    y.add(&prod)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::share::{reconstruct, split};
+    use crate::ss::triples::bit_words;
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn mux_selects_per_lane() {
+        let n = 5;
+        let x = Mat::from_vec(1, n, vec![10, 20, 30, 40, 50]);
+        let y = Mat::from_vec(1, n, vec![1, 2, 3, 4, 5]);
+        // b = 1,0,1,0,1 XOR-shared
+        let mut prg = Prg::new(31);
+        let bits = 0b10101u64;
+        let m0 = prg.next_u64() & ((1 << n) - 1);
+        let b0 = BoolShare::from_plain_words(n, vec![m0]);
+        let b1 = BoolShare::from_plain_words(n, vec![bits ^ m0]);
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(60, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = mux(&mut ctx, &b0, &x0, &y0);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(60, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = mux(&mut ctx, &b1, &x1, &y1);
+                reconstruct(c, &z)
+            },
+        );
+        assert_eq!(r.data, vec![10, 2, 30, 4, 50]);
+    }
+
+    #[test]
+    fn mux_rows_broadcasts_selector() {
+        let x = Mat::from_vec(2, 3, vec![1, 1, 1, 2, 2, 2]);
+        let y = Mat::from_vec(2, 3, vec![9, 9, 9, 8, 8, 8]);
+        // selector rows: [1, 0] arithmetic-shared
+        let b = Mat::from_vec(1, 2, vec![1, 0]);
+        let mut prg = Prg::new(32);
+        let (b0, b1) = split(&b, &mut prg);
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(61, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = mux_rows(&mut ctx, &b0, &x0, &y0);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(61, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = mux_rows(&mut ctx, &b1, &x1, &y1);
+                reconstruct(c, &z)
+            },
+        );
+        assert_eq!(r.data, vec![1, 1, 1, 8, 8, 8]);
+    }
+
+    #[test]
+    fn selector_lanes_assert() {
+        let _ = bit_words(5);
+    }
+}

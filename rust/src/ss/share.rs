@@ -1,0 +1,112 @@
+//! Sharing and reconstruction of ring matrices.
+//!
+//! `Shr_i(x)`: the owner splits `x` into uniform shares summing to `x`
+//! mod 2^64 and transmits the other party's share. `Rec(x)`: parties
+//! exchange shares and add. Between those two moments every value in the
+//! protocol is a uniformly distributed share (see the paper's §3.1).
+
+use crate::net::Chan;
+use crate::ring::matrix::Mat;
+use crate::util::prng::Prg;
+
+/// Split a matrix into two additive shares using `prg` for share 0.
+pub fn split(x: &Mat, prg: &mut Prg) -> (Mat, Mat) {
+    let s0 = Mat::random(x.rows, x.cols, prg);
+    let s1 = x.sub(&s0);
+    (s0, s1)
+}
+
+/// Owner-side input sharing: keep one share, send the other.
+pub fn share_input_owner(chan: &mut Chan, x: &Mat, prg: &mut Prg) -> Mat {
+    let (mine, theirs) = split(x, prg);
+    chan.send_mat(&theirs);
+    mine
+}
+
+/// Receiver side of input sharing.
+pub fn share_input_recv(chan: &mut Chan, rows: usize, cols: usize) -> Mat {
+    chan.recv_mat(rows, cols)
+}
+
+/// The trivial sharing of a locally-held plaintext: `⟨x⟩_me = x`,
+/// `⟨x⟩_other = 0`. No communication; used to feed private inputs into
+/// Beaver multiplications.
+pub fn trivial_share_of_mine(x: &Mat) -> Mat {
+    x.clone()
+}
+
+/// The trivial share corresponding to the *other* party's private input.
+pub fn trivial_share_of_theirs(rows: usize, cols: usize) -> Mat {
+    Mat::zeros(rows, cols)
+}
+
+/// Reconstruct a shared matrix at both parties (one symmetric exchange).
+pub fn reconstruct(chan: &mut Chan, share: &Mat) -> Mat {
+    let other = chan.exchange_mat(share);
+    share.add(&other)
+}
+
+/// Reconstruct toward one party only: `target` learns the value, the
+/// other party learns nothing and returns `None`.
+pub fn reconstruct_to(chan: &mut Chan, share: &Mat, target: usize) -> Option<Mat> {
+    if chan.party == target {
+        let other = chan.recv_mat(share.rows, share.cols);
+        Some(share.add(&other))
+    } else {
+        chan.send_mat(share);
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+
+    #[test]
+    fn split_reconstruct_roundtrip() {
+        let mut prg = Prg::new(1);
+        let x = Mat::from_vec(2, 2, vec![1, u64::MAX, 42, 7]);
+        let (a, b) = split(&x, &mut prg);
+        assert_ne!(a, x, "share must not equal secret");
+        assert_eq!(a.add(&b), x);
+    }
+
+    #[test]
+    fn two_party_input_sharing_and_reconstruction() {
+        let x = Mat::from_vec(1, 3, vec![5, 6, 7]);
+        let xc = x.clone();
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| {
+                let mut prg = Prg::new(9);
+                let mine = share_input_owner(c, &xc, &mut prg);
+                reconstruct(c, &mine)
+            },
+            |c| {
+                let mine = share_input_recv(c, 1, 3);
+                reconstruct(c, &mine)
+            },
+        );
+        assert_eq!(r0, x);
+        assert_eq!(r1, x);
+    }
+
+    #[test]
+    fn reconstruct_to_single_party() {
+        let x = Mat::from_vec(1, 2, vec![100, 200]);
+        let xc = x.clone();
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| {
+                let mut prg = Prg::new(3);
+                let mine = share_input_owner(c, &xc, &mut prg);
+                reconstruct_to(c, &mine, 1)
+            },
+            |c| {
+                let mine = share_input_recv(c, 1, 2);
+                reconstruct_to(c, &mine, 1)
+            },
+        );
+        assert!(r0.is_none());
+        assert_eq!(r1.unwrap(), x);
+    }
+}

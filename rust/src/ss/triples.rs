@@ -1,0 +1,126 @@
+//! Beaver triples and the offline-material interface.
+//!
+//! A multiplication triple is a one-time pad for products: shares of
+//! uniformly random `(U, V, Z = U·V)` let the online phase multiply with
+//! a single reveal round. Triples are *data-independent* — the paper's
+//! online/offline split rests on producing them ahead of time, either by
+//! a trusted dealer or by OT (Gilboa); both generators live in
+//! [`crate::offline`] and implement [`TripleSource`].
+//!
+//! The [`Ledger`] records exactly how much material a protocol consumed,
+//! which is how benches price the offline phase for a given workload.
+
+use crate::ring::matrix::Mat;
+
+/// One party's share of a matrix Beaver triple `Z = U(m×k) · V(k×n)`.
+#[derive(Debug, Clone)]
+pub struct MatTriple {
+    pub u: Mat,
+    pub v: Mat,
+    pub z: Mat,
+}
+
+/// One party's share of `count` independent elementwise triples
+/// `z[i] = u[i]·v[i]` (used by SMUL / MUX / B2A on lane vectors).
+#[derive(Debug, Clone)]
+pub struct VecTriple {
+    pub u: Vec<u64>,
+    pub v: Vec<u64>,
+    pub z: Vec<u64>,
+}
+
+/// One party's share of bit-packed boolean AND triples
+/// `c = a & b` (XOR-shared), `n` lanes packed 64-per-word.
+#[derive(Debug, Clone)]
+pub struct BitTriple {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+    pub n: usize,
+}
+
+/// Running account of consumed offline material.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Ledger {
+    /// Ring elements of matrix-triple material (|U|+|V|+|Z| summed).
+    pub mat_triple_elems: u64,
+    /// Number of matrix triples requested.
+    pub mat_triples: u64,
+    /// Elementwise arithmetic triples consumed (lanes).
+    pub vec_triple_lanes: u64,
+    /// Boolean AND triples consumed (lanes).
+    pub bit_triple_lanes: u64,
+}
+
+impl Ledger {
+    pub fn merge(&mut self, o: &Ledger) {
+        self.mat_triple_elems += o.mat_triple_elems;
+        self.mat_triples += o.mat_triples;
+        self.vec_triple_lanes += o.vec_triple_lanes;
+        self.bit_triple_lanes += o.bit_triple_lanes;
+    }
+}
+
+/// Source of one party's shares of correlated offline material.
+///
+/// Implementations must be *consistent across the two parties*: when both
+/// parties draw the i-th triple, their shares must reconstruct to a valid
+/// triple. See [`crate::offline::dealer::Dealer`] (PRG-simulated trusted
+/// dealer, zero online communication) and
+/// [`crate::offline::gilboa`] (OT-based two-party generation, the paper's
+/// §4.1 choice).
+pub trait TripleSource {
+    /// Draw a matrix triple for shapes `(m×k)·(k×n)`.
+    fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple;
+
+    /// Draw `n` elementwise arithmetic triples.
+    fn vec_triple(&mut self, n: usize) -> VecTriple;
+
+    /// Draw `n` boolean AND triples (bit-packed).
+    fn bit_triple(&mut self, n: usize) -> BitTriple;
+
+    /// Material consumed so far.
+    fn ledger(&self) -> Ledger;
+}
+
+/// Number of 64-bit words needed to pack `n` bit lanes.
+#[inline]
+pub fn bit_words(n: usize) -> usize {
+    (n + 63) / 64
+}
+
+/// Mask for the last (possibly partial) word of an `n`-lane bit vector.
+#[inline]
+pub fn last_word_mask(n: usize) -> u64 {
+    let r = n % 64;
+    if r == 0 {
+        u64::MAX
+    } else {
+        (1u64 << r) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_packing_helpers() {
+        assert_eq!(bit_words(0), 0);
+        assert_eq!(bit_words(1), 1);
+        assert_eq!(bit_words(64), 1);
+        assert_eq!(bit_words(65), 2);
+        assert_eq!(last_word_mask(64), u64::MAX);
+        assert_eq!(last_word_mask(3), 0b111);
+    }
+
+    #[test]
+    fn ledger_merge() {
+        let mut a = Ledger { mat_triples: 1, mat_triple_elems: 10, ..Default::default() };
+        let b = Ledger { vec_triple_lanes: 5, bit_triple_lanes: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.mat_triples, 1);
+        assert_eq!(a.vec_triple_lanes, 5);
+        assert_eq!(a.bit_triple_lanes, 7);
+    }
+}

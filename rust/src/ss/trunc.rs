@@ -1,0 +1,65 @@
+//! Fixed-point truncation on shares (SecureML, Mohassel-Zhang §4.1).
+//!
+//! After multiplying two fixed-point values the product carries scale
+//! 2^(2f); each party *locally* arithmetic-shifts its share — party 1
+//! negates, shifts, negates back. The reconstructed result equals the
+//! truncated product up to ±1 ulp except with probability
+//! ≈ |x| / 2^(l−1−f), negligible for our value ranges. Zero rounds.
+
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::matrix::Mat;
+
+/// Locally truncate a shared fixed-point matrix by `bits` (default
+/// [`FRAC_BITS`] via [`trunc_frac`]).
+pub fn trunc_share(party: usize, x: &Mat, bits: u32) -> Mat {
+    if party == 0 {
+        x.map(|v| ((v as i64) >> bits) as u64)
+    } else {
+        // ⟨x⟩₁' = −((−⟨x⟩₁) >> f)
+        x.map(|v| (((v.wrapping_neg()) as i64 >> bits) as u64).wrapping_neg())
+    }
+}
+
+/// Truncate by the global fractional precision.
+pub fn trunc_frac(party: usize, x: &Mat) -> Mat {
+    trunc_share(party, x, FRAC_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::fixed::{decode_f64, encode_f64, SCALE};
+    use crate::ss::share::split;
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn truncation_error_is_at_most_one_ulp() {
+        let mut prg = Prg::new(9);
+        let vals: Vec<f64> = vec![1.5, -2.25, 1000.0, -999.5, 0.0, 0.001, -0.001];
+        for &v in &vals {
+            // Product-scaled encoding: v * 2^{2f}
+            let scaled = (v * SCALE * SCALE).round() as i64 as u64;
+            let m = Mat::from_vec(1, 1, vec![scaled]);
+            for trial in 0..50 {
+                let mut p = Prg::new(1000 + trial);
+                let (s0, s1) = split(&m, &mut p);
+                let t0 = trunc_frac(0, &s0);
+                let t1 = trunc_frac(1, &s1);
+                let rec = t0.add(&t1).data[0];
+                let got = decode_f64(rec);
+                assert!(
+                    (got - v).abs() <= 2.0 / SCALE,
+                    "v={v} got={got} trial={trial}"
+                );
+            }
+            let _ = &mut prg;
+        }
+    }
+
+    #[test]
+    fn truncating_plain_encoding_by_zero_is_identity() {
+        let m = Mat::from_vec(1, 2, vec![encode_f64(1.5), encode_f64(-1.5)]);
+        let t = trunc_share(0, &m, 0);
+        assert_eq!(t, m);
+    }
+}

@@ -1,0 +1,52 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ppkmeans library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A transport endpoint closed while a protocol was mid-flight.
+    #[error("transport channel closed: {0}")]
+    ChannelClosed(String),
+
+    /// Mismatched matrix / vector dimensions inside a protocol step.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Offline material (triples, OTs) exhausted or of the wrong shape.
+    #[error("offline store: {0}")]
+    Offline(String),
+
+    /// Homomorphic-encryption level failure (keygen, decrypt domain...).
+    #[error("he: {0}")]
+    He(String),
+
+    /// Garbled-circuit garbling/evaluation failure.
+    #[error("garbled circuit: {0}")]
+    Gc(String),
+
+    /// PJRT runtime failure (artifact missing, compile error, ...).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Configuration / CLI error.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Underlying XLA error.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// IO error (artifact files, datasets).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,6 @@
+//! Low-level utilities: error types, PRNG, timing, statistics.
+
+pub mod error;
+pub mod prng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,70 @@
+//! Wall-clock timing helpers for the bench harness and phase metering.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop accumulating timer.
+#[derive(Debug, Default, Clone)]
+pub struct Timer {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "timer already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.total += s.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(s) => self.total + s.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_start_stop() {
+        let mut t = Timer::new();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        let a = t.secs();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        assert!(t.secs() > a);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

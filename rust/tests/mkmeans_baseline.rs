@@ -1,0 +1,59 @@
+//! M-Kmeans baseline integration: correctness against plaintext, and the
+//! structural cost differences the paper exploits (Q1).
+
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::{plaintext, secure};
+use ppkmeans::mkmeans::{run_vertical, MkmeansConfig};
+
+#[test]
+fn mkmeans_correct_on_multiple_datasets() {
+    for (n, k, seed) in [(12, 2, 1u128), (18, 3, 2)] {
+        let mut spec = BlobSpec::new(n, 2, k);
+        spec.spread = 0.02;
+        let ds = spec.generate(seed);
+        let cfg = MkmeansConfig { k, iters: 2, seed: 5, d_a: 1 };
+        let out = run_vertical(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, k, 2, 5);
+        assert_eq!(out.assignments, plain.assignments, "n={n} k={k}");
+    }
+}
+
+#[test]
+fn ours_online_beats_mkmeans_total_structure() {
+    // The paper's headline (Q1): our online phase ≪ M-Kmeans single
+    // timeline, because M-Kmeans pays OT triple generation + GC inline.
+    let mut spec = BlobSpec::new(24, 2, 2);
+    spec.spread = 0.02;
+    let ds = spec.generate(8);
+
+    let scfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: 1 },
+        ..Default::default()
+    };
+    let ours = secure::run(&ds, &scfg).unwrap();
+    let ours_online_bytes = ours.meter_a.total_prefix("online.").bytes_sent
+        + ours.meter_b.total_prefix("online.").bytes_sent;
+
+    let mcfg = MkmeansConfig { k: 2, iters: 2, seed: scfg.seed, d_a: 1 };
+    let mk = run_vertical(&ds, &mcfg).unwrap();
+
+    assert_eq!(ours.assignments, mk.assignments, "both protocols compute the same model");
+    assert!(
+        mk.bytes_total > 5 * ours_online_bytes,
+        "M-Kmeans single-timeline traffic ({}) must dwarf our online ({})",
+        mk.bytes_total,
+        ours_online_bytes
+    );
+}
+
+#[test]
+fn gc_width_covers_distance_range() {
+    // |D'| at scale 2f with unit-interval data: < d · 2^(2·20) ≤ 2^45 for
+    // d ≤ 32 — safely inside the 48-bit GC words.
+    let max_d = 32u64;
+    let bound = (max_d as f64) * (1u64 << 40) as f64;
+    assert!(bound < (1u64 << (ppkmeans::mkmeans::gcmin::GC_WIDTH - 1)) as f64);
+}

@@ -1,0 +1,157 @@
+//! Seeded property tests (proptest is unavailable offline): randomized
+//! sweeps over protocol invariants with deterministic seeds so failures
+//! reproduce exactly.
+
+use ppkmeans::net::run_two_party;
+use ppkmeans::offline::dealer::Dealer;
+use ppkmeans::ring::fixed::{decode_f64, encode_f64, SCALE};
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::ss::share::{reconstruct, split};
+use ppkmeans::ss::{arith, boolean, compare, divide, Ctx};
+use ppkmeans::util::prng::Prg;
+
+/// Property: for all (x, y) in the fixed-point range, reconstructed
+/// SMUL equals the wrapping ring product.
+#[test]
+fn prop_smul_correct_over_random_inputs() {
+    for trial in 0..20 {
+        let mut prg = Prg::new(7000 + trial);
+        let n = 1 + (prg.next_below(40) as usize);
+        let x = Mat::random(1, n, &mut prg);
+        let y = Mat::random(1, n, &mut prg);
+        let want: Vec<u64> =
+            x.data.iter().zip(&y.data).map(|(a, b)| a.wrapping_mul(*b)).collect();
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(7100 + trial, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = arith::smul_elem(&mut ctx, &x0, &y0);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(7100 + trial, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = arith::smul_elem(&mut ctx, &x1, &y1);
+                reconstruct(c, &z)
+            },
+        );
+        assert_eq!(r.data, want, "trial {trial} n={n}");
+    }
+}
+
+/// Property: CMP agrees with plaintext `<` for random fixed-point pairs.
+#[test]
+fn prop_cmp_matches_plaintext_order() {
+    for trial in 0..15 {
+        let mut prg = Prg::new(8000 + trial);
+        let n = 1 + (prg.next_below(30) as usize);
+        let xs: Vec<f64> = (0..n).map(|_| (prg.next_f64() - 0.5) * 1000.0).collect();
+        let ys: Vec<f64> = (0..n).map(|_| (prg.next_f64() - 0.5) * 1000.0).collect();
+        let x = Mat::from_vec(1, n, xs.iter().map(|&v| encode_f64(v)).collect());
+        let y = Mat::from_vec(1, n, ys.iter().map(|&v| encode_f64(v)).collect());
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((bits, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(8100 + trial, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let b = compare::lt(&mut ctx, &x0, &y0);
+                let theirs = c.exchange_u64s(&b.words);
+                (0..n)
+                    .map(|i| ((b.words[i / 64] ^ theirs[i / 64]) >> (i % 64)) & 1 == 1)
+                    .collect::<Vec<_>>()
+            },
+            move |c| {
+                let mut ts = Dealer::new(8100 + trial, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let b = compare::lt(&mut ctx, &x1, &y1);
+                let _ = c.exchange_u64s(&b.words);
+            },
+        );
+        for i in 0..n {
+            assert_eq!(bits[i], xs[i] < ys[i], "trial {trial} lane {i}");
+        }
+    }
+}
+
+/// Property: reciprocal error is bounded for the entire count range that
+/// K-means can produce (1..=n for bench-scale n).
+#[test]
+fn prop_reciprocal_bounded_error() {
+    for trial in 0..8 {
+        let mut prg = Prg::new(9000 + trial);
+        let counts: Vec<u64> =
+            (0..12).map(|_| 1 + prg.next_below(1_000_000)).collect();
+        let d = Mat::from_vec(1, counts.len(), counts.clone());
+        let (d0, d1) = split(&d, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(9100 + trial, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let z = divide::reciprocal_int(&mut ctx, &d0);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(9100 + trial, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let z = divide::reciprocal_int(&mut ctx, &d1);
+                reconstruct(c, &z)
+            },
+        );
+        for (i, &cnt) in counts.iter().enumerate() {
+            let got = decode_f64(r.data[i]);
+            let want = 1.0 / cnt as f64;
+            let tol = (want * 2e-3).max(4.0 / SCALE);
+            assert!((got - want).abs() < tol, "trial {trial} count {cnt}: {got} vs {want}");
+        }
+    }
+}
+
+/// Property: A2B ∘ B2A round-trips bit planes (bit 0 of random values).
+#[test]
+fn prop_a2b_b2a_roundtrip() {
+    for trial in 0..10 {
+        let mut prg = Prg::new(9500 + trial);
+        let n = 1 + (prg.next_below(20) as usize);
+        let x = Mat::random(1, n, &mut prg);
+        let want: Vec<u64> = x.data.iter().map(|v| v & 1).collect();
+        let (x0, x1) = split(&x, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(9600 + trial, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let planes = boolean::a2b(&mut ctx, &x0);
+                let lifted = boolean::b2a(&mut ctx, &planes[0]);
+                reconstruct(c, &lifted)
+            },
+            move |c| {
+                let mut ts = Dealer::new(9600 + trial, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let planes = boolean::a2b(&mut ctx, &x1);
+                let lifted = boolean::b2a(&mut ctx, &planes[0]);
+                reconstruct(c, &lifted)
+            },
+        );
+        assert_eq!(r.data, want, "trial {trial}");
+    }
+}
+
+/// Failure injection: a party panicking mid-protocol must surface as a
+/// panic in the harness, not a deadlock.
+#[test]
+fn prop_peer_failure_is_detected() {
+    let result = std::panic::catch_unwind(|| {
+        run_two_party(
+            |c| {
+                c.send_u64s(&[1]);
+                c.recv_u64s() // peer dies before answering
+            },
+            |_c| {
+                panic!("simulated party crash");
+            },
+        )
+    });
+    assert!(result.is_err(), "harness must propagate the peer failure");
+}

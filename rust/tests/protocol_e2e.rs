@@ -1,0 +1,133 @@
+//! End-to-end protocol integration: SS gates composed across modules,
+//! OT-generated triples driving the online phase, store prefill
+//! semantics (the online/offline split), and pricing consistency.
+
+use ppkmeans::net::{duplex_pair, run_two_party};
+use ppkmeans::offline::dealer::Dealer;
+use ppkmeans::offline::gilboa::OtTripleGen;
+use ppkmeans::offline::store::TripleStore;
+use ppkmeans::ring::fixed::{decode_f64, encode_f64};
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::ss::share::{reconstruct, split};
+use ppkmeans::ss::{arith, compare, divide, matmul, mux, Ctx};
+use ppkmeans::util::prng::Prg;
+use std::thread;
+
+/// A composite pipeline: (x⊙y) → compare vs z → select → divide.
+/// Exercises SMUL, CMP, B2A/MUX and division in one shared dataflow.
+#[test]
+fn composite_pipeline_matches_plaintext() {
+    let xs = [2.5f64, -1.0, 4.0, 0.5];
+    let ys = [1.5f64, 3.0, -2.0, 2.0];
+    let zs = [4.0f64, -4.0, -7.0, 2.0];
+    let dens = [2u64, 4, 5, 10];
+    let n = xs.len();
+
+    // Plaintext reference: w = (x*y < z) ? x*y : z ; out = w / den.
+    let want: Vec<f64> = (0..n)
+        .map(|i| {
+            let p = xs[i] * ys[i];
+            let w = if p < zs[i] { p } else { zs[i] };
+            w / dens[i] as f64
+        })
+        .collect();
+
+    let mut prg = Prg::new(501);
+    let x = Mat::from_vec(1, n, xs.iter().map(|&v| encode_f64(v)).collect());
+    let y = Mat::from_vec(1, n, ys.iter().map(|&v| encode_f64(v)).collect());
+    let z = Mat::from_vec(1, n, zs.iter().map(|&v| encode_f64(v)).collect());
+    let den = Mat::from_vec(1, n, dens.to_vec());
+    let (x0, x1) = split(&x, &mut prg);
+    let (y0, y1) = split(&y, &mut prg);
+    let (z0, z1) = split(&z, &mut prg);
+    let (d0, d1) = split(&den, &mut prg);
+
+    let run = move |party: usize, x: Mat, y: Mat, z: Mat, dn: Mat| {
+        move |c: &mut ppkmeans::net::Chan| {
+            let mut ts = Dealer::new(502, party);
+            let mut ctx = Ctx::new(c, &mut ts, Prg::new(1 + party as u128));
+            let p2f = arith::smul_elem(&mut ctx, &x, &y);
+            let p = ppkmeans::ss::trunc::trunc_frac(party, &p2f);
+            let lt = compare::lt(&mut ctx, &p, &z);
+            let w = mux::mux(&mut ctx, &lt, &p, &z);
+            let q = divide::divide(&mut ctx, &w, &dn);
+            reconstruct(c, &q)
+        }
+    };
+    let ((r, _), _) =
+        run_two_party(run(0, x0, y0, z0, d0), run(1, x1, y1, z1, d1));
+    for i in 0..n {
+        let got = decode_f64(r.data[i]);
+        assert!((got - want[i]).abs() < 5e-3, "lane {i}: got {got} want {}", want[i]);
+    }
+}
+
+/// OT-generated triples must drive a correct online matmul.
+#[test]
+fn beaver_matmul_over_ot_triples() {
+    let a = Mat::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]);
+    let b = Mat::from_vec(2, 3, vec![7, 8, 9, 10, 11, 12]);
+    let want = a.matmul(&b);
+    let mut prg = Prg::new(9);
+    let (a0, a1) = split(&a, &mut prg);
+    let (b0, b1) = split(&b, &mut prg);
+
+    // Two channel pairs: protocol + OT.
+    let (p0, p1) = duplex_pair();
+    let (o0, o1) = duplex_pair();
+    let h = thread::spawn(move || {
+        let mut c = p0;
+        let mut ts = OtTripleGen::new(o0, 313);
+        let mut ctx = Ctx::new(&mut c, &mut ts, Prg::new(1));
+        let z = matmul::ss_matmul(&mut ctx, &a0, &b0);
+        reconstruct(&mut c, &z)
+    });
+    let mut c = p1;
+    let mut ts = OtTripleGen::new(o1, 313);
+    let mut ctx = Ctx::new(&mut c, &mut ts, Prg::new(2));
+    let z = matmul::ss_matmul(&mut ctx, &a1, &b1);
+    let r1 = reconstruct(&mut c, &z);
+    let r0 = h.join().unwrap();
+    assert_eq!(r0, want);
+    assert_eq!(r1, want);
+}
+
+/// Prefilled store serves the online phase with zero generation misses —
+/// the operational meaning of the online/offline split.
+#[test]
+fn online_offline_split_has_zero_misses() {
+    use ppkmeans::data::blobs::BlobSpec;
+    use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+    use ppkmeans::kmeans::secure;
+
+    // Recording run: capture the exact demand.
+    let ds = BlobSpec::new(20, 2, 2).generate(5);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: 1 },
+        ..Default::default()
+    };
+    let out = secure::run(&ds, &cfg).unwrap();
+    let demand = out.demand;
+
+    // Prefill a store with that demand, then drain it in the same order:
+    // every request must hit.
+    let mut store = TripleStore::new(Dealer::new(cfg.seed, 0));
+    store.prefill(&demand);
+    for ((m, k, n), count) in demand.mats.clone() {
+        for _ in 0..count {
+            use ppkmeans::ss::triples::TripleSource;
+            let _ = store.mat_triple(m, k, n);
+        }
+    }
+    for &lanes in &demand.vec_chunks {
+        use ppkmeans::ss::triples::TripleSource;
+        let _ = store.vec_triple(lanes);
+    }
+    for &lanes in &demand.bit_chunks {
+        use ppkmeans::ss::triples::TripleSource;
+        let _ = store.bit_triple(lanes);
+    }
+    assert_eq!(store.misses, 0, "prefilled store must absorb the whole online phase");
+}

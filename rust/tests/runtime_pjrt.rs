@@ -1,0 +1,123 @@
+//! Integration: PJRT runtime executes the AOT artifacts with numerics
+//! identical to the native ring implementation.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::runtime::{dispatch, tiled, ArtifactStore};
+use ppkmeans::util::prng::Prg;
+use std::path::Path;
+
+fn store() -> Option<ArtifactStore> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactStore::load(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping PJRT tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_kinds() {
+    let Some(s) = store() else { return };
+    assert!(!s.by_kind("ring_matmul").is_empty());
+    assert!(!s.by_kind("esd").is_empty());
+    assert!(!s.by_kind("kmeans_step").is_empty());
+}
+
+#[test]
+fn tiled_ring_matmul_matches_native_exact() {
+    let Some(s) = store() else { return };
+    let mut prg = Prg::new(41);
+    // Deliberately awkward (non-multiple-of-block) shapes.
+    for (m, t, n) in [(1, 1, 1), (7, 13, 5), (130, 129, 2), (256, 64, 300)] {
+        let a = Mat::random(m, t, &mut prg);
+        let b = Mat::random(t, n, &mut prg);
+        let native = a.matmul(&b);
+        let pjrt = tiled::ring_matmul(&s, &a, &b).unwrap();
+        assert_eq!(native, pjrt, "shape {m}x{t}x{n}");
+    }
+}
+
+#[test]
+fn tiled_esd_matches_native_exact() {
+    let Some(s) = store() else { return };
+    let mut prg = Prg::new(42);
+    for (n, d, k) in [(10, 2, 2), (300, 8, 5), (256, 128, 16)] {
+        let x = Mat::random(n, d, &mut prg);
+        let mu = Mat::random(k, d, &mut prg);
+        // Native D' = U − 2Xμᵀ.
+        let mut want = Mat::zeros(n, k);
+        for i in 0..n {
+            for j in 0..k {
+                let mut u = 0u64;
+                let mut dot = 0u64;
+                for l in 0..d {
+                    u = u.wrapping_add(mu.at(j, l).wrapping_mul(mu.at(j, l)));
+                    dot = dot.wrapping_add(x.at(i, l).wrapping_mul(mu.at(j, l)));
+                }
+                want.set(i, j, u.wrapping_sub(dot.wrapping_mul(2)));
+            }
+        }
+        let got = tiled::esd(&s, &x, &mu).unwrap();
+        assert_eq!(got, want, "shape n={n} d={d} k={k}");
+    }
+}
+
+#[test]
+fn kmeans_step_artifact_runs() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dispatch::init(&dir).is_err() {
+        return;
+    }
+    // Two tight blobs; one step from mid-way centroids must move toward
+    // the blob means.
+    let (n, d, k) = (64usize, 4usize, 2usize);
+    let mut x = vec![0f32; n * d];
+    for i in 0..n {
+        let base = if i < n / 2 { 0.2 } else { 0.8 };
+        for l in 0..d {
+            x[i * d + l] = base + 0.01 * ((i * d + l) % 7) as f32 / 7.0;
+        }
+    }
+    let mu = vec![0.4f32; d].into_iter().chain(vec![0.6f32; d]).collect::<Vec<_>>();
+    let (new_mu, counts) = dispatch::kmeans_step(&x, &mu, n, d, k).expect("artifact present");
+    assert_eq!(counts.iter().sum::<f32>() as usize, n);
+    assert!((new_mu[0] - 0.2).abs() < 0.05, "centroid0 {:?}", &new_mu[..d]);
+    assert!((new_mu[d] - 0.8).abs() < 0.05, "centroid1 {:?}", &new_mu[d..]);
+}
+
+#[test]
+fn dispatch_falls_back_natively_without_init() {
+    // Small product — dispatch must not require artifacts.
+    let a = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+    let b = Mat::from_vec(2, 2, vec![5, 6, 7, 8]);
+    assert_eq!(dispatch::matmul(&a, &b), a.matmul(&b));
+}
+
+#[test]
+fn secure_kmeans_runs_with_pjrt_dispatch() {
+    // End-to-end: protocol correctness is unchanged when the PJRT
+    // backend serves the large local products.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dispatch::init(&dir).is_err() {
+        return;
+    }
+    use ppkmeans::data::blobs::BlobSpec;
+    use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+    use ppkmeans::kmeans::{plaintext, secure};
+    let mut spec = BlobSpec::new(80, 4, 2);
+    spec.spread = 0.02;
+    let ds = spec.generate(3);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 4,
+        partition: Partition::Vertical { d_a: 2 },
+        ..Default::default()
+    };
+    let sec = secure::run(&ds, &cfg).unwrap();
+    let plain = plaintext::kmeans(&ds, 2, 4, cfg.seed);
+    assert_eq!(sec.assignments, plain.assignments);
+}

@@ -1,0 +1,151 @@
+//! Secure K-means end-to-end: exact agreement with the plaintext oracle
+//! across partitionings, cluster counts, and datasets.
+
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::data::sparse_gen;
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::{plaintext, secure};
+
+fn well_separated(n: usize, d: usize, k: usize, seed: u128) -> ppkmeans::data::blobs::Dataset {
+    let mut spec = BlobSpec::new(n, d, k);
+    spec.spread = 0.02;
+    spec.generate(seed)
+}
+
+#[test]
+fn vertical_grid_matches_plaintext() {
+    for (n, d, k, d_a) in [(40, 2, 2, 1), (60, 5, 3, 2), (50, 4, 4, 3)] {
+        let ds = well_separated(n, d, k, 100 + n as u128);
+        let cfg = SecureKmeansConfig {
+            k,
+            iters: 5,
+            partition: Partition::Vertical { d_a },
+            ..Default::default()
+        };
+        let sec = secure::run(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, k, 5, cfg.seed);
+        assert_eq!(sec.assignments, plain.assignments, "n={n} d={d} k={k}");
+    }
+}
+
+#[test]
+fn horizontal_grid_matches_plaintext() {
+    for (n, d, k, n_a) in [(40, 2, 2, 13), (60, 3, 3, 30)] {
+        let ds = well_separated(n, d, k, 200 + n as u128);
+        let cfg = SecureKmeansConfig {
+            k,
+            iters: 4,
+            partition: Partition::Horizontal { n_a },
+            ..Default::default()
+        };
+        let sec = secure::run(&ds, &cfg).unwrap();
+        let plain = plaintext::kmeans(&ds, k, 4, cfg.seed);
+        assert_eq!(sec.assignments, plain.assignments, "n={n} d={d} k={k}");
+    }
+}
+
+#[test]
+fn naive_and_vectorized_agree_everywhere() {
+    let ds = well_separated(16, 3, 2, 9);
+    let mk = |esd: EsdMode| SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        esd,
+        partition: Partition::Vertical { d_a: 1 },
+        ..Default::default()
+    };
+    let v = secure::run(&ds, &mk(EsdMode::Vectorized)).unwrap();
+    let nv = secure::run(&ds, &mk(EsdMode::Naive)).unwrap();
+    assert_eq!(v.assignments, nv.assignments);
+    // Centroids agree up to fixed-point truncation noise (the two modes
+    // consume different share randomness, so the ±1-ulp probabilistic
+    // truncation error differs).
+    for (a, b) in v.centroids.iter().zip(&nv.centroids) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn online_comm_scales_linearly_with_n() {
+    // Eq. 3's promise: per-iteration online traffic is O(n·k), not O(n·k·rounds).
+    let bytes = |n: usize| {
+        let ds = well_separated(n, 2, 2, 77);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = secure::run(&ds, &cfg).unwrap();
+        out.meter_a.total_prefix("online.").bytes_sent
+    };
+    // Large enough n that the O(k)-sized division/norm terms are noise.
+    let b1 = bytes(400);
+    let b2 = bytes(800);
+    let ratio = b2 as f64 / b1 as f64;
+    assert!((1.5..2.5).contains(&ratio), "expected ~2x, got {ratio}");
+}
+
+#[test]
+fn rounds_independent_of_n() {
+    let rounds = |n: usize| {
+        let ds = well_separated(n, 2, 2, 78);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 2,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = secure::run(&ds, &cfg).unwrap();
+        out.meter_a.total_prefix("online.").rounds
+    };
+    assert_eq!(rounds(30), rounds(90), "vectorization: rounds must not grow with n");
+}
+
+#[test]
+fn sparse_and_dense_paths_identical_results() {
+    let ds = sparse_gen::generate(30, 6, 2, 0.6, 55);
+    let base = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: 3 },
+        ..Default::default()
+    };
+    let dense = secure::run(&ds, &base).unwrap();
+    let mut scfg = base.clone();
+    scfg.sparse = true;
+    let sparse = secure::run(&ds, &scfg).unwrap();
+    assert_eq!(dense.assignments, sparse.assignments);
+    for (a, b) in dense.centroids.iter().zip(&sparse.centroids) {
+        assert!((a - b).abs() < 1e-6, "centroids must match bit-for-bit in the ring");
+    }
+}
+
+#[test]
+fn fraud_pipeline_joint_beats_single_party() {
+    use ppkmeans::data::fraud_gen;
+    use ppkmeans::fraud::{detect_outliers, jaccard, OutlierConfig};
+
+    let f = fraud_gen::generate(600, 0.05, 31);
+    let k = 4;
+    let cfg = SecureKmeansConfig {
+        k,
+        iters: 6,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let ocfg = OutlierConfig { rate: 0.05, min_cluster_frac: 0.02 };
+    let joint = secure::run(&f.data, &cfg).unwrap();
+    let flagged = detect_outliers(&f.data, &joint.centroids, &joint.assignments, k, &ocfg);
+    let j_joint = jaccard(&flagged, &f.outliers);
+
+    let pay = f.payment_only();
+    let single = plaintext::kmeans(&pay, k, 6, cfg.seed);
+    let flagged = detect_outliers(&pay, &single.centroids, &single.assignments, k, &ocfg);
+    let j_single = jaccard(&flagged, &f.outliers);
+
+    assert!(
+        j_joint > j_single,
+        "joint secure clustering ({j_joint:.3}) must beat payment-only ({j_single:.3})"
+    );
+}

@@ -1,0 +1,104 @@
+//! Sparse-path integration: Protocol 2 at realistic shapes, HE2SS
+//! batching, and the communication claims of §4.3.
+
+use ppkmeans::he::ou::Ou;
+use ppkmeans::he::HeScheme;
+use ppkmeans::net::run_two_party;
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::sparse::{protocol2, Csr};
+use ppkmeans::ss::share::reconstruct;
+use ppkmeans::util::prng::Prg;
+
+fn keypair(bits: usize, seed: u128) -> (ppkmeans::he::ou::OuPk, ppkmeans::he::ou::OuSk) {
+    let mut prg = Prg::new(seed);
+    Ou::keygen(bits, &mut prg)
+}
+
+#[test]
+fn protocol2_high_dimensional_one_hot() {
+    // One-hot rows (the paper's motivating feature engineering): d ≫ k.
+    let (n, d, k) = (12, 64, 3);
+    let mut prg = Prg::new(21);
+    let mut dense = Mat::zeros(n, d);
+    for i in 0..n {
+        let hot = prg.next_below(d as u64) as usize;
+        dense.set(i, hot, 1 << 20); // fixed-point 1.0
+    }
+    let x = Csr::from_dense(&dense);
+    assert_eq!(x.nnz(), n);
+    let y = Mat::random(d, k, &mut prg);
+    let want = dense.matmul(&y);
+
+    let (pk, sk) = keypair(768, 33);
+    let ct_width = Ou::ct_bytes(&pk);
+    let pk_a = pk.clone();
+    let xc = x.clone();
+    let yc = y.clone();
+    let ((ra, ma), (rb, _)) = run_two_party(
+        move |c| {
+            let mut prg = Prg::new(41);
+            let z = protocol2::sparse_party::<Ou>(c, &pk_a, &xc, (d, k), &mut prg);
+            reconstruct(c, &z)
+        },
+        move |c| {
+            let mut prg = Prg::new(42);
+            let z = protocol2::dense_party::<Ou>(c, &pk, &sk, &yc, n, &mut prg);
+            reconstruct(c, &z)
+        },
+    );
+    assert_eq!(ra, want);
+    assert_eq!(rb, want);
+    // §4.3 claim: traffic independent of d·n (the X size) — A ships only
+    // n·k masked ciphertexts + the reconstruction.
+    let expected = (n * k * ct_width) as u64 + (n * k * 8) as u64;
+    assert_eq!(ma.total().bytes_sent, expected);
+}
+
+#[test]
+fn protocol2_empty_matrix_and_full_matrix_edges() {
+    let (n, d, k) = (4, 5, 2);
+    let mut prg = Prg::new(51);
+    for density in [0.0f64, 1.0] {
+        let mut dense = Mat::zeros(n, d);
+        if density > 0.0 {
+            for v in dense.data.iter_mut() {
+                *v = prg.next_u64();
+            }
+        }
+        let x = Csr::from_dense(&dense);
+        let y = Mat::random(d, k, &mut prg);
+        let want = dense.matmul(&y);
+        let (pk, sk) = keypair(768, 52);
+        let pk_a = pk.clone();
+        let yc = y.clone();
+        let ((ra, _), _) = run_two_party(
+            move |c| {
+                let mut prg = Prg::new(61);
+                let z = protocol2::sparse_party::<Ou>(c, &pk_a, &x, (d, k), &mut prg);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut prg = Prg::new(62);
+                let z = protocol2::dense_party::<Ou>(c, &pk, &sk, &yc, n, &mut prg);
+                reconstruct(c, &z)
+            },
+        );
+        assert_eq!(ra, want, "density {density}");
+    }
+}
+
+#[test]
+fn comm_crossover_favors_he_when_d_large() {
+    // Beaver online: (n·d + d·k) elements × 8 B per party.
+    // Protocol 2: (d·k + n·k) ciphertexts. For d ≫ k, HE wins.
+    let (pk, _) = keypair(768, 99);
+    let ct = Ou::ct_bytes(&pk) as u64;
+    let k = 2u64;
+    let n = 1000u64;
+    let beaver = |d: u64| (n * d + d * k) * 8;
+    let he = |d: u64| (d * k + n * k) * ct;
+    // Small d: Beaver cheaper; large d: HE cheaper (the paper's regime).
+    assert!(beaver(4) < he(4));
+    let d_big = 20_000;
+    assert!(he(d_big) < beaver(d_big), "HE must win at d = {d_big}");
+}
