@@ -53,25 +53,29 @@ fn main() {
     he.print();
     println!("shape check: OU cheaper on every operation (paper §5.1).\n");
 
-    // ---- PJRT vs native matmul.
+    // ---- PJRT vs native matmul (PJRT column needs `--features pjrt`
+    // and built artifacts; otherwise the dispatch layer reports n/a).
     let mut mm = Table::new("ring matmul backends", &["shape", "native", "pjrt"]);
-    let have_pjrt = ppkmeans::runtime::dispatch::init(std::path::Path::new("artifacts")).is_ok();
+    let have_pjrt = ppkmeans::runtime::dispatch::init(std::path::Path::new("artifacts")).is_ok()
+        && ppkmeans::runtime::dispatch::available();
     let mut prg = Prg::new(2);
-    for sz in [128usize, 256, 512] {
+    // Shapes stay above dispatch::DISPATCH_THRESHOLD so the "pjrt"
+    // column really times the PJRT service, not the native fallback.
+    for sz in [256usize, 512, 1024] {
         let a = Mat::random(sz, sz, &mut prg);
         let b = Mat::random(sz, sz, &mut prg);
         let native = time_reps(1, 3, || {
             let _ = a.matmul(&b);
         });
         let pjrt = if have_pjrt {
-            let store = ppkmeans::runtime::ArtifactStore::load(std::path::Path::new("artifacts"))
-                .expect("artifacts");
+            // dispatch::matmul routes to the service above the threshold;
+            // time it directly for an apples-to-apples per-shape figure.
             let t = time_reps(1, 3, || {
-                let _ = ppkmeans::runtime::tiled::ring_matmul(&store, &a, &b).unwrap();
+                let _ = ppkmeans::runtime::dispatch::matmul(&a, &b);
             });
             fmt_secs(mean(&t))
         } else {
-            "n/a (run `make artifacts`)".into()
+            "n/a (add the xla dep + --features pjrt + make artifacts)".into()
         };
         mm.row(vec![format!("{sz}^3"), fmt_secs(mean(&native)), pjrt]);
     }

@@ -2,25 +2,27 @@
 //!
 //! Labels are 128-bit; the global offset `R` has LSB 1 so a label's LSB
 //! is its permute bit. AND gates follow Zahur-Rosulek-Evans half-gates:
-//! two ciphertexts per gate, two fixed-key-AES hashes to evaluate.
+//! two ciphertexts per gate, two fixed-key permutation hashes to
+//! evaluate (Speck-128 standing in for fixed-key AES, see
+//! [`crate::util::cipher`]).
 
 use super::circuit::{Circuit, Gate};
+use crate::util::cipher::Speck128;
 use crate::util::prng::Prg;
-use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
-use aes::Aes128;
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
-/// Fixed-key AES for the hash (standard free-XOR instantiation).
-static FIXED_AES: Lazy<Aes128> =
-    Lazy::new(|| Aes128::new(GenericArray::from_slice(b"ppkmeans-gc-key!")));
+/// Fixed-key permutation for the hash (standard free-XOR instantiation).
+static FIXED_CIPHER: OnceLock<Speck128> = OnceLock::new();
+
+fn fixed_cipher() -> &'static Speck128 {
+    FIXED_CIPHER.get_or_init(|| Speck128::new(*b"ppkmeans-gc-key!"))
+}
 
 /// Correlation-robust hash H(x, i) = π(2x ⊕ i) ⊕ (2x ⊕ i).
 #[inline]
 fn h(x: u128, index: u64) -> u128 {
     let t = (x << 1) ^ (index as u128);
-    let mut block = GenericArray::clone_from_slice(&t.to_le_bytes());
-    FIXED_AES.encrypt_block(&mut block);
-    u128::from_le_bytes(block.as_slice().try_into().unwrap()) ^ t
+    fixed_cipher().encrypt_u128(t) ^ t
 }
 
 #[inline]

@@ -2,15 +2,25 @@
 //!
 //! Binary-tree reduction over the k distance columns: each level runs a
 //! batch of CMPM comparison modules — one vectorized CMP (Kogge-Stone
-//! MSB of the difference) plus one vectorized MUX that simultaneously
-//! propagates the smaller distance *and* its one-hot index row. All n
-//! samples and all pairs at a level share a single protocol round per
-//! gate, so the whole assignment costs `⌈log₂ k⌉ · O(1)` rounds.
+//! MSB of the difference, [`CMP_ROUNDS`] flights for *all* pairs and
+//! samples at once) followed by **one** fused boolean-selector MUX
+//! flight that simultaneously propagates the smaller distance *and* its
+//! one-hot index row (the daBit construction of
+//! [`crate::ss::mux::mux_bits_begin`] collapses the old B2A + multiply
+//! pair of dependent flights). The whole assignment therefore costs
+//! exactly `⌈log₂ k⌉ · (CMP_ROUNDS + 1)` flights per iteration — the
+//! budget asserted by the round-count regression tests.
 
 use crate::ring::matrix::Mat;
-use crate::ss::arith::smul_elem;
-use crate::ss::boolean::{b2a, msb};
-use crate::ss::Ctx;
+use crate::ss::boolean::{msb, CMP_ROUNDS};
+use crate::ss::mux::mux_bits_begin;
+use crate::ss::Session;
+
+/// Flights per `F_min^k` invocation on k columns (per Lloyd iteration).
+pub fn min_k_rounds(k: usize) -> u64 {
+    let levels = (usize::BITS - (k - 1).leading_zeros()) as u64; // ⌈log₂ k⌉
+    levels * (CMP_ROUNDS + 1)
+}
 
 /// One tree node: shared min-distance lanes (n) and shared one-hot index
 /// rows (n×k).
@@ -21,7 +31,7 @@ struct Node {
 
 /// `⟨C⟩ ← F_min^k(⟨D⟩)`: returns the shared one-hot assignment matrix
 /// `C (n×k)` and the shared minimum distances (n×1).
-pub fn min_k(ctx: &mut Ctx, d: &Mat) -> (Mat, Mat) {
+pub fn min_k(ctx: &mut Session, d: &Mat) -> (Mat, Mat) {
     let n = d.rows;
     let k = d.cols;
     assert!(k >= 1);
@@ -55,44 +65,41 @@ pub fn min_k(ctx: &mut Ctx, d: &Mat) -> (Mat, Mat) {
         }
         // z = [left < right] per lane (MSB of the difference).
         let z_bits = msb(ctx, &diff);
-        let z = b2a(ctx, &z_bits); // 1×(pairs·n)
 
-        // One fused MUX for values and index rows:
-        // out = right + z·(left − right), lanes = pairs·n·(1+k).
-        let lanes = pairs * n * (1 + k);
-        let mut sel = Mat::zeros(1, lanes);
-        let mut delta = Mat::zeros(1, lanes);
-        let mut right_flat = vec![0u64; lanes];
+        // One fused MUX flight for values and index rows: the selector
+        // lane (p, i) broadcasts over its 1+k data lanes (group), so
+        // out = right + z·(left − right) for all pairs in one round.
+        let group = 1 + k;
+        let lanes = pairs * n * group;
+        let mut left = Mat::from_vec(1, lanes, vec![0; lanes]);
+        let mut right = Mat::from_vec(1, lanes, vec![0; lanes]);
         for p in 0..pairs {
             let (a, b) = (&nodes[2 * p], &nodes[2 * p + 1]);
             for i in 0..n {
-                let base = (p * n + i) * (1 + k);
-                let zi = z.data[p * n + i];
-                sel.data[base] = zi;
-                delta.data[base] = a.val[i].wrapping_sub(b.val[i]);
-                right_flat[base] = b.val[i];
+                let base = (p * n + i) * group;
+                left.data[base] = a.val[i];
+                right.data[base] = b.val[i];
                 for c in 0..k {
-                    sel.data[base + 1 + c] = zi;
-                    delta.data[base + 1 + c] = a.idx.at(i, c).wrapping_sub(b.idx.at(i, c));
-                    right_flat[base + 1 + c] = b.idx.at(i, c);
+                    left.data[base + 1 + c] = a.idx.at(i, c);
+                    right.data[base + 1 + c] = b.idx.at(i, c);
                 }
             }
         }
-        let picked = smul_elem(ctx, &sel, &delta);
+        let merged = {
+            let pend = mux_bits_begin(ctx, &z_bits, &left, &right, group);
+            ctx.flush();
+            pend.resolve(ctx)
+        };
 
         let mut next: Vec<Node> = Vec::with_capacity(pairs + carry as usize);
         for p in 0..pairs {
             let mut val = vec![0u64; n];
             let mut idx = Mat::zeros(n, k);
             for i in 0..n {
-                let base = (p * n + i) * (1 + k);
-                val[i] = right_flat[base].wrapping_add(picked.data[base]);
+                let base = (p * n + i) * group;
+                val[i] = merged.data[base];
                 for c in 0..k {
-                    idx.set(
-                        i,
-                        c,
-                        right_flat[base + 1 + c].wrapping_add(picked.data[base + 1 + c]),
-                    );
+                    idx.set(i, c, merged.data[base + 1 + c]);
                 }
             }
             next.push(Node { val, idx });
@@ -114,6 +121,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::encode_f64;
     use crate::ss::share::{reconstruct, split};
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     fn run_min_k(dvals: Vec<f64>, n: usize, k: usize) -> (Vec<u64>, Vec<f64>) {
@@ -204,5 +212,29 @@ mod tests {
         assert_eq!(r_small, r_big_n, "rounds must not depend on n");
         let r_big_k = run(4, 8);
         assert!(r_big_k > r_small, "more levels for larger k");
+    }
+
+    #[test]
+    fn flight_budget_is_levels_times_cmp_plus_one() {
+        for k in [2usize, 3, 5, 8] {
+            let n = 3;
+            let mut prg = Prg::new(300 + k as u128);
+            let d = Mat::random(n, k, &mut prg).map(|v| v >> 40);
+            let (d0, d1) = split(&d, &mut prg);
+            let ((rounds, _), _) = run_two_party(
+                move |c| {
+                    let mut ts = Dealer::new(104, 0);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    min_k(&mut ctx, &d0);
+                    ctx.chan.meter().total().rounds
+                },
+                move |c| {
+                    let mut ts = Dealer::new(104, 1);
+                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    min_k(&mut ctx, &d1);
+                },
+            );
+            assert_eq!(rounds, min_k_rounds(k), "k={k}");
+        }
     }
 }

@@ -1,0 +1,361 @@
+//! Unified cross-product backends for the secure Lloyd iteration.
+//!
+//! S1 (distance) and S3 (update) differ between the dense, sparse and
+//! ablation configurations **only** in how the two vertical cross
+//! products are evaluated; everything else (norms, `F_min^k`, the
+//! empty-cluster fallback, division) is shared. The seed code branched
+//! ad hoc between `kmeans::esd`, `kmeans::sparse` and
+//! `sparse::protocol2`; this module replaces that with one
+//! [`CrossProductBackend`] trait and three implementations:
+//!
+//! * [`BeaverBackend`] — matrix Beaver triples (Eq. 3), both reveals in
+//!   one staged flight;
+//! * [`HeBackend`] — HE Protocol 2 (paper §4.3): the sparse holder
+//!   evaluates over ciphertexts of the small dense operand, skipping
+//!   zeros, with communication `O((d+n)·k)` ciphertexts;
+//! * [`NaiveBackend`] — the pre-vectorization Q3 ablation (one scalar
+//!   protocol per (sample, centroid) pair).
+//!
+//! [`select`] performs the `EsdMode::Auto` dispatch: the parties
+//! exchange local nonzero counts once at setup (public metadata — the
+//! paper treats the sparsity degree as known) and pick the HE path when
+//! the joint density falls below [`AUTO_DENSITY_THRESHOLD`].
+
+use super::config::{EsdMode, SecureKmeansConfig};
+use super::esd;
+use super::update::{numerator_vertical_begin, PendingNumerator};
+use crate::bigint::BigUint;
+use crate::he::ou::{Ou, OuPk, OuSk};
+use crate::he::HeScheme;
+use crate::net::Chan;
+use crate::ring::matrix::Mat;
+use crate::sparse::csr::Csr;
+use crate::sparse::protocol2;
+use crate::ss::Session;
+use crate::util::prng::Prg;
+
+/// Joint-density threshold below which `EsdMode::Auto` routes cross
+/// products through HE Protocol 2 (density = nnz / total; `sparse_gen`
+/// workloads sit well below it, dense Gaussian blobs at ≈ 1.0).
+pub const AUTO_DENSITY_THRESHOLD: f64 = 0.7;
+
+/// One party's feature block, with the CSR view the sparse path needs.
+pub struct PartyData {
+    /// Fixed-point dense block (n×d_mine).
+    pub dense: Mat,
+    /// CSR view (built when the run may take the HE path).
+    pub csr: Option<Csr>,
+}
+
+impl PartyData {
+    pub fn dense_only(dense: Mat) -> PartyData {
+        PartyData { dense, csr: None }
+    }
+
+    pub fn with_csr(dense: Mat) -> PartyData {
+        PartyData { csr: Some(Csr::from_dense(&dense)), dense }
+    }
+
+    /// Nonzero entries of the block (the Auto-dispatch signal).
+    pub fn nnz(&self) -> u64 {
+        match &self.csr {
+            Some(c) => c.nnz() as u64,
+            None => self.dense.data.iter().filter(|&&v| v != 0).count() as u64,
+        }
+    }
+
+    fn csr(&self) -> &Csr {
+        self.csr.as_ref().expect("CSR view not built for this run")
+    }
+
+    /// Local `X_mine · rhs`, through the sparse view when present.
+    pub fn local_matmul(&self, rhs: &Mat) -> Mat {
+        match &self.csr {
+            Some(c) => c.matmul_dense(rhs),
+            None => crate::runtime::dispatch::matmul(&self.dense, rhs),
+        }
+    }
+}
+
+/// How one Lloyd iteration evaluates its vertical cross products.
+pub trait CrossProductBackend: Send {
+    /// Backend label (reported in [`super::secure::SecureKmeansOutput`]).
+    fn name(&self) -> &'static str;
+
+    /// S1: shares of `X_A·(⟨μ⟩_B A-block)ᵀ + X_B·(⟨μ⟩_A B-block)ᵀ`
+    /// summed (n×k). Backends flush their own reveals; anything the
+    /// caller staged beforehand (the norm square) rides along.
+    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat;
+
+    /// S3: the full numerator `⟨Cᵀ·X⟩` (k×d) as a staged
+    /// [`PendingNumerator`] so its reveals can coalesce with the
+    /// division-prep comparison.
+    fn s3_numerator(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_share: &Mat,
+        d_a: usize,
+        d: usize,
+    ) -> PendingNumerator;
+}
+
+// ---------------------------------------------------------------------
+// Beaver (dense, vectorized — Eq. 3)
+// ---------------------------------------------------------------------
+
+/// Matrix-Beaver cross products: both reveals share one flight.
+pub struct BeaverBackend;
+
+impl CrossProductBackend for BeaverBackend {
+    fn name(&self) -> &'static str {
+        "beaver"
+    }
+
+    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
+        let (c1_p, c2_p) = esd::vertical_cross_begin(s, &x.dense, mu, d_a);
+        s.flush();
+        c1_p.resolve(s).add(&c2_p.resolve(s))
+    }
+
+    fn s3_numerator(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_share: &Mat,
+        d_a: usize,
+        d: usize,
+    ) -> PendingNumerator {
+        numerator_vertical_begin(s, &x.dense, c_share, d_a, d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Naive (Q3 ablation)
+// ---------------------------------------------------------------------
+
+/// One scalar secure product per (sample, centroid) pair — n·k flights.
+pub struct NaiveBackend;
+
+impl CrossProductBackend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
+        s.flush(); // the staged norm reveal cannot ride a scalar loop
+        esd::vertical_naive_cross(s, &x.dense, mu, d_a)
+    }
+
+    fn s3_numerator(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_share: &Mat,
+        d_a: usize,
+        d: usize,
+    ) -> PendingNumerator {
+        // The ablation targets S1 only (as in the paper's Q3 study).
+        numerator_vertical_begin(s, &x.dense, c_share, d_a, d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// HE Protocol 2 (sparse path, paper §4.3)
+// ---------------------------------------------------------------------
+
+/// Serialize an OU public key (n, g, h as length-prefixed big-endian).
+pub fn pk_to_bytes(pk: &OuPk) -> Vec<u8> {
+    let mut out = Vec::new();
+    for part in [&pk.n, &pk.g, &pk.h] {
+        let b = part.to_bytes_be();
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+pub fn pk_from_bytes(bytes: &[u8]) -> OuPk {
+    let mut parts = Vec::with_capacity(3);
+    let mut off = 0;
+    for _ in 0..3 {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        parts.push(BigUint::from_bytes_be(&bytes[off..off + len]));
+        off += len;
+    }
+    let n = parts.remove(0);
+    let g = parts.remove(0);
+    let h = parts.remove(0);
+    OuPk { n_bits: n.bits(), n, g, h }
+}
+
+/// HE cross products over each party's Okamoto-Uchiyama key pair
+/// (paper §5.1); public keys are exchanged once at setup.
+pub struct HeBackend {
+    my_pk: OuPk,
+    my_sk: OuSk,
+    their_pk: OuPk,
+    prg: Prg,
+}
+
+impl HeBackend {
+    /// Generate this party's key pair and exchange public keys.
+    pub fn setup(chan: &mut Chan, he_bits: usize, seed: u128) -> HeBackend {
+        let party = chan.party;
+        let mut prg = Prg::new(seed ^ ((party as u128) << 96) ^ 0xE1);
+        chan.set_phase("offline.hekeys");
+        let (my_pk, my_sk) = Ou::keygen(he_bits, &mut prg);
+        chan.send_bytes(&pk_to_bytes(&my_pk));
+        let their_pk = pk_from_bytes(&chan.recv_bytes());
+        HeBackend { my_pk, my_sk, their_pk, prg }
+    }
+
+    /// One directed sparse product: this party is the sparse holder when
+    /// `my_turn_sparse`, otherwise the dense holder of `dense`.
+    #[allow(clippy::too_many_arguments)]
+    fn sparse_cross(
+        &mut self,
+        chan: &mut Chan,
+        x_csr: &Csr,
+        dense: &Mat,
+        x_rows: usize,
+        y_shape: (usize, usize),
+        my_turn_sparse: bool,
+    ) -> Mat {
+        if my_turn_sparse {
+            protocol2::sparse_party::<Ou>(chan, &self.their_pk, x_csr, y_shape, &mut self.prg)
+        } else {
+            protocol2::dense_party::<Ou>(chan, &self.my_pk, &self.my_sk, dense, x_rows, &mut self.prg)
+        }
+    }
+}
+
+impl CrossProductBackend for HeBackend {
+    fn name(&self) -> &'static str {
+        "he-protocol2"
+    }
+
+    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
+        let n = x.dense.rows;
+        let k = mu.rows;
+        let d = mu.cols;
+        let party = s.party();
+        s.flush(); // ship the staged norm reveal before the HE exchange
+        let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(mu, d_a);
+        // Cross 1: X_A (sparse at A) × ⟨μ_B⟩ A-block ᵀ (dense at B).
+        let ya = mu_a_blk.transpose(); // d_a×k — B's share is the payload
+        let cross1 =
+            self.sparse_cross(s.chan, x.csr(), &ya, n, (d_a, k), party == 0);
+        // Cross 2: X_B (sparse at B) × ⟨μ_A⟩ B-block ᵀ (dense at A).
+        let yb = mu_b_blk.transpose(); // d_b×k
+        let cross2 =
+            self.sparse_cross(s.chan, x.csr(), &yb, n, (d - d_a, k), party == 1);
+        cross1.add(&cross2)
+    }
+
+    fn s3_numerator(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_share: &Mat,
+        d_a: usize,
+        d: usize,
+    ) -> PendingNumerator {
+        let n = c_share.rows;
+        let k = c_share.cols;
+        let party = s.party();
+        let d_mine = if party == 0 { d_a } else { d - d_a };
+        // Local: ⟨C⟩_meᵀ · X_me = (X_meᵀ·⟨C⟩_me)ᵀ via sparse transpose product.
+        let local = x.csr().t_matmul_dense(c_share).transpose(); // k×d_mine
+        // Cross: ⟨C⟩_otherᵀ · X_me = (X_meᵀ · ⟨C⟩_other)ᵀ — me sparse
+        // holder of X_meᵀ, other dense holder of its C share.
+        let xt = x.csr().transpose(); // d_mine×n
+        // Direction 1: block A (me = party 0 sparse).
+        let cross_a = self.sparse_cross(
+            s.chan,
+            &xt,
+            c_share,
+            if party == 0 { d_mine } else { d_a },
+            (n, k),
+            party == 0,
+        );
+        // Direction 2: block B (me = party 1 sparse).
+        let cross_b = self.sparse_cross(
+            s.chan,
+            &xt,
+            c_share,
+            if party == 1 { d_mine } else { d - d_a },
+            (n, k),
+            party == 1,
+        );
+        // Assemble numerator blocks in feature order.
+        let my_cross = if party == 0 { &cross_a } else { &cross_b };
+        let my_block = local.add(&my_cross.transpose()); // k×d_mine
+        let other_block = if party == 0 {
+            cross_b.transpose() // my share of B's block (k×d_b)
+        } else {
+            cross_a.transpose() // my share of A's block (k×d_a)
+        };
+        let num = if party == 0 {
+            my_block.hstack(&other_block)
+        } else {
+            other_block.hstack(&my_block)
+        };
+        PendingNumerator::ready(num)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------
+
+/// Resolve the configured [`EsdMode`] to a backend, performing the
+/// Auto-dispatch density exchange and (for the HE path) key setup. The
+/// backend's label is its own [`CrossProductBackend::name`].
+pub fn select(
+    chan: &mut Chan,
+    cfg: &SecureKmeansConfig,
+    x: &PartyData,
+) -> Box<dyn CrossProductBackend> {
+    match cfg.effective_esd() {
+        EsdMode::Vectorized => Box::new(BeaverBackend),
+        EsdMode::Naive => Box::new(NaiveBackend),
+        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed)),
+        EsdMode::Auto => {
+            chan.set_phase("setup.density");
+            let mine = [x.nnz(), x.dense.len() as u64];
+            let theirs = chan.exchange_u64s(&mine);
+            let total = (mine[1] + theirs[1]).max(1);
+            let density = (mine[0] + theirs[0]) as f64 / total as f64;
+            if density < AUTO_DENSITY_THRESHOLD {
+                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed))
+            } else {
+                Box::new(BeaverBackend)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pk_serialization_roundtrip() {
+        let mut prg = Prg::new(5);
+        let (pk, _) = Ou::keygen(384, &mut prg);
+        let back = pk_from_bytes(&pk_to_bytes(&pk));
+        assert_eq!(back.n, pk.n);
+        assert_eq!(back.g, pk.g);
+        assert_eq!(back.h, pk.h);
+        assert_eq!(back.n_bits, pk.n_bits);
+    }
+
+    #[test]
+    fn party_data_counts_nonzeros() {
+        let m = Mat::from_vec(2, 3, vec![0, 5, 0, 1, 0, 0]);
+        assert_eq!(PartyData::dense_only(m.clone()).nnz(), 2);
+        assert_eq!(PartyData::with_csr(m).nnz(), 2);
+    }
+}

@@ -1,5 +1,7 @@
 //! Configuration for secure K-means runs.
 
+use crate::ss::RoundPolicy;
+
 /// How the joint data is split between the two parties (paper §4.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Partition {
@@ -9,15 +11,26 @@ pub enum Partition {
     Horizontal { n_a: usize },
 }
 
-/// Distance-step implementation, for the Q3 vectorization ablation.
+/// Which backend evaluates the S1/S3 cross products (the only step where
+/// the dense, sparse and ablation paths differ — see
+/// [`crate::kmeans::backend::CrossProductBackend`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EsdMode {
-    /// Matrix-form Eq. (3): one Beaver round per cross product.
+    /// Matrix-form Eq. (3): Beaver matrix triples, all cross products in
+    /// one reveal flight.
     #[default]
     Vectorized,
     /// Pre-vectorization baseline: one scalar protocol per (sample,
     /// centroid) pair — the n·k-interaction cost the paper eliminates.
     Naive,
+    /// HE Protocol 2 (paper §4.3): the sparse holder evaluates over
+    /// ciphertexts of the small dense operand. Vertical partition only.
+    He,
+    /// Density-based auto-dispatch: parties exchange their local nnz
+    /// counts at setup and pick [`EsdMode::He`] below
+    /// [`crate::kmeans::backend::AUTO_DENSITY_THRESHOLD`], otherwise
+    /// [`EsdMode::Vectorized`].
+    Auto,
 }
 
 /// Parameters of a secure K-means run.
@@ -31,15 +44,33 @@ pub struct SecureKmeansConfig {
     pub seed: u128,
     /// Data partition between parties.
     pub partition: Partition,
-    /// Distance-step implementation.
+    /// Cross-product backend selection.
     pub esd: EsdMode,
-    /// Route sparse cross products through HE Protocol 2.
+    /// Legacy switch: route sparse cross products through HE Protocol 2
+    /// (equivalent to `esd: EsdMode::He` when `esd` is the default).
     pub sparse: bool,
     /// HE modulus bits for the sparse path (paper: 2048).
     pub he_bits: usize,
     /// Optional convergence threshold ε (checked with F_CSC each
     /// iteration when set; `None` = fixed iteration count only).
     pub epsilon: Option<f64>,
+    /// How the protocol engine maps gates to flights:
+    /// [`RoundPolicy::Coalesced`] (default) shares one flight among all
+    /// independent gates of a dependency level; [`RoundPolicy::PerGate`]
+    /// is the gate-per-flight ablation baseline.
+    pub round_policy: RoundPolicy,
+}
+
+impl SecureKmeansConfig {
+    /// The backend actually requested once the legacy `sparse` flag is
+    /// folded in.
+    pub fn effective_esd(&self) -> EsdMode {
+        if self.sparse && self.esd == EsdMode::Vectorized {
+            EsdMode::He
+        } else {
+            self.esd
+        }
+    }
 }
 
 impl Default for SecureKmeansConfig {
@@ -53,6 +84,7 @@ impl Default for SecureKmeansConfig {
             sparse: false,
             he_bits: 768,
             epsilon: None,
+            round_policy: RoundPolicy::Coalesced,
         }
     }
 }
@@ -67,5 +99,16 @@ mod tests {
         assert_eq!(c.esd, EsdMode::Vectorized);
         assert!(!c.sparse);
         assert!(c.epsilon.is_none());
+        assert_eq!(c.round_policy, RoundPolicy::Coalesced);
+        assert_eq!(c.effective_esd(), EsdMode::Vectorized);
+    }
+
+    #[test]
+    fn legacy_sparse_flag_maps_to_he() {
+        let c = SecureKmeansConfig { sparse: true, ..Default::default() };
+        assert_eq!(c.effective_esd(), EsdMode::He);
+        // An explicit esd wins over the legacy flag.
+        let c = SecureKmeansConfig { sparse: true, esd: EsdMode::Naive, ..Default::default() };
+        assert_eq!(c.effective_esd(), EsdMode::Naive);
     }
 }

@@ -5,34 +5,49 @@
 //! omitted (it never changes comparisons). Everything stays at scale 2f —
 //! comparisons are scale-invariant, so no truncation round is spent here.
 //!
-//! Cross products (one party's plaintext block × the other party's
-//! centroid share block) go through matrix Beaver triples (one round
-//! each); with `EsdMode::Naive` they instead run one scalar protocol per
-//! (sample, centroid) pair — the pre-vectorization baseline of Q3.
+//! **Round batching:** the norm square and both vertical cross products
+//! are independent gates, so their masked reveals are staged together
+//! and the whole step is **one** flight (the seed engine paid three).
+//! With `EsdMode::Naive` the cross products instead run one scalar
+//! protocol per (sample, centroid) pair — the pre-vectorization baseline
+//! of Q3. The HE path stages its norm reveal the same way and pushes the
+//! cross products through Protocol 2 (see [`crate::kmeans::backend`]).
 
 use crate::ring::matrix::Mat;
-use crate::ss::arith::ssquare_elem;
-use crate::ss::matmul::private_matmul;
-use crate::ss::Ctx;
+use crate::ss::arith::ssquare_elem_begin;
+use crate::ss::matmul::{private_matmul, private_matmul_begin};
+use crate::ss::pending::Pending;
+use crate::ss::Session;
 
-/// Shares of the per-cluster squared-norm row `[|μ_1|², …, |μ_k|²]`,
-/// broadcast to n rows (scale 2f).
-pub fn centroid_norms(ctx: &mut Ctx, mu: &Mat, n: usize) -> Mat {
-    let sq = ssquare_elem(ctx, mu); // k×d, scale 2f
-    let mut u = Mat::zeros(1, mu.rows);
-    for j in 0..mu.rows {
-        let mut acc = 0u64;
-        for l in 0..mu.cols {
-            acc = acc.wrapping_add(sq.at(j, l));
+/// Stage the shares of the per-cluster squared-norm row
+/// `[|μ_1|², …, |μ_k|²]`, broadcast to n rows (scale 2f). Resolves after
+/// the next flush, so the reveal rides whatever flight the caller builds.
+pub fn centroid_norms_begin(ctx: &mut Session, mu: &Mat, n: usize) -> Pending<Mat> {
+    let k = mu.rows;
+    let d = mu.cols;
+    ssquare_elem_begin(ctx, mu).map(move |sq| {
+        // sq is k×d at scale 2f; reduce rows, broadcast over samples.
+        let mut u = vec![0u64; k];
+        for j in 0..k {
+            let mut acc = 0u64;
+            for l in 0..d {
+                acc = acc.wrapping_add(sq.data[j * d + l]);
+            }
+            u[j] = acc;
         }
-        u.data[j] = acc;
-    }
-    // Broadcast over samples (local).
-    let mut out = Mat::zeros(n, mu.rows);
-    for i in 0..n {
-        out.row_mut(i).copy_from_slice(&u.data);
-    }
-    out
+        let mut out = Mat::zeros(n, k);
+        for i in 0..n {
+            out.row_mut(i).copy_from_slice(&u);
+        }
+        out
+    })
+}
+
+/// Shares of the broadcast squared-norm matrix (single-gate wrapper).
+pub fn centroid_norms(ctx: &mut Session, mu: &Mat, n: usize) -> Mat {
+    let p = centroid_norms_begin(ctx, mu, n);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
 /// Split a k×d centroid share into the vertical blocks
@@ -41,35 +56,55 @@ pub fn split_mu_vertical(mu: &Mat, d_a: usize) -> (Mat, Mat) {
     (mu.cols_slice(0, d_a), mu.cols_slice(d_a, mu.cols))
 }
 
-/// Vertical F'_ESD: `x_mine` is this party's plaintext feature block
-/// (n×d_mine, fixed-point), `mu` this party's centroid share (k×d).
-/// Returns shares of `D' (n×k)` at scale 2f.
-pub fn vertical(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+/// Stage the two vertical cross products
+/// `X_A·(⟨μ⟩_B A-block)ᵀ` and `X_B·(⟨μ⟩_A B-block)ᵀ` (each n×k).
+/// Shared by [`vertical`] and the Beaver backend; both reveals ride one
+/// flight together with anything else the caller staged.
+pub fn vertical_cross_begin(
+    ctx: &mut Session,
+    x_mine: &Mat,
+    mu: &Mat,
+    d_a: usize,
+) -> (Pending<Mat>, Pending<Mat>) {
     let n = x_mine.rows;
     let k = mu.rows;
     let d_b = mu.cols - d_a;
     let party = ctx.party();
-    let u = centroid_norms(ctx, mu, n);
+    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
+    // Cross 1: X_A (A plaintext) · ⟨μ⟩_B's A-block ᵀ (B share).
+    let cross1 = if party == 0 {
+        private_matmul_begin(ctx, x_mine, (n, d_a), (d_a, k), true)
+    } else {
+        let mb = mu_a_blk.transpose(); // d_a×k
+        private_matmul_begin(ctx, &mb, (d_a, k), (n, d_a), false)
+    };
+    // Cross 2: X_B (B plaintext) · ⟨μ⟩_A's B-block ᵀ (A share).
+    let cross2 = if party == 1 {
+        private_matmul_begin(ctx, x_mine, (n, d_b), (d_b, k), true)
+    } else {
+        let mb = mu_b_blk.transpose(); // d_b×k
+        private_matmul_begin(ctx, &mb, (d_b, k), (n, d_b), false)
+    };
+    (cross1, cross2)
+}
+
+/// Vertical F'_ESD: `x_mine` is this party's plaintext feature block
+/// (n×d_mine, fixed-point), `mu` this party's centroid share (k×d).
+/// Returns shares of `D' (n×k)` at scale 2f. One flight total.
+pub fn vertical(ctx: &mut Session, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+    let n = x_mine.rows;
+    let party = ctx.party();
+    let u_p = centroid_norms_begin(ctx, mu, n);
+    let (c1_p, c2_p) = vertical_cross_begin(ctx, x_mine, mu, d_a);
+    ctx.flush();
+    let u = u_p.resolve(ctx);
+    let cross1 = c1_p.resolve(ctx);
+    let cross2 = c2_p.resolve(ctx);
 
     // Local term: X_mine · ⟨μ⟩_mine-block ᵀ contributes to my share.
     let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
     let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
     let local = crate::runtime::dispatch::matmul(x_mine, &my_blk.transpose()); // n×k
-
-    // Cross 1: X_A (A plaintext) · ⟨μ⟩_B's A-block ᵀ (B share).
-    let cross1 = if party == 0 {
-        private_matmul(ctx, x_mine, (n, d_a), (d_a, k), true)
-    } else {
-        let mb = mu_a_blk.transpose(); // d_a×k
-        private_matmul(ctx, &mb, (d_a, k), (n, d_a), false)
-    };
-    // Cross 2: X_B (B plaintext) · ⟨μ⟩_A's B-block ᵀ (A share).
-    let cross2 = if party == 1 {
-        private_matmul(ctx, x_mine, (n, d_b), (d_b, k), true)
-    } else {
-        let mb = mu_b_blk.transpose(); // d_b×k
-        private_matmul(ctx, &mb, (d_b, k), (n, d_b), false)
-    };
 
     let xmu = local.add(&cross1).add(&cross2);
     u.sub(&xmu.scale(2))
@@ -77,60 +112,57 @@ pub fn vertical(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
 
 /// Horizontal F'_ESD: `x_mine` is this party's sample block (n_mine×d);
 /// `n_a` is party A's (public) sample count. Returns shares of the full
-/// stacked `D' (n×k)`.
-pub fn horizontal(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, n_a: usize, n: usize) -> Mat {
+/// stacked `D' (n×k)`. One flight total.
+pub fn horizontal(ctx: &mut Session, x_mine: &Mat, mu: &Mat, n_a: usize, n: usize) -> Mat {
     let k = mu.rows;
     let d = mu.cols;
     let party = ctx.party();
     let n_b = n - n_a;
-    let u = centroid_norms(ctx, mu, n);
+    let u_p = centroid_norms_begin(ctx, mu, n);
 
     // Block A (rows 0..n_a): X_A·μᵀ = X_A·⟨μ⟩_Aᵀ (A local) + X_A·⟨μ⟩_Bᵀ.
-    let block_a = {
-        let cross = if party == 0 {
-            private_matmul(ctx, x_mine, (n_a, d), (d, k), true)
-        } else {
-            let mb = mu.transpose();
-            private_matmul(ctx, &mb, (d, k), (n_a, d), false)
-        };
-        if party == 0 {
-            x_mine.matmul(&mu.transpose()).add(&cross)
-        } else {
-            cross
-        }
+    let cross_a_p = if party == 0 {
+        private_matmul_begin(ctx, x_mine, (n_a, d), (d, k), true)
+    } else {
+        let mb = mu.transpose();
+        private_matmul_begin(ctx, &mb, (d, k), (n_a, d), false)
     };
     // Block B (rows n_a..n): symmetric.
-    let block_b = {
-        let cross = if party == 1 {
-            private_matmul(ctx, x_mine, (n_b, d), (d, k), true)
-        } else {
-            let mb = mu.transpose();
-            private_matmul(ctx, &mb, (d, k), (n_b, d), false)
-        };
-        if party == 1 {
-            x_mine.matmul(&mu.transpose()).add(&cross)
-        } else {
-            cross
-        }
+    let cross_b_p = if party == 1 {
+        private_matmul_begin(ctx, x_mine, (n_b, d), (d, k), true)
+    } else {
+        let mb = mu.transpose();
+        private_matmul_begin(ctx, &mb, (d, k), (n_b, d), false)
+    };
+    ctx.flush();
+    let u = u_p.resolve(ctx);
+    let cross_a = cross_a_p.resolve(ctx);
+    let cross_b = cross_b_p.resolve(ctx);
+
+    let block_a = if party == 0 {
+        x_mine.matmul(&mu.transpose()).add(&cross_a)
+    } else {
+        cross_a
+    };
+    let block_b = if party == 1 {
+        x_mine.matmul(&mu.transpose()).add(&cross_b)
+    } else {
+        cross_b
     };
     let xmu = block_a.vstack(&block_b);
     u.sub(&xmu.scale(2))
 }
 
-/// Pre-vectorization baseline (Q3 ablation, vertical only): the same
-/// D' but with one scalar secure multiplication *per (sample, centroid)
-/// pair* — n·k protocol rounds per iteration instead of O(1).
-pub fn vertical_naive(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+/// The naive cross-product sum (Q3 ablation, vertical only): one scalar
+/// secure multiplication *per (sample, centroid) pair* — n·k protocol
+/// flights instead of one. Returns the summed cross contribution (n×k).
+pub fn vertical_naive_cross(ctx: &mut Session, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
     let n = x_mine.rows;
     let k = mu.rows;
     let d_b = mu.cols - d_a;
     let party = ctx.party();
-    let u = centroid_norms(ctx, mu, n);
     let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
-    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
-    let local = x_mine.matmul(&my_blk.transpose());
-
-    let mut xmu = local;
+    let mut xmu = Mat::zeros(n, k);
     for i in 0..n {
         for j in 0..k {
             // Cross 1 for this single pair: row i of X_A · col j of μ_B,A-blk.
@@ -154,6 +186,20 @@ pub fn vertical_naive(ctx: &mut Ctx, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat 
             *cell = cell.wrapping_add(c1.data[0]).wrapping_add(c2.data[0]);
         }
     }
+    xmu
+}
+
+/// Pre-vectorization baseline (Q3 ablation, vertical only): the same
+/// D' but with one scalar secure multiplication per (sample, centroid)
+/// pair.
+pub fn vertical_naive(ctx: &mut Session, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
+    let n = x_mine.rows;
+    let party = ctx.party();
+    let u = centroid_norms(ctx, mu, n);
+    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
+    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
+    let local = x_mine.matmul(&my_blk.transpose());
+    let xmu = local.add(&vertical_naive_cross(ctx, x_mine, mu, d_a));
     u.sub(&xmu.scale(2))
 }
 
@@ -164,6 +210,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::{decode_f64, SCALE};
     use crate::ss::share::{reconstruct, split};
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     /// Reference D' on plaintext reals.
@@ -279,7 +326,7 @@ mod tests {
     }
 
     #[test]
-    fn naive_costs_nk_rounds() {
+    fn vectorized_vertical_is_one_flight() {
         let (n, d, k, d_a) = (4, 2, 2, 1);
         let mut prg = Prg::new(95);
         let x: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
@@ -299,7 +346,7 @@ mod tests {
                 vertical(&mut ctx, &xb.clone(), &mu1, d_a);
             },
         );
-        // Vectorized: 3 rounds (norms + 2 cross products).
-        assert!(m_vec.total().rounds <= 3, "vectorized rounds = {}", m_vec.total().rounds);
+        // Round-batched: norms + both cross products share one flight.
+        assert_eq!(m_vec.total().rounds, 1, "S1 must coalesce into one flight");
     }
 }

@@ -1,23 +1,30 @@
 //! K-means: the plaintext baseline and the paper's privacy-preserving
-//! protocol (§4.2-4.3).
+//! protocol (§4.2-4.3), on the round-batched protocol engine.
 //!
 //! Each Lloyd iteration decomposes into three secure steps, all
-//! vectorized over the full sample set:
+//! vectorized over the full sample set *and* flight-batched so a step
+//! costs its dependency depth, not its gate count:
 //!
-//! * **S1 — distance** ([`esd`]): `⟨D'⟩ = ⟨U⟩ − 2·X·⟨μ⟩ᵀ` (Eq. 3),
-//!   squared-norm term precomputed per iteration, cross products via
-//!   matrix Beaver triples (dense) or HE Protocol 2 (sparse).
+//! * **S1 — distance** ([`esd`]): `⟨D'⟩ = ⟨U⟩ − 2·X·⟨μ⟩ᵀ` (Eq. 3). The
+//!   norm square and both cross products stage into **one** reveal
+//!   flight; the cross products themselves go through a pluggable
+//!   [`backend::CrossProductBackend`] (Beaver triples, HE Protocol 2, or
+//!   the naive Q3 ablation — `EsdMode::Auto` picks by joint density).
 //! * **S2 — assignment** ([`assign`]): binary-tree reduction of `F_min^k`
-//!   with CMP + MUX modules (Fig. 1), producing a shared one-hot matrix.
+//!   with CMP + fused daBit MUX modules (Fig. 1), producing a shared
+//!   one-hot matrix in exactly `⌈log₂ k⌉·(CMP_ROUNDS+1)` flights.
 //! * **S3 — update** ([`update`]): `⟨μ⟩ = ⟨Cᵀ X⟩ / ⟨1ᵀ C⟩` with secure
-//!   division; the denominator is a free local column sum.
+//!   division; the numerator reveals coalesce into the empty-cluster
+//!   comparison's first flight, and the denominator is a free local
+//!   column sum.
 //!
 //! [`secure`] orchestrates the iterations for vertically and
-//! horizontally partitioned data; [`sparse`] swaps the cross products to
-//! the HE path. [`plaintext`] is the cleartext oracle the protocol is
-//! validated against.
+//! horizontally partitioned data over any backend; [`sparse`] is the
+//! thin HE-path entrypoint. [`plaintext`] is the cleartext oracle the
+//! protocol is validated against.
 
 pub mod assign;
+pub mod backend;
 pub mod config;
 pub mod esd;
 pub mod init;

@@ -2,13 +2,17 @@
 //!
 //! Simulates the two parties as threads over the accounted channel and
 //! runs the full protocol: initialization → t × (S1 distance → S2
-//! assignment → S3 update) → output reconstruction. Communication is
-//! metered per phase (`online.s1` / `online.s2` / `online.s3` /
-//! `reveal`), triple generation time is separated by
+//! assignment → S3 update) → output reconstruction, with every step on
+//! the round-batched [`crate::ss::Session`] engine and the S1/S3 cross
+//! products behind a [`CrossProductBackend`] (Beaver, HE Protocol 2 or
+//! the naive ablation — `EsdMode::Auto` dispatches on joint density).
+//! Communication is metered per phase (`online.s1` / `online.s2` /
+//! `online.s3` / `reveal`), triple generation time is separated by
 //! [`crate::offline::timed::TimedSource`], and the exact offline
 //! [`Demand`] is recorded for OT-based pricing — together these give
 //! every number the paper's tables and figures need from a single run.
 
+use super::backend::{self, CrossProductBackend, PartyData};
 use super::config::{EsdMode, Partition, SecureKmeansConfig};
 use super::{assign, esd, init, update};
 use crate::data::blobs::Dataset;
@@ -19,7 +23,7 @@ use crate::offline::timed::TimedSource;
 use crate::ring::matrix::Mat;
 use crate::ss::share::reconstruct;
 use crate::ss::triples::{Ledger, TripleSource};
-use crate::ss::Ctx;
+use crate::ss::Session;
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
 use std::time::Instant;
@@ -44,6 +48,9 @@ pub struct SecureKmeansOutput {
     pub k: usize,
     pub d: usize,
     pub iters_run: usize,
+    /// Which cross-product backend the run used ("beaver",
+    /// "he-protocol2", "naive") — set by explicit `EsdMode` or Auto.
+    pub backend_name: &'static str,
     /// Party-0 / party-1 communication meters (phases: online.s1…).
     pub meter_a: Meter,
     pub meter_b: Meter,
@@ -58,11 +65,12 @@ pub struct SecureKmeansOutput {
     pub step_wall: StepWall,
 }
 
-/// One party's raw protocol outputs (shared with the sparse driver).
+/// One party's raw protocol outputs (shared with the sparse entrypoint).
 pub struct PartyResult {
     pub step_demands: [Demand; 3],
     pub mu: Mat,
     pub assignments: Vec<usize>,
+    pub backend_name: &'static str,
     pub demand: Demand,
     pub ledger: Ledger,
     pub offline_secs: f64,
@@ -88,6 +96,7 @@ impl PartyResult {
             k,
             d,
             iters_run: self.iters,
+            backend_name: self.backend_name,
             meter_a,
             meter_b,
             demand: self.demand,
@@ -124,10 +133,11 @@ pub fn split_dataset(data: &Dataset, partition: Partition) -> (Mat, Mat) {
     }
 }
 
-/// One party's protocol main loop (dense SS path).
+/// One party's protocol main loop, generic over the cross-product
+/// backend (vertical) or the dedicated horizontal path.
 fn party_main(
     chan: &mut Chan,
-    x_mine: Mat,
+    mut x: PartyData,
     n: usize,
     d: usize,
     cfg: &SecureKmeansConfig,
@@ -138,10 +148,26 @@ fn party_main(
     let mut store = TripleStore::new(timed);
     let mut steps = StepWall::default();
 
+    // Backend selection (vertical only; horizontal is always Beaver-style).
+    let mut cross_backend: Option<Box<dyn CrossProductBackend>> = match cfg.partition {
+        Partition::Vertical { .. } => Some(backend::select(chan, cfg, &x)),
+        Partition::Horizontal { .. } => None,
+    };
+    let backend_name = cross_backend
+        .as_ref()
+        .map(|b| b.name())
+        .unwrap_or_else(|| backend::BeaverBackend.name());
+    // The CSR view is speculative under EsdMode::Auto; if density routed
+    // us to the dense Beaver path, drop it so the per-iteration S1 local
+    // product uses the blocked/PJRT kernel, not per-nonzero indirection.
+    if backend_name != "he-protocol2" {
+        x.csr = None;
+    }
+
     chan.set_phase("online.init");
     let mut mu = match cfg.partition {
-        Partition::Vertical { d_a } => init::vertical(&x_mine, d_a, d, n, cfg.k, cfg.seed, party),
-        Partition::Horizontal { n_a } => init::horizontal(&x_mine, n_a, n, cfg.k, cfg.seed, party),
+        Partition::Vertical { d_a } => init::vertical(&x.dense, d_a, d, n, cfg.k, cfg.seed, party),
+        Partition::Horizontal { n_a } => init::horizontal(&x.dense, n_a, n, cfg.k, cfg.seed, party),
     };
 
     let mut c_share = Mat::zeros(n, cfg.k);
@@ -150,35 +176,43 @@ fn party_main(
     for _t in 0..cfg.iters {
         iters += 1;
 
-        // S1 — distance.
+        // S1 — distance: norm square + cross products, one flight on the
+        // Beaver path.
         let t0 = Instant::now();
         let off0 = store.inner().secs;
         let dem0 = store.demand.clone();
         let dmat = {
             let mut ctx =
-                Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5));
+                Session::new(chan, &mut store, Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5))
+                    .with_policy(cfg.round_policy);
             ctx.set_phase("online.s1");
-            match (cfg.partition, cfg.esd) {
-                (Partition::Vertical { d_a }, EsdMode::Vectorized) => {
-                    esd::vertical(&mut ctx, &x_mine, &mu, d_a)
-                }
-                (Partition::Vertical { d_a }, EsdMode::Naive) => {
-                    esd::vertical_naive(&mut ctx, &x_mine, &mu, d_a)
+            match (cfg.partition, &mut cross_backend) {
+                (Partition::Vertical { d_a }, Some(be)) => {
+                    let u_p = esd::centroid_norms_begin(&mut ctx, &mu, n);
+                    let cross = be.s1_cross(&mut ctx, &x, &mu, d_a);
+                    ctx.flush();
+                    let u = u_p.resolve(&mut ctx);
+                    let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(&mu, d_a);
+                    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
+                    let local = x.local_matmul(&my_blk.transpose());
+                    u.sub(&local.add(&cross).scale(2))
                 }
                 (Partition::Horizontal { n_a }, _) => {
-                    esd::horizontal(&mut ctx, &x_mine, &mu, n_a, n)
+                    esd::horizontal(&mut ctx, &x.dense, &mu, n_a, n)
                 }
+                (Partition::Vertical { .. }, None) => unreachable!("vertical run needs a backend"),
             }
         };
         steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
         step_demands[0].extend(&store.demand.delta(&dem0));
 
-        // S2 — assignment.
+        // S2 — assignment: ⌈log₂ k⌉ levels of CMP + fused MUX.
         let t0 = Instant::now();
         let off0 = store.inner().secs;
         let dem0 = store.demand.clone();
         {
-            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6));
+            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6))
+                .with_policy(cfg.round_policy);
             ctx.set_phase("online.s2");
             let (c_new, _minvals) = assign::min_k(&mut ctx, &dmat);
             c_share = c_new;
@@ -186,29 +220,33 @@ fn party_main(
         steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
         step_demands[1].extend(&store.demand.delta(&dem0));
 
-        // S3 — update.
+        // S3 — update: the numerator reveals coalesce into the division
+        // prep (empty-cluster comparison), then one fused MUX flight.
         let t0 = Instant::now();
         let off0 = store.inner().secs;
         let dem0 = store.demand.clone();
         let mu_new = {
-            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7));
+            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
+                .with_policy(cfg.round_policy);
             ctx.set_phase("online.s3");
-            let num = match cfg.partition {
-                Partition::Vertical { d_a } => {
-                    update::numerator_vertical(&mut ctx, &x_mine, &c_share, d_a, d)
+            let num = match (cfg.partition, &mut cross_backend) {
+                (Partition::Vertical { d_a }, Some(be)) => {
+                    be.s3_numerator(&mut ctx, &x, &c_share, d_a, d)
                 }
-                Partition::Horizontal { n_a } => {
-                    update::numerator_horizontal(&mut ctx, &x_mine, &c_share, n_a)
+                (Partition::Horizontal { n_a }, _) => {
+                    update::numerator_horizontal_begin(&mut ctx, &x.dense, &c_share, n_a)
                 }
+                (Partition::Vertical { .. }, None) => unreachable!("vertical run needs a backend"),
             };
-            update::finish_update(&mut ctx, &num, &c_share, &mu)
+            update::finish_update_pending(&mut ctx, num, &c_share, &mu)
         };
         steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
         step_demands[2].extend(&store.demand.delta(&dem0));
 
         // Optional F_CSC convergence check.
         let stop = if let Some(eps) = cfg.epsilon {
-            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xD8));
+            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xD8))
+                .with_policy(cfg.round_policy);
             ctx.set_phase("online.csc");
             update::converged(&mut ctx, &mu, &mu_new, eps)
         } else {
@@ -232,6 +270,7 @@ fn party_main(
         step_demands,
         mu: mu_plain,
         assignments,
+        backend_name,
         demand: store.demand.clone(),
         ledger: store.ledger(),
         offline_secs: store.inner().secs,
@@ -241,38 +280,32 @@ fn party_main(
     }
 }
 
-/// Run the full two-party protocol on a dataset (dense SS path).
+/// Run the full two-party protocol on a dataset, any partition and any
+/// cross-product backend.
 pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
     if cfg.k < 2 {
         return Err(Error::Config("k must be ≥ 2".into()));
     }
-    if cfg.sparse {
-        return super::sparse::run(data, cfg);
+    let esd_mode = cfg.effective_esd();
+    if matches!(cfg.partition, Partition::Horizontal { .. }) && esd_mode == EsdMode::He {
+        return Err(Error::Config("sparse path supports vertical partitioning (Alg. 3)".into()));
     }
     let (xa, xb) = split_dataset(data, cfg.partition);
     let (n, d) = (data.n, data.d);
+    // Build CSR views when the run may take the HE path.
+    let may_sparse = matches!(esd_mode, EsdMode::He | EsdMode::Auto)
+        && matches!(cfg.partition, Partition::Vertical { .. });
+    let pa = if may_sparse { PartyData::with_csr(xa) } else { PartyData::dense_only(xa) };
+    let pb = if may_sparse { PartyData::with_csr(xb) } else { PartyData::dense_only(xb) };
     let cfg_a = cfg.clone();
     let cfg_b = cfg.clone();
     let ((ra, meter_a), (rb, meter_b)) = run_two_party(
-        move |c| party_main(c, xa, n, d, &cfg_a),
-        move |c| party_main(c, xb, n, d, &cfg_b),
+        move |c| party_main(c, pa, n, d, &cfg_a),
+        move |c| party_main(c, pb, n, d, &cfg_b),
     );
     debug_assert_eq!(ra.mu, rb.mu, "parties must reconstruct identical centroids");
-    Ok(SecureKmeansOutput {
-        step_demands: ra.step_demands,
-        centroids: ra.mu.decode(),
-        assignments: ra.assignments,
-        k: cfg.k,
-        d,
-        iters_run: ra.iters,
-        meter_a,
-        meter_b,
-        demand: ra.demand,
-        ledger: ra.ledger,
-        offline_gen_secs: ra.offline_secs,
-        wall_secs: ra.wall.max(rb.wall),
-        step_wall: ra.steps,
-    })
+    let wall_b = rb.wall;
+    Ok(ra.into_output(cfg.k, d, meter_a, meter_b, wall_b))
 }
 
 /// Convenience: vertical partition with an even feature split.
@@ -322,6 +355,7 @@ mod tests {
             );
         }
         assert_eq!(sec.assignments, plain.assignments);
+        assert_eq!(sec.backend_name, "beaver");
     }
 
     #[test]
@@ -352,6 +386,7 @@ mod tests {
         let v = run(&ds, &base).unwrap();
         let nv = run(&ds, &naive_cfg).unwrap();
         assert_eq!(v.assignments, nv.assignments);
+        assert_eq!(nv.backend_name, "naive");
         let rv = v.meter_a.get("online.s1").rounds;
         let rn = nv.meter_a.get("online.s1").rounds;
         assert!(rn > rv * 5, "naive rounds {rn} must dwarf vectorized {rv}");
@@ -387,5 +422,19 @@ mod tests {
         assert!(out.offline_gen_secs > 0.0);
         assert!(!out.demand.mats.is_empty());
         assert!(out.ledger.bit_triple_lanes > 0);
+        assert!(out.ledger.dabit_lanes > 0, "fused MUX/B2A consume daBits");
+    }
+
+    #[test]
+    fn he_on_horizontal_is_rejected() {
+        let ds = well_separated(20, 2, 2, 10);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 1,
+            sparse: true,
+            partition: Partition::Horizontal { n_a: 10 },
+            ..Default::default()
+        };
+        assert!(run(&ds, &cfg).is_err());
     }
 }

@@ -1,294 +1,37 @@
 //! Sparsity-optimized privacy-preserving K-means (paper §4.3, Alg. 3).
 //!
-//! Identical to the dense driver except that the two cross products of
-//! S1 and S3 run through HE Protocol 2 ([`crate::sparse::protocol2`])
-//! instead of matrix Beaver triples: the sparse holder computes over the
-//! ciphertexts of the *small* operand (centroid share block, assignment
-//! share), skipping zero entries entirely, and communication drops from
-//! `O(n·d)` ring elements to `O((d+n)·k)` ciphertexts — the win that
-//! grows with dimension and sparsity (Figures 4a/4b). Assignment and
-//! division remain in the SS world.
+//! Thin entrypoint: the sparse path is the unified driver of
+//! [`super::secure`] running with the HE Protocol 2 cross-product
+//! backend ([`crate::kmeans::backend::HeBackend`]) — the sparse holder
+//! computes over the ciphertexts of the *small* operand (centroid share
+//! block, assignment share), skipping zero entries entirely, and
+//! communication drops from `O(n·d)` ring elements to `O((d+n)·k)`
+//! ciphertexts — the win that grows with dimension and sparsity
+//! (Figures 4a/4b). Assignment and division remain in the SS world.
 //!
 //! Each party owns an Okamoto-Uchiyama key pair (paper §5.1); public
-//! keys are exchanged once at setup.
+//! keys are exchanged once at setup by the backend.
 
-use super::config::{Partition, SecureKmeansConfig};
-use super::secure::{PartyResult, SecureKmeansOutput, StepWall};
-use super::{assign, esd, init, update};
+use super::config::{EsdMode, SecureKmeansConfig};
+use super::secure::{self, SecureKmeansOutput};
 use crate::data::blobs::Dataset;
-use crate::he::ou::{Ou, OuPk};
-use crate::he::HeScheme;
-use crate::net::{run_two_party, Chan};
-use crate::offline::dealer::Dealer;
-use crate::offline::store::TripleStore;
-use crate::offline::timed::TimedSource;
-use crate::ring::matrix::Mat;
-use crate::sparse::csr::Csr;
-use crate::sparse::protocol2;
-use crate::ss::share::reconstruct;
-use crate::ss::triples::TripleSource;
-use crate::ss::Ctx;
-use crate::util::error::{Error, Result};
-use crate::util::prng::Prg;
-use std::time::Instant;
-
-fn ppkmeans_default_demand() -> crate::offline::store::Demand {
-    crate::offline::store::Demand::default()
-}
-
-/// Serialize an OU public key (n, g, h as length-prefixed big-endian).
-fn pk_to_bytes(pk: &OuPk) -> Vec<u8> {
-    let mut out = Vec::new();
-    for part in [&pk.n, &pk.g, &pk.h] {
-        let b = part.to_bytes_be();
-        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
-        out.extend_from_slice(&b);
-    }
-    out
-}
-
-fn pk_from_bytes(bytes: &[u8]) -> OuPk {
-    let mut parts = Vec::with_capacity(3);
-    let mut off = 0;
-    for _ in 0..3 {
-        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
-        off += 4;
-        parts.push(crate::bigint::BigUint::from_bytes_be(&bytes[off..off + len]));
-        off += len;
-    }
-    let n = parts.remove(0);
-    let g = parts.remove(0);
-    let h = parts.remove(0);
-    OuPk { n_bits: n.bits(), n, g, h }
-}
-
-/// Sparse cross product for the distance step: this party's sparse block
-/// times the *peer's* share of this party's centroid columns.
-/// `my_turn_sparse` — whether I am the sparse holder in this direction.
-#[allow(clippy::too_many_arguments)]
-fn sparse_cross(
-    chan: &mut Chan,
-    my_sk: &<Ou as HeScheme>::Sk,
-    my_pk: &OuPk,
-    their_pk: &OuPk,
-    x_csr: Option<&Csr>,
-    dense: Option<&Mat>,
-    x_rows: usize,
-    y_shape: (usize, usize),
-    prg: &mut Prg,
-    my_turn_sparse: bool,
-) -> Mat {
-    if my_turn_sparse {
-        // I hold the sparse matrix; peer encrypted its dense operand.
-        protocol2::sparse_party::<Ou>(chan, their_pk, x_csr.unwrap(), y_shape, prg)
-    } else {
-        protocol2::dense_party::<Ou>(chan, my_pk, my_sk, dense.unwrap(), x_rows, prg)
-    }
-}
-
-struct SparseParty {
-    x_csr: Csr,
-    x_dense: Mat,
-}
-
-/// One party's sparse-path protocol loop (vertical partitioning).
-#[allow(clippy::too_many_arguments)]
-fn party_main(
-    chan: &mut Chan,
-    me: SparseParty,
-    n: usize,
-    d: usize,
-    d_a: usize,
-    cfg: &SecureKmeansConfig,
-) -> PartyResult {
-    let party = chan.party;
-    let t_start = Instant::now();
-    let timed = TimedSource::new(Dealer::new(cfg.seed, party));
-    let mut store = TripleStore::new(timed);
-    let mut steps = StepWall::default();
-    let mut prg = Prg::new(cfg.seed ^ ((party as u128) << 96) ^ 0xE1);
-
-    // HE setup: generate my key pair, exchange public keys.
-    chan.set_phase("offline.hekeys");
-    let (my_pk, my_sk) = Ou::keygen(cfg.he_bits, &mut prg);
-    chan.send_bytes(&pk_to_bytes(&my_pk));
-    let their_pk = pk_from_bytes(&chan.recv_bytes());
-
-    chan.set_phase("online.init");
-    let mut mu = init::vertical(&me.x_dense, d_a, d, n, cfg.k, cfg.seed, party);
-
-    let d_mine = if party == 0 { d_a } else { d - d_a };
-    let mut c_share = Mat::zeros(n, cfg.k);
-    let mut iters = 0;
-    for _t in 0..cfg.iters {
-        iters += 1;
-
-        // ---- S1: distance with HE cross products.
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        let dmat = {
-            // Norm term via SS (k·d lanes).
-            let u = {
-                let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xF2));
-                ctx.set_phase("online.s1");
-                esd::centroid_norms(&mut ctx, &mu, n)
-            };
-            // Local term: X_mine · ⟨μ⟩_mine-blockᵀ.
-            let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(&mu, d_a);
-            let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
-            let local = me.x_csr.matmul_dense(&my_blk.transpose());
-            // Cross 1: X_A (sparse at A) × ⟨μ_B⟩ A-block ᵀ (dense at B).
-            chan.set_phase("online.s1");
-            let ya = mu_a_blk.transpose(); // d_a×k — B's share is the payload
-            let cross1 = sparse_cross(
-                chan,
-                &my_sk,
-                &my_pk,
-                &their_pk,
-                Some(&me.x_csr),
-                Some(&ya),
-                n,
-                (d_a, cfg.k),
-                &mut prg,
-                party == 0,
-            );
-            // Cross 2: X_B (sparse at B) × ⟨μ_A⟩ B-block ᵀ (dense at A).
-            let yb = mu_b_blk.transpose(); // d_b×k
-            let cross2 = sparse_cross(
-                chan,
-                &my_sk,
-                &my_pk,
-                &their_pk,
-                Some(&me.x_csr),
-                Some(&yb),
-                n,
-                (d - d_a, cfg.k),
-                &mut prg,
-                party == 1,
-            );
-            let xmu = local.add(&cross1).add(&cross2);
-            u.sub(&xmu.scale(2))
-        };
-        steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-
-        // ---- S2: assignment (unchanged SS tree).
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        {
-            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6));
-            ctx.set_phase("online.s2");
-            let (c_new, _) = assign::min_k(&mut ctx, &dmat);
-            c_share = c_new;
-        }
-        steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-
-        // ---- S3: update with HE cross products.
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        let mu_new = {
-            chan.set_phase("online.s3");
-            // Local: ⟨C⟩_meᵀ · X_me = (X_meᵀ·⟨C⟩_me)ᵀ via sparse transpose product.
-            let local = me.x_csr.t_matmul_dense(&c_share).transpose(); // k×d_mine
-            // Cross: ⟨C⟩_otherᵀ · X_me = (X_meᵀ · ⟨C⟩_other)ᵀ — me sparse
-            // holder of X_meᵀ, other dense holder of its C share.
-            let xt = me.x_csr.transpose(); // d_mine×n
-            // Direction 1: block A (me = party 0 sparse).
-            let cross_a = sparse_cross(
-                chan,
-                &my_sk,
-                &my_pk,
-                &their_pk,
-                Some(&xt),
-                Some(&c_share),
-                if party == 0 { d_mine } else { d_a },
-                (n, cfg.k),
-                &mut prg,
-                party == 0,
-            );
-            // Direction 2: block B (me = party 1 sparse).
-            let cross_b = sparse_cross(
-                chan,
-                &my_sk,
-                &my_pk,
-                &their_pk,
-                Some(&xt),
-                Some(&c_share),
-                if party == 1 { d_mine } else { d - d_a },
-                (n, cfg.k),
-                &mut prg,
-                party == 1,
-            );
-            // Assemble numerator blocks in feature order.
-            let my_cross = if party == 0 { &cross_a } else { &cross_b };
-            let my_block = local.add(&my_cross.transpose()); // k×d_mine
-            let other_block = if party == 0 {
-                cross_b.transpose() // my share of B's block (k×d_b)
-            } else {
-                cross_a.transpose() // my share of A's block (k×d_a)
-            };
-            let num = if party == 0 {
-                my_block.hstack(&other_block)
-            } else {
-                other_block.hstack(&my_block)
-            };
-            let mut ctx = Ctx::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7));
-            ctx.set_phase("online.s3");
-            update::finish_update(&mut ctx, &num, &c_share, &mu)
-        };
-        steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-        mu = mu_new;
-    }
-
-    chan.set_phase("reveal");
-    let mu_plain = reconstruct(chan, &mu);
-    let c_plain = reconstruct(chan, &c_share);
-    let assignments = (0..n)
-        .map(|i| (0..cfg.k).find(|&j| c_plain.at(i, j) == 1).unwrap_or(0))
-        .collect();
-
-    PartyResult {
-        step_demands: [
-            ppkmeans_default_demand(),
-            ppkmeans_default_demand(),
-            ppkmeans_default_demand(),
-        ],
-        mu: mu_plain,
-        assignments,
-        demand: store.demand.clone(),
-        ledger: store.ledger(),
-        offline_secs: store.inner().secs,
-        wall: t_start.elapsed().as_secs_f64(),
-        steps,
-        iters,
-    }
-}
+use crate::util::error::Result;
 
 /// Run the sparse-optimized protocol (vertical partitioning only, as in
 /// the paper's Alg. 3).
 pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
-    let Partition::Vertical { d_a } = cfg.partition else {
-        return Err(Error::Config("sparse path supports vertical partitioning (Alg. 3)".into()));
-    };
-    let (xa, xb) = super::secure::split_dataset(data, cfg.partition);
-    let (n, d) = (data.n, data.d);
-    let pa = SparseParty { x_csr: Csr::from_dense(&xa), x_dense: xa };
-    let pb = SparseParty { x_csr: Csr::from_dense(&xb), x_dense: xb };
-    let cfg_a = cfg.clone();
-    let cfg_b = cfg.clone();
-    let ((ra, meter_a), (rb, meter_b)) = run_two_party(
-        move |c| party_main(c, pa, n, d, d_a, &cfg_a),
-        move |c| party_main(c, pb, n, d, d_a, &cfg_b),
-    );
-    debug_assert_eq!(ra.mu, rb.mu, "sparse parties disagree");
-    let wall_b = rb.wall;
-    Ok(ra.into_output(cfg.k, d, meter_a, meter_b, wall_b))
+    let mut cfg = cfg.clone();
+    cfg.esd = EsdMode::He;
+    secure::run(data, &cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::blobs::BlobSpec;
+    use crate::kmeans::config::Partition;
     use crate::kmeans::plaintext;
+    use crate::util::prng::Prg;
 
     fn sparse_dataset(n: usize, d: usize, k: usize, sparsity: f64, seed: u128) -> Dataset {
         let mut spec = BlobSpec::new(n, d, k);
@@ -316,6 +59,7 @@ mod tests {
             ..Default::default()
         };
         let sec = run(&ds, &cfg).unwrap();
+        assert_eq!(sec.backend_name, "he-protocol2");
         let plain = plaintext::kmeans(&ds, 2, 3, cfg.seed);
         assert_eq!(sec.assignments, plain.assignments);
         for i in 0..sec.centroids.len() {
@@ -326,16 +70,5 @@ mod tests {
                 plain.centroids[i]
             );
         }
-    }
-
-    #[test]
-    fn pk_serialization_roundtrip() {
-        let mut prg = Prg::new(5);
-        let (pk, _) = Ou::keygen(384, &mut prg);
-        let back = pk_from_bytes(&pk_to_bytes(&pk));
-        assert_eq!(back.n, pk.n);
-        assert_eq!(back.g, pk.g);
-        assert_eq!(back.h, pk.h);
-        assert_eq!(back.n_bits, pk.n_bits);
     }
 }

@@ -9,147 +9,215 @@
 //! are handled obliviously: a secure comparison flags `count = 0` lanes
 //! and a MUX substitutes (old centroid, count 1) so the division is
 //! always well-defined and reveals nothing.
+//!
+//! **Round batching:** the numerator's cross-product reveals are staged
+//! as a [`PendingNumerator`] and ride the *first flight of the
+//! empty-cluster comparison* (they are independent gates); the
+//! denominator MUX and the numerator MUX share one fused daBit flight.
+//! The pre-batching pipeline paid 2 (matmuls) + 2 (B2A + MUX) extra
+//! dependent flights here.
 
-use crate::ring::matrix::Mat;
-use crate::ss::boolean::b2a;
-use crate::ss::compare::lt_public;
-use crate::ss::divide::divide_rows;
-use crate::ss::matmul::ss_matmul;
-use crate::ss::mux::mux_arith;
-use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
-use crate::ss::Ctx;
 use crate::ring::fixed::{FRAC_BITS, SCALE};
+use crate::ring::matrix::Mat;
 use crate::ss::arith::ssquare_elem;
 use crate::ss::boolean::msb;
+use crate::ss::compare::lt_public;
+use crate::ss::divide::divide_rows;
+use crate::ss::matmul::ss_matmul_begin;
+use crate::ss::mux::mux_bits_begin;
+use crate::ss::pending::Pending;
+use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
+use crate::ss::Session;
 
-/// Numerator `⟨Cᵀ·X⟩` for vertical partitioning: each party's feature
-/// block contributes `⟨C⟩ᵀ·X_p = ⟨C⟩_pᵀ·X_p (local) + ⟨C⟩_otherᵀ·X_p
-/// (cross)`. Blocks are reassembled in feature order. Scale f.
-pub fn numerator_vertical(ctx: &mut Ctx, x_mine: &Mat, c: &Mat, d_a: usize, d: usize) -> Mat {
+/// A staged S3 numerator: cross-product reveals sit in the round buffer
+/// (riding whatever flight departs next) and the block assembly runs at
+/// resolve time. Backends that finish eagerly (HE Protocol 2) wrap their
+/// result with [`PendingNumerator::ready`].
+pub struct PendingNumerator {
+    parts: Vec<Pending<Mat>>,
+    assemble: Box<dyn FnOnce(Vec<Mat>) -> Mat + Send>,
+}
+
+impl PendingNumerator {
+    /// Wrap staged cross products plus the local assembly.
+    pub fn new(
+        parts: Vec<Pending<Mat>>,
+        assemble: impl FnOnce(Vec<Mat>) -> Mat + Send + 'static,
+    ) -> Self {
+        PendingNumerator { parts, assemble: Box::new(assemble) }
+    }
+
+    /// An already-computed numerator (no staged reveals).
+    pub fn ready(num: Mat) -> Self {
+        PendingNumerator { parts: vec![], assemble: Box::new(move |_| num) }
+    }
+
+    /// Resolve every staged part (post-flush) and assemble.
+    pub fn resolve(self, ctx: &mut Session) -> Mat {
+        let mats: Vec<Mat> = self.parts.into_iter().map(|p| p.resolve(ctx)).collect();
+        (self.assemble)(mats)
+    }
+}
+
+/// Stage the numerator `⟨Cᵀ·X⟩` for vertical partitioning: each party's
+/// feature block contributes `⟨C⟩ᵀ·X_p = ⟨C⟩_pᵀ·X_p (local) +
+/// ⟨C⟩_otherᵀ·X_p (cross)`. Blocks are reassembled in feature order at
+/// resolve time. Scale f.
+pub fn numerator_vertical_begin(
+    ctx: &mut Session,
+    x_mine: &Mat,
+    c: &Mat,
+    d_a: usize,
+    d: usize,
+) -> PendingNumerator {
     let n = c.rows;
     let k = c.cols;
     let party = ctx.party();
     let ct = c.transpose(); // k×n (my share)
 
-    // Block A (k×d_a): local at A + cross(C_B, X_A).
-    let block_a = {
-        let cross = if party == 0 {
-            // A supplies X_A as trivial right operand, B supplies ⟨C⟩_Bᵀ.
-            let a = trivial_share_of_theirs(k, n);
-            let b = trivial_share_of_mine(x_mine);
-            ss_matmul(ctx, &a, &b)
-        } else {
-            let a = trivial_share_of_mine(&ct);
-            let b = trivial_share_of_theirs(n, d_a);
-            ss_matmul(ctx, &a, &b)
-        };
-        if party == 0 {
-            ct.matmul(x_mine).add(&cross)
-        } else {
-            cross
-        }
+    // Cross for block A (k×d_a): A supplies X_A as trivial right operand,
+    // B supplies ⟨C⟩_Bᵀ.
+    let cross_a = if party == 0 {
+        let a = trivial_share_of_theirs(k, n);
+        let b = trivial_share_of_mine(x_mine);
+        ss_matmul_begin(ctx, &a, &b)
+    } else {
+        let a = trivial_share_of_mine(&ct);
+        let b = trivial_share_of_theirs(n, d_a);
+        ss_matmul_begin(ctx, &a, &b)
     };
-    // Block B (k×d_b): symmetric.
-    let block_b = {
-        let d_b = d - d_a;
-        let cross = if party == 1 {
-            let a = trivial_share_of_theirs(k, n);
-            let b = trivial_share_of_mine(x_mine);
-            ss_matmul(ctx, &a, &b)
-        } else {
-            let a = trivial_share_of_mine(&ct);
-            let b = trivial_share_of_theirs(n, d_b);
-            ss_matmul(ctx, &a, &b)
-        };
-        if party == 1 {
-            ct.matmul(x_mine).add(&cross)
-        } else {
-            cross
-        }
+    // Cross for block B (k×d_b): symmetric.
+    let d_b = d - d_a;
+    let cross_b = if party == 1 {
+        let a = trivial_share_of_theirs(k, n);
+        let b = trivial_share_of_mine(x_mine);
+        ss_matmul_begin(ctx, &a, &b)
+    } else {
+        let a = trivial_share_of_mine(&ct);
+        let b = trivial_share_of_theirs(n, d_b);
+        ss_matmul_begin(ctx, &a, &b)
     };
-    block_a.hstack(&block_b)
+    // Local term: ⟨C⟩_meᵀ · X_me (k×d_mine).
+    let local = crate::runtime::dispatch::matmul(&ct, x_mine);
+    PendingNumerator::new(vec![cross_a, cross_b], move |mut mats| {
+        let cross_b = mats.pop().expect("cross B");
+        let cross_a = mats.pop().expect("cross A");
+        let (block_a, block_b) = if party == 0 {
+            (local.add(&cross_a), cross_b)
+        } else {
+            (cross_a, local.add(&cross_b))
+        };
+        block_a.hstack(&block_b)
+    })
 }
 
-/// Numerator for horizontal partitioning: row blocks
+/// Numerator for vertical partitioning (single-flight wrapper).
+pub fn numerator_vertical(ctx: &mut Session, x_mine: &Mat, c: &Mat, d_a: usize, d: usize) -> Mat {
+    let p = numerator_vertical_begin(ctx, x_mine, c, d_a, d);
+    ctx.flush();
+    p.resolve(ctx)
+}
+
+/// Stage the numerator for horizontal partitioning: row blocks
 /// `⟨C_rows(p)⟩ᵀ·X_p` summed over parties.
-pub fn numerator_horizontal(ctx: &mut Ctx, x_mine: &Mat, c: &Mat, n_a: usize) -> Mat {
+pub fn numerator_horizontal_begin(
+    ctx: &mut Session,
+    x_mine: &Mat,
+    c: &Mat,
+    n_a: usize,
+) -> PendingNumerator {
     let n = c.rows;
     let k = c.cols;
     let d = x_mine.cols;
     let party = ctx.party();
     let c_a = c.rows_slice(0, n_a).transpose(); // k×n_a (my share of A rows)
     let c_b = c.rows_slice(n_a, n).transpose(); // k×n_b
+    let n_b = n - n_a;
 
-    let part_a = {
-        let cross = if party == 0 {
-            let a = trivial_share_of_theirs(k, n_a);
-            let b = trivial_share_of_mine(x_mine);
-            ss_matmul(ctx, &a, &b)
-        } else {
-            let a = trivial_share_of_mine(&c_a);
-            let b = trivial_share_of_theirs(n_a, d);
-            ss_matmul(ctx, &a, &b)
-        };
-        if party == 0 {
-            c_a.matmul(x_mine).add(&cross)
-        } else {
-            cross
-        }
+    let cross_a = if party == 0 {
+        let a = trivial_share_of_theirs(k, n_a);
+        let b = trivial_share_of_mine(x_mine);
+        ss_matmul_begin(ctx, &a, &b)
+    } else {
+        let a = trivial_share_of_mine(&c_a);
+        let b = trivial_share_of_theirs(n_a, d);
+        ss_matmul_begin(ctx, &a, &b)
     };
-    let part_b = {
-        let n_b = n - n_a;
-        let cross = if party == 1 {
-            let a = trivial_share_of_theirs(k, n_b);
-            let b = trivial_share_of_mine(x_mine);
-            ss_matmul(ctx, &a, &b)
-        } else {
-            let a = trivial_share_of_mine(&c_b);
-            let b = trivial_share_of_theirs(n_b, d);
-            ss_matmul(ctx, &a, &b)
-        };
-        if party == 1 {
-            c_b.matmul(x_mine).add(&cross)
-        } else {
-            cross
-        }
+    let cross_b = if party == 1 {
+        let a = trivial_share_of_theirs(k, n_b);
+        let b = trivial_share_of_mine(x_mine);
+        ss_matmul_begin(ctx, &a, &b)
+    } else {
+        let a = trivial_share_of_mine(&c_b);
+        let b = trivial_share_of_theirs(n_b, d);
+        ss_matmul_begin(ctx, &a, &b)
     };
-    part_a.add(&part_b)
+    let local = if party == 0 { c_a.matmul(x_mine) } else { c_b.matmul(x_mine) };
+    PendingNumerator::new(vec![cross_a, cross_b], move |mut mats| {
+        let cross_b = mats.pop().expect("cross B");
+        let cross_a = mats.pop().expect("cross A");
+        let (part_a, part_b) = if party == 0 {
+            (local.add(&cross_a), cross_b)
+        } else {
+            (cross_a, local.add(&cross_b))
+        };
+        part_a.add(&part_b)
+    })
 }
 
-/// Complete the update from a shared numerator (k×d, scale f) and the
-/// assignment matrix: oblivious empty-cluster fallback + broadcast
-/// division. Returns the new centroid shares (k×d, scale f).
-pub fn finish_update(ctx: &mut Ctx, numerator: &Mat, c: &Mat, mu_old: &Mat) -> Mat {
+/// Numerator for horizontal partitioning (single-flight wrapper).
+pub fn numerator_horizontal(ctx: &mut Session, x_mine: &Mat, c: &Mat, n_a: usize) -> Mat {
+    let p = numerator_horizontal_begin(ctx, x_mine, c, n_a);
+    ctx.flush();
+    p.resolve(ctx)
+}
+
+/// Complete the update from a *staged* numerator (k×d, scale f) and the
+/// assignment matrix: the numerator reveals coalesce into the first
+/// flight of the empty-cluster comparison, and the oblivious
+/// empty-cluster fallback runs both MUXes (denominator + numerator) in
+/// one fused daBit flight before the broadcast division. Returns the new
+/// centroid shares (k×d, scale f).
+pub fn finish_update_pending(
+    ctx: &mut Session,
+    numerator: PendingNumerator,
+    c: &Mat,
+    mu_old: &Mat,
+) -> Mat {
     let k = c.cols;
-    let d = numerator.cols;
     let party = ctx.party();
     // Denominator: counts = 1ᵀ·C — a free local share sum.
     let counts = c.col_sums(); // 1×k integer shares
 
-    // empty_j = [count_j < 1] (counts are non-negative integers).
+    // empty_j = [count_j < 1] (counts are non-negative integers). The
+    // staged numerator reveals depart with this comparison's first AND
+    // layer — division prep and numerator share a flight.
     let ones = Mat::from_vec(1, k, vec![1; k]);
     let empty_bits = lt_public(ctx, &counts, &ones);
-    let z = b2a(ctx, &empty_bits); // 1×k arithmetic
+    let num = numerator.resolve(ctx);
+    let d = num.cols;
 
-    // den = empty ? 1 : count  (MUX with public "1" as party-0 share).
-    let one_share = if party == 0 { ones.clone() } else { Mat::zeros(1, k) };
-    let den = mux_arith(ctx, &z, &one_share, &counts);
-
-    // num = empty ? μ_old_row : numerator_row (selector broadcast over d).
-    let mut z_rows = Mat::zeros(1, k * d);
-    for j in 0..k {
-        for l in 0..d {
-            z_rows.data[j * d + l] = z.data[j];
-        }
-    }
-    let num = mux_arith(ctx, &z_rows, mu_old, numerator);
+    // den = empty ? 1 : count; num = empty ? μ_old row : numerator row.
+    // Same boolean selector, two staged MUXes, one fused flight.
+    let one_share = if party == 0 { ones } else { Mat::zeros(1, k) };
+    let den_p = mux_bits_begin(ctx, &empty_bits, &one_share, &counts, 1);
+    let num_p = mux_bits_begin(ctx, &empty_bits, mu_old, &num, d);
+    ctx.flush();
+    let den = den_p.resolve(ctx);
+    let num = num_p.resolve(ctx);
 
     divide_rows(ctx, &num, &den)
 }
 
+/// Complete the update from an already-computed numerator (compatibility
+/// wrapper over [`finish_update_pending`]).
+pub fn finish_update(ctx: &mut Session, numerator: &Mat, c: &Mat, mu_old: &Mat) -> Mat {
+    finish_update_pending(ctx, PendingNumerator::ready(numerator.clone()), c, mu_old)
+}
+
 /// `F_CSC`: secure convergence check — reveals only the boolean
 /// `‖μ_new − μ_old‖² < ε` (paper §4.2). One comparison on a single lane.
-pub fn converged(ctx: &mut Ctx, mu_old: &Mat, mu_new: &Mat, eps: f64) -> bool {
+pub fn converged(ctx: &mut Session, mu_old: &Mat, mu_new: &Mat, eps: f64) -> bool {
     let diff = mu_new.sub(mu_old); // scale f
     let sq = ssquare_elem(ctx, &diff); // scale 2f
     let mut total = 0u64;
@@ -175,6 +243,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::decode_f64;
     use crate::ss::share::{reconstruct, split};
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     #[test]
@@ -204,7 +273,11 @@ mod tests {
             }
         }
 
-        let xa = Mat::encode(n, d_a, &(0..n).flat_map(|i| x[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>());
+        let xa = Mat::encode(
+            n,
+            d_a,
+            &(0..n).flat_map(|i| x[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>(),
+        );
         let xb = Mat::encode(n, 1, &(0..n).map(|i| x[i * d + 2]).collect::<Vec<_>>());
         let mut cmat = Mat::zeros(n, k);
         for i in 0..n {
@@ -219,15 +292,15 @@ mod tests {
             move |c| {
                 let mut ts = Dealer::new(112, 0);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
-                let num = numerator_vertical(&mut ctx, &xa, &c0, d_a, d);
-                let mu = finish_update(&mut ctx, &num, &c0, &m0);
+                let num = numerator_vertical_begin(&mut ctx, &xa, &c0, d_a, d);
+                let mu = finish_update_pending(&mut ctx, num, &c0, &m0);
                 reconstruct(c, &mu)
             },
             move |c| {
                 let mut ts = Dealer::new(112, 1);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
-                let num = numerator_vertical(&mut ctx, &xb, &c1, d_a, d);
-                let mu = finish_update(&mut ctx, &num, &c1, &m1);
+                let num = numerator_vertical_begin(&mut ctx, &xb, &c1, d_a, d);
+                let mu = finish_update_pending(&mut ctx, num, &c1, &m1);
                 reconstruct(c, &mu)
             },
         );
@@ -313,6 +386,57 @@ mod tests {
         for i in 0..k * d {
             assert!((decode_f64(got.data[i]) - want[i]).abs() < 1e-4, "cell {i}");
         }
+    }
+
+    #[test]
+    fn staged_numerator_rides_the_comparison_flight() {
+        // finish_update_pending with a staged numerator must cost exactly
+        // CMP_ROUNDS + 1 flights before the division (the numerator
+        // reveal shares the first comparison flight, the two MUXes fuse).
+        use crate::ss::boolean::CMP_ROUNDS;
+        let (n, d, d_a, k) = (4, 2, 1, 2);
+        let mut prg = Prg::new(117);
+        let x = Mat::random(n, d, &mut prg).map(|v| v >> 45);
+        let xa = x.cols_slice(0, d_a);
+        let xb = x.cols_slice(d_a, d);
+        let mut cmat = Mat::zeros(n, k);
+        for i in 0..n {
+            cmat.set(i, i % k, 1);
+        }
+        let (c0, c1) = split(&cmat, &mut prg);
+        let ((rounds, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(118, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let before = ctx.chan.meter().total().rounds;
+                let num = numerator_vertical_begin(&mut ctx, &xa, &c0, d_a, d);
+                let counts = c0.col_sums();
+                let ones = Mat::from_vec(1, k, vec![1; k]);
+                let bits = lt_public(&mut ctx, &counts, &ones);
+                let num = num.resolve(&mut ctx);
+                let den_p = mux_bits_begin(&mut ctx, &bits, &ones, &counts, 1);
+                let num_p = mux_bits_begin(&mut ctx, &bits, &Mat::zeros(k, d), &num, d);
+                ctx.flush();
+                let _ = den_p.resolve(&mut ctx);
+                let _ = num_p.resolve(&mut ctx);
+                ctx.chan.meter().total().rounds - before
+            },
+            move |c| {
+                let mut ts = Dealer::new(118, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let num = numerator_vertical_begin(&mut ctx, &xb, &c1, d_a, d);
+                let counts = c1.col_sums();
+                let ones = Mat::from_vec(1, k, vec![1; k]);
+                let bits = lt_public(&mut ctx, &counts, &ones);
+                let num = num.resolve(&mut ctx);
+                let den_p = mux_bits_begin(&mut ctx, &bits, &Mat::zeros(1, k), &counts, 1);
+                let num_p = mux_bits_begin(&mut ctx, &bits, &Mat::zeros(k, d), &num, d);
+                ctx.flush();
+                let _ = den_p.resolve(&mut ctx);
+                let _ = num_p.resolve(&mut ctx);
+            },
+        );
+        assert_eq!(rounds, CMP_ROUNDS + 1);
     }
 
     #[test]

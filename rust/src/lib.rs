@@ -6,8 +6,9 @@
 //! for K-means with
 //!
 //! * an **online/offline split** — all cryptographic material (Beaver
-//!   triples, OT extensions) is produced in a data-independent offline
-//!   phase ([`offline`]), leaving a near-plaintext-speed online phase;
+//!   triples, daBits, OT extensions) is produced in a data-independent
+//!   offline phase ([`offline`]), leaving a near-plaintext-speed online
+//!   phase;
 //! * **vectorized secret-shared Lloyd iterations** — distance
 //!   computation, tree-reduction cluster assignment and centroid update
 //!   all operate on whole matrices ([`kmeans`]);
@@ -17,10 +18,33 @@
 //! * the **M-Kmeans baseline** (Mohassel-Rosulek-Trieu) rebuilt on the
 //!   same substrate for apples-to-apples comparison ([`mkmeans`], [`gc`]).
 //!
+//! ## The round-batched protocol engine
+//!
+//! Four layers cooperate so the online phase runs as close to one
+//! network flight per protocol round as the math allows:
+//!
+//! 1. **net** ([`net`]): [`net::Chan`] carries a *round buffer* — gates
+//!    stage masked reveals, `flush_round()` ships them all in one
+//!    exchange, and the per-phase [`net::Meter`] counts bytes **and
+//!    flights** exactly.
+//! 2. **ss** ([`ss`]): [`ss::Session`] exposes batch-first gate APIs
+//!    (`ss_matmul_many`, `cmp_many`, `mux_many`, `and_many`, ...) built
+//!    on deferred-reveal [`ss::Pending`] handles; single-gate functions
+//!    are thin wrappers. daBits fuse B2A and boolean-selector MUX into
+//!    single flights. [`ss::RoundPolicy::PerGate`] is the
+//!    gate-per-flight ablation baseline.
+//! 3. **kmeans** ([`kmeans`]): S1 reveals norms + both cross products in
+//!    one flight; each `F_min^k` level costs `CMP_ROUNDS + 1` flights;
+//!    S3's numerator reveals coalesce into the division-prep comparison.
+//! 4. **backends** ([`kmeans::backend`]): the S1/S3 cross products sit
+//!    behind a `CrossProductBackend` trait — dense Beaver triples, HE
+//!    Protocol 2 for sparse data, or the naive Q3 ablation — with
+//!    `EsdMode::Auto` dispatching on the jointly-measured density.
+//!
 //! The numeric hot path (blocked ring matmuls, the ESD distance kernel)
-//! is AOT-compiled from JAX/Pallas to HLO text at build time and executed
-//! through the PJRT C API by [`runtime`]; Python never runs at protocol
-//! time.
+//! can be AOT-compiled from JAX/Pallas to HLO and executed through the
+//! PJRT C API by [`runtime`] (cargo feature `pjrt`, off by default);
+//! without it the native blocked kernels run — results are identical.
 //!
 //! ## Quick start
 //!
@@ -31,6 +55,8 @@
 //! let cfg = SecureKmeansConfig { k: 3, iters: 10, ..Default::default() };
 //! let out = ppkmeans::kmeans::secure::run_vertical(&data, &cfg).unwrap();
 //! println!("centroids: {:?}", out.centroids);
+//! let online = out.meter_a.total_prefix("online.");
+//! println!("online: {} bytes in {} flights", online.bytes_sent, online.rounds);
 //! ```
 #![allow(clippy::needless_range_loop)] // index-style loops mirror the math
 
@@ -54,11 +80,12 @@ pub mod cli;
 
 /// Common re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::kmeans::config::SecureKmeansConfig;
+    pub use crate::kmeans::config::{EsdMode, SecureKmeansConfig};
     pub use crate::net::cost::CostModel;
     pub use crate::net::meter::Meter;
     pub use crate::ring::fixed::{decode_f64, encode_f64, FRAC_BITS};
     pub use crate::ring::matrix::Mat;
+    pub use crate::ss::RoundPolicy;
     pub use crate::util::error::{Error, Result};
     pub use crate::util::prng::Prg;
 }

@@ -39,7 +39,10 @@ fn cmd_train(args: &Args) {
     let session = Session::new(cfg).with_link(link);
     match session.run(&data) {
         Ok(out) => {
-            println!("trained secure K-means: n={n} d={d} k={k} iters={}", out.iters_run);
+            println!(
+                "trained secure K-means: n={n} d={d} k={k} iters={} backend={}",
+                out.iters_run, out.backend_name
+            );
             for j in 0..k {
                 let c: Vec<String> = out.centroids[j * d..(j + 1) * d]
                     .iter()

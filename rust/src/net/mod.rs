@@ -1,4 +1,5 @@
-//! Two-party transport with exact communication accounting.
+//! Two-party transport with exact communication accounting and flight
+//! batching.
 //!
 //! The paper's testbed is two machines on a real LAN (10 Gbps / 0.02 ms
 //! RTT) or WAN (20 Mbps / 40 ms RTT). We reproduce it with two party
@@ -8,6 +9,13 @@
 //! `rounds·RTT + bytes/bandwidth` by [`cost::CostModel`] and added to the
 //! measured compute time. A real TCP backend ([`tcp`]) is provided for
 //! two-process runs.
+//!
+//! [`Chan`] additionally carries a **round buffer**: protocol gates
+//! stage their symmetric reveals and one `flush_round()` ships them all
+//! in a single flight — the transport half of the round-batched engine
+//! (the gate half lives in [`crate::ss`]). The per-phase [`Meter`]
+//! counts those flights exactly (a flight = the first send after a
+//! receive), which is what makes round budgets regression-testable.
 
 pub mod channel;
 pub mod cost;

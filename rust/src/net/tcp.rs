@@ -8,6 +8,11 @@ use crate::util::error::{Error, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 
+/// Default bound on connect retries (was an effectively unbounded wait).
+pub const DEFAULT_CONNECT_ATTEMPTS: usize = 50;
+/// Default delay between connect retries.
+pub const DEFAULT_CONNECT_DELAY: std::time::Duration = std::time::Duration::from_millis(100);
+
 /// A connected, framed TCP transport.
 pub struct TcpTransport {
     stream: TcpStream,
@@ -23,10 +28,24 @@ impl TcpTransport {
     }
 
     /// Connect to a listening peer (party 1 role), retrying briefly so
-    /// the two processes can start in any order.
+    /// the two processes can start in any order. Gives up after
+    /// [`DEFAULT_CONNECT_ATTEMPTS`] × [`DEFAULT_CONNECT_DELAY`] instead
+    /// of sleeping forever.
     pub fn connect(addr: &str) -> Result<TcpTransport> {
+        Self::connect_with_retry(addr, DEFAULT_CONNECT_ATTEMPTS, DEFAULT_CONNECT_DELAY)
+    }
+
+    /// Connect with an explicit retry budget: at most `attempts` tries
+    /// spaced by `delay`, then an [`Error::ChannelClosed`] carrying the
+    /// last OS error — callers decide whether to re-dial, never hang.
+    pub fn connect_with_retry(
+        addr: &str,
+        attempts: usize,
+        delay: std::time::Duration,
+    ) -> Result<TcpTransport> {
+        assert!(attempts > 0, "need at least one connect attempt");
         let mut last = None;
-        for _ in 0..50 {
+        for attempt in 0..attempts {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
                     stream.set_nodelay(true)?;
@@ -34,11 +53,16 @@ impl TcpTransport {
                 }
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(std::time::Duration::from_millis(100));
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(delay);
+                    }
                 }
             }
         }
-        Err(Error::ChannelClosed(format!("connect {addr}: {:?}", last)))
+        Err(Error::ChannelClosed(format!(
+            "connect {addr}: gave up after {attempts} attempts: {:?}",
+            last
+        )))
     }
 
     /// Send one framed message.
@@ -64,6 +88,20 @@ impl TcpTransport {
 mod tests {
     use super::*;
     use std::thread;
+
+    #[test]
+    fn connect_fails_fast_when_nobody_listens() {
+        // Unroutable-ish local port with a 2-attempt budget: must return
+        // an error promptly instead of hanging forever.
+        let t0 = std::time::Instant::now();
+        let r = TcpTransport::connect_with_retry(
+            "127.0.0.1:47399",
+            2,
+            std::time::Duration::from_millis(10),
+        );
+        assert!(r.is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    }
 
     #[test]
     fn tcp_roundtrip_localhost() {

@@ -10,7 +10,9 @@
 //! had been produced by the OT generator.
 
 use crate::ring::matrix::Mat;
-use crate::ss::triples::{bit_words, BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{
+    bit_words, last_word_mask, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
+};
 use crate::util::prng::Prg;
 
 /// One party's endpoint of the simulated dealer.
@@ -83,6 +85,31 @@ impl TripleSource for Dealer {
         }
     }
 
+    fn dabits(&mut self, n: usize) -> DaBits {
+        self.ledger.dabit_lanes += n as u64;
+        let w = bit_words(n);
+        // Full bit vector r, then party-0's boolean and arithmetic pads.
+        let r = self.prg.u64s(w);
+        let b0 = self.prg.u64s(w);
+        let a0 = self.prg.u64s(n);
+        if self.party == 0 {
+            let mut bool_words = b0;
+            if let Some(last) = bool_words.last_mut() {
+                *last &= last_word_mask(n);
+            }
+            DaBits { n, bool_words, arith: a0 }
+        } else {
+            let mut bool_words: Vec<u64> = r.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
+            if let Some(last) = bool_words.last_mut() {
+                *last &= last_word_mask(n);
+            }
+            let arith: Vec<u64> = (0..n)
+                .map(|i| ((r[i / 64] >> (i % 64)) & 1).wrapping_sub(a0[i]))
+                .collect();
+            DaBits { n, bool_words, arith }
+        }
+    }
+
     fn ledger(&self) -> Ledger {
         self.ledger
     }
@@ -132,6 +159,24 @@ mod tests {
             let c = t0.c[i] ^ t1.c[i];
             assert_eq!(a & b, c, "word {i}");
         }
+    }
+
+    #[test]
+    fn dabits_agree_across_worlds() {
+        let mut d0 = Dealer::new(12, 0);
+        let mut d1 = Dealer::new(12, 1);
+        let n = 70;
+        let a = d0.dabits(n);
+        let b = d1.dabits(n);
+        for i in 0..n {
+            let bool_bit = ((a.bool_words[i / 64] ^ b.bool_words[i / 64]) >> (i % 64)) & 1;
+            let arith_bit = a.arith[i].wrapping_add(b.arith[i]);
+            assert_eq!(bool_bit, arith_bit, "lane {i}: XOR and additive worlds disagree");
+            assert!(arith_bit <= 1, "lane {i}: not a bit");
+        }
+        // Tail lanes beyond n are masked off in the boolean packing.
+        let tail = a.bool_words[1] ^ b.bool_words[1];
+        assert_eq!(tail >> (n - 64), 0, "tail bits must be masked");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 use super::iknp::{setup_receiver, setup_sender, IknpReceiver, IknpSender};
 use crate::net::Chan;
 use crate::ring::matrix::Mat;
-use crate::ss::triples::{bit_words, BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{
+    bit_words, last_word_mask, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
+};
 use crate::util::prng::Prg;
 
 /// Two-party OT-based triple generator; implements [`TripleSource`].
@@ -235,6 +237,28 @@ impl TripleSource for OtTripleGen {
         BitTriple { a, b, c, n }
     }
 
+    fn dabits(&mut self, n: usize) -> DaBits {
+        self.ledger.dabit_lanes += n as u64;
+        let w = bit_words(n);
+        // Each party privately samples its XOR share r_p; the additive
+        // share is r_p − 2·⟨r₀·r₁⟩ where the cross term comes from one
+        // Gilboa product (party 0 chooses, party 1 offers).
+        let mut bool_words = self.prg.u64s(w);
+        if let Some(last) = bool_words.last_mut() {
+            *last &= last_word_mask(n);
+        }
+        let my_bits: Vec<u64> =
+            (0..n).map(|i| (bool_words[i / 64] >> (i % 64)) & 1).collect();
+        let cross = if self.party == 0 {
+            self.gilboa_choose(&my_bits, 1)
+        } else {
+            self.gilboa_offer(&my_bits, n, 1)
+        };
+        let arith: Vec<u64> =
+            (0..n).map(|i| my_bits[i].wrapping_sub(cross[i].wrapping_mul(2))).collect();
+        DaBits { n, bool_words, arith }
+    }
+
     fn ledger(&self) -> Ledger {
         self.ledger
     }
@@ -280,6 +304,17 @@ mod tests {
         let v = t0.v.add(&t1.v);
         let z = t0.z.add(&t1.z);
         assert_eq!(u.matmul(&v), z);
+    }
+
+    #[test]
+    fn ot_dabits_are_valid() {
+        let (a, b) = run_gen(|g| g.dabits(70), |g| g.dabits(70));
+        for i in 0..70 {
+            let bool_bit = ((a.bool_words[i / 64] ^ b.bool_words[i / 64]) >> (i % 64)) & 1;
+            let arith_bit = a.arith[i].wrapping_add(b.arith[i]);
+            assert_eq!(bool_bit, arith_bit, "lane {i}");
+            assert!(arith_bit <= 1, "lane {i}: not a bit");
+        }
     }
 
     #[test]

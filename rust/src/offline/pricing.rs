@@ -45,6 +45,10 @@ pub fn offline_bytes(demand: &Demand) -> u64 {
         // Two directions × 1 OT/lane × 1-byte messages.
         total += 2 * ot_batch_bytes(lanes as u64, 1);
     }
+    for &lanes in &demand.dabit_chunks {
+        // One Gilboa direction × 64 OTs/lane × 8-byte messages.
+        total += ot_batch_bytes(64 * lanes as u64, 8);
+    }
     total
 }
 
@@ -92,6 +96,9 @@ pub fn offline_secs(demand: &Demand, cal: &OtCalibration) -> f64 {
     }
     for &lanes in &demand.vec_chunks {
         ots += (2 * 64 * lanes) as f64;
+    }
+    for &lanes in &demand.dabit_chunks {
+        ots += (64 * lanes) as f64;
     }
     let mut secs = cal.setup_secs + ots * cal.secs_per_ot;
     for &lanes in &demand.bit_chunks {

@@ -9,7 +9,7 @@
 //! through to the inner source and are counted (a correctly-sized demand
 //! keeps `misses == 0`; asserted in tests and benches).
 
-use crate::ss::triples::{BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple};
 use std::collections::{HashMap, VecDeque};
 
 /// Offline material demand for one protocol run.
@@ -21,6 +21,8 @@ pub struct Demand {
     pub vec_chunks: Vec<usize>,
     /// Boolean triple lanes, in request-sized chunks.
     pub bit_chunks: Vec<usize>,
+    /// daBit lanes, in request-sized chunks.
+    pub dabit_chunks: Vec<usize>,
 }
 
 impl Demand {
@@ -40,6 +42,10 @@ impl Demand {
         self.bit_chunks.push(n);
     }
 
+    pub fn dabit_lanes(&mut self, n: usize) {
+        self.dabit_chunks.push(n);
+    }
+
     /// Repeat this demand `times` times (e.g. per-iteration demand × t).
     pub fn repeat(&self, times: usize) -> Demand {
         let mut out = Demand::default();
@@ -51,6 +57,7 @@ impl Demand {
             }
             out.vec_chunks.extend_from_slice(&self.vec_chunks);
             out.bit_chunks.extend_from_slice(&self.bit_chunks);
+            out.dabit_chunks.extend_from_slice(&self.dabit_chunks);
         }
         out
     }
@@ -72,6 +79,7 @@ impl Demand {
         }
         out.vec_chunks = self.vec_chunks[before.vec_chunks.len()..].to_vec();
         out.bit_chunks = self.bit_chunks[before.bit_chunks.len()..].to_vec();
+        out.dabit_chunks = self.dabit_chunks[before.dabit_chunks.len()..].to_vec();
         out
     }
 
@@ -84,6 +92,7 @@ impl Demand {
         }
         self.vec_chunks.extend_from_slice(&other.vec_chunks);
         self.bit_chunks.extend_from_slice(&other.bit_chunks);
+        self.dabit_chunks.extend_from_slice(&other.dabit_chunks);
     }
 }
 
@@ -93,6 +102,7 @@ pub struct TripleStore<S: TripleSource> {
     mats: HashMap<(usize, usize, usize), VecDeque<MatTriple>>,
     vecs: VecDeque<VecTriple>,
     bits: VecDeque<BitTriple>,
+    dabits: VecDeque<DaBits>,
     /// Requests that had to fall through to the inner source online.
     pub misses: u64,
     /// Every request seen (hit or miss) — replaying a protocol once with
@@ -107,6 +117,7 @@ impl<S: TripleSource> TripleStore<S> {
             mats: HashMap::new(),
             vecs: VecDeque::new(),
             bits: VecDeque::new(),
+            dabits: VecDeque::new(),
             misses: 0,
             demand: Demand::default(),
         }
@@ -127,6 +138,10 @@ impl<S: TripleSource> TripleStore<S> {
         for &n in &demand.bit_chunks {
             let t = self.inner.bit_triple(n);
             self.bits.push_back(t);
+        }
+        for &n in &demand.dabit_chunks {
+            let t = self.inner.dabits(n);
+            self.dabits.push_back(t);
         }
     }
 
@@ -175,6 +190,17 @@ impl<S: TripleSource> TripleSource for TripleStore<S> {
         self.inner.bit_triple(n)
     }
 
+    fn dabits(&mut self, n: usize) -> DaBits {
+        self.demand.dabit_lanes(n);
+        if let Some(front) = self.dabits.front() {
+            if front.n == n {
+                return self.dabits.pop_front().unwrap();
+            }
+        }
+        self.misses += 1;
+        self.inner.dabits(n)
+    }
+
     fn ledger(&self) -> Ledger {
         self.inner.ledger()
     }
@@ -221,6 +247,60 @@ mod tests {
             let z = t0.z[i].wrapping_add(t1.z[i]);
             assert_eq!(u.wrapping_mul(v), z);
         }
+    }
+
+    #[test]
+    fn demand_delta_with_empty_prefix_is_identity() {
+        // delta(default) must return the whole demand, chunk-for-chunk.
+        let mut d = Demand::default();
+        d.mat(2, 3, 4);
+        d.mat(2, 3, 4);
+        d.vec_lanes(7);
+        d.bit_lanes(64);
+        d.dabit_lanes(9);
+        let delta = d.delta(&Demand::default());
+        assert_eq!(delta, d);
+        // And delta against itself is empty.
+        let empty = d.delta(&d);
+        assert_eq!(empty, Demand::default());
+    }
+
+    #[test]
+    fn demand_delta_counts_repeated_shapes() {
+        // The same matrix shape requested before and after the snapshot
+        // must only contribute the post-snapshot count to the delta.
+        let mut before = Demand::default();
+        before.mat(5, 5, 5);
+        before.mat(1, 2, 3);
+        let mut after = before.clone();
+        after.mat(5, 5, 5);
+        after.mat(5, 5, 5);
+        after.vec_lanes(10);
+        let delta = after.delta(&before);
+        assert_eq!(delta.mats, vec![((5, 5, 5), 2)]);
+        assert_eq!(delta.vec_chunks, vec![10]);
+        assert!(delta.bit_chunks.is_empty());
+        assert!(delta.dabit_chunks.is_empty());
+    }
+
+    #[test]
+    fn demand_repeat_zero_times_is_empty() {
+        let mut d = Demand::default();
+        d.mat(1, 1, 1);
+        d.dabit_lanes(3);
+        assert_eq!(d.repeat(0), Demand::default());
+    }
+
+    #[test]
+    fn prefilled_dabits_hit_the_store() {
+        let mut demand = Demand::default();
+        demand.dabit_lanes(16);
+        let mut store = TripleStore::new(Dealer::new(2, 0));
+        store.prefill(&demand);
+        let _ = store.dabits(16);
+        assert_eq!(store.misses, 0);
+        let _ = store.dabits(16);
+        assert_eq!(store.misses, 1);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! time in a single pass — the accounting behind the online/offline
 //! split in every bench.
 
-use crate::ss::triples::{BitTriple, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple};
 use std::time::Instant;
 
 /// Accumulates wall-clock seconds spent inside the inner source.
@@ -44,6 +44,13 @@ impl<S: TripleSource> TripleSource for TimedSource<S> {
     fn bit_triple(&mut self, n: usize) -> BitTriple {
         let t0 = Instant::now();
         let t = self.inner.bit_triple(n);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn dabits(&mut self, n: usize) -> DaBits {
+        let t0 = Instant::now();
+        let t = self.inner.dabits(n);
         self.secs += t0.elapsed().as_secs_f64();
         t
     }

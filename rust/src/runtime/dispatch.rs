@@ -1,117 +1,198 @@
 //! Global matmul dispatch: PJRT artifacts when loaded and profitable,
 //! native blocked matmul otherwise.
 //!
-//! The PJRT client is not `Send` (it holds `Rc` internals), so a single
-//! **service thread** owns the [`ArtifactStore`]; party threads submit
-//! requests over a channel. This also serializes device access, which
-//! the CPU plugin requires anyway. Small shapes stay native — per-call
-//! dispatch overhead dominates below [`DISPATCH_THRESHOLD`].
+//! With the `pjrt` feature, the PJRT client is not `Send` (it holds `Rc`
+//! internals), so a single **service thread** owns the `ArtifactStore`;
+//! party threads submit requests over a channel. This also serializes
+//! device access, which the CPU plugin requires anyway. Small shapes stay
+//! native — per-call dispatch overhead dominates below
+//! [`DISPATCH_THRESHOLD`].
+//!
+//! Without the feature (the default offline build), every entry point
+//! compiles to the native fallback: `init` reports the runtime is
+//! unavailable, `matmul` runs the blocked kernel, and the fused paths
+//! return `None` so callers fall back.
 
-use super::artifact::ArtifactStore;
-use super::tiled;
 use crate::ring::matrix::Mat;
-use crate::util::error::{Error, Result};
-use once_cell::sync::OnceCell;
-use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
-
-enum Request {
-    Matmul(Mat, Mat, Sender<Result<Mat>>),
-    Esd(Mat, Mat, Sender<Result<Mat>>),
-    KmeansStep(Vec<f32>, Vec<f32>, usize, usize, usize, Sender<Result<(Vec<f32>, Vec<f32>)>>),
-}
-
-static SERVICE: OnceCell<Mutex<Sender<Request>>> = OnceCell::new();
+use crate::util::error::Result;
+use std::path::Path;
 
 /// Minimum multiply-accumulate count before PJRT dispatch pays off.
 pub const DISPATCH_THRESHOLD: usize = 1 << 22;
 
-/// Load artifacts from `dir` and start the service thread (idempotent).
-pub fn init(dir: &Path) -> Result<()> {
-    if SERVICE.get().is_some() {
-        return Ok(());
+#[cfg(feature = "pjrt")]
+mod service {
+    use super::DISPATCH_THRESHOLD;
+    use crate::runtime::artifact::ArtifactStore;
+    use crate::runtime::tiled;
+    use crate::ring::matrix::Mat;
+    use crate::util::error::{Error, Result};
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc::{channel, Sender};
+    use std::sync::{Mutex, OnceLock};
+
+    enum Request {
+        Matmul(Mat, Mat, Sender<Result<Mat>>),
+        Esd(Mat, Mat, Sender<Result<Mat>>),
+        KmeansStep(Vec<f32>, Vec<f32>, usize, usize, usize, Sender<Result<(Vec<f32>, Vec<f32>)>>),
     }
-    // Probe the manifest on the caller thread for a crisp error.
-    if !dir.join("manifest.tsv").exists() {
-        return Err(Error::Runtime(format!(
-            "no artifacts at {} — run `make artifacts`",
-            dir.display()
-        )));
+
+    static SERVICE: OnceLock<Mutex<Sender<Request>>> = OnceLock::new();
+
+    /// Load artifacts from `dir` and start the service thread (idempotent).
+    pub fn init(dir: &Path) -> Result<()> {
+        if SERVICE.get().is_some() {
+            return Ok(());
+        }
+        // Probe the manifest on the caller thread for a crisp error.
+        if !dir.join("manifest.tsv").exists() {
+            return Err(Error::Runtime(format!(
+                "no artifacts at {} — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let dir: PathBuf = dir.to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let store = match ArtifactStore::load(&dir) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Matmul(a, b, reply) => {
+                            let _ = reply.send(tiled::ring_matmul(&store, &a, &b));
+                        }
+                        Request::Esd(x, mu, reply) => {
+                            let _ = reply.send(tiled::esd(&store, &x, &mu));
+                        }
+                        Request::KmeansStep(x, mu, n, d, k, reply) => {
+                            let name = format!("kmeans_step_{n}x{d}x{k}");
+                            let r = match store.get(&name) {
+                                Some(e) => crate::runtime::executor::execute_f32(e, &[&x, &mu])
+                                    .map(|out| {
+                                        let mut it = out.into_iter();
+                                        (
+                                            it.next().unwrap_or_default(),
+                                            it.next().unwrap_or_default(),
+                                        )
+                                    }),
+                                None => Err(Error::Runtime(format!("no artifact {name}"))),
+                            };
+                            let _ = reply.send(r);
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt service");
+        ready_rx.recv().map_err(|_| Error::Runtime("pjrt service died".into()))??;
+        let _ = SERVICE.set(Mutex::new(tx));
+        Ok(())
     }
-    let dir: PathBuf = dir.to_path_buf();
-    let (tx, rx) = channel::<Request>();
-    let (ready_tx, ready_rx) = channel::<Result<()>>();
-    std::thread::Builder::new()
-        .name("pjrt-service".into())
-        .spawn(move || {
-            let store = match ArtifactStore::load(&dir) {
-                Ok(s) => {
-                    let _ = ready_tx.send(Ok(()));
-                    s
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            while let Ok(req) = rx.recv() {
-                match req {
-                    Request::Matmul(a, b, reply) => {
-                        let _ = reply.send(tiled::ring_matmul(&store, &a, &b));
-                    }
-                    Request::Esd(x, mu, reply) => {
-                        let _ = reply.send(tiled::esd(&store, &x, &mu));
-                    }
-                    Request::KmeansStep(x, mu, n, d, k, reply) => {
-                        let name = format!("kmeans_step_{n}x{d}x{k}");
-                        let r = match store.get(&name) {
-                            Some(e) => super::executor::execute_f32(e, &[&x, &mu]).map(|out| {
-                                let mut it = out.into_iter();
-                                (it.next().unwrap_or_default(), it.next().unwrap_or_default())
-                            }),
-                            None => Err(Error::Runtime(format!("no artifact {name}"))),
-                        };
-                        let _ = reply.send(r);
-                    }
-                }
+
+    /// Whether the PJRT service is running.
+    pub fn available() -> bool {
+        SERVICE.get().is_some()
+    }
+
+    fn submit<T>(make: impl FnOnce(Sender<Result<T>>) -> Request) -> Option<T> {
+        let svc = SERVICE.get()?;
+        let (tx, rx) = channel();
+        svc.lock().ok()?.send(make(tx)).ok()?;
+        rx.recv().ok()?.ok()
+    }
+
+    pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+        let work = a.rows * a.cols * b.cols;
+        if work >= DISPATCH_THRESHOLD && available() {
+            if let Some(out) = submit(|tx| Request::Matmul(a.clone(), b.clone(), tx)) {
+                return out;
             }
-        })
-        .expect("spawn pjrt service");
-    ready_rx.recv().map_err(|_| Error::Runtime("pjrt service died".into()))??;
-    let _ = SERVICE.set(Mutex::new(tx));
-    Ok(())
+        }
+        a.matmul(b)
+    }
+
+    pub fn esd(x: &Mat, mu: &Mat) -> Option<Mat> {
+        if !available() {
+            return None;
+        }
+        submit(|tx| Request::Esd(x.clone(), mu.clone(), tx))
+    }
+
+    pub fn kmeans_step(
+        x: &[f32],
+        mu: &[f32],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        if !available() {
+            return None;
+        }
+        submit(|tx| Request::KmeansStep(x.to_vec(), mu.to_vec(), n, d, k, tx))
+    }
+}
+
+/// Load artifacts and start the service thread (idempotent). Without the
+/// `pjrt` feature this always reports the runtime as unavailable.
+pub fn init(dir: &Path) -> Result<()> {
+    #[cfg(feature = "pjrt")]
+    {
+        service::init(dir)
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = dir;
+        Err(crate::util::error::Error::Runtime(
+            "built without the `pjrt` feature — native kernels only".into(),
+        ))
+    }
 }
 
 /// Whether the PJRT service is running.
 pub fn available() -> bool {
-    SERVICE.get().is_some()
-}
-
-fn submit<T>(make: impl FnOnce(Sender<Result<T>>) -> Request) -> Option<T> {
-    let svc = SERVICE.get()?;
-    let (tx, rx) = channel();
-    svc.lock().ok()?.send(make(tx)).ok()?;
-    rx.recv().ok()?.ok()
+    #[cfg(feature = "pjrt")]
+    {
+        service::available()
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        false
+    }
 }
 
 /// Ring matmul with automatic backend choice.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    let work = a.rows * a.cols * b.cols;
-    if work >= DISPATCH_THRESHOLD && available() {
-        if let Some(out) = submit(|tx| Request::Matmul(a.clone(), b.clone(), tx)) {
-            return out;
-        }
+    #[cfg(feature = "pjrt")]
+    {
+        service::matmul(a, b)
     }
-    a.matmul(b)
+    #[cfg(not(feature = "pjrt"))]
+    {
+        a.matmul(b)
+    }
 }
 
 /// Fused D' tile via the Pallas ESD artifact (`None` → caller falls back).
 pub fn esd(x: &Mat, mu: &Mat) -> Option<Mat> {
-    if !available() {
-        return None;
+    #[cfg(feature = "pjrt")]
+    {
+        service::esd(x, mu)
     }
-    submit(|tx| Request::Esd(x.clone(), mu.clone(), tx))
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = (x, mu);
+        None
+    }
 }
 
 /// One plaintext Lloyd step through the `kmeans_step` artifact.
@@ -122,8 +203,35 @@ pub fn kmeans_step(
     d: usize,
     k: usize,
 ) -> Option<(Vec<f32>, Vec<f32>)> {
-    if !available() {
-        return None;
+    #[cfg(feature = "pjrt")]
+    {
+        service::kmeans_step(x, mu, n, d, k)
     }
-    submit(|tx| Request::KmeansStep(x.to_vec(), mu.to_vec(), n, d, k, tx))
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = (x, mu, n, d, k);
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_fallback_matches_blocked_matmul() {
+        let a = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = Mat::from_vec(2, 2, vec![5, 6, 7, 8]);
+        assert_eq!(matmul(&a, &b), a.matmul(&b));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn without_feature_runtime_is_unavailable() {
+        assert!(!available());
+        assert!(init(Path::new("artifacts")).is_err());
+        let x = Mat::zeros(2, 2);
+        assert!(esd(&x, &x).is_none());
+        assert!(kmeans_step(&[0.0], &[0.0], 1, 1, 1).is_none());
+    }
 }

@@ -7,10 +7,20 @@
 //! client, and [`executor`]/[`tiled`] dispatch party-local linear
 //! algebra (ring matmuls, the fused ESD tile, plaintext Lloyd steps)
 //! onto the compiled executables — Python never runs at protocol time.
+//!
+//! The whole PJRT path is gated behind the off-by-default `pjrt` cargo
+//! feature (it needs the external `xla` crate and a Python/JAX toolchain
+//! to build the artifacts). Without the feature, [`dispatch`] routes
+//! every call to the native blocked kernels — protocol results are
+//! identical; only large-shape throughput differs.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod dispatch;
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod tiled;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactStore, Entry};

@@ -2,9 +2,12 @@
 //!
 //! SADD / linear combinations are communication-free. SMUL uses an
 //! elementwise Beaver triple and a single symmetric reveal round for all
-//! lanes at once — this is the vectorization the paper leans on.
+//! lanes at once — this is the vectorization the paper leans on. The
+//! `*_begin` forms stage the reveal so independent products (and any
+//! other staged gates) share one flight.
 
-use super::Ctx;
+use super::pending::Pending;
+use super::Session;
 use crate::ring::matrix::Mat;
 
 /// Local addition of shares: `⟨x+y⟩ = ⟨x⟩ + ⟨y⟩`.
@@ -33,15 +36,13 @@ pub fn add_public(party: usize, x: &Mat, c: &Mat) -> Mat {
     }
 }
 
-/// Elementwise secure multiplication `⟨x⊙y⟩` of two shared matrices.
-///
-/// One triple lane per element, one symmetric round revealing
-/// `E = x−u, F = y−v`.
-pub fn smul_elem(ctx: &mut Ctx, x: &Mat, y: &Mat) -> Mat {
+/// Stage an elementwise secure multiplication `⟨x⊙y⟩`; one triple lane
+/// per element, resolved after the next flush.
+pub fn smul_elem_begin(ctx: &mut Session, x: &Mat, y: &Mat) -> Pending<Mat> {
     assert_eq!(x.shape(), y.shape(), "smul_elem shape mismatch");
     let n = x.len();
     let t = ctx.ts.vec_triple(n);
-    // E = x - u, F = y - v (local), then reveal both in one flight.
+    // E = x - u, F = y - v (local), revealed together.
     let mut ef = Vec::with_capacity(2 * n);
     for i in 0..n {
         ef.push(x.data[i].wrapping_sub(t.u[i]));
@@ -49,25 +50,48 @@ pub fn smul_elem(ctx: &mut Ctx, x: &Mat, y: &Mat) -> Mat {
     for i in 0..n {
         ef.push(y.data[i].wrapping_sub(t.v[i]));
     }
-    let theirs = ctx.chan.exchange_u64s(&ef);
-    let party = ctx.party();
-    let mut out = Mat::zeros(x.rows, x.cols);
-    for i in 0..n {
-        let e = ef[i].wrapping_add(theirs[i]);
-        let f = ef[n + i].wrapping_add(theirs[n + i]);
-        // xy = (e+u)(f+v) = ef + e·v + u·f + z
-        let mut c = e.wrapping_mul(t.v[i]).wrapping_add(t.u[i].wrapping_mul(f)).wrapping_add(t.z[i]);
-        if party == 0 {
-            c = c.wrapping_add(e.wrapping_mul(f));
+    let (rows, cols) = x.shape();
+    Pending::stage(ctx, ef, move |party, mine, theirs| {
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..n {
+            let e = mine[i].wrapping_add(theirs[i]);
+            let f = mine[n + i].wrapping_add(theirs[n + i]);
+            // xy = (e+u)(f+v) = ef + e·v + u·f + z
+            let mut c =
+                e.wrapping_mul(t.v[i]).wrapping_add(t.u[i].wrapping_mul(f)).wrapping_add(t.z[i]);
+            if party == 0 {
+                c = c.wrapping_add(e.wrapping_mul(f));
+            }
+            out.data[i] = c;
         }
-        out.data[i] = c;
-    }
-    out
+        out
+    })
+}
+
+/// Elementwise secure multiplication `⟨x⊙y⟩` of two shared matrices
+/// (single-gate wrapper: one symmetric reveal round).
+pub fn smul_elem(ctx: &mut Session, x: &Mat, y: &Mat) -> Mat {
+    let p = smul_elem_begin(ctx, x, y);
+    ctx.flush();
+    p.resolve(ctx)
+}
+
+/// Batch form: all elementwise products reveal in one flight.
+pub fn smul_elem_many(ctx: &mut Session, pairs: &[(&Mat, &Mat)]) -> Vec<Mat> {
+    let pending: Vec<Pending<Mat>> =
+        pairs.iter().map(|(x, y)| smul_elem_begin(ctx, x, y)).collect();
+    ctx.flush();
+    pending.into_iter().map(|p| p.resolve(ctx)).collect()
+}
+
+/// Stage an elementwise square `⟨x⊙x⟩`.
+pub fn ssquare_elem_begin(ctx: &mut Session, x: &Mat) -> Pending<Mat> {
+    smul_elem_begin(ctx, x, x)
 }
 
 /// Elementwise square `⟨x⊙x⟩` (same cost as one SMUL; kept separate for
 /// readability at call sites such as `|μ_j|²`).
-pub fn ssquare_elem(ctx: &mut Ctx, x: &Mat) -> Mat {
+pub fn ssquare_elem(ctx: &mut Session, x: &Mat) -> Mat {
     smul_elem(ctx, x, x)
 }
 
@@ -77,6 +101,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::{reconstruct, split};
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     /// Run an elementwise product under two-party simulation.
@@ -110,6 +135,34 @@ mod tests {
         let y = vec![5, 2, 1 << 30, 99];
         let want: Vec<u64> = x.iter().zip(&y).map(|(a, b)| a.wrapping_mul(*b)).collect();
         assert_eq!(run_smul(x, y), want);
+    }
+
+    #[test]
+    fn smul_many_is_one_round() {
+        let x = Mat::from_vec(1, 3, vec![1, 2, 3]);
+        let y = Mat::from_vec(1, 3, vec![4, 5, 6]);
+        let mut prg = Prg::new(78);
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let want: Vec<u64> = (0..3).map(|i| x.data[i].wrapping_mul(y.data[i])).collect();
+        let ((zs, m0), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(124, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let zs = smul_elem_many(&mut ctx, &[(&x0, &y0), (&x0, &y0)]);
+                zs.iter().map(|z| reconstruct(c, z)).collect::<Vec<_>>()
+            },
+            move |c| {
+                let mut ts = Dealer::new(124, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let zs = smul_elem_many(&mut ctx, &[(&x1, &y1), (&x1, &y1)]);
+                let _ = zs.iter().map(|z| reconstruct(c, z)).collect::<Vec<_>>();
+            },
+        );
+        assert_eq!(zs[0].data, want);
+        assert_eq!(zs[1].data, want);
+        // One flight for both products + two reconstructs.
+        assert_eq!(m0.total().rounds, 3);
     }
 
     #[test]

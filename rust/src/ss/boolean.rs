@@ -10,10 +10,24 @@
 //! party p inputs the bits of its own share as trivially-XOR-shared
 //! planes. Depth is log2(64) = 6 AND rounds regardless of lane count —
 //! the comparison backbone of the paper's `F_min^k`.
+//!
+//! All AND layers go through the session round buffer: under
+//! [`crate::ss::RoundPolicy::Coalesced`] one `and_many` call is one
+//! flight (and shares it with anything else the caller staged); under
+//! `PerGate` every pair pays its own flight — the pre-batching baseline.
+//! B2A rides a daBit ([`crate::ss::triples::DaBits`]): reveal
+//! `c = b ⊕ r` (one-time-pad opening, one flight, no triple) and lift
+//! locally with `b = c + r − 2·c·r`.
 
+use super::pending::Pending;
 use super::triples::{bit_words, last_word_mask};
-use super::Ctx;
+use super::Session;
 use crate::ring::matrix::Mat;
+
+/// Flights per vectorized CMP (= MSB of a shared difference): the
+/// initial generate layer plus one per Kogge-Stone level over 64 bits.
+/// Exported so round-count regression tests can assert exact budgets.
+pub const CMP_ROUNDS: u64 = 7;
 
 /// An XOR-shared, bit-packed boolean vector of `n` lanes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -106,49 +120,20 @@ impl BoolShare {
     }
 }
 
-/// Secure AND of two XOR-shared vectors (one bit triple per lane, one
-/// symmetric reveal round for all lanes).
-pub fn and(ctx: &mut Ctx, x: &BoolShare, y: &BoolShare) -> BoolShare {
-    assert_eq!(x.n, y.n);
-    let t = ctx.ts.bit_triple(x.n);
-    let w = x.words.len();
-    // d = x ^ a, e = y ^ b, revealed in one flight.
-    let mut de = Vec::with_capacity(2 * w);
-    for i in 0..w {
-        de.push(x.words[i] ^ t.a[i]);
-    }
-    for i in 0..w {
-        de.push(y.words[i] ^ t.b[i]);
-    }
-    let theirs = ctx.chan.exchange_u64s(&de);
-    let party = ctx.party();
-    let mut out = BoolShare::zeros(x.n);
-    for i in 0..w {
-        let d = de[i] ^ theirs[i];
-        let e = de[w + i] ^ theirs[w + i];
-        // z = [party0] d&e ^ d&b ^ e&a ^ c
-        let mut z = (d & t.b[i]) ^ (e & t.a[i]) ^ t.c[i];
-        if party == 0 {
-            z ^= d & e;
-        }
-        out.words[i] = z;
-    }
-    out.mask_tail();
-    out
-}
-
-/// Batched AND: pairs of equal-length vectors, one round for all pairs.
+/// Stage a batched AND over pairs of equal-length vectors; resolves to
+/// one output share per pair after the next flush.
 ///
 /// Word-aligned batching: each vector's packed words are concatenated
 /// directly (padding lanes up to the word boundary), so the hot path is
 /// pure `u64` XOR/AND streams — no per-bit repacking. The tail-padding
 /// lanes consume a few extra triple bits and carry garbage that is
-/// masked off on output; the round count is identical (1).
-pub fn and_many(ctx: &mut Ctx, pairs: &[(&BoolShare, &BoolShare)]) -> Vec<BoolShare> {
-    if pairs.is_empty() {
-        return vec![];
-    }
+/// masked off on output.
+pub fn and_many_begin(
+    ctx: &mut Session,
+    pairs: &[(&BoolShare, &BoolShare)],
+) -> Pending<Vec<BoolShare>> {
     let word_counts: Vec<usize> = pairs.iter().map(|(x, _)| x.words.len()).collect();
+    let lane_counts: Vec<usize> = pairs.iter().map(|(x, _)| x.n).collect();
     let total_words: usize = word_counts.iter().sum();
     let t = ctx.ts.bit_triple(total_words * 64);
     // d = x ^ a, e = y ^ b revealed in one flight (word streams).
@@ -168,27 +153,50 @@ pub fn and_many(ctx: &mut Ctx, pairs: &[(&BoolShare, &BoolShare)]) -> Vec<BoolSh
             off2 += 1;
         }
     }
-    let theirs = ctx.chan.exchange_u64s(&de);
-    let party = ctx.party();
-    let mut out = Vec::with_capacity(pairs.len());
-    let mut base = 0;
-    for (i, (x, _)) in pairs.iter().enumerate() {
-        let wc = word_counts[i];
-        let mut z = BoolShare::zeros(x.n);
-        for w in 0..wc {
-            let d = de[base + w] ^ theirs[base + w];
-            let e = de[total_words + base + w] ^ theirs[total_words + base + w];
-            let mut zw = (d & t.b[base + w]) ^ (e & t.a[base + w]) ^ t.c[base + w];
-            if party == 0 {
-                zw ^= d & e;
+    Pending::stage(ctx, de, move |party, mine, theirs| {
+        let mut out = Vec::with_capacity(word_counts.len());
+        let mut base = 0;
+        for (i, &wc) in word_counts.iter().enumerate() {
+            let mut z = BoolShare::zeros(lane_counts[i]);
+            for w in 0..wc {
+                let d = mine[base + w] ^ theirs[base + w];
+                let e = mine[total_words + base + w] ^ theirs[total_words + base + w];
+                // z = [party0] d&e ^ d&b ^ e&a ^ c
+                let mut zw = (d & t.b[base + w]) ^ (e & t.a[base + w]) ^ t.c[base + w];
+                if party == 0 {
+                    zw ^= d & e;
+                }
+                z.words[w] = zw;
             }
-            z.words[w] = zw;
+            z.mask_tail();
+            out.push(z);
+            base += wc;
         }
-        z.mask_tail();
-        out.push(z);
-        base += wc;
+        out
+    })
+}
+
+/// Secure AND of two XOR-shared vectors (one bit triple per lane, one
+/// symmetric reveal round for all lanes).
+pub fn and(ctx: &mut Session, x: &BoolShare, y: &BoolShare) -> BoolShare {
+    assert_eq!(x.n, y.n);
+    let p = and_many_begin(ctx, &[(x, y)]);
+    ctx.flush();
+    p.resolve(ctx).pop().expect("one pair in, one share out")
+}
+
+/// Batched AND: pairs of equal-length vectors, one flight for all pairs
+/// (`PerGate` policy: one flight per pair — the unbatched baseline).
+pub fn and_many(ctx: &mut Session, pairs: &[(&BoolShare, &BoolShare)]) -> Vec<BoolShare> {
+    if pairs.is_empty() {
+        return vec![];
     }
-    out
+    if ctx.per_gate() && pairs.len() > 1 {
+        return pairs.iter().map(|(x, y)| and(ctx, x, y)).collect();
+    }
+    let p = and_many_begin(ctx, pairs);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
 /// Bit-plane decomposition of this party's *local* arithmetic share:
@@ -214,7 +222,7 @@ pub fn local_bit_planes(share: &Mat) -> Vec<BoolShare> {
 /// Returns all 64 XOR-shared sum bit planes. `upto` limits computation to
 /// sum bits `0..=upto` (pass 63 for full A2B; the MSB-only path also
 /// needs 63 but saves nothing structural — kept for clarity).
-fn kogge_stone(ctx: &mut Ctx, x: &[BoolShare], y: &[BoolShare], upto: usize) -> Vec<BoolShare> {
+fn kogge_stone(ctx: &mut Session, x: &[BoolShare], y: &[BoolShare], upto: usize) -> Vec<BoolShare> {
     assert_eq!(x.len(), 64);
     assert_eq!(y.len(), 64);
     let l = upto + 1;
@@ -234,13 +242,11 @@ fn kogge_stone(ctx: &mut Ctx, x: &[BoolShare], y: &[BoolShare], upto: usize) -> 
         for j in s..l {
             pairs.push((&pp[j], &g[j - s]));
         }
-        let np = if last_level { 0 } else { l - s };
         for j in s..l {
             if !last_level {
                 pairs.push((&pp[j], &pp[j - s]));
             }
         }
-        let _ = np;
         let results = and_many(ctx, &pairs);
         let gk = l - s;
         for j in s..l {
@@ -268,7 +274,7 @@ fn kogge_stone(ctx: &mut Ctx, x: &[BoolShare], y: &[BoolShare], upto: usize) -> 
 
 /// A2B: convert an arithmetic share matrix to 64 XOR-shared bit planes
 /// of the underlying value (lane i = element i of the flattened matrix).
-pub fn a2b(ctx: &mut Ctx, share: &Mat) -> Vec<BoolShare> {
+pub fn a2b(ctx: &mut Session, share: &Mat) -> Vec<BoolShare> {
     let n = share.len();
     let mine = local_bit_planes(share);
     let zero: Vec<BoolShare> = (0..64).map(|_| BoolShare::zeros(n)).collect();
@@ -277,8 +283,9 @@ pub fn a2b(ctx: &mut Ctx, share: &Mat) -> Vec<BoolShare> {
 }
 
 /// MSB: XOR-shared sign-bit plane of the shared value — the comparison
-/// primitive (`x < y ⇔ MSB(x−y) = 1` for |x−y| < 2^63).
-pub fn msb(ctx: &mut Ctx, share: &Mat) -> BoolShare {
+/// primitive (`x < y ⇔ MSB(x−y) = 1` for |x−y| < 2^63). Costs exactly
+/// [`CMP_ROUNDS`] flights under the coalescing policy.
+pub fn msb(ctx: &mut Session, share: &Mat) -> BoolShare {
     let n = share.len();
     let mine = local_bit_planes(share);
     let zero: Vec<BoolShare> = (0..64).map(|_| BoolShare::zeros(n)).collect();
@@ -287,26 +294,45 @@ pub fn msb(ctx: &mut Ctx, share: &Mat) -> BoolShare {
     sum[63].clone()
 }
 
-/// B2A: lift an XOR-shared bit vector to arithmetic shares in Z_{2^64}.
-///
-/// With `b = b₀ ⊕ b₁ = b₀ + b₁ − 2·b₀·b₁`, the cross term is one Beaver
-/// multiplication of the two parties' private bit values (one round).
-pub fn b2a(ctx: &mut Ctx, bits: &BoolShare) -> Mat {
+/// Stage a B2A lift of an XOR-shared bit vector to arithmetic shares in
+/// Z_{2^64} via a daBit: reveal `c = b ⊕ r` and combine locally as
+/// `⟨b⟩ = c + (1−2c)·⟨r⟩`. One flight, no multiplication triple.
+pub fn b2a_begin(ctx: &mut Session, bits: &BoolShare) -> Pending<Mat> {
     let n = bits.n;
-    // Arithmetic value of my local bit word, one lane per bit.
-    let mut mine = Mat::zeros(1, n);
-    for i in 0..n {
-        mine.data[i] = bits.get(i) as u64;
+    let db = ctx.ts.dabits(n);
+    let w = bits.words.len();
+    debug_assert_eq!(db.bool_words.len(), w);
+    let mut payload = Vec::with_capacity(w);
+    for i in 0..w {
+        payload.push(bits.words[i] ^ db.bool_words[i]);
     }
-    let zero = Mat::zeros(1, n);
-    let (x, y) = if ctx.party() == 0 { (&mine, &zero) } else { (&zero, &mine) };
-    let prod = super::arith::smul_elem(ctx, x, y);
-    // ⟨b⟩ = ⟨b0⟩ + ⟨b1⟩ − 2⟨b0·b1⟩ ; b0/b1 trivially shared as `mine`.
-    let mut out = Mat::zeros(1, n);
-    for i in 0..n {
-        out.data[i] = mine.data[i].wrapping_sub(prod.data[i].wrapping_mul(2));
-    }
-    out
+    Pending::stage(ctx, payload, move |party, mine, theirs| {
+        let mut out = Mat::zeros(1, n);
+        for i in 0..n {
+            let c = ((mine[i / 64] ^ theirs[i / 64]) >> (i % 64)) & 1;
+            let r = db.arith[i];
+            out.data[i] = if c == 1 {
+                // b = 1 − r: party 0 contributes the public 1.
+                let v = r.wrapping_neg();
+                if party == 0 {
+                    v.wrapping_add(1)
+                } else {
+                    v
+                }
+            } else {
+                r
+            };
+        }
+        out
+    })
+}
+
+/// B2A: lift an XOR-shared bit vector to arithmetic shares in Z_{2^64}
+/// (single-gate wrapper, one round).
+pub fn b2a(ctx: &mut Session, bits: &BoolShare) -> Mat {
+    let p = b2a_begin(ctx, bits);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
 #[cfg(test)]
@@ -315,6 +341,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::split;
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     fn reveal_bits(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
@@ -406,6 +433,26 @@ mod tests {
     }
 
     #[test]
+    fn msb_costs_exactly_cmp_rounds() {
+        let x = Mat::from_vec(1, 9, (0..9).collect());
+        let mut prg = Prg::new(4);
+        let (x0, x1) = split(&x, &mut prg);
+        let ((_, m0), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(48, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let _ = msb(&mut ctx, &x0);
+            },
+            move |c| {
+                let mut ts = Dealer::new(48, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let _ = msb(&mut ctx, &x1);
+            },
+        );
+        assert_eq!(m0.total().rounds, CMP_ROUNDS);
+    }
+
+    #[test]
     fn b2a_lifts_bits() {
         // XOR-shared random bit vector.
         let n = 70;
@@ -415,7 +462,7 @@ mod tests {
         let b0 = BoolShare::from_plain_words(n, w0);
         let b1 = BoolShare::from_plain_words(n, w1);
         let want: Vec<u64> = (0..n).map(|i| (b0.get(i) ^ b1.get(i)) as u64).collect();
-        let ((got, _), _) = run_two_party(
+        let ((got, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(47, 0);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
@@ -430,6 +477,34 @@ mod tests {
             },
         );
         assert_eq!(got, want);
+        // daBit B2A: one reveal flight + the reconstruct.
+        assert_eq!(m0.total().rounds, 2);
+    }
+
+    #[test]
+    fn per_gate_policy_splits_and_layers() {
+        use crate::ss::RoundPolicy;
+        let n = 16;
+        let x = BoolShare::from_plain_words(n, vec![0xAAAA]);
+        let y = BoolShare::from_plain_words(n, vec![0xFFFF]);
+        let (xc, yc) = (x.clone(), y.clone());
+        let ((rounds, got), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(49, 0);
+                let mut ctx =
+                    Ctx::new(c, &mut ts, Prg::new(1)).with_policy(RoundPolicy::PerGate);
+                let zs = and_many(&mut ctx, &[(&xc, &BoolShare::zeros(n)), (&BoolShare::zeros(n), &xc)]);
+                (ctx.chan.meter().total().rounds, zs.len())
+            },
+            move |c| {
+                let mut ts = Dealer::new(49, 1);
+                let mut ctx =
+                    Ctx::new(c, &mut ts, Prg::new(2)).with_policy(RoundPolicy::PerGate);
+                let _ = and_many(&mut ctx, &[(&BoolShare::zeros(n), &yc), (&yc, &BoolShare::zeros(n))]);
+            },
+        );
+        assert_eq!(got, 2);
+        assert_eq!(rounds, 2, "per-gate: one flight per AND pair");
     }
 
     #[test]

@@ -3,29 +3,56 @@
 //! `lt(x, y)` returns XOR shares of `[x < y]` per lane, valid whenever
 //! `|x − y| < 2^63` — always true for fixed-point distances. One call
 //! handles an entire matrix of lanes; this is the CMP inside the CMPM
-//! comparison modules of `F_min^k` (Figure 1 of the paper).
+//! comparison modules of `F_min^k` (Figure 1 of the paper). Every CMP
+//! costs exactly [`crate::ss::boolean::CMP_ROUNDS`] flights.
+//!
+//! [`cmp_many`] concatenates the lanes of many independent comparisons
+//! into **one** Kogge-Stone pass, so a whole batch of CMP gates costs
+//! the same flights as a single one.
 
 use super::boolean::{msb, BoolShare};
-use super::Ctx;
+use super::Session;
 use crate::ring::matrix::Mat;
 
 /// XOR-shared `[x < y]` per lane.
-pub fn lt(ctx: &mut Ctx, x: &Mat, y: &Mat) -> BoolShare {
+pub fn lt(ctx: &mut Session, x: &Mat, y: &Mat) -> BoolShare {
     assert_eq!(x.shape(), y.shape());
     let diff = x.sub(y);
     msb(ctx, &diff)
 }
 
 /// XOR-shared `[x > y]` per lane.
-pub fn gt(ctx: &mut Ctx, x: &Mat, y: &Mat) -> BoolShare {
+pub fn gt(ctx: &mut Session, x: &Mat, y: &Mat) -> BoolShare {
     lt(ctx, y, x)
 }
 
 /// XOR-shared `[x < c]` against a public constant vector.
-pub fn lt_public(ctx: &mut Ctx, x: &Mat, c: &Mat) -> BoolShare {
+pub fn lt_public(ctx: &mut Session, x: &Mat, c: &Mat) -> BoolShare {
     // x < c  ⇔  MSB(x − c); subtract c on party 0's share only.
     let diff = if ctx.party() == 0 { x.sub(c) } else { x.clone() };
     msb(ctx, &diff)
+}
+
+/// Batched CMP: one `[x < y]` share per pair, all pairs riding a single
+/// comparison circuit (lane concatenation — identical flight count to
+/// one CMP).
+pub fn cmp_many(ctx: &mut Session, pairs: &[(&Mat, &Mat)]) -> Vec<BoolShare> {
+    if pairs.is_empty() {
+        return vec![];
+    }
+    let sizes: Vec<usize> = pairs.iter().map(|(x, _)| x.len()).collect();
+    let total: usize = sizes.iter().sum();
+    let mut diff = Mat::zeros(1, total);
+    let mut off = 0;
+    for (x, y) in pairs {
+        assert_eq!(x.shape(), y.shape());
+        for i in 0..x.len() {
+            diff.data[off + i] = x.data[i].wrapping_sub(y.data[i]);
+        }
+        off += x.len();
+    }
+    let bits = msb(ctx, &diff);
+    bits.split_lanes(&sizes)
 }
 
 #[cfg(test)]
@@ -35,6 +62,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::encode_f64;
     use crate::ss::share::split;
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     fn reveal(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
@@ -82,5 +110,39 @@ mod tests {
         let ys = vec![1u64, 0, (1u64 << 62) + 1, 100];
         let want = vec![true, false, true, false];
         assert_eq!(run_lt(xs, ys), want);
+    }
+
+    #[test]
+    fn cmp_many_matches_per_pair_and_costs_one_cmp() {
+        use crate::ss::boolean::CMP_ROUNDS;
+        let x1 = Mat::from_vec(1, 3, vec![1, 5, 9]);
+        let y1 = Mat::from_vec(1, 3, vec![2, 5, 3]);
+        let x2 = Mat::from_vec(1, 2, vec![7, 0]);
+        let y2 = Mat::from_vec(1, 2, vec![7, 1]);
+        let mut prg = Prg::new(22);
+        let (x1a, x1b) = split(&x1, &mut prg);
+        let (y1a, y1b) = split(&y1, &mut prg);
+        let (x2a, x2b) = split(&x2, &mut prg);
+        let (y2a, y2b) = split(&y2, &mut prg);
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(51, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let bs = cmp_many(&mut ctx, &[(&x1a, &y1a), (&x2a, &y2a)]);
+                let rounds = ctx.chan.meter().total().rounds;
+                let r: Vec<Vec<bool>> = bs.iter().map(|b| reveal(c, b)).collect();
+                (r, rounds)
+            },
+            move |c| {
+                let mut ts = Dealer::new(51, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let bs = cmp_many(&mut ctx, &[(&x1b, &y1b), (&x2b, &y2b)]);
+                let _: Vec<Vec<bool>> = bs.iter().map(|b| reveal(c, b)).collect();
+            },
+        );
+        let (r, rounds) = (got.0, got.1);
+        assert_eq!(r[0], vec![true, false, false]);
+        assert_eq!(r[1], vec![false, true]);
+        assert_eq!(rounds, CMP_ROUNDS, "batch must cost one comparison circuit");
     }
 }

@@ -5,72 +5,134 @@
 //! locally combine `⟨AB⟩ = [EF] + E⟨V⟩ + ⟨U⟩F + ⟨Z⟩`. Online traffic is
 //! `|A|+|B|` ring elements per party per product — independent of the
 //! inner dimension count that a naive per-element protocol would pay.
+//!
+//! Batch-first: [`ss_matmul_begin`] stages the reveal in the session's
+//! round buffer and returns a [`Pending`] handle, so any number of
+//! independent products (plus whatever else the caller staged) share
+//! **one** flight; [`ss_matmul_many`] wraps the begin/flush/resolve
+//! dance for a slice of products, and [`ss_matmul`] is the single-gate
+//! wrapper. The reveal payload is assembled once into a preallocated
+//! `|A|+|B|` buffer (the pre-batching code cloned `E` and re-extended it,
+//! reallocating mid-flight).
 
+use super::pending::Pending;
 use super::triples::MatTriple;
-use super::Ctx;
+use super::Session;
 use crate::ring::matrix::Mat;
 use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
 
-/// `⟨A(m×k)⟩ · ⟨B(k×n)⟩ -> ⟨AB⟩` with one reveal round.
-pub fn ss_matmul(ctx: &mut Ctx, a: &Mat, b: &Mat) -> Mat {
+/// Stage `⟨A(m×k)⟩ · ⟨B(k×n)⟩` with an explicit triple; resolves to
+/// `⟨AB⟩` after the next flush.
+pub fn ss_matmul_begin_with_triple(
+    ctx: &mut Session,
+    a: &Mat,
+    b: &Mat,
+    t: MatTriple,
+) -> Pending<Mat> {
+    assert_eq!(a.cols, b.rows, "ss_matmul inner dim");
+    assert_eq!(t.u.shape(), a.shape(), "triple U shape");
+    assert_eq!(t.v.shape(), b.shape(), "triple V shape");
+    // Reveal E = A−U and F = B−V: one preallocated payload, no
+    // intermediate clones — the round buffer hands it back at resolve.
+    let (ne, nf) = (a.len(), b.len());
+    let mut payload = Vec::with_capacity(ne + nf);
+    for i in 0..ne {
+        payload.push(a.data[i].wrapping_sub(t.u.data[i]));
+    }
+    for i in 0..nf {
+        payload.push(b.data[i].wrapping_sub(t.v.data[i]));
+    }
+    let (a_rows, a_cols) = a.shape();
+    let (b_rows, b_cols) = b.shape();
+    Pending::stage(ctx, payload, move |party, mine, theirs| {
+        let mut e = Mat::zeros(a_rows, a_cols);
+        let mut f = Mat::zeros(b_rows, b_cols);
+        for i in 0..ne {
+            e.data[i] = mine[i].wrapping_add(theirs[i]);
+        }
+        for i in 0..nf {
+            f.data[i] = mine[ne + i].wrapping_add(theirs[ne + i]);
+        }
+        // ⟨AB⟩ = [party0] E·F + E·⟨V⟩ + ⟨U⟩·F + ⟨Z⟩
+        // Large recombination products dispatch to the PJRT ring-matmul
+        // artifact when available (runtime::dispatch).
+        use crate::runtime::dispatch::matmul as mm;
+        let mut out = mm(&e, &t.v).add(&mm(&t.u, &f)).add(&t.z);
+        if party == 0 {
+            out = out.add(&mm(&e, &f));
+        }
+        out
+    })
+}
+
+/// Stage a shared-shared product, drawing the triple from the session's
+/// offline source.
+pub fn ss_matmul_begin(ctx: &mut Session, a: &Mat, b: &Mat) -> Pending<Mat> {
     assert_eq!(a.cols, b.rows, "ss_matmul inner dim");
     let t: MatTriple = ctx.ts.mat_triple(a.rows, a.cols, b.cols);
-    ss_matmul_with_triple(ctx, a, b, &t)
+    ss_matmul_begin_with_triple(ctx, a, b, t)
+}
+
+/// Batch form: all products reveal in **one** flight.
+pub fn ss_matmul_many(ctx: &mut Session, products: &[(&Mat, &Mat)]) -> Vec<Mat> {
+    let pending: Vec<Pending<Mat>> =
+        products.iter().map(|(a, b)| ss_matmul_begin(ctx, a, b)).collect();
+    ctx.flush();
+    pending.into_iter().map(|p| p.resolve(ctx)).collect()
+}
+
+/// `⟨A(m×k)⟩ · ⟨B(k×n)⟩ -> ⟨AB⟩` with one reveal round (single-gate
+/// wrapper over the batch form).
+pub fn ss_matmul(ctx: &mut Session, a: &Mat, b: &Mat) -> Mat {
+    let p = ss_matmul_begin(ctx, a, b);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
 /// Same as [`ss_matmul`] but with an explicitly provided triple — used
-/// when the caller pre-fetched material for a batch of products.
-pub fn ss_matmul_with_triple(ctx: &mut Ctx, a: &Mat, b: &Mat, t: &MatTriple) -> Mat {
-    assert_eq!(t.u.shape(), a.shape(), "triple U shape");
-    assert_eq!(t.v.shape(), b.shape(), "triple V shape");
-    let e_share = a.sub(&t.u);
-    let f_share = b.sub(&t.v);
-    // Reveal E and F in a single flight.
-    let mut payload = e_share.data.clone();
-    payload.extend_from_slice(&f_share.data);
-    let theirs = ctx.chan.exchange_u64s(&payload);
-    let (ne, _nf) = (e_share.len(), f_share.len());
-    let mut e = e_share;
-    let mut f = f_share;
-    for i in 0..e.data.len() {
-        e.data[i] = e.data[i].wrapping_add(theirs[i]);
-    }
-    for i in 0..f.data.len() {
-        f.data[i] = f.data[i].wrapping_add(theirs[ne + i]);
-    }
-    // ⟨AB⟩ = [party0] E·F + E·⟨V⟩ + ⟨U⟩·F + ⟨Z⟩
-    // Large recombination products dispatch to the PJRT ring-matmul
-    // artifact when available (runtime::dispatch).
-    use crate::runtime::dispatch::matmul as mm;
-    let mut out = mm(&e, &t.v).add(&mm(&t.u, &f)).add(&t.z);
-    if ctx.party() == 0 {
-        out = out.add(&mm(&e, &f));
-    }
-    out
+/// when the caller pre-fetched material for a batch of products. Takes
+/// the triple by value: it is consumed by the recombination, and a
+/// by-reference API would force a three-matrix clone per product.
+pub fn ss_matmul_with_triple(ctx: &mut Session, a: &Mat, b: &Mat, t: MatTriple) -> Mat {
+    let p = ss_matmul_begin_with_triple(ctx, a, b, t);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
-/// Private-input product: this party holds plaintext `X (m×k)`, the peer
-/// holds plaintext `Y (k×n)`; both obtain shares of `XY`. Implemented by
-/// feeding trivial shares into the Beaver protocol. `x_is_mine` selects
-/// which operand this party owns.
+/// Stage a private-input product: this party holds plaintext `X (m×k)`,
+/// the peer holds plaintext `Y (k×n)`; both obtain shares of `XY`.
+/// Implemented by feeding trivial shares into the Beaver protocol.
+/// `x_is_mine` selects which operand this party owns.
+pub fn private_matmul_begin(
+    ctx: &mut Session,
+    mine: &Mat,
+    my_rows_cols: (usize, usize),
+    their_rows_cols: (usize, usize),
+    x_is_mine: bool,
+) -> Pending<Mat> {
+    assert_eq!(mine.shape(), my_rows_cols);
+    if x_is_mine {
+        let a = trivial_share_of_mine(mine);
+        let b = trivial_share_of_theirs(their_rows_cols.0, their_rows_cols.1);
+        ss_matmul_begin(ctx, &a, &b)
+    } else {
+        let a = trivial_share_of_theirs(their_rows_cols.0, their_rows_cols.1);
+        let b = trivial_share_of_mine(mine);
+        ss_matmul_begin(ctx, &a, &b)
+    }
+}
+
+/// Private-input product (single-gate wrapper).
 pub fn private_matmul(
-    ctx: &mut Ctx,
+    ctx: &mut Session,
     mine: &Mat,
     my_rows_cols: (usize, usize),
     their_rows_cols: (usize, usize),
     x_is_mine: bool,
 ) -> Mat {
-    if x_is_mine {
-        assert_eq!(mine.shape(), my_rows_cols);
-        let a = trivial_share_of_mine(mine);
-        let b = trivial_share_of_theirs(their_rows_cols.0, their_rows_cols.1);
-        ss_matmul(ctx, &a, &b)
-    } else {
-        assert_eq!(mine.shape(), my_rows_cols);
-        let a = trivial_share_of_theirs(their_rows_cols.0, their_rows_cols.1);
-        let b = trivial_share_of_mine(mine);
-        ss_matmul(ctx, &a, &b)
-    }
+    let p = private_matmul_begin(ctx, mine, my_rows_cols, their_rows_cols, x_is_mine);
+    ctx.flush();
+    p.resolve(ctx)
 }
 
 #[cfg(test)]
@@ -79,6 +141,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::{reconstruct, split};
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     fn mats() -> (Mat, Mat) {
@@ -154,5 +217,35 @@ mod tests {
         );
         assert_eq!(m0.total().bytes_sent, 96);
         assert_eq!(m0.total().rounds, 1);
+    }
+
+    #[test]
+    fn batched_products_share_one_flight() {
+        // Two independent products (and a third staged by hand) must cost
+        // exactly one round under the coalescing policy.
+        let (a, b) = mats();
+        let mut prg = Prg::new(6);
+        let (a0, a1) = split(&a, &mut prg);
+        let (b0, b1) = split(&b, &mut prg);
+        let want = a.matmul(&b);
+        let ((out, m0), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(11, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let zs = ss_matmul_many(&mut ctx, &[(&a0, &b0), (&a0, &b0)]);
+                let r: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
+                r
+            },
+            move |c| {
+                let mut ts = Dealer::new(11, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let zs = ss_matmul_many(&mut ctx, &[(&a1, &b1), (&a1, &b1)]);
+                let _: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
+            },
+        );
+        assert_eq!(out[0], want);
+        assert_eq!(out[1], want);
+        // ss_matmul_many flight + 2 reconstruct flights.
+        assert_eq!(m0.total().rounds, 3);
     }
 }

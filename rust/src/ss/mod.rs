@@ -6,11 +6,24 @@
 //! truncation ([`trunc`]) and secure division ([`divide`]) used by the
 //! centroid-update step.
 //!
-//! All protocols are written against [`Ctx`], which bundles the party's
-//! channel, its PRG and a [`triples::TripleSource`] (trusted dealer or
-//! OT-based, see [`crate::offline`]). Everything is *vectorized*: gates
-//! operate on whole matrices / lane vectors, so one protocol round
-//! processes all n·k lanes at once — the paper's core efficiency insight.
+//! ## The round-batched engine
+//!
+//! All protocols are written against [`Session`] (née `Ctx`), which
+//! bundles the party's channel, its PRG and a
+//! [`triples::TripleSource`]. The gate set is **batch-first**: every
+//! interactive gate has a `*_begin` form that *stages* its masked reveal
+//! into the channel's round buffer and returns a [`pending::Pending`]
+//! handle; [`Session::flush`] ships every staged reveal in **one**
+//! flight, after which the handles resolve locally. Single-gate
+//! functions (`ss_matmul`, `smul_elem`, `and`, `mux`, ...) are thin
+//! wrappers: begin → flush → resolve. Independent gates therefore share
+//! a round-trip, and the per-flight cost of a protocol step is its
+//! *dependency depth*, not its gate count.
+//!
+//! [`RoundPolicy::PerGate`] disables the coalescing (every staged
+//! segment and every AND-pair becomes its own flight) — the
+//! gate-per-flight baseline that round-count regression tests and the
+//! WAN ablations compare against.
 
 pub mod arith;
 pub mod boolean;
@@ -18,6 +31,7 @@ pub mod compare;
 pub mod divide;
 pub mod matmul;
 pub mod mux;
+pub mod pending;
 pub mod share;
 pub mod triples;
 pub mod trunc;
@@ -26,16 +40,53 @@ use crate::net::Chan;
 use crate::util::prng::Prg;
 use triples::TripleSource;
 
-/// Per-party protocol context: channel + offline material + local PRG.
-pub struct Ctx<'a> {
+pub use pending::Pending;
+
+/// How the session maps gates onto network flights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoundPolicy {
+    /// Stage reveals in the round buffer; one flight per [`Session::flush`].
+    #[default]
+    Coalesced,
+    /// Gate-per-flight ablation baseline: every staged reveal is flushed
+    /// immediately and batched AND layers degrade to per-pair flights.
+    PerGate,
+}
+
+/// Per-party protocol session: channel + offline material + local PRG,
+/// plus the round policy that decides how gates share flights.
+pub struct Session<'a> {
     pub chan: &'a mut Chan,
     pub ts: &'a mut dyn TripleSource,
     pub prg: Prg,
+    policy: RoundPolicy,
 }
 
-impl<'a> Ctx<'a> {
+/// Legacy name for [`Session`]; kept so call sites and tests written
+/// against the pre-batching API keep compiling.
+pub type Ctx<'a> = Session<'a>;
+
+impl<'a> Session<'a> {
     pub fn new(chan: &'a mut Chan, ts: &'a mut dyn TripleSource, prg: Prg) -> Self {
-        Ctx { chan, ts, prg }
+        Session { chan, ts, prg, policy: RoundPolicy::Coalesced }
+    }
+
+    /// Override the round policy (builder style).
+    pub fn with_policy(mut self, policy: RoundPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Current round policy.
+    #[inline]
+    pub fn policy(&self) -> RoundPolicy {
+        self.policy
+    }
+
+    /// Whether the gate-per-flight baseline is active.
+    #[inline]
+    pub fn per_gate(&self) -> bool {
+        matches!(self.policy, RoundPolicy::PerGate)
     }
 
     /// This party's index (0 or 1).
@@ -47,5 +98,71 @@ impl<'a> Ctx<'a> {
     /// Label subsequent communication with a metering phase.
     pub fn set_phase(&mut self, label: &str) {
         self.chan.set_phase(label);
+    }
+
+    /// Stage a symmetric reveal for the next flight; under
+    /// [`RoundPolicy::PerGate`] the flight departs immediately.
+    pub fn stage(&mut self, payload: Vec<u64>) -> usize {
+        let handle = self.chan.stage_u64s(payload);
+        if self.per_gate() {
+            self.chan.flush_round();
+        }
+        handle
+    }
+
+    /// Ship every staged reveal in one flight (no-op when empty).
+    pub fn flush(&mut self) {
+        self.chan.flush_round();
+    }
+
+    /// Take a staged segment's (local, peer) reveal pair (post-flush).
+    pub fn take(&mut self, handle: usize) -> (Vec<u64>, Vec<u64>) {
+        self.chan.take_segment(handle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+
+    #[test]
+    fn per_gate_policy_flushes_each_stage() {
+        let ((rounds_batched, rounds_pergate), _) = run_two_party(
+            |c| {
+                let mut ts = Dealer::new(1, 0);
+                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let a = s.stage(vec![1]);
+                let b = s.stage(vec![2]);
+                s.flush();
+                let _ = s.take(a);
+                let _ = s.take(b);
+                let batched = s.chan.meter().total().rounds;
+                let mut s = Session::new(c, &mut ts, Prg::new(1)).with_policy(RoundPolicy::PerGate);
+                let a = s.stage(vec![1]);
+                let b = s.stage(vec![2]);
+                let _ = s.take(a);
+                let _ = s.take(b);
+                let total = s.chan.meter().total().rounds;
+                (batched, total - batched)
+            },
+            |c| {
+                let mut ts = Dealer::new(1, 1);
+                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let a = s.stage(vec![3]);
+                let b = s.stage(vec![4]);
+                s.flush();
+                let _ = s.take(a);
+                let _ = s.take(b);
+                let mut s = Session::new(c, &mut ts, Prg::new(2)).with_policy(RoundPolicy::PerGate);
+                let a = s.stage(vec![3]);
+                let b = s.stage(vec![4]);
+                let _ = s.take(a);
+                let _ = s.take(b);
+            },
+        );
+        assert_eq!(rounds_batched, 1, "coalesced: one flight for two segments");
+        assert_eq!(rounds_pergate, 2, "per-gate: one flight per segment");
     }
 }

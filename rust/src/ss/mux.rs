@@ -1,24 +1,102 @@
 //! MUX: oblivious selection `b ? x : y` on shares (paper §3.1).
 //!
-//! `MUX(⟨b⟩, ⟨x⟩, ⟨y⟩) = ⟨y⟩ + ⟨b⟩·(⟨x⟩−⟨y⟩)`: after lifting the
-//! selector with B2A, one elementwise Beaver multiplication selects all
-//! lanes in one round. Used by the CMPM modules of `F_min^k` to propagate
-//! the smaller distance and its one-hot index up the tree.
+//! The fused form works directly on the XOR-shared selector with a daBit
+//! and costs **one** flight: write `b = c ⊕ r` where `r` is the daBit
+//! and `c = b ⊕ r` is revealed (a one-time-pad opening), then
+//!
+//! `b·(x−y) = c·(x−y) + (1−2c)·r·(x−y)`
+//!
+//! — the Beaver masks for `r·(x−y)` ride the *same* flight as the `c`
+//! reveal because both operands' shares are known before it departs.
+//! The pre-batching pipeline (B2A, then arithmetic MUX) cost two
+//! dependent flights; [`mux_arith`] is retained for callers that already
+//! hold an arithmetic selector.
+//!
+//! Used by the CMPM modules of `F_min^k` to propagate the smaller
+//! distance and its one-hot index row up the tree — the broadcast `group`
+//! parameter selects a whole row of values with one selector lane.
 
 use super::arith::smul_elem;
-use super::boolean::{b2a, BoolShare};
-use super::Ctx;
+use super::boolean::BoolShare;
+use super::pending::Pending;
+use super::Session;
 use crate::ring::matrix::Mat;
 
+/// Stage a fused boolean-selector MUX. Selector lane `i` of `b` decides
+/// data lanes `i·group .. (i+1)·group` (pass `group = 1` for per-lane
+/// selection): out = b ? x : y. Resolves after the next flush; the whole
+/// gate is a single staged segment.
+pub fn mux_bits_begin(
+    ctx: &mut Session,
+    b: &BoolShare,
+    x: &Mat,
+    y: &Mat,
+    group: usize,
+) -> Pending<Mat> {
+    assert_eq!(x.shape(), y.shape());
+    assert!(group > 0);
+    let total = x.len();
+    assert_eq!(b.n * group, total, "selector lanes × group must cover the data");
+    let db = ctx.ts.dabits(b.n);
+    let t = ctx.ts.vec_triple(total);
+    let diff = x.sub(y);
+    let bw = b.words.len();
+    // Payload: [c = b ⊕ r | E = r − u | F = diff − v], one segment.
+    let mut payload = Vec::with_capacity(bw + 2 * total);
+    for i in 0..bw {
+        payload.push(b.words[i] ^ db.bool_words[i]);
+    }
+    for i in 0..total {
+        payload.push(db.arith[i / group].wrapping_sub(t.u[i]));
+    }
+    for i in 0..total {
+        payload.push(diff.data[i].wrapping_sub(t.v[i]));
+    }
+    let y_own = y.clone();
+    Pending::stage(ctx, payload, move |party, mine, theirs| {
+        let mut out = Mat::zeros(y_own.rows, y_own.cols);
+        for i in 0..total {
+            let sel = i / group;
+            let c = ((mine[sel / 64] ^ theirs[sel / 64]) >> (sel % 64)) & 1;
+            let e = mine[bw + i].wrapping_add(theirs[bw + i]);
+            let f = mine[bw + total + i].wrapping_add(theirs[bw + total + i]);
+            // ⟨r·diff⟩ = e·v + u·f + z (+ e·f at party 0)
+            let mut rd =
+                e.wrapping_mul(t.v[i]).wrapping_add(t.u[i].wrapping_mul(f)).wrapping_add(t.z[i]);
+            if party == 0 {
+                rd = rd.wrapping_add(e.wrapping_mul(f));
+            }
+            // ⟨b·diff⟩ = c·⟨diff⟩ + (1−2c)·⟨r·diff⟩ with public c.
+            let bd = if c == 1 { diff.data[i].wrapping_sub(rd) } else { rd };
+            out.data[i] = y_own.data[i].wrapping_add(bd);
+        }
+        out
+    })
+}
+
+/// Fused boolean-selector MUX, per-lane (single-gate wrapper, one round).
+pub fn mux_bits(ctx: &mut Session, b: &BoolShare, x: &Mat, y: &Mat) -> Mat {
+    let p = mux_bits_begin(ctx, b, x, y, 1);
+    ctx.flush();
+    p.resolve(ctx)
+}
+
 /// Select per-lane: out[i] = b[i] ? x[i] : y[i]. `b` has one lane per
-/// element of `x`/`y`.
-pub fn mux(ctx: &mut Ctx, b: &BoolShare, x: &Mat, y: &Mat) -> Mat {
-    let ba = b2a(ctx, b);
-    mux_arith(ctx, &ba, x, y)
+/// element of `x`/`y`. One round (daBit-fused).
+pub fn mux(ctx: &mut Session, b: &BoolShare, x: &Mat, y: &Mat) -> Mat {
+    mux_bits(ctx, b, x, y)
+}
+
+/// Batched MUX: every selection reveals in one flight.
+pub fn mux_many(ctx: &mut Session, items: &[(&BoolShare, &Mat, &Mat)]) -> Vec<Mat> {
+    let pending: Vec<Pending<Mat>> =
+        items.iter().map(|(b, x, y)| mux_bits_begin(ctx, b, x, y, 1)).collect();
+    ctx.flush();
+    pending.into_iter().map(|p| p.resolve(ctx)).collect()
 }
 
 /// MUX with an already-lifted arithmetic selector (shape 1×len).
-pub fn mux_arith(ctx: &mut Ctx, b: &Mat, x: &Mat, y: &Mat) -> Mat {
+pub fn mux_arith(ctx: &mut Session, b: &Mat, x: &Mat, y: &Mat) -> Mat {
     assert_eq!(x.shape(), y.shape());
     assert_eq!(b.len(), x.len(), "selector lanes");
     let diff = x.sub(y);
@@ -27,10 +105,10 @@ pub fn mux_arith(ctx: &mut Ctx, b: &Mat, x: &Mat, y: &Mat) -> Mat {
     y.add(&prod)
 }
 
-/// Broadcast-MUX: one selector lane per *row* of `x`/`y` (used when a
-/// single comparison decides a whole row of values, e.g. a distance and
-/// its k-lane one-hot index together).
-pub fn mux_rows(ctx: &mut Ctx, b_rows: &Mat, x: &Mat, y: &Mat) -> Mat {
+/// Broadcast-MUX with an arithmetic selector: one selector lane per
+/// *row* of `x`/`y` (used when a single comparison decides a whole row
+/// of values, e.g. a distance and its k-lane one-hot index together).
+pub fn mux_rows(ctx: &mut Session, b_rows: &Mat, x: &Mat, y: &Mat) -> Mat {
     assert_eq!(x.shape(), y.shape());
     assert_eq!(b_rows.len(), x.rows, "one selector per row");
     // Expand selector across columns, then one elementwise product.
@@ -53,6 +131,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ss::share::{reconstruct, split};
     use crate::ss::triples::bit_words;
+    use crate::ss::Ctx;
     use crate::util::prng::Prg;
 
     #[test]
@@ -73,16 +152,52 @@ mod tests {
                 let mut ts = Dealer::new(60, 0);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
                 let z = mux(&mut ctx, &b0, &x0, &y0);
-                reconstruct(c, &z)
+                let rounds = ctx.chan.meter().total().rounds;
+                (reconstruct(c, &z), rounds)
             },
             move |c| {
                 let mut ts = Dealer::new(60, 1);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
                 let z = mux(&mut ctx, &b1, &x1, &y1);
+                let _ = reconstruct(c, &z);
+            },
+        );
+        let (rec, rounds) = r;
+        assert_eq!(rec.data, vec![10, 2, 30, 4, 50]);
+        assert_eq!(rounds, 1, "fused boolean MUX is a single flight");
+    }
+
+    #[test]
+    fn mux_bits_broadcast_groups_rows() {
+        // Two selector lanes, each deciding a group of 3 data lanes.
+        let x = Mat::from_vec(2, 3, vec![1, 1, 1, 2, 2, 2]);
+        let y = Mat::from_vec(2, 3, vec![9, 9, 9, 8, 8, 8]);
+        // selector = [1, 0] XOR-shared
+        let mut prg = Prg::new(32);
+        let mask = prg.next_u64() & 0b11;
+        let b0 = BoolShare::from_plain_words(2, vec![mask]);
+        let b1 = BoolShare::from_plain_words(2, vec![0b01 ^ mask]);
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(61, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let p = mux_bits_begin(&mut ctx, &b0, &x0, &y0, 3);
+                ctx.flush();
+                let z = p.resolve(&mut ctx);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(61, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let p = mux_bits_begin(&mut ctx, &b1, &x1, &y1, 3);
+                ctx.flush();
+                let z = p.resolve(&mut ctx);
                 reconstruct(c, &z)
             },
         );
-        assert_eq!(r.data, vec![10, 2, 30, 4, 50]);
+        assert_eq!(r.data, vec![1, 1, 1, 8, 8, 8]);
     }
 
     #[test]
@@ -110,6 +225,40 @@ mod tests {
             },
         );
         assert_eq!(r.data, vec![1, 1, 1, 8, 8, 8]);
+    }
+
+    #[test]
+    fn mux_many_shares_one_flight() {
+        let n = 4;
+        let x = Mat::from_vec(1, n, vec![10, 20, 30, 40]);
+        let y = Mat::from_vec(1, n, vec![1, 2, 3, 4]);
+        let mut prg = Prg::new(33);
+        let m = prg.next_u64() & 0xF;
+        let b0 = BoolShare::from_plain_words(n, vec![m]);
+        let b1 = BoolShare::from_plain_words(n, vec![0b1111 ^ m]);
+        let (x0, x1) = split(&x, &mut prg);
+        let (y0, y1) = split(&y, &mut prg);
+        let ((out, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(62, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let zs = mux_many(&mut ctx, &[(&b0, &x0, &y0), (&b0, &y0, &x0)]);
+                let rounds = ctx.chan.meter().total().rounds;
+                let r: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
+                (r, rounds)
+            },
+            move |c| {
+                let mut ts = Dealer::new(62, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let zs = mux_many(&mut ctx, &[(&b1, &x1, &y1), (&b1, &y1, &x1)]);
+                let _: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
+            },
+        );
+        let (r, rounds) = out;
+        // selector is all-ones: first picks x, second picks y.
+        assert_eq!(r[0].data, vec![10, 20, 30, 40]);
+        assert_eq!(r[1].data, vec![1, 2, 3, 4]);
+        assert_eq!(rounds, 1, "both MUXes share one flight");
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Deferred-reveal handles for the round-batched gate engine.
+//!
+//! A `Pending<T>` is an interactive gate caught between its two halves:
+//! the masked opening has been *staged* in the channel's round buffer
+//! ([`Session::stage`]), but the peer's half has not arrived yet. After
+//! any [`Session::flush`] ships the flight, [`Pending::resolve`]
+//! combines the peer's reveal (and the retained local payload — no
+//! clone needed at stage time) with the captured triple material into
+//! the gate's output, entirely locally. Many pendings staged between
+//! two flushes share one round-trip; that is the whole point.
+
+use super::Session;
+
+/// A staged gate awaiting its reveal. `T` is the gate output type
+/// (`Mat`, `Vec<BoolShare>`, ...).
+pub struct Pending<T> {
+    seg: usize,
+    finish: Box<dyn FnOnce(usize, Vec<u64>, Vec<u64>) -> T + Send>,
+}
+
+impl<T> Pending<T> {
+    /// Stage `payload` and capture the local completion: `finish(party,
+    /// local_payload, peer_payload)` runs at resolve time — the channel
+    /// hands the staged payload back, so closures need not clone it.
+    pub fn stage(
+        s: &mut Session,
+        payload: Vec<u64>,
+        finish: impl FnOnce(usize, Vec<u64>, Vec<u64>) -> T + Send + 'static,
+    ) -> Pending<T> {
+        let seg = s.stage(payload);
+        Pending { seg, finish: Box::new(finish) }
+    }
+
+    /// Combine the peer's reveal into the gate output. Panics if no
+    /// flush has shipped the staging flight yet.
+    pub fn resolve(self, s: &mut Session) -> T {
+        let (mine, theirs) = s.take(self.seg);
+        (self.finish)(s.party(), mine, theirs)
+    }
+
+    /// Post-compose a local transform onto the resolved value.
+    pub fn map<U>(self, f: impl FnOnce(T) -> U + Send + 'static) -> Pending<U>
+    where
+        T: 'static,
+    {
+        let Pending { seg, finish } = self;
+        Pending {
+            seg,
+            finish: Box::new(move |party, mine, theirs| f(finish(party, mine, theirs))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn pendings_resolve_after_one_shared_flight() {
+        let ((sum, rounds), _) = run_two_party(
+            |c| {
+                let mut ts = Dealer::new(2, 0);
+                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let p1 = Pending::stage(&mut s, vec![5], |_, mine, theirs| {
+                    assert_eq!(mine, vec![5], "local payload comes back untouched");
+                    theirs[0] + 1
+                });
+                let p2 =
+                    Pending::stage(&mut s, vec![7, 8], |_, _, theirs| theirs[0] + theirs[1]);
+                s.flush();
+                let a = p1.resolve(&mut s);
+                let b = p2.resolve(&mut s);
+                (a + b, s.chan.meter().total().rounds)
+            },
+            |c| {
+                let mut ts = Dealer::new(2, 1);
+                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let p1 = Pending::stage(&mut s, vec![100], |_, _, t| t[0]);
+                let p2 = Pending::stage(&mut s, vec![200, 300], |_, _, t| t[0]);
+                s.flush();
+                let _ = p1.resolve(&mut s);
+                let _ = p2.resolve(&mut s);
+            },
+        );
+        // p1: peer sent [100] → 101; p2: peer sent [200,300] → 500.
+        assert_eq!(sum, 601);
+        assert_eq!(rounds, 1);
+    }
+
+    #[test]
+    fn map_transforms_resolved_value() {
+        let ((v, _), _) = run_two_party(
+            |c| {
+                let mut ts = Dealer::new(3, 0);
+                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let p = Pending::stage(&mut s, vec![1], |_, _, t| t[0]).map(|x| x * 2);
+                s.flush();
+                (p.resolve(&mut s), ())
+            },
+            |c| {
+                let mut ts = Dealer::new(3, 1);
+                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let p = Pending::stage(&mut s, vec![21], |_, _, t| t[0]);
+                s.flush();
+                let _ = p.resolve(&mut s);
+            },
+        );
+        assert_eq!(v, 42);
+    }
+}

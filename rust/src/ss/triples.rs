@@ -39,6 +39,21 @@ pub struct BitTriple {
     pub n: usize,
 }
 
+/// One party's share of `n` **daBits** (doubly-authenticated bits):
+/// uniformly random bits `r` held simultaneously as XOR shares
+/// (`bool_words`, packed 64/lane) and additive shares in Z_{2^64}
+/// (`arith`, one word per lane). daBits make B2A and boolean-selector
+/// MUX single-flight gates: reveal `c = b ⊕ r` (a one-time-pad opening)
+/// and combine `b = c + r − 2·c·r` locally — the Beaver mask for any
+/// `r·x` product can ride the *same* flight because both operands'
+/// shares are known before the reveal.
+#[derive(Debug, Clone)]
+pub struct DaBits {
+    pub n: usize,
+    pub bool_words: Vec<u64>,
+    pub arith: Vec<u64>,
+}
+
 /// Running account of consumed offline material.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct Ledger {
@@ -50,6 +65,8 @@ pub struct Ledger {
     pub vec_triple_lanes: u64,
     /// Boolean AND triples consumed (lanes).
     pub bit_triple_lanes: u64,
+    /// daBits consumed (lanes).
+    pub dabit_lanes: u64,
 }
 
 impl Ledger {
@@ -58,6 +75,7 @@ impl Ledger {
         self.mat_triples += o.mat_triples;
         self.vec_triple_lanes += o.vec_triple_lanes;
         self.bit_triple_lanes += o.bit_triple_lanes;
+        self.dabit_lanes += o.dabit_lanes;
     }
 }
 
@@ -78,6 +96,9 @@ pub trait TripleSource {
 
     /// Draw `n` boolean AND triples (bit-packed).
     fn bit_triple(&mut self, n: usize) -> BitTriple;
+
+    /// Draw `n` daBits (bits shared in both the XOR and additive worlds).
+    fn dabits(&mut self, n: usize) -> DaBits;
 
     /// Material consumed so far.
     fn ledger(&self) -> Ledger;

@@ -25,6 +25,13 @@ pub fn trunc_frac(party: usize, x: &Mat) -> Mat {
     trunc_share(party, x, FRAC_BITS)
 }
 
+/// Batch form for API symmetry with the interactive gates: truncation is
+/// local, so this is zero-round by construction — it exists so callers
+/// can treat a post-multiply batch uniformly.
+pub fn trunc_many(party: usize, xs: &[&Mat], bits: u32) -> Vec<Mat> {
+    xs.iter().map(|x| trunc_share(party, x, bits)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +68,14 @@ mod tests {
         let m = Mat::from_vec(1, 2, vec![encode_f64(1.5), encode_f64(-1.5)]);
         let t = trunc_share(0, &m, 0);
         assert_eq!(t, m);
+    }
+
+    #[test]
+    fn trunc_many_matches_per_matrix() {
+        let a = Mat::from_vec(1, 2, vec![1 << 24, 7 << 24]);
+        let b = Mat::from_vec(1, 1, vec![3 << 24]);
+        let many = trunc_many(0, &[&a, &b], 4);
+        assert_eq!(many[0], trunc_share(0, &a, 4));
+        assert_eq!(many[1], trunc_share(0, &b, 4));
     }
 }

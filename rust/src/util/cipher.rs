@@ -1,0 +1,91 @@
+//! Speck-128/128 block cipher (Beaulieu et al., 2013).
+//!
+//! Stand-in for fixed-key AES so the crate builds with no external
+//! crates in an offline container: the PRG ([`crate::util::prng`]) runs
+//! it in counter mode and the garbled-circuit hash
+//! ([`crate::gc::garble`]) uses it as the fixed-key permutation of the
+//! correlation-robust hash. Speck is a 32-round ARX design — three
+//! operations per round, no tables — which keeps the implementation
+//! auditable and the key schedule trivial. (For a production deployment
+//! swap this module for hardware AES; every caller goes through the two
+//! functions below.)
+
+/// Expanded 32-round key schedule for a 128-bit key.
+#[derive(Clone)]
+pub struct Speck128 {
+    ks: [u64; 32],
+}
+
+const ROUNDS: usize = 32;
+
+#[inline(always)]
+fn round(x: &mut u64, y: &mut u64, k: u64) {
+    *x = x.rotate_right(8).wrapping_add(*y) ^ k;
+    *y = y.rotate_left(3) ^ *x;
+}
+
+impl Speck128 {
+    /// Expand a 16-byte key (little-endian word order).
+    pub fn new(key: [u8; 16]) -> Speck128 {
+        let mut k = u64::from_le_bytes(key[0..8].try_into().unwrap());
+        let mut l = u64::from_le_bytes(key[8..16].try_into().unwrap());
+        let mut ks = [0u64; 32];
+        for (i, slot) in ks.iter_mut().enumerate() {
+            *slot = k;
+            // Key schedule reuses the round function with the counter as key.
+            round(&mut l, &mut k, i as u64);
+        }
+        Speck128 { ks }
+    }
+
+    /// Encrypt one block given as two 64-bit words in place.
+    #[inline]
+    pub fn encrypt_words(&self, x: &mut u64, y: &mut u64) {
+        for r in 0..ROUNDS {
+            round(x, y, self.ks[r]);
+        }
+    }
+
+    /// Encrypt a 128-bit value (little-endian word split).
+    #[inline]
+    pub fn encrypt_u128(&self, v: u128) -> u128 {
+        let mut x = v as u64;
+        let mut y = (v >> 64) as u64;
+        self.encrypt_words(&mut x, &mut y);
+        (x as u128) | ((y as u128) << 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_key_dependent() {
+        let a = Speck128::new([1; 16]);
+        let b = Speck128::new([1; 16]);
+        let c = Speck128::new([2; 16]);
+        assert_eq!(a.encrypt_u128(42), b.encrypt_u128(42));
+        assert_ne!(a.encrypt_u128(42), c.encrypt_u128(42));
+    }
+
+    #[test]
+    fn nearby_inputs_diverge() {
+        let k = Speck128::new(*b"ppkmeans-testkey");
+        let e0 = k.encrypt_u128(0);
+        let e1 = k.encrypt_u128(1);
+        assert_ne!(e0, e1);
+        // Crude avalanche check: a 1-bit input flip changes many bits.
+        let flipped = (e0 ^ e1).count_ones();
+        assert!(flipped > 30, "avalanche too weak: {flipped} bits");
+    }
+
+    #[test]
+    fn counter_stream_has_no_short_cycle() {
+        let k = Speck128::new([7; 16]);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1000u128 {
+            assert!(seen.insert(k.encrypt_u128(i)), "collision at {i}");
+        }
+    }
+}

@@ -1,47 +1,69 @@
-//! Library-wide error type.
-
-use thiserror::Error;
+//! Library-wide error type (hand-rolled; the crate builds offline with
+//! no external dependencies).
 
 /// Errors surfaced by the ppkmeans library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A transport endpoint closed while a protocol was mid-flight.
-    #[error("transport channel closed: {0}")]
     ChannelClosed(String),
 
     /// Mismatched matrix / vector dimensions inside a protocol step.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Offline material (triples, OTs) exhausted or of the wrong shape.
-    #[error("offline store: {0}")]
     Offline(String),
 
     /// Homomorphic-encryption level failure (keygen, decrypt domain...).
-    #[error("he: {0}")]
     He(String),
 
     /// Garbled-circuit garbling/evaluation failure.
-    #[error("garbled circuit: {0}")]
     Gc(String),
 
     /// PJRT runtime failure (artifact missing, compile error, ...).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Configuration / CLI error.
-    #[error("config: {0}")]
     Config(String),
 
     /// Underlying XLA error.
-    #[error("xla: {0}")]
     Xla(String),
 
     /// IO error (artifact files, datasets).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ChannelClosed(s) => write!(f, "transport channel closed: {s}"),
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Offline(s) => write!(f, "offline store: {s}"),
+            Error::He(s) => write!(f, "he: {s}"),
+            Error::Gc(s) => write!(f, "garbled circuit: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Xla(s) => write!(f, "xla: {s}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -50,3 +72,16 @@ impl From<xla::Error> for Error {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("k must be >= 2".into());
+        assert!(e.to_string().contains("config"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+}

@@ -1,5 +1,7 @@
-//! Low-level utilities: error types, PRNG, timing, statistics.
+//! Low-level utilities: error types, block cipher, PRNG, timing,
+//! statistics.
 
+pub mod cipher;
 pub mod error;
 pub mod prng;
 pub mod stats;

@@ -1,19 +1,19 @@
-//! AES-128-CTR pseudo-random generator.
+//! Counter-mode block-cipher pseudo-random generator.
 //!
 //! The PRG is a *protocol object*, not just a convenience: additive secret
 //! sharing derives one share from a PRG seed so only the other share needs
 //! to be transmitted, the trusted dealer expands correlated randomness
 //! from per-party seeds, and the IKNP OT extension stretches base-OT
-//! seeds. AES-CTR with a fixed key schedule is the standard instantiation
-//! (hardware AES makes it ~1 cycle/byte).
+//! seeds. The stream is the seed-keyed Speck-128/128 permutation
+//! ([`crate::util::cipher`]) of a block counter — the same CTR structure
+//! as the classic fixed-key-AES instantiation, with no external crates.
 
-use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
-use aes::Aes128;
+use crate::util::cipher::Speck128;
 
-/// Counter-mode AES PRG producing a stream of `u64` ring elements / bytes.
+/// Counter-mode PRG producing a stream of `u64` ring elements / bytes.
 #[derive(Clone)]
 pub struct Prg {
-    cipher: Aes128,
+    cipher: Speck128,
     counter: u128,
     /// Buffered output block (16 bytes = two u64 lanes).
     buf: [u64; 2],
@@ -22,9 +22,9 @@ pub struct Prg {
 }
 
 impl Prg {
-    /// Construct from a 16-byte seed (used as the AES key).
+    /// Construct from a 16-byte seed (used as the cipher key).
     pub fn from_seed(seed: [u8; 16]) -> Self {
-        let cipher = Aes128::new(GenericArray::from_slice(&seed));
+        let cipher = Speck128::new(seed);
         Prg { cipher, counter: 0, buf: [0; 2], avail: 0 }
     }
 
@@ -43,11 +43,12 @@ impl Prg {
 
     #[inline]
     fn refill(&mut self) {
-        let mut block = GenericArray::clone_from_slice(&self.counter.to_le_bytes());
+        let mut x = self.counter as u64;
+        let mut y = (self.counter >> 64) as u64;
         self.counter = self.counter.wrapping_add(1);
-        self.cipher.encrypt_block(&mut block);
-        self.buf[0] = u64::from_le_bytes(block[0..8].try_into().unwrap());
-        self.buf[1] = u64::from_le_bytes(block[8..16].try_into().unwrap());
+        self.cipher.encrypt_words(&mut x, &mut y);
+        self.buf[0] = x;
+        self.buf[1] = y;
         self.avail = 2;
     }
 
@@ -92,12 +93,13 @@ impl Prg {
             i += 1;
         }
         while i + 2 <= out.len() {
-            let mut block = GenericArray::clone_from_slice(&self.counter.to_le_bytes());
+            let mut x = self.counter as u64;
+            let mut y = (self.counter >> 64) as u64;
             self.counter = self.counter.wrapping_add(1);
-            self.cipher.encrypt_block(&mut block);
+            self.cipher.encrypt_words(&mut x, &mut y);
             // Match refill()+pop order: buf[1] is popped first.
-            out[i] = u64::from_le_bytes(block[8..16].try_into().unwrap());
-            out[i + 1] = u64::from_le_bytes(block[0..8].try_into().unwrap());
+            out[i] = y;
+            out[i + 1] = x;
             i += 2;
         }
         while i < out.len() {

@@ -1,0 +1,143 @@
+//! Round-count regression tests: flight budgets are a first-class,
+//! regression-tested quantity of the round-batched protocol engine.
+//!
+//! All budgets are asserted on the quickstart config (n = 1000, d = 4,
+//! k = 3, vertical 2+2) with the dealer-simulated offline phase, so the
+//! numbers are exact and deterministic.
+
+use ppkmeans::data::{blobs::BlobSpec, sparse_gen};
+use ppkmeans::kmeans::assign::min_k_rounds;
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::{plaintext, secure};
+use ppkmeans::ss::boolean::CMP_ROUNDS;
+use ppkmeans::ss::RoundPolicy;
+
+const N: usize = 1000;
+const D: usize = 4;
+const K: usize = 3;
+const ITERS: usize = 2;
+
+fn quickstart_cfg(policy: RoundPolicy) -> SecureKmeansConfig {
+    SecureKmeansConfig {
+        k: K,
+        iters: ITERS,
+        partition: Partition::Vertical { d_a: D / 2 },
+        round_policy: policy,
+        ..Default::default()
+    }
+}
+
+fn quickstart_data() -> ppkmeans::data::blobs::Dataset {
+    let mut spec = BlobSpec::new(N, D, K);
+    spec.spread = 0.02;
+    spec.generate(42)
+}
+
+#[test]
+fn s1_distance_is_one_flight_per_iteration() {
+    let out = secure::run(&quickstart_data(), &quickstart_cfg(RoundPolicy::Coalesced)).unwrap();
+    // Norm square + both Beaver cross products coalesce into one flight.
+    assert_eq!(out.meter_a.get("online.s1").rounds, ITERS as u64);
+}
+
+#[test]
+fn s2_assignment_budget_is_levels_times_cmp_plus_one() {
+    let out = secure::run(&quickstart_data(), &quickstart_cfg(RoundPolicy::Coalesced)).unwrap();
+    // ⌈log₂ k⌉ tree levels, each one CMP circuit + one fused MUX flight.
+    let levels = (usize::BITS - (K - 1).leading_zeros()) as u64;
+    let per_iter = levels * (CMP_ROUNDS + 1);
+    assert_eq!(min_k_rounds(K), per_iter, "helper must agree with the formula");
+    assert_eq!(out.meter_a.get("online.s2").rounds, ITERS as u64 * per_iter);
+}
+
+#[test]
+fn batched_engine_at_least_halves_rounds_vs_gate_per_flight() {
+    let data = quickstart_data();
+    let batched = secure::run(&data, &quickstart_cfg(RoundPolicy::Coalesced)).unwrap();
+    let pergate = secure::run(&data, &quickstart_cfg(RoundPolicy::PerGate)).unwrap();
+    // Identical math, identical outputs…
+    assert_eq!(batched.assignments, pergate.assignments);
+    // …but the per-iteration online flight count must drop ≥ 2× (it
+    // drops far more: every AND layer of every comparison coalesces).
+    let rb = batched.meter_a.total_prefix("online.").rounds as f64 / ITERS as f64;
+    let rp = pergate.meter_a.total_prefix("online.").rounds as f64 / ITERS as f64;
+    assert!(
+        rp >= 2.0 * rb,
+        "gate-per-flight baseline {rp} rounds/iter vs batched {rb}: expected ≥ 2× drop"
+    );
+}
+
+#[test]
+fn total_online_rounds_are_stable() {
+    // Full-iteration budget on the quickstart config: any change to this
+    // number is a deliberate protocol-depth change and must be reviewed.
+    let out = secure::run(&quickstart_data(), &quickstart_cfg(RoundPolicy::Coalesced)).unwrap();
+    let per_iter_s1 = 1;
+    let per_iter_s2 = min_k_rounds(K);
+    let s1 = out.meter_a.get("online.s1").rounds;
+    let s2 = out.meter_a.get("online.s2").rounds;
+    let s3 = out.meter_a.get("online.s3").rounds;
+    assert_eq!(s1, ITERS as u64 * per_iter_s1);
+    assert_eq!(s2, ITERS as u64 * per_iter_s2);
+    // S3 = (CMP + fused MUX) for the empty-cluster fallback — the
+    // numerator reveal rides the CMP's first flight — plus the division
+    // pipeline; assert it stays within the engine's depth budget.
+    let s3_per_iter = s3 / ITERS as u64;
+    assert!(
+        s3_per_iter <= CMP_ROUNDS + 1 + 26,
+        "S3 depth regressed: {s3_per_iter} flights/iter"
+    );
+}
+
+#[test]
+fn auto_mode_selects_he_on_sparse_and_beaver_on_dense() {
+    // Sparse workload (60% zeros) → HE Protocol 2; dense blobs → Beaver.
+    // Outputs must match the plaintext oracle in both cases.
+    let sparse = sparse_gen::generate(36, 6, 2, 0.6, 55);
+    let mut cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        esd: EsdMode::Auto,
+        partition: Partition::Vertical { d_a: 3 },
+        ..Default::default()
+    };
+    let out = secure::run(&sparse, &cfg).unwrap();
+    assert_eq!(out.backend_name, "he-protocol2");
+    let oracle = plaintext::kmeans(&sparse, 2, 2, cfg.seed);
+    assert_eq!(out.assignments, oracle.assignments);
+    for (a, b) in out.centroids.iter().zip(&oracle.centroids) {
+        assert!((a - b).abs() < 1e-2, "sparse-path centroid {a} vs {b}");
+    }
+
+    let mut spec = BlobSpec::new(36, 6, 2);
+    spec.spread = 0.02;
+    let dense = spec.generate(56);
+    cfg.partition = Partition::Vertical { d_a: 3 };
+    let out = secure::run(&dense, &cfg).unwrap();
+    assert_eq!(out.backend_name, "beaver");
+    let oracle = plaintext::kmeans(&dense, 2, 2, cfg.seed);
+    assert_eq!(out.assignments, oracle.assignments);
+    for (a, b) in out.centroids.iter().zip(&oracle.centroids) {
+        assert!((a - b).abs() < 1e-2, "dense-path centroid {a} vs {b}");
+    }
+}
+
+#[test]
+fn explicit_backends_agree_with_auto() {
+    // The same sparse dataset through the explicit He and Beaver modes
+    // must produce identical clusterings (exact ring arithmetic in both).
+    let ds = sparse_gen::generate(30, 6, 2, 0.6, 57);
+    let base = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: 3 },
+        ..Default::default()
+    };
+    let beaver = secure::run(&ds, &base).unwrap();
+    let mut he_cfg = base.clone();
+    he_cfg.esd = EsdMode::He;
+    let he = secure::run(&ds, &he_cfg).unwrap();
+    assert_eq!(beaver.backend_name, "beaver");
+    assert_eq!(he.backend_name, "he-protocol2");
+    assert_eq!(beaver.assignments, he.assignments);
+}

@@ -1,7 +1,10 @@
 //! Integration: PJRT runtime executes the AOT artifacts with numerics
 //! identical to the native ring implementation.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires the `pjrt` cargo feature (the whole file is compiled out on
+//! the default feature set) and `make artifacts` (skipped with a message
+//! otherwise).
+#![cfg(feature = "pjrt")]
 
 use ppkmeans::ring::matrix::Mat;
 use ppkmeans::runtime::{dispatch, tiled, ArtifactStore};

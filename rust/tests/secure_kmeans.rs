@@ -117,7 +117,10 @@ fn sparse_and_dense_paths_identical_results() {
     let sparse = secure::run(&ds, &scfg).unwrap();
     assert_eq!(dense.assignments, sparse.assignments);
     for (a, b) in dense.centroids.iter().zip(&sparse.centroids) {
-        assert!((a - b).abs() < 1e-6, "centroids must match bit-for-bit in the ring");
+        // Both paths are exact in the ring; the only divergence is the
+        // ±1-ulp probabilistic truncation, whose draw differs with the
+        // share randomness of each path.
+        assert!((a - b).abs() < 1e-5, "centroids must agree up to truncation ulps: {a} vs {b}");
     }
 }
 
