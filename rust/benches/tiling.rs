@@ -1,0 +1,127 @@
+//! Row-tiling study: tiled vs monolithic schedules on wall-clock, online
+//! flight count, and offline triple footprint.
+//!
+//! The claims under test (and regression-tested in
+//! `rust/tests/round_counts.rs`):
+//!
+//! * `TileFlights::Lockstep` costs **zero** extra flights over the
+//!   monolithic schedule while bounding every matrix triple by the tile
+//!   size B — the peak triple bytes column collapses;
+//! * `TileFlights::Streamed` pays rounds × tiles for O(B·d) live state;
+//! * tiled offline demand contains no n-sized matrix shape, so one
+//!   prefill recipe serves any dataset size.
+//!
+//! Emits `BENCH_tiling.json` next to the working directory for the
+//! tracking harness.
+
+use ppkmeans::bench::{fmt_bytes, fmt_secs, Table};
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::secure;
+
+struct Row {
+    schedule: String,
+    wall: f64,
+    online_rounds: u64,
+    online_bytes: u64,
+    peak_triple_bytes: u64,
+    mat_triple_bytes: u64,
+    max_mat_dim: usize,
+}
+
+fn run_one(
+    data: &ppkmeans::data::blobs::Dataset,
+    base: &SecureKmeansConfig,
+    label: &str,
+    tile_rows: Option<usize>,
+    flights: TileFlights,
+) -> Row {
+    let cfg = SecureKmeansConfig { tile_rows, tile_flights: flights, ..base.clone() };
+    let out = secure::run(data, &cfg).expect("run");
+    let online = out.meter_a.total_prefix("online.");
+    let max_mat_dim =
+        out.demand.mats.iter().map(|&((m, k, n), _)| m.max(k).max(n)).max().unwrap_or(0);
+    Row {
+        schedule: label.to_string(),
+        wall: out.wall_secs,
+        online_rounds: online.rounds,
+        online_bytes: online.bytes_sent,
+        peak_triple_bytes: out.demand.peak_mat_triple_bytes(),
+        mat_triple_bytes: out.demand.mat_triple_bytes(),
+        max_mat_dim,
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, d, k) = if full { (20_000, 8, 4) } else { (2_000, 6, 3) };
+    let iters = if full { 5 } else { 2 };
+    let b = if full { 1024 } else { 128 };
+    let mut spec = BlobSpec::new(n, d, k);
+    spec.spread = 0.02;
+    let data = spec.generate(7);
+    let base = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: d / 2 },
+        ..Default::default()
+    };
+
+    let rows = vec![
+        run_one(&data, &base, "monolithic", None, TileFlights::Lockstep),
+        run_one(&data, &base, &format!("lockstep B={b}"), Some(b), TileFlights::Lockstep),
+        run_one(&data, &base, &format!("streamed B={b}"), Some(b), TileFlights::Streamed),
+    ];
+
+    let mut tbl = Table::new(
+        &format!("Row tiling — n={n}, d={d}, k={k}, t={iters} (vertical, Beaver)"),
+        &["schedule", "wall", "online rounds", "online bytes", "peak triple", "mat triples", "max mat dim"],
+    );
+    for r in &rows {
+        tbl.row(vec![
+            r.schedule.clone(),
+            fmt_secs(r.wall),
+            format!("{}", r.online_rounds),
+            fmt_bytes(r.online_bytes),
+            fmt_bytes(r.peak_triple_bytes),
+            fmt_bytes(r.mat_triple_bytes),
+            format!("{}", r.max_mat_dim),
+        ]);
+    }
+    tbl.print();
+
+    // Shape checks the table should witness.
+    assert_eq!(
+        rows[0].online_rounds, rows[1].online_rounds,
+        "lockstep tiling must add zero flights"
+    );
+    assert!(
+        rows[1].peak_triple_bytes < rows[0].peak_triple_bytes,
+        "tiling must shrink the peak triple"
+    );
+    assert!(rows[1].max_mat_dim <= b.max(d).max(k), "tiled shapes must be B-bounded");
+
+    let mut json = String::from("{\n  \"bench\": \"tiling\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \"iters\": {iters}, \"tile_rows\": {b}}},\n"
+    ));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"schedule\": \"{}\", \"wall_secs\": {:.6}, \"online_rounds\": {}, \
+             \"online_bytes\": {}, \"peak_mat_triple_bytes\": {}, \"mat_triple_bytes\": {}, \
+             \"max_mat_dim\": {}}}{}\n",
+            r.schedule,
+            r.wall,
+            r.online_rounds,
+            r.online_bytes,
+            r.peak_triple_bytes,
+            r.mat_triple_bytes,
+            r.max_mat_dim,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_tiling.json", &json).expect("write BENCH_tiling.json");
+    println!("\nwrote BENCH_tiling.json");
+}

@@ -114,6 +114,36 @@ pub fn min_k(ctx: &mut Session, d: &Mat) -> (Mat, Mat) {
     (root.idx, Mat::from_vec(n, 1, root.val))
 }
 
+/// Lockstep `F_min^k` across row tiles: the tiles' distance blocks are
+/// concatenated along the (embarrassingly parallel) sample dimension, so
+/// at every tree level **all** tiles' CMP lanes ride one comparison
+/// circuit and all their value/index lanes one fused MUX — exactly the
+/// lane batching of [`crate::ss::compare::cmp_many`] /
+/// [`crate::ss::mux::mux_many`]. Any number of tiles therefore costs
+/// exactly [`min_k_rounds`]`(k)` flights, the monolithic budget
+/// (regression-tested), and the lane-chunk demand is byte-identical to a
+/// monolithic call. Returns the stitched one-hot matrix (Σn_t × k, tile
+/// row order) and minimum distances (Σn_t × 1).
+pub fn min_k_tiles(ctx: &mut Session, tiles: &[Mat]) -> (Mat, Mat) {
+    assert!(!tiles.is_empty(), "min_k_tiles needs at least one tile");
+    if tiles.len() == 1 {
+        // Monolithic schedule: no concatenation copy.
+        return min_k(ctx, &tiles[0]);
+    }
+    let k = tiles[0].cols;
+    let total: usize = tiles.iter().map(|t| t.rows).sum();
+    // One preallocated copy (repeated vstack would re-copy the
+    // accumulated prefix once per tile — O(tiles·n·k)).
+    let mut d = Mat::zeros(total, k);
+    let mut r = 0;
+    for t in tiles {
+        assert_eq!(t.cols, k, "tiles must share the cluster count");
+        d.data[r * k..(r + t.rows) * k].copy_from_slice(&t.data);
+        r += t.rows;
+    }
+    min_k(ctx, &d)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +215,44 @@ mod tests {
         let d = vec![-3.0, -7.5, 2.0, -7.4];
         let (c, _) = run_min_k(d, 1, 4);
         assert_eq!(c, vec![0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn tiled_min_k_matches_monolithic_at_monolithic_budget() {
+        // Three ragged tiles through the lockstep reduction: same one-hot
+        // output as one monolithic call, and exactly min_k_rounds(k)
+        // flights — tiling is free under lockstep.
+        let (n, k) = (11, 3);
+        let mut prg = Prg::new(401);
+        let d = Mat::random(n, k, &mut prg).map(|v| v >> 40);
+        let (d0, d1) = split(&d, &mut prg);
+        const RANGES: [(usize, usize); 3] = [(0, 4), (4, 8), (8, 11)];
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(402, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let tiles: Vec<Mat> =
+                    RANGES.iter().map(|&(r0, r1)| d0.rows_slice(r0, r1)).collect();
+                let before = ctx.chan.meter().total().rounds;
+                let (cm, _mv) = min_k_tiles(&mut ctx, &tiles);
+                let spent = ctx.chan.meter().total().rounds - before;
+                let (cm2, _) = min_k(&mut ctx, &d0);
+                (reconstruct(c, &cm), reconstruct(c, &cm2), spent)
+            },
+            move |c| {
+                let mut ts = Dealer::new(402, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let tiles: Vec<Mat> =
+                    RANGES.iter().map(|&(r0, r1)| d1.rows_slice(r0, r1)).collect();
+                let (cm, _mv) = min_k_tiles(&mut ctx, &tiles);
+                let (cm2, _) = min_k(&mut ctx, &d1);
+                let _ = reconstruct(c, &cm);
+                let _ = reconstruct(c, &cm2);
+            },
+        );
+        let (tiled, mono, spent) = r;
+        assert_eq!(tiled, mono, "lockstep tiling must not change the argmin");
+        assert_eq!(spent, min_k_rounds(k), "tiling must cost the monolithic budget");
     }
 
     #[test]

@@ -1,18 +1,26 @@
 //! Unified cross-product backends for the secure Lloyd iteration.
 //!
 //! S1 (distance) and S3 (update) differ between the dense, sparse and
-//! ablation configurations **only** in how the two vertical cross
-//! products are evaluated; everything else (norms, `F_min^k`, the
-//! empty-cluster fallback, division) is shared. The seed code branched
-//! ad hoc between `kmeans::esd`, `kmeans::sparse` and
-//! `sparse::protocol2`; this module replaces that with one
-//! [`CrossProductBackend`] trait and three implementations:
+//! ablation configurations **only** in how the cross products are
+//! evaluated; everything else (norms, `F_min^k`, the empty-cluster
+//! fallback, division) is shared. The seed code branched ad hoc between
+//! `kmeans::esd`, `kmeans::sparse` and `sparse::protocol2`; this module
+//! replaces that with one [`CrossProductBackend`] trait whose entry
+//! points are **row-tile granular**: the driver walks a tile schedule
+//! (`config::tile_schedule`) and asks the backend to stage each tile's
+//! S1 product `⟨X_tile·μᵀ⟩` and S3 numerator contribution
+//! `⟨C_tileᵀ·X_tile⟩`. Four implementations ride that schedule:
 //!
-//! * [`BeaverBackend`] — matrix Beaver triples (Eq. 3), both reveals in
-//!   one staged flight;
+//! * [`BeaverBackend`] — vertical partition, matrix Beaver triples
+//!   (Eq. 3); every tile's reveals share the caller's flight, and every
+//!   triple is tile-shaped — the offline demand never contains an
+//!   n-sized matrix dimension once tiling is on;
+//! * [`HorizontalBackend`] — the horizontally partitioned analogue: a
+//!   tile's rows split at the ownership boundary `n_a` into an A-block
+//!   and a B-block, each a tile-shaped private matmul;
 //! * [`HeBackend`] — HE Protocol 2 (paper §4.3): the sparse holder
 //!   evaluates over ciphertexts of the small dense operand, skipping
-//!   zeros, with communication `O((d+n)·k)` ciphertexts;
+//!   zeros, per tile with communication `O((d+n_t)·k)` ciphertexts;
 //! * [`NaiveBackend`] — the pre-vectorization Q3 ablation (one scalar
 //!   protocol per (sample, centroid) pair).
 //!
@@ -21,9 +29,9 @@
 //! paper treats the sparsity degree as known) and pick the HE path when
 //! the joint density falls below [`AUTO_DENSITY_THRESHOLD`].
 
-use super::config::{EsdMode, SecureKmeansConfig};
+use super::config::{EsdMode, Partition, SecureKmeansConfig};
 use super::esd;
-use super::update::{numerator_vertical_begin, PendingNumerator};
+use super::update::numerator_vertical_begin;
 use crate::bigint::BigUint;
 use crate::he::ou::{Ou, OuPk, OuSk};
 use crate::he::HeScheme;
@@ -31,6 +39,8 @@ use crate::net::Chan;
 use crate::ring::matrix::Mat;
 use crate::sparse::csr::Csr;
 use crate::sparse::protocol2;
+use crate::ss::matmul::{private_matmul_begin, private_matmul_rows_begin};
+use crate::ss::pending::PendingParts;
 use crate::ss::Session;
 use crate::util::prng::Prg;
 
@@ -70,63 +80,277 @@ impl PartyData {
 
     /// Local `X_mine · rhs`, through the sparse view when present.
     pub fn local_matmul(&self, rhs: &Mat) -> Mat {
+        self.local_matmul_rows((0, self.dense.rows), rhs)
+    }
+
+    /// Local `X_mine[r0..r1] · rhs` for one row tile, through the sparse
+    /// view when present. The full range borrows the existing buffers —
+    /// the monolithic schedule pays no per-iteration copy.
+    pub fn local_matmul_rows(&self, rows: (usize, usize), rhs: &Mat) -> Mat {
+        let full = rows == (0, self.dense.rows);
         match &self.csr {
-            Some(c) => c.matmul_dense(rhs),
-            None => crate::runtime::dispatch::matmul(&self.dense, rhs),
+            Some(c) if full => c.matmul_dense(rhs),
+            Some(c) => c.rows_slice(rows.0, rows.1).matmul_dense(rhs),
+            None if full => crate::runtime::dispatch::matmul(&self.dense, rhs),
+            None => crate::runtime::dispatch::matmul(&self.dense.rows_slice(rows.0, rows.1), rhs),
+        }
+    }
+
+    /// The tile's CSR view: borrowed for the full range, sliced otherwise.
+    fn csr_tile(&self, rows: (usize, usize)) -> std::borrow::Cow<'_, Csr> {
+        let full = self.csr();
+        if rows == (0, full.rows) {
+            std::borrow::Cow::Borrowed(full)
+        } else {
+            std::borrow::Cow::Owned(full.rows_slice(rows.0, rows.1))
+        }
+    }
+
+    /// The tile's dense view: borrowed for the full range, sliced
+    /// otherwise.
+    fn dense_tile(&self, rows: (usize, usize)) -> std::borrow::Cow<'_, Mat> {
+        if rows == (0, self.dense.rows) {
+            std::borrow::Cow::Borrowed(&self.dense)
+        } else {
+            std::borrow::Cow::Owned(self.dense.rows_slice(rows.0, rows.1))
         }
     }
 }
 
-/// How one Lloyd iteration evaluates its vertical cross products.
+/// How one Lloyd iteration evaluates its cross products, one row tile at
+/// a time. `rows` is always the tile's **global** row range `[r0, r1)`
+/// out of the n samples; the monolithic schedule is the single tile
+/// `(0, n)`. Deferred backends (Beaver, horizontal) stage their reveals
+/// and leave the flush to the caller — under `TileFlights::Lockstep`
+/// every tile of a step therefore shares one flight. Eager backends (HE
+/// Protocol 2's ciphertext exchange, the naive scalar loop) run their
+/// own communication and return a ready handle.
 pub trait CrossProductBackend: Send {
     /// Backend label (reported in [`super::secure::SecureKmeansOutput`]).
     fn name(&self) -> &'static str;
 
-    /// S1: shares of `X_A·(⟨μ⟩_B A-block)ᵀ + X_B·(⟨μ⟩_A B-block)ᵀ`
-    /// summed (n×k). Backends flush their own reveals; anything the
-    /// caller staged beforehand (the norm square) rides along.
-    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat;
-
-    /// S3: the full numerator `⟨Cᵀ·X⟩` (k×d) as a staged
-    /// [`PendingNumerator`] so its reveals can coalesce with the
-    /// division-prep comparison.
-    fn s3_numerator(
+    /// Stage shares of this tile's complete product `X[r0..r1]·μᵀ`
+    /// (n_t×k, **local term included**), at scale 2f like `mu`.
+    fn s1_xmu_tile(
         &mut self,
         s: &mut Session,
         x: &PartyData,
-        c_share: &Mat,
-        d_a: usize,
-        d: usize,
-    ) -> PendingNumerator;
+        mu: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts;
+
+    /// Stage this tile's S3 numerator contribution `⟨C_tileᵀ·X_tile⟩`
+    /// (k×d, local term included); the driver sums the resolved tiles.
+    /// `c_tile` is this party's share of the tile's assignment rows
+    /// (n_t×k).
+    fn s3_numerator_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_tile: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts;
 }
 
 // ---------------------------------------------------------------------
-// Beaver (dense, vectorized — Eq. 3)
+// Beaver (dense vertical, vectorized — Eq. 3)
 // ---------------------------------------------------------------------
 
-/// Matrix-Beaver cross products: both reveals share one flight.
-pub struct BeaverBackend;
+/// Matrix-Beaver cross products for the vertical partition: all reveals
+/// of a step — across tiles — share one flight.
+pub struct BeaverBackend {
+    d_a: usize,
+    d: usize,
+}
+
+impl BeaverBackend {
+    pub fn new(d_a: usize, d: usize) -> BeaverBackend {
+        BeaverBackend { d_a, d }
+    }
+}
 
 impl CrossProductBackend for BeaverBackend {
     fn name(&self) -> &'static str {
         "beaver"
     }
 
-    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
-        let (c1_p, c2_p) = esd::vertical_cross_begin(s, &x.dense, mu, d_a);
-        s.flush();
-        c1_p.resolve(s).add(&c2_p.resolve(s))
-    }
-
-    fn s3_numerator(
+    fn s1_xmu_tile(
         &mut self,
         s: &mut Session,
         x: &PartyData,
-        c_share: &Mat,
-        d_a: usize,
-        d: usize,
-    ) -> PendingNumerator {
-        numerator_vertical_begin(s, &x.dense, c_share, d_a, d)
+        mu: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let (c1_p, c2_p) = esd::vertical_cross_tile_begin(s, &x.dense, rows, mu, self.d_a);
+        let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(mu, self.d_a);
+        let my_blk = if s.party() == 0 { &mu_a_blk } else { &mu_b_blk };
+        let local = x.local_matmul_rows(rows, &my_blk.transpose());
+        PendingParts::new(vec![c1_p, c2_p], move |mut mats| {
+            let c2 = mats.pop().expect("cross 2");
+            let c1 = mats.pop().expect("cross 1");
+            local.add(&c1).add(&c2)
+        })
+    }
+
+    fn s3_numerator_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_tile: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let x_tile = x.dense_tile(rows);
+        numerator_vertical_begin(s, &x_tile, c_tile, self.d_a, self.d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Horizontal partition (Beaver-style row blocks)
+// ---------------------------------------------------------------------
+
+/// The horizontally partitioned schedule on the same tile interface: a
+/// tile's global rows `[t0, t1)` split at the ownership boundary `n_a`
+/// into an A-overlap and a B-overlap, and each non-empty overlap is one
+/// tile-shaped private matmul (`(t_a, d, k)` / `(t_b, d, k)` triples —
+/// never n_a- or n-sized once tiling is on).
+pub struct HorizontalBackend {
+    n_a: usize,
+}
+
+impl HorizontalBackend {
+    pub fn new(n_a: usize) -> HorizontalBackend {
+        HorizontalBackend { n_a }
+    }
+
+    /// A tile's overlap with the A rows `[0, n_a)` and B rows `[n_a, n)`,
+    /// as global ranges.
+    fn overlaps(
+        &self,
+        rows: (usize, usize),
+    ) -> ((usize, usize), (usize, usize)) {
+        let (t0, t1) = rows;
+        let a = (t0.min(self.n_a), t1.min(self.n_a));
+        let b = (t0.max(self.n_a), t1.max(self.n_a));
+        (a, b)
+    }
+}
+
+impl CrossProductBackend for HorizontalBackend {
+    fn name(&self) -> &'static str {
+        "beaver"
+    }
+
+    fn s1_xmu_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        mu: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let k = mu.rows;
+        let d = mu.cols;
+        let party = s.party();
+        let n_a = self.n_a;
+        let ((a0, a1), (b0, b1)) = self.overlaps(rows);
+        let (ta, tb) = (a1 - a0, b1 - b0);
+        let mt = mu.transpose(); // d×k (my centroid share)
+        let mut parts = Vec::new();
+        let mut local_a: Option<Mat> = None;
+        let mut local_b: Option<Mat> = None;
+        // A-overlap: X_A·μᵀ = X_A·⟨μ⟩_Aᵀ (A local) + ⟨X_A·⟨μ⟩_Bᵀ⟩ (cross).
+        if ta > 0 {
+            parts.push(if party == 0 {
+                local_a = Some(x.local_matmul_rows((a0, a1), &mt));
+                private_matmul_rows_begin(s, &x.dense, (a0, a1), (d, k), true)
+            } else {
+                private_matmul_begin(s, &mt, (d, k), (ta, d), false)
+            });
+        }
+        // B-overlap: symmetric; B's local rows are offset by n_a.
+        if tb > 0 {
+            parts.push(if party == 1 {
+                local_b = Some(x.local_matmul_rows((b0 - n_a, b1 - n_a), &mt));
+                private_matmul_rows_begin(s, &x.dense, (b0 - n_a, b1 - n_a), (d, k), true)
+            } else {
+                private_matmul_begin(s, &mt, (d, k), (tb, d), false)
+            });
+        }
+        PendingParts::new(parts, move |mut mats| {
+            let cross_b = if tb > 0 { mats.pop().expect("cross B") } else { Mat::zeros(0, k) };
+            let cross_a = if ta > 0 { mats.pop().expect("cross A") } else { Mat::zeros(0, k) };
+            let blk_a = match local_a {
+                Some(l) => l.add(&cross_a),
+                None => cross_a,
+            };
+            let blk_b = match local_b {
+                Some(l) => l.add(&cross_b),
+                None => cross_b,
+            };
+            blk_a.vstack(&blk_b)
+        })
+    }
+
+    fn s3_numerator_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_tile: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let k = c_tile.cols;
+        let d = x.dense.cols;
+        let party = s.party();
+        let n_a = self.n_a;
+        let (t0, _t1) = rows;
+        let ((a0, a1), (b0, b1)) = self.overlaps(rows);
+        let (ta, tb) = (a1 - a0, b1 - b0);
+        let mut parts = Vec::new();
+        let mut local: Option<Mat> = None;
+        // A-overlap: ⟨C_Aᵀ⟩·X_A = ⟨C_A⟩_0ᵀ·X_A (A local) + cross with
+        // B's assignment share. Overlap rows sit at tile-local indices
+        // [a0−t0, a1−t0) of c_tile.
+        if ta > 0 {
+            let c_a = c_tile.rows_slice(a0 - t0, a1 - t0).transpose(); // k×t_a
+            parts.push(if party == 0 {
+                let x_rows = x.dense_tile((a0, a1));
+                local = Some(c_a.matmul(&x_rows));
+                let a = crate::ss::share::trivial_share_of_theirs(k, ta);
+                let b = crate::ss::share::trivial_share_of_mine(&x_rows);
+                crate::ss::matmul::ss_matmul_begin(s, &a, &b)
+            } else {
+                let a = crate::ss::share::trivial_share_of_mine(&c_a);
+                let b = crate::ss::share::trivial_share_of_theirs(ta, d);
+                crate::ss::matmul::ss_matmul_begin(s, &a, &b)
+            });
+        }
+        // B-overlap: symmetric; B's local X rows are offset by n_a.
+        if tb > 0 {
+            let c_b = c_tile.rows_slice(b0 - t0, b1 - t0).transpose(); // k×t_b
+            parts.push(if party == 1 {
+                let x_rows = x.dense_tile((b0 - n_a, b1 - n_a));
+                local = Some(match local.take() {
+                    Some(l) => l.add(&c_b.matmul(&x_rows)),
+                    None => c_b.matmul(&x_rows),
+                });
+                let a = crate::ss::share::trivial_share_of_theirs(k, tb);
+                let b = crate::ss::share::trivial_share_of_mine(&x_rows);
+                crate::ss::matmul::ss_matmul_begin(s, &a, &b)
+            } else {
+                let a = crate::ss::share::trivial_share_of_mine(&c_b);
+                let b = crate::ss::share::trivial_share_of_theirs(tb, d);
+                crate::ss::matmul::ss_matmul_begin(s, &a, &b)
+            });
+        }
+        PendingParts::new(parts, move |mats| {
+            let mut num = match local {
+                Some(l) => l,
+                None => Mat::zeros(k, d),
+            };
+            for m in mats {
+                num = num.add(&m);
+            }
+            num
+        })
     }
 }
 
@@ -135,28 +359,48 @@ impl CrossProductBackend for BeaverBackend {
 // ---------------------------------------------------------------------
 
 /// One scalar secure product per (sample, centroid) pair — n·k flights.
-pub struct NaiveBackend;
+pub struct NaiveBackend {
+    d_a: usize,
+    d: usize,
+}
+
+impl NaiveBackend {
+    pub fn new(d_a: usize, d: usize) -> NaiveBackend {
+        NaiveBackend { d_a, d }
+    }
+}
 
 impl CrossProductBackend for NaiveBackend {
     fn name(&self) -> &'static str {
         "naive"
     }
 
-    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
-        s.flush(); // the staged norm reveal cannot ride a scalar loop
-        esd::vertical_naive_cross(s, &x.dense, mu, d_a)
-    }
-
-    fn s3_numerator(
+    fn s1_xmu_tile(
         &mut self,
         s: &mut Session,
         x: &PartyData,
-        c_share: &Mat,
-        d_a: usize,
-        d: usize,
-    ) -> PendingNumerator {
+        mu: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        s.flush(); // the staged norm reveal cannot ride a scalar loop
+        let x_tile = x.dense_tile(rows);
+        let cross = esd::vertical_naive_cross(s, &x_tile, mu, self.d_a);
+        let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(mu, self.d_a);
+        let my_blk = if s.party() == 0 { &mu_a_blk } else { &mu_b_blk };
+        let local = x_tile.matmul(&my_blk.transpose());
+        PendingParts::ready(local.add(&cross))
+    }
+
+    fn s3_numerator_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_tile: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
         // The ablation targets S1 only (as in the paper's Q3 study).
-        numerator_vertical_begin(s, &x.dense, c_share, d_a, d)
+        let x_tile = x.dense_tile(rows);
+        numerator_vertical_begin(s, &x_tile, c_tile, self.d_a, self.d)
     }
 }
 
@@ -191,24 +435,29 @@ pub fn pk_from_bytes(bytes: &[u8]) -> OuPk {
 }
 
 /// HE cross products over each party's Okamoto-Uchiyama key pair
-/// (paper §5.1); public keys are exchanged once at setup.
+/// (paper §5.1); public keys are exchanged once at setup. The HE
+/// exchange is eager request-response traffic (ciphertexts cannot ride
+/// the round buffer), so tiles cost flights proportionally — the HE
+/// path's win is bytes and sparsity-proportional work, not rounds.
 pub struct HeBackend {
     my_pk: OuPk,
     my_sk: OuSk,
     their_pk: OuPk,
     prg: Prg,
+    d_a: usize,
+    d: usize,
 }
 
 impl HeBackend {
     /// Generate this party's key pair and exchange public keys.
-    pub fn setup(chan: &mut Chan, he_bits: usize, seed: u128) -> HeBackend {
+    pub fn setup(chan: &mut Chan, he_bits: usize, seed: u128, d_a: usize, d: usize) -> HeBackend {
         let party = chan.party;
         let mut prg = Prg::new(seed ^ ((party as u128) << 96) ^ 0xE1);
         chan.set_phase("offline.hekeys");
         let (my_pk, my_sk) = Ou::keygen(he_bits, &mut prg);
         chan.send_bytes(&pk_to_bytes(&my_pk));
         let their_pk = pk_from_bytes(&chan.recv_bytes());
-        HeBackend { my_pk, my_sk, their_pk, prg }
+        HeBackend { my_pk, my_sk, their_pk, prg, d_a, d }
     }
 
     /// One directed sparse product: this party is the sparse holder when
@@ -236,57 +485,69 @@ impl CrossProductBackend for HeBackend {
         "he-protocol2"
     }
 
-    fn s1_cross(&mut self, s: &mut Session, x: &PartyData, mu: &Mat, d_a: usize) -> Mat {
-        let n = x.dense.rows;
-        let k = mu.rows;
-        let d = mu.cols;
-        let party = s.party();
-        s.flush(); // ship the staged norm reveal before the HE exchange
-        let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(mu, d_a);
-        // Cross 1: X_A (sparse at A) × ⟨μ_B⟩ A-block ᵀ (dense at B).
-        let ya = mu_a_blk.transpose(); // d_a×k — B's share is the payload
-        let cross1 =
-            self.sparse_cross(s.chan, x.csr(), &ya, n, (d_a, k), party == 0);
-        // Cross 2: X_B (sparse at B) × ⟨μ_A⟩ B-block ᵀ (dense at A).
-        let yb = mu_b_blk.transpose(); // d_b×k
-        let cross2 =
-            self.sparse_cross(s.chan, x.csr(), &yb, n, (d - d_a, k), party == 1);
-        cross1.add(&cross2)
-    }
-
-    fn s3_numerator(
+    fn s1_xmu_tile(
         &mut self,
         s: &mut Session,
         x: &PartyData,
-        c_share: &Mat,
-        d_a: usize,
-        d: usize,
-    ) -> PendingNumerator {
-        let n = c_share.rows;
-        let k = c_share.cols;
+        mu: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let n_t = rows.1 - rows.0;
+        let k = mu.rows;
+        let d = mu.cols;
+        let d_a = self.d_a;
+        let party = s.party();
+        s.flush(); // ship any staged reveals (the norm) before the HE exchange
+        let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(mu, d_a);
+        let x_tile = x.csr_tile(rows);
+        // Cross 1: X_A tile (sparse at A) × ⟨μ_B⟩ A-block ᵀ (dense at B).
+        let ya = mu_a_blk.transpose(); // d_a×k — B's share is the payload
+        let cross1 = self.sparse_cross(s.chan, &x_tile, &ya, n_t, (d_a, k), party == 0);
+        // Cross 2: X_B tile (sparse at B) × ⟨μ_A⟩ B-block ᵀ (dense at A).
+        let yb = mu_b_blk.transpose(); // d_b×k
+        let cross2 = self.sparse_cross(s.chan, &x_tile, &yb, n_t, (d - d_a, k), party == 1);
+        // Local term through the tile's CSR view.
+        let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
+        let local = x_tile.matmul_dense(&my_blk.transpose());
+        PendingParts::ready(local.add(&cross1).add(&cross2))
+    }
+
+    fn s3_numerator_tile(
+        &mut self,
+        s: &mut Session,
+        x: &PartyData,
+        c_tile: &Mat,
+        rows: (usize, usize),
+    ) -> PendingParts {
+        let n_t = c_tile.rows;
+        let k = c_tile.cols;
+        let d_a = self.d_a;
+        let d = self.d;
         let party = s.party();
         let d_mine = if party == 0 { d_a } else { d - d_a };
-        // Local: ⟨C⟩_meᵀ · X_me = (X_meᵀ·⟨C⟩_me)ᵀ via sparse transpose product.
-        let local = x.csr().t_matmul_dense(c_share).transpose(); // k×d_mine
-        // Cross: ⟨C⟩_otherᵀ · X_me = (X_meᵀ · ⟨C⟩_other)ᵀ — me sparse
-        // holder of X_meᵀ, other dense holder of its C share.
-        let xt = x.csr().transpose(); // d_mine×n
+        let x_tile = x.csr_tile(rows);
+        // Local: ⟨C_tile⟩_meᵀ · X_me = (X_meᵀ·⟨C_tile⟩_me)ᵀ via sparse
+        // transpose product.
+        let local = x_tile.t_matmul_dense(c_tile).transpose(); // k×d_mine
+        // Cross: ⟨C_tile⟩_otherᵀ · X_me = (X_meᵀ · ⟨C_tile⟩_other)ᵀ — me
+        // sparse holder of X_meᵀ, other dense holder of its C share.
+        let xt = x_tile.transpose(); // d_mine×n_t
         // Direction 1: block A (me = party 0 sparse).
         let cross_a = self.sparse_cross(
             s.chan,
             &xt,
-            c_share,
+            c_tile,
             if party == 0 { d_mine } else { d_a },
-            (n, k),
+            (n_t, k),
             party == 0,
         );
         // Direction 2: block B (me = party 1 sparse).
         let cross_b = self.sparse_cross(
             s.chan,
             &xt,
-            c_share,
+            c_tile,
             if party == 1 { d_mine } else { d - d_a },
-            (n, k),
+            (n_t, k),
             party == 1,
         );
         // Assemble numerator blocks in feature order.
@@ -302,7 +563,7 @@ impl CrossProductBackend for HeBackend {
         } else {
             other_block.hstack(&my_block)
         };
-        PendingNumerator::ready(num)
+        PendingParts::ready(num)
     }
 }
 
@@ -312,16 +573,24 @@ impl CrossProductBackend for HeBackend {
 
 /// Resolve the configured [`EsdMode`] to a backend, performing the
 /// Auto-dispatch density exchange and (for the HE path) key setup. The
-/// backend's label is its own [`CrossProductBackend::name`].
+/// backend's label is its own [`CrossProductBackend::name`]. `d` is the
+/// joint feature count. Horizontal partitions always take
+/// [`HorizontalBackend`] (the HE path is vertical-only, rejected
+/// upstream; the naive ablation targets the vertical Q3 study).
 pub fn select(
     chan: &mut Chan,
     cfg: &SecureKmeansConfig,
     x: &PartyData,
+    d: usize,
 ) -> Box<dyn CrossProductBackend> {
+    let d_a = match cfg.partition {
+        Partition::Vertical { d_a } => d_a,
+        Partition::Horizontal { n_a } => return Box::new(HorizontalBackend::new(n_a)),
+    };
     match cfg.effective_esd() {
-        EsdMode::Vectorized => Box::new(BeaverBackend),
-        EsdMode::Naive => Box::new(NaiveBackend),
-        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed)),
+        EsdMode::Vectorized => Box::new(BeaverBackend::new(d_a, d)),
+        EsdMode::Naive => Box::new(NaiveBackend::new(d_a, d)),
+        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d)),
         EsdMode::Auto => {
             chan.set_phase("setup.density");
             let mine = [x.nnz(), x.dense.len() as u64];
@@ -329,9 +598,9 @@ pub fn select(
             let total = (mine[1] + theirs[1]).max(1);
             let density = (mine[0] + theirs[0]) as f64 / total as f64;
             if density < AUTO_DENSITY_THRESHOLD {
-                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed))
+                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d))
             } else {
-                Box::new(BeaverBackend)
+                Box::new(BeaverBackend::new(d_a, d))
             }
         }
     }
@@ -357,5 +626,25 @@ mod tests {
         let m = Mat::from_vec(2, 3, vec![0, 5, 0, 1, 0, 0]);
         assert_eq!(PartyData::dense_only(m.clone()).nnz(), 2);
         assert_eq!(PartyData::with_csr(m).nnz(), 2);
+    }
+
+    #[test]
+    fn horizontal_overlaps_split_at_boundary() {
+        let be = HorizontalBackend::new(20);
+        // Tile fully inside A.
+        assert_eq!(be.overlaps((0, 17)), ((0, 17), (20, 20)));
+        // Tile spanning the boundary.
+        assert_eq!(be.overlaps((17, 34)), ((17, 20), (20, 34)));
+        // Tile fully inside B.
+        assert_eq!(be.overlaps((34, 51)), ((20, 20), (34, 51)));
+    }
+
+    #[test]
+    fn local_matmul_rows_matches_slice() {
+        let x = Mat::from_vec(4, 2, vec![1, 2, 0, 3, 4, 0, 5, 6]);
+        let rhs = Mat::from_vec(2, 3, vec![1, 0, 2, 0, 1, 3]);
+        let want = x.rows_slice(1, 3).matmul(&rhs);
+        assert_eq!(PartyData::dense_only(x.clone()).local_matmul_rows((1, 3), &rhs), want);
+        assert_eq!(PartyData::with_csr(x).local_matmul_rows((1, 3), &rhs), want);
     }
 }

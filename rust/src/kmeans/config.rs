@@ -33,6 +33,36 @@ pub enum EsdMode {
     Auto,
 }
 
+/// How a row-tiled run maps tiles onto network flights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TileFlights {
+    /// All tiles advance through S1/S2/S3 together: every tile's gates
+    /// for a dependency level share the level's flight, so tiling costs
+    /// **zero** extra rounds over the monolithic schedule (asserted by
+    /// the round-count regression tests). Offline material is still
+    /// tile-shaped — peak triple size is bounded by the tile, not n.
+    #[default]
+    Lockstep,
+    /// One tile at a time through the whole iteration: rounds scale with
+    /// the tile count, but every online intermediate (distance tile, MUX
+    /// lanes, numerator contribution) is O(B·d) — the memory-constrained
+    /// deployment mode.
+    Streamed,
+}
+
+/// The row-tile schedule for `n` samples: half-open global row ranges,
+/// `⌈n/B⌉` tiles of `B` rows (last tile ragged when `B ∤ n`), or one
+/// monolithic tile when tiling is off.
+pub fn tile_schedule(n: usize, tile_rows: Option<usize>) -> Vec<(usize, usize)> {
+    match tile_rows {
+        None => vec![(0, n)],
+        Some(b) => {
+            let b = b.max(1);
+            (0..n).step_by(b).map(|r0| (r0, (r0 + b).min(n))).collect()
+        }
+    }
+}
+
 /// Parameters of a secure K-means run.
 #[derive(Debug, Clone)]
 pub struct SecureKmeansConfig {
@@ -59,6 +89,15 @@ pub struct SecureKmeansConfig {
     /// independent gates of a dependency level; [`RoundPolicy::PerGate`]
     /// is the gate-per-flight ablation baseline.
     pub round_policy: RoundPolicy,
+    /// Row-tile size `B` for the online phase: `Some(B)` streams the
+    /// sample dimension through `⌈n/B⌉` tiles so every matrix-triple
+    /// shape (and the S1/S3 working set) is bounded by `B` instead of
+    /// `n`, making the recorded offline [`crate::offline::store::Demand`]
+    /// uniform per tile and reusable across dataset sizes. `None` keeps
+    /// the monolithic schedule.
+    pub tile_rows: Option<usize>,
+    /// Flight policy for the tile schedule (ignored without `tile_rows`).
+    pub tile_flights: TileFlights,
 }
 
 impl SecureKmeansConfig {
@@ -85,6 +124,8 @@ impl Default for SecureKmeansConfig {
             he_bits: 768,
             epsilon: None,
             round_policy: RoundPolicy::Coalesced,
+            tile_rows: None,
+            tile_flights: TileFlights::Lockstep,
         }
     }
 }
@@ -101,6 +142,25 @@ mod tests {
         assert!(c.epsilon.is_none());
         assert_eq!(c.round_policy, RoundPolicy::Coalesced);
         assert_eq!(c.effective_esd(), EsdMode::Vectorized);
+        assert!(c.tile_rows.is_none());
+        assert_eq!(c.tile_flights, TileFlights::Lockstep);
+    }
+
+    #[test]
+    fn tile_schedule_covers_rows_exactly_once() {
+        assert_eq!(tile_schedule(10, None), vec![(0, 10)]);
+        assert_eq!(tile_schedule(10, Some(4)), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(tile_schedule(8, Some(4)), vec![(0, 4), (4, 8)]);
+        assert_eq!(tile_schedule(3, Some(100)), vec![(0, 3)]);
+        // Non-divisor tile sizes: ranges are contiguous and exhaustive.
+        let tiles = tile_schedule(60, Some(17));
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(tiles[0].0, 0);
+        assert_eq!(tiles[tiles.len() - 1].1, 60);
+        for w in tiles.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "tiles must abut");
+        }
+        assert_eq!(tiles[3], (51, 60), "ragged last tile");
     }
 
     #[test]

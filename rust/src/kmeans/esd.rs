@@ -15,32 +15,53 @@
 
 use crate::ring::matrix::Mat;
 use crate::ss::arith::ssquare_elem_begin;
-use crate::ss::matmul::{private_matmul, private_matmul_begin};
+use crate::ss::matmul::{private_matmul, private_matmul_begin, private_matmul_rows_begin};
 use crate::ss::pending::Pending;
 use crate::ss::Session;
 
 /// Stage the shares of the per-cluster squared-norm row
-/// `[|μ_1|², …, |μ_k|²]`, broadcast to n rows (scale 2f). Resolves after
-/// the next flush, so the reveal rides whatever flight the caller builds.
-pub fn centroid_norms_begin(ctx: &mut Session, mu: &Mat, n: usize) -> Pending<Mat> {
+/// `[|μ_1|², …, |μ_k|²]` as a 1×k matrix (scale 2f). One staged gate
+/// serves every row tile of an iteration: the k-lane row is broadcast
+/// per tile with [`broadcast_norm_rows`], so tiling never re-stages it.
+pub fn centroid_norms_row_begin(ctx: &mut Session, mu: &Mat) -> Pending<Mat> {
     let k = mu.rows;
     let d = mu.cols;
     ssquare_elem_begin(ctx, mu).map(move |sq| {
-        // sq is k×d at scale 2f; reduce rows, broadcast over samples.
-        let mut u = vec![0u64; k];
+        // sq is k×d at scale 2f; reduce each centroid's row.
+        let mut u = Mat::zeros(1, k);
         for j in 0..k {
             let mut acc = 0u64;
             for l in 0..d {
                 acc = acc.wrapping_add(sq.data[j * d + l]);
             }
-            u[j] = acc;
+            u.data[j] = acc;
         }
-        let mut out = Mat::zeros(n, k);
-        for i in 0..n {
-            out.row_mut(i).copy_from_slice(&u);
-        }
-        out
+        u
     })
+}
+
+/// Broadcast a 1×k norm row over `n` sample rows.
+pub fn broadcast_norm_rows(u_row: &Mat, n: usize) -> Mat {
+    let k = u_row.cols;
+    let mut out = Mat::zeros(n, k);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&u_row.data);
+    }
+    out
+}
+
+/// Assemble a distance tile `⟨D'⟩ = ⟨U⟩ − 2·⟨X·μᵀ⟩` from the shared norm
+/// row (1×k) and the tile's complete cross-product share (n_t×k, local
+/// term included). Scale 2f.
+pub fn dprime_from_parts(u_row: &Mat, xmu: &Mat) -> Mat {
+    broadcast_norm_rows(u_row, xmu.rows).sub(&xmu.scale(2))
+}
+
+/// Stage the shares of the per-cluster squared-norm row
+/// `[|μ_1|², …, |μ_k|²]`, broadcast to n rows (scale 2f). Resolves after
+/// the next flush, so the reveal rides whatever flight the caller builds.
+pub fn centroid_norms_begin(ctx: &mut Session, mu: &Mat, n: usize) -> Pending<Mat> {
+    centroid_norms_row_begin(ctx, mu).map(move |u| broadcast_norm_rows(&u, n))
 }
 
 /// Shares of the broadcast squared-norm matrix (single-gate wrapper).
@@ -56,36 +77,50 @@ pub fn split_mu_vertical(mu: &Mat, d_a: usize) -> (Mat, Mat) {
     (mu.cols_slice(0, d_a), mu.cols_slice(d_a, mu.cols))
 }
 
-/// Stage the two vertical cross products
-/// `X_A·(⟨μ⟩_B A-block)ᵀ` and `X_B·(⟨μ⟩_A B-block)ᵀ` (each n×k).
-/// Shared by [`vertical`] and the Beaver backend; both reveals ride one
-/// flight together with anything else the caller staged.
+/// Stage the two vertical cross products for one row tile:
+/// `X_A[r0..r1]·(⟨μ⟩_B A-block)ᵀ` and `X_B[r0..r1]·(⟨μ⟩_A B-block)ᵀ`
+/// (each n_t×k). Both reveals — and every other tile's — ride one
+/// flight together with anything else the caller staged; the matrix
+/// triples are tile-shaped (`(n_t, d_a, k)` / `(n_t, d_b, k)`), never
+/// n-sized.
+pub fn vertical_cross_tile_begin(
+    ctx: &mut Session,
+    x_mine: &Mat,
+    rows: (usize, usize),
+    mu: &Mat,
+    d_a: usize,
+) -> (Pending<Mat>, Pending<Mat>) {
+    let n_t = rows.1 - rows.0;
+    let k = mu.rows;
+    let d_b = mu.cols - d_a;
+    let party = ctx.party();
+    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
+    // Cross 1: X_A tile (A plaintext) · ⟨μ⟩_B's A-block ᵀ (B share).
+    let cross1 = if party == 0 {
+        private_matmul_rows_begin(ctx, x_mine, rows, (d_a, k), true)
+    } else {
+        let mb = mu_a_blk.transpose(); // d_a×k
+        private_matmul_begin(ctx, &mb, (d_a, k), (n_t, d_a), false)
+    };
+    // Cross 2: X_B tile (B plaintext) · ⟨μ⟩_A's B-block ᵀ (A share).
+    let cross2 = if party == 1 {
+        private_matmul_rows_begin(ctx, x_mine, rows, (d_b, k), true)
+    } else {
+        let mb = mu_b_blk.transpose(); // d_b×k
+        private_matmul_begin(ctx, &mb, (d_b, k), (n_t, d_b), false)
+    };
+    (cross1, cross2)
+}
+
+/// Stage the two vertical cross products over all rows (monolithic
+/// wrapper around [`vertical_cross_tile_begin`]).
 pub fn vertical_cross_begin(
     ctx: &mut Session,
     x_mine: &Mat,
     mu: &Mat,
     d_a: usize,
 ) -> (Pending<Mat>, Pending<Mat>) {
-    let n = x_mine.rows;
-    let k = mu.rows;
-    let d_b = mu.cols - d_a;
-    let party = ctx.party();
-    let (mu_a_blk, mu_b_blk) = split_mu_vertical(mu, d_a);
-    // Cross 1: X_A (A plaintext) · ⟨μ⟩_B's A-block ᵀ (B share).
-    let cross1 = if party == 0 {
-        private_matmul_begin(ctx, x_mine, (n, d_a), (d_a, k), true)
-    } else {
-        let mb = mu_a_blk.transpose(); // d_a×k
-        private_matmul_begin(ctx, &mb, (d_a, k), (n, d_a), false)
-    };
-    // Cross 2: X_B (B plaintext) · ⟨μ⟩_A's B-block ᵀ (A share).
-    let cross2 = if party == 1 {
-        private_matmul_begin(ctx, x_mine, (n, d_b), (d_b, k), true)
-    } else {
-        let mb = mu_b_blk.transpose(); // d_b×k
-        private_matmul_begin(ctx, &mb, (d_b, k), (n, d_b), false)
-    };
-    (cross1, cross2)
+    vertical_cross_tile_begin(ctx, x_mine, (0, x_mine.rows), mu, d_a)
 }
 
 /// Vertical F'_ESD: `x_mine` is this party's plaintext feature block
@@ -112,45 +147,22 @@ pub fn vertical(ctx: &mut Session, x_mine: &Mat, mu: &Mat, d_a: usize) -> Mat {
 
 /// Horizontal F'_ESD: `x_mine` is this party's sample block (n_mine×d);
 /// `n_a` is party A's (public) sample count. Returns shares of the full
-/// stacked `D' (n×k)`. One flight total.
+/// stacked `D' (n×k)`. One flight total. Thin monolithic wrapper over
+/// the single `(0, n)` tile of
+/// [`crate::kmeans::backend::HorizontalBackend`] — the row-block share
+/// algebra lives there once, for every tile size. Clones the block to
+/// adapt to the backend's `PartyData` (fine for the single-call and
+/// test uses this wrapper serves; the driver feeds the backend its
+/// long-lived `PartyData` directly).
 pub fn horizontal(ctx: &mut Session, x_mine: &Mat, mu: &Mat, n_a: usize, n: usize) -> Mat {
-    let k = mu.rows;
-    let d = mu.cols;
-    let party = ctx.party();
-    let n_b = n - n_a;
-    let u_p = centroid_norms_begin(ctx, mu, n);
-
-    // Block A (rows 0..n_a): X_A·μᵀ = X_A·⟨μ⟩_Aᵀ (A local) + X_A·⟨μ⟩_Bᵀ.
-    let cross_a_p = if party == 0 {
-        private_matmul_begin(ctx, x_mine, (n_a, d), (d, k), true)
-    } else {
-        let mb = mu.transpose();
-        private_matmul_begin(ctx, &mb, (d, k), (n_a, d), false)
-    };
-    // Block B (rows n_a..n): symmetric.
-    let cross_b_p = if party == 1 {
-        private_matmul_begin(ctx, x_mine, (n_b, d), (d, k), true)
-    } else {
-        let mb = mu.transpose();
-        private_matmul_begin(ctx, &mb, (d, k), (n_b, d), false)
-    };
+    use crate::kmeans::backend::{CrossProductBackend, HorizontalBackend, PartyData};
+    let u_p = centroid_norms_row_begin(ctx, mu);
+    let mut be = HorizontalBackend::new(n_a);
+    let x = PartyData::dense_only(x_mine.clone());
+    let xmu_p = be.s1_xmu_tile(ctx, &x, mu, (0, n));
     ctx.flush();
     let u = u_p.resolve(ctx);
-    let cross_a = cross_a_p.resolve(ctx);
-    let cross_b = cross_b_p.resolve(ctx);
-
-    let block_a = if party == 0 {
-        x_mine.matmul(&mu.transpose()).add(&cross_a)
-    } else {
-        cross_a
-    };
-    let block_b = if party == 1 {
-        x_mine.matmul(&mu.transpose()).add(&cross_b)
-    } else {
-        cross_b
-    };
-    let xmu = block_a.vstack(&block_b);
-    u.sub(&xmu.scale(2))
+    dprime_from_parts(&u, &xmu_p.resolve(ctx))
 }
 
 /// The naive cross-product sum (Q3 ablation, vertical only): one scalar
@@ -332,8 +344,20 @@ mod tests {
         let x: Vec<f64> = (0..n * d).map(|_| prg.next_f64()).collect();
         let mu = Mat::encode(k, d, &vec![0.5; k * d]);
         let (mu0, mu1) = split(&mu, &mut prg);
-        let xa = Mat::encode(n, d_a, &x[..n * d_a]);
-        let xb = Mat::encode(n, d - d_a, &x[n * d_a..]);
+        // A holds cols [0, d_a), B holds [d_a, d) — per-row column
+        // slicing as in run_vertical_case, so the round-count assertion
+        // runs on a real vertical instance (a contiguous `&x[..n*d_a]`
+        // slice of the row-major buffer is not a column split).
+        let xa = Mat::encode(
+            n,
+            d_a,
+            &(0..n).flat_map(|i| x[i * d..i * d + d_a].to_vec()).collect::<Vec<_>>(),
+        );
+        let xb = Mat::encode(
+            n,
+            d - d_a,
+            &(0..n).flat_map(|i| x[i * d + d_a..(i + 1) * d].to_vec()).collect::<Vec<_>>(),
+        );
         let ((_, m_vec), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(96, 0);

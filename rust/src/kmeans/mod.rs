@@ -19,9 +19,13 @@
 //!   column sum.
 //!
 //! [`secure`] orchestrates the iterations for vertically and
-//! horizontally partitioned data over any backend; [`sparse`] is the
-//! thin HE-path entrypoint. [`plaintext`] is the cleartext oracle the
-//! protocol is validated against.
+//! horizontally partitioned data over any backend, walking a **row-tile
+//! schedule** (`config::tile_rows`) that bounds every matrix triple and
+//! online intermediate by the tile size instead of n — lockstep tiles
+//! share the monolithic flight budget, streamed tiles trade rounds for
+//! O(B·d) memory. [`sparse`] is the thin HE-path entrypoint.
+//! [`plaintext`] is the cleartext oracle the protocol is validated
+//! against.
 
 pub mod assign;
 pub mod backend;

@@ -4,8 +4,27 @@
 //! runs the full protocol: initialization → t × (S1 distance → S2
 //! assignment → S3 update) → output reconstruction, with every step on
 //! the round-batched [`crate::ss::Session`] engine and the S1/S3 cross
-//! products behind a [`CrossProductBackend`] (Beaver, HE Protocol 2 or
-//! the naive ablation — `EsdMode::Auto` dispatches on joint density).
+//! products behind a [`CrossProductBackend`] (Beaver, HE Protocol 2,
+//! the naive ablation, or the horizontal row-block path —
+//! `EsdMode::Auto` dispatches on joint density).
+//!
+//! ## Row tiling
+//!
+//! The whole online phase walks a **row-tile schedule**
+//! ([`crate::kmeans::config::tile_schedule`]): with `tile_rows:
+//! Some(B)` every backend entry point, every matrix triple and every
+//! S1/S3 intermediate is shaped by the tile (≤ B rows), never by n — the
+//! offline demand becomes a handful of uniform per-tile shapes repeated
+//! `tiles × iters` times, reusable across dataset sizes, which is the
+//! deployable offline/online split the paper describes. Under
+//! [`TileFlights::Lockstep`] all tiles advance together: S1 stages every
+//! tile's gates into one flight, S2 runs the `F_min^k` levels with all
+//! tiles' lanes batched per level, S3's per-tile numerators ride the
+//! division-prep comparison — flight counts are **identical** to the
+//! monolithic schedule (regression-tested). [`TileFlights::Streamed`]
+//! processes one tile per flight group instead: rounds × tiles, but
+//! O(B·d) live state.
+//!
 //! Communication is metered per phase (`online.s1` / `online.s2` /
 //! `online.s3` / `reveal`), triple generation time is separated by
 //! [`crate::offline::timed::TimedSource`], and the exact offline
@@ -13,7 +32,7 @@
 //! every number the paper's tables and figures need from a single run.
 
 use super::backend::{self, CrossProductBackend, PartyData};
-use super::config::{EsdMode, Partition, SecureKmeansConfig};
+use super::config::{tile_schedule, EsdMode, Partition, SecureKmeansConfig, TileFlights};
 use super::{assign, esd, init, update};
 use crate::data::blobs::Dataset;
 use crate::net::{run_two_party, Chan, Meter};
@@ -21,6 +40,7 @@ use crate::offline::dealer::Dealer;
 use crate::offline::store::{Demand, TripleStore};
 use crate::offline::timed::TimedSource;
 use crate::ring::matrix::Mat;
+use crate::ss::pending::PendingParts;
 use crate::ss::share::reconstruct;
 use crate::ss::triples::{Ledger, TripleSource};
 use crate::ss::Session;
@@ -63,6 +83,15 @@ pub struct SecureKmeansOutput {
     pub wall_secs: f64,
     /// Online wall-clock by step.
     pub step_wall: StepWall,
+    /// Number of tiles the online schedule ran per iteration (1 without
+    /// tiling).
+    pub tiles_run: usize,
+    /// Reconstructed assignment rows that were **not** a valid one-hot
+    /// vector (anything nonzero here means the protocol output is
+    /// corrupt; such rows are counted instead of silently hidden — also
+    /// guarded by a `debug_assert` — and assigned to the first entry
+    /// holding a 1, or cluster 0 if none).
+    pub malformed_assignment_rows: usize,
 }
 
 /// One party's raw protocol outputs (shared with the sparse entrypoint).
@@ -77,6 +106,8 @@ pub struct PartyResult {
     pub wall: f64,
     pub steps: StepWall,
     pub iters: usize,
+    pub tiles: usize,
+    pub malformed_rows: usize,
 }
 
 impl PartyResult {
@@ -104,6 +135,8 @@ impl PartyResult {
             offline_gen_secs: self.offline_secs,
             wall_secs: self.wall.max(wall_b),
             step_wall: self.steps,
+            tiles_run: self.tiles,
+            malformed_assignment_rows: self.malformed_rows,
         }
     }
 }
@@ -133,8 +166,8 @@ pub fn split_dataset(data: &Dataset, partition: Partition) -> (Mat, Mat) {
     }
 }
 
-/// One party's protocol main loop, generic over the cross-product
-/// backend (vertical) or the dedicated horizontal path.
+/// One party's protocol main loop: the row-tiled schedule over the
+/// partition-appropriate cross-product backend.
 fn party_main(
     chan: &mut Chan,
     mut x: PartyData,
@@ -148,15 +181,8 @@ fn party_main(
     let mut store = TripleStore::new(timed);
     let mut steps = StepWall::default();
 
-    // Backend selection (vertical only; horizontal is always Beaver-style).
-    let mut cross_backend: Option<Box<dyn CrossProductBackend>> = match cfg.partition {
-        Partition::Vertical { .. } => Some(backend::select(chan, cfg, &x)),
-        Partition::Horizontal { .. } => None,
-    };
-    let backend_name = cross_backend
-        .as_ref()
-        .map(|b| b.name())
-        .unwrap_or_else(|| backend::BeaverBackend.name());
+    let mut cross_backend: Box<dyn CrossProductBackend> = backend::select(chan, cfg, &x, d);
+    let backend_name = cross_backend.name();
     // The CSR view is speculative under EsdMode::Auto; if density routed
     // us to the dense Beaver path, drop it so the per-iteration S1 local
     // product uses the blocked/PJRT kernel, not per-nonzero indirection.
@@ -170,78 +196,178 @@ fn party_main(
         Partition::Horizontal { n_a } => init::horizontal(&x.dense, n_a, n, cfg.k, cfg.seed, party),
     };
 
+    let tiles = tile_schedule(n, cfg.tile_rows);
+    let streamed = cfg.tile_flights == TileFlights::Streamed && tiles.len() > 1;
+
     let mut c_share = Mat::zeros(n, cfg.k);
     let mut step_demands = [Demand::default(), Demand::default(), Demand::default()];
     let mut iters = 0;
     for _t in 0..cfg.iters {
         iters += 1;
 
-        // S1 — distance: norm square + cross products, one flight on the
-        // Beaver path.
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        let dem0 = store.demand.clone();
-        let dmat = {
-            let mut ctx =
-                Session::new(chan, &mut store, Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5))
+        let mu_new = if streamed {
+            // ---- Streamed: one tile per flight group, O(B·d) state. ---
+            // The running numerator / count shares are the only
+            // cross-tile state; one division closes the iteration.
+            let mut u_row: Option<Mat> = None;
+            let mut num_acc = Mat::zeros(cfg.k, d);
+            for (ti, &(r0, r1)) in tiles.iter().enumerate() {
+                let tseed = (ti as u128 + 1) << 16;
+
+                // S1 tile — the norm row rides tile 0's flight.
+                let t0 = Instant::now();
+                let off0 = store.inner().secs;
+                let dem0 = store.demand.mark();
+                let d_tile = {
+                    let mut ctx = Session::new(
+                        chan,
+                        &mut store,
+                        Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5 ^ tseed),
+                    )
                     .with_policy(cfg.round_policy);
-            ctx.set_phase("online.s1");
-            match (cfg.partition, &mut cross_backend) {
-                (Partition::Vertical { d_a }, Some(be)) => {
-                    let u_p = esd::centroid_norms_begin(&mut ctx, &mu, n);
-                    let cross = be.s1_cross(&mut ctx, &x, &mu, d_a);
+                    ctx.set_phase("online.s1");
+                    let u_p =
+                        if ti == 0 { Some(esd::centroid_norms_row_begin(&mut ctx, &mu)) } else { None };
+                    let xmu_p = cross_backend.s1_xmu_tile(&mut ctx, &x, &mu, (r0, r1));
                     ctx.flush();
-                    let u = u_p.resolve(&mut ctx);
-                    let (mu_a_blk, mu_b_blk) = esd::split_mu_vertical(&mu, d_a);
-                    let my_blk = if party == 0 { &mu_a_blk } else { &mu_b_blk };
-                    let local = x.local_matmul(&my_blk.transpose());
-                    u.sub(&local.add(&cross).scale(2))
+                    if let Some(p) = u_p {
+                        u_row = Some(p.resolve(&mut ctx));
+                    }
+                    let u = u_row.as_ref().expect("norm row resolves with tile 0");
+                    esd::dprime_from_parts(u, &xmu_p.resolve(&mut ctx))
+                };
+                steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                step_demands[0].extend(&store.demand.delta_since(&dem0));
+
+                // S2 tile.
+                let t0 = Instant::now();
+                let off0 = store.inner().secs;
+                let dem0 = store.demand.mark();
+                let c_tile = {
+                    let mut ctx =
+                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6 ^ tseed))
+                            .with_policy(cfg.round_policy);
+                    ctx.set_phase("online.s2");
+                    let (c_t, _minvals) = assign::min_k(&mut ctx, &d_tile);
+                    c_t
+                };
+                for i in r0..r1 {
+                    c_share.row_mut(i).copy_from_slice(c_tile.row(i - r0));
                 }
-                (Partition::Horizontal { n_a }, _) => {
-                    esd::horizontal(&mut ctx, &x.dense, &mu, n_a, n)
+                steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                step_demands[1].extend(&store.demand.delta_since(&dem0));
+
+                // S3 tile — accumulate the numerator contribution.
+                let t0 = Instant::now();
+                let off0 = store.inner().secs;
+                let dem0 = store.demand.mark();
+                {
+                    let mut ctx =
+                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7 ^ tseed))
+                            .with_policy(cfg.round_policy);
+                    ctx.set_phase("online.s3");
+                    let num_p = cross_backend.s3_numerator_tile(&mut ctx, &x, &c_tile, (r0, r1));
+                    ctx.flush();
+                    num_acc = num_acc.add(&num_p.resolve(&mut ctx));
                 }
-                (Partition::Vertical { .. }, None) => unreachable!("vertical run needs a backend"),
+                steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                step_demands[2].extend(&store.demand.delta_since(&dem0));
             }
-        };
-        steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-        step_demands[0].extend(&store.demand.delta(&dem0));
 
-        // S2 — assignment: ⌈log₂ k⌉ levels of CMP + fused MUX.
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        let dem0 = store.demand.clone();
-        {
-            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6))
-                .with_policy(cfg.round_policy);
-            ctx.set_phase("online.s2");
-            let (c_new, _minvals) = assign::min_k(&mut ctx, &dmat);
-            c_share = c_new;
-        }
-        steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-        step_demands[1].extend(&store.demand.delta(&dem0));
-
-        // S3 — update: the numerator reveals coalesce into the division
-        // prep (empty-cluster comparison), then one fused MUX flight.
-        let t0 = Instant::now();
-        let off0 = store.inner().secs;
-        let dem0 = store.demand.clone();
-        let mu_new = {
-            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
-                .with_policy(cfg.round_policy);
-            ctx.set_phase("online.s3");
-            let num = match (cfg.partition, &mut cross_backend) {
-                (Partition::Vertical { d_a }, Some(be)) => {
-                    be.s3_numerator(&mut ctx, &x, &c_share, d_a, d)
-                }
-                (Partition::Horizontal { n_a }, _) => {
-                    update::numerator_horizontal_begin(&mut ctx, &x.dense, &c_share, n_a)
-                }
-                (Partition::Vertical { .. }, None) => unreachable!("vertical run needs a backend"),
+            // S3 tail: empty-cluster fallback + the single division.
+            let t0 = Instant::now();
+            let off0 = store.inner().secs;
+            let dem0 = store.demand.mark();
+            let mu_new = {
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
+                    .with_policy(cfg.round_policy);
+                ctx.set_phase("online.s3");
+                update::finish_update_tiles(
+                    &mut ctx,
+                    vec![PendingParts::ready(num_acc)],
+                    &c_share.col_sums(),
+                    &mu,
+                )
             };
-            update::finish_update_pending(&mut ctx, num, &c_share, &mu)
+            steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            step_demands[2].extend(&store.demand.delta_since(&dem0));
+            mu_new
+        } else {
+            // ---- Lockstep (and the monolithic single tile): every
+            // tile's gates share the step's flights. -------------------
+
+            // S1 — distance: norm square + every tile's cross products,
+            // one flight on the Beaver path.
+            let t0 = Instant::now();
+            let off0 = store.inner().secs;
+            let dem0 = store.demand.mark();
+            let d_tiles: Vec<Mat> = {
+                let mut ctx = Session::new(
+                    chan,
+                    &mut store,
+                    Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5),
+                )
+                .with_policy(cfg.round_policy);
+                ctx.set_phase("online.s1");
+                let u_row_p = esd::centroid_norms_row_begin(&mut ctx, &mu);
+                let xmu_ps: Vec<PendingParts> = tiles
+                    .iter()
+                    .map(|&t| cross_backend.s1_xmu_tile(&mut ctx, &x, &mu, t))
+                    .collect();
+                ctx.flush();
+                let u_row = u_row_p.resolve(&mut ctx);
+                xmu_ps
+                    .into_iter()
+                    .map(|p| esd::dprime_from_parts(&u_row, &p.resolve(&mut ctx)))
+                    .collect()
+            };
+            steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            step_demands[0].extend(&store.demand.delta_since(&dem0));
+
+            // S2 — assignment: ⌈log₂ k⌉ levels of CMP + fused MUX, all
+            // tiles' lanes in lockstep per level.
+            let t0 = Instant::now();
+            let off0 = store.inner().secs;
+            let dem0 = store.demand.mark();
+            {
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6))
+                    .with_policy(cfg.round_policy);
+                ctx.set_phase("online.s2");
+                let (c_new, _minvals) = assign::min_k_tiles(&mut ctx, &d_tiles);
+                c_share = c_new;
+            }
+            steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            step_demands[1].extend(&store.demand.delta_since(&dem0));
+
+            // S3 — update: every tile's numerator reveals coalesce into
+            // the division prep (empty-cluster comparison), the resolved
+            // k×d contributions sum, then one fused MUX flight and one
+            // division.
+            let t0 = Instant::now();
+            let off0 = store.inner().secs;
+            let dem0 = store.demand.mark();
+            let mu_new = {
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
+                    .with_policy(cfg.round_policy);
+                ctx.set_phase("online.s3");
+                let nums: Vec<PendingParts> = tiles
+                    .iter()
+                    .map(|&(r0, r1)| {
+                        // Full range (monolithic): borrow, don't copy.
+                        let c_tile: std::borrow::Cow<'_, Mat> = if (r0, r1) == (0, n) {
+                            std::borrow::Cow::Borrowed(&c_share)
+                        } else {
+                            std::borrow::Cow::Owned(c_share.rows_slice(r0, r1))
+                        };
+                        cross_backend.s3_numerator_tile(&mut ctx, &x, &c_tile, (r0, r1))
+                    })
+                    .collect();
+                update::finish_update_tiles(&mut ctx, nums, &c_share.col_sums(), &mu)
+            };
+            steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            step_demands[2].extend(&store.demand.delta_since(&dem0));
+            mu_new
         };
-        steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
-        step_demands[2].extend(&store.demand.delta(&dem0));
 
         // Optional F_CSC convergence check.
         let stop = if let Some(eps) = cfg.epsilon {
@@ -262,8 +388,25 @@ fn party_main(
     chan.set_phase("reveal");
     let mu_plain = reconstruct(chan, &mu);
     let c_plain = reconstruct(chan, &c_share);
-    let assignments = (0..n)
-        .map(|i| (0..cfg.k).find(|&j| c_plain.at(i, j) == 1).unwrap_or(0))
+    // A reconstructed assignment row must be exactly one-hot; anything
+    // else is protocol corruption — count it (and trip a debug assert)
+    // instead of silently mapping the row to cluster 0.
+    let mut malformed_rows = 0usize;
+    let assignments: Vec<usize> = (0..n)
+        .map(|i| {
+            let row = c_plain.row(i);
+            let ones = row.iter().filter(|&&v| v == 1).count();
+            let well_formed = ones == 1 && row.iter().all(|&v| v == 0 || v == 1);
+            if !well_formed {
+                malformed_rows += 1;
+                debug_assert!(
+                    well_formed,
+                    "assignment row {i} is not one-hot: {:?}",
+                    row
+                );
+            }
+            row.iter().position(|&v| v == 1).unwrap_or(0)
+        })
         .collect();
 
     PartyResult {
@@ -277,14 +420,19 @@ fn party_main(
         wall: t_start.elapsed().as_secs_f64(),
         steps,
         iters,
+        tiles: tiles.len(),
+        malformed_rows,
     }
 }
 
-/// Run the full two-party protocol on a dataset, any partition and any
-/// cross-product backend.
+/// Run the full two-party protocol on a dataset, any partition, any
+/// cross-product backend and any tile schedule.
 pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
     if cfg.k < 2 {
         return Err(Error::Config("k must be ≥ 2".into()));
+    }
+    if cfg.tile_rows == Some(0) {
+        return Err(Error::Config("tile_rows must be ≥ 1".into()));
     }
     let esd_mode = cfg.effective_esd();
     if matches!(cfg.partition, Partition::Horizontal { .. }) && esd_mode == EsdMode::He {
@@ -304,6 +452,13 @@ pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutpu
         move |c| party_main(c, pb, n, d, &cfg_b),
     );
     debug_assert_eq!(ra.mu, rb.mu, "parties must reconstruct identical centroids");
+    if ra.malformed_rows > 0 {
+        eprintln!(
+            "WARNING: {} of {} reconstructed assignment rows were not one-hot \
+             (protocol corruption; each mapped to its first 1-entry, or cluster 0)",
+            ra.malformed_rows, n
+        );
+    }
     let wall_b = rb.wall;
     Ok(ra.into_output(cfg.k, d, meter_a, meter_b, wall_b))
 }
@@ -356,6 +511,8 @@ mod tests {
         }
         assert_eq!(sec.assignments, plain.assignments);
         assert_eq!(sec.backend_name, "beaver");
+        assert_eq!(sec.tiles_run, 1);
+        assert_eq!(sec.malformed_assignment_rows, 0);
     }
 
     #[test]
@@ -370,6 +527,74 @@ mod tests {
         let sec = run(&ds, &cfg).unwrap();
         let plain = plaintext::kmeans(&ds, 2, 5, cfg.seed);
         assert_eq!(sec.assignments, plain.assignments);
+    }
+
+    #[test]
+    fn tiled_matches_monolithic_vertical_nondivisor() {
+        // B = 17 does not divide n = 60 (ragged last tile of 9 rows);
+        // both tile policies must agree with the monolithic run.
+        let ds = well_separated(60, 4, 3, 44);
+        let base = SecureKmeansConfig {
+            k: 3,
+            iters: 4,
+            partition: Partition::Vertical { d_a: 2 },
+            ..Default::default()
+        };
+        let mono = run(&ds, &base).unwrap();
+        for flights in [TileFlights::Lockstep, TileFlights::Streamed] {
+            let cfg = SecureKmeansConfig {
+                tile_rows: Some(17),
+                tile_flights: flights,
+                ..base.clone()
+            };
+            let tiled = run(&ds, &cfg).unwrap();
+            assert_eq!(tiled.tiles_run, 4);
+            assert_eq!(tiled.assignments, mono.assignments, "{flights:?}");
+            for i in 0..mono.centroids.len() {
+                assert!(
+                    (tiled.centroids[i] - mono.centroids[i]).abs() < 1e-2,
+                    "{flights:?} centroid {i}: {} vs {}",
+                    tiled.centroids[i],
+                    mono.centroids[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_monolithic_horizontal_nondivisor() {
+        // Tiles cut across the ownership boundary n_a = 20 (tile (17,34)
+        // spans it), on both flight policies.
+        let ds = well_separated(60, 3, 2, 45);
+        let base = SecureKmeansConfig {
+            k: 2,
+            iters: 4,
+            partition: Partition::Horizontal { n_a: 20 },
+            ..Default::default()
+        };
+        let mono = run(&ds, &base).unwrap();
+        for flights in [TileFlights::Lockstep, TileFlights::Streamed] {
+            let cfg = SecureKmeansConfig {
+                tile_rows: Some(17),
+                tile_flights: flights,
+                ..base.clone()
+            };
+            let tiled = run(&ds, &cfg).unwrap();
+            assert_eq!(tiled.assignments, mono.assignments, "{flights:?}");
+            for i in 0..mono.centroids.len() {
+                assert!(
+                    (tiled.centroids[i] - mono.centroids[i]).abs() < 1e-2,
+                    "{flights:?} centroid {i}",
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tile_rows_is_rejected() {
+        let ds = well_separated(20, 2, 2, 46);
+        let cfg = SecureKmeansConfig { tile_rows: Some(0), ..Default::default() };
+        assert!(run(&ds, &cfg).is_err());
     }
 
     #[test]

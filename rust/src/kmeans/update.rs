@@ -25,39 +25,16 @@ use crate::ss::compare::lt_public;
 use crate::ss::divide::divide_rows;
 use crate::ss::matmul::ss_matmul_begin;
 use crate::ss::mux::mux_bits_begin;
-use crate::ss::pending::Pending;
 use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
 use crate::ss::Session;
 
 /// A staged S3 numerator: cross-product reveals sit in the round buffer
 /// (riding whatever flight departs next) and the block assembly runs at
 /// resolve time. Backends that finish eagerly (HE Protocol 2) wrap their
-/// result with [`PendingNumerator::ready`].
-pub struct PendingNumerator {
-    parts: Vec<Pending<Mat>>,
-    assemble: Box<dyn FnOnce(Vec<Mat>) -> Mat + Send>,
-}
-
-impl PendingNumerator {
-    /// Wrap staged cross products plus the local assembly.
-    pub fn new(
-        parts: Vec<Pending<Mat>>,
-        assemble: impl FnOnce(Vec<Mat>) -> Mat + Send + 'static,
-    ) -> Self {
-        PendingNumerator { parts, assemble: Box::new(assemble) }
-    }
-
-    /// An already-computed numerator (no staged reveals).
-    pub fn ready(num: Mat) -> Self {
-        PendingNumerator { parts: vec![], assemble: Box::new(move |_| num) }
-    }
-
-    /// Resolve every staged part (post-flush) and assemble.
-    pub fn resolve(self, ctx: &mut Session) -> Mat {
-        let mats: Vec<Mat> = self.parts.into_iter().map(|p| p.resolve(ctx)).collect();
-        (self.assemble)(mats)
-    }
-}
+/// result with `PendingNumerator::ready`. This is the shared
+/// [`crate::ss::pending::PendingParts`] handle — the row-tiled schedule
+/// stages one per tile and sums the resolved k×d contributions.
+pub type PendingNumerator = crate::ss::pending::PendingParts;
 
 /// Stage the numerator `⟨Cᵀ·X⟩` for vertical partitioning: each party's
 /// feature block contributes `⟨C⟩ᵀ·X_p = ⟨C⟩_pᵀ·X_p (local) +
@@ -119,50 +96,23 @@ pub fn numerator_vertical(ctx: &mut Session, x_mine: &Mat, c: &Mat, d_a: usize, 
 }
 
 /// Stage the numerator for horizontal partitioning: row blocks
-/// `⟨C_rows(p)⟩ᵀ·X_p` summed over parties.
+/// `⟨C_rows(p)⟩ᵀ·X_p` summed over parties. Thin monolithic wrapper over
+/// the single `(0, n)` tile of
+/// [`crate::kmeans::backend::HorizontalBackend`] — the row-block share
+/// algebra lives there once, for every tile size. Clones the block to
+/// adapt to the backend's `PartyData` (fine for the single-call and
+/// test uses this wrapper serves; the driver feeds the backend its
+/// long-lived `PartyData` directly).
 pub fn numerator_horizontal_begin(
     ctx: &mut Session,
     x_mine: &Mat,
     c: &Mat,
     n_a: usize,
 ) -> PendingNumerator {
-    let n = c.rows;
-    let k = c.cols;
-    let d = x_mine.cols;
-    let party = ctx.party();
-    let c_a = c.rows_slice(0, n_a).transpose(); // k×n_a (my share of A rows)
-    let c_b = c.rows_slice(n_a, n).transpose(); // k×n_b
-    let n_b = n - n_a;
-
-    let cross_a = if party == 0 {
-        let a = trivial_share_of_theirs(k, n_a);
-        let b = trivial_share_of_mine(x_mine);
-        ss_matmul_begin(ctx, &a, &b)
-    } else {
-        let a = trivial_share_of_mine(&c_a);
-        let b = trivial_share_of_theirs(n_a, d);
-        ss_matmul_begin(ctx, &a, &b)
-    };
-    let cross_b = if party == 1 {
-        let a = trivial_share_of_theirs(k, n_b);
-        let b = trivial_share_of_mine(x_mine);
-        ss_matmul_begin(ctx, &a, &b)
-    } else {
-        let a = trivial_share_of_mine(&c_b);
-        let b = trivial_share_of_theirs(n_b, d);
-        ss_matmul_begin(ctx, &a, &b)
-    };
-    let local = if party == 0 { c_a.matmul(x_mine) } else { c_b.matmul(x_mine) };
-    PendingNumerator::new(vec![cross_a, cross_b], move |mut mats| {
-        let cross_b = mats.pop().expect("cross B");
-        let cross_a = mats.pop().expect("cross A");
-        let (part_a, part_b) = if party == 0 {
-            (local.add(&cross_a), cross_b)
-        } else {
-            (cross_a, local.add(&cross_b))
-        };
-        part_a.add(&part_b)
-    })
+    use crate::kmeans::backend::{CrossProductBackend, HorizontalBackend, PartyData};
+    let mut be = HorizontalBackend::new(n_a);
+    let x = PartyData::dense_only(x_mine.clone());
+    be.s3_numerator_tile(ctx, &x, c, (0, c.rows))
 }
 
 /// Numerator for horizontal partitioning (single-flight wrapper).
@@ -184,23 +134,42 @@ pub fn finish_update_pending(
     c: &Mat,
     mu_old: &Mat,
 ) -> Mat {
-    let k = c.cols;
-    let party = ctx.party();
     // Denominator: counts = 1ᵀ·C — a free local share sum.
-    let counts = c.col_sums(); // 1×k integer shares
+    finish_update_tiles(ctx, vec![numerator], &c.col_sums(), mu_old)
+}
+
+/// Complete the update from per-tile numerator contributions and
+/// pre-accumulated counts: the tile schedule's S3 tail. Every staged
+/// contribution's reveals ride the empty-cluster comparison's first
+/// flight (exactly as the monolithic single-numerator path — tiling
+/// adds zero flights here under lockstep), the resolved k×d tiles sum
+/// into one running numerator, and a **single** division closes the
+/// iteration regardless of the tile count. `counts` are the 1×k
+/// integer count shares (`Σ_tiles 1ᵀ·C_tile = 1ᵀ·C`, a free local sum).
+pub fn finish_update_tiles(
+    ctx: &mut Session,
+    numerators: Vec<PendingNumerator>,
+    counts: &Mat,
+    mu_old: &Mat,
+) -> Mat {
+    let k = counts.cols;
+    let party = ctx.party();
 
     // empty_j = [count_j < 1] (counts are non-negative integers). The
     // staged numerator reveals depart with this comparison's first AND
     // layer — division prep and numerator share a flight.
     let ones = Mat::from_vec(1, k, vec![1; k]);
-    let empty_bits = lt_public(ctx, &counts, &ones);
-    let num = numerator.resolve(ctx);
+    let empty_bits = lt_public(ctx, counts, &ones);
+    let mut num = Mat::zeros(mu_old.rows, mu_old.cols);
+    for part in numerators {
+        num = num.add(&part.resolve(ctx));
+    }
     let d = num.cols;
 
     // den = empty ? 1 : count; num = empty ? μ_old row : numerator row.
     // Same boolean selector, two staged MUXes, one fused flight.
     let one_share = if party == 0 { ones } else { Mat::zeros(1, k) };
-    let den_p = mux_bits_begin(ctx, &empty_bits, &one_share, &counts, 1);
+    let den_p = mux_bits_begin(ctx, &empty_bits, &one_share, counts, 1);
     let num_p = mux_bits_begin(ctx, &empty_bits, mu_old, &num, d);
     ctx.flush();
     let den = den_p.resolve(ctx);

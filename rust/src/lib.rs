@@ -80,7 +80,7 @@ pub mod cli;
 
 /// Common re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::kmeans::config::{EsdMode, SecureKmeansConfig};
+    pub use crate::kmeans::config::{EsdMode, SecureKmeansConfig, TileFlights};
     pub use crate::net::cost::CostModel;
     pub use crate::net::meter::Meter;
     pub use crate::ring::fixed::{decode_f64, encode_f64, FRAC_BITS};

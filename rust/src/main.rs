@@ -3,8 +3,10 @@
 //! ```text
 //! ppkmeans train  [--n 1000] [--d 4] [--k 3] [--iters 10] [--sparse]
 //!                 [--partition vertical|horizontal] [--link lan|wan]
+//!                 [--tile-rows B] [--tile-flights lockstep|streamed]
 //! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 3]
 //! ppkmeans bench                      # list bench targets
+//! ppkmeans help                       # full option reference
 //! ppkmeans version
 //! ```
 
@@ -12,8 +14,38 @@ use ppkmeans::cli::Args;
 use ppkmeans::coordinator::Session;
 use ppkmeans::data::blobs::BlobSpec;
 use ppkmeans::data::sparse_gen;
-use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::net::cost::CostModel;
+
+fn print_help() {
+    println!("ppkmeans — scalable sparsity-aware privacy-preserving K-means");
+    println!();
+    println!("USAGE: ppkmeans <train|fraud|bench|help|version> [options]");
+    println!();
+    println!("train options:");
+    println!("  --n N                   samples to generate (default 1000)");
+    println!("  --d D                   features (default 4)");
+    println!("  --k K                   clusters (default 3)");
+    println!("  --iters T               Lloyd iterations (default 10)");
+    println!("  --partition P           vertical | horizontal (default vertical)");
+    println!("  --sparse                sparse workload through HE Protocol 2");
+    println!("  --sparsity F            zero fraction for --sparse data (default 0.5)");
+    println!("  --link L                lan | wan cost model (default lan)");
+    println!("  --tile-rows B           row-tile the online phase: every matrix");
+    println!("                          triple and S1/S3 intermediate is bounded");
+    println!("                          by B rows instead of n, so the offline");
+    println!("                          demand is uniform per tile and reusable");
+    println!("                          across dataset sizes (default: off)");
+    println!("  --tile-flights M        lockstep (tiles share flights — zero extra");
+    println!("                          rounds) | streamed (one tile per flight");
+    println!("                          group — O(B·d) memory, rounds × tiles)");
+    println!("                          (default lockstep)");
+    println!();
+    println!("fraud: runs as a cargo example —");
+    println!("  cargo run --release --example fraud_detection -- [--n N --runs R]");
+    println!();
+    println!("bench: lists the cargo bench targets (tables/figures + tiling)");
+}
 
 fn cmd_train(args: &Args) {
     let n = args.get_usize("n", 1000);
@@ -30,18 +62,41 @@ fn cmd_train(args: &Args) {
         "wan" => CostModel::wan(),
         _ => CostModel::lan(),
     };
+    let tile_rows = args.get("tile-rows").map(|v| match v.parse::<usize>() {
+        Ok(b) if b >= 1 => b,
+        _ => {
+            eprintln!("--tile-rows takes an integer ≥ 1 (got {v})");
+            std::process::exit(2);
+        }
+    });
+    let tile_flights = match args.get_str("tile-flights", "lockstep") {
+        "streamed" => TileFlights::Streamed,
+        "lockstep" => TileFlights::Lockstep,
+        other => {
+            eprintln!("unknown --tile-flights {other} (use lockstep|streamed)");
+            std::process::exit(2);
+        }
+    };
     let data = if sparse {
         sparse_gen::generate(n, d, k, sparsity, 42)
     } else {
         BlobSpec::new(n, d, k).generate(42)
     };
-    let cfg = SecureKmeansConfig { k, iters, partition, sparse, ..Default::default() };
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition,
+        sparse,
+        tile_rows,
+        tile_flights,
+        ..Default::default()
+    };
     let session = Session::new(cfg).with_link(link);
     match session.run(&data) {
         Ok(out) => {
             println!(
-                "trained secure K-means: n={n} d={d} k={k} iters={} backend={}",
-                out.iters_run, out.backend_name
+                "trained secure K-means: n={n} d={d} k={k} iters={} backend={} tiles={}",
+                out.iters_run, out.backend_name, out.tiles_run
             );
             for j in 0..k {
                 let c: Vec<String> = out.centroids[j * d..(j + 1) * d]
@@ -68,6 +123,10 @@ fn cmd_train(args: &Args) {
 
 fn main() {
     let args = Args::from_env();
+    if args.flag("help") {
+        print_help();
+        return;
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("fraud") => {
@@ -81,14 +140,16 @@ fn main() {
                 ("fig2_online_offline", "Fig 2 — online/offline per step (WAN)"),
                 ("fig3_vectorization", "Fig 3 — vectorization ablation (WAN)"),
                 ("fig4_sparse", "Fig 4 — sparse optimization scaling (WAN)"),
+                ("tiling", "row tiling — wall/rounds/triple bytes, BENCH_tiling.json"),
                 ("ablations", "extras — OU vs Paillier, PJRT vs native"),
             ] {
                 println!("  {b:<20} {what}");
             }
         }
+        Some("help") => print_help(),
         Some("version") | None => {
             println!("ppkmeans 0.1.0 — scalable sparsity-aware privacy-preserving K-means");
-            println!("subcommands: train | fraud | bench | version");
+            println!("subcommands: train | fraud | bench | help | version");
         }
         Some(cmd) => {
             eprintln!("unknown subcommand: {cmd}");

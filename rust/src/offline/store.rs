@@ -62,9 +62,22 @@ impl Demand {
         out
     }
 
-    /// Demand accumulated between two cumulative snapshots
-    /// (`before` must be a prefix of `self` in request order).
-    pub fn delta(&self, before: &Demand) -> Demand {
+    /// A cheap cursor for later [`Demand::delta_since`] calls: per-shape
+    /// matrix counts (a handful of entries) plus chunk-vector lengths —
+    /// O(shapes), unlike cloning the whole demand whose chunk vectors
+    /// grow with every gate request.
+    pub fn mark(&self) -> DemandMark {
+        DemandMark {
+            mats: self.mats.clone(),
+            vec_len: self.vec_chunks.len(),
+            bit_len: self.bit_chunks.len(),
+            dabit_len: self.dabit_chunks.len(),
+        }
+    }
+
+    /// Demand accumulated since a [`Demand::mark`] snapshot (the mark
+    /// must be a prefix of `self` in request order).
+    pub fn delta_since(&self, before: &DemandMark) -> Demand {
         let mut out = Demand::default();
         for ((m, k, n), count) in &self.mats {
             let prev = before
@@ -77,10 +90,16 @@ impl Demand {
                 out.mat(*m, *k, *n);
             }
         }
-        out.vec_chunks = self.vec_chunks[before.vec_chunks.len()..].to_vec();
-        out.bit_chunks = self.bit_chunks[before.bit_chunks.len()..].to_vec();
-        out.dabit_chunks = self.dabit_chunks[before.dabit_chunks.len()..].to_vec();
+        out.vec_chunks = self.vec_chunks[before.vec_len..].to_vec();
+        out.bit_chunks = self.bit_chunks[before.bit_len..].to_vec();
+        out.dabit_chunks = self.dabit_chunks[before.dabit_len..].to_vec();
         out
+    }
+
+    /// Demand accumulated between two cumulative snapshots
+    /// (`before` must be a prefix of `self` in request order).
+    pub fn delta(&self, before: &Demand) -> Demand {
+        self.delta_since(&before.mark())
     }
 
     /// Merge another demand into this one.
@@ -94,15 +113,52 @@ impl Demand {
         self.bit_chunks.extend_from_slice(&other.bit_chunks);
         self.dabit_chunks.extend_from_slice(&other.dabit_chunks);
     }
+
+    /// Total bytes of matrix-triple material: a `(m, k, n)` triple holds
+    /// `U (m×k)`, `V (k×n)` and `Z (m×n)` ring elements of 8 bytes.
+    pub fn mat_triple_bytes(&self) -> u64 {
+        self.mats
+            .iter()
+            .map(|&((m, k, n), count)| ((m * k + k * n + m * n) * 8 * count) as u64)
+            .sum()
+    }
+
+    /// Bytes of the single largest matrix triple — the live-memory peak
+    /// one staged product forces a party to hold. Row tiling bounds this
+    /// by the tile size instead of n.
+    pub fn peak_mat_triple_bytes(&self) -> u64 {
+        self.mats
+            .iter()
+            .map(|&((m, k, n), _)| ((m * k + k * n + m * n) * 8) as u64)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
-/// FIFO store over a fallback generator.
+/// A cheap cumulative-demand cursor (see [`Demand::mark`]).
+#[derive(Debug, Clone)]
+pub struct DemandMark {
+    mats: Vec<((usize, usize, usize), usize)>,
+    vec_len: usize,
+    bit_len: usize,
+    dabit_len: usize,
+}
+
+/// FIFO store over a fallback generator. Every stock — matrix triples by
+/// shape, vector/bit/daBit chunks by **lane count** — is keyed, so a
+/// draw order that differs from the prefill order (tiled vs monolithic
+/// replay, interleaved steps) still hits as long as the multiset of
+/// requests matches. (The seed code kept the chunk stocks in one global
+/// FIFO and only served a front chunk of exactly the requested size:
+/// one out-of-order draw left that chunk at the front forever, stranding
+/// the entire remaining stock and mis-counting every later request as a
+/// miss.)
 pub struct TripleStore<S: TripleSource> {
     inner: S,
     mats: HashMap<(usize, usize, usize), VecDeque<MatTriple>>,
-    vecs: VecDeque<VecTriple>,
-    bits: VecDeque<BitTriple>,
-    dabits: VecDeque<DaBits>,
+    vecs: HashMap<usize, VecDeque<VecTriple>>,
+    bits: HashMap<usize, VecDeque<BitTriple>>,
+    dabits: HashMap<usize, VecDeque<DaBits>>,
     /// Requests that had to fall through to the inner source online.
     pub misses: u64,
     /// Every request seen (hit or miss) — replaying a protocol once with
@@ -115,9 +171,9 @@ impl<S: TripleSource> TripleStore<S> {
         TripleStore {
             inner,
             mats: HashMap::new(),
-            vecs: VecDeque::new(),
-            bits: VecDeque::new(),
-            dabits: VecDeque::new(),
+            vecs: HashMap::new(),
+            bits: HashMap::new(),
+            dabits: HashMap::new(),
             misses: 0,
             demand: Demand::default(),
         }
@@ -133,15 +189,15 @@ impl<S: TripleSource> TripleStore<S> {
         }
         for &n in &demand.vec_chunks {
             let t = self.inner.vec_triple(n);
-            self.vecs.push_back(t);
+            self.vecs.entry(n).or_default().push_back(t);
         }
         for &n in &demand.bit_chunks {
             let t = self.inner.bit_triple(n);
-            self.bits.push_back(t);
+            self.bits.entry(n).or_default().push_back(t);
         }
         for &n in &demand.dabit_chunks {
             let t = self.inner.dabits(n);
-            self.dabits.push_back(t);
+            self.dabits.entry(n).or_default().push_back(t);
         }
     }
 
@@ -169,11 +225,10 @@ impl<S: TripleSource> TripleSource for TripleStore<S> {
 
     fn vec_triple(&mut self, n: usize) -> VecTriple {
         self.demand.vec_lanes(n);
-        // Chunks must be drawn in the same sizes they were demanded.
-        if let Some(front) = self.vecs.front() {
-            if front.u.len() == n {
-                return self.vecs.pop_front().unwrap();
-            }
+        // Chunks are keyed by lane count: draws of the same size stay
+        // FIFO, draws of different sizes never block each other.
+        if let Some(t) = self.vecs.get_mut(&n).and_then(|q| q.pop_front()) {
+            return t;
         }
         self.misses += 1;
         self.inner.vec_triple(n)
@@ -181,10 +236,8 @@ impl<S: TripleSource> TripleSource for TripleStore<S> {
 
     fn bit_triple(&mut self, n: usize) -> BitTriple {
         self.demand.bit_lanes(n);
-        if let Some(front) = self.bits.front() {
-            if front.n == n {
-                return self.bits.pop_front().unwrap();
-            }
+        if let Some(t) = self.bits.get_mut(&n).and_then(|q| q.pop_front()) {
+            return t;
         }
         self.misses += 1;
         self.inner.bit_triple(n)
@@ -192,10 +245,8 @@ impl<S: TripleSource> TripleSource for TripleStore<S> {
 
     fn dabits(&mut self, n: usize) -> DaBits {
         self.demand.dabit_lanes(n);
-        if let Some(front) = self.dabits.front() {
-            if front.n == n {
-                return self.dabits.pop_front().unwrap();
-            }
+        if let Some(t) = self.dabits.get_mut(&n).and_then(|q| q.pop_front()) {
+            return t;
         }
         self.misses += 1;
         self.inner.dabits(n)
@@ -228,6 +279,49 @@ mod tests {
         // One more of each → misses.
         let _ = store.mat_triple(2, 3, 4);
         assert_eq!(store.misses, 1);
+    }
+
+    #[test]
+    fn out_of_order_draws_do_not_poison_the_stock() {
+        // Regression: the seed store served vec/bit/dabit chunks from one
+        // global FIFO and only matched the front chunk's size, so a
+        // single out-of-order draw stranded the entire remaining stock
+        // and every later request (even exact-size ones) counted as a
+        // miss. Keyed by lane count, any draw order of the demanded
+        // multiset must be all hits.
+        let mut demand = Demand::default();
+        demand.vec_lanes(5);
+        demand.vec_lanes(7);
+        demand.bit_lanes(64);
+        demand.bit_lanes(16);
+        demand.dabit_lanes(9);
+        demand.dabit_lanes(3);
+        let mut store = TripleStore::new(Dealer::new(4, 0));
+        store.prefill(&demand);
+        // Draw everything in reverse of the demanded order.
+        let t = store.vec_triple(7);
+        assert_eq!(t.u.len(), 7, "served chunk must match the request");
+        let t = store.vec_triple(5);
+        assert_eq!(t.u.len(), 5);
+        assert_eq!(store.bit_triple(16).n, 16);
+        assert_eq!(store.bit_triple(64).n, 64);
+        assert_eq!(store.dabits(3).n, 3);
+        assert_eq!(store.dabits(9).n, 9);
+        assert_eq!(store.misses, 0, "out-of-order draws must all hit");
+        // The stock is now empty: one more of any size is a miss.
+        let _ = store.vec_triple(5);
+        assert_eq!(store.misses, 1);
+    }
+
+    #[test]
+    fn demand_mat_triple_byte_accounting() {
+        let mut d = Demand::default();
+        d.mat(2, 3, 4); // U 6 + V 12 + Z 8 = 26 elems = 208 bytes
+        d.mat(2, 3, 4);
+        d.mat(1, 1, 1); // 3 elems = 24 bytes
+        assert_eq!(d.mat_triple_bytes(), 2 * 208 + 24);
+        assert_eq!(d.peak_mat_triple_bytes(), 208);
+        assert_eq!(Demand::default().peak_mat_triple_bytes(), 0);
     }
 
     #[test]
@@ -281,6 +375,24 @@ mod tests {
         assert_eq!(delta.vec_chunks, vec![10]);
         assert!(delta.bit_chunks.is_empty());
         assert!(delta.dabit_chunks.is_empty());
+    }
+
+    #[test]
+    fn mark_and_delta_since_match_full_clone_delta() {
+        let mut d = Demand::default();
+        d.mat(2, 3, 4);
+        d.vec_lanes(7);
+        let before_clone = d.clone();
+        let mark = d.mark();
+        d.mat(2, 3, 4);
+        d.mat(5, 5, 5);
+        d.bit_lanes(64);
+        d.vec_lanes(9);
+        assert_eq!(d.delta_since(&mark), d.delta(&before_clone));
+        let delta = d.delta_since(&mark);
+        assert_eq!(delta.mats, vec![((2, 3, 4), 1), ((5, 5, 5), 1)]);
+        assert_eq!(delta.vec_chunks, vec![9]);
+        assert_eq!(delta.bit_chunks, vec![64]);
     }
 
     #[test]

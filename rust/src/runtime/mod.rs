@@ -19,6 +19,7 @@ pub mod artifact;
 pub mod dispatch;
 #[cfg(feature = "pjrt")]
 pub mod executor;
+pub mod tile_select;
 #[cfg(feature = "pjrt")]
 pub mod tiled;
 

@@ -1,0 +1,76 @@
+//! Tile-size selection for the fixed-shape AOT matmul artifacts.
+//!
+//! Pure and PJRT-free so the fit rule is unit-testable in the default
+//! build; `runtime::tiled::pick_tile` (behind the `pjrt` feature) maps
+//! artifact entries through [`pick_tile_size`].
+
+/// Pick the largest available square tile that **fits the problem**: a
+/// tile must not exceed any of the three problem dimensions, i.e.
+/// `b ≤ min(m, t, n)`.
+///
+/// The seed rule accepted tiles up to `dim.next_power_of_two()`, so a
+/// 256³ artifact could be chosen for a 129-row problem even though an
+/// exact 128-grid covers it with a fraction of the padded work (for a
+/// 129×128×128 problem the 256³ tile computes 16.8M padded MACs where
+/// two 128³ calls need 4.2M). Tiles larger than the whole problem are
+/// only ever pure padding, so they are excluded outright; problems
+/// smaller than every available tile fall back to the smallest tile
+/// (padding is then unavoidable). Returns `None` only when no tiles are
+/// available.
+pub fn pick_tile_size(available: &[usize], m: usize, t: usize, n: usize) -> Option<usize> {
+    let limit = m.min(t).min(n);
+    available
+        .iter()
+        .copied()
+        .filter(|&b| b <= limit)
+        .max()
+        .or_else(|| available.iter().copied().min())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const AVAIL: &[usize] = &[128, 256];
+
+    #[test]
+    fn exact_fit_prefers_the_largest_tile() {
+        assert_eq!(pick_tile_size(AVAIL, 256, 256, 256), Some(256));
+        assert_eq!(pick_tile_size(AVAIL, 512, 512, 512), Some(256));
+        assert_eq!(pick_tile_size(AVAIL, 128, 128, 128), Some(128));
+    }
+
+    #[test]
+    fn regression_129_rows_must_not_take_the_256_tile() {
+        // The old next_power_of_two rule rounded 129 up to 256 and chose
+        // the 256³ artifact over the exact-fit 128 grid.
+        assert_eq!(pick_tile_size(AVAIL, 129, 128, 128), Some(128));
+        assert_eq!(pick_tile_size(AVAIL, 129, 129, 129), Some(128));
+        assert_eq!(pick_tile_size(AVAIL, 255, 255, 255), Some(128));
+    }
+
+    #[test]
+    fn any_small_dimension_caps_the_tile() {
+        // One thin dimension forces the smaller tile even when the
+        // others are huge.
+        assert_eq!(pick_tile_size(AVAIL, 512, 128, 512), Some(128));
+        assert_eq!(pick_tile_size(AVAIL, 1024, 1024, 200), Some(128));
+    }
+
+    #[test]
+    fn tiny_problems_fall_back_to_the_smallest_tile() {
+        assert_eq!(pick_tile_size(AVAIL, 64, 64, 64), Some(128));
+        assert_eq!(pick_tile_size(AVAIL, 1, 1, 1), Some(128));
+    }
+
+    #[test]
+    fn no_artifacts_means_no_tile() {
+        assert_eq!(pick_tile_size(&[], 128, 128, 128), None);
+    }
+
+    #[test]
+    fn unsorted_availability_is_handled() {
+        assert_eq!(pick_tile_size(&[256, 128, 64], 200, 200, 200), Some(128));
+        assert_eq!(pick_tile_size(&[256, 128, 64], 32, 500, 500), Some(64));
+    }
+}

@@ -12,19 +12,15 @@ use super::executor::execute_i64;
 use crate::ring::matrix::Mat;
 use crate::util::error::{Error, Result};
 
-/// Pick the largest exported tile not bigger than the problem.
+/// Pick the largest exported tile that fits the problem (fit rule in
+/// [`crate::runtime::tile_select::pick_tile_size`], which is where the
+/// unit tests live — this wrapper only maps artifact entries to their
+/// baked tile sizes).
 fn pick_tile<'a>(store: &'a ArtifactStore, m: usize, t: usize, n: usize) -> Option<&'a Entry> {
-    let mut best: Option<&Entry> = None;
-    for e in store.by_kind("ring_matmul") {
-        let b = e.in_shapes[0][0];
-        let fits_problem = b <= m.next_power_of_two().max(128)
-            && b <= t.next_power_of_two().max(128)
-            && b <= n.next_power_of_two().max(128);
-        if fits_problem && best.map(|x| x.in_shapes[0][0] < b).unwrap_or(true) {
-            best = Some(e);
-        }
-    }
-    best.or_else(|| store.by_kind("ring_matmul").first().copied())
+    let entries = store.by_kind("ring_matmul");
+    let sizes: Vec<usize> = entries.iter().map(|e| e.in_shapes[0][0]).collect();
+    let b = crate::runtime::tile_select::pick_tile_size(&sizes, m, t, n)?;
+    entries.into_iter().find(|e| e.in_shapes[0][0] == b)
 }
 
 /// Copy a padded block of `src` (rows0..rows0+b, cols0..cols0+b) into a

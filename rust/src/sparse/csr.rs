@@ -80,6 +80,21 @@ impl Csr {
         1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// Slice rows `[r0, r1)` into a new CSR (the row-tile view of the
+    /// sparse protocol path): indptr is rebased, the nonzero payload is
+    /// the contiguous `[indptr[r0], indptr[r1])` range.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows, "row slice bounds");
+        let (s, e) = (self.indptr[r0], self.indptr[r1]);
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            indptr: self.indptr[r0..=r1].iter().map(|&p| p - s).collect(),
+            indices: self.indices[s..e].to_vec(),
+            values: self.values[s..e].to_vec(),
+        }
+    }
+
     /// Iterate the nonzeros of one row as (col, value).
     pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (usize, u64)> + '_ {
         (self.indptr[r]..self.indptr[r + 1]).map(move |i| (self.indices[i], self.values[i]))
@@ -202,5 +217,21 @@ mod tests {
     fn encode_dense_drops_zeros() {
         let s = Csr::encode_dense(2, 2, &[0.0, 1.5, 0.0, -2.0]);
         assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn rows_slice_matches_dense_slice() {
+        let mut prg = Prg::new(6);
+        let mut dense = Mat::random(7, 5, &mut prg);
+        for v in dense.data.iter_mut() {
+            if prg.next_f64() < 0.6 {
+                *v = 0;
+            }
+        }
+        let s = Csr::from_dense(&dense);
+        for (r0, r1) in [(0, 7), (0, 3), (2, 5), (6, 7), (4, 4)] {
+            let tile = s.rows_slice(r0, r1);
+            assert_eq!(tile.to_dense(), dense.rows_slice(r0, r1), "rows [{r0}, {r1})");
+        }
     }
 }

@@ -122,6 +122,35 @@ pub fn private_matmul_begin(
     }
 }
 
+/// Row-block form of [`private_matmul_begin`] for tiled schedules: this
+/// party holds the full plaintext `X`, but only rows `[r0, r1)` enter
+/// the product, so the staged reveal is `(r1−r0)·cols + |Y|` elements
+/// and the matrix triple is tile-shaped — never n-sized. The peer (who
+/// holds `Y`) mirrors the tile by passing the same row count in its
+/// `their_rows_cols`, keeping the flight symmetric. With `x_is_mine ==
+/// false` this is a plain pass-through (the row dimension lives on the
+/// peer's side and is already tiled in `their_rows_cols`).
+pub fn private_matmul_rows_begin(
+    ctx: &mut Session,
+    mine: &Mat,
+    rows: (usize, usize),
+    their_rows_cols: (usize, usize),
+    x_is_mine: bool,
+) -> Pending<Mat> {
+    if x_is_mine {
+        if rows == (0, mine.rows) {
+            // Full range: no slice copy for the monolithic schedule.
+            private_matmul_begin(ctx, mine, mine.shape(), their_rows_cols, true)
+        } else {
+            let tile = mine.rows_slice(rows.0, rows.1);
+            let shape = tile.shape();
+            private_matmul_begin(ctx, &tile, shape, their_rows_cols, true)
+        }
+    } else {
+        private_matmul_begin(ctx, mine, mine.shape(), their_rows_cols, false)
+    }
+}
+
 /// Private-input product (single-gate wrapper).
 pub fn private_matmul(
     ctx: &mut Session,
@@ -190,6 +219,35 @@ mod tests {
                 let mut ts = Dealer::new(10, 1);
                 let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
                 let z = private_matmul(&mut ctx, &bc, (3, 2), (2, 3), false);
+                reconstruct(c, &z)
+            },
+        );
+        assert_eq!(r, want);
+    }
+
+    #[test]
+    fn row_block_private_matmul_matches_slice() {
+        // X rows [1, 3) of a 4×3 times a 3×2: the tile-shaped reveal must
+        // reconstruct to exactly the sliced plaintext product.
+        let a = Mat::from_vec(4, 3, vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, u64::MAX]);
+        let b = Mat::from_vec(3, 2, vec![7, 8, 9, 10, 11, 12]);
+        let want = a.rows_slice(1, 3).matmul(&b);
+        let (ac, bc) = (a.clone(), b.clone());
+        let ((r, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(12, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let p = private_matmul_rows_begin(&mut ctx, &ac, (1, 3), (3, 2), true);
+                ctx.flush();
+                let z = p.resolve(&mut ctx);
+                reconstruct(c, &z)
+            },
+            move |c| {
+                let mut ts = Dealer::new(12, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let p = private_matmul_rows_begin(&mut ctx, &bc, (0, 3), (2, 3), false);
+                ctx.flush();
+                let z = p.resolve(&mut ctx);
                 reconstruct(c, &z)
             },
         );

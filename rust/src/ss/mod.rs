@@ -40,7 +40,7 @@ use crate::net::Chan;
 use crate::util::prng::Prg;
 use triples::TripleSource;
 
-pub use pending::Pending;
+pub use pending::{Pending, PendingParts};
 
 /// How the session maps gates onto network flights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

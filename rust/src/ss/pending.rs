@@ -10,6 +10,7 @@
 //! two flushes share one round-trip; that is the whole point.
 
 use super::Session;
+use crate::ring::matrix::Mat;
 
 /// A staged gate awaiting its reveal. `T` is the gate output type
 /// (`Mat`, `Vec<BoolShare>`, ...).
@@ -48,6 +49,39 @@ impl<T> Pending<T> {
             seg,
             finish: Box::new(move |party, mine, theirs| f(finish(party, mine, theirs))),
         }
+    }
+}
+
+/// Several staged reveals plus a local assembly step: the composite
+/// output of a protocol fragment (a row tile's cross products, an S3
+/// numerator contribution, ...) whose parts all ride whatever flight the
+/// caller flushes next. Backends that finish eagerly — the HE path runs
+/// its own ciphertext exchange, the naive ablation its scalar loop —
+/// wrap their result with [`PendingParts::ready`] so every backend
+/// presents the same staged interface to the tile scheduler.
+pub struct PendingParts {
+    parts: Vec<Pending<Mat>>,
+    assemble: Box<dyn FnOnce(Vec<Mat>) -> Mat + Send>,
+}
+
+impl PendingParts {
+    /// Wrap staged reveals plus the local assembly run at resolve time.
+    pub fn new(
+        parts: Vec<Pending<Mat>>,
+        assemble: impl FnOnce(Vec<Mat>) -> Mat + Send + 'static,
+    ) -> Self {
+        PendingParts { parts, assemble: Box::new(assemble) }
+    }
+
+    /// An already-computed value (no staged reveals).
+    pub fn ready(out: Mat) -> Self {
+        PendingParts { parts: vec![], assemble: Box::new(move |_| out) }
+    }
+
+    /// Resolve every staged part (post-flush) and assemble.
+    pub fn resolve(self, ctx: &mut Session) -> Mat {
+        let mats: Vec<Mat> = self.parts.into_iter().map(|p| p.resolve(ctx)).collect();
+        (self.assemble)(mats)
     }
 }
 

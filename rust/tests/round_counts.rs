@@ -7,7 +7,7 @@
 
 use ppkmeans::data::{blobs::BlobSpec, sparse_gen};
 use ppkmeans::kmeans::assign::min_k_rounds;
-use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::kmeans::{plaintext, secure};
 use ppkmeans::ss::boolean::CMP_ROUNDS;
 use ppkmeans::ss::RoundPolicy;
@@ -86,6 +86,55 @@ fn total_online_rounds_are_stable() {
     assert!(
         s3_per_iter <= CMP_ROUNDS + 1 + 26,
         "S3 depth regressed: {s3_per_iter} flights/iter"
+    );
+}
+
+#[test]
+fn lockstep_tiling_adds_zero_flights() {
+    // Acceptance criterion: with tile_rows = Some(B) under
+    // TileFlights::Lockstep, every online phase's flight count equals
+    // the monolithic baseline exactly — S1's tiles share one staged
+    // flight, S2 batches all tiles' lanes per tree level, S3's per-tile
+    // numerators ride the division-prep comparison. B = 192 does not
+    // divide n = 1000 (ragged 40-row last tile).
+    let data = quickstart_data();
+    let mono = secure::run(&data, &quickstart_cfg(RoundPolicy::Coalesced)).unwrap();
+    let mut cfg = quickstart_cfg(RoundPolicy::Coalesced);
+    cfg.tile_rows = Some(192);
+    cfg.tile_flights = TileFlights::Lockstep;
+    let tiled = secure::run(&data, &cfg).unwrap();
+    assert_eq!(tiled.tiles_run, 6);
+    for phase in ["online.s1", "online.s2", "online.s3"] {
+        assert_eq!(
+            tiled.meter_a.get(phase).rounds,
+            mono.meter_a.get(phase).rounds,
+            "lockstep tiling must not change {phase} flights"
+        );
+    }
+    // Same protocol, same outputs.
+    assert_eq!(tiled.assignments, mono.assignments);
+}
+
+#[test]
+fn streamed_tiling_trades_rounds_for_memory() {
+    // The streamed policy pays ≈ tiles × the lockstep flight count (its
+    // O(B·d) memory story) but must still compute the same clustering.
+    let data = quickstart_data();
+    let mut cfg = quickstart_cfg(RoundPolicy::Coalesced);
+    cfg.tile_rows = Some(250);
+    cfg.tile_flights = TileFlights::Lockstep;
+    let lockstep = secure::run(&data, &cfg).unwrap();
+    cfg.tile_flights = TileFlights::Streamed;
+    let streamed = secure::run(&data, &cfg).unwrap();
+    assert_eq!(streamed.assignments, lockstep.assignments);
+    let rl = lockstep.meter_a.total_prefix("online.").rounds;
+    let rs = streamed.meter_a.total_prefix("online.").rounds;
+    // Per iteration, streamed pays tiles× the S1/S2 flights plus one
+    // numerator flight per tile; only the S3 division tail stays shared.
+    // At 4 tiles that is ≥ 2× the lockstep budget (deterministic).
+    assert!(
+        rs >= 2 * rl,
+        "streamed ({rs} flights) must pay per-tile rounds over lockstep ({rl}) at 4 tiles"
     );
 }
 

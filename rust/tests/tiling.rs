@@ -1,0 +1,163 @@
+//! Row-tiling acceptance tests: tiled output matches the plaintext
+//! oracle / monolithic runs across backends and partitions, and the
+//! recorded offline demand is tile-bounded — the deployable
+//! offline/online split decoupled from n.
+
+use ppkmeans::data::{blobs::BlobSpec, sparse_gen};
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::{plaintext, secure};
+use ppkmeans::offline::dealer::Dealer;
+use ppkmeans::offline::store::TripleStore;
+
+fn well_separated(n: usize, d: usize, k: usize, seed: u128) -> ppkmeans::data::blobs::Dataset {
+    let mut spec = BlobSpec::new(n, d, k);
+    spec.spread = 0.02;
+    spec.generate(seed)
+}
+
+/// Largest dimension of any matrix-triple shape in a demand.
+fn max_mat_dim(demand: &ppkmeans::offline::store::Demand) -> usize {
+    demand.mats.iter().map(|&((m, k, n), _)| m.max(k).max(n)).max().unwrap_or(0)
+}
+
+#[test]
+fn tiled_demand_has_no_n_sized_matrix_shape() {
+    // Acceptance criterion: with tile_rows = Some(B) every recorded
+    // matrix-triple dimension is bounded by max(B, d, k) — no shape
+    // grows with n. The monolithic run's shapes do.
+    let (n, d, k, b) = (60usize, 4usize, 3usize, 17usize);
+    let ds = well_separated(n, d, k, 90);
+    let base = SecureKmeansConfig {
+        k,
+        iters: 2,
+        partition: Partition::Vertical { d_a: d / 2 },
+        ..Default::default()
+    };
+    let mono = secure::run(&ds, &base).unwrap();
+    assert_eq!(max_mat_dim(&mono.demand), n, "monolithic shapes are n-sized");
+
+    for flights in [TileFlights::Lockstep, TileFlights::Streamed] {
+        let cfg =
+            SecureKmeansConfig { tile_rows: Some(b), tile_flights: flights, ..base.clone() };
+        let tiled = secure::run(&ds, &cfg).unwrap();
+        assert!(!tiled.demand.mats.is_empty());
+        let bound = b.max(d).max(k);
+        assert!(
+            max_mat_dim(&tiled.demand) <= bound,
+            "{flights:?}: max mat dim {} must be ≤ {bound}",
+            max_mat_dim(&tiled.demand)
+        );
+        assert!(
+            tiled.demand.peak_mat_triple_bytes() < mono.demand.peak_mat_triple_bytes(),
+            "{flights:?}: tiling must shrink the peak triple"
+        );
+    }
+}
+
+#[test]
+fn divisor_tiling_demand_is_uniform_and_prefillable() {
+    // With B | n the per-tile matrix shapes are uniform — a handful of
+    // shapes whose counts are (tiles × iters)-multiples — so one
+    // prefill recipe drawn from the recorded demand serves the whole
+    // run: replaying the demand against a prefilled store is all hits.
+    let (n, d, k, b, iters) = (60usize, 4usize, 3usize, 20usize, 2usize);
+    let tiles = n / b;
+    let ds = well_separated(n, d, k, 91);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: d / 2 },
+        tile_rows: Some(b),
+        ..Default::default()
+    };
+    let out = secure::run(&ds, &cfg).unwrap();
+    for &((m, kk, nn), count) in &out.demand.mats {
+        assert!(
+            m.max(kk).max(nn) <= b.max(d).max(k),
+            "shape ({m},{kk},{nn}) exceeds the tile bound"
+        );
+        assert_eq!(
+            count % (tiles * iters),
+            0,
+            "uniform tiling must repeat shape ({m},{kk},{nn}) per tile per iteration"
+        );
+    }
+    // The recorded demand is a complete prefill recipe.
+    let mut store = TripleStore::new(Dealer::new(cfg.seed, 0));
+    store.prefill(&out.demand);
+    use ppkmeans::ss::triples::TripleSource;
+    for &((m, kk, nn), count) in &out.demand.mats {
+        for _ in 0..count {
+            let _ = store.mat_triple(m, kk, nn);
+        }
+    }
+    for &lanes in &out.demand.vec_chunks {
+        let _ = store.vec_triple(lanes);
+    }
+    for &lanes in &out.demand.bit_chunks {
+        let _ = store.bit_triple(lanes);
+    }
+    for &lanes in &out.demand.dabit_chunks {
+        let _ = store.dabits(lanes);
+    }
+    assert_eq!(store.misses, 0, "prefilled replay must not miss");
+}
+
+#[test]
+fn auto_mode_tiles_both_backends_against_the_oracle() {
+    // EsdMode::Auto + tiling: the sparse workload routes to HE Protocol
+    // 2 (per-tile ciphertext exchanges), the dense one to Beaver; both
+    // must match the plaintext oracle with a non-divisor tile size.
+    let (n, b) = (60usize, 17usize);
+    let mut cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        esd: EsdMode::Auto,
+        partition: Partition::Vertical { d_a: 3 },
+        tile_rows: Some(b),
+        ..Default::default()
+    };
+
+    let sparse = sparse_gen::generate(n, 6, 2, 0.6, 92);
+    let out = secure::run(&sparse, &cfg).unwrap();
+    assert_eq!(out.backend_name, "he-protocol2");
+    assert_eq!(out.tiles_run, 4);
+    let oracle = plaintext::kmeans(&sparse, 2, 2, cfg.seed);
+    assert_eq!(out.assignments, oracle.assignments);
+    for (a, o) in out.centroids.iter().zip(&oracle.centroids) {
+        assert!((a - o).abs() < 1e-2, "sparse-path centroid {a} vs {o}");
+    }
+
+    let mut spec = BlobSpec::new(n, 6, 2);
+    spec.spread = 0.02;
+    let dense = spec.generate(93);
+    cfg.tile_flights = TileFlights::Streamed;
+    let out = secure::run(&dense, &cfg).unwrap();
+    assert_eq!(out.backend_name, "beaver");
+    let oracle = plaintext::kmeans(&dense, 2, 2, cfg.seed);
+    assert_eq!(out.assignments, oracle.assignments);
+    for (a, o) in out.centroids.iter().zip(&oracle.centroids) {
+        assert!((a - o).abs() < 1e-2, "dense-path centroid {a} vs {o}");
+    }
+}
+
+#[test]
+fn explicit_he_backend_rides_the_tile_schedule() {
+    // The sparse path with explicit EsdMode::He and a non-divisor tile
+    // size: per-tile Protocol 2 exchanges must compose to the same
+    // clustering as the monolithic HE run.
+    let ds = sparse_gen::generate(30, 6, 2, 0.6, 94);
+    let base = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        esd: EsdMode::He,
+        partition: Partition::Vertical { d_a: 3 },
+        ..Default::default()
+    };
+    let mono = secure::run(&ds, &base).unwrap();
+    let cfg = SecureKmeansConfig { tile_rows: Some(13), ..base };
+    let tiled = secure::run(&ds, &cfg).unwrap();
+    assert_eq!(tiled.backend_name, "he-protocol2");
+    assert_eq!(tiled.tiles_run, 3);
+    assert_eq!(tiled.assignments, mono.assignments);
+}
