@@ -1,0 +1,94 @@
+//! Scoring-service study: train once, then measure steady-state serving
+//! latency/throughput per micro-batch under the LAN and WAN link models,
+//! plus the material-bank ledger.
+//!
+//! The claims under test (regression-tested in `rust/tests/serve.rs`):
+//!
+//! * every scored batch costs **exactly** the assignment-only budget
+//!   `score_rounds(k) = 1 + ⌈log₂k⌉·(CMP_ROUNDS+1) + CMP_ROUNDS + 1`
+//!   flights — no S3 rounds ever;
+//! * the per-batch offline demand is uniform, so a bank prefabricated
+//!   from one probe batch serves the whole stream with zero misses;
+//! * bank stock accounting balances exactly across replenishments.
+//!
+//! Emits `BENCH_serving.json` for the tracking harness.
+
+use ppkmeans::bench::{fmt_bytes, Table};
+use ppkmeans::coordinator::serve::{serving_bench_json, ServeReport};
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::cost::CostModel;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::serve::scorer::score_rounds;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n_train, k, iters) = if full { (10_000, 4, 8) } else { (1_000, 4, 4) };
+    let (batch, batches) = if full { (256, 24) } else { (64, 12) };
+    let bank = BankConfig { prefab_batches: 4, low_water: 2, refill_batches: 4 };
+
+    println!("training: n={n_train} k={k} t={iters} (fraud 18+24 vertical split)");
+    let f = fraud_gen::generate(n_train, 0.05, 77);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (_, models) = train_model(&f.data, &cfg, 0.05).expect("train");
+    let train_secs = t0.elapsed().as_secs_f64();
+    println!("  trained in {train_secs:.2}s; serving {batches} batches × {batch} tx\n");
+
+    let stream = fraud_gen::generate(batches * batch, 0.05, 4242);
+    let scfg = ServeConfig { batch_rows: batch, batches, bank, seed: 0xBE4C4 };
+    let out = serve_stream(models, &stream.data, &scfg).expect("serve");
+    let lan = ServeReport::from_serve(&out, &CostModel::lan());
+    let wan = ServeReport::from_serve(&out, &CostModel::wan());
+
+    let mut tbl = Table::new(
+        &format!("Scoring service — k={k}, batch={batch}, {batches} batches (first = probe)"),
+        &["link", "mean lat/batch", "max lat/batch", "throughput", "bytes/batch", "rounds/batch"],
+    );
+    for (label, r) in [("LAN", &lan), ("WAN", &wan)] {
+        tbl.row(vec![
+            label.to_string(),
+            format!("{:.3} ms", r.mean_latency_secs * 1e3),
+            format!("{:.3} ms", r.max_latency_secs * 1e3),
+            format!("{:.0} tx/s", r.throughput_rows_per_sec),
+            fmt_bytes(r.bytes_per_batch),
+            format!("{}", r.rounds_per_batch),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "\nbank: prefabricated {} + replenished {} − consumed {} = {} in stock \
+         ({} replenishment(s), {} misses, {}/batch mat triples)",
+        out.bank_prefabricated,
+        out.bank_replenished,
+        out.bank_consumed,
+        out.bank_remaining,
+        out.bank_replenish_events,
+        out.bank_misses,
+        fmt_bytes(out.per_batch_mat_triple_bytes),
+    );
+
+    // Shape checks the table should witness.
+    assert_eq!(lan.rounds_per_batch, score_rounds(k), "assignment-only budget");
+    assert!(
+        out.batch_stats.iter().all(|b| b.online.rounds == score_rounds(k)),
+        "every batch must cost the exact budget"
+    );
+    assert_eq!(out.bank_misses, 0, "prefabricated stock must cover every draw");
+    assert_eq!(
+        out.bank_prefabricated + out.bank_replenished - out.bank_consumed,
+        out.bank_remaining,
+        "bank ledger must balance"
+    );
+    assert!(out.bank_replenish_events >= 1, "the stream must outrun the prefab stock");
+
+    let json = serving_bench_json(&out, &lan, &wan, train_secs);
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json");
+}

@@ -4,9 +4,13 @@
 //! protocol execution, and translation of the exact (bytes, rounds,
 //! wall-clock) measurements into the paper's reporting format (online /
 //! offline time and communication under a LAN or WAN link model).
+//! [`serve`] is the serving analogue: per-request latency/throughput and
+//! the material-bank ledger for a [`crate::serve`] run.
 
 pub mod report;
+pub mod serve;
 pub mod session;
 
 pub use report::Report;
+pub use serve::ServeReport;
 pub use session::Session;

@@ -1,0 +1,152 @@
+//! Serving-run reports: per-request latency/throughput under a link
+//! model, plus the bank ledger — the serving analogue of [`super::Report`].
+
+use crate::net::cost::CostModel;
+use crate::serve::driver::ServeOutput;
+use crate::serve::scorer::score_rounds;
+
+/// One serving run's costs under a link model.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Modeled end-to-end latency per batch: measured compute wall plus
+    /// `rounds·RTT + bytes/bandwidth` (batch 0 is the demand probe —
+    /// its wall includes inline triple generation).
+    pub batch_latency_secs: Vec<f64>,
+    /// Mean latency over the bank-served batches (probe excluded).
+    pub mean_latency_secs: f64,
+    /// Worst bank-served batch.
+    pub max_latency_secs: f64,
+    /// Scored transactions per second at the mean latency.
+    pub throughput_rows_per_sec: f64,
+    /// Online flights per batch (uniform; == `score_rounds(k)`).
+    pub rounds_per_batch: u64,
+    /// Mean per-batch online bytes (party 0).
+    pub bytes_per_batch: u64,
+    /// Matrix-triple bytes of one prefabricated bank batch.
+    pub bank_batch_bytes: u64,
+    /// Bank ledger (prefabricated, replenished, consumed, remaining).
+    pub bank_ledger: [usize; 4],
+    /// Replenishment events over the run.
+    pub bank_replenish_events: usize,
+}
+
+impl ServeReport {
+    /// Summarize a serving run under a link model.
+    pub fn from_serve(out: &ServeOutput, link: &CostModel) -> ServeReport {
+        let lat: Vec<f64> = out
+            .batch_stats
+            .iter()
+            .map(|b| b.wall_secs + link.time_raw(b.online.bytes_sent, b.online.rounds))
+            .collect();
+        // Steady-state stats exclude the probe batch when there is one.
+        let steady = if lat.len() > 1 { &lat[1..] } else { &lat[..] };
+        let mean = steady.iter().sum::<f64>() / steady.len() as f64;
+        let max = steady.iter().cloned().fold(0.0f64, f64::max);
+        let bytes: u64 = out.batch_stats.iter().map(|b| b.online.bytes_sent).sum::<u64>()
+            / out.batch_stats.len() as u64;
+        let rounds = out.batch_stats.first().map(|b| b.online.rounds).unwrap_or(0);
+        debug_assert_eq!(rounds, score_rounds(out.k), "per-batch budget must be exact");
+        ServeReport {
+            batch_latency_secs: lat,
+            mean_latency_secs: mean,
+            max_latency_secs: max,
+            throughput_rows_per_sec: out.batch_rows as f64 / mean.max(f64::MIN_POSITIVE),
+            rounds_per_batch: rounds,
+            bytes_per_batch: bytes,
+            bank_batch_bytes: out.per_batch_mat_triple_bytes,
+            bank_ledger: [
+                out.bank_prefabricated,
+                out.bank_replenished,
+                out.bank_consumed,
+                out.bank_remaining,
+            ],
+            bank_replenish_events: out.bank_replenish_events,
+        }
+    }
+}
+
+/// The `BENCH_serving.json` payload shared by the CLI driver and the
+/// `serving` bench target.
+pub fn serving_bench_json(
+    out: &ServeOutput,
+    lan: &ServeReport,
+    wan: &ServeReport,
+    train_secs: f64,
+) -> String {
+    let mut json = String::from("{\n  \"bench\": \"serving\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"k\": {}, \"batch_rows\": {}, \"batches\": {}}},\n",
+        out.k,
+        out.batch_rows,
+        out.batch_stats.len()
+    ));
+    json.push_str(&format!("  \"train_secs\": {train_secs:.6},\n"));
+    json.push_str(&format!(
+        "  \"per_batch\": {{\"rounds\": {}, \"bytes\": {}, \"mat_triple_bytes\": {}}},\n",
+        lan.rounds_per_batch, lan.bytes_per_batch, lan.bank_batch_bytes
+    ));
+    json.push_str(&format!(
+        "  \"bank\": {{\"prefabricated\": {}, \"replenished\": {}, \"consumed\": {}, \
+         \"remaining\": {}, \"replenish_events\": {}, \"misses\": {}}},\n",
+        out.bank_prefabricated,
+        out.bank_replenished,
+        out.bank_consumed,
+        out.bank_remaining,
+        out.bank_replenish_events,
+        out.bank_misses
+    ));
+    json.push_str(&format!(
+        "  \"lan\": {{\"mean_latency_secs\": {:.6}, \"max_latency_secs\": {:.6}, \
+         \"throughput_rows_per_sec\": {:.1}}},\n",
+        lan.mean_latency_secs, lan.max_latency_secs, lan.throughput_rows_per_sec
+    ));
+    json.push_str(&format!(
+        "  \"wan\": {{\"mean_latency_secs\": {:.6}, \"max_latency_secs\": {:.6}, \
+         \"throughput_rows_per_sec\": {:.1}}}\n",
+        wan.mean_latency_secs, wan.max_latency_secs, wan.throughput_rows_per_sec
+    ));
+    json.push_str("}\n");
+    json
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::BlobSpec;
+    use crate::kmeans::config::{Partition, SecureKmeansConfig};
+    use crate::offline::bank::BankConfig;
+    use crate::serve::driver::{serve_stream, train_model, ServeConfig};
+
+    #[test]
+    fn serve_report_summarizes_a_run() {
+        let mut spec = BlobSpec::new(60, 4, 2);
+        spec.spread = 0.02;
+        let train = spec.generate(5);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 3,
+            partition: Partition::Vertical { d_a: 2 },
+            ..Default::default()
+        };
+        let (_, models) = train_model(&train, &cfg, 0.05).unwrap();
+        let stream = spec.generate(6);
+        let scfg = ServeConfig {
+            batch_rows: 10,
+            batches: 4,
+            bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 },
+            seed: 0xF00D,
+        };
+        let out = serve_stream(models, &stream, &scfg).unwrap();
+        let lan = ServeReport::from_serve(&out, &CostModel::lan());
+        let wan = ServeReport::from_serve(&out, &CostModel::wan());
+        assert_eq!(lan.batch_latency_secs.len(), 4);
+        assert_eq!(lan.rounds_per_batch, score_rounds(2));
+        assert!(lan.mean_latency_secs > 0.0);
+        assert!(wan.mean_latency_secs > lan.mean_latency_secs, "WAN RTT must dominate");
+        assert!(lan.throughput_rows_per_sec > 0.0);
+        assert_eq!(lan.bank_ledger[2], 3, "3 bank-served batches");
+        let json = serving_bench_json(&out, &lan, &wan, 0.5);
+        assert!(json.contains("\"bench\": \"serving\""));
+        assert!(json.contains("\"bank\""));
+    }
+}

@@ -1,6 +1,17 @@
 //! Jaccard coefficient `J(R, R*) = |R ∩ R*| / |R ∪ R*|` (paper §5.6).
+//!
+//! Inputs are treated as **sets**: order and duplicates are ignored.
+//!
+//! Degenerate inputs are defined explicitly instead of falling into the
+//! 0/0 division: **`J(∅, ∅) = 1.0`** — two empty candidate sets are
+//! identical (a detector that flags nothing on a stream with no fraud is
+//! perfectly right), while `J(∅, S) = 0.0` for non-empty `S` — flagging
+//! nothing when there *is* fraud (or flagging something when there is
+//! none) shares no element with the truth.
 
-/// Jaccard similarity of two index sets (need not be sorted).
+/// Jaccard similarity of two index sets (need not be sorted; duplicates
+/// collapse). Returns a value in `[0, 1]`; see the module docs for the
+/// `J(∅, ∅) = 1.0` convention.
 pub fn jaccard(r: &[usize], r_star: &[usize]) -> f64 {
     use std::collections::HashSet;
     let a: HashSet<usize> = r.iter().copied().collect();
@@ -8,7 +19,7 @@ pub fn jaccard(r: &[usize], r_star: &[usize]) -> f64 {
     let inter = a.intersection(&b).count();
     let union = a.union(&b).count();
     if union == 0 {
-        return 1.0; // both empty: identical
+        return 1.0; // J(∅, ∅): both empty → identical, not NaN
     }
     inter as f64 / union as f64
 }
@@ -21,13 +32,36 @@ mod tests {
     fn bounds_and_identity() {
         assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
         assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
-        assert_eq!(jaccard(&[], &[]), 1.0);
         let j = jaccard(&[1, 2, 3, 4], &[3, 4, 5, 6]);
         assert!((j - 2.0 / 6.0).abs() < 1e-12);
     }
 
     #[test]
+    fn both_empty_is_one_not_nan() {
+        let j = jaccard(&[], &[]);
+        assert!(!j.is_nan(), "J(∅, ∅) must be defined");
+        assert_eq!(j, 1.0);
+    }
+
+    #[test]
+    fn empty_vs_non_empty_is_zero() {
+        assert_eq!(jaccard(&[], &[1, 2, 3]), 0.0);
+        assert_eq!(jaccard(&[7], &[]), 0.0);
+    }
+
+    #[test]
     fn order_and_duplicates_ignored() {
         assert_eq!(jaccard(&[3, 1, 2, 2], &[2, 3, 1]), 1.0);
+        // Duplicates collapse before counting: {1,2} vs {2,3} → 1/3.
+        let j = jaccard(&[1, 1, 2], &[2, 2, 3]);
+        assert!((j - 1.0 / 3.0).abs() < 1e-12);
+        // Duplicates on both sides of an empty overlap stay 0.
+        assert_eq!(jaccard(&[5, 5, 5], &[6, 6]), 0.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let (a, b) = ([1usize, 2, 9], [2usize, 9, 11, 12]);
+        assert_eq!(jaccard(&a, &b), jaccard(&b, &a));
     }
 }

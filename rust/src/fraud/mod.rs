@@ -2,10 +2,16 @@
 //!
 //! Transactions are grouped by (secure) K-means; outliers — samples far
 //! from every dense cluster — are flagged as fraud candidates and scored
-//! against ground truth with the Jaccard coefficient.
+//! against ground truth with the Jaccard coefficient. For the serving
+//! path, [`threshold`] evaluates the distance-threshold flag **under
+//! MPC** on the secret-shared minimum distances, so streaming fraud
+//! candidates are a protocol output, not a post-hoc computation on
+//! revealed data.
 
 pub mod jaccard;
 pub mod outlier;
+pub mod threshold;
 
 pub use jaccard::jaccard;
 pub use outlier::{detect_outliers, OutlierConfig};
+pub use threshold::{distance_threshold, encode_threshold_2f, flag_above};

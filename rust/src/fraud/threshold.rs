@@ -1,0 +1,136 @@
+//! Secure distance thresholding: the serving-side fraud flag.
+//!
+//! At training time the coordinator learns a **public** squared-distance
+//! threshold τ from the revealed clustering (a quantile of the training
+//! samples' distances to their assigned centroids,
+//! [`distance_threshold`]). At serving time the flag
+//! `[‖x − μ_c(x)‖² > τ]` is evaluated **under MPC** on the secret-shared
+//! minimum distance ([`flag_above`]) — fraud candidates are decided by
+//! the protocol, not recomputed from revealed assignments, so the only
+//! scoring outputs ever reconstructed are the assignment and the flag
+//! bit itself.
+//!
+//! Scale bookkeeping: S1/S2 work on `D' = ‖μ‖² − 2·x·μ` (the constant
+//! per-row `‖x‖²` is dropped because it never changes comparisons).
+//! The flag needs the *true* squared distance, so each party adds its
+//! own plaintext block's row norms back — `‖x‖² = ‖x_A‖² + ‖x_B‖²` is a
+//! free local share-sum under the vertical partition — before the single
+//! CMP against τ encoded at scale 2f ([`encode_threshold_2f`]).
+
+use crate::data::blobs::Dataset;
+use crate::kmeans::plaintext::esd;
+use crate::ring::fixed::SCALE;
+use crate::ring::matrix::Mat;
+use crate::ss::boolean::BoolShare;
+use crate::ss::compare::gt_public;
+use crate::ss::Session;
+
+/// Pick τ as the `(1 − rate)` quantile of the training samples' squared
+/// distances to their assigned centroids: roughly the top `rate`
+/// fraction of a matching-distribution stream will flag. `rate` is
+/// clamped to `[0, 1]`: `rate = 0` yields the maximum training distance
+/// (nothing seen in training would flag), `rate = 1` the minimum.
+pub fn distance_threshold(
+    data: &Dataset,
+    centroids: &[f64],
+    assignments: &[usize],
+    k: usize,
+    rate: f64,
+) -> f64 {
+    let d = data.d;
+    assert_eq!(centroids.len(), k * d);
+    assert_eq!(assignments.len(), data.n);
+    let mut dists: Vec<f64> = (0..data.n)
+        .map(|i| {
+            let j = assignments[i];
+            esd(data.row(i), &centroids[j * d..(j + 1) * d])
+        })
+        .collect();
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rate = rate.clamp(0.0, 1.0);
+    let idx = (((data.n as f64) * (1.0 - rate)).floor() as usize).min(data.n - 1);
+    dists[idx]
+}
+
+/// Encode a plaintext squared-distance threshold at scale 2f (the scale
+/// of `D'` and of locally-added `‖x‖²` terms).
+pub fn encode_threshold_2f(tau: f64) -> u64 {
+    (tau * SCALE * SCALE).round() as i64 as u64
+}
+
+/// XOR-shared `[dist > τ]` per lane, for a secret-shared distance matrix
+/// at scale 2f against the public threshold `tau_2f`. Strict: a distance
+/// exactly equal to τ is **not** flagged. Costs exactly
+/// [`crate::ss::boolean::CMP_ROUNDS`] flights for any lane count.
+pub fn flag_above(ctx: &mut Session, dist: &Mat, tau_2f: u64) -> BoolShare {
+    let c = Mat::from_vec(dist.rows, dist.cols, vec![tau_2f; dist.len()]);
+    gt_public(ctx, dist, &c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::share::split;
+    use crate::ss::Ctx;
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn quantile_threshold_brackets_the_tail() {
+        // 10 samples at distance ~0, 10 at distance 4 (two clusters of
+        // one point each would be degenerate; use one centroid).
+        let mut x = Vec::new();
+        for _ in 0..10 {
+            x.extend_from_slice(&[0.0, 0.0]);
+        }
+        for _ in 0..10 {
+            x.extend_from_slice(&[2.0, 0.0]);
+        }
+        let ds = Dataset { n: 20, d: 2, x, labels: vec![0; 20] };
+        let centroids = vec![0.0, 0.0];
+        let assignments = vec![0usize; 20];
+        // rate 0.5 → τ at the boundary between the near and far halves.
+        let tau = distance_threshold(&ds, &centroids, &assignments, 1, 0.5);
+        assert!((0.0..=4.0).contains(&tau), "tau {tau}");
+        // rate 0 → τ is the max distance: nothing above it.
+        let tau0 = distance_threshold(&ds, &centroids, &assignments, 1, 0.0);
+        assert_eq!(tau0, 4.0);
+    }
+
+    #[test]
+    fn secure_flag_matches_plaintext_threshold() {
+        use crate::ss::boolean::CMP_ROUNDS;
+        // Distances (scale 2f) 1.0, 2.5, 3.0, 0.1 against τ = 2.5:
+        // strictly-above flags only the 3.0 lane.
+        let tau = 2.5;
+        let vals = [1.0, 2.5, 3.0, 0.1];
+        let enc: Vec<u64> = vals.iter().map(|&v| encode_threshold_2f(v)).collect();
+        let dist = Mat::from_vec(1, 4, enc);
+        let mut prg = Prg::new(31);
+        let (d0, d1) = split(&dist, &mut prg);
+        let tau_2f = encode_threshold_2f(tau);
+        let ((got, _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(32, 0);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let before = ctx.chan.meter().total().rounds;
+                let b = flag_above(&mut ctx, &d0, tau_2f);
+                let spent = ctx.chan.meter().total().rounds - before;
+                let theirs = c.exchange_u64s(&b.words);
+                let flags: Vec<bool> =
+                    (0..4).map(|i| ((b.words[0] ^ theirs[0]) >> i) & 1 == 1).collect();
+                (flags, spent)
+            },
+            move |c| {
+                let mut ts = Dealer::new(32, 1);
+                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let b = flag_above(&mut ctx, &d1, tau_2f);
+                let _ = c.exchange_u64s(&b.words);
+            },
+        );
+        let (flags, spent) = got;
+        assert_eq!(flags, vec![false, false, true, false]);
+        assert_eq!(spent, CMP_ROUNDS, "one CMP for any lane count");
+    }
+}

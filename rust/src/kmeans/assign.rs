@@ -22,6 +22,18 @@ pub fn min_k_rounds(k: usize) -> u64 {
     levels * (CMP_ROUNDS + 1)
 }
 
+/// Decode one reconstructed assignment row: `(cluster index,
+/// well_formed)`. A valid row is exactly one-hot; anything else is
+/// protocol corruption — the caller counts it (and typically trips a
+/// `debug_assert`) while the index falls back to the first 1-entry, or
+/// cluster 0 if none. Shared by the training reveal and the serving
+/// scorer so the malformed-row policy cannot drift between them.
+pub fn decode_one_hot_row(row: &[u64]) -> (usize, bool) {
+    let ones = row.iter().filter(|&&v| v == 1).count();
+    let well_formed = ones == 1 && row.iter().all(|&v| v == 0 || v == 1);
+    (row.iter().position(|&v| v == 1).unwrap_or(0), well_formed)
+}
+
 /// One tree node: shared min-distance lanes (n) and shared one-hot index
 /// rows (n×k).
 struct Node {

@@ -26,6 +26,11 @@
 //! O(B·d) memory. [`sparse`] is the thin HE-path entrypoint.
 //! [`plaintext`] is the cleartext oracle the protocol is validated
 //! against.
+//!
+//! Post-training, [`secure::assign_only_tile`] is the **serving** entry
+//! point (S1 + S2 against a cached norm row, no S3), and
+//! [`secure::SecureKmeansOutput::centroid_shares`] is the shared-centroid
+//! handle the [`crate::serve`] subsystem persists per party.
 
 pub mod assign;
 pub mod backend;

@@ -71,6 +71,12 @@ pub struct SecureKmeansOutput {
     /// Which cross-product backend the run used ("beaver",
     /// "he-protocol2", "naive") — set by explicit `EsdMode` or Auto.
     pub backend_name: &'static str,
+    /// Each party's additive share of the final fixed-point centroids
+    /// (k×d; `[0]` + `[1]` reconstructs to the encoded `centroids`).
+    /// This is the **shared-centroid handle** the serving subsystem
+    /// persists: a [`crate::serve::model::TrainedModel`] carries one
+    /// share per party so scoring never needs the plaintext centroids.
+    pub centroid_shares: [Mat; 2],
     /// Party-0 / party-1 communication meters (phases: online.s1…).
     pub meter_a: Meter,
     pub meter_b: Meter,
@@ -98,6 +104,9 @@ pub struct SecureKmeansOutput {
 pub struct PartyResult {
     pub step_demands: [Demand; 3],
     pub mu: Mat,
+    /// This party's additive centroid share (kept alongside the
+    /// reconstructed `mu` so serving can resume from shares).
+    pub mu_share: Mat,
     pub assignments: Vec<usize>,
     pub backend_name: &'static str,
     pub demand: Demand,
@@ -111,7 +120,8 @@ pub struct PartyResult {
 }
 
 impl PartyResult {
-    /// Assemble the public output struct from party 0's result.
+    /// Assemble the public output struct from party 0's result plus
+    /// party 1's centroid share.
     pub fn into_output(
         self,
         k: usize,
@@ -119,6 +129,7 @@ impl PartyResult {
         meter_a: Meter,
         meter_b: Meter,
         wall_b: f64,
+        mu_share_b: Mat,
     ) -> SecureKmeansOutput {
         SecureKmeansOutput {
             step_demands: self.step_demands,
@@ -128,6 +139,7 @@ impl PartyResult {
             d,
             iters_run: self.iters,
             backend_name: self.backend_name,
+            centroid_shares: [self.mu_share, mu_share_b],
             meter_a,
             meter_b,
             demand: self.demand,
@@ -395,8 +407,7 @@ fn party_main(
     let assignments: Vec<usize> = (0..n)
         .map(|i| {
             let row = c_plain.row(i);
-            let ones = row.iter().filter(|&&v| v == 1).count();
-            let well_formed = ones == 1 && row.iter().all(|&v| v == 0 || v == 1);
+            let (idx, well_formed) = assign::decode_one_hot_row(row);
             if !well_formed {
                 malformed_rows += 1;
                 debug_assert!(
@@ -405,13 +416,14 @@ fn party_main(
                     row
                 );
             }
-            row.iter().position(|&v| v == 1).unwrap_or(0)
+            idx
         })
         .collect();
 
     PartyResult {
         step_demands,
         mu: mu_plain,
+        mu_share: mu,
         assignments,
         backend_name,
         demand: store.demand.clone(),
@@ -423,6 +435,36 @@ fn party_main(
         tiles: tiles.len(),
         malformed_rows,
     }
+}
+
+/// Assignment-only inference for one row tile: S1 distance (the tile's
+/// staged cross products plus a **cached** shared norm row — recompute
+/// it only when the centroids change, see
+/// [`crate::kmeans::esd::centroid_norms_row_begin`]) followed by S2
+/// `F_min^k`. No S3 update step, no reveal: the returned one-hot
+/// assignment matrix (n_t×k) and minimum D' distances (n_t×1, scale 2f)
+/// stay secret-shared. Exactly `1 + min_k_rounds(k)` flights.
+///
+/// This is the serving entry point: a
+/// [`crate::serve::scorer::Scorer`] calls it per micro-batch against a
+/// long-lived centroid share, which is how the train-once /
+/// score-forever split avoids ever re-running the update step.
+/// Communication is metered under `{phase_prefix}s1` / `{phase_prefix}s2`.
+pub fn assign_only_tile(
+    ctx: &mut Session,
+    backend: &mut dyn CrossProductBackend,
+    x: &PartyData,
+    mu: &Mat,
+    u_row: &Mat,
+    rows: (usize, usize),
+    phase_prefix: &str,
+) -> (Mat, Mat) {
+    ctx.set_phase(&format!("{phase_prefix}s1"));
+    let xmu_p = backend.s1_xmu_tile(ctx, x, mu, rows);
+    ctx.flush();
+    let d_tile = esd::dprime_from_parts(u_row, &xmu_p.resolve(ctx));
+    ctx.set_phase(&format!("{phase_prefix}s2"));
+    assign::min_k(ctx, &d_tile)
 }
 
 /// Run the full two-party protocol on a dataset, any partition, any
@@ -460,7 +502,7 @@ pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutpu
         );
     }
     let wall_b = rb.wall;
-    Ok(ra.into_output(cfg.k, d, meter_a, meter_b, wall_b))
+    Ok(ra.into_output(cfg.k, d, meter_a, meter_b, wall_b, rb.mu_share))
 }
 
 /// Convenience: vertical partition with an even feature split.
@@ -588,6 +630,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn centroid_shares_reconstruct_to_output() {
+        // The shared-centroid handle must reconstruct to exactly the
+        // reported plaintext centroids (serving resumes from the shares).
+        let ds = well_separated(30, 3, 2, 77);
+        let cfg = SecureKmeansConfig {
+            k: 2,
+            iters: 3,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let out = run(&ds, &cfg).unwrap();
+        let rec = out.centroid_shares[0].add(&out.centroid_shares[1]);
+        assert_eq!(rec.decode(), out.centroids);
     }
 
     #[test]

@@ -46,6 +46,17 @@
 //! PJRT C API by [`runtime`] (cargo feature `pjrt`, off by default);
 //! without it the native blocked kernels run — results are identical.
 //!
+//! ## The scoring service
+//!
+//! Training is a one-off; the deployed product is **scoring**: [`serve`]
+//! persists each party's secret-shared centroids as a versioned
+//! [`serve::model::TrainedModel`] artifact, and a long-lived
+//! [`serve::scorer::Scorer`] runs assignment-only inference (S1 + S2 +
+//! a secure distance-threshold fraud flag, **no S3**) over streaming
+//! micro-batches at exactly [`serve::scorer::score_rounds`]`(k)` flights
+//! per batch, drawing prefabricated material from a replenished
+//! [`offline::bank::MaterialBank`].
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -73,6 +84,7 @@ pub mod mkmeans;
 pub mod kmeans;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod data;
 pub mod fraud;
 pub mod bench;

@@ -4,23 +4,37 @@
 //! ppkmeans train  [--n 1000] [--d 4] [--k 3] [--iters 10] [--sparse]
 //!                 [--partition vertical|horizontal] [--link lan|wan]
 //!                 [--tile-rows B] [--tile-flights lockstep|streamed]
-//! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 3]
+//! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 2] [--rate 0.05]
+//! ppkmeans serve  [--n 1000] [--k 4] [--iters 6] [--batch 64]
+//!                 [--batches 12] [--prefab 8] [--low-water 2]
+//!                 [--refill 4] [--model-dir model] [--link lan|wan]
+//! ppkmeans score  [--model-dir model] [--batch 64] [--batches 8]
+//!                 [--link lan|wan]
 //! ppkmeans bench                      # list bench targets
 //! ppkmeans help                       # full option reference
 //! ppkmeans version
 //! ```
 
 use ppkmeans::cli::Args;
+use ppkmeans::coordinator::serve::{serving_bench_json, ServeReport};
 use ppkmeans::coordinator::Session;
 use ppkmeans::data::blobs::BlobSpec;
-use ppkmeans::data::sparse_gen;
+use ppkmeans::data::{fraud_gen, sparse_gen};
+use ppkmeans::fraud::{detect_outliers, jaccard, OutlierConfig};
 use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::plaintext;
 use ppkmeans::net::cost::CostModel;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::serve::model::TrainedModel;
+use ppkmeans::serve::scorer::score_rounds;
+use ppkmeans::util::stats::mean;
+use std::path::PathBuf;
 
 fn print_help() {
     println!("ppkmeans — scalable sparsity-aware privacy-preserving K-means");
     println!();
-    println!("USAGE: ppkmeans <train|fraud|bench|help|version> [options]");
+    println!("USAGE: ppkmeans <train|fraud|serve|score|bench|help|version> [options]");
     println!();
     println!("train options:");
     println!("  --n N                   samples to generate (default 1000)");
@@ -41,10 +55,37 @@ fn print_help() {
     println!("                          group — O(B·d) memory, rounds × tiles)");
     println!("                          (default lockstep)");
     println!();
-    println!("fraud: runs as a cargo example —");
-    println!("  cargo run --release --example fraud_detection -- [--n N --runs R]");
+    println!("fraud options (train → outlier detection → Jaccard report):");
+    println!("  --n N                   transactions (default 2000)");
+    println!("  --k K                   clusters (default 4)");
+    println!("  --iters T               Lloyd iterations (default 8)");
+    println!("  --runs R                repetitions (default 2)");
+    println!("  --rate F                fraud rate / flag rate (default 0.05)");
     println!();
-    println!("bench: lists the cargo bench targets (tables/figures + tiling)");
+    println!("serve options (train once, save model shares, score a stream):");
+    println!("  --n N                   training transactions (default 1000)");
+    println!("  --k K / --iters T       clustering geometry (defaults 4 / 6)");
+    println!("  --batch B               transactions per micro-batch (default 64)");
+    println!("  --batches M             micro-batches to score (default 12;");
+    println!("                          the first is the demand probe)");
+    println!("  --prefab P              bank batches fabricated up front (default 8)");
+    println!("  --low-water W           replenish below W batches (default 2)");
+    println!("  --refill R              batches per replenishment (default 4)");
+    println!("  --rate F                fraud flag rate → threshold τ (default 0.05)");
+    println!("  --model-dir DIR         where party{{0,1}}.ppkmodel go (default model)");
+    println!("  --link L                lan | wan (default lan)");
+    println!();
+    println!("score options (load saved model shares, score a fresh stream):");
+    println!("  --model-dir DIR / --batch B / --batches M / --link L");
+    println!();
+    println!("bench: lists the cargo bench targets (tables/figures + tiling + serving)");
+}
+
+fn link_from(args: &Args) -> CostModel {
+    match args.get_str("link", "lan") {
+        "wan" => CostModel::wan(),
+        _ => CostModel::lan(),
+    }
 }
 
 fn cmd_train(args: &Args) {
@@ -58,10 +99,7 @@ fn cmd_train(args: &Args) {
         "horizontal" => Partition::Horizontal { n_a: n / 2 },
         _ => Partition::Vertical { d_a: (d / 2).max(1) },
     };
-    let link = match args.get_str("link", "lan") {
-        "wan" => CostModel::wan(),
-        _ => CostModel::lan(),
-    };
+    let link = link_from(args);
     let tile_rows = args.get("tile-rows").map(|v| match v.parse::<usize>() {
         Ok(b) if b >= 1 => b,
         _ => {
@@ -121,6 +159,214 @@ fn cmd_train(args: &Args) {
     }
 }
 
+/// The fraud pipeline: secure joint training → outlier detection →
+/// Jaccard against ground truth, with the single-party plaintext
+/// baseline for the joint-vs-single gap (paper §5.6).
+fn cmd_fraud(args: &Args) {
+    let n = args.get_usize("n", 2000);
+    let k = args.get_usize("k", 4);
+    let iters = args.get_usize("iters", 8);
+    let runs = args.get_usize("runs", 2);
+    let rate = args.get_f64("rate", 0.05);
+    println!("fraud pipeline: n={n} k={k} t={iters}, {runs} run(s), rate={rate}");
+    let ocfg = OutlierConfig { rate, min_cluster_frac: 0.02 };
+    let mut j_joint = vec![];
+    let mut j_single = vec![];
+    for run in 0..runs {
+        let f = fraud_gen::generate(n, rate, 1000 + run as u128);
+        let cfg = SecureKmeansConfig {
+            k,
+            iters,
+            seed: 7 + run as u128,
+            partition: Partition::Vertical { d_a: f.d_payment },
+            ..Default::default()
+        };
+        let out = match ppkmeans::kmeans::secure::run(&f.data, &cfg) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("fraud failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let flagged = detect_outliers(&f.data, &out.centroids, &out.assignments, k, &ocfg);
+        j_joint.push(jaccard(&flagged, &f.outliers));
+
+        let pay = f.payment_only();
+        let plain = plaintext::kmeans(&pay, k, iters, 7 + run as u128);
+        let flagged = detect_outliers(&pay, &plain.centroids, &plain.assignments, k, &ocfg);
+        j_single.push(jaccard(&flagged, &f.outliers));
+        println!(
+            "  run {run}: secure joint J={:.3}   payment-only J={:.3}",
+            j_joint[run], j_single[run]
+        );
+    }
+    println!("average Jaccard: joint {:.3}  single-party {:.3}", mean(&j_joint), mean(&j_single));
+    println!("(paper shape: joint ≈ 0.86 ≫ single-party ≈ 0.62)");
+}
+
+/// Shared tail of `serve` and `score`: pump a stream, report, emit JSON.
+fn serve_and_report(
+    models: [TrainedModel; 2],
+    scfg: &ServeConfig,
+    link: &CostModel,
+    train_secs: f64,
+    stream_seed: u128,
+) {
+    let k = models[0].k;
+    let rows = scfg.batches * scfg.batch_rows;
+    let stream = fraud_gen::generate(rows, 0.05, stream_seed);
+    if stream.data.d != models[0].d {
+        eprintln!(
+            "model expects d={} but the generated stream has d={} — \
+             score currently serves fraud-shaped (42-feature) models",
+            models[0].d,
+            stream.data.d
+        );
+        std::process::exit(2);
+    }
+    let out = match serve_stream(models, &stream.data, scfg) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    // One report per link model; the console view is whichever of the
+    // pair --link selected, so it can never drift from the JSON's.
+    let lan = ServeReport::from_serve(&out, &CostModel::lan());
+    let wan = ServeReport::from_serve(&out, &CostModel::wan());
+    let report = if *link == CostModel::wan() { &wan } else { &lan };
+    println!(
+        "scored {} batches × {} rows (budget {} flights/batch = assignment-only, no S3)",
+        scfg.batches,
+        scfg.batch_rows,
+        score_rounds(k)
+    );
+    for (i, (s, lat)) in
+        out.batch_stats.iter().zip(&report.batch_latency_secs).enumerate()
+    {
+        let tag = if i == 0 { " (probe)" } else { "" };
+        println!(
+            "  batch {i:>3}: {} rows, {} flagged, {} B, {} rounds, {:.3} ms{tag}",
+            s.rows,
+            s.flagged,
+            s.online.bytes_sent,
+            s.online.rounds,
+            lat * 1e3
+        );
+    }
+    println!(
+        "steady state: mean {:.3} ms/batch, max {:.3} ms, {:.0} tx/s",
+        report.mean_latency_secs * 1e3,
+        report.max_latency_secs * 1e3,
+        report.throughput_rows_per_sec
+    );
+    println!(
+        "bank: prefabricated {} + replenished {} − consumed {} = {} in stock \
+         ({} replenishment(s), {} misses, {} B mat triples/batch)",
+        out.bank_prefabricated,
+        out.bank_replenished,
+        out.bank_consumed,
+        out.bank_remaining,
+        out.bank_replenish_events,
+        out.bank_misses,
+        out.per_batch_mat_triple_bytes
+    );
+    let json = serving_bench_json(&out, &lan, &wan, train_secs);
+    match std::fs::write("BENCH_serving.json", &json) {
+        Ok(()) => println!("wrote BENCH_serving.json"),
+        Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+    }
+}
+
+fn serve_cfg_from(args: &Args) -> ServeConfig {
+    ServeConfig {
+        batch_rows: args.get_usize("batch", 64),
+        batches: args.get_usize("batches", 12),
+        bank: BankConfig {
+            prefab_batches: args.get_usize("prefab", 8),
+            low_water: args.get_usize("low-water", 2),
+            refill_batches: args.get_usize("refill", 4),
+        },
+        seed: 0x5E11E,
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let n = args.get_usize("n", 1000);
+    let k = args.get_usize("k", 4);
+    let iters = args.get_usize("iters", 6);
+    let rate = args.get_f64("rate", 0.05);
+    let dir = PathBuf::from(args.get_str("model-dir", "model"));
+    let link = link_from(args);
+    let scfg = serve_cfg_from(args);
+
+    println!("training secure K-means for serving: n={n} k={k} t={iters} (vertical 18+24)");
+    let f = fraud_gen::generate(n, rate, 77);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (out, models) = match train_model(&f.data, &cfg, rate) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let train_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  trained in {train_secs:.2}s ({} iters, backend {}); τ = {:.4}",
+        out.iters_run, out.backend_name, models[0].tau
+    );
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("cannot create {}: {e}", dir.display());
+        std::process::exit(1);
+    }
+    for m in &models {
+        let path = dir.join(TrainedModel::file_name(m.party));
+        if let Err(e) = m.save(&path) {
+            eprintln!("cannot save {}: {e}", path.display());
+            std::process::exit(1);
+        }
+        println!("  saved {}", path.display());
+    }
+    serve_and_report(models, &scfg, &link, train_secs, 4242);
+}
+
+fn cmd_score(args: &Args) {
+    let dir = PathBuf::from(args.get_str("model-dir", "model"));
+    let link = link_from(args);
+    let mut scfg = serve_cfg_from(args);
+    scfg.batches = args.get_usize("batches", 8);
+    let load = |party: usize| -> TrainedModel {
+        let path = dir.join(TrainedModel::file_name(party));
+        match TrainedModel::load(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!(
+                    "cannot load {} ({e}) — run `ppkmeans serve` first to train \
+                     and persist the model shares",
+                    path.display()
+                );
+                std::process::exit(1);
+            }
+        }
+    };
+    let models = [load(0), load(1)];
+    println!(
+        "loaded model shares from {} (k={}, d={}, τ={:.4})",
+        dir.display(),
+        models[0].k,
+        models[0].d,
+        models[0].tau
+    );
+    serve_and_report(models, &scfg, &link, 0.0, 24_242);
+}
+
 fn main() {
     let args = Args::from_env();
     if args.flag("help") {
@@ -129,9 +375,9 @@ fn main() {
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
-        Some("fraud") => {
-            println!("run: cargo run --release --example fraud_detection -- [--n N --runs R]");
-        }
+        Some("fraud") => cmd_fraud(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("score") => cmd_score(&args),
         Some("bench") => {
             println!("bench targets (cargo bench --bench <name>):");
             for (b, what) in [
@@ -141,6 +387,7 @@ fn main() {
                 ("fig3_vectorization", "Fig 3 — vectorization ablation (WAN)"),
                 ("fig4_sparse", "Fig 4 — sparse optimization scaling (WAN)"),
                 ("tiling", "row tiling — wall/rounds/triple bytes, BENCH_tiling.json"),
+                ("serving", "scoring service — latency/throughput, BENCH_serving.json"),
                 ("ablations", "extras — OU vs Paillier, PJRT vs native"),
             ] {
                 println!("  {b:<20} {what}");
@@ -149,7 +396,7 @@ fn main() {
         Some("help") => print_help(),
         Some("version") | None => {
             println!("ppkmeans 0.1.0 — scalable sparsity-aware privacy-preserving K-means");
-            println!("subcommands: train | fraud | bench | help | version");
+            println!("subcommands: train | fraud | serve | score | bench | help | version");
         }
         Some(cmd) => {
             eprintln!("unknown subcommand: {cmd}");

@@ -25,6 +25,18 @@ impl PhaseStats {
         self.msgs_sent += o.msgs_sent;
         self.rounds += o.rounds;
     }
+
+    /// Traffic accumulated since an earlier snapshot of the same counter
+    /// — per-request accounting for long-lived sessions: snapshot
+    /// (`meter.total_prefix(...)`) before a request, subtract after.
+    /// Saturating, so a mismatched snapshot cannot underflow.
+    pub fn since(&self, before: &PhaseStats) -> PhaseStats {
+        PhaseStats {
+            bytes_sent: self.bytes_sent.saturating_sub(before.bytes_sent),
+            msgs_sent: self.msgs_sent.saturating_sub(before.msgs_sent),
+            rounds: self.rounds.saturating_sub(before.rounds),
+        }
+    }
 }
 
 /// Per-party communication meter with phase attribution.
@@ -142,6 +154,25 @@ mod tests {
         m.on_send(1); // new flight
         assert_eq!(m.total().rounds, 2);
         assert_eq!(m.total().msgs_sent, 3);
+    }
+
+    #[test]
+    fn since_gives_per_request_deltas() {
+        let mut m = Meter::new();
+        m.set_phase("serve.s1");
+        m.on_send(10);
+        m.on_recv();
+        let before = m.total_prefix("serve.");
+        m.on_send(7);
+        m.on_recv();
+        m.on_send(3);
+        let delta = m.total_prefix("serve.").since(&before);
+        assert_eq!(delta.bytes_sent, 10);
+        assert_eq!(delta.rounds, 2);
+        assert_eq!(delta.msgs_sent, 2);
+        // A mismatched (newer) snapshot saturates instead of panicking.
+        let newer = m.total_prefix("serve.");
+        assert_eq!(before.since(&newer).bytes_sent, 0);
     }
 
     #[test]

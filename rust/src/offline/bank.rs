@@ -1,0 +1,237 @@
+//! The replenished offline material bank behind the scoring service.
+//!
+//! Training consumes its offline material once; serving consumes it
+//! forever. The [`MaterialBank`] turns the one-shot
+//! [`TripleStore::prefill`] into a **stocked service**: it is planned
+//! with the per-batch [`Demand`] of one scored micro-batch (uniform
+//! across batches — see [`crate::serve::scorer::Scorer`]), prefabricates
+//! `prefab_batches` batches of triples/daBits up front, serves score
+//! calls strictly FIFO from that stock, and replenishes `refill_batches`
+//! more whenever the stock drops below `low_water`. Every quantity is
+//! exactly accounted:
+//!
+//! ```text
+//! prefabricated + replenished − consumed == stock   (always)
+//! ```
+//!
+//! and a correctly-planned bank keeps the underlying store's
+//! `misses == 0` — every online draw hits prefabricated material, which
+//! is the paper's "pre-compute almost all cryptographic operations"
+//! split pushed from one training job to a stream of scoring jobs.
+//! Bank bytes are priced from the planned demand
+//! ([`MaterialBank::per_batch_mat_triple_bytes`] /
+//! [`MaterialBank::stocked_mat_triple_bytes`]), and generation traffic
+//! via [`crate::offline::pricing`] on [`MaterialBank::served_demand`].
+//!
+//! Concurrency model: the in-process serve loop drains its request
+//! queue in arrival order, so material draws are strictly sequential —
+//! FIFO fairness is inherited from [`TripleStore`]'s per-shape FIFO
+//! queues (a request batch can never consume a later batch's stock).
+
+use super::store::{Demand, TripleStore};
+use crate::ss::triples::TripleSource;
+
+/// Stocking policy for a [`MaterialBank`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankConfig {
+    /// Batches of material fabricated up front.
+    pub prefab_batches: usize,
+    /// Replenish when the stock drops strictly below this many batches.
+    pub low_water: usize,
+    /// Batches fabricated per replenishment.
+    pub refill_batches: usize,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        BankConfig { prefab_batches: 8, low_water: 2, refill_batches: 4 }
+    }
+}
+
+/// A stocked, replenished triple store serving per-batch score calls.
+pub struct MaterialBank<S: TripleSource> {
+    store: TripleStore<S>,
+    per_batch: Demand,
+    cfg: BankConfig,
+    stock: usize,
+    /// Batches fabricated up front (== `cfg.prefab_batches`).
+    pub prefabricated: usize,
+    /// Batches added by replenishment so far.
+    pub replenished: usize,
+    /// Batches checked out so far.
+    pub consumed: usize,
+    /// Replenishment events so far.
+    pub replenish_events: usize,
+}
+
+impl<S: TripleSource> MaterialBank<S> {
+    /// Plan a bank from one batch's demand and fabricate the initial
+    /// stock (the serving offline phase proper).
+    pub fn new(inner: S, per_batch: Demand, cfg: BankConfig) -> MaterialBank<S> {
+        assert!(cfg.refill_batches > 0, "a bank must refill by at least one batch");
+        let mut store = TripleStore::new(inner);
+        store.prefill(&per_batch.repeat(cfg.prefab_batches));
+        MaterialBank {
+            store,
+            per_batch,
+            cfg,
+            stock: cfg.prefab_batches,
+            prefabricated: cfg.prefab_batches,
+            replenished: 0,
+            consumed: 0,
+            replenish_events: 0,
+        }
+    }
+
+    /// Check out one batch of material: consumes one batch of stock and
+    /// returns the store to draw it from (pass as the score call's
+    /// [`TripleSource`]). Replenishes first if the stock is empty
+    /// (cold-start or `low_water = 0`), and again after consumption once
+    /// the stock drops below the low-water mark. Replenishment runs
+    /// **synchronously inside this call** — the in-process serve loop
+    /// charges the stall to the batch that triggered it (a real
+    /// deployment would refill from a background fabricator instead);
+    /// the low-water margin exists so the refill never races an empty
+    /// queue.
+    pub fn checkout(&mut self) -> &mut TripleStore<S> {
+        if self.stock == 0 {
+            self.replenish();
+        }
+        self.stock -= 1;
+        self.consumed += 1;
+        if self.stock < self.cfg.low_water {
+            self.replenish();
+        }
+        &mut self.store
+    }
+
+    /// Fabricate `refill_batches` more batches into stock.
+    fn replenish(&mut self) {
+        self.store.prefill(&self.per_batch.repeat(self.cfg.refill_batches));
+        self.stock += self.cfg.refill_batches;
+        self.replenished += self.cfg.refill_batches;
+        self.replenish_events += 1;
+    }
+
+    /// Batches currently in stock.
+    pub fn stock(&self) -> usize {
+        self.stock
+    }
+
+    /// The planned per-batch demand.
+    pub fn per_batch_demand(&self) -> &Demand {
+        &self.per_batch
+    }
+
+    /// Online draws that missed the prefabricated stock (0 for a
+    /// correctly planned bank).
+    pub fn misses(&self) -> u64 {
+        self.store.misses
+    }
+
+    /// Every request actually served (for OT-based pricing of the
+    /// serving offline phase).
+    pub fn served_demand(&self) -> &Demand {
+        &self.store.demand
+    }
+
+    /// Matrix-triple bytes of one planned batch.
+    pub fn per_batch_mat_triple_bytes(&self) -> u64 {
+        self.per_batch.mat_triple_bytes()
+    }
+
+    /// Matrix-triple bytes currently held in stock.
+    pub fn stocked_mat_triple_bytes(&self) -> u64 {
+        self.per_batch.mat_triple_bytes() * self.stock as u64
+    }
+
+    /// The exact stock ledger: `prefabricated + replenished − consumed
+    /// == stock`. Maintained by construction; exposed so callers can
+    /// assert it end-to-end.
+    pub fn accounting_balances(&self) -> bool {
+        self.prefabricated + self.replenished == self.consumed + self.stock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::triples::TripleSource;
+
+    fn batch_demand() -> Demand {
+        let mut d = Demand::default();
+        d.mat(4, 2, 3);
+        d.vec_lanes(8);
+        d.dabit_lanes(4);
+        d
+    }
+
+    /// Draw exactly one batch's material from a checked-out store.
+    fn draw_batch(store: &mut dyn TripleSource) {
+        let _ = store.mat_triple(4, 2, 3);
+        let _ = store.vec_triple(8);
+        let _ = store.dabits(4);
+    }
+
+    #[test]
+    fn accounting_balances_across_replenishment() {
+        let cfg = BankConfig { prefab_batches: 5, low_water: 2, refill_batches: 4 };
+        let mut bank = MaterialBank::new(Dealer::new(1, 0), batch_demand(), cfg);
+        assert_eq!(bank.stock(), 5);
+        for i in 0..10 {
+            draw_batch(bank.checkout());
+            assert!(bank.accounting_balances(), "after batch {i}");
+        }
+        assert_eq!(bank.consumed, 10);
+        // Stock path: 5→4→3→2→1(+4)→… replenishes whenever < 2.
+        assert!(bank.replenish_events >= 1, "10 > 5 batches must force a replenishment");
+        assert_eq!(
+            bank.prefabricated + bank.replenished - bank.consumed,
+            bank.stock(),
+            "ledger must balance"
+        );
+        assert_eq!(bank.misses(), 0, "every draw must hit prefabricated stock");
+    }
+
+    #[test]
+    fn cold_start_with_zero_prefab_still_serves() {
+        let cfg = BankConfig { prefab_batches: 0, low_water: 0, refill_batches: 2 };
+        let mut bank = MaterialBank::new(Dealer::new(2, 0), batch_demand(), cfg);
+        assert_eq!(bank.stock(), 0);
+        draw_batch(bank.checkout());
+        assert_eq!(bank.misses(), 0, "emergency replenish must cover the draw");
+        assert!(bank.accounting_balances());
+    }
+
+    #[test]
+    fn stocked_bytes_track_stock() {
+        let cfg = BankConfig { prefab_batches: 3, low_water: 0, refill_batches: 1 };
+        let mut bank = MaterialBank::new(Dealer::new(3, 0), batch_demand(), cfg);
+        let per = bank.per_batch_mat_triple_bytes();
+        assert_eq!(per, batch_demand().mat_triple_bytes());
+        assert_eq!(bank.stocked_mat_triple_bytes(), 3 * per);
+        draw_batch(bank.checkout());
+        assert_eq!(bank.stocked_mat_triple_bytes(), 2 * per);
+    }
+
+    #[test]
+    fn banks_stay_consistent_across_parties() {
+        // Both parties' banks must hand out matching triple shares in
+        // FIFO order even across a replenishment boundary.
+        let cfg = BankConfig { prefab_batches: 1, low_water: 1, refill_batches: 1 };
+        let mut b0 = MaterialBank::new(Dealer::new(4, 0), batch_demand(), cfg);
+        let mut b1 = MaterialBank::new(Dealer::new(4, 1), batch_demand(), cfg);
+        for _ in 0..3 {
+            let t0 = b0.checkout().vec_triple(8);
+            let t1 = b1.checkout().vec_triple(8);
+            for i in 0..8 {
+                let u = t0.u[i].wrapping_add(t1.u[i]);
+                let v = t0.v[i].wrapping_add(t1.v[i]);
+                let z = t0.z[i].wrapping_add(t1.z[i]);
+                assert_eq!(u.wrapping_mul(v), z);
+            }
+        }
+        assert_eq!(b0.misses() + b1.misses(), 0);
+    }
+}

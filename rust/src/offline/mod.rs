@@ -16,8 +16,12 @@
 //!
 //! [`store::TripleStore`] pre-computes material for a known workload and
 //! serves it FIFO, modelling a real deployment where the offline phase
-//! runs overnight.
+//! runs overnight. [`bank::MaterialBank`] extends that one-shot prefill
+//! into a **stocked service** for the scoring path: N batches
+//! prefabricated up front, FIFO checkout per score call, automatic
+//! replenishment below a low-water mark, exact stock accounting.
 
+pub mod bank;
 pub mod baseot;
 pub mod dealer;
 pub mod gilboa;

@@ -428,4 +428,77 @@ mod tests {
         e.extend(&d);
         assert_eq!(e.mats[0].1, 4);
     }
+
+    #[test]
+    fn extend_after_mark_shows_only_the_extension_in_delta() {
+        // The serving/bank path marks a demand, extends it with another
+        // recorded demand, and expects delta_since to report exactly the
+        // extension — counts per shape, chunks in request order.
+        let mut d = Demand::default();
+        d.mat(2, 3, 4);
+        d.vec_lanes(5);
+        let mark = d.mark();
+        let mut other = Demand::default();
+        other.mat(2, 3, 4); // existing shape: count bumps
+        other.mat(9, 1, 1); // new shape
+        other.bit_lanes(64);
+        other.dabit_lanes(3);
+        d.extend(&other);
+        let delta = d.delta_since(&mark);
+        assert_eq!(delta, other);
+        // The merged totals reflect both halves.
+        assert_eq!(d.mats, vec![((2, 3, 4), 2), ((9, 1, 1), 1)]);
+    }
+
+    #[test]
+    fn zero_shape_demands_cost_zero_bytes_and_keep_peak_sane() {
+        // Degenerate (zero-dimension) shapes can appear when a backend
+        // stages an empty overlap; byte accounting must price exactly
+        // the non-empty operands and an all-zero shape must cost 0.
+        let mut d = Demand::default();
+        d.mat(0, 0, 0); // U, V, Z all empty → 0 bytes
+        d.mat(0, 5, 7); // only V (5×7) is non-empty → 280 bytes
+        d.mat(4, 0, 2); // only Z (4×2) is non-empty → 64 bytes
+        assert_eq!(d.mat_triple_bytes(), 280 + 64);
+        assert_eq!(d.peak_mat_triple_bytes(), 280);
+        // Extending a real demand with the degenerate one adds its bytes
+        // but cannot displace a larger peak.
+        let mut e = Demand::default();
+        e.mat(4, 4, 4); // 48 elems = 384 bytes
+        e.extend(&d);
+        assert_eq!(e.peak_mat_triple_bytes(), 384);
+        assert_eq!(e.mat_triple_bytes(), 384 + 280 + 64);
+    }
+
+    #[test]
+    fn repeat_then_extend_equals_extending_repeatedly() {
+        // bank.prefill(per_batch.repeat(n)) must be indistinguishable —
+        // shape counts AND chunk order — from extending n times, which
+        // is what the online phase's draws replay against.
+        let mut per_batch = Demand::default();
+        per_batch.mat(8, 3, 2);
+        per_batch.mat(8, 3, 2);
+        per_batch.vec_lanes(16);
+        per_batch.bit_lanes(64);
+        per_batch.dabit_lanes(8);
+        let repeated = per_batch.repeat(3);
+        let mut extended = Demand::default();
+        for _ in 0..3 {
+            extended.extend(&per_batch);
+        }
+        assert_eq!(repeated, extended);
+        // And extending a marked copy then diffing recovers the tail.
+        let mut grown = per_batch.clone();
+        let mark = grown.mark();
+        grown.extend(&per_batch);
+        grown.extend(&per_batch);
+        assert_eq!(grown.delta_since(&mark), per_batch.repeat(2));
+        // Peak is invariant under repetition (counts change, shapes don't).
+        assert_eq!(repeated.peak_mat_triple_bytes(), per_batch.peak_mat_triple_bytes());
+        assert_eq!(
+            repeated.mat_triple_bytes(),
+            3 * per_batch.mat_triple_bytes(),
+            "byte totals scale linearly with repeats"
+        );
+    }
 }

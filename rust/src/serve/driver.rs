@@ -1,0 +1,318 @@
+//! The serve loop: train once, then pump a transaction stream through
+//! two long-lived scorers backed by replenished material banks.
+//!
+//! [`train_model`] runs the full secure training protocol and packages
+//! each party's centroid share + normalization stats + fraud threshold
+//! into a persistable [`TrainedModel`]. [`serve_stream`] then simulates
+//! the deployed service: both party threads load their model (typically
+//! from disk, via [`TrainedModel::load`]), warm up their scorer, learn
+//! the per-batch offline [`Demand`] from a single recorded probe batch
+//! (the repo's record-then-prefill idiom), stand up a
+//! [`MaterialBank`], and score the stream micro-batch by micro-batch —
+//! FIFO, with per-request phase metering (`serve.s1` / `serve.s2` /
+//! `serve.flag` / `serve.reveal`) captured per batch via
+//! [`PhaseStats::since`].
+
+use super::model::TrainedModel;
+use super::scorer::{ScoreResult, Scorer};
+use crate::data::blobs::Dataset;
+use crate::data::normalize;
+use crate::fraud::threshold::distance_threshold;
+use crate::kmeans::config::{Partition, SecureKmeansConfig};
+use crate::kmeans::secure::{self, SecureKmeansOutput};
+use crate::net::meter::{Meter, PhaseStats};
+use crate::net::{run_two_party, Chan};
+use crate::offline::bank::{BankConfig, MaterialBank};
+use crate::offline::dealer::Dealer;
+use crate::offline::store::{Demand, TripleStore};
+use crate::util::error::{Error, Result};
+use std::time::Instant;
+
+/// Parameters of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Transactions per micro-batch (uniform across the stream — the
+    /// precondition for a uniform per-batch offline demand).
+    pub batch_rows: usize,
+    /// Total micro-batches to score. The **first** batch doubles as the
+    /// demand probe (served with inline generation while its exact
+    /// demand is recorded); the remaining `batches − 1` are served from
+    /// the bank.
+    pub batches: usize,
+    /// Bank stocking policy for the post-probe batches.
+    pub bank: BankConfig,
+    /// Seed for dealers and mask PRGs (public).
+    pub seed: u128,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_rows: 64,
+            batches: 12,
+            bank: BankConfig::default(),
+            seed: 0x5E11E,
+        }
+    }
+}
+
+/// Per-batch serving metrics (party 0's view).
+#[derive(Debug, Clone)]
+pub struct BatchStats {
+    /// Transactions in the batch.
+    pub rows: usize,
+    /// Fraud candidates flagged.
+    pub flagged: usize,
+    /// Online traffic of this batch alone (all `serve.*` phases).
+    pub online: PhaseStats,
+    /// Compute wall-clock of this batch, measured from **before**
+    /// material checkout: the probe batch includes its inline triple
+    /// generation, and a bank batch whose checkout triggered a
+    /// synchronous replenishment includes that fabrication stall.
+    pub wall_secs: f64,
+}
+
+/// Everything a bench or report needs from one serving run.
+#[derive(Debug)]
+pub struct ServeOutput {
+    /// Revealed per-batch results (both parties see identical values).
+    pub results: Vec<ScoreResult>,
+    /// Per-batch traffic/wall metrics (batch 0 is the probe).
+    pub batch_stats: Vec<BatchStats>,
+    /// The recorded per-batch offline demand the bank was planned from.
+    pub per_batch_demand: Demand,
+    /// Traffic of the one-time scorer warmup (norm-row flight).
+    pub warmup_stats: PhaseStats,
+    /// Bank ledger: batches fabricated up front.
+    pub bank_prefabricated: usize,
+    /// Batches added by replenishment.
+    pub bank_replenished: usize,
+    /// Batches checked out.
+    pub bank_consumed: usize,
+    /// Batches left in stock at shutdown.
+    pub bank_remaining: usize,
+    /// Replenishment events.
+    pub bank_replenish_events: usize,
+    /// Online draws that missed prefabricated stock (0 when planned
+    /// correctly).
+    pub bank_misses: u64,
+    /// Matrix-triple bytes of one prefabricated batch.
+    pub per_batch_mat_triple_bytes: u64,
+    pub k: usize,
+    pub batch_rows: usize,
+    /// Full per-phase meters for both parties.
+    pub meter_a: Meter,
+    pub meter_b: Meter,
+}
+
+/// Train on (raw) vertically partitioned data and package each party's
+/// model artifact: centroid share, own-block normalization stats, and
+/// the public fraud threshold (the `(1 − flag_rate)` quantile of
+/// training distances). The returned [`SecureKmeansOutput`] still
+/// carries the usual training telemetry.
+pub fn train_model(
+    data: &Dataset,
+    cfg: &SecureKmeansConfig,
+    flag_rate: f64,
+) -> Result<(SecureKmeansOutput, [TrainedModel; 2])> {
+    let d_a = match cfg.partition {
+        Partition::Vertical { d_a } => d_a,
+        Partition::Horizontal { .. } => {
+            return Err(Error::Config(
+                "the scoring service requires a vertical partition (each party \
+                 holds its feature block of incoming transactions)"
+                    .into(),
+            ))
+        }
+    };
+    let stats = normalize::column_stats(data);
+    let normalized = normalize::min_max(data);
+    let out = secure::run(&normalized, cfg)?;
+    let tau = distance_threshold(&normalized, &out.centroids, &out.assignments, cfg.k, flag_rate);
+    let models = [0usize, 1].map(|party| {
+        let (c0, c1) = if party == 0 { (0, d_a) } else { (d_a, data.d) };
+        TrainedModel {
+            party,
+            k: cfg.k,
+            d: data.d,
+            d_a,
+            mu_share: out.centroid_shares[party].clone(),
+            stats: stats[c0..c1].to_vec(),
+            tau,
+        }
+    });
+    Ok((out, models))
+}
+
+/// One party's serve-loop result (pre-assembly).
+struct PartyServe {
+    results: Vec<ScoreResult>,
+    batch_stats: Vec<BatchStats>,
+    per_batch_demand: Demand,
+    warmup_stats: PhaseStats,
+    bank_prefabricated: usize,
+    bank_replenished: usize,
+    bank_consumed: usize,
+    bank_remaining: usize,
+    bank_replenish_events: usize,
+    bank_misses: u64,
+    per_batch_mat_triple_bytes: u64,
+}
+
+fn serve_party(
+    chan: &mut Chan,
+    model: TrainedModel,
+    blocks: Vec<Vec<f64>>,
+    bank_cfg: BankConfig,
+    seed: u128,
+) -> PartyServe {
+    let party = chan.party;
+    let mut scorer = Scorer::new(model, seed ^ 0x5C0_0E);
+
+    // One-time warmup: the shared norm row (material generated inline —
+    // a single k·d-lane chunk).
+    let mut warm_src = Dealer::new(seed ^ 0x11, party);
+    scorer.warmup(chan, &mut warm_src);
+    let warmup_stats = chan.meter().get("serve.warmup");
+
+    let mut results = Vec::with_capacity(blocks.len());
+    let mut batch_stats = Vec::with_capacity(blocks.len());
+    // `t0` is taken by the caller BEFORE material checkout, so a batch
+    // whose checkout triggers a synchronous replenishment is charged the
+    // fabrication stall it actually caused.
+    let score_one = |scorer: &mut Scorer,
+                         chan: &mut Chan,
+                         ts: &mut dyn crate::ss::triples::TripleSource,
+                         block: &[f64],
+                         t0: Instant|
+     -> (ScoreResult, BatchStats) {
+        let before = chan.meter().total_prefix("serve.");
+        let r = scorer.score_batch(chan, ts, block).expect("score_batch");
+        let wall = t0.elapsed().as_secs_f64();
+        let online = chan.meter().total_prefix("serve.").since(&before);
+        let stats =
+            BatchStats { rows: r.assignments.len(), flagged: r.flagged(), online, wall_secs: wall };
+        (r, stats)
+    };
+
+    // Batch 0 — the demand probe: an empty recording store falls through
+    // to inline generation while logging the exact per-batch demand.
+    let mut probe = TripleStore::new(Dealer::new(seed ^ 0x22, party));
+    let t0 = Instant::now();
+    let (r, s) = score_one(&mut scorer, chan, &mut probe, &blocks[0], t0);
+    results.push(r);
+    batch_stats.push(s);
+    let per_batch = probe.demand.clone();
+
+    // The bank serves every remaining batch from prefabricated stock.
+    let mut bank = MaterialBank::new(Dealer::new(seed ^ 0x33, party), per_batch.clone(), bank_cfg);
+    for block in &blocks[1..] {
+        let t0 = Instant::now();
+        let ts = bank.checkout();
+        let (r, s) = score_one(&mut scorer, chan, ts, block, t0);
+        results.push(r);
+        batch_stats.push(s);
+    }
+
+    PartyServe {
+        results,
+        batch_stats,
+        per_batch_mat_triple_bytes: bank.per_batch_mat_triple_bytes(),
+        per_batch_demand: per_batch,
+        warmup_stats,
+        bank_prefabricated: bank.prefabricated,
+        bank_replenished: bank.replenished,
+        bank_consumed: bank.consumed,
+        bank_remaining: bank.stock(),
+        bank_replenish_events: bank.replenish_events,
+        bank_misses: bank.misses(),
+    }
+}
+
+/// Serve a transaction stream with both parties' models: slices the
+/// (raw, joint) stream into `batches × batch_rows` micro-batches, splits
+/// each at the vertical boundary, and scores them FIFO against
+/// per-party material banks. Returns party 0's view plus both meters.
+pub fn serve_stream(
+    models: [TrainedModel; 2],
+    stream: &Dataset,
+    cfg: &ServeConfig,
+) -> Result<ServeOutput> {
+    let [ma, mb] = models;
+    if ma.d != stream.d {
+        return Err(Error::Config(format!(
+            "stream has d={} but the model was trained with d={}",
+            stream.d, ma.d
+        )));
+    }
+    if ma.k != mb.k || ma.d != mb.d || ma.d_a != mb.d_a {
+        return Err(Error::Config("the two model shares disagree on geometry".into()));
+    }
+    if ma.party != 0 || mb.party != 1 {
+        return Err(Error::Config(
+            "serve_stream expects [party 0's share, party 1's share] in order".into(),
+        ));
+    }
+    // τ is public and written identically into both artifacts at
+    // training time, so a mismatch means the shares come from different
+    // training runs — reconstructing such centroids yields silent
+    // garbage, catch it here instead.
+    if ma.tau != mb.tau {
+        return Err(Error::Config(format!(
+            "model shares disagree on τ ({} vs {}) — they come from different \
+             training runs and would reconstruct garbage centroids",
+            ma.tau, mb.tau
+        )));
+    }
+    if cfg.batches == 0 || cfg.batch_rows == 0 {
+        return Err(Error::Config("serving needs batches ≥ 1 and batch_rows ≥ 1".into()));
+    }
+    let need = cfg.batches * cfg.batch_rows;
+    if stream.n < need {
+        return Err(Error::Config(format!(
+            "stream of {} transactions is shorter than {} batches × {} rows",
+            stream.n, cfg.batches, cfg.batch_rows
+        )));
+    }
+    // Pre-slice each batch into the two raw party blocks.
+    let (d, d_a) = (stream.d, ma.d_a);
+    let mut blocks_a: Vec<Vec<f64>> = Vec::with_capacity(cfg.batches);
+    let mut blocks_b: Vec<Vec<f64>> = Vec::with_capacity(cfg.batches);
+    for b in 0..cfg.batches {
+        let mut xa = Vec::with_capacity(cfg.batch_rows * d_a);
+        let mut xb = Vec::with_capacity(cfg.batch_rows * (d - d_a));
+        for i in b * cfg.batch_rows..(b + 1) * cfg.batch_rows {
+            let row = stream.row(i);
+            xa.extend_from_slice(&row[..d_a]);
+            xb.extend_from_slice(&row[d_a..]);
+        }
+        blocks_a.push(xa);
+        blocks_b.push(xb);
+    }
+    let k = ma.k;
+    let batch_rows = cfg.batch_rows;
+    let (bank_cfg, seed) = (cfg.bank, cfg.seed);
+    let ((ra, meter_a), (rb, meter_b)) = run_two_party(
+        move |c| serve_party(c, ma, blocks_a, bank_cfg, seed),
+        move |c| serve_party(c, mb, blocks_b, bank_cfg, seed),
+    );
+    debug_assert_eq!(ra.results, rb.results, "parties must reveal identical scores");
+    debug_assert_eq!(ra.bank_misses + rb.bank_misses, 0, "planned banks must not miss");
+    Ok(ServeOutput {
+        results: ra.results,
+        batch_stats: ra.batch_stats,
+        per_batch_demand: ra.per_batch_demand,
+        warmup_stats: ra.warmup_stats,
+        bank_prefabricated: ra.bank_prefabricated,
+        bank_replenished: ra.bank_replenished,
+        bank_consumed: ra.bank_consumed,
+        bank_remaining: ra.bank_remaining,
+        bank_replenish_events: ra.bank_replenish_events,
+        bank_misses: ra.bank_misses + rb.bank_misses,
+        per_batch_mat_triple_bytes: ra.per_batch_mat_triple_bytes,
+        k,
+        batch_rows,
+        meter_a,
+        meter_b,
+    })
+}

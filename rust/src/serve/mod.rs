@@ -1,0 +1,34 @@
+//! The secure scoring service: train once, score forever.
+//!
+//! The paper's headline deployment is fraud detection — clustering is
+//! trained jointly, then **incoming transactions are scored against the
+//! learned clusters** without ever re-running the update step. This
+//! subsystem is that product surface:
+//!
+//! * [`model`] — the persisted [`model::TrainedModel`] artifact: one
+//!   party's additive centroid share + its own block's normalization
+//!   stats + the public fraud threshold, in a versioned, checksummed
+//!   binary format. Each party saves its share to disk and a later
+//!   process resumes it; neither file alone reveals the centroids.
+//! * [`scorer`] — assignment-only inference per micro-batch: S1
+//!   distance through the existing tile-granular cross-product backend,
+//!   S2 `F_min^k`, a secure distance-threshold fraud flag, and a single
+//!   reveal exchange — exactly [`scorer::score_rounds`]`(k)` flights per
+//!   batch, **no S3**.
+//! * [`driver`] — [`driver::train_model`] packages training output into
+//!   model artifacts; [`driver::serve_stream`] pumps a transaction
+//!   stream through both parties' scorers backed by replenished
+//!   [`crate::offline::bank::MaterialBank`]s, with per-request phase
+//!   metering.
+//!
+//! Reporting (latency/throughput under the LAN/WAN link models) lives in
+//! [`crate::coordinator::serve`]; the `ppkmeans serve` / `ppkmeans
+//! score` subcommands and `cargo bench --bench serving` drive it.
+
+pub mod driver;
+pub mod model;
+pub mod scorer;
+
+pub use driver::{serve_stream, train_model, ServeConfig, ServeOutput};
+pub use model::TrainedModel;
+pub use scorer::{score_rounds, ScoreResult, Scorer};

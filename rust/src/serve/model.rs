@@ -1,0 +1,369 @@
+//! The trained-model artifact: what a party persists after training so a
+//! later process can score forever without retraining.
+//!
+//! A [`TrainedModel`] holds one party's **additive share** of the final
+//! fixed-point centroids, the min-max normalization stats of that
+//! party's own feature block (each party normalizes incoming
+//! transactions with the *training* stats, locally — the stats of the
+//! other party's columns are never stored), the public fraud threshold
+//! τ, and the run geometry (k, d, d_a). Neither file alone reveals the
+//! centroids: reconstruction needs both parties' shares, exactly as
+//! during the protocol.
+//!
+//! ## Binary format (version 1, little-endian)
+//!
+//! ```text
+//! magic     8 B   "PPKMDL01"
+//! version   u32   1
+//! party     u32   0 | 1
+//! k         u32
+//! d         u32   joint feature count
+//! d_a       u32   vertical split point (party 0 owns cols [0, d_a))
+//! frac_bits u32   fixed-point scale of the stored share (must match)
+//! ncols     u32   columns of this party's block (= stats entries)
+//! tau       f64   public fraud threshold (squared distance, normalized)
+//! stats     ncols × (f64 min, f64 max)
+//! mu_share  k·d × u64
+//! checksum  u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! Loading validates magic, version, `frac_bits`, geometry consistency,
+//! exact length and the checksum, so a truncated or bit-flipped artifact
+//! fails loudly instead of silently mis-scoring.
+
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
+use std::path::Path;
+
+/// File magic for model artifacts.
+pub const MODEL_MAGIC: &[u8; 8] = b"PPKMDL01";
+/// Current artifact format version.
+pub const MODEL_VERSION: u32 = 1;
+
+/// One party's persisted share of a trained clustering model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainedModel {
+    /// Which party this share belongs to (0 or 1).
+    pub party: usize,
+    /// Number of clusters.
+    pub k: usize,
+    /// Joint feature count.
+    pub d: usize,
+    /// Vertical split: party 0 owns columns `[0, d_a)`, party 1 the rest.
+    pub d_a: usize,
+    /// This party's additive share of the k×d fixed-point centroids.
+    pub mu_share: Mat,
+    /// Per-column `(min, max)` training normalization stats for this
+    /// party's own block ([`TrainedModel::ncols`] entries).
+    pub stats: Vec<(f64, f64)>,
+    /// Public fraud threshold τ on the squared distance in normalized
+    /// feature space (see [`crate::fraud::threshold`]).
+    pub tau: f64,
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::Config(format!("model artifact: {}", msg.into()))
+}
+
+fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    let end = *off + 4;
+    if end > b.len() {
+        return Err(bad("truncated (u32)"));
+    }
+    let v = u32::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn rd_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+    let end = *off + 8;
+    if end > b.len() {
+        return Err(bad("truncated (u64)"));
+    }
+    let v = u64::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn rd_f64(b: &[u8], off: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(rd_u64(b, off)?))
+}
+
+impl TrainedModel {
+    /// First joint-feature column of this party's block.
+    pub fn col0(&self) -> usize {
+        if self.party == 0 {
+            0
+        } else {
+            self.d_a
+        }
+    }
+
+    /// Width of this party's block.
+    pub fn ncols(&self) -> usize {
+        if self.party == 0 {
+            self.d_a
+        } else {
+            self.d - self.d_a
+        }
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let ncols = self.ncols();
+        debug_assert_eq!(self.stats.len(), ncols, "stats must cover the block");
+        debug_assert_eq!(self.mu_share.shape(), (self.k, self.d));
+        let mut out = Vec::with_capacity(8 + 7 * 4 + 8 + ncols * 16 + self.k * self.d * 8 + 8);
+        out.extend_from_slice(MODEL_MAGIC);
+        push_u32(&mut out, MODEL_VERSION);
+        push_u32(&mut out, self.party as u32);
+        push_u32(&mut out, self.k as u32);
+        push_u32(&mut out, self.d as u32);
+        push_u32(&mut out, self.d_a as u32);
+        push_u32(&mut out, FRAC_BITS);
+        push_u32(&mut out, ncols as u32);
+        push_f64(&mut out, self.tau);
+        for &(lo, hi) in &self.stats {
+            push_f64(&mut out, lo);
+            push_f64(&mut out, hi);
+        }
+        for &w in &self.mu_share.data {
+            push_u64(&mut out, w);
+        }
+        let sum = fnv1a64(&out);
+        push_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse and validate the versioned binary format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainedModel> {
+        if bytes.len() < 8 + 8 {
+            return Err(bad("too short"));
+        }
+        if &bytes[..8] != MODEL_MAGIC {
+            return Err(bad("bad magic (not a ppkmeans model)"));
+        }
+        let body_len = bytes.len() - 8;
+        let want_sum = u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        if fnv1a64(&bytes[..body_len]) != want_sum {
+            return Err(bad("checksum mismatch (corrupted artifact)"));
+        }
+        let mut off = 8;
+        let version = rd_u32(bytes, &mut off)?;
+        if version != MODEL_VERSION {
+            return Err(bad(format!("unsupported version {version} (expected {MODEL_VERSION})")));
+        }
+        let party = rd_u32(bytes, &mut off)? as usize;
+        let k = rd_u32(bytes, &mut off)? as usize;
+        let d = rd_u32(bytes, &mut off)? as usize;
+        let d_a = rd_u32(bytes, &mut off)? as usize;
+        let frac = rd_u32(bytes, &mut off)?;
+        let ncols = rd_u32(bytes, &mut off)? as usize;
+        if party > 1 {
+            return Err(bad(format!("party {party} out of range")));
+        }
+        if frac != FRAC_BITS {
+            return Err(bad(format!("frac_bits {frac} ≠ build's {FRAC_BITS}")));
+        }
+        if k == 0 || d_a == 0 || d_a >= d {
+            return Err(bad(format!("inconsistent geometry k={k} d={d} d_a={d_a}")));
+        }
+        let want_ncols = if party == 0 { d_a } else { d - d_a };
+        if ncols != want_ncols {
+            return Err(bad(format!("ncols {ncols} ≠ block width {want_ncols}")));
+        }
+        // Bound-check the full payload length against the header geometry
+        // with checked arithmetic BEFORE any allocation sized from the
+        // (untrusted) header — a forged k·d must yield Err, not a
+        // capacity-overflow panic or a multi-GB allocation.
+        let expected = (8usize + 7 * 4 + 8 + 8) // magic + header u32s + tau + checksum
+            .checked_add(ncols.checked_mul(16).ok_or_else(|| bad("ncols overflows"))?)
+            .and_then(|v| {
+                k.checked_mul(d)
+                    .and_then(|m| m.checked_mul(8))
+                    .and_then(|m| v.checked_add(m))
+            })
+            .ok_or_else(|| bad("header geometry overflows"))?;
+        if expected != bytes.len() {
+            return Err(bad(format!(
+                "length {} does not match header geometry (expected {expected})",
+                bytes.len()
+            )));
+        }
+        let tau = rd_f64(bytes, &mut off)?;
+        let mut stats = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let lo = rd_f64(bytes, &mut off)?;
+            let hi = rd_f64(bytes, &mut off)?;
+            stats.push((lo, hi));
+        }
+        let mut data = Vec::with_capacity(k * d);
+        for _ in 0..k * d {
+            data.push(rd_u64(bytes, &mut off)?);
+        }
+        if off != body_len {
+            return Err(bad("trailing bytes after payload"));
+        }
+        Ok(TrainedModel { party, k, d, d_a, mu_share: Mat::from_vec(k, d, data), stats, tau })
+    }
+
+    /// Persist this party's share to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load a share persisted by [`TrainedModel::save`].
+    pub fn load(path: &Path) -> Result<TrainedModel> {
+        let bytes = std::fs::read(path)?;
+        TrainedModel::from_bytes(&bytes)
+    }
+
+    /// Conventional artifact file name for a party's share.
+    pub fn file_name(party: usize) -> String {
+        format!("party{party}.ppkmodel")
+    }
+
+    /// Normalize a raw feature block (row-major `rows × ncols`) with the
+    /// **training** stats and encode to fixed point. Constant training
+    /// columns map to 0, matching [`crate::data::normalize::min_max`];
+    /// out-of-range serving values extrapolate linearly (no clamping —
+    /// an unusually large value *should* look far from every centroid).
+    pub fn normalize_block(&self, raw: &[f64]) -> Result<Mat> {
+        let nc = self.ncols();
+        if nc == 0 || raw.len() % nc != 0 {
+            return Err(Error::Shape(format!(
+                "raw block of {} values is not a multiple of the {}-column block",
+                raw.len(),
+                nc
+            )));
+        }
+        let rows = raw.len() / nc;
+        let mut out = vec![0.0; raw.len()];
+        for i in 0..rows {
+            for c in 0..nc {
+                let (lo, hi) = self.stats[c];
+                let v = raw[i * nc + c];
+                out[i * nc + c] = if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+            }
+        }
+        Ok(Mat::encode(rows, nc, &out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prg;
+
+    fn sample_model(party: usize) -> TrainedModel {
+        let (k, d, d_a) = (3, 5, 2);
+        let mut prg = Prg::new(9 + party as u128);
+        let ncols = if party == 0 { d_a } else { d - d_a };
+        TrainedModel {
+            party,
+            k,
+            d,
+            d_a,
+            mu_share: Mat::random(k, d, &mut prg),
+            stats: (0..ncols).map(|c| (c as f64 * 0.1, 1.0 + c as f64)).collect(),
+            tau: 1.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_both_parties() {
+        for party in [0, 1] {
+            let m = sample_model(party);
+            let back = TrainedModel::from_bytes(&m.to_bytes()).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("ppkm_model_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample_model(1);
+        let path = dir.join(TrainedModel::file_name(1));
+        m.save(&path).unwrap();
+        let back = TrainedModel::load(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let m = sample_model(0);
+        let good = m.to_bytes();
+        // Flip one payload byte → checksum mismatch.
+        let mut bad = good.clone();
+        bad[40] ^= 0x01;
+        assert!(TrainedModel::from_bytes(&bad).is_err());
+        // Truncation.
+        assert!(TrainedModel::from_bytes(&good[..good.len() - 3]).is_err());
+        // Wrong magic.
+        let mut wrong = good.clone();
+        wrong[0] = b'X';
+        assert!(TrainedModel::from_bytes(&wrong).is_err());
+        // Wrong version (re-checksummed so only the version check trips).
+        let mut v2 = good;
+        v2[8] = 2;
+        let body = v2.len() - 8;
+        let sum = super::fnv1a64(&v2[..body]).to_le_bytes();
+        v2[body..].copy_from_slice(&sum);
+        let err = TrainedModel::from_bytes(&v2).unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn forged_huge_geometry_is_rejected_without_allocating() {
+        // A self-consistent header with absurd k·d and a *recomputed*
+        // checksum (FNV is not tamper-resistant) must come back Err —
+        // never a capacity panic or a huge allocation.
+        let m = sample_model(0);
+        let mut forged = m.to_bytes();
+        forged[16..20].copy_from_slice(&u32::MAX.to_le_bytes()); // k
+        forged[20..24].copy_from_slice(&u32::MAX.to_le_bytes()); // d
+        let body = forged.len() - 8;
+        let sum = super::fnv1a64(&forged[..body]).to_le_bytes();
+        forged[body..].copy_from_slice(&sum);
+        assert!(TrainedModel::from_bytes(&forged).is_err());
+    }
+
+    #[test]
+    fn normalize_block_uses_training_stats() {
+        let mut m = sample_model(0); // ncols = 2
+        m.stats = vec![(0.0, 2.0), (1.0, 1.0)]; // col 1 constant → 0
+        let enc = m.normalize_block(&[1.0, 5.0, 3.0, 7.0]).unwrap();
+        let dec = enc.decode();
+        assert!((dec[0] - 0.5).abs() < 1e-5);
+        assert_eq!(dec[1], 0.0);
+        assert!((dec[2] - 1.5).abs() < 1e-5, "out-of-range extrapolates");
+        assert_eq!(dec[3], 0.0);
+        // Misaligned block length errors.
+        assert!(m.normalize_block(&[1.0, 2.0, 3.0]).is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Assignment-only inference over a long-lived secret-shared model.
+//!
+//! A [`Scorer`] wraps one party's [`TrainedModel`] and scores streaming
+//! micro-batches of transactions: per batch it runs S1 distance (the
+//! tile path of the existing [`crate::kmeans::backend::BeaverBackend`])
+//! and the S2 `F_min^k` comparison tree — **never** the S3 update — plus
+//! the secure distance-threshold fraud flag of
+//! [`crate::fraud::threshold`], then reveals assignment + flag in a
+//! single exchange. The per-batch flight budget is exact and
+//! data-independent ([`score_rounds`]):
+//!
+//! ```text
+//! 1                      S1  (both cross-product reveals, one flight)
+//! ⌈log₂k⌉·(CMP_ROUNDS+1) S2  (comparison tree)
+//! CMP_ROUNDS             flag (one CMP against τ)
+//! 1                      reveal (assignments + flags, one exchange)
+//! ```
+//!
+//! The centroid-norm row `‖μ_j‖²` depends only on the model, so it is
+//! computed **once** at [`Scorer::warmup`] and cached — every scored
+//! batch then has the *same* offline demand (two tile-shaped matrix
+//! triples plus the S2/flag lane chunks), which is what lets a
+//! [`crate::offline::bank::MaterialBank`] prefabricate material
+//! batch-by-batch.
+
+use super::model::TrainedModel;
+use crate::fraud::threshold::{encode_threshold_2f, flag_above};
+use crate::kmeans::assign::{decode_one_hot_row, min_k_rounds};
+use crate::kmeans::backend::{BeaverBackend, PartyData};
+use crate::kmeans::esd;
+use crate::kmeans::secure::assign_only_tile;
+use crate::net::Chan;
+use crate::ring::matrix::Mat;
+use crate::ss::boolean::CMP_ROUNDS;
+use crate::ss::triples::TripleSource;
+use crate::ss::Session;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prg;
+
+/// Exact online flights per scored micro-batch (any batch size): S1 +
+/// `F_min^k` + the threshold CMP + the single reveal exchange. This is
+/// the **assignment-only budget** — no S3 rounds — asserted by the
+/// serving tests.
+pub fn score_rounds(k: usize) -> u64 {
+    1 + min_k_rounds(k) + CMP_ROUNDS + 1
+}
+
+/// One scored micro-batch, as revealed to both parties.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScoreResult {
+    /// Cluster index per transaction.
+    pub assignments: Vec<usize>,
+    /// Secure distance-threshold fraud flag per transaction.
+    pub fraud_flags: Vec<bool>,
+    /// Reconstructed assignment rows that were not a valid one-hot
+    /// vector (protocol corruption; counted, mapped to the first
+    /// 1-entry or cluster 0 — same policy as training).
+    pub malformed_rows: usize,
+}
+
+impl ScoreResult {
+    /// Number of transactions flagged as fraud candidates.
+    pub fn flagged(&self) -> usize {
+        self.fraud_flags.iter().filter(|&&f| f).count()
+    }
+}
+
+/// One party's streaming scorer over a trained model share.
+pub struct Scorer {
+    /// The persisted model share this scorer serves.
+    pub model: TrainedModel,
+    backend: BeaverBackend,
+    /// Cached shared norm row `[‖μ_1‖², …, ‖μ_k‖²]` (1×k, scale 2f).
+    u_row: Option<Mat>,
+    tau_2f: u64,
+    seed: u128,
+    batches_scored: u64,
+}
+
+impl Scorer {
+    /// Wrap a model share. `seed` feeds the per-batch mask PRG (any
+    /// value; need not match the peer's).
+    pub fn new(model: TrainedModel, seed: u128) -> Scorer {
+        let backend = BeaverBackend::new(model.d_a, model.d);
+        let tau_2f = encode_threshold_2f(model.tau);
+        Scorer { model, backend, u_row: None, tau_2f, seed, batches_scored: 0 }
+    }
+
+    /// Whether [`Scorer::warmup`] has run.
+    pub fn warmed_up(&self) -> bool {
+        self.u_row.is_some()
+    }
+
+    /// Batches scored so far.
+    pub fn batches_scored(&self) -> u64 {
+        self.batches_scored
+    }
+
+    /// One-time shared computation of the centroid-norm row (one flight,
+    /// metered as `serve.warmup`). Must run before the first
+    /// [`Scorer::score_batch`]; keeping it out of the per-batch path is
+    /// what makes every batch's round count and offline demand uniform.
+    pub fn warmup(&mut self, chan: &mut Chan, ts: &mut dyn TripleSource) {
+        let party = chan.party;
+        let mut ctx =
+            Session::new(chan, ts, Prg::new(self.seed ^ ((party as u128) << 64) ^ 0x57A7));
+        ctx.set_phase("serve.warmup");
+        let p = esd::centroid_norms_row_begin(&mut ctx, &self.model.mu_share);
+        ctx.flush();
+        self.u_row = Some(p.resolve(&mut ctx));
+    }
+
+    /// Score one micro-batch. `raw_block` is this party's **raw**
+    /// (unnormalized) feature block, row-major `rows × ncols`; the
+    /// scorer applies the training normalization stats locally. Both
+    /// parties must call with the same batch size. Costs exactly
+    /// [`score_rounds`]`(k)` flights and a fixed per-batch offline
+    /// demand.
+    pub fn score_batch(
+        &mut self,
+        chan: &mut Chan,
+        ts: &mut dyn TripleSource,
+        raw_block: &[f64],
+    ) -> Result<ScoreResult> {
+        let u_row = match &self.u_row {
+            Some(u) => u.clone(),
+            None => {
+                return Err(Error::Config(
+                    "Scorer::warmup must run once before score_batch".into(),
+                ))
+            }
+        };
+        let x_mat = self.model.normalize_block(raw_block)?;
+        let rows = x_mat.rows;
+        if rows == 0 {
+            return Err(Error::Shape("empty micro-batch".into()));
+        }
+        // Local per-row ‖x_mine‖² (scale 2f): the term S1 drops from D'
+        // but the true-distance threshold needs back.
+        let my_norms: Vec<u64> = (0..rows)
+            .map(|i| {
+                x_mat
+                    .row(i)
+                    .iter()
+                    .fold(0u64, |acc, &v| acc.wrapping_add(v.wrapping_mul(v)))
+            })
+            .collect();
+        let x = PartyData::dense_only(x_mat);
+        let party = chan.party;
+        let batch_idx = self.batches_scored;
+        self.batches_scored += 1;
+        let mut ctx = Session::new(
+            chan,
+            ts,
+            Prg::new(
+                self.seed ^ ((party as u128) << 64) ^ ((batch_idx as u128) << 8) ^ 0x5C0E,
+            ),
+        );
+
+        // S1 + S2 via the assignment-only entry point (no S3).
+        let (c_share, minvals) = assign_only_tile(
+            &mut ctx,
+            &mut self.backend,
+            &x,
+            &self.model.mu_share,
+            &u_row,
+            (0, rows),
+            "serve.",
+        );
+
+        // Secure fraud flag: dist² = D'_min + ‖x_A‖² + ‖x_B‖² (each
+        // party adds its own block's plaintext norms to its share), then
+        // one CMP against the public τ — the candidates are decided
+        // under MPC, not recomputed from revealed assignments.
+        ctx.set_phase("serve.flag");
+        let mut dist = minvals;
+        for i in 0..rows {
+            dist.data[i] = dist.data[i].wrapping_add(my_norms[i]);
+        }
+        let flags = flag_above(&mut ctx, &dist, self.tau_2f);
+
+        // Reveal assignments + flags in ONE exchange flight.
+        ctx.set_phase("serve.reveal");
+        let k = self.model.k;
+        let mut payload = Vec::with_capacity(rows * k + flags.words.len());
+        payload.extend_from_slice(&c_share.data);
+        payload.extend_from_slice(&flags.words);
+        let theirs = ctx.chan.exchange_u64s(&payload);
+        if theirs.len() != payload.len() {
+            return Err(Error::ChannelClosed(format!(
+                "score reveal: peer sent {} words, expected {}",
+                theirs.len(),
+                payload.len()
+            )));
+        }
+
+        // Parse: one-hot rows (the training reveal's shared decoder and
+        // malformed-row policy)…
+        let mut malformed_rows = 0usize;
+        let assignments: Vec<usize> = (0..rows)
+            .map(|i| {
+                let row: Vec<u64> = (0..k)
+                    .map(|j| c_share.data[i * k + j].wrapping_add(theirs[i * k + j]))
+                    .collect();
+                let (idx, well_formed) = decode_one_hot_row(&row);
+                if !well_formed {
+                    malformed_rows += 1;
+                    debug_assert!(well_formed, "scored row {i} is not one-hot: {row:?}");
+                }
+                idx
+            })
+            .collect();
+        // …and the XOR-shared flag bits.
+        let fw = &theirs[rows * k..];
+        let fraud_flags: Vec<bool> = (0..rows)
+            .map(|i| ((flags.words[i / 64] ^ fw[i / 64]) >> (i % 64)) & 1 == 1)
+            .collect();
+
+        Ok(ScoreResult { assignments, fraud_flags, malformed_rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::run_two_party;
+    use crate::offline::dealer::Dealer;
+    use crate::ss::share::split;
+    use crate::util::prng::Prg;
+
+    /// Build a matched pair of models around known plaintext centroids
+    /// (identity normalization, shares split randomly).
+    fn model_pair(
+        centroids: &[f64],
+        k: usize,
+        d: usize,
+        d_a: usize,
+        tau: f64,
+    ) -> [TrainedModel; 2] {
+        let mu = Mat::encode(k, d, centroids);
+        let mut prg = Prg::new(0x0DE1);
+        let (m0, m1) = split(&mu, &mut prg);
+        let stats_a: Vec<(f64, f64)> = (0..d_a).map(|_| (0.0, 1.0)).collect();
+        let stats_b: Vec<(f64, f64)> = (0..d - d_a).map(|_| (0.0, 1.0)).collect();
+        [
+            TrainedModel { party: 0, k, d, d_a, mu_share: m0, stats: stats_a, tau },
+            TrainedModel { party: 1, k, d, d_a, mu_share: m1, stats: stats_b, tau },
+        ]
+    }
+
+    #[test]
+    fn scores_match_nearest_centroid_and_budget() {
+        // Two well-separated centroids; four queries with known nearest
+        // neighbours, one of them far from both (a fraud candidate).
+        let centroids = [0.1, 0.1, 0.9, 0.9];
+        let (k, d, d_a) = (2, 2, 1);
+        let tau = 0.3; // squared-distance threshold
+        let [ma, mb] = model_pair(&centroids, k, d, d_a, tau);
+        // dist²(row3, c0) = 0.75² = 0.5625 < dist²(row3, c1) = 0.6425 → c0,
+        // and 0.5625 > τ → flagged.
+        let rows = [[0.12, 0.1], [0.88, 0.92], [0.1, 0.15], [0.85, 0.1]];
+        let xa: Vec<f64> = rows.iter().map(|r| r[0]).collect();
+        let xb: Vec<f64> = rows.iter().map(|r| r[1]).collect();
+        let want_assign = vec![0usize, 1, 0, 0];
+        let want_flags = vec![false, false, false, true];
+        let ((got, m0), (_, m1)) = run_two_party(
+            move |c| {
+                let mut scorer = Scorer::new(ma, 0xA11CE);
+                let mut src = Dealer::new(900, 0);
+                scorer.warmup(c, &mut src);
+                scorer.score_batch(c, &mut src, &xa).unwrap()
+            },
+            move |c| {
+                let mut scorer = Scorer::new(mb, 0xB0B);
+                let mut src = Dealer::new(900, 1);
+                scorer.warmup(c, &mut src);
+                scorer.score_batch(c, &mut src, &xb).unwrap()
+            },
+        );
+        assert_eq!(got.assignments, want_assign);
+        assert_eq!(got.fraud_flags, want_flags);
+        assert_eq!(got.malformed_rows, 0);
+        // Budget: warmup is 1 flight; the batch costs exactly
+        // score_rounds(k) — and no S3 phase ever appears.
+        assert_eq!(m0.get("serve.warmup").rounds, 1);
+        let batch = m0.total_prefix("serve.").since(&m0.get("serve.warmup"));
+        assert_eq!(batch.rounds, score_rounds(k));
+        assert_eq!(m0.get("serve.s3").rounds, 0);
+        assert_eq!(m0.get("online.s3").rounds, 0);
+        assert_eq!(m1.get("serve.s3").rounds, 0);
+    }
+
+    #[test]
+    fn score_before_warmup_is_rejected() {
+        let [ma, mb] = model_pair(&[0.2, 0.2, 0.8, 0.8], 2, 2, 1, 1.0);
+        let ((err, _), _) = run_two_party(
+            move |c| {
+                let mut scorer = Scorer::new(ma, 1);
+                let mut src = Dealer::new(901, 0);
+                scorer.score_batch(c, &mut src, &[0.5]).is_err()
+            },
+            move |c| {
+                // Peer does nothing; the error side never communicates.
+                let _ = (c, mb);
+            },
+        );
+        assert!(err);
+    }
+}

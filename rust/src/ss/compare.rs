@@ -33,6 +33,16 @@ pub fn lt_public(ctx: &mut Session, x: &Mat, c: &Mat) -> BoolShare {
     msb(ctx, &diff)
 }
 
+/// XOR-shared `[x > c]` against a public constant vector (strict: lanes
+/// equal to `c` come out 0). The serving-side fraud flag — see
+/// [`crate::fraud::threshold`].
+pub fn gt_public(ctx: &mut Session, x: &Mat, c: &Mat) -> BoolShare {
+    // x > c  ⇔  c − x < 0  ⇔  MSB(c − x); party 0 holds c − ⟨x⟩₀,
+    // party 1 holds −⟨x⟩₁.
+    let diff = if ctx.party() == 0 { c.sub(x) } else { x.neg() };
+    msb(ctx, &diff)
+}
+
 /// Batched CMP: one `[x < y]` share per pair, all pairs riding a single
 /// comparison circuit (lane concatenation — identical flight count to
 /// one CMP).
@@ -110,6 +120,32 @@ mod tests {
         let ys = vec![1u64, 0, (1u64 << 62) + 1, 100];
         let want = vec![true, false, true, false];
         assert_eq!(run_lt(xs, ys), want);
+    }
+
+    #[test]
+    fn gt_public_is_strict_above() {
+        // [x > c] for a shared x against a public threshold: strictly
+        // greater flags, equal and below do not.
+        let xs = vec![encode_f64(1.5), encode_f64(2.0), encode_f64(2.5), encode_f64(-3.0)];
+        let c = Mat::from_vec(1, 4, vec![encode_f64(2.0); 4]);
+        let mut prg = Prg::new(23);
+        let (x0, x1) = split(&Mat::from_vec(1, 4, xs), &mut prg);
+        let (c0, c1) = (c.clone(), c);
+        let ((got, _), _) = run_two_party(
+            move |ch| {
+                let mut ts = Dealer::new(52, 0);
+                let mut ctx = Ctx::new(ch, &mut ts, Prg::new(1));
+                let b = gt_public(&mut ctx, &x0, &c0);
+                reveal(ch, &b)
+            },
+            move |ch| {
+                let mut ts = Dealer::new(52, 1);
+                let mut ctx = Ctx::new(ch, &mut ts, Prg::new(2));
+                let b = gt_public(&mut ctx, &x1, &c1);
+                reveal(ch, &b)
+            },
+        );
+        assert_eq!(got, vec![false, false, true, false]);
     }
 
     #[test]

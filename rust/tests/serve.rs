@@ -1,0 +1,212 @@
+//! End-to-end scoring-service test (the PR's acceptance scenario):
+//! train on generated fraud data, persist both parties' model shares,
+//! resume them in fresh scorers, and score a stream of micro-batches
+//! against a prefabricated, replenished material bank — asserting
+//! plaintext-oracle agreement, the exact assignment-only flight budget,
+//! and a balanced bank ledger.
+
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::ring::fixed::encode_f64;
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::serve::model::TrainedModel;
+use ppkmeans::serve::scorer::score_rounds;
+
+/// Exact plaintext oracle of the protocol's assignment math: D'_j =
+/// ‖μ_j‖² − 2·x·μ_j evaluated in ring arithmetic on the encoded
+/// (normalized) row — integer-exact, so no fixed-point tolerance games.
+fn oracle_assign(x_enc: &[u64], mu_enc: &Mat) -> usize {
+    let (k, d) = (mu_enc.rows, mu_enc.cols);
+    let mut best = 0usize;
+    let mut best_v = i64::MAX;
+    for j in 0..k {
+        let mut u = 0u64;
+        let mut dot = 0u64;
+        for l in 0..d {
+            let m = mu_enc.at(j, l);
+            u = u.wrapping_add(m.wrapping_mul(m));
+            dot = dot.wrapping_add(x_enc[l].wrapping_mul(m));
+        }
+        let dp = u.wrapping_sub(dot.wrapping_mul(2)) as i64;
+        if dp < best_v {
+            best_v = dp;
+            best = j;
+        }
+    }
+    best
+}
+
+/// The oracle's true squared distance (scale 2f) for the flag check.
+fn oracle_dist_2f(x_enc: &[u64], mu_enc: &Mat, j: usize) -> i64 {
+    let d = mu_enc.cols;
+    let mut acc = 0u64;
+    for l in 0..d {
+        let diff = x_enc[l].wrapping_sub(mu_enc.at(j, l));
+        acc = acc.wrapping_add(diff.wrapping_mul(diff));
+    }
+    acc as i64
+}
+
+#[test]
+fn train_save_load_score_forever() {
+    let (k, iters) = (3, 3);
+    let batch_rows = 20;
+    let batches = 11; // 1 probe + 10 bank-served
+
+    // ---- Train on generated fraud data (vertical 18 + 24 split). ----
+    let train = fraud_gen::generate(300, 0.05, 41);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        seed: 17,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (out, models) = train_model(&train.data, &cfg, 0.05).unwrap();
+    assert_eq!(out.centroid_shares[0].add(&out.centroid_shares[1]).decode(), out.centroids);
+
+    // ---- Save both parties' shares; resume them in a fresh process'
+    // worth of state (load from disk, build new scorers). ----
+    let dir = std::env::temp_dir().join(format!("ppkm_serve_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let [ma, mb] = models;
+    ma.save(&dir.join(TrainedModel::file_name(0))).unwrap();
+    mb.save(&dir.join(TrainedModel::file_name(1))).unwrap();
+    let la = TrainedModel::load(&dir.join(TrainedModel::file_name(0))).unwrap();
+    let lb = TrainedModel::load(&dir.join(TrainedModel::file_name(1))).unwrap();
+    assert_eq!(la, ma);
+    assert_eq!(lb, mb);
+    std::fs::remove_dir_all(&dir).ok();
+    let tau_2f = ppkmeans::fraud::encode_threshold_2f(la.tau);
+
+    // ---- Score 11 micro-batches; the bank holds 5, forcing at least
+    // one replenishment over the 10 bank-served batches. ----
+    let stream = fraud_gen::generate(batches * batch_rows, 0.05, 4242);
+    let scfg = ServeConfig {
+        batch_rows,
+        batches,
+        bank: BankConfig { prefab_batches: 5, low_water: 2, refill_batches: 4 },
+        seed: 0xBA4C,
+    };
+    let served = serve_stream([la.clone(), lb.clone()], &stream.data, &scfg).unwrap();
+    assert_eq!(served.results.len(), batches);
+    assert_eq!(served.batch_stats.len(), batches);
+
+    // (a) Assignments (and flags) match the plaintext oracle on every
+    // transaction. The oracle normalizes with the models' training
+    // stats — exactly what each scorer does locally per block.
+    let joint_stats: Vec<(f64, f64)> =
+        la.stats.iter().chain(lb.stats.iter()).cloned().collect();
+    assert_eq!(joint_stats.len(), stream.data.d);
+    let mu_enc = Mat::encode(k, stream.data.d, &out.centroids);
+    let mut checked = 0;
+    for (b, result) in served.results.iter().enumerate() {
+        assert_eq!(result.malformed_rows, 0, "batch {b}");
+        for r in 0..batch_rows {
+            let row = stream.data.row(b * batch_rows + r);
+            let x_enc: Vec<u64> = row
+                .iter()
+                .zip(&joint_stats)
+                .map(|(&v, &(lo, hi))| {
+                    encode_f64(if hi > lo { (v - lo) / (hi - lo) } else { 0.0 })
+                })
+                .collect();
+            let want = oracle_assign(&x_enc, &mu_enc);
+            assert_eq!(result.assignments[r], want, "batch {b} row {r}");
+            let want_flag = oracle_dist_2f(&x_enc, &mu_enc, want) > tau_2f as i64;
+            assert_eq!(result.fraud_flags[r], want_flag, "flag: batch {b} row {r}");
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, batches * batch_rows);
+
+    // (b) Every batch costs exactly the assignment-only budget — and no
+    // S3 phase ever ran during serving.
+    let budget = score_rounds(k);
+    for (b, s) in served.batch_stats.iter().enumerate() {
+        assert_eq!(s.online.rounds, budget, "batch {b} flight budget");
+        assert!(s.online.bytes_sent > 0, "batch {b}");
+    }
+    assert_eq!(served.warmup_stats.rounds, 1, "warmup is one flight");
+    for phase in ["serve.s3", "online.s1", "online.s2", "online.s3"] {
+        assert_eq!(served.meter_a.get(phase).rounds, 0, "{phase} must not run");
+        assert_eq!(served.meter_b.get(phase).rounds, 0, "{phase} must not run");
+    }
+    // The serve.* phases account for every serving flight.
+    let phase_sum: u64 = ["serve.warmup", "serve.s1", "serve.s2", "serve.flag", "serve.reveal"]
+        .iter()
+        .map(|p| served.meter_a.get(p).rounds)
+        .sum();
+    assert_eq!(phase_sum, 1 + budget * batches as u64);
+
+    // (c) Bank stock accounting balances exactly.
+    assert_eq!(served.bank_prefabricated, 5);
+    assert_eq!(served.bank_consumed, batches - 1, "probe is served inline");
+    assert!(served.bank_replenish_events >= 1, "5 < 10 batches must replenish");
+    assert_eq!(
+        served.bank_prefabricated + served.bank_replenished - served.bank_consumed,
+        served.bank_remaining,
+        "prefabricated + replenished − consumed == remaining"
+    );
+    assert_eq!(served.bank_misses, 0, "every draw must hit prefabricated stock");
+
+    // The planned per-batch demand is tile-uniform: no training-sized
+    // matrix shape — everything is bounded by the batch and the geometry.
+    let max_dim = served
+        .per_batch_demand
+        .mats
+        .iter()
+        .map(|&((m, kk, n), _)| m.max(kk).max(n))
+        .max()
+        .unwrap();
+    assert!(
+        max_dim <= batch_rows.max(stream.data.d),
+        "per-batch shapes must be batch-bounded, got {max_dim}"
+    );
+}
+
+#[test]
+fn serve_stream_validates_inputs() {
+    let train = fraud_gen::generate(120, 0.05, 7);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (_, [ma, mb]) = train_model(&train.data, &cfg, 0.05).unwrap();
+
+    // Stream shorter than batches × rows.
+    let short = fraud_gen::generate(30, 0.05, 8);
+    let scfg = ServeConfig { batch_rows: 16, batches: 4, ..Default::default() };
+    assert!(serve_stream([ma.clone(), mb.clone()], &short.data, &scfg).is_err());
+
+    // Mismatched feature count.
+    let wrong_d = ppkmeans::data::blobs::BlobSpec::new(64, 4, 2).generate(9);
+    let scfg = ServeConfig { batch_rows: 8, batches: 2, ..Default::default() };
+    assert!(serve_stream([ma.clone(), mb.clone()], &wrong_d, &scfg).is_err());
+
+    // Two copies of the same party's share.
+    let scfg = ServeConfig { batch_rows: 8, batches: 2, ..Default::default() };
+    let stream = fraud_gen::generate(16, 0.05, 10);
+    assert!(serve_stream([ma.clone(), ma.clone()], &stream.data, &scfg).is_err());
+
+    // Shares from two different training runs (same geometry, different
+    // public τ) must be rejected instead of reconstructing garbage.
+    let other = fraud_gen::generate(120, 0.05, 99);
+    let (_, [_, mb2]) = train_model(&other.data, &cfg, 0.05).unwrap();
+    assert_ne!(mb2.tau, ma.tau, "distinct runs should land distinct quantiles");
+    let scfg = ServeConfig { batch_rows: 8, batches: 2, ..Default::default() };
+    assert!(serve_stream([ma.clone(), mb2], &stream.data, &scfg).is_err());
+
+    // Horizontal training cannot produce a serving model.
+    let hcfg = SecureKmeansConfig {
+        k: 2,
+        iters: 1,
+        partition: Partition::Horizontal { n_a: 60 },
+        ..Default::default()
+    };
+    assert!(train_model(&train.data, &hcfg, 0.05).is_err());
+}
