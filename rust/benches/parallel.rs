@@ -1,0 +1,189 @@
+//! Multi-core runtime study: offline-prefill and online wall-clock
+//! scaling across 1/2/4/8 worker threads, with the determinism
+//! cross-check (identical flight/byte meters at every thread count).
+//!
+//! Claims under test (regression-tested in `rust/tests/parallel.rs`):
+//!
+//! * offline prefabrication is embarrassingly parallel — the dealer
+//!   forks per-item child PRGs sequentially and expands them on the
+//!   pool, so 4 workers should approach 4× on triple-heavy demands
+//!   (the acceptance bar is ≥ 2×);
+//! * the online phase's plaintext-side products scale with cores while
+//!   the flight schedule stays byte-identical — same rounds, same
+//!   bytes, lower wall-clock.
+//!
+//! Emits `BENCH_parallel.json` in the working directory.
+
+use ppkmeans::bench::{fmt_secs, Table};
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::secure;
+use ppkmeans::offline::dealer::Dealer;
+use ppkmeans::offline::store::{Demand, TripleStore};
+use ppkmeans::runtime::pool::Parallelism;
+use std::time::Instant;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct OfflineRow {
+    threads: usize,
+    secs: f64,
+    speedup: f64,
+}
+
+struct OnlineRow {
+    threads: usize,
+    wall: f64,
+    speedup: f64,
+    online_rounds: u64,
+    online_bytes: u64,
+}
+
+/// A training-shaped demand: tile-shaped matrix triples (the heavy
+/// part — party 1 computes a real U·V per triple) plus the S2/S3 lane
+/// chunks.
+fn prefill_demand(tiles: usize, b: usize, d: usize, k: usize, iters: usize) -> Demand {
+    let mut per_iter = Demand::default();
+    for _ in 0..tiles {
+        per_iter.mat(b, d, k);
+        per_iter.mat(k, b, d);
+        // Per-tile lane chunks (how the tiled online phase actually
+        // records them) — the fan-out shards across chunks, so the
+        // chunk granularity is the parallelism granularity.
+        per_iter.vec_lanes(b * k);
+        per_iter.bit_lanes(b * k * 64);
+        per_iter.dabit_lanes(b * k);
+    }
+    per_iter.repeat(iters)
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, d, k, iters, b) =
+        if full { (20_000, 32, 4, 3, 512) } else { (4_000, 16, 4, 2, 256) };
+
+    // ---- Offline: parallel prefill of a fixed demand. -------------
+    let demand = prefill_demand(n / b, b, d, k, iters);
+    let mut offline_rows = Vec::new();
+    let mut base_secs = 0.0;
+    for &threads in &THREAD_COUNTS {
+        // Party 1 is the compute-heavy dealer side (it multiplies U·V).
+        let mut store = TripleStore::new(Dealer::new(0xBE7C4, 1));
+        let t0 = Instant::now();
+        store.prefill_par(&demand, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            base_secs = secs;
+        }
+        offline_rows.push(OfflineRow { threads, secs, speedup: base_secs / secs });
+    }
+
+    // ---- Online: full secure run at each thread count. ------------
+    let mut spec = BlobSpec::new(n, d, k);
+    spec.spread = 0.02;
+    let data = spec.generate(7);
+    let base = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: d / 2 },
+        tile_rows: Some(b),
+        tile_flights: TileFlights::Lockstep,
+        ..Default::default()
+    };
+    let mut online_rows: Vec<OnlineRow> = Vec::new();
+    for &threads in &THREAD_COUNTS {
+        let cfg = SecureKmeansConfig {
+            parallelism: Parallelism::new(threads),
+            ..base.clone()
+        };
+        let out = secure::run(&data, &cfg).expect("run");
+        let online = out.meter_a.total_prefix("online.");
+        let wall = out.wall_secs;
+        let speedup = online_rows.first().map(|r| r.wall / wall).unwrap_or(1.0);
+        online_rows.push(OnlineRow {
+            threads,
+            wall,
+            speedup,
+            online_rounds: online.rounds,
+            online_bytes: online.bytes_sent,
+        });
+    }
+
+    // Determinism witness: the transcript must not move with threads.
+    for r in &online_rows[1..] {
+        assert_eq!(
+            r.online_rounds, online_rows[0].online_rounds,
+            "flight count must be thread-count independent"
+        );
+        assert_eq!(
+            r.online_bytes, online_rows[0].online_bytes,
+            "byte count must be thread-count independent"
+        );
+    }
+
+    let mut tbl = Table::new(
+        &format!("Offline prefill scaling — demand of {} mat triples (B={b}, d={d}, k={k})",
+            demand.mats.iter().map(|&(_, c)| c).sum::<usize>()),
+        &["threads", "prefill wall", "speedup"],
+    );
+    for r in &offline_rows {
+        tbl.row(vec![
+            format!("{}", r.threads),
+            fmt_secs(r.secs),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    tbl.print();
+
+    let mut tbl = Table::new(
+        &format!("Online scaling — n={n}, d={d}, k={k}, t={iters} (vertical, lockstep B={b})"),
+        &["threads", "wall", "speedup", "online rounds", "online bytes"],
+    );
+    for r in &online_rows {
+        tbl.row(vec![
+            format!("{}", r.threads),
+            fmt_secs(r.wall),
+            format!("{:.2}x", r.speedup),
+            format!("{}", r.online_rounds),
+            format!("{}", r.online_bytes),
+        ]);
+    }
+    tbl.print();
+
+    let four = offline_rows.iter().find(|r| r.threads == 4).expect("4-thread row");
+    println!(
+        "\noffline prefill at 4 threads: {:.2}x vs 1 thread (acceptance bar: >= 2x)",
+        four.speedup
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"parallel\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \"iters\": {iters}, \"tile_rows\": {b}}},\n"
+    ));
+    json.push_str("  \"offline_prefill\": [\n");
+    for (i, r) in offline_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"secs\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.threads,
+            r.secs,
+            r.speedup,
+            if i + 1 < offline_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n  \"online\": [\n");
+    for (i, r) in online_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"wall_secs\": {:.6}, \"speedup\": {:.3}, \
+             \"online_rounds\": {}, \"online_bytes\": {}}}{}\n",
+            r.threads,
+            r.wall,
+            r.speedup,
+            r.online_rounds,
+            r.online_bytes,
+            if i + 1 < online_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_parallel.json", &json).expect("write BENCH_parallel.json");
+    println!("wrote BENCH_parallel.json");
+}

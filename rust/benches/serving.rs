@@ -42,7 +42,8 @@ fn main() {
     println!("  trained in {train_secs:.2}s; serving {batches} batches × {batch} tx\n");
 
     let stream = fraud_gen::generate(batches * batch, 0.05, 4242);
-    let scfg = ServeConfig { batch_rows: batch, batches, bank, seed: 0xBE4C4 };
+    let scfg =
+        ServeConfig { batch_rows: batch, batches, bank, seed: 0xBE4C4, ..Default::default() };
     let out = serve_stream(models, &stream.data, &scfg).expect("serve");
     let lan = ServeReport::from_serve(&out, &CostModel::lan());
     let wan = ServeReport::from_serve(&out, &CostModel::wan());

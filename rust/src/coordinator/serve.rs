@@ -135,6 +135,7 @@ mod tests {
             batches: 4,
             bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 },
             seed: 0xF00D,
+            ..Default::default()
         };
         let out = serve_stream(models, &stream, &scfg).unwrap();
         let lan = ServeReport::from_serve(&out, &CostModel::lan());

@@ -26,12 +26,29 @@ pub fn random_mask(bits: usize, prg: &mut Prg) -> BigUint {
 /// A-side: mask ciphertexts and send; returns A's ring shares (−r).
 ///
 /// `cts[i]` encrypts an integer < 2^value_bits under B's key.
+/// Single-threaded wrapper over [`he2ss_sender_par`].
 pub fn he2ss_sender<S: HeScheme>(
     chan: &mut Chan,
     pk: &S::Pk,
     cts: &[BigUint],
     value_bits: usize,
     prg: &mut Prg,
+) -> Vec<u64> {
+    he2ss_sender_par::<S>(chan, pk, cts, value_bits, prg, 1)
+}
+
+/// [`he2ss_sender`] with the per-ciphertext work (mask sampling, the
+/// rerandomizing encryption, the homomorphic add) fanned out across up
+/// to `threads` workers. Mask randomness forks one child PRG per
+/// ciphertext sequentially, so the masked payload on the wire and the
+/// returned shares are bit-identical for any thread count.
+pub fn he2ss_sender_par<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    cts: &[BigUint],
+    value_bits: usize,
+    prg: &mut Prg,
+    threads: usize,
 ) -> Vec<u64> {
     let mask_bits = value_bits + KAPPA;
     assert!(
@@ -40,38 +57,56 @@ pub fn he2ss_sender<S: HeScheme>(
         value_bits,
         KAPPA
     );
+    let children: Vec<Prg> = cts.iter().map(|_| prg.fork(0x4D53_4B31)).collect();
+    let w = S::ct_bytes(pk);
+    let results: Vec<(Vec<u8>, u64)> =
+        crate::runtime::pool::parallel_gen(threads, cts.len(), |i| {
+            let mut p = children[i].clone();
+            let r = random_mask(mask_bits, &mut p);
+            let cr = S::encrypt(pk, &r, &mut p);
+            let masked = S::add(pk, &cts[i], &cr);
+            // A's share: −r mod 2^64.
+            let r64 = r.mod_pow2(64).to_u64().unwrap_or(0);
+            (ct_to_bytes::<S>(pk, &masked), r64.wrapping_neg())
+        });
+    let mut payload = Vec::with_capacity(cts.len() * w);
     let mut shares = Vec::with_capacity(cts.len());
-    let mut payload = Vec::new();
-    for ct in cts {
-        let r = random_mask(mask_bits, prg);
-        let cr = S::encrypt(pk, &r, prg);
-        let masked = S::add(pk, ct, &cr);
-        payload.extend_from_slice(&ct_to_bytes::<S>(pk, &masked));
-        // A's share: −r mod 2^64.
-        let r64 = r.mod_pow2(64).to_u64().unwrap_or(0);
-        shares.push(r64.wrapping_neg());
+    for (bytes, share) in results {
+        payload.extend_from_slice(&bytes);
+        shares.push(share);
     }
     chan.send_bytes(&payload);
     shares
 }
 
 /// B-side: receive masked ciphertexts, decrypt, reduce mod 2^64.
+/// Single-threaded wrapper over [`he2ss_receiver_par`].
 pub fn he2ss_receiver<S: HeScheme>(
     chan: &mut Chan,
     pk: &S::Pk,
     sk: &S::Sk,
     count: usize,
 ) -> Vec<u64> {
+    he2ss_receiver_par::<S>(chan, pk, sk, count, 1)
+}
+
+/// [`he2ss_receiver`] with the decryptions (one modular exponentiation
+/// each) fanned out across up to `threads` workers, in frame order.
+pub fn he2ss_receiver_par<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    sk: &S::Sk,
+    count: usize,
+    threads: usize,
+) -> Vec<u64> {
     let w = S::ct_bytes(pk);
     let payload = chan.recv_bytes();
     assert_eq!(payload.len(), count * w, "he2ss frame size");
-    payload
-        .chunks_exact(w)
-        .map(|chunk| {
-            let m = S::decrypt(pk, sk, &ct_from_bytes(chunk));
-            m.mod_pow2(64).to_u64().unwrap_or(0)
-        })
-        .collect()
+    let chunks: Vec<&[u8]> = payload.chunks_exact(w).collect();
+    crate::runtime::pool::parallel_map(threads, &chunks, |_, chunk| {
+        let m = S::decrypt(pk, sk, &ct_from_bytes(chunk));
+        m.mod_pow2(64).to_u64().unwrap_or(0)
+    })
 }
 
 #[cfg(test)]

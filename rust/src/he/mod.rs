@@ -22,8 +22,9 @@ use crate::util::prng::Prg;
 pub trait HeScheme {
     /// Public key.
     type Pk: Clone + Send + Sync;
-    /// Secret key.
-    type Sk: Send;
+    /// Secret key (`Sync` so batch decryption can fan out across
+    /// workers — see [`he2ss::he2ss_receiver_par`]).
+    type Sk: Send + Sync;
 
     /// Generate a key pair with modulus of `bits` bits.
     fn keygen(bits: usize, prg: &mut Prg) -> (Self::Pk, Self::Sk);
@@ -65,6 +66,26 @@ pub fn ct_from_bytes(bytes: &[u8]) -> BigUint {
 /// Encrypt a u64 ring element (as a non-negative integer).
 pub fn encrypt_u64<S: HeScheme>(pk: &S::Pk, x: u64, prg: &mut Prg) -> BigUint {
     S::encrypt(pk, &BigUint::from_u64(x), prg)
+}
+
+/// Encrypt a vector of ring elements on up to `threads` workers.
+///
+/// Each element's encryption randomness comes from a child PRG forked
+/// off `prg` **sequentially** (thread-count independent), then the
+/// modular exponentiations — the dominant cost of the HE sparse path —
+/// fan out via [`crate::runtime::pool`]. The ciphertext vector is
+/// bit-identical for any `threads` value.
+pub fn encrypt_u64s_many<S: HeScheme>(
+    pk: &S::Pk,
+    values: &[u64],
+    prg: &mut Prg,
+    threads: usize,
+) -> Vec<BigUint> {
+    let children: Vec<Prg> = values.iter().map(|_| prg.fork(0x454E_4331)).collect();
+    crate::runtime::pool::parallel_gen(threads, values.len(), |i| {
+        let mut p = children[i].clone();
+        S::encrypt(pk, &BigUint::from_u64(values[i]), &mut p)
+    })
 }
 
 #[cfg(test)]

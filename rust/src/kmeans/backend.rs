@@ -85,12 +85,17 @@ impl PartyData {
 
     /// Local `X_mine[r0..r1] · rhs` for one row tile, through the sparse
     /// view when present. The full range borrows the existing buffers —
-    /// the monolithic schedule pays no per-iteration copy.
+    /// the monolithic schedule pays no per-iteration copy. Large
+    /// products (dense and CSR) fan out across
+    /// [`crate::runtime::pool::global_threads`] row-block workers,
+    /// bit-identically.
     pub fn local_matmul_rows(&self, rows: (usize, usize), rhs: &Mat) -> Mat {
         let full = rows == (0, self.dense.rows);
         match &self.csr {
-            Some(c) if full => c.matmul_dense(rhs),
-            Some(c) => c.rows_slice(rows.0, rows.1).matmul_dense(rhs),
+            Some(c) if full => crate::runtime::pool::csr_matmul_auto(c, rhs),
+            Some(c) => {
+                crate::runtime::pool::csr_matmul_auto(&c.rows_slice(rows.0, rows.1), rhs)
+            }
             None if full => crate::runtime::dispatch::matmul(&self.dense, rhs),
             None => crate::runtime::dispatch::matmul(&self.dense.rows_slice(rows.0, rows.1), rhs),
         }
@@ -446,18 +451,31 @@ pub struct HeBackend {
     prg: Prg,
     d_a: usize,
     d: usize,
+    /// Worker threads for the ciphertext fan-out (encryption vectors,
+    /// homomorphic row evaluation, HE2SS masking/decryption). Wire
+    /// frames are byte-identical for any value.
+    threads: usize,
 }
 
 impl HeBackend {
     /// Generate this party's key pair and exchange public keys.
-    pub fn setup(chan: &mut Chan, he_bits: usize, seed: u128, d_a: usize, d: usize) -> HeBackend {
+    /// `threads` caps the per-tile ciphertext fan-out (see
+    /// [`crate::sparse::protocol2::sparse_party_par`]).
+    pub fn setup(
+        chan: &mut Chan,
+        he_bits: usize,
+        seed: u128,
+        d_a: usize,
+        d: usize,
+        threads: usize,
+    ) -> HeBackend {
         let party = chan.party;
         let mut prg = Prg::new(seed ^ ((party as u128) << 96) ^ 0xE1);
         chan.set_phase("offline.hekeys");
         let (my_pk, my_sk) = Ou::keygen(he_bits, &mut prg);
         chan.send_bytes(&pk_to_bytes(&my_pk));
         let their_pk = pk_from_bytes(&chan.recv_bytes());
-        HeBackend { my_pk, my_sk, their_pk, prg, d_a, d }
+        HeBackend { my_pk, my_sk, their_pk, prg, d_a, d, threads: threads.max(1) }
     }
 
     /// One directed sparse product: this party is the sparse holder when
@@ -473,9 +491,24 @@ impl HeBackend {
         my_turn_sparse: bool,
     ) -> Mat {
         if my_turn_sparse {
-            protocol2::sparse_party::<Ou>(chan, &self.their_pk, x_csr, y_shape, &mut self.prg)
+            protocol2::sparse_party_par::<Ou>(
+                chan,
+                &self.their_pk,
+                x_csr,
+                y_shape,
+                &mut self.prg,
+                self.threads,
+            )
         } else {
-            protocol2::dense_party::<Ou>(chan, &self.my_pk, &self.my_sk, dense, x_rows, &mut self.prg)
+            protocol2::dense_party_par::<Ou>(
+                chan,
+                &self.my_pk,
+                &self.my_sk,
+                dense,
+                x_rows,
+                &mut self.prg,
+                self.threads,
+            )
         }
     }
 }
@@ -587,10 +620,11 @@ pub fn select(
         Partition::Vertical { d_a } => d_a,
         Partition::Horizontal { n_a } => return Box::new(HorizontalBackend::new(n_a)),
     };
+    let threads = cfg.parallelism.threads;
     match cfg.effective_esd() {
         EsdMode::Vectorized => Box::new(BeaverBackend::new(d_a, d)),
         EsdMode::Naive => Box::new(NaiveBackend::new(d_a, d)),
-        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d)),
+        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d, threads)),
         EsdMode::Auto => {
             chan.set_phase("setup.density");
             let mine = [x.nnz(), x.dense.len() as u64];
@@ -598,7 +632,7 @@ pub fn select(
             let total = (mine[1] + theirs[1]).max(1);
             let density = (mine[0] + theirs[0]) as f64 / total as f64;
             if density < AUTO_DENSITY_THRESHOLD {
-                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d))
+                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d, threads))
             } else {
                 Box::new(BeaverBackend::new(d_a, d))
             }

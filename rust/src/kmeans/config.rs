@@ -1,5 +1,6 @@
 //! Configuration for secure K-means runs.
 
+use crate::runtime::pool::Parallelism;
 use crate::ss::RoundPolicy;
 
 /// How the joint data is split between the two parties (paper §4.1).
@@ -98,6 +99,14 @@ pub struct SecureKmeansConfig {
     pub tile_rows: Option<usize>,
     /// Flight policy for the tile schedule (ignored without `tile_rows`).
     pub tile_flights: TileFlights,
+    /// Worker threads for party-local compute (CLI: `--threads N`):
+    /// offline triple fabrication, HE encryption vectors, and the
+    /// plaintext-side matrix products of the online phase fan out across
+    /// this many cores via [`crate::runtime::pool`]. **Never** changes an
+    /// output bit or a meter reading — `threads = 1` and `threads = N`
+    /// are transcript-identical (regression-tested); the [`crate::net::Chan`]
+    /// flight schedule always stays sequential.
+    pub parallelism: Parallelism,
 }
 
 impl SecureKmeansConfig {
@@ -126,6 +135,7 @@ impl Default for SecureKmeansConfig {
             round_policy: RoundPolicy::Coalesced,
             tile_rows: None,
             tile_flights: TileFlights::Lockstep,
+            parallelism: Parallelism::sequential(),
         }
     }
 }
@@ -144,6 +154,7 @@ mod tests {
         assert_eq!(c.effective_esd(), EsdMode::Vectorized);
         assert!(c.tile_rows.is_none());
         assert_eq!(c.tile_flights, TileFlights::Lockstep);
+        assert_eq!(c.parallelism, Parallelism::sequential());
     }
 
     #[test]

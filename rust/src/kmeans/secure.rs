@@ -189,6 +189,10 @@ fn party_main(
 ) -> PartyResult {
     let party = chan.party;
     let t_start = Instant::now();
+    // Install this run's worker count for the deep call sites (Beaver
+    // recombination, dealer matmuls, tile-local products). A pure
+    // throughput knob: outputs and meters are thread-count independent.
+    crate::runtime::pool::set_global_threads(cfg.parallelism.threads);
     let timed = TimedSource::new(Dealer::new(cfg.seed, party));
     let mut store = TripleStore::new(timed);
     let mut steps = StepWall::default();

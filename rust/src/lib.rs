@@ -70,24 +70,44 @@
 //! println!("online: {} bytes in {} flights", online.bytes_sent, online.rounds);
 //! ```
 #![allow(clippy::needless_range_loop)] // index-style loops mirror the math
+// Every public item must carry rustdoc; CI runs `cargo doc` with
+// `RUSTDOCFLAGS="-D warnings"` so a missing or broken doc fails the
+// build. Modules still carrying `#[allow(missing_docs)]` below are the
+// documented-incrementally backlog — ss/, offline/, serve/ and
+// runtime:: are fully covered and must stay that way.
+#![warn(missing_docs)]
 
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod ring;
+#[allow(missing_docs)]
 pub mod net;
 pub mod ss;
+#[allow(missing_docs)]
 pub mod bigint;
+#[allow(missing_docs)]
 pub mod he;
 pub mod offline;
+#[allow(missing_docs)]
 pub mod sparse;
+#[allow(missing_docs)]
 pub mod gc;
+#[allow(missing_docs)]
 pub mod mkmeans;
+#[allow(missing_docs)]
 pub mod kmeans;
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod coordinator;
 pub mod serve;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod fraud;
+#[allow(missing_docs)]
 pub mod bench;
+#[allow(missing_docs)]
 pub mod cli;
 
 /// Common re-exports for examples and benches.

@@ -4,6 +4,7 @@
 //! ppkmeans train  [--n 1000] [--d 4] [--k 3] [--iters 10] [--sparse]
 //!                 [--partition vertical|horizontal] [--link lan|wan]
 //!                 [--tile-rows B] [--tile-flights lockstep|streamed]
+//!                 [--threads N]
 //! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 2] [--rate 0.05]
 //! ppkmeans serve  [--n 1000] [--k 4] [--iters 6] [--batch 64]
 //!                 [--batches 12] [--prefab 8] [--low-water 2]
@@ -25,6 +26,7 @@ use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::kmeans::plaintext;
 use ppkmeans::net::cost::CostModel;
 use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::runtime::pool::Parallelism;
 use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
 use ppkmeans::serve::model::TrainedModel;
 use ppkmeans::serve::scorer::score_rounds;
@@ -54,6 +56,12 @@ fn print_help() {
     println!("                          rounds) | streamed (one tile per flight");
     println!("                          group — O(B·d) memory, rounds × tiles)");
     println!("                          (default lockstep)");
+    println!("  --threads N             worker threads per party for local compute");
+    println!("                          (offline triple fabrication, HE encryption");
+    println!("                          vectors, plaintext-side matmuls). 0 = one");
+    println!("                          per core. Deterministic: outputs, reveals");
+    println!("                          and flight/byte meters are bit-identical");
+    println!("                          for any N (default 1)");
     println!();
     println!("fraud options (train → outlier detection → Jaccard report):");
     println!("  --n N                   transactions (default 2000)");
@@ -75,8 +83,11 @@ fn print_help() {
     println!("  --model-dir DIR         where party{{0,1}}.ppkmodel go (default model)");
     println!("  --link L                lan | wan (default lan)");
     println!();
+    println!("  --threads N             worker threads per party (0 = one per core;");
+    println!("                          bank prefab/refill and batch compute fan out)");
+    println!();
     println!("score options (load saved model shares, score a fresh stream):");
-    println!("  --model-dir DIR / --batch B / --batches M / --link L");
+    println!("  --model-dir DIR / --batch B / --batches M / --link L / --threads N");
     println!();
     println!("bench: lists the cargo bench targets (tables/figures + tiling + serving)");
 }
@@ -85,6 +96,15 @@ fn link_from(args: &Args) -> CostModel {
     match args.get_str("link", "lan") {
         "wan" => CostModel::wan(),
         _ => CostModel::lan(),
+    }
+}
+
+/// `--threads N` (0 = one worker per core, default 1). Purely a
+/// throughput knob: protocol outputs are bit-identical for any value.
+fn parallelism_from(args: &Args) -> Parallelism {
+    match args.get_usize("threads", 1) {
+        0 => Parallelism::auto(),
+        n => Parallelism::new(n),
     }
 }
 
@@ -127,6 +147,7 @@ fn cmd_train(args: &Args) {
         sparse,
         tile_rows,
         tile_flights,
+        parallelism: parallelism_from(args),
         ..Default::default()
     };
     let session = Session::new(cfg).with_link(link);
@@ -289,6 +310,7 @@ fn serve_cfg_from(args: &Args) -> ServeConfig {
             refill_batches: args.get_usize("refill", 4),
         },
         seed: 0x5E11E,
+        parallelism: parallelism_from(args),
     }
 }
 
@@ -307,6 +329,7 @@ fn cmd_serve(args: &Args) {
         k,
         iters,
         partition: Partition::Vertical { d_a: f.d_payment },
+        parallelism: parallelism_from(args),
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -388,6 +411,7 @@ fn main() {
                 ("fig4_sparse", "Fig 4 — sparse optimization scaling (WAN)"),
                 ("tiling", "row tiling — wall/rounds/triple bytes, BENCH_tiling.json"),
                 ("serving", "scoring service — latency/throughput, BENCH_serving.json"),
+                ("parallel", "multi-core runtime — 1/2/4/8-thread scaling, BENCH_parallel.json"),
                 ("ablations", "extras — OU vs Paillier, PJRT vs native"),
             ] {
                 println!("  {b:<20} {what}");

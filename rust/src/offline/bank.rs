@@ -53,6 +53,9 @@ pub struct MaterialBank<S: TripleSource> {
     store: TripleStore<S>,
     per_batch: Demand,
     cfg: BankConfig,
+    /// Worker threads for prefabrication/replenishment fan-out (the
+    /// stocked material is bit-identical for any value).
+    threads: usize,
     stock: usize,
     /// Batches fabricated up front (== `cfg.prefab_batches`).
     pub prefabricated: usize,
@@ -66,15 +69,31 @@ pub struct MaterialBank<S: TripleSource> {
 
 impl<S: TripleSource> MaterialBank<S> {
     /// Plan a bank from one batch's demand and fabricate the initial
-    /// stock (the serving offline phase proper).
+    /// stock (the serving offline phase proper), single-threaded.
     pub fn new(inner: S, per_batch: Demand, cfg: BankConfig) -> MaterialBank<S> {
+        MaterialBank::new_par(inner, per_batch, cfg, 1)
+    }
+
+    /// [`MaterialBank::new`] with prefabrication and every later
+    /// replenishment fanned out across up to `threads` workers. Stocked
+    /// material is bit-identical to the single-threaded bank's (the
+    /// batch-draw contract of [`crate::ss::triples::TripleSource`]), so
+    /// the two parties may even use different thread counts.
+    pub fn new_par(
+        inner: S,
+        per_batch: Demand,
+        cfg: BankConfig,
+        threads: usize,
+    ) -> MaterialBank<S> {
         assert!(cfg.refill_batches > 0, "a bank must refill by at least one batch");
+        let threads = threads.max(1);
         let mut store = TripleStore::new(inner);
-        store.prefill(&per_batch.repeat(cfg.prefab_batches));
+        store.prefill_par(&per_batch.repeat(cfg.prefab_batches), threads);
         MaterialBank {
             store,
             per_batch,
             cfg,
+            threads,
             stock: cfg.prefab_batches,
             prefabricated: cfg.prefab_batches,
             replenished: 0,
@@ -107,7 +126,8 @@ impl<S: TripleSource> MaterialBank<S> {
 
     /// Fabricate `refill_batches` more batches into stock.
     fn replenish(&mut self) {
-        self.store.prefill(&self.per_batch.repeat(self.cfg.refill_batches));
+        self.store
+            .prefill_par(&self.per_batch.repeat(self.cfg.refill_batches), self.threads);
         self.stock += self.cfg.refill_batches;
         self.replenished += self.cfg.refill_batches;
         self.replenish_events += 1;
@@ -213,6 +233,30 @@ mod tests {
         assert_eq!(bank.stocked_mat_triple_bytes(), 3 * per);
         draw_batch(bank.checkout());
         assert_eq!(bank.stocked_mat_triple_bytes(), 2 * per);
+    }
+
+    #[test]
+    fn parallel_bank_is_bit_identical_to_sequential() {
+        // Prefab AND replenishment run through the fan-out path; every
+        // checked-out share must match the single-threaded bank exactly.
+        let cfg = BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 };
+        let mut seq = MaterialBank::new(Dealer::new(9, 1), batch_demand(), cfg);
+        let mut par = MaterialBank::new_par(Dealer::new(9, 1), batch_demand(), cfg, 4);
+        for batch in 0..6 {
+            let s = seq.checkout();
+            let a_mat = s.mat_triple(4, 2, 3);
+            let a_vec = s.vec_triple(8);
+            let a_dab = s.dabits(4);
+            let p = par.checkout();
+            let b_mat = p.mat_triple(4, 2, 3);
+            let b_vec = p.vec_triple(8);
+            let b_dab = p.dabits(4);
+            assert_eq!(a_mat.z, b_mat.z, "batch {batch}");
+            assert_eq!(a_vec.z, b_vec.z, "batch {batch}");
+            assert_eq!(a_dab.arith, b_dab.arith, "batch {batch}");
+        }
+        assert_eq!(seq.misses() + par.misses(), 0);
+        assert_eq!(seq.replenish_events, par.replenish_events);
     }
 
     #[test]

@@ -9,8 +9,8 @@
 use crate::bigint::modular::{mod_inv, Montgomery};
 use crate::bigint::BigUint;
 use crate::net::Chan;
+use crate::util::hash::Hash256;
 use crate::util::prng::Prg;
-use sha2::{Digest, Sha256};
 
 /// RFC 3526 group 5 (1536-bit MODP).
 const MODP_1536_HEX: &str = concat!(
@@ -34,7 +34,9 @@ pub fn from_hex(s: &str) -> BigUint {
 
 /// The Diffie-Hellman group used by base OTs.
 pub struct OtGroup {
+    /// The group modulus (a safe prime).
     pub p: BigUint,
+    /// The generator.
     pub g: BigUint,
     mont: Montgomery,
     /// Exponent width in bits (256-bit exponents give 128-bit security
@@ -83,9 +85,10 @@ impl OtGroup {
     }
 }
 
-/// Hash a group element to a 16-byte OT seed.
+/// Hash a group element to a 16-byte OT seed (in-repo [`Hash256`] — the
+/// parties only need to agree on the function).
 fn hash_seed(domain: u64, x: &BigUint) -> [u8; 16] {
-    let mut h = Sha256::new();
+    let mut h = Hash256::new();
     h.update(domain.to_le_bytes());
     h.update(x.to_bytes_be());
     let d = h.finalize();

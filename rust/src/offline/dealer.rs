@@ -8,12 +8,36 @@
 //! Protocol communication: zero. The [`crate::ss::triples::Ledger`]
 //! still records consumption so benches can price the material as if it
 //! had been produced by the OT generator.
+//!
+//! ## Fork-per-draw derivation (the parallel-prefill contract)
+//!
+//! Every draw forks one child PRG off the shared dealer stream (two
+//! cheap parent draws) and expands the item entirely from that child.
+//! The fork sequence is the only state the draws share, so:
+//!
+//! * a batch draw ([`crate::ss::triples::TripleSource::mat_triples`]
+//!   etc.) forks all children **sequentially** — identical stream
+//!   consumption to the same single draws — and then expands the
+//!   children on up to `threads` workers via
+//!   [`crate::runtime::pool`]: material is bit-identical for any
+//!   thread count, and a party that prefills in parallel stays
+//!   consistent with a peer drawing one triple at a time;
+//! * the expensive part of a party-1 matrix triple (the `U·V` product)
+//!   can itself run row-parallel without touching the stream.
 
 use crate::ring::matrix::Mat;
+use crate::runtime::pool;
 use crate::ss::triples::{
     bit_words, last_word_mask, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
 };
 use crate::util::prng::Prg;
+
+/// Domain-separation labels for the per-draw child forks (one per
+/// material kind; the parent stream position provides uniqueness).
+const LBL_MAT: u64 = 0x4D41_5452;
+const LBL_VEC: u64 = 0x5645_4354;
+const LBL_BIT: u64 = 0x4249_5454;
+const LBL_DAB: u64 = 0x4441_4249;
 
 /// One party's endpoint of the simulated dealer.
 pub struct Dealer {
@@ -22,11 +46,102 @@ pub struct Dealer {
     ledger: Ledger,
 }
 
+/// Expand one matrix triple from a child stream. `inner_threads`
+/// parallelizes the party-1 `U·V` product (the dominant cost of a large
+/// triple); it never touches the stream, so results are thread-count
+/// independent.
+fn mat_triple_from(
+    prg: &mut Prg,
+    party: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    inner_threads: usize,
+) -> MatTriple {
+    // Both parties expand the *same* stream: full U, V, then share-0s.
+    let u = Mat::random(m, k, prg);
+    let v = Mat::random(k, n, prg);
+    let u0 = Mat::random(m, k, prg);
+    let v0 = Mat::random(k, n, prg);
+    let z0 = Mat::random(m, n, prg);
+    if party == 0 {
+        MatTriple { u: u0, v: v0, z: z0 }
+    } else {
+        let z = pool::matmul_with(inner_threads, &u, &v);
+        MatTriple { u: u.sub(&u0), v: v.sub(&v0), z: z.sub(&z0) }
+    }
+}
+
+fn vec_triple_from(prg: &mut Prg, party: usize, n: usize) -> VecTriple {
+    let u = prg.u64s(n);
+    let v = prg.u64s(n);
+    let u0 = prg.u64s(n);
+    let v0 = prg.u64s(n);
+    let z0 = prg.u64s(n);
+    if party == 0 {
+        VecTriple { u: u0, v: v0, z: z0 }
+    } else {
+        let u1: Vec<u64> = u.iter().zip(&u0).map(|(a, b)| a.wrapping_sub(*b)).collect();
+        let v1: Vec<u64> = v.iter().zip(&v0).map(|(a, b)| a.wrapping_sub(*b)).collect();
+        let z1: Vec<u64> =
+            (0..n).map(|i| u[i].wrapping_mul(v[i]).wrapping_sub(z0[i])).collect();
+        VecTriple { u: u1, v: v1, z: z1 }
+    }
+}
+
+fn bit_triple_from(prg: &mut Prg, party: usize, n: usize) -> BitTriple {
+    let w = bit_words(n);
+    let a = prg.u64s(w);
+    let b = prg.u64s(w);
+    let a0 = prg.u64s(w);
+    let b0 = prg.u64s(w);
+    let c0 = prg.u64s(w);
+    if party == 0 {
+        BitTriple { a: a0, b: b0, c: c0, n }
+    } else {
+        let a1: Vec<u64> = a.iter().zip(&a0).map(|(x, y)| x ^ y).collect();
+        let b1: Vec<u64> = b.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
+        let c1: Vec<u64> = (0..w).map(|i| (a[i] & b[i]) ^ c0[i]).collect();
+        BitTriple { a: a1, b: b1, c: c1, n }
+    }
+}
+
+fn dabits_from(prg: &mut Prg, party: usize, n: usize) -> DaBits {
+    let w = bit_words(n);
+    // Full bit vector r, then party-0's boolean and arithmetic pads.
+    let r = prg.u64s(w);
+    let b0 = prg.u64s(w);
+    let a0 = prg.u64s(n);
+    if party == 0 {
+        let mut bool_words = b0;
+        if let Some(last) = bool_words.last_mut() {
+            *last &= last_word_mask(n);
+        }
+        DaBits { n, bool_words, arith: a0 }
+    } else {
+        let mut bool_words: Vec<u64> = r.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
+        if let Some(last) = bool_words.last_mut() {
+            *last &= last_word_mask(n);
+        }
+        let arith: Vec<u64> = (0..n)
+            .map(|i| ((r[i / 64] >> (i % 64)) & 1).wrapping_sub(a0[i]))
+            .collect();
+        DaBits { n, bool_words, arith }
+    }
+}
+
 impl Dealer {
     /// `seed` must match across the two parties; `party` ∈ {0, 1}.
     pub fn new(seed: u128, party: usize) -> Self {
         assert!(party < 2);
         Dealer { prg: Prg::new(seed ^ 0xD0_1E_55), party, ledger: Ledger::default() }
+    }
+
+    /// Fork the per-item child streams for a batch — strictly
+    /// sequential, so stream consumption is independent of how the
+    /// expansion is later scheduled.
+    fn children(&mut self, label: u64, count: usize) -> Vec<Prg> {
+        (0..count).map(|_| self.prg.fork(label)).collect()
     }
 }
 
@@ -34,84 +149,87 @@ impl TripleSource for Dealer {
     fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
         self.ledger.mat_triples += 1;
         self.ledger.mat_triple_elems += (m * k + k * n + m * n) as u64;
-        // Both parties expand the *same* stream: full U, V, then share-0s.
-        let u = Mat::random(m, k, &mut self.prg);
-        let v = Mat::random(k, n, &mut self.prg);
-        let u0 = Mat::random(m, k, &mut self.prg);
-        let v0 = Mat::random(k, n, &mut self.prg);
-        let z0 = Mat::random(m, n, &mut self.prg);
-        if self.party == 0 {
-            MatTriple { u: u0, v: v0, z: z0 }
-        } else {
-            let z = u.matmul(&v);
-            MatTriple { u: u.sub(&u0), v: v.sub(&v0), z: z.sub(&z0) }
-        }
+        let mut child = self.prg.fork(LBL_MAT);
+        // Inline draws (no prefill) parallelize the U·V product itself.
+        mat_triple_from(&mut child, self.party, m, k, n, pool::global_threads())
     }
 
     fn vec_triple(&mut self, n: usize) -> VecTriple {
         self.ledger.vec_triple_lanes += n as u64;
-        let u = self.prg.u64s(n);
-        let v = self.prg.u64s(n);
-        let u0 = self.prg.u64s(n);
-        let v0 = self.prg.u64s(n);
-        let z0 = self.prg.u64s(n);
-        if self.party == 0 {
-            VecTriple { u: u0, v: v0, z: z0 }
-        } else {
-            let u1: Vec<u64> = u.iter().zip(&u0).map(|(a, b)| a.wrapping_sub(*b)).collect();
-            let v1: Vec<u64> = v.iter().zip(&v0).map(|(a, b)| a.wrapping_sub(*b)).collect();
-            let z1: Vec<u64> = (0..n)
-                .map(|i| u[i].wrapping_mul(v[i]).wrapping_sub(z0[i]))
-                .collect();
-            VecTriple { u: u1, v: v1, z: z1 }
-        }
+        let mut child = self.prg.fork(LBL_VEC);
+        vec_triple_from(&mut child, self.party, n)
     }
 
     fn bit_triple(&mut self, n: usize) -> BitTriple {
         self.ledger.bit_triple_lanes += n as u64;
-        let w = bit_words(n);
-        let a = self.prg.u64s(w);
-        let b = self.prg.u64s(w);
-        let a0 = self.prg.u64s(w);
-        let b0 = self.prg.u64s(w);
-        let c0 = self.prg.u64s(w);
-        if self.party == 0 {
-            BitTriple { a: a0, b: b0, c: c0, n }
-        } else {
-            let a1: Vec<u64> = a.iter().zip(&a0).map(|(x, y)| x ^ y).collect();
-            let b1: Vec<u64> = b.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
-            let c1: Vec<u64> = (0..w).map(|i| (a[i] & b[i]) ^ c0[i]).collect();
-            BitTriple { a: a1, b: b1, c: c1, n }
-        }
+        let mut child = self.prg.fork(LBL_BIT);
+        bit_triple_from(&mut child, self.party, n)
     }
 
     fn dabits(&mut self, n: usize) -> DaBits {
         self.ledger.dabit_lanes += n as u64;
-        let w = bit_words(n);
-        // Full bit vector r, then party-0's boolean and arithmetic pads.
-        let r = self.prg.u64s(w);
-        let b0 = self.prg.u64s(w);
-        let a0 = self.prg.u64s(n);
-        if self.party == 0 {
-            let mut bool_words = b0;
-            if let Some(last) = bool_words.last_mut() {
-                *last &= last_word_mask(n);
-            }
-            DaBits { n, bool_words, arith: a0 }
-        } else {
-            let mut bool_words: Vec<u64> = r.iter().zip(&b0).map(|(x, y)| x ^ y).collect();
-            if let Some(last) = bool_words.last_mut() {
-                *last &= last_word_mask(n);
-            }
-            let arith: Vec<u64> = (0..n)
-                .map(|i| ((r[i / 64] >> (i % 64)) & 1).wrapping_sub(a0[i]))
-                .collect();
-            DaBits { n, bool_words, arith }
-        }
+        let mut child = self.prg.fork(LBL_DAB);
+        dabits_from(&mut child, self.party, n)
     }
 
     fn ledger(&self) -> Ledger {
         self.ledger
+    }
+
+    fn mat_triples(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        count: usize,
+        threads: usize,
+    ) -> Vec<MatTriple> {
+        self.ledger.mat_triples += count as u64;
+        self.ledger.mat_triple_elems += ((m * k + k * n + m * n) * count) as u64;
+        let children = self.children(LBL_MAT, count);
+        let party = self.party;
+        // One worker per triple; the inner product stays sequential so a
+        // batch of B triples uses ≤ threads workers total.
+        pool::parallel_map(threads, &children, |_, child| {
+            let mut prg = child.clone();
+            mat_triple_from(&mut prg, party, m, k, n, 1)
+        })
+    }
+
+    fn vec_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<VecTriple> {
+        for &n in lanes {
+            self.ledger.vec_triple_lanes += n as u64;
+        }
+        let children = self.children(LBL_VEC, lanes.len());
+        let party = self.party;
+        pool::parallel_gen(threads, lanes.len(), |i| {
+            let mut prg = children[i].clone();
+            vec_triple_from(&mut prg, party, lanes[i])
+        })
+    }
+
+    fn bit_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<BitTriple> {
+        for &n in lanes {
+            self.ledger.bit_triple_lanes += n as u64;
+        }
+        let children = self.children(LBL_BIT, lanes.len());
+        let party = self.party;
+        pool::parallel_gen(threads, lanes.len(), |i| {
+            let mut prg = children[i].clone();
+            bit_triple_from(&mut prg, party, lanes[i])
+        })
+    }
+
+    fn dabits_many(&mut self, lanes: &[usize], threads: usize) -> Vec<DaBits> {
+        for &n in lanes {
+            self.ledger.dabit_lanes += n as u64;
+        }
+        let children = self.children(LBL_DAB, lanes.len());
+        let party = self.party;
+        pool::parallel_gen(threads, lanes.len(), |i| {
+            let mut prg = children[i].clone();
+            dabits_from(&mut prg, party, lanes[i])
+        })
     }
 }
 
@@ -202,5 +320,48 @@ mod tests {
         assert_eq!(l.mat_triple_elems, (6 + 12 + 8) as u64);
         assert_eq!(l.vec_triple_lanes, 10);
         assert_eq!(l.bit_triple_lanes, 65);
+    }
+
+    #[test]
+    fn batch_draws_match_single_draws_exactly() {
+        // Stream equivalence: N batch items == N single draws, for every
+        // material kind, so mixed prefill/inline parties stay consistent.
+        let mut single = Dealer::new(31, 1);
+        let mut batch = Dealer::new(31, 1);
+        let singles: Vec<MatTriple> = (0..3).map(|_| single.mat_triple(3, 2, 4)).collect();
+        let batched = batch.mat_triples(3, 2, 4, 3, 4);
+        for (s, b) in singles.iter().zip(&batched) {
+            assert_eq!(s.u, b.u);
+            assert_eq!(s.v, b.v);
+            assert_eq!(s.z, b.z);
+        }
+        let sv: Vec<VecTriple> = [5usize, 9].iter().map(|&n| single.vec_triple(n)).collect();
+        let bv = batch.vec_triples(&[5, 9], 4);
+        assert_eq!(sv[1].z, bv[1].z);
+        let sb: Vec<BitTriple> = [64usize, 7].iter().map(|&n| single.bit_triple(n)).collect();
+        let bb = batch.bit_triples(&[64, 7], 4);
+        assert_eq!(sb[0].c, bb[0].c);
+        let sd: Vec<DaBits> = [10usize, 3].iter().map(|&n| single.dabits(n)).collect();
+        let bd = batch.dabits_many(&[10, 3], 4);
+        assert_eq!(sd[0].arith, bd[0].arith);
+        assert_eq!(single.ledger(), batch.ledger(), "ledgers must agree");
+    }
+
+    #[test]
+    fn batch_draws_are_thread_count_independent() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut d = Dealer::new(77, 1);
+            let mats = d.mat_triples(4, 3, 2, 5, threads);
+            let vecs = d.vec_triples(&[8, 16, 8], threads);
+            let mut base = Dealer::new(77, 1);
+            let bm = base.mat_triples(4, 3, 2, 5, 1);
+            let bv = base.vec_triples(&[8, 16, 8], 1);
+            for (a, b) in mats.iter().zip(&bm) {
+                assert_eq!(a.z, b.z, "threads = {threads}");
+            }
+            for (a, b) in vecs.iter().zip(&bv) {
+                assert_eq!(a.z, b.z, "threads = {threads}");
+            }
+        }
     }
 }

@@ -52,6 +52,15 @@ impl OtTripleGen {
         OtTripleGen { chan, party, prg, sender, receiver, ledger: Ledger::default() }
     }
 
+    /// Cap the local per-OT fan-out (hashing, transposition, column
+    /// PRGs) at `threads` workers on both IKNP endpoints. Wire traffic
+    /// and the generated triples are identical for any value — only
+    /// generation wall-clock changes.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.sender.set_threads(threads);
+        self.receiver.set_threads(threads);
+    }
+
     /// Bytes sent by this party's offline channel so far.
     pub fn bytes_sent(&self) -> u64 {
         self.chan.meter().total().bytes_sent
@@ -315,6 +324,38 @@ mod tests {
             assert_eq!(bool_bit, arith_bit, "lane {i}");
             assert!(arith_bit <= 1, "lane {i}: not a bit");
         }
+    }
+
+    #[test]
+    fn fanned_out_generation_is_bit_identical() {
+        // A 4-worker generator must produce exactly the sequential
+        // generator's triples (same seeds → same OT transcript → same
+        // shares); the fan-out only reschedules local hashing.
+        let run = |threads: usize| {
+            let (c0, c1) = duplex_pair();
+            let h0 = thread::spawn(move || {
+                let mut g = OtTripleGen::new(c0, 555);
+                g.set_threads(threads);
+                (g.mat_triple(3, 2, 4), g.vec_triple(10))
+            });
+            let h1 = thread::spawn(move || {
+                let mut g = OtTripleGen::new(c1, 555);
+                g.set_threads(threads);
+                (g.mat_triple(3, 2, 4), g.vec_triple(10))
+            });
+            (h0.join().unwrap(), h1.join().unwrap())
+        };
+        let ((a0m, a0v), (a1m, a1v)) = run(1);
+        let ((b0m, b0v), (b1m, b1v)) = run(4);
+        assert_eq!(a0m.z, b0m.z);
+        assert_eq!(a1m.z, b1m.z);
+        assert_eq!(a0v.z, b0v.z);
+        assert_eq!(a1v.z, b1v.z);
+        // And the parallel run's shares still reconstruct.
+        let u = b0m.u.add(&b1m.u);
+        let v = b0m.v.add(&b1m.v);
+        let z = b0m.z.add(&b1m.z);
+        assert_eq!(u.matmul(&v), z);
     }
 
     #[test]

@@ -1,17 +1,30 @@
 //! IKNP oblivious-transfer extension (Ishai-Kilian-Nissim-Petrank 2003).
 //!
-//! Stretches λ = 128 base OTs into millions of fast OTs using only AES
-//! and XOR — the workhorse behind OT-based triple generation [17 in the
-//! paper]. Roles are reversed in the base phase: the extension *sender*
-//! plays base-OT *receiver* with a random choice vector `s`, the
-//! extension *receiver* plays base-OT sender with random seed pairs.
+//! Stretches λ = 128 base OTs into millions of fast OTs using only a
+//! block cipher and XOR — the workhorse behind OT-based triple
+//! generation [17 in the paper]. Roles are reversed in the base phase:
+//! the extension *sender* plays base-OT *receiver* with a random choice
+//! vector `s`, the extension *receiver* plays base-OT sender with random
+//! seed pairs.
 //!
 //! Per batch of m OTs with L-byte messages: the receiver transmits a
 //! m×128-bit correction matrix; the sender transmits 2·m·L bytes of
 //! masked messages.
+//!
+//! ## Fan-out
+//!
+//! The per-OT work — column-stream PRG expansion, the bit-matrix
+//! transposition, and above all the correlation-robust hash per row key
+//! — is pure local compute indexed by OT position, so both endpoints
+//! shard it across [`IknpSender::set_threads`] /
+//! [`IknpReceiver::set_threads`] workers via [`crate::runtime::pool`].
+//! The frames on the wire are assembled in index order and are
+//! **byte-identical** for any thread count; only wall-clock changes.
 
 use super::baseot::{base_ot_recv, base_ot_send, OtGroup};
 use crate::net::Chan;
+use crate::runtime::pool;
+use crate::util::hash::Hash256;
 use crate::util::prng::Prg;
 
 /// Security parameter: number of base OTs / matrix width.
@@ -25,6 +38,8 @@ pub struct IknpSender {
     streams: Vec<Prg>,
     /// OT counter for domain separation.
     sent: u64,
+    /// Worker threads for the per-OT hashing/transposition fan-out.
+    threads: usize,
 }
 
 /// Receiver endpoint of the OT extension.
@@ -33,12 +48,18 @@ pub struct IknpReceiver {
     streams0: Vec<Prg>,
     streams1: Vec<Prg>,
     sent: u64,
+    /// Worker threads for the per-OT hashing/transposition fan-out.
+    threads: usize,
 }
 
 /// Correlation-robust hash: expand a 128-bit row key into an L-byte mask.
+///
+/// Only the digest's first 16 bytes seed the mask PRG — the second
+/// [`Hash256`] lane is deliberately paid for anyway so the hash keeps
+/// the drop-in SHA-256 shape (swap `util::hash` for hardware SHA-256 in
+/// production without touching this call site).
 fn h_mask(index: u64, q: u128, len: usize) -> Vec<u8> {
-    use sha2::{Digest, Sha256};
-    let mut h = Sha256::new();
+    let mut h = Hash256::new();
     h.update(index.to_le_bytes());
     h.update(q.to_le_bytes());
     let d = h.finalize();
@@ -65,7 +86,7 @@ pub fn setup_sender(chan: &mut Chan, prg: &mut Prg) -> IknpSender {
     }
     let keys = base_ot_recv(chan, &group, &s, prg);
     let streams = keys.into_iter().map(Prg::from_seed).collect();
-    IknpSender { s, streams, sent: 0 }
+    IknpSender { s, streams, sent: 0, threads: 1 }
 }
 
 /// Set up the receiver endpoint (runs λ base OTs as base-sender).
@@ -74,14 +95,21 @@ pub fn setup_receiver(chan: &mut Chan, prg: &mut Prg) -> IknpReceiver {
     let keys = base_ot_send(chan, &group, LAMBDA, prg);
     let streams0 = keys.iter().map(|(k0, _)| Prg::from_seed(*k0)).collect();
     let streams1 = keys.iter().map(|(_, k1)| Prg::from_seed(*k1)).collect();
-    IknpReceiver { streams0, streams1, sent: 0 }
+    IknpReceiver { streams0, streams1, sent: 0, threads: 1 }
 }
 
 impl IknpReceiver {
+    /// Cap the local fan-out at `threads` workers (wire bytes are
+    /// unchanged for any value).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
     /// Receive `choices.len()` OTs of `msg_len`-byte messages; returns
     /// the chosen message per OT.
     pub fn recv(&mut self, chan: &mut Chan, choices: &[bool], msg_len: usize) -> Vec<Vec<u8>> {
         let m = choices.len();
+        let threads = self.threads;
         let words = (m + 63) / 64;
         // Choice bits packed.
         let mut r = vec![0u64; words];
@@ -90,61 +118,67 @@ impl IknpReceiver {
                 r[j / 64] |= 1 << (j % 64);
             }
         }
-        // Column streams: t_i = G(k0_i), u_i = t_i ^ G(k1_i) ^ r.
-        let mut t_cols = Vec::with_capacity(LAMBDA);
+        // Column streams: t_i = G(k0_i), u_i = t_i ^ G(k1_i) ^ r. Each
+        // column's PRG advances exactly as it would sequentially (the
+        // pool hands every worker a disjoint column range).
+        let t_cols = pool::parallel_map_mut(threads, &mut self.streams0, |_, p| p.u64s(words));
+        let g1_cols = pool::parallel_map_mut(threads, &mut self.streams1, |_, p| p.u64s(words));
         let mut u_payload = Vec::with_capacity(LAMBDA * words * 8);
         for i in 0..LAMBDA {
-            let t = self.streams0[i].u64s(words);
-            let g1 = self.streams1[i].u64s(words);
             for w in 0..words {
-                let u = t[w] ^ g1[w] ^ r[w];
+                let u = t_cols[i][w] ^ g1_cols[i][w] ^ r[w];
                 u_payload.extend_from_slice(&u.to_le_bytes());
             }
-            t_cols.push(t);
         }
         chan.send_bytes(&u_payload);
         // Row keys: t_j (row j of the m×λ matrix).
-        let rows = transpose_cols(&t_cols, m);
+        let rows = transpose_cols(&t_cols, m, threads);
         // Receive masked messages and unmask the chosen one.
         let payload = chan.recv_bytes();
         assert_eq!(payload.len(), 2 * m * msg_len, "iknp message frame");
-        let mut out = Vec::with_capacity(m);
-        for j in 0..m {
+        let sent = self.sent;
+        let out = pool::parallel_gen(threads, m, |j| {
             let base = 2 * j * msg_len;
             let slot = if choices[j] { base + msg_len } else { base };
             let mut msg = payload[slot..slot + msg_len].to_vec();
-            let mask = h_mask(self.sent + j as u64, rows[j], msg_len);
+            let mask = h_mask(sent + j as u64, rows[j], msg_len);
             xor_into(&mut msg, &mask);
-            out.push(msg);
-        }
+            msg
+        });
         self.sent += m as u64;
         out
     }
 }
 
 impl IknpSender {
+    /// Cap the local fan-out at `threads` workers (wire bytes are
+    /// unchanged for any value).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
     /// Send `pairs.len()` OTs; `pairs[j] = (x0, x1)`, both `msg_len` bytes.
     pub fn send(&mut self, chan: &mut Chan, pairs: &[(Vec<u8>, Vec<u8>)], msg_len: usize) {
         let m = pairs.len();
+        let threads = self.threads;
         let words = (m + 63) / 64;
         // Receive correction matrix u (λ columns).
         let payload = chan.recv_bytes();
         assert_eq!(payload.len(), LAMBDA * words * 8, "iknp correction frame");
-        let mut q_cols = Vec::with_capacity(LAMBDA);
-        for i in 0..LAMBDA {
+        let s = self.s;
+        let q_cols = pool::parallel_map_mut(threads, &mut self.streams, |i, prg| {
             // q_i = G(k_{s_i}) ^ s_i·u_i
-            let g = self.streams[i].u64s(words);
-            let mut q = g;
-            if self.s[i] {
-                for w in 0..words {
+            let mut q = prg.u64s(words);
+            if s[i] {
+                for (w, qw) in q.iter_mut().enumerate() {
                     let off = (i * words + w) * 8;
                     let u = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap());
-                    q[w] ^= u;
+                    *qw ^= u;
                 }
             }
-            q_cols.push(q);
-        }
-        let rows = transpose_cols(&q_cols, m);
+            q
+        });
+        let rows = transpose_cols(&q_cols, m, threads);
         // s as a row mask.
         let mut s_row: u128 = 0;
         for i in 0..LAMBDA {
@@ -152,18 +186,23 @@ impl IknpSender {
                 s_row |= 1u128 << i;
             }
         }
-        // Mask and ship both messages per OT.
-        let mut out = Vec::with_capacity(2 * m * msg_len);
-        for (j, (x0, x1)) in pairs.iter().enumerate() {
+        // Mask both messages per OT (hash-heavy — fan out by OT index),
+        // then ship them in index order.
+        let sent = self.sent;
+        let masked = pool::parallel_map(threads, pairs, |j, (x0, x1)| {
             assert_eq!(x0.len(), msg_len);
             assert_eq!(x1.len(), msg_len);
             let q = rows[j];
             let mut m0 = x0.clone();
-            xor_into(&mut m0, &h_mask(self.sent + j as u64, q, msg_len));
+            xor_into(&mut m0, &h_mask(sent + j as u64, q, msg_len));
             let mut m1 = x1.clone();
-            xor_into(&mut m1, &h_mask(self.sent + j as u64, q ^ s_row, msg_len));
-            out.extend_from_slice(&m0);
-            out.extend_from_slice(&m1);
+            xor_into(&mut m1, &h_mask(sent + j as u64, q ^ s_row, msg_len));
+            (m0, m1)
+        });
+        let mut out = Vec::with_capacity(2 * m * msg_len);
+        for (m0, m1) in &masked {
+            out.extend_from_slice(m0);
+            out.extend_from_slice(m1);
         }
         chan.send_bytes(&out);
         self.sent += m as u64;
@@ -171,17 +210,21 @@ impl IknpSender {
 }
 
 /// Transpose λ column bit-vectors (each `m` bits packed in u64 words)
-/// into `m` row keys of 128 bits.
-fn transpose_cols(cols: &[Vec<u64>], m: usize) -> Vec<u128> {
-    let mut rows = vec![0u128; m];
-    for (i, col) in cols.iter().enumerate() {
-        for j in 0..m {
-            if (col[j / 64] >> (j % 64)) & 1 == 1 {
-                rows[j] |= 1u128 << i;
+/// into `m` row keys of 128 bits, sharding the rows across workers.
+fn transpose_cols(cols: &[Vec<u64>], m: usize, threads: usize) -> Vec<u128> {
+    let ranges = pool::chunk_ranges(m, threads.max(1));
+    let parts = pool::parallel_map(threads, &ranges, |_, &(r0, r1)| {
+        let mut rows = vec![0u128; r1 - r0];
+        for (i, col) in cols.iter().enumerate() {
+            for j in r0..r1 {
+                if (col[j / 64] >> (j % 64)) & 1 == 1 {
+                    rows[j - r0] |= 1u128 << i;
+                }
             }
         }
-    }
-    rows
+        rows
+    });
+    parts.concat()
 }
 
 #[cfg(test)]
@@ -243,5 +286,43 @@ mod tests {
         );
         assert_eq!(got.0[0], vec![2]);
         assert_eq!(got.1[0], vec![3]);
+    }
+
+    #[test]
+    fn fanned_out_extension_is_byte_identical() {
+        // The same transfer with 4-worker endpoints must produce the
+        // same chosen messages AND the same wire traffic as the
+        // sequential run above — the tentpole's byte-determinism claim.
+        let m = 150;
+        let choices: Vec<bool> = (0..m).map(|i| i % 5 == 2).collect();
+        let pairs: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..m).map(|i| (vec![i as u8; 9], vec![!(i as u8); 9])).collect();
+        let mut results = Vec::new();
+        for threads in [1usize, 4] {
+            let ch = choices.clone();
+            let ps = pairs.clone();
+            let ((_, ms), (got, mr)) = run_two_party(
+                move |c| {
+                    let mut prg = Prg::new(205);
+                    let mut snd = setup_sender(c, &mut prg);
+                    snd.set_threads(threads);
+                    snd.send(c, &ps, 9);
+                },
+                move |c| {
+                    let mut prg = Prg::new(206);
+                    let mut rcv = setup_receiver(c, &mut prg);
+                    rcv.set_threads(threads);
+                    rcv.recv(c, &ch, 9)
+                },
+            );
+            results.push((got, ms.total().bytes_sent, mr.total().bytes_sent));
+        }
+        assert_eq!(results[0].0, results[1].0, "chosen messages must match");
+        assert_eq!(results[0].1, results[1].1, "sender bytes must match");
+        assert_eq!(results[0].2, results[1].2, "receiver bytes must match");
+        for j in 0..m {
+            let want = if choices[j] { &pairs[j].1 } else { &pairs[j].0 };
+            assert_eq!(&results[1].0[j], want, "ot {j}");
+        }
     }
 }

@@ -26,6 +26,7 @@ pub struct Demand {
 }
 
 impl Demand {
+    /// Record one matrix triple of shape `(m, k, n)`.
     pub fn mat(&mut self, m: usize, k: usize, n: usize) {
         if let Some(e) = self.mats.iter_mut().find(|(s, _)| *s == (m, k, n)) {
             e.1 += 1;
@@ -34,14 +35,17 @@ impl Demand {
         }
     }
 
+    /// Record one elementwise-triple chunk of `n` lanes.
     pub fn vec_lanes(&mut self, n: usize) {
         self.vec_chunks.push(n);
     }
 
+    /// Record one boolean-triple chunk of `n` lanes.
     pub fn bit_lanes(&mut self, n: usize) {
         self.bit_chunks.push(n);
     }
 
+    /// Record one daBit chunk of `n` lanes.
     pub fn dabit_lanes(&mut self, n: usize) {
         self.dabit_chunks.push(n);
     }
@@ -66,6 +70,24 @@ impl Demand {
     /// matrix counts (a handful of entries) plus chunk-vector lengths —
     /// O(shapes), unlike cloning the whole demand whose chunk vectors
     /// grow with every gate request.
+    ///
+    /// # Examples
+    ///
+    /// Snapshot, accumulate, and diff — the per-step attribution idiom
+    /// of the secure K-means driver:
+    ///
+    /// ```
+    /// use ppkmeans::offline::store::Demand;
+    ///
+    /// let mut demand = Demand::default();
+    /// demand.mat(8, 4, 2);
+    /// let before = demand.mark();          // O(shapes) snapshot
+    /// demand.mat(8, 4, 2);                 // the step's own draws…
+    /// demand.vec_lanes(16);
+    /// let step = demand.delta_since(&before);
+    /// assert_eq!(step.mats, vec![((8, 4, 2), 1)]); // only post-mark counts
+    /// assert_eq!(step.vec_chunks, vec![16]);
+    /// ```
     pub fn mark(&self) -> DemandMark {
         DemandMark {
             mats: self.mats.clone(),
@@ -167,6 +189,8 @@ pub struct TripleStore<S: TripleSource> {
 }
 
 impl<S: TripleSource> TripleStore<S> {
+    /// Wrap a generator with empty stock (draws fall through and are
+    /// recorded until [`TripleStore::prefill`] stocks the store).
     pub fn new(inner: S) -> Self {
         TripleStore {
             inner,
@@ -179,24 +203,33 @@ impl<S: TripleSource> TripleStore<S> {
         }
     }
 
-    /// Generate all demanded material now (the offline phase proper).
+    /// Generate all demanded material now (the offline phase proper),
+    /// single-threaded. See [`TripleStore::prefill_par`] for the
+    /// multi-core form; the stocked material is identical.
     pub fn prefill(&mut self, demand: &Demand) {
+        self.prefill_par(demand, 1)
+    }
+
+    /// Generate all demanded material on up to `threads` workers via the
+    /// source's batch draws ([`TripleSource::mat_triples`] and friends).
+    /// The fabricated material is **bit-identical** for every `threads`
+    /// value — the batch-draw contract — so parallel prefill changes
+    /// wall-clock only, never a share.
+    pub fn prefill_par(&mut self, demand: &Demand, threads: usize) {
         for ((m, k, n), count) in &demand.mats {
-            for _ in 0..*count {
-                let t = self.inner.mat_triple(*m, *k, *n);
-                self.mats.entry((*m, *k, *n)).or_default().push_back(t);
-            }
+            let ts = self.inner.mat_triples(*m, *k, *n, *count, threads);
+            self.mats.entry((*m, *k, *n)).or_default().extend(ts);
         }
-        for &n in &demand.vec_chunks {
-            let t = self.inner.vec_triple(n);
+        let vts = self.inner.vec_triples(&demand.vec_chunks, threads);
+        for (&n, t) in demand.vec_chunks.iter().zip(vts) {
             self.vecs.entry(n).or_default().push_back(t);
         }
-        for &n in &demand.bit_chunks {
-            let t = self.inner.bit_triple(n);
+        let bts = self.inner.bit_triples(&demand.bit_chunks, threads);
+        for (&n, t) in demand.bit_chunks.iter().zip(bts) {
             self.bits.entry(n).or_default().push_back(t);
         }
-        for &n in &demand.dabit_chunks {
-            let t = self.inner.dabits(n);
+        let dts = self.inner.dabits_many(&demand.dabit_chunks, threads);
+        for (&n, t) in demand.dabit_chunks.iter().zip(dts) {
             self.dabits.entry(n).or_default().push_back(t);
         }
     }
@@ -206,6 +239,7 @@ impl<S: TripleSource> TripleStore<S> {
         &self.inner
     }
 
+    /// Unwrap the inner source.
     pub fn into_inner(self) -> S {
         self.inner
     }

@@ -17,10 +17,12 @@ pub struct TimedSource<S: TripleSource> {
 }
 
 impl<S: TripleSource> TimedSource<S> {
+    /// Wrap a generator with a zeroed clock.
     pub fn new(inner: S) -> Self {
         TimedSource { inner, secs: 0.0 }
     }
 
+    /// Unwrap the inner generator.
     pub fn into_inner(self) -> S {
         self.inner
     }
@@ -57,6 +59,43 @@ impl<S: TripleSource> TripleSource for TimedSource<S> {
 
     fn ledger(&self) -> Ledger {
         self.inner.ledger()
+    }
+
+    // Batch draws delegate to the inner source's (possibly parallel)
+    // batch path so prefill fan-out is timed as one generation span.
+    fn mat_triples(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        count: usize,
+        threads: usize,
+    ) -> Vec<MatTriple> {
+        let t0 = Instant::now();
+        let t = self.inner.mat_triples(m, k, n, count, threads);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn vec_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<VecTriple> {
+        let t0 = Instant::now();
+        let t = self.inner.vec_triples(lanes, threads);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn bit_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<BitTriple> {
+        let t0 = Instant::now();
+        let t = self.inner.bit_triples(lanes, threads);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn dabits_many(&mut self, lanes: &[usize], threads: usize) -> Vec<DaBits> {
+        let t0 = Instant::now();
+        let t = self.inner.dabits_many(lanes, threads);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
     }
 }
 

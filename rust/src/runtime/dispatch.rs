@@ -118,7 +118,7 @@ mod service {
                 return out;
             }
         }
-        a.matmul(b)
+        crate::runtime::pool::matmul_auto(a, b)
     }
 
     pub fn esd(x: &Mat, mu: &Mat) -> Option<Mat> {
@@ -170,7 +170,9 @@ pub fn available() -> bool {
     }
 }
 
-/// Ring matmul with automatic backend choice.
+/// Ring matmul with automatic backend choice. The native path fans out
+/// across [`crate::runtime::pool::global_threads`] row-block workers
+/// for large products (bit-identical to the sequential kernel).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     #[cfg(feature = "pjrt")]
     {
@@ -178,7 +180,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     }
     #[cfg(not(feature = "pjrt"))]
     {
-        a.matmul(b)
+        crate::runtime::pool::matmul_auto(a, b)
     }
 }
 

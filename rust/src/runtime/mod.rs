@@ -13,15 +13,24 @@
 //! to build the artifacts). Without the feature, [`dispatch`] routes
 //! every call to the native blocked kernels — protocol results are
 //! identical; only large-shape throughput differs.
+//!
+//! Independent of PJRT, [`pool`] is the multi-core execution layer: a
+//! dependency-free `std::thread::scope` fan-out that shards offline
+//! triple fabrication and the online plaintext-side matrix work across
+//! a configurable worker count ([`pool::Parallelism`]) with a hard
+//! bit-determinism contract — `threads = 1` and `threads = N` produce
+//! identical shares, reveals and meter readings.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod dispatch;
 #[cfg(feature = "pjrt")]
 pub mod executor;
+pub mod pool;
 pub mod tile_select;
 #[cfg(feature = "pjrt")]
 pub mod tiled;
 
 #[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactStore, Entry};
+pub use pool::Parallelism;

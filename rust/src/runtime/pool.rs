@@ -1,0 +1,385 @@
+//! Multi-core fan-out for party-local work: a dependency-free thread
+//! pool built on [`std::thread::scope`].
+//!
+//! The paper's performance story puts almost all cryptographic cost into
+//! the precomputable offline phase and makes the online phase a handful
+//! of vectorized local passes — exactly the work profile that scales
+//! with cores. This module is the one place that fan-out happens:
+//!
+//! * **offline** — [`crate::offline::store::TripleStore::prefill_par`]
+//!   shards triple/daBit fabrication across workers (including
+//!   [`crate::offline::bank::MaterialBank`] replenishment), the IKNP
+//!   extension parallelizes its per-OT hashing/transposition, and the
+//!   Paillier/OU encryption vectors of the HE sparse path encrypt
+//!   lane-parallel;
+//! * **online** — the plaintext-side matrix products (the local terms of
+//!   `CrossProductBackend` tiles, dense and CSR, and the Beaver
+//!   recombination inside `ss_matmul_many`) run row-block parallel via
+//!   [`matmul_auto`] / [`csr_matmul_auto`].
+//!
+//! **Determinism is a hard contract.** Every helper here assigns work to
+//! workers by *index*, writes results back in index order, and never
+//! lets the thread count influence a single output bit: protocols that
+//! need per-item randomness fork one child PRG per item *sequentially*
+//! (thread-count independent) before fanning out the expensive
+//! expansion. Output shares, reveals, and the [`crate::net::Meter`]
+//! flight/byte counts are bit-identical for `threads = 1` and
+//! `threads = N` — regression-tested in `rust/tests/parallel.rs`. The
+//! [`crate::net::Chan`] flight schedule itself always stays on the
+//! party's protocol thread; only pure local compute fans out.
+
+use crate::ring::matrix::Mat;
+use crate::sparse::csr::Csr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-thread knob for a protocol run (the `--threads N` CLI flag
+/// and the `parallelism` field of
+/// [`crate::kmeans::config::SecureKmeansConfig`] /
+/// [`crate::serve::driver::ServeConfig`]).
+///
+/// Purely a throughput knob: all protocol outputs and meters are
+/// bit-identical for any value (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Maximum worker threads for party-local compute (≥ 1).
+    pub threads: usize,
+}
+
+impl Parallelism {
+    /// Cap at `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// Single-threaded (the default — no behavioural or perf surprise
+    /// for small runs and tests).
+    pub fn sequential() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Parallelism {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Parallelism { threads: n }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::sequential()
+    }
+}
+
+/// Process-wide default worker count, consulted by the deep call sites
+/// that have no configuration path of their own (the Beaver
+/// recombination inside a [`crate::ss::Pending`] closure, a dealer's
+/// inline `U·V`). Set once per run by the protocol drivers from their
+/// config; safe to race because the value can only change *throughput*,
+/// never an output bit.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide default worker count (clamped to ≥ 1).
+pub fn set_global_threads(threads: usize) {
+    GLOBAL_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// The process-wide default worker count.
+pub fn global_threads() -> usize {
+    GLOBAL_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Minimum multiply-accumulate count before a row-parallel matmul pays
+/// for its spawn overhead (scoped threads are cheap but not free).
+pub const PAR_MACS_THRESHOLD: usize = 1 << 16;
+
+/// Split `len` items into at most `parts` contiguous half-open ranges
+/// covering `[0, len)` exactly once (empty input → no ranges).
+pub fn chunk_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return vec![];
+    }
+    let parts = parts.max(1).min(len);
+    let chunk = len.div_ceil(parts);
+    (0..len).step_by(chunk).map(|lo| (lo, (lo + chunk).min(len))).collect()
+}
+
+fn effective(threads: usize, items: usize) -> usize {
+    threads.max(1).min(items.max(1))
+}
+
+/// Map `f` over `items` on up to `threads` workers; results come back in
+/// input order regardless of scheduling. `f` receives the item's global
+/// index. Falls back to a plain sequential map for one worker or one
+/// item.
+pub fn parallel_map<T, U, F>(threads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let threads = effective(threads, items.len());
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let ranges = chunk_ranges(items.len(), threads);
+    let mut parts: Vec<Vec<U>> = Vec::with_capacity(ranges.len());
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                s.spawn(move || {
+                    items[lo..hi]
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| fr(lo + i, t))
+                        .collect::<Vec<U>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("runtime::pool worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// [`parallel_map`] over mutable items (each worker owns a disjoint
+/// contiguous chunk): the per-column PRG streams of the IKNP extension
+/// advance exactly as they would sequentially.
+pub fn parallel_map_mut<T, U, F>(threads: usize, items: &mut [T], f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = effective(threads, n);
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut parts: Vec<Vec<U>> = Vec::new();
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, slice)| {
+                s.spawn(move || {
+                    slice
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(i, t)| fr(ci * chunk + i, t))
+                        .collect::<Vec<U>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("runtime::pool worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Generate `count` values from an index function on up to `threads`
+/// workers, in index order.
+pub fn parallel_gen<U, F>(threads: usize, count: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let ranges = chunk_ranges(count, effective(threads, count));
+    if ranges.len() <= 1 {
+        return (0..count).map(&f).collect();
+    }
+    let parts = parallel_map(ranges.len(), &ranges, |_, &(lo, hi)| {
+        (lo..hi).map(&f).collect::<Vec<U>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Row-block parallel wrapping matmul on exactly `threads` workers
+/// (sequential for `threads ≤ 1`). Bit-identical to [`Mat::matmul`]:
+/// each worker runs the same i-k-j kernel on a disjoint row range of
+/// the output.
+pub fn matmul_with(threads: usize, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let threads = effective(threads, a.rows);
+    if threads <= 1 {
+        return a.matmul(b);
+    }
+    let (kk, n) = (a.cols, b.cols);
+    let ranges = chunk_ranges(a.rows, threads);
+    let parts: Vec<Vec<u64>> = parallel_map(threads, &ranges, |_, &(r0, r1)| {
+        let mut out = vec![0u64; (r1 - r0) * n];
+        for i in r0..r1 {
+            let arow = &a.data[i * kk..(i + 1) * kk];
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for k in 0..kk {
+                let av = arow[k];
+                if av == 0 {
+                    continue;
+                }
+                let brow = &b.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    orow[j] = orow[j].wrapping_add(av.wrapping_mul(brow[j]));
+                }
+            }
+        }
+        out
+    });
+    Mat { rows: a.rows, cols: n, data: parts.concat() }
+}
+
+/// Ring matmul that fans out across [`global_threads`] workers when the
+/// product is large enough to amortize the spawn cost — the default
+/// plaintext-side kernel behind [`crate::runtime::dispatch::matmul`].
+pub fn matmul_auto(a: &Mat, b: &Mat) -> Mat {
+    let threads = global_threads();
+    let work = a.rows.saturating_mul(a.cols).saturating_mul(b.cols);
+    if threads <= 1 || work < PAR_MACS_THRESHOLD || a.rows < 2 {
+        return a.matmul(b);
+    }
+    matmul_with(threads, a, b)
+}
+
+/// Sparse·dense product fanned out across row blocks when large enough;
+/// bit-identical to [`Csr::matmul_dense`].
+pub fn csr_matmul_auto(x: &Csr, rhs: &Mat) -> Mat {
+    assert_eq!(x.cols, rhs.rows, "spmm shape");
+    let threads = global_threads();
+    let work = x.nnz().saturating_mul(rhs.cols);
+    if threads <= 1 || work < PAR_MACS_THRESHOLD || x.rows < 2 {
+        return x.matmul_dense(rhs);
+    }
+    let n = rhs.cols;
+    let ranges = chunk_ranges(x.rows, effective(threads, x.rows));
+    let parts: Vec<Vec<u64>> = parallel_map(threads, &ranges, |_, &(r0, r1)| {
+        let mut out = vec![0u64; (r1 - r0) * n];
+        for r in r0..r1 {
+            let orow = &mut out[(r - r0) * n..(r - r0 + 1) * n];
+            for (j, v) in x.row_iter(r) {
+                let brow = rhs.row(j);
+                for c in 0..n {
+                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
+                }
+            }
+        }
+        out
+    });
+    Mat { rows: x.rows, cols: n, data: parts.concat() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prg;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        assert_eq!(chunk_ranges(0, 4), vec![]);
+        assert_eq!(chunk_ranges(10, 1), vec![(0, 10)]);
+        assert_eq!(chunk_ranges(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        // More parts than items: one range per item.
+        assert_eq!(chunk_ranges(2, 8), vec![(0, 1), (1, 2)]);
+        for (len, parts) in [(100, 7), (64, 64), (5, 2), (1, 1)] {
+            let rs = chunk_ranges(len, parts);
+            assert!(rs.len() <= parts);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[rs.len() - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must abut");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_for_any_thread_count() {
+        let items: Vec<usize> = (0..97).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        for threads in [1, 2, 4, 8, 97, 200] {
+            let got = parallel_map(threads, &items, |i, &x| {
+                assert_eq!(i, x, "global index must match the item");
+                x * 3 + 1
+            });
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_mut_sees_each_item_once() {
+        for threads in [1, 3, 8] {
+            let mut items = vec![0u64; 50];
+            let idx = parallel_map_mut(threads, &mut items, |i, slot| {
+                *slot += 1;
+                i
+            });
+            assert!(items.iter().all(|&v| v == 1), "threads = {threads}");
+            assert_eq!(idx, (0..50).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_gen_matches_sequential() {
+        let want: Vec<u64> = (0..33).map(|i| (i as u64).wrapping_mul(0x9E37)).collect();
+        for threads in [1, 2, 5] {
+            assert_eq!(
+                parallel_gen(threads, 33, |i| (i as u64).wrapping_mul(0x9E37)),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical() {
+        let mut prg = Prg::new(9);
+        let a = Mat::random(37, 19, &mut prg);
+        let b = Mat::random(19, 23, &mut prg);
+        let want = a.matmul(&b);
+        for threads in [1, 2, 4, 8] {
+            assert_eq!(matmul_with(threads, &a, &b), want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn csr_parallel_matmul_is_bit_identical() {
+        let mut prg = Prg::new(10);
+        let mut dense = Mat::random(40, 12, &mut prg);
+        for v in dense.data.iter_mut() {
+            if prg.next_f64() < 0.7 {
+                *v = 0;
+            }
+        }
+        let x = Csr::from_dense(&dense);
+        let rhs = Mat::random(12, 6, &mut prg);
+        let want = x.matmul_dense(&rhs);
+        // Below the work gate this stays sequential — the auto wrapper
+        // must be a no-op equality either way; the parallel kernel's
+        // bit-identity is covered by parallel_matmul_is_bit_identical.
+        let saved = global_threads();
+        set_global_threads(4);
+        let got = csr_matmul_auto(&x, &rhs);
+        set_global_threads(saved);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn global_threads_clamps_to_one() {
+        let saved = global_threads();
+        set_global_threads(0);
+        assert_eq!(global_threads(), 1);
+        set_global_threads(saved);
+    }
+
+    #[test]
+    fn parallelism_constructors() {
+        assert_eq!(Parallelism::default(), Parallelism::sequential());
+        assert_eq!(Parallelism::new(0).threads, 1);
+        assert!(Parallelism::auto().threads >= 1);
+    }
+}

@@ -18,12 +18,36 @@
 /// (padding is then unavoidable). Returns `None` only when no tiles are
 /// available.
 pub fn pick_tile_size(available: &[usize], m: usize, t: usize, n: usize) -> Option<usize> {
+    pick_tile_size_par(available, m, t, n, 1)
+}
+
+/// Parallelism-aware fit rule: like [`pick_tile_size`], but among the
+/// fitting tiles prefer the **largest** whose output tile grid
+/// `⌈m/b⌉·⌈n/b⌉` has at least `threads` tiles — a grid smaller than the
+/// worker count strands threads (e.g. one 256³ call on a 256³ problem
+/// leaves 3 of 4 workers idle where the 128-grid's 4 tiles keep them
+/// all busy). When even the smallest fitting tile cannot produce
+/// `threads` tiles, take the smallest fitting tile (it maximizes the
+/// grid); with `threads = 1` this degenerates to exactly the plain fit
+/// rule. Problems smaller than every tile still fall back to the
+/// smallest available tile.
+pub fn pick_tile_size_par(
+    available: &[usize],
+    m: usize,
+    t: usize,
+    n: usize,
+    threads: usize,
+) -> Option<usize> {
     let limit = m.min(t).min(n);
-    available
+    let threads = threads.max(1);
+    let fitting: Vec<usize> = available.iter().copied().filter(|&b| b <= limit).collect();
+    let grid = |b: usize| m.div_ceil(b) * n.div_ceil(b);
+    fitting
         .iter()
         .copied()
-        .filter(|&b| b <= limit)
+        .filter(|&b| grid(b) >= threads)
         .max()
+        .or_else(|| fitting.iter().copied().min())
         .or_else(|| available.iter().copied().min())
 }
 
@@ -72,5 +96,48 @@ mod tests {
     fn unsorted_availability_is_handled() {
         assert_eq!(pick_tile_size(&[256, 128, 64], 200, 200, 200), Some(128));
         assert_eq!(pick_tile_size(&[256, 128, 64], 32, 500, 500), Some(64));
+    }
+
+    #[test]
+    fn one_thread_matches_the_plain_fit_rule() {
+        for (m, t, n) in [(256, 256, 256), (129, 128, 128), (64, 64, 64), (512, 512, 512)] {
+            assert_eq!(
+                pick_tile_size_par(AVAIL, m, t, n, 1),
+                pick_tile_size(AVAIL, m, t, n),
+                "{m}x{t}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_grid_must_cover_the_worker_count() {
+        // 512³, 4 workers: the 256 tile gives a 2×2 = 4-tile grid — still
+        // the largest fitting choice.
+        assert_eq!(pick_tile_size_par(AVAIL, 512, 512, 512, 4), Some(256));
+        // 512³, 8 workers: 256 strands half the pool (4 tiles < 8);
+        // 128 gives 16 tiles.
+        assert_eq!(pick_tile_size_par(AVAIL, 512, 512, 512, 8), Some(128));
+        // 256³, 4 workers: one 256³ tile would leave 3 workers idle;
+        // the 128 grid has 4 tiles.
+        assert_eq!(pick_tile_size_par(AVAIL, 256, 256, 256, 4), Some(128));
+    }
+
+    #[test]
+    fn starved_grids_fall_back_to_the_smallest_fitting_tile() {
+        // 128³ with 64 workers: even the 128 tile is a 1-tile grid, but
+        // it is the only fitting size — take it (maximal grid).
+        assert_eq!(pick_tile_size_par(AVAIL, 128, 128, 128, 64), Some(128));
+        // 256³ with 64 workers: 128 gives 4 tiles < 64 — still the best
+        // fitting option.
+        assert_eq!(pick_tile_size_par(AVAIL, 256, 256, 256, 64), Some(128));
+        // Tiny problems keep the smallest-available fallback.
+        assert_eq!(pick_tile_size_par(AVAIL, 16, 16, 16, 8), Some(128));
+        assert_eq!(pick_tile_size_par(&[], 128, 128, 128, 8), None);
+    }
+
+    #[test]
+    fn thin_dimensions_still_cap_under_parallelism() {
+        // The inner dimension never contributes tiles but still caps b.
+        assert_eq!(pick_tile_size_par(AVAIL, 1024, 128, 1024, 4), Some(128));
     }
 }

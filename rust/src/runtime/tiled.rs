@@ -19,7 +19,13 @@ use crate::util::error::{Error, Result};
 fn pick_tile<'a>(store: &'a ArtifactStore, m: usize, t: usize, n: usize) -> Option<&'a Entry> {
     let entries = store.by_kind("ring_matmul");
     let sizes: Vec<usize> = entries.iter().map(|e| e.in_shapes[0][0]).collect();
-    let b = crate::runtime::tile_select::pick_tile_size(&sizes, m, t, n)?;
+    let b = crate::runtime::tile_select::pick_tile_size_par(
+        &sizes,
+        m,
+        t,
+        n,
+        crate::runtime::pool::global_threads(),
+    )?;
     entries.into_iter().find(|e| e.in_shapes[0][0] == b)
 }
 

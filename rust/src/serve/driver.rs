@@ -25,6 +25,7 @@ use crate::net::{run_two_party, Chan};
 use crate::offline::bank::{BankConfig, MaterialBank};
 use crate::offline::dealer::Dealer;
 use crate::offline::store::{Demand, TripleStore};
+use crate::runtime::pool::Parallelism;
 use crate::util::error::{Error, Result};
 use std::time::Instant;
 
@@ -43,6 +44,10 @@ pub struct ServeConfig {
     pub bank: BankConfig,
     /// Seed for dealers and mask PRGs (public).
     pub seed: u128,
+    /// Worker threads for party-local compute (bank prefabrication /
+    /// replenishment and the per-batch plaintext-side products). Scores,
+    /// reveals and meters are bit-identical for any value.
+    pub parallelism: Parallelism,
 }
 
 impl Default for ServeConfig {
@@ -52,6 +57,7 @@ impl Default for ServeConfig {
             batches: 12,
             bank: BankConfig::default(),
             seed: 0x5E11E,
+            parallelism: Parallelism::sequential(),
         }
     }
 }
@@ -98,10 +104,13 @@ pub struct ServeOutput {
     pub bank_misses: u64,
     /// Matrix-triple bytes of one prefabricated batch.
     pub per_batch_mat_triple_bytes: u64,
+    /// Number of clusters of the served model.
     pub k: usize,
+    /// Transactions per micro-batch.
     pub batch_rows: usize,
-    /// Full per-phase meters for both parties.
+    /// Party 0's full per-phase meter.
     pub meter_a: Meter,
+    /// Party 1's full per-phase meter.
     pub meter_b: Meter,
 }
 
@@ -165,8 +174,12 @@ fn serve_party(
     blocks: Vec<Vec<f64>>,
     bank_cfg: BankConfig,
     seed: u128,
+    threads: usize,
 ) -> PartyServe {
     let party = chan.party;
+    // Worker count for the per-batch plaintext-side products (see
+    // runtime::pool) — scores and meters are thread-count independent.
+    crate::runtime::pool::set_global_threads(threads);
     let mut scorer = Scorer::new(model, seed ^ 0x5C0_0E);
 
     // One-time warmup: the shared norm row (material generated inline —
@@ -204,8 +217,14 @@ fn serve_party(
     batch_stats.push(s);
     let per_batch = probe.demand.clone();
 
-    // The bank serves every remaining batch from prefabricated stock.
-    let mut bank = MaterialBank::new(Dealer::new(seed ^ 0x33, party), per_batch.clone(), bank_cfg);
+    // The bank serves every remaining batch from prefabricated stock;
+    // prefab and replenishment fan out across the worker pool.
+    let mut bank = MaterialBank::new_par(
+        Dealer::new(seed ^ 0x33, party),
+        per_batch.clone(),
+        bank_cfg,
+        threads,
+    );
     for block in &blocks[1..] {
         let t0 = Instant::now();
         let ts = bank.checkout();
@@ -292,9 +311,10 @@ pub fn serve_stream(
     let k = ma.k;
     let batch_rows = cfg.batch_rows;
     let (bank_cfg, seed) = (cfg.bank, cfg.seed);
+    let threads = cfg.parallelism.threads;
     let ((ra, meter_a), (rb, meter_b)) = run_two_party(
-        move |c| serve_party(c, ma, blocks_a, bank_cfg, seed),
-        move |c| serve_party(c, mb, blocks_b, bank_cfg, seed),
+        move |c| serve_party(c, ma, blocks_a, bank_cfg, seed, threads),
+        move |c| serve_party(c, mb, blocks_b, bank_cfg, seed, threads),
     );
     debug_assert_eq!(ra.results, rb.results, "parties must reveal identical scores");
     debug_assert_eq!(ra.bank_misses + rb.bank_misses, 0, "planned banks must not miss");

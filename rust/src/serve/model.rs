@@ -230,12 +230,38 @@ impl TrainedModel {
     }
 
     /// Persist this party's share to disk.
+    ///
+    /// # Examples
+    ///
+    /// Save, reload, and verify the round trip (corruption would fail
+    /// the checksum at [`TrainedModel::load`]):
+    ///
+    /// ```
+    /// use ppkmeans::ring::matrix::Mat;
+    /// use ppkmeans::serve::model::TrainedModel;
+    ///
+    /// let model = TrainedModel {
+    ///     party: 0,
+    ///     k: 2,
+    ///     d: 3,
+    ///     d_a: 1,
+    ///     mu_share: Mat::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]),
+    ///     stats: vec![(0.0, 1.0)],   // one (min, max) per own column
+    ///     tau: 0.25,
+    /// };
+    /// let path = std::env::temp_dir().join("ppkmeans-doctest.ppkmodel");
+    /// model.save(&path).unwrap();
+    /// let back = TrainedModel::load(&path).unwrap();
+    /// assert_eq!(back, model);
+    /// std::fs::remove_file(&path).ok();
+    /// ```
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_bytes())?;
         Ok(())
     }
 
-    /// Load a share persisted by [`TrainedModel::save`].
+    /// Load a share persisted by [`TrainedModel::save`] (validates
+    /// magic, version, geometry, length, and the checksum).
     pub fn load(path: &Path) -> Result<TrainedModel> {
         let bytes = std::fs::read(path)?;
         TrainedModel::from_bytes(&bytes)

@@ -18,6 +18,19 @@ pub struct Csr {
 
 impl Csr {
     /// Build from a dense matrix, dropping zeros.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ppkmeans::ring::matrix::Mat;
+    /// use ppkmeans::sparse::csr::Csr;
+    ///
+    /// let dense = Mat::from_vec(2, 3, vec![0, 5, 0, 7, 0, 0]);
+    /// let sparse = Csr::from_dense(&dense);
+    /// assert_eq!(sparse.nnz(), 2);
+    /// assert_eq!(sparse.indptr, vec![0, 1, 2]);     // one nonzero per row
+    /// assert_eq!(sparse.to_dense(), dense);         // lossless round-trip
+    /// ```
     pub fn from_dense(m: &Mat) -> Csr {
         let mut indptr = Vec::with_capacity(m.rows + 1);
         let mut indices = vec![];

@@ -16,7 +16,7 @@
 //! ring elements for the Beaver path — much cheaper precisely in the
 //! paper's high-dimensional-sparse regime (d ≫ k).
 
-use crate::he::he2ss::{he2ss_receiver, he2ss_sender};
+use crate::he::he2ss::{he2ss_receiver_par, he2ss_sender_par};
 use crate::he::{ct_from_bytes, ct_to_bytes, HeScheme};
 use crate::bigint::BigUint;
 use crate::net::Chan;
@@ -33,6 +33,7 @@ fn value_bits(d: usize) -> usize {
 /// B-side (dense holder): returns B's share of `X·Y`.
 ///
 /// `x_rows` is the (public) row count of A's sparse matrix.
+/// Single-threaded wrapper over [`dense_party_par`].
 pub fn dense_party<S: HeScheme>(
     chan: &mut Chan,
     pk: &S::Pk,
@@ -41,27 +42,61 @@ pub fn dense_party<S: HeScheme>(
     x_rows: usize,
     prg: &mut Prg,
 ) -> Mat {
-    // 1) encrypt and ship Y.
+    dense_party_par::<S>(chan, pk, sk, y, x_rows, prg, 1)
+}
+
+/// [`dense_party`] with the encryption vector (`d·k` ciphertexts) and
+/// the HE2SS decryptions fanned out across up to `threads` workers.
+/// The wire frames are byte-identical for any thread count (per-element
+/// randomness forks sequentially — see
+/// [`crate::he::encrypt_u64s_many`]).
+pub fn dense_party_par<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    sk: &S::Sk,
+    y: &Mat,
+    x_rows: usize,
+    prg: &mut Prg,
+    threads: usize,
+) -> Mat {
+    // 1) encrypt and ship Y (lane-parallel modexps).
+    let cts = crate::he::encrypt_u64s_many::<S>(pk, &y.data, prg, threads);
     let mut payload = Vec::with_capacity(y.len() * S::ct_bytes(pk));
-    for &v in &y.data {
-        let ct = S::encrypt(pk, &BigUint::from_u64(v), prg);
-        payload.extend_from_slice(&ct_to_bytes::<S>(pk, &ct));
+    for ct in &cts {
+        payload.extend_from_slice(&ct_to_bytes::<S>(pk, ct));
     }
     chan.send_bytes(&payload);
     // 3) receive masked products, decrypt into shares.
-    let shares = he2ss_receiver::<S>(chan, pk, sk, x_rows * y.cols);
+    let shares = he2ss_receiver_par::<S>(chan, pk, sk, x_rows * y.cols, threads);
     Mat::from_vec(x_rows, y.cols, shares)
 }
 
 /// A-side (sparse holder): returns A's share of `X·Y`.
 ///
 /// `y_shape` is the (public) shape of B's dense matrix.
+/// Single-threaded wrapper over [`sparse_party_par`].
 pub fn sparse_party<S: HeScheme>(
     chan: &mut Chan,
     pk: &S::Pk,
     x: &Csr,
     y_shape: (usize, usize),
     prg: &mut Prg,
+) -> Mat {
+    sparse_party_par::<S>(chan, pk, x, y_shape, prg, 1)
+}
+
+/// [`sparse_party`] with the homomorphic evaluation (work ∝ nnz(X)·k)
+/// sharded across row blocks on up to `threads` workers, and the
+/// mask-and-return conversion fanned out likewise. Output cells are
+/// assembled in row order; the wire traffic is byte-identical for any
+/// thread count.
+pub fn sparse_party_par<S: HeScheme>(
+    chan: &mut Chan,
+    pk: &S::Pk,
+    x: &Csr,
+    y_shape: (usize, usize),
+    prg: &mut Prg,
+    threads: usize,
 ) -> Mat {
     let (d, k) = y_shape;
     assert_eq!(x.cols, d, "X cols must match Y rows");
@@ -71,25 +106,32 @@ pub fn sparse_party<S: HeScheme>(
     assert_eq!(payload.len(), d * k * w, "ciphertext frame");
     let y_cts: Vec<BigUint> = payload.chunks_exact(w).map(ct_from_bytes).collect();
 
-    // 2) sparse evaluation: for each row, combine only nonzero columns.
+    // 2) sparse evaluation: for each row, combine only nonzero columns
+    //    (row-block parallel; each output cell depends on one row only).
     let zero_ct = S::encrypt(pk, &BigUint::zero(), prg);
-    let mut out_cts = Vec::with_capacity(x.rows * k);
-    for r in 0..x.rows {
-        for c in 0..k {
-            let mut acc: Option<BigUint> = None;
-            for (j, v) in x.row_iter(r) {
-                let term = S::smul(pk, &y_cts[j * k + c], &BigUint::from_u64(v));
-                acc = Some(match acc {
-                    None => term,
-                    Some(a) => S::add(pk, &a, &term),
-                });
+    let ranges = crate::runtime::pool::chunk_ranges(x.rows, threads.max(1));
+    let blocks: Vec<Vec<BigUint>> =
+        crate::runtime::pool::parallel_map(threads, &ranges, |_, &(r0, r1)| {
+            let mut cts = Vec::with_capacity((r1 - r0) * k);
+            for r in r0..r1 {
+                for c in 0..k {
+                    let mut acc: Option<BigUint> = None;
+                    for (j, v) in x.row_iter(r) {
+                        let term = S::smul(pk, &y_cts[j * k + c], &BigUint::from_u64(v));
+                        acc = Some(match acc {
+                            None => term,
+                            Some(a) => S::add(pk, &a, &term),
+                        });
+                    }
+                    cts.push(acc.unwrap_or_else(|| zero_ct.clone()));
+                }
             }
-            out_cts.push(acc.unwrap_or_else(|| zero_ct.clone()));
-        }
-    }
+            cts
+        });
+    let out_cts: Vec<BigUint> = blocks.concat();
 
     // 3) mask + rerandomize + convert to shares.
-    let shares = he2ss_sender::<S>(chan, pk, &out_cts, value_bits(d), prg);
+    let shares = he2ss_sender_par::<S>(chan, pk, &out_cts, value_bits(d), prg, threads);
     Mat::from_vec(x.rows, k, shares)
 }
 

@@ -32,11 +32,14 @@ pub const CMP_ROUNDS: u64 = 7;
 /// An XOR-shared, bit-packed boolean vector of `n` lanes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BoolShare {
+    /// Number of valid lanes.
     pub n: usize,
+    /// The lanes, packed 64 per word (tail bits masked to zero).
     pub words: Vec<u64>,
 }
 
 impl BoolShare {
+    /// The all-zero share of `n` lanes.
     pub fn zeros(n: usize) -> Self {
         BoolShare { n, words: vec![0; bit_words(n)] }
     }
@@ -74,6 +77,7 @@ impl BoolShare {
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
+    /// Write lane `i` of this share.
     #[inline]
     pub fn set(&mut self, i: usize, v: bool) {
         if v {

@@ -56,8 +56,11 @@ pub enum RoundPolicy {
 /// Per-party protocol session: channel + offline material + local PRG,
 /// plus the round policy that decides how gates share flights.
 pub struct Session<'a> {
+    /// The party's accounted channel (round buffer + meter).
     pub chan: &'a mut Chan,
+    /// Offline material source the gates draw triples/daBits from.
     pub ts: &'a mut dyn TripleSource,
+    /// Local mask/share PRG (need not match the peer's).
     pub prg: Prg,
     policy: RoundPolicy,
 }
@@ -67,6 +70,8 @@ pub struct Session<'a> {
 pub type Ctx<'a> = Session<'a>;
 
 impl<'a> Session<'a> {
+    /// Bundle a channel, a triple source and a local PRG into a session
+    /// (coalescing round policy by default).
     pub fn new(chan: &'a mut Chan, ts: &'a mut dyn TripleSource, prg: Prg) -> Self {
         Session { chan, ts, prg, policy: RoundPolicy::Coalesced }
     }

@@ -15,8 +15,11 @@ use crate::ring::matrix::Mat;
 /// One party's share of a matrix Beaver triple `Z = U(m×k) · V(k×n)`.
 #[derive(Debug, Clone)]
 pub struct MatTriple {
+    /// Share of the left mask `U (m×k)`.
     pub u: Mat,
+    /// Share of the right mask `V (k×n)`.
     pub v: Mat,
+    /// Share of the product `Z = U·V (m×n)`.
     pub z: Mat,
 }
 
@@ -24,8 +27,11 @@ pub struct MatTriple {
 /// `z[i] = u[i]·v[i]` (used by SMUL / MUX / B2A on lane vectors).
 #[derive(Debug, Clone)]
 pub struct VecTriple {
+    /// Share of the left mask lanes.
     pub u: Vec<u64>,
+    /// Share of the right mask lanes.
     pub v: Vec<u64>,
+    /// Share of the lane-wise products `z[i] = u[i]·v[i]`.
     pub z: Vec<u64>,
 }
 
@@ -33,9 +39,13 @@ pub struct VecTriple {
 /// `c = a & b` (XOR-shared), `n` lanes packed 64-per-word.
 #[derive(Debug, Clone)]
 pub struct BitTriple {
+    /// XOR share of the `a` lanes (packed words).
     pub a: Vec<u64>,
+    /// XOR share of the `b` lanes (packed words).
     pub b: Vec<u64>,
+    /// XOR share of the AND lanes `c = a & b` (packed words).
     pub c: Vec<u64>,
+    /// Number of valid lanes (the last word may be partial).
     pub n: usize,
 }
 
@@ -49,8 +59,11 @@ pub struct BitTriple {
 /// shares are known before the reveal.
 #[derive(Debug, Clone)]
 pub struct DaBits {
+    /// Number of valid lanes.
     pub n: usize,
+    /// XOR shares of the bits, packed 64 lanes per word.
     pub bool_words: Vec<u64>,
+    /// Additive shares of the same bits in Z_{2^64}, one word per lane.
     pub arith: Vec<u64>,
 }
 
@@ -70,6 +83,7 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Accumulate another ledger's counters into this one.
     pub fn merge(&mut self, o: &Ledger) {
         self.mat_triple_elems += o.mat_triple_elems;
         self.mat_triples += o.mat_triples;
@@ -102,6 +116,58 @@ pub trait TripleSource {
 
     /// Material consumed so far.
     fn ledger(&self) -> Ledger;
+
+    // ------------------------------------------------------------------
+    // Batch draws — the offline-phase fan-out surface.
+    //
+    // `TripleStore::prefill_par` and `MaterialBank` replenishment call
+    // these; sources that can fabricate items independently (the PRG
+    // dealer) override them to shard the expansion across `threads`
+    // workers. Two hard contracts bind every implementation:
+    //
+    // 1. **Stream equivalence** — a batch call must return exactly what
+    //    the same sequence of single draws would have (so one party may
+    //    prefill in batches while its peer draws one at a time and the
+    //    shares still reconstruct);
+    // 2. **Thread independence** — the returned material is
+    //    bit-identical for any `threads` value.
+    // ------------------------------------------------------------------
+
+    /// Draw `count` matrix triples of one shape, fanning the fabrication
+    /// across up to `threads` workers when the source supports it. The
+    /// default runs the single-draw path sequentially.
+    fn mat_triples(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        count: usize,
+        threads: usize,
+    ) -> Vec<MatTriple> {
+        let _ = threads;
+        (0..count).map(|_| self.mat_triple(m, k, n)).collect()
+    }
+
+    /// Draw one elementwise-triple chunk per entry of `lanes`, fanning
+    /// across up to `threads` workers when supported.
+    fn vec_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<VecTriple> {
+        let _ = threads;
+        lanes.iter().map(|&n| self.vec_triple(n)).collect()
+    }
+
+    /// Draw one boolean-triple chunk per entry of `lanes`, fanning
+    /// across up to `threads` workers when supported.
+    fn bit_triples(&mut self, lanes: &[usize], threads: usize) -> Vec<BitTriple> {
+        let _ = threads;
+        lanes.iter().map(|&n| self.bit_triple(n)).collect()
+    }
+
+    /// Draw one daBit chunk per entry of `lanes`, fanning across up to
+    /// `threads` workers when supported.
+    fn dabits_many(&mut self, lanes: &[usize], threads: usize) -> Vec<DaBits> {
+        let _ = threads;
+        lanes.iter().map(|&n| self.dabits(n)).collect()
+    }
 }
 
 /// Number of 64-bit words needed to pack `n` bit lanes.

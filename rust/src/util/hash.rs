@@ -1,0 +1,169 @@
+//! A 256-bit Merkle–Damgård hash over the in-repo Speck-128/128
+//! permutation (Davies–Meyer mode, two independent lanes).
+//!
+//! Stand-in for SHA-256 so the crate stays dependency-free in an
+//! offline container — the same substitution policy as Speck-for-AES in
+//! [`crate::util::cipher`]. (The seed code imported the external `sha2`
+//! crate here without declaring it, which could never build offline.)
+//! Both uses are *local key derivation* where the two parties must
+//! simply agree on the function: hashing Diffie-Hellman group elements
+//! to base-OT seeds ([`crate::offline::baseot`]) and the
+//! correlation-robust row-key mask of the IKNP extension
+//! ([`crate::offline::iknp`]). For a production deployment swap this
+//! module for hardware SHA-256; every caller goes through [`Hash256`].
+//!
+//! Construction: two 128-bit chaining lanes with distinct IVs; each
+//! 16-byte message block `B` updates every lane `s` as
+//! `s ← E_B(s) ⊕ s` (Davies–Meyer with the block as the cipher key),
+//! with standard length-strengthening (an `0x80` marker byte, zero
+//! padding, and a final block carrying the total bit length).
+
+use crate::util::cipher::Speck128;
+
+/// Streaming 256-bit hash: `new` → any number of `update`s →
+/// `finalize`.
+pub struct Hash256 {
+    state: [u128; 2],
+    buf: [u8; 16],
+    buf_len: usize,
+    total_bytes: u64,
+}
+
+/// Distinct lane IVs (digits of π and e — nothing-up-my-sleeve).
+const IV: [u128; 2] = [
+    0x243F_6A88_85A3_08D3_1319_8A2E_0370_7344,
+    0x9E37_79B9_7F4A_7C15_F39C_C060_5CED_C834,
+];
+
+impl Hash256 {
+    /// A fresh hash state.
+    pub fn new() -> Hash256 {
+        Hash256 { state: IV, buf: [0u8; 16], buf_len: 0, total_bytes: 0 }
+    }
+
+    fn compress(state: &mut [u128; 2], block: &[u8; 16]) {
+        let cipher = Speck128::new(*block);
+        for s in state.iter_mut() {
+            *s ^= cipher.encrypt_u128(*s);
+        }
+    }
+
+    /// Absorb more input (any `&[u8]`-like value).
+    pub fn update(&mut self, data: impl AsRef<[u8]>) {
+        let mut data = data.as_ref();
+        self.total_bytes = self.total_bytes.wrapping_add(data.len() as u64);
+        // Top up a partial block first.
+        if self.buf_len > 0 {
+            let take = (16 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 16 {
+                let block = self.buf;
+                Self::compress(&mut self.state, &block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 16 {
+            let block: [u8; 16] = data[..16].try_into().unwrap();
+            Self::compress(&mut self.state, &block);
+            data = &data[16..];
+        }
+        // Only overwrite the buffer when bytes actually remain: if the
+        // top-up branch consumed all of `data` without completing a
+        // block, `buf_len` still counts buffered bytes that must not be
+        // discarded. When `data` is non-empty here, `buf_len` is
+        // provably 0 (the top-up either filled and flushed the block or
+        // ate the whole input).
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    /// Pad, absorb the length block, and return the 32-byte digest.
+    pub fn finalize(mut self) -> [u8; 32] {
+        // 0x80 marker + zero padding to a block boundary.
+        let mut tail = [0u8; 16];
+        tail[..self.buf_len].copy_from_slice(&self.buf[..self.buf_len]);
+        tail[self.buf_len] = 0x80;
+        Self::compress(&mut self.state, &tail);
+        // Length-strengthening block: total bit length, domain-marked.
+        let mut len_block = [0u8; 16];
+        len_block[..8].copy_from_slice(&(self.total_bytes.wrapping_mul(8)).to_le_bytes());
+        len_block[8..].copy_from_slice(b"ppk-h256");
+        Self::compress(&mut self.state, &len_block);
+        let mut out = [0u8; 32];
+        out[..16].copy_from_slice(&self.state[0].to_le_bytes());
+        out[16..].copy_from_slice(&self.state[1].to_le_bytes());
+        out
+    }
+}
+
+impl Default for Hash256 {
+    fn default() -> Self {
+        Hash256::new()
+    }
+}
+
+/// One-shot convenience over [`Hash256`].
+pub fn hash256(data: &[u8]) -> [u8; 32] {
+    let mut h = Hash256::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        assert_eq!(hash256(b"abc"), hash256(b"abc"));
+        assert_ne!(hash256(b"abc"), hash256(b"abd"));
+        assert_ne!(hash256(b""), hash256(b"\0"));
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..123u8).collect();
+        for split in [0usize, 1, 15, 16, 17, 64, 123] {
+            let mut h = Hash256::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), hash256(&data), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn short_follow_up_updates_keep_buffered_bytes() {
+        // Regression: a later update shorter than the block remainder
+        // (including empty) must not clobber the partial-block buffer.
+        let mut h = Hash256::new();
+        h.update(b"a");
+        h.update(b"b");
+        assert_eq!(h.finalize(), hash256(b"ab"));
+        let mut h = Hash256::new();
+        h.update(b"0123456789");
+        h.update(b"");
+        h.update(b"ab");
+        assert_eq!(h.finalize(), hash256(b"0123456789ab"));
+    }
+
+    #[test]
+    fn length_extension_padding_separates_prefixes() {
+        // "aa" + "" must differ from "a" + "a"-with-boundary tricks: the
+        // length block separates messages of equal padded content.
+        let a = hash256(&[0x80]);
+        let b = hash256(&[]);
+        assert_ne!(a, b, "marker byte must not collide with empty input");
+    }
+
+    #[test]
+    fn avalanche_is_plausible() {
+        let a = hash256(b"correlation robust");
+        let b = hash256(b"correlation robusu");
+        let diff: u32 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones()).sum();
+        assert!(diff > 80, "only {diff} differing bits");
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cipher;
 pub mod error;
+pub mod hash;
 pub mod prng;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,185 @@
+//! Determinism regression for the multi-core runtime (`runtime::pool`):
+//! a protocol run fanned out across N workers must be **transcript
+//! identical** to the single-threaded run — bit-identical reveals and
+//! shares, and identical per-phase Meter flight/byte counts — so the
+//! thread count is purely a throughput knob and every existing round /
+//! byte regression budget applies unchanged at any parallelism.
+
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::secure;
+use ppkmeans::net::meter::PhaseStats;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::offline::dealer::Dealer;
+use ppkmeans::offline::store::{Demand, TripleStore};
+use ppkmeans::runtime::pool::Parallelism;
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::ss::triples::TripleSource;
+
+fn meter_snapshot(out: &secure::SecureKmeansOutput) -> Vec<(String, PhaseStats)> {
+    out.meter_a.phases().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+#[test]
+fn secure_kmeans_is_bit_identical_across_thread_counts() {
+    // Full training run, tiled so per-tile fan-out actually engages.
+    let mut spec = BlobSpec::new(400, 6, 3);
+    spec.spread = 0.02;
+    let data = spec.generate(71);
+    let base = SecureKmeansConfig {
+        k: 3,
+        iters: 3,
+        partition: Partition::Vertical { d_a: 3 },
+        tile_rows: Some(128),
+        tile_flights: TileFlights::Lockstep,
+        ..Default::default()
+    };
+    let seq = secure::run(&data, &base).unwrap();
+    let par_cfg = SecureKmeansConfig { parallelism: Parallelism::new(4), ..base };
+    let par = secure::run(&data, &par_cfg).unwrap();
+
+    // Reveals: bit-identical (exact fixed-point words decode to exact
+    // f64s, so f64 equality is the right assertion here).
+    assert_eq!(par.centroids, seq.centroids, "centroids must be bit-identical");
+    assert_eq!(par.assignments, seq.assignments);
+    assert_eq!(par.centroid_shares[0], seq.centroid_shares[0], "party-0 share");
+    assert_eq!(par.centroid_shares[1], seq.centroid_shares[1], "party-1 share");
+
+    // Transcript: every phase's flight and byte counters must match —
+    // the Chan schedule never sees the worker pool.
+    assert_eq!(meter_snapshot(&par), meter_snapshot(&seq), "party-0 meters");
+    let on_seq = seq.meter_a.total_prefix("online.");
+    let on_par = par.meter_a.total_prefix("online.");
+    assert_eq!(on_par.rounds, on_seq.rounds);
+    assert_eq!(on_par.bytes_sent, on_seq.bytes_sent);
+    assert_eq!(par.meter_b.total().rounds, seq.meter_b.total().rounds);
+    assert_eq!(par.meter_b.total().bytes_sent, seq.meter_b.total().bytes_sent);
+
+    // Offline accounting: same demand, same ledger.
+    assert_eq!(par.demand, seq.demand);
+    assert_eq!(par.ledger, seq.ledger);
+}
+
+#[test]
+fn horizontal_run_is_thread_count_independent() {
+    let mut spec = BlobSpec::new(90, 4, 2);
+    spec.spread = 0.02;
+    let data = spec.generate(72);
+    let base = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Horizontal { n_a: 40 },
+        tile_rows: Some(32),
+        ..Default::default()
+    };
+    let seq = secure::run(&data, &base).unwrap();
+    let par = secure::run(
+        &data,
+        &SecureKmeansConfig { parallelism: Parallelism::new(4), ..base },
+    )
+    .unwrap();
+    assert_eq!(par.centroids, seq.centroids);
+    assert_eq!(par.assignments, seq.assignments);
+    assert_eq!(meter_snapshot(&par), meter_snapshot(&seq));
+}
+
+#[test]
+fn serving_is_bit_identical_across_thread_counts() {
+    // Train once, then serve the same stream with 1-thread and 4-thread
+    // scorers: identical reveals (assignments + fraud flags) and
+    // identical serve-phase meters, batch for batch.
+    let f = fraud_gen::generate(300, 0.05, 4100);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let (_, models) = train_model(&f.data, &cfg, 0.05).unwrap();
+    let stream = fraud_gen::generate(4 * 16, 0.05, 4200);
+    let base = ServeConfig {
+        batch_rows: 16,
+        batches: 4,
+        bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 1 },
+        seed: 0xDE7,
+        ..Default::default()
+    };
+    let seq = serve_stream(models.clone(), &stream.data, &base).unwrap();
+    let par_cfg = ServeConfig { parallelism: Parallelism::new(4), ..base };
+    let par = serve_stream(models, &stream.data, &par_cfg).unwrap();
+
+    assert_eq!(par.results, seq.results, "scores and flags must be bit-identical");
+    for (i, (s, p)) in seq.batch_stats.iter().zip(&par.batch_stats).enumerate() {
+        assert_eq!(p.online, s.online, "batch {i} serve-phase meters");
+        assert_eq!(p.flagged, s.flagged, "batch {i} flags");
+    }
+    assert_eq!(
+        par.meter_a.total_prefix("serve.").rounds,
+        seq.meter_a.total_prefix("serve.").rounds
+    );
+    assert_eq!(
+        par.meter_a.total_prefix("serve.").bytes_sent,
+        seq.meter_a.total_prefix("serve.").bytes_sent
+    );
+    assert_eq!(par.per_batch_demand, seq.per_batch_demand);
+    assert_eq!(par.bank_misses + seq.bank_misses, 0);
+}
+
+#[test]
+fn parallel_prefill_is_bit_identical_and_cross_party_consistent() {
+    let mut demand = Demand::default();
+    demand.mat(16, 4, 3);
+    demand.mat(16, 4, 3);
+    demand.mat(4, 4, 4);
+    demand.vec_lanes(32);
+    demand.vec_lanes(8);
+    demand.bit_lanes(128);
+    demand.dabit_lanes(24);
+
+    // Thread-count independence of the stocked material.
+    let draw = |store: &mut TripleStore<Dealer>| {
+        let m = store.mat_triple(16, 4, 3);
+        let v = store.vec_triple(32);
+        let b = store.bit_triple(128);
+        let d = store.dabits(24);
+        (m, v, b, d)
+    };
+    let mut base = TripleStore::new(Dealer::new(0xFEED, 1));
+    base.prefill(&demand);
+    let (bm, bv, bb, bd) = draw(&mut base);
+    for threads in [2usize, 4, 8] {
+        let mut s = TripleStore::new(Dealer::new(0xFEED, 1));
+        s.prefill_par(&demand, threads);
+        let (m, v, b, d) = draw(&mut s);
+        assert_eq!(m.z, bm.z, "threads = {threads}");
+        assert_eq!(v.z, bv.z, "threads = {threads}");
+        assert_eq!(b.c, bb.c, "threads = {threads}");
+        assert_eq!(d.arith, bd.arith, "threads = {threads}");
+        assert_eq!(s.misses, 0);
+    }
+
+    // Mixed styles stay consistent: party 0 prefills with 4 workers,
+    // party 1 draws inline one item at a time — shares must still
+    // reconstruct to valid triples.
+    let mut s0 = TripleStore::new(Dealer::new(0xC0FFEE, 0));
+    s0.prefill_par(&demand, 4);
+    let mut d1 = Dealer::new(0xC0FFEE, 1);
+    for _ in 0..2 {
+        let t0 = s0.mat_triple(16, 4, 3);
+        let t1 = d1.mat_triple(16, 4, 3);
+        let u = t0.u.add(&t1.u);
+        let v = t0.v.add(&t1.v);
+        let z = t0.z.add(&t1.z);
+        assert_eq!(u.matmul(&v), z);
+    }
+    let t0 = s0.vec_triple(32);
+    let t1 = d1.vec_triple(32);
+    for i in 0..32 {
+        let u = t0.u[i].wrapping_add(t1.u[i]);
+        let v = t0.v[i].wrapping_add(t1.v[i]);
+        let z = t0.z[i].wrapping_add(t1.z[i]);
+        assert_eq!(u.wrapping_mul(v), z, "lane {i}");
+    }
+    assert_eq!(s0.misses, 0, "prefilled draws must all hit");
+}

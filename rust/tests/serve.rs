@@ -89,6 +89,7 @@ fn train_save_load_score_forever() {
         batches,
         bank: BankConfig { prefab_batches: 5, low_water: 2, refill_batches: 4 },
         seed: 0xBA4C,
+        ..Default::default()
     };
     let served = serve_stream([la.clone(), lb.clone()], &stream.data, &scfg).unwrap();
     assert_eq!(served.results.len(), batches);
