@@ -2,11 +2,21 @@
 //! t = 10, l = 64).
 //!
 //! Paper grid: n ∈ {10^4, 10^5}, k ∈ {2, 5}. Default run scales n ÷ 10
-//! (pass `--full` after `--` for paper sizes) and caps the measured
-//! M-Kmeans instance at `MK_CAP` samples, extrapolating linearly (its
-//! per-sample cost is linear: inline OT + per-sample GC — documented in
-//! EXPERIMENTS.md). Reported time = measured compute + modeled LAN link
-//! time from exact byte/round counts.
+//! (pass `--full` after `--` for paper sizes, `--smoke` for the CI
+//! quick mode) and caps the measured M-Kmeans instance at `MK_CAP`
+//! samples, extrapolating linearly (its per-sample cost is linear:
+//! inline OT + per-sample GC — documented in EXPERIMENTS.md). Reported
+//! time = measured compute + modeled LAN link time from exact
+//! byte/round counts.
+//!
+//! **Measured link time.** Alongside the modeled figures, rows up to
+//! `MEASURE_CAP` samples are re-run with a deterministic link shaper
+//! (`net::shape`) enforcing the paper's LAN and WAN models on the
+//! loopback transport: the reported wall-clock then *measures* compute
+//! + RTT per flight + bandwidth pacing per byte. Both appear in
+//! `BENCH_table1_runtime.json` so modeled and measured numbers can be
+//! compared directly; above the cap the shaped-WAN run would take hours
+//! (the link model says so) and the measured fields are `null`.
 //!
 //! Paper reference rows (minutes): (10^4,2): 0.33/1.61/1.94 vs 1.92;
 //! (10^4,5): 0.94/4.70/5.64 vs 5.81; (10^5,2): 3.12/15.19/18.31 vs
@@ -14,36 +24,64 @@
 
 use ppkmeans::bench::{fmt_secs, Table};
 use ppkmeans::coordinator::Report;
-use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::data::blobs::{BlobSpec, Dataset};
 use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
 use ppkmeans::kmeans::secure;
 use ppkmeans::mkmeans::{self, MkmeansConfig};
 use ppkmeans::net::cost::CostModel;
-use ppkmeans::offline::pricing;
+use ppkmeans::offline::pricing::{self, OtCalibration};
 
 /// Largest M-Kmeans instance actually executed (rest extrapolated).
 const MK_CAP: usize = 1_000;
 
+/// Largest instance measured under the shaped links (the shaped-WAN run
+/// above this would take hours, as the model itself predicts).
+const MEASURE_CAP: usize = 4_000;
+
+/// Wall-clock of a full run with the transport shaped to `link`.
+fn shaped_wall(ds: &Dataset, cfg: &SecureKmeansConfig, link: CostModel) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.shape = Some(link);
+    secure::run(ds, &cfg).expect("shaped run").wall_secs
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
-    let ns: &[usize] = if full { &[10_000, 100_000] } else { &[1_000, 4_000] };
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ns: &[usize] = if full {
+        &[10_000, 100_000]
+    } else if smoke {
+        &[256]
+    } else {
+        &[1_000, 4_000]
+    };
     let ks = [2usize, 5];
-    let (d, iters) = (2usize, 10usize);
+    let d = 2usize;
+    let iters = if smoke { 3 } else { 10 };
     let lan = CostModel::lan();
+    let wan = CostModel::wan();
 
-    println!("calibrating OT generator...");
-    let cal = pricing::calibrate();
-    println!(
-        "  {:.2} us/OT, {:.2} us/bit-lane, setup {:.2}s",
-        cal.secs_per_ot * 1e6,
-        cal.secs_per_bit_lane * 1e6,
-        cal.setup_secs
-    );
+    let cal = if smoke {
+        // Fixed calibration keeps the CI quick mode fast; wall-clock is
+        // informational there anyway (counts are what the goldens pin).
+        OtCalibration { secs_per_ot: 1e-5, secs_per_bit_lane: 1e-6, setup_secs: 0.5 }
+    } else {
+        println!("calibrating OT generator...");
+        let cal = pricing::calibrate();
+        println!(
+            "  {:.2} us/OT, {:.2} us/bit-lane, setup {:.2}s",
+            cal.secs_per_ot * 1e6,
+            cal.secs_per_bit_lane * 1e6,
+            cal.setup_secs
+        );
+        cal
+    };
 
     let mut table = Table::new(
         "Table 1 — running time (LAN, d=2, t=10, l=64)",
-        &["n", "k", "ours online", "ours offline", "ours total", "M-Kmeans"],
+        &["n", "k", "ours online", "ours offline", "ours total", "measured LAN", "M-Kmeans"],
     );
+    let mut rows_json: Vec<String> = Vec::new();
 
     for &n in ns {
         for &k in &ks {
@@ -56,31 +94,83 @@ fn main() {
             };
             let out = secure::run(&ds, &cfg).expect("ours");
             let report = Report::from_run(&out, &lan, &cal);
+            let report_wan = Report::from_run(&out, &wan, &cal);
 
-            // M-Kmeans: measured at min(n, MK_CAP), linear extrapolation.
-            let mk_n = n.min(MK_CAP);
-            let mk_ds = BlobSpec::new(mk_n, d, k).generate(1);
-            let mcfg = MkmeansConfig { k, iters, seed: cfg.seed, d_a: 1 };
-            let mk = mkmeans::run_vertical(&mk_ds, &mcfg).expect("mkmeans");
-            let scale = n as f64 / mk_n as f64;
-            let mk_time =
-                (mk.wall_secs + lan.time_raw(mk.bytes_total / 2, mk.rounds)) * scale;
+            // Measured: the same protocol with the loopback transport
+            // shaped to each link (RTT per flight + bandwidth pacing).
+            let (m_lan, m_wan) = if n <= MEASURE_CAP {
+                (Some(shaped_wall(&ds, &cfg, lan)), Some(shaped_wall(&ds, &cfg, wan)))
+            } else {
+                (None, None)
+            };
 
+            // M-Kmeans: measured at min(n, MK_CAP), linear extrapolation
+            // (skipped in the CI quick mode).
+            let mk_time = if smoke {
+                None
+            } else {
+                let mk_n = n.min(MK_CAP);
+                let mk_ds = BlobSpec::new(mk_n, d, k).generate(1);
+                let mcfg = MkmeansConfig { k, iters, seed: cfg.seed, d_a: 1 };
+                let mk = mkmeans::run_vertical(&mk_ds, &mcfg).expect("mkmeans");
+                let scale = n as f64 / mk_n as f64;
+                Some((mk.wall_secs + lan.time_raw(mk.bytes_total / 2, mk.rounds)) * scale)
+            };
+
+            // Both parties summed, matching BENCH_table2_comm.json's
+            // field of the same name; flights are party 0's.
+            let online_bytes = out.meter_a.total_prefix("online.").bytes_sent
+                + out.meter_b.total_prefix("online.").bytes_sent;
+            let online_rounds = out.meter_a.total_prefix("online.").rounds;
             table.row(vec![
                 format!("{n}"),
                 format!("{k}"),
                 fmt_secs(report.online_secs),
                 fmt_secs(report.offline_secs),
                 fmt_secs(report.total_secs()),
-                format!(
-                    "{}{}",
-                    fmt_secs(mk_time),
-                    if mk_n < n { "*" } else { "" }
-                ),
+                m_lan.map(fmt_secs).unwrap_or_else(|| "-".into()),
+                mk_time.map(fmt_secs).unwrap_or_else(|| "-".into()),
             ]);
+            let opt = |v: Option<f64>| {
+                v.map(|x| format!("{x:.6}")).unwrap_or_else(|| "null".into())
+            };
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"k\": {k}, \"iters\": {iters}, \
+                 \"online_bytes\": {}, \"online_rounds\": {}, \
+                 \"modeled\": {{\"lan_online_secs\": {:.6}, \"wan_online_secs\": {:.6}, \
+                 \"offline_secs\": {:.6}}}, \
+                 \"measured\": {{\"lan_wall_secs\": {}, \"wan_wall_secs\": {}}}, \
+                 \"mkmeans_lan_secs\": {}}}",
+                online_bytes,
+                online_rounds,
+                report.online_secs,
+                report_wan.online_secs,
+                report.offline_secs,
+                opt(m_lan),
+                opt(m_wan),
+                opt(mk_time),
+            ));
         }
     }
     table.print();
-    println!("\n(*) M-Kmeans measured at n={MK_CAP} and scaled linearly (cost ∝ n).");
-    println!("shape checks: ours-online ≪ M-Kmeans; ours-total ≈ M-Kmeans (same order).");
+    if !smoke {
+        println!("\n(*) M-Kmeans measured at n={MK_CAP} and scaled linearly (cost ∝ n).");
+    }
+    println!("shape checks: ours-online ≪ M-Kmeans; measured LAN ≈ modeled LAN online.");
+
+    let mode = if full {
+        "full"
+    } else if smoke {
+        "smoke"
+    } else {
+        "default"
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"table1_runtime\",\n  \"mode\": \"{mode}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    match std::fs::write("BENCH_table1_runtime.json", &json) {
+        Ok(()) => println!("wrote BENCH_table1_runtime.json"),
+        Err(e) => eprintln!("could not write BENCH_table1_runtime.json: {e}"),
+    }
 }

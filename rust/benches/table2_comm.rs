@@ -1,52 +1,56 @@
 //! Table 2 — communication size (MB) vs M-Kmeans (d = 2, t = 10,
 //! l = 64). Byte counts are exact at any scale: every protocol message
-//! is really serialized and metered; offline bytes come from the IKNP/
-//! Gilboa formulas validated against the real generator
-//! (`offline::pricing`).
+//! is really serialized and metered — the online column is a
+//! **measurement**, not a model — while offline bytes come from the
+//! IKNP/Gilboa formulas validated against the real generator
+//! (`offline::pricing`). `--smoke` runs the CI quick grid; counts land
+//! in `BENCH_table2_comm.json` and are pinned by the goldens in
+//! `rust/tests/goldens/`.
 //!
 //! Paper reference rows (MB): (10^4,2): 1084/3660/4744 vs 5118;
 //! (10^4,5): 3156/12900/16056 vs 18632; (10^5,2): 14147/32598/46745 vs
 //! 47342; (10^5,5): 33572/131243/164815 vs 192192.
 
-use ppkmeans::bench::{fmt_bytes, Table};
+use ppkmeans::bench::{fmt_bytes, train_counts, Table};
 use ppkmeans::data::blobs::BlobSpec;
-use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
-use ppkmeans::kmeans::secure;
 use ppkmeans::mkmeans::{self, MkmeansConfig};
-use ppkmeans::offline::pricing;
 
 const MK_CAP: usize = 1_000;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
-    let ns: &[usize] = if full { &[10_000, 100_000] } else { &[1_000, 4_000] };
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ns: &[usize] = if full {
+        &[10_000, 100_000]
+    } else if smoke {
+        &[256]
+    } else {
+        &[1_000, 4_000]
+    };
     let ks = [2usize, 5];
-    let (d, iters) = (2usize, 10usize);
+    let d = 2usize;
+    let iters = if smoke { 3 } else { 10 };
 
     let mut table = Table::new(
         "Table 2 — communication (d=2, t=10, l=64), both parties summed",
         &["n", "k", "ours online", "ours offline", "ours total", "M-Kmeans"],
     );
+    let mut rows_json: Vec<String> = Vec::new();
 
     for &n in ns {
         for &k in &ks {
-            let ds = BlobSpec::new(n, d, k).generate(1);
-            let cfg = SecureKmeansConfig {
-                k,
-                iters,
-                partition: Partition::Vertical { d_a: 1 },
-                ..Default::default()
-            };
-            let out = secure::run(&ds, &cfg).expect("ours");
-            let online = out.meter_a.total_prefix("online.").bytes_sent
-                + out.meter_b.total_prefix("online.").bytes_sent;
-            let offline = pricing::offline_bytes(&out.demand);
+            let c = train_counts(n, d, k, iters);
+            let (online, offline) = (c.online_bytes, c.offline_bytes);
 
-            let mk_n = n.min(MK_CAP);
-            let mk_ds = BlobSpec::new(mk_n, d, k).generate(1);
-            let mcfg = MkmeansConfig { k, iters, seed: cfg.seed, d_a: 1 };
-            let mk = mkmeans::run_vertical(&mk_ds, &mcfg).expect("mkmeans");
-            let mk_bytes = (mk.bytes_total as f64 * n as f64 / mk_n as f64) as u64;
+            let mk_bytes = if smoke {
+                None
+            } else {
+                let mk_n = n.min(MK_CAP);
+                let mk_ds = BlobSpec::new(mk_n, d, k).generate(1);
+                let mcfg = MkmeansConfig { k, iters, seed: 0xBEEF, d_a: 1 };
+                let mk = mkmeans::run_vertical(&mk_ds, &mcfg).expect("mkmeans");
+                Some(((mk.bytes_total as f64 * n as f64 / mk_n as f64) as u64, mk_n < n))
+            };
 
             table.row(vec![
                 format!("{n}"),
@@ -54,11 +58,47 @@ fn main() {
                 fmt_bytes(online),
                 fmt_bytes(offline),
                 fmt_bytes(online + offline),
-                format!("{}{}", fmt_bytes(mk_bytes), if mk_n < n { "*" } else { "" }),
+                match mk_bytes {
+                    Some((b, scaled)) => {
+                        format!("{}{}", fmt_bytes(b), if scaled { "*" } else { "" })
+                    }
+                    None => "-".into(),
+                },
             ]);
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"k\": {k}, \"iters\": {iters}, \
+                 \"measured\": {{\"online_bytes\": {online}, \"online_rounds\": {}, \
+                 \"s1_bytes\": {}, \"s2_bytes\": {}, \"s3_bytes\": {}}}, \
+                 \"modeled\": {{\"offline_bytes\": {offline}}}, \
+                 \"total_bytes\": {}, \"mkmeans_bytes\": {}}}",
+                c.online_rounds,
+                c.step_bytes[0],
+                c.step_bytes[1],
+                c.step_bytes[2],
+                online + offline,
+                mk_bytes.map(|(b, _)| b.to_string()).unwrap_or_else(|| "null".into()),
+            ));
         }
     }
     table.print();
-    println!("\n(*) M-Kmeans measured at n={MK_CAP} and scaled linearly.");
+    if !smoke {
+        println!("\n(*) M-Kmeans measured at n={MK_CAP} and scaled linearly.");
+    }
     println!("shape checks: ours-online ≪ M-Kmeans total; totals same order of magnitude.");
+
+    let mode = if full {
+        "full"
+    } else if smoke {
+        "smoke"
+    } else {
+        "default"
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"table2_comm\",\n  \"mode\": \"{mode}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    match std::fs::write("BENCH_table2_comm.json", &json) {
+        Ok(()) => println!("wrote BENCH_table2_comm.json"),
+        Err(e) => eprintln!("could not write BENCH_table2_comm.json: {e}"),
+    }
 }

@@ -94,6 +94,204 @@ pub fn summarize(xs: &[f64]) -> String {
     format!("{} ± {}", fmt_secs(stats::mean(xs)), fmt_secs(stats::stddev(xs)))
 }
 
+// ---- Goldenable communication counts -------------------------------------
+//
+// The bench-smoke CI job gates on *exact* flight/byte counts: wall-clock
+// is hardware-dependent and stays informational, but every byte and
+// every flight is deterministic, so drift there is a real protocol
+// change. These helpers compute the counts the goldens in
+// `rust/tests/goldens/` pin, shared by the table benches (JSON emission)
+// and the `bench_goldens` regression test.
+
+use crate::data::blobs::BlobSpec;
+use crate::data::fraud_gen;
+use crate::kmeans::config::{Partition, SecureKmeansConfig};
+use crate::kmeans::secure;
+use crate::offline::bank::BankConfig;
+use crate::offline::pricing;
+use crate::serve::driver::{serve_stream, train_model, ServeConfig};
+
+/// Exact communication counts of one secure training run.
+pub struct RunCounts {
+    /// Samples.
+    pub n: usize,
+    /// Features.
+    pub d: usize,
+    /// Clusters.
+    pub k: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// Online bytes, both parties summed.
+    pub online_bytes: u64,
+    /// Online flights (party 0).
+    pub online_rounds: u64,
+    /// Per-step online bytes (s1, s2, s3), both parties.
+    pub step_bytes: [u64; 3],
+    /// Per-step online flights (party 0).
+    pub step_rounds: [u64; 3],
+    /// Offline bytes, OT-priced from the recorded demand.
+    pub offline_bytes: u64,
+    /// Matrix triples demanded.
+    pub mat_triples: u64,
+    /// Boolean AND-triple lanes consumed.
+    pub bit_triple_lanes: u64,
+    /// daBit lanes consumed.
+    pub dabit_lanes: u64,
+}
+
+/// Run the tables' canonical configuration (vertical split at d/2) and
+/// extract its exact counts.
+pub fn train_counts(n: usize, d: usize, k: usize, iters: usize) -> RunCounts {
+    let ds = BlobSpec::new(n, d, k).generate(1);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: (d / 2).max(1) },
+        ..Default::default()
+    };
+    let out = secure::run(&ds, &cfg).expect("train run");
+    let both = |label: &str| out.meter_a.get(label).bytes_sent + out.meter_b.get(label).bytes_sent;
+    RunCounts {
+        n,
+        d,
+        k,
+        iters,
+        online_bytes: out.meter_a.total_prefix("online.").bytes_sent
+            + out.meter_b.total_prefix("online.").bytes_sent,
+        online_rounds: out.meter_a.total_prefix("online.").rounds,
+        step_bytes: [both("online.s1"), both("online.s2"), both("online.s3")],
+        step_rounds: [
+            out.meter_a.get("online.s1").rounds,
+            out.meter_a.get("online.s2").rounds,
+            out.meter_a.get("online.s3").rounds,
+        ],
+        offline_bytes: pricing::offline_bytes(&out.demand),
+        mat_triples: out.ledger.mat_triples,
+        bit_triple_lanes: out.ledger.bit_triple_lanes,
+        dabit_lanes: out.ledger.dabit_lanes,
+    }
+}
+
+/// The golden-file rendering of [`RunCounts`] (`key = value` lines).
+pub fn train_golden_lines(c: &RunCounts) -> String {
+    format!(
+        "config = n{} d{} k{} t{}\n\
+         online_bytes = {}\n\
+         online_rounds = {}\n\
+         s1_bytes = {}\ns2_bytes = {}\ns3_bytes = {}\n\
+         s1_rounds = {}\ns2_rounds = {}\ns3_rounds = {}\n\
+         offline_bytes = {}\n\
+         mat_triples = {}\nbit_triple_lanes = {}\ndabit_lanes = {}\n",
+        c.n,
+        c.d,
+        c.k,
+        c.iters,
+        c.online_bytes,
+        c.online_rounds,
+        c.step_bytes[0],
+        c.step_bytes[1],
+        c.step_bytes[2],
+        c.step_rounds[0],
+        c.step_rounds[1],
+        c.step_rounds[2],
+        c.offline_bytes,
+        c.mat_triples,
+        c.bit_triple_lanes,
+        c.dabit_lanes,
+    )
+}
+
+/// Exact communication counts of one serving run.
+pub struct ServeCounts {
+    /// Clusters of the served model.
+    pub k: usize,
+    /// Transactions per micro-batch.
+    pub batch_rows: usize,
+    /// Micro-batches scored.
+    pub batches: usize,
+    /// Online flights per batch (uniform, == `score_rounds(k)`).
+    pub rounds_per_batch: u64,
+    /// Steady-state online bytes per batch (party 0).
+    pub bytes_per_batch: u64,
+    /// Warmup (norm-row) bytes (party 0).
+    pub warmup_bytes: u64,
+    /// Bank ledger: prefabricated, replenished, consumed, remaining.
+    pub bank_ledger: [usize; 4],
+    /// Bank misses (must stay 0).
+    pub bank_misses: u64,
+    /// Matrix-triple bytes of one prefabricated bank batch.
+    pub mat_triple_bytes_per_batch: u64,
+}
+
+/// Train a small fraud model and score a stream with a replenished
+/// bank, extracting the exact serving counts.
+pub fn serve_counts(
+    n_train: usize,
+    k: usize,
+    iters: usize,
+    batch_rows: usize,
+    batches: usize,
+) -> ServeCounts {
+    let f = fraud_gen::generate(n_train, 0.05, 77);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let (_, models) = train_model(&f.data, &cfg, 0.05).expect("train model");
+    let stream = fraud_gen::generate(batches * batch_rows, 0.05, 4242);
+    let scfg = ServeConfig {
+        batch_rows,
+        batches,
+        bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 },
+        ..Default::default()
+    };
+    let out = serve_stream(models, &stream.data, &scfg).expect("serve stream");
+    let steady = out.batch_stats[out.batch_stats.len().min(2) - 1].online;
+    ServeCounts {
+        k,
+        batch_rows,
+        batches,
+        rounds_per_batch: steady.rounds,
+        bytes_per_batch: steady.bytes_sent,
+        warmup_bytes: out.warmup_stats.bytes_sent,
+        bank_ledger: [
+            out.bank_prefabricated,
+            out.bank_replenished,
+            out.bank_consumed,
+            out.bank_remaining,
+        ],
+        bank_misses: out.bank_misses,
+        mat_triple_bytes_per_batch: out.per_batch_mat_triple_bytes,
+    }
+}
+
+/// The golden-file rendering of [`ServeCounts`].
+pub fn serve_golden_lines(c: &ServeCounts) -> String {
+    format!(
+        "config = k{} b{}x{}\n\
+         rounds_per_batch = {}\n\
+         bytes_per_batch = {}\n\
+         warmup_bytes = {}\n\
+         bank_ledger = {}+{}-{}={}\n\
+         bank_misses = {}\n\
+         mat_triple_bytes_per_batch = {}\n",
+        c.k,
+        c.batches,
+        c.batch_rows,
+        c.rounds_per_batch,
+        c.bytes_per_batch,
+        c.warmup_bytes,
+        c.bank_ledger[0],
+        c.bank_ledger[1],
+        c.bank_ledger[2],
+        c.bank_ledger[3],
+        c.bank_misses,
+        c.mat_triple_bytes_per_batch,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

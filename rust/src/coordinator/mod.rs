@@ -5,12 +5,17 @@
 //! wall-clock) measurements into the paper's reporting format (online /
 //! offline time and communication under a LAN or WAN link model).
 //! [`serve`] is the serving analogue: per-request latency/throughput and
-//! the material-bank ledger for a [`crate::serve`] run.
+//! the material-bank ledger for a [`crate::serve`] run. [`remote`] is
+//! the two-process deployment layer: scenario files, the wire
+//! handshake/barriers, and the per-party pipeline runner with
+//! transport-independent transcripts.
 
+pub mod remote;
 pub mod report;
 pub mod serve;
 pub mod session;
 
+pub use remote::{PartyTranscript, Scenario};
 pub use report::Report;
 pub use serve::ServeReport;
 pub use session::Session;

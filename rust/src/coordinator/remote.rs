@@ -1,0 +1,958 @@
+//! Two-process deployment: scenario files, the wire handshake, phase
+//! barriers, and the per-party pipeline runner.
+//!
+//! A *scenario* is a small `key = value` text file that pins everything
+//! two independent processes must agree on to run a pipeline together:
+//! which pipeline (`train` / `serve` / `score` / `fraud`), the dataset
+//! generation seeds, the clustering geometry, tiling/threads, and the
+//! optional link shaping. Both processes load (what should be) the same
+//! scenario; the [`handshake`] then verifies magic, wire version,
+//! complementary roles, the scenario digest and the protocol seed
+//! before a single protocol byte is exchanged — a mismatch is a typed
+//! [`Error::Protocol`] naming the differing lines, never garbage
+//! shares.
+//!
+//! [`run_scenario`] drives **one party's** side of the chosen pipeline
+//! over any connected [`Chan`] (in-process duplex or TCP) and returns a
+//! [`PartyTranscript`]: hashes of every revealed value plus the exact
+//! per-phase flight/byte counts, with wall-clock deliberately excluded.
+//! Transcripts are **transport-independent by construction** — the CI
+//! `two-process` job diffs the JSON from two OS processes over
+//! localhost TCP against the in-process reference and requires
+//! byte-identical files.
+//!
+//! The wire format (frame layout, handshake words, barrier tags) is
+//! documented in `docs/PROTOCOLS.md`.
+
+use crate::data::blobs::{BlobSpec, Dataset};
+use crate::data::{fraud_gen, normalize, sparse_gen};
+use crate::fraud::{detect_outliers, jaccard, OutlierConfig};
+use crate::kmeans::config::{EsdMode, Partition, SecureKmeansConfig, TileFlights};
+use crate::kmeans::secure;
+use crate::net::cost::CostModel;
+use crate::net::meter::PhaseStats;
+use crate::net::Chan;
+use crate::offline::bank::BankConfig;
+use crate::runtime::pool::Parallelism;
+use crate::serve::driver::{serve_party, train_model_party, ServeConfig};
+use crate::serve::model::TrainedModel;
+use crate::util::error::{Error, Result};
+use crate::util::hash::{hash256, Hash256};
+use std::path::{Path, PathBuf};
+
+/// Handshake magic: the ASCII bytes `PPKMWRE1`.
+pub const WIRE_MAGIC: u64 = u64::from_be_bytes(*b"PPKMWRE1");
+/// Version of the deployment wire protocol (handshake + barriers).
+pub const WIRE_VERSION: u64 = 1;
+
+/// Which pipeline a scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipeline {
+    /// Secure training on generated blob (or sparse) data.
+    Train,
+    /// Train on fraud-shaped data, then score a transaction stream.
+    Serve,
+    /// Load persisted model shares and score a fresh stream.
+    Score,
+    /// Train on fraud-shaped data, then run outlier detection + Jaccard.
+    Fraud,
+}
+
+impl Pipeline {
+    /// Canonical scenario-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Pipeline::Train => "train",
+            Pipeline::Serve => "serve",
+            Pipeline::Score => "score",
+            Pipeline::Fraud => "fraud",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Pipeline> {
+        Ok(match s {
+            "train" => Pipeline::Train,
+            "serve" => Pipeline::Serve,
+            "score" => Pipeline::Score,
+            "fraud" => Pipeline::Fraud,
+            other => {
+                return Err(Error::Config(format!(
+                    "scenario: unknown pipeline {other:?} (train|serve|score|fraud)"
+                )))
+            }
+        })
+    }
+}
+
+/// Link shaping named by a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// No shaping: loopback at native speed.
+    Unshaped,
+    /// The paper's LAN (10 Gbps, 0.02 ms RTT).
+    Lan,
+    /// The paper's WAN (20 Mbps, 40 ms RTT).
+    Wan,
+}
+
+impl LinkKind {
+    /// Canonical scenario-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LinkKind::Unshaped => "none",
+            LinkKind::Lan => "lan",
+            LinkKind::Wan => "wan",
+        }
+    }
+
+    /// The cost model to enforce, if any.
+    pub fn model(&self) -> Option<CostModel> {
+        match self {
+            LinkKind::Unshaped => None,
+            LinkKind::Lan => Some(CostModel::lan()),
+            LinkKind::Wan => Some(CostModel::wan()),
+        }
+    }
+
+    fn parse(s: &str) -> Result<LinkKind> {
+        Ok(match s {
+            "none" => LinkKind::Unshaped,
+            "lan" => LinkKind::Lan,
+            "wan" => LinkKind::Wan,
+            other => {
+                return Err(Error::Config(format!(
+                    "scenario: unknown shape {other:?} (none|lan|wan)"
+                )))
+            }
+        })
+    }
+}
+
+/// Partition kind named by a scenario (the split point is derived).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartKind {
+    /// Feature split.
+    Vertical,
+    /// Sample split.
+    Horizontal,
+}
+
+/// Everything two party processes must agree on to run a pipeline.
+///
+/// Parsed from a `key = value` file (`#` starts a comment; unknown keys
+/// are errors so typos cannot silently desynchronize the parties). The
+/// [`Scenario::canonical`] rendering — every key, fixed order, parsed
+/// values — is what the [`handshake`] digests, so two files that parse
+/// to the same effective configuration always agree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Which pipeline to run.
+    pub pipeline: Pipeline,
+    /// Samples (train pipelines) / training transactions (serve).
+    pub n: usize,
+    /// Features for generated blob/sparse data (fraud data is 18+24).
+    pub d: usize,
+    /// Clusters.
+    pub k: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// Protocol seed (dealers, mask PRGs) — confirmed by the handshake.
+    pub seed: u128,
+    /// Dataset generation seed.
+    pub data_seed: u128,
+    /// Scored-stream generation seed (serve/score).
+    pub stream_seed: u128,
+    /// Partition kind for the `train` pipeline (fraud-shaped pipelines
+    /// always split vertically at the payment/merchant boundary).
+    pub partition: PartKind,
+    /// Vertical split point; 0 = `d/2`.
+    pub d_a: usize,
+    /// Horizontal split point; 0 = `n/2`.
+    pub n_a: usize,
+    /// Cross-product backend selection.
+    pub esd: EsdMode,
+    /// Legacy sparse switch (routes through HE Protocol 2).
+    pub sparse: bool,
+    /// Zero fraction for generated sparse data.
+    pub sparsity: f64,
+    /// Row-tile size; 0 = monolithic.
+    pub tile_rows: usize,
+    /// Tile flight policy.
+    pub tile_flights: TileFlights,
+    /// Worker threads per party (0 = one per core). Party-local:
+    /// excluded from the handshake digest — outputs and meters are
+    /// thread-count invariant, so the parties may differ.
+    pub threads: usize,
+    /// Deterministic link shaping for the whole pipeline.
+    pub shape: LinkKind,
+    /// Fraud/flag rate.
+    pub rate: f64,
+    /// Transactions per scored micro-batch.
+    pub batch_rows: usize,
+    /// Micro-batches to score (first is the demand probe).
+    pub batches: usize,
+    /// Bank batches fabricated up front.
+    pub prefab: usize,
+    /// Replenish below this stock.
+    pub low_water: usize,
+    /// Batches per replenishment.
+    pub refill: usize,
+    /// Where model shares are saved/loaded (`party{0,1}.ppkmodel`).
+    /// Party-local: excluded from the handshake digest.
+    pub model_dir: String,
+    /// Whether the serve pipeline persists this party's share.
+    /// Party-local: excluded from the handshake digest.
+    pub save_model: bool,
+}
+
+impl Default for Scenario {
+    fn default() -> Scenario {
+        Scenario {
+            pipeline: Pipeline::Train,
+            n: 1000,
+            d: 4,
+            k: 3,
+            iters: 10,
+            seed: 0xBEEF,
+            data_seed: 42,
+            stream_seed: 4242,
+            partition: PartKind::Vertical,
+            d_a: 0,
+            n_a: 0,
+            esd: EsdMode::Vectorized,
+            sparse: false,
+            sparsity: 0.5,
+            tile_rows: 0,
+            tile_flights: TileFlights::Lockstep,
+            threads: 1,
+            shape: LinkKind::Unshaped,
+            rate: 0.05,
+            batch_rows: 64,
+            batches: 12,
+            prefab: 8,
+            low_water: 2,
+            refill: 4,
+            model_dir: "model".into(),
+            save_model: false,
+        }
+    }
+}
+
+fn want_usize(key: &str, val: &str) -> Result<usize> {
+    val.parse()
+        .map_err(|_| Error::Config(format!("scenario: {key} wants an integer, got {val:?}")))
+}
+
+fn want_u128(key: &str, val: &str) -> Result<u128> {
+    val.parse()
+        .map_err(|_| Error::Config(format!("scenario: {key} wants an integer, got {val:?}")))
+}
+
+fn want_f64(key: &str, val: &str) -> Result<f64> {
+    val.parse()
+        .map_err(|_| Error::Config(format!("scenario: {key} wants a number, got {val:?}")))
+}
+
+fn want_bool(key: &str, val: &str) -> Result<bool> {
+    match val {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(Error::Config(format!("scenario: {key} wants true|false, got {val:?}"))),
+    }
+}
+
+impl Scenario {
+    /// Parse scenario text (`key = value` lines, `#` comments). Unknown
+    /// keys and malformed values are errors — a typo must fail loudly,
+    /// not run a subtly different protocol on one side.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let mut sc = Scenario::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                let lineno = idx + 1;
+                Error::Config(format!("scenario line {lineno}: expected `key = value`, got {raw:?}"))
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "pipeline" => sc.pipeline = Pipeline::parse(val)?,
+                "n" => sc.n = want_usize(key, val)?,
+                "d" => sc.d = want_usize(key, val)?,
+                "k" => sc.k = want_usize(key, val)?,
+                "iters" => sc.iters = want_usize(key, val)?,
+                "seed" => sc.seed = want_u128(key, val)?,
+                "data_seed" => sc.data_seed = want_u128(key, val)?,
+                "stream_seed" => sc.stream_seed = want_u128(key, val)?,
+                "partition" => {
+                    sc.partition = match val {
+                        "vertical" => PartKind::Vertical,
+                        "horizontal" => PartKind::Horizontal,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "scenario: unknown partition {other:?} (vertical|horizontal)"
+                            )))
+                        }
+                    }
+                }
+                "d_a" => sc.d_a = want_usize(key, val)?,
+                "n_a" => sc.n_a = want_usize(key, val)?,
+                "esd" => {
+                    sc.esd = match val {
+                        "vectorized" => EsdMode::Vectorized,
+                        "naive" => EsdMode::Naive,
+                        "he" => EsdMode::He,
+                        "auto" => EsdMode::Auto,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "scenario: unknown esd {other:?} (vectorized|naive|he|auto)"
+                            )))
+                        }
+                    }
+                }
+                "sparse" => sc.sparse = want_bool(key, val)?,
+                "sparsity" => sc.sparsity = want_f64(key, val)?,
+                "tile_rows" => sc.tile_rows = want_usize(key, val)?,
+                "tile_flights" => {
+                    sc.tile_flights = match val {
+                        "lockstep" => TileFlights::Lockstep,
+                        "streamed" => TileFlights::Streamed,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "scenario: unknown tile_flights {other:?} (lockstep|streamed)"
+                            )))
+                        }
+                    }
+                }
+                "threads" => sc.threads = want_usize(key, val)?,
+                "shape" => sc.shape = LinkKind::parse(val)?,
+                "rate" => sc.rate = want_f64(key, val)?,
+                "batch_rows" => sc.batch_rows = want_usize(key, val)?,
+                "batches" => sc.batches = want_usize(key, val)?,
+                "prefab" => sc.prefab = want_usize(key, val)?,
+                "low_water" => sc.low_water = want_usize(key, val)?,
+                "refill" => sc.refill = want_usize(key, val)?,
+                "model_dir" => sc.model_dir = val.to_string(),
+                "save_model" => sc.save_model = want_bool(key, val)?,
+                other => {
+                    return Err(Error::Config(format!("scenario: unknown key {other:?}")))
+                }
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Load a scenario file.
+    pub fn from_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read scenario {}: {e}", path.display())))?;
+        Scenario::parse(&text)
+    }
+
+    /// The canonical rendering the handshake digests: every
+    /// **protocol-relevant** key in a fixed order with the *parsed*
+    /// value, so formatting, comments and omitted-default keys never
+    /// cause false mismatches. Party-local operational knobs —
+    /// `threads`, `model_dir`, `save_model` — are deliberately
+    /// excluded: they cannot affect outputs or meters (thread-count
+    /// invariance is regression-tested), so heterogeneous deployments
+    /// (different core counts, different disk layouts) must handshake
+    /// cleanly.
+    pub fn canonical(&self) -> String {
+        let esd = match self.esd {
+            EsdMode::Vectorized => "vectorized",
+            EsdMode::Naive => "naive",
+            EsdMode::He => "he",
+            EsdMode::Auto => "auto",
+        };
+        let flights = match self.tile_flights {
+            TileFlights::Lockstep => "lockstep",
+            TileFlights::Streamed => "streamed",
+        };
+        let partition = match self.partition {
+            PartKind::Vertical => "vertical",
+            PartKind::Horizontal => "horizontal",
+        };
+        let mut s = String::new();
+        for (key, val) in [
+            ("batch_rows", self.batch_rows.to_string()),
+            ("batches", self.batches.to_string()),
+            ("d", self.d.to_string()),
+            ("d_a", self.d_a.to_string()),
+            ("data_seed", self.data_seed.to_string()),
+            ("esd", esd.to_string()),
+            ("iters", self.iters.to_string()),
+            ("k", self.k.to_string()),
+            ("low_water", self.low_water.to_string()),
+            ("n", self.n.to_string()),
+            ("n_a", self.n_a.to_string()),
+            ("pipeline", self.pipeline.as_str().to_string()),
+            ("prefab", self.prefab.to_string()),
+            ("rate", self.rate.to_string()),
+            ("refill", self.refill.to_string()),
+            ("seed", self.seed.to_string()),
+            ("shape", self.shape.as_str().to_string()),
+            ("sparse", self.sparse.to_string()),
+            ("sparsity", self.sparsity.to_string()),
+            ("stream_seed", self.stream_seed.to_string()),
+            ("tile_flights", flights.to_string()),
+            ("tile_rows", self.tile_rows.to_string()),
+        ] {
+            s.push_str(key);
+            s.push_str(" = ");
+            s.push_str(&val);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// SHA-like digest of [`Scenario::canonical`] (the in-repo
+    /// [`hash256`]).
+    pub fn digest(&self) -> [u8; 32] {
+        hash256(self.canonical().as_bytes())
+    }
+
+    /// The partition of the `train` pipeline (0 split points default to
+    /// even splits).
+    pub fn train_partition(&self) -> Partition {
+        match self.partition {
+            PartKind::Vertical => Partition::Vertical {
+                d_a: if self.d_a > 0 { self.d_a } else { (self.d / 2).max(1) },
+            },
+            PartKind::Horizontal => Partition::Horizontal {
+                n_a: if self.n_a > 0 { self.n_a } else { (self.n / 2).max(1) },
+            },
+        }
+    }
+
+    /// The secure-kmeans configuration this scenario pins, for a given
+    /// partition.
+    pub fn kmeans_config(&self, partition: Partition) -> SecureKmeansConfig {
+        SecureKmeansConfig {
+            k: self.k,
+            iters: self.iters,
+            seed: self.seed,
+            partition,
+            esd: self.esd,
+            sparse: self.sparse,
+            tile_rows: if self.tile_rows > 0 { Some(self.tile_rows) } else { None },
+            tile_flights: self.tile_flights,
+            parallelism: self.parallelism(),
+            shape: self.shape.model(),
+            ..Default::default()
+        }
+    }
+
+    /// The serving configuration this scenario pins. The serving-phase
+    /// seed is derived from the protocol seed (`seed ^ 0x5E11E`),
+    /// mirroring the CLI's fixed serving seed.
+    pub fn serve_config(&self) -> ServeConfig {
+        ServeConfig {
+            batch_rows: self.batch_rows,
+            batches: self.batches,
+            bank: BankConfig {
+                prefab_batches: self.prefab,
+                low_water: self.low_water,
+                refill_batches: self.refill,
+            },
+            seed: self.seed ^ 0x5E11E,
+            parallelism: self.parallelism(),
+            shape: self.shape.model(),
+        }
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        if self.threads == 0 {
+            Parallelism::auto()
+        } else {
+            Parallelism::new(self.threads)
+        }
+    }
+
+    /// Generated training data for the `train` pipeline.
+    pub fn train_dataset(&self) -> Dataset {
+        if self.sparse {
+            sparse_gen::generate(self.n, self.d, self.k, self.sparsity, self.data_seed)
+        } else {
+            BlobSpec::new(self.n, self.d, self.k).generate(self.data_seed)
+        }
+    }
+}
+
+// ---- Handshake & barriers ------------------------------------------------
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn digest_words(words: &[u8; 32]) -> [u64; 4] {
+    let mut out = [0u64; 4];
+    for (i, chunk) in words.chunks_exact(8).enumerate() {
+        out[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+    }
+    out
+}
+
+/// Line-by-line diff of two canonical scenario renderings, for the
+/// handshake's mismatch error.
+fn canonical_diff(ours: &str, theirs: &str) -> String {
+    let o: Vec<&str> = ours.lines().collect();
+    let t: Vec<&str> = theirs.lines().collect();
+    let mut out = String::new();
+    for i in 0..o.len().max(t.len()) {
+        let a = o.get(i).copied().unwrap_or("<missing>");
+        let b = t.get(i).copied().unwrap_or("<missing>");
+        if a != b {
+            out.push_str(&format!("  ours: {a}  |  theirs: {b}\n"));
+        }
+    }
+    out
+}
+
+/// Verify magic, wire version, complementary roles, the scenario digest
+/// and the protocol seed with the peer — one symmetric exchange, plus a
+/// second exchange of the canonical scenario text only on mismatch (so
+/// the error can name the differing lines). Metered under `handshake`.
+pub fn handshake(chan: &mut Chan, sc: &Scenario) -> Result<()> {
+    chan.set_phase("handshake");
+    let digest = digest_words(&sc.digest());
+    let mut hello = vec![WIRE_MAGIC, WIRE_VERSION, chan.party as u64];
+    hello.extend_from_slice(&digest);
+    hello.push(sc.seed as u64);
+    hello.push((sc.seed >> 64) as u64);
+    let theirs = chan.try_exchange_u64s(&hello)?;
+    // Magic and version are diagnosed before the exact length so a
+    // future version that extends the hello is reported as a version
+    // mismatch, not as "not a ppkmeans party".
+    if theirs.first() != Some(&WIRE_MAGIC) {
+        return Err(Error::Protocol(
+            "handshake: peer is not a ppkmeans party (bad magic)".into(),
+        ));
+    }
+    if theirs.get(1) != Some(&WIRE_VERSION) {
+        return Err(Error::Protocol(format!(
+            "handshake: wire version mismatch (ours {WIRE_VERSION}, peer {:?})",
+            theirs.get(1)
+        )));
+    }
+    if theirs.len() != hello.len() {
+        return Err(Error::Protocol(format!(
+            "handshake: malformed hello of {} words (expected {})",
+            theirs.len(),
+            hello.len()
+        )));
+    }
+    let want_role = 1 - chan.party as u64;
+    if theirs[2] != want_role {
+        return Err(Error::Protocol(format!(
+            "handshake: both endpoints claim role p{} — check --role/--listen/--connect",
+            chan.party
+        )));
+    }
+    if theirs[3..7] != digest[..] {
+        // Trade canonical texts so the error names what differs. Both
+        // sides take this branch (they compare the same digest pair), so
+        // the extra exchange stays symmetric.
+        let ours = sc.canonical();
+        let peer = chan.try_exchange_bytes(ours.as_bytes())?;
+        let peer = String::from_utf8_lossy(&peer);
+        return Err(Error::Protocol(format!(
+            "handshake: scenario mismatch — the parties would run different \
+             protocols. Differing keys:\n{}",
+            canonical_diff(&ours, &peer)
+        )));
+    }
+    // Defense-in-depth, normally unreachable: the seed is already part
+    // of the digested canonical scenario, but hash256 is an in-repo
+    // Speck-based construction rather than a vetted SHA-2, and the seed
+    // is the one value whose silent divergence corrupts every share —
+    // so it is also confirmed in plaintext.
+    if theirs[7] != hello[7] || theirs[8] != hello[8] {
+        return Err(Error::Protocol(format!(
+            "handshake: protocol seed mismatch (ours {}, peer {})",
+            sc.seed,
+            ((theirs[8] as u128) << 64) | (theirs[7] as u128)
+        )));
+    }
+    Ok(())
+}
+
+/// A named phase barrier: both parties exchange a tag derived from
+/// `label` and verify they sit at the same pipeline point. One flight,
+/// metered under `barrier`; a mismatch (one side skipped a phase, or
+/// the peers run different pipelines) is a typed error instead of
+/// protocol garbage.
+pub fn barrier(chan: &mut Chan, label: &str) -> Result<()> {
+    chan.set_phase("barrier");
+    let tag = u64::from_le_bytes(hash256(label.as_bytes())[..8].try_into().unwrap());
+    let msg = [WIRE_MAGIC, tag];
+    let theirs = chan.try_exchange_u64s(&msg)?;
+    if theirs != msg {
+        return Err(Error::Protocol(format!(
+            "barrier {label:?}: peers desynchronized (got {theirs:?})"
+        )));
+    }
+    Ok(())
+}
+
+// ---- Transcripts ---------------------------------------------------------
+
+/// One party's deterministic record of a scenario run: digests of every
+/// revealed value plus exact per-phase flight/byte counts. Wall-clock
+/// never appears, so the transcript of an in-process run and of a
+/// two-process TCP run of the same scenario are **byte-identical** —
+/// that equality is what the CI `two-process` job gates on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartyTranscript {
+    /// This endpoint's role (0 or 1).
+    pub role: usize,
+    /// The pipeline that ran.
+    pub pipeline: Pipeline,
+    /// Hex digest of the canonical scenario.
+    pub scenario_sha256: String,
+    /// Named reveal digests / values, in pipeline order.
+    pub reveals: Vec<(String, String)>,
+    /// Per-phase traffic, sorted by phase label.
+    pub phases: Vec<(String, PhaseStats)>,
+}
+
+impl PartyTranscript {
+    /// Render as deterministic JSON (sorted phases, insertion-ordered
+    /// reveals, no floats, no wall-clock).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"transcript\": \"ppkmeans-party-v1\",\n");
+        s.push_str(&format!("  \"role\": {},\n", self.role));
+        s.push_str(&format!("  \"pipeline\": \"{}\",\n", self.pipeline.as_str()));
+        s.push_str(&format!("  \"scenario_sha256\": \"{}\",\n", self.scenario_sha256));
+        s.push_str("  \"reveals\": {\n");
+        for (i, (k, v)) in self.reveals.iter().enumerate() {
+            let comma = if i + 1 < self.reveals.len() { "," } else { "" };
+            s.push_str(&format!("    \"{k}\": \"{v}\"{comma}\n"));
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"phases\": {\n");
+        for (i, (k, p)) in self.phases.iter().enumerate() {
+            let comma = if i + 1 < self.phases.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    \"{k}\": {{\"bytes_sent\": {}, \"msgs_sent\": {}, \"rounds\": {}}}{comma}\n",
+                p.bytes_sent, p.msgs_sent, p.rounds
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+fn digest_u64s(words: impl IntoIterator<Item = u64>) -> String {
+    let mut h = Hash256::new();
+    for w in words {
+        h.update(w.to_le_bytes());
+    }
+    hex(&h.finalize())
+}
+
+// ---- The per-party pipeline runner ---------------------------------------
+
+/// Score a stream of generated transactions against a model share
+/// (shared tail of the `serve` and `score` pipelines).
+fn score_stream(
+    chan: &mut Chan,
+    model: TrainedModel,
+    sc: &Scenario,
+    reveals: &mut Vec<(String, String)>,
+) -> Result<()> {
+    if sc.batches == 0 || sc.batch_rows == 0 {
+        return Err(Error::Config("scenario: serving needs batches ≥ 1 and batch_rows ≥ 1".into()));
+    }
+    let rows = sc.batches * sc.batch_rows;
+    let stream = fraud_gen::generate(rows, sc.rate, sc.stream_seed);
+    if stream.data.d != model.d {
+        return Err(Error::Config(format!(
+            "scenario stream has d={} but the model was trained with d={}",
+            stream.data.d, model.d
+        )));
+    }
+    let (d_a, party) = (model.d_a, chan.party);
+    let width = if party == 0 { d_a } else { model.d - d_a };
+    let blocks: Vec<Vec<f64>> = (0..sc.batches)
+        .map(|b| {
+            let mut x = Vec::with_capacity(sc.batch_rows * width);
+            for i in b * sc.batch_rows..(b + 1) * sc.batch_rows {
+                let row = stream.data.row(i);
+                x.extend_from_slice(if party == 0 { &row[..d_a] } else { &row[d_a..] });
+            }
+            x
+        })
+        .collect();
+    let out = serve_party(chan, model, blocks, &sc.serve_config());
+    let mut h = Hash256::new();
+    for r in &out.results {
+        for &a in &r.assignments {
+            h.update((a as u64).to_le_bytes());
+        }
+        for &f in &r.fraud_flags {
+            h.update([f as u8]);
+        }
+        h.update((r.malformed_rows as u64).to_le_bytes());
+    }
+    reveals.push(("scores".into(), hex(&h.finalize())));
+    let flagged: usize = out.results.iter().map(|r| r.flagged()).sum();
+    reveals.push(("flagged_total".into(), flagged.to_string()));
+    reveals.push((
+        "bank_ledger".into(),
+        format!(
+            "{}+{}-{}={}",
+            out.bank_prefabricated, out.bank_replenished, out.bank_consumed, out.bank_remaining
+        ),
+    ));
+    reveals.push(("bank_misses".into(), out.bank_misses.to_string()));
+    Ok(())
+}
+
+/// Run **this party's** side of the scenario pipeline over `chan`:
+/// handshake, the pipeline phases separated by [`barrier`]s, and a
+/// final barrier — returning the deterministic [`PartyTranscript`].
+pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
+    handshake(chan, sc)?;
+    let mut reveals: Vec<(String, String)> = Vec::new();
+    match sc.pipeline {
+        Pipeline::Train => {
+            let data = sc.train_dataset();
+            let normalized = normalize::min_max(&data);
+            let cfg = sc.kmeans_config(sc.train_partition());
+            let r = secure::run_party(chan, &normalized, &cfg)?;
+            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+            reveals.push((
+                "assignments".into(),
+                digest_u64s(r.assignments.iter().map(|&a| a as u64)),
+            ));
+            reveals.push(("iters_run".into(), r.iters.to_string()));
+            reveals.push(("backend".into(), r.backend_name.to_string()));
+            reveals.push(("malformed_rows".into(), r.malformed_rows.to_string()));
+        }
+        Pipeline::Fraud => {
+            let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
+            let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
+            let r = secure::run_party(chan, &f.data, &cfg)?;
+            let ocfg = OutlierConfig { rate: sc.rate, min_cluster_frac: 0.02 };
+            let flagged = detect_outliers(&f.data, &r.mu.decode(), &r.assignments, sc.k, &ocfg);
+            let j = jaccard(&flagged, &f.outliers);
+            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+            reveals.push((
+                "assignments".into(),
+                digest_u64s(r.assignments.iter().map(|&a| a as u64)),
+            ));
+            reveals.push(("flagged".into(), digest_u64s(flagged.iter().map(|&i| i as u64))));
+            reveals.push(("jaccard".into(), format!("{j:.6}")));
+        }
+        Pipeline::Serve => {
+            let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
+            let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
+            let (r, model) = train_model_party(chan, &f.data, &cfg, sc.rate)?;
+            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+            if sc.save_model {
+                let dir = PathBuf::from(&sc.model_dir);
+                std::fs::create_dir_all(&dir)?;
+                let path = dir.join(TrainedModel::file_name(chan.party));
+                model.save(&path)?;
+            }
+            barrier(chan, "train.done")?;
+            score_stream(chan, model, sc, &mut reveals)?;
+        }
+        Pipeline::Score => {
+            let path = PathBuf::from(&sc.model_dir).join(TrainedModel::file_name(chan.party));
+            let model = TrainedModel::load(&path).map_err(|e| {
+                Error::Config(format!(
+                    "cannot load {} ({e}) — run a serve scenario with `save_model = true` first",
+                    path.display()
+                ))
+            })?;
+            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+            score_stream(chan, model, sc, &mut reveals)?;
+        }
+    }
+    barrier(chan, "pipeline.done")?;
+    Ok(PartyTranscript {
+        role: chan.party,
+        pipeline: sc.pipeline,
+        scenario_sha256: hex(&sc.digest()),
+        reveals,
+        phases: chan.meter().phases().map(|(k, v)| (k.to_string(), *v)).collect(),
+    })
+}
+
+/// Run a scenario **in-process**: both parties over a duplex pair, each
+/// through the same [`run_scenario`] code path a TCP deployment uses.
+/// This is the reference the CI `two-process` job diffs real processes
+/// against, and the `--role local` CLI mode.
+pub fn run_scenario_local(sc: &Scenario) -> Result<(PartyTranscript, PartyTranscript)> {
+    let (mut c0, mut c1) = crate::net::duplex_pair();
+    let sc1 = sc.clone();
+    let h = std::thread::Builder::new()
+        .name("party1".into())
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c1, &sc1))
+        .expect("spawn party1");
+    let sc0 = sc.clone();
+    let h0 = std::thread::Builder::new()
+        .name("party0".into())
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c0, &sc0))
+        .expect("spawn party0");
+    let t0 = h0.join().expect("party 0 panicked")?;
+    let t1 = h.join().expect("party 1 panicked")?;
+    Ok((t0, t1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_train() -> Scenario {
+        Scenario {
+            pipeline: Pipeline::Train,
+            n: 48,
+            d: 4,
+            k: 2,
+            iters: 2,
+            seed: 7,
+            data_seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scenario_roundtrips_through_parse() {
+        // (Local knobs are at their defaults here; canonical() omits
+        // them by design, so the parse is a faithful roundtrip.)
+        let sc = tiny_train();
+        let parsed = Scenario::parse(&sc.canonical()).unwrap();
+        assert_eq!(parsed, sc);
+        assert_eq!(parsed.digest(), sc.digest());
+    }
+
+    #[test]
+    fn every_protocol_key_changes_the_digest_and_local_keys_do_not() {
+        // Ties the three hand-maintained key lists (struct fields,
+        // parse() arms, canonical() order) together: a key that parses
+        // but fails to move the digest would let two parties handshake
+        // into different protocols. Every parse() key must appear here.
+        let base = Scenario::default();
+        let protocol_keys = [
+            ("pipeline", "fraud"),
+            ("n", "7"),
+            ("d", "9"),
+            ("k", "5"),
+            ("iters", "3"),
+            ("seed", "99"),
+            ("data_seed", "98"),
+            ("stream_seed", "97"),
+            ("partition", "horizontal"),
+            ("d_a", "2"),
+            ("n_a", "3"),
+            ("esd", "naive"),
+            ("sparse", "true"),
+            ("sparsity", "0.25"),
+            ("tile_rows", "8"),
+            ("tile_flights", "streamed"),
+            ("shape", "wan"),
+            ("rate", "0.1"),
+            ("batch_rows", "5"),
+            ("batches", "6"),
+            ("prefab", "7"),
+            ("low_water", "3"),
+            ("refill", "9"),
+        ];
+        for (key, val) in protocol_keys {
+            let sc = Scenario::parse(&format!("{key} = {val}")).unwrap();
+            assert_ne!(sc.digest(), base.digest(), "protocol key {key} must move the digest");
+        }
+        // Party-local knobs must NOT move the digest: heterogeneous
+        // deployments (core counts, disk layouts) handshake cleanly.
+        let local_keys = [("threads", "16"), ("model_dir", "elsewhere"), ("save_model", "true")];
+        for (key, val) in local_keys {
+            let sc = Scenario::parse(&format!("{key} = {val}")).unwrap();
+            assert_eq!(sc.digest(), base.digest(), "local key {key} must not move the digest");
+        }
+    }
+
+    #[test]
+    fn scenario_rejects_unknown_keys_and_bad_values() {
+        assert!(Scenario::parse("pipelin = train").is_err());
+        assert!(Scenario::parse("n = many").is_err());
+        assert!(Scenario::parse("pipeline = dance").is_err());
+        assert!(Scenario::parse("just a line").is_err());
+        // Comments and blank lines are fine.
+        let sc = Scenario::parse("# comment\n\nn = 10 # trailing\n").unwrap();
+        assert_eq!(sc.n, 10);
+    }
+
+    #[test]
+    fn comments_and_defaults_do_not_change_the_digest() {
+        let a = Scenario::parse("n = 9\nk = 2\n").unwrap();
+        let b = Scenario::parse("# header\nk = 2\n\nn = 9   # trailing comment\n").unwrap();
+        assert_eq!(a.digest(), b.digest());
+        let c = Scenario::parse("n = 10\nk = 2\n").unwrap();
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn local_run_produces_matching_transcripts() {
+        let sc = tiny_train();
+        let (t0, t1) = run_scenario_local(&sc).unwrap();
+        assert_eq!(t0.role, 0);
+        assert_eq!(t1.role, 1);
+        // Reveals are public joint outputs: identical on both sides.
+        assert_eq!(t0.reveals, t1.reveals);
+        assert_eq!(t0.scenario_sha256, t1.scenario_sha256);
+        // And a re-run is bit-identical (the CI diff relies on this).
+        let (t0b, _) = run_scenario_local(&sc).unwrap();
+        assert_eq!(t0.to_json(), t0b.to_json());
+    }
+
+    #[test]
+    fn handshake_rejects_mismatched_scenarios() {
+        let (mut c0, mut c1) = crate::net::duplex_pair();
+        let a = tiny_train();
+        let mut b = tiny_train();
+        b.iters = 3; // one key differs
+        let h = std::thread::spawn(move || handshake(&mut c1, &b));
+        let r0 = handshake(&mut c0, &a);
+        let r1 = h.join().unwrap();
+        let e0 = r0.unwrap_err().to_string();
+        assert!(e0.contains("scenario mismatch"), "{e0}");
+        assert!(e0.contains("iters"), "must name the differing key: {e0}");
+        assert!(r1.is_err());
+    }
+
+    #[test]
+    fn barrier_detects_desync() {
+        let (mut c0, mut c1) = crate::net::duplex_pair();
+        let h = std::thread::spawn(move || barrier(&mut c1, "phase.b"));
+        let r0 = barrier(&mut c0, "phase.a");
+        assert!(r0.is_err());
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn matched_handshake_and_barrier_succeed() {
+        let (mut c0, mut c1) = crate::net::duplex_pair();
+        let a = tiny_train();
+        let b = a.clone();
+        let h = std::thread::spawn(move || {
+            handshake(&mut c1, &b)?;
+            barrier(&mut c1, "x")
+        });
+        handshake(&mut c0, &a).unwrap();
+        barrier(&mut c0, "x").unwrap();
+        h.join().unwrap().unwrap();
+    }
+}

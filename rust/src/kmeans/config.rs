@@ -1,5 +1,6 @@
 //! Configuration for secure K-means runs.
 
+use crate::net::cost::CostModel;
 use crate::runtime::pool::Parallelism;
 use crate::ss::RoundPolicy;
 
@@ -107,6 +108,14 @@ pub struct SecureKmeansConfig {
     /// are transcript-identical (regression-tested); the [`crate::net::Chan`]
     /// flight schedule always stays sequential.
     pub parallelism: Parallelism,
+    /// Optional deterministic link shaping
+    /// ([`crate::net::shape::LinkShaper`]) applied to this run's
+    /// transport: every received message is delayed by the modeled
+    /// one-way latency plus serialization time, so the run's wall-clock
+    /// *measures* compute + link instead of modeling the link after the
+    /// fact. `None` (default) leaves the transport unshaped. Outputs,
+    /// reveals and meters are bit-identical either way.
+    pub shape: Option<CostModel>,
 }
 
 impl SecureKmeansConfig {
@@ -136,6 +145,7 @@ impl Default for SecureKmeansConfig {
             tile_rows: None,
             tile_flights: TileFlights::Lockstep,
             parallelism: Parallelism::sequential(),
+            shape: None,
         }
     }
 }

@@ -193,6 +193,11 @@ fn party_main(
     // recombination, dealer matmuls, tile-local products). A pure
     // throughput knob: outputs and meters are thread-count independent.
     crate::runtime::pool::set_global_threads(cfg.parallelism.threads);
+    // Optional measured-link mode: pace every receive to the configured
+    // CostModel. Affects wall-clock only — never payloads or meters.
+    if let Some(model) = cfg.shape {
+        chan.set_shaper(model);
+    }
     let timed = TimedSource::new(Dealer::new(cfg.seed, party));
     let mut store = TripleStore::new(timed);
     let mut steps = StepWall::default();
@@ -471,23 +476,57 @@ pub fn assign_only_tile(
     assign::min_k(ctx, &d_tile)
 }
 
-/// Run the full two-party protocol on a dataset, any partition, any
-/// cross-product backend and any tile schedule.
-pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
+/// Validate a configuration before any thread or socket work starts.
+fn validate(cfg: &SecureKmeansConfig) -> Result<()> {
     if cfg.k < 2 {
         return Err(Error::Config("k must be ≥ 2".into()));
     }
     if cfg.tile_rows == Some(0) {
         return Err(Error::Config("tile_rows must be ≥ 1".into()));
     }
-    let esd_mode = cfg.effective_esd();
-    if matches!(cfg.partition, Partition::Horizontal { .. }) && esd_mode == EsdMode::He {
+    let horizontal = matches!(cfg.partition, Partition::Horizontal { .. });
+    if horizontal && cfg.effective_esd() == EsdMode::He {
         return Err(Error::Config("sparse path supports vertical partitioning (Alg. 3)".into()));
     }
+    Ok(())
+}
+
+/// Run **one party's** side of the full protocol over any connected
+/// [`Chan`] backend — the entry point for two-process TCP deployments
+/// (the in-process [`run`] drives both parties over a duplex pair and
+/// is implemented on top of this).
+///
+/// `data` is the full joint dataset (already normalized if the caller
+/// wants normalization): in a deployment both processes derive it from
+/// a shared scenario (synthetic generation from a negotiated seed, or a
+/// pre-shared file) and this function carves out the block that
+/// `cfg.partition` assigns to `chan.party`. The protocol schedule,
+/// reveals and meter readings are **bit-identical** across transports —
+/// the in-process duplex pair and localhost TCP produce the same
+/// transcript (regression-tested).
+pub fn run_party(chan: &mut Chan, data: &Dataset, cfg: &SecureKmeansConfig) -> Result<PartyResult> {
+    validate(cfg)?;
+    let esd_mode = cfg.effective_esd();
     let (xa, xb) = split_dataset(data, cfg.partition);
-    let (n, d) = (data.n, data.d);
-    // Build CSR views when the run may take the HE path.
+    let x_own = if chan.party == 0 { xa } else { xb };
+    // Build the CSR view when the run may take the HE path.
     let may_sparse = matches!(esd_mode, EsdMode::He | EsdMode::Auto)
+        && matches!(cfg.partition, Partition::Vertical { .. });
+    let p = if may_sparse { PartyData::with_csr(x_own) } else { PartyData::dense_only(x_own) };
+    Ok(party_main(chan, p, data.n, data.d, cfg))
+}
+
+/// Run the full two-party protocol on a dataset, any partition, any
+/// cross-product backend and any tile schedule.
+pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
+    validate(cfg)?;
+    let (n, d) = (data.n, data.d);
+    // Split once and hand each party thread only its own block — the
+    // protocol path below this point (party_main) is byte-identical to
+    // what run_party drives in a two-process deployment; only the
+    // plaintext data-prep differs.
+    let (xa, xb) = split_dataset(data, cfg.partition);
+    let may_sparse = matches!(cfg.effective_esd(), EsdMode::He | EsdMode::Auto)
         && matches!(cfg.partition, Partition::Vertical { .. });
     let pa = if may_sparse { PartyData::with_csr(xa) } else { PartyData::dense_only(xa) };
     let pb = if may_sparse { PartyData::with_csr(xb) } else { PartyData::dense_only(xb) };

@@ -11,12 +11,16 @@
 //!                 [--refill 4] [--model-dir model] [--link lan|wan]
 //! ppkmeans score  [--model-dir model] [--batch 64] [--batches 8]
 //!                 [--link lan|wan]
+//! ppkmeans party  --role p0|p1|local --scenario file
+//!                 [--listen 127.0.0.1:9041 | --connect HOST:PORT]
+//!                 [--out transcript.json]
 //! ppkmeans bench                      # list bench targets
 //! ppkmeans help                       # full option reference
 //! ppkmeans version
 //! ```
 
 use ppkmeans::cli::Args;
+use ppkmeans::coordinator::remote::{self, PartyTranscript, Scenario};
 use ppkmeans::coordinator::serve::{serving_bench_json, ServeReport};
 use ppkmeans::coordinator::Session;
 use ppkmeans::data::blobs::BlobSpec;
@@ -25,18 +29,19 @@ use ppkmeans::fraud::{detect_outliers, jaccard, OutlierConfig};
 use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::kmeans::plaintext;
 use ppkmeans::net::cost::CostModel;
+use ppkmeans::net::{Chan, TcpTransport};
 use ppkmeans::offline::bank::BankConfig;
 use ppkmeans::runtime::pool::Parallelism;
 use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
 use ppkmeans::serve::model::TrainedModel;
 use ppkmeans::serve::scorer::score_rounds;
 use ppkmeans::util::stats::mean;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn print_help() {
     println!("ppkmeans — scalable sparsity-aware privacy-preserving K-means");
     println!();
-    println!("USAGE: ppkmeans <train|fraud|serve|score|bench|help|version> [options]");
+    println!("USAGE: ppkmeans <train|fraud|serve|score|party|bench|help|version> [options]");
     println!();
     println!("train options:");
     println!("  --n N                   samples to generate (default 1000)");
@@ -89,6 +94,25 @@ fn print_help() {
     println!("score options (load saved model shares, score a fresh stream):");
     println!("  --model-dir DIR / --batch B / --batches M / --link L / --threads N");
     println!();
+    println!("train/serve/score also accept:");
+    println!("  --shape S               none | lan | wan — deterministically shape the");
+    println!("                          transport to the link (RTT per flight, bandwidth");
+    println!("                          pacing per byte) so wall-clock MEASURES the link");
+    println!("                          instead of modeling it (--link picks the model");
+    println!("                          used for reporting; --shape changes the run)");
+    println!();
+    println!("party options (one endpoint of a two-process TCP deployment):");
+    println!("  --role R                p0 (listens) | p1 (connects) | local (both");
+    println!("                          parties in-process — the reference transcript");
+    println!("                          CI diffs the TCP processes against)");
+    println!("  --scenario FILE         key = value scenario both processes must share;");
+    println!("                          the handshake verifies a digest of it before");
+    println!("                          any protocol byte flows (see scenarios/)");
+    println!("  --listen ADDR           p0 bind address (default 127.0.0.1:9041)");
+    println!("  --connect ADDR          p1 peer address (default 127.0.0.1:9041)");
+    println!("  --out FILE              write the deterministic transcript JSON here");
+    println!("                          (local mode also writes FILE.p1)");
+    println!();
     println!("bench: lists the cargo bench targets (tables/figures + tiling + serving)");
 }
 
@@ -96,6 +120,21 @@ fn link_from(args: &Args) -> CostModel {
     match args.get_str("link", "lan") {
         "wan" => CostModel::wan(),
         _ => CostModel::lan(),
+    }
+}
+
+/// `--shape lan|wan|none`: deterministic link shaping for the run's
+/// transport (measured link time), as opposed to `--link` which only
+/// selects the *modeled* report.
+fn shape_from(args: &Args) -> Option<CostModel> {
+    match args.get_str("shape", "none") {
+        "none" => None,
+        "lan" => Some(CostModel::lan()),
+        "wan" => Some(CostModel::wan()),
+        other => {
+            eprintln!("unknown --shape {other} (use none|lan|wan)");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -148,6 +187,7 @@ fn cmd_train(args: &Args) {
         tile_rows,
         tile_flights,
         parallelism: parallelism_from(args),
+        shape: shape_from(args),
         ..Default::default()
     };
     let session = Session::new(cfg).with_link(link);
@@ -311,6 +351,7 @@ fn serve_cfg_from(args: &Args) -> ServeConfig {
         },
         seed: 0x5E11E,
         parallelism: parallelism_from(args),
+        shape: shape_from(args),
     }
 }
 
@@ -390,6 +431,114 @@ fn cmd_score(args: &Args) {
     serve_and_report(models, &scfg, &link, 0.0, 24_242);
 }
 
+/// Print a transcript summary: reveal digests + per-phase wire counts.
+fn print_transcript(t: &PartyTranscript) {
+    println!(
+        "party {} finished pipeline `{}` (scenario {})",
+        t.role,
+        t.pipeline.as_str(),
+        &t.scenario_sha256[..16]
+    );
+    println!("  reveals:");
+    for (k, v) in &t.reveals {
+        println!("    {k:<16} {v}");
+    }
+    println!("  wire (this party):");
+    for (phase, p) in &t.phases {
+        println!(
+            "    {phase:<16} {:>10} B  {:>6} msgs  {:>5} flights",
+            p.bytes_sent, p.msgs_sent, p.rounds
+        );
+    }
+}
+
+fn write_transcript(path: &Path, t: &PartyTranscript) {
+    match std::fs::write(path, t.to_json()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("cannot write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `ppkmeans party`: one endpoint of a two-process deployment (or the
+/// in-process `local` reference that CI diffs the processes against).
+fn cmd_party(args: &Args) {
+    let scenario_path = match args.get("scenario") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            eprintln!("party requires --scenario <file> (see scenarios/ for examples)");
+            std::process::exit(2);
+        }
+    };
+    let sc = match Scenario::from_file(&scenario_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let out = args.get("out").map(PathBuf::from);
+    match args.get_str("role", "") {
+        role @ ("p0" | "p1") => {
+            let party = if role == "p0" { 0 } else { 1 };
+            let transport = if party == 0 {
+                let addr = args.get_str("listen", "127.0.0.1:9041");
+                println!("[p0] listening on {addr} ...");
+                TcpTransport::listen(addr)
+            } else {
+                let addr = args.get_str("connect", "127.0.0.1:9041");
+                println!("[p1] connecting to {addr} ...");
+                TcpTransport::connect(addr)
+            };
+            let transport = match transport {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("transport: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let mut chan = Chan::from_tcp(transport, party);
+            match remote::run_scenario(&mut chan, &sc) {
+                Ok(t) => {
+                    print_transcript(&t);
+                    if let Some(path) = out {
+                        write_transcript(&path, &t);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("party run failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "local" => match remote::run_scenario_local(&sc) {
+            Ok((t0, t1)) => {
+                print_transcript(&t0);
+                if let Some(path) = out {
+                    write_transcript(&path, &t0);
+                    let mut p1 = path.into_os_string();
+                    p1.push(".p1");
+                    write_transcript(&PathBuf::from(p1), &t1);
+                }
+            }
+            Err(e) => {
+                eprintln!("local run failed: {e}");
+                std::process::exit(1);
+            }
+        },
+        "" => {
+            eprintln!("party requires --role p0|p1|local");
+            std::process::exit(2);
+        }
+        other => {
+            eprintln!("unknown --role {other} (use p0|p1|local)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     if args.flag("help") {
@@ -401,6 +550,7 @@ fn main() {
         Some("fraud") => cmd_fraud(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
+        Some("party") => cmd_party(&args),
         Some("bench") => {
             println!("bench targets (cargo bench --bench <name>):");
             for (b, what) in [
@@ -420,7 +570,7 @@ fn main() {
         Some("help") => print_help(),
         Some("version") | None => {
             println!("ppkmeans 0.1.0 — scalable sparsity-aware privacy-preserving K-means");
-            println!("subcommands: train | fraud | serve | score | bench | help | version");
+            println!("subcommands: train | fraud | serve | score | party | bench | help | version");
         }
         Some(cmd) => {
             eprintln!("unknown subcommand: {cmd}");

@@ -16,8 +16,11 @@
 //! lengths in the same order between flushes — true by construction for
 //! the symmetric gate set, and asserted on the total.
 
+use super::cost::CostModel;
 use super::meter::Meter;
+use super::shape::LinkShaper;
 use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 enum Backend {
@@ -29,6 +32,10 @@ enum Backend {
 pub struct Chan {
     backend: Backend,
     meter: Meter,
+    /// Optional deterministic link shaping (see [`LinkShaper`]): paces
+    /// every receive to a [`CostModel`] without touching payloads or
+    /// meters.
+    shaper: Option<LinkShaper>,
     /// Identity of this endpoint: 0 or 1.
     pub party: usize,
     /// Segments queued for the next flight.
@@ -42,6 +49,19 @@ pub struct Chan {
     resolved_base: usize,
 }
 
+/// Decode a frame into ring elements: a length that is not a multiple
+/// of 8 is a typed [`Error::Protocol`] (shared by the receive and
+/// exchange paths so the check cannot drift between them).
+fn decode_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(Error::Protocol(format!(
+            "malformed u64 frame of {} bytes (not a multiple of 8)",
+            bytes.len()
+        )));
+    }
+    Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
 /// Create a connected pair of in-process endpoints (party 0, party 1).
 pub fn duplex_pair() -> (Chan, Chan) {
     let (tx0, rx1) = channel();
@@ -50,6 +70,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
         Chan {
             backend: Backend::Mpsc { tx: tx0, rx: rx0 },
             meter: Meter::new(),
+            shaper: None,
             party: 0,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -58,6 +79,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
         Chan {
             backend: Backend::Mpsc { tx: tx1, rx: rx1 },
             meter: Meter::new(),
+            shaper: None,
             party: 1,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -72,11 +94,30 @@ impl Chan {
         Chan {
             backend: Backend::Tcp(t),
             meter: Meter::new(),
+            shaper: None,
             party,
             staged: Vec::new(),
             resolved: Vec::new(),
             resolved_base: 0,
         }
+    }
+
+    /// Attach deterministic link shaping: every subsequent receive is
+    /// paced to `model` (RTT/2 latency + serialization per byte, see
+    /// [`LinkShaper`]). Payloads, reveals and meter counts are
+    /// bit-identical with or without shaping — only wall-clock changes.
+    pub fn set_shaper(&mut self, model: CostModel) {
+        self.shaper = Some(LinkShaper::new(model));
+    }
+
+    /// Remove any attached link shaping.
+    pub fn clear_shaper(&mut self) {
+        self.shaper = None;
+    }
+
+    /// The link model currently being enforced, if any.
+    pub fn shaper_model(&self) -> Option<CostModel> {
+        self.shaper.as_ref().map(|s| *s.model())
     }
 
     /// Label subsequent traffic with a phase.
@@ -167,22 +208,48 @@ impl Chan {
 
     // ---- Framed transport --------------------------------------------
 
-    /// Send a raw byte message.
-    pub fn send_bytes(&mut self, bytes: &[u8]) {
-        self.meter.on_send(bytes.len() as u64);
+    /// Fallible send of a raw byte message: typed errors instead of a
+    /// panic when the peer is gone or the frame violates the transport
+    /// cap. The deployment handshake and barriers use this path so a
+    /// misbehaving peer yields a clean process exit.
+    pub fn try_send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
         match &mut self.backend {
-            Backend::Mpsc { tx, .. } => tx.send(bytes.to_vec()).expect("peer closed"),
-            Backend::Tcp(t) => t.send(bytes).expect("tcp send"),
+            Backend::Mpsc { tx, .. } => tx
+                .send(bytes.to_vec())
+                .map_err(|_| Error::ChannelClosed("in-process peer hung up".into()))?,
+            Backend::Tcp(t) => t.send(bytes)?,
         }
+        self.meter.on_send(bytes.len() as u64);
+        Ok(())
     }
 
-    /// Receive the next raw byte message.
-    pub fn recv_bytes(&mut self) -> Vec<u8> {
+    /// Fallible receive of the next raw byte message (see
+    /// [`Chan::try_send_bytes`]). Applies link shaping after metering.
+    pub fn try_recv_bytes(&mut self) -> Result<Vec<u8>> {
+        let bytes = match &mut self.backend {
+            Backend::Mpsc { rx, .. } => rx
+                .recv()
+                .map_err(|_| Error::ChannelClosed("in-process peer hung up".into()))?,
+            Backend::Tcp(t) => t.recv()?,
+        };
         self.meter.on_recv();
-        match &mut self.backend {
-            Backend::Mpsc { rx, .. } => rx.recv().expect("peer closed"),
-            Backend::Tcp(t) => t.recv().expect("tcp recv"),
+        if let Some(s) = &mut self.shaper {
+            s.pace_recv(bytes.len() as u64);
         }
+        Ok(bytes)
+    }
+
+    /// Send a raw byte message (panics on a dead peer — protocol
+    /// internals treat that as unrecoverable; fallible callers use
+    /// [`Chan::try_send_bytes`]).
+    pub fn send_bytes(&mut self, bytes: &[u8]) {
+        self.try_send_bytes(bytes).expect("send_bytes");
+    }
+
+    /// Receive the next raw byte message (panicking twin of
+    /// [`Chan::try_recv_bytes`]).
+    pub fn recv_bytes(&mut self) -> Vec<u8> {
+        self.try_recv_bytes().expect("recv_bytes")
     }
 
     /// Send a vector of ring elements (8 bytes each, little endian).
@@ -194,11 +261,17 @@ impl Chan {
         self.send_bytes(&bytes);
     }
 
-    /// Receive a vector of ring elements.
+    /// Fallible receive of a ring-element vector: a frame whose length
+    /// is not a multiple of 8 is a typed [`Error::Protocol`].
+    pub fn try_recv_u64s(&mut self) -> Result<Vec<u64>> {
+        let bytes = self.try_recv_bytes()?;
+        decode_u64s(&bytes)
+    }
+
+    /// Receive a vector of ring elements (panicking twin of
+    /// [`Chan::try_recv_u64s`]).
     pub fn recv_u64s(&mut self) -> Vec<u64> {
-        let bytes = self.recv_bytes();
-        assert_eq!(bytes.len() % 8, 0, "malformed u64 frame");
-        bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+        self.try_recv_u64s().expect("recv_u64s")
     }
 
     /// Send a matrix (shape is protocol-known; only the buffer travels).
@@ -206,25 +279,61 @@ impl Chan {
         self.send_u64s(&m.data);
     }
 
-    /// Receive a matrix with the given (protocol-known) shape.
+    /// Fallible receive of a matrix with the given (protocol-known)
+    /// shape: a peer shipping the wrong element count yields a typed
+    /// [`Error::Shape`] instead of a panic or a misshaped buffer.
+    pub fn try_recv_mat(&mut self, rows: usize, cols: usize) -> Result<Mat> {
+        let want = rows
+            .checked_mul(cols)
+            .ok_or_else(|| Error::Shape(format!("recv_mat {rows}×{cols} overflows")))?;
+        let data = self.try_recv_u64s()?;
+        if data.len() != want {
+            return Err(Error::Shape(format!(
+                "matrix frame carries {} words, expected {rows}×{cols} = {want}",
+                data.len()
+            )));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Receive a matrix with the given (protocol-known) shape
+    /// (panicking twin of [`Chan::try_recv_mat`]).
     pub fn recv_mat(&mut self, rows: usize, cols: usize) -> Mat {
-        let data = self.recv_u64s();
-        assert_eq!(data.len(), rows * cols, "matrix frame shape mismatch");
-        Mat::from_vec(rows, cols, data)
+        self.try_recv_mat(rows, cols).expect("recv_mat")
+    }
+
+    /// Fallible symmetric exchange of raw bytes (the deployment
+    /// handshake's transport): party 0 sends first, party 1 receives
+    /// first.
+    pub fn try_exchange_bytes(&mut self, bytes: &[u8]) -> Result<Vec<u8>> {
+        if self.party == 0 {
+            self.try_send_bytes(bytes)?;
+            self.try_recv_bytes()
+        } else {
+            let r = self.try_recv_bytes()?;
+            self.try_send_bytes(bytes)?;
+            Ok(r)
+        }
+    }
+
+    /// Fallible symmetric exchange of ring vectors (see
+    /// [`Chan::exchange_u64s`]).
+    pub fn try_exchange_u64s(&mut self, xs: &[u64]) -> Result<Vec<u64>> {
+        let mut bytes = Vec::with_capacity(xs.len() * 8);
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let theirs = self.try_exchange_bytes(&bytes)?;
+        decode_u64s(&theirs)
     }
 
     /// Symmetric exchange of ring vectors: party 0 sends first, party 1
     /// receives first (one round in each direction, one RTT total since
-    /// both directions overlap on a full-duplex link).
+    /// both directions overlap on a full-duplex link). Panicking twin of
+    /// [`Chan::try_exchange_u64s`] — one implementation, so the flight
+    /// ordering cannot drift between handshake and protocol traffic.
     pub fn exchange_u64s(&mut self, xs: &[u64]) -> Vec<u64> {
-        if self.party == 0 {
-            self.send_u64s(xs);
-            self.recv_u64s()
-        } else {
-            let r = self.recv_u64s();
-            self.send_u64s(xs);
-            r
-        }
+        self.try_exchange_u64s(xs).expect("exchange_u64s")
     }
 
     /// Symmetric exchange of equal-shape matrices.
@@ -313,5 +422,66 @@ mod tests {
         let (mut c0, _c1) = duplex_pair();
         let h = c0.stage_u64s(vec![1]);
         let _ = c0.take_segment(h);
+    }
+
+    #[test]
+    fn try_recv_mat_rejects_wrong_dims() {
+        let (mut c0, mut c1) = duplex_pair();
+        let h = thread::spawn(move || {
+            c0.send_u64s(&[1, 2, 3]); // 3 words
+        });
+        // Expecting a 2×2 matrix (4 words) → typed shape error, no panic.
+        let err = c1.try_recv_mat(2, 2).unwrap_err();
+        assert!(err.to_string().contains("expected 2×2"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_on_hung_up_peer_is_channel_closed() {
+        let (c0, mut c1) = duplex_pair();
+        drop(c0);
+        let err = c1.try_recv_bytes().unwrap_err();
+        assert!(err.to_string().contains("hung up"), "{err}");
+        assert!(c1.try_send_bytes(b"x").is_err());
+    }
+
+    #[test]
+    fn shaping_changes_wall_clock_but_not_meters() {
+        use crate::net::cost::CostModel;
+        use std::time::{Duration, Instant};
+
+        let run = |shape: Option<CostModel>| {
+            let (mut c0, mut c1) = duplex_pair();
+            if let Some(m) = shape {
+                c0.set_shaper(m);
+                c1.set_shaper(m);
+            }
+            let h = thread::spawn(move || {
+                for _ in 0..3 {
+                    c0.send_u64s(&[1, 2]);
+                    c0.recv_u64s();
+                }
+                c0.into_meter()
+            });
+            for _ in 0..3 {
+                let v = c1.recv_u64s();
+                c1.send_u64s(&v);
+            }
+            (h.join().unwrap(), c1.into_meter())
+        };
+        let t0 = Instant::now();
+        let (m0, m1) = run(None);
+        let unshaped = t0.elapsed();
+        // 20 ms RTT: each of the 3 ping-pong rounds pays ≥ one full RTT
+        // (10 ms per direction), so the shaped run takes ≥ ~60 ms.
+        let t0 = Instant::now();
+        let (s0, s1) = run(Some(CostModel { rtt_s: 20e-3, bandwidth_bps: f64::INFINITY }));
+        let shaped = t0.elapsed();
+        assert!(shaped >= Duration::from_millis(55), "{shaped:?}");
+        assert!(shaped > unshaped, "shaping must slow the loop down");
+        // Meters are bit-identical: shaping never touches accounting.
+        assert_eq!(m0.total(), s0.total());
+        assert_eq!(m1.total(), s1.total());
+        assert_eq!(s0.total().rounds, 3);
     }
 }

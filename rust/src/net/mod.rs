@@ -7,8 +7,10 @@
 //! message is actually serialized, so **byte and round counts are exact
 //! measurements**; wall-clock network time is then *modeled* as
 //! `rounds·RTT + bytes/bandwidth` by [`cost::CostModel`] and added to the
-//! measured compute time. A real TCP backend ([`tcp`]) is provided for
-//! two-process runs.
+//! measured compute time. A real TCP backend ([`tcp`]) supports
+//! two-process deployments, and a deterministic link shaper ([`shape`])
+//! can enforce a [`CostModel`] on either backend so LAN/WAN wall-clock
+//! is *measured* on the wire rather than modeled.
 //!
 //! [`Chan`] additionally carries a **round buffer**: protocol gates
 //! stage their symmetric reveals and one `flush_round()` ships them all
@@ -20,11 +22,14 @@
 pub mod channel;
 pub mod cost;
 pub mod meter;
+pub mod shape;
 pub mod tcp;
 
 pub use channel::{duplex_pair, Chan};
 pub use cost::CostModel;
 pub use meter::{Meter, PhaseStats};
+pub use shape::LinkShaper;
+pub use tcp::TcpTransport;
 
 use std::thread;
 

@@ -1,0 +1,138 @@
+//! Deterministic link shaping: make a loopback transport *behave* like a
+//! target link so wall-clock numbers are measured, not modeled.
+//!
+//! The benches historically ran both parties on one host and translated
+//! exact (bytes, flights) counts into link time through
+//! [`CostModel::time`]. A [`LinkShaper`] closes the loop: attached to a
+//! [`crate::net::Chan`] (in-process or TCP), it delays every **received**
+//! message by the modeled one-way latency (RTT/2) plus its serialization
+//! time (bytes·8 / bandwidth), with serialization accumulating on a
+//! virtual inbound pipe so back-to-back frames queue like they would on
+//! a real link. A symmetric exchange therefore costs one RTT end to end
+//! — the same flight model the [`CostModel`] prices — and a full shaped
+//! run's wall-clock is a *measurement* of compute + link, comparable
+//! side by side with the modeled figure.
+//!
+//! Shaping is deterministic in the sense that it injects no randomness
+//! and never touches payloads: byte counts, flight counts and every
+//! revealed value are bit-identical with and without a shaper (the
+//! meters run **before** pacing). Only elapsed time changes.
+//!
+//! Sleeps are lower bounds — the OS may wake the thread late — so shaped
+//! wall-clock ≥ modeled link time + compute, which is also true of a
+//! real link.
+
+use super::cost::CostModel;
+use std::time::{Duration, Instant};
+
+/// Paces one endpoint's inbound traffic to a [`CostModel`].
+#[derive(Debug, Clone)]
+pub struct LinkShaper {
+    model: CostModel,
+    /// Virtual time at which the inbound serialization pipe frees up
+    /// (`None` before any traffic).
+    link_free: Option<Instant>,
+}
+
+impl LinkShaper {
+    /// Shape to the given link. [`CostModel::zero`] yields a no-op
+    /// shaper.
+    pub fn new(model: CostModel) -> LinkShaper {
+        LinkShaper { model, link_free: None }
+    }
+
+    /// The link being enforced.
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// Whether this shaper never delays (zero RTT, infinite bandwidth).
+    pub fn is_free(&self) -> bool {
+        self.model.rtt_s <= 0.0 && self.model.bandwidth_bps.is_infinite()
+    }
+
+    /// Serialization time of `bytes` on this link (zero on an infinite
+    /// link).
+    pub fn serialization(&self, bytes: u64) -> Duration {
+        if self.model.bandwidth_bps.is_infinite() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(bytes as f64 * 8.0 / self.model.bandwidth_bps)
+    }
+
+    /// One-way propagation latency (RTT/2).
+    pub fn latency(&self) -> Duration {
+        Duration::from_secs_f64(self.model.rtt_s / 2.0)
+    }
+
+    /// Block until a just-received `bytes`-long message would have
+    /// finished arriving on the modeled link: the inbound pipe serializes
+    /// it after any still-queued predecessor, then one-way latency
+    /// applies on top (propagation overlaps serialization of later
+    /// frames, so only the pipe time is carried forward).
+    pub fn pace_recv(&mut self, bytes: u64) {
+        if self.is_free() {
+            return;
+        }
+        let now = Instant::now();
+        let start = match self.link_free {
+            Some(t) if t > now => t,
+            _ => now,
+        };
+        let free = start + self.serialization(bytes);
+        self.link_free = Some(free);
+        let ready = free + self.latency();
+        let wait = ready.saturating_duration_since(now);
+        if wait > Duration::ZERO {
+            std::thread::sleep(wait);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_link_never_sleeps() {
+        let mut s = LinkShaper::new(CostModel::zero());
+        assert!(s.is_free());
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            s.pace_recv(1 << 20);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn latency_paces_each_receive_by_half_rtt() {
+        // 20 ms RTT, infinite bandwidth: 3 receives ≥ 3 × 10 ms.
+        let mut s = LinkShaper::new(CostModel { rtt_s: 20e-3, bandwidth_bps: f64::INFINITY });
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            s.pace_recv(8);
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(29), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn bandwidth_paces_bytes() {
+        // 8 kbit/s = 1 KB/s: a 100-byte frame serializes in ≥ 100 ms.
+        let mut s = LinkShaper::new(CostModel { rtt_s: 0.0, bandwidth_bps: 8e3 });
+        let t0 = Instant::now();
+        s.pace_recv(100);
+        assert!(t0.elapsed() >= Duration::from_millis(95), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn serialization_queues_back_to_back_frames() {
+        // Two 50-byte frames on the 1 KB/s link: the second starts after
+        // the first finishes → total ≥ 100 ms even though each alone is
+        // 50 ms.
+        let mut s = LinkShaper::new(CostModel { rtt_s: 0.0, bandwidth_bps: 8e3 });
+        let t0 = Instant::now();
+        s.pace_recv(50);
+        s.pace_recv(50);
+        assert!(t0.elapsed() >= Duration::from_millis(95), "{:?}", t0.elapsed());
+    }
+}

@@ -2,16 +2,35 @@
 //!
 //! Frames are `u32` little-endian length prefixes followed by the
 //! payload, mirroring what the in-process channel carries so that meters
-//! agree between backends.
+//! agree between backends (see `docs/PROTOCOLS.md`, "Wire format").
+//!
+//! ## Hardening
+//!
+//! The codec treats the peer as untrusted at the framing layer:
+//!
+//! * a length prefix above [`MAX_FRAME_BYTES`] is rejected with a typed
+//!   [`Error::Protocol`] **before** any allocation;
+//! * the receive buffer grows with the bytes actually read, never with
+//!   the announced length — a lying prefix can cost at most the bytes
+//!   the peer really sends;
+//! * a clean disconnect surfaces as [`Error::ChannelClosed`], a
+//!   mid-frame disconnect as a "truncated frame" [`Error::ChannelClosed`]
+//!   carrying the byte counts — never a panic.
 
 use crate::util::error::{Error, Result};
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 /// Default bound on connect retries (was an effectively unbounded wait).
 pub const DEFAULT_CONNECT_ATTEMPTS: usize = 50;
 /// Default delay between connect retries.
 pub const DEFAULT_CONNECT_DELAY: std::time::Duration = std::time::Duration::from_millis(100);
+
+/// Hard cap on a single frame's payload (256 MiB). The largest honest
+/// frame is an S1 reveal flight, well under this at any benchmarked
+/// scale; anything bigger is a corrupt or hostile length prefix and is
+/// rejected before allocation.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
 
 /// A connected, framed TCP transport.
 pub struct TcpTransport {
@@ -22,6 +41,13 @@ impl TcpTransport {
     /// Listen on `addr` and accept a single peer (party 0 role).
     pub fn listen(addr: &str) -> Result<TcpTransport> {
         let listener = TcpListener::bind(addr)?;
+        Self::accept_from(&listener)
+    }
+
+    /// Accept a single peer from an already-bound listener. Binding is
+    /// split out so callers (tests, drivers) can bind port 0 and read
+    /// the ephemeral port back before blocking in accept.
+    pub fn accept_from(listener: &TcpListener) -> Result<TcpTransport> {
         let (stream, _) = listener.accept()?;
         stream.set_nodelay(true)?;
         Ok(TcpTransport { stream })
@@ -65,21 +91,53 @@ impl TcpTransport {
         )))
     }
 
-    /// Send one framed message.
+    /// Send one framed message. Refuses frames above [`MAX_FRAME_BYTES`]
+    /// with a typed error (a peer applying the same cap would reject
+    /// them anyway).
     pub fn send(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() > MAX_FRAME_BYTES {
+            return Err(Error::Protocol(format!(
+                "refusing to send a {}-byte frame (cap {MAX_FRAME_BYTES})",
+                bytes.len()
+            )));
+        }
         let len = bytes.len() as u32;
         self.stream.write_all(&len.to_le_bytes())?;
         self.stream.write_all(bytes)?;
         Ok(())
     }
 
-    /// Receive one framed message.
+    /// Receive one framed message. Typed errors, bounded allocation:
+    /// an oversized announced length is [`Error::Protocol`], a peer
+    /// hangup between frames is [`Error::ChannelClosed`], and a frame
+    /// cut short by a disconnect is [`Error::ChannelClosed`] with the
+    /// received/expected byte counts.
     pub fn recv(&mut self) -> Result<Vec<u8>> {
         let mut lenb = [0u8; 4];
-        self.stream.read_exact(&mut lenb)?;
+        if let Err(e) = self.stream.read_exact(&mut lenb) {
+            return Err(if e.kind() == ErrorKind::UnexpectedEof {
+                Error::ChannelClosed("peer closed the connection".into())
+            } else {
+                Error::Io(e)
+            });
+        }
         let len = u32::from_le_bytes(lenb) as usize;
-        let mut buf = vec![0u8; len];
-        self.stream.read_exact(&mut buf)?;
+        if len > MAX_FRAME_BYTES {
+            return Err(Error::Protocol(format!(
+                "peer announced a {len}-byte frame (cap {MAX_FRAME_BYTES}); refusing to allocate"
+            )));
+        }
+        // `take(len)` + `read_to_end` grows the buffer with the bytes
+        // actually received: the untrusted prefix never sizes an
+        // allocation up front.
+        let mut buf = Vec::new();
+        (&self.stream).take(len as u64).read_to_end(&mut buf)?;
+        if buf.len() != len {
+            return Err(Error::ChannelClosed(format!(
+                "truncated frame: got {} of {len} bytes before the peer hung up",
+                buf.len()
+            )));
+        }
         Ok(buf)
     }
 }
@@ -88,6 +146,13 @@ impl TcpTransport {
 mod tests {
     use super::*;
     use std::thread;
+
+    /// Bind an ephemeral port and return (listener, addr string).
+    fn ephemeral() -> (TcpListener, String) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        (l, addr)
+    }
 
     #[test]
     fn connect_fails_fast_when_nobody_listens() {
@@ -105,15 +170,76 @@ mod tests {
 
     #[test]
     fn tcp_roundtrip_localhost() {
-        let addr = "127.0.0.1:47391";
+        let (l, addr) = ephemeral();
         let server = thread::spawn(move || {
-            let mut t = TcpTransport::listen(addr).unwrap();
+            let mut t = TcpTransport::accept_from(&l).unwrap();
             let m = t.recv().unwrap();
             t.send(&m).unwrap();
         });
-        let mut c = TcpTransport::connect(addr).unwrap();
+        let mut c = TcpTransport::connect(&addr).unwrap();
         c.send(b"hello ppkmeans").unwrap();
         assert_eq!(c.recv().unwrap(), b"hello ppkmeans");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let (l, addr) = ephemeral();
+        let server = thread::spawn(move || {
+            let mut t = TcpTransport::accept_from(&l).unwrap();
+            t.recv()
+        });
+        // A raw peer announcing a 4 GiB-ish frame: the receiver must
+        // return a typed error immediately, not allocate or panic.
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = server.join().unwrap().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("wire protocol"), "{msg}");
+        assert!(msg.contains("refusing to allocate"), "{msg}");
+    }
+
+    #[test]
+    fn truncated_frame_is_a_typed_error() {
+        let (l, addr) = ephemeral();
+        let server = thread::spawn(move || {
+            let mut t = TcpTransport::accept_from(&l).unwrap();
+            t.recv()
+        });
+        // Announce 100 bytes, send 3, hang up.
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(b"abc").unwrap();
+        drop(s);
+        let err = server.join().unwrap().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("truncated frame: got 3 of 100"), "{msg}");
+    }
+
+    #[test]
+    fn clean_hangup_is_channel_closed() {
+        let (l, addr) = ephemeral();
+        let server = thread::spawn(move || {
+            let mut t = TcpTransport::accept_from(&l).unwrap();
+            t.recv()
+        });
+        let s = std::net::TcpStream::connect(&addr).unwrap();
+        drop(s);
+        let err = server.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("peer closed"), "{err}");
+    }
+
+    #[test]
+    fn oversized_send_is_refused_locally() {
+        let (l, addr) = ephemeral();
+        let server = thread::spawn(move || {
+            let _t = TcpTransport::accept_from(&l).unwrap();
+        });
+        let mut c = TcpTransport::connect(&addr).unwrap();
+        // A huge virtual slice is enough to trip the cap check — the
+        // data is never touched because send() refuses first.
+        let big = vec![0u8; MAX_FRAME_BYTES + 1];
+        assert!(c.send(&big).is_err());
         server.join().unwrap();
     }
 }

@@ -1,5 +1,6 @@
 //! Artifact manifest parsing and one-time PJRT compilation.
 
+use crate::runtime::xla_stub as xla; // swap for the real `xla` crate to execute
 use crate::util::error::{Error, Result};
 use std::collections::HashMap;
 use std::path::Path;

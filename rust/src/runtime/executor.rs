@@ -1,6 +1,7 @@
 //! Typed execution of compiled artifacts.
 
 use super::artifact::Entry;
+use crate::runtime::xla_stub as xla; // swap for the real `xla` crate to execute
 use crate::util::error::{Error, Result};
 
 fn shape_i64(shape: &[usize]) -> Vec<i64> {
@@ -15,7 +16,7 @@ pub fn execute_i64(entry: &Entry, inputs: &[&[i64]]) -> Result<Vec<Vec<i64>>> {
         return Err(Error::Runtime(format!("{} is {} not i64", entry.name, entry.dtype)));
     }
     let mut lits = Vec::with_capacity(inputs.len());
-    for (buf, shape) in inputs.iter().zip(&entry.in_shapes) {
+    for (&buf, shape) in inputs.iter().zip(&entry.in_shapes) {
         let expected: usize = shape.iter().product();
         if buf.len() != expected {
             return Err(Error::Runtime(format!(
@@ -42,7 +43,7 @@ pub fn execute_f32(entry: &Entry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         return Err(Error::Runtime(format!("{} is {} not f32", entry.name, entry.dtype)));
     }
     let mut lits = Vec::with_capacity(inputs.len());
-    for (buf, shape) in inputs.iter().zip(&entry.in_shapes) {
+    for (&buf, shape) in inputs.iter().zip(&entry.in_shapes) {
         lits.push(xla::Literal::vec1(buf).reshape(&shape_i64(shape))?);
     }
     let result = entry.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;

@@ -30,6 +30,8 @@ pub mod pool;
 pub mod tile_select;
 #[cfg(feature = "pjrt")]
 pub mod tiled;
+#[cfg(feature = "pjrt")]
+pub mod xla_stub;
 
 #[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactStore, Entry};

@@ -1,0 +1,119 @@
+//! Type-level stub of the `xla` crate API surface the PJRT path uses.
+//!
+//! The crate is deliberately dependency-free (offline builds), yet the
+//! PJRT plumbing in [`super::artifact`], [`super::executor`] and
+//! [`super::tiled`] should not rot unchecked: CI's
+//! `cargo check --features pjrt` job compiles all of it against this
+//! stub, which mirrors the external crate's signatures but whose entry
+//! point ([`PjRtClient::cpu`]) always returns a typed
+//! [`Error`] — so a `pjrt` build without a real backend fails **at
+//! runtime with a clear message**, never at a protocol boundary.
+//!
+//! Wiring a real XLA backend: add the `xla` crate to `[dependencies]`
+//! and replace the `use crate::runtime::xla_stub as xla;` alias in the
+//! modules above (and in `util::error`) with the external crate. The
+//! stub exists so that step is a two-line diff instead of a bitrotted
+//! merge.
+
+use std::fmt;
+
+/// Stand-in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT stub: this binary was built against runtime::xla_stub — add the real \
+         `xla` crate and swap the stub alias to execute compiled artifacts"
+            .into(),
+    ))
+}
+
+/// Stand-in for `xla::Literal` (host-side tensor).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host buffer.
+    pub fn vec1<T>(_buf: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer` (device-side buffer).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The CPU client — the stub's single failure point: everything
+    /// else is unreachable without a client.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

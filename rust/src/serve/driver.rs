@@ -19,7 +19,8 @@ use crate::data::blobs::Dataset;
 use crate::data::normalize;
 use crate::fraud::threshold::distance_threshold;
 use crate::kmeans::config::{Partition, SecureKmeansConfig};
-use crate::kmeans::secure::{self, SecureKmeansOutput};
+use crate::kmeans::secure::{self, PartyResult, SecureKmeansOutput};
+use crate::net::cost::CostModel;
 use crate::net::meter::{Meter, PhaseStats};
 use crate::net::{run_two_party, Chan};
 use crate::offline::bank::{BankConfig, MaterialBank};
@@ -48,6 +49,13 @@ pub struct ServeConfig {
     /// replenishment and the per-batch plaintext-side products). Scores,
     /// reveals and meters are bit-identical for any value.
     pub parallelism: Parallelism,
+    /// Optional deterministic link shaping
+    /// ([`crate::net::shape::LinkShaper`]) for the serve loop's
+    /// transport: per-batch wall-clock then *measures* compute + link
+    /// instead of modeling the link afterwards. `None` (default) leaves
+    /// the transport unshaped; scores, reveals and meters are identical
+    /// either way.
+    pub shape: Option<CostModel>,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +66,7 @@ impl Default for ServeConfig {
             bank: BankConfig::default(),
             seed: 0x5E11E,
             parallelism: Parallelism::sequential(),
+            shape: None,
         }
     }
 }
@@ -153,33 +162,59 @@ pub fn train_model(
     Ok((out, models))
 }
 
-/// One party's serve-loop result (pre-assembly).
-struct PartyServe {
-    results: Vec<ScoreResult>,
-    batch_stats: Vec<BatchStats>,
-    per_batch_demand: Demand,
-    warmup_stats: PhaseStats,
-    bank_prefabricated: usize,
-    bank_replenished: usize,
-    bank_consumed: usize,
-    bank_remaining: usize,
-    bank_replenish_events: usize,
-    bank_misses: u64,
-    per_batch_mat_triple_bytes: u64,
+/// One party's serve-loop result: everything [`ServeOutput`] reports,
+/// seen from a single endpoint — the unit a two-process deployment
+/// exchanges nothing extra to produce (both parties reveal identical
+/// scores, so each side's ledger stands alone).
+pub struct ServePartyOutput {
+    /// Revealed per-batch results (identical on both parties).
+    pub results: Vec<ScoreResult>,
+    /// Per-batch traffic/wall metrics (batch 0 is the probe).
+    pub batch_stats: Vec<BatchStats>,
+    /// The recorded per-batch offline demand the bank was planned from.
+    pub per_batch_demand: Demand,
+    /// Traffic of the one-time scorer warmup (norm-row flight).
+    pub warmup_stats: PhaseStats,
+    /// Bank ledger: batches fabricated up front.
+    pub bank_prefabricated: usize,
+    /// Batches added by replenishment.
+    pub bank_replenished: usize,
+    /// Batches checked out.
+    pub bank_consumed: usize,
+    /// Batches left in stock at shutdown.
+    pub bank_remaining: usize,
+    /// Replenishment events.
+    pub bank_replenish_events: usize,
+    /// Online draws that missed prefabricated stock (0 when planned
+    /// correctly).
+    pub bank_misses: u64,
+    /// Matrix-triple bytes of one prefabricated batch.
+    pub per_batch_mat_triple_bytes: u64,
 }
 
-fn serve_party(
+/// Run **one party's** serve loop over any connected [`Chan`] backend:
+/// warm the scorer, probe batch 0 for its exact offline demand, stand up
+/// a replenished [`MaterialBank`], and score every block FIFO. This is
+/// the deployment entry point — the in-process [`serve_stream`] drives
+/// two of these over a duplex pair; a `ppkmeans party` process drives
+/// one over TCP. `blocks` holds this party's **raw** feature block per
+/// micro-batch (uniform size). Uses `cfg.bank`, `cfg.seed`,
+/// `cfg.parallelism` and `cfg.shape`; the batch geometry is implied by
+/// `blocks`.
+pub fn serve_party(
     chan: &mut Chan,
     model: TrainedModel,
     blocks: Vec<Vec<f64>>,
-    bank_cfg: BankConfig,
-    seed: u128,
-    threads: usize,
-) -> PartyServe {
+    cfg: &ServeConfig,
+) -> ServePartyOutput {
     let party = chan.party;
+    let (bank_cfg, seed, threads) = (cfg.bank, cfg.seed, cfg.parallelism.threads);
     // Worker count for the per-batch plaintext-side products (see
     // runtime::pool) — scores and meters are thread-count independent.
     crate::runtime::pool::set_global_threads(threads);
+    if let Some(link) = cfg.shape {
+        chan.set_shaper(link);
+    }
     let mut scorer = Scorer::new(model, seed ^ 0x5C0_0E);
 
     // One-time warmup: the shared norm row (material generated inline —
@@ -233,7 +268,7 @@ fn serve_party(
         batch_stats.push(s);
     }
 
-    PartyServe {
+    ServePartyOutput {
         results,
         batch_stats,
         per_batch_mat_triple_bytes: bank.per_batch_mat_triple_bytes(),
@@ -246,6 +281,46 @@ fn serve_party(
         bank_replenish_events: bank.replenish_events,
         bank_misses: bank.misses(),
     }
+}
+
+/// One-party analogue of [`train_model`] for two-process deployments:
+/// run this party's side of secure training over `chan` and package
+/// **its own** model artifact. Both processes hold the full raw
+/// training set (synthetic from a negotiated seed, or pre-shared), so
+/// the normalization stats and the public threshold τ come out
+/// identical on each side — exactly as [`train_model`] computes them.
+pub fn train_model_party(
+    chan: &mut Chan,
+    data: &Dataset,
+    cfg: &SecureKmeansConfig,
+    flag_rate: f64,
+) -> Result<(PartyResult, TrainedModel)> {
+    let d_a = match cfg.partition {
+        Partition::Vertical { d_a } => d_a,
+        Partition::Horizontal { .. } => {
+            return Err(Error::Config(
+                "the scoring service requires a vertical partition (each party \
+                 holds its feature block of incoming transactions)"
+                    .into(),
+            ))
+        }
+    };
+    let stats = normalize::column_stats(data);
+    let normalized = normalize::min_max(data);
+    let r = secure::run_party(chan, &normalized, cfg)?;
+    let tau = distance_threshold(&normalized, &r.mu.decode(), &r.assignments, cfg.k, flag_rate);
+    let party = chan.party;
+    let (c0, c1) = if party == 0 { (0, d_a) } else { (d_a, data.d) };
+    let model = TrainedModel {
+        party,
+        k: cfg.k,
+        d: data.d,
+        d_a,
+        mu_share: r.mu_share.clone(),
+        stats: stats[c0..c1].to_vec(),
+        tau,
+    };
+    Ok((r, model))
 }
 
 /// Serve a transaction stream with both parties' models: slices the
@@ -310,11 +385,11 @@ pub fn serve_stream(
     }
     let k = ma.k;
     let batch_rows = cfg.batch_rows;
-    let (bank_cfg, seed) = (cfg.bank, cfg.seed);
-    let threads = cfg.parallelism.threads;
+    let cfg_a = cfg.clone();
+    let cfg_b = cfg.clone();
     let ((ra, meter_a), (rb, meter_b)) = run_two_party(
-        move |c| serve_party(c, ma, blocks_a, bank_cfg, seed, threads),
-        move |c| serve_party(c, mb, blocks_b, bank_cfg, seed, threads),
+        move |c| serve_party(c, ma, blocks_a, &cfg_a),
+        move |c| serve_party(c, mb, blocks_b, &cfg_b),
     );
     debug_assert_eq!(ra.results, rb.results, "parties must reveal identical scores");
     debug_assert_eq!(ra.bank_misses + rb.bank_misses, 0, "planned banks must not miss");

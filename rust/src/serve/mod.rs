@@ -29,6 +29,9 @@ pub mod driver;
 pub mod model;
 pub mod scorer;
 
-pub use driver::{serve_stream, train_model, ServeConfig, ServeOutput};
+pub use driver::{
+    serve_party, serve_stream, train_model, train_model_party, ServeConfig, ServeOutput,
+    ServePartyOutput,
+};
 pub use model::TrainedModel;
 pub use scorer::{score_rounds, ScoreResult, Scorer};

@@ -7,6 +7,13 @@ pub enum Error {
     /// A transport endpoint closed while a protocol was mid-flight.
     ChannelClosed(String),
 
+    /// A peer violated the wire protocol: bad magic or version in the
+    /// deployment handshake, a desynchronized phase barrier, an
+    /// oversized or malformed frame. Unlike [`Error::ChannelClosed`]
+    /// (the link died) this means the bytes that *did* arrive are not
+    /// trustworthy.
+    Protocol(String),
+
     /// Mismatched matrix / vector dimensions inside a protocol step.
     Shape(String),
 
@@ -36,6 +43,7 @@ impl std::fmt::Display for Error {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Error::ChannelClosed(s) => write!(f, "transport channel closed: {s}"),
+            Error::Protocol(s) => write!(f, "wire protocol: {s}"),
             Error::Shape(s) => write!(f, "shape mismatch: {s}"),
             Error::Offline(s) => write!(f, "offline store: {s}"),
             Error::He(s) => write!(f, "he: {s}"),
@@ -63,9 +71,13 @@ impl From<std::io::Error> for Error {
     }
 }
 
+// The `pjrt` plumbing type-checks against the in-repo API stub
+// (`runtime::xla_stub`), which is what CI's `cargo check --features
+// pjrt` gate compiles; wiring a real XLA backend swaps the stub alias
+// for the external `xla` crate (see the stub's module docs).
 #[cfg(feature = "pjrt")]
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::runtime::xla_stub::Error> for Error {
+    fn from(e: crate::runtime::xla_stub::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }

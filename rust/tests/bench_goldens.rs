@@ -1,0 +1,63 @@
+//! Golden flight/byte counts for the bench-smoke CI gate.
+//!
+//! Wall-clock is hardware-dependent and stays informational; every byte
+//! and every flight is deterministic, so drift there is a real protocol
+//! change and must be deliberate. The goldens live in
+//! `rust/tests/goldens/`; a file containing `status = bootstrap` (or a
+//! missing file) is regenerated in place — run the test once locally
+//! and commit the result to pin the counts. To update after an
+//! intentional protocol change: `UPDATE_GOLDENS=1 cargo test --test
+//! bench_goldens`, then commit the diff. Either way the test also
+//! re-runs the measurement and asserts it is reproducible within the
+//! same process, so CI catches nondeterminism even on a bootstrap run.
+
+use ppkmeans::bench::{serve_counts, serve_golden_lines, train_counts, train_golden_lines};
+use std::path::PathBuf;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens").join(name)
+}
+
+/// Compare `actual` against the committed golden, bootstrapping or
+/// updating the file when asked to.
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_path(name);
+    let committed = std::fs::read_to_string(&path).unwrap_or_default();
+    let update = std::env::var("UPDATE_GOLDENS").is_ok();
+    if update || committed.is_empty() || committed.trim() == "status = bootstrap" {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap_or_else(|e| panic!("write {name}: {e}"));
+        eprintln!("bench_goldens: wrote {} — commit it to pin these counts", path.display());
+        return;
+    }
+    assert_eq!(
+        committed, actual,
+        "flight/byte counts drifted from {name} — if the protocol change is \
+         intentional, regenerate with `UPDATE_GOLDENS=1 cargo test --test \
+         bench_goldens` and commit the diff"
+    );
+}
+
+#[test]
+fn train_counts_match_goldens() {
+    for k in [2usize, 5] {
+        let c = train_counts(256, 2, k, 3);
+        let lines = train_golden_lines(&c);
+        check_golden(&format!("train_n256_k{k}.golden"), &lines);
+        // Reproducibility inside one process: a second identical run
+        // must produce identical counts (this is what makes the golden
+        // meaningful at all).
+        let again = train_golden_lines(&train_counts(256, 2, k, 3));
+        assert_eq!(lines, again, "train counts must be deterministic (k={k})");
+    }
+}
+
+#[test]
+fn serving_counts_match_golden() {
+    let c = serve_counts(200, 2, 2, 16, 4);
+    let lines = serve_golden_lines(&c);
+    check_golden("serving_k2_b4x16.golden", &lines);
+    let again = serve_golden_lines(&serve_counts(200, 2, 2, 16, 4));
+    assert_eq!(lines, again, "serving counts must be deterministic");
+    assert_eq!(c.bank_misses, 0, "a planned bank must never miss");
+}

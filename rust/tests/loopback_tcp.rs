@@ -1,0 +1,145 @@
+//! Loopback transcript equivalence: the same protocol over localhost
+//! TCP ([`Chan::from_tcp`]) and over the in-process duplex pair must
+//! produce **bit-identical** shares, reveals and per-phase meters — the
+//! property that makes the two-process deployment a drop-in for every
+//! number this repo reports.
+
+use ppkmeans::coordinator::remote::{run_scenario, run_scenario_local, Pipeline, Scenario};
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::secure::run_party;
+use ppkmeans::net::meter::PhaseStats;
+use ppkmeans::net::{duplex_pair, Chan, TcpTransport};
+use std::net::TcpListener;
+use std::thread;
+
+/// A connected TCP channel pair over an ephemeral localhost port.
+fn tcp_pair() -> (Chan, Chan) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = thread::spawn(move || TcpTransport::accept_from(&listener).unwrap());
+    let client = TcpTransport::connect(&addr).unwrap();
+    let server = h.join().unwrap();
+    (Chan::from_tcp(server, 0), Chan::from_tcp(client, 1))
+}
+
+/// Run a scenario with both parties as threads over a given channel
+/// pair, returning both transcript JSONs.
+fn run_over(mut c0: Chan, mut c1: Chan, sc: &Scenario) -> (String, String) {
+    let sc0 = sc.clone();
+    let sc1 = sc.clone();
+    let h0 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c0, &sc0).unwrap().to_json())
+        .unwrap();
+    let h1 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c1, &sc1).unwrap().to_json())
+        .unwrap();
+    (h0.join().unwrap(), h1.join().unwrap())
+}
+
+#[test]
+fn train_transcripts_are_transport_independent() {
+    let sc = Scenario {
+        pipeline: Pipeline::Train,
+        n: 60,
+        d: 4,
+        k: 2,
+        iters: 3,
+        seed: 21,
+        data_seed: 9,
+        ..Default::default()
+    };
+    let (l0, l1) = run_scenario_local(&sc).unwrap();
+    let (c0, c1) = tcp_pair();
+    let (t0, t1) = run_over(c0, c1, &sc);
+    assert_eq!(l0.to_json(), t0, "party 0 transcript must not depend on the transport");
+    assert_eq!(l1.to_json(), t1, "party 1 transcript must not depend on the transport");
+    // Sanity: the transcript actually carries protocol phases.
+    assert!(t0.contains("online.s1"));
+    assert!(t0.contains("handshake"));
+}
+
+#[test]
+fn serve_pipeline_transcripts_are_transport_independent() {
+    // Train → score over TCP, with a bank small enough to force a
+    // replenishment mid-stream.
+    let sc = Scenario {
+        pipeline: Pipeline::Serve,
+        n: 120,
+        k: 2,
+        iters: 2,
+        seed: 5,
+        data_seed: 3,
+        batch_rows: 12,
+        batches: 3,
+        prefab: 1,
+        low_water: 1,
+        refill: 1,
+        ..Default::default()
+    };
+    let (l0, l1) = run_scenario_local(&sc).unwrap();
+    let (c0, c1) = tcp_pair();
+    let (t0, t1) = run_over(c0, c1, &sc);
+    assert_eq!(l0.to_json(), t0);
+    assert_eq!(l1.to_json(), t1);
+    assert!(t0.contains("serve.s1"), "serving phases must be metered");
+    assert!(t0.contains("\"bank_misses\": \"0\""), "planned bank must not miss: {t0}");
+}
+
+/// One party's observable outcome: reconstructed centroid words, own
+/// share words, assignments, and the full per-phase meter.
+type Side = (Vec<u64>, Vec<u64>, Vec<usize>, Vec<(String, PhaseStats)>);
+
+fn party_side(
+    chan: &mut Chan,
+    data: &ppkmeans::data::blobs::Dataset,
+    cfg: &SecureKmeansConfig,
+) -> Side {
+    let r = run_party(chan, data, cfg).unwrap();
+    let phases = chan.meter().phases().map(|(k, v)| (k.to_string(), *v)).collect();
+    (r.mu.data.clone(), r.mu_share.data.clone(), r.assignments, phases)
+}
+
+/// Library-level equivalence, below the transcript layer: raw shares,
+/// reveals, assignments and every phase meter from `run_party`.
+#[test]
+fn run_party_shares_reveals_and_meters_match_across_transports() {
+    let ds = BlobSpec::new(50, 4, 2).generate(3);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 3,
+        partition: Partition::Vertical { d_a: 2 },
+        ..Default::default()
+    };
+
+    let run_pair = |mut c0: Chan, mut c1: Chan| -> (Side, Side) {
+        let (da, db) = (ds.clone(), ds.clone());
+        let (cfg_a, cfg_b) = (cfg.clone(), cfg.clone());
+        let h0 = thread::Builder::new()
+            .stack_size(64 << 20)
+            .spawn(move || party_side(&mut c0, &da, &cfg_a))
+            .unwrap();
+        let h1 = thread::Builder::new()
+            .stack_size(64 << 20)
+            .spawn(move || party_side(&mut c1, &db, &cfg_b))
+            .unwrap();
+        (h0.join().unwrap(), h1.join().unwrap())
+    };
+
+    let (mpsc0, mpsc1) = {
+        let (c0, c1) = duplex_pair();
+        run_pair(c0, c1)
+    };
+    let (tcp0, tcp1) = {
+        let (c0, c1) = tcp_pair();
+        run_pair(c0, c1)
+    };
+    // Bit-identical: reconstructed centroids, this party's share,
+    // assignments, and the full per-phase byte/flight accounting.
+    assert_eq!(mpsc0, tcp0, "party 0 must be transport-independent");
+    assert_eq!(mpsc1, tcp1, "party 1 must be transport-independent");
+    // And the two parties agree on the reveal.
+    assert_eq!(mpsc0.0, mpsc1.0);
+}

@@ -1,0 +1,109 @@
+//! Two real OS processes over localhost TCP, diffed against the
+//! in-process reference — the same check CI's `two-process` job runs
+//! with the release binary, here wired into `cargo test` via
+//! `CARGO_BIN_EXE_ppkmeans`.
+
+use ppkmeans::coordinator::remote::{run_scenario_local, Scenario};
+use std::path::Path;
+use std::process::Command;
+
+const SCENARIO: &str = "\
+# two-process regression scenario: tiny fraud-shaped train -> score
+pipeline = serve
+n = 96
+k = 2
+iters = 2
+seed = 1337
+data_seed = 7
+stream_seed = 4242
+rate = 0.05
+batch_rows = 12
+batches = 3
+prefab = 2
+low_water = 1
+refill = 1
+save_model = false
+";
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+#[test]
+fn two_process_tcp_run_matches_in_process_reference() {
+    let exe = env!("CARGO_BIN_EXE_ppkmeans");
+    let dir = std::env::temp_dir().join(format!("ppkm_two_proc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let scn = dir.join("ci.scn");
+    std::fs::write(&scn, SCENARIO).unwrap();
+    let scn_str = scn.to_str().unwrap();
+
+    // A per-process port keeps parallel test runs from colliding.
+    let addr = format!("127.0.0.1:{}", 41000 + (std::process::id() % 20000) as u16);
+    let p0_json = dir.join("p0.json");
+    let p1_json = dir.join("p1.json");
+
+    let mut p0 = Command::new(exe)
+        .args(["party", "--role", "p0", "--listen", addr.as_str(), "--scenario", scn_str])
+        .args(["--out", p0_json.to_str().unwrap()])
+        .spawn()
+        .expect("spawn p0");
+    let p1_status = Command::new(exe)
+        .args(["party", "--role", "p1", "--connect", addr.as_str(), "--scenario", scn_str])
+        .args(["--out", p1_json.to_str().unwrap()])
+        .status()
+        .expect("run p1");
+    let p0_status = p0.wait().expect("wait p0");
+    assert!(p0_status.success(), "party 0 failed: {p0_status}");
+    assert!(p1_status.success(), "party 1 failed: {p1_status}");
+
+    // The in-process reference runs the same scenario through the same
+    // run_scenario code path, over the duplex pair instead of TCP.
+    let sc = Scenario::from_file(&scn).unwrap();
+    let (l0, l1) = run_scenario_local(&sc).unwrap();
+    assert_eq!(
+        read(&p0_json),
+        l0.to_json(),
+        "party 0: two-process transcript must be bit-identical to in-process"
+    );
+    assert_eq!(
+        read(&p1_json),
+        l1.to_json(),
+        "party 1: two-process transcript must be bit-identical to in-process"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mismatched_scenarios_fail_the_handshake_cleanly() {
+    let exe = env!("CARGO_BIN_EXE_ppkmeans");
+    let dir = std::env::temp_dir().join(format!("ppkm_two_proc_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let scn_a = dir.join("a.scn");
+    let scn_b = dir.join("b.scn");
+    std::fs::write(&scn_a, SCENARIO).unwrap();
+    std::fs::write(&scn_b, SCENARIO.replace("iters = 2", "iters = 3")).unwrap();
+
+    let addr = format!("127.0.0.1:{}", 21000 + (std::process::id() % 20000) as u16);
+    let mut p0 = Command::new(exe)
+        .args(["party", "--role", "p0", "--listen", addr.as_str()])
+        .args(["--scenario", scn_a.to_str().unwrap()])
+        .spawn()
+        .expect("spawn p0");
+    let p1 = Command::new(exe)
+        .args(["party", "--role", "p1", "--connect", addr.as_str()])
+        .args(["--scenario", scn_b.to_str().unwrap()])
+        .output()
+        .expect("run p1");
+    let p0_status = p0.wait().expect("wait p0");
+    // Both sides must exit nonzero with a typed handshake error — no
+    // protocol bytes, no panic, no garbage shares.
+    assert!(!p0_status.success(), "p0 must reject the mismatch");
+    assert!(!p1.status.success(), "p1 must reject the mismatch");
+    let stderr = String::from_utf8_lossy(&p1.stderr);
+    assert!(stderr.contains("scenario mismatch"), "stderr: {stderr}");
+    assert!(stderr.contains("iters"), "must name the differing key: {stderr}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
