@@ -1,16 +1,24 @@
-//! Multi-core runtime study: offline-prefill and online wall-clock
-//! scaling across 1/2/4/8 worker threads, with the determinism
-//! cross-check (identical flight/byte meters at every thread count).
+//! Multi-core + packed-lane runtime study: offline-prefill and online
+//! wall-clock scaling across 1/2/4/8 worker threads and 1/4/8 SIMD
+//! lanes, with the determinism cross-checks (identical flight/byte
+//! meters at every thread count and lane width, identical fabricated
+//! material at every lane width).
 //!
-//! Claims under test (regression-tested in `rust/tests/parallel.rs`):
+//! Claims under test (regression-tested in `rust/tests/parallel.rs` and
+//! `rust/tests/lanes.rs`):
 //!
 //! * offline prefabrication is embarrassingly parallel — the dealer
 //!   forks per-item child PRGs sequentially and expands them on the
 //!   pool, so 4 workers should approach 4× on triple-heavy demands
 //!   (the acceptance bar is ≥ 2×);
+//! * the packed Speck counter-mode batches behind the dealer's bulk PRG
+//!   draws break the per-block ARX dependency chain, so 8 lanes on one
+//!   thread should beat the scalar path ≥ 2× on the same demand — and
+//!   compose with the pool (4 threads × 8 lanes ≥ 1.5× the 4-thread
+//!   scalar cell);
 //! * the online phase's plaintext-side products scale with cores while
 //!   the flight schedule stays byte-identical — same rounds, same
-//!   bytes, lower wall-clock.
+//!   bytes, lower wall-clock; lane width is equally transcript-neutral.
 //!
 //! Emits `BENCH_parallel.json` in the working directory.
 
@@ -21,9 +29,13 @@ use ppkmeans::kmeans::secure;
 use ppkmeans::offline::dealer::Dealer;
 use ppkmeans::offline::store::{Demand, TripleStore};
 use ppkmeans::runtime::pool::Parallelism;
+use ppkmeans::runtime::simd::{set_global_lanes, Lanes};
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::ss::triples::TripleSource;
 use std::time::Instant;
 
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const LANE_WIDTHS: [usize; 3] = [1, 4, 8];
 
 struct OfflineRow {
     threads: usize,
@@ -31,10 +43,25 @@ struct OfflineRow {
     speedup: f64,
 }
 
+struct LanesOfflineRow {
+    lanes: usize,
+    threads: usize,
+    secs: f64,
+    /// Relative to the (threads = 1, lanes = 1) scalar reference cell.
+    speedup: f64,
+}
+
 struct OnlineRow {
     threads: usize,
     wall: f64,
     speedup: f64,
+    online_rounds: u64,
+    online_bytes: u64,
+}
+
+struct LanesOnlineRow {
+    lanes: usize,
+    wall: f64,
     online_rounds: u64,
     online_bytes: u64,
 }
@@ -76,6 +103,42 @@ fn main() {
             base_secs = secs;
         }
         offline_rows.push(OfflineRow { threads, secs, speedup: base_secs / secs });
+    }
+
+    // ---- Offline: the lanes × threads grid on the same demand. ----
+    // The fabricated material must be bit-identical in every cell (the
+    // simd determinism contract) — witnessed on the first stocked
+    // matrix triple of each prefilled store.
+    let mut lanes_rows: Vec<LanesOfflineRow> = Vec::new();
+    let mut scalar_cell = 0.0;
+    let mut witness: Option<(Mat, Mat, Mat)> = None;
+    for &threads in &[1usize, 4] {
+        for &lanes in &LANE_WIDTHS {
+            set_global_lanes(lanes);
+            let mut store = TripleStore::new(Dealer::new(0xBE7C4, 1));
+            let t0 = Instant::now();
+            store.prefill_par(&demand, threads);
+            let secs = t0.elapsed().as_secs_f64();
+            set_global_lanes(1);
+            let t = store.mat_triple(b, d, k);
+            match &witness {
+                None => witness = Some((t.u, t.v, t.z)),
+                Some((u, v, z)) => {
+                    assert_eq!(&t.u, u, "U must be lane/thread independent");
+                    assert_eq!(&t.v, v, "V must be lane/thread independent");
+                    assert_eq!(&t.z, z, "Z must be lane/thread independent");
+                }
+            }
+            if threads == 1 && lanes == 1 {
+                scalar_cell = secs;
+            }
+            lanes_rows.push(LanesOfflineRow {
+                lanes,
+                threads,
+                secs,
+                speedup: scalar_cell / secs,
+            });
+        }
     }
 
     // ---- Online: full secure run at each thread count. ------------
@@ -121,6 +184,38 @@ fn main() {
         );
     }
 
+    // ---- Online: full secure run at each lane width (one thread). --
+    // Lane width must be transcript-neutral: identical centroids and
+    // identical meters, only wall-clock moves.
+    let mut lanes_online: Vec<LanesOnlineRow> = Vec::new();
+    let mut lanes_centroids: Option<Vec<f64>> = None;
+    for &lanes in &LANE_WIDTHS {
+        let cfg = SecureKmeansConfig { lanes: Lanes::new(lanes), ..base.clone() };
+        let out = secure::run(&data, &cfg).expect("run");
+        set_global_lanes(1);
+        let online = out.meter_a.total_prefix("online.");
+        match &lanes_centroids {
+            None => lanes_centroids = Some(out.centroids.clone()),
+            Some(c) => assert_eq!(
+                &out.centroids, c,
+                "centroids must be lane-width independent"
+            ),
+        }
+        lanes_online.push(LanesOnlineRow {
+            lanes,
+            wall: out.wall_secs,
+            online_rounds: online.rounds,
+            online_bytes: online.bytes_sent,
+        });
+    }
+    for r in &lanes_online[1..] {
+        assert_eq!(
+            (r.online_rounds, r.online_bytes),
+            (lanes_online[0].online_rounds, lanes_online[0].online_bytes),
+            "meters must be lane-width independent"
+        );
+    }
+
     let mut tbl = Table::new(
         &format!("Offline prefill scaling — demand of {} mat triples (B={b}, d={d}, k={k})",
             demand.mats.iter().map(|&(_, c)| c).sum::<usize>()),
@@ -150,10 +245,53 @@ fn main() {
     }
     tbl.print();
 
+    let mut tbl = Table::new(
+        "Offline prefill — lanes x threads grid (speedup vs 1-thread scalar cell)",
+        &["threads", "lanes", "prefill wall", "speedup"],
+    );
+    for r in &lanes_rows {
+        tbl.row(vec![
+            format!("{}", r.threads),
+            format!("{}", r.lanes),
+            fmt_secs(r.secs),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    tbl.print();
+
+    let mut tbl = Table::new(
+        "Online lane-width sweep (1 thread) — transcript must not move",
+        &["lanes", "wall", "online rounds", "online bytes"],
+    );
+    for r in &lanes_online {
+        tbl.row(vec![
+            format!("{}", r.lanes),
+            fmt_secs(r.wall),
+            format!("{}", r.online_rounds),
+            format!("{}", r.online_bytes),
+        ]);
+    }
+    tbl.print();
+
     let four = offline_rows.iter().find(|r| r.threads == 4).expect("4-thread row");
     println!(
         "\noffline prefill at 4 threads: {:.2}x vs 1 thread (acceptance bar: >= 2x)",
         four.speedup
+    );
+
+    let cell = |threads: usize, lanes: usize| {
+        lanes_rows
+            .iter()
+            .find(|r| r.threads == threads && r.lanes == lanes)
+            .expect("grid cell")
+    };
+    println!(
+        "offline prefill at 1 thread x 8 lanes: {:.2}x vs scalar (acceptance bar: >= 2x)",
+        cell(1, 1).secs / cell(1, 8).secs
+    );
+    println!(
+        "offline prefill at 4 threads x 8 lanes: {:.2}x vs 4-thread scalar (acceptance bar: >= 1.5x)",
+        cell(4, 1).secs / cell(4, 8).secs
     );
 
     let mut json = String::from("{\n  \"bench\": \"parallel\",\n");
@@ -181,6 +319,29 @@ fn main() {
             r.online_rounds,
             r.online_bytes,
             if i + 1 < online_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n  \"offline_prefill_lanes\": [\n");
+    for (i, r) in lanes_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"lanes\": {}, \"threads\": {}, \"secs\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.lanes,
+            r.threads,
+            r.secs,
+            r.speedup,
+            if i + 1 < lanes_rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n  \"online_lanes\": [\n");
+    for (i, r) in lanes_online.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"lanes\": {}, \"wall_secs\": {:.6}, \
+             \"online_rounds\": {}, \"online_bytes\": {}}}{}\n",
+            r.lanes,
+            r.wall,
+            r.online_rounds,
+            r.online_bytes,
+            if i + 1 < lanes_online.len() { "," } else { "" },
         ));
     }
     json.push_str("  ]\n}\n");

@@ -34,6 +34,7 @@ use crate::net::meter::PhaseStats;
 use crate::net::Chan;
 use crate::offline::bank::BankConfig;
 use crate::runtime::pool::Parallelism;
+use crate::runtime::simd::Lanes;
 use crate::serve::driver::{serve_party, train_model_party, ServeConfig};
 use crate::serve::model::TrainedModel;
 use crate::util::error::{Error, Result};
@@ -183,6 +184,10 @@ pub struct Scenario {
     /// excluded from the handshake digest — outputs and meters are
     /// thread-count invariant, so the parties may differ.
     pub threads: usize,
+    /// Packed-lane width per party (0 = auto/widest). Party-local like
+    /// `threads` and likewise excluded from the digest: lane width is
+    /// transcript-invariant by the [`crate::runtime::simd`] contract.
+    pub lanes: usize,
     /// Deterministic link shaping for the whole pipeline.
     pub shape: LinkKind,
     /// Fraud/flag rate.
@@ -225,6 +230,7 @@ impl Default for Scenario {
             tile_rows: 0,
             tile_flights: TileFlights::Lockstep,
             threads: 1,
+            lanes: 1,
             shape: LinkKind::Unshaped,
             rate: 0.05,
             batch_rows: 64,
@@ -327,6 +333,7 @@ impl Scenario {
                     }
                 }
                 "threads" => sc.threads = want_usize(key, val)?,
+                "lanes" => sc.lanes = want_usize(key, val)?,
                 "shape" => sc.shape = LinkKind::parse(val)?,
                 "rate" => sc.rate = want_f64(key, val)?,
                 "batch_rows" => sc.batch_rows = want_usize(key, val)?,
@@ -355,11 +362,11 @@ impl Scenario {
     /// **protocol-relevant** key in a fixed order with the *parsed*
     /// value, so formatting, comments and omitted-default keys never
     /// cause false mismatches. Party-local operational knobs —
-    /// `threads`, `model_dir`, `save_model` — are deliberately
-    /// excluded: they cannot affect outputs or meters (thread-count
-    /// invariance is regression-tested), so heterogeneous deployments
-    /// (different core counts, different disk layouts) must handshake
-    /// cleanly.
+    /// `threads`, `lanes`, `model_dir`, `save_model` — are deliberately
+    /// excluded: they cannot affect outputs or meters (thread-count and
+    /// lane-width invariance are regression-tested), so heterogeneous
+    /// deployments (different core counts, different SIMD widths,
+    /// different disk layouts) must handshake cleanly.
     pub fn canonical(&self) -> String {
         let esd = match self.esd {
             EsdMode::Vectorized => "vectorized",
@@ -440,6 +447,7 @@ impl Scenario {
             tile_rows: if self.tile_rows > 0 { Some(self.tile_rows) } else { None },
             tile_flights: self.tile_flights,
             parallelism: self.parallelism(),
+            lanes: self.lanes_knob(),
             shape: self.shape.model(),
             ..Default::default()
         }
@@ -459,6 +467,7 @@ impl Scenario {
             },
             seed: self.seed ^ 0x5E11E,
             parallelism: self.parallelism(),
+            lanes: self.lanes_knob(),
             shape: self.shape.model(),
         }
     }
@@ -468,6 +477,14 @@ impl Scenario {
             Parallelism::auto()
         } else {
             Parallelism::new(self.threads)
+        }
+    }
+
+    fn lanes_knob(&self) -> Lanes {
+        if self.lanes == 0 {
+            Lanes::auto()
+        } else {
+            Lanes::new(self.lanes)
         }
     }
 
@@ -877,7 +894,12 @@ mod tests {
         }
         // Party-local knobs must NOT move the digest: heterogeneous
         // deployments (core counts, disk layouts) handshake cleanly.
-        let local_keys = [("threads", "16"), ("model_dir", "elsewhere"), ("save_model", "true")];
+        let local_keys = [
+            ("threads", "16"),
+            ("lanes", "8"),
+            ("model_dir", "elsewhere"),
+            ("save_model", "true"),
+        ];
         for (key, val) in local_keys {
             let sc = Scenario::parse(&format!("{key} = {val}")).unwrap();
             assert_eq!(sc.digest(), base.digest(), "local key {key} must not move the digest");

@@ -2,6 +2,7 @@
 
 use crate::net::cost::CostModel;
 use crate::runtime::pool::Parallelism;
+use crate::runtime::simd::Lanes;
 use crate::ss::RoundPolicy;
 
 /// How the joint data is split between the two parties (paper §4.1).
@@ -108,6 +109,16 @@ pub struct SecureKmeansConfig {
     /// are transcript-identical (regression-tested); the [`crate::net::Chan`]
     /// flight schedule always stays sequential.
     pub parallelism: Parallelism,
+    /// Packed-lane width for the crypto kernels (CLI: `--lanes
+    /// {auto,1,4,8}`): Speck counter-mode batches, lockstep Hash256, the
+    /// blocked IKNP bit transpose and the Beaver/truncation sweeps run
+    /// [`Lanes::width`] elements per step via [`crate::runtime::simd`].
+    /// Orthogonal to `parallelism` (pool workers run packed sweeps
+    /// inside their chunks) and under the same hard contract: `lanes =
+    /// 1` and `lanes = N` are transcript-identical — shares, reveals,
+    /// Demand and every meter counter (regression-tested in
+    /// `rust/tests/lanes.rs`).
+    pub lanes: Lanes,
     /// Optional deterministic link shaping
     /// ([`crate::net::shape::LinkShaper`]) applied to this run's
     /// transport: every received message is delayed by the modeled
@@ -145,6 +156,7 @@ impl Default for SecureKmeansConfig {
             tile_rows: None,
             tile_flights: TileFlights::Lockstep,
             parallelism: Parallelism::sequential(),
+            lanes: Lanes::scalar(),
             shape: None,
         }
     }
@@ -165,6 +177,7 @@ mod tests {
         assert!(c.tile_rows.is_none());
         assert_eq!(c.tile_flights, TileFlights::Lockstep);
         assert_eq!(c.parallelism, Parallelism::sequential());
+        assert_eq!(c.lanes, Lanes::scalar());
     }
 
     #[test]

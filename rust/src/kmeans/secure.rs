@@ -193,6 +193,9 @@ fn party_main(
     // recombination, dealer matmuls, tile-local products). A pure
     // throughput knob: outputs and meters are thread-count independent.
     crate::runtime::pool::set_global_threads(cfg.parallelism.threads);
+    // ... and the packed-lane width for the SIMD kernels (PRG bulk
+    // fills, lockstep hashing, axpy sweeps) — same contract.
+    crate::runtime::simd::set_global_lanes(cfg.lanes.width);
     // Optional measured-link mode: pace every receive to the configured
     // CostModel. Affects wall-clock only — never payloads or meters.
     if let Some(model) = cfg.shape {

@@ -73,13 +73,11 @@
 // Every public item must carry rustdoc; CI runs `cargo doc` with
 // `RUSTDOCFLAGS="-D warnings"` so a missing or broken doc fails the
 // build. Modules still carrying `#[allow(missing_docs)]` below are the
-// documented-incrementally backlog — ss/, offline/, serve/ and
-// runtime:: are fully covered and must stay that way.
+// documented-incrementally backlog — ss/, offline/, serve/, runtime::,
+// util/ and ring/ are fully covered and must stay that way.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod ring;
 #[allow(missing_docs)]
 pub mod net;

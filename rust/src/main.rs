@@ -4,7 +4,7 @@
 //! ppkmeans train  [--n 1000] [--d 4] [--k 3] [--iters 10] [--sparse]
 //!                 [--partition vertical|horizontal] [--link lan|wan]
 //!                 [--tile-rows B] [--tile-flights lockstep|streamed]
-//!                 [--threads N]
+//!                 [--threads N] [--lanes auto|1|4|8]
 //! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 2] [--rate 0.05]
 //! ppkmeans serve  [--n 1000] [--k 4] [--iters 6] [--batch 64]
 //!                 [--batches 12] [--prefab 8] [--low-water 2]
@@ -32,6 +32,7 @@ use ppkmeans::net::cost::CostModel;
 use ppkmeans::net::{Chan, TcpTransport};
 use ppkmeans::offline::bank::BankConfig;
 use ppkmeans::runtime::pool::Parallelism;
+use ppkmeans::runtime::simd::Lanes;
 use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
 use ppkmeans::serve::model::TrainedModel;
 use ppkmeans::serve::scorer::score_rounds;
@@ -67,6 +68,11 @@ fn print_help() {
     println!("                          per core. Deterministic: outputs, reveals");
     println!("                          and flight/byte meters are bit-identical");
     println!("                          for any N (default 1)");
+    println!("  --lanes W               packed-lane width for the crypto kernels");
+    println!("                          (Speck CTR batches, lockstep hashing, axpy");
+    println!("                          sweeps): auto | 1 | 4 | 8. Deterministic");
+    println!("                          like --threads: outputs, reveals and meters");
+    println!("                          are bit-identical for any W (default 1)");
     println!();
     println!("fraud options (train → outlier detection → Jaccard report):");
     println!("  --n N                   transactions (default 2000)");
@@ -90,9 +96,11 @@ fn print_help() {
     println!();
     println!("  --threads N             worker threads per party (0 = one per core;");
     println!("                          bank prefab/refill and batch compute fan out)");
+    println!("  --lanes W               packed-lane width (auto|1|4|8, default 1)");
     println!();
     println!("score options (load saved model shares, score a fresh stream):");
     println!("  --model-dir DIR / --batch B / --batches M / --link L / --threads N");
+    println!("  --lanes W");
     println!();
     println!("train/serve/score also accept:");
     println!("  --shape S               none | lan | wan — deterministically shape the");
@@ -147,6 +155,21 @@ fn parallelism_from(args: &Args) -> Parallelism {
     }
 }
 
+/// `--lanes {auto,1,4,8}` (default 1 = scalar reference path). The
+/// packed-lane sibling of `--threads`: purely a throughput knob.
+fn lanes_from(args: &Args) -> Lanes {
+    match args.get_str("lanes", "1") {
+        "auto" => Lanes::auto(),
+        s => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Lanes::new(n),
+            _ => {
+                eprintln!("--lanes takes auto or an integer ≥ 1 (got {s})");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
 fn cmd_train(args: &Args) {
     let n = args.get_usize("n", 1000);
     let d = args.get_usize("d", 4);
@@ -187,6 +210,7 @@ fn cmd_train(args: &Args) {
         tile_rows,
         tile_flights,
         parallelism: parallelism_from(args),
+        lanes: lanes_from(args),
         shape: shape_from(args),
         ..Default::default()
     };
@@ -351,6 +375,7 @@ fn serve_cfg_from(args: &Args) -> ServeConfig {
         },
         seed: 0x5E11E,
         parallelism: parallelism_from(args),
+        lanes: lanes_from(args),
         shape: shape_from(args),
     }
 }
@@ -371,6 +396,7 @@ fn cmd_serve(args: &Args) {
         iters,
         partition: Partition::Vertical { d_a: f.d_payment },
         parallelism: parallelism_from(args),
+        lanes: lanes_from(args),
         ..Default::default()
     };
     let t0 = std::time::Instant::now();

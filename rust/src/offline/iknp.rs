@@ -24,7 +24,8 @@
 use super::baseot::{base_ot_recv, base_ot_send, OtGroup};
 use crate::net::Chan;
 use crate::runtime::pool;
-use crate::util::hash::Hash256;
+use crate::runtime::simd;
+use crate::util::hash::hash256_many;
 use crate::util::prng::Prg;
 
 /// Security parameter: number of base OTs / matrix width.
@@ -52,23 +53,38 @@ pub struct IknpReceiver {
     threads: usize,
 }
 
-/// Correlation-robust hash: expand a 128-bit row key into an L-byte mask.
+/// Correlation-robust hash batch: expand 128-bit row keys into L-byte
+/// masks, one per `(OT index, row key)` item.
 ///
-/// Only the digest's first 16 bytes seed the mask PRG — the second
-/// [`Hash256`] lane is deliberately paid for anyway so the hash keeps
-/// the drop-in SHA-256 shape (swap `util::hash` for hardware SHA-256 in
+/// Every hash input is the same fixed 24-byte shape (8-byte index ‖
+/// 16-byte key), so the whole batch runs through the lockstep
+/// [`hash256_many`] — [`simd::global_lanes`] digests per Speck sweep.
+/// Only each digest's first 16 bytes seed the mask PRG — the second
+/// hash lane is deliberately paid for anyway so the hash keeps the
+/// drop-in SHA-256 shape (swap `util::hash` for hardware SHA-256 in
 /// production without touching this call site).
-fn h_mask(index: u64, q: u128, len: usize) -> Vec<u8> {
-    let mut h = Hash256::new();
-    h.update(index.to_le_bytes());
-    h.update(q.to_le_bytes());
-    let d = h.finalize();
-    let mut seed = [0u8; 16];
-    seed.copy_from_slice(&d[..16]);
-    let mut prg = Prg::from_seed(seed);
-    let mut out = vec![0u8; len];
-    prg.fill_bytes(&mut out);
-    out
+fn h_masks(items: &[(u64, u128)], len: usize) -> Vec<Vec<u8>> {
+    let inputs: Vec<[u8; 24]> = items
+        .iter()
+        .map(|&(index, q)| {
+            let mut b = [0u8; 24];
+            b[..8].copy_from_slice(&index.to_le_bytes());
+            b[8..].copy_from_slice(&q.to_le_bytes());
+            b
+        })
+        .collect();
+    let refs: Vec<&[u8]> = inputs.iter().map(|b| b.as_slice()).collect();
+    hash256_many(&refs)
+        .into_iter()
+        .map(|d| {
+            let mut seed = [0u8; 16];
+            seed.copy_from_slice(&d[..16]);
+            let mut prg = Prg::from_seed(seed);
+            let mut out = vec![0u8; len];
+            prg.fill_bytes(&mut out);
+            out
+        })
+        .collect()
 }
 
 fn xor_into(dst: &mut [u8], src: &[u8]) {
@@ -133,20 +149,30 @@ impl IknpReceiver {
         chan.send_bytes(&u_payload);
         // Row keys: t_j (row j of the m×λ matrix).
         let rows = transpose_cols(&t_cols, m, threads);
-        // Receive masked messages and unmask the chosen one.
+        // Receive masked messages and unmask the chosen one. Workers
+        // take disjoint index ranges and hash their masks in lockstep
+        // batches — output order and mask values are index-determined,
+        // so both knobs (threads, lanes) leave every byte unchanged.
         let payload = chan.recv_bytes();
         assert_eq!(payload.len(), 2 * m * msg_len, "iknp message frame");
         let sent = self.sent;
-        let out = pool::parallel_gen(threads, m, |j| {
-            let base = 2 * j * msg_len;
-            let slot = if choices[j] { base + msg_len } else { base };
-            let mut msg = payload[slot..slot + msg_len].to_vec();
-            let mask = h_mask(sent + j as u64, rows[j], msg_len);
-            xor_into(&mut msg, &mask);
-            msg
+        let ranges = pool::chunk_ranges(m, threads.max(1));
+        let parts = pool::parallel_map(threads, &ranges, |_, &(lo, hi)| {
+            let items: Vec<(u64, u128)> =
+                (lo..hi).map(|j| (sent + j as u64, rows[j])).collect();
+            let masks = h_masks(&items, msg_len);
+            let mut msgs = Vec::with_capacity(hi - lo);
+            for (off, j) in (lo..hi).enumerate() {
+                let base = 2 * j * msg_len;
+                let slot = if choices[j] { base + msg_len } else { base };
+                let mut msg = payload[slot..slot + msg_len].to_vec();
+                xor_into(&mut msg, &masks[off]);
+                msgs.push(msg);
+            }
+            msgs
         });
         self.sent += m as u64;
-        out
+        parts.concat()
     }
 }
 
@@ -186,39 +212,84 @@ impl IknpSender {
                 s_row |= 1u128 << i;
             }
         }
-        // Mask both messages per OT (hash-heavy — fan out by OT index),
+        // Mask both messages per OT (hash-heavy — fan out by OT index
+        // range, two lockstep-hashed masks per OT: `q_j` and `q_j ⊕ s`),
         // then ship them in index order.
         let sent = self.sent;
-        let masked = pool::parallel_map(threads, pairs, |j, (x0, x1)| {
-            assert_eq!(x0.len(), msg_len);
-            assert_eq!(x1.len(), msg_len);
-            let q = rows[j];
-            let mut m0 = x0.clone();
-            xor_into(&mut m0, &h_mask(sent + j as u64, q, msg_len));
-            let mut m1 = x1.clone();
-            xor_into(&mut m1, &h_mask(sent + j as u64, q ^ s_row, msg_len));
-            (m0, m1)
+        let ranges = pool::chunk_ranges(m, threads.max(1));
+        let masked = pool::parallel_map(threads, &ranges, |_, &(lo, hi)| {
+            let mut items = Vec::with_capacity(2 * (hi - lo));
+            for j in lo..hi {
+                items.push((sent + j as u64, rows[j]));
+                items.push((sent + j as u64, rows[j] ^ s_row));
+            }
+            let masks = h_masks(&items, msg_len);
+            let mut part = Vec::with_capacity(2 * (hi - lo) * msg_len);
+            for (off, j) in (lo..hi).enumerate() {
+                let (x0, x1) = &pairs[j];
+                assert_eq!(x0.len(), msg_len);
+                assert_eq!(x1.len(), msg_len);
+                let mut m0 = x0.clone();
+                xor_into(&mut m0, &masks[2 * off]);
+                let mut m1 = x1.clone();
+                xor_into(&mut m1, &masks[2 * off + 1]);
+                part.extend_from_slice(&m0);
+                part.extend_from_slice(&m1);
+            }
+            part
         });
-        let mut out = Vec::with_capacity(2 * m * msg_len);
-        for (m0, m1) in &masked {
-            out.extend_from_slice(m0);
-            out.extend_from_slice(m1);
-        }
-        chan.send_bytes(&out);
+        chan.send_bytes(&masked.concat());
         self.sent += m as u64;
     }
 }
 
-/// Transpose λ column bit-vectors (each `m` bits packed in u64 words)
-/// into `m` row keys of 128 bits, sharding the rows across workers.
+/// Transpose λ = 128 column bit-vectors (each `m` bits packed LSB-first
+/// in u64 words) into `m` row keys of 128 bits, via cache-blocked 64×64
+/// bit-matrix transposes ([`simd::transpose64`]) sharded across workers
+/// by 64-row block.
+///
+/// Column padding is explicit: each column must carry exactly
+/// `⌈m/64⌉` words (asserted). When `m % 64 != 0` the tail bits of the
+/// last word are **PRG stream garbage, not zero-fill** — the column
+/// streams draw whole words — and the kernel must not let them leak:
+/// each 64-row block is transposed in full, but only rows `< m` are
+/// emitted, so the garbage lands exclusively in discarded output rows
+/// (regression-tested at ragged sizes below).
 fn transpose_cols(cols: &[Vec<u64>], m: usize, threads: usize) -> Vec<u128> {
-    let ranges = pool::chunk_ranges(m, threads.max(1));
-    let parts = pool::parallel_map(threads, &ranges, |_, &(r0, r1)| {
-        let mut rows = vec![0u128; r1 - r0];
-        for (i, col) in cols.iter().enumerate() {
-            for j in r0..r1 {
-                if (col[j / 64] >> (j % 64)) & 1 == 1 {
-                    rows[j - r0] |= 1u128 << i;
+    assert_eq!(cols.len(), LAMBDA, "transpose expects λ = {LAMBDA} columns");
+    let words = m.div_ceil(64);
+    for (i, col) in cols.iter().enumerate() {
+        assert_eq!(
+            col.len(),
+            words,
+            "column {i} has {} words; m = {m} needs exactly {words}",
+            col.len()
+        );
+    }
+    if m == 0 {
+        return vec![];
+    }
+    // One 64-row block per column word; workers own disjoint block
+    // ranges and emit rows in index order (thread-count independent).
+    let ranges = pool::chunk_ranges(words, threads.max(1));
+    let parts = pool::parallel_map(threads, &ranges, |_, &(b0, b1)| {
+        let lo = b0 * 64;
+        let hi = (b1 * 64).min(m);
+        let mut rows = vec![0u128; hi - lo];
+        for bi in b0..b1 {
+            let r0 = bi * 64;
+            let r1 = (r0 + 64).min(m);
+            // Two 64-column groups make up the 128-bit row keys.
+            for g in 0..2 {
+                let mut blk = [0u64; 64];
+                for i in 0..64 {
+                    blk[i] = cols[g * 64 + i][bi];
+                }
+                simd::transpose64(&mut blk);
+                // blk[j] now holds row (r0+j)'s bits for columns
+                // 64g..64g+64; rows ≥ m (ragged tail) are dropped here.
+                for j in r0..r1 {
+                    rows[j - lo] |= (blk[j - r0] as u128) << (64 * g);
                 }
             }
         }
@@ -286,6 +357,121 @@ mod tests {
         );
         assert_eq!(got.0[0], vec![2]);
         assert_eq!(got.1[0], vec![3]);
+    }
+
+    /// Bit-probe reference for [`transpose_cols`] (the pre-blocking
+    /// implementation): row j bit i = column i bit j, rows < m only.
+    fn transpose_reference(cols: &[Vec<u64>], m: usize) -> Vec<u128> {
+        let mut rows = vec![0u128; m];
+        for (i, col) in cols.iter().enumerate() {
+            for (j, row) in rows.iter_mut().enumerate() {
+                if (col[j / 64] >> (j % 64)) & 1 == 1 {
+                    *row |= 1u128 << i;
+                }
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn blocked_transpose_matches_reference_at_ragged_sizes() {
+        // m % 64 != 0 leaves tail bits in the last column word; the
+        // column streams fill whole words, so those bits are PRG
+        // garbage — NOT zeros — and must never reach an emitted row.
+        let mut prg = Prg::new(0x7125);
+        for m in [1usize, 63, 64, 65, 127, 128, 200, 300] {
+            let words = m.div_ceil(64);
+            let cols: Vec<Vec<u64>> = (0..LAMBDA).map(|_| prg.u64s(words)).collect();
+            let want = transpose_reference(&cols, m);
+            for threads in [1usize, 3, 8] {
+                assert_eq!(
+                    transpose_cols(&cols, m, threads),
+                    want,
+                    "m = {m}, threads = {threads}"
+                );
+            }
+        }
+        assert!(transpose_cols(&vec![vec![]; LAMBDA], 0, 4).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "needs exactly")]
+    fn transpose_rejects_underpadded_columns() {
+        // 65 rows need 2 words per column; 1 word must be caught, not
+        // silently read out of bounds or zero-filled.
+        let cols: Vec<Vec<u64>> = vec![vec![0u64; 1]; LAMBDA];
+        transpose_cols(&cols, 65, 1);
+    }
+
+    #[test]
+    fn packed_masks_match_scalar_hash_reference() {
+        use crate::runtime::simd::set_global_lanes;
+        use crate::util::hash::Hash256;
+        // The scalar reference: one streaming Hash256 + mask PRG per
+        // item, exactly the pre-batching per-OT code.
+        let reference = |index: u64, q: u128, len: usize| -> Vec<u8> {
+            let mut h = Hash256::new();
+            h.update(index.to_le_bytes());
+            h.update(q.to_le_bytes());
+            let d = h.finalize();
+            let mut seed = [0u8; 16];
+            seed.copy_from_slice(&d[..16]);
+            let mut prg = Prg::from_seed(seed);
+            let mut out = vec![0u8; len];
+            prg.fill_bytes(&mut out);
+            out
+        };
+        let items: Vec<(u64, u128)> =
+            (0..13).map(|i| (1000 + i as u64, (i as u128) << 100 | 0xABC + i as u128)).collect();
+        for len in [1usize, 9, 16, 24, 33] {
+            let want: Vec<Vec<u8>> =
+                items.iter().map(|&(i, q)| reference(i, q, len)).collect();
+            for width in [1usize, 4, 8] {
+                set_global_lanes(width);
+                assert_eq!(h_masks(&items, len), want, "len={len} width={width}");
+            }
+            set_global_lanes(1);
+        }
+    }
+
+    #[test]
+    fn packed_lane_extension_is_byte_identical() {
+        // The lanes analogue of the fan-out test: the same transfer at
+        // lanes = 1 and lanes = 8 must produce the same chosen messages
+        // AND the same wire traffic — the packed mask/transpose kernels
+        // never touch a byte on the wire.
+        use crate::runtime::simd::set_global_lanes;
+        let m = 130; // ragged: not a multiple of 64 or 8
+        let choices: Vec<bool> = (0..m).map(|i| i % 3 == 1).collect();
+        let pairs: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..m).map(|i| (vec![i as u8; 24], vec![!(i as u8); 24])).collect();
+        let mut results = Vec::new();
+        for width in [1usize, 8] {
+            set_global_lanes(width);
+            let ch = choices.clone();
+            let ps = pairs.clone();
+            let ((_, ms), (got, mr)) = run_two_party(
+                move |c| {
+                    let mut prg = Prg::new(207);
+                    let mut snd = setup_sender(c, &mut prg);
+                    snd.send(c, &ps, 24);
+                },
+                move |c| {
+                    let mut prg = Prg::new(208);
+                    let mut rcv = setup_receiver(c, &mut prg);
+                    rcv.recv(c, &ch, 24)
+                },
+            );
+            set_global_lanes(1);
+            results.push((got, ms.total().bytes_sent, mr.total().bytes_sent));
+        }
+        assert_eq!(results[0].0, results[1].0, "chosen messages must match");
+        assert_eq!(results[0].1, results[1].1, "sender bytes must match");
+        assert_eq!(results[0].2, results[1].2, "receiver bytes must match");
+        for j in 0..m {
+            let want = if choices[j] { &pairs[j].1 } else { &pairs[j].0 };
+            assert_eq!(&results[1].0[j], want, "ot {j}");
+        }
     }
 
     #[test]

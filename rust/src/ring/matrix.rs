@@ -12,8 +12,11 @@ use crate::util::prng::Prg;
 /// Row-major dense matrix over Z_{2^64}.
 #[derive(Clone, PartialEq, Eq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major element buffer (`rows * cols` ring words).
     pub data: Vec<Rw>,
 }
 
@@ -64,11 +67,13 @@ impl Mat {
         fixed::decode_slice(&self.data)
     }
 
+    /// Element at (row, col).
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> Rw {
         self.data[r * self.cols + c]
     }
 
+    /// Overwrite the element at (row, col).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: Rw) {
         self.data[r * self.cols + c] = v;
@@ -86,14 +91,17 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// `(rows, cols)` pair.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Total element count (`rows * cols`).
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the matrix holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -152,8 +160,10 @@ impl Mat {
 
     /// Blocked wrapping matmul `self (m×k) · other (k×n) -> (m×n)`.
     ///
-    /// i-k-j loop order with the `other` row kept hot; this is the native
-    /// fallback, the PJRT path handles large shapes (see runtime::tiled).
+    /// i-k-j loop order with the `other` row kept hot; the inner axpy
+    /// runs as a packed lanewise sweep ([`crate::runtime::simd::axpy`]).
+    /// This is the native fallback, the PJRT path handles large shapes
+    /// (see runtime::tiled).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(
             self.cols, other.rows,
@@ -171,9 +181,7 @@ impl Mat {
                     continue; // free sparsity skip in the plaintext-side product
                 }
                 let brow = &other.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    orow[j] = orow[j].wrapping_add(a.wrapping_mul(brow[j]));
-                }
+                crate::runtime::simd::axpy(orow, a, brow);
             }
         }
         Mat { rows: m, cols: n, data: out }

@@ -20,6 +20,14 @@
 //! a configurable worker count ([`pool::Parallelism`]) with a hard
 //! bit-determinism contract — `threads = 1` and `threads = N` produce
 //! identical shares, reveals and meter readings.
+//!
+//! [`simd`] is the orthogonal packed-lane layer: explicit `[u64; N]`
+//! lane blocks ([`simd::U64x4`]/[`simd::U64x8`]) that stable rustc
+//! autovectorizes, behind the crypto hot paths (Speck CTR batches,
+//! lockstep Hash256, the 64×64 IKNP bit transpose, Beaver/truncation
+//! sweeps). Its knob ([`simd::Lanes`]) carries the same bit-determinism
+//! contract as the pool, and the two compose: pool workers run packed
+//! sweeps inside their chunks, so the speedups multiply.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
@@ -27,6 +35,7 @@ pub mod dispatch;
 #[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod pool;
+pub mod simd;
 pub mod tile_select;
 #[cfg(feature = "pjrt")]
 pub mod tiled;
@@ -36,3 +45,4 @@ pub mod xla_stub;
 #[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactStore, Entry};
 pub use pool::Parallelism;
+pub use simd::Lanes;

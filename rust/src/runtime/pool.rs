@@ -226,9 +226,7 @@ pub fn matmul_with(threads: usize, a: &Mat, b: &Mat) -> Mat {
                     continue;
                 }
                 let brow = &b.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    orow[j] = orow[j].wrapping_add(av.wrapping_mul(brow[j]));
-                }
+                crate::runtime::simd::axpy(orow, av, brow);
             }
         }
         out
@@ -264,10 +262,7 @@ pub fn csr_matmul_auto(x: &Csr, rhs: &Mat) -> Mat {
         for r in r0..r1 {
             let orow = &mut out[(r - r0) * n..(r - r0 + 1) * n];
             for (j, v) in x.row_iter(r) {
-                let brow = rhs.row(j);
-                for c in 0..n {
-                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
-                }
+                crate::runtime::simd::axpy(orow, v, rhs.row(j));
             }
         }
         out

@@ -1,0 +1,551 @@
+//! Packed-lane SIMD kernels for the crypto hot paths.
+//!
+//! The paper's efficiency story leans on vectorization in both phases
+//! (§4: "we take advantage of the vectorization techniques in both
+//! online and offline phases"). This module is the portable packed-lane
+//! layer that delivers it without any `unsafe`, nightly intrinsics or
+//! external crates: [`U64s`] wraps a fixed `[u64; N]` block and every
+//! operation is a straight-line per-lane loop over independent lanes —
+//! exactly the shape stable rustc autovectorizes to SSE/AVX (or NEON)
+//! at `opt-level ≥ 2`. The widths are [`U64x4`] and [`U64x8`]; the
+//! per-run knob is [`Lanes`] (CLI `--lanes {auto,1,4,8}`), mirroring
+//! [`crate::runtime::pool::Parallelism`] exactly:
+//!
+//! * **offline** — Speck-128 counter-mode batches
+//!   ([`crate::util::cipher::Speck128::encrypt_blocks`]) feed the bulk
+//!   PRG draws behind share expansion and triple fabrication, and the
+//!   multi-key [`crate::util::cipher::SpeckMulti`] drives the lockstep
+//!   [`crate::util::hash::hash256_many`] used by the per-OT mask loop
+//!   of the IKNP extension;
+//! * **online** — the Beaver payload/recombination sweeps of
+//!   [`crate::ss::matmul`], the local truncation of [`crate::ss::trunc`]
+//!   and the dense/CSR row kernels ([`axpy`]) all run as packed sweeps.
+//!
+//! **Determinism is the same hard contract as the thread pool.** The
+//! lane width is purely a throughput knob: every packed kernel computes
+//! the same elementwise wrapping/XOR arithmetic as its scalar reference,
+//! so shares, reveals, the recorded offline `Demand` and every
+//! [`crate::net::Meter`] flight/byte counter are bit-identical for
+//! `lanes = 1` and `lanes = N` (regression-tested in
+//! `rust/tests/simd.rs` and `rust/tests/lanes.rs`). Packed kernels
+//! compose with the [`crate::runtime::pool`] fan-out — workers run
+//! packed sweeps inside their index-ordered chunks — so the two
+//! speedups multiply.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Packed-lane width knob for a protocol run (the `--lanes {auto,1,4,8}`
+/// CLI flag and the `lanes` field of
+/// [`crate::kmeans::config::SecureKmeansConfig`] /
+/// [`crate::serve::driver::ServeConfig`]), mirroring
+/// [`crate::runtime::pool::Parallelism`].
+///
+/// Purely a throughput knob: all protocol outputs and meters are
+/// bit-identical for any value (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lanes {
+    /// Packed lane width for party-local kernels: 1 (scalar reference
+    /// path), 4 ([`U64x4`]) or 8 ([`U64x8`]).
+    pub width: usize,
+}
+
+impl Lanes {
+    /// Request `width` lanes, rounded down to the nearest supported
+    /// block width (8, 4 or 1).
+    pub fn new(width: usize) -> Lanes {
+        let width = if width >= 8 {
+            8
+        } else if width >= 4 {
+            4
+        } else {
+            1
+        };
+        Lanes { width }
+    }
+
+    /// Scalar reference path (the default — no behavioural or perf
+    /// surprise for small runs and tests, matching
+    /// [`crate::runtime::pool::Parallelism::sequential`]).
+    pub fn scalar() -> Lanes {
+        Lanes { width: 1 }
+    }
+
+    /// The widest supported block ([`U64x8`] — two AVX2 registers or
+    /// one AVX-512 register per block after autovectorization).
+    pub fn auto() -> Lanes {
+        Lanes { width: 8 }
+    }
+}
+
+impl Default for Lanes {
+    fn default() -> Self {
+        Lanes::scalar()
+    }
+}
+
+/// Process-wide default lane width, consulted by the deep call sites
+/// that have no configuration path of their own (the PRG's bulk fill
+/// inside a dealer, the axpy inside a Beaver recombination closure).
+/// Set once per run by the protocol drivers from their config; safe to
+/// race because the value can only change *throughput*, never an output
+/// bit — the same contract as
+/// [`crate::runtime::pool::set_global_threads`].
+static GLOBAL_LANES: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide default lane width (rounded down to 8, 4 or 1).
+pub fn set_global_lanes(width: usize) {
+    GLOBAL_LANES.store(Lanes::new(width).width, Ordering::Relaxed);
+}
+
+/// The process-wide default lane width (1, 4 or 8).
+pub fn global_lanes() -> usize {
+    GLOBAL_LANES.load(Ordering::Relaxed).max(1)
+}
+
+/// A block of `N` independent `u64` lanes.
+///
+/// Every method is a straight-line per-lane loop with no cross-lane
+/// dependency, so stable rustc autovectorizes it; semantics are exactly
+/// the scalar `wrapping_*` / bit operations applied lane by lane, which
+/// is what makes packed kernels bit-identical to their scalar
+/// references by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct U64s<const N: usize>(pub [u64; N]);
+
+/// Four-lane block (one AVX2 register).
+pub type U64x4 = U64s<4>;
+/// Eight-lane block (two AVX2 registers / one AVX-512 register).
+pub type U64x8 = U64s<8>;
+
+impl<const N: usize> U64s<N> {
+    /// Broadcast one value into every lane.
+    #[inline(always)]
+    pub fn splat(v: u64) -> Self {
+        U64s([v; N])
+    }
+
+    /// Load a block from the first `N` elements of a slice.
+    #[inline(always)]
+    pub fn from_slice(s: &[u64]) -> Self {
+        let mut a = [0u64; N];
+        a.copy_from_slice(&s[..N]);
+        U64s(a)
+    }
+
+    /// Store the block into the first `N` elements of a slice.
+    #[inline(always)]
+    pub fn write(self, out: &mut [u64]) {
+        out[..N].copy_from_slice(&self.0);
+    }
+
+    /// Lanewise wrapping add.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].wrapping_add(o.0[i]);
+        }
+        U64s(a)
+    }
+
+    /// Lanewise wrapping subtract.
+    #[inline(always)]
+    pub fn sub(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].wrapping_sub(o.0[i]);
+        }
+        U64s(a)
+    }
+
+    /// Lanewise wrapping multiply.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].wrapping_mul(o.0[i]);
+        }
+        U64s(a)
+    }
+
+    /// Lanewise XOR.
+    #[inline(always)]
+    pub fn xor(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] ^= o.0[i];
+        }
+        U64s(a)
+    }
+
+    /// Lanewise wrapping negation.
+    #[inline(always)]
+    pub fn neg(self) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].wrapping_neg();
+        }
+        U64s(a)
+    }
+
+    /// Lanewise rotate left.
+    #[inline(always)]
+    pub fn rotl(self, r: u32) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].rotate_left(r);
+        }
+        U64s(a)
+    }
+
+    /// Lanewise rotate right.
+    #[inline(always)]
+    pub fn rotr(self, r: u32) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = a[i].rotate_right(r);
+        }
+        U64s(a)
+    }
+
+    /// Lanewise logical shift left.
+    #[inline(always)]
+    pub fn shl(self, s: u32) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] <<= s;
+        }
+        U64s(a)
+    }
+
+    /// Lanewise logical shift right.
+    #[inline(always)]
+    pub fn shr(self, s: u32) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] >>= s;
+        }
+        U64s(a)
+    }
+
+    /// Lanewise *arithmetic* shift right (two's-complement sign
+    /// preserved — the fixed-point truncation primitive).
+    #[inline(always)]
+    pub fn sar(self, s: u32) -> Self {
+        let mut a = self.0;
+        for i in 0..N {
+            a[i] = ((a[i] as i64) >> s) as u64;
+        }
+        U64s(a)
+    }
+}
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight §7-3, scaled
+/// to 64 bits), LSB-first convention: after the call,
+/// `bit i of out[j] == bit j of in[i]`. This is the cache-blocked core
+/// of the IKNP column→row-key transposition — log₂ 64 = 6 butterfly
+/// passes of 32 word ops each, instead of 64×64 single-bit probes.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            // Swap the (bits j..2j of rows k..k+j) block with the
+            // (bits 0..j of rows k+j..k+2j) block, j lanes at a time.
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// `orow[i] += a · brow[i]` (wrapping) — the inner kernel of every
+/// dense/CSR row product, dispatched on [`global_lanes`]. Bit-identical
+/// for any width: the packed path computes the same lanewise wrapping
+/// arithmetic in [`U64s`] blocks with a scalar tail.
+#[inline]
+pub fn axpy(orow: &mut [u64], a: u64, brow: &[u64]) {
+    debug_assert_eq!(orow.len(), brow.len());
+    match global_lanes() {
+        8 => axpy_blocks::<8>(orow, a, brow),
+        4 => axpy_blocks::<4>(orow, a, brow),
+        _ => {
+            for (o, b) in orow.iter_mut().zip(brow) {
+                *o = o.wrapping_add(a.wrapping_mul(*b));
+            }
+        }
+    }
+}
+
+#[inline]
+fn axpy_blocks<const N: usize>(orow: &mut [u64], a: u64, brow: &[u64]) {
+    let av = U64s::<N>::splat(a);
+    let mut i = 0;
+    while i + N <= orow.len() {
+        let o = U64s::<N>::from_slice(&orow[i..]);
+        let b = U64s::<N>::from_slice(&brow[i..]);
+        o.add(b.mul(av)).write(&mut orow[i..]);
+        i += N;
+    }
+    while i < orow.len() {
+        orow[i] = orow[i].wrapping_add(a.wrapping_mul(brow[i]));
+        i += 1;
+    }
+}
+
+/// `dst[i] = a[i] + b[i]` (wrapping) — the Beaver `E`/`F`
+/// reconstruction sweep, dispatched on [`global_lanes`].
+#[inline]
+pub fn add_words(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    match global_lanes() {
+        8 => add_words_blocks::<8>(dst, a, b),
+        4 => add_words_blocks::<4>(dst, a, b),
+        _ => {
+            for i in 0..dst.len() {
+                dst[i] = a[i].wrapping_add(b[i]);
+            }
+        }
+    }
+}
+
+#[inline]
+fn add_words_blocks<const N: usize>(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    let mut i = 0;
+    while i + N <= dst.len() {
+        U64s::<N>::from_slice(&a[i..]).add(U64s::<N>::from_slice(&b[i..])).write(&mut dst[i..]);
+        i += N;
+    }
+    while i < dst.len() {
+        dst[i] = a[i].wrapping_add(b[i]);
+        i += 1;
+    }
+}
+
+/// Append `a[i] - b[i]` (wrapping) for every `i` to `out` — the Beaver
+/// reveal-payload sweep (`E = A−U`, `F = B−V`), dispatched on
+/// [`global_lanes`].
+#[inline]
+pub fn sub_words_into(out: &mut Vec<u64>, a: &[u64], b: &[u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    let start = out.len();
+    out.resize(start + a.len(), 0);
+    let dst = &mut out[start..];
+    match global_lanes() {
+        8 => sub_words_blocks::<8>(dst, a, b),
+        4 => sub_words_blocks::<4>(dst, a, b),
+        _ => {
+            for i in 0..dst.len() {
+                dst[i] = a[i].wrapping_sub(b[i]);
+            }
+        }
+    }
+}
+
+#[inline]
+fn sub_words_blocks<const N: usize>(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    let mut i = 0;
+    while i + N <= dst.len() {
+        U64s::<N>::from_slice(&a[i..]).sub(U64s::<N>::from_slice(&b[i..])).write(&mut dst[i..]);
+        i += N;
+    }
+    while i < dst.len() {
+        dst[i] = a[i].wrapping_sub(b[i]);
+        i += 1;
+    }
+}
+
+/// The SecureML local-truncation sweep, dispatched on [`global_lanes`]:
+/// party 0 arithmetic-shifts each share word by `bits`; party 1 negates,
+/// shifts, negates back (see [`crate::ss::trunc`]).
+pub fn trunc_words(xs: &[u64], party: usize, bits: u32) -> Vec<u64> {
+    let mut out = vec![0u64; xs.len()];
+    match global_lanes() {
+        8 => trunc_words_blocks::<8>(&mut out, xs, party, bits),
+        4 => trunc_words_blocks::<4>(&mut out, xs, party, bits),
+        _ => {
+            for (o, &v) in out.iter_mut().zip(xs) {
+                *o = trunc_word(v, party, bits);
+            }
+        }
+    }
+    out
+}
+
+/// Scalar reference lane of [`trunc_words`].
+#[inline(always)]
+pub fn trunc_word(v: u64, party: usize, bits: u32) -> u64 {
+    if party == 0 {
+        ((v as i64) >> bits) as u64
+    } else {
+        // ⟨x⟩₁' = −((−⟨x⟩₁) >> f)
+        (((v.wrapping_neg()) as i64 >> bits) as u64).wrapping_neg()
+    }
+}
+
+#[inline]
+fn trunc_words_blocks<const N: usize>(out: &mut [u64], xs: &[u64], party: usize, bits: u32) {
+    let mut i = 0;
+    while i + N <= xs.len() {
+        let v = U64s::<N>::from_slice(&xs[i..]);
+        let t = if party == 0 { v.sar(bits) } else { v.neg().sar(bits).neg() };
+        t.write(&mut out[i..]);
+        i += N;
+    }
+    while i < xs.len() {
+        out[i] = trunc_word(xs[i], party, bits);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prg;
+
+    /// Run `f` at the given global lane width, restoring the scalar
+    /// default afterwards. (Racing tests can only flip throughput, never
+    /// an output bit — the module contract — so no lock is needed.)
+    fn with_lanes<T>(width: usize, f: impl FnOnce() -> T) -> T {
+        set_global_lanes(width);
+        let out = f();
+        set_global_lanes(1);
+        out
+    }
+
+    #[test]
+    fn lanes_round_to_supported_widths() {
+        assert_eq!(Lanes::new(0).width, 1);
+        assert_eq!(Lanes::new(1).width, 1);
+        assert_eq!(Lanes::new(3).width, 1);
+        assert_eq!(Lanes::new(4).width, 4);
+        assert_eq!(Lanes::new(7).width, 4);
+        assert_eq!(Lanes::new(8).width, 8);
+        assert_eq!(Lanes::new(64).width, 8);
+        assert_eq!(Lanes::default(), Lanes::scalar());
+        assert_eq!(Lanes::auto().width, 8);
+    }
+
+    #[test]
+    fn global_lanes_clamps() {
+        set_global_lanes(0);
+        assert_eq!(global_lanes(), 1);
+        set_global_lanes(5);
+        assert_eq!(global_lanes(), 4);
+        set_global_lanes(1);
+    }
+
+    #[test]
+    fn lane_ops_match_scalar() {
+        let mut p = Prg::new(0x51D);
+        for _ in 0..50 {
+            let a8: [u64; 8] = std::array::from_fn(|_| p.next_u64());
+            let b8: [u64; 8] = std::array::from_fn(|_| p.next_u64());
+            let (va, vb) = (U64s(a8), U64s(b8));
+            for i in 0..8 {
+                assert_eq!(va.add(vb).0[i], a8[i].wrapping_add(b8[i]));
+                assert_eq!(va.sub(vb).0[i], a8[i].wrapping_sub(b8[i]));
+                assert_eq!(va.mul(vb).0[i], a8[i].wrapping_mul(b8[i]));
+                assert_eq!(va.xor(vb).0[i], a8[i] ^ b8[i]);
+                assert_eq!(va.neg().0[i], a8[i].wrapping_neg());
+                assert_eq!(va.rotl(13).0[i], a8[i].rotate_left(13));
+                assert_eq!(va.rotr(8).0[i], a8[i].rotate_right(8));
+                assert_eq!(va.shl(5).0[i], a8[i] << 5);
+                assert_eq!(va.shr(20).0[i], a8[i] >> 20);
+                assert_eq!(va.sar(20).0[i], ((a8[i] as i64) >> 20) as u64);
+            }
+        }
+        assert_eq!(U64x4::splat(7).0, [7u64; 4]);
+        let v = U64x8::from_slice(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(v.0, [1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn transpose64_matches_bit_probe_reference() {
+        let mut p = Prg::new(0x7A0);
+        for _ in 0..10 {
+            let orig: [u64; 64] = std::array::from_fn(|_| p.next_u64());
+            let mut t = orig;
+            transpose64(&mut t);
+            for i in 0..64 {
+                for j in 0..64 {
+                    assert_eq!(
+                        (t[j] >> i) & 1,
+                        (orig[i] >> j) & 1,
+                        "bit ({i},{j})"
+                    );
+                }
+            }
+            // Involution.
+            transpose64(&mut t);
+            assert_eq!(t, orig);
+        }
+    }
+
+    #[test]
+    fn axpy_is_width_independent_at_odd_tails() {
+        let mut p = Prg::new(0xA11);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 31, 64, 65] {
+            let base = p.u64s(len);
+            let b = p.u64s(len);
+            let a = p.next_u64();
+            let mut want = base.clone();
+            for i in 0..len {
+                want[i] = want[i].wrapping_add(a.wrapping_mul(b[i]));
+            }
+            for width in [1usize, 4, 8] {
+                let mut got = base.clone();
+                with_lanes(width, || axpy(&mut got, a, &b));
+                assert_eq!(got, want, "len={len} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_sub_trunc_sweeps_are_width_independent() {
+        let mut p = Prg::new(0xADD);
+        for len in [0usize, 1, 5, 8, 13, 40] {
+            let a = p.u64s(len);
+            let b = p.u64s(len);
+            let mut want_add = vec![0u64; len];
+            let mut want_sub = Vec::new();
+            for i in 0..len {
+                want_add[i] = a[i].wrapping_add(b[i]);
+                want_sub.push(a[i].wrapping_sub(b[i]));
+            }
+            for width in [1usize, 4, 8] {
+                with_lanes(width, || {
+                    let mut got = vec![0u64; len];
+                    add_words(&mut got, &a, &b);
+                    assert_eq!(got, want_add, "add len={len} width={width}");
+                    let mut got_sub = Vec::new();
+                    sub_words_into(&mut got_sub, &a, &b);
+                    assert_eq!(got_sub, want_sub, "sub len={len} width={width}");
+                    for party in [0usize, 1] {
+                        let want: Vec<u64> =
+                            a.iter().map(|&v| trunc_word(v, party, 20)).collect();
+                        assert_eq!(
+                            trunc_words(&a, party, 20),
+                            want,
+                            "trunc party={party} len={len} width={width}"
+                        );
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn sub_words_into_appends_after_existing_payload() {
+        let mut out = vec![99u64];
+        with_lanes(8, || {
+            sub_words_into(&mut out, &[10, 20, 30], &[1, 2, 3]);
+        });
+        assert_eq!(out, vec![99, 9, 18, 27]);
+    }
+}

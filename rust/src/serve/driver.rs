@@ -27,6 +27,7 @@ use crate::offline::bank::{BankConfig, MaterialBank};
 use crate::offline::dealer::Dealer;
 use crate::offline::store::{Demand, TripleStore};
 use crate::runtime::pool::Parallelism;
+use crate::runtime::simd::Lanes;
 use crate::util::error::{Error, Result};
 use std::time::Instant;
 
@@ -49,6 +50,11 @@ pub struct ServeConfig {
     /// replenishment and the per-batch plaintext-side products). Scores,
     /// reveals and meters are bit-identical for any value.
     pub parallelism: Parallelism,
+    /// Packed-lane width for the crypto kernels
+    /// ([`crate::runtime::simd`]): bank fabrication PRG draws and the
+    /// per-batch axpy/truncation sweeps run this many lanes per step.
+    /// Scores, reveals and meters are bit-identical for any value.
+    pub lanes: Lanes,
     /// Optional deterministic link shaping
     /// ([`crate::net::shape::LinkShaper`]) for the serve loop's
     /// transport: per-batch wall-clock then *measures* compute + link
@@ -66,6 +72,7 @@ impl Default for ServeConfig {
             bank: BankConfig::default(),
             seed: 0x5E11E,
             parallelism: Parallelism::sequential(),
+            lanes: Lanes::scalar(),
             shape: None,
         }
     }
@@ -212,6 +219,8 @@ pub fn serve_party(
     // Worker count for the per-batch plaintext-side products (see
     // runtime::pool) — scores and meters are thread-count independent.
     crate::runtime::pool::set_global_threads(threads);
+    // Packed-lane width for the SIMD kernels — same contract.
+    crate::runtime::simd::set_global_lanes(cfg.lanes.width);
     if let Some(link) = cfg.shape {
         chan.set_shaper(link);
     }

@@ -138,16 +138,15 @@ impl Csr {
     }
 
     /// Plaintext sparse · dense product (wrapping), `self (n×d) · m (d×k)`.
+    /// The per-nonzero row update is a packed axpy sweep
+    /// ([`crate::runtime::simd::axpy`]).
     pub fn matmul_dense(&self, m: &Mat) -> Mat {
         assert_eq!(self.cols, m.rows, "spmm shape");
         let mut out = Mat::zeros(self.rows, m.cols);
         for r in 0..self.rows {
             let orow = out.row_mut(r);
             for (j, v) in self.row_iter(r) {
-                let brow = m.row(j);
-                for c in 0..m.cols {
-                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
-                }
+                crate::runtime::simd::axpy(orow, v, m.row(j));
             }
         }
         out
@@ -161,10 +160,7 @@ impl Csr {
         for r in 0..self.rows {
             let brow = m.row(r);
             for (j, v) in self.row_iter(r) {
-                let orow = out.row_mut(j);
-                for c in 0..m.cols {
-                    orow[c] = orow[c].wrapping_add(v.wrapping_mul(brow[c]));
-                }
+                crate::runtime::simd::axpy(out.row_mut(j), v, brow);
             }
         }
         out

@@ -34,25 +34,18 @@ pub fn ss_matmul_begin_with_triple(
     assert_eq!(t.v.shape(), b.shape(), "triple V shape");
     // Reveal E = A−U and F = B−V: one preallocated payload, no
     // intermediate clones — the round buffer hands it back at resolve.
+    // Both subtractions are packed lanewise sweeps (runtime::simd).
     let (ne, nf) = (a.len(), b.len());
     let mut payload = Vec::with_capacity(ne + nf);
-    for i in 0..ne {
-        payload.push(a.data[i].wrapping_sub(t.u.data[i]));
-    }
-    for i in 0..nf {
-        payload.push(b.data[i].wrapping_sub(t.v.data[i]));
-    }
+    crate::runtime::simd::sub_words_into(&mut payload, &a.data, &t.u.data);
+    crate::runtime::simd::sub_words_into(&mut payload, &b.data, &t.v.data);
     let (a_rows, a_cols) = a.shape();
     let (b_rows, b_cols) = b.shape();
     Pending::stage(ctx, payload, move |party, mine, theirs| {
         let mut e = Mat::zeros(a_rows, a_cols);
         let mut f = Mat::zeros(b_rows, b_cols);
-        for i in 0..ne {
-            e.data[i] = mine[i].wrapping_add(theirs[i]);
-        }
-        for i in 0..nf {
-            f.data[i] = mine[ne + i].wrapping_add(theirs[ne + i]);
-        }
+        crate::runtime::simd::add_words(&mut e.data, &mine[..ne], &theirs[..ne]);
+        crate::runtime::simd::add_words(&mut f.data, &mine[ne..], &theirs[ne..]);
         // ⟨AB⟩ = [party0] E·F + E·⟨V⟩ + ⟨U⟩·F + ⟨Z⟩
         // Large recombination products dispatch to the PJRT ring-matmul
         // artifact when available (runtime::dispatch).

@@ -10,13 +10,15 @@ use crate::ring::fixed::FRAC_BITS;
 use crate::ring::matrix::Mat;
 
 /// Locally truncate a shared fixed-point matrix by `bits` (default
-/// [`FRAC_BITS`] via [`trunc_frac`]).
+/// [`FRAC_BITS`] via [`trunc_frac`]). The per-element shift (party 1:
+/// `−((−⟨x⟩₁) >> f)`) runs as a packed lanewise sweep
+/// ([`crate::runtime::simd::trunc_words`]) — bit-identical at every
+/// lane width.
 pub fn trunc_share(party: usize, x: &Mat, bits: u32) -> Mat {
-    if party == 0 {
-        x.map(|v| ((v as i64) >> bits) as u64)
-    } else {
-        // ⟨x⟩₁' = −((−⟨x⟩₁) >> f)
-        x.map(|v| (((v.wrapping_neg()) as i64 >> bits) as u64).wrapping_neg())
+    Mat {
+        rows: x.rows,
+        cols: x.cols,
+        data: crate::runtime::simd::trunc_words(&x.data, party, bits),
     }
 }
 

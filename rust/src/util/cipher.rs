@@ -10,6 +10,8 @@
 //! swap this module for hardware AES; every caller goes through the two
 //! functions below.)
 
+use crate::runtime::simd::U64s;
+
 /// Expanded 32-round key schedule for a 128-bit key.
 #[derive(Clone)]
 pub struct Speck128 {
@@ -54,6 +56,85 @@ impl Speck128 {
         self.encrypt_words(&mut x, &mut y);
         (x as u128) | ((y as u128) << 64)
     }
+
+    /// Encrypt `N` independent blocks in one packed round sweep.
+    ///
+    /// The single-block ARX chain is latency-bound (three dependent ops
+    /// per round); `N` independent blocks break the chain, so each round
+    /// becomes a lanewise [`U64s`] sweep the compiler autovectorizes —
+    /// the counter-mode hot path of [`crate::util::prng::Prg`] bulk
+    /// draws. Bit-identical to `N` [`Self::encrypt_words`] calls.
+    #[inline]
+    pub fn encrypt_blocks<const N: usize>(&self, xs: &mut [u64; N], ys: &mut [u64; N]) {
+        let mut x = U64s(*xs);
+        let mut y = U64s(*ys);
+        for r in 0..ROUNDS {
+            let k = U64s::<N>::splat(self.ks[r]);
+            x = x.rotr(8).add(y).xor(k);
+            y = y.rotl(3).xor(x);
+        }
+        *xs = x.0;
+        *ys = y.0;
+    }
+}
+
+/// `N` Speck-128/128 instances with *distinct* keys, key-scheduled and
+/// run in lockstep — the engine behind
+/// [`crate::util::hash::hash256_many`], where every 16-byte message
+/// block is a fresh cipher key (Davies–Meyer). Both the key schedule
+/// and encryption are lanewise [`U64s`] sweeps; lane `i` is
+/// bit-identical to a scalar `Speck128::new(keys[i])`.
+pub struct SpeckMulti<const N: usize> {
+    ks: [[u64; N]; 32],
+}
+
+impl<const N: usize> SpeckMulti<N> {
+    /// Expand `N` 16-byte keys in one packed sweep.
+    pub fn new(keys: &[[u8; 16]; N]) -> SpeckMulti<N> {
+        let mut k = [0u64; N];
+        let mut l = [0u64; N];
+        for lane in 0..N {
+            k[lane] = u64::from_le_bytes(keys[lane][0..8].try_into().unwrap());
+            l[lane] = u64::from_le_bytes(keys[lane][8..16].try_into().unwrap());
+        }
+        let mut ks = [[0u64; N]; 32];
+        for (i, slot) in ks.iter_mut().enumerate() {
+            *slot = k;
+            // Same schedule as the scalar path: one round with the
+            // counter as key, applied to every lane.
+            let c = U64s::<N>::splat(i as u64);
+            let mut x = U64s(l);
+            let mut y = U64s(k);
+            x = x.rotr(8).add(y).xor(c);
+            y = y.rotl(3).xor(x);
+            l = x.0;
+            k = y.0;
+        }
+        SpeckMulti { ks }
+    }
+
+    /// Encrypt one 128-bit value per lane (lane `i` under key `i`).
+    #[inline]
+    pub fn encrypt_u128s(&self, vs: &[u128; N]) -> [u128; N] {
+        let mut xs = [0u64; N];
+        let mut ys = [0u64; N];
+        for lane in 0..N {
+            xs[lane] = vs[lane] as u64;
+            ys[lane] = (vs[lane] >> 64) as u64;
+        }
+        let mut x = U64s(xs);
+        let mut y = U64s(ys);
+        for r in 0..ROUNDS {
+            let k = U64s(self.ks[r]);
+            x = x.rotr(8).add(y).xor(k);
+            y = y.rotl(3).xor(x);
+        }
+        let mut out = [0u128; N];
+        for lane in 0..N {
+            out[lane] = (x.0[lane] as u128) | ((y.0[lane] as u128) << 64);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +167,38 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         for i in 0..1000u128 {
             assert!(seen.insert(k.encrypt_u128(i)), "collision at {i}");
+        }
+    }
+
+    #[test]
+    fn packed_blocks_match_scalar_encryption() {
+        let k = Speck128::new(*b"ppkmeans-simdkey");
+        let mut xs: [u64; 8] = std::array::from_fn(|i| 0x1111 * i as u64);
+        let mut ys: [u64; 8] = std::array::from_fn(|i| !(0x7 * i as u64));
+        let (xs0, ys0) = (xs, ys);
+        k.encrypt_blocks(&mut xs, &mut ys);
+        for i in 0..8 {
+            let (mut x, mut y) = (xs0[i], ys0[i]);
+            k.encrypt_words(&mut x, &mut y);
+            assert_eq!((xs[i], ys[i]), (x, y), "lane {i}");
+        }
+        // 4-lane width too.
+        let mut x4 = [1u64, 2, 3, 4];
+        let mut y4 = [5u64, 6, 7, 8];
+        k.encrypt_blocks(&mut x4, &mut y4);
+        let (mut x, mut y) = (3u64, 7u64);
+        k.encrypt_words(&mut x, &mut y);
+        assert_eq!((x4[2], y4[2]), (x, y));
+    }
+
+    #[test]
+    fn multi_key_lanes_match_scalar_instances() {
+        let keys: [[u8; 16]; 4] = std::array::from_fn(|i| [i as u8 + 1; 16]);
+        let multi = SpeckMulti::new(&keys);
+        let vs: [u128; 4] = [42, u128::MAX, 7 << 90, 0];
+        let got = multi.encrypt_u128s(&vs);
+        for i in 0..4 {
+            assert_eq!(got[i], Speck128::new(keys[i]).encrypt_u128(vs[i]), "lane {i}");
         }
     }
 }

@@ -18,7 +18,7 @@
 //! with standard length-strengthening (an `0x80` marker byte, zero
 //! padding, and a final block carrying the total bit length).
 
-use crate::util::cipher::Speck128;
+use crate::util::cipher::{Speck128, SpeckMulti};
 
 /// Streaming 256-bit hash: `new` → any number of `update`s →
 /// `finalize`.
@@ -113,6 +113,102 @@ pub fn hash256(data: &[u8]) -> [u8; 32] {
     h.finalize()
 }
 
+/// Hash a batch of **equal-length** messages in lockstep, packing
+/// [`crate::runtime::simd::global_lanes`] messages per compression
+/// sweep.
+///
+/// Equal lengths mean every message is at the same block position at
+/// every step, so one [`SpeckMulti`] instance per block position (the
+/// `N` messages' blocks are its `N` keys) carries all lanes through the
+/// identical Davies–Meyer schedule — padding, marker and length block
+/// included. This is the per-OT mask batch of the IKNP extension, where
+/// every hash input is a fixed 24-byte `(index, row key)` pair.
+/// Bit-identical to calling [`hash256`] per message at every lane
+/// width; ragged batch tails fall back to the scalar path.
+pub fn hash256_many(msgs: &[&[u8]]) -> Vec<[u8; 32]> {
+    if msgs.is_empty() {
+        return vec![];
+    }
+    let len = msgs[0].len();
+    assert!(
+        msgs.iter().all(|m| m.len() == len),
+        "hash256_many requires equal-length messages"
+    );
+    let lanes = crate::runtime::simd::global_lanes();
+    let mut out = Vec::with_capacity(msgs.len());
+    let mut i = 0;
+    if lanes >= 8 {
+        while i + 8 <= msgs.len() {
+            let chunk: &[&[u8]; 8] = msgs[i..i + 8].try_into().unwrap();
+            out.extend_from_slice(&hash256_lockstep::<8>(chunk));
+            i += 8;
+        }
+    }
+    if lanes >= 4 {
+        while i + 4 <= msgs.len() {
+            let chunk: &[&[u8]; 4] = msgs[i..i + 4].try_into().unwrap();
+            out.extend_from_slice(&hash256_lockstep::<4>(chunk));
+            i += 4;
+        }
+    }
+    while i < msgs.len() {
+        out.push(hash256(msgs[i]));
+        i += 1;
+    }
+    out
+}
+
+/// One Davies–Meyer step across `N` lanes: every lane's state words are
+/// encrypted under that lane's block-key and XORed back.
+fn compress_lockstep<const N: usize>(
+    s0: &mut [u128; N],
+    s1: &mut [u128; N],
+    blocks: &[[u8; 16]; N],
+) {
+    let cipher = SpeckMulti::new(blocks);
+    let e0 = cipher.encrypt_u128s(s0);
+    let e1 = cipher.encrypt_u128s(s1);
+    for lane in 0..N {
+        s0[lane] ^= e0[lane];
+        s1[lane] ^= e1[lane];
+    }
+}
+
+/// `N` equal-length messages through the full [`Hash256`] schedule in
+/// lockstep.
+fn hash256_lockstep<const N: usize>(msgs: &[&[u8]; N]) -> [[u8; 32]; N] {
+    let len = msgs[0].len();
+    let mut s0 = [IV[0]; N];
+    let mut s1 = [IV[1]; N];
+    for b in 0..len / 16 {
+        let mut blocks = [[0u8; 16]; N];
+        for lane in 0..N {
+            blocks[lane].copy_from_slice(&msgs[lane][b * 16..(b + 1) * 16]);
+        }
+        compress_lockstep(&mut s0, &mut s1, &blocks);
+    }
+    // 0x80 marker + zero padding (always present, exactly like
+    // Hash256::finalize — a full-block message still gets a tail block).
+    let rem = len % 16;
+    let mut blocks = [[0u8; 16]; N];
+    for lane in 0..N {
+        blocks[lane][..rem].copy_from_slice(&msgs[lane][len - rem..]);
+        blocks[lane][rem] = 0x80;
+    }
+    compress_lockstep(&mut s0, &mut s1, &blocks);
+    // Length-strengthening block (identical across lanes).
+    let mut len_block = [0u8; 16];
+    len_block[..8].copy_from_slice(&(len as u64).wrapping_mul(8).to_le_bytes());
+    len_block[8..].copy_from_slice(b"ppk-h256");
+    compress_lockstep(&mut s0, &mut s1, &[len_block; N]);
+    let mut out = [[0u8; 32]; N];
+    for lane in 0..N {
+        out[lane][..16].copy_from_slice(&s0[lane].to_le_bytes());
+        out[lane][16..].copy_from_slice(&s1[lane].to_le_bytes());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +253,39 @@ mod tests {
         let a = hash256(&[0x80]);
         let b = hash256(&[]);
         assert_ne!(a, b, "marker byte must not collide with empty input");
+    }
+
+    #[test]
+    fn lockstep_batch_matches_per_message_hash() {
+        use crate::runtime::simd::set_global_lanes;
+        // Lengths straddling block boundaries; batch sizes with ragged
+        // tails (batch % lanes != 0) — the rot spot for packed kernels.
+        for len in [0usize, 1, 15, 16, 17, 24, 32, 47] {
+            for count in [1usize, 3, 4, 5, 8, 11, 16] {
+                let msgs: Vec<Vec<u8>> = (0..count)
+                    .map(|i| (0..len).map(|j| (i * 31 + j) as u8).collect())
+                    .collect();
+                let refs: Vec<&[u8]> = msgs.iter().map(|m| m.as_slice()).collect();
+                let want: Vec<[u8; 32]> = msgs.iter().map(|m| hash256(m)).collect();
+                for width in [1usize, 4, 8] {
+                    set_global_lanes(width);
+                    assert_eq!(
+                        hash256_many(&refs),
+                        want,
+                        "len={len} count={count} width={width}"
+                    );
+                }
+                set_global_lanes(1);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal-length")]
+    fn lockstep_batch_rejects_ragged_lengths() {
+        let a = [1u8; 3];
+        let b = [2u8; 4];
+        hash256_many(&[&a, &b]);
     }
 
     #[test]

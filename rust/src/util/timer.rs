@@ -10,21 +10,26 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// A stopped timer with zero accumulated time.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Begin a timing interval (must not already be running).
     pub fn start(&mut self) {
         debug_assert!(self.started.is_none(), "timer already running");
         self.started = Some(Instant::now());
     }
 
+    /// End the current interval, adding it to the accumulated total
+    /// (no-op when stopped).
     pub fn stop(&mut self) {
         if let Some(s) = self.started.take() {
             self.total += s.elapsed();
         }
     }
 
+    /// Accumulated time, including the in-flight interval if running.
     pub fn elapsed(&self) -> Duration {
         match self.started {
             Some(s) => self.total + s.elapsed(),
@@ -32,6 +37,7 @@ impl Timer {
         }
     }
 
+    /// [`Self::elapsed`] in fractional seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }

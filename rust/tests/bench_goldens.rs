@@ -3,9 +3,10 @@
 //! Wall-clock is hardware-dependent and stays informational; every byte
 //! and every flight is deterministic, so drift there is a real protocol
 //! change and must be deliberate. The goldens live in
-//! `rust/tests/goldens/`; a file containing `status = bootstrap` (or a
-//! missing file) is regenerated in place — run the test once locally
-//! and commit the result to pin the counts. To update after an
+//! `rust/tests/goldens/` and hold real measured counts only — a missing
+//! file is bootstrapped in place from the live measurement (run the
+//! test once locally and commit the result to pin the counts), but
+//! placeholder contents are never accepted. To update after an
 //! intentional protocol change: `UPDATE_GOLDENS=1 cargo test --test
 //! bench_goldens`, then commit the diff. Either way the test also
 //! re-runs the measurement and asserts it is reproducible within the
@@ -24,7 +25,7 @@ fn check_golden(name: &str, actual: &str) {
     let path = golden_path(name);
     let committed = std::fs::read_to_string(&path).unwrap_or_default();
     let update = std::env::var("UPDATE_GOLDENS").is_ok();
-    if update || committed.is_empty() || committed.trim() == "status = bootstrap" {
+    if update || committed.is_empty() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, actual).unwrap_or_else(|e| panic!("write {name}: {e}"));
         eprintln!("bench_goldens: wrote {} — commit it to pin these counts", path.display());

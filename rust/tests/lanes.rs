@@ -1,0 +1,138 @@
+//! Determinism regression for the packed-lane runtime (`runtime::simd`):
+//! a protocol run with 8-wide packed kernels must be **transcript
+//! identical** to the scalar run — bit-identical reveals and shares, and
+//! identical per-phase Meter flight/byte counts — so the lane width is
+//! purely a throughput knob, exactly like the thread count
+//! (`rust/tests/parallel.rs`). The two knobs compose: the widest run is
+//! also checked under a 4-worker fan-out.
+
+use ppkmeans::data::blobs::BlobSpec;
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::secure;
+use ppkmeans::net::meter::PhaseStats;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::runtime::pool::Parallelism;
+use ppkmeans::runtime::simd::{set_global_lanes, Lanes};
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+
+fn meter_snapshot(out: &secure::SecureKmeansOutput) -> Vec<(String, PhaseStats)> {
+    out.meter_a.phases().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+#[test]
+fn secure_kmeans_is_bit_identical_across_lane_widths() {
+    // Full training run, tiled — same shape as the thread-count
+    // regression so the two knobs guard the same transcript.
+    let mut spec = BlobSpec::new(400, 6, 3);
+    spec.spread = 0.02;
+    let data = spec.generate(71);
+    let base = SecureKmeansConfig {
+        k: 3,
+        iters: 3,
+        partition: Partition::Vertical { d_a: 3 },
+        tile_rows: Some(128),
+        tile_flights: TileFlights::Lockstep,
+        ..Default::default()
+    };
+    let scalar = secure::run(&data, &base).unwrap();
+    set_global_lanes(1);
+    for width in [4usize, 8] {
+        let cfg = SecureKmeansConfig { lanes: Lanes::new(width), ..base.clone() };
+        let packed = secure::run(&data, &cfg).unwrap();
+        set_global_lanes(1);
+
+        // Reveals and shares: bit-identical.
+        assert_eq!(packed.centroids, scalar.centroids, "centroids, lanes={width}");
+        assert_eq!(packed.assignments, scalar.assignments, "lanes={width}");
+        assert_eq!(packed.centroid_shares[0], scalar.centroid_shares[0], "lanes={width}");
+        assert_eq!(packed.centroid_shares[1], scalar.centroid_shares[1], "lanes={width}");
+
+        // Transcript: every phase's flight and byte counters must match —
+        // packed kernels are party-local and never touch the Chan
+        // schedule.
+        assert_eq!(
+            meter_snapshot(&packed),
+            meter_snapshot(&scalar),
+            "party-0 meters, lanes={width}"
+        );
+        assert_eq!(
+            packed.meter_b.total().rounds,
+            scalar.meter_b.total().rounds,
+            "lanes={width}"
+        );
+        assert_eq!(
+            packed.meter_b.total().bytes_sent,
+            scalar.meter_b.total().bytes_sent,
+            "lanes={width}"
+        );
+
+        // Offline accounting: same demand, same ledger.
+        assert_eq!(packed.demand, scalar.demand, "lanes={width}");
+        assert_eq!(packed.ledger, scalar.ledger, "lanes={width}");
+    }
+
+    // Composition: 8 lanes × 4 workers must still match the scalar
+    // sequential transcript — the speedups multiply, the bits don't move.
+    let both = SecureKmeansConfig {
+        lanes: Lanes::auto(),
+        parallelism: Parallelism::new(4),
+        ..base
+    };
+    let combined = secure::run(&data, &both).unwrap();
+    set_global_lanes(1);
+    assert_eq!(combined.centroids, scalar.centroids, "8 lanes x 4 threads");
+    assert_eq!(combined.assignments, scalar.assignments, "8 lanes x 4 threads");
+    assert_eq!(
+        meter_snapshot(&combined),
+        meter_snapshot(&scalar),
+        "8 lanes x 4 threads meters"
+    );
+    assert_eq!(combined.demand, scalar.demand);
+    assert_eq!(combined.ledger, scalar.ledger);
+}
+
+#[test]
+fn serving_is_bit_identical_across_lane_widths() {
+    // Train once, then serve the same stream with scalar and 8-lane
+    // scorers: identical reveals (assignments + fraud flags) and
+    // identical serve-phase meters, batch for batch.
+    let f = fraud_gen::generate(300, 0.05, 4100);
+    let cfg = SecureKmeansConfig {
+        k: 2,
+        iters: 2,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let (_, models) = train_model(&f.data, &cfg, 0.05).unwrap();
+    set_global_lanes(1);
+    let stream = fraud_gen::generate(4 * 16, 0.05, 4200);
+    let base = ServeConfig {
+        batch_rows: 16,
+        batches: 4,
+        bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 1 },
+        seed: 0xDE7,
+        ..Default::default()
+    };
+    let scalar = serve_stream(models.clone(), &stream.data, &base).unwrap();
+    set_global_lanes(1);
+    let packed_cfg = ServeConfig { lanes: Lanes::auto(), ..base };
+    let packed = serve_stream(models, &stream.data, &packed_cfg).unwrap();
+    set_global_lanes(1);
+
+    assert_eq!(packed.results, scalar.results, "scores and flags must be bit-identical");
+    for (i, (s, p)) in scalar.batch_stats.iter().zip(&packed.batch_stats).enumerate() {
+        assert_eq!(p.online, s.online, "batch {i} serve-phase meters");
+        assert_eq!(p.flagged, s.flagged, "batch {i} flags");
+    }
+    assert_eq!(
+        packed.meter_a.total_prefix("serve.").rounds,
+        scalar.meter_a.total_prefix("serve.").rounds
+    );
+    assert_eq!(
+        packed.meter_a.total_prefix("serve.").bytes_sent,
+        scalar.meter_a.total_prefix("serve.").bytes_sent
+    );
+    assert_eq!(packed.per_batch_demand, scalar.per_batch_demand);
+    assert_eq!(packed.bank_misses + scalar.bank_misses, 0);
+}

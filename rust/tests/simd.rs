@@ -1,0 +1,272 @@
+//! Packed ≡ scalar property tests for the `runtime::simd` kernels.
+//!
+//! The lane-width contract (see `runtime::simd`): the packed paths are
+//! throughput-only — every kernel must be **bit-identical** to its
+//! scalar reference at every supported width and at every odd tail
+//! length. This file exercises the contract through the public API of
+//! each rewritten hot path: Speck counter-mode batches, the multi-key
+//! lockstep hash, the PRG bulk fill, the 64×64 bit transpose, and the
+//! axpy / add / sub / truncation sweeps of the online phase. The
+//! end-to-end version of the same contract (full train + serve at
+//! lanes = 1 vs lanes = 8) lives in `rust/tests/lanes.rs`.
+
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::runtime::simd::{
+    self, set_global_lanes, transpose64, Lanes, U64s,
+};
+use ppkmeans::ss::trunc::trunc_share;
+use ppkmeans::util::cipher::{Speck128, SpeckMulti};
+use ppkmeans::util::hash::{hash256, hash256_many};
+use ppkmeans::util::prng::Prg;
+
+const WIDTHS: [usize; 3] = [1, 4, 8];
+
+/// Run `f` at the given global lane width, restoring the scalar default
+/// afterwards (a racing test can only change throughput, never bits).
+fn with_lanes<T>(width: usize, f: impl FnOnce() -> T) -> T {
+    set_global_lanes(width);
+    let out = f();
+    set_global_lanes(1);
+    out
+}
+
+#[test]
+fn speck_packed_blocks_match_scalar_chain() {
+    let key = Speck128::new(*b"simd-prop-key-01");
+    let mut p = Prg::new(0x5EC);
+    for _ in 0..20 {
+        let xs0: [u64; 8] = std::array::from_fn(|_| p.next_u64());
+        let ys0: [u64; 8] = std::array::from_fn(|_| p.next_u64());
+        let (mut xs, mut ys) = (xs0, ys0);
+        key.encrypt_blocks(&mut xs, &mut ys);
+        let mut x4: [u64; 4] = xs0[..4].try_into().unwrap();
+        let mut y4: [u64; 4] = ys0[..4].try_into().unwrap();
+        key.encrypt_blocks(&mut x4, &mut y4);
+        for i in 0..8 {
+            let (mut x, mut y) = (xs0[i], ys0[i]);
+            key.encrypt_words(&mut x, &mut y);
+            assert_eq!((xs[i], ys[i]), (x, y), "8-lane {i}");
+            if i < 4 {
+                assert_eq!((x4[i], y4[i]), (x, y), "4-lane {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_key_speck_matches_independent_instances() {
+    let mut p = Prg::new(0x5EC2);
+    let keys: [[u8; 16]; 8] = std::array::from_fn(|_| p.next_u128().to_le_bytes());
+    let vs: [u128; 8] = std::array::from_fn(|_| p.next_u128());
+    let multi = SpeckMulti::new(&keys);
+    let got = multi.encrypt_u128s(&vs);
+    for i in 0..8 {
+        assert_eq!(
+            got[i],
+            Speck128::new(keys[i]).encrypt_u128(vs[i]),
+            "lane {i}"
+        );
+    }
+}
+
+#[test]
+fn prg_bulk_fill_is_width_independent() {
+    // Odd lengths and misaligned buffers hit every branch: buffer drain,
+    // packed batches, the leftover scalar-pair loop, the odd final word.
+    for len in [0usize, 1, 7, 15, 16, 17, 33, 100, 257] {
+        for misalign in [0usize, 1, 3] {
+            let want = with_lanes(1, || {
+                let mut p = Prg::new(0xB01_D);
+                for _ in 0..misalign {
+                    p.next_u64();
+                }
+                p.u64s(len)
+            });
+            for width in WIDTHS {
+                let got = with_lanes(width, || {
+                    let mut p = Prg::new(0xB01_D);
+                    for _ in 0..misalign {
+                        p.next_u64();
+                    }
+                    p.u64s(len)
+                });
+                assert_eq!(got, want, "len={len} misalign={misalign} width={width}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lockstep_hash_is_width_independent_at_ragged_batches() {
+    // 24-byte messages are the IKNP (index, row-key) shape; the other
+    // lengths straddle the 16-byte block boundary.
+    for len in [0usize, 5, 16, 24, 40] {
+        for count in [1usize, 2, 7, 8, 9, 13, 17] {
+            let msgs: Vec<Vec<u8>> = (0..count)
+                .map(|i| (0..len).map(|j| (i * 131 + j * 7) as u8).collect())
+                .collect();
+            let refs: Vec<&[u8]> = msgs.iter().map(|m| m.as_slice()).collect();
+            let want: Vec<[u8; 32]> = msgs.iter().map(|m| hash256(m)).collect();
+            for width in WIDTHS {
+                let got = with_lanes(width, || hash256_many(&refs));
+                assert_eq!(got, want, "len={len} count={count} width={width}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bit_transpose_matches_probe_and_involutes() {
+    let mut p = Prg::new(0x7A05);
+    for _ in 0..5 {
+        let orig: [u64; 64] = std::array::from_fn(|_| p.next_u64());
+        let mut t = orig;
+        transpose64(&mut t);
+        for i in 0..64 {
+            for j in 0..64 {
+                assert_eq!((t[j] >> i) & 1, (orig[i] >> j) & 1, "bit ({i},{j})");
+            }
+        }
+        transpose64(&mut t);
+        assert_eq!(t, orig, "transpose must be an involution");
+    }
+}
+
+#[test]
+fn axpy_and_word_sweeps_are_width_independent() {
+    let mut p = Prg::new(0xA2B);
+    for len in [0usize, 1, 3, 7, 8, 9, 29, 64, 65, 200] {
+        let base = p.u64s(len);
+        let b = p.u64s(len);
+        let a = p.next_u64();
+        let mut want_axpy = base.clone();
+        let mut want_add = vec![0u64; len];
+        let mut want_sub = Vec::new();
+        for i in 0..len {
+            want_axpy[i] = want_axpy[i].wrapping_add(a.wrapping_mul(b[i]));
+            want_add[i] = base[i].wrapping_add(b[i]);
+            want_sub.push(base[i].wrapping_sub(b[i]));
+        }
+        for width in WIDTHS {
+            with_lanes(width, || {
+                let mut got = base.clone();
+                simd::axpy(&mut got, a, &b);
+                assert_eq!(got, want_axpy, "axpy len={len} width={width}");
+                let mut got = vec![0u64; len];
+                simd::add_words(&mut got, &base, &b);
+                assert_eq!(got, want_add, "add len={len} width={width}");
+                let mut got = Vec::new();
+                simd::sub_words_into(&mut got, &base, &b);
+                assert_eq!(got, want_sub, "sub len={len} width={width}");
+            });
+        }
+    }
+}
+
+#[test]
+fn truncation_sweep_is_width_independent_and_correct() {
+    let mut p = Prg::new(0x7121C);
+    for len in [1usize, 6, 8, 17, 63] {
+        let x = p.u64s(len);
+        for party in [0usize, 1] {
+            let want: Vec<u64> = x
+                .iter()
+                .map(|&v| simd::trunc_word(v, party, 20))
+                .collect();
+            for width in WIDTHS {
+                let got = with_lanes(width, || simd::trunc_words(&x, party, 20));
+                assert_eq!(got, want, "party={party} len={len} width={width}");
+            }
+        }
+    }
+}
+
+#[test]
+fn trunc_share_reconstructs_shifted_value_at_every_width() {
+    // The SecureML guarantee, through the public ss::trunc API: for
+    // shares whose sum is a small fixed-point value, the truncated
+    // shares reconstruct the arithmetic shift of the sum (±1 ulp) — at
+    // every lane width, identically.
+    let mut p = Prg::new(0x515D);
+    let vals: Vec<i64> = (0..40).map(|_| (p.next_u64() as i64) >> 24).collect();
+    let n = vals.len();
+    let mask: Vec<u64> = (0..n).map(|_| p.next_u64()).collect();
+    let m0 = Mat {
+        rows: 1,
+        cols: n,
+        data: mask.clone(),
+    };
+    let m1 = Mat {
+        rows: 1,
+        cols: n,
+        data: vals
+            .iter()
+            .zip(&mask)
+            .map(|(&v, &m)| (v as u64).wrapping_sub(m))
+            .collect(),
+    };
+    let mut witness: Option<Vec<u64>> = None;
+    for width in WIDTHS {
+        let (t0, t1) = with_lanes(width, || {
+            (trunc_share(0, &m0, 20), trunc_share(1, &m1, 20))
+        });
+        let recon: Vec<u64> = t0
+            .data
+            .iter()
+            .zip(&t1.data)
+            .map(|(&a, &b)| a.wrapping_add(b))
+            .collect();
+        for (i, &v) in vals.iter().enumerate() {
+            let want = (v >> 20) as i64;
+            let got = recon[i] as i64;
+            assert!(
+                (got - want).abs() <= 1,
+                "width={width} i={i}: {got} vs {want}"
+            );
+        }
+        match &witness {
+            None => witness = Some(recon),
+            Some(w) => assert_eq!(&recon, w, "width={width} must match scalar"),
+        }
+    }
+}
+
+#[test]
+fn matmul_routes_through_axpy_identically() {
+    // Mat::matmul's inner loop is the axpy sweep; whole products must be
+    // width-independent (including the zero-skip path on sparse rows).
+    let mut p = Prg::new(0x3A73);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 2), (7, 8, 9), (16, 16, 16)] {
+        let mut a = Mat {
+            rows: m,
+            cols: k,
+            data: p.u64s(m * k),
+        };
+        // Sprinkle zeros so the zero-skip branch is exercised.
+        for i in (0..a.data.len()).step_by(3) {
+            a.data[i] = 0;
+        }
+        let b = Mat {
+            rows: k,
+            cols: n,
+            data: p.u64s(k * n),
+        };
+        let want = with_lanes(1, || a.matmul(&b));
+        for width in [4usize, 8] {
+            let got = with_lanes(width, || a.matmul(&b));
+            assert_eq!(got.data, want.data, "{m}x{k}x{n} width={width}");
+        }
+    }
+}
+
+#[test]
+fn lanes_knob_rounds_and_defaults_consistently() {
+    assert_eq!(Lanes::default(), Lanes::scalar());
+    assert_eq!(Lanes::auto().width, 8);
+    assert_eq!(Lanes::new(6).width, 4);
+    // The U64s block type itself round-trips slices.
+    let v = U64s::<4>::from_slice(&[9, 8, 7, 6, 5]);
+    let mut out = [0u64; 4];
+    v.write(&mut out);
+    assert_eq!(out, [9, 8, 7, 6]);
+}
