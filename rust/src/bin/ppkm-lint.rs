@@ -1,0 +1,114 @@
+//! `ppkm-lint` — the protocol-invariant static analyzer, as a CLI.
+//!
+//! Walks `src/**` of the crate, applies the rule catalog
+//! ([`ppkmeans::lint`]) under the `lint.rules` policy file, prints
+//! findings as `rule: file:line: token`, and exits non-zero when
+//! anything fires. CI runs this as a blocking job; locally:
+//!
+//! ```text
+//! cargo run --release --bin ppkm-lint            # lint the tree
+//! cargo run --release --bin ppkm-lint -- --list  # print the catalog
+//! ```
+//!
+//! Exit codes: `0` clean, `1` findings, `2` usage or I/O failure.
+
+use ppkmeans::lint::{load_rules, scan_tree, Scope};
+use std::path::PathBuf;
+
+/// Locate the crate root: `--root` wins; otherwise the compile-time
+/// manifest dir when it still exists (the `cargo run` case); otherwise
+/// walk up from the current directory looking for `Cargo.toml` next to
+/// `src/` (the relocated-binary case).
+fn find_root(explicit: Option<PathBuf>) -> Option<PathBuf> {
+    if let Some(r) = explicit {
+        return Some(r);
+    }
+    let baked = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if baked.join("src").is_dir() {
+        return Some(baked);
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        if cur.join("Cargo.toml").is_file() && cur.join("src").is_dir() {
+            return Some(cur);
+        }
+        // A workspace checkout's root holds the member at rust/.
+        if cur.join("rust/Cargo.toml").is_file() && cur.join("rust/src").is_dir() {
+            return Some(cur.join("rust"));
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    let mut list = false;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => {
+                    eprintln!("ppkm-lint: --root needs a path");
+                    std::process::exit(2);
+                }
+            },
+            "--list" => list = true,
+            "--help" | "-h" => {
+                println!(
+                    "ppkm-lint [--root CRATE_DIR] [--list]\n\
+                     Lints src/** against the protocol-invariant rule catalog\n\
+                     (policy: CRATE_DIR/lint.rules; docs: docs/STATIC_ANALYSIS.md)."
+                );
+                return;
+            }
+            other => {
+                eprintln!("ppkm-lint: unknown argument `{other}` (try --help)");
+                std::process::exit(2);
+            }
+        }
+    }
+    let Some(root) = find_root(root) else {
+        eprintln!("ppkm-lint: cannot locate the crate root (use --root)");
+        std::process::exit(2);
+    };
+    let rules = match load_rules(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ppkm-lint: {e}");
+            std::process::exit(2);
+        }
+    };
+    if list {
+        for r in &rules {
+            let (kind, mods) = match &r.scope {
+                Scope::BannedIn(m) => ("banned in", m),
+                Scope::ConfinedTo(m) => ("confined to", m),
+            };
+            println!("{}: {} [{} {}]", r.id, r.summary, kind, mods.join(" "));
+        }
+        return;
+    }
+    match scan_tree(&root, &rules) {
+        Ok(findings) if findings.is_empty() => {
+            println!("ppkm-lint: clean ({} rules over {})", rules.len(), root.display());
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!(
+                "ppkm-lint: {} finding(s) — fix, or suppress with \
+                 `// lint:allow(rule): justification` (see docs/STATIC_ANALYSIS.md)",
+                findings.len()
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("ppkm-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}

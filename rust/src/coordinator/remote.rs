@@ -708,7 +708,7 @@ fn score_stream(
             x
         })
         .collect();
-    let out = serve_party(chan, model, blocks, &sc.serve_config());
+    let out = serve_party(chan, model, blocks, &sc.serve_config())?;
     let mut h = Hash256::new();
     for r in &out.results {
         for &a in &r.assignments {
@@ -812,21 +812,12 @@ pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
 /// against, and the `--role local` CLI mode.
 pub fn run_scenario_local(sc: &Scenario) -> Result<(PartyTranscript, PartyTranscript)> {
     let (mut c0, mut c1) = crate::net::duplex_pair();
-    let sc1 = sc.clone();
-    let h = std::thread::Builder::new()
-        .name("party1".into())
-        .stack_size(64 << 20)
-        .spawn(move || run_scenario(&mut c1, &sc1))
-        .expect("spawn party1");
-    let sc0 = sc.clone();
-    let h0 = std::thread::Builder::new()
-        .name("party0".into())
-        .stack_size(64 << 20)
-        .spawn(move || run_scenario(&mut c0, &sc0))
-        .expect("spawn party0");
-    let t0 = h0.join().expect("party 0 panicked")?;
-    let t1 = h.join().expect("party 1 panicked")?;
-    Ok((t0, t1))
+    let (sc0, sc1) = (sc.clone(), sc.clone());
+    let (t0, t1) = crate::runtime::pool::run_pair(
+        move || run_scenario(&mut c0, &sc0),
+        move || run_scenario(&mut c1, &sc1),
+    );
+    Ok((t0?, t1?))
 }
 
 #[cfg(test)]

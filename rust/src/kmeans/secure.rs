@@ -46,7 +46,7 @@ use crate::ss::triples::{Ledger, TripleSource};
 use crate::ss::Session;
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
-use std::time::Instant;
+use crate::util::timer::Timer;
 
 /// Per-step online wall-clock (seconds, triple generation excluded).
 #[derive(Debug, Default, Clone, Copy)]
@@ -188,7 +188,7 @@ fn party_main(
     cfg: &SecureKmeansConfig,
 ) -> PartyResult {
     let party = chan.party;
-    let t_start = Instant::now();
+    let t_start = Timer::started();
     // Install this run's worker count for the deep call sites (Beaver
     // recombination, dealer matmuls, tile-local products). A pure
     // throughput knob: outputs and meters are thread-count independent.
@@ -239,7 +239,7 @@ fn party_main(
                 let tseed = (ti as u128 + 1) << 16;
 
                 // S1 tile — the norm row rides tile 0's flight.
-                let t0 = Instant::now();
+                let t0 = Timer::started();
                 let off0 = store.inner().secs;
                 let dem0 = store.demand.mark();
                 let d_tile = {
@@ -260,11 +260,11 @@ fn party_main(
                     let u = u_row.as_ref().expect("norm row resolves with tile 0");
                     esd::dprime_from_parts(u, &xmu_p.resolve(&mut ctx))
                 };
-                steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                steps.s1_distance += t0.secs() - (store.inner().secs - off0);
                 step_demands[0].extend(&store.demand.delta_since(&dem0));
 
                 // S2 tile.
-                let t0 = Instant::now();
+                let t0 = Timer::started();
                 let off0 = store.inner().secs;
                 let dem0 = store.demand.mark();
                 let c_tile = {
@@ -278,11 +278,11 @@ fn party_main(
                 for i in r0..r1 {
                     c_share.row_mut(i).copy_from_slice(c_tile.row(i - r0));
                 }
-                steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                steps.s2_assign += t0.secs() - (store.inner().secs - off0);
                 step_demands[1].extend(&store.demand.delta_since(&dem0));
 
                 // S3 tile — accumulate the numerator contribution.
-                let t0 = Instant::now();
+                let t0 = Timer::started();
                 let off0 = store.inner().secs;
                 let dem0 = store.demand.mark();
                 {
@@ -294,12 +294,12 @@ fn party_main(
                     ctx.flush();
                     num_acc = num_acc.add(&num_p.resolve(&mut ctx));
                 }
-                steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+                steps.s3_update += t0.secs() - (store.inner().secs - off0);
                 step_demands[2].extend(&store.demand.delta_since(&dem0));
             }
 
             // S3 tail: empty-cluster fallback + the single division.
-            let t0 = Instant::now();
+            let t0 = Timer::started();
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             let mu_new = {
@@ -313,7 +313,7 @@ fn party_main(
                     &mu,
                 )
             };
-            steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            steps.s3_update += t0.secs() - (store.inner().secs - off0);
             step_demands[2].extend(&store.demand.delta_since(&dem0));
             mu_new
         } else {
@@ -322,7 +322,7 @@ fn party_main(
 
             // S1 — distance: norm square + every tile's cross products,
             // one flight on the Beaver path.
-            let t0 = Instant::now();
+            let t0 = Timer::started();
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             let d_tiles: Vec<Mat> = {
@@ -345,12 +345,12 @@ fn party_main(
                     .map(|p| esd::dprime_from_parts(&u_row, &p.resolve(&mut ctx)))
                     .collect()
             };
-            steps.s1_distance += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            steps.s1_distance += t0.secs() - (store.inner().secs - off0);
             step_demands[0].extend(&store.demand.delta_since(&dem0));
 
             // S2 — assignment: ⌈log₂ k⌉ levels of CMP + fused MUX, all
             // tiles' lanes in lockstep per level.
-            let t0 = Instant::now();
+            let t0 = Timer::started();
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             {
@@ -360,14 +360,14 @@ fn party_main(
                 let (c_new, _minvals) = assign::min_k_tiles(&mut ctx, &d_tiles);
                 c_share = c_new;
             }
-            steps.s2_assign += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            steps.s2_assign += t0.secs() - (store.inner().secs - off0);
             step_demands[1].extend(&store.demand.delta_since(&dem0));
 
             // S3 — update: every tile's numerator reveals coalesce into
             // the division prep (empty-cluster comparison), the resolved
             // k×d contributions sum, then one fused MUX flight and one
             // division.
-            let t0 = Instant::now();
+            let t0 = Timer::started();
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             let mu_new = {
@@ -388,7 +388,7 @@ fn party_main(
                     .collect();
                 update::finish_update_tiles(&mut ctx, nums, &c_share.col_sums(), &mu)
             };
-            steps.s3_update += t0.elapsed().as_secs_f64() - (store.inner().secs - off0);
+            steps.s3_update += t0.secs() - (store.inner().secs - off0);
             step_demands[2].extend(&store.demand.delta_since(&dem0));
             mu_new
         };
@@ -441,7 +441,7 @@ fn party_main(
         demand: store.demand.clone(),
         ledger: store.ledger(),
         offline_secs: store.inner().secs,
-        wall: t_start.elapsed().as_secs_f64(),
+        wall: t_start.secs(),
         steps,
         iters,
         tiles: tiles.len(),

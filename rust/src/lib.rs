@@ -78,6 +78,7 @@
 #![warn(missing_docs)]
 
 pub mod util;
+pub mod lint;
 pub mod ring;
 #[allow(missing_docs)]
 pub mod net;

@@ -1,0 +1,127 @@
+//! `lint.rules` — scope policy for the rule catalog, in the repo's
+//! scenario key=value format.
+//!
+//! Rules are code ([`super::rules::default_rules`]); *scopes* are
+//! policy, and policy belongs in a reviewable text file at the repo
+//! root rather than in a recompile. The format is the same line-based
+//! `key = value` layout the deployment scenarios use (`scenarios/*.scn`,
+//! parsed by `coordinator::remote`): `#` starts a comment, blank lines
+//! are ignored, and every key names the rule it re-scopes:
+//!
+//! ```text
+//! # Where HashMap/HashSet are banned.
+//! scope.no-unordered-iteration = ss offline kmeans mkmeans serve net runtime
+//! # Where wall-clock reads are allowed.
+//! allow.no-wallclock-in-protocol = util::timer net::shape offline::timed bench main
+//! # Subtree escape hatch (use sparingly; prefer inline lint:allow).
+//! exempt.no-rogue-threads =
+//! ```
+//!
+//! * `scope.<rule>` **replaces** the banned-subtree list of a
+//!   [`Scope::BannedIn`] rule;
+//! * `allow.<rule>` **replaces** the allowed-subtree list of a
+//!   [`Scope::ConfinedTo`] rule;
+//! * `exempt.<rule>` appends exempted subtrees to any rule.
+//!
+//! Values are whitespace-separated module-path prefixes (`offline`
+//! covers `offline::store`). Mismatched key kinds, unknown keys and
+//! unknown rule ids are hard errors — a typo must fail the lint run,
+//! not silently widen a scope.
+
+use super::rules::{Rule, Scope};
+use crate::util::error::{Error, Result};
+
+/// Parse a `lint.rules` document and apply it to the rule catalog.
+///
+/// `rules` is mutated in place; the function is total — either every
+/// line applies or a typed [`Error::Config`] names the offending line.
+pub fn apply(text: &str, rules: &mut [Rule]) -> Result<()> {
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lno = idx + 1;
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(Error::Config(format!(
+                "lint.rules:{lno}: expected `key = value`, got `{line}`"
+            )));
+        };
+        let key = key.trim();
+        let mods: Vec<String> = value.split_whitespace().map(|s| s.to_string()).collect();
+        let Some((kind, rule_id)) = key.split_once('.') else {
+            return Err(Error::Config(format!(
+                "lint.rules:{lno}: key `{key}` is not `scope.<rule>`, `allow.<rule>` \
+                 or `exempt.<rule>`"
+            )));
+        };
+        let Some(rule) = rules.iter_mut().find(|r| r.id == rule_id) else {
+            return Err(Error::Config(format!(
+                "lint.rules:{lno}: unknown rule `{rule_id}`"
+            )));
+        };
+        match (kind, &mut rule.scope) {
+            ("scope", Scope::BannedIn(list)) => *list = mods,
+            ("allow", Scope::ConfinedTo(list)) => *list = mods,
+            ("exempt", _) => rule.exempt.extend(mods),
+            ("scope", Scope::ConfinedTo(_)) => {
+                return Err(Error::Config(format!(
+                    "lint.rules:{lno}: `{rule_id}` is a confined rule — use \
+                     `allow.{rule_id}` to list the permitted subtrees"
+                )))
+            }
+            ("allow", Scope::BannedIn(_)) => {
+                return Err(Error::Config(format!(
+                    "lint.rules:{lno}: `{rule_id}` is a banned-in rule — use \
+                     `scope.{rule_id}` to list the banned subtrees"
+                )))
+            }
+            (other, _) => {
+                return Err(Error::Config(format!(
+                    "lint.rules:{lno}: unknown directive `{other}.` (want scope/allow/exempt)"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::rules::default_rules;
+
+    #[test]
+    fn rescopes_banned_and_confined_rules() {
+        let mut rules = default_rules();
+        let text = "# comment\n\nscope.no-unordered-iteration = ss net\n\
+                    allow.no-wallclock-in-protocol = util::timer\n\
+                    exempt.no-rogue-threads = mkmeans::legacy\n";
+        apply(text, &mut rules).unwrap();
+        let r = rules.iter().find(|r| r.id == "no-unordered-iteration").unwrap();
+        assert_eq!(r.scope, Scope::BannedIn(vec!["ss".into(), "net".into()]));
+        let w = rules.iter().find(|r| r.id == "no-wallclock-in-protocol").unwrap();
+        assert_eq!(w.scope, Scope::ConfinedTo(vec!["util::timer".into()]));
+        let t = rules.iter().find(|r| r.id == "no-rogue-threads").unwrap();
+        assert_eq!(t.exempt, vec!["mkmeans::legacy".to_string()]);
+    }
+
+    #[test]
+    fn typos_are_hard_errors() {
+        let mut rules = default_rules();
+        assert!(apply("scope.no-such-rule = net", &mut rules).is_err());
+        assert!(apply("banish.no-rogue-threads = net", &mut rules).is_err());
+        assert!(apply("no equals sign here", &mut rules).is_err());
+        // Kind mismatch: confined rules take `allow`, not `scope`.
+        assert!(apply("scope.no-rogue-threads = runtime::pool", &mut rules).is_err());
+        assert!(apply("allow.no-panic-in-wire-paths = net", &mut rules).is_err());
+    }
+
+    #[test]
+    fn empty_value_clears_a_list() {
+        let mut rules = default_rules();
+        apply("allow.no-wallclock-in-protocol =", &mut rules).unwrap();
+        let w = rules.iter().find(|r| r.id == "no-wallclock-in-protocol").unwrap();
+        assert_eq!(w.scope, Scope::ConfinedTo(vec![]));
+    }
+}

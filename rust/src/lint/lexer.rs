@@ -1,0 +1,386 @@
+//! Comment/string-aware line lexer for the protocol-invariant linter.
+//!
+//! `ppkm-lint` matches *tokens* against source lines, so the one thing
+//! the lexer must get right is never letting a token inside a comment,
+//! a string literal, or a char literal produce a finding: a rustdoc
+//! example mentioning `HashMap`, an error message containing
+//! `".unwrap()"`, or a raw string holding a whole fixture file must all
+//! be invisible to the rules. The lexer therefore rewrites each source
+//! line into a *code skeleton* — comments stripped, string/char literal
+//! **contents** blanked to spaces (the delimiting quotes stay, so
+//! columns keep their meaning) — and the rule engine only ever looks at
+//! the skeleton.
+//!
+//! Three pieces of real Rust syntax make this harder than a regex:
+//!
+//! * **nested block comments** — `/* outer /* inner */ still out */` is
+//!   one comment; the lexer tracks the nesting depth;
+//! * **raw strings** — `r"…"`, `r#"…"#` (any hash count) and their
+//!   byte-string forms do not process escapes, and the body may contain
+//!   `"` freely; the closing delimiter is `"` followed by the same hash
+//!   count;
+//! * **char literals vs lifetimes** — `'a'` is a literal but `'a` in
+//!   `&'a str` is a lifetime; the lexer uses the standard two-character
+//!   lookahead disambiguation (a `'` starts a literal iff the next char
+//!   is a backslash or the char after next is a closing `'`).
+//!
+//! The lexer also performs the two line-level extractions the rule
+//! engine needs: `lint:allow(rule-id)` suppression markers found inside
+//! line comments (with their mandatory justification text), and
+//! `#[cfg(test)]`-region tracking via brace depth, so test-only code is
+//! exempt from the rules without any per-rule special casing.
+
+/// An inline suppression marker parsed from a line comment:
+/// `// lint:allow(rule-id): justification`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// The rule id inside the parentheses.
+    pub rule: String,
+    /// Whether a non-empty justification follows the marker — a bare
+    /// `lint:allow(rule)` with no `: why` text does **not** suppress.
+    pub justified: bool,
+}
+
+/// One source line after lexing.
+#[derive(Debug, Clone)]
+pub struct LexedLine {
+    /// 1-based line number in the source file.
+    pub line_no: usize,
+    /// The code skeleton: comments removed, string/char literal
+    /// contents blanked to spaces, everything else verbatim.
+    pub code: String,
+    /// Suppression markers found in this line's comments.
+    pub allows: Vec<Allow>,
+    /// Whether the line sits inside a `#[cfg(test)]` region (the
+    /// attribute line itself and the braced item it gates).
+    pub in_test: bool,
+}
+
+/// Lexer state carried across lines.
+enum State {
+    /// Plain code.
+    Normal,
+    /// Inside a block comment at the given nesting depth.
+    Block(usize),
+    /// Inside a normal (escaped) string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` + this many `#`s.
+    RawStr(usize),
+}
+
+/// Scan a comment's text for `lint:allow(rule-id)` markers and append
+/// them to `allows`. A marker is justified when a `:` follows the
+/// closing parenthesis with non-whitespace text after it.
+fn scan_allows(comment: &str, allows: &mut Vec<Allow>) {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("lint:allow(") {
+        let after = &rest[pos + "lint:allow(".len()..];
+        let Some(close) = after.find(')') else { return };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let justified = tail
+            .strip_prefix(':')
+            .map(|t| !t.trim().is_empty())
+            .unwrap_or(false);
+        if !rule.is_empty() {
+            allows.push(Allow { rule, justified });
+        }
+        rest = tail;
+    }
+}
+
+/// Lex a whole source file into per-line code skeletons.
+///
+/// The returned lines are in file order and cover every input line
+/// (blank and comment-only lines produce empty/whitespace skeletons).
+pub fn lex(source: &str) -> Vec<LexedLine> {
+    let mut lines = Vec::new();
+    let mut state = State::Normal;
+    for (idx, raw) in source.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut allows = Vec::new();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                State::Block(depth) => {
+                    if chars[i] == '*' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                        state = if depth == 1 { State::Normal } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if chars[i] == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                State::Str => {
+                    if chars[i] == '\\' {
+                        // Escape: blank both chars, never close on \".
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                    continue;
+                }
+                State::RawStr(hashes) => {
+                    if chars[i] == '"' && i + hashes < chars.len() {
+                        let closes = (1..=hashes).all(|h| chars[i + h] == '#');
+                        if closes {
+                            code.push('"');
+                            for _ in 0..hashes {
+                                code.push('#');
+                            }
+                            state = State::Normal;
+                            i += 1 + hashes;
+                            continue;
+                        }
+                    } else if chars[i] == '"' && hashes == 0 {
+                        code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                        continue;
+                    }
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                State::Normal => {}
+            }
+            let c = chars[i];
+            // Line comment: scan the remainder for allow markers, drop it.
+            if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                let comment: String = chars[i..].iter().collect();
+                scan_allows(&comment, &mut allows);
+                break;
+            }
+            // Block comment start.
+            if c == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+                state = State::Block(1);
+                i += 2;
+                continue;
+            }
+            // Raw (byte) string start: r"…", r#"…"#, br"…", br#"…"# —
+            // only when the `r` does not end an identifier.
+            if c == 'r' || (c == 'b' && i + 1 < chars.len() && chars[i + 1] == 'r') {
+                let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                let r_at = if c == 'b' { i + 1 } else { i };
+                if !prev_ident && r_at < chars.len() && chars[r_at] == 'r' {
+                    let mut j = r_at + 1;
+                    let mut hashes = 0;
+                    while j < chars.len() && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < chars.len() && chars[j] == '"' {
+                        for &p in &chars[i..=j] {
+                            code.push(p);
+                        }
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                }
+            }
+            // Normal (or byte) string start.
+            if c == '"' || (c == 'b' && i + 1 < chars.len() && chars[i + 1] == '"') {
+                if c == 'b' {
+                    code.push('b');
+                    i += 1;
+                }
+                code.push('"');
+                state = State::Str;
+                i += 1;
+                continue;
+            }
+            // Char literal vs lifetime: a `'` begins a literal iff the
+            // next char is a backslash, or the char after next is the
+            // closing `'` (so `'a'` is a literal, `'a` in `&'a T` is a
+            // lifetime and passes through untouched).
+            if c == '\'' {
+                let is_escape = i + 1 < chars.len() && chars[i + 1] == '\\';
+                let is_plain = i + 2 < chars.len() && chars[i + 2] == '\'' && chars[i + 1] != '\'';
+                if is_escape {
+                    code.push('\'');
+                    let mut j = i + 1;
+                    // Blank to the closing quote (handles \n, \u{…}, \\).
+                    while j < chars.len() {
+                        if chars[j] == '\\' {
+                            code.push(' ');
+                            code.push(' ');
+                            j += 2;
+                            continue;
+                        }
+                        if chars[j] == '\'' {
+                            code.push('\'');
+                            j += 1;
+                            break;
+                        }
+                        code.push(' ');
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+                if is_plain {
+                    code.push('\'');
+                    code.push(' ');
+                    code.push('\'');
+                    i += 3;
+                    continue;
+                }
+                // Lifetime (or stray quote): pass through.
+                code.push('\'');
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        lines.push(LexedLine { line_no: idx + 1, code, allows, in_test: false });
+    }
+    mark_test_regions(&mut lines);
+    lines
+}
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item.
+///
+/// A pending flag is raised when a skeleton contains the attribute
+/// (including `#[cfg(all(test, …))]`); the region opens at the next `{`
+/// and closes when the brace depth returns to its pre-region value.
+/// Nested `#[cfg(test)]` inside an active region is subsumed.
+fn mark_test_regions(lines: &mut [LexedLine]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    // Brace depth the enclosing test region opened at, if any.
+    let mut region_floor: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if region_floor.is_none()
+            && (line.code.contains("#[cfg(test)") || line.code.contains("#[cfg(all(test"))
+        {
+            pending = true;
+        }
+        if pending || region_floor.is_some() {
+            line.in_test = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    if pending && region_floor.is_none() {
+                        region_floor = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(floor) = region_floor {
+                        if depth <= floor {
+                            region_floor = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skeletons(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_stripped() {
+        let s = skeletons("let x = 1; // HashMap here\nlet y = 2;");
+        assert!(!s[0].contains("HashMap"));
+        assert!(s[0].contains("let x = 1;"));
+        assert_eq!(s[1], "let y = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let src = "a(); /* outer /* inner */ still */ b();\n/* open\nstill comment\n*/ c();";
+        let s = skeletons(src);
+        assert!(s[0].contains("a();") && s[0].contains("b();"));
+        assert!(!s[0].contains("inner"));
+        assert!(!s[2].contains("still"));
+        assert!(s[3].contains("c();"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let s = skeletons(r#"let m = "HashMap::new()"; call();"#);
+        assert!(!s[0].contains("HashMap"));
+        assert!(s[0].contains("call();"));
+        // The quotes themselves survive so columns stay meaningful.
+        assert_eq!(s[0].matches('"').count(), 2);
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_close_strings() {
+        let s = skeletons(r#"let m = "say \"Instant::now\" loud"; x();"#);
+        assert!(!s[0].contains("Instant"));
+        assert!(s[0].contains("x();"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let m = r#\"thread::spawn \" inner \"#; y();";
+        let s = skeletons(src);
+        assert!(!s[0].contains("thread::spawn"));
+        assert!(s[0].contains("y();"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let s = skeletons("fn f<'a>(x: &'a str) -> char { 'T' }");
+        assert!(s[0].contains("<'a>"));
+        assert!(s[0].contains("&'a str"));
+        assert!(!s[0].contains("'T'"));
+        let s = skeletons(r"let c = '\n'; let q = '\''; g();");
+        assert!(s[0].contains("let q ="), "escaped char literal must close correctly");
+        assert!(s[0].contains("g();"), "escaped-quote literal must not swallow the rest");
+    }
+
+    #[test]
+    fn allow_markers_parse_with_justification() {
+        let lines = lex("x(); // lint:allow(no-rogue-threads): service thread, joined at exit");
+        assert_eq!(lines[0].allows.len(), 1);
+        assert_eq!(lines[0].allows[0].rule, "no-rogue-threads");
+        assert!(lines[0].allows[0].justified);
+        let lines = lex("x(); // lint:allow(no-rogue-threads)");
+        assert!(!lines[0].allows[0].justified, "bare allow must not count as justified");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test, "the attribute line itself");
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test, "closing brace still in region");
+        assert!(!lines[5].in_test, "code after the region is live again");
+    }
+
+    #[test]
+    fn cfg_test_in_string_does_not_open_a_region() {
+        let src = "let s = \"#[cfg(test)]\";\nfn live() { y(); }";
+        let lines = lex(src);
+        assert!(!lines[1].in_test);
+    }
+}

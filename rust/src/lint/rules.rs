@@ -1,0 +1,350 @@
+//! The protocol-invariant rule catalog and the matching engine.
+//!
+//! Each rule is a set of forbidden tokens plus a **module-path scope**
+//! telling the engine where the tokens are forbidden. Two scope shapes
+//! cover every invariant this repo cares about:
+//!
+//! * [`Scope::BannedIn`] — the tokens are forbidden *inside* the listed
+//!   module subtrees (e.g. `HashMap` in protocol-state modules);
+//! * [`Scope::ConfinedTo`] — the tokens are forbidden *everywhere
+//!   except* the listed subtrees (e.g. `Instant::now` confined to
+//!   `util::timer`, `net::shape` and the bench/report layer).
+//!
+//! Scopes ship with built-in defaults (see [`default_rules`]) and are
+//! overridable from the `lint.rules` config file
+//! ([`super::config`]); per-site escapes use the
+//! `// lint:allow(rule-id): justification` marker parsed by the lexer.
+//! An allow **without** a justification does not suppress — it turns
+//! into a finding of its own, so every escape hatch is documented at
+//! the point of use. The rule rationale lives in
+//! `docs/STATIC_ANALYSIS.md`.
+
+use super::lexer::LexedLine;
+
+/// Where a rule's tokens are forbidden, as module-path prefixes
+/// (`offline` covers `offline::store`; `serve::driver` covers exactly
+/// that subtree).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Scope {
+    /// Forbidden inside these subtrees, allowed elsewhere.
+    BannedIn(Vec<String>),
+    /// Forbidden everywhere *except* these subtrees.
+    ConfinedTo(Vec<String>),
+}
+
+/// One named protocol invariant.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    /// Stable id, used in findings, `lint:allow(…)` and `lint.rules`.
+    pub id: &'static str,
+    /// One-line statement of the invariant (shown with every finding).
+    pub summary: &'static str,
+    /// Forbidden tokens. Tokens that start/end with an identifier
+    /// character are matched with word boundaries, so `Instant` never
+    /// fires inside `Instantaneous`.
+    pub tokens: Vec<&'static str>,
+    /// Where the tokens are forbidden.
+    pub scope: Scope,
+    /// Extra exempted module prefixes (from `lint.rules` `exempt.*`
+    /// keys) — subtrees where this rule is silenced even in scope.
+    pub exempt: Vec<String>,
+}
+
+/// One rule violation (or an unjustified suppression of one).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// The violated rule's id.
+    pub rule: &'static str,
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The token that matched.
+    pub token: String,
+    /// Extra context (e.g. a note that a suppression lacked its
+    /// justification). Empty for a plain violation.
+    pub note: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}:{}: `{}`", self.rule, self.file, self.line, self.token)?;
+        if !self.note.is_empty() {
+            write!(f, " ({})", self.note)?;
+        }
+        Ok(())
+    }
+}
+
+/// The built-in rule catalog with its default scopes. The `lint.rules`
+/// config file can re-scope every rule but cannot invent new ones —
+/// rules are code, scopes are policy.
+pub fn default_rules() -> Vec<Rule> {
+    let paths = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    vec![
+        Rule {
+            id: "no-unordered-iteration",
+            summary: "HashMap/HashSet iteration order is nondeterministic; protocol \
+                      state must use ordered containers (BTreeMap/Vec) so transcripts \
+                      and snapshots replay bit-identically",
+            tokens: vec!["HashMap", "HashSet"],
+            scope: Scope::BannedIn(paths(&[
+                "ss", "offline", "kmeans", "mkmeans", "serve", "net", "runtime",
+            ])),
+            exempt: vec![],
+        },
+        Rule {
+            id: "no-wallclock-in-protocol",
+            summary: "wall-clock reads are confined to the timer/shaper/bench layer; \
+                      share and reveal computation must never observe time",
+            tokens: vec!["Instant", "SystemTime"],
+            scope: Scope::ConfinedTo(paths(&[
+                "util::timer",
+                "net::shape",
+                "offline::timed",
+                "bench",
+                "main",
+            ])),
+            exempt: vec![],
+        },
+        Rule {
+            id: "no-rogue-threads",
+            summary: "threads are created only by runtime::pool, the one fan-out site \
+                      whose determinism contract (index-ordered writeback, \
+                      thread-count-independent outputs) is regression-tested",
+            tokens: vec!["thread::spawn", "thread::Builder", "thread::scope", "spawn_scoped"],
+            scope: Scope::ConfinedTo(paths(&["runtime::pool"])),
+            exempt: vec![],
+        },
+        Rule {
+            id: "no-unmetered-io",
+            summary: "raw sockets live only inside net/, so every wire byte rides the \
+                      Meter and flight/byte budgets stay exact",
+            tokens: vec!["TcpStream", "TcpListener", "UdpSocket"],
+            scope: Scope::ConfinedTo(paths(&["net"])),
+            exempt: vec![],
+        },
+        Rule {
+            id: "no-ambient-entropy",
+            summary: "all randomness flows from the seeded PRG (util::prng); OS \
+                      entropy or hasher randomization would break transcript replay",
+            tokens: vec![
+                "RandomState",
+                "thread_rng",
+                "OsRng",
+                "getrandom",
+                "from_entropy",
+                "SystemRandom",
+            ],
+            scope: Scope::ConfinedTo(vec![]),
+            exempt: vec![],
+        },
+        Rule {
+            id: "no-panic-in-wire-paths",
+            summary: "wire-facing code returns typed Errors (a misbehaving peer must \
+                      yield a clean process exit, not a panic); asserts on local \
+                      invariants are fine",
+            tokens: vec![
+                ".unwrap()",
+                ".expect(",
+                "panic!",
+                "unreachable!",
+                "todo!",
+                "unimplemented!",
+            ],
+            scope: Scope::BannedIn(paths(&["net", "serve::driver"])),
+            exempt: vec![],
+        },
+    ]
+}
+
+/// Whether `module` (e.g. `net::tcp`) falls under `prefix` (`net`).
+fn under(module: &str, prefix: &str) -> bool {
+    module == prefix || module.starts_with(&format!("{prefix}::"))
+}
+
+/// Whether a rule applies to a module at all, given its scope and
+/// exemptions.
+pub fn in_scope(rule: &Rule, module: &str) -> bool {
+    if rule.exempt.iter().any(|p| under(module, p)) {
+        return false;
+    }
+    match &rule.scope {
+        Scope::BannedIn(mods) => mods.iter().any(|p| under(module, p)),
+        Scope::ConfinedTo(mods) => !mods.iter().any(|p| under(module, p)),
+    }
+}
+
+/// Is `c` part of an identifier (for word-boundary checks)?
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find `token` in `code` respecting word boundaries on whichever ends
+/// of the token are identifier characters.
+fn token_hits(code: &str, token: &str) -> bool {
+    let first_ident = token.chars().next().map(is_ident).unwrap_or(false);
+    let last_ident = token.chars().last().map(is_ident).unwrap_or(false);
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(token) {
+        let at = start + pos;
+        let left_ok = !first_ident
+            || at == 0
+            || !code[..at].chars().next_back().map(is_ident).unwrap_or(false);
+        let right_ok = !last_ident
+            || !code[at + token.len()..].chars().next().map(is_ident).unwrap_or(false);
+        if left_ok && right_ok {
+            return true;
+        }
+        start = at + token.len().max(1);
+    }
+    false
+}
+
+/// Run every in-scope rule over a lexed file.
+///
+/// `file` is the repo-relative path used in findings; `module` is the
+/// crate module path (`offline::store`). Suppressions apply to the
+/// marker's own line and to the line directly below it (so a marker
+/// can sit on its own line above the offending statement); a marker
+/// with no justification never suppresses and instead surfaces as a
+/// finding, keeping "silent" escapes impossible.
+pub fn check_lines(
+    rules: &[Rule],
+    file: &str,
+    module: &str,
+    lines: &[LexedLine],
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for rule in rules {
+        if !in_scope(rule, module) {
+            continue;
+        }
+        for (idx, line) in lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let Some(token) = rule.tokens.iter().find(|t| token_hits(&line.code, t)) else {
+                continue;
+            };
+            // An allow on this line or the line above covers the hit.
+            let find_allow = |l: &LexedLine| {
+                l.allows.iter().find(|a| a.rule == rule.id).cloned()
+            };
+            let relevant = find_allow(line)
+                .or_else(|| idx.checked_sub(1).and_then(|p| find_allow(&lines[p])));
+            match relevant {
+                Some(a) if a.justified => continue,
+                Some(_) => findings.push(Finding {
+                    rule: rule.id,
+                    file: file.to_string(),
+                    line: line.line_no,
+                    token: (*token).to_string(),
+                    note: "suppressed without a justification — write \
+                           `lint:allow(rule): why`"
+                        .into(),
+                }),
+                None => findings.push(Finding {
+                    rule: rule.id,
+                    file: file.to_string(),
+                    line: line.line_no,
+                    token: (*token).to_string(),
+                    note: String::new(),
+                }),
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn rule(id: &str) -> Rule {
+        default_rules().into_iter().find(|r| r.id == id).unwrap()
+    }
+
+    #[test]
+    fn scope_prefix_matching() {
+        let r = rule("no-unordered-iteration");
+        assert!(in_scope(&r, "offline::store"));
+        assert!(in_scope(&r, "net"));
+        assert!(!in_scope(&r, "fraud::jaccard"), "fraud is outside the banned set");
+        assert!(!in_scope(&r, "cli"));
+        let w = rule("no-wallclock-in-protocol");
+        assert!(!in_scope(&w, "util::timer"));
+        assert!(!in_scope(&w, "net::shape"));
+        assert!(in_scope(&w, "net::tcp"), "confinement is per-subtree, not per-layer");
+        assert!(in_scope(&w, "kmeans::secure"));
+    }
+
+    #[test]
+    fn word_boundaries_protect_longer_identifiers() {
+        assert!(token_hits("let t = Instant::now();", "Instant"));
+        assert!(!token_hits("let t = Instantaneous::now();", "Instant"));
+        assert!(token_hits("x.unwrap()", ".unwrap()"));
+        assert!(!token_hits("x.unwrap_or(0)", ".unwrap()"));
+        assert!(!token_hits("x.unwrap_or_default()", ".unwrap()"));
+        assert!(token_hits("x.expect(\"msg\")", ".expect("));
+        assert!(!token_hits("x.expect_err(\"msg\")", ".expect("));
+        assert!(token_hits("core::panic!(\"x\")", "panic!"));
+        assert!(!token_hits("should_panic", "panic!"));
+    }
+
+    #[test]
+    fn findings_name_rule_file_and_line() {
+        let lines = lex("use std::collections::HashMap;\nfn f() {}\n");
+        let f = check_lines(&default_rules(), "src/offline/store.rs", "offline::store", &lines);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "no-unordered-iteration");
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[0].token, "HashMap");
+        let shown = f[0].to_string();
+        assert!(shown.contains("src/offline/store.rs:1"), "{shown}");
+    }
+
+    #[test]
+    fn justified_allow_suppresses_unjustified_does_not() {
+        let src = "let x = q.pop(); // lint:allow(no-panic-in-wire-paths): single \
+                   sanctioned abort\nlet y = z.unwrap();";
+        let lines = lex(&format!("{}{}", "x.unwrap(); ", src));
+        let f = check_lines(&default_rules(), "src/net/a.rs", "net::a", &lines);
+        // Line 1 has an unsuppressed unwrap AND a justified allow (for
+        // pop — rule matches the unwrap token on the same line, so the
+        // allow covers it); line 2 is covered by the line-above marker.
+        assert!(f.is_empty(), "{f:?}");
+        let lines = lex("z.unwrap(); // lint:allow(no-panic-in-wire-paths)");
+        let f = check_lines(&default_rules(), "src/net/a.rs", "net::a", &lines);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].note.contains("without a justification"));
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}";
+        let f = check_lines(&default_rules(), "src/net/a.rs", "net::a", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn asserts_and_sleep_are_not_violations() {
+        let src = "assert_eq!(a, b);\nassert!(x > 0, \"msg\");\nstd::thread::sleep(d);";
+        let f = check_lines(&default_rules(), "src/net/a.rs", "net::a", &lex(src));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn exempt_prefix_silences_a_rule() {
+        let mut rules = default_rules();
+        for r in &mut rules {
+            if r.id == "no-wallclock-in-protocol" {
+                r.exempt.push("kmeans::legacy".into());
+            }
+        }
+        let lines = lex("use std::time::Instant;");
+        assert!(check_lines(&rules, "f", "kmeans::legacy::x", &lines).is_empty());
+        assert_eq!(check_lines(&rules, "f", "kmeans::secure", &lines).len(), 1);
+    }
+}

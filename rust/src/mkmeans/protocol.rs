@@ -14,13 +14,13 @@ use crate::net::{duplex_pair, Chan, Meter};
 use crate::offline::gilboa::OtTripleGen;
 use crate::offline::iknp::{setup_receiver, setup_sender, IknpReceiver, IknpSender};
 use crate::ring::matrix::Mat;
+use crate::runtime::pool::run_pair;
 use crate::ss::boolean::b2a;
 use crate::ss::share::reconstruct;
 use crate::ss::Session;
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
-use std::thread;
-use std::time::Instant;
+use crate::util::timer::timed;
 
 /// M-Kmeans run parameters.
 #[derive(Debug, Clone)]
@@ -136,23 +136,18 @@ pub fn run_vertical(data: &Dataset, cfg: &MkmeansConfig) -> Result<MkmeansOutput
     let (o0, o1) = duplex_pair();
     let cfg_a = cfg.clone();
     let cfg_b = cfg.clone();
-    let t0 = Instant::now();
-    let h0 = thread::Builder::new()
-        .stack_size(64 << 20)
-        .spawn(move || {
-            let r = party_main(&mut p0, o0, xa, n, d, &cfg_a);
-            (r, p0.into_meter())
-        })
-        .expect("spawn");
-    let h1 = thread::Builder::new()
-        .stack_size(64 << 20)
-        .spawn(move || {
-            let r = party_main(&mut p1, o1, xb, n, d, &cfg_b);
-            (r, p1.into_meter())
-        })
-        .expect("spawn");
-    let ((ra, ma), (rb, mb)) = (h0.join().expect("p0"), h1.join().expect("p1"));
-    let wall = t0.elapsed().as_secs_f64();
+    let (((ra, ma), (rb, mb)), wall) = timed(|| {
+        run_pair(
+            move || {
+                let r = party_main(&mut p0, o0, xa, n, d, &cfg_a);
+                (r, p0.into_meter())
+            },
+            move || {
+                let r = party_main(&mut p1, o1, xb, n, d, &cfg_b);
+                (r, p1.into_meter())
+            },
+        )
+    });
     let (mu, assignments, ot_meter_a) = ra;
     let (_mu_b, _assign_b, ot_meter_b) = rb;
     let bytes_total = ma.total().bytes_sent

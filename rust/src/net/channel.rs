@@ -59,7 +59,27 @@ fn decode_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
             bytes.len()
         )));
     }
-    Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(c);
+            u64::from_le_bytes(w)
+        })
+        .collect())
+}
+
+/// The single justified abort in the wire layer. Protocol internals
+/// treat a dead or misbehaving peer mid-protocol as unrecoverable —
+/// there is no share state to roll back to — so every infallible
+/// `Chan` method funnels its failure here for one loud, attributed
+/// exit. Fallible callers (the deployment handshake, barriers, the
+/// serve driver) use the `try_*` twins and never reach this.
+fn wire_fatal(op: &str, e: Error) -> ! {
+    // Infallible Chan methods funnel unrecoverable mid-protocol wire
+    // failures here; recoverable paths use the try_* twins.
+    // lint:allow(no-panic-in-wire-paths): the one sanctioned wire-layer abort
+    panic!("net::channel {op}: unrecoverable wire failure: {e}")
 }
 
 /// Create a connected pair of in-process endpoints (party 0, party 1).
@@ -203,7 +223,9 @@ impl Chan {
             handle >= self.resolved_base && handle - self.resolved_base < self.resolved.len(),
             "segment {handle} not flushed — call flush_round() first"
         );
-        self.resolved[handle - self.resolved_base].take().expect("segment already taken")
+        self.resolved[handle - self.resolved_base].take().unwrap_or_else(|| {
+            wire_fatal("take_segment", Error::Protocol("segment already taken".into()))
+        })
     }
 
     // ---- Framed transport --------------------------------------------
@@ -243,13 +265,13 @@ impl Chan {
     /// internals treat that as unrecoverable; fallible callers use
     /// [`Chan::try_send_bytes`]).
     pub fn send_bytes(&mut self, bytes: &[u8]) {
-        self.try_send_bytes(bytes).expect("send_bytes");
+        self.try_send_bytes(bytes).unwrap_or_else(|e| wire_fatal("send_bytes", e));
     }
 
     /// Receive the next raw byte message (panicking twin of
     /// [`Chan::try_recv_bytes`]).
     pub fn recv_bytes(&mut self) -> Vec<u8> {
-        self.try_recv_bytes().expect("recv_bytes")
+        self.try_recv_bytes().unwrap_or_else(|e| wire_fatal("recv_bytes", e))
     }
 
     /// Send a vector of ring elements (8 bytes each, little endian).
@@ -271,7 +293,7 @@ impl Chan {
     /// Receive a vector of ring elements (panicking twin of
     /// [`Chan::try_recv_u64s`]).
     pub fn recv_u64s(&mut self) -> Vec<u64> {
-        self.try_recv_u64s().expect("recv_u64s")
+        self.try_recv_u64s().unwrap_or_else(|e| wire_fatal("recv_u64s", e))
     }
 
     /// Send a matrix (shape is protocol-known; only the buffer travels).
@@ -299,7 +321,7 @@ impl Chan {
     /// Receive a matrix with the given (protocol-known) shape
     /// (panicking twin of [`Chan::try_recv_mat`]).
     pub fn recv_mat(&mut self, rows: usize, cols: usize) -> Mat {
-        self.try_recv_mat(rows, cols).expect("recv_mat")
+        self.try_recv_mat(rows, cols).unwrap_or_else(|e| wire_fatal("recv_mat", e))
     }
 
     /// Fallible symmetric exchange of raw bytes (the deployment
@@ -333,7 +355,7 @@ impl Chan {
     /// [`Chan::try_exchange_u64s`] — one implementation, so the flight
     /// ordering cannot drift between handshake and protocol traffic.
     pub fn exchange_u64s(&mut self, xs: &[u64]) -> Vec<u64> {
-        self.try_exchange_u64s(xs).expect("exchange_u64s")
+        self.try_exchange_u64s(xs).unwrap_or_else(|e| wire_fatal("exchange_u64s", e))
     }
 
     /// Symmetric exchange of equal-shape matrices.
@@ -358,6 +380,8 @@ impl Chan {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::thread;
 

@@ -19,6 +19,11 @@
 //! counts those flights exactly (a flight = the first send after a
 //! receive), which is what makes round budgets regression-testable.
 
+// Wire-facing code returns typed errors (ppkm-lint rule
+// no-panic-in-wire-paths); the clippy deny backs the lint at the
+// type-system level across this whole subtree.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod channel;
 pub mod cost;
 pub mod meter;
@@ -31,11 +36,10 @@ pub use meter::{Meter, PhaseStats};
 pub use shape::LinkShaper;
 pub use tcp::TcpTransport;
 
-use std::thread;
-
-/// Run a two-party protocol: spawns one thread per party over an
-/// in-process duplex channel and returns each party's result together
-/// with its communication meter.
+/// Run a two-party protocol: spawns one thread per party (via
+/// [`crate::runtime::pool::run_pair`]) over an in-process duplex
+/// channel and returns each party's result together with its
+/// communication meter.
 ///
 /// ```
 /// use ppkmeans::net::run_two_party;
@@ -54,25 +58,16 @@ where
     F1: FnOnce(&mut Chan) -> R1 + Send + 'static,
 {
     let (mut c0, mut c1) = duplex_pair();
-    let h0 = thread::Builder::new()
-        .name("party0".into())
-        .stack_size(64 << 20)
-        .spawn(move || {
+    crate::runtime::pool::run_pair(
+        move || {
             let r = f0(&mut c0);
             (r, c0.into_meter())
-        })
-        .expect("spawn party0");
-    let h1 = thread::Builder::new()
-        .name("party1".into())
-        .stack_size(64 << 20)
-        .spawn(move || {
+        },
+        move || {
             let r = f1(&mut c1);
             (r, c1.into_meter())
-        })
-        .expect("spawn party1");
-    let r0 = h0.join().expect("party0 panicked");
-    let r1 = h1.join().expect("party1 panicked");
-    (r0, r1)
+        },
+    )
 }
 
 #[cfg(test)]

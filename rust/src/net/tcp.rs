@@ -144,6 +144,8 @@ impl TcpTransport {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::thread;
 

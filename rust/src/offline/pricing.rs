@@ -12,8 +12,9 @@
 use super::gilboa::OtTripleGen;
 use super::store::Demand;
 use crate::net::duplex_pair;
+use crate::runtime::pool::run_pair;
 use crate::ss::triples::TripleSource;
-use std::time::Instant;
+use crate::util::timer::{timed, Timer};
 
 /// IKNP per-OT overhead: 128-bit column correction per OT (receiver) —
 /// 16 bytes; sender ships two masked messages.
@@ -66,26 +67,26 @@ pub struct OtCalibration {
 /// Run the real OT generator on a small batch and measure unit costs.
 pub fn calibrate() -> OtCalibration {
     let (c0, c1) = duplex_pair();
-    let h = std::thread::spawn(move || {
-        let mut g = OtTripleGen::new(c1, 4242);
-        let _ = g.vec_triple(64);
-        let _ = g.bit_triple(4096);
-    });
-    let t0 = Instant::now();
-    let mut g = OtTripleGen::new(c0, 4242);
-    let setup_secs = t0.elapsed().as_secs_f64();
-    let t1 = Instant::now();
-    let _ = g.vec_triple(64); // 2 × 64 × 64 OTs
-    let vec_secs = t1.elapsed().as_secs_f64();
-    let t2 = Instant::now();
-    let _ = g.bit_triple(4096);
-    let bit_secs = t2.elapsed().as_secs_f64();
-    h.join().unwrap();
-    OtCalibration {
-        secs_per_ot: vec_secs / (2.0 * 64.0 * 64.0),
-        secs_per_bit_lane: bit_secs / 4096.0,
-        setup_secs,
-    }
+    let (cal, ()) = run_pair(
+        move || {
+            let t0 = Timer::started();
+            let mut g = OtTripleGen::new(c0, 4242);
+            let setup_secs = t0.secs();
+            let (_, vec_secs) = timed(|| g.vec_triple(64)); // 2 × 64 × 64 OTs
+            let (_, bit_secs) = timed(|| g.bit_triple(4096));
+            OtCalibration {
+                secs_per_ot: vec_secs / (2.0 * 64.0 * 64.0),
+                secs_per_bit_lane: bit_secs / 4096.0,
+                setup_secs,
+            }
+        },
+        move || {
+            let mut g = OtTripleGen::new(c1, 4242);
+            let _ = g.vec_triple(64);
+            let _ = g.bit_triple(4096);
+        },
+    );
+    cal
 }
 
 /// Estimated offline generation wall-clock for a demand.

@@ -10,7 +10,7 @@
 //! keeps `misses == 0`; asserted in tests and benches).
 
 use crate::ss::triples::{BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Offline material demand for one protocol run.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -177,10 +177,14 @@ pub struct DemandMark {
 /// miss.)
 pub struct TripleStore<S: TripleSource> {
     inner: S,
-    mats: HashMap<(usize, usize, usize), VecDeque<MatTriple>>,
-    vecs: HashMap<usize, VecDeque<VecTriple>>,
-    bits: HashMap<usize, VecDeque<BitTriple>>,
-    dabits: HashMap<usize, VecDeque<DaBits>>,
+    // BTreeMap, not HashMap: stock ledgers are iterated for reports and
+    // (in two-process runs) digested into transcripts, so their order
+    // must be a function of the keys alone, never of a per-process
+    // SipHash seed (ppkm-lint rule no-unordered-iteration).
+    mats: BTreeMap<(usize, usize, usize), VecDeque<MatTriple>>,
+    vecs: BTreeMap<usize, VecDeque<VecTriple>>,
+    bits: BTreeMap<usize, VecDeque<BitTriple>>,
+    dabits: BTreeMap<usize, VecDeque<DaBits>>,
     /// Requests that had to fall through to the inner source online.
     pub misses: u64,
     /// Every request seen (hit or miss) — replaying a protocol once with
@@ -194,13 +198,31 @@ impl<S: TripleSource> TripleStore<S> {
     pub fn new(inner: S) -> Self {
         TripleStore {
             inner,
-            mats: HashMap::new(),
-            vecs: HashMap::new(),
-            bits: HashMap::new(),
-            dabits: HashMap::new(),
+            mats: BTreeMap::new(),
+            vecs: BTreeMap::new(),
+            bits: BTreeMap::new(),
+            dabits: BTreeMap::new(),
             misses: 0,
             demand: Demand::default(),
         }
+    }
+
+    /// Current matrix-triple stock as `((m, k, n), count)` pairs, in
+    /// ascending shape order — the order is part of the contract (it
+    /// feeds reports and transcript digests) and is guaranteed by the
+    /// `BTreeMap` ledger regardless of prefill or draw order.
+    pub fn stocked_mat_shapes(&self) -> Vec<((usize, usize, usize), usize)> {
+        self.mats.iter().map(|(&shape, q)| (shape, q.len())).collect()
+    }
+
+    /// Current chunk stock (vector-triple, bit-triple, daBit) as
+    /// `(lanes, count)` pairs per kind, in ascending lane order.
+    pub fn stocked_chunks(&self) -> [Vec<(usize, usize)>; 3] {
+        [
+            self.vecs.iter().map(|(&n, q)| (n, q.len())).collect(),
+            self.bits.iter().map(|(&n, q)| (n, q.len())).collect(),
+            self.dabits.iter().map(|(&n, q)| (n, q.len())).collect(),
+        ]
     }
 
     /// Generate all demanded material now (the offline phase proper),
@@ -345,6 +367,41 @@ mod tests {
         // The stock is now empty: one more of any size is a miss.
         let _ = store.vec_triple(5);
         assert_eq!(store.misses, 1);
+    }
+
+    #[test]
+    fn stock_iteration_order_is_keyed_not_insertion_or_hash_order() {
+        // Regression for the HashMap ledgers the seed used: iterating
+        // stock must yield the same sequence in every process and for
+        // every prefill order, or two-process transcript digests drift.
+        let orders: [&[(usize, usize, usize)]; 3] = [
+            &[(2, 3, 4), (1, 1, 1), (9, 2, 5)],
+            &[(9, 2, 5), (2, 3, 4), (1, 1, 1)],
+            &[(1, 1, 1), (9, 2, 5), (2, 3, 4)],
+        ];
+        let mut snapshots = Vec::new();
+        for shapes in orders {
+            let mut demand = Demand::default();
+            for &(m, k, n) in shapes {
+                demand.mat(m, k, n);
+            }
+            demand.vec_lanes(7);
+            demand.vec_lanes(3);
+            demand.bit_lanes(64);
+            demand.dabit_lanes(9);
+            demand.dabit_lanes(2);
+            let mut store = TripleStore::new(Dealer::new(8, 0));
+            store.prefill(&demand);
+            snapshots.push((store.stocked_mat_shapes(), store.stocked_chunks()));
+        }
+        // Ascending key order, independent of the demand permutation.
+        let want_mats = vec![((1, 1, 1), 1), ((2, 3, 4), 1), ((9, 2, 5), 1)];
+        for (mats, chunks) in &snapshots {
+            assert_eq!(mats, &want_mats);
+            assert_eq!(chunks[0], vec![(3, 1), (7, 1)]);
+            assert_eq!(chunks[1], vec![(64, 1)]);
+            assert_eq!(chunks[2], vec![(2, 1), (9, 1)]);
+        }
     }
 
     #[test]

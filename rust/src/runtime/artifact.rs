@@ -2,7 +2,7 @@
 
 use crate::runtime::xla_stub as xla; // swap for the real `xla` crate to execute
 use crate::util::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// A compiled artifact with its (baked) shapes.
@@ -20,7 +20,10 @@ pub struct Entry {
 /// All compiled artifacts plus the PJRT client that owns them.
 pub struct ArtifactStore {
     pub client: xla::PjRtClient,
-    entries: HashMap<String, Entry>,
+    // BTreeMap so every registry walk (names, by_kind, dispatch probes)
+    // sees the same name order in every process (ppkm-lint rule
+    // no-unordered-iteration).
+    entries: BTreeMap<String, Entry>,
 }
 
 fn parse_shape(s: &str) -> Vec<usize> {
@@ -38,7 +41,7 @@ impl ArtifactStore {
             ))
         })?;
         let client = xla::PjRtClient::cpu()?;
-        let mut entries = HashMap::new();
+        let mut entries = BTreeMap::new();
         for line in text.lines() {
             if line.trim().is_empty() {
                 continue;
@@ -74,15 +77,12 @@ impl ArtifactStore {
     }
 
     pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
+        // BTreeMap keys are already in ascending (sorted) order.
+        self.entries.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Entries of a given kind, sorted by name.
+    /// Entries of a given kind, in name order (the map's key order).
     pub fn by_kind(&self, kind: &str) -> Vec<&Entry> {
-        let mut v: Vec<&Entry> = self.entries.values().filter(|e| e.kind == kind).collect();
-        v.sort_by(|a, b| a.name.cmp(&b.name));
-        v
+        self.entries.values().filter(|e| e.kind == kind).collect()
     }
 }

@@ -54,6 +54,10 @@ mod service {
         let dir: PathBuf = dir.to_path_buf();
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        // The PJRT C API client is pinned to one thread for its lifetime,
+        // so this is a single long-lived service thread, not protocol
+        // fan-out — pool::run_pair/parallel_map only cover scoped spawns.
+        // lint:allow(no-rogue-threads): one long-lived PJRT service thread, not protocol fan-out
         std::thread::Builder::new()
             .name("pjrt-service".into())
             .spawn(move || {

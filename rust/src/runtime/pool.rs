@@ -246,6 +246,41 @@ pub fn matmul_auto(a: &Mat, b: &Mat) -> Mat {
     matmul_with(threads, a, b)
 }
 
+/// Run a two-party protocol pair to completion on dedicated threads,
+/// returning both results: the one sanctioned way to stand up an
+/// in-process two-party run (`run_two_party`, the coordinator's local
+/// scenario runner, the M-Kmeans driver, offline calibration).
+///
+/// The parties get deep stacks (the GC garbler and the bigint tower
+/// recurse) and stable names (`party0`/`party1`, which profilers and
+/// TSan reports show). Scoped spawning means the closures may borrow
+/// from the caller. A panic on either party thread propagates to the
+/// caller as a panic — protocol bugs stay loud.
+pub fn run_pair<R0, R1, F0, F1>(f0: F0, f1: F1) -> (R0, R1)
+where
+    R0: Send,
+    R1: Send,
+    F0: FnOnce() -> R0 + Send,
+    F1: FnOnce() -> R1 + Send,
+{
+    std::thread::scope(|s| {
+        let h0 = std::thread::Builder::new()
+            .name("party0".into())
+            .stack_size(64 << 20)
+            .spawn_scoped(s, f0)
+            .expect("runtime::pool: spawn party0");
+        let h1 = std::thread::Builder::new()
+            .name("party1".into())
+            .stack_size(64 << 20)
+            .spawn_scoped(s, f1)
+            .expect("runtime::pool: spawn party1");
+        (
+            h0.join().expect("party0 panicked"),
+            h1.join().expect("party1 panicked"),
+        )
+    })
+}
+
 /// Sparse·dense product fanned out across row blocks when large enough;
 /// bit-identical to [`Csr::matmul_dense`].
 pub fn csr_matmul_auto(x: &Csr, rhs: &Mat) -> Mat {
@@ -369,6 +404,14 @@ mod tests {
         set_global_threads(0);
         assert_eq!(global_threads(), 1);
         set_global_threads(saved);
+    }
+
+    #[test]
+    fn run_pair_returns_both_sides_and_borrows() {
+        let shared = vec![1u64, 2, 3];
+        let (a, b) = run_pair(|| shared.iter().sum::<u64>(), || shared.len());
+        assert_eq!(a, 6);
+        assert_eq!(b, 3);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! `serve.flag` / `serve.reveal`) captured per batch via
 //! [`PhaseStats::since`].
 
+// The deployment loop faces a real peer over TCP: it must surface
+// typed errors, never panic (ppkm-lint rule no-panic-in-wire-paths).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use super::model::TrainedModel;
 use super::scorer::{ScoreResult, Scorer};
 use crate::data::blobs::Dataset;
@@ -29,7 +33,7 @@ use crate::offline::store::{Demand, TripleStore};
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
 use crate::util::error::{Error, Result};
-use std::time::Instant;
+use crate::util::timer::Timer;
 
 /// Parameters of a serving run.
 #[derive(Debug, Clone)]
@@ -213,7 +217,7 @@ pub fn serve_party(
     model: TrainedModel,
     blocks: Vec<Vec<f64>>,
     cfg: &ServeConfig,
-) -> ServePartyOutput {
+) -> Result<ServePartyOutput> {
     let party = chan.party;
     let (bank_cfg, seed, threads) = (cfg.bank, cfg.seed, cfg.parallelism.threads);
     // Worker count for the per-batch plaintext-side products (see
@@ -241,22 +245,22 @@ pub fn serve_party(
                          chan: &mut Chan,
                          ts: &mut dyn crate::ss::triples::TripleSource,
                          block: &[f64],
-                         t0: Instant|
-     -> (ScoreResult, BatchStats) {
+                         t0: Timer|
+     -> Result<(ScoreResult, BatchStats)> {
         let before = chan.meter().total_prefix("serve.");
-        let r = scorer.score_batch(chan, ts, block).expect("score_batch");
-        let wall = t0.elapsed().as_secs_f64();
+        let r = scorer.score_batch(chan, ts, block)?;
+        let wall = t0.secs();
         let online = chan.meter().total_prefix("serve.").since(&before);
         let stats =
             BatchStats { rows: r.assignments.len(), flagged: r.flagged(), online, wall_secs: wall };
-        (r, stats)
+        Ok((r, stats))
     };
 
     // Batch 0 — the demand probe: an empty recording store falls through
     // to inline generation while logging the exact per-batch demand.
     let mut probe = TripleStore::new(Dealer::new(seed ^ 0x22, party));
-    let t0 = Instant::now();
-    let (r, s) = score_one(&mut scorer, chan, &mut probe, &blocks[0], t0);
+    let t0 = Timer::started();
+    let (r, s) = score_one(&mut scorer, chan, &mut probe, &blocks[0], t0)?;
     results.push(r);
     batch_stats.push(s);
     let per_batch = probe.demand.clone();
@@ -270,14 +274,14 @@ pub fn serve_party(
         threads,
     );
     for block in &blocks[1..] {
-        let t0 = Instant::now();
+        let t0 = Timer::started();
         let ts = bank.checkout();
-        let (r, s) = score_one(&mut scorer, chan, ts, block, t0);
+        let (r, s) = score_one(&mut scorer, chan, ts, block, t0)?;
         results.push(r);
         batch_stats.push(s);
     }
 
-    ServePartyOutput {
+    Ok(ServePartyOutput {
         results,
         batch_stats,
         per_batch_mat_triple_bytes: bank.per_batch_mat_triple_bytes(),
@@ -289,7 +293,7 @@ pub fn serve_party(
         bank_remaining: bank.stock(),
         bank_replenish_events: bank.replenish_events,
         bank_misses: bank.misses(),
-    }
+    })
 }
 
 /// One-party analogue of [`train_model`] for two-process deployments:
@@ -400,6 +404,7 @@ pub fn serve_stream(
         move |c| serve_party(c, ma, blocks_a, &cfg_a),
         move |c| serve_party(c, mb, blocks_b, &cfg_b),
     );
+    let (ra, rb) = (ra?, rb?);
     debug_assert_eq!(ra.results, rb.results, "parties must reveal identical scores");
     debug_assert_eq!(ra.bank_misses + rb.bank_misses, 0, "planned banks must not miss");
     Ok(ServeOutput {

@@ -15,6 +15,15 @@ impl Timer {
         Self::default()
     }
 
+    /// A timer that is already running — the `let t0 = Timer::started()`
+    /// idiom replacing raw `Instant::now()` at telemetry sites, so the
+    /// `Instant` type stays confined to this module.
+    pub fn started() -> Self {
+        let mut t = Self::new();
+        t.start();
+        t
+    }
+
     /// Begin a timing interval (must not already be running).
     pub fn start(&mut self) {
         debug_assert!(self.started.is_none(), "timer already running");

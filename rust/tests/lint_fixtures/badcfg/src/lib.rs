@@ -1,0 +1,1 @@
+//! Empty crate body; only the policy file matters for this fixture.

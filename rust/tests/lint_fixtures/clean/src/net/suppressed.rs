@@ -1,0 +1,10 @@
+//! A justified inline suppression silences the rule at one site.
+
+pub fn last_resort(v: Option<u64>) -> u64 {
+    // lint:allow(no-panic-in-wire-paths): fixture for a justified, documented escape hatch
+    v.unwrap()
+}
+
+pub fn same_line(v: Option<u64>) -> u64 {
+    v.unwrap() // lint:allow(no-panic-in-wire-paths): marker on the offending line itself
+}

@@ -1,0 +1,33 @@
+//! False-positive traps: every token below sits where the lexer must
+//! blank it — a doc line mentioning HashMap and Instant::now() is not
+//! a violation, and neither is anything else in this file.
+
+pub fn fine() -> &'static str {
+    // HashMap in a comment, thread::spawn and .unwrap() too.
+    /* a block comment with panic!("x")
+    spanning lines, mentioning TcpStream */
+    let s = "contains .unwrap() and panic!(\"x\") in a string";
+    let r = r#"raw with "HashMap" and Instant inside"#;
+    let rr = r##"nested hashes: thread::spawn and "quotes" survive"##;
+    let b = b"byte string with thread_rng";
+    let c = 'x'; // a char literal; lifetimes like 'a below must survive
+    fn g<'a>(v: &'a str) -> &'a str {
+        v
+    }
+    let _ = (s, r, rr, b, c);
+    g("ok")
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let mut m = HashMap::new();
+        m.insert(1u64, 2u64);
+        let t0 = std::time::Instant::now();
+        let h = std::thread::spawn(|| m.len());
+        let _ = (t0.elapsed(), h.join());
+    }
+}

@@ -1,0 +1,11 @@
+//! The compliant idioms: ordered containers, no clocks, no threads.
+
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[u64]) -> BTreeMap<u64, u64> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,6 @@
+//! Seeded violation: wall-clock observed inside a protocol step.
+
+pub fn step_wall() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

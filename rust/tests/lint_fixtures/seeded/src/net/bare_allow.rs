@@ -1,0 +1,6 @@
+//! Seeded violation: a suppression without a justification still counts.
+
+pub fn lazy(v: Option<u64>) -> u64 {
+    // lint:allow(no-panic-in-wire-paths)
+    v.unwrap()
+}

@@ -1,0 +1,11 @@
+//! Seeded violation: panics in a wire path.
+
+pub fn recv_one(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("wire broke");
+    }
+}

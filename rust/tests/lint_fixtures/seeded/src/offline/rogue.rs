@@ -1,0 +1,6 @@
+//! Seeded violation: ad-hoc fan-out bypassing runtime::pool.
+
+pub fn fan_out() -> u64 {
+    let h = std::thread::spawn(|| 1 + 1);
+    h.join().unwrap_or(0)
+}

@@ -1,0 +1,5 @@
+//! Seeded violation: an unmetered socket outside net/.
+
+pub fn dial(addr: &str) -> std::io::Result<std::net::TcpStream> {
+    std::net::TcpStream::connect(addr)
+}

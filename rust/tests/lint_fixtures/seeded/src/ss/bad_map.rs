@@ -1,0 +1,11 @@
+//! Seeded violation: protocol state keyed by a hash map.
+
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u64]) -> HashMap<u64, u64> {
+    let mut m = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,6 @@
+//! Seeded violation: ambient OS entropy (the rule applies everywhere).
+
+pub fn nonce() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}
