@@ -1,0 +1,157 @@
+//! Gateway study: many concurrent scoring sessions multiplexed over one
+//! party-pair link, with the sharded background-replenished material
+//! bank. Sweeps the session count under loopback-LAN and WAN link
+//! reporting and emits `BENCH_gateway.json` (throughput + p50/p99
+//! session latency per sweep point).
+//!
+//! The claims under test (regression-tested in `rust/tests/gateway.rs`):
+//!
+//! * **determinism** — a session's reveals and per-session meter are
+//!   bit-identical whether it runs alone (`sessions = 1`) or among `N`
+//!   concurrent sessions;
+//! * **meter conservation** — per-session meters sum exactly to the
+//!   link's `gateway.mux` totals;
+//! * **sparsity of stalls** — at steady state the background
+//!   replenishers keep the scoring path at **zero** bank misses, and
+//!   the sharded ledger balances exactly.
+//!
+//! `--full` widens the sweep to 64/256 sessions and adds a shaped-WAN
+//! point at 8 sessions (real pacing, minutes of wall-clock); the
+//! default/`--smoke` run keeps CI-sized points. Shaped-WAN at 64/256
+//! sessions would be hours of paced sleeps, so high session counts are
+//! reported under the modeled WAN link (`wan-model`) instead — same
+//! bytes and flights, link time from [`CostModel::time_raw`].
+
+use ppkmeans::bench::{fmt_bytes, Table};
+use ppkmeans::coordinator::serve::{gateway_bench_json, GatewayReport};
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::cost::CostModel;
+use ppkmeans::net::mux::MUX_LINK_PHASE;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::serve::driver::train_model;
+use ppkmeans::serve::gateway::{gateway_stream, GatewayConfig, GatewayOutput, SessionReport};
+use ppkmeans::serve::model::TrainedModel;
+
+fn config(sessions: usize, batch_rows: usize, batches: usize, shape: Option<CostModel>) -> GatewayConfig {
+    GatewayConfig {
+        sessions,
+        queue: 0,
+        workers: 4,
+        replenishers: 1,
+        shards: 2,
+        batch_rows,
+        batches,
+        bank: BankConfig { prefab_batches: 2, low_water: 2, refill_batches: 2 },
+        seed: 0x6A7E1,
+        shape,
+        ..GatewayConfig::default()
+    }
+}
+
+/// Run one sweep point and return (party-0 output, mux link bytes)
+/// after checking the invariants every point must hold.
+fn run_point(models: &[TrainedModel; 2], cfg: &GatewayConfig) -> (GatewayOutput, u64) {
+    let rows = cfg.sessions * cfg.batches * cfg.batch_rows;
+    let stream = fraud_gen::generate(rows, 0.05, 31_415);
+    let out = gateway_stream([models[0].clone(), models[1].clone()], &stream.data, cfg)
+        .expect("gateway run");
+    assert_eq!(out.a.admitted(), cfg.sessions, "queue 0 admits everything");
+    assert!(out.a.rejected.is_empty());
+    assert_eq!(out.a.misses(), 0, "prefab + background refill must cover every draw");
+    assert!(out.a.ledger.balances(), "sharded bank ledger must balance: {:?}", out.a.ledger);
+    // Per-session meters must sum exactly to the link's mux phase.
+    let sum = out.a.online_total();
+    let link = out.meter_a.get(MUX_LINK_PHASE);
+    assert_eq!(sum.bytes_sent, link.bytes_sent, "session meters must sum to the link");
+    assert_eq!(sum.msgs_sent, link.msgs_sent);
+    (out.a, link.bytes_sent)
+}
+
+/// Session 1's report out of a run (tag 1 exists at every sweep point).
+fn first_session(out: &GatewayOutput) -> SessionReport {
+    out.sessions
+        .iter()
+        .find(|(tag, _)| *tag == 1)
+        .and_then(|(_, r)| r.as_ref().ok())
+        .expect("session 1 succeeded")
+        .clone()
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n_train, k, iters) = if full { (10_000, 4, 8) } else { (1_000, 4, 4) };
+    let (batch, batches) = if full { (32, 8) } else { (16, 6) };
+    let lan_sessions: &[usize] = if full { &[1, 8, 64, 256] } else { &[1, 8] };
+    let wan_shaped_sessions: &[usize] = if full { &[8] } else { &[1] };
+
+    println!("training: n={n_train} k={k} t={iters} (fraud 18+24 vertical split)");
+    let f = fraud_gen::generate(n_train, 0.05, 77);
+    let tcfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let (_, models) = train_model(&f.data, &tcfg, 0.05).expect("train");
+    println!("  trained; gateway sweep: {batches} batches × {batch} tx per session\n");
+
+    let mut tbl = Table::new(
+        &format!("Gateway — k={k}, batch={batch}, {batches} batches/session"),
+        &["link", "sessions", "throughput", "p50 lat", "p99 lat", "link bytes"],
+    );
+    let mut sweeps: Vec<(String, usize, GatewayReport)> = Vec::new();
+    let mut row = |tbl: &mut Table, label: &str, sessions: usize, r: &GatewayReport, bytes: u64| {
+        tbl.row(vec![
+            label.to_string(),
+            sessions.to_string(),
+            format!("{:.0} tx/s", r.throughput_rows_per_sec),
+            format!("{:.3} ms", r.p50_latency_secs * 1e3),
+            format!("{:.3} ms", r.p99_latency_secs * 1e3),
+            fmt_bytes(bytes),
+        ]);
+    };
+
+    // Loopback sweep, reported under both link models; remember every
+    // session-1 transcript for the determinism check below.
+    let mut session1: Vec<SessionReport> = Vec::new();
+    for &s in lan_sessions {
+        let cfg = config(s, batch, batches, None);
+        let (out, bytes) = run_point(&models, &cfg);
+        let lan = GatewayReport::from_gateway(&out, cfg.batch_rows, &CostModel::lan());
+        let wan = GatewayReport::from_gateway(&out, cfg.batch_rows, &CostModel::wan());
+        row(&mut tbl, "lan", s, &lan, bytes);
+        row(&mut tbl, "wan-model", s, &wan, bytes);
+        sweeps.push(("lan".into(), s, lan));
+        sweeps.push(("wan-model".into(), s, wan));
+        session1.push(first_session(&out));
+    }
+    // Shaped WAN: the transport really paces RTT + bandwidth, so the
+    // measured wall-clock is the link (kept to CI-sized session counts).
+    for &s in wan_shaped_sessions {
+        let cfg = config(s, batch, batches, Some(CostModel::wan()));
+        let (out, bytes) = run_point(&models, &cfg);
+        let wan = GatewayReport::from_gateway(&out, cfg.batch_rows, &CostModel::wan());
+        row(&mut tbl, "wan-shaped", s, &wan, bytes);
+        sweeps.push(("wan-shaped".into(), s, wan));
+    }
+    tbl.print();
+
+    // Determinism: session 1 (same tag, same rows, same seeds) must be
+    // bit-identical at every concurrency level of the loopback sweep.
+    let base = &session1[0];
+    for (i, r) in session1.iter().enumerate().skip(1) {
+        assert_eq!(r.results, base.results, "sessions={} changed session 1's reveals", lan_sessions[i]);
+        assert_eq!(r.online, base.online, "sessions={} changed session 1's meter", lan_sessions[i]);
+        assert_eq!(r.misses, 0);
+    }
+    println!(
+        "\nsession 1 is bit-identical across sessions ∈ {lan_sessions:?} \
+         ({} B online, {} flights)",
+        base.online.bytes_sent, base.online.rounds
+    );
+
+    let json = gateway_bench_json(k, batch, batches, &sweeps);
+    std::fs::write("BENCH_gateway.json", &json).expect("write BENCH_gateway.json");
+    println!("wrote BENCH_gateway.json");
+}

@@ -107,9 +107,11 @@ use crate::data::blobs::BlobSpec;
 use crate::data::fraud_gen;
 use crate::kmeans::config::{Partition, SecureKmeansConfig};
 use crate::kmeans::secure;
+use crate::net::mux::MUX_LINK_PHASE;
 use crate::offline::bank::BankConfig;
 use crate::offline::pricing;
 use crate::serve::driver::{serve_stream, train_model, ServeConfig};
+use crate::serve::gateway::{gateway_stream, GatewayConfig};
 
 /// Exact communication counts of one secure training run.
 pub struct RunCounts {
@@ -289,6 +291,108 @@ pub fn serve_golden_lines(c: &ServeCounts) -> String {
         c.bank_ledger[3],
         c.bank_misses,
         c.mat_triple_bytes_per_batch,
+    )
+}
+
+/// Exact communication counts of one gateway run — deterministic
+/// quantities only. Scheduling-dependent throughput facts (`stalls`,
+/// `replenished`, link flights) are deliberately excluded so the golden
+/// is stable across worker counts and machines.
+pub struct GatewayCounts {
+    /// Clusters of the served model.
+    pub k: usize,
+    /// Concurrent sessions multiplexed over the link.
+    pub sessions: usize,
+    /// Transactions per micro-batch.
+    pub batch_rows: usize,
+    /// Micro-batches per session.
+    pub batches: usize,
+    /// Session 1's online bytes (party 0) — every tag scores the same
+    /// shape, so this is the per-session cost at any concurrency level.
+    pub session_bytes: u64,
+    /// Session 1's online flights (party 0).
+    pub session_rounds: u64,
+    /// Link-level `gateway.mux` bytes (party 0): the exact sum of the
+    /// per-session meters, tags included.
+    pub link_bytes: u64,
+    /// Link-level `gateway.mux` messages (party 0).
+    pub link_msgs: u64,
+    /// Kits checked out (== sessions · batches).
+    pub consumed: u64,
+    /// Bank misses (must stay 0).
+    pub misses: u64,
+}
+
+/// Train a small fraud model and run a gateway session sweep over the
+/// duplex link, extracting the exact deterministic counts.
+pub fn gateway_counts(
+    n_train: usize,
+    k: usize,
+    iters: usize,
+    sessions: usize,
+    batch_rows: usize,
+    batches: usize,
+) -> GatewayCounts {
+    let f = fraud_gen::generate(n_train, 0.05, 77);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        ..Default::default()
+    };
+    let (_, models) = train_model(&f.data, &cfg, 0.05).expect("train model");
+    let stream = fraud_gen::generate(sessions * batches * batch_rows, 0.05, 4242);
+    let gcfg = GatewayConfig {
+        sessions,
+        batch_rows,
+        batches,
+        bank: BankConfig { prefab_batches: 1, low_water: 1, refill_batches: 1 },
+        ..Default::default()
+    };
+    let out = gateway_stream([models[0].clone(), models[1].clone()], &stream.data, &gcfg)
+        .expect("gateway stream");
+    let s1 = out
+        .a
+        .sessions
+        .iter()
+        .find(|(tag, _)| *tag == 1)
+        .and_then(|(_, r)| r.as_ref().ok())
+        .expect("session 1 succeeded");
+    let link = out.meter_a.get(MUX_LINK_PHASE);
+    GatewayCounts {
+        k,
+        sessions,
+        batch_rows,
+        batches,
+        session_bytes: s1.online.bytes_sent,
+        session_rounds: s1.online.rounds,
+        link_bytes: link.bytes_sent,
+        link_msgs: link.msgs_sent,
+        consumed: out.a.ledger.consumed,
+        misses: out.a.misses(),
+    }
+}
+
+/// The golden-file rendering of [`GatewayCounts`].
+pub fn gateway_golden_lines(c: &GatewayCounts) -> String {
+    format!(
+        "config = k{} s{} b{}x{}\n\
+         session_bytes = {}\n\
+         session_rounds = {}\n\
+         link_bytes = {}\n\
+         link_msgs = {}\n\
+         consumed = {}\n\
+         misses = {}\n",
+        c.k,
+        c.sessions,
+        c.batches,
+        c.batch_rows,
+        c.session_bytes,
+        c.session_rounds,
+        c.link_bytes,
+        c.link_msgs,
+        c.consumed,
+        c.misses,
     )
 }
 

@@ -17,5 +17,5 @@ pub mod session;
 
 pub use remote::{PartyTranscript, Scenario};
 pub use report::Report;
-pub use serve::ServeReport;
+pub use serve::{GatewayReport, ServeReport};
 pub use session::Session;

@@ -3,7 +3,8 @@
 //!
 //! A *scenario* is a small `key = value` text file that pins everything
 //! two independent processes must agree on to run a pipeline together:
-//! which pipeline (`train` / `serve` / `score` / `fraud`), the dataset
+//! which pipeline (`train` / `serve` / `score` / `fraud` / `gateway`),
+//! the dataset
 //! generation seeds, the clustering geometry, tiling/threads, and the
 //! optional link shaping. Both processes load (what should be) the same
 //! scenario; the [`handshake`] then verifies magic, wire version,
@@ -36,6 +37,7 @@ use crate::offline::bank::BankConfig;
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
 use crate::serve::driver::{serve_party, train_model_party, ServeConfig};
+use crate::serve::gateway::{gateway_party, GatewayConfig, SessionWorkload};
 use crate::serve::model::TrainedModel;
 use crate::util::error::{Error, Result};
 use crate::util::hash::{hash256, Hash256};
@@ -57,6 +59,9 @@ pub enum Pipeline {
     Score,
     /// Train on fraud-shaped data, then run outlier detection + Jaccard.
     Fraud,
+    /// Train on fraud-shaped data, then score many concurrent sessions
+    /// through the mux gateway ([`crate::serve::gateway`]).
+    Gateway,
 }
 
 impl Pipeline {
@@ -67,6 +72,7 @@ impl Pipeline {
             Pipeline::Serve => "serve",
             Pipeline::Score => "score",
             Pipeline::Fraud => "fraud",
+            Pipeline::Gateway => "gateway",
         }
     }
 
@@ -76,9 +82,10 @@ impl Pipeline {
             "serve" => Pipeline::Serve,
             "score" => Pipeline::Score,
             "fraud" => Pipeline::Fraud,
+            "gateway" => Pipeline::Gateway,
             other => {
                 return Err(Error::Config(format!(
-                    "scenario: unknown pipeline {other:?} (train|serve|score|fraud)"
+                    "scenario: unknown pipeline {other:?} (train|serve|score|fraud|gateway)"
                 )))
             }
         })
@@ -202,6 +209,18 @@ pub struct Scenario {
     pub low_water: usize,
     /// Batches per replenishment.
     pub refill: usize,
+    /// Concurrent sessions of the `gateway` pipeline (scenario key
+    /// `gateway.sessions`).
+    pub sessions: usize,
+    /// Gateway admission queue bound, 0 = unbounded (scenario key
+    /// `gateway.queue`): sessions beyond it are refused with a typed
+    /// overload on **both** parties.
+    pub queue: usize,
+    /// Gateway scoring workers per party (scenario key
+    /// `gateway.workers`). Party-local like `threads` — per-session
+    /// transcripts are worker-count invariant (regression-tested), so
+    /// it is excluded from the handshake digest.
+    pub gateway_workers: usize,
     /// Where model shares are saved/loaded (`party{0,1}.ppkmodel`).
     /// Party-local: excluded from the handshake digest.
     pub model_dir: String,
@@ -238,6 +257,9 @@ impl Default for Scenario {
             prefab: 8,
             low_water: 2,
             refill: 4,
+            sessions: 4,
+            queue: 0,
+            gateway_workers: 2,
             model_dir: "model".into(),
             save_model: false,
         }
@@ -341,6 +363,9 @@ impl Scenario {
                 "prefab" => sc.prefab = want_usize(key, val)?,
                 "low_water" => sc.low_water = want_usize(key, val)?,
                 "refill" => sc.refill = want_usize(key, val)?,
+                "gateway.sessions" => sc.sessions = want_usize(key, val)?,
+                "gateway.queue" => sc.queue = want_usize(key, val)?,
+                "gateway.workers" => sc.gateway_workers = want_usize(key, val)?,
                 "model_dir" => sc.model_dir = val.to_string(),
                 "save_model" => sc.save_model = want_bool(key, val)?,
                 other => {
@@ -390,6 +415,8 @@ impl Scenario {
             ("d_a", self.d_a.to_string()),
             ("data_seed", self.data_seed.to_string()),
             ("esd", esd.to_string()),
+            ("gateway.queue", self.queue.to_string()),
+            ("gateway.sessions", self.sessions.to_string()),
             ("iters", self.iters.to_string()),
             ("k", self.k.to_string()),
             ("low_water", self.low_water.to_string()),
@@ -466,6 +493,32 @@ impl Scenario {
                 refill_batches: self.refill,
             },
             seed: self.seed ^ 0x5E11E,
+            parallelism: self.parallelism(),
+            lanes: self.lanes_knob(),
+            shape: self.shape.model(),
+        }
+    }
+
+    /// The gateway configuration this scenario pins. The gateway seed
+    /// derives from the protocol seed like [`Scenario::serve_config`]'s
+    /// (distinct constant, so gateway and serve material never alias);
+    /// shard and replenisher counts follow the party-local worker knob.
+    pub fn gateway_config(&self) -> GatewayConfig {
+        let workers = self.gateway_workers.max(1);
+        GatewayConfig {
+            sessions: self.sessions,
+            queue: self.queue,
+            workers,
+            replenishers: 1,
+            shards: workers,
+            batch_rows: self.batch_rows,
+            batches: self.batches,
+            bank: BankConfig {
+                prefab_batches: self.prefab,
+                low_water: self.low_water,
+                refill_batches: self.refill,
+            },
+            seed: self.seed ^ 0x6A7E1,
             parallelism: self.parallelism(),
             lanes: self.lanes_knob(),
             shape: self.shape.model(),
@@ -733,6 +786,82 @@ fn score_stream(
     Ok(())
 }
 
+/// Score `gateway.sessions` concurrent transaction streams through the
+/// mux gateway (tail of the `gateway` pipeline). Reveals are strictly
+/// per-session plus scheduling-independent gateway totals: stall and
+/// replenishment counts are *throughput* facts that legitimately vary
+/// with worker interleaving, so they stay out of the transcript.
+fn gateway_score_stream(
+    chan: &mut Chan,
+    model: TrainedModel,
+    sc: &Scenario,
+    reveals: &mut Vec<(String, String)>,
+) -> Result<()> {
+    let gcfg = sc.gateway_config();
+    if gcfg.sessions == 0 || sc.batches == 0 || sc.batch_rows == 0 {
+        return Err(Error::Config(
+            "scenario: gateway needs gateway.sessions ≥ 1, batches ≥ 1 and batch_rows ≥ 1".into(),
+        ));
+    }
+    let rows = gcfg.sessions * sc.batches * sc.batch_rows;
+    let stream = fraud_gen::generate(rows, sc.rate, sc.stream_seed);
+    if stream.data.d != model.d {
+        return Err(Error::Config(format!(
+            "scenario stream has d={} but the model was trained with d={}",
+            stream.data.d, model.d
+        )));
+    }
+    let (d_a, party) = (model.d_a, chan.party);
+    let width = if party == 0 { d_a } else { model.d - d_a };
+    let workloads: Vec<SessionWorkload> = (0..gcfg.sessions)
+        .map(|s| {
+            let blocks = (0..sc.batches)
+                .map(|b| {
+                    let base = (s * sc.batches + b) * sc.batch_rows;
+                    let mut x = Vec::with_capacity(sc.batch_rows * width);
+                    for i in base..base + sc.batch_rows {
+                        let row = stream.data.row(i);
+                        x.extend_from_slice(if party == 0 { &row[..d_a] } else { &row[d_a..] });
+                    }
+                    x
+                })
+                .collect();
+            SessionWorkload { tag: s as u64 + 1, blocks }
+        })
+        .collect();
+    let out = gateway_party(chan, model, workloads, &gcfg)?;
+    for (tag, session) in &out.sessions {
+        match session {
+            Ok(s) => {
+                let mut h = Hash256::new();
+                for r in &s.results {
+                    for &a in &r.assignments {
+                        h.update((a as u64).to_le_bytes());
+                    }
+                    for &f in &r.fraud_flags {
+                        h.update([f as u8]);
+                    }
+                    h.update((r.malformed_rows as u64).to_le_bytes());
+                }
+                reveals.push((format!("session{tag}.scores"), hex(&h.finalize())));
+                reveals.push((
+                    format!("session{tag}.online"),
+                    format!("{}:{}:{}", s.online.bytes_sent, s.online.msgs_sent, s.online.rounds),
+                ));
+            }
+            // Session-level failures are part of the transcript too —
+            // a deterministic Overload (bank dry, refill = 0) must hit
+            // both parties at the same batch with the same message.
+            Err(e) => reveals.push((format!("session{tag}.error"), e.to_string())),
+        }
+    }
+    reveals.push(("gateway.admitted".into(), out.admitted().to_string()));
+    reveals.push(("gateway.rejected".into(), out.rejected.len().to_string()));
+    reveals.push(("gateway.consumed".into(), out.ledger.consumed.to_string()));
+    reveals.push(("gateway.misses".into(), out.misses().to_string()));
+    Ok(())
+}
+
 /// Run **this party's** side of the scenario pipeline over `chan`:
 /// handshake, the pipeline phases separated by [`barrier`]s, and a
 /// final barrier — returning the deterministic [`PartyTranscript`].
@@ -783,6 +912,15 @@ pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
             }
             barrier(chan, "train.done")?;
             score_stream(chan, model, sc, &mut reveals)?;
+        }
+        Pipeline::Gateway => {
+            let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
+            let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
+            let (r, model) = train_model_party(chan, &f.data, &cfg, sc.rate)?;
+            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+            barrier(chan, "train.done")?;
+            gateway_score_stream(chan, model, sc, &mut reveals)?;
         }
         Pipeline::Score => {
             let path = PathBuf::from(&sc.model_dir).join(TrainedModel::file_name(chan.party));
@@ -878,6 +1016,8 @@ mod tests {
             ("prefab", "7"),
             ("low_water", "3"),
             ("refill", "9"),
+            ("gateway.sessions", "3"),
+            ("gateway.queue", "2"),
         ];
         for (key, val) in protocol_keys {
             let sc = Scenario::parse(&format!("{key} = {val}")).unwrap();
@@ -888,6 +1028,7 @@ mod tests {
         let local_keys = [
             ("threads", "16"),
             ("lanes", "8"),
+            ("gateway.workers", "4"),
             ("model_dir", "elsewhere"),
             ("save_model", "true"),
         ];

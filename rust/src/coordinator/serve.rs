@@ -28,6 +28,9 @@ pub struct ServeReport {
     pub bank_ledger: [usize; 4],
     /// Replenishment events over the run.
     pub bank_replenish_events: usize,
+    /// Checkouts that replenished synchronously on the scoring path —
+    /// batches that stalled behind inline fabrication (both parties).
+    pub bank_stalls: u64,
 }
 
 impl ServeReport {
@@ -61,8 +64,137 @@ impl ServeReport {
                 out.bank_remaining,
             ],
             bank_replenish_events: out.bank_replenish_events,
+            bank_stalls: out.bank_stalls,
         }
     }
+}
+
+/// Nearest-rank percentile of an unsorted sample (`p` in `[0, 100]`).
+/// Deterministic: total order via `f64::total_cmp`, no interpolation.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One gateway sweep point's costs under a link model — the
+/// session-level analogue of [`ServeReport`]: per-session modeled
+/// latency percentiles instead of per-batch means, plus the sharded
+/// bank's global ledger.
+#[derive(Debug, Clone)]
+pub struct GatewayReport {
+    /// Sessions admitted (scored to completion).
+    pub admitted: usize,
+    /// Sessions refused at admission (queue bound).
+    pub rejected: usize,
+    /// Modeled end-to-end latency per admitted session: measured wall
+    /// plus `rounds·RTT + bytes/bandwidth` of that session's own meter.
+    pub session_latency_secs: Vec<f64>,
+    /// Nearest-rank p50 of the per-session latencies.
+    pub p50_latency_secs: f64,
+    /// Nearest-rank p99 of the per-session latencies.
+    pub p99_latency_secs: f64,
+    /// Worst session.
+    pub max_latency_secs: f64,
+    /// Scored transactions per second over the whole run's measured
+    /// wall-clock (party 0) — concurrency shows up here.
+    pub throughput_rows_per_sec: f64,
+    /// Sum of all per-session online bytes (== the link's
+    /// `gateway.mux` bytes; the invariant is regression-tested).
+    pub session_bytes: u64,
+    /// Bank ledger `[prefabricated, replenished, consumed, stock]`.
+    pub bank_ledger: [u64; 4],
+    /// Checkouts that found their kit not ready (waited or fabricated
+    /// inline on the scoring path).
+    pub bank_stalls: u64,
+    /// Offline-store draws that missed kit stock (0 at steady state).
+    pub bank_misses: u64,
+    /// Measured wall-clock of the whole gateway run (party 0).
+    pub wall_secs: f64,
+}
+
+impl GatewayReport {
+    /// Summarize one party's gateway run under a link model. Sessions
+    /// that aborted (typed overload) are excluded from latency stats
+    /// but still counted in `admitted`.
+    pub fn from_gateway(
+        out: &crate::serve::gateway::GatewayOutput,
+        batch_rows: usize,
+        link: &CostModel,
+    ) -> GatewayReport {
+        let reports: Vec<_> =
+            out.sessions.iter().filter_map(|(_, r)| r.as_ref().ok()).collect();
+        let lat: Vec<f64> = reports
+            .iter()
+            .map(|s| s.wall_secs + link.time_raw(s.online.bytes_sent, s.online.rounds))
+            .collect();
+        let rows: usize = reports.iter().map(|s| s.results.len() * batch_rows).sum();
+        GatewayReport {
+            admitted: out.admitted(),
+            rejected: out.rejected.len(),
+            p50_latency_secs: percentile(&lat, 50.0),
+            p99_latency_secs: percentile(&lat, 99.0),
+            max_latency_secs: lat.iter().cloned().fold(0.0f64, f64::max),
+            throughput_rows_per_sec: rows as f64 / out.wall_secs.max(f64::MIN_POSITIVE),
+            session_bytes: reports.iter().map(|s| s.online.bytes_sent).sum(),
+            bank_ledger: [
+                out.ledger.prefabricated,
+                out.ledger.replenished,
+                out.ledger.consumed,
+                out.ledger.stock,
+            ],
+            bank_stalls: out.ledger.stalls,
+            bank_misses: out.misses(),
+            wall_secs: out.wall_secs,
+            session_latency_secs: lat,
+        }
+    }
+}
+
+/// The `BENCH_gateway.json` payload shared by the CLI driver and the
+/// `gateway` bench target: one entry per `(sessions, link)` sweep
+/// point.
+pub fn gateway_bench_json(
+    k: usize,
+    batch_rows: usize,
+    batches: usize,
+    sweeps: &[(String, usize, GatewayReport)],
+) -> String {
+    let mut json = String::from("{\n  \"bench\": \"gateway\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"k\": {k}, \"batch_rows\": {batch_rows}, \"batches\": {batches}}},\n"
+    ));
+    json.push_str("  \"sweeps\": [\n");
+    for (i, (link, sessions, r)) in sweeps.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"link\": \"{link}\", \"sessions\": {sessions}, \"admitted\": {}, \
+             \"rejected\": {}, \"throughput_rows_per_sec\": {:.1}, \
+             \"p50_latency_secs\": {:.6}, \"p99_latency_secs\": {:.6}, \
+             \"max_latency_secs\": {:.6}, \"session_bytes\": {}, \
+             \"bank\": {{\"prefabricated\": {}, \"replenished\": {}, \"consumed\": {}, \
+             \"stock\": {}, \"stalls\": {}, \"misses\": {}}}}}{}\n",
+            r.admitted,
+            r.rejected,
+            r.throughput_rows_per_sec,
+            r.p50_latency_secs,
+            r.p99_latency_secs,
+            r.max_latency_secs,
+            r.session_bytes,
+            r.bank_ledger[0],
+            r.bank_ledger[1],
+            r.bank_ledger[2],
+            r.bank_ledger[3],
+            r.bank_stalls,
+            r.bank_misses,
+            if i + 1 < sweeps.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    json
 }
 
 /// The `BENCH_serving.json` payload shared by the CLI driver and the
@@ -87,12 +219,13 @@ pub fn serving_bench_json(
     ));
     json.push_str(&format!(
         "  \"bank\": {{\"prefabricated\": {}, \"replenished\": {}, \"consumed\": {}, \
-         \"remaining\": {}, \"replenish_events\": {}, \"misses\": {}}},\n",
+         \"remaining\": {}, \"replenish_events\": {}, \"stalls\": {}, \"misses\": {}}},\n",
         out.bank_prefabricated,
         out.bank_replenished,
         out.bank_consumed,
         out.bank_remaining,
         out.bank_replenish_events,
+        out.bank_stalls,
         out.bank_misses
     ));
     json.push_str(&format!(
@@ -149,5 +282,17 @@ mod tests {
         let json = serving_bench_json(&out, &lan, &wan, 0.5);
         assert!(json.contains("\"bench\": \"serving\""));
         assert!(json.contains("\"bank\""));
+        assert!(json.contains("\"stalls\""));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+        assert_eq!(percentile(&s, 0.0), 1.0, "p0 clamps to the minimum");
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
     }
 }

@@ -152,7 +152,7 @@ pub fn default_rules() -> Vec<Rule> {
                 "todo!",
                 "unimplemented!",
             ],
-            scope: Scope::BannedIn(paths(&["net", "serve::driver"])),
+            scope: Scope::BannedIn(paths(&["net", "serve::driver", "serve::gateway"])),
             exempt: vec![],
         },
     ]

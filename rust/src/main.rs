@@ -11,6 +11,9 @@
 //!                 [--refill 4] [--model-dir model] [--link lan|wan]
 //! ppkmeans score  [--model-dir model] [--batch 64] [--batches 8]
 //!                 [--link lan|wan]
+//! ppkmeans gateway [--sessions 8] [--queue 0] [--workers 4] [--batch 32]
+//!                 [--batches 8] [--prefab 2] [--low-water 2] [--refill 2]
+//!                 [--link lan|wan] [--shape none|lan|wan]
 //! ppkmeans party  --role p0|p1|local --scenario file
 //!                 [--listen 127.0.0.1:9041 | --connect HOST:PORT]
 //!                 [--out transcript.json]
@@ -21,7 +24,7 @@
 
 use ppkmeans::cli::Args;
 use ppkmeans::coordinator::remote::{self, PartyTranscript, Scenario};
-use ppkmeans::coordinator::serve::{serving_bench_json, ServeReport};
+use ppkmeans::coordinator::serve::{gateway_bench_json, serving_bench_json, GatewayReport, ServeReport};
 use ppkmeans::coordinator::Session;
 use ppkmeans::data::blobs::BlobSpec;
 use ppkmeans::data::{fraud_gen, sparse_gen};
@@ -34,6 +37,7 @@ use ppkmeans::offline::bank::BankConfig;
 use ppkmeans::runtime::pool::Parallelism;
 use ppkmeans::runtime::simd::Lanes;
 use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::serve::gateway::{gateway_stream, GatewayConfig};
 use ppkmeans::serve::model::TrainedModel;
 use ppkmeans::serve::scorer::score_rounds;
 use ppkmeans::util::stats::mean;
@@ -42,7 +46,7 @@ use std::path::{Path, PathBuf};
 fn print_help() {
     println!("ppkmeans — scalable sparsity-aware privacy-preserving K-means");
     println!();
-    println!("USAGE: ppkmeans <train|fraud|serve|score|party|bench|help|version> [options]");
+    println!("USAGE: ppkmeans <train|fraud|serve|score|gateway|party|bench|help|version> [options]");
     println!();
     println!("train options:");
     println!("  --n N                   samples to generate (default 1000)");
@@ -102,7 +106,23 @@ fn print_help() {
     println!("  --model-dir DIR / --batch B / --batches M / --link L / --threads N");
     println!("  --lanes W");
     println!();
-    println!("train/serve/score also accept:");
+    println!("gateway options (train once, score concurrent sessions over one link):");
+    println!("  --sessions S            concurrent client sessions offered (default 8)");
+    println!("  --queue Q               admission bound: sessions beyond Q are refused");
+    println!("                          with a typed overload, 0 = unbounded (default 0)");
+    println!("  --workers W             concurrent scoring workers per party (default 4;");
+    println!("                          per-session transcripts are identical for any W)");
+    println!("  --replenishers R        background bank replenisher threads (default 1;");
+    println!("                          0 = fabricate inline on the scoring path)");
+    println!("  --shards S              bank shards (default: one per worker)");
+    println!("  --batch B / --batches M per-session stream shape (defaults 32 / 8)");
+    println!("  --prefab / --low-water / --refill    per-session kit stocking policy");
+    println!("                          (defaults 2 / 2 / 2; refill 0 = a dry session");
+    println!("                          fails over to a typed overload)");
+    println!("  --n / --k / --iters / --rate         training knobs, as for serve");
+    println!("  --link L                lan | wan latency model for the report");
+    println!();
+    println!("train/serve/score/gateway also accept:");
     println!("  --shape S               none | lan | wan — deterministically shape the");
     println!("                          transport to the link (RTT per flight, bandwidth");
     println!("                          pacing per byte) so wall-clock MEASURES the link");
@@ -457,6 +477,120 @@ fn cmd_score(args: &Args) {
     serve_and_report(models, &scfg, &link, 0.0, 24_242);
 }
 
+/// `ppkmeans gateway`: train once, then score many concurrent sessions
+/// over one mux'd party-pair link, backed by the sharded
+/// background-replenished material bank. Writes `BENCH_gateway.json`.
+fn cmd_gateway(args: &Args) {
+    let n = args.get_usize("n", 1000);
+    let k = args.get_usize("k", 4);
+    let iters = args.get_usize("iters", 6);
+    let rate = args.get_f64("rate", 0.05);
+    let link = link_from(args);
+    let workers = args.get_usize("workers", 4).max(1);
+    let gcfg = GatewayConfig {
+        sessions: args.get_usize("sessions", 8),
+        queue: args.get_usize("queue", 0),
+        workers,
+        replenishers: args.get_usize("replenishers", 1),
+        shards: match args.get_usize("shards", 0) {
+            0 => workers,
+            s => s,
+        },
+        batch_rows: args.get_usize("batch", 32),
+        batches: args.get_usize("batches", 8),
+        bank: BankConfig {
+            prefab_batches: args.get_usize("prefab", 2),
+            low_water: args.get_usize("low-water", 2),
+            refill_batches: args.get_usize("refill", 2),
+        },
+        seed: 0x6A7E1,
+        parallelism: parallelism_from(args),
+        lanes: lanes_from(args),
+        shape: shape_from(args),
+    };
+
+    println!("training secure K-means for the gateway: n={n} k={k} t={iters} (vertical 18+24)");
+    let f = fraud_gen::generate(n, rate, 77);
+    let cfg = SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: f.d_payment },
+        parallelism: parallelism_from(args),
+        lanes: lanes_from(args),
+        ..Default::default()
+    };
+    let (tout, models) = match train_model(&f.data, &cfg, rate) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "  trained ({} iters, backend {}); τ = {:.4}",
+        tout.iters_run, tout.backend_name, models[0].tau
+    );
+
+    let rows = gcfg.sessions * gcfg.batches * gcfg.batch_rows;
+    let stream = fraud_gen::generate(rows, rate, 31_415);
+    let queue = if gcfg.queue == 0 { "unbounded".into() } else { gcfg.queue.to_string() };
+    println!(
+        "gateway: {} session(s) × {} batches × {} rows over one mux'd link \
+         ({} worker(s), {} shard(s), queue {queue})",
+        gcfg.sessions, gcfg.batches, gcfg.batch_rows, gcfg.workers, gcfg.shards
+    );
+    let gout = match gateway_stream(models, &stream.data, &gcfg) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("gateway failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    for (tag, s) in &gout.a.sessions {
+        match s {
+            Ok(s) => println!(
+                "  session {tag:>3}: {} batches, {} B online, {} flights, {} miss(es)",
+                s.results.len(),
+                s.online.bytes_sent,
+                s.online.rounds,
+                s.misses
+            ),
+            Err(e) => println!("  session {tag:>3}: {e}"),
+        }
+    }
+    let lan = GatewayReport::from_gateway(&gout.a, gcfg.batch_rows, &CostModel::lan());
+    let wan = GatewayReport::from_gateway(&gout.a, gcfg.batch_rows, &CostModel::wan());
+    let report = if link == CostModel::wan() { &wan } else { &lan };
+    println!(
+        "admitted {} / rejected {}: p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms, {:.0} tx/s",
+        report.admitted,
+        report.rejected,
+        report.p50_latency_secs * 1e3,
+        report.p99_latency_secs * 1e3,
+        report.max_latency_secs * 1e3,
+        report.throughput_rows_per_sec
+    );
+    let [pre, rep, con, stock] = report.bank_ledger;
+    println!(
+        "bank: prefabricated {pre} + replenished {rep} − consumed {con} = {stock} in stock \
+         ({} stall(s), {} miss(es))",
+        report.bank_stalls, report.bank_misses
+    );
+    if let Some((_, p)) = gout.meter_a.phases().find(|(ph, _)| *ph == "gateway.mux") {
+        println!(
+            "link: {} B in {} tagged frames under gateway.mux (per-session meters sum to it)",
+            p.bytes_sent, p.msgs_sent
+        );
+    }
+    let sweeps =
+        vec![("lan".to_string(), gcfg.sessions, lan), ("wan".to_string(), gcfg.sessions, wan)];
+    let json = gateway_bench_json(k, gcfg.batch_rows, gcfg.batches, &sweeps);
+    match std::fs::write("BENCH_gateway.json", &json) {
+        Ok(()) => println!("wrote BENCH_gateway.json"),
+        Err(e) => eprintln!("could not write BENCH_gateway.json: {e}"),
+    }
+}
+
 /// Print a transcript summary: reveal digests + per-phase wire counts.
 fn print_transcript(t: &PartyTranscript) {
     println!(
@@ -576,6 +710,7 @@ fn main() {
         Some("fraud") => cmd_fraud(&args),
         Some("serve") => cmd_serve(&args),
         Some("score") => cmd_score(&args),
+        Some("gateway") => cmd_gateway(&args),
         Some("party") => cmd_party(&args),
         Some("bench") => {
             println!("bench targets (cargo bench --bench <name>):");
@@ -587,6 +722,7 @@ fn main() {
                 ("fig4_sparse", "Fig 4 — sparse optimization scaling (WAN)"),
                 ("tiling", "row tiling — wall/rounds/triple bytes, BENCH_tiling.json"),
                 ("serving", "scoring service — latency/throughput, BENCH_serving.json"),
+                ("gateway", "mux'd concurrent sessions — BENCH_gateway.json"),
                 ("parallel", "multi-core runtime — 1/2/4/8-thread scaling, BENCH_parallel.json"),
                 ("ablations", "extras — OU vs Paillier, PJRT vs native"),
             ] {
@@ -596,7 +732,9 @@ fn main() {
         Some("help") => print_help(),
         Some("version") | None => {
             println!("ppkmeans 0.1.0 — scalable sparsity-aware privacy-preserving K-means");
-            println!("subcommands: train | fraud | serve | score | party | bench | help | version");
+            println!(
+                "subcommands: train | fraud | serve | score | gateway | party | bench | help | version"
+            );
         }
         Some(cmd) => {
             eprintln!("unknown subcommand: {cmd}");

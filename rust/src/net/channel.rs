@@ -23,9 +23,14 @@ use crate::ring::matrix::Mat;
 use crate::util::error::{Error, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-enum Backend {
+pub(crate) enum Backend {
     Mpsc { tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>> },
     Tcp(super::tcp::TcpTransport),
+    /// One multiplexed session riding a shared link (see
+    /// [`super::mux`]): every frame is prefixed with the session tag,
+    /// and the session meter charges payload **plus tag**, so the
+    /// per-session meters sum exactly to the link's byte/msg totals.
+    Mux(super::mux::MuxSession),
 }
 
 /// One endpoint of a two-party connection with an attached [`Meter`].
@@ -150,6 +155,30 @@ impl Chan {
         &self.meter
     }
 
+    /// Decompose the endpoint for the session mux: transport backend,
+    /// meter, shaper and party identity. The round buffer must be
+    /// drained (asserted) — a mux takeover mid-flight would corrupt the
+    /// segment accounting.
+    pub(crate) fn into_raw_parts(self) -> (Backend, Meter, Option<LinkShaper>, usize) {
+        assert!(
+            self.staged.is_empty(),
+            "round buffer still holds {} unflushed segments",
+            self.staged.len()
+        );
+        (self.backend, self.meter, self.shaper, self.party)
+    }
+
+    /// Reassemble an endpoint from raw parts (the mux's session
+    /// constructor and its link restore path).
+    pub(crate) fn from_raw_parts(
+        backend: Backend,
+        meter: Meter,
+        shaper: Option<LinkShaper>,
+        party: usize,
+    ) -> Chan {
+        Chan { backend, meter, shaper, party, staged: Vec::new(), resolved: Vec::new(), resolved_base: 0 }
+    }
+
     /// Consume the endpoint, returning its meter.
     pub fn into_meter(self) -> Meter {
         debug_assert!(
@@ -235,13 +264,21 @@ impl Chan {
     /// cap. The deployment handshake and barriers use this path so a
     /// misbehaving peer yields a clean process exit.
     pub fn try_send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        // A mux session's wire cost includes its 8-byte tag, so the
+        // per-session meters sum exactly to the link totals.
+        let wire_len = bytes.len() as u64
+            + match &self.backend {
+                Backend::Mux(_) => super::mux::MUX_TAG_BYTES,
+                _ => 0,
+            };
         match &mut self.backend {
             Backend::Mpsc { tx, .. } => tx
                 .send(bytes.to_vec())
                 .map_err(|_| Error::ChannelClosed("in-process peer hung up".into()))?,
             Backend::Tcp(t) => t.send(bytes)?,
+            Backend::Mux(s) => s.send(bytes)?,
         }
-        self.meter.on_send(bytes.len() as u64);
+        self.meter.on_send(wire_len);
         Ok(())
     }
 
@@ -253,6 +290,9 @@ impl Chan {
                 .recv()
                 .map_err(|_| Error::ChannelClosed("in-process peer hung up".into()))?,
             Backend::Tcp(t) => t.recv()?,
+            // Link shaping for mux sessions happens once, in the mux
+            // reader (one physical pipe); session chans stay unshaped.
+            Backend::Mux(s) => s.recv()?,
         };
         self.meter.on_recv();
         if let Some(s) = &mut self.shaper {

@@ -123,6 +123,16 @@ impl Meter {
             self.phases.entry(k.clone()).or_default().merge(v);
         }
     }
+
+    /// Fold raw stats into a phase without touching the flight state.
+    /// The mux link accountant uses this: session frames are counted
+    /// against the link (`bytes`/`msgs` exactly), while *flights* stay a
+    /// per-session notion — link-level flight interleaving depends on
+    /// worker scheduling, so the caller passes `rounds: 0` to keep the
+    /// link meter deterministic.
+    pub fn record(&mut self, label: &str, stats: PhaseStats) {
+        self.phases.entry(label.to_string()).or_default().merge(&stats);
+    }
 }
 
 #[cfg(test)]

@@ -27,12 +27,14 @@
 pub mod channel;
 pub mod cost;
 pub mod meter;
+pub mod mux;
 pub mod shape;
 pub mod tcp;
 
 pub use channel::{duplex_pair, Chan};
 pub use cost::CostModel;
 pub use meter::{Meter, PhaseStats};
+pub use mux::{MuxLink, MUX_TAG_BYTES};
 pub use shape::LinkShaper;
 pub use tcp::TcpTransport;
 

@@ -1,0 +1,466 @@
+//! Session multiplexer: many concurrent protocol sessions over one
+//! party-pair link.
+//!
+//! The serving gateway ([`crate::serve::gateway`]) scores many client
+//! sessions at once, but the deployment has exactly one authenticated
+//! link per party pair. [`MuxLink`] splits that link into tagged
+//! sub-channels: every frame a session sends is prefixed with its
+//! 8-byte little-endian session tag ([`MUX_TAG_BYTES`]), and the
+//! receive side routes arriving frames into per-session inboxes. The
+//! extension is PPKMWRE1-compatible — the gateway handshake words
+//! negotiate it *before* the first tagged frame, and an un-muxed peer
+//! never sees a tagged frame (see `docs/PROTOCOLS.md`, "Gateway").
+//!
+//! ## Accounting invariant
+//!
+//! Each session gets its own [`Meter`] (inside its [`crate::net::Chan`])
+//! that charges payload **plus tag** per frame, so per-session
+//! `bytes_sent`/`msgs_sent` sum *exactly* to the link totals kept here
+//! under the `"gateway.mux"` phase. Rounds (flights) remain a
+//! per-session notion: link-level flight interleaving depends on worker
+//! scheduling, so the link meter records `rounds: 0` and stays
+//! deterministic.
+//!
+//! ## Concurrency shape
+//!
+//! The send half and receive half sit under *separate* locks — a worker
+//! blocked in a receive must never stop another worker from sending, or
+//! two symmetric parties deadlock. Receives use a reader-token scheme:
+//! one blocked receiver takes the transport's receive half out of the
+//! shared state (releasing the lock), blocks on the wire, and routes
+//! whatever arrives to the owning inbox before waking the others. A
+//! transport error is *sticky*: it poisons the link for every session
+//! with the same typed error, never a panic
+//! (`no-panic-in-wire-paths`).
+
+// Wire-facing code returns typed errors (ppkm-lint rule
+// no-panic-in-wire-paths); the clippy deny backs the lint at the
+// type-system level, same as the rest of `net`.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use super::channel::{Backend, Chan};
+use super::meter::{Meter, PhaseStats};
+use super::shape::LinkShaper;
+use super::tcp::TcpTransport;
+use crate::util::error::{Error, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Bytes of session tag prefixed to every multiplexed frame (u64 LE).
+pub const MUX_TAG_BYTES: u64 = 8;
+
+/// Phase label under which the link meter accounts multiplexed traffic.
+pub const MUX_LINK_PHASE: &str = "gateway.mux";
+
+/// Lock a mutex, riding through poisoning. A worker that panicked while
+/// holding a mux lock left only plain-old-data behind (queues and
+/// counters mutate atomically under the lock), so the state is usable;
+/// the panic itself still propagates through the pool's join.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Send half of the underlying transport (independently locked).
+enum SendHalf {
+    Mpsc(Sender<Vec<u8>>),
+    Tcp(TcpTransport),
+}
+
+impl SendHalf {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        match self {
+            SendHalf::Mpsc(tx) => tx
+                .send(frame.to_vec())
+                .map_err(|_| Error::ChannelClosed("in-process peer hung up".into())),
+            SendHalf::Tcp(t) => t.send(frame),
+        }
+    }
+}
+
+/// Receive half of the underlying transport.
+enum RecvHalf {
+    Mpsc(Receiver<Vec<u8>>),
+    Tcp(TcpTransport),
+}
+
+impl RecvHalf {
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match self {
+            RecvHalf::Mpsc(rx) => rx
+                .recv()
+                .map_err(|_| Error::ChannelClosed("in-process peer hung up".into())),
+            RecvHalf::Tcp(t) => t.recv(),
+        }
+    }
+}
+
+/// Receive-side shared state: the reader token, per-session inboxes,
+/// link shaping, and the sticky error.
+struct RxState {
+    /// The transport's receive half. `None` while one session holds the
+    /// reader token (it is blocked on the wire with the lock released).
+    recv: Option<RecvHalf>,
+    /// Per-session frame queues, keyed by tag. `BTreeMap` per the
+    /// `no-unordered-iteration` lint: any iteration is deterministic.
+    inboxes: BTreeMap<u64, VecDeque<Vec<u8>>>,
+    /// Link shaping moves here from the wrapped `Chan`: one physical
+    /// pipe, paced once per arriving frame by whichever session reads it.
+    shaper: Option<LinkShaper>,
+    /// Sticky transport failure: once set, every session receive returns
+    /// this as a typed [`Error::ChannelClosed`].
+    dead: Option<String>,
+}
+
+struct MuxShared {
+    tx: Mutex<SendHalf>,
+    rx: Mutex<RxState>,
+    /// Signalled when frames are routed or the link dies.
+    rx_cv: Condvar,
+    /// Link-level accounting (phase [`MUX_LINK_PHASE`]): exact bytes and
+    /// message counts, rounds pinned to 0 (see module docs).
+    link: Mutex<Meter>,
+}
+
+/// A party-pair link split into tagged sub-channels.
+///
+/// Built from an existing connected [`Chan`] with [`MuxLink::new`];
+/// hand out per-session endpoints with [`MuxLink::session`]; when every
+/// session endpoint has been dropped, [`MuxLink::finish`] reassembles
+/// and returns the original flat `Chan` (meter, shaper and party
+/// identity restored, link traffic folded in).
+pub struct MuxLink {
+    shared: Arc<MuxShared>,
+    party: usize,
+}
+
+/// One session's endpoint into the shared link (the `Backend::Mux`
+/// payload inside a session `Chan`). Sends tag-prefix frames; receives
+/// via the routed inbox.
+pub struct MuxSession {
+    shared: Arc<MuxShared>,
+    id: u64,
+}
+
+impl MuxLink {
+    /// Take over a connected link. The wrapped channel's meter, shaper
+    /// and party identity are preserved and restored by
+    /// [`MuxLink::finish`]; shaping applies to the multiplexed stream as
+    /// a whole (one physical pipe). Muxing an already-muxed session is a
+    /// configuration error.
+    pub fn new(chan: Chan) -> Result<MuxLink> {
+        let (backend, meter, shaper, party) = chan.into_raw_parts();
+        let (tx, rx) = match backend {
+            Backend::Mpsc { tx, rx } => (SendHalf::Mpsc(tx), RecvHalf::Mpsc(rx)),
+            Backend::Tcp(t) => {
+                // Clone = send half, original = receive half; both refer
+                // to the same socket, independently lockable.
+                let send = t.try_clone()?;
+                (SendHalf::Tcp(send), RecvHalf::Tcp(t))
+            }
+            Backend::Mux(_) => {
+                return Err(Error::Config(
+                    "cannot multiplex an already-multiplexed session channel".into(),
+                ))
+            }
+        };
+        Ok(MuxLink {
+            shared: Arc::new(MuxShared {
+                tx: Mutex::new(tx),
+                rx: Mutex::new(RxState { recv: Some(rx), inboxes: BTreeMap::new(), shaper, dead: None }),
+                rx_cv: Condvar::new(),
+                link: Mutex::new(meter),
+            }),
+            party,
+        })
+    }
+
+    /// Open the session tagged `id`, returning a fully independent
+    /// [`Chan`] (own meter, own round buffer) riding the shared link.
+    /// Each tag can be open at most once per link.
+    pub fn session(&self, id: u64) -> Result<Chan> {
+        let mut rx = lock(&self.shared.rx);
+        if rx.inboxes.contains_key(&id) {
+            return Err(Error::Config(format!("mux session {id} already open")));
+        }
+        rx.inboxes.insert(id, VecDeque::new());
+        drop(rx);
+        Ok(Chan::from_raw_parts(
+            Backend::Mux(MuxSession { shared: Arc::clone(&self.shared), id }),
+            Meter::new(),
+            None,
+            self.party,
+        ))
+    }
+
+    /// Snapshot of the link meter (exact multiplexed bytes/msgs under
+    /// phase [`MUX_LINK_PHASE`], plus whatever the pre-mux channel had
+    /// accumulated).
+    pub fn link_meter(&self) -> Meter {
+        lock(&self.shared.link).clone()
+    }
+
+    /// Tear the mux down and reassemble the flat [`Chan`]. Every session
+    /// endpoint must have been dropped (the link state is uniquely owned
+    /// again) and every inbox drained — a leftover frame means some
+    /// session exited mid-protocol, which is a protocol error, not a
+    /// panic.
+    pub fn finish(self) -> Result<Chan> {
+        let shared = Arc::try_unwrap(self.shared).map_err(|_| {
+            Error::Runtime("mux finish: session endpoints still alive".into())
+        })?;
+        let rx = shared.rx.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some((id, q)) = rx.inboxes.iter().find(|(_, q)| !q.is_empty()) {
+            return Err(Error::Protocol(format!(
+                "mux finish: session {id} left {} unread frame(s) in its inbox",
+                q.len()
+            )));
+        }
+        if let Some(msg) = rx.dead {
+            return Err(Error::ChannelClosed(format!("mux link died: {msg}")));
+        }
+        let recv = rx.recv.ok_or_else(|| {
+            Error::Runtime("mux finish: reader token not returned".into())
+        })?;
+        let tx = shared.tx.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let backend = match (tx, recv) {
+            (SendHalf::Mpsc(tx), RecvHalf::Mpsc(rx)) => Backend::Mpsc { tx, rx },
+            // Either TCP handle is the whole socket again.
+            (SendHalf::Tcp(t), RecvHalf::Tcp(_)) => Backend::Tcp(t),
+            _ => return Err(Error::Runtime("mux finish: transport halves disagree".into())),
+        };
+        let meter = shared.link.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        Ok(Chan::from_raw_parts(backend, meter, rx.shaper, self.party))
+    }
+}
+
+impl MuxSession {
+    /// Send `payload` on this session: one wire frame of
+    /// `tag ‖ payload`, accounted against the link meter (the *session*
+    /// meter is updated by the owning `Chan`, tag included, so the two
+    /// agree byte-for-byte).
+    pub fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let mut frame = Vec::with_capacity(payload.len() + MUX_TAG_BYTES as usize);
+        frame.extend_from_slice(&self.id.to_le_bytes());
+        frame.extend_from_slice(payload);
+        {
+            let mut tx = lock(&self.shared.tx);
+            tx.send(&frame)?;
+        }
+        lock(&self.shared.link).record(
+            MUX_LINK_PHASE,
+            PhaseStats { bytes_sent: frame.len() as u64, msgs_sent: 1, rounds: 0 },
+        );
+        Ok(())
+    }
+
+    /// Receive the next payload addressed to this session. Whoever finds
+    /// its inbox empty takes the reader token, blocks on the wire with
+    /// the lock released, and routes the arriving frame — to itself or
+    /// to another session's inbox (waking the waiters). A transport
+    /// error becomes sticky and fails every session.
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut rx = lock(&self.shared.rx);
+        loop {
+            if let Some(q) = rx.inboxes.get_mut(&self.id) {
+                if let Some(frame) = q.pop_front() {
+                    return Ok(frame);
+                }
+            }
+            if let Some(msg) = &rx.dead {
+                return Err(Error::ChannelClosed(format!("mux link died: {msg}")));
+            }
+            if let Some(mut half) = rx.recv.take() {
+                // We hold the reader token: block on the wire unlocked so
+                // senders (and the peer) keep making progress.
+                drop(rx);
+                let got = half.recv();
+                rx = lock(&self.shared.rx);
+                rx.recv = Some(half);
+                match got {
+                    Ok(frame) => {
+                        if let Err(e) = route(&mut rx, &self.shared.link, frame) {
+                            rx.dead = Some(e.to_string());
+                            self.shared.rx_cv.notify_all();
+                            return Err(e);
+                        }
+                        self.shared.rx_cv.notify_all();
+                        // Loop: the frame may or may not have been ours.
+                    }
+                    Err(e) => {
+                        rx.dead = Some(e.to_string());
+                        self.shared.rx_cv.notify_all();
+                        return Err(e);
+                    }
+                }
+            } else {
+                // Another session is blocked on the wire; wait for it to
+                // route something or return the token.
+                rx = self
+                    .shared
+                    .rx_cv
+                    .wait(rx)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+    }
+}
+
+/// Route one arriving wire frame to its session inbox: strip and decode
+/// the tag, count the receive on the link meter, pace the shaper.
+/// Malformed or misaddressed frames are protocol errors that kill the
+/// link (the stream is no longer trustworthy once framing desyncs).
+fn route(rx: &mut RxState, link: &Mutex<Meter>, frame: Vec<u8>) -> Result<()> {
+    if frame.len() < MUX_TAG_BYTES as usize {
+        return Err(Error::Protocol(format!(
+            "mux frame of {} bytes is shorter than its {MUX_TAG_BYTES}-byte session tag",
+            frame.len()
+        )));
+    }
+    let mut tag = [0u8; 8];
+    tag.copy_from_slice(&frame[..8]);
+    let id = u64::from_le_bytes(tag);
+    lock(link).on_recv();
+    if let Some(s) = &mut rx.shaper {
+        s.pace_recv(frame.len() as u64);
+    }
+    match rx.inboxes.get_mut(&id) {
+        Some(q) => {
+            q.push_back(frame[8..].to_vec());
+            Ok(())
+        }
+        None => Err(Error::Protocol(format!("mux frame addressed to unknown session {id}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::net::duplex_pair;
+    use std::thread;
+
+    /// Two sessions ping-pong concurrently over one duplex link; the
+    /// per-session meters must sum exactly to the link totals.
+    #[test]
+    fn sessions_are_independent_and_meters_sum_to_link() {
+        let (c0, c1) = duplex_pair();
+        let run = |chan: Chan, party: usize| {
+            let link = MuxLink::new(chan).unwrap();
+            let handles: Vec<_> = [1u64, 2u64]
+                .into_iter()
+                .map(|id| {
+                    let mut s = link.session(id).unwrap();
+                    thread::spawn(move || {
+                        s.set_phase("t");
+                        for i in 0..4u64 {
+                            let v = s.exchange_u64s(&[id * 100 + i + party as u64 * 1000]);
+                            assert_eq!(v, vec![id * 100 + i + (1 - party) as u64 * 1000]);
+                        }
+                        s.into_meter()
+                    })
+                })
+                .collect();
+            let session_meters: Vec<Meter> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let flat = link.finish().unwrap();
+            (session_meters, flat.into_meter())
+        };
+        let h = thread::spawn(move || run(c0, 0));
+        let (s1, l1) = run(c1, 1);
+        let (s0, l0) = h.join().unwrap();
+        for (sessions, link_meter) in [(&s0, &l0), (&s1, &l1)] {
+            let mut sum = PhaseStats::default();
+            for m in sessions.iter() {
+                sum.merge(&m.total());
+            }
+            let link_total = link_meter.get(MUX_LINK_PHASE);
+            assert_eq!(sum.bytes_sent, link_total.bytes_sent);
+            assert_eq!(sum.msgs_sent, link_total.msgs_sent);
+            // 4 exchanges = 4 flights per session, deterministic.
+            for m in sessions.iter() {
+                assert_eq!(m.total().rounds, 4);
+                // 8 payload + 8 tag bytes per frame, 4 frames.
+                assert_eq!(m.total().bytes_sent, 4 * 16);
+            }
+            // Link rounds stay 0: flight interleaving is scheduling-
+            // dependent, so the link meter never counts flights.
+            assert_eq!(link_total.rounds, 0);
+        }
+    }
+
+    #[test]
+    fn finish_restores_a_usable_flat_channel() {
+        let (c0, c1) = duplex_pair();
+        let h = thread::spawn(move || {
+            let link = MuxLink::new(c0).unwrap();
+            {
+                let mut s = link.session(7).unwrap();
+                s.send_u64s(&[42]);
+                assert_eq!(s.recv_u64s(), vec![43]);
+            }
+            let mut flat = link.finish().unwrap();
+            flat.send_u64s(&[1, 2, 3]);
+            flat.into_meter()
+        });
+        let link = MuxLink::new(c1).unwrap();
+        {
+            let mut s = link.session(7).unwrap();
+            assert_eq!(s.recv_u64s(), vec![42]);
+            s.send_u64s(&[43]);
+        }
+        let mut flat = link.finish().unwrap();
+        assert_eq!(flat.recv_u64s(), vec![1, 2, 3]);
+        let m0 = h.join().unwrap();
+        // Link meter carries the mux traffic plus the post-mux flat send.
+        assert_eq!(m0.get(MUX_LINK_PHASE).msgs_sent, 1);
+        assert!(m0.total().bytes_sent >= 16 + 24);
+    }
+
+    #[test]
+    fn duplicate_session_id_is_refused() {
+        let (c0, _c1) = duplex_pair();
+        let link = MuxLink::new(c0).unwrap();
+        let _a = link.session(3).unwrap();
+        let err = link.session(3).unwrap_err();
+        assert!(err.to_string().contains("already open"), "{err}");
+    }
+
+    #[test]
+    fn dead_link_fails_every_session_with_typed_error() {
+        let (c0, c1) = duplex_pair();
+        drop(c1); // peer gone before any traffic
+        let link = MuxLink::new(c0).unwrap();
+        let mut a = link.session(1).unwrap();
+        let mut b = link.session(2).unwrap();
+        assert!(a.try_recv_bytes().is_err());
+        // The failure is sticky: the second session sees it too, without
+        // touching the wire.
+        let err = b.try_recv_bytes().unwrap_err();
+        assert!(err.to_string().contains("mux link died"), "{err}");
+    }
+
+    /// finish() fails with a typed runtime error while a session
+    /// endpoint is still alive (the Arc is not uniquely owned).
+    #[test]
+    fn finish_is_refused_while_sessions_alive() {
+        let (c0, _c1) = duplex_pair();
+        let link = MuxLink::new(c0).unwrap();
+        let s = link.session(1).unwrap();
+        match link.finish() {
+            Ok(_) => unreachable!("finish must fail while a session is alive"),
+            Err(e) => assert!(e.to_string().contains("still alive"), "{e}"),
+        }
+        drop(s);
+    }
+
+    #[test]
+    fn mux_over_mux_is_refused() {
+        let (c0, _c1) = duplex_pair();
+        let link = MuxLink::new(c0).unwrap();
+        let s = link.session(1).unwrap();
+        let err = MuxLink::new(s).unwrap_err();
+        assert!(err.to_string().contains("already-multiplexed"), "{err}");
+    }
+}

@@ -91,6 +91,15 @@ impl TcpTransport {
         )))
     }
 
+    /// Duplicate the transport handle (both refer to the same socket).
+    /// The session mux ([`crate::net::mux`]) splits a link into an
+    /// independently-locked send half and receive half this way —
+    /// holding one lock across a blocking receive while another worker
+    /// sends is what keeps two concurrent parties deadlock-free.
+    pub fn try_clone(&self) -> Result<TcpTransport> {
+        Ok(TcpTransport { stream: self.stream.try_clone()? })
+    }
+
     /// Send one framed message. Refuses frames above [`MAX_FRAME_BYTES`]
     /// with a typed error (a peer applying the same cap would reject
     /// them anyway).

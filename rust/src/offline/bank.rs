@@ -65,6 +65,14 @@ pub struct MaterialBank<S: TripleSource> {
     pub consumed: usize,
     /// Replenishment events so far.
     pub replenish_events: usize,
+    /// Checkouts that had to replenish **synchronously on the scoring
+    /// path** (a bank-dry stall): the batch that triggered the refill
+    /// paid its fabrication latency inline. 0 means the stocking policy
+    /// kept fabrication entirely off the online path — the gateway's
+    /// sharded bank ([`crate::serve::gateway`]) gets there with
+    /// background replenishers; this in-process bank surfaces the count
+    /// so `ServeReport` can show what the policy cost.
+    pub stalls: u64,
 }
 
 impl<S: TripleSource> MaterialBank<S> {
@@ -99,6 +107,7 @@ impl<S: TripleSource> MaterialBank<S> {
             replenished: 0,
             consumed: 0,
             replenish_events: 0,
+            stalls: 0,
         }
     }
 
@@ -113,13 +122,21 @@ impl<S: TripleSource> MaterialBank<S> {
     /// the low-water margin exists so the refill never races an empty
     /// queue.
     pub fn checkout(&mut self) -> &mut TripleStore<S> {
+        let mut stalled = false;
         if self.stock == 0 {
             self.replenish();
+            stalled = true;
         }
         self.stock -= 1;
         self.consumed += 1;
         if self.stock < self.cfg.low_water {
             self.replenish();
+            stalled = true;
+        }
+        // One stall per checkout even if both triggers fired: the batch
+        // paid inline fabrication latency once, however many refills ran.
+        if stalled {
+            self.stalls += 1;
         }
         &mut self.store
     }
@@ -221,6 +238,25 @@ mod tests {
         assert_eq!(bank.stock(), 0);
         draw_batch(bank.checkout());
         assert_eq!(bank.misses(), 0, "emergency replenish must cover the draw");
+        assert!(bank.accounting_balances());
+    }
+
+    #[test]
+    fn stalls_count_inline_replenishments_once_per_checkout() {
+        // prefab 3, low_water 0: the only replenish trigger is a dry
+        // bank, so exactly every 2nd checkout past the prefab stalls.
+        let cfg = BankConfig { prefab_batches: 3, low_water: 0, refill_batches: 2 };
+        let mut bank = MaterialBank::new(Dealer::new(7, 0), batch_demand(), cfg);
+        for _ in 0..3 {
+            draw_batch(bank.checkout());
+        }
+        assert_eq!(bank.stalls, 0, "prefab stock absorbs the first batches");
+        draw_batch(bank.checkout()); // dry → inline refill → stall
+        assert_eq!(bank.stalls, 1);
+        draw_batch(bank.checkout()); // still one in stock
+        assert_eq!(bank.stalls, 1);
+        draw_batch(bank.checkout()); // dry again
+        assert_eq!(bank.stalls, 2);
         assert!(bank.accounting_balances());
     }
 

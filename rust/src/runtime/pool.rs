@@ -281,6 +281,40 @@ where
     })
 }
 
+/// Run `n` long-lived worker bodies with **one dedicated thread each**,
+/// returning their results in index order. Unlike [`parallel_map`]
+/// (which chunks items over a bounded pool and assumes bodies are pure
+/// local compute), every body here is guaranteed to be *live
+/// concurrently* — required when bodies block on each other through
+/// shared state, as the gateway's scoring workers and bank replenishers
+/// do ([`crate::serve::gateway`]): chunking two interdependent blocking
+/// bodies onto one thread would deadlock.
+///
+/// Threads are named `{name}{i}` with 16 MiB stacks; a panic in any
+/// body propagates to the caller after all bodies are joined.
+pub fn run_workers<R, F>(name: &str, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                std::thread::Builder::new()
+                    .name(format!("{name}{i}"))
+                    .stack_size(16 << 20)
+                    .spawn_scoped(s, move || fr(i))
+                    .expect("runtime::pool: spawn worker")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("runtime::pool worker panicked"))
+            .collect()
+    })
+}
+
 /// Sparse·dense product fanned out across row blocks when large enough;
 /// bit-identical to [`Csr::matmul_dense`].
 pub fn csr_matmul_auto(x: &Csr, rhs: &Mat) -> Mat {
@@ -412,6 +446,27 @@ mod tests {
         let (a, b) = run_pair(|| shared.iter().sum::<u64>(), || shared.len());
         assert_eq!(a, 6);
         assert_eq!(b, 3);
+    }
+
+    #[test]
+    fn run_workers_gives_every_body_a_live_thread() {
+        use std::sync::{Condvar, Mutex};
+        // Bodies block until *all* are running at once: with chunked
+        // scheduling this would deadlock, with one-thread-per-body it
+        // completes. 8 bodies rendezvous through a shared counter.
+        let state = Mutex::new(0usize);
+        let cv = Condvar::new();
+        let n = 8;
+        let out = run_workers("rdv", n, |i| {
+            let mut g = state.lock().unwrap();
+            *g += 1;
+            cv.notify_all();
+            while *g < n {
+                g = cv.wait(g).unwrap();
+            }
+            i * 2
+        });
+        assert_eq!(out, (0..n).map(|i| i * 2).collect::<Vec<_>>());
     }
 
     #[test]

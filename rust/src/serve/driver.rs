@@ -119,6 +119,10 @@ pub struct ServeOutput {
     pub bank_remaining: usize,
     /// Replenishment events.
     pub bank_replenish_events: usize,
+    /// Checkouts that replenished synchronously **on the scoring path**
+    /// — each one stalled a batch behind inline fabrication (the
+    /// gateway's background replenishers exist to drive this to 0).
+    pub bank_stalls: u64,
     /// Online draws that missed prefabricated stock (0 when planned
     /// correctly).
     pub bank_misses: u64,
@@ -196,6 +200,8 @@ pub struct ServePartyOutput {
     pub bank_remaining: usize,
     /// Replenishment events.
     pub bank_replenish_events: usize,
+    /// Checkouts that replenished synchronously on the scoring path.
+    pub bank_stalls: u64,
     /// Online draws that missed prefabricated stock (0 when planned
     /// correctly).
     pub bank_misses: u64,
@@ -292,6 +298,7 @@ pub fn serve_party(
         bank_consumed: bank.consumed,
         bank_remaining: bank.stock(),
         bank_replenish_events: bank.replenish_events,
+        bank_stalls: bank.stalls,
         bank_misses: bank.misses(),
     })
 }
@@ -417,6 +424,7 @@ pub fn serve_stream(
         bank_consumed: ra.bank_consumed,
         bank_remaining: ra.bank_remaining,
         bank_replenish_events: ra.bank_replenish_events,
+        bank_stalls: ra.bank_stalls + rb.bank_stalls,
         bank_misses: ra.bank_misses + rb.bank_misses,
         per_batch_mat_triple_bytes: ra.per_batch_mat_triple_bytes,
         k,

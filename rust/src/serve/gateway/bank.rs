@@ -1,0 +1,494 @@
+//! Sharded, background-replenished material bank for the gateway.
+//!
+//! The in-process [`crate::offline::bank::MaterialBank`] replenishes
+//! *synchronously inside checkout* — a dry bank blocks the serve loop.
+//! The gateway instead stocks **kits**: one kit is the full offline
+//! material of one `(session, batch)` micro-batch, fabricated from a
+//! stateless dealer seeded by [`super::kit_seed`]. Because the seed is
+//! a pure function of `(seed, tag, batch)`, *any* thread — a scoring
+//! worker stealing fabrication inline, or a background replenisher on
+//! [`crate::runtime::pool`] — produces the bit-identical kit, and the
+//! two parties stay paired on correlated randomness no matter who
+//! fabricates what, when.
+//!
+//! Sessions are assigned round-robin to **shards** (one lock + condvar
+//! each), so concurrent checkouts on different shards never contend.
+//! Per shard the exact ledger
+//!
+//! ```text
+//! prefabricated + replenished − consumed == stock   (always)
+//! ```
+//!
+//! holds under the shard lock at every instant (reserved-but-unbuilt
+//! batches are tracked separately via `fab_next`), and the global
+//! ledger is the shard sum — asserted by the interleaving regression
+//! in `rust/tests/gateway.rs`.
+//!
+//! Checkout semantics per session (strictly in batch order):
+//!
+//! * kit stocked → pop it, count `consumed`;
+//! * kit reserved by another thread → wait on the shard condvar
+//!   (counted as a **stall**: the scoring path had to wait);
+//! * kit unreserved → steal fabrication inline (also a stall), unless
+//!   `refill_batches = 0`, in which case the dry bank is a typed
+//!   [`Error::Overload`] — backpressure, never a panic.
+
+use super::kit_seed;
+use crate::offline::bank::BankConfig;
+use crate::offline::dealer::Dealer;
+use crate::offline::store::{Demand, TripleStore};
+use crate::runtime::pool;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock a mutex, riding through poisoning: bank state mutates
+/// atomically under the lock (counter bumps and queue inserts), so a
+/// panicking peer thread leaves it consistent; the panic itself still
+/// propagates through the pool's join.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// One session's kit stock inside a shard.
+struct SessionStock {
+    /// Fabricated, not-yet-consumed kits by batch index (BTreeMap per
+    /// the no-unordered-iteration lint — stock reports iterate).
+    kits: BTreeMap<usize, TripleStore<Dealer>>,
+    /// Next batch index **not yet reserved** for fabrication. Batches
+    /// in `consume_next..fab_next` are stocked or being fabricated.
+    fab_next: usize,
+    /// Next batch index the session will check out.
+    consume_next: usize,
+}
+
+/// Mutable state of one shard, all under one lock.
+struct ShardState {
+    sessions: BTreeMap<u64, SessionStock>,
+    prefabricated: u64,
+    replenished: u64,
+    consumed: u64,
+    /// Checkouts that found their kit not ready (waited or fabricated
+    /// inline) — the gateway analogue of the serve loop's bank stall.
+    stalls: u64,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    /// Signalled when kits are inserted into this shard.
+    cv: Condvar,
+}
+
+/// Replenisher coordination: a stop flag plus a work epoch bumped on
+/// every checkout, so a parked replenisher can never miss a
+/// stock-dropped event (it re-scans whenever the epoch moved).
+struct WorkState {
+    stop: bool,
+    epoch: u64,
+}
+
+/// Exact stock ledger of a shard or of the whole bank.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BankLedger {
+    /// Kits fabricated up front at construction.
+    pub prefabricated: u64,
+    /// Kits added after construction (background or inline-stolen).
+    pub replenished: u64,
+    /// Kits checked out.
+    pub consumed: u64,
+    /// Kits currently in stock.
+    pub stock: u64,
+    /// Checkouts that found their kit not ready.
+    pub stalls: u64,
+}
+
+impl BankLedger {
+    /// `prefabricated + replenished − consumed == stock`.
+    pub fn balances(&self) -> bool {
+        self.prefabricated + self.replenished == self.consumed + self.stock
+    }
+
+    fn merge(&mut self, o: &BankLedger) {
+        self.prefabricated += o.prefabricated;
+        self.replenished += o.replenished;
+        self.consumed += o.consumed;
+        self.stock += o.stock;
+        self.stalls += o.stalls;
+    }
+}
+
+/// The gateway's sharded, background-replenished kit bank.
+pub struct ShardedBank {
+    shards: Vec<Shard>,
+    /// Session tag → shard index (workload order, round-robin).
+    by_tag: BTreeMap<u64, usize>,
+    per_batch: Demand,
+    seed: u128,
+    party: usize,
+    cfg: BankConfig,
+    /// Micro-batches per session (kit indices run `0..batches`).
+    batches: usize,
+    work: Mutex<WorkState>,
+    work_cv: Condvar,
+}
+
+impl ShardedBank {
+    /// Plan a bank for `tags` sessions of `batches` micro-batches each,
+    /// and prefabricate `min(cfg.prefab_batches, batches)` kits per
+    /// session on up to `threads` workers. The stocked material is
+    /// bit-identical for any `threads`/`shards` value (stateless kit
+    /// seeds), so the two parties may configure them independently.
+    pub fn new(
+        seed: u128,
+        party: usize,
+        per_batch: Demand,
+        tags: &[u64],
+        batches: usize,
+        cfg: BankConfig,
+        shards: usize,
+        threads: usize,
+    ) -> ShardedBank {
+        let nshards = shards.max(1).min(tags.len().max(1));
+        let prefab = cfg.prefab_batches.min(batches);
+        let mut by_tag = BTreeMap::new();
+        let mut states: Vec<ShardState> = (0..nshards)
+            .map(|_| ShardState {
+                sessions: BTreeMap::new(),
+                prefabricated: 0,
+                replenished: 0,
+                consumed: 0,
+                stalls: 0,
+            })
+            .collect();
+        for (i, &tag) in tags.iter().enumerate() {
+            let si = i % nshards;
+            by_tag.insert(tag, si);
+            states[si].sessions.insert(
+                tag,
+                SessionStock { kits: BTreeMap::new(), fab_next: prefab, consume_next: 0 },
+            );
+        }
+        // Prefab fan-out: one flat job list over (tag, batch), expanded
+        // in index order — output kits are position-independent anyway.
+        let jobs: Vec<(u64, usize)> =
+            tags.iter().flat_map(|&t| (0..prefab).map(move |b| (t, b))).collect();
+        let kits = pool::parallel_gen(threads.max(1), jobs.len(), |i| {
+            let (tag, batch) = jobs[i];
+            fabricate_kit(seed, party, &per_batch, tag, batch)
+        });
+        for ((tag, batch), kit) in jobs.into_iter().zip(kits) {
+            let si = by_tag[&tag];
+            if let Some(ss) = states[si].sessions.get_mut(&tag) {
+                ss.kits.insert(batch, kit);
+                states[si].prefabricated += 1;
+            }
+        }
+        ShardedBank {
+            shards: states
+                .into_iter()
+                .map(|s| Shard { state: Mutex::new(s), cv: Condvar::new() })
+                .collect(),
+            by_tag,
+            per_batch,
+            seed,
+            party,
+            cfg,
+            batches,
+            work: Mutex::new(WorkState { stop: false, epoch: 0 }),
+            work_cv: Condvar::new(),
+        }
+    }
+
+    /// The planned per-batch demand.
+    pub fn per_batch_demand(&self) -> &Demand {
+        &self.per_batch
+    }
+
+    /// Check out session `tag`'s kit for `batch` (strictly sequential
+    /// per session). Blocks while the kit is being fabricated
+    /// elsewhere; steals fabrication inline when nobody has reserved
+    /// it; returns [`Error::Overload`] if the bank is dry with
+    /// replenishment disabled.
+    pub fn checkout(&self, tag: u64, batch: usize) -> Result<TripleStore<Dealer>> {
+        let si = *self
+            .by_tag
+            .get(&tag)
+            .ok_or_else(|| Error::Offline(format!("bank knows no session {tag}")))?;
+        let shard = &self.shards[si];
+        let mut stalled = false;
+        let mut g = lock(&shard.state);
+        loop {
+            let ss = g
+                .sessions
+                .get_mut(&tag)
+                .ok_or_else(|| Error::Offline(format!("bank lost session {tag}")))?;
+            if batch != ss.consume_next {
+                return Err(Error::Offline(format!(
+                    "session {tag}: out-of-order checkout of batch {batch} (next is {})",
+                    ss.consume_next
+                )));
+            }
+            if let Some(kit) = ss.kits.remove(&batch) {
+                ss.consume_next += 1;
+                g.consumed += 1;
+                if stalled {
+                    g.stalls += 1;
+                }
+                drop(g);
+                // Stock dropped: wake the replenishers to re-scan.
+                self.bump_epoch();
+                return Ok(kit);
+            }
+            if ss.fab_next <= batch {
+                // Unreserved and unstocked.
+                if self.cfg.refill_batches == 0 {
+                    return Err(Error::Overload(format!(
+                        "session {tag}: material bank dry at batch {batch} and \
+                         replenishment is disabled (refill_batches = 0)"
+                    )));
+                }
+                // Steal fabrication inline: reserve the refill range so
+                // no other thread duplicates it, build unlocked.
+                let lo = ss.fab_next;
+                let hi = (lo + self.cfg.refill_batches).min(self.batches);
+                ss.fab_next = hi;
+                drop(g);
+                stalled = true;
+                let kits: Vec<_> = (lo..hi)
+                    .map(|b| fabricate_kit(self.seed, self.party, &self.per_batch, tag, b))
+                    .collect();
+                g = lock(&shard.state);
+                if let Some(ss) = g.sessions.get_mut(&tag) {
+                    for (b, kit) in (lo..hi).zip(kits) {
+                        ss.kits.insert(b, kit);
+                    }
+                }
+                g.replenished += (hi - lo) as u64;
+                shard.cv.notify_all();
+                // Loop back: our batch is in stock now.
+            } else {
+                // Reserved by another thread (background replenisher or
+                // a stealing worker): wait for the insert.
+                stalled = true;
+                g = shard.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+    }
+
+    /// Body of one background replenisher thread (run it via
+    /// [`crate::runtime::pool::run_workers`], alongside the scoring
+    /// workers). Scans shards for sessions whose stocked-or-in-flight
+    /// kit count fell below `low_water`, reserves a refill range,
+    /// fabricates it unlocked, and parks on the work condvar when
+    /// nothing needs doing. Returns after [`ShardedBank::stop`].
+    pub fn replenish_loop(&self) {
+        let mut seen = 0u64;
+        loop {
+            while let Some((si, tag, lo, hi)) = self.reserve_refill() {
+                let kits: Vec<_> = (lo..hi)
+                    .map(|b| fabricate_kit(self.seed, self.party, &self.per_batch, tag, b))
+                    .collect();
+                let shard = &self.shards[si];
+                let mut g = lock(&shard.state);
+                if let Some(ss) = g.sessions.get_mut(&tag) {
+                    for (b, kit) in (lo..hi).zip(kits) {
+                        ss.kits.insert(b, kit);
+                    }
+                }
+                g.replenished += (hi - lo) as u64;
+                shard.cv.notify_all();
+            }
+            let mut g = lock(&self.work);
+            if g.stop {
+                return;
+            }
+            if g.epoch == seen {
+                g = self.work_cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            seen = g.epoch;
+        }
+    }
+
+    /// Tell every parked replenisher to exit once no refill work is
+    /// pending. Idempotent.
+    pub fn stop(&self) {
+        let mut g = lock(&self.work);
+        g.stop = true;
+        self.work_cv.notify_all();
+    }
+
+    /// Reserve the next refill job in deterministic shard/session scan
+    /// order, or `None` when every session is stocked ahead of its
+    /// low-water mark (or fully fabricated).
+    fn reserve_refill(&self) -> Option<(usize, u64, usize, usize)> {
+        if self.cfg.refill_batches == 0 || self.cfg.low_water == 0 {
+            return None;
+        }
+        for (si, shard) in self.shards.iter().enumerate() {
+            let mut g = lock(&shard.state);
+            for (&tag, ss) in g.sessions.iter_mut() {
+                let ahead = ss.fab_next - ss.consume_next;
+                if ss.fab_next < self.batches && ahead < self.cfg.low_water {
+                    let lo = ss.fab_next;
+                    let hi = (lo + self.cfg.refill_batches).min(self.batches);
+                    ss.fab_next = hi;
+                    return Some((si, tag, lo, hi));
+                }
+            }
+        }
+        None
+    }
+
+    fn bump_epoch(&self) {
+        let mut g = lock(&self.work);
+        g.epoch = g.epoch.wrapping_add(1);
+        self.work_cv.notify_all();
+    }
+
+    /// Per-shard ledgers, in shard order. Each balances at every
+    /// instant (taken under the shard lock).
+    pub fn shard_ledgers(&self) -> Vec<BankLedger> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let g = lock(&s.state);
+                BankLedger {
+                    prefabricated: g.prefabricated,
+                    replenished: g.replenished,
+                    consumed: g.consumed,
+                    stock: g.sessions.values().map(|ss| ss.kits.len() as u64).sum(),
+                    stalls: g.stalls,
+                }
+            })
+            .collect()
+    }
+
+    /// The global ledger (shard sum).
+    pub fn ledger(&self) -> BankLedger {
+        let mut total = BankLedger::default();
+        for l in self.shard_ledgers() {
+            total.merge(&l);
+        }
+        total
+    }
+}
+
+/// Fabricate one `(tag, batch)` kit: a [`TripleStore`] prefilled with
+/// the planned per-batch demand from the kit's stateless dealer.
+fn fabricate_kit(
+    seed: u128,
+    party: usize,
+    per_batch: &Demand,
+    tag: u64,
+    batch: usize,
+) -> TripleStore<Dealer> {
+    let mut store = TripleStore::new(Dealer::new(kit_seed(seed, tag, batch), party));
+    store.prefill(per_batch);
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::ss::triples::TripleSource;
+
+    fn demand() -> Demand {
+        let mut d = Demand::default();
+        d.mat(4, 2, 3);
+        d.vec_lanes(8);
+        d
+    }
+
+    fn bank(tags: &[u64], batches: usize, cfg: BankConfig, shards: usize) -> ShardedBank {
+        ShardedBank::new(0xBA4F, 0, demand(), tags, batches, cfg, shards, 1)
+    }
+
+    #[test]
+    fn sequential_checkout_balances_and_never_misses() {
+        let cfg = BankConfig { prefab_batches: 2, low_water: 0, refill_batches: 2 };
+        let b = bank(&[1, 2, 3], 5, cfg, 2);
+        assert_eq!(b.ledger().prefabricated, 6);
+        for tag in [1u64, 2, 3] {
+            for batch in 0..5 {
+                let mut kit = b.checkout(tag, batch).unwrap();
+                let _ = kit.mat_triple(4, 2, 3);
+                let _ = kit.vec_triple(8);
+                assert_eq!(kit.misses, 0, "tag {tag} batch {batch}");
+            }
+        }
+        let l = b.ledger();
+        assert!(l.balances(), "{l:?}");
+        assert_eq!(l.consumed, 15);
+        assert_eq!(l.prefabricated + l.replenished, 15 + l.stock);
+        // low_water 0: every refill was an inline steal → stalls > 0.
+        assert!(l.stalls > 0);
+    }
+
+    #[test]
+    fn kits_match_across_parties_and_fabricators() {
+        // Party 0 checks out via inline stealing (prefab 0); party 1 has
+        // everything prefabricated. The correlated randomness must still
+        // pair: u·v == z across the two shares.
+        let steal = BankConfig { prefab_batches: 0, low_water: 0, refill_batches: 1 };
+        let stock = BankConfig { prefab_batches: 3, low_water: 0, refill_batches: 1 };
+        let b0 = ShardedBank::new(0xBA4F, 0, demand(), &[9], 3, steal, 1, 1);
+        let b1 = ShardedBank::new(0xBA4F, 1, demand(), &[9], 3, stock, 1, 2);
+        for batch in 0..3 {
+            let t0 = b0.checkout(9, batch).unwrap().vec_triple(8);
+            let t1 = b1.checkout(9, batch).unwrap().vec_triple(8);
+            for i in 0..8 {
+                let u = t0.u[i].wrapping_add(t1.u[i]);
+                let v = t0.v[i].wrapping_add(t1.v[i]);
+                let z = t0.z[i].wrapping_add(t1.z[i]);
+                assert_eq!(u.wrapping_mul(v), z, "batch {batch} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dry_bank_without_refill_is_a_typed_overload() {
+        let cfg = BankConfig { prefab_batches: 1, low_water: 0, refill_batches: 0 };
+        let b = bank(&[5], 3, cfg, 1);
+        assert!(b.checkout(5, 0).is_ok());
+        let err = b.checkout(5, 1).unwrap_err();
+        assert!(matches!(err, Error::Overload(_)), "{err}");
+        assert!(err.to_string().contains("replenishment is disabled"), "{err}");
+        assert!(b.ledger().balances());
+    }
+
+    #[test]
+    fn out_of_order_and_unknown_sessions_are_typed_errors() {
+        let cfg = BankConfig { prefab_batches: 2, low_water: 0, refill_batches: 1 };
+        let b = bank(&[7], 2, cfg, 1);
+        assert!(b.checkout(8, 0).unwrap_err().to_string().contains("no session"));
+        assert!(b.checkout(7, 1).unwrap_err().to_string().contains("out-of-order"));
+    }
+
+    #[test]
+    fn background_replenisher_keeps_the_scoring_path_stall_free() {
+        // One replenisher thread races the consumer; with a generous
+        // low-water mark it fabricates ahead, so checkouts (which only
+        // start after the initial prefab) never stall.
+        let cfg = BankConfig { prefab_batches: 2, low_water: 2, refill_batches: 2 };
+        let b = bank(&[1], 12, cfg, 1);
+        let done: Vec<Result<()>> = pool::run_workers("bankt", 2, |i| {
+            if i == 0 {
+                // Stop the replenisher even on error, or the join hangs.
+                let r = (0..12).try_for_each(|batch| b.checkout(1, batch).map(drop));
+                b.stop();
+                r
+            } else {
+                b.replenish_loop();
+                Ok(())
+            }
+        });
+        assert!(done.into_iter().all(|r| r.is_ok()));
+        let l = b.ledger();
+        assert!(l.balances(), "{l:?}");
+        assert_eq!(l.consumed, 12);
+        assert_eq!(l.prefabricated, 2);
+        assert_eq!(l.replenished, 10 + l.stock);
+    }
+}

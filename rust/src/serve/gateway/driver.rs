@@ -1,0 +1,408 @@
+//! The gateway driver: admit, multiplex, and score many sessions
+//! concurrently over one party-pair link.
+//!
+//! [`gateway_party`] is one party's endpoint (any connected
+//! [`Chan`] backend — the in-process [`gateway_stream`] drives two over
+//! a duplex pair, `ppkmeans gateway` drives one over TCP):
+//!
+//! 1. **hello** — [`super::exchange_hello`] verifies both parties agree
+//!    on every protocol-relevant knob, on the still-flat link;
+//! 2. **admission** — the first [`super::admitted_sessions`] workloads
+//!    are admitted, the rest refused (reported, typed
+//!    [`Error::Overload`] semantics — never a panic);
+//! 3. **probe** — one throwaway scoring of the first workload's first
+//!    block against a recording [`TripleStore`] learns the exact
+//!    per-batch offline [`Demand`] (the repo's record-then-prefill
+//!    idiom), still on the flat link, seeded under the reserved tag 0;
+//! 4. **mux** — the link becomes a [`MuxLink`]; every admitted session's
+//!    sub-channel is opened *up front* (a frame addressed to an
+//!    unregistered tag would kill the link), then `workers` scoring
+//!    threads pull sessions off a shared cursor while `replenishers`
+//!    background threads keep the [`ShardedBank`] stocked;
+//! 5. **teardown** — the last scoring worker stops the replenishers,
+//!    [`MuxLink::finish`] reassembles the flat channel (leftover frames
+//!    in any inbox are a typed protocol error), and the caller's `Chan`
+//!    is usable again — the coordinator's closing barrier runs on it.
+//!
+//! Per-session transcripts are bit-identical for any `workers` /
+//! `replenishers` / `shards` / `sessions` mix (tag-keyed seeds,
+//! per-session meters) — the determinism regressions live in
+//! `rust/tests/gateway.rs`.
+
+use super::bank::{BankLedger, ShardedBank};
+use super::{admitted_sessions, exchange_hello, session_seed, GatewayConfig, SessionWorkload};
+use crate::data::blobs::Dataset;
+use crate::net::meter::{Meter, PhaseStats};
+use crate::net::mux::MuxLink;
+use crate::net::{duplex_pair, run_two_party, Chan};
+use crate::offline::dealer::Dealer;
+use crate::offline::store::{Demand, TripleStore};
+use crate::runtime::pool;
+use crate::serve::model::TrainedModel;
+use crate::serve::scorer::{ScoreResult, Scorer};
+use crate::util::error::{Error, Result};
+use crate::util::timer::Timer;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One admitted session's complete outcome, as seen by one party.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// The session's tag (mux frame tag, seed key).
+    pub tag: u64,
+    /// Revealed per-batch results (identical on both parties).
+    pub results: Vec<ScoreResult>,
+    /// This session's complete online traffic — its own meter total
+    /// (warmup + every batch), tag bytes included. Summed over all
+    /// sessions this equals the link's `gateway.mux` byte/msg totals.
+    pub online: PhaseStats,
+    /// Wall-clock from the session's warmup to its last reveal, as
+    /// scheduled on this party (includes any bank stalls it hit).
+    pub wall_secs: f64,
+    /// Offline-store draws that missed prefabricated stock (0 when the
+    /// probe demand matched — asserted in benches).
+    pub misses: u64,
+}
+
+/// Everything one party's gateway run produces.
+#[derive(Debug)]
+pub struct GatewayOutput {
+    /// Per admitted session, in workload order: its tag and its outcome.
+    /// A failed session (e.g. bank dry with replenishment disabled —
+    /// [`Error::Overload`]) aborts deterministically at the same batch
+    /// boundary on both parties; the others keep scoring.
+    pub sessions: Vec<(u64, Result<SessionReport>)>,
+    /// Tags refused at admission (offered beyond the queue bound).
+    pub rejected: Vec<u64>,
+    /// The probe-recorded per-batch offline demand the bank was planned
+    /// from (this party's own draws).
+    pub per_batch_demand: Demand,
+    /// The bank's global ledger at teardown
+    /// (`prefabricated + replenished − consumed == stock`).
+    pub ledger: BankLedger,
+    /// Wall-clock of the whole run (hello through mux teardown).
+    pub wall_secs: f64,
+}
+
+impl GatewayOutput {
+    /// Sessions admitted (scored or deterministically aborted).
+    pub fn admitted(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Total offline-store misses across all admitted sessions.
+    pub fn misses(&self) -> u64 {
+        self.sessions
+            .iter()
+            .filter_map(|(_, r)| r.as_ref().ok())
+            .map(|s| s.misses)
+            .sum()
+    }
+
+    /// Sum of all per-session online meters — must equal the link's
+    /// `gateway.mux` totals byte-for-byte (regression-tested).
+    pub fn online_total(&self) -> PhaseStats {
+        let mut sum = PhaseStats::default();
+        for (_, r) in &self.sessions {
+            if let Ok(s) = r {
+                sum.merge(&s.online);
+            }
+        }
+        sum
+    }
+}
+
+/// Decrements the live-worker count on scope exit — panic or return —
+/// and stops the bank replenishers when the last scoring worker leaves,
+/// so the `run_workers` join can never hang on a parked replenisher.
+struct StopGuard<'a> {
+    bank: &'a ShardedBank,
+    active: &'a AtomicUsize,
+}
+
+impl Drop for StopGuard<'_> {
+    fn drop(&mut self) {
+        if self.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.bank.stop();
+        }
+    }
+}
+
+/// Run **one party's** gateway over any connected [`Chan`]. `workloads`
+/// holds every *offered* session (unique non-zero tags, `cfg.batches`
+/// raw feature blocks each, this party's vertical slice); admission
+/// keeps the first [`admitted_sessions`]`(cfg.sessions, cfg.queue)` of
+/// them. On success the channel is flat again (post-[`MuxLink::finish`])
+/// and the caller may keep using it.
+pub fn gateway_party(
+    chan: &mut Chan,
+    model: TrainedModel,
+    workloads: Vec<SessionWorkload>,
+    cfg: &GatewayConfig,
+) -> Result<GatewayOutput> {
+    if cfg.sessions == 0 || cfg.batches == 0 || cfg.batch_rows == 0 {
+        return Err(Error::Config(
+            "gateway needs sessions ≥ 1, batches ≥ 1 and batch_rows ≥ 1".into(),
+        ));
+    }
+    if workloads.len() != cfg.sessions {
+        return Err(Error::Config(format!(
+            "gateway offered {} workloads but cfg.sessions = {}",
+            workloads.len(),
+            cfg.sessions
+        )));
+    }
+    let mut tags = BTreeSet::new();
+    for w in &workloads {
+        if w.tag == 0 {
+            return Err(Error::Config("session tag 0 is reserved for the demand probe".into()));
+        }
+        if !tags.insert(w.tag) {
+            return Err(Error::Config(format!("duplicate session tag {}", w.tag)));
+        }
+        if w.blocks.len() != cfg.batches {
+            return Err(Error::Config(format!(
+                "session {} offers {} blocks but cfg.batches = {}",
+                w.tag,
+                w.blocks.len(),
+                cfg.batches
+            )));
+        }
+    }
+    let party = chan.party;
+    let threads = cfg.parallelism.threads;
+    crate::runtime::pool::set_global_threads(threads);
+    crate::runtime::simd::set_global_lanes(cfg.lanes.width);
+    if let Some(link) = cfg.shape {
+        chan.set_shaper(link);
+    }
+    let wall = Timer::started();
+
+    // 1. Hello: agree on every protocol-relevant knob or die typed.
+    exchange_hello(chan, cfg)?;
+
+    // 2. Admission: both parties compute the same split (pure in the
+    //    hello-verified parameters).
+    let admitted = admitted_sessions(cfg.sessions, cfg.queue);
+    let rejected: Vec<u64> = workloads[admitted..].iter().map(|w| w.tag).collect();
+    let admitted_wl = &workloads[..admitted];
+
+    // 3. Demand probe under the reserved tag 0, still on the flat link:
+    //    a recording store logs the exact per-batch demand while the
+    //    probe batch generates its material inline.
+    let probe_seed = session_seed(cfg.seed, 0);
+    let mut probe_scorer = Scorer::new(model.clone(), probe_seed ^ 0x5C0_0E);
+    let mut probe_warm = Dealer::new(probe_seed ^ 0x11, party);
+    probe_scorer.warmup(chan, &mut probe_warm);
+    let mut probe = TripleStore::new(Dealer::new(probe_seed ^ 0x22, party));
+    probe_scorer.score_batch(chan, &mut probe, &admitted_wl[0].blocks[0])?;
+    let per_batch = probe.demand.clone();
+
+    // 4. Bank + mux + workers.
+    let admitted_tags: Vec<u64> = admitted_wl.iter().map(|w| w.tag).collect();
+    let bank = ShardedBank::new(
+        cfg.seed,
+        party,
+        per_batch.clone(),
+        &admitted_tags,
+        cfg.batches,
+        cfg.bank,
+        cfg.shards,
+        threads,
+    );
+    // Swap the caller's channel for a placeholder while the mux owns
+    // the link; finish() puts the flat channel back.
+    let (placeholder, _spare) = duplex_pair();
+    let link = std::mem::replace(chan, placeholder);
+    let mux = MuxLink::new(link)?;
+    // Pre-open EVERY admitted session before any worker sends: a frame
+    // arriving for an unregistered tag kills the link.
+    let mut slots: Vec<Mutex<Option<Chan>>> = Vec::with_capacity(admitted);
+    for tag in &admitted_tags {
+        slots.push(Mutex::new(Some(mux.session(*tag)?)));
+    }
+
+    let workers = cfg.workers.max(1);
+    let cursor = AtomicUsize::new(0);
+    let active = AtomicUsize::new(workers);
+    let seed = cfg.seed;
+    let model_ref = &model;
+    let bank_ref = &bank;
+    let slots_ref = &slots;
+    let bodies = pool::run_workers("gw", workers + cfg.replenishers, |i| {
+        if i >= workers {
+            bank_ref.replenish_loop();
+            return Vec::new();
+        }
+        let _guard = StopGuard { bank: bank_ref, active: &active };
+        let score_session = |idx: usize| -> Result<SessionReport> {
+            let w = &admitted_wl[idx];
+            let mut sch = slots_ref[idx]
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .take()
+                .ok_or_else(|| {
+                    Error::Runtime(format!("session {} channel claimed twice", w.tag))
+                })?;
+            let t0 = Timer::started();
+            let s_seed = session_seed(seed, w.tag);
+            let mut scorer = Scorer::new(model_ref.clone(), s_seed ^ 0x5C0_0E);
+            let mut warm = Dealer::new(s_seed ^ 0x11, party);
+            scorer.warmup(&mut sch, &mut warm);
+            let mut results = Vec::with_capacity(w.blocks.len());
+            let mut misses = 0u64;
+            for (b, block) in w.blocks.iter().enumerate() {
+                let mut kit = bank_ref.checkout(w.tag, b)?;
+                results.push(scorer.score_batch(&mut sch, &mut kit, block)?);
+                misses += kit.misses;
+            }
+            Ok(SessionReport {
+                tag: w.tag,
+                results,
+                online: sch.into_meter().total(),
+                wall_secs: t0.secs(),
+                misses,
+            })
+        };
+        let mut out = Vec::new();
+        loop {
+            let idx = cursor.fetch_add(1, Ordering::Relaxed);
+            if idx >= admitted {
+                return out;
+            }
+            out.push((idx, admitted_wl[idx].tag, score_session(idx)));
+        }
+    });
+
+    // Collect per-session outcomes back into workload order.
+    let mut by_idx: Vec<Option<(u64, Result<SessionReport>)>> =
+        (0..admitted).map(|_| None).collect();
+    for worker_out in bodies {
+        for (idx, tag, r) in worker_out {
+            by_idx[idx] = Some((tag, r));
+        }
+    }
+    let sessions: Vec<(u64, Result<SessionReport>)> = by_idx
+        .into_iter()
+        .enumerate()
+        .map(|(idx, slot)| {
+            slot.unwrap_or_else(|| {
+                let tag = admitted_wl[idx].tag;
+                (tag, Err(Error::Runtime(format!("session {tag} was never scheduled"))))
+            })
+        })
+        .collect();
+
+    // 5. Teardown: an aborted session may have left its channel in its
+    //    slot — drop the slots so the mux is uniquely owned again.
+    drop(slots);
+    let ledger = bank.ledger();
+    *chan = mux.finish()?;
+    chan.set_phase("gateway.done");
+
+    Ok(GatewayOutput {
+        sessions,
+        rejected,
+        per_batch_demand: per_batch,
+        ledger,
+        wall_secs: wall.secs(),
+    })
+}
+
+/// Both parties' view of one in-process gateway run.
+#[derive(Debug)]
+pub struct GatewayStreamOutput {
+    /// Party 0's gateway output.
+    pub a: GatewayOutput,
+    /// Party 1's gateway output (identical reveals, own meters/ledger).
+    pub b: GatewayOutput,
+    /// Party 0's full link meter (handshake, probe, `gateway.mux`).
+    pub meter_a: Meter,
+    /// Party 1's full link meter.
+    pub meter_b: Meter,
+}
+
+/// Drive a full two-party gateway in process: slice the (raw, joint)
+/// `stream` into `sessions × batches × batch_rows` micro-batches —
+/// consecutive row chunks per session, tags `1..=sessions`, split at
+/// the vertical boundary — and run [`gateway_party`] on both ends of a
+/// duplex pair. The in-process analogue of two `ppkmeans gateway`
+/// processes.
+pub fn gateway_stream(
+    models: [TrainedModel; 2],
+    stream: &Dataset,
+    cfg: &GatewayConfig,
+) -> Result<GatewayStreamOutput> {
+    let [ma, mb] = models;
+    if ma.d != stream.d {
+        return Err(Error::Config(format!(
+            "stream has d={} but the model was trained with d={}",
+            stream.d, ma.d
+        )));
+    }
+    if ma.k != mb.k || ma.d != mb.d || ma.d_a != mb.d_a {
+        return Err(Error::Config("the two model shares disagree on geometry".into()));
+    }
+    if ma.party != 0 || mb.party != 1 {
+        return Err(Error::Config(
+            "gateway_stream expects [party 0's share, party 1's share] in order".into(),
+        ));
+    }
+    if ma.tau != mb.tau {
+        return Err(Error::Config(format!(
+            "model shares disagree on τ ({} vs {}) — they come from different \
+             training runs and would reconstruct garbage centroids",
+            ma.tau, mb.tau
+        )));
+    }
+    let need = cfg.sessions * cfg.batches * cfg.batch_rows;
+    if stream.n < need {
+        return Err(Error::Config(format!(
+            "stream of {} transactions is shorter than {} sessions × {} batches × {} rows",
+            stream.n, cfg.sessions, cfg.batches, cfg.batch_rows
+        )));
+    }
+    let (d, d_a) = (stream.d, ma.d_a);
+    let mut wl_a = Vec::with_capacity(cfg.sessions);
+    let mut wl_b = Vec::with_capacity(cfg.sessions);
+    for s in 0..cfg.sessions {
+        let mut blocks_a = Vec::with_capacity(cfg.batches);
+        let mut blocks_b = Vec::with_capacity(cfg.batches);
+        for b in 0..cfg.batches {
+            let base = (s * cfg.batches + b) * cfg.batch_rows;
+            let mut xa = Vec::with_capacity(cfg.batch_rows * d_a);
+            let mut xb = Vec::with_capacity(cfg.batch_rows * (d - d_a));
+            for i in base..base + cfg.batch_rows {
+                let row = stream.row(i);
+                xa.extend_from_slice(&row[..d_a]);
+                xb.extend_from_slice(&row[d_a..]);
+            }
+            blocks_a.push(xa);
+            blocks_b.push(xb);
+        }
+        let tag = s as u64 + 1;
+        wl_a.push(SessionWorkload { tag, blocks: blocks_a });
+        wl_b.push(SessionWorkload { tag, blocks: blocks_b });
+    }
+    let (cfg_a, cfg_b) = (cfg.clone(), cfg.clone());
+    let ((ra, meter_a), (rb, meter_b)) = run_two_party(
+        move |c| gateway_party(c, ma, wl_a, &cfg_a),
+        move |c| gateway_party(c, mb, wl_b, &cfg_b),
+    );
+    let (a, b) = (ra?, rb?);
+    #[cfg(debug_assertions)]
+    {
+        for ((ta, sa), (tb, sb)) in a.sessions.iter().zip(&b.sessions) {
+            debug_assert_eq!(ta, tb, "parties must admit the same sessions");
+            if let (Ok(sa), Ok(sb)) = (sa, sb) {
+                debug_assert_eq!(
+                    sa.results, sb.results,
+                    "session {ta}: parties must reveal identical scores"
+                );
+            }
+        }
+        debug_assert_eq!(a.rejected, b.rejected, "parties must reject the same sessions");
+    }
+    Ok(GatewayStreamOutput { a, b, meter_a, meter_b })
+}

@@ -1,0 +1,269 @@
+//! The scoring gateway: many concurrent sessions over one party link.
+//!
+//! The paper's deployment is a fraud-detection *service* — millions of
+//! users, each an independent stream of transactions to score — while
+//! [`crate::serve::driver::serve_stream`] pumps exactly one stream over
+//! one channel. This subsystem closes that gap with three pieces:
+//!
+//! * **session mux** ([`crate::net::mux`]) — tagged frames carry many
+//!   concurrent [`crate::serve::Scorer`] sessions over a single
+//!   party-pair link; per-session meters still sum to the link totals;
+//! * **sharded material bank** ([`bank::ShardedBank`]) — per-shard kit
+//!   stock with work-stealing checkout and *background* replenishment
+//!   on [`crate::runtime::pool`], overlapping fabrication with online
+//!   scoring instead of stalling it;
+//! * **admission control** ([`admitted_sessions`]) — a bounded session
+//!   queue whose overflow is a typed [`Error::Overload`], never a
+//!   panic (`no-panic-in-wire-paths` covers this subtree).
+//!
+//! ## Determinism contract
+//!
+//! Every per-session seed keys off the session **tag** alone
+//! ([`session_seed`] / [`kit_seed`]), so a session's reveals, shares
+//! and per-session meter are bit-identical whether it runs alone
+//! (`sessions = 1`) or among `N` concurrent sessions — frames may
+//! reorder on the wire, transcripts are per-session. Worker, shard and
+//! replenisher counts are party-local throughput knobs.
+//!
+//! ## Wire compatibility
+//!
+//! The gateway extension is negotiated *before* the first tagged frame
+//! by [`exchange_hello`] — nine plain `u64` words on the flat link, in
+//! the same framed format as the PPKMWRE1 deployment handshake (see
+//! `docs/PROTOCOLS.md`, "Gateway"). A peer that does not speak the
+//! extension fails the magic check with a typed error instead of
+//! misparsing tagged frames.
+
+// Backpressure and peer misbehaviour surface as typed errors — the
+// clippy deny backs ppkm-lint's no-panic-in-wire-paths at the type
+// level, as in net/ and serve::driver.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod bank;
+pub mod driver;
+
+pub use bank::{BankLedger, ShardedBank};
+pub use driver::{
+    gateway_party, gateway_stream, GatewayOutput, GatewayStreamOutput, SessionReport,
+};
+
+use crate::net::cost::CostModel;
+use crate::net::Chan;
+use crate::offline::bank::BankConfig;
+use crate::runtime::pool::Parallelism;
+use crate::runtime::simd::Lanes;
+use crate::util::error::{Error, Result};
+
+/// Magic word opening the gateway hello: `"PPKMGWY1"` big-endian.
+pub const GATEWAY_MAGIC: u64 = u64::from_be_bytes(*b"PPKMGWY1");
+
+/// Version of the gateway hello / tagged-frame extension.
+pub const GATEWAY_WIRE_VERSION: u64 = 1;
+
+/// Parameters of a gateway run.
+///
+/// `sessions`, `queue`, `batches`, `batch_rows` and the bank stocking
+/// policy are **protocol-relevant** (verified by [`exchange_hello`] and
+/// digested into scenarios); `workers`, `replenishers`, `shards`,
+/// `parallelism` and `lanes` are party-local throughput knobs — reveals
+/// and per-session meters are bit-identical for any values.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Sessions offered to the gateway (the client-side demand).
+    pub sessions: usize,
+    /// Admission queue bound: at most this many sessions are admitted;
+    /// the rest are refused with [`Error::Overload`]. `0` = unbounded.
+    pub queue: usize,
+    /// Concurrent scoring worker threads (party-local, ≥ 1).
+    pub workers: usize,
+    /// Background bank replenisher threads (party-local; `0` makes all
+    /// replenishment inline on the scoring path, counted as stalls).
+    pub replenishers: usize,
+    /// Bank shards (party-local, ≥ 1); sessions map to shards
+    /// round-robin in workload order.
+    pub shards: usize,
+    /// Transactions per micro-batch (uniform across sessions).
+    pub batch_rows: usize,
+    /// Micro-batches per session.
+    pub batches: usize,
+    /// Per-session kit stocking policy: `prefab_batches` kits up front,
+    /// background refill of `refill_batches` whenever fewer than
+    /// `low_water` kits are stocked-or-in-flight. `refill_batches = 0`
+    /// disables replenishment: a dry session fails over to
+    /// [`Error::Overload`].
+    pub bank: BankConfig,
+    /// Seed for all dealers and mask PRGs (public).
+    pub seed: u128,
+    /// Worker threads for party-local compute inside a batch.
+    pub parallelism: Parallelism,
+    /// Packed-lane width for the crypto kernels.
+    pub lanes: Lanes,
+    /// Optional deterministic link shaping of the shared link.
+    pub shape: Option<CostModel>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            sessions: 1,
+            queue: 0,
+            workers: 1,
+            replenishers: 1,
+            shards: 1,
+            batch_rows: 32,
+            batches: 4,
+            bank: BankConfig::default(),
+            seed: 0x6A7E_11E7,
+            parallelism: Parallelism::sequential(),
+            lanes: Lanes::scalar(),
+            shape: None,
+        }
+    }
+}
+
+/// One client session's workload: a unique tag (≥ 1 — tag 0 is the
+/// gateway's demand probe) and this party's raw feature block per
+/// micro-batch.
+#[derive(Debug, Clone)]
+pub struct SessionWorkload {
+    /// Session identity: the mux frame tag and the seed key. Must be
+    /// unique per gateway run and non-zero.
+    pub tag: u64,
+    /// Raw (unnormalized) feature blocks, one per micro-batch, uniform
+    /// `batch_rows × own-d` row-major.
+    pub blocks: Vec<Vec<f64>>,
+}
+
+/// Sessions admitted under the queue bound: `min(offered, queue)`,
+/// with `queue = 0` meaning unbounded. Pure in the protocol-relevant
+/// inputs, so both parties admit the *same* prefix of the workload.
+pub fn admitted_sessions(offered: usize, queue: usize) -> usize {
+    if queue == 0 {
+        offered
+    } else {
+        offered.min(queue)
+    }
+}
+
+/// Base seed of one session's protocol randomness: the scorer's mask
+/// PRG derives from `session_seed ^ 0x5C0_0E` and its warmup dealer
+/// from `session_seed ^ 0x11` — tag-keyed, so a session's shares don't
+/// depend on which other sessions run (`sessions = 1 ≡ sessions = N`).
+pub fn session_seed(seed: u128, tag: u64) -> u128 {
+    seed ^ ((tag as u128) << 96)
+}
+
+/// Dealer seed of one session-batch material kit. Tag and batch index
+/// occupy disjoint bit ranges, so every kit across the whole gateway
+/// run has a distinct, stateless seed — which is what lets *any*
+/// worker or replenisher fabricate *any* kit (work-stealing) while the
+/// two parties stay paired on correlated randomness.
+pub fn kit_seed(seed: u128, tag: u64, batch: usize) -> u128 {
+    session_seed(seed, tag) ^ ((batch as u128) << 40) ^ 0x6B17
+}
+
+/// Exchange and verify the gateway hello on the still-flat link (phase
+/// `gateway.handshake`): nine words covering the magic, the extension
+/// version, and every protocol-relevant knob. A disagreeing peer —
+/// wrong magic/version, or a parameter mismatch that would desync the
+/// two parties' admission or bank schedules — yields a typed
+/// [`Error::Protocol`] before any tagged frame is sent.
+pub fn exchange_hello(chan: &mut Chan, cfg: &GatewayConfig) -> Result<()> {
+    chan.set_phase("gateway.handshake");
+    let mine = [
+        GATEWAY_MAGIC,
+        GATEWAY_WIRE_VERSION,
+        cfg.sessions as u64,
+        cfg.queue as u64,
+        cfg.batches as u64,
+        cfg.batch_rows as u64,
+        cfg.bank.prefab_batches as u64,
+        cfg.bank.low_water as u64,
+        cfg.bank.refill_batches as u64,
+    ];
+    let theirs = chan.try_exchange_u64s(&mine)?;
+    if theirs.len() != mine.len() {
+        return Err(Error::Protocol(format!(
+            "gateway hello: peer sent {} words, expected {}",
+            theirs.len(),
+            mine.len()
+        )));
+    }
+    if theirs[0] != GATEWAY_MAGIC {
+        return Err(Error::Protocol(format!(
+            "gateway hello: bad magic {:#018x} (peer does not speak the \
+             tagged-frame extension)",
+            theirs[0]
+        )));
+    }
+    if theirs[1] != GATEWAY_WIRE_VERSION {
+        return Err(Error::Protocol(format!(
+            "gateway hello: peer speaks extension version {}, we speak {}",
+            theirs[1], GATEWAY_WIRE_VERSION
+        )));
+    }
+    let labels = ["sessions", "queue", "batches", "batch_rows", "prefab", "low_water", "refill"];
+    for (i, label) in labels.iter().enumerate() {
+        if theirs[2 + i] != mine[2 + i] {
+            return Err(Error::Protocol(format!(
+                "gateway hello: {label} mismatch (ours {}, peer {}) — the \
+                 parties would desync admission or the bank schedule",
+                mine[2 + i],
+                theirs[2 + i]
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::net::duplex_pair;
+    use crate::runtime::pool;
+
+    #[test]
+    fn admission_is_min_of_offered_and_queue() {
+        assert_eq!(admitted_sessions(8, 0), 8, "queue 0 = unbounded");
+        assert_eq!(admitted_sessions(8, 3), 3);
+        assert_eq!(admitted_sessions(2, 3), 2);
+    }
+
+    #[test]
+    fn seeds_are_distinct_across_sessions_and_batches() {
+        let base = 0xABCD;
+        let mut seen = std::collections::BTreeSet::new();
+        for tag in 0..10u64 {
+            assert!(seen.insert(session_seed(base, tag)));
+            for batch in 0..10usize {
+                assert!(seen.insert(kit_seed(base, tag, batch)), "tag {tag} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn hello_agrees_and_disagrees() {
+        let cfg = GatewayConfig { sessions: 4, queue: 2, ..GatewayConfig::default() };
+        let (mut c0, mut c1) = duplex_pair();
+        let cfg_b = cfg.clone();
+        let (a, b) = pool::run_pair(
+            move || exchange_hello(&mut c0, &cfg).map(|()| true),
+            move || exchange_hello(&mut c1, &cfg_b).map(|()| true),
+        );
+        assert!(a.unwrap() && b.unwrap());
+
+        // A sessions mismatch must fail BOTH sides with a typed error.
+        let (mut c0, mut c1) = duplex_pair();
+        let ga = GatewayConfig { sessions: 4, ..GatewayConfig::default() };
+        let gb = GatewayConfig { sessions: 5, ..GatewayConfig::default() };
+        let (a, b) = pool::run_pair(
+            move || exchange_hello(&mut c0, &ga),
+            move || exchange_hello(&mut c1, &gb),
+        );
+        let msg = a.unwrap_err().to_string();
+        assert!(msg.contains("sessions mismatch"), "{msg}");
+        assert!(b.is_err());
+    }
+}

@@ -20,12 +20,18 @@
 //!   stream through both parties' scorers backed by replenished
 //!   [`crate::offline::bank::MaterialBank`]s, with per-request phase
 //!   metering.
+//! * [`gateway`] — the session-multiplexed service front:
+//!   [`gateway::gateway_stream`] scores many concurrent sessions over a
+//!   single party-pair link ([`crate::net::mux`]), backed by a sharded,
+//!   background-replenished [`gateway::ShardedBank`] with admission
+//!   control (typed `Error::Overload` backpressure).
 //!
 //! Reporting (latency/throughput under the LAN/WAN link models) lives in
 //! [`crate::coordinator::serve`]; the `ppkmeans serve` / `ppkmeans
 //! score` subcommands and `cargo bench --bench serving` drive it.
 
 pub mod driver;
+pub mod gateway;
 pub mod model;
 pub mod scorer;
 

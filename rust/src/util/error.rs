@@ -29,6 +29,12 @@ pub enum Error {
     /// PJRT runtime failure (artifact missing, compile error, ...).
     Runtime(String),
 
+    /// The scoring gateway refused or aborted a session under load:
+    /// the admission queue is full or the material bank ran dry with
+    /// replenishment disabled. Backpressure, not failure — the caller
+    /// may retry once capacity frees up (see `serve::gateway`).
+    Overload(String),
+
     /// Configuration / CLI error.
     Config(String),
 
@@ -49,6 +55,7 @@ impl std::fmt::Display for Error {
             Error::He(s) => write!(f, "he: {s}"),
             Error::Gc(s) => write!(f, "garbled circuit: {s}"),
             Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Overload(s) => write!(f, "overload: {s}"),
             Error::Config(s) => write!(f, "config: {s}"),
             Error::Xla(s) => write!(f, "xla: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),

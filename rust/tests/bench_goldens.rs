@@ -12,7 +12,10 @@
 //! re-runs the measurement and asserts it is reproducible within the
 //! same process, so CI catches nondeterminism even on a bootstrap run.
 
-use ppkmeans::bench::{serve_counts, serve_golden_lines, train_counts, train_golden_lines};
+use ppkmeans::bench::{
+    gateway_counts, gateway_golden_lines, serve_counts, serve_golden_lines, train_counts,
+    train_golden_lines,
+};
 use std::path::PathBuf;
 
 fn golden_path(name: &str) -> PathBuf {
@@ -61,4 +64,18 @@ fn serving_counts_match_golden() {
     let again = serve_golden_lines(&serve_counts(200, 2, 2, 16, 4));
     assert_eq!(lines, again, "serving counts must be deterministic");
     assert_eq!(c.bank_misses, 0, "a planned bank must never miss");
+}
+
+#[test]
+fn gateway_counts_match_golden() {
+    let c = gateway_counts(200, 2, 2, 3, 8, 3);
+    let lines = gateway_golden_lines(&c);
+    check_golden("gateway_k2_s3_b3x8.golden", &lines);
+    let again = gateway_golden_lines(&gateway_counts(200, 2, 2, 3, 8, 3));
+    assert_eq!(lines, again, "gateway counts must be deterministic");
+    assert_eq!(c.misses, 0, "background replenishment must cover every draw");
+    assert_eq!(c.consumed, 9, "3 sessions x 3 batches consume one kit each");
+    // All three sessions score the same shape, and the link phase is the
+    // exact sum of the per-session meters (tags included).
+    assert_eq!(c.link_bytes, 3 * c.session_bytes, "3 equal sessions sum to the link");
 }

@@ -1,0 +1,391 @@
+//! Gateway regressions: the determinism contract (a session's reveals
+//! and meter are bit-identical alone, concurrent, and across
+//! transports), the sharded bank's ledger under three checkout
+//! interleavings, meter conservation through the mux, and the typed
+//! `Error::Overload` backpressure paths (admission queue + dry bank).
+
+use ppkmeans::coordinator::remote::{run_scenario, run_scenario_local, Pipeline, Scenario};
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::meter::Meter;
+use ppkmeans::net::mux::MUX_LINK_PHASE;
+use ppkmeans::net::{duplex_pair, Chan, TcpTransport};
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::offline::store::Demand;
+use ppkmeans::runtime::pool;
+use ppkmeans::serve::driver::train_model;
+use ppkmeans::serve::gateway::{
+    gateway_party, GatewayConfig, GatewayOutput, SessionWorkload, ShardedBank,
+};
+use ppkmeans::serve::model::TrainedModel;
+use ppkmeans::ss::triples::TripleSource;
+use ppkmeans::util::error::Error;
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::thread;
+
+// ---- Satellite: three interleavings of concurrent shard checkout ----
+
+const IBATCHES: usize = 5;
+
+fn demand() -> Demand {
+    let mut d = Demand::default();
+    d.mat(4, 2, 3);
+    d.vec_lanes(8);
+    d
+}
+
+fn ibank(tags: &[u64]) -> ShardedBank {
+    ShardedBank::new(
+        0x7E57,
+        0,
+        demand(),
+        tags,
+        IBATCHES,
+        // prefab 1, no low-water: every later checkout steals inline,
+        // so the interleavings really contend on the shard locks.
+        BankConfig { prefab_batches: 1, low_water: 0, refill_batches: 2 },
+        2,
+        1,
+    )
+}
+
+type Drawn = BTreeMap<(u64, usize), (Vec<u64>, Vec<u64>, Vec<u64>)>;
+
+/// Check a session-batch kit out, draw its elementwise triple, and
+/// prove the draw hit prefabricated stock (miss-free work-stealing).
+fn draw(bank: &ShardedBank, tag: u64, batch: usize) -> ((u64, usize), (Vec<u64>, Vec<u64>, Vec<u64>)) {
+    let mut kit = bank.checkout(tag, batch).unwrap();
+    let t = kit.vec_triple(8);
+    assert_eq!(kit.misses, 0, "stolen kit for ({tag}, {batch}) missed its stock");
+    ((tag, batch), (t.u, t.v, t.z))
+}
+
+fn check_ledgers(bank: &ShardedBank, label: &str) {
+    let g = bank.ledger();
+    assert!(g.balances(), "{label}: global ledger must balance: {g:?}");
+    assert_eq!(g.consumed, (3 * IBATCHES) as u64, "{label}");
+    assert!(g.stalls > 0, "{label}: prefab 1 must force not-ready checkouts");
+    let mut sum = (0u64, 0u64, 0u64, 0u64);
+    for s in bank.shard_ledgers() {
+        assert!(s.balances(), "{label}: shard ledger must balance: {s:?}");
+        sum = (
+            sum.0 + s.prefabricated,
+            sum.1 + s.replenished,
+            sum.2 + s.consumed,
+            sum.3 + s.stock,
+        );
+    }
+    assert_eq!(
+        sum,
+        (g.prefabricated, g.replenished, g.consumed, g.stock),
+        "{label}: shard ledgers must sum to the global ledger"
+    );
+}
+
+#[test]
+fn three_checkout_interleavings_balance_and_agree() {
+    let tags = [1u64, 2, 3];
+
+    // (a) Session-major: one concurrent worker per session, so two
+    // sessions contend on the shard they share (work-stealing).
+    let bank_a = ibank(&tags);
+    let per_worker = pool::run_workers("gwia", 3, |i| {
+        (0..IBATCHES).map(|b| draw(&bank_a, tags[i], b)).collect::<Vec<_>>()
+    });
+    let a: Drawn = per_worker.into_iter().flatten().collect();
+    check_ledgers(&bank_a, "session-major");
+
+    // (b) Batch-major on a single thread: strict round-robin.
+    let bank_b = ibank(&tags);
+    let mut b: Drawn = BTreeMap::new();
+    for batch in 0..IBATCHES {
+        for &tag in &tags {
+            let (k, v) = draw(&bank_b, tag, batch);
+            b.insert(k, v);
+        }
+    }
+    check_ledgers(&bank_b, "batch-major");
+
+    // (c) Skewed: one worker interleaves sessions 3 and 1 (reverse
+    // shard order), the other drains session 2.
+    let bank_c = ibank(&tags);
+    let per_worker = pool::run_workers("gwic", 2, |i| {
+        let mut out = Vec::new();
+        if i == 0 {
+            for batch in 0..IBATCHES {
+                out.push(draw(&bank_c, 3, batch));
+                out.push(draw(&bank_c, 1, batch));
+            }
+        } else {
+            for batch in 0..IBATCHES {
+                out.push(draw(&bank_c, 2, batch));
+            }
+        }
+        out
+    });
+    let c: Drawn = per_worker.into_iter().flatten().collect();
+    check_ledgers(&bank_c, "skewed");
+
+    // Whoever fabricated a kit, its material is identical: triples are
+    // keyed by (tag, batch) alone.
+    assert_eq!(a.len(), 3 * IBATCHES);
+    assert_eq!(a, b, "session-major and batch-major must draw identical material");
+    assert_eq!(a, c, "work-stealing must not change any kit's material");
+}
+
+// ---- End-to-end gateway fixtures ----
+
+const BR: usize = 8; // batch_rows
+const NB: usize = 2; // batches per session
+const NS: usize = 3; // sessions
+
+/// Train a small fraud model and slice a stream into per-party
+/// session workloads (tags 1..=NS).
+fn trained() -> (TrainedModel, TrainedModel, Vec<SessionWorkload>, Vec<SessionWorkload>) {
+    let train = fraud_gen::generate(200, 0.05, 41);
+    let cfg = SecureKmeansConfig {
+        k: 3,
+        iters: 2,
+        seed: 17,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (_, [ma, mb]) = train_model(&train.data, &cfg, 0.05).unwrap();
+    let stream = fraud_gen::generate(NS * NB * BR, 0.05, 4242);
+    let (d, d_a) = (ma.d, ma.d_a);
+    assert_eq!(stream.data.d, d);
+    let mut wl_a = Vec::new();
+    let mut wl_b = Vec::new();
+    for s in 0..NS {
+        let mut blocks_a = Vec::new();
+        let mut blocks_b = Vec::new();
+        for b in 0..NB {
+            let base = (s * NB + b) * BR;
+            let mut xa = Vec::new();
+            let mut xb = Vec::new();
+            for i in base..base + BR {
+                let row = stream.data.row(i);
+                xa.extend_from_slice(&row[..d_a]);
+                xb.extend_from_slice(&row[d_a..]);
+            }
+            blocks_a.push(xa);
+            blocks_b.push(xb);
+        }
+        wl_a.push(SessionWorkload { tag: s as u64 + 1, blocks: blocks_a });
+        wl_b.push(SessionWorkload { tag: s as u64 + 1, blocks: blocks_b });
+    }
+    (ma, mb, wl_a, wl_b)
+}
+
+fn gateway_cfg(sessions: usize, workers: usize) -> GatewayConfig {
+    GatewayConfig {
+        sessions,
+        queue: 0,
+        workers,
+        replenishers: 1,
+        shards: 2,
+        batch_rows: BR,
+        batches: NB,
+        bank: BankConfig { prefab_batches: 1, low_water: 1, refill_batches: 1 },
+        seed: 0x6A7E1,
+        ..GatewayConfig::default()
+    }
+}
+
+type PartyRun = (GatewayOutput, Meter);
+
+/// Run both parties' gateways over the given channel pair.
+fn run_gateway(
+    c0: Chan,
+    c1: Chan,
+    ma: TrainedModel,
+    mb: TrainedModel,
+    wl_a: Vec<SessionWorkload>,
+    wl_b: Vec<SessionWorkload>,
+    cfg: &GatewayConfig,
+) -> (PartyRun, PartyRun) {
+    let (cfg_a, cfg_b) = (cfg.clone(), cfg.clone());
+    let side = |mut c: Chan, m: TrainedModel, wl: Vec<SessionWorkload>, cfg: GatewayConfig| {
+        thread::Builder::new()
+            .stack_size(64 << 20)
+            .spawn(move || {
+                let out = gateway_party(&mut c, m, wl, &cfg).unwrap();
+                (out, c.into_meter())
+            })
+            .unwrap()
+    };
+    let h0 = side(c0, ma, wl_a, cfg_a);
+    let h1 = side(c1, mb, wl_b, cfg_b);
+    (h0.join().unwrap(), h1.join().unwrap())
+}
+
+/// A connected TCP channel pair over an ephemeral localhost port.
+fn tcp_pair() -> (Chan, Chan) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = thread::spawn(move || TcpTransport::accept_from(&listener).unwrap());
+    let client = TcpTransport::connect(&addr).unwrap();
+    let server = h.join().unwrap();
+    (Chan::from_tcp(server, 0), Chan::from_tcp(client, 1))
+}
+
+// ---- The determinism contract ----
+
+/// `sessions = N` concurrent over real TCP ≡ each session alone over an
+/// in-process duplex pair: per-session reveals, meters and miss counts
+/// are bit-identical, and per-session meters sum exactly to the link's
+/// `gateway.mux` totals.
+#[test]
+fn concurrent_sessions_match_sequential_single_session_runs() {
+    let (ma, mb, wl_a, wl_b) = trained();
+
+    // Concurrent: all NS sessions at once, 3 workers, over TCP.
+    let (c0, c1) = tcp_pair();
+    let cfg = gateway_cfg(NS, 3);
+    let ((out_a, meter_a), (out_b, meter_b)) =
+        run_gateway(c0, c1, ma.clone(), mb.clone(), wl_a.clone(), wl_b.clone(), &cfg);
+    for out in [&out_a, &out_b] {
+        assert_eq!(out.admitted(), NS);
+        assert!(out.rejected.is_empty());
+        assert_eq!(out.misses(), 0, "probe-planned bank must never miss");
+        assert!(out.ledger.balances(), "{:?}", out.ledger);
+        assert_eq!(out.ledger.consumed, (NS * NB) as u64);
+    }
+    // Meter conservation: per-session meters sum to the mux link phase.
+    for (out, meter) in [(&out_a, &meter_a), (&out_b, &meter_b)] {
+        let sum = out.online_total();
+        let link = meter.get(MUX_LINK_PHASE);
+        assert_eq!(sum.bytes_sent, link.bytes_sent, "session meters must sum to the link");
+        assert_eq!(sum.msgs_sent, link.msgs_sent);
+        assert_eq!(link.rounds, 0, "link flight interleaving must stay unmetered");
+    }
+
+    // Alone: each session in its own single-session gateway (tag
+    // preserved), one worker, in-process duplex.
+    for i in 0..NS {
+        let (c0, c1) = duplex_pair();
+        let cfg1 = gateway_cfg(1, 1);
+        let ((alone_a, _), (alone_b, _)) = run_gateway(
+            c0,
+            c1,
+            ma.clone(),
+            mb.clone(),
+            vec![wl_a[i].clone()],
+            vec![wl_b[i].clone()],
+            &cfg1,
+        );
+        for (alone, conc) in [(&alone_a, &out_a), (&alone_b, &out_b)] {
+            let (atag, ar) = &alone.sessions[0];
+            let (ctag, cr) = &conc.sessions[i];
+            assert_eq!(atag, ctag);
+            let (ar, cr) = (ar.as_ref().unwrap(), cr.as_ref().unwrap());
+            assert_eq!(ar.results, cr.results, "session {atag}: reveals must match alone");
+            assert_eq!(ar.online, cr.online, "session {atag}: meters must match alone");
+            assert_eq!(ar.misses, cr.misses);
+        }
+        // And both parties agree on the reveal.
+        let ra = alone_a.sessions[0].1.as_ref().unwrap();
+        let rb = alone_b.sessions[0].1.as_ref().unwrap();
+        assert_eq!(ra.results, rb.results);
+    }
+}
+
+// ---- Typed backpressure ----
+
+#[test]
+fn admission_queue_rejects_the_same_sessions_on_both_parties() {
+    let (ma, mb, wl_a, wl_b) = trained();
+    let (c0, c1) = duplex_pair();
+    let cfg = GatewayConfig { queue: 2, ..gateway_cfg(NS, 2) };
+    let ((out_a, _), (out_b, _)) = run_gateway(c0, c1, ma, mb, wl_a, wl_b, &cfg);
+    for out in [&out_a, &out_b] {
+        assert_eq!(out.admitted(), 2);
+        assert_eq!(out.rejected, vec![3], "tags beyond the queue bound are refused");
+        assert_eq!(out.ledger.consumed, (2 * NB) as u64, "rejected sessions draw nothing");
+        assert!(out.sessions.iter().all(|(_, r)| r.is_ok()));
+    }
+    assert_eq!(out_a.rejected, out_b.rejected);
+}
+
+#[test]
+fn dry_bank_aborts_sessions_with_a_typed_overload_on_both_parties() {
+    let (ma, mb, wl_a, wl_b) = trained();
+    let (c0, c1) = duplex_pair();
+    // Prefab covers batch 0 only and replenishment is disabled: every
+    // session must die at batch 1 — symmetrically, typed, no panic, and
+    // the gateway itself still tears down cleanly.
+    let cfg = GatewayConfig {
+        bank: BankConfig { prefab_batches: 1, low_water: 0, refill_batches: 0 },
+        ..gateway_cfg(NS, 2)
+    };
+    let ((out_a, _), (out_b, _)) = run_gateway(c0, c1, ma, mb, wl_a, wl_b, &cfg);
+    for out in [&out_a, &out_b] {
+        assert_eq!(out.admitted(), NS);
+        assert!(out.ledger.balances());
+        assert_eq!(out.ledger.consumed, NS as u64, "exactly the prefabricated batch 0 kits");
+        for (tag, r) in &out.sessions {
+            match r {
+                Err(Error::Overload(msg)) => {
+                    assert!(msg.contains("replenishment is disabled"), "session {tag}: {msg}");
+                }
+                other => panic!("session {tag}: expected Overload, got {other:?}"),
+            }
+        }
+    }
+}
+
+// ---- Scenario layer ----
+
+/// Run a scenario with both parties as threads over a channel pair.
+fn run_over(mut c0: Chan, mut c1: Chan, sc: &Scenario) -> (String, String) {
+    let sc0 = sc.clone();
+    let sc1 = sc.clone();
+    let h0 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c0, &sc0).unwrap().to_json())
+        .unwrap();
+    let h1 = thread::Builder::new()
+        .stack_size(64 << 20)
+        .spawn(move || run_scenario(&mut c1, &sc1).unwrap().to_json())
+        .unwrap();
+    (h0.join().unwrap(), h1.join().unwrap())
+}
+
+#[test]
+fn gateway_pipeline_transcripts_are_transport_and_worker_independent() {
+    let sc = Scenario {
+        pipeline: Pipeline::Gateway,
+        n: 120,
+        k: 2,
+        iters: 2,
+        seed: 5,
+        data_seed: 3,
+        batch_rows: 8,
+        batches: 2,
+        prefab: 1,
+        low_water: 1,
+        refill: 1,
+        sessions: 3,
+        queue: 0,
+        gateway_workers: 3,
+        ..Default::default()
+    };
+    let (l0, l1) = run_scenario_local(&sc).unwrap();
+    let (c0, c1) = tcp_pair();
+    let (t0, t1) = run_over(c0, c1, &sc);
+    assert_eq!(l0.to_json(), t0, "party 0 transcript must not depend on the transport");
+    assert_eq!(l1.to_json(), t1, "party 1 transcript must not depend on the transport");
+    assert!(t0.contains("gateway.mux"), "mux traffic must be metered: {t0}");
+    assert!(t0.contains("session1.scores") && t0.contains("session3.scores"));
+    assert!(t0.contains("\"gateway.misses\": \"0\""), "{t0}");
+    assert!(t0.contains("\"gateway.admitted\": \"3\""), "{t0}");
+
+    // The worker count is a party-local throughput knob: same digest,
+    // same transcript, byte for byte.
+    let sc_w1 = Scenario { gateway_workers: 1, ..sc.clone() };
+    assert_eq!(sc_w1.digest(), sc.digest());
+    let (w0, w1) = run_scenario_local(&sc_w1).unwrap();
+    assert_eq!(w0.to_json(), l0.to_json(), "worker count must not move the transcript");
+    assert_eq!(w1.to_json(), l1.to_json());
+}
