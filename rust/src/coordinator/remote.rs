@@ -31,12 +31,14 @@ use crate::fraud::{detect_outliers, jaccard, OutlierConfig};
 use crate::kmeans::config::{EsdMode, Partition, SecureKmeansConfig, TileFlights};
 use crate::kmeans::secure;
 use crate::net::cost::CostModel;
-use crate::net::meter::PhaseStats;
+use crate::net::fault::{FaultMode, FaultPlan};
+use crate::net::meter::{Meter, PhaseStats};
 use crate::net::Chan;
 use crate::offline::bank::BankConfig;
+use crate::resume::{Checkpoint, MeterSnapshot, Payload, ResumeCtx, ServeState, TrainState};
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
-use crate::serve::driver::{serve_party, train_model_party, ServeConfig};
+use crate::serve::driver::{serve_party_ckpt, train_model_party_ckpt, ServeConfig};
 use crate::serve::gateway::{gateway_party, GatewayConfig, SessionWorkload};
 use crate::serve::model::TrainedModel;
 use crate::util::error::{Error, Result};
@@ -46,7 +48,10 @@ use std::path::{Path, PathBuf};
 /// Handshake magic: the ASCII bytes `PPKMWRE1`.
 pub const WIRE_MAGIC: u64 = u64::from_be_bytes(*b"PPKMWRE1");
 /// Version of the deployment wire protocol (handshake + barriers).
-pub const WIRE_VERSION: u64 = 1;
+/// Version 2 added the resume leg: a tenth hello word advertising the
+/// sender's highest on-disk checkpoint ordinal, plus a conditional
+/// confirm-digest exchange when the negotiated common ordinal is > 0.
+pub const WIRE_VERSION: u64 = 2;
 
 /// Which pipeline a scenario runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -209,6 +214,31 @@ pub struct Scenario {
     pub low_water: usize,
     /// Batches per replenishment.
     pub refill: usize,
+    /// Refresh the served centroids from recent scored traffic every
+    /// this many batches, 0 = never (scenario key `refresh.every`).
+    /// Protocol-relevant: a refresh changes the model both parties
+    /// score with, so it is digested.
+    pub refresh_every: usize,
+    /// Blend factor of a centroid refresh — `new = old + α·(recent −
+    /// old)` (scenario key `refresh.alpha`). Digested like
+    /// `refresh.every`.
+    pub refresh_alpha: f64,
+    /// Inject a fault at this flight-opening send, 0 = none (scenario
+    /// key `fault.flight`). Party-local and deliberately excluded from
+    /// the digest: a fault plan models a crash, and crashing hosts do
+    /// not coordinate with their peer first.
+    pub fault_flight: u64,
+    /// What the injected fault does (scenario key `fault.mode`).
+    /// Party-local like `fault.flight`.
+    pub fault_mode: FaultMode,
+    /// Which party arms the fault plan (scenario key `fault.party`).
+    /// Party-local like `fault.flight`.
+    pub fault_party: usize,
+    /// Barrier-checkpoint directory, empty = checkpointing off
+    /// (scenario key `ckpt_dir`). Party-local: each party keeps its own
+    /// snapshots on its own disk; the handshake negotiates the common
+    /// resume point at runtime instead.
+    pub ckpt_dir: String,
     /// Concurrent sessions of the `gateway` pipeline (scenario key
     /// `gateway.sessions`).
     pub sessions: usize,
@@ -257,6 +287,12 @@ impl Default for Scenario {
             prefab: 8,
             low_water: 2,
             refill: 4,
+            refresh_every: 0,
+            refresh_alpha: 0.25,
+            fault_flight: 0,
+            fault_mode: FaultMode::Kill,
+            fault_party: 0,
+            ckpt_dir: String::new(),
             sessions: 4,
             queue: 0,
             gateway_workers: 2,
@@ -363,6 +399,21 @@ impl Scenario {
                 "prefab" => sc.prefab = want_usize(key, val)?,
                 "low_water" => sc.low_water = want_usize(key, val)?,
                 "refill" => sc.refill = want_usize(key, val)?,
+                "refresh.every" => sc.refresh_every = want_usize(key, val)?,
+                "refresh.alpha" => sc.refresh_alpha = want_f64(key, val)?,
+                "fault.flight" => sc.fault_flight = want_usize(key, val)? as u64,
+                "fault.mode" => sc.fault_mode = FaultMode::parse(val)?,
+                "fault.party" => {
+                    sc.fault_party = match want_usize(key, val)? {
+                        p @ (0 | 1) => p,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "scenario: fault.party wants 0|1, got {other}"
+                            )))
+                        }
+                    }
+                }
+                "ckpt_dir" => sc.ckpt_dir = val.to_string(),
                 "gateway.sessions" => sc.sessions = want_usize(key, val)?,
                 "gateway.queue" => sc.queue = want_usize(key, val)?,
                 "gateway.workers" => sc.gateway_workers = want_usize(key, val)?,
@@ -387,11 +438,13 @@ impl Scenario {
     /// **protocol-relevant** key in a fixed order with the *parsed*
     /// value, so formatting, comments and omitted-default keys never
     /// cause false mismatches. Party-local operational knobs —
-    /// `threads`, `lanes`, `model_dir`, `save_model` — are deliberately
-    /// excluded: they cannot affect outputs or meters (thread-count and
-    /// lane-width invariance are regression-tested), so heterogeneous
-    /// deployments (different core counts, different SIMD widths,
-    /// different disk layouts) must handshake cleanly.
+    /// `threads`, `lanes`, `model_dir`, `save_model`, `ckpt_dir` and
+    /// the `fault.*` injection keys — are deliberately excluded: they
+    /// cannot affect outputs or meters (thread-count and lane-width
+    /// invariance are regression-tested; a fault merely truncates a
+    /// run, and checkpoint state is negotiated live by the handshake),
+    /// so heterogeneous deployments (different core counts, different
+    /// SIMD widths, different disk layouts) must handshake cleanly.
     pub fn canonical(&self) -> String {
         let esd = match self.esd {
             EsdMode::Vectorized => "vectorized",
@@ -426,6 +479,8 @@ impl Scenario {
             ("prefab", self.prefab.to_string()),
             ("rate", self.rate.to_string()),
             ("refill", self.refill.to_string()),
+            ("refresh.alpha", self.refresh_alpha.to_string()),
+            ("refresh.every", self.refresh_every.to_string()),
             ("seed", self.seed.to_string()),
             ("shape", self.shape.as_str().to_string()),
             ("sparse", self.sparse.to_string()),
@@ -496,6 +551,8 @@ impl Scenario {
             parallelism: self.parallelism(),
             lanes: self.lanes_knob(),
             shape: self.shape.model(),
+            refresh_every: self.refresh_every,
+            refresh_alpha: self.refresh_alpha,
         }
     }
 
@@ -522,6 +579,8 @@ impl Scenario {
             parallelism: self.parallelism(),
             lanes: self.lanes_knob(),
             shape: self.shape.model(),
+            refresh_every: self.refresh_every,
+            refresh_alpha: self.refresh_alpha,
         }
     }
 
@@ -589,13 +648,34 @@ fn canonical_diff(ours: &str, theirs: &str) -> String {
 /// and the protocol seed with the peer — one symmetric exchange, plus a
 /// second exchange of the canonical scenario text only on mismatch (so
 /// the error can name the differing lines). Metered under `handshake`.
+///
+/// Equivalent to [`handshake_resume`] with a disabled [`ResumeCtx`]:
+/// the hello still carries the (zero) checkpoint-ordinal word, so v2
+/// endpoints with and without checkpointing interoperate.
 pub fn handshake(chan: &mut Chan, sc: &Scenario) -> Result<()> {
+    handshake_resume(chan, sc, &mut ResumeCtx::disabled()).map(|_| ())
+}
+
+/// The v2 handshake with the resume leg: verify magic, version, roles,
+/// scenario digest and seed exactly like [`handshake`], then negotiate
+/// the resume point. Word 9 of the hello advertises this party's
+/// highest valid on-disk checkpoint ordinal (0 = none); the common
+/// point is the **minimum** of the two advertisements. When it is
+/// positive, both parties load that checkpoint into `rctx` and trade
+/// its confirm digest (scenario ⊕ ordinal ⊕ site label) in one extra
+/// symmetric flight — holding *different* snapshots at the same ordinal
+/// is a typed [`Error::Protocol`] ("divergent checkpoints"), as is a
+/// missing file this party itself advertised (a checkpoint gap).
+/// Returns the negotiated common ordinal.
+pub fn handshake_resume(chan: &mut Chan, sc: &Scenario, rctx: &mut ResumeCtx) -> Result<u32> {
     chan.set_phase("handshake");
     let digest = digest_words(&sc.digest());
+    let max_ordinal = rctx.max_ordinal();
     let mut hello = vec![WIRE_MAGIC, WIRE_VERSION, chan.party as u64];
     hello.extend_from_slice(&digest);
     hello.push(sc.seed as u64);
     hello.push((sc.seed >> 64) as u64);
+    hello.push(max_ordinal as u64);
     let theirs = chan.try_exchange_u64s(&hello)?;
     // Magic and version are diagnosed before the exact length so a
     // future version that extends the hello is reported as a version
@@ -650,7 +730,22 @@ pub fn handshake(chan: &mut Chan, sc: &Scenario) -> Result<()> {
             ((theirs[8] as u128) << 64) | (theirs[7] as u128)
         )));
     }
-    Ok(())
+    // The resume leg: settle on the highest checkpoint BOTH parties
+    // hold, then prove the snapshots match before restoring a byte.
+    let common = (max_ordinal as u64).min(theirs[9]) as u32;
+    if common > 0 {
+        let confirm = rctx.load(common)?.confirm_digest();
+        let words = digest_words(&confirm);
+        let peer = chan.try_exchange_u64s(&words)?;
+        if peer.len() != words.len() || peer[..] != words[..] {
+            return Err(Error::Protocol(format!(
+                "handshake: divergent checkpoints at ordinal {common} — the parties hold \
+                 different snapshots of this scenario; clear both checkpoint directories \
+                 and rerun from scratch"
+            )));
+        }
+    }
+    Ok(common)
 }
 
 /// A named phase barrier: both parties exchange a tag derived from
@@ -731,12 +826,17 @@ fn digest_u64s(words: impl IntoIterator<Item = u64>) -> String {
 // ---- The per-party pipeline runner ---------------------------------------
 
 /// Score a stream of generated transactions against a model share
-/// (shared tail of the `serve` and `score` pipelines).
+/// (shared tail of the `serve` and `score` pipelines). `rctx` writes a
+/// `serve.batch.{i}` checkpoint after every scored batch; `resume`
+/// restores mid-stream state from such a checkpoint (the caller has
+/// already restored the channel meter).
 fn score_stream(
     chan: &mut Chan,
     model: TrainedModel,
     sc: &Scenario,
     reveals: &mut Vec<(String, String)>,
+    rctx: &mut ResumeCtx,
+    resume: Option<ServeState>,
 ) -> Result<()> {
     if sc.batches == 0 || sc.batch_rows == 0 {
         return Err(Error::Config("scenario: serving needs batches ≥ 1 and batch_rows ≥ 1".into()));
@@ -761,7 +861,7 @@ fn score_stream(
             x
         })
         .collect();
-    let out = serve_party(chan, model, blocks, &sc.serve_config())?;
+    let out = serve_party_ckpt(chan, model, blocks, &sc.serve_config(), rctx, resume)?;
     let mut h = Hash256::new();
     for r in &out.results {
         for &a in &r.assignments {
@@ -862,18 +962,90 @@ fn gateway_score_stream(
     Ok(())
 }
 
+/// How a negotiated checkpoint routes into a pipeline: not at all,
+/// back into the training loop, or past training into the scoring tail.
+enum PipelineResume {
+    /// No checkpoint — run the pipeline from the top.
+    Fresh,
+    /// Mid-training snapshot: replay deterministic setup, restore the
+    /// training loop ([`crate::kmeans::secure::run_party_ckpt`]).
+    Training((TrainState, MeterSnapshot)),
+    /// Post-training snapshot: training is skipped entirely; the model
+    /// comes from the checkpoint, `state` (when present) restores a
+    /// mid-stream scoring position.
+    Scoring {
+        model: TrainedModel,
+        state: Option<ServeState>,
+        meter: MeterSnapshot,
+    },
+}
+
+fn split_resume(ckpt: Option<Checkpoint>) -> Result<PipelineResume> {
+    let Some(c) = ckpt else { return Ok(PipelineResume::Fresh) };
+    let meter = c.meter;
+    Ok(match c.payload {
+        Payload::Train(t) => PipelineResume::Training((t, meter)),
+        Payload::TrainDone(t) => PipelineResume::Scoring {
+            model: TrainedModel::from_bytes(&t.model)?,
+            state: None,
+            meter,
+        },
+        Payload::Serve(s) => PipelineResume::Scoring {
+            model: TrainedModel::from_bytes(&s.model)?,
+            state: Some(s),
+            meter,
+        },
+    })
+}
+
+/// Training-only pipelines accept training snapshots, nothing later.
+fn training_only(resume: PipelineResume) -> Result<Option<(TrainState, MeterSnapshot)>> {
+    match resume {
+        PipelineResume::Fresh => Ok(None),
+        PipelineResume::Training(t) => Ok(Some(t)),
+        PipelineResume::Scoring { .. } => Err(Error::Protocol(
+            "resume: this pipeline holds only training checkpoints, but the negotiated \
+             snapshot belongs to a later stage (mixed checkpoint directories?)"
+                .into(),
+        )),
+    }
+}
+
+/// Overwrite the channel meter with a checkpointed snapshot — the
+/// resumed tail then continues the original run's exact counts.
+fn restore_meter(chan: &mut Chan, meter: MeterSnapshot) {
+    let (phases, current, flight_open) = meter;
+    chan.restore_meter(Meter::from_snapshot(phases, current, flight_open));
+}
+
 /// Run **this party's** side of the scenario pipeline over `chan`:
-/// handshake, the pipeline phases separated by [`barrier`]s, and a
-/// final barrier — returning the deterministic [`PartyTranscript`].
+/// handshake (with the resume leg when `ckpt_dir` is set), the pipeline
+/// phases separated by [`barrier`]s, and a final barrier — returning
+/// the deterministic [`PartyTranscript`]. A scenario with `fault.*`
+/// keys arms the deterministic fault plan on the chosen party first.
+/// When the handshake negotiates a common checkpoint, the pipeline
+/// restores it and replays only the remainder; a killed-and-resumed
+/// run's transcript is byte-identical to an uninterrupted run's
+/// (regression-tested in `tests/resume.rs`).
 pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
-    handshake(chan, sc)?;
-    let mut reveals: Vec<(String, String)> = Vec::new();
+    if sc.fault_flight > 0 && chan.party == sc.fault_party {
+        chan.set_fault(FaultPlan { at_flight: sc.fault_flight, mode: sc.fault_mode });
+    }
+    let mut rctx = if sc.ckpt_dir.is_empty() {
+        ResumeCtx::disabled()
+    } else {
+        ResumeCtx::new(&sc.ckpt_dir, chan.party, sc.digest())
+    };
+    let common = handshake_resume(chan, sc, &mut rctx)?;
+    let ckpt = if common > 0 { rctx.take_resume() } else { None };
+    let mut reveals: Vec<(String, String)> = rctx.reveals().to_vec();
     match sc.pipeline {
         Pipeline::Train => {
+            let resume = training_only(split_resume(ckpt)?)?;
             let data = sc.train_dataset();
             let normalized = normalize::min_max(&data);
             let cfg = sc.kmeans_config(sc.train_partition());
-            let r = secure::run_party(chan, &normalized, &cfg)?;
+            let r = secure::run_party_ckpt(chan, &normalized, &cfg, &mut rctx, resume)?;
             reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
             reveals.push((
                 "assignments".into(),
@@ -884,9 +1056,10 @@ pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
             reveals.push(("malformed_rows".into(), r.malformed_rows.to_string()));
         }
         Pipeline::Fraud => {
+            let resume = training_only(split_resume(ckpt)?)?;
             let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
             let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
-            let r = secure::run_party(chan, &f.data, &cfg)?;
+            let r = secure::run_party_ckpt(chan, &f.data, &cfg, &mut rctx, resume)?;
             let ocfg = OutlierConfig { rate: sc.rate, min_cluster_frac: 0.02 };
             let flagged = detect_outliers(&f.data, &r.mu.decode(), &r.assignments, sc.k, &ocfg);
             let j = jaccard(&flagged, &f.outliers);
@@ -898,43 +1071,96 @@ pub fn run_scenario(chan: &mut Chan, sc: &Scenario) -> Result<PartyTranscript> {
             reveals.push(("flagged".into(), digest_u64s(flagged.iter().map(|&i| i as u64))));
             reveals.push(("jaccard".into(), format!("{j:.6}")));
         }
-        Pipeline::Serve => {
-            let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
-            let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
-            let (r, model) = train_model_party(chan, &f.data, &cfg, sc.rate)?;
-            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
-            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
-            if sc.save_model {
-                let dir = PathBuf::from(&sc.model_dir);
-                std::fs::create_dir_all(&dir)?;
-                let path = dir.join(TrainedModel::file_name(chan.party));
-                model.save(&path)?;
+        Pipeline::Serve => match split_resume(ckpt)? {
+            PipelineResume::Scoring { model, state, meter } => {
+                restore_meter(chan, meter);
+                score_stream(chan, model, sc, &mut reveals, &mut rctx, state)?;
             }
-            barrier(chan, "train.done")?;
-            score_stream(chan, model, sc, &mut reveals)?;
-        }
-        Pipeline::Gateway => {
-            let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
-            let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
-            let (r, model) = train_model_party(chan, &f.data, &cfg, sc.rate)?;
-            reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
-            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
-            barrier(chan, "train.done")?;
-            gateway_score_stream(chan, model, sc, &mut reveals)?;
-        }
-        Pipeline::Score => {
-            let path = PathBuf::from(&sc.model_dir).join(TrainedModel::file_name(chan.party));
-            let model = TrainedModel::load(&path).map_err(|e| {
-                Error::Config(format!(
-                    "cannot load {} ({e}) — run a serve scenario with `save_model = true` first",
-                    path.display()
+            resume => {
+                let resume = training_only(resume)?;
+                let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
+                let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
+                let (r, model) =
+                    train_model_party_ckpt(chan, &f.data, &cfg, sc.rate, &mut rctx, resume)?;
+                reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+                reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+                rctx.set_reveals(&reveals);
+                if sc.save_model {
+                    let dir = PathBuf::from(&sc.model_dir);
+                    std::fs::create_dir_all(&dir)?;
+                    let path = dir.join(TrainedModel::file_name(chan.party));
+                    model.save(&path)?;
+                }
+                barrier(chan, "train.done")?;
+                rctx.save(
+                    "train.done",
+                    chan.meter(),
+                    Payload::TrainDone(crate::resume::TrainDoneState { model: model.to_bytes() }),
+                );
+                score_stream(chan, model, sc, &mut reveals, &mut rctx, None)?;
+            }
+        },
+        Pipeline::Gateway => match split_resume(ckpt)? {
+            PipelineResume::Scoring { state: Some(_), .. } => {
+                return Err(Error::Protocol(
+                    "resume: the gateway pipeline writes no per-batch serve checkpoints — \
+                     this snapshot belongs to a serve/score scenario"
+                        .into(),
                 ))
-            })?;
-            reveals.push(("tau".into(), format!("{:.12}", model.tau)));
-            score_stream(chan, model, sc, &mut reveals)?;
-        }
+            }
+            PipelineResume::Scoring { model, meter, .. } => {
+                restore_meter(chan, meter);
+                gateway_score_stream(chan, model, sc, &mut reveals)?;
+            }
+            resume => {
+                let resume = training_only(resume)?;
+                let f = fraud_gen::generate(sc.n, sc.rate, sc.data_seed);
+                let cfg = sc.kmeans_config(Partition::Vertical { d_a: f.d_payment });
+                let (r, model) =
+                    train_model_party_ckpt(chan, &f.data, &cfg, sc.rate, &mut rctx, resume)?;
+                reveals.push(("centroids".into(), digest_u64s(r.mu.data.iter().copied())));
+                reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+                rctx.set_reveals(&reveals);
+                barrier(chan, "train.done")?;
+                rctx.save(
+                    "train.done",
+                    chan.meter(),
+                    Payload::TrainDone(crate::resume::TrainDoneState { model: model.to_bytes() }),
+                );
+                gateway_score_stream(chan, model, sc, &mut reveals)?;
+            }
+        },
+        Pipeline::Score => match split_resume(ckpt)? {
+            PipelineResume::Scoring { model, state: state @ Some(_), meter } => {
+                restore_meter(chan, meter);
+                score_stream(chan, model, sc, &mut reveals, &mut rctx, state)?;
+            }
+            PipelineResume::Fresh => {
+                let path = PathBuf::from(&sc.model_dir).join(TrainedModel::file_name(chan.party));
+                let model = TrainedModel::load(&path).map_err(|e| {
+                    Error::Config(format!(
+                        "cannot load {} ({e}) — run a serve scenario with `save_model = true` \
+                         first",
+                        path.display()
+                    ))
+                })?;
+                reveals.push(("tau".into(), format!("{:.12}", model.tau)));
+                rctx.set_reveals(&reveals);
+                score_stream(chan, model, sc, &mut reveals, &mut rctx, None)?;
+            }
+            _ => {
+                return Err(Error::Protocol(
+                    "resume: the score pipeline writes only per-batch serve checkpoints — \
+                     the negotiated snapshot belongs to a different pipeline stage"
+                        .into(),
+                ))
+            }
+        },
     }
     barrier(chan, "pipeline.done")?;
+    if let Some(e) = rctx.take_error() {
+        return Err(e);
+    }
     Ok(PartyTranscript {
         role: chan.party,
         pipeline: sc.pipeline,
@@ -1016,6 +1242,8 @@ mod tests {
             ("prefab", "7"),
             ("low_water", "3"),
             ("refill", "9"),
+            ("refresh.every", "4"),
+            ("refresh.alpha", "0.5"),
             ("gateway.sessions", "3"),
             ("gateway.queue", "2"),
         ];
@@ -1031,6 +1259,10 @@ mod tests {
             ("gateway.workers", "4"),
             ("model_dir", "elsewhere"),
             ("save_model", "true"),
+            ("fault.flight", "3"),
+            ("fault.mode", "abort"),
+            ("fault.party", "1"),
+            ("ckpt_dir", "ckpts"),
         ];
         for (key, val) in local_keys {
             let sc = Scenario::parse(&format!("{key} = {val}")).unwrap();

@@ -39,6 +39,7 @@ use crate::net::{run_two_party, Chan, Meter};
 use crate::offline::dealer::Dealer;
 use crate::offline::store::{Demand, TripleStore};
 use crate::offline::timed::TimedSource;
+use crate::resume::{MeterSnapshot, Payload, ResumeCtx, TrainState};
 use crate::ring::matrix::Mat;
 use crate::ss::pending::PendingParts;
 use crate::ss::share::reconstruct;
@@ -179,13 +180,18 @@ pub fn split_dataset(data: &Dataset, partition: Partition) -> (Mat, Mat) {
 }
 
 /// One party's protocol main loop: the row-tiled schedule over the
-/// partition-appropriate cross-product backend.
+/// partition-appropriate cross-product backend. `rctx` writes a
+/// `train.iter.{i}` checkpoint at every iteration boundary (a no-op
+/// when disabled); `resume` restores one after the deterministic setup
+/// has been replayed.
 fn party_main(
     chan: &mut Chan,
     mut x: PartyData,
     n: usize,
     d: usize,
     cfg: &SecureKmeansConfig,
+    rctx: &mut ResumeCtx,
+    resume: Option<(TrainState, MeterSnapshot)>,
 ) -> PartyResult {
     let party = chan.party;
     let t_start = Timer::started();
@@ -226,7 +232,32 @@ fn party_main(
     let mut c_share = Mat::zeros(n, cfg.k);
     let mut step_demands = [Demand::default(), Demand::default(), Demand::default()];
     let mut iters = 0;
-    for _t in 0..cfg.iters {
+    let mut done = false;
+    if let Some((t, (phases, current, flight_open))) = resume {
+        // The deterministic setup above (backend selection, the
+        // online.init exchange) was *replayed* so the wire stayed in
+        // lockstep; everything stateful is now *restored*: the shares,
+        // the iteration count, the dealer PRG stream position with its
+        // consumed-material ledger and recorded demand, and the original
+        // run's exact per-phase meter counts (overwriting the replayed
+        // setup's counts, which the snapshot already includes).
+        mu = t.mu;
+        c_share = t.c_share;
+        iters = t.iter as usize;
+        done = t.stop;
+        step_demands = t.step_demands;
+        store = TripleStore::new(TimedSource::new(Dealer::restore(
+            cfg.seed,
+            party,
+            t.dealer_pos,
+            t.ledger,
+        )));
+        store.demand = t.demand;
+        chan.restore_meter(Meter::from_snapshot(phases, current, flight_open));
+    }
+    // A snapshot taken at the convergence stop replays zero iterations.
+    let remaining = if done { cfg.iters..cfg.iters } else { iters..cfg.iters };
+    for _t in remaining {
         iters += 1;
 
         let mu_new = if streamed {
@@ -403,6 +434,24 @@ fn party_main(
             false
         };
         mu = mu_new;
+        // Checkpoint the iteration boundary: everything the loop carries
+        // across iterations plus the dealer stream position. Saved after
+        // the convergence decision so a resumed run knows whether the
+        // loop had already stopped.
+        rctx.save(
+            &format!("train.iter.{}", iters - 1),
+            chan.meter(),
+            Payload::Train(TrainState {
+                iter: iters as u32,
+                stop,
+                mu: mu.clone(),
+                c_share: c_share.clone(),
+                dealer_pos: store.inner().source().position(),
+                ledger: store.ledger(),
+                demand: store.demand.clone(),
+                step_demands: step_demands.clone(),
+            }),
+        );
         if stop {
             break;
         }
@@ -508,15 +557,41 @@ fn validate(cfg: &SecureKmeansConfig) -> Result<()> {
 /// the in-process duplex pair and localhost TCP produce the same
 /// transcript (regression-tested).
 pub fn run_party(chan: &mut Chan, data: &Dataset, cfg: &SecureKmeansConfig) -> Result<PartyResult> {
+    run_party_ckpt(chan, data, cfg, &mut ResumeCtx::disabled(), None)
+}
+
+/// [`run_party`] with barrier checkpointing: `rctx` writes a
+/// `train.iter.{i}` snapshot after every Lloyd iteration, and `resume`
+/// restores one (as negotiated by the v2 handshake's resume leg).
+///
+/// Resuming is supported on the Beaver and naive backends. The HE
+/// Protocol 2 backend exchanges encrypted inputs on first use, so a
+/// replayed setup would not stay in wire lockstep with the original
+/// run — resuming an `esd = he` (or `auto`, which may route there) run
+/// is a typed [`Error::Config`]; pin `esd` in resumable scenarios.
+pub fn run_party_ckpt(
+    chan: &mut Chan,
+    data: &Dataset,
+    cfg: &SecureKmeansConfig,
+    rctx: &mut ResumeCtx,
+    resume: Option<(TrainState, MeterSnapshot)>,
+) -> Result<PartyResult> {
     validate(cfg)?;
     let esd_mode = cfg.effective_esd();
+    if resume.is_some() && matches!(esd_mode, EsdMode::He | EsdMode::Auto) {
+        return Err(Error::Config(
+            "resume: checkpointed training resumes on the beaver/naive backends only — \
+             pin `esd` away from he/auto in resumable scenarios"
+                .into(),
+        ));
+    }
     let (xa, xb) = split_dataset(data, cfg.partition);
     let x_own = if chan.party == 0 { xa } else { xb };
     // Build the CSR view when the run may take the HE path.
     let may_sparse = matches!(esd_mode, EsdMode::He | EsdMode::Auto)
         && matches!(cfg.partition, Partition::Vertical { .. });
     let p = if may_sparse { PartyData::with_csr(x_own) } else { PartyData::dense_only(x_own) };
-    Ok(party_main(chan, p, data.n, data.d, cfg))
+    Ok(party_main(chan, p, data.n, data.d, cfg, rctx, resume))
 }
 
 /// Run the full two-party protocol on a dataset, any partition, any
@@ -536,8 +611,8 @@ pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutpu
     let cfg_a = cfg.clone();
     let cfg_b = cfg.clone();
     let ((ra, meter_a), (rb, meter_b)) = run_two_party(
-        move |c| party_main(c, pa, n, d, &cfg_a),
-        move |c| party_main(c, pb, n, d, &cfg_b),
+        move |c| party_main(c, pa, n, d, &cfg_a, &mut ResumeCtx::disabled(), None),
+        move |c| party_main(c, pb, n, d, &cfg_b, &mut ResumeCtx::disabled(), None),
     );
     debug_assert_eq!(ra.mu, rb.mu, "parties must reconstruct identical centroids");
     if ra.malformed_rows > 0 {

@@ -99,6 +99,7 @@ pub mod kmeans;
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod coordinator;
+pub mod resume;
 pub mod serve;
 #[allow(missing_docs)]
 pub mod data;

@@ -32,6 +32,7 @@ use ppkmeans::fraud::{detect_outliers, jaccard, OutlierConfig};
 use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::kmeans::plaintext;
 use ppkmeans::net::cost::CostModel;
+use ppkmeans::net::fault::FaultMode;
 use ppkmeans::net::{Chan, TcpTransport};
 use ppkmeans::offline::bank::BankConfig;
 use ppkmeans::runtime::pool::Parallelism;
@@ -96,6 +97,9 @@ fn print_help() {
     println!("  --refill R              batches per replenishment (default 4)");
     println!("  --rate F                fraud flag rate → threshold τ (default 0.05)");
     println!("  --model-dir DIR         where party{{0,1}}.ppkmodel go (default model)");
+    println!("  --refresh-every M       refresh centroids from the last M scored batches");
+    println!("                          every M batches (default 0 = off)");
+    println!("  --refresh-alpha A       refresh blend weight μ←μ+α(recent−μ) (default 0.25)");
     println!("  --link L                lan | wan (default lan)");
     println!();
     println!("  --threads N             worker threads per party (0 = one per core;");
@@ -140,6 +144,14 @@ fn print_help() {
     println!("  --connect ADDR          p1 peer address (default 127.0.0.1:9041)");
     println!("  --out FILE              write the deterministic transcript JSON here");
     println!("                          (local mode also writes FILE.p1)");
+    println!("  --ckpt-dir DIR          write/resume barrier checkpoints here (party-local;");
+    println!("                          overrides the scenario's ckpt_dir). Restarting with");
+    println!("                          the same DIR resumes from the highest checkpoint");
+    println!("                          both parties hold — transcripts stay bit-identical");
+    println!("  --fault-flight N        inject a fault at this party's Nth flight (0 = off;");
+    println!("                          party-local, for the kill-and-resume test matrix)");
+    println!("  --fault-mode M          kill | drop | trunc | abort (default kill)");
+    println!("  --fault-party P         0 | 1 — which party the armed fault applies to");
     println!();
     println!("bench: lists the cargo bench targets (tables/figures + tiling + serving)");
 }
@@ -397,6 +409,8 @@ fn serve_cfg_from(args: &Args) -> ServeConfig {
         parallelism: parallelism_from(args),
         lanes: lanes_from(args),
         shape: shape_from(args),
+        refresh_every: args.get_usize("refresh-every", 0),
+        refresh_alpha: args.get_f64("refresh-alpha", 0.25),
     }
 }
 
@@ -507,6 +521,8 @@ fn cmd_gateway(args: &Args) {
         parallelism: parallelism_from(args),
         lanes: lanes_from(args),
         shape: shape_from(args),
+        refresh_every: args.get_usize("refresh-every", 0),
+        refresh_alpha: args.get_f64("refresh-alpha", 0.25),
     };
 
     println!("training secure K-means for the gateway: n={n} k={k} t={iters} (vertical 18+24)");
@@ -632,13 +648,46 @@ fn cmd_party(args: &Args) {
             std::process::exit(2);
         }
     };
-    let sc = match Scenario::from_file(&scenario_path) {
+    let mut sc = match Scenario::from_file(&scenario_path) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
         }
     };
+    // Party-local overrides (none of these enter the scenario digest):
+    // checkpointing and fault injection usually differ per process — the
+    // killed party and the surviving one share one scenario file.
+    if let Some(dir) = args.get("ckpt-dir") {
+        sc.ckpt_dir = dir.to_string();
+    }
+    if let Some(v) = args.get("fault-flight") {
+        sc.fault_flight = match v.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("--fault-flight wants an integer (got {v})");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(v) = args.get("fault-mode") {
+        sc.fault_mode = match FaultMode::parse(v) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(v) = args.get("fault-party") {
+        sc.fault_party = match v.parse() {
+            Ok(p @ (0 | 1)) => p,
+            _ => {
+                eprintln!("--fault-party wants 0 or 1 (got {v})");
+                std::process::exit(2);
+            }
+        };
+    }
     let out = args.get("out").map(PathBuf::from);
     match args.get_str("role", "") {
         role @ ("p0" | "p1") => {

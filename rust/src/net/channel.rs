@@ -17,6 +17,7 @@
 //! the symmetric gate set, and asserted on the total.
 
 use super::cost::CostModel;
+use super::fault::{FaultPlan, FaultState, SendAction};
 use super::meter::Meter;
 use super::shape::LinkShaper;
 use crate::ring::matrix::Mat;
@@ -41,6 +42,10 @@ pub struct Chan {
     /// every receive to a [`CostModel`] without touching payloads or
     /// meters.
     shaper: Option<LinkShaper>,
+    /// Optional armed fault (see [`crate::net::fault`]): consulted before
+    /// any byte moves or is metered, so flights before the trigger are
+    /// bit-identical to an uninjected run.
+    fault: Option<FaultState>,
     /// Identity of this endpoint: 0 or 1.
     pub party: usize,
     /// Segments queued for the next flight.
@@ -96,6 +101,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
             backend: Backend::Mpsc { tx: tx0, rx: rx0 },
             meter: Meter::new(),
             shaper: None,
+            fault: None,
             party: 0,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -105,6 +111,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
             backend: Backend::Mpsc { tx: tx1, rx: rx1 },
             meter: Meter::new(),
             shaper: None,
+            fault: None,
             party: 1,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -120,6 +127,7 @@ impl Chan {
             backend: Backend::Tcp(t),
             meter: Meter::new(),
             shaper: None,
+            fault: None,
             party,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -145,6 +153,31 @@ impl Chan {
         self.shaper.as_ref().map(|s| *s.model())
     }
 
+    /// Arm a deterministic fault (see [`crate::net::fault`]): `plan.mode`
+    /// fires on this endpoint's `plan.at_flight`-th flight-opening send.
+    pub fn set_fault(&mut self, plan: FaultPlan) {
+        self.fault = Some(FaultState::new(plan));
+    }
+
+    /// Disarm any scheduled fault.
+    pub fn clear_fault(&mut self) {
+        self.fault = None;
+    }
+
+    /// The armed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        self.fault.as_ref().map(|f| f.plan())
+    }
+
+    /// Overwrite the meter with a checkpointed snapshot — the resume
+    /// path's last act before re-entering the protocol: replayed setup
+    /// traffic (handshake, backend negotiation) is erased and the meter
+    /// continues exactly where the interrupted run's left off, including
+    /// the open-flight flag.
+    pub fn restore_meter(&mut self, meter: Meter) {
+        self.meter = meter;
+    }
+
     /// Label subsequent traffic with a phase.
     pub fn set_phase(&mut self, label: &str) {
         self.meter.set_phase(label);
@@ -159,13 +192,15 @@ impl Chan {
     /// meter, shaper and party identity. The round buffer must be
     /// drained (asserted) — a mux takeover mid-flight would corrupt the
     /// segment accounting.
-    pub(crate) fn into_raw_parts(self) -> (Backend, Meter, Option<LinkShaper>, usize) {
+    pub(crate) fn into_raw_parts(
+        self,
+    ) -> (Backend, Meter, Option<LinkShaper>, Option<FaultState>, usize) {
         assert!(
             self.staged.is_empty(),
             "round buffer still holds {} unflushed segments",
             self.staged.len()
         );
-        (self.backend, self.meter, self.shaper, self.party)
+        (self.backend, self.meter, self.shaper, self.fault, self.party)
     }
 
     /// Reassemble an endpoint from raw parts (the mux's session
@@ -174,9 +209,19 @@ impl Chan {
         backend: Backend,
         meter: Meter,
         shaper: Option<LinkShaper>,
+        fault: Option<FaultState>,
         party: usize,
     ) -> Chan {
-        Chan { backend, meter, shaper, party, staged: Vec::new(), resolved: Vec::new(), resolved_base: 0 }
+        Chan {
+            backend,
+            meter,
+            shaper,
+            fault,
+            party,
+            staged: Vec::new(),
+            resolved: Vec::new(),
+            resolved_base: 0,
+        }
     }
 
     /// Consume the endpoint, returning its meter.
@@ -264,6 +309,29 @@ impl Chan {
     /// cap. The deployment handshake and barriers use this path so a
     /// misbehaving peer yields a clean process exit.
     pub fn try_send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        // Armed faults fire before any byte moves or is metered: a
+        // killed flight leaves the meter exactly as an OS kill would.
+        match self.fault.as_mut().map(FaultState::on_send).transpose()? {
+            None | Some(SendAction::Pass) => {}
+            Some(SendAction::Abort) => std::process::abort(),
+            Some(SendAction::Swallow) => return Ok(()),
+            Some(SendAction::Truncate) => {
+                // Ship an odd prefix (never a multiple of 8) unmetered,
+                // then die; the peer's u64 decode rejects the frame.
+                let keep = ((bytes.len() / 2) | 1).min(bytes.len());
+                let cut = &bytes[..keep];
+                let _ = match &mut self.backend {
+                    Backend::Mpsc { tx, .. } => tx.send(cut.to_vec()).is_ok(),
+                    Backend::Tcp(t) => t.send(cut).is_ok(),
+                    Backend::Mux(s) => s.send(cut).is_ok(),
+                };
+                return Err(self
+                    .fault
+                    .as_ref()
+                    .map(FaultState::closed_error)
+                    .unwrap_or_else(|| Error::ChannelClosed("injected fault".into())));
+            }
+        }
         // A mux session's wire cost includes its 8-byte tag, so the
         // per-session meters sum exactly to the link totals.
         let wire_len = bytes.len() as u64
@@ -285,6 +353,9 @@ impl Chan {
     /// Fallible receive of the next raw byte message (see
     /// [`Chan::try_send_bytes`]). Applies link shaping after metering.
     pub fn try_recv_bytes(&mut self) -> Result<Vec<u8>> {
+        if let Some(f) = self.fault.as_mut() {
+            f.on_recv()?;
+        }
         let bytes = match &mut self.backend {
             Backend::Mpsc { rx, .. } => rx
                 .recv()

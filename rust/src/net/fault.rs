@@ -1,0 +1,305 @@
+//! Deterministic fault injection for the accounted channel.
+//!
+//! Crash-resumption can only be *tested* if crashes are reproducible.
+//! A [`FaultPlan`] schedules exactly one fault at the Nth flight-opening
+//! send of a [`Chan`] — the same trigger notion the meter uses for
+//! rounds — so an in-process duplex run and a two-process TCP run die at
+//! the exact same protocol point. Like [`crate::net::shape`], the layer
+//! never perturbs what it does not simulate: every send before the
+//! trigger is byte- and meter-identical to an uninjected run, and the
+//! killed flight itself is never metered (an OS kill would not have
+//! flushed those counters either).
+//!
+//! Modes:
+//! * [`FaultMode::Kill`] — the flight never leaves: the local party gets
+//!   a typed `ChannelClosed` and every later op fails the same way (the
+//!   peer observes a hangup once the party unwinds).
+//! * [`FaultMode::Drop`] — the flight is silently swallowed (a lost
+//!   frame); the local party continues until its next channel op, which
+//!   fails, while the peer blocks until the hangup unblocks it.
+//! * [`FaultMode::Trunc`] — an odd-length prefix goes out (never a
+//!   multiple of 8, so the peer's u64 decode yields a typed
+//!   `Error::Protocol`), then the local side dies.
+//! * [`FaultMode::Abort`] — `std::process::abort()`: a real SIGABRT for
+//!   the two-process kill-and-resume matrix in CI.
+//!
+//! On a multiplexed gateway link, link-level flight interleaving is
+//! scheduling-dependent, so the mux trigger counts *frames* instead of
+//! flights (see `MuxSession::send`) — a mid-session fault still fires
+//! deterministically "somewhere inside the session traffic", which is
+//! all the train-barrier resume model needs (the gateway tail re-runs
+//! from the last training checkpoint).
+
+// Wire-facing layer: typed errors only (ppkm-lint no-panic-in-wire-paths).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use super::channel::Chan;
+use crate::util::error::{Error, Result};
+
+/// What happens to the triggering flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Fail the send without putting anything on the wire.
+    Kill,
+    /// Swallow the send silently (lost frame), fail from the next op on.
+    Drop,
+    /// Ship an odd-length prefix of the frame, then die.
+    Trunc,
+    /// `std::process::abort()` — a real OS-level crash.
+    Abort,
+}
+
+impl FaultMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultMode::Kill => "kill",
+            FaultMode::Drop => "drop",
+            FaultMode::Trunc => "trunc",
+            FaultMode::Abort => "abort",
+        }
+    }
+
+    /// Parse a scenario / CLI spelling.
+    pub fn parse(s: &str) -> Result<FaultMode> {
+        match s {
+            "kill" => Ok(FaultMode::Kill),
+            "drop" => Ok(FaultMode::Drop),
+            "trunc" => Ok(FaultMode::Trunc),
+            "abort" => Ok(FaultMode::Abort),
+            other => Err(Error::Config(format!(
+                "unknown fault mode '{other}' (kill|drop|trunc|abort)"
+            ))),
+        }
+    }
+}
+
+/// One scheduled fault: `mode` fires on the `at_flight`-th (1-based)
+/// flight-opening send of the injected channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub at_flight: u64,
+    pub mode: FaultMode,
+}
+
+/// Decision for the send that consulted the fault layer.
+pub(crate) enum SendAction {
+    Pass,
+    Swallow,
+    Truncate,
+    Abort,
+}
+
+/// Live trigger state attached to a [`Chan`] (or a mux link).
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// Flight-opening sends observed so far.
+    flights_seen: u64,
+    /// True when the next send opens a new flight (mirrors the meter's
+    /// round accounting exactly).
+    flight_open: bool,
+    /// Set once the fault fired: every later op fails.
+    dead: bool,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: FaultPlan) -> FaultState {
+        FaultState { plan, flights_seen: 0, flight_open: true, dead: false }
+    }
+
+    pub(crate) fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    pub(crate) fn closed_error(&self) -> Error {
+        Error::ChannelClosed(format!(
+            "injected fault: {} at flight {}",
+            self.plan.mode.as_str(),
+            self.plan.at_flight
+        ))
+    }
+
+    fn trigger(&mut self) -> Result<SendAction> {
+        match self.plan.mode {
+            FaultMode::Kill => {
+                self.dead = true;
+                Err(self.closed_error())
+            }
+            FaultMode::Drop => {
+                self.dead = true;
+                Ok(SendAction::Swallow)
+            }
+            FaultMode::Trunc => {
+                self.dead = true;
+                Ok(SendAction::Truncate)
+            }
+            FaultMode::Abort => Ok(SendAction::Abort),
+        }
+    }
+
+    /// Consulted before every channel send, ahead of any byte movement
+    /// or metering.
+    pub(crate) fn on_send(&mut self) -> Result<SendAction> {
+        if self.dead {
+            return Err(self.closed_error());
+        }
+        if self.flight_open {
+            self.flight_open = false;
+            self.flights_seen += 1;
+            if self.flights_seen == self.plan.at_flight {
+                return self.trigger();
+            }
+        }
+        Ok(SendAction::Pass)
+    }
+
+    /// Consulted before every channel receive.
+    pub(crate) fn on_recv(&mut self) -> Result<()> {
+        if self.dead {
+            return Err(self.closed_error());
+        }
+        self.flight_open = true;
+        Ok(())
+    }
+
+    /// Mux-link variant: flights are a per-session notion there, so the
+    /// link trigger counts every frame as one unit.
+    pub(crate) fn on_link_send(&mut self) -> Result<SendAction> {
+        if self.dead {
+            return Err(self.closed_error());
+        }
+        self.flights_seen += 1;
+        if self.flights_seen == self.plan.at_flight {
+            return self.trigger();
+        }
+        Ok(SendAction::Pass)
+    }
+}
+
+/// A [`Chan`] with an armed [`FaultPlan`] — the in-process face of the
+/// fault layer. Deref gives the full channel API; the wrapper only
+/// guarantees the plan is installed (and survives a gateway mux swap,
+/// since the state rides the channel itself).
+pub struct FaultyChan {
+    inner: Chan,
+}
+
+impl FaultyChan {
+    /// Arm `plan` on `chan`.
+    pub fn new(mut chan: Chan, plan: FaultPlan) -> FaultyChan {
+        chan.set_fault(plan);
+        FaultyChan { inner: chan }
+    }
+
+    /// Disarm and return the bare channel.
+    pub fn into_inner(mut self) -> Chan {
+        self.inner.clear_fault();
+        self.inner
+    }
+}
+
+impl std::ops::Deref for FaultyChan {
+    type Target = Chan;
+    fn deref(&self) -> &Chan {
+        &self.inner
+    }
+}
+
+impl std::ops::DerefMut for FaultyChan {
+    fn deref_mut(&mut self) -> &mut Chan {
+        &mut self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::net::duplex_pair;
+    use std::thread;
+
+    #[test]
+    fn kill_fires_on_the_exact_flight_and_meters_stay_clean() {
+        let (c0, mut c1) = duplex_pair();
+        let mut f0 = FaultyChan::new(c0, FaultPlan { at_flight: 2, mode: FaultMode::Kill });
+        let h = thread::spawn(move || {
+            // Flight 1: two sends in one flight, then a recv closes it.
+            f0.try_send_bytes(&[1; 8]).unwrap();
+            f0.try_send_bytes(&[2; 8]).unwrap();
+            f0.try_recv_bytes().unwrap();
+            // Flight 2: the opening send triggers the kill.
+            let err = f0.try_send_bytes(&[3; 8]).unwrap_err();
+            assert!(err.to_string().contains("injected fault"), "{err}");
+            // Everything after is dead with the same typed error.
+            assert!(f0.try_send_bytes(&[4; 8]).is_err());
+            assert!(f0.try_recv_bytes().is_err());
+            let m = f0.into_inner().into_meter();
+            // Only flight 1 was metered: 2 msgs, 16 bytes, 1 round.
+            assert_eq!(m.total().msgs_sent, 2);
+            assert_eq!(m.total().bytes_sent, 16);
+            assert_eq!(m.total().rounds, 1);
+        });
+        assert_eq!(c1.try_recv_bytes().unwrap(), vec![1; 8]);
+        assert_eq!(c1.try_recv_bytes().unwrap(), vec![2; 8]);
+        c1.try_send_bytes(&[9; 8]).unwrap();
+        // The killed peer unwinds; our next receive observes the hangup.
+        h.join().unwrap();
+        assert!(c1.try_recv_bytes().is_err());
+    }
+
+    #[test]
+    fn trunc_hands_the_peer_a_typed_protocol_error() {
+        let (c0, mut c1) = duplex_pair();
+        let mut f0 = FaultyChan::new(c0, FaultPlan { at_flight: 1, mode: FaultMode::Trunc });
+        let h = thread::spawn(move || {
+            let err = f0.try_send_bytes(&[7; 32]).unwrap_err();
+            assert!(err.to_string().contains("injected fault"), "{err}");
+        });
+        // 32 bytes truncate to 17 — not a multiple of 8.
+        let err = c1.try_recv_u64s().unwrap_err();
+        assert!(err.to_string().contains("malformed u64 frame"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drop_swallows_silently_then_fails_the_next_op() {
+        let (c0, c1) = duplex_pair();
+        let mut f0 = FaultyChan::new(c0, FaultPlan { at_flight: 1, mode: FaultMode::Drop });
+        // The dropped send reports success (the caller cannot tell) …
+        f0.try_send_bytes(&[1; 8]).unwrap();
+        // … but the channel is dead from the next op on.
+        assert!(f0.try_send_bytes(&[2; 8]).is_err());
+        assert!(f0.try_recv_bytes().is_err());
+        // Nothing reached the peer; dropping our end unblocks it.
+        drop(f0);
+        let mut c1 = c1;
+        assert!(c1.try_recv_bytes().is_err());
+    }
+
+    #[test]
+    fn flights_before_the_trigger_are_untouched() {
+        let (c0, mut c1) = duplex_pair();
+        let mut f0 = FaultyChan::new(c0, FaultPlan { at_flight: 100, mode: FaultMode::Kill });
+        let h = thread::spawn(move || {
+            for i in 0..5u64 {
+                assert_eq!(f0.try_exchange_u64s(&[i]).unwrap(), vec![i * 10]);
+            }
+            f0.into_inner().into_meter()
+        });
+        for i in 0..5u64 {
+            assert_eq!(c1.try_exchange_u64s(&[i * 10]).unwrap(), vec![i]);
+        }
+        let m = h.join().unwrap();
+        assert_eq!(m.total().rounds, 5);
+        assert_eq!(m.total().bytes_sent, 40);
+    }
+
+    #[test]
+    fn mode_parse_roundtrips_and_rejects_garbage() {
+        for m in [FaultMode::Kill, FaultMode::Drop, FaultMode::Trunc, FaultMode::Abort] {
+            assert_eq!(FaultMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(FaultMode::parse("segv").is_err());
+    }
+}

@@ -124,6 +124,28 @@ impl Meter {
         }
     }
 
+    /// Full serializable state: sorted `(label, stats)` pairs, the
+    /// current phase label, and the flight flag. The flag matters —
+    /// after an exchange the sender-first party sits with an open flight
+    /// while its peer does not, and restoring it wrong would add a
+    /// phantom round to the first post-resume send.
+    pub fn snapshot(&self) -> (Vec<(String, PhaseStats)>, String, bool) {
+        (
+            self.phases.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            self.current.clone(),
+            self.flight_open,
+        )
+    }
+
+    /// Rebuild a meter from a [`Self::snapshot`] — the exact inverse.
+    pub fn from_snapshot(
+        phases: Vec<(String, PhaseStats)>,
+        current: String,
+        flight_open: bool,
+    ) -> Self {
+        Meter { phases: phases.into_iter().collect(), current, flight_open }
+    }
+
     /// Fold raw stats into a phase without touching the flight state.
     /// The mux link accountant uses this: session frames are counted
     /// against the link (`bytes`/`msgs` exactly), while *flights* stay a
@@ -183,6 +205,26 @@ mod tests {
         // A mismatched (newer) snapshot saturates instead of panicking.
         let newer = m.total_prefix("serve.");
         assert_eq!(before.since(&newer).bytes_sent, 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_including_flight_state() {
+        let mut m = Meter::new();
+        m.set_phase("online.s1");
+        m.on_send(10); // flight now closed
+        let (p, c, f) = m.snapshot();
+        assert!(!f);
+        let mut back = Meter::from_snapshot(p, c, f);
+        assert_eq!(back.phase(), "online.s1");
+        // A send on the restored meter must NOT open a new flight.
+        back.on_send(1);
+        m.on_send(1);
+        assert_eq!(back.get("online.s1"), m.get("online.s1"));
+        m.on_recv();
+        let (p2, c2, f2) = m.snapshot();
+        assert!(f2);
+        let back2 = Meter::from_snapshot(p2, c2, f2);
+        assert_eq!(back2.total(), m.total());
     }
 
     #[test]

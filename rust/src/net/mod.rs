@@ -26,6 +26,7 @@
 
 pub mod channel;
 pub mod cost;
+pub mod fault;
 pub mod meter;
 pub mod mux;
 pub mod shape;
@@ -33,6 +34,7 @@ pub mod tcp;
 
 pub use channel::{duplex_pair, Chan};
 pub use cost::CostModel;
+pub use fault::{FaultMode, FaultPlan, FaultyChan};
 pub use meter::{Meter, PhaseStats};
 pub use mux::{MuxLink, MUX_TAG_BYTES};
 pub use shape::LinkShaper;

@@ -39,6 +39,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use super::channel::{Backend, Chan};
+use super::fault::{FaultState, SendAction};
 use super::meter::{Meter, PhaseStats};
 use super::shape::LinkShaper;
 use super::tcp::TcpTransport;
@@ -114,6 +115,10 @@ struct RxState {
 
 struct MuxShared {
     tx: Mutex<SendHalf>,
+    /// Fault state inherited from the wrapped channel (see
+    /// [`crate::net::fault`]): at link level the trigger counts frames
+    /// (flights are a per-session notion), checked on every session send.
+    fault: Mutex<Option<FaultState>>,
     rx: Mutex<RxState>,
     /// Signalled when frames are routed or the link dies.
     rx_cv: Condvar,
@@ -149,7 +154,7 @@ impl MuxLink {
     /// a whole (one physical pipe). Muxing an already-muxed session is a
     /// configuration error.
     pub fn new(chan: Chan) -> Result<MuxLink> {
-        let (backend, meter, shaper, party) = chan.into_raw_parts();
+        let (backend, meter, shaper, fault, party) = chan.into_raw_parts();
         let (tx, rx) = match backend {
             Backend::Mpsc { tx, rx } => (SendHalf::Mpsc(tx), RecvHalf::Mpsc(rx)),
             Backend::Tcp(t) => {
@@ -167,6 +172,7 @@ impl MuxLink {
         Ok(MuxLink {
             shared: Arc::new(MuxShared {
                 tx: Mutex::new(tx),
+                fault: Mutex::new(fault),
                 rx: Mutex::new(RxState { recv: Some(rx), inboxes: BTreeMap::new(), shaper, dead: None }),
                 rx_cv: Condvar::new(),
                 link: Mutex::new(meter),
@@ -188,6 +194,7 @@ impl MuxLink {
         Ok(Chan::from_raw_parts(
             Backend::Mux(MuxSession { shared: Arc::clone(&self.shared), id }),
             Meter::new(),
+            None,
             None,
             self.party,
         ))
@@ -230,7 +237,8 @@ impl MuxLink {
             _ => return Err(Error::Runtime("mux finish: transport halves disagree".into())),
         };
         let meter = shared.link.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
-        Ok(Chan::from_raw_parts(backend, meter, rx.shaper, self.party))
+        let fault = shared.fault.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        Ok(Chan::from_raw_parts(backend, meter, rx.shaper, fault, self.party))
     }
 }
 
@@ -243,6 +251,25 @@ impl MuxSession {
         let mut frame = Vec::with_capacity(payload.len() + MUX_TAG_BYTES as usize);
         frame.extend_from_slice(&self.id.to_le_bytes());
         frame.extend_from_slice(payload);
+        {
+            // Inherited fault state (frame-counted at link level; see
+            // crate::net::fault). Checked before the frame moves or is
+            // accounted, mirroring the flat-channel hook.
+            let mut fault = lock(&self.shared.fault);
+            if let Some(f) = fault.as_mut() {
+                match f.on_link_send()? {
+                    SendAction::Pass => {}
+                    SendAction::Abort => std::process::abort(),
+                    SendAction::Swallow => return Ok(()),
+                    SendAction::Truncate => {
+                        let keep = ((frame.len() / 2) | 1).min(frame.len());
+                        let mut tx = lock(&self.shared.tx);
+                        let _ = tx.send(&frame[..keep]).is_ok();
+                        return Err(f.closed_error());
+                    }
+                }
+            }
+        }
         {
             let mut tx = lock(&self.shared.tx);
             tx.send(&frame)?;

@@ -29,7 +29,9 @@
 //! queues (a request batch can never consume a later batch's stock).
 
 use super::store::{Demand, TripleStore};
+use crate::resume::BankCounters;
 use crate::ss::triples::TripleSource;
+use crate::util::error::{Error, Result};
 
 /// Stocking policy for a [`MaterialBank`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,6 +111,86 @@ impl<S: TripleSource> MaterialBank<S> {
             replenish_events: 0,
             stalls: 0,
         }
+    }
+
+    /// Rebuild a bank to the exact state a prior bank reached after the
+    /// checkpointed counters' worth of checkouts ([`BankCounters`] from
+    /// a [`crate::resume::ServeState`]). `inner` must be a fresh
+    /// generator with the original seed.
+    ///
+    /// Draws never touch the generator — only fabrication does — so
+    /// replaying the fabrications back-to-back (the prefab, then every
+    /// replenishment) consumes the dealer stream exactly as the original
+    /// interleaved run did; draining the consumed batches then pops the
+    /// same FIFO front the original checkouts handed out. The surviving
+    /// stock is **bit-identical**, and the served-demand ledger is
+    /// re-recorded along the way. Counters inconsistent with the
+    /// stocking policy (a stale or foreign checkpoint) are a typed
+    /// error, never a panic.
+    pub fn restore(
+        inner: S,
+        per_batch: Demand,
+        cfg: BankConfig,
+        threads: usize,
+        counters: &BankCounters,
+    ) -> Result<MaterialBank<S>> {
+        if cfg.refill_batches == 0 {
+            return Err(Error::Config("a bank must refill by at least one batch".into()));
+        }
+        let prefab = counters.prefabricated as usize;
+        let replenished = counters.replenished as usize;
+        let consumed = counters.consumed as usize;
+        let events = counters.replenish_events as usize;
+        if prefab != cfg.prefab_batches
+            || replenished != events * cfg.refill_batches
+            || consumed > prefab + replenished
+        {
+            return Err(Error::Config(format!(
+                "bank restore: checkpoint counters (prefab {prefab}, replenished {replenished} \
+                 over {events} events, consumed {consumed}) are inconsistent with the stocking \
+                 policy {cfg:?}"
+            )));
+        }
+        let threads = threads.max(1);
+        let mut store = TripleStore::new(inner);
+        store.prefill_par(&per_batch.repeat(prefab), threads);
+        for _ in 0..events {
+            store.prefill_par(&per_batch.repeat(cfg.refill_batches), threads);
+        }
+        let drained = per_batch.repeat(consumed);
+        for &((m, k, n), count) in &drained.mats {
+            for _ in 0..count {
+                let _ = store.mat_triple(m, k, n);
+            }
+        }
+        for &n in &drained.vec_chunks {
+            let _ = store.vec_triple(n);
+        }
+        for &n in &drained.bit_chunks {
+            let _ = store.bit_triple(n);
+        }
+        for &n in &drained.dabit_chunks {
+            let _ = store.dabits(n);
+        }
+        if store.misses != 0 {
+            return Err(Error::Config(
+                "bank restore: draining the consumed batches missed prefabricated stock — the \
+                 checkpoint's per-batch demand does not match its counters"
+                    .into(),
+            ));
+        }
+        Ok(MaterialBank {
+            store,
+            per_batch,
+            cfg,
+            threads,
+            stock: prefab + replenished - consumed,
+            prefabricated: prefab,
+            replenished,
+            consumed,
+            replenish_events: events,
+            stalls: counters.stalls,
+        })
     }
 
     /// Check out one batch of material: consumes one batch of stock and
@@ -293,6 +375,59 @@ mod tests {
         }
         assert_eq!(seq.misses() + par.misses(), 0);
         assert_eq!(seq.replenish_events, par.replenish_events);
+    }
+
+    #[test]
+    fn restored_bank_hands_out_bit_identical_stock() {
+        // Run an original bank across a replenishment boundary, snapshot
+        // its counters, restore a twin from a fresh dealer, and check
+        // that every subsequent draw matches word-for-word — the
+        // property serve-batch resume rests on.
+        let cfg = BankConfig { prefab_batches: 3, low_water: 1, refill_batches: 2 };
+        let mut orig = MaterialBank::new(Dealer::new(42, 1), batch_demand(), cfg);
+        for _ in 0..4 {
+            draw_batch(orig.checkout());
+        }
+        let counters = BankCounters {
+            prefabricated: orig.prefabricated as u64,
+            replenished: orig.replenished as u64,
+            consumed: orig.consumed as u64,
+            replenish_events: orig.replenish_events as u64,
+            stalls: orig.stalls,
+        };
+        let mut twin =
+            MaterialBank::restore(Dealer::new(42, 1), batch_demand(), cfg, 2, &counters).unwrap();
+        assert_eq!(twin.stock(), orig.stock());
+        assert_eq!(twin.served_demand(), orig.served_demand());
+        assert!(twin.accounting_balances());
+        for batch in 0..3 {
+            let a = orig.checkout();
+            let (am, av, ad) = (a.mat_triple(4, 2, 3), a.vec_triple(8), a.dabits(4));
+            let b = twin.checkout();
+            let (bm, bv, bd) = (b.mat_triple(4, 2, 3), b.vec_triple(8), b.dabits(4));
+            assert_eq!(am.z, bm.z, "batch {batch}");
+            assert_eq!(av.z, bv.z, "batch {batch}");
+            assert_eq!(ad.arith, bd.arith, "batch {batch}");
+        }
+        assert_eq!(orig.misses() + twin.misses(), 0);
+    }
+
+    #[test]
+    fn restore_rejects_inconsistent_counters() {
+        let cfg = BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 };
+        // consumed exceeds everything ever fabricated → typed error.
+        let bad = BankCounters {
+            prefabricated: 2,
+            replenished: 0,
+            consumed: 9,
+            replenish_events: 0,
+            stalls: 0,
+        };
+        let err = MaterialBank::restore(Dealer::new(5, 0), batch_demand(), cfg, 1, &bad)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_default();
+        assert!(err.contains("inconsistent"), "{err}");
     }
 
     #[test]

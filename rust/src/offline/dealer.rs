@@ -143,6 +143,24 @@ impl Dealer {
     fn children(&mut self, label: u64, count: usize) -> Vec<Prg> {
         (0..count).map(|_| self.prg.fork(label)).collect()
     }
+
+    /// Master-stream position (drawn `u64` lanes). The master PRG is
+    /// only ever consumed by [`Prg::fork`] (two lanes per draw), so this
+    /// single word plus the [`Ledger`] is the dealer's complete
+    /// checkpointable state.
+    pub fn position(&self) -> u64 {
+        self.prg.position()
+    }
+
+    /// Rebuild a dealer mid-stream: same `(seed, party)` as the original,
+    /// fast-forwarded to `position` with the accounted `ledger` restored.
+    /// Subsequent draws are bit-identical to the uninterrupted dealer's.
+    pub fn restore(seed: u128, party: usize, position: u64, ledger: Ledger) -> Self {
+        let mut d = Dealer::new(seed, party);
+        d.prg.skip_to(position);
+        d.ledger = ledger;
+        d
+    }
 }
 
 impl TripleSource for Dealer {
@@ -345,6 +363,25 @@ mod tests {
         let bd = batch.dabits_many(&[10, 3], 4);
         assert_eq!(sd[0].arith, bd[0].arith);
         assert_eq!(single.ledger(), batch.ledger(), "ledgers must agree");
+    }
+
+    #[test]
+    fn restore_resumes_the_exact_stream() {
+        let mut live = Dealer::new(0x5EED, 1);
+        live.mat_triple(2, 3, 4);
+        live.vec_triple(9);
+        live.dabits(17);
+        let pos = live.position();
+        let led = live.ledger();
+        let mut back = Dealer::restore(0x5EED, 1, pos, led);
+        assert_eq!(back.position(), pos);
+        assert_eq!(back.ledger(), led);
+        let a = live.mat_triple(3, 2, 2);
+        let b = back.mat_triple(3, 2, 2);
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.z, b.z);
+        assert_eq!(live.bit_triple(70).c, back.bit_triple(70).c);
+        assert_eq!(live.ledger(), back.ledger());
     }
 
     #[test]

@@ -26,6 +26,12 @@ impl<S: TripleSource> TimedSource<S> {
     pub fn into_inner(self) -> S {
         self.inner
     }
+
+    /// Borrow the inner generator (e.g. to read a dealer's stream
+    /// position for a checkpoint without consuming the wrapper).
+    pub fn source(&self) -> &S {
+        &self.inner
+    }
 }
 
 impl<S: TripleSource> TripleSource for TimedSource<S> {

@@ -1,0 +1,777 @@
+//! The `PPKMCKP1` checkpoint artifact.
+//!
+//! A [`Checkpoint`] is one party's complete protocol state at a named
+//! pipeline site (a Lloyd-iteration boundary, the `train.done` barrier,
+//! or a scored serve batch), framed with the same discipline as the
+//! model artifact (`PPKMDL01`, [`crate::serve::model`]): an 8-byte
+//! magic, a `u32` version, fixed-width little-endian fields via
+//! [`crate::util::codec`], and a trailing FNV-1a checksum over every
+//! preceding byte. Parsing validates in a fixed order — length, magic,
+//! checksum, version, field ranges — and every header-derived length is
+//! bounds-checked against the remaining input *before* any allocation,
+//! so a truncated or forged file is a typed [`Error::Config`] naming
+//! the defect, never a panic or a huge reservation.
+//!
+//! The byte layout is documented in `docs/PROTOCOLS.md` ("Crash
+//! resumability" appendix).
+
+// Checkpoint files are untrusted input on the resume path: typed
+// errors only (ppkm-lint rule no-panic-in-wire-paths covers resume/).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::net::meter::PhaseStats;
+use crate::offline::store::Demand;
+use crate::ring::matrix::Mat;
+use crate::serve::scorer::ScoreResult;
+use crate::ss::triples::Ledger;
+use crate::util::codec::{fnv1a64, push_str, push_u32, push_u64};
+use crate::util::error::{Error, Result};
+use crate::util::hash::Hash256;
+use std::path::{Path, PathBuf};
+
+/// Artifact magic: the ASCII bytes `PPKMCKP1`.
+pub const CKPT_MAGIC: [u8; 8] = *b"PPKMCKP1";
+/// Checkpoint format version this build reads and writes.
+pub const CKPT_VERSION: u32 = 1;
+
+const WHAT: &str = "checkpoint artifact";
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::Config(format!("{WHAT}: {}", msg.into()))
+}
+
+fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    crate::util::codec::rd_u32(b, off, WHAT)
+}
+
+fn rd_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+    crate::util::codec::rd_u64(b, off, WHAT)
+}
+
+fn rd_str(b: &[u8], off: &mut usize) -> Result<String> {
+    crate::util::codec::rd_str(b, off, WHAT)
+}
+
+fn rd_bytes(b: &[u8], off: &mut usize) -> Result<Vec<u8>> {
+    crate::util::codec::rd_bytes(b, off, WHAT)
+}
+
+/// A serialized [`crate::net::Meter`] snapshot: per-phase stats (sorted
+/// by phase label), the current phase label, and the flight-open flag.
+pub type MeterSnapshot = (Vec<(String, PhaseStats)>, String, bool);
+
+/// Replenished-bank counters frozen at a serve checkpoint; the bank is
+/// rebuilt on resume by replaying the exact historical fabrication
+/// sequence these counters describe
+/// (see `MaterialBank::restore`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BankCounters {
+    /// Batches fabricated up front.
+    pub prefabricated: u64,
+    /// Batches added by replenishment.
+    pub replenished: u64,
+    /// Batches checked out so far.
+    pub consumed: u64,
+    /// Replenishment events so far.
+    pub replenish_events: u64,
+    /// Checkouts that replenished synchronously on the scoring path.
+    pub stalls: u64,
+}
+
+/// Mid-training state at a Lloyd-iteration boundary (`train.iter.{i}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Iterations fully completed (1-based count, = the loop's `iters`).
+    pub iter: u32,
+    /// Whether the convergence check already decided to stop.
+    pub stop: bool,
+    /// This party's current centroid share (k×d).
+    pub mu: Mat,
+    /// This party's current one-hot assignment share (n×k).
+    pub c_share: Mat,
+    /// The dealer PRG stream position ([`crate::util::prng::Prg::position`]).
+    pub dealer_pos: u64,
+    /// Offline material consumed so far.
+    pub ledger: Ledger,
+    /// Total offline demand recorded so far.
+    pub demand: Demand,
+    /// Demand attributed to each step (S1, S2, S3) so far.
+    pub step_demands: [Demand; 3],
+}
+
+/// State at the `train.done` barrier: the finished model share, opaque
+/// bytes so this module never depends on the serving layer's types.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainDoneState {
+    /// `TrainedModel::to_bytes` of this party's share.
+    pub model: Vec<u8>,
+}
+
+/// Mid-serving state after a scored batch (`serve.batch.{i}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeState {
+    /// `TrainedModel::to_bytes` of this party's **current** share —
+    /// includes any centroid-refresh deltas applied so far.
+    pub model: Vec<u8>,
+    /// The scorer's cached shared norm row (1×k, scale 2f).
+    pub u_row: Mat,
+    /// Centroid refreshes applied so far (keys the refresh dealer seed).
+    pub refreshes_done: u32,
+    /// Batches fully scored (the next batch index to run).
+    pub batches_scored: u32,
+    /// The probe batch's recorded per-batch demand the bank plans from.
+    pub per_batch: Demand,
+    /// Bank ledger counters at the checkpoint.
+    pub bank: BankCounters,
+    /// Traffic of the one-time scorer warmup.
+    pub warmup: PhaseStats,
+    /// Revealed results of every scored batch so far.
+    pub results: Vec<ScoreResult>,
+    /// Per-batch `(rows, flagged, online)` stats so far. Wall-clock is
+    /// deliberately **not** persisted (transcripts exclude it); resumed
+    /// batches report `wall_secs = 0`.
+    pub stats: Vec<(u64, u64, PhaseStats)>,
+}
+
+/// The pipeline-specific state a checkpoint snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// A Lloyd-iteration boundary.
+    Train(TrainState),
+    /// The `train.done` barrier.
+    TrainDone(TrainDoneState),
+    /// A scored serve batch.
+    Serve(ServeState),
+}
+
+impl Payload {
+    fn tag(&self) -> u32 {
+        match self {
+            Payload::Train(_) => 1,
+            Payload::TrainDone(_) => 2,
+            Payload::Serve(_) => 3,
+        }
+    }
+}
+
+/// One party's versioned, checksummed protocol snapshot at a named
+/// pipeline site. `party{p}.{ordinal:05}.ppkmckp` files accumulate in
+/// the checkpoint directory — one per site, every site kept — and the
+/// resume leg of the handshake negotiates the highest ordinal both
+/// parties hold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Owning party (0 or 1).
+    pub party: usize,
+    /// Position in the pipeline's checkpoint sequence (1-based; 0 is
+    /// reserved on the wire for "no checkpoint").
+    pub ordinal: u32,
+    /// The site label (`train.iter.{i}` / `train.done` / `serve.batch.{i}`).
+    pub label: String,
+    /// Digest of the canonical scenario this state belongs to.
+    pub scenario: [u8; 32],
+    /// Transcript reveals accumulated before this site.
+    pub reveals: Vec<(String, String)>,
+    /// The channel meter at this site.
+    pub meter: MeterSnapshot,
+    /// Pipeline-specific state.
+    pub payload: Payload,
+}
+
+// ---- field codecs --------------------------------------------------------
+
+fn push_mat(out: &mut Vec<u8>, m: &Mat) {
+    push_u32(out, m.rows as u32);
+    push_u32(out, m.cols as u32);
+    for &w in &m.data {
+        push_u64(out, w);
+    }
+}
+
+fn rd_mat(b: &[u8], off: &mut usize) -> Result<Mat> {
+    let rows = rd_u32(b, off)? as usize;
+    let cols = rd_u32(b, off)? as usize;
+    let elems = rows.checked_mul(cols).ok_or_else(|| bad("matrix shape overflows"))?;
+    let need = elems.checked_mul(8).ok_or_else(|| bad("matrix shape overflows"))?;
+    let end = off
+        .checked_add(need)
+        .filter(|&e| e <= b.len())
+        .ok_or_else(|| bad("truncated matrix body"))?;
+    let mut data = Vec::with_capacity(elems);
+    for chunk in b[*off..end].chunks_exact(8) {
+        let mut w = [0u8; 8];
+        w.copy_from_slice(chunk);
+        data.push(u64::from_le_bytes(w));
+    }
+    *off = end;
+    Ok(Mat { rows, cols, data })
+}
+
+fn push_stats(out: &mut Vec<u8>, p: &PhaseStats) {
+    push_u64(out, p.bytes_sent);
+    push_u64(out, p.msgs_sent);
+    push_u64(out, p.rounds);
+}
+
+fn rd_stats(b: &[u8], off: &mut usize) -> Result<PhaseStats> {
+    Ok(PhaseStats {
+        bytes_sent: rd_u64(b, off)?,
+        msgs_sent: rd_u64(b, off)?,
+        rounds: rd_u64(b, off)?,
+    })
+}
+
+fn push_ledger(out: &mut Vec<u8>, l: &Ledger) {
+    push_u64(out, l.mat_triple_elems);
+    push_u64(out, l.mat_triples);
+    push_u64(out, l.vec_triple_lanes);
+    push_u64(out, l.bit_triple_lanes);
+    push_u64(out, l.dabit_lanes);
+}
+
+fn rd_ledger(b: &[u8], off: &mut usize) -> Result<Ledger> {
+    Ok(Ledger {
+        mat_triple_elems: rd_u64(b, off)?,
+        mat_triples: rd_u64(b, off)?,
+        vec_triple_lanes: rd_u64(b, off)?,
+        bit_triple_lanes: rd_u64(b, off)?,
+        dabit_lanes: rd_u64(b, off)?,
+    })
+}
+
+fn push_demand(out: &mut Vec<u8>, d: &Demand) {
+    push_u32(out, d.mats.len() as u32);
+    for &((m, k, n), count) in &d.mats {
+        push_u64(out, m as u64);
+        push_u64(out, k as u64);
+        push_u64(out, n as u64);
+        push_u64(out, count as u64);
+    }
+    for chunks in [&d.vec_chunks, &d.bit_chunks, &d.dabit_chunks] {
+        push_u32(out, chunks.len() as u32);
+        for &c in chunks {
+            push_u64(out, c as u64);
+        }
+    }
+}
+
+fn rd_demand(b: &[u8], off: &mut usize) -> Result<Demand> {
+    let nmats = rd_u32(b, off)? as usize;
+    // Four u64s per entry: refuse a forged count before reserving.
+    if off.checked_add(nmats.saturating_mul(32)).filter(|&e| e <= b.len()).is_none() {
+        return Err(bad("truncated demand table"));
+    }
+    let mut d = Demand::default();
+    d.mats.reserve(nmats);
+    for _ in 0..nmats {
+        let m = rd_u64(b, off)? as usize;
+        let k = rd_u64(b, off)? as usize;
+        let n = rd_u64(b, off)? as usize;
+        let count = rd_u64(b, off)? as usize;
+        d.mats.push(((m, k, n), count));
+    }
+    for chunks in [&mut d.vec_chunks, &mut d.bit_chunks, &mut d.dabit_chunks] {
+        let len = rd_u32(b, off)? as usize;
+        if off.checked_add(len.saturating_mul(8)).filter(|&e| e <= b.len()).is_none() {
+            return Err(bad("truncated demand chunks"));
+        }
+        chunks.reserve(len);
+        for _ in 0..len {
+            chunks.push(rd_u64(b, off)? as usize);
+        }
+    }
+    Ok(d)
+}
+
+fn push_result(out: &mut Vec<u8>, r: &ScoreResult) {
+    push_u32(out, r.assignments.len() as u32);
+    for &a in &r.assignments {
+        push_u64(out, a as u64);
+    }
+    for &f in &r.fraud_flags {
+        out.push(f as u8);
+    }
+    push_u64(out, r.malformed_rows as u64);
+}
+
+fn rd_result(b: &[u8], off: &mut usize) -> Result<ScoreResult> {
+    let rows = rd_u32(b, off)? as usize;
+    // rows×8 assignment words + rows flag bytes, checked up front.
+    if off.checked_add(rows.saturating_mul(9)).filter(|&e| e <= b.len()).is_none() {
+        return Err(bad("truncated batch result"));
+    }
+    let mut assignments = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        assignments.push(rd_u64(b, off)? as usize);
+    }
+    let mut fraud_flags = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let end = *off + 1;
+        fraud_flags.push(b[*off] != 0);
+        *off = end;
+    }
+    let malformed_rows = rd_u64(b, off)? as usize;
+    Ok(ScoreResult { assignments, fraud_flags, malformed_rows })
+}
+
+// ---- the artifact --------------------------------------------------------
+
+impl Checkpoint {
+    /// Conventional file name inside a checkpoint directory.
+    pub fn file_name(party: usize, ordinal: u32) -> String {
+        format!("party{party}.{ordinal:05}.ppkmckp")
+    }
+
+    /// A digest binding `(scenario, ordinal, label)` — what the resume
+    /// leg of the handshake exchanges to confirm both parties hold the
+    /// *same* checkpoint before replaying from it.
+    pub fn confirm_digest(&self) -> [u8; 32] {
+        confirm_digest(&self.scenario, self.ordinal, &self.label)
+    }
+
+    /// Typed check that this checkpoint belongs to `digest`'s scenario.
+    pub fn verify_scenario(&self, digest: &[u8; 32]) -> Result<()> {
+        if self.scenario != *digest {
+            return Err(bad(format!(
+                "scenario digest mismatch — checkpoint {:?} (ordinal {}) was written by a \
+                 different scenario",
+                self.label, self.ordinal
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `PPKMCKP1` byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&CKPT_MAGIC);
+        push_u32(&mut out, CKPT_VERSION);
+        push_u32(&mut out, self.party as u32);
+        push_u32(&mut out, self.ordinal);
+        push_str(&mut out, &self.label);
+        out.extend_from_slice(&self.scenario);
+        push_u32(&mut out, self.reveals.len() as u32);
+        for (k, v) in &self.reveals {
+            push_str(&mut out, k);
+            push_str(&mut out, v);
+        }
+        let (phases, current, flight_open) = &self.meter;
+        push_u32(&mut out, phases.len() as u32);
+        for (label, stats) in phases {
+            push_str(&mut out, label);
+            push_stats(&mut out, stats);
+        }
+        push_str(&mut out, current);
+        push_u32(&mut out, *flight_open as u32);
+        push_u32(&mut out, self.payload.tag());
+        match &self.payload {
+            Payload::Train(t) => {
+                push_u32(&mut out, t.iter);
+                push_u32(&mut out, t.stop as u32);
+                push_mat(&mut out, &t.mu);
+                push_mat(&mut out, &t.c_share);
+                push_u64(&mut out, t.dealer_pos);
+                push_ledger(&mut out, &t.ledger);
+                push_demand(&mut out, &t.demand);
+                for d in &t.step_demands {
+                    push_demand(&mut out, d);
+                }
+            }
+            Payload::TrainDone(t) => {
+                crate::util::codec::push_bytes(&mut out, &t.model);
+            }
+            Payload::Serve(s) => {
+                crate::util::codec::push_bytes(&mut out, &s.model);
+                push_mat(&mut out, &s.u_row);
+                push_u32(&mut out, s.refreshes_done);
+                push_u32(&mut out, s.batches_scored);
+                push_demand(&mut out, &s.per_batch);
+                push_u64(&mut out, s.bank.prefabricated);
+                push_u64(&mut out, s.bank.replenished);
+                push_u64(&mut out, s.bank.consumed);
+                push_u64(&mut out, s.bank.replenish_events);
+                push_u64(&mut out, s.bank.stalls);
+                push_stats(&mut out, &s.warmup);
+                push_u32(&mut out, s.results.len() as u32);
+                for r in &s.results {
+                    push_result(&mut out, r);
+                }
+                push_u32(&mut out, s.stats.len() as u32);
+                for (rows, flagged, online) in &s.stats {
+                    push_u64(&mut out, *rows);
+                    push_u64(&mut out, *flagged);
+                    push_stats(&mut out, online);
+                }
+            }
+        }
+        let checksum = fnv1a64(&out);
+        push_u64(&mut out, checksum);
+        out
+    }
+
+    /// Parse and validate the `PPKMCKP1` byte format. Validation order:
+    /// length, magic, checksum, version, field ranges — with every
+    /// header-derived length bounds-checked before allocation, and a
+    /// final trailing-bytes check so appended garbage is refused.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 16 {
+            return Err(bad(format!("{} bytes is too short to be a checkpoint", bytes.len())));
+        }
+        if bytes[..8] != CKPT_MAGIC {
+            return Err(bad("bad magic (not a ppkmeans checkpoint)"));
+        }
+        let body_len = bytes.len() - 8;
+        let mut w = [0u8; 8];
+        w.copy_from_slice(&bytes[body_len..]);
+        if fnv1a64(&bytes[..body_len]) != u64::from_le_bytes(w) {
+            return Err(bad("checksum mismatch (corrupted file)"));
+        }
+        let b = &bytes[..body_len];
+        let mut off = 8;
+        let version = rd_u32(b, &mut off)?;
+        if version != CKPT_VERSION {
+            return Err(bad(format!(
+                "unsupported version {version} (this build reads version {CKPT_VERSION})"
+            )));
+        }
+        let party = rd_u32(b, &mut off)? as usize;
+        if party > 1 {
+            return Err(bad(format!("party {party} out of range (0|1)")));
+        }
+        let ordinal = rd_u32(b, &mut off)?;
+        if ordinal == 0 {
+            return Err(bad("ordinal 0 is reserved for \"no checkpoint\""));
+        }
+        let label = rd_str(b, &mut off)?;
+        let end = off
+            .checked_add(32)
+            .filter(|&e| e <= b.len())
+            .ok_or_else(|| bad("truncated scenario digest"))?;
+        let mut scenario = [0u8; 32];
+        scenario.copy_from_slice(&b[off..end]);
+        off = end;
+        let nreveals = rd_u32(b, &mut off)? as usize;
+        if off.checked_add(nreveals.saturating_mul(8)).filter(|&e| e <= b.len()).is_none() {
+            return Err(bad("truncated reveal table"));
+        }
+        let mut reveals = Vec::with_capacity(nreveals);
+        for _ in 0..nreveals {
+            let k = rd_str(b, &mut off)?;
+            let v = rd_str(b, &mut off)?;
+            reveals.push((k, v));
+        }
+        let nphases = rd_u32(b, &mut off)? as usize;
+        if off.checked_add(nphases.saturating_mul(28)).filter(|&e| e <= b.len()).is_none() {
+            return Err(bad("truncated meter table"));
+        }
+        let mut phases = Vec::with_capacity(nphases);
+        for _ in 0..nphases {
+            let l = rd_str(b, &mut off)?;
+            let s = rd_stats(b, &mut off)?;
+            phases.push((l, s));
+        }
+        let current = rd_str(b, &mut off)?;
+        let flight_open = rd_u32(b, &mut off)? != 0;
+        let payload = match rd_u32(b, &mut off)? {
+            1 => {
+                let iter = rd_u32(b, &mut off)?;
+                let stop = rd_u32(b, &mut off)? != 0;
+                let mu = rd_mat(b, &mut off)?;
+                let c_share = rd_mat(b, &mut off)?;
+                let dealer_pos = rd_u64(b, &mut off)?;
+                let ledger = rd_ledger(b, &mut off)?;
+                let demand = rd_demand(b, &mut off)?;
+                let step_demands =
+                    [rd_demand(b, &mut off)?, rd_demand(b, &mut off)?, rd_demand(b, &mut off)?];
+                Payload::Train(TrainState {
+                    iter,
+                    stop,
+                    mu,
+                    c_share,
+                    dealer_pos,
+                    ledger,
+                    demand,
+                    step_demands,
+                })
+            }
+            2 => Payload::TrainDone(TrainDoneState { model: rd_bytes(b, &mut off)? }),
+            3 => {
+                let model = rd_bytes(b, &mut off)?;
+                let u_row = rd_mat(b, &mut off)?;
+                let refreshes_done = rd_u32(b, &mut off)?;
+                let batches_scored = rd_u32(b, &mut off)?;
+                let per_batch = rd_demand(b, &mut off)?;
+                let bank = BankCounters {
+                    prefabricated: rd_u64(b, &mut off)?,
+                    replenished: rd_u64(b, &mut off)?,
+                    consumed: rd_u64(b, &mut off)?,
+                    replenish_events: rd_u64(b, &mut off)?,
+                    stalls: rd_u64(b, &mut off)?,
+                };
+                let warmup = rd_stats(b, &mut off)?;
+                let nresults = rd_u32(b, &mut off)? as usize;
+                if off.checked_add(nresults.saturating_mul(12)).filter(|&e| e <= b.len()).is_none()
+                {
+                    return Err(bad("truncated result table"));
+                }
+                let mut results = Vec::with_capacity(nresults);
+                for _ in 0..nresults {
+                    results.push(rd_result(b, &mut off)?);
+                }
+                let nstats = rd_u32(b, &mut off)? as usize;
+                if off.checked_add(nstats.saturating_mul(40)).filter(|&e| e <= b.len()).is_none() {
+                    return Err(bad("truncated batch-stats table"));
+                }
+                let mut stats = Vec::with_capacity(nstats);
+                for _ in 0..nstats {
+                    let rows = rd_u64(b, &mut off)?;
+                    let flagged = rd_u64(b, &mut off)?;
+                    let online = rd_stats(b, &mut off)?;
+                    stats.push((rows, flagged, online));
+                }
+                Payload::Serve(ServeState {
+                    model,
+                    u_row,
+                    refreshes_done,
+                    batches_scored,
+                    per_batch,
+                    bank,
+                    warmup,
+                    results,
+                    stats,
+                })
+            }
+            other => return Err(bad(format!("unknown payload tag {other}"))),
+        };
+        if off != b.len() {
+            return Err(bad(format!("{} trailing bytes after the payload", b.len() - off)));
+        }
+        Ok(Checkpoint { party, ordinal, label, scenario, reveals, meter: (phases, current, flight_open), payload })
+    }
+
+    /// Write atomically into `dir` (temp file + rename, so a crash
+    /// mid-write never leaves a torn file under the canonical name).
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let name = Checkpoint::file_name(self.party, self.ordinal);
+        let path = dir.join(&name);
+        let tmp = dir.join(format!("{name}.tmp"));
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+/// The `(scenario, ordinal, label)` binding digest (see
+/// [`Checkpoint::confirm_digest`]); free function so the handshake can
+/// also compute it for diagnostics.
+pub fn confirm_digest(scenario: &[u8; 32], ordinal: u32, label: &str) -> [u8; 32] {
+    let mut h = Hash256::new();
+    h.update(*scenario);
+    h.update(ordinal.to_le_bytes());
+    h.update(label.as_bytes());
+    h.finalize()
+}
+
+/// Scan `dir` for this party's highest usable checkpoint for the given
+/// scenario: unparseable or corrupted files are skipped (a torn tail
+/// from a crash must not wedge resume), and checkpoints from other
+/// scenarios are filtered by digest. Returns 0 when none qualify.
+pub fn scan_max_ordinal(dir: &Path, party: usize, scenario: &[u8; 32]) -> u32 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let prefix = format!("party{party}.");
+    let mut best = 0u32;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if !name.starts_with(&prefix) || !name.ends_with(".ppkmckp") {
+            continue;
+        }
+        let Ok(ckpt) = Checkpoint::load(&entry.path()) else { continue };
+        if ckpt.party == party && ckpt.scenario == *scenario && ckpt.ordinal > best {
+            best = ckpt.ordinal;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn sample(party: usize, ordinal: u32, payload: Payload) -> Checkpoint {
+        Checkpoint {
+            party,
+            ordinal,
+            label: "train.iter.1".into(),
+            scenario: [7u8; 32],
+            reveals: vec![("centroids".into(), "abc123".into())],
+            meter: (
+                vec![
+                    ("handshake".into(), PhaseStats { bytes_sent: 72, msgs_sent: 1, rounds: 1 }),
+                    ("online.s1".into(), PhaseStats { bytes_sent: 999, msgs_sent: 4, rounds: 2 }),
+                ],
+                "online.s1".into(),
+                false,
+            ),
+            payload,
+        }
+    }
+
+    fn train_payload() -> Payload {
+        let mut demand = Demand::default();
+        demand.mat(4, 2, 3);
+        demand.vec_lanes(17);
+        Payload::Train(TrainState {
+            iter: 2,
+            stop: false,
+            mu: Mat::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]),
+            c_share: Mat::from_vec(3, 2, vec![9, 8, 7, 6, 5, 4]),
+            dealer_pos: 12345,
+            ledger: Ledger {
+                mat_triple_elems: 10,
+                mat_triples: 2,
+                vec_triple_lanes: 3,
+                bit_triple_lanes: 4,
+                dabit_lanes: 5,
+            },
+            demand: demand.clone(),
+            step_demands: [demand.clone(), Demand::default(), demand],
+        })
+    }
+
+    fn serve_payload() -> Payload {
+        let mut per_batch = Demand::default();
+        per_batch.mat(16, 2, 2);
+        per_batch.dabit_lanes(32);
+        Payload::Serve(ServeState {
+            model: vec![1, 2, 3, 4, 5],
+            u_row: Mat::from_vec(1, 2, vec![11, 22]),
+            refreshes_done: 1,
+            batches_scored: 2,
+            per_batch,
+            bank: BankCounters {
+                prefabricated: 2,
+                replenished: 2,
+                consumed: 2,
+                replenish_events: 1,
+                stalls: 0,
+            },
+            warmup: PhaseStats { bytes_sent: 64, msgs_sent: 1, rounds: 1 },
+            results: vec![ScoreResult {
+                assignments: vec![0, 1, 1, 0],
+                fraud_flags: vec![false, true, false, false],
+                malformed_rows: 0,
+            }],
+            stats: vec![(4, 1, PhaseStats { bytes_sent: 100, msgs_sent: 3, rounds: 3 })],
+        })
+    }
+
+    #[test]
+    fn roundtrips_every_payload_kind() {
+        for payload in [
+            train_payload(),
+            Payload::TrainDone(TrainDoneState { model: vec![0xAA; 40] }),
+            serve_payload(),
+        ] {
+            let ckpt = sample(1, 3, payload);
+            let back = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+            assert_eq!(back, ckpt);
+        }
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_typed_error() {
+        let bytes = sample(0, 1, train_payload()).to_bytes();
+        for cut in [0, 4, 15, bytes.len() / 2, bytes.len() - 1] {
+            let err = Checkpoint::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(err.to_string().contains("checkpoint artifact"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn flipped_byte_fails_the_checksum() {
+        let mut bytes = sample(0, 2, serve_payload()).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn wrong_magic_is_not_a_checkpoint() {
+        let mut bytes = sample(0, 1, train_payload()).to_bytes();
+        bytes[0] = b'X';
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn version_skew_names_both_versions() {
+        // Rebuild with a bumped version and a recomputed checksum, so
+        // the version check (not the checksum) is what trips.
+        let mut bytes = sample(0, 1, train_payload()).to_bytes();
+        let body = bytes.len() - 8;
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let sum = fnv1a64(&bytes[..body]);
+        bytes[body..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("99") && msg.contains('1'), "{msg}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_refused() {
+        let ckpt = sample(0, 1, train_payload());
+        let mut bytes = ckpt.to_bytes();
+        // Splice extra bytes before the checksum and recompute it, so
+        // only the trailing-bytes check can catch the padding.
+        let body = bytes.len() - 8;
+        bytes.truncate(body);
+        bytes.extend_from_slice(&[0u8; 3]);
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn scenario_digest_gates_verify_and_scan() {
+        let dir = std::env::temp_dir().join(format!("ppkm_ckpt_scan_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = sample(0, 4, train_payload());
+        ckpt.save(&dir).unwrap();
+        assert!(ckpt.verify_scenario(&[7u8; 32]).is_ok());
+        let err = ckpt.verify_scenario(&[8u8; 32]).unwrap_err();
+        assert!(err.to_string().contains("scenario digest mismatch"), "{err}");
+        // The scan honors the digest filter, skips foreign parties, and
+        // shrugs off a torn file.
+        assert_eq!(scan_max_ordinal(&dir, 0, &[7u8; 32]), 4);
+        assert_eq!(scan_max_ordinal(&dir, 0, &[8u8; 32]), 0);
+        assert_eq!(scan_max_ordinal(&dir, 1, &[7u8; 32]), 0);
+        std::fs::write(dir.join(Checkpoint::file_name(0, 9)), b"PPKMCKP1 torn").unwrap();
+        assert_eq!(scan_max_ordinal(&dir, 0, &[7u8; 32]), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn confirm_digest_binds_ordinal_and_label() {
+        let a = confirm_digest(&[1u8; 32], 3, "train.iter.2");
+        assert_ne!(a, confirm_digest(&[1u8; 32], 4, "train.iter.2"));
+        assert_ne!(a, confirm_digest(&[1u8; 32], 3, "train.iter.1"));
+        assert_ne!(a, confirm_digest(&[2u8; 32], 3, "train.iter.2"));
+        let ckpt = sample(0, 3, train_payload());
+        assert_eq!(
+            ckpt.confirm_digest(),
+            confirm_digest(&ckpt.scenario, 3, "train.iter.1")
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Crash-resumable parties: barrier checkpoints and deterministic
+//! replay.
+//!
+//! A party process can be killed at any point — a crashed host, an OOM
+//! kill, an injected fault ([`crate::net::fault`]) — and restarted
+//! against the same scenario with the same `--ckpt-dir`. The restarted
+//! pair negotiates the highest checkpoint **both** parties hold (the
+//! resume leg of the `PPKMWRE1` v2 handshake,
+//! [`crate::coordinator::remote`]), restores that snapshot, and replays
+//! the rest of the pipeline deterministically. The acceptance bar is
+//! **bit-identical transcripts**: a killed-and-resumed run must produce
+//! the same reveal hashes *and* the same per-phase meter counts as an
+//! uninterrupted run (regression-tested in `tests/resume.rs`).
+//!
+//! ## Checkpoint sites
+//!
+//! Checkpoints piggyback on existing pipeline boundaries — they add
+//! **no flights** of their own:
+//!
+//! | site label        | payload                  | pipeline(s)           |
+//! |-------------------|--------------------------|-----------------------|
+//! | `train.iter.{i}`  | [`artifact::TrainState`] | train, fraud, serve, score-via-serve, gateway |
+//! | `train.done`      | [`artifact::TrainDoneState`] | serve, gateway    |
+//! | `serve.batch.{i}` | [`artifact::ServeState`] | serve, score          |
+//!
+//! Ordinals are assigned sequentially from 1 in pipeline order; every
+//! checkpoint file is kept (`party{p}.{ordinal:05}.ppkmckp`), so the
+//! negotiation can settle on *any* common prefix — including after the
+//! peers crashed at different points. A resumed run re-writes the
+//! ordinals past the common point; determinism makes those re-writes
+//! byte-identical, which is what lets a run survive **multiple** kills.
+//!
+//! ## What restores, what replays
+//!
+//! Cheap deterministic setup (handshake, backend selection, the
+//! `online.init` exchange) is *replayed* — both parties re-execute it
+//! symmetrically, so the wire stays in lockstep. Everything expensive
+//! or stateful is *restored* from the snapshot: centroid and assignment
+//! shares, the dealer PRG stream position ([`crate::util::prng::Prg::skip_to`]),
+//! the consumed-material ledger, the bank's fabrication counters, the
+//! scorer's warmup cache and already-revealed batch results. The
+//! channel [`crate::net::Meter`] is then overwritten with the
+//! checkpointed snapshot, which makes the final per-phase counts equal
+//! an uninterrupted run's. Wall-clock telemetry (never part of a
+//! transcript) restarts from zero on resume.
+
+// The resume path parses untrusted checkpoint files and runs inside
+// wire-facing drivers: typed errors only (ppkm-lint
+// no-panic-in-wire-paths covers this subtree).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod artifact;
+
+pub use artifact::{
+    BankCounters, Checkpoint, MeterSnapshot, Payload, ServeState, TrainDoneState, TrainState,
+    CKPT_MAGIC, CKPT_VERSION,
+};
+
+use crate::net::Meter;
+use crate::util::error::{Error, Result};
+use std::path::PathBuf;
+
+/// One party's checkpoint context, threaded through the pipeline
+/// drivers. Disabled (the default) it is inert: every `save` is a
+/// no-op and `max_ordinal` is 0, so pipelines that never asked for
+/// resumability pay nothing.
+///
+/// Checkpoint **writes are infallible at the call site**: the drivers
+/// they ride in ([`crate::kmeans::secure`]'s party main loop, the serve
+/// loop) either cannot fail or must not fail because a telemetry disk
+/// filled up. A failed write is stashed, further writes stop, and the
+/// scenario runner surfaces the stashed error after the pipeline
+/// completes ([`ResumeCtx::take_error`]).
+#[derive(Debug)]
+pub struct ResumeCtx {
+    dir: Option<PathBuf>,
+    party: usize,
+    scenario: [u8; 32],
+    next_ordinal: u32,
+    reveals: Vec<(String, String)>,
+    resume: Option<Checkpoint>,
+    error: Option<Error>,
+}
+
+impl ResumeCtx {
+    /// An inert context: no directory, every operation a no-op.
+    pub fn disabled() -> ResumeCtx {
+        ResumeCtx {
+            dir: None,
+            party: 0,
+            scenario: [0u8; 32],
+            next_ordinal: 1,
+            reveals: Vec::new(),
+            resume: None,
+            error: None,
+        }
+    }
+
+    /// A live context writing `party`'s checkpoints for the scenario
+    /// with digest `scenario` into `dir`.
+    pub fn new(dir: impl Into<PathBuf>, party: usize, scenario: [u8; 32]) -> ResumeCtx {
+        ResumeCtx {
+            dir: Some(dir.into()),
+            party,
+            scenario,
+            next_ordinal: 1,
+            reveals: Vec::new(),
+            resume: None,
+            error: None,
+        }
+    }
+
+    /// Whether checkpointing is configured.
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// This party's highest usable on-disk ordinal for the scenario
+    /// (0 = none) — the value its handshake hello advertises.
+    pub fn max_ordinal(&self) -> u32 {
+        match &self.dir {
+            Some(dir) => artifact::scan_max_ordinal(dir, self.party, &self.scenario),
+            None => 0,
+        }
+    }
+
+    /// Load the negotiated common checkpoint. A missing or unreadable
+    /// file at an ordinal this party *advertised* is a **checkpoint
+    /// gap** — a typed [`Error::Protocol`], because the peer has
+    /// already committed to resuming from it.
+    pub fn load(&mut self, ordinal: u32) -> Result<&Checkpoint> {
+        let dir = self.dir.as_ref().ok_or_else(|| {
+            Error::Protocol("resume: checkpoint negotiated but checkpointing is disabled".into())
+        })?;
+        let path = dir.join(Checkpoint::file_name(self.party, ordinal));
+        let ckpt = Checkpoint::load(&path).map_err(|e| {
+            Error::Protocol(format!(
+                "resume: negotiated checkpoint {ordinal} but party{} has no valid copy at {} \
+                 ({e}) — checkpoint gap",
+                self.party,
+                path.display()
+            ))
+        })?;
+        ckpt.verify_scenario(&self.scenario)?;
+        if ckpt.ordinal != ordinal || ckpt.party != self.party {
+            return Err(Error::Protocol(format!(
+                "resume: {} holds ordinal {} for party{}, expected ordinal {ordinal} for party{}",
+                path.display(),
+                ckpt.ordinal,
+                ckpt.party,
+                self.party
+            )));
+        }
+        self.next_ordinal = ordinal + 1;
+        self.reveals = ckpt.reveals.clone();
+        self.resume = Some(ckpt);
+        match &self.resume {
+            Some(c) => Ok(c),
+            // Unreachable (just assigned); typed for the lint contract.
+            None => Err(Error::Protocol("resume: checkpoint vanished after load".into())),
+        }
+    }
+
+    /// Take the loaded checkpoint for the pipeline to restore from
+    /// (consumes it; later calls return `None`).
+    pub fn take_resume(&mut self) -> Option<Checkpoint> {
+        self.resume.take()
+    }
+
+    /// Record the transcript reveals accumulated so far; subsequent
+    /// [`ResumeCtx::save`] calls embed this prefix so a resumed run can
+    /// reconstruct its reveal list exactly.
+    pub fn set_reveals(&mut self, reveals: &[(String, String)]) {
+        self.reveals = reveals.to_vec();
+    }
+
+    /// The reveal prefix restored by [`ResumeCtx::load`] (empty when
+    /// starting fresh).
+    pub fn reveals(&self) -> &[(String, String)] {
+        &self.reveals
+    }
+
+    /// Write the next checkpoint in sequence (atomic temp+rename).
+    /// No-op when disabled or after a stashed write error.
+    pub fn save(&mut self, label: &str, meter: &Meter, payload: Payload) {
+        let Some(dir) = self.dir.clone() else { return };
+        if self.error.is_some() {
+            return;
+        }
+        let ckpt = Checkpoint {
+            party: self.party,
+            ordinal: self.next_ordinal,
+            label: label.to_string(),
+            scenario: self.scenario,
+            reveals: self.reveals.clone(),
+            meter: meter.snapshot(),
+            payload,
+        };
+        match ckpt.save(&dir) {
+            Ok(_) => self.next_ordinal += 1,
+            Err(e) => self.error = Some(e),
+        }
+    }
+
+    /// Surface a checkpoint-write failure stashed by [`ResumeCtx::save`]
+    /// (the pipeline output itself is still valid).
+    pub fn take_error(&mut self) -> Option<Error> {
+        self.error.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::ring::matrix::Mat;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ppkm_resume_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn train_payload(iter: u32) -> Payload {
+        Payload::Train(TrainState {
+            iter,
+            stop: false,
+            mu: Mat::zeros(2, 2),
+            c_share: Mat::zeros(4, 2),
+            dealer_pos: 7,
+            ledger: Default::default(),
+            demand: Default::default(),
+            step_demands: Default::default(),
+        })
+    }
+
+    #[test]
+    fn save_load_sequence_and_reveal_prefix() {
+        let dir = tmpdir("seq");
+        let digest = [3u8; 32];
+        let mut ctx = ResumeCtx::new(&dir, 1, digest);
+        assert_eq!(ctx.max_ordinal(), 0);
+        let meter = Meter::new();
+        ctx.save("train.iter.0", &meter, train_payload(1));
+        ctx.set_reveals(&[("centroids".into(), "beef".into())]);
+        ctx.save("train.done", &meter, Payload::TrainDone(TrainDoneState { model: vec![1] }));
+        assert!(ctx.take_error().is_none());
+        assert_eq!(ctx.max_ordinal(), 2);
+
+        let mut fresh = ResumeCtx::new(&dir, 1, digest);
+        let c = fresh.load(2).unwrap();
+        assert_eq!(c.label, "train.done");
+        assert_eq!(fresh.reveals(), &[("centroids".to_string(), "beef".to_string())]);
+        // The next write after resuming from ordinal 2 is ordinal 3.
+        fresh.save("serve.batch.0", &meter, train_payload(9));
+        assert_eq!(fresh.max_ordinal(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_gap_is_a_typed_protocol_error() {
+        let dir = tmpdir("gap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ctx = ResumeCtx::new(&dir, 0, [0u8; 32]);
+        let err = ctx.load(3).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("checkpoint gap"), "{msg}");
+        assert!(matches!(err, Error::Protocol(_)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_context_is_inert() {
+        let mut ctx = ResumeCtx::disabled();
+        assert!(!ctx.enabled());
+        assert_eq!(ctx.max_ordinal(), 0);
+        ctx.save("train.iter.0", &Meter::new(), train_payload(1));
+        assert!(ctx.take_error().is_none());
+        assert!(ctx.take_resume().is_none());
+    }
+}

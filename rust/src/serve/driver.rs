@@ -30,6 +30,7 @@ use crate::net::{run_two_party, Chan};
 use crate::offline::bank::{BankConfig, MaterialBank};
 use crate::offline::dealer::Dealer;
 use crate::offline::store::{Demand, TripleStore};
+use crate::resume::{BankCounters, MeterSnapshot, Payload, ResumeCtx, ServeState, TrainState};
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
 use crate::util::error::{Error, Result};
@@ -66,6 +67,17 @@ pub struct ServeConfig {
     /// the transport unshaped; scores, reveals and meters are identical
     /// either way.
     pub shape: Option<CostModel>,
+    /// Refresh the centroid shares from recently scored traffic every
+    /// this many batches (`0` disables refresh). Protocol-relevant —
+    /// both parties must agree (the scenario layer digests it); a
+    /// refresh adds one `serve.refresh` flight between the batches it
+    /// separates and hot-swaps the updated model into the running
+    /// scorer with zero dropped batches
+    /// ([`crate::serve::scorer::Scorer::refresh`]).
+    pub refresh_every: usize,
+    /// Blend weight α of a refresh step: `μ ← μ + α·(recent − μ)`.
+    /// Protocol-relevant; must match the peer's.
+    pub refresh_alpha: f64,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +90,8 @@ impl Default for ServeConfig {
             parallelism: Parallelism::sequential(),
             lanes: Lanes::scalar(),
             shape: None,
+            refresh_every: 0,
+            refresh_alpha: 0.25,
         }
     }
 }
@@ -224,6 +238,91 @@ pub fn serve_party(
     blocks: Vec<Vec<f64>>,
     cfg: &ServeConfig,
 ) -> Result<ServePartyOutput> {
+    serve_party_ckpt(chan, model, blocks, cfg, &mut ResumeCtx::disabled(), None)
+}
+
+/// Post-batch bookkeeping shared by the probe and the bank loop: apply
+/// a centroid refresh when one is due (`cfg.refresh_every`, windowed
+/// over the batches since the last refresh, never after the final
+/// batch), then checkpoint the `serve.batch.{i}` site with the
+/// **post-refresh** model so a resumed batch `i+1` scores against the
+/// same centroids an uninterrupted run would.
+#[allow(clippy::too_many_arguments)]
+fn after_batch(
+    chan: &mut Chan,
+    cfg: &ServeConfig,
+    blocks: &[Vec<f64>],
+    i: usize,
+    scorer: &mut Scorer,
+    results: &[ScoreResult],
+    batch_stats: &[BatchStats],
+    per_batch: &Demand,
+    bank: &MaterialBank<Dealer>,
+    warmup: PhaseStats,
+    rctx: &mut ResumeCtx,
+) -> Result<()> {
+    let every = cfg.refresh_every;
+    if every > 0 && (i + 1) % every == 0 && i + 1 < blocks.len() {
+        let w0 = i + 1 - every;
+        let wb: Vec<&[f64]> = blocks[w0..=i].iter().map(|b| b.as_slice()).collect();
+        let wa: Vec<&[usize]> =
+            results[w0..=i].iter().map(|r| r.assignments.as_slice()).collect();
+        // Each refresh draws from its own indexed dealer, independent of
+        // the bank — the bank's uniform per-batch planning is untouched.
+        let mut src = Dealer::new(
+            cfg.seed ^ 0x44 ^ ((scorer.refreshes_done() as u128) << 16),
+            chan.party,
+        );
+        scorer.refresh(chan, &mut src, &wb, &wa, cfg.refresh_alpha)?;
+    }
+    if rctx.enabled() {
+        if let Some(u) = scorer.u_row() {
+            let counters = BankCounters {
+                prefabricated: bank.prefabricated as u64,
+                replenished: bank.replenished as u64,
+                consumed: bank.consumed as u64,
+                replenish_events: bank.replenish_events as u64,
+                stalls: bank.stalls,
+            };
+            rctx.save(
+                &format!("serve.batch.{i}"),
+                chan.meter(),
+                Payload::Serve(ServeState {
+                    model: scorer.model.to_bytes(),
+                    u_row: u.clone(),
+                    refreshes_done: scorer.refreshes_done(),
+                    batches_scored: scorer.batches_scored() as u32,
+                    per_batch: per_batch.clone(),
+                    bank: counters,
+                    warmup,
+                    results: results.to_vec(),
+                    stats: batch_stats
+                        .iter()
+                        .map(|s| (s.rows as u64, s.flagged as u64, s.online))
+                        .collect(),
+                }),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// [`serve_party`] with crash resumability: checkpoint every scored
+/// batch through `rctx` (`serve.batch.{i}` sites) and, when `resume`
+/// carries a negotiated [`ServeState`], skip the warmup **and** the
+/// demand probe — both were snapshotted — rebuild the bank to
+/// bit-identical stock ([`MaterialBank::restore`]), and continue at
+/// batch `batches_scored`. Both parties resume symmetrically, so the
+/// wire stays in lockstep and the finished transcript matches an
+/// uninterrupted run's byte for byte.
+pub fn serve_party_ckpt(
+    chan: &mut Chan,
+    model: TrainedModel,
+    blocks: Vec<Vec<f64>>,
+    cfg: &ServeConfig,
+    rctx: &mut ResumeCtx,
+    resume: Option<ServeState>,
+) -> Result<ServePartyOutput> {
     let party = chan.party;
     let (bank_cfg, seed, threads) = (cfg.bank, cfg.seed, cfg.parallelism.threads);
     // Worker count for the per-batch plaintext-side products (see
@@ -234,16 +333,7 @@ pub fn serve_party(
     if let Some(link) = cfg.shape {
         chan.set_shaper(link);
     }
-    let mut scorer = Scorer::new(model, seed ^ 0x5C0_0E);
 
-    // One-time warmup: the shared norm row (material generated inline —
-    // a single k·d-lane chunk).
-    let mut warm_src = Dealer::new(seed ^ 0x11, party);
-    scorer.warmup(chan, &mut warm_src);
-    let warmup_stats = chan.meter().get("serve.warmup");
-
-    let mut results = Vec::with_capacity(blocks.len());
-    let mut batch_stats = Vec::with_capacity(blocks.len());
     // `t0` is taken by the caller BEFORE material checkout, so a batch
     // whose checkout triggers a synchronous replenishment is charged the
     // fabrication stall it actually caused.
@@ -262,29 +352,123 @@ pub fn serve_party(
         Ok((r, stats))
     };
 
-    // Batch 0 — the demand probe: an empty recording store falls through
-    // to inline generation while logging the exact per-batch demand.
-    let mut probe = TripleStore::new(Dealer::new(seed ^ 0x22, party));
-    let t0 = Timer::started();
-    let (r, s) = score_one(&mut scorer, chan, &mut probe, &blocks[0], t0)?;
-    results.push(r);
-    batch_stats.push(s);
-    let per_batch = probe.demand.clone();
+    let mut results: Vec<ScoreResult>;
+    let mut batch_stats: Vec<BatchStats>;
+    let mut scorer: Scorer;
+    let warmup_stats: PhaseStats;
+    let per_batch: Demand;
+    let mut bank: MaterialBank<Dealer>;
+    let start: usize;
 
-    // The bank serves every remaining batch from prefabricated stock;
-    // prefab and replenishment fan out across the worker pool.
-    let mut bank = MaterialBank::new_par(
-        Dealer::new(seed ^ 0x33, party),
-        per_batch.clone(),
-        bank_cfg,
-        threads,
-    );
-    for block in &blocks[1..] {
+    match resume {
+        None => {
+            scorer = Scorer::new(model, seed ^ 0x5C0_0E);
+
+            // One-time warmup: the shared norm row (material generated
+            // inline — a single k·d-lane chunk).
+            let mut warm_src = Dealer::new(seed ^ 0x11, party);
+            scorer.warmup(chan, &mut warm_src);
+            warmup_stats = chan.meter().get("serve.warmup");
+
+            results = Vec::with_capacity(blocks.len());
+            batch_stats = Vec::with_capacity(blocks.len());
+
+            // Batch 0 — the demand probe: an empty recording store falls
+            // through to inline generation while logging the exact
+            // per-batch demand.
+            let mut probe = TripleStore::new(Dealer::new(seed ^ 0x22, party));
+            let t0 = Timer::started();
+            let (r, s) = score_one(&mut scorer, chan, &mut probe, &blocks[0], t0)?;
+            results.push(r);
+            batch_stats.push(s);
+            per_batch = probe.demand.clone();
+
+            // The bank serves every remaining batch from prefabricated
+            // stock; prefab and replenishment fan out across the worker
+            // pool. Stood up *before* the probe's checkpoint so the
+            // site's counters describe a real bank.
+            bank = MaterialBank::new_par(
+                Dealer::new(seed ^ 0x33, party),
+                per_batch.clone(),
+                bank_cfg,
+                threads,
+            );
+            after_batch(
+                chan,
+                cfg,
+                &blocks,
+                0,
+                &mut scorer,
+                &results,
+                &batch_stats,
+                &per_batch,
+                &bank,
+                warmup_stats,
+                rctx,
+            )?;
+            start = 1;
+        }
+        Some(st) => {
+            let scored = st.batches_scored as usize;
+            if scored == 0 || scored > blocks.len() {
+                return Err(Error::Protocol(format!(
+                    "serve resume: checkpoint says {scored} batches scored but this stream \
+                     has {} — scenario and checkpoint disagree",
+                    blocks.len()
+                )));
+            }
+            warmup_stats = st.warmup;
+            per_batch = st.per_batch;
+            scorer = Scorer::restore(
+                model,
+                seed ^ 0x5C0_0E,
+                st.u_row,
+                scored as u64,
+                st.refreshes_done,
+            );
+            bank = MaterialBank::restore(
+                Dealer::new(seed ^ 0x33, party),
+                per_batch.clone(),
+                bank_cfg,
+                threads,
+                &st.bank,
+            )?;
+            results = st.results;
+            batch_stats = st
+                .stats
+                .into_iter()
+                .map(|(rows, flagged, online)| BatchStats {
+                    rows: rows as usize,
+                    flagged: flagged as usize,
+                    online,
+                    // Wall-clock is not persisted (transcripts exclude
+                    // it); resumed batches report zero.
+                    wall_secs: 0.0,
+                })
+                .collect();
+            start = scored;
+        }
+    }
+
+    for i in start..blocks.len() {
         let t0 = Timer::started();
         let ts = bank.checkout();
-        let (r, s) = score_one(&mut scorer, chan, ts, block, t0)?;
+        let (r, s) = score_one(&mut scorer, chan, ts, &blocks[i], t0)?;
         results.push(r);
         batch_stats.push(s);
+        after_batch(
+            chan,
+            cfg,
+            &blocks,
+            i,
+            &mut scorer,
+            &results,
+            &batch_stats,
+            &per_batch,
+            &bank,
+            warmup_stats,
+            rctx,
+        )?;
     }
 
     Ok(ServePartyOutput {
@@ -315,6 +499,23 @@ pub fn train_model_party(
     cfg: &SecureKmeansConfig,
     flag_rate: f64,
 ) -> Result<(PartyResult, TrainedModel)> {
+    train_model_party_ckpt(chan, data, cfg, flag_rate, &mut ResumeCtx::disabled(), None)
+}
+
+/// [`train_model_party`] with crash resumability: Lloyd iterations
+/// checkpoint through `rctx` (`train.iter.{i}` sites, see
+/// [`crate::kmeans::secure::run_party_ckpt`]) and a negotiated
+/// [`TrainState`] resumes mid-training. Normalization stats and τ are
+/// recomputed locally — they are deterministic functions of the raw
+/// data both processes already hold.
+pub fn train_model_party_ckpt(
+    chan: &mut Chan,
+    data: &Dataset,
+    cfg: &SecureKmeansConfig,
+    flag_rate: f64,
+    rctx: &mut ResumeCtx,
+    resume: Option<(TrainState, MeterSnapshot)>,
+) -> Result<(PartyResult, TrainedModel)> {
     let d_a = match cfg.partition {
         Partition::Vertical { d_a } => d_a,
         Partition::Horizontal { .. } => {
@@ -327,7 +528,7 @@ pub fn train_model_party(
     };
     let stats = normalize::column_stats(data);
     let normalized = normalize::min_max(data);
-    let r = secure::run_party(chan, &normalized, cfg)?;
+    let r = secure::run_party_ckpt(chan, &normalized, cfg, rctx, resume)?;
     let tau = distance_threshold(&normalized, &r.mu.decode(), &r.assignments, cfg.k, flag_rate);
     let party = chan.party;
     let (c0, c1) = if party == 0 { (0, d_a) } else { (d_a, data.d) };

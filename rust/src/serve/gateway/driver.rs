@@ -256,6 +256,24 @@ pub fn gateway_party(
                 let mut kit = bank_ref.checkout(w.tag, b)?;
                 results.push(scorer.score_batch(&mut sch, &mut kit, block)?);
                 misses += kit.misses;
+                // Per-session live refresh: hot-swap the centroids from
+                // this session's own recent window, mid-stream and
+                // without dropping a batch. Material comes from a
+                // session+refresh-keyed dealer, not the kit bank, so the
+                // bank's uniform per-batch planning is untouched.
+                let every = cfg.refresh_every;
+                if every > 0 && (b + 1) % every == 0 && b + 1 < w.blocks.len() {
+                    let w0 = b + 1 - every;
+                    let wb: Vec<&[f64]> =
+                        w.blocks[w0..=b].iter().map(|bl| bl.as_slice()).collect();
+                    let wa: Vec<&[usize]> =
+                        results[w0..=b].iter().map(|r| r.assignments.as_slice()).collect();
+                    let mut src = Dealer::new(
+                        s_seed ^ 0x44 ^ ((scorer.refreshes_done() as u128) << 16),
+                        party,
+                    );
+                    scorer.refresh(&mut sch, &mut src, &wb, &wa, cfg.refresh_alpha)?;
+                }
             }
             Ok(SessionReport {
                 tag: w.tag,

@@ -100,6 +100,16 @@ pub struct GatewayConfig {
     pub lanes: Lanes,
     /// Optional deterministic link shaping of the shared link.
     pub shape: Option<CostModel>,
+    /// Refresh each session's centroid shares from its own recently
+    /// scored traffic every this many batches (`0` disables).
+    /// Protocol-relevant like `seed`: both parties must pass the same
+    /// value (the scenario layer digests it) — a refresh adds one
+    /// `serve.refresh` flight on that session's channel and hot-swaps
+    /// the updated model into the running scorer mid-session.
+    pub refresh_every: usize,
+    /// Blend weight α of a refresh step: `μ ← μ + α·(recent − μ)`.
+    /// Protocol-relevant; must match the peer's.
+    pub refresh_alpha: f64,
 }
 
 impl Default for GatewayConfig {
@@ -117,6 +127,8 @@ impl Default for GatewayConfig {
             parallelism: Parallelism::sequential(),
             lanes: Lanes::scalar(),
             shape: None,
+            refresh_every: 0,
+            refresh_alpha: 0.25,
         }
     }
 }

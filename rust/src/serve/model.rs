@@ -33,6 +33,7 @@
 
 use crate::ring::fixed::FRAC_BITS;
 use crate::ring::matrix::Mat;
+use crate::util::codec::{fnv1a64, push_f64, push_u32, push_u64};
 use crate::util::error::{Error, Result};
 use std::path::Path;
 
@@ -62,53 +63,24 @@ pub struct TrainedModel {
     pub tau: f64,
 }
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
-fn push_u32(out: &mut Vec<u8>, x: u32) {
-    out.extend_from_slice(&x.to_le_bytes());
-}
-
-fn push_u64(out: &mut Vec<u8>, x: u64) {
-    out.extend_from_slice(&x.to_le_bytes());
-}
-
-fn push_f64(out: &mut Vec<u8>, x: f64) {
-    out.extend_from_slice(&x.to_bits().to_le_bytes());
-}
+/// Artifact name used in every parse error (shared codec helpers take it
+/// so model and checkpoint failures stay distinguishable).
+const WHAT: &str = "model artifact";
 
 fn bad(msg: impl Into<String>) -> Error {
-    Error::Config(format!("model artifact: {}", msg.into()))
+    Error::Config(format!("{WHAT}: {}", msg.into()))
 }
 
 fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
-    let end = *off + 4;
-    if end > b.len() {
-        return Err(bad("truncated (u32)"));
-    }
-    let v = u32::from_le_bytes(b[*off..end].try_into().unwrap());
-    *off = end;
-    Ok(v)
+    crate::util::codec::rd_u32(b, off, WHAT)
 }
 
 fn rd_u64(b: &[u8], off: &mut usize) -> Result<u64> {
-    let end = *off + 8;
-    if end > b.len() {
-        return Err(bad("truncated (u64)"));
-    }
-    let v = u64::from_le_bytes(b[*off..end].try_into().unwrap());
-    *off = end;
-    Ok(v)
+    crate::util::codec::rd_u64(b, off, WHAT)
 }
 
 fn rd_f64(b: &[u8], off: &mut usize) -> Result<f64> {
-    Ok(f64::from_bits(rd_u64(b, off)?))
+    crate::util::codec::rd_f64(b, off, WHAT)
 }
 
 impl TrainedModel {

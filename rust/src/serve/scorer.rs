@@ -30,9 +30,11 @@ use crate::kmeans::backend::{BeaverBackend, PartyData};
 use crate::kmeans::esd;
 use crate::kmeans::secure::assign_only_tile;
 use crate::net::Chan;
+use crate::ring::fixed::{encode_f64, FRAC_BITS};
 use crate::ring::matrix::Mat;
 use crate::ss::boolean::CMP_ROUNDS;
 use crate::ss::triples::TripleSource;
+use crate::ss::trunc::trunc_share;
 use crate::ss::Session;
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
@@ -75,6 +77,7 @@ pub struct Scorer {
     tau_2f: u64,
     seed: u128,
     batches_scored: u64,
+    refreshes_done: u32,
 }
 
 impl Scorer {
@@ -83,7 +86,24 @@ impl Scorer {
     pub fn new(model: TrainedModel, seed: u128) -> Scorer {
         let backend = BeaverBackend::new(model.d_a, model.d);
         let tau_2f = encode_threshold_2f(model.tau);
-        Scorer { model, backend, u_row: None, tau_2f, seed, batches_scored: 0 }
+        Scorer { model, backend, u_row: None, tau_2f, seed, batches_scored: 0, refreshes_done: 0 }
+    }
+
+    /// Rebuild a scorer from checkpointed state
+    /// ([`crate::resume::ServeState`]): the already-warmed norm row and
+    /// the batch/refresh counters that key every per-batch mask PRG and
+    /// refresh dealer. No warmup flight runs — the resumed party picks
+    /// up at batch `batches_scored` in wire lockstep with its peer.
+    pub fn restore(
+        model: TrainedModel,
+        seed: u128,
+        u_row: Mat,
+        batches_scored: u64,
+        refreshes_done: u32,
+    ) -> Scorer {
+        let backend = BeaverBackend::new(model.d_a, model.d);
+        let tau_2f = encode_threshold_2f(model.tau);
+        Scorer { model, backend, u_row: Some(u_row), tau_2f, seed, batches_scored, refreshes_done }
     }
 
     /// Whether [`Scorer::warmup`] has run.
@@ -91,9 +111,21 @@ impl Scorer {
         self.u_row.is_some()
     }
 
+    /// The cached shared norm row (`None` before warmup) — snapshotted
+    /// into serve checkpoints so a resumed scorer skips the warmup.
+    pub fn u_row(&self) -> Option<&Mat> {
+        self.u_row.as_ref()
+    }
+
     /// Batches scored so far.
     pub fn batches_scored(&self) -> u64 {
         self.batches_scored
+    }
+
+    /// Centroid refreshes applied so far (keys the next refresh's
+    /// dealer seed).
+    pub fn refreshes_done(&self) -> u32 {
+        self.refreshes_done
     }
 
     /// One-time shared computation of the centroid-norm row (one flight,
@@ -217,6 +249,129 @@ impl Scorer {
             .collect();
 
         Ok(ScoreResult { assignments, fraud_flags, malformed_rows })
+    }
+
+    /// Incremental centroid refresh from recently scored traffic — the
+    /// live-model half of crash resumability: a long-lived scorer tracks
+    /// drifting fraud patterns without retraining or downtime.
+    ///
+    /// Assignments are *revealed* per batch, so both parties hold the
+    /// identical public window partition; each party's raw feature block
+    /// is its own plaintext. The per-cluster mean of the window
+    /// restricted to this party's columns (zeros elsewhere) is therefore
+    /// a valid **additive sharing** of the full recent-centroid matrix —
+    /// no extra protocol needed to form it. The update is the streaming
+    /// EWMA step
+    ///
+    /// ```text
+    /// μ ← μ + α · (recent − μ)
+    /// ```
+    ///
+    /// computed share-locally: the delta is a ring subtraction, the
+    /// public-α product a local scale + [`trunc_share`]. Only the cached
+    /// norm row must be recomputed jointly — one `serve.refresh` flight,
+    /// the same shape as the warmup. A cluster with no window traffic
+    /// keeps its centroid (both parties see the public count and zero
+    /// that delta row symmetrically).
+    ///
+    /// `window_blocks[b]` is this party's raw feature block of window
+    /// batch `b`, `window_assignments[b]` the revealed assignments of
+    /// that batch. Both parties must call at the same point in the batch
+    /// stream with the same window length and α.
+    pub fn refresh(
+        &mut self,
+        chan: &mut Chan,
+        ts: &mut dyn TripleSource,
+        window_blocks: &[&[f64]],
+        window_assignments: &[&[usize]],
+        alpha: f64,
+    ) -> Result<()> {
+        if window_blocks.len() != window_assignments.len() || window_blocks.is_empty() {
+            return Err(Error::Shape(format!(
+                "refresh window holds {} blocks but {} assignment sets",
+                window_blocks.len(),
+                window_assignments.len()
+            )));
+        }
+        let k = self.model.k;
+        let nc = self.model.ncols();
+        let (c0, d) = (self.model.col0(), self.model.d);
+        // Public per-cluster counts + own-column sums over the window,
+        // in *normalized* feature space (the space the centroids live
+        // in).
+        let mut counts = vec![0usize; k];
+        let mut sums = vec![0.0f64; k * nc];
+        for (block, assign) in window_blocks.iter().zip(window_assignments) {
+            if nc == 0 || block.len() % nc != 0 || block.len() / nc != assign.len() {
+                return Err(Error::Shape(format!(
+                    "refresh window batch: {} raw values vs {} assignments over {nc} columns",
+                    block.len(),
+                    assign.len()
+                )));
+            }
+            for (i, &j) in assign.iter().enumerate() {
+                if j >= k {
+                    return Err(Error::Protocol(format!(
+                        "refresh window holds revealed assignment {j} but the model has k={k}"
+                    )));
+                }
+                counts[j] += 1;
+                for c in 0..nc {
+                    let (lo, hi) = self.model.stats[c];
+                    let v = block[i * nc + c];
+                    sums[j * nc + c] += if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+                }
+            }
+        }
+
+        // Share of (recent − μ): own columns carry the window mean minus
+        // the own share; the peer's columns carry −share alone (the peer
+        // contributes its mean there). Empty clusters keep a zero row on
+        // both sides.
+        let mu = &self.model.mu_share;
+        let mut delta = Mat::zeros(k, d);
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue;
+            }
+            for c in 0..d {
+                let own = c >= c0 && c < c0 + nc;
+                let recent = if own {
+                    encode_f64(sums[j * nc + (c - c0)] / counts[j] as f64)
+                } else {
+                    0
+                };
+                delta.data[j * d + c] = recent.wrapping_sub(mu.data[j * d + c]);
+            }
+        }
+
+        // α is public: scale each share locally (f-scale α × f-scale
+        // delta = 2f) and truncate back — zero communication.
+        let alpha_f = encode_f64(alpha);
+        for w in &mut delta.data {
+            *w = w.wrapping_mul(alpha_f);
+        }
+        let step = trunc_share(chan.party, &delta, FRAC_BITS);
+        for (m, s) in self.model.mu_share.data.iter_mut().zip(&step.data) {
+            *m = m.wrapping_add(*s);
+        }
+
+        // The cached ‖μ_j‖² row is stale now — recompute it with one
+        // warmup-shaped flight, keyed by the refresh index so resumed
+        // and uninterrupted runs derive identical masks.
+        let idx = self.refreshes_done;
+        self.refreshes_done += 1;
+        let party = chan.party;
+        let mut ctx = Session::new(
+            chan,
+            ts,
+            Prg::new(self.seed ^ ((party as u128) << 64) ^ ((idx as u128) << 32) ^ 0x4EF4),
+        );
+        ctx.set_phase("serve.refresh");
+        let p = esd::centroid_norms_row_begin(&mut ctx, &self.model.mu_share);
+        ctx.flush();
+        self.u_row = Some(p.resolve(&mut ctx));
+        Ok(())
     }
 }
 

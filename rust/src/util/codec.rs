@@ -1,0 +1,142 @@
+//! Shared little-endian framing helpers for persisted artifacts.
+//!
+//! The model artifact (`PPKMDL01`, [`crate::serve::model`]) and the
+//! resume checkpoint (`PPKMCKP1`, [`crate::resume`]) follow one framing
+//! discipline: magic + version header, fixed-width little-endian fields,
+//! and a trailing FNV-1a checksum over every preceding byte. The
+//! encoders and bounds-checked readers live here so the two formats
+//! cannot drift in how they serialize or how they fail — every reader
+//! returns a typed [`Error::Config`] naming the artifact, never a panic
+//! (`no-panic-in-wire-paths` covers the resume subtree).
+
+// Artifact parsers handle untrusted bytes: typed errors only.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::util::error::{Error, Result};
+
+/// FNV-1a over a byte slice — the artifact trailer checksum. Detects
+/// corruption (bit flips, truncation); it is *not* tamper-resistant,
+/// which is why parsers also bound every header-derived length.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Append a `u32` little-endian.
+pub fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a `u64` little-endian.
+pub fn push_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append an `f64` as its IEEE-754 bit pattern, little-endian.
+pub fn push_f64(out: &mut Vec<u8>, x: f64) {
+    push_u64(out, x.to_bits());
+}
+
+/// Append a length-prefixed (u32) byte string.
+pub fn push_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn push_str(out: &mut Vec<u8>, s: &str) {
+    push_bytes(out, s.as_bytes());
+}
+
+fn truncated(what: &str, kind: &str) -> Error {
+    Error::Config(format!("{what}: truncated ({kind})"))
+}
+
+/// Read a `u32`, advancing `off`; `what` names the artifact in errors.
+pub fn rd_u32(b: &[u8], off: &mut usize, what: &str) -> Result<u32> {
+    let end = off.checked_add(4).filter(|&e| e <= b.len()).ok_or_else(|| truncated(what, "u32"))?;
+    let mut w = [0u8; 4];
+    w.copy_from_slice(&b[*off..end]);
+    *off = end;
+    Ok(u32::from_le_bytes(w))
+}
+
+/// Read a `u64`, advancing `off`.
+pub fn rd_u64(b: &[u8], off: &mut usize, what: &str) -> Result<u64> {
+    let end = off.checked_add(8).filter(|&e| e <= b.len()).ok_or_else(|| truncated(what, "u64"))?;
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[*off..end]);
+    *off = end;
+    Ok(u64::from_le_bytes(w))
+}
+
+/// Read an `f64` (IEEE-754 bits), advancing `off`.
+pub fn rd_f64(b: &[u8], off: &mut usize, what: &str) -> Result<f64> {
+    Ok(f64::from_bits(rd_u64(b, off, what)?))
+}
+
+/// Read a u32-length-prefixed byte string, advancing `off`. The length
+/// is bounds-checked against the remaining input *before* allocation, so
+/// a forged header cannot trigger a huge reservation.
+pub fn rd_bytes(b: &[u8], off: &mut usize, what: &str) -> Result<Vec<u8>> {
+    let len = rd_u32(b, off, what)? as usize;
+    let end =
+        off.checked_add(len).filter(|&e| e <= b.len()).ok_or_else(|| truncated(what, "bytes"))?;
+    let v = b[*off..end].to_vec();
+    *off = end;
+    Ok(v)
+}
+
+/// Read a u32-length-prefixed UTF-8 string, advancing `off`.
+pub fn rd_str(b: &[u8], off: &mut usize, what: &str) -> Result<String> {
+    let v = rd_bytes(b, off, what)?;
+    String::from_utf8(v).map_err(|_| Error::Config(format!("{what}: non-UTF-8 string field")))
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut out = Vec::new();
+        push_u32(&mut out, 7);
+        push_u64(&mut out, u64::MAX - 1);
+        push_f64(&mut out, -0.125);
+        push_str(&mut out, "serve.batch.3");
+        let mut off = 0;
+        assert_eq!(rd_u32(&out, &mut off, "t").unwrap(), 7);
+        assert_eq!(rd_u64(&out, &mut off, "t").unwrap(), u64::MAX - 1);
+        assert_eq!(rd_f64(&out, &mut off, "t").unwrap(), -0.125);
+        assert_eq!(rd_str(&out, &mut off, "t").unwrap(), "serve.batch.3");
+        assert_eq!(off, out.len());
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_naming_the_artifact() {
+        let mut out = Vec::new();
+        push_u64(&mut out, 42);
+        let mut off = 0;
+        let err = rd_u64(&out[..5], &mut off, "checkpoint artifact").unwrap_err();
+        assert!(err.to_string().contains("checkpoint artifact"), "{err}");
+        // A length prefix pointing past the buffer is refused before any
+        // allocation sized from it.
+        let mut forged = Vec::new();
+        push_u32(&mut forged, u32::MAX);
+        let mut off = 0;
+        assert!(rd_bytes(&forged, &mut off, "t").is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pinned value: the checksum is part of two on-disk formats.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -2,6 +2,7 @@
 //! statistics.
 
 pub mod cipher;
+pub mod codec;
 pub mod error;
 pub mod hash;
 pub mod prng;

@@ -1,0 +1,576 @@
+//! Kill-and-resume fault-injection matrix (the PR's acceptance bar):
+//! a party killed at any barrier or batch boundary and relaunched with
+//! the same checkpoint directory must negotiate the common PPKMCKP1
+//! checkpoint in the v2 handshake, replay only the remainder, and land
+//! a transcript **byte-identical** to an uninterrupted run — reveal
+//! digests and per-phase flight/byte counts alike. Plus the live
+//! centroid-refresh drift test: the hot-swapped model must track a
+//! moving fraud cluster exactly (ring-exact oracle, no tolerances)
+//! while dropping zero batches.
+
+use ppkmeans::coordinator::remote::{run_scenario_local, PartyTranscript, Pipeline, Scenario};
+use ppkmeans::data::blobs::Dataset;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::fault::FaultMode;
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::ring::fixed::{encode_f64, FRAC_BITS};
+use ppkmeans::ring::matrix::Mat;
+use ppkmeans::serve::driver::{serve_stream, train_model, ServeConfig};
+use ppkmeans::ss::trunc::trunc_share;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// The serve scenario every kill point replays: tiny fraud-shaped
+/// train → score with a live refresh after batch 2, so the sweep
+/// crosses training iterations, the train.done barrier, the warmup,
+/// every scored batch AND the hot-swap of the refreshed model.
+const SCENARIO: &str = "\
+pipeline = serve
+n = 96
+k = 2
+iters = 2
+seed = 1337
+data_seed = 7
+stream_seed = 4242
+rate = 0.05
+batch_rows = 8
+batches = 4
+prefab = 2
+low_water = 1
+refill = 2
+refresh.every = 2
+refresh.alpha = 0.25
+save_model = false
+";
+
+const GATEWAY_SCENARIO: &str = "\
+pipeline = gateway
+n = 96
+k = 2
+iters = 2
+seed = 1337
+data_seed = 7
+stream_seed = 4242
+rate = 0.05
+batch_rows = 8
+batches = 3
+prefab = 1
+low_water = 1
+refill = 1
+gateway.sessions = 2
+gateway.queue = 0
+gateway.workers = 2
+";
+
+fn serve_scenario() -> Scenario {
+    Scenario::parse(SCENARIO).unwrap()
+}
+
+fn gateway_scenario() -> Scenario {
+    Scenario::parse(GATEWAY_SCENARIO).unwrap()
+}
+
+/// Fresh per-test checkpoint directory (both parties share it — files
+/// are party-prefixed, like two hosts mounting the same scratch dir).
+fn tmp(tag: &str, salt: u64) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ppkm_resume_{}_{tag}_{salt}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn reveal<'a>(t: &'a PartyTranscript, key: &str) -> &'a str {
+    t.reveals
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .unwrap_or_else(|| panic!("transcript has no {key} reveal"))
+}
+
+/// `"prefab+replenished-consumed=remaining"` must balance as arithmetic.
+fn assert_ledger_balances(t: &PartyTranscript) {
+    let v = reveal(t, "bank_ledger");
+    let (lhs, rhs) = v.split_once('=').unwrap();
+    let (pr, c) = lhs.rsplit_once('-').unwrap();
+    let (p, r) = pr.split_once('+').unwrap();
+    let lhs_val = p.parse::<i64>().unwrap() + r.parse::<i64>().unwrap()
+        - c.parse::<i64>().unwrap();
+    assert_eq!(lhs_val, rhs.parse::<i64>().unwrap(), "bank ledger must balance: {v}");
+}
+
+/// Total flights one party sends over a run — the sweep space for the
+/// deterministic fault trigger.
+fn total_flights(t: &PartyTranscript) -> u64 {
+    t.phases.iter().map(|(_, p)| p.rounds).sum()
+}
+
+fn ckpt_files(dir: &Path, party: usize) -> usize {
+    let prefix = format!("party{party}.");
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+/// Kill p1 at a spread of flights covering every stage of the serve
+/// pipeline, resume from the on-disk checkpoints, and require the
+/// resumed transcripts to be byte-identical to the uninterrupted
+/// reference — the tentpole's hard acceptance bar.
+#[test]
+fn killed_and_resumed_transcripts_match_the_uninterrupted_run() {
+    let base = serve_scenario();
+    let (r0, r1) = run_scenario_local(&base).unwrap();
+    let total = total_flights(&r1);
+    assert!(total > 14, "scenario too small to sweep ({total} flights)");
+    // ~14 kill points: flight 1 (mid-handshake, no checkpoint yet),
+    // every training iteration, the train.done barrier, warmup/probe,
+    // each scored batch, the refresh flight and the final barrier.
+    let step = (total / 14).max(1) as usize;
+    let mut flights: Vec<u64> = (1..=total).step_by(step).collect();
+    if flights.last() != Some(&total) {
+        flights.push(total);
+    }
+    for f in flights {
+        let dir = tmp("kill", f);
+        let mut sc = base.clone();
+        sc.ckpt_dir = dir.to_str().unwrap().to_string();
+        sc.fault_flight = f;
+        sc.fault_party = 1;
+        sc.fault_mode = FaultMode::Kill;
+        assert!(
+            run_scenario_local(&sc).is_err(),
+            "fault at flight {f}/{total} must kill the run"
+        );
+        // Relaunch with the fault disarmed and the same checkpoint
+        // directory: the handshake negotiates the common checkpoint
+        // and the pipeline replays only the remainder.
+        sc.fault_flight = 0;
+        let (t0, t1) = run_scenario_local(&sc)
+            .unwrap_or_else(|e| panic!("resume after kill at flight {f}: {e}"));
+        assert_eq!(t0.to_json(), r0.to_json(), "p0 transcript after kill at flight {f}");
+        assert_eq!(t1.to_json(), r1.to_json(), "p1 transcript after kill at flight {f}");
+        assert_ledger_balances(&t0);
+        assert_ledger_balances(&t1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// The non-kill fault modes and a p0-side crash resume the same way:
+/// drop (lost frame), trunc (garbage on the wire — the peer must fail
+/// typed, never write a poisoned checkpoint), and the roles swapped.
+#[test]
+fn other_fault_modes_and_the_other_party_resume_identically() {
+    let base = serve_scenario();
+    let (r0, r1) = run_scenario_local(&base).unwrap();
+    let total = total_flights(&r0);
+    let cases =
+        [(0, FaultMode::Kill, total / 2), (1, FaultMode::Drop, total / 2), (1, FaultMode::Trunc, 2 * total / 5)];
+    for (i, (party, mode, f)) in cases.into_iter().enumerate() {
+        let dir = tmp("mode", i as u64);
+        let mut sc = base.clone();
+        sc.ckpt_dir = dir.to_str().unwrap().to_string();
+        sc.fault_flight = f;
+        sc.fault_party = party;
+        sc.fault_mode = mode;
+        assert!(
+            run_scenario_local(&sc).is_err(),
+            "{} on p{party} at flight {f} must kill the run",
+            mode.as_str()
+        );
+        sc.fault_flight = 0;
+        let (t0, t1) = run_scenario_local(&sc).unwrap_or_else(|e| {
+            panic!("resume after {} on p{party} at flight {f}: {e}", mode.as_str())
+        });
+        assert_eq!(t0.to_json(), r0.to_json(), "p0 after {} on p{party}", mode.as_str());
+        assert_eq!(t1.to_json(), r1.to_json(), "p1 after {} on p{party}", mode.as_str());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A crash during the *resumed* run must converge too: later checkpoint
+/// ordinals are rewritten byte-identically, so a second kill-and-resume
+/// lands on the same transcript as one, or none.
+#[test]
+fn a_second_kill_during_the_resumed_run_still_converges() {
+    let base = serve_scenario();
+    let (r0, r1) = run_scenario_local(&base).unwrap();
+    let total = total_flights(&r1);
+    let dir = tmp("double", 0);
+    let mut sc = base.clone();
+    sc.ckpt_dir = dir.to_str().unwrap().to_string();
+    sc.fault_party = 1;
+    sc.fault_mode = FaultMode::Kill;
+    // First crash mid-training …
+    sc.fault_flight = total / 3;
+    assert!(run_scenario_local(&sc).is_err());
+    // … second crash early in the resumed run (flight counting restarts
+    // with the process, exactly like a real relaunch) …
+    sc.fault_flight = 5;
+    assert!(run_scenario_local(&sc).is_err(), "second fault must fire in the resumed run");
+    // … third launch runs to completion and matches the reference.
+    sc.fault_flight = 0;
+    let (t0, t1) = run_scenario_local(&sc).unwrap();
+    assert_eq!(t0.to_json(), r0.to_json());
+    assert_eq!(t1.to_json(), r1.to_json());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mid-gateway-session kill: the fault trigger rides the mux link (it
+/// counts tagged frames there), so the crash lands inside concurrent
+/// session traffic. The gateway keeps no per-batch checkpoints — the
+/// resume negotiates the train.done snapshot, skips training entirely,
+/// re-runs the scoring tail, and every per-session reveal plus the
+/// ShardedBank ledger totals match the uninterrupted run.
+#[test]
+fn mid_gateway_session_kill_resumes_from_the_train_barrier() {
+    let base = gateway_scenario();
+    let (g0, g1) = run_scenario_local(&base).unwrap();
+
+    // A clean checkpointing run must not perturb the transcript, and
+    // tells us how many checkpoints a full run writes (training only).
+    let full_dir = tmp("gw_full", 0);
+    let mut sc = base.clone();
+    sc.ckpt_dir = full_dir.to_str().unwrap().to_string();
+    let (c0, c1) = run_scenario_local(&sc).unwrap();
+    assert_eq!(c0.to_json(), g0.to_json(), "checkpointing must not change the transcript");
+    assert_eq!(c1.to_json(), g1.to_json());
+    let n_full = ckpt_files(&full_dir, 1);
+    assert!(n_full >= 2, "expected train.iter.* + train.done checkpoints, got {n_full}");
+    std::fs::remove_dir_all(&full_dir).ok();
+
+    // Probe kill points from late to early: the first one that both
+    // fires AND left the full training checkpoint set is a crash inside
+    // the gateway scoring tail (handshake, mux hello or session frames).
+    let mut found = false;
+    for &f in &[400u64, 280, 200, 140, 100, 70, 50, 35, 25] {
+        let dir = tmp("gw_kill", f);
+        let mut sc = base.clone();
+        sc.ckpt_dir = dir.to_str().unwrap().to_string();
+        sc.fault_flight = f;
+        sc.fault_party = 1;
+        sc.fault_mode = FaultMode::Kill;
+        if run_scenario_local(&sc).is_ok() {
+            // Fault beyond the end of the run — try an earlier flight.
+            std::fs::remove_dir_all(&dir).ok();
+            continue;
+        }
+        if ckpt_files(&dir, 1) < n_full {
+            // Crashed during training: covered by the serve sweep.
+            std::fs::remove_dir_all(&dir).ok();
+            continue;
+        }
+        sc.fault_flight = 0;
+        let (t0, t1) = run_scenario_local(&sc)
+            .unwrap_or_else(|e| panic!("gateway resume after kill at {f}: {e}"));
+        assert_eq!(t0.to_json(), g0.to_json(), "p0 gateway transcript after kill at {f}");
+        assert_eq!(t1.to_json(), g1.to_json(), "p1 gateway transcript after kill at {f}");
+        // The sharded bank's ledger totals survive the crash exactly.
+        for key in ["gateway.admitted", "gateway.rejected", "gateway.consumed", "gateway.misses"]
+        {
+            assert_eq!(reveal(&t0, key), reveal(&g0, key), "{key} after resume");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        found = true;
+        break;
+    }
+    assert!(found, "no probe flight landed a kill inside the gateway scoring tail");
+}
+
+/// Real two-process crash: p1 aborts (SIGABRT) mid-run, both processes
+/// die, and a relaunch with the same per-party checkpoint directories
+/// produces transcripts byte-identical to the in-process reference.
+/// This is the same matrix entry the CI `two-process` job runs with
+/// `scenarios/ci_resume.scn`.
+#[test]
+fn two_process_abort_and_resume_matches_the_reference() {
+    let exe = env!("CARGO_BIN_EXE_ppkmeans");
+    let dir = tmp("two_proc", 0);
+    let scn = dir.join("resume.scn");
+    std::fs::write(&scn, SCENARIO).unwrap();
+    let scn_str = scn.to_str().unwrap();
+    let (ck0, ck1) = (dir.join("ck0"), dir.join("ck1"));
+    let (ck0_str, ck1_str) = (ck0.to_str().unwrap(), ck1.to_str().unwrap());
+
+    let sc = Scenario::from_file(&scn).unwrap();
+    let (l0, l1) = run_scenario_local(&sc).unwrap();
+    // Abort at ~60% of the run: deep enough that both sides hold real
+    // checkpoints, early enough that real work remains to replay.
+    let f = (total_flights(&l1) * 3 / 5).max(2).to_string();
+
+    let port = 31000 + (std::process::id() % 20000) as u16;
+    let addr = format!("127.0.0.1:{port}");
+    let mut p0 = Command::new(exe)
+        .args(["party", "--role", "p0", "--listen", addr.as_str(), "--scenario", scn_str])
+        .args(["--ckpt-dir", ck0_str])
+        .spawn()
+        .expect("spawn p0");
+    let p1_status = Command::new(exe)
+        .args(["party", "--role", "p1", "--connect", addr.as_str(), "--scenario", scn_str])
+        .args(["--ckpt-dir", ck1_str])
+        .args(["--fault-flight", &f, "--fault-mode", "abort", "--fault-party", "1"])
+        .status()
+        .expect("run p1");
+    let p0_status = p0.wait().expect("wait p0");
+    assert!(!p1_status.success(), "p1 must die of the injected abort");
+    assert!(!p0_status.success(), "p0 must exit nonzero on the peer crash");
+    assert!(ckpt_files(&ck0, 0) > 0, "p0 must hold checkpoints before the resume");
+    assert!(ckpt_files(&ck1, 1) > 0, "p1 must hold checkpoints before the resume");
+
+    // Relaunch on a fresh port, faults disarmed, same checkpoint dirs.
+    let addr = format!("127.0.0.1:{}", port + 1);
+    let p0_json = dir.join("p0.json");
+    let p1_json = dir.join("p1.json");
+    let mut p0 = Command::new(exe)
+        .args(["party", "--role", "p0", "--listen", addr.as_str(), "--scenario", scn_str])
+        .args(["--ckpt-dir", ck0_str, "--out", p0_json.to_str().unwrap()])
+        .spawn()
+        .expect("respawn p0");
+    let p1_status = Command::new(exe)
+        .args(["party", "--role", "p1", "--connect", addr.as_str(), "--scenario", scn_str])
+        .args(["--ckpt-dir", ck1_str, "--out", p1_json.to_str().unwrap()])
+        .status()
+        .expect("rerun p1");
+    let p0_status = p0.wait().expect("wait p0");
+    assert!(p0_status.success(), "resumed p0 failed: {p0_status}");
+    assert!(p1_status.success(), "resumed p1 failed: {p1_status}");
+
+    let read = |p: &Path| std::fs::read_to_string(p).unwrap();
+    assert_eq!(read(&p0_json), l0.to_json(), "p0: resumed transcript vs uninterrupted");
+    assert_eq!(read(&p1_json), l1.to_json(), "p1: resumed transcript vs uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The committed CI scenario stays honest: serve pipeline, live refresh
+/// on, and no checkpoint/fault state baked into the shared file (those
+/// are per-process CLI overrides, like a real crash).
+#[test]
+fn committed_ci_resume_scenario_keeps_fault_state_party_local() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios/ci_resume.scn");
+    let sc = Scenario::from_file(&path).unwrap();
+    assert_eq!(sc.pipeline, Pipeline::Serve);
+    assert!(sc.refresh_every > 0, "CI scenario must exercise the live-refresh hot swap");
+    assert!(
+        sc.ckpt_dir.is_empty() && sc.fault_flight == 0,
+        "ckpt/fault knobs are per-process CLI overrides, not shared scenario state"
+    );
+    assert!(sc.n <= 500 && sc.batches <= 8, "kill-and-resume entries must run in seconds");
+}
+
+// ---- Live centroid refresh under drift -----------------------------------
+
+/// Deterministic synthetic rows: two clusters on d=4, cluster 1
+/// drifting downward over the stream. The jitter is index-derived so
+/// the dataset is a pure function of its arguments.
+fn jitter(i: usize, c: usize) -> f64 {
+    ((i * 31 + c * 17) % 13) as f64 / 13.0 * 0.03 - 0.015
+}
+
+fn two_cluster_rows(n: usize, d: usize, center_of: impl Fn(usize) -> f64) -> Dataset {
+    let mut x = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let base = center_of(i);
+        labels.push((i % 2 != 0) as usize);
+        for c in 0..d {
+            x.push(base + jitter(i, c));
+        }
+    }
+    Dataset { n, d, x, labels }
+}
+
+/// Exact replica of one party's `Scorer::refresh` share update: public
+/// window means over its own normalized columns, α-blend in the ring,
+/// local truncation. Running this for both parties lets the test hold
+/// the exact post-refresh centroid shares — so the assignment oracle
+/// below is integer-exact, no fixed-point tolerance games.
+#[allow(clippy::too_many_arguments)]
+fn refresh_replica(
+    mu: &mut Mat,
+    party: usize,
+    c0: usize,
+    nc: usize,
+    stats: &[(f64, f64)],
+    rows: &[&[f64]],
+    assigns: &[usize],
+    alpha: f64,
+) {
+    let (k, d) = (mu.rows, mu.cols);
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![0.0f64; k * nc];
+    for (row, &j) in rows.iter().zip(assigns) {
+        counts[j] += 1;
+        for c in 0..nc {
+            let (lo, hi) = stats[c];
+            let v = row[c0 + c];
+            sums[j * nc + c] += if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+        }
+    }
+    let mut delta = Mat::zeros(k, d);
+    for j in 0..k {
+        if counts[j] == 0 {
+            continue;
+        }
+        for c in 0..d {
+            let own = c >= c0 && c < c0 + nc;
+            let recent = if own {
+                encode_f64(sums[j * nc + (c - c0)] / counts[j] as f64)
+            } else {
+                0
+            };
+            delta.data[j * d + c] = recent.wrapping_sub(mu.data[j * d + c]);
+        }
+    }
+    let alpha_f = encode_f64(alpha);
+    for w in &mut delta.data {
+        *w = w.wrapping_mul(alpha_f);
+    }
+    let step = trunc_share(party, &delta, FRAC_BITS);
+    for (m, s) in mu.data.iter_mut().zip(&step.data) {
+        *m = m.wrapping_add(*s);
+    }
+}
+
+/// The protocol's exact ring-arithmetic assignment: D'_j = ‖μ_j‖² −
+/// 2·x·μ_j on encoded normalized rows (same oracle as tests/serve.rs).
+fn oracle_assign(x_enc: &[u64], mu_enc: &Mat) -> usize {
+    let (k, d) = (mu_enc.rows, mu_enc.cols);
+    let mut best = 0usize;
+    let mut best_v = i64::MAX;
+    for j in 0..k {
+        let mut u = 0u64;
+        let mut dot = 0u64;
+        for l in 0..d {
+            let m = mu_enc.at(j, l);
+            u = u.wrapping_add(m.wrapping_mul(m));
+            dot = dot.wrapping_add(x_enc[l].wrapping_mul(m));
+        }
+        let dp = u.wrapping_sub(dot.wrapping_mul(2)) as i64;
+        if dp < best_v {
+            best_v = dp;
+            best = j;
+        }
+    }
+    best
+}
+
+/// A fraud cluster drifts through the served stream; periodic delta
+/// refresh hot-swaps the centroid shares mid-serve. Every batch's
+/// assignments must equal the ring-exact oracle evaluated against the
+/// *refreshed* centroids (replicated share-for-share in the test), the
+/// refreshed centroid must actually have chased the drift, and zero
+/// batches may be dropped along the way.
+#[test]
+fn drift_refresh_tracks_the_moving_cluster_with_zero_dropped_batches() {
+    let (d, d_a, k) = (4usize, 2usize, 2usize);
+    let (batches, batch_rows) = (8usize, 16usize);
+    let alpha = 0.5;
+
+    // Train on two stationary clusters at 0.1 and 0.9.
+    let train = two_cluster_rows(160, d, |i| if i % 2 == 0 { 0.1 } else { 0.9 });
+    // Init picks k seed-chosen data rows; even if both land in one
+    // blob, Lloyd separates bimodal data within ~3 iterations — 5
+    // guarantees the "stationary centroid stays put" margin below.
+    let cfg = SecureKmeansConfig {
+        k,
+        iters: 5,
+        seed: 21,
+        partition: Partition::Vertical { d_a },
+        ..Default::default()
+    };
+    let (out, [ma, mb]) = train_model(&train, &cfg, 0.05).unwrap();
+
+    // Stream: cluster A stays at 0.1; cluster B drifts 0.9 → 0.585.
+    let stream = two_cluster_rows(batches * batch_rows, d, |i| {
+        let b = i / batch_rows;
+        if i % 2 == 0 {
+            0.1
+        } else {
+            0.9 - 0.045 * b as f64
+        }
+    });
+    let scfg = ServeConfig {
+        batch_rows,
+        batches,
+        bank: BankConfig { prefab_batches: 3, low_water: 1, refill_batches: 3 },
+        seed: 0x4EF4_1357,
+        refresh_every: 2,
+        refresh_alpha: alpha,
+        ..Default::default()
+    };
+    let served = serve_stream([ma.clone(), mb.clone()], &stream, &scfg).unwrap();
+
+    // Zero dropped batches: every batch scored, every row intact.
+    assert_eq!(served.results.len(), batches);
+    assert_eq!(served.batch_stats.len(), batches);
+    for (b, r) in served.results.iter().enumerate() {
+        assert_eq!(r.assignments.len(), batch_rows, "batch {b}");
+        assert_eq!(r.malformed_rows, 0, "batch {b}");
+    }
+    // Refresh fires after batches 2, 4 and 6 (never after the last),
+    // one `serve.refresh` flight each, on both parties' meters.
+    assert_eq!(served.meter_a.get("serve.refresh").rounds, 3);
+    assert_eq!(served.meter_b.get("serve.refresh").rounds, 3);
+
+    // Replay the refresh schedule share-for-share and check every
+    // batch's assignments against the exact ring oracle.
+    let joint_stats: Vec<(f64, f64)> = ma.stats.iter().chain(mb.stats.iter()).cloned().collect();
+    let mut mu0 = ma.mu_share.clone();
+    let mut mu1 = mb.mu_share.clone();
+    for b in 0..batches {
+        let mu_enc = mu0.add(&mu1);
+        for r in 0..batch_rows {
+            let row = stream.row(b * batch_rows + r);
+            let x_enc: Vec<u64> = row
+                .iter()
+                .zip(&joint_stats)
+                .map(|(&v, &(lo, hi))| {
+                    encode_f64(if hi > lo { (v - lo) / (hi - lo) } else { 0.0 })
+                })
+                .collect();
+            assert_eq!(
+                served.results[b].assignments[r],
+                oracle_assign(&x_enc, &mu_enc),
+                "batch {b} row {r} must match the refreshed-centroid oracle"
+            );
+        }
+        if scfg.refresh_every > 0 && (b + 1) % scfg.refresh_every == 0 && b + 1 < batches {
+            let w0 = b + 1 - scfg.refresh_every;
+            let mut rows: Vec<&[f64]> = Vec::new();
+            let mut assigns: Vec<usize> = Vec::new();
+            for wb in w0..=b {
+                for r in 0..batch_rows {
+                    rows.push(stream.row(wb * batch_rows + r));
+                    assigns.push(served.results[wb].assignments[r]);
+                }
+            }
+            refresh_replica(&mut mu0, 0, 0, d_a, &ma.stats, &rows, &assigns, alpha);
+            refresh_replica(&mut mu1, 1, d_a, d - d_a, &mb.stats, &rows, &assigns, alpha);
+        }
+    }
+
+    // The refresh must have *chased* the drift: the high cluster's
+    // centroid moved substantially toward the drifted window mean,
+    // while the stationary cluster barely moved.
+    let initial = &out.centroids;
+    let final_mu = mu0.add(&mu1).decode();
+    let jb = if initial[0] > initial[d] { 0 } else { 1 };
+    let ja = 1 - jb;
+    assert!(
+        initial[jb * d] - final_mu[jb * d] > 0.08,
+        "drifting cluster must pull its centroid down: {} -> {}",
+        initial[jb * d],
+        final_mu[jb * d]
+    );
+    assert!(
+        (initial[ja * d] - final_mu[ja * d]).abs() < 0.05,
+        "stationary cluster must stay put: {} -> {}",
+        initial[ja * d],
+        final_mu[ja * d]
+    );
+    // And the stream still separates into both clusters at the end.
+    let last = &served.results[batches - 1].assignments;
+    assert!(last.contains(&0) && last.contains(&1), "both clusters must stay in use");
+}
