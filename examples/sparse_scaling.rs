@@ -7,7 +7,7 @@
 
 use ppkmeans::cli::Args;
 use ppkmeans::data::sparse_gen;
-use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig};
 use ppkmeans::kmeans::secure;
 
 fn main() {
@@ -31,8 +31,7 @@ fn main() {
     let dense = secure::run(&ds, &base).expect("dense run");
 
     let mut scfg = base.clone();
-    scfg.sparse = true;
-    scfg.he_bits = 768;
+    scfg.esd = EsdMode::He { bits: 768 };
     let sparse = secure::run(&ds, &scfg).expect("sparse run");
 
     assert_eq!(

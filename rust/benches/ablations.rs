@@ -89,7 +89,7 @@ fn main() {
         let y = Mat::random(1, lanes, &mut prg);
         use ppkmeans::net::run_two_party;
         use ppkmeans::offline::dealer::Dealer;
-        use ppkmeans::ss::{compare, Ctx};
+        use ppkmeans::ss::{Session, SessionOptions, compare};
         let reps = 3;
         let t = time_reps(1, reps, || {
             let (x0, y0) = (x.clone(), y.clone());
@@ -97,12 +97,12 @@ fn main() {
             run_two_party(
                 move |c| {
                     let mut ts = Dealer::new(5, 0);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                     compare::lt(&mut ctx, &x0, &y0);
                 },
                 move |c| {
                     let mut ts = Dealer::new(5, 1);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                     compare::lt(&mut ctx, &x1, &y1);
                 },
             );

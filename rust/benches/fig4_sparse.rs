@@ -15,7 +15,7 @@
 
 use ppkmeans::bench::{fmt_secs, Table};
 use ppkmeans::data::sparse_gen;
-use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig};
 use ppkmeans::kmeans::secure;
 use ppkmeans::net::cost::CostModel;
 
@@ -25,8 +25,7 @@ fn s1_cost(n: usize, d: usize, sparsity: f64, sparse: bool, iters: usize, wan: &
     let cfg = SecureKmeansConfig {
         k: 2,
         iters,
-        sparse,
-        he_bits: 768,
+        esd: if sparse { EsdMode::He { bits: 768 } } else { EsdMode::Vectorized },
         partition: Partition::Vertical { d_a: d / 2 },
         ..Default::default()
     };

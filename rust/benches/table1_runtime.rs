@@ -18,11 +18,16 @@
 //! compared directly; above the cap the shaped-WAN run would take hours
 //! (the link model says so) and the measured fields are `null`.
 //!
+//! **Malicious column.** `malicious Δt` is the modeled LAN cost of the
+//! malicious tier's surcharge (MAC barriers + commit-reveal), measured
+//! once at a small size — the surcharge is O(1) per phase boundary,
+//! independent of n/d/k, which the bench goldens pin.
+//!
 //! Paper reference rows (minutes): (10^4,2): 0.33/1.61/1.94 vs 1.92;
 //! (10^4,5): 0.94/4.70/5.64 vs 5.81; (10^5,2): 3.12/15.19/18.31 vs
 //! 18.02; (10^5,5): 9.06/48.39/57.45 vs 58.09.
 
-use ppkmeans::bench::{fmt_secs, Table};
+use ppkmeans::bench::{fmt_secs, train_malicious_counts, Table};
 use ppkmeans::coordinator::Report;
 use ppkmeans::data::blobs::{BlobSpec, Dataset};
 use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
@@ -77,9 +82,25 @@ fn main() {
         cal
     };
 
+    // The malicious tier's surcharge is O(1) per phase boundary —
+    // independent of n, d and k (pinned by the bench goldens) — so one
+    // small measured run prices the column for every row.
+    let mc = train_malicious_counts(256, d, 2, iters);
+    let mal_lan = lan.time_raw(mc.extra_bytes() / 2, mc.extra_rounds());
+    let mal_wan = wan.time_raw(mc.extra_bytes() / 2, mc.extra_rounds());
+
     let mut table = Table::new(
         "Table 1 — running time (LAN, d=2, t=10, l=64)",
-        &["n", "k", "ours online", "ours offline", "ours total", "measured LAN", "M-Kmeans"],
+        &[
+            "n",
+            "k",
+            "ours online",
+            "ours offline",
+            "ours total",
+            "malicious Δt",
+            "measured LAN",
+            "M-Kmeans",
+        ],
     );
     let mut rows_json: Vec<String> = Vec::new();
 
@@ -128,6 +149,7 @@ fn main() {
                 fmt_secs(report.online_secs),
                 fmt_secs(report.offline_secs),
                 fmt_secs(report.total_secs()),
+                format!("+{}", fmt_secs(mal_lan)),
                 m_lan.map(fmt_secs).unwrap_or_else(|| "-".into()),
                 mk_time.map(fmt_secs).unwrap_or_else(|| "-".into()),
             ]);
@@ -140,6 +162,8 @@ fn main() {
                  \"modeled\": {{\"lan_online_secs\": {:.6}, \"wan_online_secs\": {:.6}, \
                  \"offline_secs\": {:.6}}}, \
                  \"measured\": {{\"lan_wall_secs\": {}, \"wan_wall_secs\": {}}}, \
+                 \"malicious\": {{\"extra_bytes\": {}, \"extra_rounds\": {}, \
+                 \"lan_extra_secs\": {mal_lan:.6}, \"wan_extra_secs\": {mal_wan:.6}}}, \
                  \"mkmeans_lan_secs\": {}}}",
                 online_bytes,
                 online_rounds,
@@ -148,6 +172,8 @@ fn main() {
                 report.offline_secs,
                 opt(m_lan),
                 opt(m_wan),
+                mc.extra_bytes(),
+                mc.extra_rounds(),
                 opt(mk_time),
             ));
         }

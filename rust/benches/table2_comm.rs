@@ -11,7 +11,7 @@
 //! (10^4,5): 3156/12900/16056 vs 18632; (10^5,2): 14147/32598/46745 vs
 //! 47342; (10^5,5): 33572/131243/164815 vs 192192.
 
-use ppkmeans::bench::{fmt_bytes, train_counts, Table};
+use ppkmeans::bench::{fmt_bytes, train_counts, train_malicious_counts, Table};
 use ppkmeans::data::blobs::BlobSpec;
 use ppkmeans::mkmeans::{self, MkmeansConfig};
 
@@ -31,9 +31,14 @@ fn main() {
     let d = 2usize;
     let iters = if smoke { 3 } else { 10 };
 
+    // The malicious tier's byte surcharge is O(1) per phase boundary
+    // (96 B/party/barrier + 32 B/party per final opening), independent
+    // of n/d/k — measured once, annotated on every row.
+    let mc = train_malicious_counts(256, d, 2, iters);
+
     let mut table = Table::new(
         "Table 2 — communication (d=2, t=10, l=64), both parties summed",
-        &["n", "k", "ours online", "ours offline", "ours total", "M-Kmeans"],
+        &["n", "k", "ours online", "ours offline", "ours total", "malicious Δ", "M-Kmeans"],
     );
     let mut rows_json: Vec<String> = Vec::new();
 
@@ -58,6 +63,7 @@ fn main() {
                 fmt_bytes(online),
                 fmt_bytes(offline),
                 fmt_bytes(online + offline),
+                format!("+{}", fmt_bytes(mc.extra_bytes())),
                 match mk_bytes {
                     Some((b, scaled)) => {
                         format!("{}{}", fmt_bytes(b), if scaled { "*" } else { "" })
@@ -70,11 +76,17 @@ fn main() {
                  \"measured\": {{\"online_bytes\": {online}, \"online_rounds\": {}, \
                  \"s1_bytes\": {}, \"s2_bytes\": {}, \"s3_bytes\": {}}}, \
                  \"modeled\": {{\"offline_bytes\": {offline}}}, \
+                 \"malicious\": {{\"mac_barrier_bytes\": {}, \"mac_barrier_rounds\": {}, \
+                 \"reveal_extra_bytes\": {}, \"extra_bytes\": {}}}, \
                  \"total_bytes\": {}, \"mkmeans_bytes\": {}}}",
                 c.online_rounds,
                 c.step_bytes[0],
                 c.step_bytes[1],
                 c.step_bytes[2],
+                mc.mac_barrier_bytes,
+                mc.mac_barrier_rounds,
+                mc.reveal_extra_bytes,
+                mc.extra_bytes(),
                 online + offline,
                 mk_bytes.map(|(b, _)| b.to_string()).unwrap_or_else(|| "null".into()),
             ));

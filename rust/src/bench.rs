@@ -108,6 +108,7 @@ use crate::data::fraud_gen;
 use crate::kmeans::config::{Partition, SecureKmeansConfig};
 use crate::kmeans::secure;
 use crate::net::mux::MUX_LINK_PHASE;
+use crate::net::Security;
 use crate::offline::bank::BankConfig;
 use crate::offline::pricing;
 use crate::serve::driver::{serve_stream, train_model, ServeConfig};
@@ -200,6 +201,105 @@ pub fn train_golden_lines(c: &RunCounts) -> String {
         c.mat_triples,
         c.bit_triple_lanes,
         c.dabit_lanes,
+    )
+}
+
+/// Exact malicious-tier surcharge of one secure training run over its
+/// semi-honest twin. Every phase except `mac.barrier` (which only the
+/// malicious tier has) and `reveal` (commit-reveal adds a 32-byte
+/// digest per opening) is transcript-byte-identical across the two
+/// tiers — regression-tested in `rust/tests/tamper.rs` — so these
+/// numbers *are* the whole cost of authentication.
+pub struct MaliciousCounts {
+    /// Samples.
+    pub n: usize,
+    /// Features.
+    pub d: usize,
+    /// Clusters.
+    pub k: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// Online bytes under the malicious tier (`online.` prefix, both
+    /// parties summed) — equals the semi-honest figure by construction.
+    pub online_bytes: u64,
+    /// `mac.barrier` bytes, both parties summed (96 per party per
+    /// barrier: 32B commit + 56B reveal + 8B verdict).
+    pub mac_barrier_bytes: u64,
+    /// `mac.barrier` flights (party 0; 3 per barrier, one barrier per
+    /// Lloyd iteration plus the `train.done` barrier).
+    pub mac_barrier_rounds: u64,
+    /// Commit-reveal surcharge on the `reveal` phase, both parties
+    /// summed, relative to the semi-honest reveal (32 bytes per
+    /// opened matrix per party).
+    pub reveal_extra_bytes: u64,
+    /// Extra reveal flights (party 0; one commit flight per opening).
+    pub reveal_extra_rounds: u64,
+}
+
+impl MaliciousCounts {
+    /// Total extra bytes the tier costs, both parties summed.
+    pub fn extra_bytes(&self) -> u64 {
+        self.mac_barrier_bytes + self.reveal_extra_bytes
+    }
+
+    /// Total extra flights (party 0).
+    pub fn extra_rounds(&self) -> u64 {
+        self.mac_barrier_rounds + self.reveal_extra_rounds
+    }
+}
+
+/// Run the tables' canonical configuration under both security tiers
+/// and extract the exact malicious surcharge.
+pub fn train_malicious_counts(n: usize, d: usize, k: usize, iters: usize) -> MaliciousCounts {
+    let ds = BlobSpec::new(n, d, k).generate(1);
+    let cfg = |security| SecureKmeansConfig {
+        k,
+        iters,
+        partition: Partition::Vertical { d_a: (d / 2).max(1) },
+        security,
+        ..Default::default()
+    };
+    let sh = secure::run(&ds, &cfg(Security::SemiHonest)).expect("semi-honest run");
+    let mal = secure::run(&ds, &cfg(Security::Malicious)).expect("malicious run");
+    assert_eq!(
+        sh.assignments, mal.assignments,
+        "the tiers must agree on the clustering (same transcripts, extra checks)"
+    );
+    let both = |out: &secure::SecureKmeansOutput, label: &str| {
+        out.meter_a.get(label).bytes_sent + out.meter_b.get(label).bytes_sent
+    };
+    MaliciousCounts {
+        n,
+        d,
+        k,
+        iters,
+        online_bytes: mal.meter_a.total_prefix("online.").bytes_sent
+            + mal.meter_b.total_prefix("online.").bytes_sent,
+        mac_barrier_bytes: both(&mal, "mac.barrier"),
+        mac_barrier_rounds: mal.meter_a.get("mac.barrier").rounds,
+        reveal_extra_bytes: both(&mal, "reveal") - both(&sh, "reveal"),
+        reveal_extra_rounds: mal.meter_a.get("reveal").rounds - sh.meter_a.get("reveal").rounds,
+    }
+}
+
+/// The golden-file rendering of [`MaliciousCounts`].
+pub fn malicious_golden_lines(c: &MaliciousCounts) -> String {
+    format!(
+        "config = n{} d{} k{} t{} malicious\n\
+         online_bytes = {}\n\
+         mac_barrier_bytes = {}\n\
+         mac_barrier_rounds = {}\n\
+         reveal_extra_bytes = {}\n\
+         reveal_extra_rounds = {}\n",
+        c.n,
+        c.d,
+        c.k,
+        c.iters,
+        c.online_bytes,
+        c.mac_barrier_bytes,
+        c.mac_barrier_rounds,
+        c.reveal_extra_bytes,
+        c.reveal_extra_rounds,
     )
 }
 

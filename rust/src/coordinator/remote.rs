@@ -33,7 +33,7 @@ use crate::kmeans::secure;
 use crate::net::cost::CostModel;
 use crate::net::fault::{FaultMode, FaultPlan};
 use crate::net::meter::{Meter, PhaseStats};
-use crate::net::Chan;
+use crate::net::{Chan, Security};
 use crate::offline::bank::BankConfig;
 use crate::resume::{Checkpoint, MeterSnapshot, Payload, ResumeCtx, ServeState, TrainState};
 use crate::runtime::pool::Parallelism;
@@ -184,7 +184,14 @@ pub struct Scenario {
     pub n_a: usize,
     /// Cross-product backend selection.
     pub esd: EsdMode,
-    /// Legacy sparse switch (routes through HE Protocol 2).
+    /// Adversary model (scenario key `security`). Protocol-relevant and
+    /// digested: a semi-honest party talking to a malicious-tier peer
+    /// would desync on the very first MAC barrier, so the handshake
+    /// must refuse the pairing up front.
+    pub security: Security,
+    /// Generate sparse training data; also routes the cross products
+    /// through HE Protocol 2 when `esd` is left at its default
+    /// (mirroring the retired `SecureKmeansConfig::sparse` fold).
     pub sparse: bool,
     /// Zero fraction for generated sparse data.
     pub sparsity: f64,
@@ -274,6 +281,7 @@ impl Default for Scenario {
             d_a: 0,
             n_a: 0,
             esd: EsdMode::Vectorized,
+            security: Security::SemiHonest,
             sparse: false,
             sparsity: 0.5,
             tile_rows: 0,
@@ -367,7 +375,7 @@ impl Scenario {
                     sc.esd = match val {
                         "vectorized" => EsdMode::Vectorized,
                         "naive" => EsdMode::Naive,
-                        "he" => EsdMode::He,
+                        "he" => EsdMode::he(),
                         "auto" => EsdMode::Auto,
                         other => {
                             return Err(Error::Config(format!(
@@ -376,6 +384,7 @@ impl Scenario {
                         }
                     }
                 }
+                "security" => sc.security = Security::parse(val)?,
                 "sparse" => sc.sparse = want_bool(key, val)?,
                 "sparsity" => sc.sparsity = want_f64(key, val)?,
                 "tile_rows" => sc.tile_rows = want_usize(key, val)?,
@@ -449,7 +458,7 @@ impl Scenario {
         let esd = match self.esd {
             EsdMode::Vectorized => "vectorized",
             EsdMode::Naive => "naive",
-            EsdMode::He => "he",
+            EsdMode::He { .. } => "he",
             EsdMode::Auto => "auto",
         };
         let flights = match self.tile_flights {
@@ -481,6 +490,7 @@ impl Scenario {
             ("refill", self.refill.to_string()),
             ("refresh.alpha", self.refresh_alpha.to_string()),
             ("refresh.every", self.refresh_every.to_string()),
+            ("security", self.security.as_str().to_string()),
             ("seed", self.seed.to_string()),
             ("shape", self.shape.as_str().to_string()),
             ("sparse", self.sparse.to_string()),
@@ -524,8 +534,15 @@ impl Scenario {
             iters: self.iters,
             seed: self.seed,
             partition,
-            esd: self.esd,
-            sparse: self.sparse,
+            // The legacy `sparse` scenario key keeps its old protocol
+            // meaning: with the default backend it routes the cross
+            // products through HE Protocol 2 (an explicit esd wins).
+            esd: if self.sparse && self.esd == EsdMode::Vectorized {
+                EsdMode::he()
+            } else {
+                self.esd
+            },
+            security: self.security,
             tile_rows: if self.tile_rows > 0 { Some(self.tile_rows) } else { None },
             tile_flights: self.tile_flights,
             parallelism: self.parallelism(),
@@ -553,6 +570,7 @@ impl Scenario {
             shape: self.shape.model(),
             refresh_every: self.refresh_every,
             refresh_alpha: self.refresh_alpha,
+            security: self.security,
         }
     }
 
@@ -581,6 +599,7 @@ impl Scenario {
             shape: self.shape.model(),
             refresh_every: self.refresh_every,
             refresh_alpha: self.refresh_alpha,
+            security: self.security,
         }
     }
 
@@ -1231,6 +1250,7 @@ mod tests {
             ("d_a", "2"),
             ("n_a", "3"),
             ("esd", "naive"),
+            ("security", "malicious"),
             ("sparse", "true"),
             ("sparsity", "0.25"),
             ("tile_rows", "8"),

@@ -23,7 +23,7 @@ use crate::ring::fixed::SCALE;
 use crate::ring::matrix::Mat;
 use crate::ss::boolean::BoolShare;
 use crate::ss::compare::gt_public;
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 
 /// Pick τ as the `(1 − rate)` quantile of the training samples' squared
 /// distances to their assigned centroids: roughly the top `rate`
@@ -73,7 +73,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::split;
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     #[test]
@@ -113,7 +113,7 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(32, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let before = ctx.chan.meter().total().rounds;
                 let b = flag_above(&mut ctx, &d0, tau_2f);
                 let spent = ctx.chan.meter().total().rounds - before;
@@ -124,7 +124,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(32, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let b = flag_above(&mut ctx, &d1, tau_2f);
                 let _ = c.exchange_u64s(&b.words);
             },

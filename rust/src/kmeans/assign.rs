@@ -14,7 +14,7 @@
 use crate::ring::matrix::Mat;
 use crate::ss::boolean::{msb, CMP_ROUNDS};
 use crate::ss::mux::mux_bits_begin;
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 
 /// Flights per `F_min^k` invocation on k columns (per Lloyd iteration).
 pub fn min_k_rounds(k: usize) -> u64 {
@@ -163,7 +163,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::encode_f64;
     use crate::ss::share::{reconstruct, split};
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     fn run_min_k(dvals: Vec<f64>, n: usize, k: usize) -> (Vec<u64>, Vec<f64>) {
@@ -174,13 +174,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(102, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let (cm, mv) = min_k(&mut ctx, &d0);
                 (reconstruct(c, &cm), reconstruct(c, &mv))
             },
             move |c| {
                 let mut ts = Dealer::new(102, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let (cm, mv) = min_k(&mut ctx, &d1);
                 (reconstruct(c, &cm), reconstruct(c, &mv))
             },
@@ -242,7 +242,7 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(402, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let tiles: Vec<Mat> =
                     RANGES.iter().map(|&(r0, r1)| d0.rows_slice(r0, r1)).collect();
                 let before = ctx.chan.meter().total().rounds;
@@ -253,7 +253,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(402, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let tiles: Vec<Mat> =
                     RANGES.iter().map(|&(r0, r1)| d1.rows_slice(r0, r1)).collect();
                 let (cm, _mv) = min_k_tiles(&mut ctx, &tiles);
@@ -276,12 +276,12 @@ mod tests {
             let ((_, m), _) = run_two_party(
                 move |c| {
                     let mut ts = Dealer::new(103, 0);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                     min_k(&mut ctx, &d0);
                 },
                 move |c| {
                     let mut ts = Dealer::new(103, 1);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                     min_k(&mut ctx, &d1);
                 },
             );
@@ -304,13 +304,13 @@ mod tests {
             let ((rounds, _), _) = run_two_party(
                 move |c| {
                     let mut ts = Dealer::new(104, 0);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                     min_k(&mut ctx, &d0);
                     ctx.chan.meter().total().rounds
                 },
                 move |c| {
                     let mut ts = Dealer::new(104, 1);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                     min_k(&mut ctx, &d1);
                 },
             );

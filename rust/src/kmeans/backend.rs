@@ -624,7 +624,7 @@ pub fn select(
     match cfg.effective_esd() {
         EsdMode::Vectorized => Box::new(BeaverBackend::new(d_a, d)),
         EsdMode::Naive => Box::new(NaiveBackend::new(d_a, d)),
-        EsdMode::He => Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d, threads)),
+        EsdMode::He { bits } => Box::new(HeBackend::setup(chan, bits, cfg.seed, d_a, d, threads)),
         EsdMode::Auto => {
             chan.set_phase("setup.density");
             let mine = [x.nnz(), x.dense.len() as u64];
@@ -632,7 +632,14 @@ pub fn select(
             let total = (mine[1] + theirs[1]).max(1);
             let density = (mine[0] + theirs[0]) as f64 / total as f64;
             if density < AUTO_DENSITY_THRESHOLD {
-                Box::new(HeBackend::setup(chan, cfg.he_bits, cfg.seed, d_a, d, threads))
+                Box::new(HeBackend::setup(
+                    chan,
+                    crate::kmeans::config::DEFAULT_HE_BITS,
+                    cfg.seed,
+                    d_a,
+                    d,
+                    threads,
+                ))
             } else {
                 Box::new(BeaverBackend::new(d_a, d))
             }

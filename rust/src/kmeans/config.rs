@@ -1,9 +1,14 @@
 //! Configuration for secure K-means runs.
 
 use crate::net::cost::CostModel;
+use crate::net::Security;
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
 use crate::ss::RoundPolicy;
+
+/// Default Okamoto-Uchiyama modulus bits for the HE cross-product path
+/// (the paper benchmarks 2048; tests and CI use this faster setting).
+pub const DEFAULT_HE_BITS: usize = 768;
 
 /// How the joint data is split between the two parties (paper §4.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,13 +32,24 @@ pub enum EsdMode {
     /// centroid) pair — the n·k-interaction cost the paper eliminates.
     Naive,
     /// HE Protocol 2 (paper §4.3): the sparse holder evaluates over
-    /// ciphertexts of the small dense operand. Vertical partition only.
-    He,
+    /// ciphertexts of the small dense operand, with `bits` selecting the
+    /// Okamoto-Uchiyama modulus size (paper: 2048; tests:
+    /// [`DEFAULT_HE_BITS`]). Vertical partition only. Subsumes the
+    /// retired `sparse: bool` + `he_bits: usize` config pair.
+    He { bits: usize },
     /// Density-based auto-dispatch: parties exchange their local nnz
-    /// counts at setup and pick [`EsdMode::He`] below
+    /// counts at setup and pick [`EsdMode::He`] (at
+    /// [`DEFAULT_HE_BITS`]) below
     /// [`crate::kmeans::backend::AUTO_DENSITY_THRESHOLD`], otherwise
     /// [`EsdMode::Vectorized`].
     Auto,
+}
+
+impl EsdMode {
+    /// The HE backend at the default modulus size.
+    pub fn he() -> EsdMode {
+        EsdMode::He { bits: DEFAULT_HE_BITS }
+    }
 }
 
 /// How a row-tiled run maps tiles onto network flights.
@@ -77,13 +93,18 @@ pub struct SecureKmeansConfig {
     pub seed: u128,
     /// Data partition between parties.
     pub partition: Partition,
-    /// Cross-product backend selection.
+    /// Cross-product backend selection. The HE path's modulus size
+    /// rides inside the variant (`EsdMode::He { bits }`) — the old
+    /// `sparse: bool` + `he_bits: usize` field pair is retired (see
+    /// [`SecureKmeansConfig::set_legacy_sparse`] for the migration
+    /// shim).
     pub esd: EsdMode,
-    /// Legacy switch: route sparse cross products through HE Protocol 2
-    /// (equivalent to `esd: EsdMode::He` when `esd` is the default).
-    pub sparse: bool,
-    /// HE modulus bits for the sparse path (paper: 2048).
-    pub he_bits: usize,
+    /// Adversary model for the run: [`Security::SemiHonest`] (default)
+    /// is transcript-identical to every release before the tier
+    /// existed; [`Security::Malicious`] arms the channel's deferred MAC
+    /// ledger, adds a batched ledger barrier per Lloyd iteration plus
+    /// one at `train.done`, and commit-reveals the final outputs.
+    pub security: Security,
     /// Optional convergence threshold ε (checked with F_CSC each
     /// iteration when set; `None` = fixed iteration count only).
     pub epsilon: Option<f64>,
@@ -130,13 +151,25 @@ pub struct SecureKmeansConfig {
 }
 
 impl SecureKmeansConfig {
-    /// The backend actually requested once the legacy `sparse` flag is
-    /// folded in.
+    /// The backend actually requested. The legacy `sparse`/`he_bits`
+    /// folding now happens at construction time ([`Self::set_legacy_sparse`]
+    /// or the scenario/CLI parsers), so this is a plain accessor — kept
+    /// because call sites across the tree ask the question this way.
     pub fn effective_esd(&self) -> EsdMode {
-        if self.sparse && self.esd == EsdMode::Vectorized {
-            EsdMode::He
-        } else {
-            self.esd
+        self.esd
+    }
+
+    /// Migration shim for the retired `sparse: bool` + `he_bits: usize`
+    /// field pair: folds them into [`EsdMode::He`] exactly like the old
+    /// `effective_esd` did (an explicit non-default `esd` wins over the
+    /// legacy flag). Removed after one release.
+    #[deprecated(
+        since = "0.10.0",
+        note = "set `esd: EsdMode::He { bits }` directly; the `sparse`/`he_bits` fields are gone"
+    )]
+    pub fn set_legacy_sparse(&mut self, sparse: bool, he_bits: usize) {
+        if sparse && self.esd == EsdMode::Vectorized {
+            self.esd = EsdMode::He { bits: he_bits };
         }
     }
 }
@@ -149,8 +182,7 @@ impl Default for SecureKmeansConfig {
             seed: 0xBEEF,
             partition: Partition::Vertical { d_a: 1 },
             esd: EsdMode::Vectorized,
-            sparse: false,
-            he_bits: 768,
+            security: Security::SemiHonest,
             epsilon: None,
             round_policy: RoundPolicy::Coalesced,
             tile_rows: None,
@@ -170,7 +202,7 @@ mod tests {
     fn defaults_are_dense_vectorized() {
         let c = SecureKmeansConfig::default();
         assert_eq!(c.esd, EsdMode::Vectorized);
-        assert!(!c.sparse);
+        assert_eq!(c.security, Security::SemiHonest);
         assert!(c.epsilon.is_none());
         assert_eq!(c.round_policy, RoundPolicy::Coalesced);
         assert_eq!(c.effective_esd(), EsdMode::Vectorized);
@@ -198,11 +230,15 @@ mod tests {
     }
 
     #[test]
-    fn legacy_sparse_flag_maps_to_he() {
-        let c = SecureKmeansConfig { sparse: true, ..Default::default() };
-        assert_eq!(c.effective_esd(), EsdMode::He);
+    #[allow(deprecated)]
+    fn legacy_sparse_shim_maps_to_he() {
+        let mut c = SecureKmeansConfig::default();
+        c.set_legacy_sparse(true, 768);
+        assert_eq!(c.effective_esd(), EsdMode::He { bits: 768 });
         // An explicit esd wins over the legacy flag.
-        let c = SecureKmeansConfig { sparse: true, esd: EsdMode::Naive, ..Default::default() };
+        let mut c = SecureKmeansConfig { esd: EsdMode::Naive, ..Default::default() };
+        c.set_legacy_sparse(true, 768);
         assert_eq!(c.effective_esd(), EsdMode::Naive);
+        assert_eq!(EsdMode::he(), EsdMode::He { bits: DEFAULT_HE_BITS });
     }
 }

@@ -17,7 +17,7 @@ use crate::ring::matrix::Mat;
 use crate::ss::arith::ssquare_elem_begin;
 use crate::ss::matmul::{private_matmul, private_matmul_begin, private_matmul_rows_begin};
 use crate::ss::pending::Pending;
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 
 /// Stage the shares of the per-cluster squared-norm row
 /// `[|μ_1|², …, |μ_k|²]` as a 1×k matrix (scale 2f). One staged gate
@@ -222,7 +222,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::{decode_f64, SCALE};
     use crate::ss::share::{reconstruct, split};
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     /// Reference D' on plaintext reals.
@@ -270,7 +270,7 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(92, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let dm = if naive {
                     vertical_naive(&mut ctx, &xa, &mu0, d_a)
                 } else {
@@ -280,7 +280,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(92, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let dm = if naive {
                     vertical_naive(&mut ctx, &xb, &mu1, d_a)
                 } else {
@@ -320,13 +320,13 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(94, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let dm = horizontal(&mut ctx, &xa, &mu0, n_a, n);
                 reconstruct(c, &dm)
             },
             move |c| {
                 let mut ts = Dealer::new(94, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let dm = horizontal(&mut ctx, &xb, &mu1, n_a, n);
                 reconstruct(c, &dm)
             },
@@ -361,12 +361,12 @@ mod tests {
         let ((_, m_vec), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(96, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 vertical(&mut ctx, &xa.clone(), &mu0, d_a);
             },
             move |c| {
                 let mut ts = Dealer::new(96, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 vertical(&mut ctx, &xb.clone(), &mu1, d_a);
             },
         );

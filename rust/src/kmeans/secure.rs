@@ -36,15 +36,15 @@ use super::config::{tile_schedule, EsdMode, Partition, SecureKmeansConfig, TileF
 use super::{assign, esd, init, update};
 use crate::data::blobs::Dataset;
 use crate::net::{run_two_party, Chan, Meter};
-use crate::offline::dealer::Dealer;
+use crate::offline::dealer::{mac_key_share, Dealer};
 use crate::offline::store::{Demand, TripleStore};
 use crate::offline::timed::TimedSource;
 use crate::resume::{MeterSnapshot, Payload, ResumeCtx, TrainState};
 use crate::ring::matrix::Mat;
 use crate::ss::pending::PendingParts;
-use crate::ss::share::reconstruct;
+use crate::ss::share::{reconstruct, reconstruct_committed, Share};
 use crate::ss::triples::{Ledger, TripleSource};
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
 use crate::util::timer::Timer;
@@ -179,11 +179,22 @@ pub fn split_dataset(data: &Dataset, partition: Partition) -> (Mat, Mat) {
     }
 }
 
+/// Ledger-seed salt for the malicious tier: both parties derive the
+/// same MacAcc stream family from the public run seed.
+const MAC_LEDGER_SALT: u128 = 0x0ACC_1ED6_u128 << 64;
+
 /// One party's protocol main loop: the row-tiled schedule over the
 /// partition-appropriate cross-product backend. `rctx` writes a
 /// `train.iter.{i}` checkpoint at every iteration boundary (a no-op
 /// when disabled); `resume` restores one after the deterministic setup
 /// has been replayed.
+///
+/// Under [`crate::net::Security::Malicious`] the channel ledger is
+/// armed before the first flight, every Lloyd iteration ends with one
+/// batched MAC barrier, the final outputs reconstruct commit-then-
+/// reveal, and `train.done` closes with a last barrier. Semi-honest
+/// runs skip all of it — the barrier call is a literal no-op on an
+/// unarmed channel, keeping the transcript byte-identical.
 fn party_main(
     chan: &mut Chan,
     mut x: PartyData,
@@ -192,9 +203,12 @@ fn party_main(
     cfg: &SecureKmeansConfig,
     rctx: &mut ResumeCtx,
     resume: Option<(TrainState, MeterSnapshot)>,
-) -> PartyResult {
+) -> Result<PartyResult> {
     let party = chan.party;
     let t_start = Timer::started();
+    if cfg.security.malicious() {
+        chan.enable_mac(mac_key_share(cfg.seed, party), cfg.seed ^ MAC_LEDGER_SALT);
+    }
     // Install this run's worker count for the deep call sites (Beaver
     // recombination, dealer matmuls, tile-local products). A pure
     // throughput knob: outputs and meters are thread-count independent.
@@ -277,9 +291,7 @@ fn party_main(
                     let mut ctx = Session::new(
                         chan,
                         &mut store,
-                        Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5 ^ tseed),
-                    )
-                    .with_policy(cfg.round_policy);
+                        Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5 ^ tseed), SessionOptions::with_policy(cfg.round_policy),);
                     ctx.set_phase("online.s1");
                     let u_p =
                         if ti == 0 { Some(esd::centroid_norms_row_begin(&mut ctx, &mu)) } else { None };
@@ -300,8 +312,7 @@ fn party_main(
                 let dem0 = store.demand.mark();
                 let c_tile = {
                     let mut ctx =
-                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6 ^ tseed))
-                            .with_policy(cfg.round_policy);
+                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6 ^ tseed), SessionOptions::with_policy(cfg.round_policy));
                     ctx.set_phase("online.s2");
                     let (c_t, _minvals) = assign::min_k(&mut ctx, &d_tile);
                     c_t
@@ -318,8 +329,7 @@ fn party_main(
                 let dem0 = store.demand.mark();
                 {
                     let mut ctx =
-                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7 ^ tseed))
-                            .with_policy(cfg.round_policy);
+                        Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7 ^ tseed), SessionOptions::with_policy(cfg.round_policy));
                     ctx.set_phase("online.s3");
                     let num_p = cross_backend.s3_numerator_tile(&mut ctx, &x, &c_tile, (r0, r1));
                     ctx.flush();
@@ -334,8 +344,7 @@ fn party_main(
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             let mu_new = {
-                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
-                    .with_policy(cfg.round_policy);
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7), SessionOptions::with_policy(cfg.round_policy));
                 ctx.set_phase("online.s3");
                 update::finish_update_tiles(
                     &mut ctx,
@@ -360,9 +369,7 @@ fn party_main(
                 let mut ctx = Session::new(
                     chan,
                     &mut store,
-                    Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5),
-                )
-                .with_policy(cfg.round_policy);
+                    Prg::new(cfg.seed ^ ((party as u128) << 64) ^ 0xA5), SessionOptions::with_policy(cfg.round_policy),);
                 ctx.set_phase("online.s1");
                 let u_row_p = esd::centroid_norms_row_begin(&mut ctx, &mu);
                 let xmu_ps: Vec<PendingParts> = tiles
@@ -385,8 +392,7 @@ fn party_main(
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             {
-                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6))
-                    .with_policy(cfg.round_policy);
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xB6), SessionOptions::with_policy(cfg.round_policy));
                 ctx.set_phase("online.s2");
                 let (c_new, _minvals) = assign::min_k_tiles(&mut ctx, &d_tiles);
                 c_share = c_new;
@@ -402,8 +408,7 @@ fn party_main(
             let off0 = store.inner().secs;
             let dem0 = store.demand.mark();
             let mu_new = {
-                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7))
-                    .with_policy(cfg.round_policy);
+                let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xC7), SessionOptions::with_policy(cfg.round_policy));
                 ctx.set_phase("online.s3");
                 let nums: Vec<PendingParts> = tiles
                     .iter()
@@ -426,14 +431,21 @@ fn party_main(
 
         // Optional F_CSC convergence check.
         let stop = if let Some(eps) = cfg.epsilon {
-            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xD8))
-                .with_policy(cfg.round_policy);
+            let mut ctx = Session::new(chan, &mut store, Prg::new(cfg.seed ^ 0xD8), SessionOptions::with_policy(cfg.round_policy));
             ctx.set_phase("online.csc");
             update::converged(&mut ctx, &mu, &mu_new, eps)
         } else {
             false
         };
         mu = mu_new;
+        // Malicious tier: settle the whole iteration's ledger in one
+        // batched check — O(1) flights per Lloyd boundary regardless of
+        // n, k or the tile schedule. Guarded so a semi-honest meter
+        // never even grows the phase entry.
+        if cfg.security.malicious() {
+            chan.set_phase("mac.barrier");
+            chan.mac_barrier(&format!("train.iter.{}", iters - 1))?;
+        }
         // Checkpoint the iteration boundary: everything the loop carries
         // across iterations plus the dealer stream position. Saved after
         // the convergence decision so a resumed run knows whether the
@@ -457,10 +469,22 @@ fn party_main(
         }
     }
 
-    // Output reconstruction (the single reveal of the protocol).
+    // Output reconstruction (the single reveal of the protocol). The
+    // malicious tier reveals commit-then-hash-checked so neither party
+    // can pick its output share after seeing the other's, then closes
+    // the run with the final `train.done` ledger barrier.
     chan.set_phase("reveal");
-    let mu_plain = reconstruct(chan, &mu);
-    let c_plain = reconstruct(chan, &c_share);
+    let (mu_plain, c_plain) = if cfg.security.malicious() {
+        let m = reconstruct_committed(chan, &Share::plain(mu.clone()), "train.reveal.mu")?;
+        let c = reconstruct_committed(chan, &Share::plain(c_share.clone()), "train.reveal.assign")?;
+        (m, c)
+    } else {
+        (reconstruct(chan, &mu), reconstruct(chan, &c_share))
+    };
+    if cfg.security.malicious() {
+        chan.set_phase("mac.barrier");
+        chan.mac_barrier("train.done")?;
+    }
     // A reconstructed assignment row must be exactly one-hot; anything
     // else is protocol corruption — count it (and trip a debug assert)
     // instead of silently mapping the row to cluster 0.
@@ -481,7 +505,7 @@ fn party_main(
         })
         .collect();
 
-    PartyResult {
+    Ok(PartyResult {
         step_demands,
         mu: mu_plain,
         mu_share: mu,
@@ -495,7 +519,7 @@ fn party_main(
         iters,
         tiles: tiles.len(),
         malformed_rows,
-    }
+    })
 }
 
 /// Assignment-only inference for one row tile: S1 distance (the tile's
@@ -537,7 +561,7 @@ fn validate(cfg: &SecureKmeansConfig) -> Result<()> {
         return Err(Error::Config("tile_rows must be ≥ 1".into()));
     }
     let horizontal = matches!(cfg.partition, Partition::Horizontal { .. });
-    if horizontal && cfg.effective_esd() == EsdMode::He {
+    if horizontal && matches!(cfg.effective_esd(), EsdMode::He { .. }) {
         return Err(Error::Config("sparse path supports vertical partitioning (Alg. 3)".into()));
     }
     Ok(())
@@ -578,7 +602,14 @@ pub fn run_party_ckpt(
 ) -> Result<PartyResult> {
     validate(cfg)?;
     let esd_mode = cfg.effective_esd();
-    if resume.is_some() && matches!(esd_mode, EsdMode::He | EsdMode::Auto) {
+    if cfg.security.malicious() && (rctx.enabled() || resume.is_some()) {
+        return Err(Error::Config(
+            "resume: a malicious-tier run cannot checkpoint or restore — the deferred MAC \
+             ledger does not survive a restart; rerun from scratch or drop to semi_honest"
+                .into(),
+        ));
+    }
+    if resume.is_some() && matches!(esd_mode, EsdMode::He { .. } | EsdMode::Auto) {
         return Err(Error::Config(
             "resume: checkpointed training resumes on the beaver/naive backends only — \
              pin `esd` away from he/auto in resumable scenarios"
@@ -588,10 +619,10 @@ pub fn run_party_ckpt(
     let (xa, xb) = split_dataset(data, cfg.partition);
     let x_own = if chan.party == 0 { xa } else { xb };
     // Build the CSR view when the run may take the HE path.
-    let may_sparse = matches!(esd_mode, EsdMode::He | EsdMode::Auto)
+    let may_sparse = matches!(esd_mode, EsdMode::He { .. } | EsdMode::Auto)
         && matches!(cfg.partition, Partition::Vertical { .. });
     let p = if may_sparse { PartyData::with_csr(x_own) } else { PartyData::dense_only(x_own) };
-    Ok(party_main(chan, p, data.n, data.d, cfg, rctx, resume))
+    party_main(chan, p, data.n, data.d, cfg, rctx, resume)
 }
 
 /// Run the full two-party protocol on a dataset, any partition, any
@@ -604,7 +635,7 @@ pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutpu
     // what run_party drives in a two-process deployment; only the
     // plaintext data-prep differs.
     let (xa, xb) = split_dataset(data, cfg.partition);
-    let may_sparse = matches!(cfg.effective_esd(), EsdMode::He | EsdMode::Auto)
+    let may_sparse = matches!(cfg.effective_esd(), EsdMode::He { .. } | EsdMode::Auto)
         && matches!(cfg.partition, Partition::Vertical { .. });
     let pa = if may_sparse { PartyData::with_csr(xa) } else { PartyData::dense_only(xa) };
     let pb = if may_sparse { PartyData::with_csr(xb) } else { PartyData::dense_only(xb) };
@@ -614,6 +645,7 @@ pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutpu
         move |c| party_main(c, pa, n, d, &cfg_a, &mut ResumeCtx::disabled(), None),
         move |c| party_main(c, pb, n, d, &cfg_b, &mut ResumeCtx::disabled(), None),
     );
+    let (ra, rb) = (ra?, rb?);
     debug_assert_eq!(ra.mu, rb.mu, "parties must reconstruct identical centroids");
     if ra.malformed_rows > 0 {
         eprintln!(
@@ -830,12 +862,48 @@ mod tests {
     }
 
     #[test]
+    fn malicious_tier_matches_semi_honest_and_costs_one_barrier_per_iter() {
+        use crate::net::Security;
+        let ds = well_separated(30, 3, 2, 91);
+        let base = SecureKmeansConfig {
+            k: 2,
+            iters: 3,
+            partition: Partition::Vertical { d_a: 1 },
+            ..Default::default()
+        };
+        let sh = run(&ds, &base).unwrap();
+        let mal_cfg = SecureKmeansConfig { security: Security::Malicious, ..base };
+        let mal = run(&ds, &mal_cfg).unwrap();
+        // Honest parties: identical outputs in both tiers.
+        assert_eq!(mal.assignments, sh.assignments);
+        assert_eq!(mal.centroids, sh.centroids);
+        // The malicious overhead is O(1) per phase boundary: 3 flights ×
+        // (iters + 1) barriers at 96 bytes each, plus one 32-byte commit
+        // per final reveal — independent of n, d, k.
+        let bar = mal.meter_a.get("mac.barrier");
+        assert_eq!(bar.rounds, 3 * (3 + 1));
+        assert_eq!(bar.bytes_sent, 96 * (3 + 1));
+        let extra_reveal = mal.meter_a.get("reveal").bytes_sent
+            - sh.meter_a.get("reveal").bytes_sent;
+        assert_eq!(extra_reveal, 2 * 32);
+        // Everything outside the barrier/commit flights is byte-identical.
+        for phase in ["online.s1", "online.s2", "online.s3"] {
+            assert_eq!(
+                mal.meter_a.get(phase).bytes_sent,
+                sh.meter_a.get(phase).bytes_sent,
+                "phase {phase} must not grow under the malicious tier"
+            );
+            assert_eq!(mal.meter_a.get(phase).rounds, sh.meter_a.get(phase).rounds);
+        }
+    }
+
+    #[test]
     fn he_on_horizontal_is_rejected() {
         let ds = well_separated(20, 2, 2, 10);
         let cfg = SecureKmeansConfig {
             k: 2,
             iters: 1,
-            sparse: true,
+            esd: EsdMode::he(),
             partition: Partition::Horizontal { n_a: 10 },
             ..Default::default()
         };

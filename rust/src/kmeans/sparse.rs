@@ -21,7 +21,11 @@ use crate::util::error::Result;
 /// the paper's Alg. 3).
 pub fn run(data: &Dataset, cfg: &SecureKmeansConfig) -> Result<SecureKmeansOutput> {
     let mut cfg = cfg.clone();
-    cfg.esd = EsdMode::He;
+    // Force the HE backend, keeping an explicitly configured modulus
+    // size if the caller already picked the HE path.
+    if !matches!(cfg.esd, EsdMode::He { .. }) {
+        cfg.esd = EsdMode::he();
+    }
     secure::run(data, &cfg)
 }
 
@@ -53,8 +57,7 @@ mod tests {
         let cfg = SecureKmeansConfig {
             k: 2,
             iters: 3,
-            sparse: true,
-            he_bits: 768,
+            esd: EsdMode::He { bits: 768 },
             partition: Partition::Vertical { d_a: 2 },
             ..Default::default()
         };

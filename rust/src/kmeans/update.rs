@@ -26,7 +26,7 @@ use crate::ss::divide::divide_rows;
 use crate::ss::matmul::ss_matmul_begin;
 use crate::ss::mux::mux_bits_begin;
 use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 
 /// A staged S3 numerator: cross-product reveals sit in the round buffer
 /// (riding whatever flight departs next) and the block assembly runs at
@@ -212,7 +212,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::decode_f64;
     use crate::ss::share::{reconstruct, split};
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     #[test]
@@ -260,14 +260,14 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(112, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let num = numerator_vertical_begin(&mut ctx, &xa, &c0, d_a, d);
                 let mu = finish_update_pending(&mut ctx, num, &c0, &m0);
                 reconstruct(c, &mu)
             },
             move |c| {
                 let mut ts = Dealer::new(112, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let num = numerator_vertical_begin(&mut ctx, &xb, &c1, d_a, d);
                 let mu = finish_update_pending(&mut ctx, num, &c1, &m1);
                 reconstruct(c, &mu)
@@ -298,14 +298,14 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(114, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let num = numerator_vertical(&mut ctx, &xa, &c0, d_a, d);
                 let mu = finish_update(&mut ctx, &num, &c0, &m0);
                 reconstruct(c, &mu)
             },
             move |c| {
                 let mut ts = Dealer::new(114, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let num = numerator_vertical(&mut ctx, &xb, &c1, d_a, d);
                 let mu = finish_update(&mut ctx, &num, &c1, &m1);
                 reconstruct(c, &mu)
@@ -341,13 +341,13 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(116, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let num = numerator_horizontal(&mut ctx, &xa, &c0, n_a);
                 reconstruct(c, &num)
             },
             move |c| {
                 let mut ts = Dealer::new(116, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let num = numerator_horizontal(&mut ctx, &xb, &c1, n_a);
                 reconstruct(c, &num)
             },
@@ -376,7 +376,7 @@ mod tests {
         let ((rounds, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(118, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let before = ctx.chan.meter().total().rounds;
                 let num = numerator_vertical_begin(&mut ctx, &xa, &c0, d_a, d);
                 let counts = c0.col_sums();
@@ -392,7 +392,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(118, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let num = numerator_vertical_begin(&mut ctx, &xb, &c1, d_a, d);
                 let counts = c1.col_sums();
                 let ones = Mat::from_vec(1, k, vec![1; k]);
@@ -420,12 +420,12 @@ mod tests {
             let ((got, _), _) = run_two_party(
                 move |c| {
                     let mut ts = Dealer::new(118, 0);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                     converged(&mut ctx, &a0, &b0, 1e-3)
                 },
                 move |c| {
                     let mut ts = Dealer::new(118, 1);
-                    let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                    let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                     converged(&mut ctx, &a1, &b1, 1e-3)
                 },
             );

@@ -18,6 +18,7 @@
 //! | `no-rogue-threads` | all fan-out goes through `runtime::pool` |
 //! | `no-unmetered-io` | every wire byte rides the [`crate::net::Meter`] |
 //! | `no-ambient-entropy` | all randomness flows from the seeded PRG |
+//! | `no-unchecked-open` | reveals outside the sanctioned semi-honest modules ride the MAC ledger |
 //! | `no-panic-in-wire-paths` | wire-facing code returns typed errors |
 //!
 //! The pipeline is three small pieces: a comment/string-aware line

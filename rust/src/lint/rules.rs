@@ -140,6 +140,17 @@ pub fn default_rules() -> Vec<Rule> {
             exempt: vec![],
         },
         Rule {
+            id: "no-unchecked-open",
+            summary: "raw share opens (reconstruct/reconstruct_to) bypass the deferred \
+                      MAC ledger's value authentication; outside the sanctioned \
+                      semi-honest modules a reveal must go through open_auth or \
+                      reconstruct_committed so the malicious tier stays end-to-end \
+                      checked",
+            tokens: vec!["reconstruct(", "reconstruct_to("],
+            scope: Scope::ConfinedTo(paths(&["ss::share", "kmeans::secure", "mkmeans"])),
+            exempt: vec![],
+        },
+        Rule {
             id: "no-panic-in-wire-paths",
             summary: "wire-facing code returns typed Errors (a misbehaving peer must \
                       yield a clean process exit, not a panic); asserts on local \
@@ -278,6 +289,12 @@ mod tests {
         assert!(!in_scope(&w, "net::shape"));
         assert!(in_scope(&w, "net::tcp"), "confinement is per-subtree, not per-layer");
         assert!(in_scope(&w, "kmeans::secure"));
+        let o = rule("no-unchecked-open");
+        assert!(!in_scope(&o, "ss::share"), "the primitive's home module is sanctioned");
+        assert!(!in_scope(&o, "kmeans::secure"));
+        assert!(!in_scope(&o, "mkmeans::protocol"));
+        assert!(in_scope(&o, "ss::mux"), "the rest of ss must open through the ledger");
+        assert!(in_scope(&o, "serve::scorer"));
     }
 
     #[test]
@@ -291,6 +308,13 @@ mod tests {
         assert!(!token_hits("x.expect_err(\"msg\")", ".expect("));
         assert!(token_hits("core::panic!(\"x\")", "panic!"));
         assert!(!token_hits("should_panic", "panic!"));
+        assert!(token_hits("let m = reconstruct(chan, &z);", "reconstruct("));
+        assert!(token_hits("share::reconstruct_to(chan, &z, 1)", "reconstruct_to("));
+        assert!(
+            !token_hits("reconstruct_committed(chan, &z, \"p\")", "reconstruct("),
+            "the authenticated wrapper is not the raw primitive"
+        );
+        assert!(!token_hits("mk_reconstruct(chan)", "reconstruct("));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!                 [--partition vertical|horizontal] [--link lan|wan]
 //!                 [--tile-rows B] [--tile-flights lockstep|streamed]
 //!                 [--threads N] [--lanes auto|1|4|8]
+//!                 [--security semi_honest|malicious]
 //! ppkmeans fraud  [--n 2000] [--k 4] [--iters 8] [--runs 2] [--rate 0.05]
 //! ppkmeans serve  [--n 1000] [--k 4] [--iters 6] [--batch 64]
 //!                 [--batches 12] [--prefab 8] [--low-water 2]
@@ -29,11 +30,11 @@ use ppkmeans::coordinator::Session;
 use ppkmeans::data::blobs::BlobSpec;
 use ppkmeans::data::{fraud_gen, sparse_gen};
 use ppkmeans::fraud::{detect_outliers, jaccard, OutlierConfig};
-use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig, TileFlights};
+use ppkmeans::kmeans::config::{EsdMode, Partition, SecureKmeansConfig, TileFlights};
 use ppkmeans::kmeans::plaintext;
 use ppkmeans::net::cost::CostModel;
 use ppkmeans::net::fault::FaultMode;
-use ppkmeans::net::{Chan, TcpTransport};
+use ppkmeans::net::{Chan, Security, TcpTransport};
 use ppkmeans::offline::bank::BankConfig;
 use ppkmeans::runtime::pool::Parallelism;
 use ppkmeans::runtime::simd::Lanes;
@@ -133,6 +134,14 @@ fn print_help() {
     println!("                          instead of modeling it (--link picks the model");
     println!("                          used for reporting; --shape changes the run)");
     println!();
+    println!("train/fraud/serve/score/gateway also accept:");
+    println!("  --security S            semi_honest (default — the paper's model, byte-");
+    println!("                          identical transcripts to prior releases) |");
+    println!("                          malicious — SPDZ-style MAC ledger over every");
+    println!("                          flight, settled in one batched 3-flight check per");
+    println!("                          phase barrier; tampering aborts both parties with");
+    println!("                          a typed MAC-check error naming the phase");
+    println!();
     println!("party options (one endpoint of a two-process TCP deployment):");
     println!("  --role R                p0 (listens) | p1 (connects) | local (both");
     println!("                          parties in-process — the reference transcript");
@@ -173,6 +182,18 @@ fn shape_from(args: &Args) -> Option<CostModel> {
         "wan" => Some(CostModel::wan()),
         other => {
             eprintln!("unknown --shape {other} (use none|lan|wan)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--security semi_honest|malicious` (default semi_honest — the
+/// paper's model, transcript-identical to before the tier existed).
+fn security_from(args: &Args) -> Security {
+    match Security::parse(args.get_str("security", "semi_honest")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
             std::process::exit(2);
         }
     }
@@ -238,7 +259,8 @@ fn cmd_train(args: &Args) {
         k,
         iters,
         partition,
-        sparse,
+        esd: if sparse { EsdMode::he() } else { EsdMode::Vectorized },
+        security: security_from(args),
         tile_rows,
         tile_flights,
         parallelism: parallelism_from(args),
@@ -296,6 +318,7 @@ fn cmd_fraud(args: &Args) {
             iters,
             seed: 7 + run as u128,
             partition: Partition::Vertical { d_a: f.d_payment },
+            security: security_from(args),
             ..Default::default()
         };
         let out = match ppkmeans::kmeans::secure::run(&f.data, &cfg) {
@@ -411,6 +434,7 @@ fn serve_cfg_from(args: &Args) -> ServeConfig {
         shape: shape_from(args),
         refresh_every: args.get_usize("refresh-every", 0),
         refresh_alpha: args.get_f64("refresh-alpha", 0.25),
+        security: security_from(args),
     }
 }
 
@@ -429,6 +453,7 @@ fn cmd_serve(args: &Args) {
         k,
         iters,
         partition: Partition::Vertical { d_a: f.d_payment },
+        security: security_from(args),
         parallelism: parallelism_from(args),
         lanes: lanes_from(args),
         ..Default::default()
@@ -523,6 +548,7 @@ fn cmd_gateway(args: &Args) {
         shape: shape_from(args),
         refresh_every: args.get_usize("refresh-every", 0),
         refresh_alpha: args.get_f64("refresh-alpha", 0.25),
+        security: security_from(args),
     };
 
     println!("training secure K-means for the gateway: n={n} k={k} t={iters} (vertical 18+24)");
@@ -531,6 +557,7 @@ fn cmd_gateway(args: &Args) {
         k,
         iters,
         partition: Partition::Vertical { d_a: f.d_payment },
+        security: security_from(args),
         parallelism: parallelism_from(args),
         lanes: lanes_from(args),
         ..Default::default()

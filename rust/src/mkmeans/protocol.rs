@@ -17,7 +17,7 @@ use crate::ring::matrix::Mat;
 use crate::runtime::pool::run_pair;
 use crate::ss::boolean::b2a;
 use crate::ss::share::reconstruct;
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
 use crate::util::timer::timed;
@@ -89,7 +89,7 @@ fn party_main(
         // Distance (same vectorized math; triples inline).
         chan.set_phase("online.s1");
         let dmat = {
-            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x31));
+            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x31), SessionOptions::default());
             esd::vertical(&mut ctx, &x_mine, &mu, cfg.d_a)
         };
 
@@ -101,7 +101,7 @@ fn party_main(
         };
         // B2A lift.
         let c_lifted = {
-            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x32));
+            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x32), SessionOptions::default());
             b2a(&mut ctx, &bool_share)
         };
         c_arith = Mat::from_vec(n, cfg.k, c_lifted.data);
@@ -109,7 +109,7 @@ fn party_main(
         // Update.
         chan.set_phase("online.s3");
         let mu_new = {
-            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x33));
+            let mut ctx = Session::new(chan, &mut ts, Prg::new(cfg.seed ^ 0x33), SessionOptions::default());
             let num = update::numerator_vertical(&mut ctx, &x_mine, &c_arith, cfg.d_a, d);
             update::finish_update(&mut ctx, &num, &c_arith, &mu)
         };

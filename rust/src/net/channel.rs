@@ -22,7 +22,188 @@ use super::meter::Meter;
 use super::shape::LinkShaper;
 use crate::ring::matrix::Mat;
 use crate::util::error::{Error, Result};
+use crate::util::hash::Hash256;
+use crate::util::prng::Prg;
 use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Adversary model a protocol run defends against. Protocol-relevant:
+/// both parties must agree (the scenario layer digests it) — a
+/// [`Security::Malicious`] run arms the channel's deferred MAC-check
+/// ledger ([`Chan::enable_mac`]) and pays O(1) extra flights per phase
+/// barrier; [`Security::SemiHonest`] leaves the transcript byte-identical
+/// to the pre-MAC protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Security {
+    /// Honest-but-curious parties (the paper's model): reveals are
+    /// trusted, no authentication traffic at all.
+    #[default]
+    SemiHonest,
+    /// Actively cheating parties: every opened value and every wire
+    /// frame is folded into a random-linear-combination ledger that is
+    /// verified in one batched commit/reveal/verdict check per phase
+    /// barrier, with SPDZ-style MAC limbs on authenticated shares.
+    Malicious,
+}
+
+impl Security {
+    /// Canonical scenario / CLI spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Security::SemiHonest => "semi_honest",
+            Security::Malicious => "malicious",
+        }
+    }
+
+    /// Parse a scenario / CLI spelling.
+    pub fn parse(s: &str) -> Result<Security> {
+        match s {
+            "semi_honest" | "semihonest" | "semi-honest" => Ok(Security::SemiHonest),
+            "malicious" => Ok(Security::Malicious),
+            other => Err(Error::Config(format!(
+                "unknown security tier '{other}' (semi_honest|malicious)"
+            ))),
+        }
+    }
+
+    /// Whether this tier authenticates the transcript.
+    pub fn malicious(&self) -> bool {
+        matches!(self, Security::Malicious)
+    }
+}
+
+/// Deferred MAC-check ledger of a malicious-security channel.
+///
+/// Three independent random-linear-combination accumulators, all over
+/// Z_{2^64} with coefficients forced odd (an odd `r` makes `r·2^b ≠ 0`
+/// for every bit weight `b`, so any single flipped payload bit shifts
+/// the digest — deterministic detection, no soundness gap for the
+/// bit-flip adversary the fault layer models):
+///
+/// * `sigma_out` / `sigma_in` — every wire frame this endpoint sends /
+///   receives, folded word-by-word (plus a length word) with a
+///   per-direction coefficient stream. Each direction of the link is
+///   FIFO, so the sender's j-th outbound word and the receiver's j-th
+///   inbound word line up exactly; at a barrier each party's `sigma_out`
+///   must equal the peer's `sigma_in`. This covers **all** traffic —
+///   staged gate reveals, direct exchanges, asymmetric sends.
+/// * `sigma_mac` — the SPDZ check: for every authenticated opened value
+///   `w` with local MAC limb `m_i` (where `m_0 + m_1 = α·w`), fold
+///   `r·(m_i − α_i·w)`; the two parties' accumulators must sum to zero.
+///
+/// The window resets at every [`Chan::mac_barrier`]; the coefficient
+/// streams keep running, so a replayed window cannot reuse its
+/// coefficients.
+pub(crate) struct MacAcc {
+    /// This party's additive share of the global MAC key α (α odd).
+    alpha: u64,
+    /// Coefficients for frames this endpoint sends.
+    rlc_out: Prg,
+    /// Coefficients for frames this endpoint receives (the peer's
+    /// `rlc_out` stream — seeded by sender identity).
+    rlc_in: Prg,
+    /// Coefficients for authenticated opened values (shared stream; the
+    /// open order is symmetric by the gate-engine invariant).
+    rlc_mac: Prg,
+    /// Party-local commitment nonces (deterministic per seed/party, so
+    /// malicious-mode transcripts stay golden-pinnable).
+    nonce: Prg,
+    out_words: u64,
+    in_words: u64,
+    mac_words: u64,
+    sigma_out: u64,
+    sigma_in: u64,
+    sigma_mac: u64,
+    /// Barriers completed on this channel (diagnostics).
+    barriers: u64,
+}
+
+fn fold_frame(prg: &mut Prg, sigma: &mut u64, count: &mut u64, bytes: &[u8]) {
+    // Length word first: truncation/extension moves the digest even when
+    // the surviving words agree.
+    let r = prg.next_u64() | 1;
+    *sigma = sigma.wrapping_add(r.wrapping_mul(bytes.len() as u64));
+    *count += 1;
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        let r = prg.next_u64() | 1;
+        *sigma = sigma.wrapping_add(r.wrapping_mul(u64::from_le_bytes(w)));
+        *count += 1;
+    }
+}
+
+impl MacAcc {
+    fn new(alpha: u64, seed: u128, party: usize) -> MacAcc {
+        // Direction streams are keyed by *sender* identity, so my
+        // outbound stream is exactly the peer's inbound stream.
+        let dir = |p: usize| Prg::new(seed ^ 0x0AC0_F01D ^ ((p as u128 + 1) << 64));
+        MacAcc {
+            alpha,
+            rlc_out: dir(party),
+            rlc_in: dir(1 - party),
+            rlc_mac: Prg::new(seed ^ (0x0ACC_ED << 96)),
+            nonce: Prg::new(seed ^ (0x0A0_CE << 96) ^ ((party as u128 + 1) << 32)),
+            out_words: 0,
+            in_words: 0,
+            mac_words: 0,
+            sigma_out: 0,
+            sigma_in: 0,
+            sigma_mac: 0,
+            barriers: 0,
+        }
+    }
+
+    fn fold_out(&mut self, bytes: &[u8]) {
+        fold_frame(&mut self.rlc_out, &mut self.sigma_out, &mut self.out_words, bytes);
+    }
+
+    fn fold_in(&mut self, bytes: &[u8]) {
+        fold_frame(&mut self.rlc_in, &mut self.sigma_in, &mut self.in_words, bytes);
+    }
+
+    fn fold_opened(&mut self, opened: &[u64], limbs: &[u64]) {
+        debug_assert_eq!(opened.len(), limbs.len(), "one MAC limb per opened word");
+        for (w, m) in opened.iter().zip(limbs) {
+            let r = self.rlc_mac.next_u64() | 1;
+            let local = m.wrapping_sub(self.alpha.wrapping_mul(*w));
+            self.sigma_mac = self.sigma_mac.wrapping_add(r.wrapping_mul(local));
+            self.mac_words += 1;
+        }
+    }
+
+    fn reset_window(&mut self) {
+        self.out_words = 0;
+        self.in_words = 0;
+        self.mac_words = 0;
+        self.sigma_out = 0;
+        self.sigma_in = 0;
+        self.sigma_mac = 0;
+        self.barriers += 1;
+    }
+}
+
+/// Hash commitment to a barrier reveal: 4 words binding the phase label
+/// and every ledger word (including the party nonce).
+fn barrier_commit(phase: &str, reveal: &[u64]) -> [u64; 4] {
+    let mut h = Hash256::new();
+    h.update(b"ppkm.mac.barrier.v1");
+    h.update(phase.as_bytes());
+    for w in reveal {
+        h.update(w.to_le_bytes());
+    }
+    let d = h.finalize();
+    let mut out = [0u64; 4];
+    for (i, c) in d.chunks_exact(8).enumerate() {
+        let mut w = [0u8; 8];
+        w.copy_from_slice(c);
+        out[i] = u64::from_le_bytes(w);
+    }
+    out
+}
+
+/// Barrier verdict words ("MACBAROK" / "MACBARNO", big-endian).
+const MAC_VERDICT_OK: u64 = u64::from_be_bytes(*b"MACBAROK");
+const MAC_VERDICT_BAD: u64 = u64::from_be_bytes(*b"MACBARNO");
 
 pub(crate) enum Backend {
     Mpsc { tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>> },
@@ -46,6 +227,10 @@ pub struct Chan {
     /// any byte moves or is metered, so flights before the trigger are
     /// bit-identical to an uninjected run.
     fault: Option<FaultState>,
+    /// Deferred MAC-check ledger, armed by [`Chan::enable_mac`] under
+    /// [`Security::Malicious`]. `None` (semi-honest) leaves every path
+    /// byte-identical to the unauthenticated protocol.
+    mac: Option<MacAcc>,
     /// Identity of this endpoint: 0 or 1.
     pub party: usize,
     /// Segments queued for the next flight.
@@ -102,6 +287,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
             meter: Meter::new(),
             shaper: None,
             fault: None,
+            mac: None,
             party: 0,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -112,6 +298,7 @@ pub fn duplex_pair() -> (Chan, Chan) {
             meter: Meter::new(),
             shaper: None,
             fault: None,
+            mac: None,
             party: 1,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -128,6 +315,7 @@ impl Chan {
             meter: Meter::new(),
             shaper: None,
             fault: None,
+            mac: None,
             party,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -169,6 +357,122 @@ impl Chan {
         self.fault.as_ref().map(|f| f.plan())
     }
 
+    // ---- Malicious-security MAC ledger ---------------------------------
+
+    /// Arm the deferred MAC-check ledger ([`Security::Malicious`]).
+    ///
+    /// `alpha_share` is this party's additive share of the global MAC
+    /// key α (dealer-derived, α odd — see
+    /// `offline::dealer::mac_key_share`); `seed` keys the public
+    /// random-linear-combination coefficient streams and must match the
+    /// peer's. Both parties must arm at the *same* protocol point: every
+    /// frame from here on is folded into the ledger and verified at the
+    /// next [`Chan::mac_barrier`]. Arming is idempotent (re-arming
+    /// mid-window would desync the coefficient streams).
+    pub fn enable_mac(&mut self, alpha_share: u64, seed: u128) {
+        if self.mac.is_none() {
+            self.mac = Some(MacAcc::new(alpha_share, seed, self.party));
+        }
+    }
+
+    /// Whether the MAC ledger is armed (i.e. the channel runs at
+    /// [`Security::Malicious`]).
+    pub fn mac_enabled(&self) -> bool {
+        self.mac.is_some()
+    }
+
+    /// The security tier this channel currently enforces.
+    pub fn security(&self) -> Security {
+        if self.mac.is_some() {
+            Security::Malicious
+        } else {
+            Security::SemiHonest
+        }
+    }
+
+    /// Phase barriers completed on this channel (0 when unarmed).
+    pub fn mac_barriers(&self) -> u64 {
+        self.mac.as_ref().map(|m| m.barriers).unwrap_or(0)
+    }
+
+    /// This party's α-share, if the ledger is armed. Crate-internal:
+    /// authenticated gates need it to recombine output MAC limbs
+    /// (`α_i·(E·F)` terms); it must never appear on the wire.
+    pub(crate) fn mac_alpha(&self) -> Option<u64> {
+        self.mac.as_ref().map(|m| m.alpha)
+    }
+
+    /// Fold an authenticated open into the SPDZ accumulator: `opened`
+    /// are reconstructed public words, `limbs` this party's MAC-limb
+    /// shares (`m_0 + m_1 = α·w`). No-op under semi-honest security, so
+    /// gates may call it unconditionally.
+    pub fn fold_opened(&mut self, opened: &[u64], limbs: &[u64]) {
+        if let Some(m) = &mut self.mac {
+            m.fold_opened(opened, limbs);
+        }
+    }
+
+    /// Verify the whole deferred ledger in one batched check — **three**
+    /// fixed-size flights (commit, reveal, verdict; 32 + 56 + 8 payload
+    /// bytes each way) regardless of how many words the window folded.
+    /// No-op (zero flights) under semi-honest security.
+    ///
+    /// Failure is symmetric: the exchanged verdict word makes *both*
+    /// parties abort with a typed [`Error::MacCheck`] naming `phase`
+    /// whenever either side's checks fail. On success the window resets;
+    /// the coefficient streams keep running.
+    pub fn mac_barrier(&mut self, phase: &str) -> Result<()> {
+        // Take the ledger out so the barrier's own flights are not
+        // folded into the window they verify.
+        let Some(mut acc) = self.mac.take() else { return Ok(()) };
+        let res = self.mac_barrier_exchange(&mut acc, phase);
+        acc.reset_window();
+        self.mac = Some(acc);
+        res
+    }
+
+    fn mac_barrier_exchange(&mut self, acc: &mut MacAcc, phase: &str) -> Result<()> {
+        let reveal = [
+            acc.out_words,
+            acc.in_words,
+            acc.mac_words,
+            acc.sigma_out,
+            acc.sigma_in,
+            acc.sigma_mac,
+            acc.nonce.next_u64(),
+        ];
+        let commit = barrier_commit(phase, &reveal);
+        let their_commit = self.try_exchange_u64s(&commit)?;
+        let their_reveal = self.try_exchange_u64s(&reveal)?;
+        let ok = their_commit.len() == 4
+            && their_reveal.len() == 7
+            // The peer's reveal must match its prior commitment …
+            && their_commit[..] == barrier_commit(phase, &their_reveal)[..]
+            // … the per-direction ledgers must agree crosswise …
+            && their_reveal[0] == acc.in_words
+            && their_reveal[1] == acc.out_words
+            && their_reveal[3] == acc.sigma_in
+            && their_reveal[4] == acc.sigma_out
+            // … and the SPDZ accumulators must cancel.
+            && their_reveal[2] == acc.mac_words
+            && their_reveal[5].wrapping_add(acc.sigma_mac) == 0;
+        let verdict = self.try_exchange_u64s(&[if ok { MAC_VERDICT_OK } else { MAC_VERDICT_BAD }])?;
+        let peer_ok = verdict.len() == 1 && verdict[0] == MAC_VERDICT_OK;
+        if ok && peer_ok {
+            Ok(())
+        } else if !ok {
+            Err(Error::MacCheck(format!(
+                "phase barrier '{phase}': batched ledger check failed \
+                 ({} out / {} in words folded, {} MAC'd opens)",
+                acc.out_words, acc.in_words, acc.mac_words
+            )))
+        } else {
+            Err(Error::MacCheck(format!(
+                "phase barrier '{phase}': peer reported a failed ledger on its side"
+            )))
+        }
+    }
+
     /// Overwrite the meter with a checkpointed snapshot — the resume
     /// path's last act before re-entering the protocol: replayed setup
     /// traffic (handshake, backend negotiation) is erased and the meter
@@ -194,13 +498,13 @@ impl Chan {
     /// segment accounting.
     pub(crate) fn into_raw_parts(
         self,
-    ) -> (Backend, Meter, Option<LinkShaper>, Option<FaultState>, usize) {
+    ) -> (Backend, Meter, Option<LinkShaper>, Option<FaultState>, Option<MacAcc>, usize) {
         assert!(
             self.staged.is_empty(),
             "round buffer still holds {} unflushed segments",
             self.staged.len()
         );
-        (self.backend, self.meter, self.shaper, self.fault, self.party)
+        (self.backend, self.meter, self.shaper, self.fault, self.mac, self.party)
     }
 
     /// Reassemble an endpoint from raw parts (the mux's session
@@ -210,6 +514,7 @@ impl Chan {
         meter: Meter,
         shaper: Option<LinkShaper>,
         fault: Option<FaultState>,
+        mac: Option<MacAcc>,
         party: usize,
     ) -> Chan {
         Chan {
@@ -217,6 +522,7 @@ impl Chan {
             meter,
             shaper,
             fault,
+            mac,
             party,
             staged: Vec::new(),
             resolved: Vec::new(),
@@ -309,12 +615,30 @@ impl Chan {
     /// cap. The deployment handshake and barriers use this path so a
     /// misbehaving peer yields a clean process exit.
     pub fn try_send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        // The MAC ledger folds the frame the honest sender *intended*:
+        // any downstream tampering (the fault layer's wire adversary)
+        // diverges the peer's inbound digest and fails the next barrier.
+        if let Some(m) = &mut self.mac {
+            m.fold_out(bytes);
+        }
         // Armed faults fire before any byte moves or is metered: a
         // killed flight leaves the meter exactly as an OS kill would.
         match self.fault.as_mut().map(FaultState::on_send).transpose()? {
             None | Some(SendAction::Pass) => {}
             Some(SendAction::Abort) => std::process::abort(),
             Some(SendAction::Swallow) => return Ok(()),
+            Some(SendAction::Tamper) => {
+                // Active adversary: flip one bit mid-frame and ship it
+                // normally — metered like a clean send, channel alive.
+                let mut owned = bytes.to_vec();
+                if let Some(b) = {
+                    let mid = owned.len() / 2;
+                    owned.get_mut(mid)
+                } {
+                    *b ^= 1;
+                }
+                return self.ship_bytes(&owned);
+            }
             Some(SendAction::Truncate) => {
                 // Ship an odd prefix (never a multiple of 8) unmetered,
                 // then die; the peer's u64 decode rejects the frame.
@@ -332,6 +656,11 @@ impl Chan {
                     .unwrap_or_else(|| Error::ChannelClosed("injected fault".into())));
             }
         }
+        self.ship_bytes(bytes)
+    }
+
+    /// Put one frame on the wire and meter it (post-fault, post-ledger).
+    fn ship_bytes(&mut self, bytes: &[u8]) -> Result<()> {
         // A mux session's wire cost includes its 8-byte tag, so the
         // per-session meters sum exactly to the link totals.
         let wire_len = bytes.len() as u64
@@ -366,6 +695,9 @@ impl Chan {
             Backend::Mux(s) => s.recv()?,
         };
         self.meter.on_recv();
+        if let Some(m) = &mut self.mac {
+            m.fold_in(&bytes);
+        }
         if let Some(s) = &mut self.shaper {
             s.pace_recv(bytes.len() as u64);
         }
@@ -494,6 +826,7 @@ mod tests {
     #![allow(clippy::unwrap_used, clippy::expect_used)]
 
     use super::*;
+    use crate::net::fault::FaultMode;
     use std::thread;
 
     #[test]
@@ -618,5 +951,116 @@ mod tests {
         assert_eq!(m0.total(), s0.total());
         assert_eq!(m1.total(), s1.total());
         assert_eq!(s0.total().rounds, 3);
+    }
+
+    // ---- MAC ledger -----------------------------------------------------
+
+    /// Two-party harness: arm both ends with α-shares summing to an odd
+    /// key and a shared coefficient seed.
+    fn mac_pair(seed: u128) -> (Chan, Chan) {
+        let (mut c0, mut c1) = duplex_pair();
+        c0.enable_mac(0x1234_5678_9abc_def1, seed);
+        c1.enable_mac(0x0f0f_0f0f_0f0f_0f0e, seed);
+        (c0, c1)
+    }
+
+    #[test]
+    fn mac_barrier_passes_on_clean_traffic() {
+        let (mut c0, mut c1) = mac_pair(7);
+        let h = thread::spawn(move || {
+            c0.exchange_u64s(&[1, 2, 3]);
+            c0.send_u64s(&[9]); // asymmetric flight: folded too
+            let r = c0.mac_barrier("test.phase");
+            (r, c0.mac_barriers())
+        });
+        c1.exchange_u64s(&[4, 5, 6]);
+        c1.recv_u64s();
+        c1.mac_barrier("test.phase").unwrap();
+        assert_eq!(c1.mac_barriers(), 1);
+        let (r0, b0) = h.join().unwrap();
+        r0.unwrap();
+        assert_eq!(b0, 1);
+        assert!(c1.mac_enabled());
+        assert_eq!(c1.security(), Security::Malicious);
+    }
+
+    #[test]
+    fn mac_barrier_spans_windows_independently() {
+        // A second window after a passed barrier verifies on its own.
+        let (mut c0, mut c1) = mac_pair(11);
+        let h = thread::spawn(move || {
+            for w in 0..3u64 {
+                c0.exchange_u64s(&[w, w + 1]);
+                c0.mac_barrier("w").unwrap();
+            }
+            c0.mac_barriers()
+        });
+        for w in 0..3u64 {
+            c1.exchange_u64s(&[10 + w]);
+            c1.mac_barrier("w").unwrap();
+        }
+        assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn tampered_flight_fails_barrier_on_both_parties() {
+        let (mut c0, mut c1) = mac_pair(13);
+        c0.set_fault(FaultPlan { at_flight: 1, mode: FaultMode::Tamper });
+        let h = thread::spawn(move || {
+            c0.exchange_u64s(&[1, 2, 3]); // party 0 ships a flipped bit
+            c0.mac_barrier("train.step")
+        });
+        c1.exchange_u64s(&[4, 5, 6]);
+        let e1 = c1.mac_barrier("train.step").unwrap_err();
+        let e0 = h.join().unwrap().unwrap_err();
+        // The receiver's in-ledger disagrees with the sender's out-ledger
+        // → local failure on party 1, peer-verdict failure on party 0;
+        // both are typed and both name the phase.
+        assert!(matches!(e1, Error::MacCheck(_)), "{e1}");
+        assert!(matches!(e0, Error::MacCheck(_)), "{e0}");
+        assert!(e1.to_string().contains("train.step"), "{e1}");
+        assert!(e0.to_string().contains("train.step"), "{e0}");
+    }
+
+    #[test]
+    fn bad_mac_limb_fails_barrier() {
+        let (mut c0, mut c1) = mac_pair(17);
+        let h = thread::spawn(move || {
+            // α0·w as limb; peer uses α1·w, so sums hold for w = 42 …
+            c0.fold_opened(&[42], &[0x1234_5678_9abc_def1u64.wrapping_mul(42)]);
+            // … but the second open carries a limb off by one.
+            c0.fold_opened(&[7], &[0x1234_5678_9abc_def1u64.wrapping_mul(7).wrapping_add(1)]);
+            c0.mac_barrier("open.check")
+        });
+        c1.fold_opened(&[42], &[0x0f0f_0f0f_0f0f_0f0eu64.wrapping_mul(42)]);
+        c1.fold_opened(&[7], &[0x0f0f_0f0f_0f0f_0f0eu64.wrapping_mul(7)]);
+        let e1 = c1.mac_barrier("open.check").unwrap_err();
+        let e0 = h.join().unwrap().unwrap_err();
+        assert!(matches!(e1, Error::MacCheck(_)), "{e1}");
+        assert!(matches!(e0, Error::MacCheck(_)), "{e0}");
+    }
+
+    #[test]
+    fn semi_honest_barrier_is_a_free_no_op() {
+        let (mut c0, _c1) = duplex_pair();
+        assert!(!c0.mac_enabled());
+        assert_eq!(c0.security(), Security::SemiHonest);
+        c0.mac_barrier("anything").unwrap();
+        c0.fold_opened(&[1, 2], &[3, 4]);
+        assert_eq!(c0.meter().total().rounds, 0);
+        assert_eq!(c0.meter().total().bytes_sent, 0);
+        assert_eq!(c0.mac_barriers(), 0);
+    }
+
+    #[test]
+    fn security_parses_and_round_trips() {
+        for s in [Security::SemiHonest, Security::Malicious] {
+            assert_eq!(Security::parse(s.as_str()).unwrap(), s);
+        }
+        assert_eq!(Security::parse("semihonest").unwrap(), Security::SemiHonest);
+        assert_eq!(Security::parse("semi-honest").unwrap(), Security::SemiHonest);
+        assert!(Security::parse("covert").is_err());
+        assert!(Security::Malicious.malicious());
+        assert!(!Security::SemiHonest.malicious());
     }
 }

@@ -22,6 +22,12 @@
 //!   `Error::Protocol`), then the local side dies.
 //! * [`FaultMode::Abort`] — `std::process::abort()`: a real SIGABRT for
 //!   the two-process kill-and-resume matrix in CI.
+//! * [`FaultMode::Tamper`] — an *active-adversary* model, not a crash:
+//!   the flight ships with exactly one payload bit flipped and the
+//!   channel stays alive on both ends. Under `Security::SemiHonest` the
+//!   corruption silently skews shares; under `Security::Malicious` the
+//!   next MAC phase barrier catches it on **both** parties with a typed
+//!   [`Error::MacCheck`] (regression-tested in `rust/tests/tamper.rs`).
 //!
 //! On a multiplexed gateway link, link-level flight interleaving is
 //! scheduling-dependent, so the mux trigger counts *frames* instead of
@@ -47,6 +53,9 @@ pub enum FaultMode {
     Trunc,
     /// `std::process::abort()` — a real OS-level crash.
     Abort,
+    /// Flip one bit of the triggering flight's payload and ship it;
+    /// the sender keeps running (active tampering, not a crash).
+    Tamper,
 }
 
 impl FaultMode {
@@ -56,6 +65,7 @@ impl FaultMode {
             FaultMode::Drop => "drop",
             FaultMode::Trunc => "trunc",
             FaultMode::Abort => "abort",
+            FaultMode::Tamper => "tamper",
         }
     }
 
@@ -66,8 +76,9 @@ impl FaultMode {
             "drop" => Ok(FaultMode::Drop),
             "trunc" => Ok(FaultMode::Trunc),
             "abort" => Ok(FaultMode::Abort),
+            "tamper" => Ok(FaultMode::Tamper),
             other => Err(Error::Config(format!(
-                "unknown fault mode '{other}' (kill|drop|trunc|abort)"
+                "unknown fault mode '{other}' (kill|drop|trunc|abort|tamper)"
             ))),
         }
     }
@@ -87,6 +98,8 @@ pub(crate) enum SendAction {
     Swallow,
     Truncate,
     Abort,
+    /// Ship the frame with one payload bit flipped; the channel lives on.
+    Tamper,
 }
 
 /// Live trigger state attached to a [`Chan`] (or a mux link).
@@ -134,6 +147,9 @@ impl FaultState {
                 Ok(SendAction::Truncate)
             }
             FaultMode::Abort => Ok(SendAction::Abort),
+            // Active tampering: fire once, stay alive — detection (or
+            // silent corruption) is the *receiving* stack's business.
+            FaultMode::Tamper => Ok(SendAction::Tamper),
         }
     }
 
@@ -297,9 +313,49 @@ mod tests {
 
     #[test]
     fn mode_parse_roundtrips_and_rejects_garbage() {
-        for m in [FaultMode::Kill, FaultMode::Drop, FaultMode::Trunc, FaultMode::Abort] {
+        for m in [
+            FaultMode::Kill,
+            FaultMode::Drop,
+            FaultMode::Trunc,
+            FaultMode::Abort,
+            FaultMode::Tamper,
+        ] {
             assert_eq!(FaultMode::parse(m.as_str()).unwrap(), m);
         }
         assert!(FaultMode::parse("segv").is_err());
+    }
+
+    #[test]
+    fn tamper_flips_one_bit_and_keeps_both_ends_alive() {
+        let (c0, mut c1) = duplex_pair();
+        let mut f0 = FaultyChan::new(c0, FaultPlan { at_flight: 2, mode: FaultMode::Tamper });
+        let h = thread::spawn(move || {
+            // Flight 1 passes clean.
+            f0.try_send_bytes(&[0xAA; 8]).unwrap();
+            f0.try_recv_bytes().unwrap();
+            // Flight 2 is tampered but reports success, and the channel
+            // stays usable afterwards.
+            f0.try_send_bytes(&[0xAA; 8]).unwrap();
+            f0.try_recv_bytes().unwrap();
+            f0.try_send_bytes(&[0xBB; 8]).unwrap();
+            f0.into_inner().into_meter()
+        });
+        assert_eq!(c1.try_recv_bytes().unwrap(), vec![0xAA; 8]);
+        c1.try_send_bytes(&[1; 8]).unwrap();
+        let tampered = c1.try_recv_bytes().unwrap();
+        assert_ne!(tampered, vec![0xAA; 8], "flight 2 must arrive corrupted");
+        let flipped: u32 = tampered
+            .iter()
+            .zip(&[0xAAu8; 8])
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit differs");
+        c1.try_send_bytes(&[2; 8]).unwrap();
+        assert_eq!(c1.try_recv_bytes().unwrap(), vec![0xBB; 8], "flight 3 clean again");
+        let m = h.join().unwrap();
+        // All three flights were metered normally — tampering is invisible
+        // to the sender's accounting.
+        assert_eq!(m.total().msgs_sent, 3);
+        assert_eq!(m.total().bytes_sent, 24);
     }
 }

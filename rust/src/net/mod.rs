@@ -32,7 +32,7 @@ pub mod mux;
 pub mod shape;
 pub mod tcp;
 
-pub use channel::{duplex_pair, Chan};
+pub use channel::{duplex_pair, Chan, Security};
 pub use cost::CostModel;
 pub use fault::{FaultMode, FaultPlan, FaultyChan};
 pub use meter::{Meter, PhaseStats};

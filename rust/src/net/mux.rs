@@ -38,7 +38,7 @@
 // type-system level, same as the rest of `net`.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use super::channel::{Backend, Chan};
+use super::channel::{Backend, Chan, MacAcc};
 use super::fault::{FaultState, SendAction};
 use super::meter::{Meter, PhaseStats};
 use super::shape::LinkShaper;
@@ -137,6 +137,12 @@ struct MuxShared {
 pub struct MuxLink {
     shared: Arc<MuxShared>,
     party: usize,
+    /// The flat channel's MAC ledger, parked for the mux's lifetime and
+    /// restored by [`MuxLink::finish`]. Per-session malicious security
+    /// uses per-session ledgers (each session `Chan` arms its own via
+    /// `enable_mac` with a tag-keyed seed); the link-level ledger only
+    /// covers flat pre-/post-mux traffic.
+    mac: Option<MacAcc>,
 }
 
 /// One session's endpoint into the shared link (the `Backend::Mux`
@@ -154,7 +160,7 @@ impl MuxLink {
     /// a whole (one physical pipe). Muxing an already-muxed session is a
     /// configuration error.
     pub fn new(chan: Chan) -> Result<MuxLink> {
-        let (backend, meter, shaper, fault, party) = chan.into_raw_parts();
+        let (backend, meter, shaper, fault, mac, party) = chan.into_raw_parts();
         let (tx, rx) = match backend {
             Backend::Mpsc { tx, rx } => (SendHalf::Mpsc(tx), RecvHalf::Mpsc(rx)),
             Backend::Tcp(t) => {
@@ -178,6 +184,7 @@ impl MuxLink {
                 link: Mutex::new(meter),
             }),
             party,
+            mac,
         })
     }
 
@@ -194,6 +201,7 @@ impl MuxLink {
         Ok(Chan::from_raw_parts(
             Backend::Mux(MuxSession { shared: Arc::clone(&self.shared), id }),
             Meter::new(),
+            None,
             None,
             None,
             self.party,
@@ -238,7 +246,7 @@ impl MuxLink {
         };
         let meter = shared.link.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
         let fault = shared.fault.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
-        Ok(Chan::from_raw_parts(backend, meter, rx.shaper, fault, self.party))
+        Ok(Chan::from_raw_parts(backend, meter, rx.shaper, fault, self.mac, self.party))
     }
 }
 
@@ -261,6 +269,18 @@ impl MuxSession {
                     SendAction::Pass => {}
                     SendAction::Abort => std::process::abort(),
                     SendAction::Swallow => return Ok(()),
+                    SendAction::Tamper => {
+                        // Flip one payload bit (past the 8-byte session
+                        // tag, so routing still works) and fall through
+                        // to the normal metered send below.
+                        let tag = MUX_TAG_BYTES as usize;
+                        if frame.len() > tag {
+                            let mid = tag + (frame.len() - tag) / 2;
+                            if let Some(b) = frame.get_mut(mid) {
+                                *b ^= 1;
+                            }
+                        }
+                    }
                     SendAction::Truncate => {
                         let keep = ((frame.len() / 2) | 1).min(frame.len());
                         let mut tx = lock(&self.shared.tx);

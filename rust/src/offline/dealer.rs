@@ -28,8 +28,10 @@
 use crate::ring::matrix::Mat;
 use crate::runtime::pool;
 use crate::ss::triples::{
-    bit_words, last_word_mask, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
+    bit_words, last_word_mask, AuthMatTriple, BitTriple, DaBits, Ledger, MatTriple, TripleSource,
+    VecTriple,
 };
+use crate::util::error::Result;
 use crate::util::prng::Prg;
 
 /// Domain-separation labels for the per-draw child forks (one per
@@ -38,12 +40,46 @@ const LBL_MAT: u64 = 0x4D41_5452;
 const LBL_VEC: u64 = 0x5645_4354;
 const LBL_BIT: u64 = 0x4249_5454;
 const LBL_DAB: u64 = 0x4441_4249;
+/// MAC-authenticated matrix triples (malicious tier).
+const LBL_AMT: u64 = 0x414D_5452;
+
+/// Salt for the MAC-key derivation stream (independent of the dealer's
+/// triple stream, so arming malicious security never shifts the
+/// semi-honest material and existing transcripts stay byte-identical).
+const MAC_KEY_SALT: u128 = 0xA1FA_u128 << 96;
+
+/// The full MAC key α the simulated dealer holds (forced odd: an odd α
+/// makes `α·Δ ≠ 0` for any non-zero additive error Δ with a lone bit,
+/// matching the channel ledger's odd-coefficient rule).
+fn mac_key(seed: u128) -> u64 {
+    Prg::new(seed ^ MAC_KEY_SALT).next_u64() | 1
+}
+
+/// This party's additive share of the global MAC key α
+/// (`mac_key_share(s, 0) + mac_key_share(s, 1) = α`, α odd). Pass the
+/// same `seed` as [`Dealer::new`]; the share is what a run hands to
+/// [`crate::net::Chan::enable_mac`]. The derivation stream is separate
+/// from the triple stream, so semi-honest material is untouched.
+pub fn mac_key_share(seed: u128, party: usize) -> u64 {
+    assert!(party < 2);
+    let mut prg = Prg::new(seed ^ MAC_KEY_SALT);
+    let alpha = prg.next_u64() | 1;
+    let r = prg.next_u64();
+    if party == 0 {
+        r
+    } else {
+        alpha.wrapping_sub(r)
+    }
+}
 
 /// One party's endpoint of the simulated dealer.
 pub struct Dealer {
     prg: Prg,
     party: usize,
     ledger: Ledger,
+    /// The raw construction seed, kept for MAC-key derivation
+    /// ([`mac_key`]) on authenticated draws.
+    seed: u128,
 }
 
 /// Expand one matrix triple from a child stream. `inner_threads`
@@ -69,6 +105,46 @@ fn mat_triple_from(
     } else {
         let z = pool::matmul_with(inner_threads, &u, &v);
         MatTriple { u: u.sub(&u0), v: v.sub(&v0), z: z.sub(&z0) }
+    }
+}
+
+/// Expand one MAC-authenticated matrix triple: the base triple plus
+/// additive shares of `α·U`, `α·V`, `α·Z`. The simulated dealer knows α
+/// (both parties derive it from the shared seed, exactly as they expand
+/// the full masks) — that is the trusted-dealer MAC model; online, each
+/// party only ever handles its own share and its own α-share.
+fn auth_mat_triple_from(
+    prg: &mut Prg,
+    party: usize,
+    alpha: u64,
+    m: usize,
+    k: usize,
+    n: usize,
+    inner_threads: usize,
+) -> AuthMatTriple {
+    let u = Mat::random(m, k, prg);
+    let v = Mat::random(k, n, prg);
+    let u0 = Mat::random(m, k, prg);
+    let v0 = Mat::random(k, n, prg);
+    let z0 = Mat::random(m, n, prg);
+    let mu0 = Mat::random(m, k, prg);
+    let mv0 = Mat::random(k, n, prg);
+    let mz0 = Mat::random(m, n, prg);
+    if party == 0 {
+        AuthMatTriple {
+            base: MatTriple { u: u0, v: v0, z: z0 },
+            mac_u: mu0,
+            mac_v: mv0,
+            mac_z: mz0,
+        }
+    } else {
+        let z = pool::matmul_with(inner_threads, &u, &v);
+        AuthMatTriple {
+            mac_u: u.scale(alpha).sub(&mu0),
+            mac_v: v.scale(alpha).sub(&mv0),
+            mac_z: z.scale(alpha).sub(&mz0),
+            base: MatTriple { u: u.sub(&u0), v: v.sub(&v0), z: z.sub(&z0) },
+        }
     }
 }
 
@@ -134,7 +210,7 @@ impl Dealer {
     /// `seed` must match across the two parties; `party` ∈ {0, 1}.
     pub fn new(seed: u128, party: usize) -> Self {
         assert!(party < 2);
-        Dealer { prg: Prg::new(seed ^ 0xD0_1E_55), party, ledger: Ledger::default() }
+        Dealer { prg: Prg::new(seed ^ 0xD0_1E_55), party, ledger: Ledger::default(), seed }
     }
 
     /// Fork the per-item child streams for a batch — strictly
@@ -170,6 +246,15 @@ impl TripleSource for Dealer {
         let mut child = self.prg.fork(LBL_MAT);
         // Inline draws (no prefill) parallelize the U·V product itself.
         mat_triple_from(&mut child, self.party, m, k, n, pool::global_threads())
+    }
+
+    fn auth_mat_triple(&mut self, m: usize, k: usize, n: usize) -> Result<AuthMatTriple> {
+        // MAC limbs double the per-component material; priced as such.
+        self.ledger.mat_triples += 1;
+        self.ledger.mat_triple_elems += (2 * (m * k + k * n + m * n)) as u64;
+        let alpha = mac_key(self.seed);
+        let mut child = self.prg.fork(LBL_AMT);
+        Ok(auth_mat_triple_from(&mut child, self.party, alpha, m, k, n, pool::global_threads()))
     }
 
     fn vec_triple(&mut self, n: usize) -> VecTriple {
@@ -267,6 +352,55 @@ mod tests {
             let z = t0.z.add(&t1.z);
             assert_eq!(u.matmul(&v), z, "shape {m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn auth_mat_triples_reconstruct_with_valid_macs() {
+        let mut d0 = Dealer::new(99, 0);
+        let mut d1 = Dealer::new(99, 1);
+        let alpha = mac_key_share(99, 0).wrapping_add(mac_key_share(99, 1));
+        assert_eq!(alpha % 2, 1, "MAC key must be odd");
+        for (m, k, n) in [(1, 1, 1), (2, 3, 4)] {
+            let t0 = d0.auth_mat_triple(m, k, n).unwrap();
+            let t1 = d1.auth_mat_triple(m, k, n).unwrap();
+            let u = t0.base.u.add(&t1.base.u);
+            let v = t0.base.v.add(&t1.base.v);
+            let z = t0.base.z.add(&t1.base.z);
+            assert_eq!(u.matmul(&v), z, "base triple {m}x{k}x{n}");
+            assert_eq!(t0.mac_u.add(&t1.mac_u), u.scale(alpha), "mac_u {m}x{k}x{n}");
+            assert_eq!(t0.mac_v.add(&t1.mac_v), v.scale(alpha), "mac_v {m}x{k}x{n}");
+            assert_eq!(t0.mac_z.add(&t1.mac_z), z.scale(alpha), "mac_z {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn auth_draws_keep_parties_consistent() {
+        // Authenticated draws advance the shared fork sequence like any
+        // other draw, so as long as both parties interleave them
+        // identically (true by the symmetric-protocol construction),
+        // subsequent plain draws still reconstruct. A dealer that never
+        // draws auth material is bit-identical to the pre-MAC dealer,
+        // which is what the pinned transcript goldens rely on.
+        let mut d0 = Dealer::new(123, 0);
+        let mut d1 = Dealer::new(123, 1);
+        let _ = d0.auth_mat_triple(2, 2, 2).unwrap();
+        let _ = d1.auth_mat_triple(2, 2, 2).unwrap();
+        let t0 = d0.mat_triple(2, 3, 4);
+        let t1 = d1.mat_triple(2, 3, 4);
+        let u = t0.u.add(&t1.u);
+        let v = t0.v.add(&t1.v);
+        assert_eq!(u.matmul(&v), t0.z.add(&t1.z));
+    }
+
+    #[test]
+    fn mac_key_shares_are_party_dependent_pads() {
+        // Same seed → same α; different seeds → (overwhelmingly)
+        // different keys; the reconstructed key is always odd.
+        let a5 = mac_key_share(5, 0).wrapping_add(mac_key_share(5, 1));
+        let a6 = mac_key_share(6, 0).wrapping_add(mac_key_share(6, 1));
+        assert_ne!(a5, a6);
+        assert_eq!(a5 & 1, 1);
+        assert_eq!(a6 & 1, 1);
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! through to the inner source and are counted (a correctly-sized demand
 //! keeps `misses == 0`; asserted in tests and benches).
 
-use crate::ss::triples::{BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{
+    AuthMatTriple, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
+};
+use crate::util::error::Result;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Offline material demand for one protocol run.
@@ -182,6 +185,11 @@ pub struct TripleStore<S: TripleSource> {
     // must be a function of the keys alone, never of a per-process
     // SipHash seed (ppkm-lint rule no-unordered-iteration).
     mats: BTreeMap<(usize, usize, usize), VecDeque<MatTriple>>,
+    /// MAC-authenticated matrix triples (malicious tier), stocked by
+    /// [`TripleStore::prefill_auth`]. Kept outside [`Demand`] — demands
+    /// are checkpointed in resume artifacts and malicious runs reject
+    /// resume, so authenticated demand never needs to round-trip.
+    auth_mats: BTreeMap<(usize, usize, usize), VecDeque<AuthMatTriple>>,
     vecs: BTreeMap<usize, VecDeque<VecTriple>>,
     bits: BTreeMap<usize, VecDeque<BitTriple>>,
     dabits: BTreeMap<usize, VecDeque<DaBits>>,
@@ -199,12 +207,24 @@ impl<S: TripleSource> TripleStore<S> {
         TripleStore {
             inner,
             mats: BTreeMap::new(),
+            auth_mats: BTreeMap::new(),
             vecs: BTreeMap::new(),
             bits: BTreeMap::new(),
             dabits: BTreeMap::new(),
             misses: 0,
             demand: Demand::default(),
         }
+    }
+
+    /// Stock `count` MAC-authenticated matrix triples of one shape
+    /// (malicious tier). Fails typed if the inner source cannot produce
+    /// authenticated material.
+    pub fn prefill_auth(&mut self, m: usize, k: usize, n: usize, count: usize) -> Result<()> {
+        for _ in 0..count {
+            let t = self.inner.auth_mat_triple(m, k, n)?;
+            self.auth_mats.entry((m, k, n)).or_default().push_back(t);
+        }
+        Ok(())
     }
 
     /// Current matrix-triple stock as `((m, k, n), count)` pairs, in
@@ -279,6 +299,17 @@ impl<S: TripleSource> TripleSource for TripleStore<S> {
         self.inner.mat_triple(m, k, n)
     }
 
+    fn auth_mat_triple(&mut self, m: usize, k: usize, n: usize) -> Result<AuthMatTriple> {
+        if let Some(t) = self.auth_mats.get_mut(&(m, k, n)).and_then(|q| q.pop_front()) {
+            return Ok(t);
+        }
+        // Fall through without bumping `misses`: authenticated material
+        // is generated inline by design in integrated (no-prefill) runs,
+        // and the semi-honest miss accounting that benches assert on
+        // must not observe the malicious tier at all.
+        self.inner.auth_mat_triple(m, k, n)
+    }
+
     fn vec_triple(&mut self, n: usize) -> VecTriple {
         self.demand.vec_lanes(n);
         // Chunks are keyed by lane count: draws of the same size stay
@@ -335,6 +366,25 @@ mod tests {
         // One more of each → misses.
         let _ = store.mat_triple(2, 3, 4);
         assert_eq!(store.misses, 1);
+    }
+
+    #[test]
+    fn auth_stock_serves_then_falls_through_without_misses() {
+        let mut s0 = TripleStore::new(Dealer::new(21, 0));
+        let mut s1 = TripleStore::new(Dealer::new(21, 1));
+        s0.prefill_auth(2, 3, 4, 1).unwrap();
+        s1.prefill_auth(2, 3, 4, 1).unwrap();
+        // First draw hits the stock, second falls through to the dealer;
+        // both must reconstruct against the peer and neither is a miss.
+        for _ in 0..2 {
+            let t0 = s0.auth_mat_triple(2, 3, 4).unwrap();
+            let t1 = s1.auth_mat_triple(2, 3, 4).unwrap();
+            let u = t0.base.u.add(&t1.base.u);
+            let v = t0.base.v.add(&t1.base.v);
+            assert_eq!(u.matmul(&v), t0.base.z.add(&t1.base.z));
+        }
+        assert_eq!(s0.misses, 0);
+        assert_eq!(s1.misses, 0);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! time in a single pass — the accounting behind the online/offline
 //! split in every bench.
 
-use crate::ss::triples::{BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple};
+use crate::ss::triples::{
+    AuthMatTriple, BitTriple, DaBits, Ledger, MatTriple, TripleSource, VecTriple,
+};
+use crate::util::error::Result;
 use std::time::Instant;
 
 /// Accumulates wall-clock seconds spent inside the inner source.
@@ -38,6 +41,13 @@ impl<S: TripleSource> TripleSource for TimedSource<S> {
     fn mat_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
         let t0 = Instant::now();
         let t = self.inner.mat_triple(m, k, n);
+        self.secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    fn auth_mat_triple(&mut self, m: usize, k: usize, n: usize) -> Result<AuthMatTriple> {
+        let t0 = Instant::now();
+        let t = self.inner.auth_mat_triple(m, k, n);
         self.secs += t0.elapsed().as_secs_f64();
         t
     }

@@ -26,9 +26,9 @@ use crate::kmeans::config::{Partition, SecureKmeansConfig};
 use crate::kmeans::secure::{self, PartyResult, SecureKmeansOutput};
 use crate::net::cost::CostModel;
 use crate::net::meter::{Meter, PhaseStats};
-use crate::net::{run_two_party, Chan};
+use crate::net::{run_two_party, Chan, Security};
 use crate::offline::bank::{BankConfig, MaterialBank};
-use crate::offline::dealer::Dealer;
+use crate::offline::dealer::{mac_key_share, Dealer};
 use crate::offline::store::{Demand, TripleStore};
 use crate::resume::{BankCounters, MeterSnapshot, Payload, ResumeCtx, ServeState, TrainState};
 use crate::runtime::pool::Parallelism;
@@ -78,6 +78,14 @@ pub struct ServeConfig {
     /// Blend weight α of a refresh step: `μ ← μ + α·(recent − μ)`.
     /// Protocol-relevant; must match the peer's.
     pub refresh_alpha: f64,
+    /// Adversary model of the serve loop. [`Security::Malicious`] arms
+    /// the channel's deferred MAC ledger before the warmup flight and
+    /// settles it in **one** batched barrier per scored batch
+    /// (`serve.batch.{i}` — 3 fixed-size flights, metered under
+    /// `mac.barrier`); [`Security::SemiHonest`] (default) is
+    /// transcript-byte-identical to every release before the tier
+    /// existed. Protocol-relevant; the scenario layer digests it.
+    pub security: Security,
 }
 
 impl Default for ServeConfig {
@@ -92,9 +100,15 @@ impl Default for ServeConfig {
             shape: None,
             refresh_every: 0,
             refresh_alpha: 0.25,
+            security: Security::SemiHonest,
         }
     }
 }
+
+/// Ledger-seed salt of the malicious serve loop: distinct from the
+/// training salt so serve and train coefficient streams never alias
+/// even when the two phases share a protocol seed.
+const SERVE_MAC_LEDGER_SALT: u128 = 0x5EAC_1ED6_u128 << 64;
 
 /// Per-batch serving metrics (party 0's view).
 #[derive(Debug, Clone)]
@@ -261,6 +275,13 @@ fn after_batch(
     warmup: PhaseStats,
     rctx: &mut ResumeCtx,
 ) -> Result<()> {
+    // Malicious tier: settle everything the batch put on the wire —
+    // scores, reveals, any warmup still in the window — in one batched
+    // check. Guarded so a semi-honest meter never grows the phase.
+    if cfg.security.malicious() {
+        chan.set_phase("mac.barrier");
+        chan.mac_barrier(&format!("serve.batch.{i}"))?;
+    }
     let every = cfg.refresh_every;
     if every > 0 && (i + 1) % every == 0 && i + 1 < blocks.len() {
         let w0 = i + 1 - every;
@@ -324,6 +345,19 @@ pub fn serve_party_ckpt(
     resume: Option<ServeState>,
 ) -> Result<ServePartyOutput> {
     let party = chan.party;
+    if cfg.security.malicious() {
+        if rctx.enabled() || resume.is_some() {
+            return Err(Error::Config(
+                "resume: a malicious-tier serve loop cannot checkpoint or restore — the \
+                 deferred MAC ledger does not survive a restart; rerun from scratch or \
+                 drop to semi_honest"
+                    .into(),
+            ));
+        }
+        // Armed before the warmup flight so the whole serve transcript
+        // rides the ledger (idempotent if training already armed it).
+        chan.enable_mac(mac_key_share(cfg.seed, party), cfg.seed ^ SERVE_MAC_LEDGER_SALT);
+    }
     let (bank_cfg, seed, threads) = (cfg.bank, cfg.seed, cfg.parallelism.threads);
     // Worker count for the per-batch plaintext-side products (see
     // runtime::pool) — scores and meters are thread-count independent.

@@ -35,7 +35,7 @@ use crate::data::blobs::Dataset;
 use crate::net::meter::{Meter, PhaseStats};
 use crate::net::mux::MuxLink;
 use crate::net::{duplex_pair, run_two_party, Chan};
-use crate::offline::dealer::Dealer;
+use crate::offline::dealer::{mac_key_share, Dealer};
 use crate::offline::store::{Demand, TripleStore};
 use crate::runtime::pool;
 use crate::serve::model::TrainedModel;
@@ -45,6 +45,12 @@ use crate::util::timer::Timer;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Ledger-seed salt of the malicious gateway: the flat link's ledger
+/// uses `cfg.seed ^ SALT`; each session's uses its tag-keyed
+/// [`session_seed`]` ^ SALT`, so no two coefficient streams in a run
+/// alias (and none alias the train/serve salts).
+const GATEWAY_MAC_LEDGER_SALT: u128 = 0x6AC7_1ED6_u128 << 64;
 
 /// One admitted session's complete outcome, as seen by one party.
 #[derive(Debug, Clone)]
@@ -179,6 +185,17 @@ pub fn gateway_party(
     }
     let wall = Timer::started();
 
+    // Malicious tier: arm the flat link's ledger before the hello, so
+    // the hello and the tag-0 demand probe both ride it — settled by
+    // the one `gateway.done` barrier after mux teardown. (Idempotent
+    // when an earlier phase on this channel already armed it.)
+    if cfg.security.malicious() {
+        chan.enable_mac(
+            mac_key_share(cfg.seed, party),
+            cfg.seed ^ GATEWAY_MAC_LEDGER_SALT,
+        );
+    }
+
     // 1. Hello: agree on every protocol-relevant knob or die typed.
     exchange_hello(chan, cfg)?;
 
@@ -247,6 +264,16 @@ pub fn gateway_party(
                 })?;
             let t0 = Timer::started();
             let s_seed = session_seed(seed, w.tag);
+            // Each session runs its own tag-keyed ledger (the flat
+            // link's is parked inside the mux), so a session's barrier
+            // schedule is independent of which other sessions run —
+            // same invariance the seeds already guarantee.
+            if cfg.security.malicious() {
+                sch.enable_mac(
+                    mac_key_share(s_seed, party),
+                    s_seed ^ GATEWAY_MAC_LEDGER_SALT,
+                );
+            }
             let mut scorer = Scorer::new(model_ref.clone(), s_seed ^ 0x5C0_0E);
             let mut warm = Dealer::new(s_seed ^ 0x11, party);
             scorer.warmup(&mut sch, &mut warm);
@@ -256,6 +283,12 @@ pub fn gateway_party(
                 let mut kit = bank_ref.checkout(w.tag, b)?;
                 results.push(scorer.score_batch(&mut sch, &mut kit, block)?);
                 misses += kit.misses;
+                // One batched ledger check per scored batch — 3 fixed-
+                // size flights on this session's sub-channel.
+                if cfg.security.malicious() {
+                    sch.set_phase("mac.barrier");
+                    sch.mac_barrier(&format!("gateway.tag{}.batch.{b}", w.tag))?;
+                }
                 // Per-session live refresh: hot-swap the centroids from
                 // this session's own recent window, mid-stream and
                 // without dropping a batch. Material comes from a
@@ -318,6 +351,13 @@ pub fn gateway_party(
     let ledger = bank.ledger();
     *chan = mux.finish()?;
     chan.set_phase("gateway.done");
+    // Settle the flat link's ledger (hello + demand probe): the parked
+    // MacAcc came back with the channel from `finish`.
+    if cfg.security.malicious() {
+        chan.set_phase("mac.barrier");
+        chan.mac_barrier("gateway.done")?;
+        chan.set_phase("gateway.done");
+    }
 
     Ok(GatewayOutput {
         sessions,

@@ -28,7 +28,7 @@
 //! ## Wire compatibility
 //!
 //! The gateway extension is negotiated *before* the first tagged frame
-//! by [`exchange_hello`] — nine plain `u64` words on the flat link, in
+//! by [`exchange_hello`] — ten plain `u64` words on the flat link, in
 //! the same framed format as the PPKMWRE1 deployment handshake (see
 //! `docs/PROTOCOLS.md`, "Gateway"). A peer that does not speak the
 //! extension fails the magic check with a typed error instead of
@@ -48,7 +48,7 @@ pub use driver::{
 };
 
 use crate::net::cost::CostModel;
-use crate::net::Chan;
+use crate::net::{Chan, Security};
 use crate::offline::bank::BankConfig;
 use crate::runtime::pool::Parallelism;
 use crate::runtime::simd::Lanes;
@@ -110,6 +110,16 @@ pub struct GatewayConfig {
     /// Blend weight α of a refresh step: `μ ← μ + α·(recent − μ)`.
     /// Protocol-relevant; must match the peer's.
     pub refresh_alpha: f64,
+    /// Adversary model of the gateway run. [`Security::Malicious`] arms
+    /// the flat link's MAC ledger before the hello (settled by one
+    /// `gateway.done` barrier after mux teardown) and gives every
+    /// admitted session its own tag-keyed ledger with one batched
+    /// barrier per scored batch; [`Security::SemiHonest`] (default) is
+    /// transcript-byte-identical to every release before the tier.
+    /// Protocol-relevant: verified by [`exchange_hello`] and digested
+    /// into scenarios — mismatched tiers would desync on the very
+    /// first barrier.
+    pub security: Security,
 }
 
 impl Default for GatewayConfig {
@@ -129,6 +139,7 @@ impl Default for GatewayConfig {
             shape: None,
             refresh_every: 0,
             refresh_alpha: 0.25,
+            security: Security::SemiHonest,
         }
     }
 }
@@ -175,10 +186,11 @@ pub fn kit_seed(seed: u128, tag: u64, batch: usize) -> u128 {
 }
 
 /// Exchange and verify the gateway hello on the still-flat link (phase
-/// `gateway.handshake`): nine words covering the magic, the extension
+/// `gateway.handshake`): ten words covering the magic, the extension
 /// version, and every protocol-relevant knob. A disagreeing peer —
 /// wrong magic/version, or a parameter mismatch that would desync the
-/// two parties' admission or bank schedules — yields a typed
+/// two parties' admission or bank schedules (or pair a semi-honest
+/// endpoint with a MAC-expecting one) — yields a typed
 /// [`Error::Protocol`] before any tagged frame is sent.
 pub fn exchange_hello(chan: &mut Chan, cfg: &GatewayConfig) -> Result<()> {
     chan.set_phase("gateway.handshake");
@@ -192,6 +204,7 @@ pub fn exchange_hello(chan: &mut Chan, cfg: &GatewayConfig) -> Result<()> {
         cfg.bank.prefab_batches as u64,
         cfg.bank.low_water as u64,
         cfg.bank.refill_batches as u64,
+        cfg.security.malicious() as u64,
     ];
     let theirs = chan.try_exchange_u64s(&mine)?;
     if theirs.len() != mine.len() {
@@ -214,7 +227,16 @@ pub fn exchange_hello(chan: &mut Chan, cfg: &GatewayConfig) -> Result<()> {
             theirs[1], GATEWAY_WIRE_VERSION
         )));
     }
-    let labels = ["sessions", "queue", "batches", "batch_rows", "prefab", "low_water", "refill"];
+    let labels = [
+        "sessions",
+        "queue",
+        "batches",
+        "batch_rows",
+        "prefab",
+        "low_water",
+        "refill",
+        "security",
+    ];
     for (i, label) in labels.iter().enumerate() {
         if theirs[2 + i] != mine[2 + i] {
             return Err(Error::Protocol(format!(

@@ -35,7 +35,7 @@ use crate::ring::matrix::Mat;
 use crate::ss::boolean::CMP_ROUNDS;
 use crate::ss::triples::TripleSource;
 use crate::ss::trunc::trunc_share;
-use crate::ss::Session;
+use crate::ss::{Session, SessionOptions};
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prg;
 
@@ -134,8 +134,11 @@ impl Scorer {
     /// what makes every batch's round count and offline demand uniform.
     pub fn warmup(&mut self, chan: &mut Chan, ts: &mut dyn TripleSource) {
         let party = chan.party;
+        // The session inherits the channel's tier: an armed channel
+        // (malicious) folds this flight into the deferred MAC ledger.
+        let opts = SessionOptions::with_security(chan.security());
         let mut ctx =
-            Session::new(chan, ts, Prg::new(self.seed ^ ((party as u128) << 64) ^ 0x57A7));
+            Session::new(chan, ts, Prg::new(self.seed ^ ((party as u128) << 64) ^ 0x57A7), opts);
         ctx.set_phase("serve.warmup");
         let p = esd::centroid_norms_row_begin(&mut ctx, &self.model.mu_share);
         ctx.flush();
@@ -181,12 +184,14 @@ impl Scorer {
         let party = chan.party;
         let batch_idx = self.batches_scored;
         self.batches_scored += 1;
+        let opts = SessionOptions::with_security(chan.security());
         let mut ctx = Session::new(
             chan,
             ts,
             Prg::new(
                 self.seed ^ ((party as u128) << 64) ^ ((batch_idx as u128) << 8) ^ 0x5C0E,
             ),
+            opts,
         );
 
         // S1 + S2 via the assignment-only entry point (no S3).
@@ -227,7 +232,12 @@ impl Scorer {
         }
 
         // Parse: one-hot rows (the training reveal's shared decoder and
-        // malformed-row policy)…
+        // malformed-row policy)…  Under the malicious tier a malformed
+        // row is *expected* behaviour for a tampering peer — the batch
+        // barrier right after this call aborts the loop with a typed
+        // `Error::MacCheck` — so the debug assert only polices the
+        // semi-honest path, where malformation means our own bug.
+        let tolerate_malformed = ctx.chan.security().malicious();
         let mut malformed_rows = 0usize;
         let assignments: Vec<usize> = (0..rows)
             .map(|i| {
@@ -237,7 +247,10 @@ impl Scorer {
                 let (idx, well_formed) = decode_one_hot_row(&row);
                 if !well_formed {
                     malformed_rows += 1;
-                    debug_assert!(well_formed, "scored row {i} is not one-hot: {row:?}");
+                    debug_assert!(
+                        tolerate_malformed || well_formed,
+                        "scored row {i} is not one-hot: {row:?}"
+                    );
                 }
                 idx
             })
@@ -362,10 +375,12 @@ impl Scorer {
         let idx = self.refreshes_done;
         self.refreshes_done += 1;
         let party = chan.party;
+        let opts = SessionOptions::with_security(chan.security());
         let mut ctx = Session::new(
             chan,
             ts,
             Prg::new(self.seed ^ ((party as u128) << 64) ^ ((idx as u128) << 32) ^ 0x4EF4),
+            opts,
         );
         ctx.set_phase("serve.refresh");
         let p = esd::centroid_norms_row_begin(&mut ctx, &self.model.mu_share);

@@ -7,7 +7,7 @@
 //! other staged gates) share one flight.
 
 use super::pending::Pending;
-use super::Session;
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 
 /// Local addition of shares: `⟨x+y⟩ = ⟨x⟩ + ⟨y⟩`.
@@ -101,7 +101,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::{reconstruct, split};
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     /// Run an elementwise product under two-party simulation.
@@ -115,13 +115,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(123, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = smul_elem(&mut ctx, &x0, &y0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(123, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = smul_elem(&mut ctx, &x1, &y1);
                 reconstruct(c, &z)
             },
@@ -148,13 +148,13 @@ mod tests {
         let ((zs, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(124, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let zs = smul_elem_many(&mut ctx, &[(&x0, &y0), (&x0, &y0)]);
                 zs.iter().map(|z| reconstruct(c, z)).collect::<Vec<_>>()
             },
             move |c| {
                 let mut ts = Dealer::new(124, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let zs = smul_elem_many(&mut ctx, &[(&x1, &y1), (&x1, &y1)]);
                 let _ = zs.iter().map(|z| reconstruct(c, z)).collect::<Vec<_>>();
             },

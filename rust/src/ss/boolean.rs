@@ -21,7 +21,7 @@
 
 use super::pending::Pending;
 use super::triples::{bit_words, last_word_mask};
-use super::Session;
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 
 /// Flights per vectorized CMP (= MSB of a shared difference): the
@@ -345,7 +345,7 @@ mod tests {
     use crate::net::run_two_party;
     use crate::offline::dealer::Dealer;
     use crate::ss::share::split;
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     fn reveal_bits(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
@@ -367,13 +367,13 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(44, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = and(&mut ctx, &x0, &BoolShare::zeros(n));
                 reveal_bits(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(44, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = and(&mut ctx, &BoolShare::zeros(n), &y1);
                 reveal_bits(c, &z)
             },
@@ -394,13 +394,13 @@ mod tests {
         let ((planes, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(45, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let ps = a2b(&mut ctx, &x0);
                 ps.iter().map(|p| reveal_bits(c, p)).collect::<Vec<_>>()
             },
             move |c| {
                 let mut ts = Dealer::new(45, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let ps = a2b(&mut ctx, &x1);
                 ps.iter().map(|p| reveal_bits(c, p)).collect::<Vec<_>>()
             },
@@ -422,13 +422,13 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(46, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let m = msb(&mut ctx, &x0);
                 reveal_bits(c, &m)
             },
             move |c| {
                 let mut ts = Dealer::new(46, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let m = msb(&mut ctx, &x1);
                 reveal_bits(c, &m)
             },
@@ -444,12 +444,12 @@ mod tests {
         let ((_, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(48, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let _ = msb(&mut ctx, &x0);
             },
             move |c| {
                 let mut ts = Dealer::new(48, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let _ = msb(&mut ctx, &x1);
             },
         );
@@ -469,13 +469,13 @@ mod tests {
         let ((got, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(47, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let a = b2a(&mut ctx, &b0);
                 crate::ss::share::reconstruct(c, &a).data
             },
             move |c| {
                 let mut ts = Dealer::new(47, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let a = b2a(&mut ctx, &b1);
                 crate::ss::share::reconstruct(c, &a).data
             },
@@ -496,14 +496,14 @@ mod tests {
             move |c| {
                 let mut ts = Dealer::new(49, 0);
                 let mut ctx =
-                    Ctx::new(c, &mut ts, Prg::new(1)).with_policy(RoundPolicy::PerGate);
+                    Session::new(c, &mut ts, Prg::new(1), SessionOptions::with_policy(RoundPolicy::PerGate));
                 let zs = and_many(&mut ctx, &[(&xc, &BoolShare::zeros(n)), (&BoolShare::zeros(n), &xc)]);
                 (ctx.chan.meter().total().rounds, zs.len())
             },
             move |c| {
                 let mut ts = Dealer::new(49, 1);
                 let mut ctx =
-                    Ctx::new(c, &mut ts, Prg::new(2)).with_policy(RoundPolicy::PerGate);
+                    Session::new(c, &mut ts, Prg::new(2), SessionOptions::with_policy(RoundPolicy::PerGate));
                 let _ = and_many(&mut ctx, &[(&BoolShare::zeros(n), &yc), (&yc, &BoolShare::zeros(n))]);
             },
         );

@@ -11,7 +11,7 @@
 //! the same flights as a single one.
 
 use super::boolean::{msb, BoolShare};
-use super::Session;
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 
 /// XOR-shared `[x < y]` per lane.
@@ -72,7 +72,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ring::fixed::encode_f64;
     use crate::ss::share::split;
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     fn reveal(c: &mut crate::net::Chan, s: &BoolShare) -> Vec<bool> {
@@ -88,13 +88,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(50, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let b = lt(&mut ctx, &x0, &y0);
                 reveal(c, &b)
             },
             move |c| {
                 let mut ts = Dealer::new(50, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let b = lt(&mut ctx, &x1, &y1);
                 reveal(c, &b)
             },
@@ -134,13 +134,13 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |ch| {
                 let mut ts = Dealer::new(52, 0);
-                let mut ctx = Ctx::new(ch, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(ch, &mut ts, Prg::new(1), SessionOptions::default());
                 let b = gt_public(&mut ctx, &x0, &c0);
                 reveal(ch, &b)
             },
             move |ch| {
                 let mut ts = Dealer::new(52, 1);
-                let mut ctx = Ctx::new(ch, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(ch, &mut ts, Prg::new(2), SessionOptions::default());
                 let b = gt_public(&mut ctx, &x1, &c1);
                 reveal(ch, &b)
             },
@@ -163,7 +163,7 @@ mod tests {
         let ((got, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(51, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let bs = cmp_many(&mut ctx, &[(&x1a, &y1a), (&x2a, &y2a)]);
                 let rounds = ctx.chan.meter().total().rounds;
                 let r: Vec<Vec<bool>> = bs.iter().map(|b| reveal(c, b)).collect();
@@ -171,7 +171,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(51, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let bs = cmp_many(&mut ctx, &[(&x1b, &y1b), (&x2b, &y2b)]);
                 let _: Vec<Vec<bool>> = bs.iter().map(|b| reveal(c, b)).collect();
             },

@@ -19,7 +19,7 @@
 use super::arith::smul_elem;
 use super::boolean::{a2b, and_many, b2a, BoolShare};
 use super::trunc::trunc_share;
-use super::Ctx;
+use super::{Session, SessionOptions};
 use crate::ring::fixed::FRAC_BITS;
 use crate::ring::matrix::Mat;
 
@@ -28,7 +28,7 @@ const NR_ITERS: usize = 4;
 
 /// Suffix-OR of 64 bit planes: out[j] = OR(bits[j..64)). Log-depth with
 /// batched AND layers (OR(a,b) = a ⊕ b ⊕ a∧b).
-fn suffix_or(ctx: &mut Ctx, planes: &[BoolShare]) -> Vec<BoolShare> {
+fn suffix_or(ctx: &mut Session, planes: &[BoolShare]) -> Vec<BoolShare> {
     let mut h: Vec<BoolShare> = planes.to_vec();
     let l = h.len();
     let mut s = 1;
@@ -47,7 +47,7 @@ fn suffix_or(ctx: &mut Ctx, planes: &[BoolShare]) -> Vec<BoolShare> {
 
 /// Secret-shared reciprocal of positive integer lanes: given ⟨d⟩ with
 /// `1 ≤ d < 2^(2f−1)` **encoded unscaled**, returns ⟨1/d⟩ at scale f.
-pub fn reciprocal_int(ctx: &mut Ctx, d: &Mat) -> Mat {
+pub fn reciprocal_int(ctx: &mut Session, d: &Mat) -> Mat {
     let n = d.len();
     let party = ctx.party();
     let f = FRAC_BITS;
@@ -132,7 +132,7 @@ pub fn reciprocal_int(ctx: &mut Ctx, d: &Mat) -> Mat {
 
 /// `⟨num / den⟩` where `num` is at scale f and `den` holds positive
 /// integers (unscaled). Output at scale f. Shapes must match.
-pub fn divide(ctx: &mut Ctx, num: &Mat, den: &Mat) -> Mat {
+pub fn divide(ctx: &mut Session, num: &Mat, den: &Mat) -> Mat {
     assert_eq!(num.shape(), den.shape());
     let recip = reciprocal_int(ctx, den);
     let prod = smul_elem(ctx, num, &recip);
@@ -142,7 +142,7 @@ pub fn divide(ctx: &mut Ctx, num: &Mat, den: &Mat) -> Mat {
 /// Divide each *row element* of `num (k×d)` by the corresponding lane of
 /// `den (1×k)` — the broadcasting division of the centroid update
 /// `μ_j = Σ C_ij X_i / Σ C_ij`.
-pub fn divide_rows(ctx: &mut Ctx, num: &Mat, den: &Mat) -> Mat {
+pub fn divide_rows(ctx: &mut Session, num: &Mat, den: &Mat) -> Mat {
     assert_eq!(den.len(), num.rows, "one denominator per numerator row");
     let recip = reciprocal_int(ctx, den); // 1×k at scale f
     // Broadcast reciprocal across row elements, single elementwise mul.
@@ -172,13 +172,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(71, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = reciprocal_int(&mut ctx, &d0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(71, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = reciprocal_int(&mut ctx, &d1);
                 reconstruct(c, &z)
             },
@@ -209,13 +209,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(73, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = divide_rows(&mut ctx, &n0, &d0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(73, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = divide_rows(&mut ctx, &n1, &d1);
                 reconstruct(c, &z)
             },

@@ -16,10 +16,12 @@
 //! reallocating mid-flight).
 
 use super::pending::Pending;
-use super::triples::MatTriple;
-use super::Session;
+use super::share::Share;
+use super::triples::{AuthMatTriple, MatTriple};
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 use crate::ss::share::{trivial_share_of_mine, trivial_share_of_theirs};
+use crate::util::error::{Error, Result};
 
 /// Stage `⟨A(m×k)⟩ · ⟨B(k×n)⟩` with an explicit triple; resolves to
 /// `⟨AB⟩` after the next flush.
@@ -92,6 +94,115 @@ pub fn ss_matmul_with_triple(ctx: &mut Session, a: &Mat, b: &Mat, t: MatTriple) 
     p.resolve(ctx)
 }
 
+/// A staged **authenticated** product awaiting its reveal (malicious
+/// tier). Unlike the plain [`Pending`], resolution needs the session
+/// back explicitly: the opened `E ‖ F` words must be folded into the
+/// channel's deferred MAC ledger together with their `⟨α·E⟩`/`⟨α·F⟩`
+/// limbs, which a closure over `(party, mine, theirs)` alone cannot
+/// reach. The captured triple material is therefore carried openly.
+pub struct PendingAuthMatmul {
+    seg: usize,
+    t: AuthMatTriple,
+    /// `⟨α·E⟩ = ⟨α·A⟩ − ⟨α·U⟩` — authenticates the opened `E`.
+    mac_e: Mat,
+    /// `⟨α·F⟩ = ⟨α·B⟩ − ⟨α·V⟩` — authenticates the opened `F`.
+    mac_f: Mat,
+}
+
+impl PendingAuthMatmul {
+    /// Combine the peer's reveal into an authenticated output share and
+    /// enter the opened words into the deferred ledger. Panics if no
+    /// flush has shipped the staging flight yet.
+    pub fn resolve(self, ctx: &mut Session) -> Share {
+        let PendingAuthMatmul { seg, t, mac_e, mac_f } = self;
+        let (mine, theirs) = ctx.take(seg);
+        let (er, ec) = t.base.u.shape();
+        let (fr, fc) = t.base.v.shape();
+        let ne = er * ec;
+        let mut e = Mat::zeros(er, ec);
+        let mut f = Mat::zeros(fr, fc);
+        crate::runtime::simd::add_words(&mut e.data, &mine[..ne], &theirs[..ne]);
+        crate::runtime::simd::add_words(&mut f.data, &mine[ne..], &theirs[ne..]);
+        // Every opened word enters the deferred ledger with its ⟨α·x⟩
+        // limb: an additively forged operand share shifts σ_mac by a
+        // nonzero multiple of α even though the wire frames were all
+        // honest, so the next phase barrier aborts on both sides.
+        ctx.chan.fold_opened(&e.data, &mac_e.data);
+        ctx.chan.fold_opened(&f.data, &mac_f.data);
+        use crate::runtime::dispatch::matmul as mm;
+        let ef = mm(&e, &f);
+        // ⟨AB⟩ = [party0] E·F + E·⟨V⟩ + ⟨U⟩·F + ⟨Z⟩, as in the plain gate.
+        let mut v = mm(&e, &t.base.v).add(&mm(&t.base.u, &f)).add(&t.base.z);
+        if ctx.party() == 0 {
+            v = v.add(&ef);
+        }
+        // ⟨α·AB⟩ = α_i·(E·F) + E·⟨α·V⟩ + ⟨α·U⟩·F + ⟨α·Z⟩. `E·F` is
+        // public, so each party contributes its own α-share of it — the
+        // shares of α sum to the key, and the rest telescopes exactly
+        // like the value recombination.
+        let alpha = ctx.chan.mac_alpha().unwrap_or(0);
+        let mac =
+            ef.scale(alpha).add(&mm(&e, &t.mac_v)).add(&mm(&t.mac_u, &f)).add(&t.mac_z);
+        Share::authed(v, mac)
+    }
+}
+
+/// Stage `⟨A⟩·⟨B⟩` over authenticated shares, drawing MAC'd triple
+/// material from the session's offline source. The reveal flight is
+/// byte-identical to the semi-honest gate (`|A|+|B|` ring elements);
+/// the MAC work is all local plus ledger folding, settled at the next
+/// phase barrier. Fails fast if either operand lacks its MAC limb or
+/// the channel ledger is unarmed.
+pub fn auth_ss_matmul_begin(
+    ctx: &mut Session,
+    a: &Share,
+    b: &Share,
+) -> Result<PendingAuthMatmul> {
+    assert_eq!(a.v.cols, b.v.rows, "auth_ss_matmul inner dim");
+    let (ma, mb) = match (&a.mac, &b.mac) {
+        (Some(x), Some(y)) => (x, y),
+        _ => {
+            return Err(Error::Protocol(
+                "authenticated matmul needs MAC limbs on both operands".into(),
+            ))
+        }
+    };
+    if ctx.chan.mac_alpha().is_none() {
+        return Err(Error::Config(
+            "authenticated matmul over an unarmed channel — call Chan::enable_mac first"
+                .into(),
+        ));
+    }
+    let t = ctx.ts.auth_mat_triple(a.v.rows, a.v.cols, b.v.cols)?;
+    let mac_e = ma.sub(&t.mac_u);
+    let mac_f = mb.sub(&t.mac_v);
+    let (ne, nf) = (a.v.len(), b.v.len());
+    let mut payload = Vec::with_capacity(ne + nf);
+    crate::runtime::simd::sub_words_into(&mut payload, &a.v.data, &t.base.u.data);
+    crate::runtime::simd::sub_words_into(&mut payload, &b.v.data, &t.base.v.data);
+    let seg = ctx.stage(payload);
+    Ok(PendingAuthMatmul { seg, t, mac_e, mac_f })
+}
+
+/// Batch form over authenticated shares: all reveals share **one**
+/// flight, exactly like [`ss_matmul_many`].
+pub fn auth_ss_matmul_many(
+    ctx: &mut Session,
+    products: &[(&Share, &Share)],
+) -> Result<Vec<Share>> {
+    let pending: Result<Vec<PendingAuthMatmul>> =
+        products.iter().map(|(a, b)| auth_ss_matmul_begin(ctx, a, b)).collect();
+    let pending = pending?;
+    ctx.flush();
+    Ok(pending.into_iter().map(|p| p.resolve(ctx)).collect())
+}
+
+/// Single-gate wrapper over the authenticated batch form.
+pub fn auth_ss_matmul(ctx: &mut Session, a: &Share, b: &Share) -> Result<Share> {
+    let mut out = auth_ss_matmul_many(ctx, &[(a, b)])?;
+    Ok(out.pop().expect("one staged product resolves to one share"))
+}
+
 /// Stage a private-input product: this party holds plaintext `X (m×k)`,
 /// the peer holds plaintext `Y (k×n)`; both obtain shares of `XY`.
 /// Implemented by feeding trivial shares into the Beaver protocol.
@@ -161,9 +272,9 @@ pub fn private_matmul(
 mod tests {
     use super::*;
     use crate::net::run_two_party;
-    use crate::offline::dealer::Dealer;
-    use crate::ss::share::{reconstruct, split};
-    use crate::ss::Ctx;
+    use crate::offline::dealer::{mac_key_share, Dealer};
+    use crate::ss::share::{auth_split, open_auth, reconstruct, split};
+    use crate::ss::{Security, Session};
     use crate::util::prng::Prg;
 
     fn mats() -> (Mat, Mat) {
@@ -182,13 +293,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(9, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = ss_matmul(&mut ctx, &a0, &b0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(9, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = ss_matmul(&mut ctx, &a1, &b1);
                 reconstruct(c, &z)
             },
@@ -204,13 +315,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(10, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = private_matmul(&mut ctx, &ac, (2, 3), (3, 2), true);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(10, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = private_matmul(&mut ctx, &bc, (3, 2), (2, 3), false);
                 reconstruct(c, &z)
             },
@@ -229,7 +340,7 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(12, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let p = private_matmul_rows_begin(&mut ctx, &ac, (1, 3), (3, 2), true);
                 ctx.flush();
                 let z = p.resolve(&mut ctx);
@@ -237,7 +348,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(12, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let p = private_matmul_rows_begin(&mut ctx, &bc, (0, 3), (2, 3), false);
                 ctx.flush();
                 let z = p.resolve(&mut ctx);
@@ -257,12 +368,12 @@ mod tests {
         let ((_, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(9, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 ss_matmul(&mut ctx, &a0, &b0);
             },
             move |c| {
                 let mut ts = Dealer::new(9, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 ss_matmul(&mut ctx, &a1, &b1);
             },
         );
@@ -282,14 +393,14 @@ mod tests {
         let ((out, m0), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(11, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let zs = ss_matmul_many(&mut ctx, &[(&a0, &b0), (&a0, &b0)]);
                 let r: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
                 r
             },
             move |c| {
                 let mut ts = Dealer::new(11, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let zs = ss_matmul_many(&mut ctx, &[(&a1, &b1), (&a1, &b1)]);
                 let _: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
             },
@@ -298,5 +409,199 @@ mod tests {
         assert_eq!(out[1], want);
         // ss_matmul_many flight + 2 reconstruct flights.
         assert_eq!(m0.total().rounds, 3);
+    }
+
+    /// Dealer seed, ledger seed, and this party's α-share for the
+    /// authenticated-gate tests. Both parties derive their α from the
+    /// same dealer stream the auth triples are MAC'd under.
+    fn auth_fixture(party: usize) -> (u128, u128, u64) {
+        let dealer_seed = 0x7A11_u128;
+        (dealer_seed, 0x1ED6_E5_u128, mac_key_share(dealer_seed, party))
+    }
+
+    #[test]
+    fn auth_matmul_reconstructs_and_passes_the_barrier() {
+        let (a, b) = mats();
+        let want = a.matmul(&b);
+        let (seed, ledger_seed, _) = auth_fixture(0);
+        let alpha = mac_key_share(seed, 0).wrapping_add(mac_key_share(seed, 1));
+        let mut prg = Prg::new(0x5EED);
+        let (a0, a1) = auth_split(&a, alpha, &mut prg);
+        let (b0, b1) = auth_split(&b, alpha, &mut prg);
+        let (((out, barrier), _), ((_, peer_barrier), _)) = run_two_party(
+            move |c| {
+                let (seed, ledger_seed, alpha0) = auth_fixture(0);
+                c.enable_mac(alpha0, ledger_seed);
+                let mut ts = Dealer::new(seed, 0);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(1),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let z = auth_ss_matmul(&mut ctx, &a0, &b0).unwrap();
+                assert!(z.is_authed(), "auth gate must emit a MAC limb");
+                let opened = open_auth(c, &z);
+                (opened, c.mac_barrier("matmul").is_ok())
+            },
+            move |c| {
+                let (seed, _, alpha1) = auth_fixture(1);
+                c.enable_mac(alpha1, ledger_seed);
+                let mut ts = Dealer::new(seed, 1);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(2),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let z = auth_ss_matmul(&mut ctx, &a1, &b1).unwrap();
+                let opened = open_auth(c, &z);
+                (opened, c.mac_barrier("matmul").is_ok())
+            },
+        );
+        assert_eq!(out, want);
+        assert!(barrier, "clean authenticated product must pass the ledger check");
+        assert!(peer_barrier);
+    }
+
+    #[test]
+    fn forged_auth_product_fails_the_barrier_on_both_parties() {
+        // Party 1 adds 1 to its share of the *product* before opening —
+        // an additive attack the wire RLC cannot see (the forged frame
+        // is the genuine bytes it sent). The SPDZ limb catches it: the
+        // opened word no longer matches its α·value MAC, shifting
+        // σ_mac by −α, and both parties abort typed at the barrier.
+        let (a, b) = mats();
+        let (seed, ledger_seed, _) = auth_fixture(0);
+        let alpha = mac_key_share(seed, 0).wrapping_add(mac_key_share(seed, 1));
+        let mut prg = Prg::new(0x5EED);
+        let (a0, a1) = auth_split(&a, alpha, &mut prg);
+        let (b0, b1) = auth_split(&b, alpha, &mut prg);
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| {
+                let (seed, ledger_seed, alpha0) = auth_fixture(0);
+                c.enable_mac(alpha0, ledger_seed);
+                let mut ts = Dealer::new(seed, 0);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(1),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let z = auth_ss_matmul(&mut ctx, &a0, &b0).unwrap();
+                let _ = open_auth(c, &z);
+                c.mac_barrier("matmul")
+            },
+            move |c| {
+                let (seed, _, alpha1) = auth_fixture(1);
+                c.enable_mac(alpha1, ledger_seed);
+                let mut ts = Dealer::new(seed, 1);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(2),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let z = auth_ss_matmul(&mut ctx, &a1, &b1).unwrap();
+                let forged = Share {
+                    v: z.v.map(|w| w.wrapping_add(1)),
+                    mac: z.mac.clone(),
+                };
+                let _ = open_auth(c, &forged);
+                c.mac_barrier("matmul")
+            },
+        );
+        for r in [r0, r1] {
+            match r {
+                Err(Error::MacCheck(msg)) => {
+                    assert!(msg.contains("matmul"), "abort must name the phase: {msg}")
+                }
+                other => panic!("expected a typed MacCheck abort, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn auth_batch_shares_one_flight_and_matches_semi_honest_bytes() {
+        // Two authenticated products reveal in one flight whose payload
+        // is byte-identical to the semi-honest gate (2 × 96 bytes); the
+        // only malicious-tier traffic is the 96-byte/party barrier.
+        let (a, b) = mats();
+        let want = a.matmul(&b);
+        let (seed, ledger_seed, _) = auth_fixture(0);
+        let alpha = mac_key_share(seed, 0).wrapping_add(mac_key_share(seed, 1));
+        let mut prg = Prg::new(0x5EED);
+        let (a0, a1) = auth_split(&a, alpha, &mut prg);
+        let (b0, b1) = auth_split(&b, alpha, &mut prg);
+        let ((sums, m0), _) = run_two_party(
+            move |c| {
+                let (seed, ledger_seed, alpha0) = auth_fixture(0);
+                c.enable_mac(alpha0, ledger_seed);
+                let mut ts = Dealer::new(seed, 0);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(1),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let zs =
+                    auth_ss_matmul_many(&mut ctx, &[(&a0, &b0), (&a0, &b0)]).unwrap();
+                let opened: Vec<Mat> = zs.iter().map(|z| open_auth(c, z)).collect();
+                c.mac_barrier("matmul").unwrap();
+                opened
+            },
+            move |c| {
+                let (seed, _, alpha1) = auth_fixture(1);
+                c.enable_mac(alpha1, ledger_seed);
+                let mut ts = Dealer::new(seed, 1);
+                let mut ctx = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(2),
+                    SessionOptions::with_security(Security::Malicious),
+                );
+                let zs =
+                    auth_ss_matmul_many(&mut ctx, &[(&a1, &b1), (&a1, &b1)]).unwrap();
+                let _: Vec<Mat> = zs.iter().map(|z| open_auth(c, z)).collect();
+                c.mac_barrier("matmul").unwrap();
+            },
+        );
+        assert_eq!(sums[0], want);
+        assert_eq!(sums[1], want);
+        let t = m0.total();
+        // 1 reveal flight + 2 opens + 3 barrier flights.
+        assert_eq!(t.rounds, 6);
+        // 2×96 reveal + 2×32 opens + 96 barrier.
+        assert_eq!(t.bytes_sent, 2 * 96 + 2 * 32 + 96);
+    }
+
+    #[test]
+    fn auth_matmul_demands_armed_channel_and_mac_limbs() {
+        let (a, b) = mats();
+        let mut prg = Prg::new(0x5EED);
+        let (a0, _) = split(&a, &mut prg);
+        let (b0, _) = split(&b, &mut prg);
+        let (aa, _) = auth_split(&a, 3, &mut prg);
+        let (bb, _) = auth_split(&b, 3, &mut prg);
+        let (((plain_err, unarmed_err), _), _) = run_two_party(
+            move |c| {
+                let mut ts = Dealer::new(3, 0);
+                let mut ctx =
+                    Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
+                // Plain (un-MAC'd) operands are rejected outright, and
+                // authenticated operands over an unarmed channel are a
+                // config error — both fail before staging any flight.
+                let plain =
+                    auth_ss_matmul_begin(&mut ctx, &Share::plain(a0), &Share::plain(b0));
+                let unarmed = auth_ss_matmul_begin(&mut ctx, &aa, &bb);
+                (
+                    matches!(plain, Err(Error::Protocol(_))),
+                    matches!(unarmed, Err(Error::Config(_))),
+                )
+            },
+            |_c| {},
+        );
+        assert!(plain_err, "plain operands must be rejected by the authenticated gate");
+        assert!(unarmed_err, "an unarmed channel must be rejected before staging");
     }
 }

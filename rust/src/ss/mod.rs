@@ -40,6 +40,7 @@ use crate::net::Chan;
 use crate::util::prng::Prg;
 use triples::TripleSource;
 
+pub use crate::net::Security;
 pub use pending::{Pending, PendingParts};
 
 /// How the session maps gates onto network flights.
@@ -53,8 +54,37 @@ pub enum RoundPolicy {
     PerGate,
 }
 
+/// Construction-time knobs for a [`Session`]. A struct (not positional
+/// args) so adding a knob never ripples through every call site again:
+/// `SessionOptions::default()` is the paper's configuration — coalesced
+/// flights, semi-honest security.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionOptions {
+    /// How gates map onto network flights.
+    pub policy: RoundPolicy,
+    /// Adversary model. [`Security::Malicious`] makes authenticated
+    /// opens fold into the channel's deferred MAC ledger (the channel
+    /// itself must be armed via [`Chan::enable_mac`] by the pipeline);
+    /// [`Security::SemiHonest`] keeps the transcript byte-identical to
+    /// the unauthenticated protocol.
+    pub security: Security,
+}
+
+impl SessionOptions {
+    /// Options with the given round policy (semi-honest security).
+    pub fn with_policy(policy: RoundPolicy) -> Self {
+        SessionOptions { policy, ..Default::default() }
+    }
+
+    /// Options with the given security tier (coalesced flights).
+    pub fn with_security(security: Security) -> Self {
+        SessionOptions { security, ..Default::default() }
+    }
+}
+
 /// Per-party protocol session: channel + offline material + local PRG,
-/// plus the round policy that decides how gates share flights.
+/// plus the round policy that decides how gates share flights and the
+/// security tier that decides whether opens are authenticated.
 pub struct Session<'a> {
     /// The party's accounted channel (round buffer + meter).
     pub chan: &'a mut Chan,
@@ -63,29 +93,42 @@ pub struct Session<'a> {
     /// Local mask/share PRG (need not match the peer's).
     pub prg: Prg,
     policy: RoundPolicy,
+    security: Security,
 }
 
-/// Legacy name for [`Session`]; kept so call sites and tests written
-/// against the pre-batching API keep compiling.
-pub type Ctx<'a> = Session<'a>;
-
 impl<'a> Session<'a> {
-    /// Bundle a channel, a triple source and a local PRG into a session
-    /// (coalescing round policy by default).
-    pub fn new(chan: &'a mut Chan, ts: &'a mut dyn TripleSource, prg: Prg) -> Self {
-        Session { chan, ts, prg, policy: RoundPolicy::Coalesced }
-    }
-
-    /// Override the round policy (builder style).
-    pub fn with_policy(mut self, policy: RoundPolicy) -> Self {
-        self.policy = policy;
-        self
+    /// Bundle a channel, a triple source and a local PRG into a session.
+    /// Pass [`SessionOptions::default()`] for the paper's configuration
+    /// (coalesced flights, semi-honest).
+    pub fn new(
+        chan: &'a mut Chan,
+        ts: &'a mut dyn TripleSource,
+        prg: Prg,
+        opts: SessionOptions,
+    ) -> Self {
+        debug_assert!(
+            !opts.security.malicious() || chan.mac_enabled(),
+            "malicious session over an unarmed channel — call Chan::enable_mac first"
+        );
+        Session { chan, ts, prg, policy: opts.policy, security: opts.security }
     }
 
     /// Current round policy.
     #[inline]
     pub fn policy(&self) -> RoundPolicy {
         self.policy
+    }
+
+    /// The adversary model this session runs under.
+    #[inline]
+    pub fn security(&self) -> Security {
+        self.security
+    }
+
+    /// Whether authenticated opens are required (malicious tier).
+    #[inline]
+    pub fn malicious(&self) -> bool {
+        self.security.malicious()
     }
 
     /// Whether the gate-per-flight baseline is active.
@@ -137,14 +180,19 @@ mod tests {
         let ((rounds_batched, rounds_pergate), _) = run_two_party(
             |c| {
                 let mut ts = Dealer::new(1, 0);
-                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let mut s = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let a = s.stage(vec![1]);
                 let b = s.stage(vec![2]);
                 s.flush();
                 let _ = s.take(a);
                 let _ = s.take(b);
                 let batched = s.chan.meter().total().rounds;
-                let mut s = Session::new(c, &mut ts, Prg::new(1)).with_policy(RoundPolicy::PerGate);
+                let mut s = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(1),
+                    SessionOptions::with_policy(RoundPolicy::PerGate),
+                );
                 let a = s.stage(vec![1]);
                 let b = s.stage(vec![2]);
                 let _ = s.take(a);
@@ -154,13 +202,18 @@ mod tests {
             },
             |c| {
                 let mut ts = Dealer::new(1, 1);
-                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let mut s = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let a = s.stage(vec![3]);
                 let b = s.stage(vec![4]);
                 s.flush();
                 let _ = s.take(a);
                 let _ = s.take(b);
-                let mut s = Session::new(c, &mut ts, Prg::new(2)).with_policy(RoundPolicy::PerGate);
+                let mut s = Session::new(
+                    c,
+                    &mut ts,
+                    Prg::new(2),
+                    SessionOptions::with_policy(RoundPolicy::PerGate),
+                );
                 let a = s.stage(vec![3]);
                 let b = s.stage(vec![4]);
                 let _ = s.take(a);

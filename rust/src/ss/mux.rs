@@ -19,7 +19,7 @@
 use super::arith::smul_elem;
 use super::boolean::BoolShare;
 use super::pending::Pending;
-use super::Session;
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 
 /// Stage a fused boolean-selector MUX. Selector lane `i` of `b` decides
@@ -131,7 +131,7 @@ mod tests {
     use crate::offline::dealer::Dealer;
     use crate::ss::share::{reconstruct, split};
     use crate::ss::triples::bit_words;
-    use crate::ss::Ctx;
+    use crate::ss::Session;
     use crate::util::prng::Prg;
 
     #[test]
@@ -150,14 +150,14 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(60, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = mux(&mut ctx, &b0, &x0, &y0);
                 let rounds = ctx.chan.meter().total().rounds;
                 (reconstruct(c, &z), rounds)
             },
             move |c| {
                 let mut ts = Dealer::new(60, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = mux(&mut ctx, &b1, &x1, &y1);
                 let _ = reconstruct(c, &z);
             },
@@ -182,7 +182,7 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(61, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let p = mux_bits_begin(&mut ctx, &b0, &x0, &y0, 3);
                 ctx.flush();
                 let z = p.resolve(&mut ctx);
@@ -190,7 +190,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(61, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let p = mux_bits_begin(&mut ctx, &b1, &x1, &y1, 3);
                 ctx.flush();
                 let z = p.resolve(&mut ctx);
@@ -213,13 +213,13 @@ mod tests {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(61, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = mux_rows(&mut ctx, &b0, &x0, &y0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(61, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = mux_rows(&mut ctx, &b1, &x1, &y1);
                 reconstruct(c, &z)
             },
@@ -241,7 +241,7 @@ mod tests {
         let ((out, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(62, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let zs = mux_many(&mut ctx, &[(&b0, &x0, &y0), (&b0, &y0, &x0)]);
                 let rounds = ctx.chan.meter().total().rounds;
                 let r: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
@@ -249,7 +249,7 @@ mod tests {
             },
             move |c| {
                 let mut ts = Dealer::new(62, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let zs = mux_many(&mut ctx, &[(&b1, &x1, &y1), (&b1, &y1, &x1)]);
                 let _: Vec<Mat> = zs.iter().map(|z| reconstruct(c, z)).collect();
             },

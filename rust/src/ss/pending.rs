@@ -9,7 +9,7 @@
 //! the gate's output, entirely locally. Many pendings staged between
 //! two flushes share one round-trip; that is the whole point.
 
-use super::Session;
+use super::{Session, SessionOptions};
 use crate::ring::matrix::Mat;
 
 /// A staged gate awaiting its reveal. `T` is the gate output type
@@ -97,7 +97,7 @@ mod tests {
         let ((sum, rounds), _) = run_two_party(
             |c| {
                 let mut ts = Dealer::new(2, 0);
-                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let mut s = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let p1 = Pending::stage(&mut s, vec![5], |_, mine, theirs| {
                     assert_eq!(mine, vec![5], "local payload comes back untouched");
                     theirs[0] + 1
@@ -111,7 +111,7 @@ mod tests {
             },
             |c| {
                 let mut ts = Dealer::new(2, 1);
-                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let mut s = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let p1 = Pending::stage(&mut s, vec![100], |_, _, t| t[0]);
                 let p2 = Pending::stage(&mut s, vec![200, 300], |_, _, t| t[0]);
                 s.flush();
@@ -129,14 +129,14 @@ mod tests {
         let ((v, _), _) = run_two_party(
             |c| {
                 let mut ts = Dealer::new(3, 0);
-                let mut s = Session::new(c, &mut ts, Prg::new(1));
+                let mut s = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let p = Pending::stage(&mut s, vec![1], |_, _, t| t[0]).map(|x| x * 2);
                 s.flush();
                 (p.resolve(&mut s), ())
             },
             |c| {
                 let mut ts = Dealer::new(3, 1);
-                let mut s = Session::new(c, &mut ts, Prg::new(2));
+                let mut s = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let p = Pending::stage(&mut s, vec![21], |_, _, t| t[0]);
                 s.flush();
                 let _ = p.resolve(&mut s);

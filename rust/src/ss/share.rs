@@ -4,9 +4,24 @@
 //! mod 2^64 and transmits the other party's share. `Rec(x)`: parties
 //! exchange shares and add. Between those two moments every value in the
 //! protocol is a uniformly distributed share (see the paper's §3.1).
+//!
+//! ## Authenticated shares (malicious tier)
+//!
+//! [`Share`] is the generic share of the redesigned API: the additive
+//! value share plus an *optional* SPDZ MAC limb — a share of `α·x` under
+//! the global MAC key α (see `offline::dealer::mac_key_share`). Under
+//! [`crate::net::Security::SemiHonest`] the limb is `None` and every
+//! code path below is byte-identical to the plain functions; under
+//! `Malicious`, [`open_auth`] folds each opened word and its limb into
+//! the channel's deferred ledger, verified wholesale at the next
+//! [`Chan::mac_barrier`], and [`reconstruct_committed`] adds a
+//! commit-then-reveal exchange for final outputs so neither party can
+//! choose its share after seeing the other's.
 
 use crate::net::Chan;
 use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
+use crate::util::hash::hash256;
 use crate::util::prng::Prg;
 
 /// Split a matrix into two additive shares using `prg` for share 0.
@@ -58,6 +73,111 @@ pub fn reconstruct_to(chan: &mut Chan, share: &Mat, target: usize) -> Option<Mat
     }
 }
 
+// ---- Authenticated shares (malicious tier) ----------------------------
+
+/// A generic share: the additive value share plus an optional MAC limb
+/// (share of `α·x`). `mac: None` is a semi-honest share; every operation
+/// on it is byte-identical to the plain [`Mat`] path.
+#[derive(Debug, Clone)]
+pub struct Share {
+    /// Additive share of the value.
+    pub v: Mat,
+    /// Additive share of `α·value` (MAC limb), present iff authenticated.
+    pub mac: Option<Mat>,
+}
+
+impl Share {
+    /// Wrap a plain (unauthenticated) share.
+    pub fn plain(v: Mat) -> Share {
+        Share { v, mac: None }
+    }
+
+    /// Wrap an authenticated share with its MAC limb.
+    pub fn authed(v: Mat, mac: Mat) -> Share {
+        debug_assert_eq!(v.shape(), mac.shape(), "MAC limb must match the value shape");
+        Share { v, mac: Some(mac) }
+    }
+
+    /// Whether this share carries a MAC limb.
+    pub fn is_authed(&self) -> bool {
+        self.mac.is_some()
+    }
+
+    /// Local addition: value shares and MAC limbs add independently
+    /// (both sides must agree on authentication; mixing drops to plain).
+    pub fn add(&self, o: &Share) -> Share {
+        Share {
+            v: self.v.add(&o.v),
+            mac: match (&self.mac, &o.mac) {
+                (Some(a), Some(b)) => Some(a.add(b)),
+                _ => None,
+            },
+        }
+    }
+
+    /// Local scaling by a public constant: `α·(c·x) = c·(α·x)`.
+    pub fn scale(&self, c: u64) -> Share {
+        Share { v: self.v.scale(c), mac: self.mac.as_ref().map(|m| m.scale(c)) }
+    }
+}
+
+/// Split a value into two authenticated shares given each party's view
+/// of the dealer-derived α (test / trusted-setup helper: whoever calls
+/// this knows the full α, exactly like the simulated dealer).
+pub fn auth_split(x: &Mat, alpha: u64, prg: &mut Prg) -> (Share, Share) {
+    let (v0, v1) = split(x, prg);
+    let mac = x.scale(alpha);
+    let m0 = Mat::random(x.rows, x.cols, prg);
+    let m1 = mac.sub(&m0);
+    (Share::authed(v0, m0), Share::authed(v1, m1))
+}
+
+/// Open an authenticated share at both parties: one symmetric exchange
+/// of the *value* share (MAC limbs never travel), with every opened word
+/// and this party's limb folded into the channel's deferred MAC ledger —
+/// verified wholesale at the next [`Chan::mac_barrier`], so opening
+/// costs zero extra flights. A plain share opens exactly like
+/// [`reconstruct`] (no ledger activity even on an armed channel, since
+/// there is no limb to check).
+pub fn open_auth(chan: &mut Chan, share: &Share) -> Mat {
+    let opened = reconstruct(chan, &share.v);
+    if let Some(mac) = &share.mac {
+        chan.fold_opened(&opened.data, &mac.data);
+    }
+    opened
+}
+
+/// Commit-then-reveal reconstruction for **final outputs** (malicious
+/// tier): each party first exchanges a hash commitment to its share,
+/// then the share itself, and verifies the peer's reveal against the
+/// commitment — a cheating party cannot choose its share after seeing
+/// the honest one. Two extra flights total; the opened words also fold
+/// into the MAC ledger when the share is authenticated, so the final
+/// barrier still covers the revealed value itself.
+pub fn reconstruct_committed(chan: &mut Chan, share: &Share, phase: &str) -> Result<Mat> {
+    let mut bytes = Vec::with_capacity(share.v.data.len() * 8);
+    for w in &share.v.data {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    let commit = hash256(&bytes);
+    let their_commit = chan.try_exchange_bytes(&commit)?;
+    let theirs = chan.exchange_mat(&share.v);
+    let mut their_bytes = Vec::with_capacity(theirs.data.len() * 8);
+    for w in &theirs.data {
+        their_bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    if their_commit[..] != hash256(&their_bytes)[..] {
+        return Err(Error::MacCheck(format!(
+            "commit-reveal at '{phase}': peer's revealed share does not match its commitment"
+        )));
+    }
+    let opened = share.v.add(&theirs);
+    if let Some(mac) = &share.mac {
+        chan.fold_opened(&opened.data, &mac.data);
+    }
+    Ok(opened)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +209,94 @@ mod tests {
         );
         assert_eq!(r0, x);
         assert_eq!(r1, x);
+    }
+
+    #[test]
+    fn auth_split_opens_and_passes_the_barrier() {
+        use crate::offline::dealer::mac_key_share;
+        let seed = 0x5EC5u128;
+        let a0 = mac_key_share(seed, 0);
+        let a1 = mac_key_share(seed, 1);
+        let alpha = a0.wrapping_add(a1);
+        let x = Mat::from_vec(2, 2, vec![1, 2, 3, u64::MAX]);
+        let mut prg = Prg::new(7);
+        let (s0, s1) = auth_split(&x, alpha, &mut prg);
+        assert!(s0.is_authed() && s1.is_authed());
+        // MAC limbs reconstruct to α·x.
+        assert_eq!(
+            s0.mac.clone().unwrap().add(&s1.mac.clone().unwrap()),
+            x.scale(alpha)
+        );
+        // Local ops preserve authentication: (s+s)·3 keeps valid limbs.
+        let d0 = s0.add(&s0).scale(3);
+        let d1 = s1.add(&s1).scale(3);
+        let want = x.scale(6);
+        let xc = x.clone();
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| {
+                c.enable_mac(a0, seed);
+                let o = open_auth(c, &s0);
+                c.mac_barrier("open").unwrap();
+                let o6 = open_auth(c, &d0);
+                c.mac_barrier("open.scaled").unwrap();
+                (o, o6)
+            },
+            move |c| {
+                c.enable_mac(a1, seed);
+                let o = open_auth(c, &s1);
+                c.mac_barrier("open").unwrap();
+                let o6 = open_auth(c, &d1);
+                c.mac_barrier("open.scaled").unwrap();
+                (o, o6)
+            },
+        );
+        assert_eq!(r0.0, x);
+        assert_eq!(r1.0, xc);
+        assert_eq!(r0.1, want);
+        assert_eq!(r1.1, want);
+    }
+
+    #[test]
+    fn forged_opened_share_is_caught_at_the_barrier() {
+        use crate::offline::dealer::mac_key_share;
+        let seed = 0xBAD5u128;
+        let a0 = mac_key_share(seed, 0);
+        let a1 = mac_key_share(seed, 1);
+        let x = Mat::from_vec(1, 2, vec![10, 20]);
+        let mut prg = Prg::new(8);
+        let (s0, mut s1) = auth_split(&x, a0.wrapping_add(a1), &mut prg);
+        // Party 1 lies by one in its value share (an additive attack the
+        // semi-honest open would silently absorb).
+        s1.v.set(0, 0, s1.v.at(0, 0).wrapping_add(1));
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| {
+                c.enable_mac(a0, seed);
+                let _ = open_auth(c, &s0);
+                c.mac_barrier("open")
+            },
+            move |c| {
+                c.enable_mac(a1, seed);
+                let _ = open_auth(c, &s1);
+                c.mac_barrier("open")
+            },
+        );
+        assert!(matches!(r0.unwrap_err(), Error::MacCheck(_)));
+        assert!(matches!(r1.unwrap_err(), Error::MacCheck(_)));
+    }
+
+    #[test]
+    fn committed_reconstruction_round_trips() {
+        let x = Mat::from_vec(1, 3, vec![5, 6, 7]);
+        let mut prg = Prg::new(11);
+        let (v0, v1) = split(&x, &mut prg);
+        let (s0, s1) = (Share::plain(v0), Share::plain(v1));
+        let xc = x.clone();
+        let ((r0, _), (r1, _)) = run_two_party(
+            move |c| reconstruct_committed(c, &s0, "train.done").unwrap(),
+            move |c| reconstruct_committed(c, &s1, "train.done").unwrap(),
+        );
+        assert_eq!(r0, x);
+        assert_eq!(r1, xc);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! which is how benches price the offline phase for a given workload.
 
 use crate::ring::matrix::Mat;
+use crate::util::error::{Error, Result};
 
 /// One party's share of a matrix Beaver triple `Z = U(m×k) · V(k×n)`.
 #[derive(Debug, Clone)]
@@ -21,6 +22,25 @@ pub struct MatTriple {
     pub v: Mat,
     /// Share of the product `Z = U·V (m×n)`.
     pub z: Mat,
+}
+
+/// One party's share of a MAC-authenticated matrix Beaver triple
+/// ([`crate::net::Security::Malicious`] tier): the base triple plus an
+/// additive share of each component's MAC under the global key α —
+/// `mac_u + mac_u' = α·U` (full matrices, elementwise scaling), and
+/// likewise for `V` and `Z`. Trusted-dealer MACs (the dealer knows α and
+/// the masks, so it can deal the limbs directly); the online phase never
+/// sees α, only its own α-share (see `offline::dealer::mac_key_share`).
+#[derive(Debug, Clone)]
+pub struct AuthMatTriple {
+    /// The unauthenticated base triple share.
+    pub base: MatTriple,
+    /// Share of `α·U`.
+    pub mac_u: Mat,
+    /// Share of `α·V`.
+    pub mac_v: Mat,
+    /// Share of `α·Z`.
+    pub mac_z: Mat,
 }
 
 /// One party's share of `count` independent elementwise triples
@@ -116,6 +136,19 @@ pub trait TripleSource {
 
     /// Material consumed so far.
     fn ledger(&self) -> Ledger;
+
+    /// Draw a MAC-authenticated matrix triple (malicious tier). Sources
+    /// that cannot produce authenticated material return a typed
+    /// [`Error::Offline`] — only the trusted dealer (and wrappers
+    /// forwarding to it) override this, so a malicious-mode run against
+    /// an unauthenticated source fails loudly instead of silently
+    /// downgrading.
+    fn auth_mat_triple(&mut self, m: usize, k: usize, n: usize) -> Result<AuthMatTriple> {
+        let _ = (m, k, n);
+        Err(Error::Offline(
+            "this triple source does not produce MAC-authenticated material".into(),
+        ))
+    }
 
     // ------------------------------------------------------------------
     // Batch draws — the offline-phase fan-out surface.

@@ -35,6 +35,13 @@ pub enum Error {
     /// may retry once capacity frees up (see `serve::gateway`).
     Overload(String),
 
+    /// A batched MAC / transcript-consistency check failed at a phase
+    /// barrier under `Security::Malicious`: an opened value, a MAC limb
+    /// or a wire frame did not verify. The message names the phase
+    /// barrier that caught it. Unlike [`Error::Protocol`] this is an
+    /// *integrity* verdict — the framing was fine, the contents lied.
+    MacCheck(String),
+
     /// Configuration / CLI error.
     Config(String),
 
@@ -56,6 +63,7 @@ impl std::fmt::Display for Error {
             Error::Gc(s) => write!(f, "garbled circuit: {s}"),
             Error::Runtime(s) => write!(f, "runtime: {s}"),
             Error::Overload(s) => write!(f, "overload: {s}"),
+            Error::MacCheck(s) => write!(f, "mac check failed: {s}"),
             Error::Config(s) => write!(f, "config: {s}"),
             Error::Xla(s) => write!(f, "xla: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),

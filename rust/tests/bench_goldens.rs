@@ -13,8 +13,8 @@
 //! same process, so CI catches nondeterminism even on a bootstrap run.
 
 use ppkmeans::bench::{
-    gateway_counts, gateway_golden_lines, serve_counts, serve_golden_lines, train_counts,
-    train_golden_lines,
+    gateway_counts, gateway_golden_lines, malicious_golden_lines, serve_counts,
+    serve_golden_lines, train_counts, train_golden_lines, train_malicious_counts,
 };
 use std::path::PathBuf;
 
@@ -53,6 +53,29 @@ fn train_counts_match_goldens() {
         // meaningful at all).
         let again = train_golden_lines(&train_counts(256, 2, k, 3));
         assert_eq!(lines, again, "train counts must be deterministic (k={k})");
+    }
+}
+
+#[test]
+fn malicious_train_counts_match_goldens() {
+    for k in [2usize, 5] {
+        let iters = 3usize;
+        let c = train_malicious_counts(256, 2, k, iters);
+        let lines = malicious_golden_lines(&c);
+        check_golden(&format!("train_malicious_n256_k{k}.golden"), &lines);
+        let again = malicious_golden_lines(&train_malicious_counts(256, 2, k, iters));
+        assert_eq!(lines, again, "malicious counts must be deterministic (k={k})");
+        // The surcharge formulas from docs/PROTOCOLS.md: one 3-flight
+        // 96-byte-per-party barrier per Lloyd iteration plus train.done,
+        // and a 32-byte commit per final opened matrix per party.
+        let barriers = (iters + 1) as u64;
+        assert_eq!(c.mac_barrier_rounds, 3 * barriers, "3 flights per barrier (k={k})");
+        assert_eq!(c.mac_barrier_bytes, 2 * 96 * barriers, "96 B/party/barrier (k={k})");
+        assert_eq!(c.reveal_extra_bytes, 2 * 2 * 32, "two openings, 32 B commit each (k={k})");
+        assert_eq!(c.reveal_extra_rounds, 2, "one commit flight per opening (k={k})");
+        // The online phases themselves cost the same as semi-honest.
+        let sh = train_counts(256, 2, k, iters);
+        assert_eq!(c.online_bytes, sh.online_bytes, "online traffic is tier-independent");
     }
 }
 

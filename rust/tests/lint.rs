@@ -36,6 +36,7 @@ fn seeded_violations_fail_naming_rule_file_and_line() {
         "no-rogue-threads: src/offline/rogue.rs:4: `thread::spawn`",
         "no-unmetered-io: src/serve/raw_io.rs:3: `TcpStream`",
         "no-ambient-entropy: src/util/entropy.rs:4: `thread_rng`",
+        "no-unchecked-open: src/serve/raw_open.rs:5: `reconstruct(`",
         "no-panic-in-wire-paths: src/net/panicky.rs:4: `.unwrap()`",
         "no-panic-in-wire-paths: src/net/panicky.rs:9: `panic!`",
     ] {
@@ -89,6 +90,7 @@ fn list_prints_the_full_catalog() {
         "no-rogue-threads",
         "no-unmetered-io",
         "no-ambient-entropy",
+        "no-unchecked-open",
         "no-panic-in-wire-paths",
     ] {
         assert!(stdout.contains(id), "missing {id} in:\n{stdout}");

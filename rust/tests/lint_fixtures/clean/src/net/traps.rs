@@ -18,6 +18,12 @@ pub fn fine() -> &'static str {
     g("ok")
 }
 
+pub fn authenticated_open(chan: &mut Chan, share: &AuthMat) -> Result<Mat> {
+    // reconstruct( in this comment must not fire, and the wrapper's
+    // name must not be mistaken for the raw primitive.
+    reconstruct_committed(chan, share, "net.fixture")
+}
+
 #[cfg(test)]
 mod tests {
     use std::collections::HashMap;

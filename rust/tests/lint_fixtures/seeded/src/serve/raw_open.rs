@@ -1,0 +1,6 @@
+//! Seeded violation: a raw share open outside the sanctioned
+//! semi-honest modules — bypasses the deferred MAC ledger.
+
+pub fn leak(chan: &mut Chan, share: &Mat) -> Mat {
+    reconstruct(chan, share)
+}

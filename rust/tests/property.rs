@@ -7,7 +7,7 @@ use ppkmeans::offline::dealer::Dealer;
 use ppkmeans::ring::fixed::{decode_f64, encode_f64, SCALE};
 use ppkmeans::ring::matrix::Mat;
 use ppkmeans::ss::share::{reconstruct, split};
-use ppkmeans::ss::{arith, boolean, compare, divide, Ctx};
+use ppkmeans::ss::{Session, SessionOptions, arith, boolean, compare, divide};
 use ppkmeans::util::prng::Prg;
 
 /// Property: for all (x, y) in the fixed-point range, reconstructed
@@ -26,13 +26,13 @@ fn prop_smul_correct_over_random_inputs() {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(7100 + trial, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = arith::smul_elem(&mut ctx, &x0, &y0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(7100 + trial, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = arith::smul_elem(&mut ctx, &x1, &y1);
                 reconstruct(c, &z)
             },
@@ -56,7 +56,7 @@ fn prop_cmp_matches_plaintext_order() {
         let ((bits, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(8100 + trial, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let b = compare::lt(&mut ctx, &x0, &y0);
                 let theirs = c.exchange_u64s(&b.words);
                 (0..n)
@@ -65,7 +65,7 @@ fn prop_cmp_matches_plaintext_order() {
             },
             move |c| {
                 let mut ts = Dealer::new(8100 + trial, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let b = compare::lt(&mut ctx, &x1, &y1);
                 let _ = c.exchange_u64s(&b.words);
             },
@@ -89,13 +89,13 @@ fn prop_reciprocal_bounded_error() {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(9100 + trial, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let z = divide::reciprocal_int(&mut ctx, &d0);
                 reconstruct(c, &z)
             },
             move |c| {
                 let mut ts = Dealer::new(9100 + trial, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let z = divide::reciprocal_int(&mut ctx, &d1);
                 reconstruct(c, &z)
             },
@@ -121,14 +121,14 @@ fn prop_a2b_b2a_roundtrip() {
         let ((r, _), _) = run_two_party(
             move |c| {
                 let mut ts = Dealer::new(9600 + trial, 0);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(1));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(1), SessionOptions::default());
                 let planes = boolean::a2b(&mut ctx, &x0);
                 let lifted = boolean::b2a(&mut ctx, &planes[0]);
                 reconstruct(c, &lifted)
             },
             move |c| {
                 let mut ts = Dealer::new(9600 + trial, 1);
-                let mut ctx = Ctx::new(c, &mut ts, Prg::new(2));
+                let mut ctx = Session::new(c, &mut ts, Prg::new(2), SessionOptions::default());
                 let planes = boolean::a2b(&mut ctx, &x1);
                 let lifted = boolean::b2a(&mut ctx, &planes[0]);
                 reconstruct(c, &lifted)

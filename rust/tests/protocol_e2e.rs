@@ -9,7 +9,7 @@ use ppkmeans::offline::store::TripleStore;
 use ppkmeans::ring::fixed::{decode_f64, encode_f64};
 use ppkmeans::ring::matrix::Mat;
 use ppkmeans::ss::share::{reconstruct, split};
-use ppkmeans::ss::{arith, compare, divide, matmul, mux, Ctx};
+use ppkmeans::ss::{Session, SessionOptions, arith, compare, divide, matmul, mux};
 use ppkmeans::util::prng::Prg;
 use std::thread;
 
@@ -45,7 +45,7 @@ fn composite_pipeline_matches_plaintext() {
     let run = move |party: usize, x: Mat, y: Mat, z: Mat, dn: Mat| {
         move |c: &mut ppkmeans::net::Chan| {
             let mut ts = Dealer::new(502, party);
-            let mut ctx = Ctx::new(c, &mut ts, Prg::new(1 + party as u128));
+            let mut ctx = Session::new(c, &mut ts, Prg::new(1 + party as u128), SessionOptions::default());
             let p2f = arith::smul_elem(&mut ctx, &x, &y);
             let p = ppkmeans::ss::trunc::trunc_frac(party, &p2f);
             let lt = compare::lt(&mut ctx, &p, &z);
@@ -78,13 +78,13 @@ fn beaver_matmul_over_ot_triples() {
     let h = thread::spawn(move || {
         let mut c = p0;
         let mut ts = OtTripleGen::new(o0, 313);
-        let mut ctx = Ctx::new(&mut c, &mut ts, Prg::new(1));
+        let mut ctx = Session::new(&mut c, &mut ts, Prg::new(1), SessionOptions::default());
         let z = matmul::ss_matmul(&mut ctx, &a0, &b0);
         reconstruct(&mut c, &z)
     });
     let mut c = p1;
     let mut ts = OtTripleGen::new(o1, 313);
-    let mut ctx = Ctx::new(&mut c, &mut ts, Prg::new(2));
+    let mut ctx = Session::new(&mut c, &mut ts, Prg::new(2), SessionOptions::default());
     let z = matmul::ss_matmul(&mut ctx, &a1, &b1);
     let r1 = reconstruct(&mut c, &z);
     let r0 = h.join().unwrap();

@@ -184,7 +184,7 @@ fn explicit_backends_agree_with_auto() {
     };
     let beaver = secure::run(&ds, &base).unwrap();
     let mut he_cfg = base.clone();
-    he_cfg.esd = EsdMode::He;
+    he_cfg.esd = EsdMode::he();
     let he = secure::run(&ds, &he_cfg).unwrap();
     assert_eq!(beaver.backend_name, "beaver");
     assert_eq!(he.backend_name, "he-protocol2");

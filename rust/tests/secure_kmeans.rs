@@ -113,7 +113,7 @@ fn sparse_and_dense_paths_identical_results() {
     };
     let dense = secure::run(&ds, &base).unwrap();
     let mut scfg = base.clone();
-    scfg.sparse = true;
+    scfg.esd = EsdMode::he();
     let sparse = secure::run(&ds, &scfg).unwrap();
     assert_eq!(dense.assignments, sparse.assignments);
     for (a, b) in dense.centroids.iter().zip(&sparse.centroids) {

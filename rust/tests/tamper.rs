@@ -1,0 +1,463 @@
+//! Active-adversary fault injection for the malicious tier: a
+//! [`FaultMode::Tamper`] plan flips one payload bit on the wire and
+//! keeps the link alive — the deferred MAC ledger must then make
+//! **both** honest endpoints abort with a typed [`Error::MacCheck`]
+//! naming the *same* phase barrier, across all three deployment shapes
+//! (scenario training, the serve loop, the session-multiplexed
+//! gateway). Plus the negative controls: an *untampered* malicious run
+//! reveals bit-for-bit what the semi-honest run reveals, paying only
+//! the fixed barrier tax (3 flights / 96 bytes per barrier) and the
+//! commit-reveal surcharge (32 bytes per committed reveal).
+
+use ppkmeans::coordinator::remote::{run_scenario, run_scenario_local, PartyTranscript, Scenario};
+use ppkmeans::data::fraud_gen;
+use ppkmeans::kmeans::config::{Partition, SecureKmeansConfig};
+use ppkmeans::net::fault::{FaultMode, FaultPlan};
+use ppkmeans::net::meter::PhaseStats;
+use ppkmeans::net::{duplex_pair, run_two_party, Chan, Security};
+use ppkmeans::offline::bank::BankConfig;
+use ppkmeans::runtime::pool;
+use ppkmeans::serve::driver::{serve_party, serve_stream, train_model, ServeConfig};
+use ppkmeans::serve::gateway::{gateway_party, GatewayConfig, GatewayOutput, SessionWorkload};
+use ppkmeans::serve::model::TrainedModel;
+use ppkmeans::serve::scorer::score_rounds;
+use ppkmeans::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::thread;
+
+/// Tiny malicious-tier training scenario. Flight 1 is the handshake
+/// hello; every flight from 2 on rides the armed ledger, and the first
+/// Lloyd iteration alone spans well past flight 8 — so a bit flip at
+/// any flight in the sweep below is caught at the `train.iter.0`
+/// barrier.
+const TRAIN_SCENARIO: &str = "\
+pipeline = train
+n = 48
+d = 4
+k = 2
+iters = 2
+seed = 7
+data_seed = 5
+security = malicious
+";
+
+/// Drive `run_scenario` for both parties over a duplex pair, keeping
+/// **both** results — `run_scenario_local` collapses the pair into one
+/// `Result`, which would hide one side's abort.
+fn run_both(sc: &Scenario) -> (Result<PartyTranscript>, Result<PartyTranscript>) {
+    let (mut c0, mut c1) = duplex_pair();
+    let (s0, s1) = (sc.clone(), sc.clone());
+    pool::run_pair(
+        move || run_scenario(&mut c0, &s0),
+        move || run_scenario(&mut c1, &s1),
+    )
+}
+
+/// Extract the phase name out of a MAC-check abort; panics (failing the
+/// test) on any other error variant.
+fn barrier_phase(e: &Error) -> String {
+    let msg = match e {
+        Error::MacCheck(m) => m,
+        other => panic!("expected Error::MacCheck, got: {other}"),
+    };
+    let pre = "phase barrier '";
+    let start = msg
+        .find(pre)
+        .unwrap_or_else(|| panic!("MacCheck names no phase barrier: {msg}"))
+        + pre.len();
+    let end = msg[start..].find('\'').expect("unterminated phase name") + start;
+    msg[start..end].to_string()
+}
+
+/// Both parties must abort typed, and they must agree on *which*
+/// barrier caught the tampering — the symmetric crosswise ledger
+/// comparison guarantees neither side is left hanging or fooled.
+fn assert_both_abort_at(
+    r0: Result<PartyTranscript>,
+    r1: Result<PartyTranscript>,
+    want_phase: &str,
+    what: &str,
+) {
+    let e0 = r0.map(|_| ()).expect_err(&format!("{what}: party 0 must abort"));
+    let e1 = r1.map(|_| ()).expect_err(&format!("{what}: party 1 must abort"));
+    let (p0, p1) = (barrier_phase(&e0), barrier_phase(&e1));
+    assert_eq!(p0, p1, "{what}: parties disagree on the failing barrier");
+    assert_eq!(p0, want_phase, "{what}: wrong barrier caught the bit flip");
+}
+
+// ---- Training pipeline ----
+
+/// Sweep the bit flip across early flights of either party: each run
+/// must die at the first Lloyd boundary, on both sides, typed.
+#[test]
+fn tampered_train_aborts_both_parties_at_the_iteration_barrier() {
+    let base = Scenario::parse(TRAIN_SCENARIO).unwrap();
+    for (party, flight) in [(0, 2), (1, 3), (0, 5), (1, 6), (0, 8)] {
+        let mut sc = base.clone();
+        sc.fault_party = party;
+        sc.fault_flight = flight;
+        sc.fault_mode = FaultMode::Tamper;
+        let (r0, r1) = run_both(&sc);
+        assert_both_abort_at(
+            r0,
+            r1,
+            "train.iter.0",
+            &format!("tamper p{party} flight {flight}"),
+        );
+    }
+}
+
+/// Negative control: with no tampering, the malicious tier reveals
+/// exactly what the semi-honest tier reveals, every shared phase's
+/// traffic is byte-identical, and the overhead is confined to the
+/// `mac.barrier` phase (3 flights / 96 bytes per barrier) plus the
+/// commit-reveal surcharge (2 reveals × 32 bytes) in `reveal`.
+#[test]
+fn untampered_malicious_train_matches_semi_honest_reveals() {
+    let mal = Scenario::parse(TRAIN_SCENARIO).unwrap();
+    let mut sh = mal.clone();
+    sh.security = Security::SemiHonest;
+    let (m0, m1) = run_scenario_local(&mal).unwrap();
+    let (s0, s1) = run_scenario_local(&sh).unwrap();
+    let phase_map = |t: &PartyTranscript| -> BTreeMap<String, PhaseStats> {
+        t.phases.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    };
+    for (m, s) in [(&m0, &s0), (&m1, &s1)] {
+        assert_eq!(m.reveals, s.reveals, "p{}: tiers must reveal identically", m.role);
+        let (mm, sm) = (phase_map(m), phase_map(s));
+        // Every semi-honest phase exists unchanged under the malicious
+        // tier, except the reveal's commit surcharge.
+        for (k, v) in &sm {
+            let mv = mm.get(k).unwrap_or_else(|| panic!("malicious run lost phase {k}"));
+            if k == "reveal" {
+                assert_eq!(mv.bytes_sent, v.bytes_sent + 2 * 32, "commit-reveal surcharge");
+                assert_eq!(mv.rounds, v.rounds + 2, "one commit flight per reveal");
+            } else {
+                assert_eq!(mv, v, "p{}: phase {k} must not grow under MACs", m.role);
+            }
+        }
+        // The only new phase is the barrier tax itself.
+        let extra: Vec<&String> = mm.keys().filter(|k| !sm.contains_key(*k)).collect();
+        assert_eq!(extra, ["mac.barrier"], "p{}", m.role);
+        let mac = mm["mac.barrier"];
+        assert!(mac.rounds > 0 && mac.rounds % 3 == 0, "3 flights per barrier: {mac:?}");
+        assert_eq!(mac.bytes_sent, mac.rounds / 3 * 96, "96 bytes per barrier: {mac:?}");
+    }
+}
+
+// ---- Serve loop ----
+
+const BR: usize = 8; // batch_rows
+const BATCHES: usize = 3;
+const K: usize = 3;
+
+/// Train a small fraud model and pre-slice a scored stream into the
+/// two parties' raw per-batch blocks.
+fn serve_fixture() -> (TrainedModel, TrainedModel, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let train = fraud_gen::generate(200, 0.05, 41);
+    let cfg = SecureKmeansConfig {
+        k: K,
+        iters: 2,
+        seed: 17,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (_, [ma, mb]) = train_model(&train.data, &cfg, 0.05).unwrap();
+    let stream = fraud_gen::generate(BATCHES * BR, 0.05, 4242);
+    let (d, d_a) = (ma.d, ma.d_a);
+    assert_eq!(stream.data.d, d);
+    let mut blocks_a = Vec::with_capacity(BATCHES);
+    let mut blocks_b = Vec::with_capacity(BATCHES);
+    for b in 0..BATCHES {
+        let mut xa = Vec::new();
+        let mut xb = Vec::new();
+        for i in b * BR..(b + 1) * BR {
+            let row = stream.data.row(i);
+            xa.extend_from_slice(&row[..d_a]);
+            xb.extend_from_slice(&row[d_a..]);
+        }
+        blocks_a.push(xa);
+        blocks_b.push(xb);
+    }
+    (ma, mb, blocks_a, blocks_b)
+}
+
+fn serve_cfg(security: Security) -> ServeConfig {
+    ServeConfig {
+        batch_rows: BR,
+        batches: BATCHES,
+        bank: BankConfig { prefab_batches: 2, low_water: 1, refill_batches: 2 },
+        seed: 0xBA4C,
+        security,
+        ..Default::default()
+    }
+}
+
+/// One serve run with a tamper plan armed on `fault_party`.
+fn run_tampered_serve(fault_party: usize, at_flight: u64) -> (Result<()>, Result<()>) {
+    let (ma, mb, blocks_a, blocks_b) = serve_fixture();
+    let cfg = serve_cfg(Security::Malicious);
+    let (cfg_a, cfg_b) = (cfg.clone(), cfg.clone());
+    let plan = FaultPlan { at_flight, mode: FaultMode::Tamper };
+    let side = |party: usize, m: TrainedModel, blocks: Vec<Vec<f64>>, cfg: ServeConfig| {
+        move |c: &mut Chan| {
+            if party == fault_party {
+                c.set_fault(plan);
+            }
+            serve_party(c, m, blocks, &cfg).map(|_| ())
+        }
+    };
+    let ((r0, _), (r1, _)) = run_two_party(
+        side(0, ma, blocks_a, cfg_a),
+        side(1, mb, blocks_b, cfg_b),
+    );
+    (r0, r1)
+}
+
+/// The serve loop settles its ledger once per scored batch: a flip in
+/// the warmup or probe traffic dies at `serve.batch.0`, a flip in the
+/// next batch's flights dies at `serve.batch.1` — on both sides. The
+/// flight arithmetic is exact: warmup is 1 flight, each batch costs
+/// `score_rounds(k)` flights, each barrier 3.
+#[test]
+fn tampered_serve_aborts_both_parties_at_the_batch_barrier() {
+    let per_batch = score_rounds(K);
+    let batch0_last = 1 + per_batch; // warmup + the probe batch
+    let batch1_first = batch0_last + 3 + 1; // skip the 3 barrier flights
+    let cases = [
+        (0, 2, "serve.batch.0"),           // inside the probe batch
+        (1, batch0_last, "serve.batch.0"), // the reveal flight itself
+        (0, batch1_first + 2, "serve.batch.1"),
+    ];
+    for (party, flight, want) in cases {
+        let (r0, r1) = run_tampered_serve(party, flight);
+        let what = format!("serve tamper p{party} flight {flight}");
+        let e0 = r0.expect_err(&format!("{what}: party 0 must abort"));
+        let e1 = r1.expect_err(&format!("{what}: party 1 must abort"));
+        let (p0, p1) = (barrier_phase(&e0), barrier_phase(&e1));
+        assert_eq!(p0, p1, "{what}: parties disagree on the failing barrier");
+        assert_eq!(p0, want, "{what}");
+    }
+}
+
+/// Negative control: untampered malicious serving scores bit-for-bit
+/// like semi-honest serving and pays exactly one 3-flight / 96-byte
+/// barrier per batch — nothing else grows.
+#[test]
+fn untampered_malicious_serve_matches_semi_honest_and_pays_per_batch() {
+    let train = fraud_gen::generate(200, 0.05, 41);
+    let tcfg = SecureKmeansConfig {
+        k: K,
+        iters: 2,
+        seed: 17,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (_, [ma, mb]) = train_model(&train.data, &tcfg, 0.05).unwrap();
+    let stream = fraud_gen::generate(BATCHES * BR, 0.05, 4242);
+    let mal = serve_stream(
+        [ma.clone(), mb.clone()],
+        &stream.data,
+        &serve_cfg(Security::Malicious),
+    )
+    .unwrap();
+    let sh = serve_stream([ma, mb], &stream.data, &serve_cfg(Security::SemiHonest)).unwrap();
+    assert_eq!(mal.results, sh.results, "tiers must score identically");
+    for meter in [&mal.meter_a, &mal.meter_b] {
+        let mac = meter.get("mac.barrier");
+        assert_eq!(mac.rounds, 3 * BATCHES as u64, "3 flights per batch barrier");
+        assert_eq!(mac.bytes_sent, 96 * BATCHES as u64, "96 bytes per batch barrier");
+    }
+    for meter in [&sh.meter_a, &sh.meter_b] {
+        assert_eq!(meter.get("mac.barrier"), PhaseStats::default(), "semi-honest pays nothing");
+    }
+}
+
+/// The malicious tier refuses to checkpoint: the deferred ledger does
+/// not survive a restart, so arming both is a typed config error.
+#[test]
+fn malicious_serve_rejects_checkpointing() {
+    let mut sc = Scenario::parse(
+        "pipeline = serve\nn = 96\nk = 2\niters = 2\nseed = 1337\ndata_seed = 7\n\
+         stream_seed = 4242\nrate = 0.05\nbatch_rows = 8\nbatches = 2\nsave_model = false\n\
+         security = malicious\n",
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!("ppkm_tamper_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    sc.ckpt_dir = dir.to_str().unwrap().to_string();
+    let err = run_scenario_local(&sc).unwrap_err();
+    assert!(
+        matches!(err, Error::Config(_)),
+        "checkpointing under the malicious tier must fail typed, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- Gateway ----
+
+const NS: usize = 3; // sessions
+const NB: usize = 2; // batches per session
+
+/// Train a small fraud model and slice a stream into per-party session
+/// workloads (tags 1..=NS) — the `tests/gateway.rs` fixture shape.
+fn gateway_fixture() -> (TrainedModel, TrainedModel, Vec<SessionWorkload>, Vec<SessionWorkload>) {
+    let train = fraud_gen::generate(200, 0.05, 41);
+    let cfg = SecureKmeansConfig {
+        k: K,
+        iters: 2,
+        seed: 17,
+        partition: Partition::Vertical { d_a: train.d_payment },
+        ..Default::default()
+    };
+    let (_, [ma, mb]) = train_model(&train.data, &cfg, 0.05).unwrap();
+    let stream = fraud_gen::generate(NS * NB * BR, 0.05, 4242);
+    let (d, d_a) = (ma.d, ma.d_a);
+    assert_eq!(stream.data.d, d);
+    let mut wl_a = Vec::new();
+    let mut wl_b = Vec::new();
+    for s in 0..NS {
+        let mut blocks_a = Vec::new();
+        let mut blocks_b = Vec::new();
+        for b in 0..NB {
+            let base = (s * NB + b) * BR;
+            let mut xa = Vec::new();
+            let mut xb = Vec::new();
+            for i in base..base + BR {
+                let row = stream.data.row(i);
+                xa.extend_from_slice(&row[..d_a]);
+                xb.extend_from_slice(&row[d_a..]);
+            }
+            blocks_a.push(xa);
+            blocks_b.push(xb);
+        }
+        wl_a.push(SessionWorkload { tag: s as u64 + 1, blocks: blocks_a });
+        wl_b.push(SessionWorkload { tag: s as u64 + 1, blocks: blocks_b });
+    }
+    (ma, mb, wl_a, wl_b)
+}
+
+/// One worker, so the mux frame schedule (and therefore which session a
+/// link-level bit flip lands in) is deterministic.
+fn gateway_cfg(security: Security) -> GatewayConfig {
+    GatewayConfig {
+        sessions: NS,
+        queue: 0,
+        workers: 1,
+        replenishers: 1,
+        shards: 2,
+        batch_rows: BR,
+        batches: NB,
+        bank: BankConfig { prefab_batches: 1, low_water: 1, refill_batches: 1 },
+        seed: 0x6A7E1,
+        security,
+        ..GatewayConfig::default()
+    }
+}
+
+/// Run both parties' gateways; each on a fat stack like production.
+fn run_gateway(
+    c0: Chan,
+    c1: Chan,
+    ma: TrainedModel,
+    mb: TrainedModel,
+    wl_a: Vec<SessionWorkload>,
+    wl_b: Vec<SessionWorkload>,
+    cfg: &GatewayConfig,
+) -> (GatewayOutput, GatewayOutput) {
+    let (cfg_a, cfg_b) = (cfg.clone(), cfg.clone());
+    let side = |mut c: Chan, m: TrainedModel, wl: Vec<SessionWorkload>, cfg: GatewayConfig| {
+        thread::Builder::new()
+            .stack_size(64 << 20)
+            .spawn(move || gateway_party(&mut c, m, wl, &cfg).unwrap())
+            .unwrap()
+    };
+    let h0 = side(c0, ma, wl_a, cfg_a);
+    let h1 = side(c1, mb, wl_b, cfg_b);
+    (h0.join().unwrap(), h1.join().unwrap())
+}
+
+/// A link-level bit flip inside one session's mux traffic kills exactly
+/// that session — typed, same phase on both parties — while every other
+/// session scores on untouched, and the flat link's own `gateway.done`
+/// barrier still passes (the gateway returns `Ok`).
+///
+/// Flight accounting: the flat link spends 1 (hello) + 1 (probe warmup)
+/// + `score_rounds(k)` (probe batch) flights before the mux takes over;
+/// from there the inherited fault state counts *frames*. With one
+/// worker, session tag 1 runs first — its warmup + first batch span the
+/// frames right after the takeover, so frame 40 lands inside
+/// `gateway.tag1.batch.0`'s window for k = 3.
+#[test]
+fn tampered_gateway_session_aborts_on_both_parties_and_spares_the_rest() {
+    let (ma, mb, wl_a, wl_b) = gateway_fixture();
+    let cfg = gateway_cfg(Security::Malicious);
+
+    // Clean malicious reference.
+    let (c0, c1) = duplex_pair();
+    let (ref_a, ref_b) =
+        run_gateway(c0, c1, ma.clone(), mb.clone(), wl_a.clone(), wl_b.clone(), &cfg);
+
+    // Tampered run: the flip lands in session tag 1's first batch.
+    let pre_mux = 1 + 1 + score_rounds(K);
+    let at_flight = pre_mux + 13;
+    let (mut c0, c1) = duplex_pair();
+    c0.set_fault(FaultPlan { at_flight, mode: FaultMode::Tamper });
+    let (out_a, out_b) = run_gateway(c0, c1, ma, mb, wl_a, wl_b, &cfg);
+
+    let mut phases = Vec::new();
+    for (out, clean) in [(&out_a, &ref_a), (&out_b, &ref_b)] {
+        assert_eq!(out.sessions.len(), clean.sessions.len());
+        let mut failed = Vec::new();
+        for ((tag, r), (ctag, cr)) in out.sessions.iter().zip(&clean.sessions) {
+            assert_eq!(tag, ctag);
+            match r {
+                Err(e) => {
+                    failed.push(*tag);
+                    phases.push(barrier_phase(e));
+                }
+                Ok(report) => {
+                    let cr = cr.as_ref().expect("clean reference session failed");
+                    assert_eq!(
+                        report.results, cr.results,
+                        "untouched session {tag} must match the clean run"
+                    );
+                }
+            }
+        }
+        assert_eq!(failed, [1u64], "exactly the tampered session must die");
+    }
+    assert_eq!(phases.len(), 2);
+    assert_eq!(phases[0], phases[1], "parties disagree on the failing barrier");
+    assert_eq!(phases[0], "gateway.tag1.batch.0");
+}
+
+/// Negative control: untampered malicious gateway sessions reveal
+/// bit-for-bit what their semi-honest counterparts reveal.
+#[test]
+fn untampered_malicious_gateway_matches_semi_honest() {
+    let (ma, mb, wl_a, wl_b) = gateway_fixture();
+    let (c0, c1) = duplex_pair();
+    let (mal_a, mal_b) = run_gateway(
+        c0,
+        c1,
+        ma.clone(),
+        mb.clone(),
+        wl_a.clone(),
+        wl_b.clone(),
+        &gateway_cfg(Security::Malicious),
+    );
+    let (c0, c1) = duplex_pair();
+    let (sh_a, sh_b) =
+        run_gateway(c0, c1, ma, mb, wl_a, wl_b, &gateway_cfg(Security::SemiHonest));
+    for (m, s) in [(&mal_a, &sh_a), (&mal_b, &sh_b)] {
+        assert_eq!(m.admitted(), NS);
+        assert_eq!(m.sessions.len(), s.sessions.len());
+        for ((mt, mr), (st, sr)) in m.sessions.iter().zip(&s.sessions) {
+            assert_eq!(mt, st);
+            let mr = mr.as_ref().expect("malicious session failed without tampering");
+            let sr = sr.as_ref().expect("semi-honest session failed");
+            assert_eq!(mr.results, sr.results, "session {mt}: tiers must score identically");
+        }
+    }
+}

@@ -150,7 +150,7 @@ fn explicit_he_backend_rides_the_tile_schedule() {
     let base = SecureKmeansConfig {
         k: 2,
         iters: 2,
-        esd: EsdMode::He,
+        esd: EsdMode::he(),
         partition: Partition::Vertical { d_a: 3 },
         ..Default::default()
     };
